@@ -1,0 +1,67 @@
+//! Bit-width sweep: calibrated quantization error of the full method stack
+//! (RTN → OPTQ → MagR+OPTQ → MagR+OPTQ+CLoQ-rank-r) across INT2/3/4/8 —
+//! the ablation behind DESIGN.md's "who contributes what at which bit".
+//!
+//! Run: `cargo run --release --example bitwidth_sweep`
+
+use cloq::linalg::{matmul, matmul_nt, syrk_t, Matrix};
+use cloq::lowrank::{cloq_lowrank, damping_lambda, CloqConfig};
+use cloq::quant::magr::magr;
+use cloq::quant::metrics::calibrated_error2;
+use cloq::quant::optq::{optq, OptqConfig};
+use cloq::quant::quantize_rtn;
+use cloq::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(11);
+    let (m, n, gs, rank) = (96usize, 64usize, 32usize, 8usize);
+
+    // Outlier-heavy weights + low-rank activations: the regime where each
+    // pipeline stage earns its keep.
+    let base = Matrix::randn(768, 20, 1.0, &mut rng);
+    let mix = Matrix::randn(20, m, 1.0, &mut rng);
+    let x = matmul(&base, &mix);
+    let mut w = Matrix::randn(m, n, 0.15, &mut rng);
+    for _ in 0..24 {
+        let (i, j) = (rng.below(m), rng.below(n));
+        w.set(i, j, rng.normal(0.0, 1.2));
+    }
+    let h = syrk_t(&x);
+    let mut hd = h.clone();
+    hd.add_diag(damping_lambda(&h, 0.01));
+
+    let err = |q_deq: &Matrix, ab: Option<&Matrix>| {
+        let mut e = q_deq.sub(&w);
+        if let Some(ab) = ab {
+            e.add_assign(ab);
+        }
+        calibrated_error2(&h, &e)
+    };
+
+    println!("calibrated error ||X(Q [+AB'] - W)||_F^2 by stage (layer {m}x{n}, group {gs}, rank {rank})\n");
+    println!(
+        "{:>4} | {:>12} {:>12} {:>12} {:>14}",
+        "bits", "RTN", "OPTQ", "MagR+OPTQ", "+CLoQ rank-8"
+    );
+    println!("{}", "-".repeat(62));
+    for bits in [2u32, 3, 4, 8] {
+        let e_rtn = err(&quantize_rtn(&w, bits, gs).dequantize(), None);
+        let ocfg = OptqConfig { bits, group_size: gs, ..Default::default() };
+        let e_optq = err(&optq(&w, &h, &ocfg).dequantize(), None);
+        let w_magr = magr(&w, &hd, &Default::default());
+        let q_magr = optq(&w_magr, &h, &ocfg).dequantize();
+        let e_magr = err(&q_magr, None);
+        let dw = w.sub(&q_magr);
+        let lr = cloq_lowrank(&hd, &dw, &CloqConfig { rank, ..Default::default() });
+        let ab = matmul_nt(&lr.a, &lr.b);
+        let e_cloq = err(&q_magr, Some(&ab));
+        println!("{bits:>4} | {e_rtn:>12.3} {e_optq:>12.3} {e_magr:>12.3} {e_cloq:>14.3}");
+    }
+
+    println!(
+        "\nReading the rows: OPTQ beats RTN everywhere; MagR matters most at\n\
+         2-bit where grid resolution is scarce; the CLoQ correction removes\n\
+         the bulk of what is left — and its share GROWS as bits shrink,\n\
+         which is exactly why the paper's gains concentrate at INT2."
+    );
+}

@@ -1,0 +1,57 @@
+//! Quickstart: CLoQ on a single linear layer, no artifacts needed.
+//!
+//! Builds a synthetic "pretrained" weight matrix and correlated calibration
+//! activations, then walks the exact steps of Algorithm 1:
+//!
+//!   1. H = XᵀX (+ λI)                    — calibration Gram matrix
+//!   2. Q = OPTQ(MagR(W), H)              — calibrated 2-bit quantization
+//!   3. (A, B) = closed-form Theorem 3.1  — two SVDs, no back-prop
+//!
+//! and prints the calibrated discrepancy ‖X(Q + A·Bᵀ − W)‖_F² of every
+//! method it compares against (QLoRA / GPTQ-LoRA / LoftQ / CLoQ).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cloq::linalg::{matmul, matmul_nt, syrk_t, Matrix};
+use cloq::lowrank::{init_layer, InitConfig, Method};
+use cloq::quant::metrics::calibrated_error2;
+use cloq::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(2025);
+
+    // A 64→48 linear layer with correlated activations (b·l = 512 samples).
+    let (m, n, samples) = (64usize, 48usize, 512usize);
+    let base = Matrix::randn(samples, 16, 1.0, &mut rng);
+    let mix = Matrix::randn(16, m, 1.0, &mut rng);
+    let x = matmul(&base, &mix); // rank-16 activation structure
+    let w = Matrix::randn(m, n, 0.3, &mut rng);
+    let h = syrk_t(&x);
+
+    println!("layer: W {m}x{n}, calibration X {samples}x{m} (effective rank 16)\n");
+    println!("{:<14} {:>6} {:>16} {:>10}", "method", "bits", "||X*err||_F^2", "vs CLoQ");
+
+    let bits = 2;
+    let rank = 8;
+    let mut results = Vec::new();
+    for method in [Method::QLora, Method::GptqLora, Method::LoftQ, Method::CLoQNoMagR, Method::CLoQ] {
+        let mut cfg = InitConfig::new(method, bits, rank);
+        cfg.group_size = 32;
+        let li = init_layer(&w, Some(&h), &cfg, &mut rng);
+        let err = li.q_deq.add(&matmul_nt(&li.a, &li.b)).sub(&w);
+        let obj = calibrated_error2(&h, &err);
+        results.push((method.name().to_string(), obj));
+    }
+    let cloq_obj = results.last().unwrap().1;
+    for (name, obj) in &results {
+        println!("{name:<14} {bits:>6} {obj:>16.4} {:>9.2}x", obj / cloq_obj);
+    }
+
+    println!(
+        "\nCLoQ's calibrated closed-form init cuts the layer discrepancy by\n\
+         {:.1}x vs LoftQ and {:.1}x vs zero-init GPTQ-LoRA —\n\
+         the paper's Fig. 2 effect, in one function call.",
+        results[2].1 / cloq_obj,
+        results[1].1 / cloq_obj
+    );
+}

@@ -1,0 +1,95 @@
+"""AOT lowering: TinyGPT entry points → HLO *text* + manifest.json.
+
+HLO text (NOT `.serialize()`) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --config tiny-s --out-dir ../artifacts
+    python -m compile.aot --config micro --entries eval_loss,lora_step
+
+Artifacts land in `<out-dir>/<config>/<entry>.hlo.txt` plus one
+`<out-dir>/<config>/manifest.json` describing the exact flat input/output
+ordering each graph expects (consumed by rust/src/model/manifest.rs).
+Python runs ONCE at build time; the rust binary is self-contained after.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile.model import PRESETS, build_entrypoints, config_manifest
+
+jax.config.update("jax_platform_name", "cpu")
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, input_specs) -> str:
+    args = [
+        jax.ShapeDtypeStruct(tuple(s["shape"]), _DTYPES[s["dtype"]])
+        for s in input_specs
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--config", default="tiny-s", choices=sorted(PRESETS))
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--entries", default="",
+                   help="comma-separated subset (default: all)")
+    p.add_argument("--seq", type=int, default=0,
+                   help="override sequence length; artifacts land under "
+                        "<config>-seq<N> (Table 9 sweep)")
+    args = p.parse_args()
+
+    cfg = PRESETS[args.config]
+    if args.seq:
+        from dataclasses import replace
+        cfg = replace(cfg, seq=args.seq, name=f"{cfg.name}-seq{args.seq}")
+    out_dir = os.path.join(args.out_dir, cfg.name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    entries = build_entrypoints(cfg)
+    wanted = set(args.entries.split(",")) if args.entries else set(entries)
+
+    manifest = {"config": config_manifest(cfg), "entrypoints": {}}
+    for name, (fn, ins, outs) in entries.items():
+        if name not in wanted:
+            continue
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = lower_entry(fn, ins)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entrypoints"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": ins,
+            "outputs": outs,
+        }
+        print(f"  {name}: {len(ins)} inputs, {len(outs)} outputs, "
+              f"{len(text) / 1e6:.2f} MB HLO")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Golden-file generator: cross-language quantizer contract.
+
+Writes `artifacts/golden.json` containing random weight matrices quantized
+by the jnp reference (`kernels/ref.py`). `rust/tests/golden_quant.rs`
+re-quantizes the same matrices with the Rust INT quantizer and asserts
+code-exact agreement — pinning the L1 kernel's dequant semantics to the
+L3 numerics.
+
+Usage: python -m compile.golden --out ../artifacts/golden.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from compile.kernels.ref import dequant_ref, quantize_rtn_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts/golden.json")
+    args = p.parse_args()
+
+    rng = np.random.default_rng(20250710)
+    cases = []
+    for k, n, bits, gs in [
+        (8, 4, 2, 4),
+        (16, 8, 3, 8),
+        (32, 8, 4, 16),
+        (20, 6, 4, 8),   # partial last group
+        (64, 16, 2, 64),
+        (7, 3, 8, 4),
+    ]:
+        w = (rng.standard_normal((k, n)) * rng.uniform(0.05, 2.0)).astype(np.float32)
+        codes, scales, zeros = quantize_rtn_ref(w, bits, gs)
+        deq = dequant_ref(codes, scales, zeros, gs)
+        cases.append({
+            "k": k, "n": n, "bits": bits, "group_size": gs,
+            "w": [float(x) for x in w.flatten()],
+            "codes": [int(x) for x in np.asarray(codes).flatten()],
+            "scales": [float(x) for x in np.asarray(scales).flatten()],
+            "zeros": [float(x) for x in np.asarray(zeros).flatten()],
+            "deq": [float(x) for x in np.asarray(deq).flatten()],
+        })
+    with open(args.out, "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"wrote {len(cases)} golden cases to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,130 @@
+"""L1 Pallas kernel: fused group-dequantize matmul with LoRA correction.
+
+The paper's serving-time hot spot is `y = X·(Q + A·Bᵀ)` where `Q` lives in
+`b`-bit codes + per-group scales/zeros, and `A, B` are the fp LoRA factors.
+The CUDA implementations the paper builds on (GPTQ / bitsandbytes kernels)
+dequantize warp-tiles into shared memory and feed tensor cores; the TPU
+re-expression here (DESIGN.md §Hardware-Adaptation):
+
+* BlockSpec tiles the output grid (M/bm, N/bn); each program stages an
+  (bm × K) x-tile and a (K × bn) code-tile HBM→VMEM.
+* Dequantization `(code − zero) · scale` is a VPU elementwise op on the
+  VMEM-resident tile (the analogue of warp-level dequant into smem).
+* Both the dense product and the two skinny LoRA products run on the MXU
+  (`jnp.dot` with f32 accumulation; bf16-ready).
+* The K dimension stays resident (layer widths here are ≤1k, so a full
+  K-panel fits VMEM comfortably; see the VMEM budget in DESIGN.md §Perf).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO ops — numerics are
+identical, TPU performance is estimated analytically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qlora_kernel(x_ref, codes_ref, scales_ref, zeros_ref, a_ref, b_ref, o_ref,
+                  *, group_size: int):
+    """One (bm, bn) output tile.
+
+    x_ref:      [bm, K]   f32
+    codes_ref:  [K, bn]   i32
+    scales_ref: [G, bn]   f32
+    zeros_ref:  [G, bn]   f32
+    a_ref:      [K, r]    f32
+    b_ref:      [bn, r]   f32
+    o_ref:      [bm, bn]  f32
+    """
+    x = x_ref[...]
+    codes = codes_ref[...]
+    k = codes.shape[0]
+    # VPU dequant: expand per-group params to per-row (static shapes).
+    row_group = jnp.arange(k) // group_size
+    s = scales_ref[...][row_group]  # [K, bn]
+    z = zeros_ref[...][row_group]
+    w = (codes.astype(jnp.float32) - z) * s
+    # MXU: dense base product, f32 accumulation.
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    # MXU: skinny LoRA correction on the same x tile.
+    xa = jnp.dot(x, a_ref[...], preferred_element_type=jnp.float32)
+    acc += jnp.dot(xa, b_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "block_m", "block_n"))
+def qlora_matmul(x, codes, scales, zeros, a, b, *, group_size: int = 64,
+                 block_m: int = 64, block_n: int = 128):
+    """Fused `x @ dequant(codes, scales, zeros) + (x @ a) @ b.T`.
+
+    x: [M, K] f32; codes: [K, N] i32; scales/zeros: [G, N] f32 with
+    G = ceil(K / group_size); a: [K, r] f32; b: [N, r] f32 → [M, N] f32.
+    """
+    m, k = x.shape
+    k2, n = codes.shape
+    assert k == k2, (k, k2)
+    g = scales.shape[0]
+    assert g == -(-k // group_size), (g, k, group_size)
+    r = a.shape[1]
+    assert a.shape == (k, r) and b.shape == (n, r)
+
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    # Pallas needs the grid to tile the arrays exactly; pad M/N up.
+    mp = -(-m // bm) * bm
+    np_ = -(-n // bn) * bn
+    x_p = jnp.pad(x, ((0, mp - m), (0, 0)))
+    codes_p = jnp.pad(codes, ((0, 0), (0, np_ - n)))
+    scales_p = jnp.pad(scales, ((0, 0), (0, np_ - n)), constant_values=1.0)
+    zeros_p = jnp.pad(zeros, ((0, 0), (0, np_ - n)))
+    b_p = jnp.pad(b, ((0, np_ - n), (0, 0)))
+
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_qlora_kernel, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),       # x panel
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),       # codes panel
+            pl.BlockSpec((g, bn), lambda i, j: (0, j)),       # scales
+            pl.BlockSpec((g, bn), lambda i, j: (0, j)),       # zeros
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),        # A (shared)
+            pl.BlockSpec((bn, r), lambda i, j: (j, 0)),       # B panel
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU sandbox; see module docstring
+    )(x_p, codes_p, scales_p, zeros_p, a, b_p)
+    return out[:m, :n]
+
+
+def _gram_kernel(x_ref, o_ref):
+    """Accumulate H += X_tileᵀ · X_tile over the sample-block grid."""
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    o_ref[...] += jnp.dot(x.T, x, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def gram(x, *, block_s: int = 128):
+    """H = XᵀX via a Pallas tiled accumulation. x: [S, F] → [F, F]."""
+    s, f = x.shape
+    bs = min(block_s, s)
+    sp = -(-s // bs) * bs
+    x_p = jnp.pad(x, ((0, sp - s), (0, 0)))  # zero rows don't affect XᵀX
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(sp // bs,),
+        in_specs=[pl.BlockSpec((bs, f), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((f, f), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((f, f), jnp.float32),
+        interpret=True,
+    )(x_p)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Everything here is deliberately written in the most transparent jnp form;
+`python/tests/test_kernel.py` asserts the Pallas kernels match these to
+float32 tolerance across shape/dtype/group-size sweeps (hypothesis), and
+`rust/tests/golden_quant.rs` cross-checks the Rust quantizers against
+golden files generated from these functions.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dequant_ref(codes, scales, zeros, group_size: int):
+    """Group-wise asymmetric INT dequantization.
+
+    codes:  [K, N] int32 quantization codes
+    scales: [G, N] f32 per-(group, out-channel) scales, G = ceil(K/gs)
+    zeros:  [G, N] f32 zero points
+    returns [K, N] f32 dequantized weights: (code - zero) * scale
+    """
+    k = codes.shape[0]
+    row_group = jnp.arange(k) // group_size  # [K]
+    s = scales[row_group]  # [K, N]
+    z = zeros[row_group]  # [K, N]
+    return (codes.astype(jnp.float32) - z) * s
+
+
+def qlora_matmul_ref(x, codes, scales, zeros, a, b, group_size: int):
+    """y = x · deq(codes) + (x · A) · Bᵀ  — the fused serving hot-spot.
+
+    x: [M, K] f32; codes: [K, N]; a: [K, r]; b: [N, r].
+    """
+    w = dequant_ref(codes, scales, zeros, group_size)
+    base = x @ w
+    lora = (x @ a) @ b.T
+    return base + lora
+
+
+def gram_ref(x):
+    """H = XᵀX for calibration. x: [S, F] → [F, F]."""
+    return x.T @ x
+
+
+def quantize_rtn_ref(w, bits: int, group_size: int):
+    """Asymmetric uniform INT quantizer (mirrors rust/src/quant/grid.rs).
+
+    w: [K, N] f32. Returns (codes i32 [K,N], scales f32 [G,N], zeros f32 [G,N]).
+    Groups run along the K (input-feature) axis — same orientation as Rust.
+    """
+    k, n = w.shape
+    g = -(-k // group_size)
+    qmax = 2**bits - 1
+    pad = g * group_size - k
+    wp = jnp.pad(w, ((0, pad), (0, 0)))
+    wg = wp.reshape(g, group_size, n)
+    if pad > 0:
+        # Padded rows must not affect group stats.
+        valid = jnp.arange(g * group_size).reshape(g, group_size, 1) < k
+        lo = jnp.min(jnp.where(valid, wg, jnp.inf), axis=1)
+        hi = jnp.max(jnp.where(valid, wg, -jnp.inf), axis=1)
+    else:
+        lo = wg.min(axis=1)
+        hi = wg.max(axis=1)
+    # Grid must contain 0 (matches Rust find_params).
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, 0.0)
+    scale = (hi - lo) / qmax
+    scale = jnp.where(scale <= 0, 1.0, scale)
+    zero = jnp.round(-lo / scale)
+    row_group = jnp.arange(k) // group_size
+    s_full = scale[row_group]
+    z_full = zero[row_group]
+    codes = jnp.clip(jnp.round(w / s_full + z_full), 0, qmax).astype(jnp.int32)
+    return codes, scale.astype(jnp.float32), zero.astype(jnp.float32)

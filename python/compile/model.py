@@ -1,0 +1,431 @@
+"""L2: TinyGPT — the transformer compute graphs AOT-lowered to HLO.
+
+A pre-LN, decoder-only transformer with LoRA adapters on every linear map
+(q/k/v/o/up/down), standing in for Llama2/Llama3/Mistral (DESIGN.md §3
+substitution table). Six entry points are lowered by `aot.py`:
+
+=================  ==========================================================
+``pretrain_step``  AdamW step on ALL parameters (builds the "pre-trained"
+                   model the paper starts from).
+``lora_step``      AdamW step on LoRA parameters only; base weights are
+                   frozen inputs (the paper's fine-tuning stage).
+``eval_loss``      (masked loss sum, token count) for perplexity.
+``eval_logits``    full logits for greedy decode / choice scoring.
+``capture_grams``  per-layer activation Gram matrices H = XᵀX for
+                   calibration (uses the L1 Pallas ``gram`` kernel).
+``qeval_loss``     the quantized serving path: base weights arrive as INT
+                   codes + scales/zeros and every linear runs through the
+                   L1 Pallas ``qlora_matmul`` kernel.
+=================  ==========================================================
+
+All entry points are pure functions over a *flat ordered argument list*;
+the ordering contract is exported to `artifacts/manifest.json` and consumed
+by `rust/src/model/manifest.rs`. Python never runs at serve time.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.qlora_matmul import gram, qlora_matmul
+
+
+@dataclass
+class Config:
+    """Model + lowering configuration (mirrored in rust/src/model/config.rs)."""
+
+    name: str = "tiny-s"
+    vocab: int = 260  # 256 bytes + pad/bos/eos/sep
+    d_model: int = 96
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 256
+    seq: int = 64
+    batch: int = 8
+    rank: int = 16
+    group_size: int = 64  # quantization group size for the qeval path
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# Preset model families standing in for the paper's four architectures.
+PRESETS = {
+    # Llama2-7B stand-in (the "small" model of Tables 1/3/5…)
+    "tiny-s": Config(name="tiny-s", d_model=96, n_layers=2, n_heads=4, d_ff=256),
+    # Llama2-13B stand-in (deeper + wider)
+    "tiny-m": Config(name="tiny-m", d_model=128, n_layers=3, n_heads=4, d_ff=384),
+    # Llama3-8B stand-in (wide FFN ratio, more heads)
+    "tiny-wide": Config(name="tiny-wide", d_model=128, n_layers=2, n_heads=8, d_ff=512),
+    # Mistral-7B stand-in (deep + narrow)
+    "tiny-deep": Config(name="tiny-deep", d_model=96, n_layers=4, n_heads=4, d_ff=256),
+    # Micro config for fast integration tests
+    "micro": Config(name="micro", d_model=32, n_layers=1, n_heads=2, d_ff=64,
+                    seq=16, batch=4, rank=4, group_size=16),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter specs: the single source of truth for argument ordering.
+# --------------------------------------------------------------------------
+
+# The six LoRA-targeted linear maps of each block: (tag, in_dim, out_dim).
+def linear_specs(cfg: Config):
+    d, f = cfg.d_model, cfg.d_ff
+    return [
+        ("wq", d, d),
+        ("wk", d, d),
+        ("wv", d, d),
+        ("wo", d, d),
+        ("w_up", d, f),
+        ("w_down", f, d),
+    ]
+
+
+def base_param_specs(cfg: Config):
+    """Ordered (name, shape) for every base (frozen-at-finetune) parameter."""
+    specs = [
+        ("tok_emb", (cfg.vocab, cfg.d_model)),
+        ("pos_emb", (cfg.seq, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"l{l}.ln1_g", (cfg.d_model,)),
+            (f"l{l}.ln1_b", (cfg.d_model,)),
+            (f"l{l}.ln2_g", (cfg.d_model,)),
+            (f"l{l}.ln2_b", (cfg.d_model,)),
+        ]
+        for tag, din, dout in linear_specs(cfg):
+            specs.append((f"l{l}.{tag}", (din, dout)))
+    specs += [("ln_f_g", (cfg.d_model,)), ("ln_f_b", (cfg.d_model,))]
+    return specs
+
+
+def lora_param_specs(cfg: Config):
+    """Ordered (name, shape) for the LoRA adapters (A: in×r, B: out×r)."""
+    specs = []
+    for l in range(cfg.n_layers):
+        for tag, din, dout in linear_specs(cfg):
+            specs.append((f"l{l}.{tag}.A", (din, cfg.rank)))
+            specs.append((f"l{l}.{tag}.B", (dout, cfg.rank)))
+    return specs
+
+
+def quant_param_specs(cfg: Config):
+    """Ordered (name, shape, dtype) for the quantized-weight inputs of the
+    qeval path: per quantized linear, codes (i32) + scales + zeros."""
+    gs = cfg.group_size
+    specs = []
+    for l in range(cfg.n_layers):
+        for tag, din, dout in linear_specs(cfg):
+            g = -(-din // gs)
+            specs.append((f"l{l}.{tag}.codes", (din, dout), "i32"))
+            specs.append((f"l{l}.{tag}.scales", (g, dout), "f32"))
+            specs.append((f"l{l}.{tag}.zeros", (g, dout), "f32"))
+    return specs
+
+
+def nonquant_base_specs(cfg: Config):
+    """Base params that stay in fp for the qeval path (embeddings + LNs —
+    the paper quantizes 'all linear layers' of the blocks only)."""
+    return [(n, s) for (n, s) in base_param_specs(cfg)
+            if not any(t in n for t in ("wq", "wk", "wv", "wo", "w_up", "w_down"))]
+
+
+def _unflatten(specs, args):
+    assert len(specs) == len(args), (len(specs), len(args))
+    return dict(zip([n for n, *_ in specs], args))
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _lora_linear(x, w, a, b):
+    """x @ (W + A·Bᵀ) with the low-rank path kept factored."""
+    return x @ w + (x @ a) @ b.T
+
+
+def _attention(cfg: Config, x, base, lora, l, linear):
+    bsz, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = linear(x, f"l{l}.wq")
+    k = linear(x, f"l{l}.wk")
+    v = linear(x, f"l{l}.wv")
+    q = q.reshape(bsz, t, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(bsz, t, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(bsz, t, h, dh).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(dh).astype(jnp.float32)
+    causal = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    att = jnp.where(causal, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(bsz, t, d)
+    return linear(y, f"l{l}.wo")
+
+
+def forward(cfg: Config, base, lora, tokens, collect_activations=False,
+            quant=None):
+    """Logits for `tokens` [B, T] int32.
+
+    `base`/`lora` are name→array dicts. If `quant` is given (name→(codes,
+    scales, zeros)), the six block linears run through the Pallas
+    `qlora_matmul` kernel instead of dense matmul.
+    If `collect_activations`, also returns the per-linear input activations
+    (for Gram-matrix calibration).
+    """
+    acts = {}
+
+    def linear(x, name):
+        shp = x.shape
+        x2 = x.reshape(-1, shp[-1])
+        if collect_activations:
+            acts[name] = x2
+        a = lora[f"{name}.A"] if lora else None
+        if quant is not None and name in quant:
+            codes, scales, zeros = quant[name]
+            if lora:
+                y2 = qlora_matmul(x2, codes, scales, zeros, a, lora[f"{name}.B"],
+                                  group_size=cfg.group_size)
+            else:
+                zero_a = jnp.zeros((shp[-1], 1), jnp.float32)
+                zero_b = jnp.zeros((codes.shape[1], 1), jnp.float32)
+                y2 = qlora_matmul(x2, codes, scales, zeros, zero_a, zero_b,
+                                  group_size=cfg.group_size)
+        elif lora:
+            y2 = _lora_linear(x2, base[name], a, lora[f"{name}.B"])
+        else:
+            y2 = x2 @ base[name]
+        return y2.reshape(*shp[:-1], y2.shape[-1])
+
+    bsz, t = tokens.shape
+    x = base["tok_emb"][tokens] + base["pos_emb"][None, :t, :]
+    for l in range(cfg.n_layers):
+        h = _layernorm(x, base[f"l{l}.ln1_g"], base[f"l{l}.ln1_b"])
+        x = x + _attention(cfg, h, base, lora, l, linear)
+        h = _layernorm(x, base[f"l{l}.ln2_g"], base[f"l{l}.ln2_b"])
+        up = jax.nn.gelu(linear(h, f"l{l}.w_up"))
+        x = x + linear(up, f"l{l}.w_down")
+    x = _layernorm(x, base["ln_f_g"], base["ln_f_b"])
+    logits = x @ base["tok_emb"].T  # tied head
+    if collect_activations:
+        return logits, acts
+    return logits
+
+
+def masked_loss(logits, tokens, mask):
+    """(sum of CE over masked next-token positions, masked count).
+
+    `mask[b, t] = 1` marks positions whose *prediction target* (token t)
+    counts toward the loss; position 0 never has a target.
+    """
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    targets = tokens[:, 1:]
+    m = mask[:, 1:]
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return (nll * m).sum(), m.sum()
+
+
+# --------------------------------------------------------------------------
+# AdamW (hand-rolled; optimizer state is part of the HLO interface)
+# --------------------------------------------------------------------------
+
+B1, B2, EPS = 0.9, 0.999, 1e-8
+
+
+def adamw_update(params, grads, m, v, t, lr, wd):
+    """One AdamW step over lists of arrays. `t` is the 1-based step (f32)."""
+    new_p, new_m, new_v = [], [], []
+    bc1 = 1.0 - B1**t
+    bc2 = 1.0 - B2**t
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = B1 * mi + (1 - B1) * g
+        vi = B2 * vi + (1 - B2) * g * g
+        mhat = mi / bc1
+        vhat = vi / bc2
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + EPS) + wd * p)
+        new_p.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v
+
+
+# --------------------------------------------------------------------------
+# Entry points (flat-argument functions + their manifests)
+# --------------------------------------------------------------------------
+
+def _spec_entry(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def build_entrypoints(cfg: Config):
+    """Return {entry_name: (fn, [input specs], [output specs])}.
+
+    Input/output specs are manifest dicts; `fn` takes the inputs as flat
+    positional args in exactly the manifest order.
+    """
+    bspecs = base_param_specs(cfg)
+    lspecs = lora_param_specs(cfg)
+    qspecs = quant_param_specs(cfg)
+    nqspecs = nonquant_base_specs(cfg)
+    nb, nl, nq = len(bspecs), len(lspecs), len(qspecs)
+    bt = (cfg.batch, cfg.seq)
+
+    tok_in = _spec_entry("tokens", bt, "i32")
+    mask_in = _spec_entry("mask", bt, "f32")
+    scalar = lambda n: _spec_entry(n, (), "f32")
+
+    entries = {}
+
+    # ---- pretrain_step ----
+    def pretrain_step(*args):
+        base_vals = list(args[:nb])
+        m = list(args[nb:2 * nb])
+        v = list(args[2 * nb:3 * nb])
+        tokens, mask, lr, wd, t = args[3 * nb:]
+
+        def loss_fn(base_list):
+            base = _unflatten(bspecs, base_list)
+            logits = forward(cfg, base, None, tokens)
+            s, c = masked_loss(logits, tokens, mask)
+            return s / jnp.maximum(c, 1.0)
+
+        loss, grads = jax.value_and_grad(loss_fn)(base_vals)
+        new_p, new_m, new_v = adamw_update(base_vals, grads, m, v, t, lr, wd)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    ins = ([_spec_entry(n, s) for n, s in bspecs]
+           + [_spec_entry(f"m.{n}", s) for n, s in bspecs]
+           + [_spec_entry(f"v.{n}", s) for n, s in bspecs]
+           + [tok_in, mask_in, scalar("lr"), scalar("wd"), scalar("t")])
+    outs = ([_spec_entry(n, s) for n, s in bspecs]
+            + [_spec_entry(f"m.{n}", s) for n, s in bspecs]
+            + [_spec_entry(f"v.{n}", s) for n, s in bspecs]
+            + [scalar("loss")])
+    entries["pretrain_step"] = (pretrain_step, ins, outs)
+
+    # ---- lora_step ----
+    def lora_step(*args):
+        base = _unflatten(bspecs, args[:nb])
+        lora_vals = list(args[nb:nb + nl])
+        m = list(args[nb + nl:nb + 2 * nl])
+        v = list(args[nb + 2 * nl:nb + 3 * nl])
+        tokens, mask, lr, wd, t = args[nb + 3 * nl:]
+
+        def loss_fn(lora_list):
+            lora = _unflatten(lspecs, lora_list)
+            logits = forward(cfg, base, lora, tokens)
+            s, c = masked_loss(logits, tokens, mask)
+            return s / jnp.maximum(c, 1.0)
+
+        loss, grads = jax.value_and_grad(loss_fn)(lora_vals)
+        new_p, new_m, new_v = adamw_update(lora_vals, grads, m, v, t, lr, wd)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (loss,)
+
+    ins = ([_spec_entry(n, s) for n, s in bspecs]
+           + [_spec_entry(n, s) for n, s in lspecs]
+           + [_spec_entry(f"m.{n}", s) for n, s in lspecs]
+           + [_spec_entry(f"v.{n}", s) for n, s in lspecs]
+           + [tok_in, mask_in, scalar("lr"), scalar("wd"), scalar("t")])
+    outs = ([_spec_entry(n, s) for n, s in lspecs]
+            + [_spec_entry(f"m.{n}", s) for n, s in lspecs]
+            + [_spec_entry(f"v.{n}", s) for n, s in lspecs]
+            + [scalar("loss")])
+    entries["lora_step"] = (lora_step, ins, outs)
+
+    # ---- eval_loss ----
+    def eval_loss(*args):
+        base = _unflatten(bspecs, args[:nb])
+        lora = _unflatten(lspecs, args[nb:nb + nl])
+        tokens, mask = args[nb + nl:]
+        logits = forward(cfg, base, lora, tokens)
+        s, c = masked_loss(logits, tokens, mask)
+        return (s, c)
+
+    ins = ([_spec_entry(n, s) for n, s in bspecs]
+           + [_spec_entry(n, s) for n, s in lspecs] + [tok_in, mask_in])
+    outs = [scalar("loss_sum"), scalar("count")]
+    entries["eval_loss"] = (eval_loss, ins, outs)
+
+    # ---- eval_logits ----
+    def eval_logits(*args):
+        base = _unflatten(bspecs, args[:nb])
+        lora = _unflatten(lspecs, args[nb:nb + nl])
+        tokens = args[nb + nl]
+        return (forward(cfg, base, lora, tokens),)
+
+    ins = ([_spec_entry(n, s) for n, s in bspecs]
+           + [_spec_entry(n, s) for n, s in lspecs] + [tok_in])
+    outs = [_spec_entry("logits", (cfg.batch, cfg.seq, cfg.vocab))]
+    entries["eval_logits"] = (eval_logits, ins, outs)
+
+    # ---- capture_grams ----
+    def capture_grams(*args):
+        base = _unflatten(bspecs, args[:nb])
+        tokens, mask = args[nb:]
+        logits, acts = forward(cfg, base, None, tokens, collect_activations=True)
+        outs = []
+        mask_flat = mask.reshape(-1, 1)
+        for l in range(cfg.n_layers):
+            for tag, _, _ in linear_specs(cfg):
+                x = acts[f"l{l}.{tag}"] * mask_flat  # zero out pad rows
+                outs.append(gram(x))  # L1 Pallas kernel
+        # Keep the full forward (final LN, head) alive so XLA does not DCE
+        # their parameters out of the HLO signature; also a useful
+        # diagnostic that the captured model is numerically sane.
+        checksum = (logits * mask[..., None]).mean()
+        return tuple(outs) + (checksum,)
+
+    ins = [_spec_entry(n, s) for n, s in bspecs] + [tok_in, mask_in]
+    outs = []
+    for l in range(cfg.n_layers):
+        for tag, din, _ in linear_specs(cfg):
+            outs.append(_spec_entry(f"l{l}.{tag}.H", (din, din)))
+    outs.append(scalar("logit_checksum"))
+    entries["capture_grams"] = (capture_grams, ins, outs)
+
+    # ---- qeval_loss (quantized serving path through the Pallas kernel) ----
+    def qeval_loss(*args):
+        nnq = len(nqspecs)
+        nonq = _unflatten(nqspecs, args[:nnq])
+        qvals = args[nnq:nnq + nq]
+        lora = _unflatten(lspecs, args[nnq + nq:nnq + nq + nl])
+        tokens, mask = args[nnq + nq + nl:]
+        quant = {}
+        for i in range(0, nq, 3):
+            name = qspecs[i][0].rsplit(".", 1)[0]  # strip ".codes"
+            quant[name] = (qvals[i], qvals[i + 1], qvals[i + 2])
+        # Base dict: embeddings + LNs are real, quantized linears are
+        # placeholders (never read — the `quant` branch intercepts them).
+        base = dict(nonq)
+        for l in range(cfg.n_layers):
+            for tag, din, dout in linear_specs(cfg):
+                base[f"l{l}.{tag}"] = None
+        logits = forward(cfg, base, lora, tokens, quant=quant)
+        s, c = masked_loss(logits, tokens, mask)
+        return (s, c)
+
+    ins = ([_spec_entry(n, s) for n, s in nqspecs]
+           + [_spec_entry(n, s, d) for n, s, d in qspecs]
+           + [_spec_entry(n, s) for n, s in lspecs] + [tok_in, mask_in])
+    outs = [scalar("loss_sum"), scalar("count")]
+    entries["qeval_loss"] = (qeval_loss, ins, outs)
+
+    return entries
+
+
+def config_manifest(cfg: Config):
+    d = asdict(cfg)
+    d["d_head"] = cfg.d_head
+    return d

@@ -1,0 +1,76 @@
+"""AOT lowering contract tests: manifest specs must exactly describe the
+lowered HLO (parameter counts, shapes, dtypes) — this is the interface the
+Rust runtime trusts blindly."""
+
+import re
+
+import jax
+import pytest
+
+from compile.aot import lower_entry, to_hlo_text
+from compile.model import PRESETS, build_entrypoints
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = PRESETS["micro"]
+
+
+@pytest.fixture(scope="module")
+def entries():
+    return build_entrypoints(CFG)
+
+
+def test_manifest_specs_are_well_formed(entries):
+    for name, (fn, ins, outs) in entries.items():
+        assert callable(fn)
+        for spec in ins + outs:
+            assert set(spec) == {"name", "shape", "dtype"}, (name, spec)
+            assert spec["dtype"] in ("f32", "i32")
+            assert all(isinstance(d, int) and d >= 0 for d in spec["shape"])
+        # Names unique within a side.
+        in_names = [s["name"] for s in ins]
+        assert len(in_names) == len(set(in_names)), name
+
+
+def test_hlo_parameter_count_matches_manifest(entries):
+    # Lower the two smallest entries and count HLO parameters.
+    for name in ("eval_loss", "capture_grams"):
+        fn, ins, outs = entries[name]
+        text = lower_entry(fn, ins)
+        assert "ENTRY" in text
+        params = re.findall(r"parameter\((\d+)\)", text)
+        assert len(set(params)) == len(ins), (
+            f"{name}: {len(set(params))} HLO params vs {len(ins)} manifest inputs"
+        )
+        # return_tuple=True → root is a tuple of len(outs).
+        assert "tuple(" in text.lower() or len(outs) == 1
+
+
+def test_lora_step_output_matches_input_lora_shapes(entries):
+    fn, ins, outs = entries["lora_step"]
+    lora_in = [s for s in ins if s["name"].endswith((".A", ".B"))]
+    lora_out = [s for s in outs if s["name"].endswith((".A", ".B"))]
+    assert [s["shape"] for s in lora_in] == [s["shape"] for s in lora_out]
+
+
+def test_presets_are_consistent():
+    for name, cfg in PRESETS.items():
+        assert cfg.name == name or cfg.name.startswith(name)
+        assert cfg.d_model % cfg.n_heads == 0, name
+        assert cfg.vocab == 260
+        assert cfg.rank <= min(cfg.d_model, cfg.d_ff), name
+
+
+def test_to_hlo_text_smoke():
+    import jax.numpy as jnp
+
+    def f(x):
+        return (x * 2.0,)
+
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

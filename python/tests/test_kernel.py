@@ -1,0 +1,161 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+The hypothesis sweeps are the heart of this suite: shapes, ranks, group
+sizes and bit-widths are all drawn adversarially and the kernel must match
+`ref.py` to f32 tolerance on every draw.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qlora_matmul import gram, qlora_matmul
+from compile.kernels.ref import (
+    dequant_ref,
+    gram_ref,
+    qlora_matmul_ref,
+    quantize_rtn_ref,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_case(rng, m, k, n, r, bits, gs):
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)) * 0.5, jnp.float32)
+    codes, scales, zeros = quantize_rtn_ref(w, bits, gs)
+    a = jnp.asarray(rng.standard_normal((k, r)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((n, r)) * 0.1, jnp.float32)
+    return x, codes, scales, zeros, a, b
+
+
+class TestQloraMatmul:
+    def test_basic_exact_match(self):
+        rng = np.random.default_rng(0)
+        x, codes, scales, zeros, a, b = make_case(rng, 16, 32, 24, 4, 4, 8)
+        got = qlora_matmul(x, codes, scales, zeros, a, b, group_size=8)
+        want = qlora_matmul_ref(x, codes, scales, zeros, a, b, 8)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_zero_lora_is_pure_dequant_matmul(self):
+        rng = np.random.default_rng(1)
+        x, codes, scales, zeros, a, b = make_case(rng, 8, 16, 8, 2, 2, 16)
+        a = jnp.zeros_like(a)
+        got = qlora_matmul(x, codes, scales, zeros, a, b, group_size=16)
+        want = x @ dequant_ref(codes, scales, zeros, 16)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_tiling_boundaries(self):
+        # Shapes that do NOT divide the block sizes exercise the padding path.
+        rng = np.random.default_rng(2)
+        x, codes, scales, zeros, a, b = make_case(rng, 70, 48, 130, 8, 4, 16)
+        got = qlora_matmul(x, codes, scales, zeros, a, b,
+                           group_size=16, block_m=64, block_n=128)
+        want = qlora_matmul_ref(x, codes, scales, zeros, a, b, 16)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_partial_last_group(self):
+        rng = np.random.default_rng(3)
+        # K=20 with gs=8 → 3 groups, last partial.
+        x, codes, scales, zeros, a, b = make_case(rng, 4, 20, 6, 2, 3, 8)
+        got = qlora_matmul(x, codes, scales, zeros, a, b, group_size=8)
+        want = qlora_matmul_ref(x, codes, scales, zeros, a, b, 8)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(1, 40),
+        k=st.integers(1, 48),
+        n=st.integers(1, 48),
+        r=st.integers(1, 8),
+        bits=st.sampled_from([2, 3, 4, 8]),
+        gs_pow=st.integers(1, 5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, m, k, n, r, bits, gs_pow, seed):
+        gs = 2**gs_pow
+        rng = np.random.default_rng(seed)
+        x, codes, scales, zeros, a, b = make_case(rng, m, k, n, r, bits, gs)
+        got = qlora_matmul(x, codes, scales, zeros, a, b,
+                           group_size=gs, block_m=16, block_n=32)
+        want = qlora_matmul_ref(x, codes, scales, zeros, a, b, gs)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        bm=st.sampled_from([8, 16, 64]),
+        bn=st.sampled_from([16, 32, 128]),
+        seed=st.integers(0, 1000),
+    )
+    def test_block_shape_invariance(self, bm, bn, seed):
+        # The result must not depend on the tiling.
+        rng = np.random.default_rng(seed)
+        x, codes, scales, zeros, a, b = make_case(rng, 33, 24, 40, 4, 4, 8)
+        got = qlora_matmul(x, codes, scales, zeros, a, b,
+                           group_size=8, block_m=bm, block_n=bn)
+        want = qlora_matmul_ref(x, codes, scales, zeros, a, b, 8)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+class TestGram:
+    def test_basic(self):
+        rng = np.random.default_rng(4)
+        x = jnp.asarray(rng.standard_normal((100, 12)), jnp.float32)
+        np.testing.assert_allclose(gram(x), gram_ref(x), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        s=st.integers(1, 300),
+        f=st.integers(1, 32),
+        bs=st.sampled_from([16, 64, 128]),
+        seed=st.integers(0, 1000),
+    )
+    def test_hypothesis_sweep(self, s, f, bs, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((s, f)), jnp.float32)
+        got = gram(x, block_s=bs)
+        np.testing.assert_allclose(got, gram_ref(x), rtol=1e-3, atol=1e-3)
+
+    def test_symmetry_psd(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+        h = np.asarray(gram(x))
+        np.testing.assert_allclose(h, h.T, atol=1e-5)
+        evals = np.linalg.eigvalsh(h)
+        assert evals.min() > -1e-3
+
+
+class TestQuantizerRef:
+    """The jnp quantizer itself (also the source of Rust golden files)."""
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        k=st.integers(1, 64),
+        n=st.integers(1, 16),
+        bits=st.sampled_from([2, 3, 4, 8]),
+        gs=st.sampled_from([4, 16, 64]),
+        seed=st.integers(0, 1000),
+    )
+    def test_roundtrip_error_bound(self, k, n, bits, gs, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+        codes, scales, zeros = quantize_rtn_ref(w, bits, gs)
+        deq = dequant_ref(codes, scales, zeros, gs)
+        row_group = np.arange(k) // gs
+        step = np.asarray(scales)[row_group]
+        # |w - deq| ≤ scale (half-step rounding + half-step zero rounding).
+        assert np.all(np.abs(np.asarray(w - deq)) <= step + 1e-5)
+
+    def test_codes_in_range(self):
+        rng = np.random.default_rng(6)
+        w = jnp.asarray(rng.standard_normal((32, 8)) * 10, jnp.float32)
+        for bits in (2, 3, 4):
+            codes, _, _ = quantize_rtn_ref(w, bits, 8)
+            assert int(codes.min()) >= 0
+            assert int(codes.max()) <= 2**bits - 1
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

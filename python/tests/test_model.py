@@ -1,0 +1,252 @@
+"""L2 model tests: shapes, loss semantics, LoRA algebra, training step
+behaviour, and the quantized path vs the dense path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import quantize_rtn_ref
+from compile.model import (
+    PRESETS,
+    base_param_specs,
+    build_entrypoints,
+    forward,
+    lora_param_specs,
+    masked_loss,
+    nonquant_base_specs,
+    quant_param_specs,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = PRESETS["micro"]
+
+
+def init_base(rng):
+    base = {}
+    for n, s in base_param_specs(CFG):
+        if n.endswith("_g"):
+            base[n] = jnp.ones(s, jnp.float32)
+        elif n.endswith("_b"):
+            base[n] = jnp.zeros(s, jnp.float32)
+        else:
+            base[n] = jnp.asarray(rng.standard_normal(s) * 0.05, jnp.float32)
+    return base
+
+
+def init_lora(rng, zero_b=True):
+    lora = {}
+    for n, s in lora_param_specs(CFG):
+        if n.endswith(".B") and zero_b:
+            lora[n] = jnp.zeros(s, jnp.float32)
+        else:
+            lora[n] = jnp.asarray(rng.standard_normal(s) * 0.05, jnp.float32)
+    return lora
+
+
+def batch(rng):
+    tokens = jnp.asarray(
+        rng.integers(4, CFG.vocab, size=(CFG.batch, CFG.seq)), jnp.int32)
+    mask = jnp.ones((CFG.batch, CFG.seq), jnp.float32)
+    return tokens, mask
+
+
+class TestForward:
+    def test_logits_shape_finite(self):
+        rng = np.random.default_rng(0)
+        base, lora = init_base(rng), init_lora(rng)
+        tokens, _ = batch(rng)
+        logits = forward(CFG, base, lora, tokens)
+        assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_zero_b_lora_matches_base_model(self):
+        rng = np.random.default_rng(1)
+        base = init_base(rng)
+        lora = init_lora(rng, zero_b=True)
+        tokens, _ = batch(rng)
+        l1 = forward(CFG, base, lora, tokens)
+        l2 = forward(CFG, base, None, tokens)
+        np.testing.assert_allclose(l1, l2, atol=1e-5)
+
+    def test_lora_equals_merged_weights(self):
+        # forward(base, lora) == forward(base + A·Bᵀ merged, no lora)
+        rng = np.random.default_rng(2)
+        base = init_base(rng)
+        lora = init_lora(rng, zero_b=False)
+        tokens, _ = batch(rng)
+        merged = dict(base)
+        for l in range(CFG.n_layers):
+            for tag in ("wq", "wk", "wv", "wo", "w_up", "w_down"):
+                n = f"l{l}.{tag}"
+                merged[n] = base[n] + lora[f"{n}.A"] @ lora[f"{n}.B"].T
+        l1 = forward(CFG, base, lora, tokens)
+        l2 = forward(CFG, merged, None, tokens)
+        np.testing.assert_allclose(l1, l2, rtol=2e-4, atol=2e-4)
+
+    def test_causality(self):
+        # Changing token t must not change logits at positions < t.
+        rng = np.random.default_rng(3)
+        base = init_base(rng)
+        tokens, _ = batch(rng)
+        l1 = forward(CFG, base, None, tokens)
+        perturbed = tokens.at[:, -1].set((tokens[:, -1] + 1) % CFG.vocab)
+        l2 = forward(CFG, base, None, perturbed)
+        np.testing.assert_allclose(l1[:, :-1, :], l2[:, :-1, :], atol=1e-5)
+        assert float(jnp.abs(l1[:, -1] - l2[:, -1]).max()) > 1e-4
+
+    def test_masked_loss_semantics(self):
+        rng = np.random.default_rng(4)
+        base = init_base(rng)
+        tokens, mask = batch(rng)
+        logits = forward(CFG, base, None, tokens)
+        s_full, c_full = masked_loss(logits, tokens, mask)
+        assert int(c_full) == CFG.batch * (CFG.seq - 1)
+        # Half mask → half count, and loss sum must drop.
+        half = mask.at[:, : CFG.seq // 2].set(0.0)
+        s_half, c_half = masked_loss(logits, tokens, half)
+        assert int(c_half) < int(c_full)
+        assert float(s_half) < float(s_full)
+
+    def test_random_model_loss_near_uniform(self):
+        rng = np.random.default_rng(5)
+        base = init_base(rng)
+        tokens, mask = batch(rng)
+        logits = forward(CFG, base, None, tokens)
+        s, c = masked_loss(logits, tokens, mask)
+        # Untrained model ≈ uniform: CE ≈ ln(vocab).
+        assert abs(float(s / c) - np.log(CFG.vocab)) < 1.0
+
+
+class TestEntrypoints:
+    @pytest.fixture(scope="class")
+    def entries(self):
+        return build_entrypoints(CFG)
+
+    def _inputs_for(self, specs, rng):
+        vals = []
+        for s in specs:
+            shape = tuple(s["shape"])
+            if s["dtype"] == "i32":
+                if s["name"] == "tokens":
+                    vals.append(jnp.asarray(
+                        rng.integers(4, CFG.vocab, size=shape), jnp.int32))
+                else:
+                    vals.append(jnp.zeros(shape, jnp.int32))
+            elif s["name"] == "mask":
+                vals.append(jnp.ones(shape, jnp.float32))
+            elif s["name"] == "lr":
+                vals.append(jnp.asarray(1e-3, jnp.float32))
+            elif s["name"] == "wd":
+                vals.append(jnp.asarray(0.0, jnp.float32))
+            elif s["name"] == "t":
+                vals.append(jnp.asarray(1.0, jnp.float32))
+            elif s["name"].startswith(("m.", "v.")):
+                vals.append(jnp.zeros(shape, jnp.float32))
+            elif s["name"].endswith("_g"):
+                vals.append(jnp.ones(shape, jnp.float32))
+            elif s["name"].endswith(".B"):
+                vals.append(jnp.zeros(shape, jnp.float32))
+            else:
+                vals.append(jnp.asarray(
+                    rng.standard_normal(shape) * 0.05, jnp.float32))
+        return vals
+
+    def test_pretrain_step_decreases_loss(self, entries):
+        fn, ins, outs = entries["pretrain_step"]
+        rng = np.random.default_rng(6)
+        vals = self._inputs_for(ins, rng)
+        nb = len(base_param_specs(CFG))
+        jfn = jax.jit(fn)
+        losses = []
+        for step in range(12):
+            res = jfn(*vals)
+            losses.append(float(res[-1]))
+            # Feed params/m/v back; bump t.
+            vals[: 3 * nb] = list(res[: 3 * nb])
+            vals[-1] = jnp.asarray(float(step + 2), jnp.float32)
+        assert losses[-1] < losses[0] - 0.1, losses
+
+    def test_lora_step_trains_only_lora(self, entries):
+        fn, ins, outs = entries["lora_step"]
+        rng = np.random.default_rng(7)
+        vals = self._inputs_for(ins, rng)
+        # Break the zero-B init so gradients flow through both factors.
+        nb = len(base_param_specs(CFG))
+        nl = len(lora_param_specs(CFG))
+        for i in range(nb, nb + nl):
+            vals[i] = jnp.asarray(
+                rng.standard_normal(vals[i].shape) * 0.05, jnp.float32)
+        jfn = jax.jit(fn)
+        losses = []
+        for step in range(12):
+            res = jfn(*vals)
+            losses.append(float(res[-1]))
+            vals[nb: nb + 3 * nl] = list(res[: 3 * nl])
+            vals[-1] = jnp.asarray(float(step + 2), jnp.float32)
+        assert losses[-1] < losses[0], losses
+
+    def test_eval_matches_forward(self, entries):
+        fn, ins, outs = entries["eval_loss"]
+        rng = np.random.default_rng(8)
+        vals = self._inputs_for(ins, rng)
+        s, c = fn(*vals)
+        assert int(c) == CFG.batch * (CFG.seq - 1)
+        assert 1.0 < float(s) / float(c) < 10.0
+
+    def test_capture_grams_psd_and_shapes(self, entries):
+        fn, ins, outs = entries["capture_grams"]
+        rng = np.random.default_rng(9)
+        vals = self._inputs_for(ins, rng)
+        *grams, checksum = fn(*vals)
+        assert len(grams) == 6 * CFG.n_layers
+        assert np.isfinite(float(checksum))
+        for g, spec in zip(grams, outs):
+            assert g.shape == tuple(spec["shape"])
+            gn = np.asarray(g)
+            np.testing.assert_allclose(gn, gn.T, atol=1e-3)
+            assert np.linalg.eigvalsh(gn).min() > -1e-2
+
+    def test_qeval_matches_dense_eval_on_grid_weights(self, entries):
+        """The quantized serving path == dense path when base weights are
+        exactly the dequantized values — the L1/L2 consistency contract the
+        Rust runtime relies on."""
+        rng = np.random.default_rng(10)
+        eval_fn, eval_ins, _ = entries["eval_loss"]
+        qeval_fn, qeval_ins, _ = entries["qeval_loss"]
+
+        # Build a base model, quantize its linears, dequantize back.
+        base = init_base(rng)
+        quant = {}
+        for l in range(CFG.n_layers):
+            for tag in ("wq", "wk", "wv", "wo", "w_up", "w_down"):
+                n = f"l{l}.{tag}"
+                codes, scales, zeros = quantize_rtn_ref(
+                    base[n], 4, CFG.group_size)
+                quant[n] = (codes, scales, zeros)
+                # dense path sees the dequantized values
+                from compile.kernels.ref import dequant_ref
+                base[n] = dequant_ref(codes, scales, zeros, CFG.group_size)
+        lora = init_lora(rng, zero_b=False)
+        tokens, mask = batch(rng)
+
+        ev = [base[s["name"]] for s in eval_ins[: len(base_param_specs(CFG))]]
+        ev += [lora[s["name"]] for s in eval_ins[len(ev): len(ev) + len(lora_param_specs(CFG))]]
+        ev += [tokens, mask]
+        s1, c1 = eval_fn(*ev)
+
+        qv = [base[n] for n, _ in nonquant_base_specs(CFG)]
+        for n, _, _ in quant_param_specs(CFG):
+            layer, kind = n.rsplit(".", 1)
+            qv.append(quant[layer][("codes", "scales", "zeros").index(kind)])
+        qv += [lora[n] for n, _ in lora_param_specs(CFG)]
+        qv += [tokens, mask]
+        s2, c2 = qeval_fn(*qv)
+
+        assert int(c1) == int(c2)
+        np.testing.assert_allclose(float(s1), float(s2), rtol=2e-3)
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-q"])

@@ -1,0 +1,75 @@
+//! Initialization-method benchmarks: CLoQ's two-SVD closed form vs LoftQ's
+//! AltMin vs the zero-init baselines — Table 10's duration column at
+//! several scales, plus the rank sweep.
+
+use cloq::bench::{bench, section};
+use cloq::linalg::{matmul, syrk_t, Matrix};
+use cloq::lowrank::{cloq_lowrank, damping_lambda, init_layer, CloqConfig, InitConfig, LoftqConfig, LoftqQuantizer, Method};
+use cloq::lowrank::loftq;
+use cloq::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(3);
+    let t = 0.4;
+
+    section("closed form (Theorem 3.1) vs LoftQ AltMin — full per-layer init");
+    for (m, n) in [(96usize, 96usize), (96, 256), (256, 256)] {
+        let base = Matrix::randn(m * 4, (m / 3).max(2), 1.0, &mut rng);
+        let mix = Matrix::randn((m / 3).max(2), m, 1.0, &mut rng);
+        let x = matmul(&base, &mix);
+        let w = Matrix::randn(m, n, 0.3, &mut rng);
+        let h = syrk_t(&x);
+        for method in [Method::QLora, Method::GptqLora, Method::LoftQ, Method::CLoQNoMagR, Method::CLoQ] {
+            let mut cfg = InitConfig::new(method, 2, 16);
+            cfg.group_size = 64;
+            let mut r2 = Rng::new(9);
+            bench(&format!("{} {m}x{n}", method.name()), t, || {
+                init_layer(&w, Some(&h), &cfg, &mut r2)
+            });
+        }
+    }
+
+    section("CLoQ low-rank step only, rank sweep (96x256)");
+    {
+        let base = Matrix::randn(384, 32, 1.0, &mut rng);
+        let mix = Matrix::randn(32, 96, 1.0, &mut rng);
+        let x = matmul(&base, &mix);
+        let dw = Matrix::randn(96, 256, 0.1, &mut rng);
+        let mut h = syrk_t(&x);
+        h.add_diag(damping_lambda(&h, 0.01));
+        for r in [4usize, 16, 64] {
+            bench(&format!("cloq_lowrank rank {r}"), t, || {
+                cloq_lowrank(&h, &dw, &CloqConfig { rank: r, ..Default::default() })
+            });
+        }
+    }
+
+    section("exact vs randomized SVD inside cloq_lowrank (96x256)");
+    {
+        let base = Matrix::randn(384, 32, 1.0, &mut rng);
+        let mix = Matrix::randn(32, 96, 1.0, &mut rng);
+        let x = matmul(&base, &mix);
+        let dw = Matrix::randn(96, 256, 0.1, &mut rng);
+        let mut h = syrk_t(&x);
+        h.add_diag(damping_lambda(&h, 0.01));
+        for randomized in [false, true] {
+            let cfg = CloqConfig { rank: 16, randomized, ..Default::default() };
+            bench(&format!("cloq_lowrank randomized={randomized}"), t, || {
+                cloq_lowrank(&h, &dw, &cfg)
+            });
+        }
+        // diag-H (LQ-LoRA-style) midpoint for context.
+        bench("lqlora_lowrank (diag-H)", t, || {
+            cloq::lowrank::lqlora_lowrank(&h, &dw, 16, 0.01)
+        });
+    }
+
+    section("LoftQ iteration sweep (96x256, 2-bit)");
+    {
+        let w = Matrix::randn(96, 256, 0.3, &mut rng);
+        for iters in [1usize, 5, 10] {
+            let cfg = LoftqConfig { bits: 2, group_size: 64, rank: 16, iters, quantizer: LoftqQuantizer::Int };
+            bench(&format!("loftq iters={iters}"), t, || loftq(&w, &cfg));
+        }
+    }
+}

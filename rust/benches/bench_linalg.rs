@@ -1,0 +1,54 @@
+//! Linear-algebra substrate benchmarks: GEMM / SYRK / SVD / eig / Cholesky
+//! scaling. These are the primitives under OPTQ (Cholesky + rank-1-ish
+//! updates) and CLoQ (eig + SVD), so their scaling curves bound every
+//! init-cost number in Table 10.
+//!
+//! Run: `cargo bench --bench bench_linalg` (offline: add `--offline`).
+
+use cloq::bench::{bench, section};
+use cloq::linalg::chol::{cholesky, inv_spd};
+use cloq::linalg::eig::sym_eig;
+use cloq::linalg::{matmul, svd, syrk_t, Matrix};
+use cloq::util::prng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let t = 0.3;
+
+    section("GEMM (square)");
+    for n in [32usize, 64, 128, 256] {
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let r = bench(&format!("matmul {n}x{n}x{n}"), t, || matmul(&a, &b));
+        let flops = 2.0 * (n as f64).powi(3);
+        println!("    -> {:.2} GFLOP/s", flops / r.min_s / 1e9);
+    }
+
+    section("SYRK (Gram accumulation, calibration shape)");
+    for (s, f) in [(512usize, 96usize), (512, 256), (2048, 96)] {
+        let x = Matrix::randn(s, f, 1.0, &mut rng);
+        bench(&format!("syrk_t {s}x{f}"), t, || syrk_t(&x));
+    }
+
+    section("Cholesky + SPD inverse (OPTQ inner)");
+    for n in [64usize, 128, 256] {
+        let x = Matrix::randn(n + 16, n, 1.0, &mut rng);
+        let mut h = syrk_t(&x);
+        h.add_diag(0.1);
+        bench(&format!("cholesky {n}"), t, || cholesky(&h).unwrap());
+        bench(&format!("inv_spd {n}"), t, || inv_spd(&h).unwrap());
+    }
+
+    section("Symmetric eig (CLoQ step 3)");
+    for n in [32usize, 64, 96, 128] {
+        let x = Matrix::randn(n + 16, n, 1.0, &mut rng);
+        let h = syrk_t(&x);
+        bench(&format!("sym_eig {n}"), t, || sym_eig(&h));
+    }
+
+    section("SVD (CLoQ step 5)");
+    for (m, n) in [(64usize, 48usize), (96, 64), (128, 96), (96, 256)] {
+        let a = Matrix::randn(m, n, 1.0, &mut rng);
+        bench(&format!("svd {m}x{n}"), t, || svd(&a));
+    }
+}

@@ -1,0 +1,55 @@
+//! OPTQ / MagR / RTN / NF quantization benchmarks across layer sizes and
+//! bit-widths — the per-layer cost column behind Table 10, plus the
+//! act-order ablation called out in DESIGN.md.
+
+use cloq::bench::{bench, section};
+use cloq::linalg::{matmul, syrk_t, Matrix};
+use cloq::quant::magr::{magr, MagrConfig};
+use cloq::quant::optq::{optq, OptqConfig};
+use cloq::quant::{quantize_nf, quantize_rtn};
+use cloq::util::prng::Rng;
+
+fn layer(m: usize, n: usize, rng: &mut Rng) -> (Matrix, Matrix) {
+    let base = Matrix::randn(m * 4, (m / 3).max(2), 1.0, rng);
+    let mix = Matrix::randn((m / 3).max(2), m, 1.0, rng);
+    let x = matmul(&base, &mix);
+    (Matrix::randn(m, n, 0.3, rng), syrk_t(&x))
+}
+
+fn main() {
+    let mut rng = Rng::new(2);
+    let t = 0.4;
+
+    section("data-free quantizers");
+    for (m, n) in [(96usize, 96usize), (96, 256), (256, 96)] {
+        let (w, _) = layer(m, n, &mut rng);
+        bench(&format!("rtn 2-bit {m}x{n} g64"), t, || quantize_rtn(&w, 2, 64));
+        bench(&format!("nf4 {m}x{n} b64"), t, || quantize_nf(&w, 4, 64));
+    }
+
+    section("OPTQ across sizes (2-bit, group 64)");
+    for (m, n) in [(96usize, 96usize), (96, 256), (256, 96), (256, 256)] {
+        let (w, h) = layer(m, n, &mut rng);
+        let cfg = OptqConfig { bits: 2, group_size: 64, ..Default::default() };
+        bench(&format!("optq {m}x{n}"), t, || optq(&w, &h, &cfg));
+    }
+
+    section("OPTQ across bit-widths (96x256)");
+    let (w, h) = layer(96, 256, &mut rng);
+    for bits in [2u32, 3, 4, 8] {
+        let cfg = OptqConfig { bits, group_size: 64, ..Default::default() };
+        bench(&format!("optq {bits}-bit"), t, || optq(&w, &h, &cfg));
+    }
+
+    section("OPTQ act-order ablation (96x256, 2-bit)");
+    for act_order in [false, true] {
+        let cfg = OptqConfig { bits: 2, group_size: 64, act_order, ..Default::default() };
+        bench(&format!("optq act_order={act_order}"), t, || optq(&w, &h, &cfg));
+    }
+
+    section("MagR preprocessing (FISTA)");
+    for iters in [30usize, 150] {
+        let cfg = MagrConfig { alpha_rel: 1e-3, iters };
+        bench(&format!("magr 96x256 iters={iters}"), t, || magr(&w, &h, &cfg));
+    }
+}

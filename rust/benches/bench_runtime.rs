@@ -1,0 +1,114 @@
+//! PJRT runtime benchmarks: per-step latency of every AOT entry point —
+//! the serving/training hot path the L3 coordinator drives. Skips politely
+//! when artifacts are missing.
+
+use cloq::bench::{bench, section};
+use cloq::model::{init_base, lora_specs, zeros_for};
+use cloq::runtime::{Runtime, Tensor};
+use cloq::util::prng::Rng;
+
+fn main() {
+    let dir = std::path::PathBuf::from("artifacts/tiny-s");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP bench_runtime: run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::load(&dir).unwrap();
+    let cfg = rt.manifest.config.clone();
+    let mut rng = Rng::new(4);
+    let base = init_base(&rt.manifest, &mut rng).unwrap();
+    let lspecs = lora_specs(&rt.manifest).unwrap();
+    let lora = zeros_for(&lspecs);
+    let n = cfg.batch * cfg.seq;
+    let tokens = Tensor::i32(
+        vec![cfg.batch, cfg.seq],
+        (0..n).map(|_| rng.range(4, cfg.vocab as i64 - 1) as i32).collect(),
+    );
+    let mask = Tensor::f32(vec![cfg.batch, cfg.seq], vec![1.0; n]);
+    let t = 1.0;
+
+    section(&format!(
+        "PJRT step latency ({}: d={} L={} batch={} seq={})",
+        cfg.name, cfg.d_model, cfg.n_layers, cfg.batch, cfg.seq
+    ));
+
+    // eval_loss
+    let mut ev = base.in_order();
+    ev.extend(lora.in_order());
+    ev.push(tokens.clone());
+    ev.push(mask.clone());
+    bench("eval_loss", t, || rt.run("eval_loss", &ev).unwrap());
+    let tok_per_s = n as f64;
+
+    // eval_logits
+    let mut el = base.in_order();
+    el.extend(lora.in_order());
+    el.push(tokens.clone());
+    let r = bench("eval_logits", t, || rt.run("eval_logits", &el).unwrap());
+    println!("    -> {:.0} tok/s", tok_per_s / r.min_s);
+
+    // capture_grams
+    let mut cg = base.in_order();
+    cg.push(tokens.clone());
+    cg.push(mask.clone());
+    bench("capture_grams", t, || rt.run("capture_grams", &cg).unwrap());
+
+    // lora_step
+    let lvals = lora.in_order();
+    let zeros: Vec<Tensor> = lvals.iter().map(|x| Tensor::zeros_f32(x.shape.clone())).collect();
+    let mut ls = base.in_order();
+    ls.extend(lvals.clone());
+    ls.extend(zeros.clone());
+    ls.extend(zeros.clone());
+    ls.push(tokens.clone());
+    ls.push(mask.clone());
+    ls.push(Tensor::scalar_f32(1e-3));
+    ls.push(Tensor::scalar_f32(0.0));
+    ls.push(Tensor::scalar_f32(1.0));
+    let r = bench("lora_step (fwd+bwd+AdamW)", t, || rt.run("lora_step", &ls).unwrap());
+    println!("    -> {:.0} tok/s", tok_per_s / r.min_s);
+
+    // pretrain_step
+    let bvals = base.in_order();
+    let bzeros: Vec<Tensor> = bvals.iter().map(|x| Tensor::zeros_f32(x.shape.clone())).collect();
+    let mut ps = bvals.clone();
+    ps.extend(bzeros.clone());
+    ps.extend(bzeros.clone());
+    ps.push(tokens.clone());
+    ps.push(mask.clone());
+    ps.push(Tensor::scalar_f32(1e-3));
+    ps.push(Tensor::scalar_f32(0.0));
+    ps.push(Tensor::scalar_f32(1.0));
+    let r = bench("pretrain_step (full params)", t, || rt.run("pretrain_step", &ps).unwrap());
+    println!("    -> {:.0} tok/s", tok_per_s / r.min_s);
+
+    // qeval_loss (serving path with Pallas fused dequant kernel)
+    let qspec = rt.manifest.entry("qeval_loss").unwrap().clone();
+    let mut qs: Vec<Tensor> = Vec::new();
+    for s in &qspec.inputs {
+        if s.name == "tokens" {
+            qs.push(tokens.clone());
+        } else if s.name == "mask" {
+            qs.push(mask.clone());
+        } else if s.name.ends_with(".codes") {
+            let layer = s.name.trim_end_matches(".codes");
+            let w = base.get(layer).to_matrix();
+            let q = cloq::quant::quantize_rtn(&w, 2, cfg.group_size);
+            qs.push(Tensor::i32(vec![q.rows, q.cols], q.codes.iter().map(|&c| c as i32).collect()));
+        } else if s.name.ends_with(".scales") {
+            let layer = s.name.trim_end_matches(".scales");
+            let q = cloq::quant::quantize_rtn(&base.get(layer).to_matrix(), 2, cfg.group_size);
+            qs.push(Tensor::from_matrix(&q.scales));
+        } else if s.name.ends_with(".zeros") {
+            let layer = s.name.trim_end_matches(".zeros");
+            let q = cloq::quant::quantize_rtn(&base.get(layer).to_matrix(), 2, cfg.group_size);
+            qs.push(Tensor::from_matrix(&q.zeros));
+        } else if s.name.ends_with(".A") || s.name.ends_with(".B") {
+            qs.push(lora.get(&s.name).clone());
+        } else {
+            qs.push(base.get(&s.name).clone());
+        }
+    }
+    let r = bench("qeval_loss (Pallas dequant path)", t, || rt.run("qeval_loss", &qs).unwrap());
+    println!("    -> {:.0} tok/s", tok_per_s / r.min_s);
+}

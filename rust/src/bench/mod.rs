@@ -1,0 +1,103 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set —
+//! DESIGN.md §3). `cargo bench` targets are `harness = false` binaries
+//! that drive this module.
+//!
+//! Methodology: warmup runs, then timed iterations with mean / min /
+//! stddev; iteration count auto-scales to the op cost so each benchmark
+//! takes ~`target_time`.
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10}   mean {:>12}   min {:>12}   ±{:>10}",
+            self.name,
+            format!("x{}", self.iters),
+            fmt_time(self.mean_s),
+            fmt_time(self.min_s),
+            fmt_time(self.stddev_s),
+        )
+    }
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iterations to roughly `target_time` seconds.
+pub fn bench<T>(name: &str, target_time: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup + cost estimate.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let est = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_time / est) as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / samples.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        min_s: min,
+        stddev_s: var.sqrt(),
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let r = bench("spin", 0.05, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.0).ends_with(" s"));
+        assert!(fmt_time(2e-3).ends_with(" ms"));
+        assert!(fmt_time(2e-6).ends_with(" us"));
+        assert!(fmt_time(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,117 @@
+//! Calibration: stream calibration batches through the `capture_grams`
+//! graph and accumulate the per-linear Gram matrices `H = Σ_b X_bᵀX_b`.
+//!
+//! Mirrors the paper's protocol: N samples (default 128) of `seq`-token
+//! windows from the training split of the calibration corpus (§4,
+//! "Models and Datasets"), one Gram matrix per quantizable linear layer.
+
+use std::collections::BTreeMap;
+
+use crate::data::batcher::LmStream;
+use crate::data::corpus::{corpus_text, Split};
+use crate::linalg::Matrix;
+use crate::model::ParamStore;
+use crate::runtime::Runtime;
+
+/// Per-layer Gram matrices keyed by linear name (`l0.wq`, `l1.w_down`, …).
+pub type GramSet = BTreeMap<String, Matrix>;
+
+/// Run calibration with `n_samples` sequences.
+pub fn calibrate(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    n_samples: usize,
+    corpus_seed: u64,
+) -> anyhow::Result<GramSet> {
+    let cfg = rt.manifest.config.clone();
+    let entry = rt.manifest.entry("capture_grams")?.clone();
+    // Output names are "<linear>.H" + trailing checksum.
+    let names: Vec<String> = entry
+        .outputs
+        .iter()
+        .filter(|s| s.name.ends_with(".H"))
+        .map(|s| s.name.trim_end_matches(".H").to_string())
+        .collect();
+
+    // Enough text for n_samples windows.
+    let bytes = (n_samples + cfg.batch) * cfg.seq * 2 + 4096;
+    let text = corpus_text(corpus_seed, Split::Calibration, bytes);
+    let mut stream = LmStream::new(&text, cfg.batch, cfg.seq);
+
+    let mut grams: GramSet = BTreeMap::new();
+    let mut seen = 0usize;
+    let base_inputs = base.in_order();
+    while seen < n_samples {
+        let batch = stream
+            .next_batch()
+            .ok_or_else(|| anyhow::anyhow!("calibration stream exhausted"))?;
+        let mut inputs = base_inputs.clone();
+        inputs.push(batch.tokens);
+        inputs.push(batch.mask);
+        let out = rt.run("capture_grams", &inputs)?;
+        anyhow::ensure!(
+            out.last().unwrap().scalar().is_finite(),
+            "calibration forward produced non-finite logits"
+        );
+        for (t, name) in out.iter().zip(&names) {
+            let h = t.to_matrix();
+            grams
+                .entry(name.clone())
+                .and_modify(|acc| acc.add_assign(&h))
+                .or_insert(h);
+        }
+        seen += cfg.batch;
+    }
+    crate::info!(
+        "calibrated {} layers with {} samples ({} batches)",
+        grams.len(),
+        seen,
+        seen / cfg.batch
+    );
+    Ok(grams)
+}
+
+/// Persist / reload Gram sets (they are expensive to recompute across the
+/// table harnesses — one set is shared by every method/bit combination).
+pub fn save_grams(grams: &GramSet, path: &std::path::Path) -> anyhow::Result<()> {
+    let mut store = ParamStore::new();
+    for (name, h) in grams {
+        store.insert(name, crate::runtime::Tensor::from_matrix(h));
+    }
+    store.save(path)
+}
+
+pub fn load_grams(path: &std::path::Path) -> anyhow::Result<GramSet> {
+    let store = ParamStore::load(path)?;
+    let mut grams = GramSet::new();
+    for name in &store.names {
+        grams.insert(name.clone(), store.get(name).to_matrix());
+    }
+    Ok(grams)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::syrk_t;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn gram_save_load_roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut grams = GramSet::new();
+        for name in ["l0.wq", "l0.w_down"] {
+            let x = Matrix::randn(20, 8, 1.0, &mut rng);
+            grams.insert(name.to_string(), syrk_t(&x));
+        }
+        let dir = std::env::temp_dir().join(format!("cloq_gram_{}", std::process::id()));
+        let path = dir.join("grams.bin");
+        save_grams(&grams, &path).unwrap();
+        let back = load_grams(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        for (name, h) in &grams {
+            assert!(back[name].max_diff(h) < 1e-6);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,230 @@
+//! Evaluation: perplexity (WikiText protocol), exact-match accuracy via
+//! greedy decoding (GSM8K protocol), and option log-likelihood scoring
+//! (AQuA / commonsense protocol).
+
+use crate::data::batcher::{pad_rows, prompt_with_candidate, LmStream};
+use crate::data::corpus::{corpus_text, Split};
+use crate::data::tokenizer::{decode, encode_example, EOS, PAD};
+use crate::data::Example;
+use crate::model::ParamStore;
+use crate::runtime::{Runtime, Tensor};
+
+/// Perplexity on `n_batches` deterministic windows of the given split.
+pub fn perplexity(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &ParamStore,
+    corpus_seed: u64,
+    split: Split,
+    n_batches: usize,
+) -> anyhow::Result<f64> {
+    let cfg = rt.manifest.config.clone();
+    let bytes = (n_batches + 1) * cfg.batch * cfg.seq * 2 + 4096;
+    let text = corpus_text(corpus_seed, split, bytes);
+    let mut stream = LmStream::new(&text, cfg.batch, cfg.seq);
+    let mut inputs_base = base.in_order();
+    inputs_base.extend(lora.in_order());
+
+    let (mut total_loss, mut total_count) = (0.0f64, 0.0f64);
+    for _ in 0..n_batches {
+        let b = stream.next_batch().unwrap();
+        let mut inputs = inputs_base.clone();
+        inputs.push(b.tokens);
+        inputs.push(b.mask);
+        let out = rt.run("eval_loss", &inputs)?;
+        total_loss += out[0].scalar() as f64;
+        total_count += out[1].scalar() as f64;
+    }
+    anyhow::ensure!(total_count > 0.0, "empty perplexity eval");
+    Ok((total_loss / total_count).exp())
+}
+
+/// Run `eval_logits` on already-padded token rows; returns the raw logits
+/// buffer [B, T, V] (flattened) for post-processing.
+fn logits_for(
+    rt: &mut Runtime,
+    model_inputs: &[Tensor],
+    tokens: Tensor,
+) -> anyhow::Result<Vec<f32>> {
+    let mut inputs = model_inputs.to_vec();
+    inputs.push(tokens);
+    let out = rt.run("eval_logits", &inputs)?;
+    Ok(out[0].as_f32().to_vec())
+}
+
+fn log_softmax_at(logits: &[f32], b: usize, t: usize, seq: usize, vocab: usize) -> Vec<f64> {
+    let off = (b * seq + t) * vocab;
+    let row = &logits[off..off + vocab];
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let lse = row.iter().map(|&x| ((x as f64) - max).exp()).sum::<f64>().ln() + max;
+    row.iter().map(|&x| x as f64 - lse).collect()
+}
+
+fn argmax_at(logits: &[f32], b: usize, t: usize, seq: usize, vocab: usize) -> i32 {
+    let off = (b * seq + t) * vocab;
+    let row = &logits[off..off + vocab];
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in row.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Exact-match accuracy by greedy decoding (generative tasks).
+/// Decodes up to `max_new` tokens after `[BOS] prompt " A: "`.
+pub fn accuracy_greedy(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &ParamStore,
+    examples: &[Example],
+    max_new: usize,
+) -> anyhow::Result<f64> {
+    let cfg = rt.manifest.config.clone();
+    let (bsz, seq, vocab) = (cfg.batch, cfg.seq, cfg.vocab);
+    let mut model_inputs = base.in_order();
+    model_inputs.extend(lora.in_order());
+
+    let mut correct = 0usize;
+    for chunk in examples.chunks(bsz) {
+        // Prompt rows: [BOS] prompt " A: " (room left for max_new tokens).
+        let mut rows: Vec<Vec<i32>> = chunk
+            .iter()
+            .map(|ex| {
+                let (mut toks, astart) = encode_example(&ex.prompt, "");
+                toks.truncate(astart);
+                toks.truncate(seq - max_new);
+                toks
+            })
+            .collect();
+        let prompt_lens: Vec<usize> = rows.iter().map(|r| r.len()).collect();
+        let mut done = vec![false; chunk.len()];
+        for _ in 0..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let tokens = pad_rows(&rows, bsz, seq);
+            let logits = logits_for(rt, &model_inputs, tokens)?;
+            for (i, row) in rows.iter_mut().enumerate() {
+                if done[i] || row.len() >= seq {
+                    done[i] = true;
+                    continue;
+                }
+                let next = argmax_at(&logits, i, row.len() - 1, seq, vocab);
+                if next == EOS || next == PAD {
+                    done[i] = true;
+                } else {
+                    row.push(next);
+                }
+            }
+        }
+        for (i, ex) in chunk.iter().enumerate() {
+            let answer = decode(&rows[i][prompt_lens[i]..]);
+            if answer.trim() == ex.answer.trim() {
+                correct += 1;
+            }
+        }
+    }
+    Ok(correct as f64 / examples.len().max(1) as f64)
+}
+
+/// Choice accuracy by option log-likelihood (MCQ tasks): score each option
+/// as the mean token log-probability of the candidate; pick the max.
+pub fn accuracy_choice(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &ParamStore,
+    examples: &[Example],
+) -> anyhow::Result<f64> {
+    let cfg = rt.manifest.config.clone();
+    let (bsz, seq, vocab) = (cfg.batch, cfg.seq, cfg.vocab);
+    let mut model_inputs = base.in_order();
+    model_inputs.extend(lora.in_order());
+
+    // Flatten (example, option) pairs into rows.
+    struct RowRef {
+        example: usize,
+        option: usize,
+        tokens: Vec<i32>,
+        astart: usize,
+    }
+    let mut all_rows = Vec::new();
+    for (ei, ex) in examples.iter().enumerate() {
+        anyhow::ensure!(ex.is_mcq(), "accuracy_choice needs MCQ examples");
+        for (oi, opt) in ex.options.iter().enumerate() {
+            let (tokens, astart) = prompt_with_candidate(&ex.prompt, opt, seq);
+            all_rows.push(RowRef { example: ei, option: oi, tokens, astart });
+        }
+    }
+
+    let mut scores: Vec<Vec<f64>> =
+        examples.iter().map(|ex| vec![f64::NEG_INFINITY; ex.options.len()]).collect();
+    for chunk in all_rows.chunks(bsz) {
+        let rows: Vec<Vec<i32>> = chunk.iter().map(|r| r.tokens.clone()).collect();
+        let tokens = pad_rows(&rows, bsz, seq);
+        let logits = logits_for(rt, &model_inputs, tokens)?;
+        for (i, r) in chunk.iter().enumerate() {
+            let mut lp = 0.0f64;
+            let mut count = 0usize;
+            for t in r.astart..r.tokens.len() {
+                let ls = log_softmax_at(&logits, i, t - 1, seq, vocab);
+                lp += ls[r.tokens[t] as usize];
+                count += 1;
+            }
+            scores[r.example][r.option] = if count > 0 { lp / count as f64 } else { f64::NEG_INFINITY };
+        }
+    }
+
+    let mut correct = 0usize;
+    for (ex, sc) in examples.iter().zip(&scores) {
+        let best = sc
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if ex.options[best] == ex.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / examples.len().max(1) as f64)
+}
+
+/// Dispatch: greedy for generative tasks, choice scoring for MCQ.
+pub fn task_accuracy(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    lora: &ParamStore,
+    examples: &[Example],
+) -> anyhow::Result<f64> {
+    if examples.iter().all(|e| e.is_mcq()) {
+        accuracy_choice(rt, base, lora, examples)
+    } else {
+        accuracy_greedy(rt, base, lora, examples, 6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_normalizes() {
+        // vocab 4, single position
+        let logits = vec![1.0f32, 2.0, 3.0, 4.0];
+        let ls = log_softmax_at(&logits, 0, 0, 1, 4);
+        let total: f64 = ls.iter().map(|x| x.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(ls[3] > ls[0]);
+    }
+
+    #[test]
+    fn argmax_picks_max() {
+        let logits = vec![0.0f32, 5.0, -1.0, 2.0, /* pos 1 */ 9.0, 0.0, 0.0, 0.0];
+        assert_eq!(argmax_at(&logits, 0, 0, 2, 4), 1);
+        assert_eq!(argmax_at(&logits, 0, 1, 2, 4), 0);
+    }
+}

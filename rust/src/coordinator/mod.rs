@@ -1,0 +1,23 @@
+//! L3 coordinator: the pipeline that reproduces the paper's workflow —
+//! pretrain a base LM, calibrate on a small dataset, quantize layer-wise
+//! (MagR+OPTQ), initialize LoRA adapters (CLoQ closed form or a baseline),
+//! fine-tune the adapters, and evaluate — plus the reporting layer that
+//! regenerates every table/figure.
+
+pub mod calibrate;
+pub mod evaluator;
+pub mod pipeline;
+pub mod quantize;
+pub mod report;
+pub mod tables;
+pub mod trainer;
+
+pub use calibrate::{calibrate, GramSet};
+pub use evaluator::{accuracy_choice, accuracy_greedy, perplexity, task_accuracy};
+pub use pipeline::{
+    ensure_grams, ensure_pretrained, init_model, run_one, FinetuneTask, PipelineOpts, RunResult,
+    RunSpec,
+};
+pub use quantize::{quantize_init, ModelInit};
+pub use report::Table;
+pub use trainer::{finetune_lora, pretrain, DataSource, TrainConfig};

@@ -1,0 +1,133 @@
+//! The quantize+init stage: applies a [`Method`] to every linear layer,
+//! producing the frozen base (`q_deq`) and the LoRA adapters.
+//!
+//! Layers are independent jobs dispatched on the thread pool (the
+//! scheduler); results are reassembled in manifest order so the output
+//! stores marshal directly into the AOT graphs.
+
+use crate::lowrank::{init_layer, InitConfig, Method};
+use crate::model::manifest::Manifest;
+use crate::model::{base_specs, lora_specs, ParamStore};
+use crate::quant::quantize_rtn;
+use crate::runtime::Tensor;
+use crate::util::prng::Rng;
+use crate::util::threadpool::run_parallel;
+
+use super::calibrate::GramSet;
+
+/// Result of initializing the whole model.
+pub struct ModelInit {
+    /// Base params with quantized (dequantized-value) linears, manifest order.
+    pub base_q: ParamStore,
+    /// LoRA adapters, manifest order.
+    pub lora: ParamStore,
+    /// Per-layer packed quantization state for the qeval serving path
+    /// (codes/scales/zeros tensors keyed by `<linear>.{codes,scales,zeros}`).
+    pub quant: ParamStore,
+    /// Mean bits/weight over quantized layers.
+    pub bits_per_weight: f64,
+}
+
+/// Apply `method` at `bits` to every linear layer of `base`.
+///
+/// `grams` must contain every linear's H when the method is calibrated;
+/// `workers` sizes the scheduler's thread pool.
+pub fn quantize_init(
+    man: &Manifest,
+    base: &ParamStore,
+    grams: Option<&GramSet>,
+    cfg: &InitConfig,
+    seed: u64,
+    workers: usize,
+) -> anyhow::Result<ModelInit> {
+    let mcfg = &man.config;
+    anyhow::ensure!(
+        cfg.rank == mcfg.rank,
+        "InitConfig.rank {} must match artifact rank {} (shapes are lowered statically)",
+        cfg.rank,
+        mcfg.rank
+    );
+    if cfg.method.needs_calibration() {
+        anyhow::ensure!(grams.is_some(), "{:?} needs calibration grams", cfg.method);
+    }
+
+    // One job per linear layer.
+    let linear_names = mcfg.all_linear_names();
+    let jobs: Vec<_> = linear_names
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let w = base.get(name).to_matrix();
+            let h = grams.and_then(|g| g.get(name).cloned());
+            let cfg = cfg.clone();
+            let name = name.clone();
+            move || {
+                let mut rng = Rng::new(seed ^ ((i as u64 + 1) * 0x9E37_79B9));
+                let li = init_layer(&w, h.as_ref(), &cfg, &mut rng);
+                (name, li)
+            }
+        })
+        .collect();
+    let results = run_parallel(workers, jobs);
+
+    // Reassemble in manifest order.
+    let mut base_q = ParamStore::new();
+    for spec in base_specs(man)? {
+        if let Some((_, li)) = results.iter().find(|(n, _)| *n == spec.name) {
+            base_q.insert(&spec.name, Tensor::from_matrix(&li.q_deq));
+        } else {
+            base_q.insert(&spec.name, base.get(&spec.name).clone());
+        }
+    }
+    let mut lora = ParamStore::new();
+    for spec in lora_specs(man)? {
+        let (layer, kind) = spec.name.rsplit_once('.').unwrap();
+        let (_, li) = results
+            .iter()
+            .find(|(n, _)| n == layer)
+            .ok_or_else(|| anyhow::anyhow!("no init result for {layer}"))?;
+        let m = if kind == "A" { &li.a } else { &li.b };
+        anyhow::ensure!(
+            m.rows == spec.shape[0] && m.cols == spec.shape[1],
+            "{}: init shape {}x{} vs manifest {:?}",
+            spec.name,
+            m.rows,
+            m.cols,
+            spec.shape
+        );
+        lora.insert(&spec.name, Tensor::from_matrix(m));
+    }
+
+    // Packed state for the serving path: use the EXACT quantization state
+    // when the method produced one (OPTQ/LoftQ/CLoQ — the qeval path then
+    // agrees with the dense path to fp tolerance); NF/fp bases fall back to
+    // an 8-bit re-grid (a value-faithful container, not the NF codebook).
+    // The qeval graph is lowered for group_size = mcfg.group_size, so exact
+    // states with a different group size are re-gridded too.
+    let mut quant = ParamStore::new();
+    for name in &linear_names {
+        let (_, li) = results.iter().find(|(n, _)| n == name).unwrap();
+        let q = match &li.quant {
+            Some(q) if q.group_size == mcfg.group_size => q.clone(),
+            _ => {
+                let bits = if cfg.method == Method::Lora16 { 8 } else { cfg.bits.max(4) };
+                quantize_rtn(&li.q_deq, bits, mcfg.group_size)
+            }
+        };
+        let codes: Vec<i32> = q.codes.iter().map(|&c| c as i32).collect();
+        quant.insert(&format!("{name}.codes"), Tensor::i32(vec![q.rows, q.cols], codes));
+        quant.insert(&format!("{name}.scales"), Tensor::from_matrix(&q.scales));
+        quant.insert(&format!("{name}.zeros"), Tensor::from_matrix(&q.zeros));
+    }
+
+    let bpw = results.iter().map(|(_, li)| li.bits_per_weight).sum::<f64>()
+        / results.len().max(1) as f64;
+    Ok(ModelInit { base_q, lora, quant, bits_per_weight: bpw })
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end in rust/tests/integration.rs and the pipeline
+    // tests (needs artifacts); unit-level behaviour is covered by
+    // lowrank::init tests.
+}

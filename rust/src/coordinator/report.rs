@@ -1,0 +1,141 @@
+//! Paper-style table rendering + JSON report persistence.
+//!
+//! Every `table <n>` / `fig <n>` harness produces a [`Table`]; it is
+//! printed as aligned text (the same rows the paper reports) and saved
+//! under `reports/` as JSON for downstream tooling / EXPERIMENTS.md.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("+");
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("|")
+        };
+        let mut out = format!("## {}\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("title", Json::from(self.title.clone())),
+            ("headers", Json::from(self.headers.clone())),
+            (
+                "rows",
+                Json::Arr(self.rows.iter().map(|r| Json::from(r.clone())).collect()),
+            ),
+        ])
+    }
+
+    /// Print to stdout and persist under `reports/<id>.json`.
+    pub fn emit(&self, reports_dir: &Path, id: &str) -> anyhow::Result<()> {
+        println!("{}", self.render());
+        std::fs::create_dir_all(reports_dir)?;
+        let path = reports_dir.join(format!("{id}.json"));
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        crate::info!("report saved to {}", path.display());
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Table> {
+        let j = crate::util::json::parse_file(path)?;
+        let headers = j
+            .req_arr("headers")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect();
+        let rows = j
+            .req_arr("rows")?
+            .iter()
+            .map(|r| {
+                r.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|v| v.as_str().unwrap_or("").to_string())
+                    .collect()
+            })
+            .collect();
+        Ok(Table { title: j.req_str("title")?.to_string(), headers, rows })
+    }
+}
+
+/// Format helpers used across harnesses.
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_roundtrip() {
+        let mut t = Table::new("Demo", &["Method", "Bit", "Acc"]);
+        t.row(vec!["CLoQ".into(), "2".into(), "33.7".into()]);
+        t.row(vec!["LoftQ".into(), "2".into(), "20.9".into()]);
+        let rendered = t.render();
+        assert!(rendered.contains("CLoQ"));
+        assert!(rendered.contains("Method"));
+
+        let dir = std::env::temp_dir().join(format!("cloq_rep_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        t.emit(&dir, "demo").unwrap();
+        let back = Table::load(&dir.join("demo.json")).unwrap();
+        assert_eq!(back.headers, t.headers);
+        assert_eq!(back.rows, t.rows);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

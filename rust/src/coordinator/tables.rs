@@ -1,0 +1,511 @@
+//! Table/figure regeneration harnesses — one function per table and figure
+//! of the paper's evaluation section (DESIGN.md §5 maps each to its
+//! modules). Absolute numbers come from the tiny substitute models; the
+//! *shape* (method ordering, low-bit behaviour, ablation trends) is the
+//! reproduction target and is what EXPERIMENTS.md compares.
+
+use std::path::{Path, PathBuf};
+
+use crate::lowrank::{FactorSplit, Method};
+use crate::runtime::Runtime;
+use crate::util::timer::timeit;
+
+use super::pipeline::{
+    ensure_grams, ensure_pretrained, init_model, run_one, FinetuneTask, PipelineOpts, RunSpec,
+};
+use super::report::{fmt_f, fmt_pct, Table};
+
+pub struct TableOpts {
+    pub fast: bool,
+    pub reports_dir: PathBuf,
+    pub steps: usize,
+    pub seed: u64,
+}
+
+impl Default for TableOpts {
+    fn default() -> Self {
+        Self { fast: false, reports_dir: PathBuf::from("reports"), steps: 60, seed: 7 }
+    }
+}
+
+fn popts(config: &str, t: &TableOpts) -> PipelineOpts {
+    let o = PipelineOpts::new(config);
+    if t.fast {
+        o.fast()
+    } else {
+        o
+    }
+}
+
+/// Shared context per model config: runtime + pretrained base + grams.
+struct Ctx {
+    rt: Runtime,
+    base: crate::model::ParamStore,
+    grams: super::calibrate::GramSet,
+    opts: PipelineOpts,
+}
+
+fn ctx(config: &str, t: &TableOpts) -> anyhow::Result<Ctx> {
+    let opts = popts(config, t);
+    anyhow::ensure!(
+        opts.artifacts.join("manifest.json").exists(),
+        "artifacts/{config} missing — run `make artifacts`"
+    );
+    let mut rt = Runtime::load(&opts.artifacts)?;
+    let (base, _) = ensure_pretrained(&mut rt, &opts)?;
+    let grams = ensure_grams(&mut rt, &base, &opts, opts.calib_samples)?;
+    Ok(Ctx { rt, base, grams, opts })
+}
+
+fn spec(method: Method, bits: u32, task: FinetuneTask, t: &TableOpts) -> RunSpec {
+    let mut s = RunSpec::new(method, bits, task);
+    s.steps = if t.fast { t.steps.min(40) } else { t.steps };
+    s.seed = t.seed;
+    s
+}
+
+/// The method×bits grid of Tables 1/3/5.
+fn method_grid(full: bool) -> Vec<(Method, u32)> {
+    let mut grid = vec![(Method::Lora16, 16)];
+    let bits: &[u32] = if full { &[4, 3, 2] } else { &[4, 2] };
+    for &b in bits {
+        grid.push((Method::QLora, b));
+        grid.push((Method::GptqLora, b));
+        grid.push((Method::LoftQ, b));
+        grid.push((Method::CLoQ, b));
+    }
+    grid
+}
+
+// ------------------------------------------------------------------
+// Table 1/2: WikiText ppl + GSM8K accuracy
+// ------------------------------------------------------------------
+
+fn wiki_gsm8k_table(configs: &[&str], id: &str, title: &str, grid: Vec<(Method, u32)>, t: &TableOpts) -> anyhow::Result<()> {
+    let mut headers = vec!["Method".to_string(), "Bit".to_string()];
+    for c in configs {
+        headers.push(format!("{c} Wiki(ppl)"));
+        headers.push(format!("{c} GSM8K(acc%)"));
+    }
+    let mut table = Table::new(title, &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+
+    // Gather per config to reuse runtime/base/grams.
+    let mut cells: Vec<Vec<String>> = grid.iter().map(|(m, b)| vec![m.name().to_string(), b.to_string()]).collect();
+    for config in configs {
+        let mut c = ctx(config, t)?;
+        for (i, (method, bits)) in grid.iter().enumerate() {
+            let r_wiki = run_one(&mut c.rt, &c.base, &c.grams, &spec(*method, *bits, FinetuneTask::Wiki, t), &c.opts)?;
+            let r_gsm = run_one(&mut c.rt, &c.base, &c.grams, &spec(*method, *bits, FinetuneTask::Gsm8k, t), &c.opts)?;
+            cells[i].push(fmt_f(r_wiki.ppl.unwrap_or(f64::NAN), 2));
+            cells[i].push(fmt_pct(r_gsm.accuracies[0].1));
+        }
+    }
+    for row in cells {
+        table.row(row);
+    }
+    table.emit(&t.reports_dir, id)
+}
+
+pub fn table1(t: &TableOpts) -> anyhow::Result<()> {
+    wiki_gsm8k_table(
+        &["tiny-s", "tiny-m"],
+        "table1",
+        "Table 1: WikiText ppl + GSM8K acc (tiny-s ~ Llama2-7B, tiny-m ~ Llama2-13B)",
+        method_grid(!t.fast),
+        t,
+    )
+}
+
+pub fn table2(t: &TableOpts) -> anyhow::Result<()> {
+    // Paper Table 2: only 16-bit LoRA + 2-bit methods on the other archs.
+    let grid = vec![
+        (Method::Lora16, 16),
+        (Method::GptqLora, 2),
+        (Method::LoftQ, 2),
+        (Method::CLoQ, 2),
+    ];
+    wiki_gsm8k_table(
+        &["tiny-wide", "tiny-deep"],
+        "table2",
+        "Table 2: WikiText ppl + GSM8K acc (tiny-wide ~ Llama3-8B, tiny-deep ~ Mistral-7B)",
+        grid,
+        t,
+    )
+}
+
+// ------------------------------------------------------------------
+// Table 3/4: multi-task arithmetic reasoning
+// ------------------------------------------------------------------
+
+fn arith_headers(config: &str) -> Vec<String> {
+    vec![
+        "Method".into(),
+        "Bit".into(),
+        format!("{config} GSM8K"),
+        format!("{config} SVAMP"),
+        format!("{config} MAWPS"),
+        format!("{config} AQuA"),
+        format!("{config} Avg"),
+    ]
+}
+
+fn arith_cells(r: &super::pipeline::RunResult) -> Vec<String> {
+    // accuracies order = ARITH_TASKS = [gsm, svamp, mawps, aqua]
+    let mut cells: Vec<String> = r.accuracies.iter().map(|(_, a)| fmt_pct(*a)).collect();
+    cells.push(fmt_pct(r.avg_accuracy()));
+    cells
+}
+
+pub fn table3(t: &TableOpts) -> anyhow::Result<()> {
+    let grid = method_grid(!t.fast);
+    let configs = ["tiny-s", "tiny-m"];
+    let mut headers = vec!["Method".to_string(), "Bit".to_string()];
+    for c in &configs {
+        for h in &arith_headers(c)[2..] {
+            headers.push(h.clone());
+        }
+    }
+    let mut table = Table::new(
+        "Table 3: four arithmetic reasoning tasks (fine-tuned on s-Math10K)",
+        &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut cells: Vec<Vec<String>> =
+        grid.iter().map(|(m, b)| vec![m.name().to_string(), b.to_string()]).collect();
+    for config in &configs {
+        let mut c = ctx(config, t)?;
+        for (i, (method, bits)) in grid.iter().enumerate() {
+            let r = run_one(&mut c.rt, &c.base, &c.grams, &spec(*method, *bits, FinetuneTask::Math10k, t), &c.opts)?;
+            cells[i].extend(arith_cells(&r));
+        }
+    }
+    for row in cells {
+        table.row(row);
+    }
+    table.emit(&t.reports_dir, "table3")
+}
+
+pub fn table4(t: &TableOpts) -> anyhow::Result<()> {
+    let config = "tiny-wide";
+    let mut c = ctx(config, t)?;
+    let mut table = Table::new(
+        "Table 4: arithmetic reasoning on tiny-wide (~Llama3-8B); CLoQ over 5 seeds (mean±std)",
+        &["Method", "Bit", "GSM8K", "SVAMP", "MAWPS", "AQuA", "Avg"],
+    );
+    for (method, bits) in [(Method::Lora16, 16u32), (Method::LoftQ, 2), (Method::GptqLora, 2)] {
+        let r = run_one(&mut c.rt, &c.base, &c.grams, &spec(method, bits, FinetuneTask::Math10k, t), &c.opts)?;
+        let mut row = vec![method.name().to_string(), bits.to_string()];
+        row.extend(arith_cells(&r));
+        table.row(row);
+    }
+    // CLoQ over seeds.
+    let n_seeds = if t.fast { 2 } else { 5 };
+    let mut per_task: Vec<Vec<f64>> = vec![Vec::new(); 4];
+    let mut avgs = Vec::new();
+    for s in 0..n_seeds {
+        let mut sp = spec(Method::CLoQ, 2, FinetuneTask::Math10k, t);
+        sp.seed = t.seed + s as u64;
+        let r = run_one(&mut c.rt, &c.base, &c.grams, &sp, &c.opts)?;
+        for (k, (_, a)) in r.accuracies.iter().enumerate() {
+            per_task[k].push(*a);
+        }
+        avgs.push(r.avg_accuracy());
+    }
+    let mean_std = |xs: &[f64]| {
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+        format!("{:.1}±{:.2}", 100.0 * m, 100.0 * v.sqrt())
+    };
+    let mut row = vec![format!("CLoQ (n={n_seeds})"), "2".to_string()];
+    for k in 0..4 {
+        row.push(mean_std(&per_task[k]));
+    }
+    row.push(mean_std(&avgs));
+    table.row(row);
+    table.emit(&t.reports_dir, "table4")
+}
+
+// ------------------------------------------------------------------
+// Table 5: commonsense reasoning (8 tasks)
+// ------------------------------------------------------------------
+
+pub fn table5(t: &TableOpts) -> anyhow::Result<()> {
+    let configs = if t.fast { vec!["tiny-s"] } else { vec!["tiny-s", "tiny-m"] };
+    let mut table = Table::new(
+        "Table 5: eight commonsense reasoning tasks (fine-tuned on s-CS170K)",
+        &["Model", "Method", "Bit", "Parity", "Compare", "Majority", "Succ", "Member", "Copy", "Reverse", "Bool", "Avg"],
+    );
+    let grid = if t.fast {
+        vec![(Method::Lora16, 16), (Method::QLora, 4), (Method::LoftQ, 2), (Method::CLoQ, 2)]
+    } else {
+        method_grid(true)
+    };
+    for config in &configs {
+        let mut c = ctx(config, t)?;
+        for (method, bits) in &grid {
+            let r = run_one(&mut c.rt, &c.base, &c.grams, &spec(*method, *bits, FinetuneTask::Commonsense, t), &c.opts)?;
+            let mut row = vec![config.to_string(), method.name().to_string(), bits.to_string()];
+            for (_, a) in &r.accuracies {
+                row.push(fmt_pct(*a));
+            }
+            row.push(fmt_pct(r.avg_accuracy()));
+            table.row(row);
+        }
+    }
+    table.emit(&t.reports_dir, "table5")
+}
+
+// ------------------------------------------------------------------
+// Table 6: mixed-dataset fine-tuning
+// ------------------------------------------------------------------
+
+pub fn table6(t: &TableOpts) -> anyhow::Result<()> {
+    let mut c = ctx("tiny-s", t)?;
+    let mut table = Table::new(
+        "Table 6: arithmetic accuracy after fine-tuning on the MIXED dataset (math + commonsense)",
+        &["Method", "Bit", "GSM8K", "SVAMP", "MAWPS", "AQuA", "Avg", "Avg(pure-math)"],
+    );
+    for bits in [4u32, 2] {
+        for method in [Method::LoftQ, Method::CLoQ] {
+            let r_mixed = run_one(&mut c.rt, &c.base, &c.grams, &spec(method, bits, FinetuneTask::Mixed, t), &c.opts)?;
+            let r_pure = run_one(&mut c.rt, &c.base, &c.grams, &spec(method, bits, FinetuneTask::Math10k, t), &c.opts)?;
+            let mut row = vec![method.name().to_string(), bits.to_string()];
+            row.extend(arith_cells(&r_mixed));
+            row.push(fmt_pct(r_pure.avg_accuracy()));
+            table.row(row);
+        }
+    }
+    table.emit(&t.reports_dir, "table6")
+}
+
+// ------------------------------------------------------------------
+// Table 7: (A, B) factor-split ablation
+// ------------------------------------------------------------------
+
+pub fn table7(t: &TableOpts) -> anyhow::Result<()> {
+    let mut c = ctx("tiny-s", t)?;
+    let mut table = Table::new(
+        "Table 7: fine-tuning with different (A,B) combinations at 2-bit",
+        &["Split", "Bit", "Wiki(ppl)", "GSM8K(acc%)"],
+    );
+    for (method, label) in [
+        (Method::CLoQAllInB, FactorSplit::AllInB.name()),
+        (Method::CLoQSqrtSplit, FactorSplit::Sqrt.name()),
+        (Method::CLoQ, FactorSplit::AllInA.name()),
+    ] {
+        let r_wiki = run_one(&mut c.rt, &c.base, &c.grams, &spec(method, 2, FinetuneTask::Wiki, t), &c.opts)?;
+        let r_gsm = run_one(&mut c.rt, &c.base, &c.grams, &spec(method, 2, FinetuneTask::Gsm8k, t), &c.opts)?;
+        table.row(vec![
+            label.to_string(),
+            "2".to_string(),
+            fmt_f(r_wiki.ppl.unwrap_or(f64::NAN), 2),
+            fmt_pct(r_gsm.accuracies[0].1),
+        ]);
+    }
+    table.emit(&t.reports_dir, "table7")
+}
+
+// ------------------------------------------------------------------
+// Table 8: calibration-size ablation
+// ------------------------------------------------------------------
+
+pub fn table8(t: &TableOpts) -> anyhow::Result<()> {
+    let opts = popts("tiny-s", t);
+    let mut rt = Runtime::load(&opts.artifacts)?;
+    let (base, _) = ensure_pretrained(&mut rt, &opts)?;
+    let mut table = Table::new(
+        "Table 8: CLoQ accuracy vs calibration dataset size",
+        &["CalibSize", "Bit", "Wiki(ppl)", "GSM8K(acc%)", "Arith Avg(acc%)"],
+    );
+    let sizes: &[usize] = if t.fast { &[32, 128] } else { &[32, 64, 128, 256] };
+    for bits in [4u32, 2] {
+        for &n in sizes {
+            let grams = ensure_grams(&mut rt, &base, &opts, n)?;
+            let r_wiki = run_one(&mut rt, &base, &grams, &spec(Method::CLoQ, bits, FinetuneTask::Wiki, t), &opts)?;
+            let r_gsm = run_one(&mut rt, &base, &grams, &spec(Method::CLoQ, bits, FinetuneTask::Gsm8k, t), &opts)?;
+            let r_math = run_one(&mut rt, &base, &grams, &spec(Method::CLoQ, bits, FinetuneTask::Math10k, t), &opts)?;
+            table.row(vec![
+                n.to_string(),
+                bits.to_string(),
+                fmt_f(r_wiki.ppl.unwrap_or(f64::NAN), 2),
+                fmt_pct(r_gsm.accuracies[0].1),
+                fmt_pct(r_math.avg_accuracy()),
+            ]);
+        }
+    }
+    table.emit(&t.reports_dir, "table8")
+}
+
+// ------------------------------------------------------------------
+// Table 9: sequence-length ablation (needs the seq-variant artifacts)
+// ------------------------------------------------------------------
+
+pub fn table9(t: &TableOpts) -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "Table 9: 2-bit CLoQ arithmetic accuracy vs fine-tuning sequence length",
+        &["SeqLen", "GSM8K", "SVAMP", "MAWPS", "AQuA", "Avg"],
+    );
+    let configs: &[(&str, usize)] = if t.fast {
+        &[("tiny-s-seq32", 32), ("tiny-s", 64)]
+    } else {
+        &[("tiny-s-seq16", 16), ("tiny-s-seq32", 32), ("tiny-s", 64), ("tiny-s-seq128", 128)]
+    };
+    for (config, seq) in configs {
+        let mut c = ctx(config, t)?;
+        let r = run_one(&mut c.rt, &c.base, &c.grams, &spec(Method::CLoQ, 2, FinetuneTask::Math10k, t), &c.opts)?;
+        let mut row = vec![seq.to_string()];
+        row.extend(arith_cells(&r));
+        table.row(row);
+    }
+    table.emit(&t.reports_dir, "table9")
+}
+
+// ------------------------------------------------------------------
+// Table 10: initialization duration + peak memory
+// ------------------------------------------------------------------
+
+pub fn table10(t: &TableOpts) -> anyhow::Result<()> {
+    let mut table = Table::new(
+        "Table 10: initialization duration and peak memory",
+        &["Size", "Method", "Duration(s)", "PeakRSS(MiB)", "bits/weight@2"],
+    );
+    let configs = if t.fast { vec!["tiny-s"] } else { vec!["tiny-s", "tiny-m"] };
+    for config in &configs {
+        let c = ctx(config, t)?;
+        for method in [Method::QLora, Method::GptqLora, Method::LoftQ, Method::CLoQ] {
+            let sp = spec(method, 2, FinetuneTask::Wiki, t);
+            // Average over 3 repetitions for a stable duration.
+            let reps = 3;
+            let (mut secs, mut bpw) = (0.0, 0.0);
+            for _ in 0..reps {
+                let (init, s) = init_model(&c.rt, &c.base, &c.grams, &sp)?;
+                secs += s;
+                bpw = init.bits_per_weight;
+            }
+            table.row(vec![
+                config.to_string(),
+                method.name().to_string(),
+                fmt_f(secs / reps as f64, 3),
+                fmt_f(crate::util::timer::peak_rss_mib(), 0),
+                fmt_f(bpw, 2),
+            ]);
+        }
+    }
+    table.emit(&t.reports_dir, "table10")
+}
+
+// ------------------------------------------------------------------
+// Fig 1: summary bars (reads table1/table3 reports)
+// ------------------------------------------------------------------
+
+pub fn fig1(t: &TableOpts) -> anyhow::Result<()> {
+    let t1 = Table::load(&t.reports_dir.join("table1.json"))
+        .map_err(|e| anyhow::anyhow!("fig 1 needs table1 first: {e}"))?;
+    let t3 = Table::load(&t.reports_dir.join("table3.json"))
+        .map_err(|e| anyhow::anyhow!("fig 1 needs table3 first: {e}"))?;
+    let mut fig = Table::new(
+        "Fig 1: fine-tuning summary (series = method@bit; from table1/table3)",
+        &["Series", "Wiki ppl (tiny-s)", "GSM8K acc (tiny-s)", "Arith avg (tiny-s)"],
+    );
+    for (r1, r3) in t1.rows.iter().zip(&t3.rows) {
+        let series = format!("{}@{}", r1[0], r1[1]);
+        fig.row(vec![series, r1[2].clone(), r1[3].clone(), r3[6].clone()]);
+    }
+    fig.emit(&t.reports_dir, "fig1")
+}
+
+// ------------------------------------------------------------------
+// Fig 2: layer discrepancy ‖X(Q+ABᵀ−W)‖ vs rank, CLoQ vs LoftQ @ INT2
+// ------------------------------------------------------------------
+
+pub fn fig2(t: &TableOpts) -> anyhow::Result<()> {
+    use crate::linalg::matmul;
+    use crate::linalg::norms::{discrepancy_from_re};
+    use crate::lowrank::{cloq_lowrank, damping_lambda, gram_root, loftq, CloqConfig, LoftqConfig, LoftqQuantizer};
+    use crate::quant::magr::magr;
+    use crate::quant::optq::{optq, OptqConfig};
+
+    let opts = popts("tiny-s", t);
+    let mut rt = Runtime::load(&opts.artifacts)?;
+    let (base, _) = ensure_pretrained(&mut rt, &opts)?;
+    let grams = ensure_grams(&mut rt, &base, &opts, opts.calib_samples)?;
+
+    // A mid-network layer, like the paper's randomly-selected Llama2 layer.
+    let layer = "l1.w_up";
+    let w = base.get(layer).to_matrix();
+    let h = grams
+        .get(layer)
+        .ok_or_else(|| anyhow::anyhow!("no gram for {layer}"))?
+        .clone();
+    let mut hd = h.clone();
+    hd.add_diag(damping_lambda(&h, 0.01));
+    let root = gram_root(&hd, 1e-12);
+
+    let bits = 2;
+    let gs = rt.manifest.config.group_size;
+    let max_rank = rt.manifest.config.rank;
+
+    // CLoQ base: MagR + OPTQ (as in the method).
+    let w_magr = magr(&w, &hd, &Default::default());
+    let q_cloq = optq(&w_magr, &h, &OptqConfig { bits, group_size: gs, ..Default::default() })
+        .dequantize();
+
+    let mut fig = Table::new(
+        &format!("Fig 2: ||X(Q + AB' - W)|| vs rank at INT2 (layer {layer})"),
+        &["Rank", "CLoQ spec", "LoftQ spec", "CLoQ fro", "LoftQ fro"],
+    );
+    let ranks: Vec<usize> = [1usize, 2, 4, 8, 16, 32, 64]
+        .into_iter()
+        .filter(|&r| r <= max_rank)
+        .collect();
+    for &r in &ranks {
+        // CLoQ: closed form on ΔW = W − Q.
+        let dw = w.sub(&q_cloq);
+        let init = cloq_lowrank(&hd, &dw, &CloqConfig { rank: r, ..Default::default() });
+        let e_cloq = q_cloq.add(&init.ab_t()).sub(&w);
+        let d_cloq = discrepancy_from_re(&matmul(&root.r, &e_cloq));
+
+        // LoftQ: data-free AltMin (INT quantizer, 5 iters).
+        let lq = loftq(&w, &LoftqConfig { bits, group_size: gs, rank: r, iters: 5, quantizer: LoftqQuantizer::Int });
+        let e_loftq = lq.q_deq.add(&lq.ab_t()).sub(&w);
+        let d_loftq = discrepancy_from_re(&matmul(&root.r, &e_loftq));
+
+        fig.row(vec![
+            r.to_string(),
+            fmt_f(d_cloq.spectral, 4),
+            fmt_f(d_loftq.spectral, 4),
+            fmt_f(d_cloq.frobenius, 4),
+            fmt_f(d_loftq.frobenius, 4),
+        ]);
+    }
+    fig.emit(&t.reports_dir, "fig2")
+}
+
+/// Dispatch by id.
+pub fn run_table(id: &str, t: &TableOpts) -> anyhow::Result<()> {
+    let (out, secs) = timeit(|| match id {
+        "1" => table1(t),
+        "2" => table2(t),
+        "3" => table3(t),
+        "4" => table4(t),
+        "5" => table5(t),
+        "6" => table6(t),
+        "7" => table7(t),
+        "8" => table8(t),
+        "9" => table9(t),
+        "10" => table10(t),
+        other => Err(anyhow::anyhow!("unknown table '{other}' (1-10)")),
+    });
+    crate::info!("table {id} completed in {secs:.1}s");
+    out
+}
+
+pub fn run_fig(id: &str, t: &TableOpts) -> anyhow::Result<()> {
+    match id {
+        "1" => fig1(t),
+        "2" => fig2(t),
+        other => Err(anyhow::anyhow!("unknown figure '{other}' (1-2)")),
+    }
+}
+
+#[allow(dead_code)]
+fn _unused(_: &Path) {}

@@ -1,0 +1,192 @@
+//! Trainers: full pretraining (builds the "pre-trained" base the paper
+//! starts from) and LoRA fine-tuning (the paper's training stage). The Rust
+//! side owns the loop, batching, LR schedule and metrics; each step is one
+//! PJRT execution of the AOT train-step graph.
+
+use crate::data::batcher::{task_batch, Batch, LmStream};
+use crate::data::corpus::{corpus_text, Split};
+use crate::data::Example;
+use crate::model::{base_specs, lora_specs, ParamStore};
+use crate::runtime::{Runtime, Tensor};
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    pub weight_decay: f64,
+    /// Warmup fraction then cosine decay (paper Table 11: 3–10% warmup).
+    pub warmup_frac: f64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 100, lr: 1e-3, weight_decay: 0.1, warmup_frac: 0.05, log_every: 25 }
+    }
+}
+
+/// Warmup + cosine LR schedule (the paper's WikiText/GSM8K setting).
+pub fn lr_at(cfg: &TrainConfig, step: usize) -> f64 {
+    let warmup = (cfg.warmup_frac * cfg.steps as f64).max(1.0);
+    if (step as f64) < warmup {
+        cfg.lr * (step as f64 + 1.0) / warmup
+    } else {
+        let t = (step as f64 - warmup) / (cfg.steps as f64 - warmup).max(1.0);
+        cfg.lr * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+    }
+}
+
+/// Which data the trainer feeds.
+pub enum DataSource<'a> {
+    /// Language modelling on the synthetic corpus (given seed).
+    Corpus(u64),
+    /// Supervised task examples (prompt-masked loss).
+    Tasks(&'a [Example]),
+}
+
+pub struct TrainOutcome {
+    pub losses: Vec<f32>,
+    pub final_loss: f32,
+}
+
+/// Pretrain all base parameters from `base` (updated in place semantics:
+/// returns the new store). This is the e2e "train a small transformer and
+/// log the loss curve" driver.
+pub fn pretrain(
+    rt: &mut Runtime,
+    base: &ParamStore,
+    cfg: &TrainConfig,
+    corpus_seed: u64,
+) -> anyhow::Result<(ParamStore, TrainOutcome)> {
+    let mcfg = rt.manifest.config.clone();
+    let bspecs = base_specs(&rt.manifest)?;
+    let nb = bspecs.len();
+
+    let bytes = cfg.steps * mcfg.batch * mcfg.seq + 65536;
+    // Pretraining mixture: prose + task-formatted lines (see data::pretrain_mixture).
+    let text = crate::data::pretrain_mixture(corpus_seed, bytes.min(4_000_000));
+    let mut stream = LmStream::new(&text, mcfg.batch, mcfg.seq);
+
+    let mut params = base.in_order();
+    let mut m: Vec<Tensor> = params.iter().map(|t| Tensor::zeros_f32(t.shape.clone())).collect();
+    let mut v = m.clone();
+    let mut losses = Vec::with_capacity(cfg.steps);
+
+    for step in 0..cfg.steps {
+        let batch = stream.next_batch().unwrap();
+        let mut inputs = Vec::with_capacity(3 * nb + 5);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(batch.tokens);
+        inputs.push(batch.mask);
+        inputs.push(Tensor::scalar_f32(lr_at(cfg, step) as f32));
+        inputs.push(Tensor::scalar_f32(cfg.weight_decay as f32));
+        inputs.push(Tensor::scalar_f32((step + 1) as f32));
+        let out = rt.run("pretrain_step", &inputs)?;
+        let loss = out.last().unwrap().scalar();
+        anyhow::ensure!(loss.is_finite(), "pretraining diverged at step {step}");
+        losses.push(loss);
+        params = out[..nb].to_vec();
+        m = out[nb..2 * nb].to_vec();
+        v = out[2 * nb..3 * nb].to_vec();
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            crate::info!("pretrain step {step:4}  loss {loss:.4}  lr {:.2e}", lr_at(cfg, step));
+        }
+    }
+
+    let mut store = ParamStore::new();
+    for (spec, t) in bspecs.iter().zip(params) {
+        store.insert(&spec.name, t);
+    }
+    let final_loss = *losses.last().unwrap_or(&f32::NAN);
+    Ok((store, TrainOutcome { losses, final_loss }))
+}
+
+/// LoRA fine-tuning: base frozen, adapters trained.
+pub fn finetune_lora(
+    rt: &mut Runtime,
+    base_q: &ParamStore,
+    lora: &ParamStore,
+    data: DataSource<'_>,
+    cfg: &TrainConfig,
+    seed: u64,
+) -> anyhow::Result<(ParamStore, TrainOutcome)> {
+    let mcfg = rt.manifest.config.clone();
+    let lspecs = lora_specs(&rt.manifest)?;
+    let nl = lspecs.len();
+    let base_inputs = base_q.in_order();
+
+    let mut lora_vals = lora.in_order();
+    let mut m: Vec<Tensor> =
+        lora_vals.iter().map(|t| Tensor::zeros_f32(t.shape.clone())).collect();
+    let mut v = m.clone();
+    let mut rng = Rng::new(seed);
+
+    let mut corpus_stream = match data {
+        DataSource::Corpus(s) => {
+            let bytes = cfg.steps * mcfg.batch * mcfg.seq + 65536;
+            Some(LmStream::new(
+                &corpus_text(s, Split::Train, bytes.min(4_000_000)),
+                mcfg.batch,
+                mcfg.seq,
+            ))
+        }
+        DataSource::Tasks(_) => None,
+    };
+
+    let mut losses = Vec::with_capacity(cfg.steps);
+    for step in 0..cfg.steps {
+        let batch: Batch = match &data {
+            DataSource::Corpus(_) => corpus_stream.as_mut().unwrap().next_batch().unwrap(),
+            DataSource::Tasks(examples) => task_batch(examples, mcfg.batch, mcfg.seq, &mut rng),
+        };
+        let mut inputs = Vec::with_capacity(base_inputs.len() + 3 * nl + 5);
+        inputs.extend(base_inputs.iter().cloned());
+        inputs.extend(lora_vals.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(batch.tokens);
+        inputs.push(batch.mask);
+        inputs.push(Tensor::scalar_f32(lr_at(cfg, step) as f32));
+        inputs.push(Tensor::scalar_f32(cfg.weight_decay as f32));
+        inputs.push(Tensor::scalar_f32((step + 1) as f32));
+        let out = rt.run("lora_step", &inputs)?;
+        let loss = out.last().unwrap().scalar();
+        anyhow::ensure!(loss.is_finite(), "fine-tuning diverged at step {step}");
+        losses.push(loss);
+        lora_vals = out[..nl].to_vec();
+        m = out[nl..2 * nl].to_vec();
+        v = out[2 * nl..3 * nl].to_vec();
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            crate::info!("finetune step {step:4}  loss {loss:.4}  lr {:.2e}", lr_at(cfg, step));
+        }
+    }
+
+    let mut store = ParamStore::new();
+    for (spec, t) in lspecs.iter().zip(lora_vals) {
+        store.insert(&spec.name, t);
+    }
+    let final_loss = *losses.last().unwrap_or(&f32::NAN);
+    Ok((store, TrainOutcome { losses, final_loss }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let cfg = TrainConfig { steps: 100, lr: 1e-3, warmup_frac: 0.1, ..Default::default() };
+        // Warmup is increasing.
+        assert!(lr_at(&cfg, 0) < lr_at(&cfg, 5));
+        assert!(lr_at(&cfg, 5) < lr_at(&cfg, 9));
+        // Peak near end of warmup.
+        assert!((lr_at(&cfg, 10) - 1e-3).abs() < 1e-4);
+        // Decays after.
+        assert!(lr_at(&cfg, 50) < lr_at(&cfg, 12));
+        assert!(lr_at(&cfg, 99) < lr_at(&cfg, 50));
+        assert!(lr_at(&cfg, 99) >= 0.0);
+    }
+}

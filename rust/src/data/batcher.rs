@@ -1,0 +1,216 @@
+//! Batching: packing corpus text and task examples into the fixed
+//! `[batch, seq]` token / loss-mask tensors the AOT graphs expect.
+
+use crate::data::tokenizer::{self, BOS, PAD};
+use crate::data::tasks::Example;
+use crate::runtime::Tensor;
+use crate::util::prng::Rng;
+
+/// A [B, T] token batch + loss mask (mask[b,t]=1 ⇔ token t is a target).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Tensor,
+    pub mask: Tensor,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl Batch {
+    fn from_rows(rows: Vec<(Vec<i32>, Vec<f32>)>, seq: usize) -> Batch {
+        let b = rows.len();
+        let mut tokens = vec![PAD; b * seq];
+        let mut mask = vec![0.0f32; b * seq];
+        for (i, (toks, ms)) in rows.into_iter().enumerate() {
+            let n = toks.len().min(seq);
+            tokens[i * seq..i * seq + n].copy_from_slice(&toks[..n]);
+            mask[i * seq..i * seq + n].copy_from_slice(&ms[..n]);
+        }
+        Batch {
+            tokens: Tensor::i32(vec![b, seq], tokens),
+            mask: Tensor::f32(vec![b, seq], mask),
+            batch: b,
+            seq,
+        }
+    }
+}
+
+/// Language-modeling stream: chop tokenized text into contiguous windows of
+/// `seq` tokens (BOS-prefixed), mask = 1 on all real tokens.
+pub struct LmStream {
+    tokens: Vec<i32>,
+    pos: usize,
+    batch: usize,
+    seq: usize,
+}
+
+impl LmStream {
+    pub fn new(text: &str, batch: usize, seq: usize) -> LmStream {
+        LmStream { tokens: tokenizer::encode(text), pos: 0, batch, seq }
+    }
+
+    /// Number of full batches available.
+    pub fn num_batches(&self) -> usize {
+        self.tokens.len() / ((self.seq - 1) * self.batch)
+    }
+
+    /// Next batch, wrapping around at the end (for training); returns None
+    /// only for an empty stream.
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        if self.tokens.len() < self.seq {
+            return None;
+        }
+        let mut rows = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let need = self.seq - 1;
+            if self.pos + need > self.tokens.len() {
+                self.pos = 0;
+            }
+            let mut toks = vec![BOS];
+            toks.extend_from_slice(&self.tokens[self.pos..self.pos + need]);
+            self.pos += need;
+            let mask = vec![1.0f32; self.seq];
+            rows.push((toks, mask));
+        }
+        Some(Batch::from_rows(rows, self.seq))
+    }
+}
+
+/// Task fine-tuning batches: each row is `[BOS] prompt " A: " answer [EOS]`
+/// with loss mask covering the answer + EOS (the target positions).
+pub fn task_batch(examples: &[Example], batch: usize, seq: usize, rng: &mut Rng) -> Batch {
+    let mut rows = Vec::with_capacity(batch);
+    for _ in 0..batch {
+        let ex = &examples[rng.below(examples.len())];
+        rows.push(example_row(ex, seq));
+    }
+    Batch::from_rows(rows, seq)
+}
+
+/// Deterministic sequential batch over `examples[start..start+batch]`
+/// (wrapping), for evaluation. Returns the example indices used.
+pub fn task_batch_at(examples: &[Example], start: usize, batch: usize, seq: usize) -> (Batch, Vec<usize>) {
+    let mut rows = Vec::with_capacity(batch);
+    let mut idxs = Vec::with_capacity(batch);
+    for k in 0..batch {
+        let i = (start + k) % examples.len();
+        idxs.push(i);
+        rows.push(example_row(&examples[i], seq));
+    }
+    (Batch::from_rows(rows, seq), idxs)
+}
+
+fn example_row(ex: &Example, seq: usize) -> (Vec<i32>, Vec<f32>) {
+    let (toks, astart) = tokenizer::encode_example(&ex.prompt, &ex.answer);
+    let mut mask = vec![0.0f32; toks.len()];
+    for m in mask[astart..].iter_mut() {
+        *m = 1.0;
+    }
+    let mut toks = toks;
+    if toks.len() > seq {
+        toks.truncate(seq);
+        mask.truncate(seq);
+    }
+    (toks, mask)
+}
+
+/// A prompt-only row for scoring/decoding: `[BOS] prompt " A: " <candidate>`.
+/// Returns (tokens, index where the candidate begins).
+pub fn prompt_with_candidate(prompt: &str, candidate: &str, seq: usize) -> (Vec<i32>, usize) {
+    let (mut toks, astart) = tokenizer::encode_example(prompt, candidate);
+    toks.pop(); // drop EOS: candidates are scored without terminal credit
+    if toks.len() > seq {
+        toks.truncate(seq);
+    }
+    (toks, astart)
+}
+
+/// Pad a set of token rows into a [B, T] tokens tensor (mask unused).
+pub fn pad_rows(rows: &[Vec<i32>], batch: usize, seq: usize) -> Tensor {
+    assert!(rows.len() <= batch);
+    let mut tokens = vec![PAD; batch * seq];
+    for (i, r) in rows.iter().enumerate() {
+        let n = r.len().min(seq);
+        tokens[i * seq..i * seq + n].copy_from_slice(&r[..n]);
+    }
+    Tensor::i32(vec![batch, seq], tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{corpus_text, Split};
+    use crate::data::tasks::Task;
+    use crate::data::tokenizer::{decode, EOS};
+
+    #[test]
+    fn lm_stream_covers_text_without_loss() {
+        let text = corpus_text(1, Split::Train, 4000);
+        let mut s = LmStream::new(&text, 4, 16);
+        let b = s.next_batch().unwrap();
+        assert_eq!(b.tokens.shape, vec![4, 16]);
+        // First token of each row is BOS; all masked.
+        let toks = b.tokens.as_i32();
+        let mask = b.mask.as_f32();
+        for i in 0..4 {
+            assert_eq!(toks[i * 16], BOS);
+            assert!(mask[i * 16..(i + 1) * 16].iter().all(|&m| m == 1.0));
+        }
+        // Consecutive batches advance through the text.
+        let b2 = s.next_batch().unwrap();
+        assert_ne!(b.tokens.as_i32(), b2.tokens.as_i32());
+    }
+
+    #[test]
+    fn task_batch_masks_answers_only() {
+        let mut rng = Rng::new(5);
+        let data = Task::SMawps.dataset(20, 1, 0);
+        let b = task_batch(&data, 4, 32, &mut rng);
+        let toks = b.tokens.as_i32();
+        let mask = b.mask.as_f32();
+        for i in 0..4 {
+            let row = &toks[i * 32..(i + 1) * 32];
+            let mrow = &mask[i * 32..(i + 1) * 32];
+            // The delimiter region is unmasked; the answer is masked.
+            let first_masked = mrow.iter().position(|&m| m == 1.0).unwrap();
+            assert!(mrow[..first_masked].iter().all(|&m| m == 0.0));
+            assert!(decode(&row[..first_masked]).ends_with(" A: "), "{:?}", decode(&row[..first_masked]));
+            // EOS masked, pads unmasked.
+            let eos_pos = row.iter().position(|&t| t == EOS).unwrap();
+            assert_eq!(mrow[eos_pos], 1.0);
+            if eos_pos + 1 < 32 {
+                assert!(mrow[eos_pos + 1..].iter().all(|&m| m == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_eval_batches() {
+        let data = Task::SAqua.dataset(10, 2, 1);
+        let (b1, i1) = task_batch_at(&data, 0, 4, 32);
+        let (b2, i2) = task_batch_at(&data, 0, 4, 32);
+        assert_eq!(i1, i2);
+        assert_eq!(b1.tokens.as_i32(), b2.tokens.as_i32());
+        let (_, i3) = task_batch_at(&data, 8, 4, 32);
+        assert_eq!(i3, vec![8, 9, 0, 1]); // wraps
+    }
+
+    #[test]
+    fn candidate_rows() {
+        let (toks, astart) = prompt_with_candidate("is 4 even?", "yes", 32);
+        assert!(tokenizer::decode(&toks[..astart]).ends_with(" A: "));
+        assert_ne!(*toks.last().unwrap(), EOS);
+        assert_eq!(tokenizer::decode(&toks[astart..]), "yes");
+    }
+
+    #[test]
+    fn truncation_respected() {
+        let long = Example {
+            prompt: "x".repeat(100),
+            answer: "y".repeat(50),
+            options: vec![],
+        };
+        let (toks, mask) = example_row(&long, 40);
+        assert_eq!(toks.len(), 40);
+        assert_eq!(mask.len(), 40);
+    }
+}

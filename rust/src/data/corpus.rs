@@ -1,0 +1,202 @@
+//! `synth-wiki`: the WikiText-2 stand-in (DESIGN.md §3).
+//!
+//! A seeded probabilistic template grammar over a zipfian synthetic
+//! vocabulary. The grammar carries enough structure for a tiny LM to learn
+//! (determiner agreement, verb argument patterns, punctuation rhythm,
+//! topic-repeated nouns), while the zipfian lexicon gives realistic
+//! heavy-tailed token statistics. Splits (train/valid/test/calibration) come
+//! from disjoint seed streams of the same distribution, mirroring how the
+//! paper calibrates on WikiText train samples and evaluates ppl on the
+//! validation split.
+
+use crate::util::prng::{Rng, Zipf};
+
+/// Deterministic synthetic lexicon: CV-syllable words.
+fn make_words(n: usize, min_syl: usize, max_syl: usize, rng: &mut Rng) -> Vec<String> {
+    const C: &[&str] = &["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z", "th", "sh"];
+    const V: &[&str] = &["a", "e", "i", "o", "u", "ai", "or"];
+    let mut words = Vec::with_capacity(n);
+    while words.len() < n {
+        let syls = rng.range(min_syl as i64, max_syl as i64) as usize;
+        let mut w = String::new();
+        for _ in 0..syls {
+            w.push_str(C[rng.below(C.len())]);
+            w.push_str(V[rng.below(V.len())]);
+        }
+        if !words.contains(&w) {
+            words.push(w);
+        }
+    }
+    words
+}
+
+/// The grammar: fixed per seed, shared across splits.
+pub struct Corpus {
+    nouns: Vec<String>,
+    verbs: Vec<String>,
+    adjs: Vec<String>,
+    noun_dist: Zipf,
+    verb_dist: Zipf,
+    adj_dist: Zipf,
+}
+
+impl Corpus {
+    pub fn new(seed: u64) -> Corpus {
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        Corpus {
+            nouns: make_words(60, 2, 3, &mut rng),
+            verbs: make_words(30, 2, 2, &mut rng),
+            adjs: make_words(20, 2, 3, &mut rng),
+            noun_dist: Zipf::new(60, 1.05),
+            verb_dist: Zipf::new(30, 1.05),
+            adj_dist: Zipf::new(20, 1.0),
+        }
+    }
+
+    fn noun(&self, rng: &mut Rng) -> (String, bool) {
+        // (word, plural?)
+        let w = self.nouns[self.noun_dist.sample(rng)].clone();
+        if rng.chance(0.3) {
+            (format!("{w}s"), true)
+        } else {
+            (w, false)
+        }
+    }
+
+    fn np(&self, rng: &mut Rng, topic: Option<&str>) -> (String, bool) {
+        let (mut n, plural) = match topic {
+            // Topic nouns recur within a paragraph (discourse coherence).
+            Some(t) if rng.chance(0.45) => (t.to_string(), false),
+            _ => self.noun(rng),
+        };
+        if rng.chance(0.35) {
+            let a = &self.adjs[self.adj_dist.sample(rng)];
+            n = format!("{a} {n}");
+        }
+        let det = if plural {
+            if rng.chance(0.5) { "the" } else { "some" }
+        } else if rng.chance(0.6) {
+            "the"
+        } else {
+            "a"
+        };
+        (format!("{det} {n}"), plural)
+    }
+
+    /// One sentence. Subject-verb agreement: singular subject → verb+"s".
+    pub fn sentence(&self, rng: &mut Rng, topic: &str) -> String {
+        let (subj, plural) = self.np(rng, Some(topic));
+        let v = &self.verbs[self.verb_dist.sample(rng)];
+        let verb = if plural { v.clone() } else { format!("{v}s") };
+        let (obj, _) = self.np(rng, Some(topic));
+        let mut s = format!("{subj} {verb} {obj}");
+        if rng.chance(0.25) {
+            let (obj2, _) = self.np(rng, None);
+            s = format!("{s} near {obj2}");
+        }
+        s.push('.');
+        s
+    }
+
+    /// A paragraph of `n_sentences` around one topic noun.
+    pub fn paragraph(&self, rng: &mut Rng, n_sentences: usize) -> String {
+        let topic = self.nouns[self.noun_dist.sample(rng)].clone();
+        (0..n_sentences)
+            .map(|_| self.sentence(rng, &topic))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// A document of roughly `target_bytes` characters.
+    pub fn document(&self, rng: &mut Rng, target_bytes: usize) -> String {
+        let mut doc = String::new();
+        while doc.len() < target_bytes {
+            if !doc.is_empty() {
+                doc.push('\n');
+            }
+            let n = rng.range(2, 5) as usize;
+            doc.push_str(&self.paragraph(rng, n));
+        }
+        doc.truncate(target_bytes);
+        doc
+    }
+}
+
+/// The four standard splits, as independent seed streams.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Valid,
+    Test,
+    Calibration,
+}
+
+impl Split {
+    fn stream(self) -> u64 {
+        match self {
+            Split::Train => 0x7721,
+            Split::Valid => 0xAAC3,
+            Split::Test => 0x51D5,
+            Split::Calibration => 0xFE07,
+        }
+    }
+}
+
+/// Generate `bytes` of corpus text for (seed, split).
+pub fn corpus_text(seed: u64, split: Split, bytes: usize) -> String {
+    let corpus = Corpus::new(seed);
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B9) ^ split.stream());
+    corpus.document(&mut rng, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(corpus_text(1, Split::Train, 500), corpus_text(1, Split::Train, 500));
+        assert_ne!(corpus_text(1, Split::Train, 500), corpus_text(2, Split::Train, 500));
+    }
+
+    #[test]
+    fn splits_differ_but_share_lexicon() {
+        let train = corpus_text(7, Split::Train, 2000);
+        let valid = corpus_text(7, Split::Valid, 2000);
+        assert_ne!(train, valid);
+        // Shared lexicon: the most common noun of train appears in valid.
+        let c = Corpus::new(7);
+        let top_noun = &c.nouns[0];
+        assert!(train.contains(top_noun.as_str()) || valid.contains(top_noun.as_str()));
+    }
+
+    #[test]
+    fn has_sentence_structure() {
+        let text = corpus_text(3, Split::Train, 3000);
+        assert!(text.contains('.'));
+        assert!(text.contains("the "));
+        // Zipfian: "the" should be very frequent.
+        let the_count = text.matches("the ").count();
+        assert!(the_count > 20, "the_count={the_count}");
+    }
+
+    #[test]
+    fn agreement_holds() {
+        // Every "a <noun> <verb>" clause uses the -s verb form: sample some
+        // sentences and check singular subjects get verb+s.
+        let c = Corpus::new(11);
+        let mut rng = Rng::new(42);
+        for _ in 0..50 {
+            let s = c.sentence(&mut rng, "topic");
+            // crude check: sentence contains a verb; structure is intact
+            assert!(s.ends_with('.'));
+            assert!(s.split_whitespace().count() >= 4, "{s}");
+        }
+    }
+
+    #[test]
+    fn target_length_respected() {
+        let text = corpus_text(5, Split::Test, 1234);
+        assert_eq!(text.len(), 1234);
+    }
+}

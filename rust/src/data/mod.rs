@@ -1,0 +1,42 @@
+//! Data substrate: tokenizer, synthetic corpus (WikiText-2 stand-in),
+//! task generators (arithmetic + commonsense families), and batching.
+
+pub mod batcher;
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use batcher::{task_batch, task_batch_at, Batch, LmStream};
+pub use corpus::{corpus_text, Split};
+pub use tasks::{commonsense170k, math10k, mixed_dataset, Example, Task, ARITH_TASKS, COMMONSENSE_TASKS};
+
+/// Pretraining mixture: synth-wiki prose interleaved with task-formatted
+/// lines (arithmetic + commonsense QA). Mirrors how a real pretrained LLM
+/// has already seen arithmetic and QA formats before fine-tuning — the
+/// paper's starting point is a model that *can* do these tasks at FP16.
+pub fn pretrain_mixture(seed: u64, bytes: usize) -> String {
+    use crate::util::prng::Rng;
+    let prose = corpus_text(seed, Split::Train, bytes / 2);
+    let mut rng = Rng::new(seed ^ 0x9E77_1234);
+    let mut out = String::with_capacity(bytes + 256);
+    let mut prose_iter = prose.split('\n');
+    let all_tasks: Vec<Task> = ARITH_TASKS.iter().chain(COMMONSENSE_TASKS.iter()).copied().collect();
+    while out.len() < bytes {
+        // A paragraph of prose…
+        if let Some(p) = prose_iter.next() {
+            out.push_str(p);
+            out.push('\n');
+        }
+        // …then a burst of task lines.
+        for _ in 0..rng.range(3, 8) {
+            let t = all_tasks[rng.below(all_tasks.len())];
+            let ex = t.example(&mut rng);
+            out.push_str(&ex.prompt);
+            out.push_str(" A: ");
+            out.push_str(&ex.answer);
+            out.push('\n');
+        }
+    }
+    out.truncate(bytes);
+    out
+}

@@ -1,0 +1,410 @@
+//! Synthetic task families standing in for the paper's fine-tuning /
+//! evaluation datasets (DESIGN.md §3):
+//!
+//! * **Arithmetic** (Tables 1–4): `s-gsm` (two-step sums), `s-svamp`
+//!   (one-step word form), `s-mawps` (small operands), `s-aqua`
+//!   (multiple choice). Generative families are scored by exact match on
+//!   the decoded answer; `s-aqua` by option log-likelihood.
+//! * **Commonsense** (Table 5): eight MCQ families (parity, comparison,
+//!   majority, succession, membership, copy, reverse, boolean logic),
+//!   all scored by option log-likelihood — mirroring the eight benchmarks
+//!   BoolQ/PIQA/SIQA/HellaSwag/WinoGrande/ARC-e/ARC-c/OBQA in mechanics
+//!   and difficulty spread.
+
+use crate::util::prng::Rng;
+
+/// One supervised example.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub prompt: String,
+    pub answer: String,
+    /// For MCQ tasks: all options (including the answer); empty for
+    /// generative tasks.
+    pub options: Vec<String>,
+}
+
+impl Example {
+    fn gen(prompt: String, answer: String) -> Example {
+        Example { prompt, answer, options: vec![] }
+    }
+
+    fn mcq(prompt: String, options: Vec<String>, correct: usize) -> Example {
+        Example { prompt, answer: options[correct].clone(), options }
+    }
+
+    pub fn is_mcq(&self) -> bool {
+        !self.options.is_empty()
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    // arithmetic
+    SGsm,
+    SSvamp,
+    SMawps,
+    SAqua,
+    // commonsense
+    CParity,
+    CCompare,
+    CMajority,
+    CSucc,
+    CMember,
+    CCopy,
+    CReverse,
+    CBool,
+}
+
+pub const ARITH_TASKS: [Task; 4] = [Task::SGsm, Task::SSvamp, Task::SMawps, Task::SAqua];
+pub const COMMONSENSE_TASKS: [Task; 8] = [
+    Task::CParity,
+    Task::CCompare,
+    Task::CMajority,
+    Task::CSucc,
+    Task::CMember,
+    Task::CCopy,
+    Task::CReverse,
+    Task::CBool,
+];
+
+impl Task {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Task::SGsm => "s-GSM8K",
+            Task::SSvamp => "s-SVAMP",
+            Task::SMawps => "s-MAWPS",
+            Task::SAqua => "s-AQuA",
+            Task::CParity => "c-Parity",
+            Task::CCompare => "c-Compare",
+            Task::CMajority => "c-Majority",
+            Task::CSucc => "c-Succ",
+            Task::CMember => "c-Member",
+            Task::CCopy => "c-Copy",
+            Task::CReverse => "c-Reverse",
+            Task::CBool => "c-Bool",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Task> {
+        let all = ARITH_TASKS.iter().chain(COMMONSENSE_TASKS.iter());
+        for t in all {
+            if t.name().eq_ignore_ascii_case(s) {
+                return Some(*t);
+            }
+        }
+        None
+    }
+
+    /// Generate one example.
+    pub fn example(&self, rng: &mut Rng) -> Example {
+        match self {
+            Task::SMawps => {
+                // easiest: single-step, small operands, 1-digit answers
+                let a = rng.range(0, 5);
+                let b = rng.range(0, 5);
+                if rng.chance(0.5) {
+                    Example::gen(format!("Q: {a}+{b}=?"), format!("{}", a + b))
+                } else {
+                    let (hi, lo) = (a.max(b), a.min(b));
+                    Example::gen(format!("Q: {hi}-{lo}=?"), format!("{}", hi - lo))
+                }
+            }
+            Task::SSvamp => {
+                // one-step word form with a distractor number
+                let a = rng.range(2, 9);
+                let b = rng.range(1, 8);
+                let d = rng.range(1, 9);
+                if rng.chance(0.5) {
+                    Example::gen(
+                        format!("Q: {a} cups and {b} more, {d} hats. cups?"),
+                        format!("{}", a + b),
+                    )
+                } else {
+                    let (hi, lo) = (a.max(b), a.min(b));
+                    Example::gen(
+                        format!("Q: {hi} cups, {lo} lost, {d} hats. cups?"),
+                        format!("{}", hi - lo),
+                    )
+                }
+            }
+            Task::SGsm => {
+                // hardest generative: two-step chain
+                let a = rng.range(2, 9);
+                let b = rng.range(1, 8);
+                let c = rng.range(1, (a + b).min(9));
+                Example::gen(format!("Q: {a}+{b}-{c}=?"), format!("{}", a + b - c))
+            }
+            Task::SAqua => {
+                // multiple choice, 4 options
+                let a = rng.range(2, 12);
+                let b = rng.range(1, 9);
+                let ans = a + b;
+                let mut opts = vec![ans];
+                while opts.len() < 4 {
+                    let delta = rng.range(1, 6) * if rng.chance(0.5) { 1 } else { -1 };
+                    let cand = (ans + delta).max(0);
+                    if !opts.contains(&cand) {
+                        opts.push(cand);
+                    }
+                }
+                rng.shuffle(&mut opts);
+                let correct = opts.iter().position(|&x| x == ans).unwrap();
+                Example::mcq(
+                    format!("Q: {a}+{b}=?"),
+                    opts.iter().map(|x| x.to_string()).collect(),
+                    correct,
+                )
+            }
+            Task::CParity => {
+                let n = rng.range(0, 99);
+                let yes = n % 2 == 0;
+                Example::mcq(
+                    format!("is {n} even?"),
+                    vec!["yes".into(), "no".into()],
+                    if yes { 0 } else { 1 },
+                )
+            }
+            Task::CCompare => {
+                let mut xs = [rng.range(0, 30), rng.range(0, 30), rng.range(0, 30)];
+                while xs[0] == xs[1] || xs[1] == xs[2] || xs[0] == xs[2] {
+                    xs = [rng.range(0, 30), rng.range(0, 30), rng.range(0, 30)];
+                }
+                let max = *xs.iter().max().unwrap();
+                let correct = xs.iter().position(|&x| x == max).unwrap();
+                Example::mcq(
+                    format!("max of {} {} {}?", xs[0], xs[1], xs[2]),
+                    xs.iter().map(|x| x.to_string()).collect(),
+                    correct,
+                )
+            }
+            Task::CMajority => {
+                let len = rng.range(5, 9) as usize;
+                let mut s = String::new();
+                let mut x_count = 0usize;
+                for _ in 0..len {
+                    if rng.chance(0.5) {
+                        s.push('x');
+                        x_count += 1;
+                    } else {
+                        s.push('o');
+                    }
+                }
+                // Force a strict majority.
+                if 2 * x_count == len {
+                    s.push('x');
+                    x_count += 1;
+                }
+                let more_x = 2 * x_count > s.len();
+                Example::mcq(
+                    format!("more x or o in {s}?"),
+                    vec!["x".into(), "o".into()],
+                    if more_x { 0 } else { 1 },
+                )
+            }
+            Task::CSucc => {
+                let n = rng.range(0, 50);
+                let opts = vec![
+                    format!("{}", n + 1),
+                    format!("{}", n + 2),
+                    format!("{}", (n - 1).max(0)),
+                ];
+                Example::mcq(format!("after {n} comes?"), opts, 0)
+            }
+            Task::CMember => {
+                const WORDS: &[&str] = &["apple", "stone", "river", "cloud", "tiger", "bread"];
+                let w = *rng.choose(WORDS);
+                let c = (b'a' + rng.below(26) as u8) as char;
+                let yes = w.contains(c);
+                Example::mcq(
+                    format!("is {c} in {w}?"),
+                    vec!["yes".into(), "no".into()],
+                    if yes { 0 } else { 1 },
+                )
+            }
+            Task::CCopy => {
+                let len = rng.range(3, 5) as usize;
+                let s: String = (0..len).map(|_| (b'a' + rng.below(6) as u8) as char).collect();
+                let mut wrong: Vec<char> = s.chars().collect();
+                wrong.swap(0, len - 1);
+                let wrong: String = wrong.into_iter().collect();
+                if wrong == s {
+                    // all-same string; perturb instead
+                    let mut w2: Vec<char> = s.chars().collect();
+                    w2[0] = if w2[0] == 'a' { 'b' } else { 'a' };
+                    let w2: String = w2.into_iter().collect();
+                    return Example::mcq(format!("copy {s}?"), vec![s.clone(), w2], 0);
+                }
+                Example::mcq(format!("copy {s}?"), vec![s.clone(), wrong], 0)
+            }
+            Task::CReverse => {
+                let len = rng.range(3, 4) as usize;
+                let s: String = (0..len).map(|_| (b'a' + rng.below(8) as u8) as char).collect();
+                let rev: String = s.chars().rev().collect();
+                if rev == s {
+                    let opts = vec![rev.clone(), format!("{rev}x")];
+                    return Example::mcq(format!("reverse {s}?"), opts, 0);
+                }
+                let opts = vec![rev, s.clone()];
+                Example::mcq(format!("reverse {s}?"), opts, 0)
+            }
+            Task::CBool => {
+                let a = rng.chance(0.5);
+                let b = rng.chance(0.5);
+                let and = rng.chance(0.5);
+                let result = if and { a && b } else { a || b };
+                let op = if and { "and" } else { "or" };
+                let f = |x: bool| if x { "true" } else { "false" };
+                Example::mcq(
+                    format!("{} {op} {}?", f(a), f(b)),
+                    vec!["true".into(), "false".into()],
+                    if result { 0 } else { 1 },
+                )
+            }
+        }
+    }
+
+    /// A deterministic dataset of `n` examples for (task, seed, split).
+    pub fn dataset(&self, n: usize, seed: u64, split: u64) -> Vec<Example> {
+        let mut rng = Rng::new(seed ^ split.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (*self as u64) << 32);
+        (0..n).map(|_| self.example(&mut rng)).collect()
+    }
+}
+
+/// The `Math10K` stand-in: a mixture over the generative arithmetic
+/// families plus AQuA (the paper fine-tunes on GSM8K+MAWPS+AQuA samples).
+pub fn math10k(n: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Rng::new(seed ^ 0x3A7);
+    let tasks = [Task::SGsm, Task::SMawps, Task::SAqua, Task::SSvamp];
+    let weights = [0.4, 0.25, 0.2, 0.15];
+    (0..n)
+        .map(|_| {
+            let t = tasks[rng.weighted(&weights)];
+            t.example(&mut rng)
+        })
+        .collect()
+}
+
+/// The `Commonsense170K` stand-in: uniform mixture over the 8 families.
+pub fn commonsense170k(n: usize, seed: u64) -> Vec<Example> {
+    let mut rng = Rng::new(seed ^ 0xC5);
+    (0..n)
+        .map(|_| {
+            let t = COMMONSENSE_TASKS[rng.below(8)];
+            t.example(&mut rng)
+        })
+        .collect()
+}
+
+/// The Table-6 mixed set: math10k + `extra` commonsense samples.
+pub fn mixed_dataset(n_math: usize, n_cs: usize, seed: u64) -> Vec<Example> {
+    let mut out = math10k(n_math, seed);
+    out.extend(commonsense170k(n_cs, seed ^ 0x1111));
+    let mut rng = Rng::new(seed ^ 0x2222);
+    rng.shuffle(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_examples() {
+        let mut rng = Rng::new(1);
+        for t in ARITH_TASKS.iter().chain(COMMONSENSE_TASKS.iter()) {
+            for _ in 0..50 {
+                let ex = t.example(&mut rng);
+                assert!(!ex.prompt.is_empty());
+                assert!(!ex.answer.is_empty());
+                if ex.is_mcq() {
+                    assert!(ex.options.contains(&ex.answer));
+                    assert!(ex.options.len() >= 2);
+                    // Options are distinct.
+                    let mut o = ex.options.clone();
+                    o.sort();
+                    o.dedup();
+                    assert_eq!(o.len(), ex.options.len(), "{ex:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn arithmetic_answers_are_correct() {
+        let mut rng = Rng::new(2);
+        for _ in 0..100 {
+            let ex = Task::SMawps.example(&mut rng);
+            // Parse "Q: a+b=?" or "Q: a-b=?"
+            let q = ex.prompt.trim_start_matches("Q: ").trim_end_matches("=?");
+            let ans: i64 = ex.answer.parse().unwrap();
+            if let Some((a, b)) = q.split_once('+') {
+                assert_eq!(ans, a.parse::<i64>().unwrap() + b.parse::<i64>().unwrap());
+            } else if let Some((a, b)) = q.split_once('-') {
+                assert_eq!(ans, a.parse::<i64>().unwrap() - b.parse::<i64>().unwrap());
+            } else {
+                panic!("unexpected prompt {q}");
+            }
+            assert!(ans >= 0);
+        }
+    }
+
+    #[test]
+    fn gsm_two_step_correct() {
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let ex = Task::SGsm.example(&mut rng);
+            let q = ex.prompt.trim_start_matches("Q: ").trim_end_matches("=?");
+            let (ab, c) = q.rsplit_once('-').unwrap();
+            let (a, b) = ab.split_once('+').unwrap();
+            let expect =
+                a.parse::<i64>().unwrap() + b.parse::<i64>().unwrap() - c.parse::<i64>().unwrap();
+            assert_eq!(ex.answer.parse::<i64>().unwrap(), expect);
+            assert!(expect >= 0);
+        }
+    }
+
+    #[test]
+    fn datasets_deterministic_and_split_disjoint() {
+        let d1 = Task::SGsm.dataset(50, 7, 0);
+        let d2 = Task::SGsm.dataset(50, 7, 0);
+        assert_eq!(
+            d1.iter().map(|e| &e.prompt).collect::<Vec<_>>(),
+            d2.iter().map(|e| &e.prompt).collect::<Vec<_>>()
+        );
+        let test = Task::SGsm.dataset(50, 7, 1);
+        let train_prompts: Vec<_> = d1.iter().map(|e| e.prompt.clone()).collect();
+        let overlap = test.iter().filter(|e| train_prompts.contains(&e.prompt)).count();
+        assert!(overlap < 25, "splits should differ: overlap={overlap}");
+    }
+
+    #[test]
+    fn mixtures_have_both_kinds() {
+        let m = mixed_dataset(50, 20, 9);
+        assert_eq!(m.len(), 70);
+        assert!(m.iter().any(|e| e.is_mcq()));
+        assert!(m.iter().any(|e| !e.is_mcq()));
+    }
+
+    #[test]
+    fn mcq_correctness_spotcheck() {
+        let mut rng = Rng::new(4);
+        for _ in 0..50 {
+            let ex = Task::CParity.example(&mut rng);
+            let n: i64 = ex
+                .prompt
+                .trim_start_matches("is ")
+                .trim_end_matches(" even?")
+                .parse()
+                .unwrap();
+            assert_eq!(ex.answer == "yes", n % 2 == 0);
+
+            let ex = Task::CBool.example(&mut rng);
+            let p = ex.prompt.trim_end_matches('?');
+            let parts: Vec<&str> = p.split_whitespace().collect();
+            let a = parts[0] == "true";
+            let b = parts[2] == "true";
+            let expect = if parts[1] == "and" { a && b } else { a || b };
+            assert_eq!(ex.answer == "true", expect);
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Byte-level tokenizer with special tokens.
+//!
+//! Ids: 0 = PAD, 1 = BOS, 2 = EOS, 3 = SEP, byte `b` → `4 + b`
+//! (vocab = 260, matching `model.py::Config.vocab`).
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const BYTE_OFFSET: i32 = 4;
+pub const VOCAB: usize = 260;
+
+pub fn encode(text: &str) -> Vec<i32> {
+    text.bytes().map(|b| b as i32 + BYTE_OFFSET).collect()
+}
+
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| t >= BYTE_OFFSET && t < VOCAB as i32)
+        .map(|&t| (t - BYTE_OFFSET) as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+/// Textual answer delimiter. Examples are encoded as
+/// `[BOS] prompt " A: " answer [EOS]` — the SAME surface format the
+/// pretraining mixture uses for its task lines, so fine-tuning only has to
+/// adapt the answer distribution, not learn a new separator token (exactly
+/// the situation of a real pretrained LLM).
+pub const ANSWER_DELIM: &str = " A: ";
+
+/// Encode one supervised example, returning (tokens, answer_start) where
+/// `answer_start` indexes the first answer token (loss masks cover
+/// `answer_start..len`).
+pub fn encode_example(prompt: &str, answer: &str) -> (Vec<i32>, usize) {
+    let mut toks = vec![BOS];
+    toks.extend(encode(prompt));
+    toks.extend(encode(ANSWER_DELIM));
+    let answer_start = toks.len();
+    toks.extend(encode(answer));
+    toks.push(EOS);
+    (toks, answer_start)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "Q: 17+25=? A: 42";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_all_bytes() {
+        let bytes: Vec<u8> = (0u8..=255).collect();
+        let toks: Vec<i32> = bytes.iter().map(|&b| b as i32 + BYTE_OFFSET).collect();
+        let decoded = decode(&toks);
+        assert_eq!(decoded.as_bytes().len() > 0, true);
+        // Tokens are all in range.
+        assert!(toks.iter().all(|&t| t >= 4 && t < VOCAB as i32));
+    }
+
+    #[test]
+    fn specials_are_reserved() {
+        let toks = encode("anything");
+        assert!(toks.iter().all(|&t| t >= BYTE_OFFSET));
+    }
+
+    #[test]
+    fn example_layout() {
+        let (toks, astart) = encode_example("1+1=?", "2");
+        assert_eq!(toks[0], BOS);
+        assert_eq!(*toks.last().unwrap(), EOS);
+        assert_eq!(decode(&toks[..astart]), format!("1+1=?{ANSWER_DELIM}"));
+        assert_eq!(decode(&toks[astart..toks.len() - 1]), "2");
+    }
+}

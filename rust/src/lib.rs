@@ -1,0 +1,28 @@
+//! # CLoQ — Calibrated LoRA Initialization for Quantized LLMs
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of
+//! *"CLoQ: Enhancing Fine-Tuning of Quantized LLMs via Calibrated LoRA
+//! Initialization"* (Deng et al., 2025).
+//!
+//! Layer map (see `DESIGN.md`):
+//! * **L3 (this crate)** — coordinator + full numerics: calibration,
+//!   MagR+OPTQ post-training quantization, the Theorem-3.1 closed-form LoRA
+//!   initialization, every baseline (RTN/NF4/QLoRA/GPTQ-LoRA/LoftQ), the
+//!   fine-tuning trainer, evaluation, and the table/figure bench harness.
+//! * **L2 (`python/compile/model.py`)** — the TinyGPT compute graphs,
+//!   AOT-lowered once to HLO text under `artifacts/`.
+//! * **L1 (`python/compile/kernels/`)** — Pallas fused dequant-matmul +
+//!   LoRA kernel (interpret mode), verified against a pure-jnp oracle.
+//!
+//! The `runtime` module loads the artifacts via the PJRT C API (`xla` crate)
+//! so Python is never on the run path.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod lowrank;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,234 @@
+//! Dense kernels: blocked GEMM, GEMV, SYRK.
+//!
+//! These are the L3 hot loops (OPTQ is O(m²n) per layer; CLoQ's R·ΔW is a
+//! full GEMM). The GEMM uses i-k-j loop order over a packed row-major layout
+//! so the inner loop is a contiguous fused multiply-add over the output row —
+//! the standard cache-friendly form for row-major storage — plus k-blocking
+//! to keep the B panel resident in L1/L2.
+
+use super::matrix::Matrix;
+
+/// C = A · B.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul inner dim {} vs {}", a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    // k-blocking: keep a KB×n slab of B hot.
+    const KB: usize = 64;
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let aik = arow[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                // Contiguous FMA over the output row; unrolled by 4 to help
+                // the scalar backend (1-core sandbox, no explicit SIMD).
+                let mut j = 0;
+                while j + 4 <= n {
+                    crow[j] += aik * brow[j];
+                    crow[j + 1] += aik * brow[j + 1];
+                    crow[j + 2] += aik * brow[j + 2];
+                    crow[j + 3] += aik * brow[j + 3];
+                    j += 4;
+                }
+                while j < n {
+                    crow[j] += aik * brow[j];
+                    j += 1;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = Aᵀ · B without materializing Aᵀ.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_tn inner dim");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for kk in 0..k {
+        let arow = &a.data[kk * m..(kk + 1) * m];
+        let brow = &b.data[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let aik = arow[i];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A · Bᵀ without materializing Bᵀ (inner loops are two contiguous rows).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner dim");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            c.data[i * n + j] = dot(arow, brow);
+        }
+    }
+    c
+}
+
+/// Gram matrix H = Aᵀ · A (symmetric rank-k update; only computes the upper
+/// triangle then mirrors). This is the calibration hot path when activations
+/// are accumulated Rust-side.
+pub fn syrk_t(a: &Matrix) -> Matrix {
+    let (k, n) = (a.rows, a.cols);
+    let mut h = Matrix::zeros(n, n);
+    for kk in 0..k {
+        let row = &a.data[kk * n..(kk + 1) * n];
+        for i in 0..n {
+            let ri = row[i];
+            if ri == 0.0 {
+                continue;
+            }
+            let hrow = &mut h.data[i * n..(i + 1) * n];
+            for j in i..n {
+                hrow[j] += ri * row[j];
+            }
+        }
+    }
+    // Mirror upper → lower.
+    for i in 0..n {
+        for j in 0..i {
+            h.data[i * n + j] = h.data[j * n + i];
+        }
+    }
+    h
+}
+
+/// y = A · x.
+pub fn matvec(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// y = Aᵀ · x.
+pub fn matvec_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, x.len());
+    let mut y = vec![0.0; a.cols];
+    for i in 0..a.rows {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        for (yj, aij) in y.iter_mut().zip(a.row(i)) {
+            *yj += xi * aij;
+        }
+    }
+    y
+}
+
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulators: better ILP and slightly better numerics.
+    let mut s0 = 0.0;
+    let mut s1 = 0.0;
+    let mut s2 = 0.0;
+    let mut s3 = 0.0;
+    let n4 = a.len() / 4 * 4;
+    let mut i = 0;
+    while i < n4 {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    while i < a.len() {
+        s += a[i] * b[i];
+        i += 1;
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.at(i, k) * b.at(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 128, 32)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let c = matmul(&a, &b);
+            assert!(c.max_diff(&naive_matmul(&a, &b)) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn transposed_variants_match() {
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(20, 12, 1.0, &mut rng);
+        let b = Matrix::randn(20, 15, 1.0, &mut rng);
+        assert!(matmul_tn(&a, &b).max_diff(&matmul(&a.transpose(), &b)) < 1e-10);
+        let b2 = Matrix::randn(9, 12, 1.0, &mut rng);
+        assert!(matmul_nt(&a, &b2).max_diff(&matmul(&a, &b2.transpose())) < 1e-10);
+    }
+
+    #[test]
+    fn syrk_is_gram() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(40, 16, 1.0, &mut rng);
+        let h = syrk_t(&a);
+        assert!(h.max_diff(&matmul(&a.transpose(), &a)) < 1e-9);
+        // Symmetry.
+        assert!(h.max_diff(&h.transpose()) < 1e-12);
+    }
+
+    #[test]
+    fn matvec_variants() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(8, 5, 1.0, &mut rng);
+        let x5 = rng.gauss_vec(5);
+        let x8 = rng.gauss_vec(8);
+        let y = matvec(&a, &x5);
+        let ynaive: Vec<f64> = (0..8).map(|i| dot(a.row(i), &x5)).collect();
+        assert_eq!(y, ynaive);
+        let yt = matvec_t(&a, &x8);
+        let ytn = matvec(&a.transpose(), &x8);
+        for (u, v) in yt.iter().zip(&ytn) {
+            assert!((u - v).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(7);
+        let a = Matrix::randn(10, 10, 1.0, &mut rng);
+        assert!(matmul(&a, &Matrix::eye(10)).max_diff(&a) < 1e-12);
+        assert!(matmul(&Matrix::eye(10), &a).max_diff(&a) < 1e-12);
+    }
+}

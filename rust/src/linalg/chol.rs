@@ -1,0 +1,183 @@
+//! Cholesky factorization of symmetric positive-definite matrices.
+//!
+//! OPTQ needs the Cholesky of the (damped) inverse Hessian; the SPD solve is
+//! also the workhorse behind `R⁻¹·` products in the CLoQ closed form when we
+//! prefer a solve over an explicit inverse.
+
+use super::matrix::Matrix;
+
+/// Lower-triangular L with A = L·Lᵀ. Errors if A is not SPD.
+pub fn cholesky(a: &Matrix) -> anyhow::Result<Matrix> {
+    assert_eq!(a.rows, a.cols, "cholesky needs square");
+    let n = a.rows;
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            // s = A[i][j] - sum_k L[i][k] L[j][k]
+            let mut s = a.at(i, j);
+            let (li, lj) = (&l.data[i * n..i * n + j], &l.data[j * n..j * n + j]);
+            for (x, y) in li.iter().zip(lj) {
+                s -= x * y;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    anyhow::bail!("cholesky: matrix not positive definite at pivot {i} (s={s:.3e})");
+                }
+                l.data[i * n + i] = s.sqrt();
+            } else {
+                l.data[i * n + j] = s / l.data[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Cholesky with automatic diagonal damping on failure: retries with
+/// λ = percent·mean(diag) escalating ×10 until it succeeds.
+/// Returns (L, λ_used). Mirrors the paper's `λ = 0.01·Tr(H)/m` convention.
+pub fn cholesky_damped(a: &Matrix, initial_percent: f64) -> (Matrix, f64) {
+    let n = a.rows;
+    let mean_diag = a.trace() / n as f64;
+    let mut lambda = 0.0;
+    // First try undamped, then escalate.
+    loop {
+        let mut damped = a.clone();
+        damped.add_diag(lambda);
+        match cholesky(&damped) {
+            Ok(l) => return (l, lambda),
+            Err(_) => {
+                lambda = if lambda == 0.0 {
+                    initial_percent * mean_diag.max(1e-12)
+                } else {
+                    lambda * 10.0
+                };
+                assert!(
+                    lambda < 1e12 * mean_diag.max(1.0),
+                    "cholesky_damped failed to converge"
+                );
+            }
+        }
+    }
+}
+
+/// Solve L·y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        let row = &l.data[i * n..i * n + i];
+        for (lk, yk) in row.iter().zip(&y[..i]) {
+            s -= lk * yk;
+        }
+        y[i] = s / l.at(i, i);
+    }
+    y
+}
+
+/// Solve Lᵀ·x = y (back substitution), L lower-triangular.
+pub fn solve_lower_t(l: &Matrix, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    assert_eq!(y.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l.at(k, i) * x[k];
+        }
+        x[i] = s / l.at(i, i);
+    }
+    x
+}
+
+/// Solve A·x = b for SPD A via Cholesky.
+pub fn solve_spd(a: &Matrix, b: &[f64]) -> anyhow::Result<Vec<f64>> {
+    let l = cholesky(a)?;
+    Ok(solve_lower_t(&l, &solve_lower(&l, b)))
+}
+
+/// Inverse of SPD A via Cholesky (column-by-column solves).
+pub fn inv_spd(a: &Matrix) -> anyhow::Result<Matrix> {
+    let n = a.rows;
+    let l = cholesky(a)?;
+    let mut inv = Matrix::zeros(n, n);
+    let mut e = vec![0.0; n];
+    for j in 0..n {
+        e[j] = 1.0;
+        let col = solve_lower_t(&l, &solve_lower(&l, &e));
+        inv.set_col(j, &col);
+        e[j] = 0.0;
+    }
+    Ok(inv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{matmul, matmul_nt, syrk_t};
+    use crate::util::prng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+        let x = Matrix::randn(n + 8, n, 1.0, rng);
+        let mut h = syrk_t(&x);
+        h.add_diag(0.1);
+        h
+    }
+
+    #[test]
+    fn reconstructs() {
+        let mut rng = Rng::new(8);
+        for &n in &[1, 2, 5, 17, 48] {
+            let a = random_spd(n, &mut rng);
+            let l = cholesky(&a).unwrap();
+            let llt = matmul_nt(&l, &l);
+            assert!(a.max_diff(&llt) < 1e-8, "n={n}");
+            // L is lower triangular.
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(l.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn damped_recovers_singular() {
+        // Rank-1 PSD matrix: plain cholesky fails, damped succeeds.
+        let v = Matrix::from_vec(1, 4, vec![1.0, 2.0, 3.0, 4.0]);
+        let a = syrk_t(&v);
+        assert!(cholesky(&a).is_err());
+        let (l, lambda) = cholesky_damped(&a, 0.01);
+        assert!(lambda > 0.0);
+        let mut target = a.clone();
+        target.add_diag(lambda);
+        assert!(target.max_diff(&matmul_nt(&l, &l)) < 1e-8);
+    }
+
+    #[test]
+    fn solve_spd_matches_direct() {
+        let mut rng = Rng::new(9);
+        let a = random_spd(12, &mut rng);
+        let x_true = rng.gauss_vec(12);
+        let b = crate::linalg::blas::matvec(&a, &x_true);
+        let x = solve_spd(&a, &b).unwrap();
+        for (u, v) in x.iter().zip(&x_true) {
+            assert!((u - v).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let mut rng = Rng::new(10);
+        let a = random_spd(10, &mut rng);
+        let inv = inv_spd(&a).unwrap();
+        assert!(matmul(&a, &inv).max_diff(&Matrix::eye(10)) < 1e-7);
+    }
+}

@@ -1,0 +1,178 @@
+//! Symmetric eigendecomposition via the cyclic Jacobi method.
+//!
+//! CLoQ needs the SVD of the Gram matrix `H = XᵀX` (symmetric PSD), i.e. its
+//! eigendecomposition `H = U_H Σ_H U_Hᵀ`. Jacobi is simple, numerically
+//! excellent for the moderate sizes a layer's input dimension takes here
+//! (≤ ~1024), and embarrassingly verifiable.
+
+use super::matrix::Matrix;
+
+/// Result of `sym_eig`: eigenvalues in descending order, with matching
+/// eigenvector columns (`vectors.col(i)` ↔ `values[i]`).
+pub struct SymEig {
+    pub values: Vec<f64>,
+    /// n×n orthogonal matrix; column i is the i-th eigenvector.
+    pub vectors: Matrix,
+}
+
+/// Cyclic Jacobi with threshold sweeps. `a` must be symmetric.
+pub fn sym_eig(a: &Matrix) -> SymEig {
+    assert_eq!(a.rows, a.cols, "sym_eig needs square");
+    let n = a.rows;
+    let mut m = a.clone();
+    let mut v = Matrix::eye(n);
+    if n <= 1 {
+        return sorted(m.diag_vec(), v);
+    }
+
+    // Convergence scale: off(A) relative to ||A||_F.
+    let fro: f64 = a.data.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let tol = 1e-14 * fro.max(1e-300);
+    const MAX_SWEEPS: usize = 60;
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut off = 0.0f64;
+        for p in 0..n - 1 {
+            for q in p + 1..n {
+                off = off.max(m.at(p, q).abs());
+            }
+        }
+        if off <= tol {
+            break;
+        }
+        for p in 0..n - 1 {
+            for q in p + 1..n {
+                let apq = m.at(p, q);
+                if apq.abs() <= tol * 1e-2 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                // Stable rotation computation (Golub & Van Loan §8.5).
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // Update rows/cols p and q of m: m ← Jᵀ m J.
+                for k in 0..n {
+                    let mkp = m.at(k, p);
+                    let mkq = m.at(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.at(p, k);
+                    let mqk = m.at(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                // Accumulate eigenvectors: v ← v J.
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    sorted(m.diag_vec(), v)
+}
+
+fn sorted(values: Vec<f64>, vectors: Matrix) -> SymEig {
+    let n = values.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| values[j].partial_cmp(&values[i]).unwrap());
+    let sorted_vals: Vec<f64> = order.iter().map(|&i| values[i]).collect();
+    let mut sorted_vecs = Matrix::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..n {
+            sorted_vecs.set(i, new_j, vectors.at(i, old_j));
+        }
+    }
+    SymEig { values: sorted_vals, vectors: sorted_vecs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::{matmul, matmul_nt, syrk_t};
+    use crate::util::prng::Rng;
+
+    fn check_decomposition(a: &Matrix, e: &SymEig, tol: f64) {
+        let n = a.rows;
+        // A·V = V·Λ
+        let av = matmul(a, &e.vectors);
+        let vl = matmul(&e.vectors, &Matrix::diag(&e.values));
+        assert!(av.max_diff(&vl) < tol, "A·V != V·Λ: {}", av.max_diff(&vl));
+        // Vᵀ·V = I
+        let vtv = matmul(&e.vectors.transpose(), &e.vectors);
+        assert!(vtv.max_diff(&Matrix::eye(n)) < tol);
+        // Descending order
+        for w in e.values.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::diag(&[3.0, 1.0, 2.0]);
+        let e = sym_eig(&a);
+        assert_eq!(e.values, vec![3.0, 2.0, 1.0]);
+        check_decomposition(&a, &e, 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]);
+        let e = sym_eig(&a);
+        assert!((e.values[0] - 3.0).abs() < 1e-12);
+        assert!((e.values[1] - 1.0).abs() < 1e-12);
+        check_decomposition(&a, &e, 1e-12);
+    }
+
+    #[test]
+    fn random_gram_matrices() {
+        let mut rng = Rng::new(11);
+        for &n in &[2, 7, 24, 64] {
+            let x = Matrix::randn(n + 16, n, 1.0, &mut rng);
+            let h = syrk_t(&x);
+            let e = sym_eig(&h);
+            check_decomposition(&h, &e, 1e-7 * (n as f64));
+            // PSD: all eigenvalues >= -eps.
+            assert!(e.values.iter().all(|&l| l > -1e-8));
+            // trace preserved
+            let tr: f64 = e.values.iter().sum();
+            assert!((tr - h.trace()).abs() < 1e-7 * h.trace().abs().max(1.0));
+        }
+    }
+
+    #[test]
+    fn rank_deficient_gram() {
+        // 5-dim features from 3 samples → rank ≤ 3.
+        let mut rng = Rng::new(12);
+        let x = Matrix::randn(3, 5, 1.0, &mut rng);
+        let h = syrk_t(&x);
+        let e = sym_eig(&h);
+        check_decomposition(&h, &e, 1e-8);
+        assert!(e.values[3].abs() < 1e-9);
+        assert!(e.values[4].abs() < 1e-9);
+    }
+
+    #[test]
+    fn reconstruction() {
+        let mut rng = Rng::new(13);
+        let x = Matrix::randn(40, 20, 1.0, &mut rng);
+        let h = syrk_t(&x);
+        let e = sym_eig(&h);
+        // H = V Λ Vᵀ
+        let rec = matmul_nt(&matmul(&e.vectors, &Matrix::diag(&e.values)), &e.vectors);
+        assert!(h.max_diff(&rec) < 1e-7);
+    }
+}

@@ -1,0 +1,306 @@
+//! Dense row-major `f64` matrix — the storage type for all calibration and
+//! initialization math (CLoQ/OPTQ run in f64; model execution runs in f32 on
+//! the PJRT side).
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(6);
+        let cmax = self.cols.min(8);
+        for i in 0..rmax {
+            write!(f, "  ")?;
+            for j in 0..cmax {
+                write!(f, "{:>10.4} ", self.at(i, j))?;
+            }
+            writeln!(f, "{}", if cmax < self.cols { "…" } else { "" })?;
+        }
+        if rmax < self.rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Matrix {
+    // ---- constructors ----
+
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Matrix {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "from_vec shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Matrix {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, std²) entries.
+    pub fn randn(rows: usize, cols: usize, std: f64, rng: &mut Rng) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.normal(0.0, std)).collect(),
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f64, hi: f64, rng: &mut Rng) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: (0..rows * cols).map(|_| rng.range_f64(lo, hi)).collect(),
+        }
+    }
+
+    pub fn diag(d: &[f64]) -> Matrix {
+        let n = d.len();
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = d[i];
+        }
+        m
+    }
+
+    // ---- element access ----
+
+    #[inline(always)]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline(always)]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.at(i, j)).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self.set(i, j, v[i]);
+        }
+    }
+
+    pub fn diag_vec(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self.at(i, i)).collect()
+    }
+
+    pub fn trace(&self) -> f64 {
+        self.diag_vec().iter().sum()
+    }
+
+    // ---- shape ops ----
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on larger matrices.
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Copy of the leading `r` columns.
+    pub fn cols_front(&self, r: usize) -> Matrix {
+        assert!(r <= self.cols);
+        Matrix::from_fn(self.rows, r, |i, j| self.at(i, j))
+    }
+
+    /// Copy of a row range [r0, r1).
+    pub fn rows_range(&self, r0: usize, r1: usize) -> Matrix {
+        assert!(r0 <= r1 && r1 <= self.rows);
+        Matrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// Stack `other` below `self`.
+    pub fn vstack(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols);
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Matrix { rows: self.rows + other.rows, cols: self.cols, data }
+    }
+
+    // ---- elementwise ----
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f64) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|a| a * s).collect(),
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Add `v` to the diagonal in place (the paper's λ-damping of H).
+    pub fn add_diag(&mut self, v: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self.data[i * self.cols + i] += v;
+        }
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    // ---- conversions ----
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Matrix {
+        assert_eq!(data.len(), rows * cols);
+        Matrix {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    /// Max |a-b| against another matrix — used everywhere in tests.
+    pub fn max_diff(&self, other: &Matrix) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f64, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_access() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m.at(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+        assert_eq!(Matrix::eye(3).trace(), 3.0);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(7, 13, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().at(5, 3), m.at(3, 5));
+    }
+
+    #[test]
+    fn elementwise_algebra() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(a.add(&b).sub(&b), a);
+        assert_eq!(a.scale(2.0).at(1, 1), 8.0);
+        let mut c = a.clone();
+        c.add_diag(10.0);
+        assert_eq!(c.at(0, 0), 11.0);
+        assert_eq!(c.at(0, 1), 2.0);
+    }
+
+    #[test]
+    fn slicing() {
+        let m = Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f64);
+        let top = m.rows_range(0, 2);
+        assert_eq!(top.rows, 2);
+        assert_eq!(top.at(1, 2), 5.0);
+        let front = m.cols_front(2);
+        assert_eq!(front.cols, 2);
+        assert_eq!(front.at(3, 1), 10.0);
+        let st = top.vstack(&m.rows_range(2, 4));
+        assert_eq!(st, m);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let mut rng = Rng::new(2);
+        let m = Matrix::randn(5, 5, 1.0, &mut rng);
+        let back = Matrix::from_f32(5, 5, &m.to_f32());
+        assert!(m.max_diff(&back) < 1e-6);
+    }
+}

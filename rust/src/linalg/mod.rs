@@ -1,0 +1,19 @@
+//! Dense linear-algebra substrate built from scratch (DESIGN.md §4).
+//!
+//! Everything CLoQ's closed form needs: blocked GEMM, Cholesky, symmetric
+//! Jacobi eigendecomposition (for `H = U_H Σ_H U_Hᵀ`), one-sided Jacobi SVD
+//! (for `LR_r(R·ΔW)`), pseudo-inverse, and the Frobenius/spectral norms the
+//! paper's Fig. 2 plots.
+
+pub mod blas;
+pub mod chol;
+pub mod eig;
+pub mod matrix;
+pub mod norms;
+pub mod qr;
+pub mod rsvd;
+pub mod svd;
+
+pub use blas::{dot, matmul, matmul_nt, matmul_tn, matvec, matvec_t, syrk_t};
+pub use matrix::Matrix;
+pub use svd::{best_rank_r, pinv, svd, Svd};

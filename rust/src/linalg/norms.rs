@@ -1,0 +1,139 @@
+//! Matrix norms: Frobenius, spectral (power iteration), and the calibrated
+//! layer-discrepancy norms used by Fig. 2.
+
+use super::blas::{matvec, matvec_t};
+use super::matrix::Matrix;
+
+/// ‖A‖_F.
+pub fn fro(a: &Matrix) -> f64 {
+    a.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// ‖A‖_F².
+pub fn fro2(a: &Matrix) -> f64 {
+    a.data.iter().map(|x| x * x).sum::<f64>()
+}
+
+/// Spectral norm ‖A‖₂ = σ_max via power iteration on AᵀA.
+/// Deterministic start vector; converges geometrically with ratio
+/// (σ₂/σ₁)² — we run to a tight relative tolerance with an iteration cap.
+pub fn spectral(a: &Matrix) -> f64 {
+    let n = a.cols;
+    if n == 0 || a.rows == 0 {
+        return 0.0;
+    }
+    // Deterministic pseudo-random start to avoid orthogonal-start stalls.
+    let mut v: Vec<f64> = (0..n)
+        .map(|i| ((i as f64 * 12.9898).sin() * 43758.5453).fract() + 0.01)
+        .collect();
+    normalize(&mut v);
+    let mut sigma = 0.0f64;
+    for _ in 0..300 {
+        // w = Aᵀ(Av)
+        let av = matvec(a, &v);
+        let mut w = matvec_t(a, &av);
+        let norm = normalize(&mut w);
+        let new_sigma = norm.sqrt();
+        let done = (new_sigma - sigma).abs() <= 1e-12 * new_sigma.max(1e-300);
+        sigma = new_sigma;
+        v = w;
+        if done {
+            break;
+        }
+    }
+    sigma
+}
+
+fn normalize(v: &mut [f64]) -> f64 {
+    let n = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if n > 0.0 {
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+    }
+    n
+}
+
+/// Calibrated discrepancy `‖X·E‖` where `E = Q + A·Bᵀ − W` — both norms the
+/// paper plots in Fig. 2. Computed through the Gram matrix when only
+/// `H = XᵀX` is available: ‖X·E‖_F² = Tr(Eᵀ H E); the spectral version uses
+/// the non-symmetric root `R` with ‖X·E‖₂ = ‖R·E‖₂ (same singular values).
+pub struct Discrepancy {
+    pub frobenius: f64,
+    pub spectral: f64,
+}
+
+/// Discrepancy via an explicit root R of H (so ‖X E‖ = ‖R E‖ exactly in
+/// both norms). `re = R·E` should be precomputed by the caller.
+pub fn discrepancy_from_re(re: &Matrix) -> Discrepancy {
+    Discrepancy { frobenius: fro(re), spectral: spectral(re) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::matmul;
+    use crate::linalg::svd::svd;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn fro_matches_definition() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 0.0]);
+        assert!((fro(&a) - 5.0).abs() < 1e-12);
+        assert!((fro2(&a) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spectral_matches_svd() {
+        let mut rng = Rng::new(20);
+        for &(m, n) in &[(5, 5), (12, 8), (8, 12), (30, 30)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let s_pi = spectral(&a);
+            let s_svd = svd(&a).s[0];
+            assert!(
+                (s_pi - s_svd).abs() < 1e-6 * s_svd,
+                "power-iter {s_pi} vs svd {s_svd}"
+            );
+        }
+    }
+
+    #[test]
+    fn spectral_of_rank_one() {
+        // uvᵀ has spectral norm |u||v|.
+        let u = [1.0, 2.0, 2.0]; // norm 3
+        let v = [3.0, 4.0]; // norm 5
+        let a = Matrix::from_fn(3, 2, |i, j| u[i] * v[j]);
+        assert!((spectral(&a) - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn norm_inequalities() {
+        let mut rng = Rng::new(21);
+        let a = Matrix::randn(10, 6, 1.0, &mut rng);
+        let s = spectral(&a);
+        let f = fro(&a);
+        assert!(s <= f + 1e-9);
+        assert!(f <= s * (6f64).sqrt() + 1e-9);
+    }
+
+    #[test]
+    fn discrepancy_via_root_equals_direct() {
+        let mut rng = Rng::new(22);
+        // X: 40×8, E: 8×5. Direct ‖XE‖ vs via R = Σ^{1/2}Uᵀ of H = XᵀX.
+        let x = Matrix::randn(40, 8, 1.0, &mut rng);
+        let e = Matrix::randn(8, 5, 1.0, &mut rng);
+        let xe = matmul(&x, &e);
+        let direct = Discrepancy { frobenius: fro(&xe), spectral: spectral(&xe) };
+
+        let h = crate::linalg::blas::syrk_t(&x);
+        let eg = crate::linalg::eig::sym_eig(&h);
+        let sqrt_vals: Vec<f64> = eg.values.iter().map(|&l| l.max(0.0).sqrt()).collect();
+        // R = Σ^{1/2} Uᵀ (rows scaled).
+        let ut = eg.vectors.transpose();
+        let r = Matrix::from_fn(8, 8, |i, j| sqrt_vals[i] * ut.at(i, j));
+        let re = matmul(&r, &e);
+        let via_root = discrepancy_from_re(&re);
+        assert!((direct.frobenius - via_root.frobenius).abs() < 1e-8 * direct.frobenius);
+        assert!((direct.spectral - via_root.spectral).abs() < 1e-6 * direct.spectral);
+    }
+}

@@ -1,0 +1,120 @@
+//! Householder QR decomposition.
+//!
+//! Used for orthonormal basis generation (random orthogonal test fixtures,
+//! subspace comparisons) and as an independent cross-check of the SVD in the
+//! property-test suite.
+
+use super::matrix::Matrix;
+
+pub struct Qr {
+    /// m×n with orthonormal columns (thin Q).
+    pub q: Matrix,
+    /// n×n upper triangular.
+    pub r: Matrix,
+}
+
+/// Thin QR for m ≥ n via Householder reflections.
+pub fn qr(a: &Matrix) -> Qr {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "qr expects tall/square input");
+    let mut r = a.clone();
+    // Store the reflectors to build thin Q afterwards.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Householder vector for column k below the diagonal.
+        let mut v: Vec<f64> = (k..m).map(|i| r.at(i, k)).collect();
+        let alpha = -v[0].signum() * v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if alpha.abs() < 1e-300 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // Apply H = I − 2vvᵀ/‖v‖² to R[k.., k..].
+        for j in k..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * r.at(i, j);
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                *r.at_mut(i, j) -= f * v[i - k];
+            }
+        }
+        vs.push(v);
+    }
+
+    // Build thin Q by applying reflectors to the first n identity columns,
+    // in reverse order.
+    let mut q = Matrix::from_fn(m, n, |i, j| if i == j { 1.0 } else { 0.0 });
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i - k] * q.at(i, j);
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                *q.at_mut(i, j) -= f * v[i - k];
+            }
+        }
+    }
+
+    // Zero the strictly-lower part of R (numerically it already is).
+    let mut r_thin = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            r_thin.set(i, j, r.at(i, j));
+        }
+    }
+    Qr { q, r: r_thin }
+}
+
+/// Random matrix with orthonormal columns (Haar-ish via QR of a Gaussian).
+pub fn random_orthonormal(m: usize, n: usize, rng: &mut crate::util::prng::Rng) -> Matrix {
+    let g = Matrix::randn(m, n, 1.0, rng);
+    qr(&g).q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::matmul;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn qr_reconstructs_and_q_orthonormal() {
+        let mut rng = Rng::new(23);
+        for &(m, n) in &[(4, 4), (10, 6), (50, 12), (3, 1)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let d = qr(&a);
+            assert!(a.max_diff(&matmul(&d.q, &d.r)) < 1e-9, "({m},{n})");
+            let qtq = matmul(&d.q.transpose(), &d.q);
+            assert!(qtq.max_diff(&Matrix::eye(n)) < 1e-9);
+            // R upper triangular.
+            for i in 0..n {
+                for j in 0..i {
+                    assert_eq!(d.r.at(i, j), 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_orthonormal_is_orthonormal() {
+        let mut rng = Rng::new(24);
+        let q = random_orthonormal(20, 7, &mut rng);
+        let qtq = matmul(&q.transpose(), &q);
+        assert!(qtq.max_diff(&Matrix::eye(7)) < 1e-10);
+    }
+}

@@ -1,0 +1,291 @@
+//! Singular value decomposition via one-sided Jacobi, plus the Eckart–Young
+//! best rank-r approximation used throughout CLoQ/LoftQ.
+//!
+//! One-sided Jacobi orthogonalizes the columns of A by plane rotations
+//! (applied on the right); on convergence the column norms are the singular
+//! values, the normalized columns form U, and the accumulated rotations form
+//! V. It is slower than bidiagonalization+QR asymptotically but extremely
+//! robust and accurate — the right trade-off for layer-sized matrices.
+
+use super::matrix::Matrix;
+
+pub struct Svd {
+    /// m×k with orthonormal columns (k = min(m, n)).
+    pub u: Matrix,
+    /// Singular values, descending.
+    pub s: Vec<f64>,
+    /// n×k with orthonormal columns.
+    pub v: Matrix,
+}
+
+impl Svd {
+    /// Reconstruct U·diag(s)·Vᵀ (for tests / truncation).
+    pub fn reconstruct(&self) -> Matrix {
+        let us = scale_cols(&self.u, &self.s);
+        super::blas::matmul_nt(&us, &self.v)
+    }
+
+    /// Truncate to the top-r components.
+    pub fn truncate(&self, r: usize) -> Svd {
+        let r = r.min(self.s.len());
+        Svd {
+            u: self.u.cols_front(r),
+            s: self.s[..r].to_vec(),
+            v: self.v.cols_front(r),
+        }
+    }
+}
+
+/// Multiply column j of `m` by `s[j]`.
+pub fn scale_cols(m: &Matrix, s: &[f64]) -> Matrix {
+    assert!(s.len() >= m.cols);
+    Matrix::from_fn(m.rows, m.cols, |i, j| m.at(i, j) * s[j])
+}
+
+/// Thin SVD of an arbitrary matrix.
+pub fn svd(a: &Matrix) -> Svd {
+    if a.rows >= a.cols {
+        svd_tall(a)
+    } else {
+        // SVD of Aᵀ then swap factors: A = U S Vᵀ ⇔ Aᵀ = V S Uᵀ.
+        let t = svd_tall(&a.transpose());
+        Svd { u: t.v, s: t.s, v: t.u }
+    }
+}
+
+/// One-sided Jacobi for m ≥ n.
+fn svd_tall(a: &Matrix) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    debug_assert!(m >= n);
+    // Work on columns: store A column-major for contiguous column access.
+    let mut cols: Vec<Vec<f64>> = (0..n).map(|j| a.col(j)).collect();
+    let mut v = Matrix::eye(n);
+
+    let fro2: f64 = a.data.iter().map(|x| x * x).sum::<f64>();
+    let eps = 1e-15;
+    let tol2 = (eps * fro2.sqrt().max(1e-300)).powi(2);
+    const MAX_SWEEPS: usize = 60;
+
+    for _sweep in 0..MAX_SWEEPS {
+        let mut rotated = false;
+        for p in 0..n.saturating_sub(1) {
+            for q in p + 1..n {
+                // Gram entries for the (p,q) column pair.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let (x, y) = (cols[p][i], cols[q][i]);
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                // Converged pair? |a_p·a_q|² ≤ tol²·small → skip.
+                if apq * apq <= eps * eps * app * aqq + tol2 * 1e-30 {
+                    continue;
+                }
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                rotated = true;
+                // Jacobi rotation zeroing the off-diagonal of the 2×2 Gram.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Rotate the column pair.
+                for i in 0..m {
+                    let (x, y) = (cols[p][i], cols[q][i]);
+                    cols[p][i] = c * x - s * y;
+                    cols[q][i] = s * x + c * y;
+                }
+                // Accumulate V.
+                for k in 0..n {
+                    let (x, y) = (v.at(k, p), v.at(k, q));
+                    v.set(k, p, c * x - s * y);
+                    v.set(k, q, s * x + c * y);
+                }
+            }
+        }
+        if !rotated {
+            break;
+        }
+    }
+
+    // Singular values = column norms; U = normalized columns.
+    let mut svals: Vec<f64> = cols
+        .iter()
+        .map(|c| c.iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    // Sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| svals[j].partial_cmp(&svals[i]).unwrap());
+    let mut u = Matrix::zeros(m, n);
+    let mut vs = Matrix::zeros(n, n);
+    let mut s_sorted = Vec::with_capacity(n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let sv = svals[old_j];
+        s_sorted.push(sv);
+        if sv > 1e-300 {
+            for i in 0..m {
+                u.set(i, new_j, cols[old_j][i] / sv);
+            }
+        } else {
+            // Null singular value: leave U column zero (callers using thin
+            // SVD with rank truncation never touch it; pinv skips it).
+        }
+        for i in 0..n {
+            vs.set(i, new_j, v.at(i, old_j));
+        }
+    }
+    svals = s_sorted;
+    Svd { u, s: svals, v: vs }
+}
+
+/// Eckart–Young best rank-r approximation `LR_r(A)` (Frobenius-optimal).
+pub fn best_rank_r(a: &Matrix, r: usize) -> Matrix {
+    let t = svd(a).truncate(r);
+    t.reconstruct()
+}
+
+/// Moore–Penrose pseudo-inverse via SVD, truncating singular values below
+/// `rcond · s_max`.
+pub fn pinv(a: &Matrix, rcond: f64) -> Matrix {
+    let d = svd(a);
+    let smax = d.s.first().copied().unwrap_or(0.0);
+    let cutoff = rcond * smax;
+    let sinv: Vec<f64> = d
+        .s
+        .iter()
+        .map(|&s| if s > cutoff && s > 0.0 { 1.0 / s } else { 0.0 })
+        .collect();
+    // A⁺ = V Σ⁺ Uᵀ
+    let vsi = scale_cols(&d.v, &sinv);
+    super::blas::matmul_nt(&vsi, &d.u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas::matmul;
+    use crate::util::prng::Rng;
+
+    fn check_svd(a: &Matrix, d: &Svd, tol: f64) {
+        let k = a.rows.min(a.cols);
+        assert_eq!(d.s.len(), k);
+        // Reconstruction.
+        assert!(a.max_diff(&d.reconstruct()) < tol, "recon err {}", a.max_diff(&d.reconstruct()));
+        // Orthonormal columns (skip null-space columns of U).
+        let utu = matmul(&d.u.transpose(), &d.u);
+        for i in 0..k {
+            for j in 0..k {
+                let expect = if i == j && d.s[i] > 1e-12 { 1.0 } else if i == j { utu.at(i, j) } else { 0.0 };
+                if d.s[i] > 1e-12 && d.s[j] > 1e-12 {
+                    assert!((utu.at(i, j) - if i == j { 1.0 } else { 0.0 }).abs() < tol, "UᵀU[{i}][{j}]");
+                }
+                let _ = expect;
+            }
+        }
+        let vtv = matmul(&d.v.transpose(), &d.v);
+        assert!(vtv.max_diff(&Matrix::eye(k)) < tol);
+        // Descending non-negative.
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(d.s.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn identity_and_diag() {
+        let d = svd(&Matrix::eye(4));
+        assert!(d.s.iter().all(|&s| (s - 1.0).abs() < 1e-12));
+        let a = Matrix::diag(&[3.0, -2.0, 0.5]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-12);
+        assert!((d.s[1] - 2.0).abs() < 1e-12);
+        assert!((d.s[2] - 0.5).abs() < 1e-12);
+        check_svd(&a, &d, 1e-10);
+    }
+
+    #[test]
+    fn random_shapes() {
+        let mut rng = Rng::new(14);
+        for &(m, n) in &[(1, 1), (5, 3), (3, 5), (20, 20), (48, 16), (16, 48), (7, 64)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let d = svd(&a);
+            check_svd(&a, &d, 1e-8 * (m.max(n) as f64));
+        }
+    }
+
+    #[test]
+    fn rank_deficient() {
+        let mut rng = Rng::new(15);
+        // Build an exactly rank-3 10×8 matrix.
+        let b = Matrix::randn(10, 3, 1.0, &mut rng);
+        let c = Matrix::randn(3, 8, 1.0, &mut rng);
+        let a = matmul(&b, &c);
+        let d = svd(&a);
+        check_svd(&a, &d, 1e-8);
+        assert!(d.s[3] < 1e-9, "s={:?}", d.s);
+    }
+
+    #[test]
+    fn best_rank_r_is_frobenius_optimal_vs_random() {
+        let mut rng = Rng::new(16);
+        let a = Matrix::randn(20, 12, 1.0, &mut rng);
+        let r = 4;
+        let lr = best_rank_r(&a, r);
+        let err_opt: f64 = a.sub(&lr).data.iter().map(|x| x * x).sum();
+        // Against 50 random rank-r candidates built as products.
+        for _ in 0..50 {
+            let p = Matrix::randn(20, r, 1.0, &mut rng);
+            let q = Matrix::randn(r, 12, 1.0, &mut rng);
+            let cand = matmul(&p, &q);
+            let err: f64 = a.sub(&cand).data.iter().map(|x| x * x).sum();
+            assert!(err_opt <= err + 1e-9);
+        }
+        // Error equals sum of squared trailing singular values.
+        let d = svd(&a);
+        let tail: f64 = d.s[r..].iter().map(|s| s * s).sum();
+        assert!((err_opt - tail).abs() < 1e-8);
+    }
+
+    #[test]
+    fn pinv_properties() {
+        let mut rng = Rng::new(17);
+        let a = Matrix::randn(9, 5, 1.0, &mut rng);
+        let ap = pinv(&a, 1e-12);
+        // A·A⁺·A = A
+        let aapa = matmul(&matmul(&a, &ap), &a);
+        assert!(a.max_diff(&aapa) < 1e-8);
+        // A⁺·A·A⁺ = A⁺
+        let apaap = matmul(&matmul(&ap, &a), &ap);
+        assert!(ap.max_diff(&apaap) < 1e-8);
+        // For full-column-rank A, A⁺·A = I.
+        assert!(matmul(&ap, &a).max_diff(&Matrix::eye(5)) < 1e-8);
+    }
+
+    #[test]
+    fn pinv_rank_deficient() {
+        let mut rng = Rng::new(18);
+        let b = Matrix::randn(8, 2, 1.0, &mut rng);
+        let c = Matrix::randn(2, 6, 1.0, &mut rng);
+        let a = matmul(&b, &c);
+        let ap = pinv(&a, 1e-10);
+        let aapa = matmul(&matmul(&a, &ap), &a);
+        assert!(a.max_diff(&aapa) < 1e-8);
+    }
+
+    #[test]
+    fn wide_matrix_consistency() {
+        let mut rng = Rng::new(19);
+        let a = Matrix::randn(6, 30, 1.0, &mut rng);
+        let d1 = svd(&a);
+        let d2 = svd(&a.transpose());
+        for (s1, s2) in d1.s.iter().zip(&d2.s) {
+            assert!((s1 - s2).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,393 @@
+//! CLoQ's generalized low-rank approximation (paper §3.1.2, Theorem 3.1).
+//!
+//! Given the (damped) Gram matrix `H = XᵀX + λI` and the quantization
+//! residual `ΔW = W − Q`, find `A ∈ ℝ^{m×r}, B ∈ ℝ^{n×r}` minimizing
+//! `‖X(A·Bᵀ − ΔW)‖_F²` in closed form:
+//!
+//! ```text
+//!   H = U_H Σ_H U_Hᵀ                (one symmetric SVD/eig)
+//!   R = Σ_H^{1/2} U_Hᵀ              (non-symmetric root, H = RᵀR)
+//!   LR_r(R·ΔW) = U_{:r} Σ_{:r} V_{:r}ᵀ    (one more SVD)
+//!   A·Bᵀ = R⁻¹ · LR_r(R·ΔW)
+//! ```
+//!
+//! The factorization of `A·Bᵀ` into `(A, B)` is not unique; the paper's
+//! Table 7 ablates three splits and finds `A = R⁻¹U_{:r}Σ_{:r}`, `B = V_{:r}`
+//! (all energy in A) the best for subsequent fine-tuning — that is our
+//! default [`FactorSplit::AllInA`].
+
+use crate::linalg::eig::sym_eig;
+use crate::linalg::svd::{scale_cols, svd};
+use crate::linalg::{matmul, matmul_nt, Matrix};
+
+/// How to split `A·Bᵀ = R⁻¹·U Σ Vᵀ` into `(A, B)` — the paper's Table 7.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FactorSplit {
+    /// `A = R⁻¹ U Σ, B = V` (paper default; best fine-tuning accuracy).
+    AllInA,
+    /// `A = R⁻¹ U Σ^{1/2}, B = V Σ^{1/2}`.
+    Sqrt,
+    /// `A = R⁻¹ U, B = V Σ` (paper: diverges during fine-tuning).
+    AllInB,
+}
+
+impl FactorSplit {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FactorSplit::AllInA => "(R^-1 U S, V)",
+            FactorSplit::Sqrt => "(R^-1 U S^1/2, V S^1/2)",
+            FactorSplit::AllInB => "(R^-1 U, V S)",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CloqConfig {
+    pub rank: usize,
+    pub split: FactorSplit,
+    /// Relative eigenvalue cutoff below which H directions are treated as
+    /// null (pseudo-inverse branch of the paper's rank-deficient remark).
+    pub rcond: f64,
+    /// Use the randomized truncated SVD for `LR_r(R·ΔW)` (§Perf: ~O(mnr)
+    /// instead of O(min(m,n)²·max(m,n)); exact for the fast-decaying
+    /// residual spectra the pipeline produces). The Gram eig stays exact.
+    pub randomized: bool,
+}
+
+impl Default for CloqConfig {
+    fn default() -> Self {
+        Self { rank: 64, split: FactorSplit::AllInA, rcond: 1e-12, randomized: false }
+    }
+}
+
+/// Result of the closed-form initialization.
+pub struct LowRankInit {
+    /// m×r.
+    pub a: Matrix,
+    /// n×r.
+    pub b: Matrix,
+    /// Optimal objective value `‖X(A·Bᵀ − ΔW)‖_F²` (= Σ_{i>r} σ_i²(R·ΔW)),
+    /// reported for Fig. 2 / diagnostics.
+    pub objective: f64,
+}
+
+impl LowRankInit {
+    /// `A·Bᵀ` (m×n).
+    pub fn ab_t(&self) -> Matrix {
+        matmul_nt(&self.a, &self.b)
+    }
+}
+
+/// Internal: the root `R = Σ^{1/2}Uᵀ` and its pseudo-inverse
+/// `R⁺ = U Σ^{-1/2}`, from the eigendecomposition of `H`.
+pub struct GramRoot {
+    /// m×m, `H = RᵀR`.
+    pub r: Matrix,
+    /// m×m pseudo-inverse (exact inverse when H is full-rank).
+    pub r_pinv: Matrix,
+    /// Rank of H at the configured cutoff.
+    pub rank: usize,
+}
+
+/// Factor `H` (symmetric PSD) into its non-symmetric root.
+pub fn gram_root(h: &Matrix, rcond: f64) -> GramRoot {
+    let m = h.rows;
+    let e = sym_eig(h);
+    let lmax = e.values.first().copied().unwrap_or(0.0).max(0.0);
+    let cutoff = rcond * lmax;
+    let mut rank = 0;
+    let mut sqrt_vals = vec![0.0; m];
+    let mut inv_sqrt_vals = vec![0.0; m];
+    for (i, &l) in e.values.iter().enumerate() {
+        if l > cutoff && l > 0.0 {
+            sqrt_vals[i] = l.sqrt();
+            inv_sqrt_vals[i] = 1.0 / l.sqrt();
+            rank += 1;
+        }
+    }
+    // R = Σ^{1/2} Uᵀ → scale *rows* of Uᵀ ⇔ scale cols of U then transpose.
+    let r = scale_cols(&e.vectors, &sqrt_vals).transpose();
+    // R⁺ = U Σ^{-1/2}.
+    let r_pinv = scale_cols(&e.vectors, &inv_sqrt_vals);
+    GramRoot { r, r_pinv, rank }
+}
+
+/// Algorithm 1, steps 3–6: closed-form optimal (A, B) for
+/// `min ‖X(A·Bᵀ − ΔW)‖_F²` given `H` (already damped by the caller — see
+/// [`damping_lambda`]).
+pub fn cloq_lowrank(h: &Matrix, delta_w: &Matrix, cfg: &CloqConfig) -> LowRankInit {
+    assert_eq!(h.rows, delta_w.rows, "H is m×m over input features");
+    let r = cfg.rank.min(delta_w.rows.min(delta_w.cols));
+
+    // §Perf: Theorem 3.1 holds for ANY invertible root with H = RᵀR — the
+    // proof only uses that identity — and the resulting (A, B) is root-
+    // independent (two roots differ by a left-orthogonal factor Q, which
+    // transports into U of the SVD and cancels through R⁻¹U). The Cholesky
+    // factor (R = Lᵀ) is an order of magnitude cheaper than the Jacobi
+    // eigendecomposition at m ≥ 256 and turns R⁻¹· into triangular solves.
+    // Fall back to the paper's symmetric root via eig when H is not PD
+    // (the rank-deficient / pseudo-inverse remark of §3.1.2).
+    if let Ok(l) = crate::linalg::chol::cholesky(h) {
+        return cloq_lowrank_chol(&l, delta_w, r, cfg);
+    }
+    let root = gram_root(h, cfg.rcond);
+
+    // SVD of R·ΔW, truncated to rank r (randomized sketch on the fast
+    // path — see CloqConfig::randomized).
+    let rdw = matmul(&root.r, delta_w);
+    let (d, objective) = if cfg.randomized {
+        let total = crate::linalg::norms::fro2(&rdw);
+        let mut rng = crate::util::prng::Rng::new(0x5EED_C10A);
+        let d = crate::linalg::rsvd::rsvd(&rdw, r, &Default::default(), &mut rng);
+        let captured: f64 = d.s.iter().map(|s| s * s).sum();
+        (d, (total - captured).max(0.0))
+    } else {
+        let d = svd(&rdw);
+        let objective: f64 = d.s.iter().skip(r).map(|s| s * s).sum();
+        (d.truncate(r), objective)
+    };
+
+    // Split Σ between the factors.
+    let (sa, sb): (Vec<f64>, Vec<f64>) = match cfg.split {
+        FactorSplit::AllInA => (d.s.clone(), vec![1.0; r]),
+        FactorSplit::AllInB => (vec![1.0; r], d.s.clone()),
+        FactorSplit::Sqrt => {
+            let sq: Vec<f64> = d.s.iter().map(|s| s.sqrt()).collect();
+            (sq.clone(), sq)
+        }
+    };
+
+    // A = R⁺ · U_{:r} · diag(sa);  B = V_{:r} · diag(sb).
+    let a = matmul(&root.r_pinv, &scale_cols(&d.u, &sa));
+    let b = scale_cols(&d.v, &sb);
+    LowRankInit { a, b, objective }
+}
+
+/// Fast path: closed form with the Cholesky root `R = Lᵀ` (H = L·Lᵀ PD).
+fn cloq_lowrank_chol(l: &Matrix, delta_w: &Matrix, r: usize, cfg: &CloqConfig) -> LowRankInit {
+    use crate::linalg::chol::solve_lower_t;
+    let m = l.rows;
+    // R·ΔW = Lᵀ·ΔW.
+    let rdw = crate::linalg::matmul_tn(l, delta_w);
+    let (d, objective) = if cfg.randomized {
+        let total = crate::linalg::norms::fro2(&rdw);
+        let mut rng = crate::util::prng::Rng::new(0x5EED_C10A);
+        let d = crate::linalg::rsvd::rsvd(&rdw, r, &Default::default(), &mut rng);
+        let captured: f64 = d.s.iter().map(|s| s * s).sum();
+        (d, (total - captured).max(0.0))
+    } else {
+        let d = svd(&rdw);
+        let objective: f64 = d.s.iter().skip(r).map(|s| s * s).sum();
+        (d.truncate(r), objective)
+    };
+    let (sa, sb): (Vec<f64>, Vec<f64>) = match cfg.split {
+        FactorSplit::AllInA => (d.s.clone(), vec![1.0; r]),
+        FactorSplit::AllInB => (vec![1.0; r], d.s.clone()),
+        FactorSplit::Sqrt => {
+            let sq: Vec<f64> = d.s.iter().map(|s| s.sqrt()).collect();
+            (sq.clone(), sq)
+        }
+    };
+    // A = R⁻¹·(U·diag(sa)) via triangular solves Lᵀ·a_j = (U·sa)_j.
+    let us = scale_cols(&d.u, &sa);
+    let mut a = Matrix::zeros(m, r);
+    for j in 0..r {
+        let col = solve_lower_t(l, &us.col(j));
+        a.set_col(j, &col);
+    }
+    LowRankInit { a, b: scale_cols(&d.v, &sb), objective }
+}
+
+/// The paper's damping rule: `λ = pct · Tr(H)/m` (§3.1.2, default pct 0.01).
+pub fn damping_lambda(h: &Matrix, pct: f64) -> f64 {
+    pct * h.trace() / h.rows as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::fro2;
+    use crate::linalg::syrk_t;
+    use crate::quant::metrics::calibrated_error2;
+    use crate::util::prng::Rng;
+
+    fn setup(m: usize, n: usize, samples: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::randn(samples, m, 1.0, &mut rng);
+        let dw = Matrix::randn(m, n, 0.2, &mut rng);
+        let mut h = syrk_t(&x);
+        let lam = damping_lambda(&h, 0.01);
+        h.add_diag(lam);
+        (x, dw, h)
+    }
+
+    #[test]
+    fn gram_root_squares_to_h() {
+        let (_, _, h) = setup(16, 4, 64, 90);
+        let root = gram_root(&h, 1e-12);
+        let rtr = matmul(&root.r.transpose(), &root.r);
+        assert!(h.max_diff(&rtr) < 1e-8 * h.max_abs());
+        assert_eq!(root.rank, 16);
+        // R⁺ is the true inverse here.
+        let id = matmul(&root.r, &root.r_pinv);
+        assert!(id.max_diff(&Matrix::eye(16)) < 1e-7);
+    }
+
+    #[test]
+    fn theorem_3_1_exact_at_full_rank() {
+        // r = min(m,n) ⇒ A·Bᵀ = ΔW exactly (H invertible).
+        let (_, dw, h) = setup(12, 8, 48, 91);
+        let init = cloq_lowrank(&h, &dw, &CloqConfig { rank: 8, ..Default::default() });
+        assert!(dw.max_diff(&init.ab_t()) < 1e-7);
+        assert!(init.objective < 1e-12);
+    }
+
+    #[test]
+    fn objective_matches_reported_value() {
+        let (_, dw, h) = setup(20, 10, 80, 92);
+        for r in [1usize, 3, 7] {
+            let init = cloq_lowrank(&h, &dw, &CloqConfig { rank: r, ..Default::default() });
+            let resid = init.ab_t().sub(&dw);
+            let direct = calibrated_error2(&h, &resid);
+            assert!(
+                (direct - init.objective).abs() < 1e-7 * init.objective.max(1e-12),
+                "r={r}: direct {direct} vs reported {}",
+                init.objective
+            );
+        }
+    }
+
+    #[test]
+    fn optimality_beats_plain_svd_and_random() {
+        // The paper's key point: LR of ΔW directly (LoftQ-style, no X) is
+        // suboptimal for the calibrated objective.
+        let mut rng = Rng::new(93);
+        // Anisotropic activations make the gap pronounced.
+        let base = Matrix::randn(100, 16, 1.0, &mut rng);
+        let scales: Vec<f64> = (0..16).map(|i| 1.0 / (1.0 + i as f64)).collect();
+        let x = Matrix::from_fn(100, 16, |i, j| base.at(i, j) * scales[j] * 3.0);
+        let dw = Matrix::randn(16, 12, 0.3, &mut rng);
+        let mut h = syrk_t(&x);
+        h.add_diag(damping_lambda(&h, 0.01));
+
+        let r = 4;
+        let cloq = cloq_lowrank(&h, &dw, &CloqConfig { rank: r, ..Default::default() });
+        let e_cloq = calibrated_error2(&h, &cloq.ab_t().sub(&dw));
+
+        // Plain SVD of ΔW (ignores X).
+        let plain = crate::linalg::best_rank_r(&dw, r);
+        let e_plain = calibrated_error2(&h, &plain.sub(&dw));
+        assert!(e_cloq <= e_plain + 1e-9, "cloq {e_cloq} vs plain-svd {e_plain}");
+
+        // Random rank-r candidates.
+        for _ in 0..30 {
+            let p = Matrix::randn(16, r, 0.5, &mut rng);
+            let q = Matrix::randn(12, r, 0.5, &mut rng);
+            let e = calibrated_error2(&h, &matmul_nt(&p, &q).sub(&dw));
+            assert!(e_cloq <= e + 1e-9);
+        }
+
+        // Perturbations of the optimum (first-order optimality).
+        for _ in 0..30 {
+            let da = Matrix::randn(16, r, 0.01, &mut rng);
+            let db = Matrix::randn(12, r, 0.01, &mut rng);
+            let e = calibrated_error2(&h, &matmul_nt(&cloq.a.add(&da), &cloq.b.add(&db)).sub(&dw));
+            assert!(e_cloq <= e + 1e-9);
+        }
+    }
+
+    #[test]
+    fn all_splits_same_product() {
+        let (_, dw, h) = setup(10, 14, 60, 94);
+        let mk = |split| {
+            cloq_lowrank(&h, &dw, &CloqConfig { rank: 5, split, rcond: 1e-12, randomized: false }).ab_t()
+        };
+        let a = mk(FactorSplit::AllInA);
+        let b = mk(FactorSplit::Sqrt);
+        let c = mk(FactorSplit::AllInB);
+        assert!(a.max_diff(&b) < 1e-8);
+        assert!(a.max_diff(&c) < 1e-8);
+    }
+
+    #[test]
+    fn split_energy_distribution() {
+        let (_, dw, h) = setup(10, 14, 60, 95);
+        let all_a = cloq_lowrank(&h, &dw, &CloqConfig { rank: 5, split: FactorSplit::AllInA, rcond: 1e-12, randomized: false });
+        // With AllInA, B has orthonormal columns (BᵀB = I).
+        let btb = matmul(&all_a.b.transpose(), &all_a.b);
+        assert!(btb.max_diff(&Matrix::eye(5)) < 1e-8);
+        let all_b = cloq_lowrank(&h, &dw, &CloqConfig { rank: 5, split: FactorSplit::AllInB, rcond: 1e-12, randomized: false });
+        // With AllInB, ‖B‖ carries the spectrum: column norms = σ_i.
+        let sq = svd(&matmul(&gram_root(&h, 1e-12).r, &dw));
+        for i in 0..5 {
+            let bn: f64 = all_b.b.col(i).iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((bn - sq.s[i]).abs() < 1e-6 * sq.s[i].max(1e-12), "col {i}");
+        }
+    }
+
+    #[test]
+    fn rank_deficient_h_uses_pinv_branch() {
+        // 4 calibration samples, 16 features → H rank ≤ 4 (undamped).
+        let mut rng = Rng::new(96);
+        let x = Matrix::randn(4, 16, 1.0, &mut rng);
+        let h = syrk_t(&x); // deliberately NOT damped
+        let dw = Matrix::randn(16, 8, 0.3, &mut rng);
+        let init = cloq_lowrank(&h, &dw, &CloqConfig { rank: 4, rcond: 1e-10, ..Default::default() });
+        assert!(init.a.max_abs().is_finite());
+        // Calibrated objective still ≤ plain-SVD candidate's.
+        let e_cloq = calibrated_error2(&h, &init.ab_t().sub(&dw));
+        let plain = crate::linalg::best_rank_r(&dw, 4);
+        let e_plain = calibrated_error2(&h, &plain.sub(&dw));
+        assert!(e_cloq <= e_plain + 1e-9);
+    }
+
+    #[test]
+    fn rank_zero_gives_zero_adapter() {
+        let (_, dw, h) = setup(8, 6, 32, 97);
+        let init = cloq_lowrank(&h, &dw, &CloqConfig { rank: 0, ..Default::default() });
+        assert_eq!(init.a.cols, 0);
+        assert_eq!(init.b.cols, 0);
+        let obj_direct = calibrated_error2(&h, &dw.scale(-1.0));
+        assert!((init.objective - obj_direct).abs() < 1e-7 * obj_direct);
+        let _ = fro2(&dw);
+    }
+
+    #[test]
+    fn randomized_path_matches_exact() {
+        // The §Perf fast path must agree with the exact SVD on realistic
+        // (fast-decaying) residuals.
+        let (_, _, h) = setup(24, 16, 96, 99);
+        let mut rng = Rng::new(995);
+        // Build a residual with decaying spectrum.
+        let u = crate::linalg::qr::random_orthonormal(24, 12, &mut rng);
+        let v = crate::linalg::qr::random_orthonormal(16, 12, &mut rng);
+        let s: Vec<f64> = (0..12).map(|i| (0.6f64).powi(i as i32)).collect();
+        let dw = crate::linalg::matmul_nt(&crate::linalg::svd::scale_cols(&u, &s), &v);
+        for r in [2usize, 4] {
+            let exact = cloq_lowrank(&h, &dw, &CloqConfig { rank: r, ..Default::default() });
+            let fast = cloq_lowrank(
+                &h,
+                &dw,
+                &CloqConfig { rank: r, randomized: true, ..Default::default() },
+            );
+            let e_exact = calibrated_error2(&h, &exact.ab_t().sub(&dw));
+            let e_fast = calibrated_error2(&h, &fast.ab_t().sub(&dw));
+            assert!(
+                e_fast <= e_exact * 1.02 + 1e-9,
+                "r={r}: randomized {e_fast} vs exact {e_exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn objective_monotone_in_rank() {
+        let (_, dw, h) = setup(18, 12, 72, 98);
+        let mut last = f64::INFINITY;
+        for r in 0..=12 {
+            let init = cloq_lowrank(&h, &dw, &CloqConfig { rank: r, ..Default::default() });
+            assert!(init.objective <= last + 1e-9, "r={r}");
+            last = init.objective;
+        }
+        assert!(last < 1e-10, "full rank must be exact");
+    }
+}

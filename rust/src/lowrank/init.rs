@@ -1,0 +1,350 @@
+//! Per-layer initialization method registry — every row of the paper's
+//! tables corresponds to one [`Method`] here.
+//!
+//! Each method takes the pre-trained layer weights `W` (m×n, `Y = X·W`
+//! orientation), optionally the calibration Gram matrix `H = XᵀX`, and a
+//! seed, and produces the frozen base `Q` plus LoRA factors `(A, B)`.
+
+use crate::linalg::Matrix;
+use crate::lowrank::cloq::{cloq_lowrank, damping_lambda, CloqConfig, FactorSplit};
+use crate::lowrank::loftq::{loftq, LoftqConfig, LoftqQuantizer};
+use crate::quant::magr::{magr, MagrConfig};
+use crate::quant::optq::{optq, OptqConfig};
+use crate::quant::quantize_nf;
+use crate::util::prng::Rng;
+
+/// The fine-tuning initialization methods compared in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// FP16 LoRA (no quantization): Q = W, A ~ N(0, σ²), B = 0.
+    Lora16,
+    /// QLoRA: NF-k quantization, standard (Gaussian, zero) LoRA init.
+    QLora,
+    /// GPTQ-LoRA: OPTQ base, standard LoRA init.
+    GptqLora,
+    /// LoftQ: data-free AltMin of ‖Q + ABᵀ − W‖_F².
+    LoftQ,
+    /// CLoQ (ours): MagR+OPTQ base, Theorem-3.1 calibrated low-rank init.
+    CLoQ,
+    /// CLoQ without MagR preprocessing (ablation).
+    CLoQNoMagR,
+    /// CLoQ with the √Σ factor split (Table 7 ablation).
+    CLoQSqrtSplit,
+    /// CLoQ with the Σ-in-B split (Table 7 ablation).
+    CLoQAllInB,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Lora16 => "LoRA",
+            Method::QLora => "QLoRA",
+            Method::GptqLora => "GPTQ-LoRA",
+            Method::LoftQ => "LoftQ",
+            Method::CLoQ => "CLoQ",
+            Method::CLoQNoMagR => "CLoQ(-MagR)",
+            Method::CLoQSqrtSplit => "CLoQ(sqrt split)",
+            Method::CLoQAllInB => "CLoQ(S in B)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "lora" | "lora16" => Method::Lora16,
+            "qlora" => Method::QLora,
+            "gptq-lora" | "gptqlora" => Method::GptqLora,
+            "loftq" => Method::LoftQ,
+            "cloq" => Method::CLoQ,
+            "cloq-nomagr" => Method::CLoQNoMagR,
+            "cloq-sqrt" => Method::CLoQSqrtSplit,
+            "cloq-allinb" => Method::CLoQAllInB,
+            _ => return None,
+        })
+    }
+
+    /// Does this method consume calibration data (a Gram matrix)?
+    pub fn needs_calibration(&self) -> bool {
+        matches!(
+            self,
+            Method::GptqLora
+                | Method::CLoQ
+                | Method::CLoQNoMagR
+                | Method::CLoQSqrtSplit
+                | Method::CLoQAllInB
+        )
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct InitConfig {
+    pub method: Method,
+    pub bits: u32,
+    pub group_size: usize,
+    pub rank: usize,
+    /// Damping percent for H (paper: 0.01).
+    pub damp_percent: f64,
+    /// LoftQ AltMin iterations (paper default: 5).
+    pub loftq_iters: usize,
+    pub magr: MagrConfig,
+}
+
+impl InitConfig {
+    pub fn new(method: Method, bits: u32, rank: usize) -> Self {
+        Self {
+            method,
+            bits,
+            group_size: 64,
+            rank,
+            damp_percent: 0.01,
+            loftq_iters: 5,
+            magr: MagrConfig::default(),
+        }
+    }
+}
+
+/// The initialized layer: frozen base + trainable adapters.
+pub struct LayerInit {
+    /// Dequantized frozen base Q (m×n). For `Lora16` this is W itself.
+    pub q_deq: Matrix,
+    /// The exact INT quantization state (codes/scales/zeros) when the
+    /// method produces one — consumed verbatim by the packed serving path
+    /// so `qeval` agrees with the dense path bit-for-bit.
+    pub quant: Option<crate::quant::QuantizedTensor>,
+    /// m×r adapter.
+    pub a: Matrix,
+    /// n×r adapter.
+    pub b: Matrix,
+    /// Nominal storage bits per base weight.
+    pub bits_per_weight: f64,
+}
+
+/// Initialize one linear layer. `h` is the **undamped** Gram matrix; it is
+/// required iff `cfg.method.needs_calibration()`.
+pub fn init_layer(w: &Matrix, h: Option<&Matrix>, cfg: &InitConfig, rng: &mut Rng) -> LayerInit {
+    let r = cfg.rank.min(w.rows.min(w.cols));
+    // Standard LoRA init: A ~ N(0, 1/r) Kaiming-ish, B = 0 → A·Bᵀ = 0.
+    let std_lora = |rng: &mut Rng| {
+        let a = Matrix::randn(w.rows, r, 1.0 / (r as f64).sqrt(), rng);
+        let b = Matrix::zeros(w.cols, r);
+        (a, b)
+    };
+
+    match cfg.method {
+        Method::Lora16 => {
+            let (a, b) = std_lora(rng);
+            LayerInit { q_deq: w.clone(), a, b, bits_per_weight: 16.0, quant: None }
+        }
+        Method::QLora => {
+            let q = quantize_nf(w, cfg.bits, cfg.group_size);
+            let (a, b) = std_lora(rng);
+            LayerInit {
+                q_deq: q.dequantize(),
+                a,
+                b,
+                bits_per_weight: cfg.bits as f64 + 16.0 / cfg.group_size as f64,
+                quant: None, // NF codebook ≠ INT grid; serving re-grids
+            }
+        }
+        Method::GptqLora => {
+            let h = h.expect("GPTQ-LoRA needs calibration H");
+            let q = optq(
+                w,
+                h,
+                &OptqConfig {
+                    bits: cfg.bits,
+                    group_size: cfg.group_size,
+                    damp_percent: cfg.damp_percent,
+                    act_order: false,
+                },
+            );
+            let (a, b) = std_lora(rng);
+            LayerInit {
+                q_deq: q.dequantize(),
+                a,
+                b,
+                bits_per_weight: q.bits_per_weight(),
+                quant: Some(q),
+            }
+        }
+        Method::LoftQ => {
+            let init = loftq(
+                w,
+                &LoftqConfig {
+                    bits: cfg.bits,
+                    group_size: cfg.group_size,
+                    rank: r,
+                    iters: cfg.loftq_iters,
+                    quantizer: LoftqQuantizer::Int,
+                },
+            );
+            let bpw = init.q.bits_per_weight();
+            LayerInit {
+                q_deq: init.q_deq,
+                a: init.a,
+                b: init.b,
+                bits_per_weight: bpw,
+                quant: Some(init.q),
+            }
+        }
+        Method::CLoQ | Method::CLoQNoMagR | Method::CLoQSqrtSplit | Method::CLoQAllInB => {
+            let h = h.expect("CLoQ needs calibration H");
+            // Step 1 (paper §3.1.1): MagR preprocessing + OPTQ.
+            let w_pre = if cfg.method == Method::CLoQNoMagR {
+                w.clone()
+            } else {
+                magr(w, h, &cfg.magr)
+            };
+            let q = optq(
+                &w_pre,
+                h,
+                &OptqConfig {
+                    bits: cfg.bits,
+                    group_size: cfg.group_size,
+                    damp_percent: cfg.damp_percent,
+                    act_order: false,
+                },
+            );
+            let q_deq = q.dequantize();
+            // Step 2 (paper §3.1.2): closed-form calibrated low-rank init of
+            // the residual vs the ORIGINAL weights.
+            let delta_w = w.sub(&q_deq);
+            let mut hd = h.clone();
+            hd.add_diag(damping_lambda(h, cfg.damp_percent));
+            let split = match cfg.method {
+                Method::CLoQSqrtSplit => FactorSplit::Sqrt,
+                Method::CLoQAllInB => FactorSplit::AllInB,
+                _ => FactorSplit::AllInA,
+            };
+            // Randomized truncated SVD: exact-to-tolerance on these residual
+            // spectra and ~2.2x faster (EXPERIMENTS.md §Perf).
+            let lr = cloq_lowrank(&hd, &delta_w, &CloqConfig { rank: r, split, rcond: 1e-12, randomized: true });
+            LayerInit {
+                q_deq,
+                a: lr.a,
+                b: lr.b,
+                bits_per_weight: q.bits_per_weight(),
+                quant: Some(q),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul_nt, syrk_t};
+    use crate::quant::metrics::calibrated_error2;
+
+    fn setup(seed: u64) -> (Matrix, Matrix, Rng) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::randn(128, 32, 1.0, &mut rng);
+        let w = Matrix::randn(32, 24, 0.3, &mut rng);
+        let h = syrk_t(&x);
+        (w, h, rng)
+    }
+
+    fn init_discrepancy(w: &Matrix, h: &Matrix, li: &LayerInit) -> f64 {
+        // ‖X(Q + ABᵀ − W)‖² — the paper's problem (2) objective.
+        let e = li.q_deq.add(&matmul_nt(&li.a, &li.b)).sub(w);
+        calibrated_error2(h, &e)
+    }
+
+    #[test]
+    fn all_methods_produce_shapes() {
+        let (w, h, mut rng) = setup(110);
+        for m in [
+            Method::Lora16,
+            Method::QLora,
+            Method::GptqLora,
+            Method::LoftQ,
+            Method::CLoQ,
+            Method::CLoQNoMagR,
+            Method::CLoQSqrtSplit,
+            Method::CLoQAllInB,
+        ] {
+            let cfg = InitConfig::new(m, 2, 8);
+            let li = init_layer(&w, Some(&h), &cfg, &mut rng);
+            assert_eq!(li.q_deq.rows, 32);
+            assert_eq!(li.q_deq.cols, 24);
+            assert_eq!(li.a.rows, 32);
+            assert_eq!(li.a.cols, 8);
+            assert_eq!(li.b.rows, 24);
+            assert_eq!(li.b.cols, 8);
+            assert!(li.q_deq.max_abs().is_finite());
+        }
+    }
+
+    #[test]
+    fn lora16_is_exact_at_init() {
+        let (w, h, mut rng) = setup(111);
+        let li = init_layer(&w, Some(&h), &InitConfig::new(Method::Lora16, 16, 8), &mut rng);
+        assert!(init_discrepancy(&w, &h, &li) < 1e-18);
+    }
+
+    #[test]
+    fn cloq_beats_loftq_and_qlora_at_2bit() {
+        // Fig. 2's claim, as a hard unit test: the calibrated discrepancy of
+        // the CLoQ init is below LoftQ and QLoRA at INT2.
+        for seed in [112u64, 113, 114] {
+            let (w, h, mut rng) = setup(seed);
+            let mk = |m, rng: &mut Rng| {
+                let mut cfg = InitConfig::new(m, 2, 8);
+                cfg.group_size = 32;
+                init_layer(&w, Some(&h), &cfg, rng)
+            };
+            let e_cloq = init_discrepancy(&w, &h, &mk(Method::CLoQ, &mut rng));
+            let e_loftq = init_discrepancy(&w, &h, &mk(Method::LoftQ, &mut rng));
+            let e_qlora = init_discrepancy(&w, &h, &mk(Method::QLora, &mut rng));
+            assert!(e_cloq < e_loftq, "seed {seed}: cloq {e_cloq} loftq {e_loftq}");
+            assert!(e_cloq < e_qlora, "seed {seed}: cloq {e_cloq} qlora {e_qlora}");
+        }
+    }
+
+    #[test]
+    fn cloq_beats_gptq_lora_given_same_base() {
+        // With the identical OPTQ base, the calibrated low-rank correction
+        // can only reduce the discrepancy vs the zero-init adapter.
+        let (w, h, mut rng) = setup(115);
+        let mut cfg = InitConfig::new(Method::CLoQNoMagR, 2, 8);
+        cfg.group_size = 32;
+        let cloq = init_layer(&w, Some(&h), &cfg, &mut rng);
+        let mut gcfg = InitConfig::new(Method::GptqLora, 2, 8);
+        gcfg.group_size = 32;
+        let gptq = init_layer(&w, Some(&h), &gcfg, &mut rng);
+        // Same base (both OPTQ, no MagR) ⇒ same q_deq.
+        assert!(cloq.q_deq.max_diff(&gptq.q_deq) < 1e-12);
+        assert!(init_discrepancy(&w, &h, &cloq) <= init_discrepancy(&w, &h, &gptq) + 1e-9);
+    }
+
+    #[test]
+    fn standard_splits_ab_product_zero() {
+        let (w, h, mut rng) = setup(116);
+        for m in [Method::QLora, Method::GptqLora] {
+            let li = init_layer(&w, Some(&h), &InitConfig::new(m, 4, 8), &mut rng);
+            assert!(matmul_nt(&li.a, &li.b).max_abs() < 1e-12, "{m:?} must start at Q");
+        }
+    }
+
+    #[test]
+    fn bits_accounting() {
+        let (w, h, mut rng) = setup(117);
+        let li4 = init_layer(&w, Some(&h), &InitConfig::new(Method::CLoQ, 4, 4), &mut rng);
+        let li2 = init_layer(&w, Some(&h), &InitConfig::new(Method::CLoQ, 2, 4), &mut rng);
+        assert!(li2.bits_per_weight < li4.bits_per_weight);
+        assert!(li2.bits_per_weight >= 2.0);
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for (s, m) in [
+            ("lora", Method::Lora16),
+            ("qlora", Method::QLora),
+            ("gptq-lora", Method::GptqLora),
+            ("loftq", Method::LoftQ),
+            ("cloq", Method::CLoQ),
+        ] {
+            assert_eq!(Method::parse(s), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+}

@@ -1,0 +1,123 @@
+//! LQ-LoRA-style baseline (Guo et al., 2024): Fisher-weighted low-rank +
+//! quantized decomposition, under the row/column homogeneity assumption.
+//!
+//! The original method weights the reconstruction by the diagonal Fisher
+//! matrix (which requires back-propagation through the pre-trained model).
+//! Per DESIGN.md §3 we substitute the Fisher proxy the paper's own
+//! homogeneity assumption licenses: with `F_ij ≈ r_i · c_j` and activation
+//! statistics as the importance signal, the row weights become
+//! `r_i = diag(H)_i = Σ_s X_{s,i}²` (input-feature second moments) and
+//! `c_j = 1`. The weighted problem then reduces to a *scaled* SVD:
+//!
+//! ```text
+//!   min ‖D^{1/2} (A·Bᵀ − ΔW)‖_F²,   D = diag(diag(H))
+//!   ⇒ A·Bᵀ = D^{-1/2} · LR_r(D^{1/2} ΔW)
+//! ```
+//!
+//! which is exactly CLoQ's Theorem 3.1 with H replaced by its diagonal —
+//! making this baseline the scientifically interesting midpoint between
+//! LoftQ (no activation information) and CLoQ (the full Gram matrix). The
+//! ablation `bench_cloq` and `prop_lowrank` quantify the gap.
+
+use crate::linalg::svd::{scale_cols, svd};
+use crate::linalg::Matrix;
+use crate::lowrank::cloq::LowRankInit;
+
+/// Closed-form weighted low-rank init with D = diag(diag(H)) + λ.
+pub fn lqlora_lowrank(h: &Matrix, delta_w: &Matrix, rank: usize, damp_pct: f64) -> LowRankInit {
+    assert_eq!(h.rows, delta_w.rows);
+    let m = h.rows;
+    let r = rank.min(delta_w.rows.min(delta_w.cols));
+    let lambda = damp_pct * h.trace() / m as f64;
+    let d: Vec<f64> = (0..m).map(|i| (h.at(i, i) + lambda).max(1e-300)).collect();
+    let d_sqrt: Vec<f64> = d.iter().map(|x| x.sqrt()).collect();
+    let d_isqrt: Vec<f64> = d_sqrt.iter().map(|x| 1.0 / x).collect();
+
+    // Scale rows of ΔW by D^{1/2}.
+    let scaled = Matrix::from_fn(delta_w.rows, delta_w.cols, |i, j| d_sqrt[i] * delta_w.at(i, j));
+    let dec = svd(&scaled);
+    let objective: f64 = dec.s.iter().skip(r).map(|s| s * s).sum();
+    let dec = dec.truncate(r);
+    // A = D^{-1/2} U Σ, B = V (AllInA split, matching CLoQ's default).
+    let us = scale_cols(&dec.u, &dec.s);
+    let a = Matrix::from_fn(m, r, |i, j| d_isqrt[i] * us.at(i, j));
+    LowRankInit { a, b: dec.v, objective }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, matmul_nt, syrk_t};
+    use crate::lowrank::cloq::{cloq_lowrank, damping_lambda, CloqConfig};
+    use crate::quant::metrics::calibrated_error2;
+    use crate::util::prng::Rng;
+
+    fn setup(seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        // Strongly anisotropic, correlated activations.
+        let base = Matrix::randn(200, 6, 1.0, &mut rng);
+        let mix = Matrix::randn(6, 24, 1.0, &mut rng);
+        let x = matmul(&base, &mix);
+        let dw = Matrix::randn(24, 16, 0.3, &mut rng);
+        let h = syrk_t(&x);
+        (x, dw, h)
+    }
+
+    #[test]
+    fn weighted_objective_is_optimal_for_diagonal_h() {
+        // When H is EXACTLY diagonal, LQ-LoRA == CLoQ (both solve the same
+        // problem); verify they agree.
+        let mut rng = Rng::new(130);
+        let d: Vec<f64> = (0..12).map(|_| rng.range_f64(0.1, 5.0)).collect();
+        let h = Matrix::diag(&d);
+        let dw = Matrix::randn(12, 9, 1.0, &mut rng);
+        let lq = lqlora_lowrank(&h, &dw, 3, 0.0);
+        let cq = cloq_lowrank(&h, &dw, &CloqConfig { rank: 3, ..Default::default() });
+        let e_lq = calibrated_error2(&h, &lq.ab_t().sub(&dw));
+        let e_cq = calibrated_error2(&h, &cq.ab_t().sub(&dw));
+        assert!((e_lq - e_cq).abs() < 1e-7 * e_cq.max(1e-9), "{e_lq} vs {e_cq}");
+    }
+
+    #[test]
+    fn between_loftq_and_cloq_on_correlated_activations() {
+        // The ablation claim: diag(H) information helps over no-X (LoftQ's
+        // plain SVD) but loses to the full Gram (CLoQ) when activations are
+        // correlated. Checked across seeds with majority voting (the
+        // midpoint can tie on near-diagonal draws).
+        let mut lq_beats_plain = 0;
+        let mut cq_beats_lq = 0;
+        let n_seeds = 10u64;
+        for seed in 0..n_seeds {
+            let (_, dw, h) = setup(131 + seed);
+            let mut hd = h.clone();
+            hd.add_diag(damping_lambda(&h, 0.01));
+            let r = 4;
+            let plain = crate::linalg::best_rank_r(&dw, r);
+            let e_plain = calibrated_error2(&hd, &plain.sub(&dw));
+            let lq = lqlora_lowrank(&h, &dw, r, 0.01);
+            let e_lq = calibrated_error2(&hd, &lq.ab_t().sub(&dw));
+            let cq = cloq_lowrank(&hd, &dw, &CloqConfig { rank: r, ..Default::default() });
+            let e_cq = calibrated_error2(&hd, &cq.ab_t().sub(&dw));
+            assert!(e_cq <= e_lq + 1e-9, "seed={seed}: CLoQ must dominate (optimal)");
+            if e_lq < e_plain {
+                lq_beats_plain += 1;
+            }
+            if e_cq < e_lq * 0.999 {
+                cq_beats_lq += 1;
+            }
+        }
+        assert!(lq_beats_plain >= 6, "diag-H should usually beat plain SVD: {lq_beats_plain}/{n_seeds}");
+        assert!(cq_beats_lq >= 6, "full H should usually strictly beat diag-H: {cq_beats_lq}/{n_seeds}");
+    }
+
+    #[test]
+    fn shapes_and_finiteness() {
+        let (_, dw, h) = setup(140);
+        let lq = lqlora_lowrank(&h, &dw, 5, 0.01);
+        assert_eq!(lq.a.rows, 24);
+        assert_eq!(lq.a.cols, 5);
+        assert_eq!(lq.b.rows, 16);
+        assert!(lq.a.max_abs().is_finite());
+        assert!(matmul_nt(&lq.a, &lq.b).max_abs().is_finite());
+    }
+}

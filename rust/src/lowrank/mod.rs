@@ -1,0 +1,13 @@
+//! LoRA initialization methods: CLoQ's Theorem-3.1 closed form, the LoftQ
+//! AltMin baseline, and the per-layer method registry used by the
+//! coordinator and bench harness.
+
+pub mod cloq;
+pub mod init;
+pub mod loftq;
+pub mod lqlora;
+
+pub use cloq::{cloq_lowrank, damping_lambda, gram_root, CloqConfig, FactorSplit, LowRankInit};
+pub use init::{init_layer, InitConfig, LayerInit, Method};
+pub use loftq::{loftq, LoftqConfig, LoftqInit, LoftqQuantizer};
+pub use lqlora::lqlora_lowrank;

@@ -1,0 +1,198 @@
+//! `cloq` — CLI for the CLoQ reproduction.
+//!
+//! ```text
+//! cloq pretrain  --config tiny-s [--steps 400] [--seed 42]
+//! cloq pipeline  --config tiny-s --method cloq --bits 2 --task gsm8k
+//! cloq table <1..10> [--fast]
+//! cloq fig   <1|2>
+//! cloq reports [--fast]          # regenerate everything
+//! cloq gen-data --task s-GSM8K -n 5
+//! cloq inspect --config tiny-s
+//! ```
+
+use cloq::coordinator::tables::{run_fig, run_table, TableOpts};
+use cloq::coordinator::{
+    ensure_grams, ensure_pretrained, run_one, FinetuneTask, PipelineOpts, RunSpec,
+};
+use cloq::lowrank::Method;
+use cloq::runtime::Runtime;
+use cloq::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.command.as_str() {
+        "pretrain" => cmd_pretrain(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "table" => cmd_table(&args),
+        "fig" => cmd_fig(&args),
+        "reports" => cmd_reports(&args),
+        "gen-data" => cmd_gen_data(&args),
+        "inspect" => cmd_inspect(&args),
+        "" | "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            Err(anyhow::anyhow!("unknown command '{other}'"))
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "cloq — CLoQ: Calibrated LoRA Initialization for Quantized LLMs (reproduction)\n\n\
+         commands:\n\
+         \x20 pretrain  --config <name> [--steps N] [--seed S]     pretrain + cache the base LM\n\
+         \x20 pipeline  --config <name> --method <m> --bits <b> --task <t> [--steps N]\n\
+         \x20           methods: lora qlora gptq-lora loftq cloq cloq-nomagr cloq-sqrt cloq-allinb\n\
+         \x20           tasks:   wiki gsm8k math10k commonsense mixed\n\
+         \x20 table <1..10> [--fast]                                regenerate a paper table\n\
+         \x20 fig   <1|2>   [--fast]                                regenerate a paper figure\n\
+         \x20 reports [--fast]                                      regenerate all tables+figures\n\
+         \x20 gen-data  --task <name> [--n N]                       print synthetic task samples\n\
+         \x20 inspect   --config <name>                             artifact manifest summary"
+    );
+}
+
+fn table_opts(args: &Args) -> TableOpts {
+    let mut t = TableOpts::default();
+    t.fast = args.has("fast");
+    t.steps = args.usize("steps", t.steps);
+    t.seed = args.u64("seed", t.seed);
+    if let Some(dir) = args.opt_str("reports-dir") {
+        t.reports_dir = dir.into();
+    }
+    t
+}
+
+fn cmd_pretrain(args: &Args) -> anyhow::Result<()> {
+    let config = args.str("config", "tiny-s");
+    let mut opts = PipelineOpts::new(&config);
+    opts.pretrain_steps = args.usize("steps", opts.pretrain_steps);
+    opts.seed = args.u64("seed", opts.seed);
+    let mut rt = Runtime::load(&opts.artifacts)?;
+    let (_base, outcome) = ensure_pretrained(&mut rt, &opts)?;
+    if let Some(o) = outcome {
+        println!("pretrained {config}: final loss {:.4}", o.final_loss);
+    } else {
+        println!("pretrained base already cached for {config}");
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
+    let config = args.str("config", "tiny-s");
+    let method = Method::parse(&args.str("method", "cloq"))
+        .ok_or_else(|| anyhow::anyhow!("bad --method"))?;
+    let bits = args.usize("bits", 2) as u32;
+    let task = FinetuneTask::parse(&args.str("task", "gsm8k"))
+        .ok_or_else(|| anyhow::anyhow!("bad --task"))?;
+
+    let mut opts = PipelineOpts::new(&config);
+    if args.has("fast") {
+        opts = opts.fast();
+    }
+    opts.seed = args.u64("seed", opts.seed);
+    let mut rt = Runtime::load(&opts.artifacts)?;
+    let (base, _) = ensure_pretrained(&mut rt, &opts)?;
+    let grams = ensure_grams(&mut rt, &base, &opts, opts.calib_samples)?;
+
+    let mut spec = RunSpec::new(method, bits, task);
+    spec.steps = args.usize("steps", spec.steps);
+    spec.lr = args.f64("lr", spec.lr);
+    spec.weight_decay = args.f64("wd", spec.weight_decay);
+    spec.seed = args.u64("run-seed", spec.seed);
+    let r = run_one(&mut rt, &base, &grams, &spec, &opts)?;
+
+    println!("== pipeline result: {} @ {}-bit on {:?} ==", method.name(), bits, task);
+    if let Some(p) = r.ppl {
+        println!("perplexity       : {p:.3}");
+    }
+    for (name, acc) in &r.accuracies {
+        println!("accuracy {name:12}: {:.1}%", acc * 100.0);
+    }
+    println!("bits/weight      : {:.2}", r.bits_per_weight);
+    println!("init time        : {:.2}s", r.init_seconds);
+    println!("finetune time    : {:.2}s ({} steps)", r.finetune_seconds, spec.steps);
+    println!("final train loss : {:.4}", r.final_train_loss);
+    Ok(())
+}
+
+fn cmd_table(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.opt_str("id"))
+        .ok_or_else(|| anyhow::anyhow!("usage: cloq table <1..10>"))?;
+    run_table(&id, &table_opts(args))
+}
+
+fn cmd_fig(args: &Args) -> anyhow::Result<()> {
+    let id = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.opt_str("id"))
+        .ok_or_else(|| anyhow::anyhow!("usage: cloq fig <1|2>"))?;
+    run_fig(&id, &table_opts(args))
+}
+
+fn cmd_reports(args: &Args) -> anyhow::Result<()> {
+    let t = table_opts(args);
+    for id in ["10", "2", "7", "8", "9", "6", "5", "1", "3", "4"] {
+        if let Err(e) = run_table(id, &t) {
+            eprintln!("table {id} FAILED: {e:#}");
+        }
+    }
+    for id in ["2", "1"] {
+        if let Err(e) = run_fig(id, &t) {
+            eprintln!("fig {id} FAILED: {e:#}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> anyhow::Result<()> {
+    use cloq::data::Task;
+    let name = args.str("task", "s-GSM8K");
+    let n = args.usize("n", 5);
+    let task = Task::parse(&name).ok_or_else(|| anyhow::anyhow!("unknown task '{name}'"))?;
+    for ex in task.dataset(n, args.u64("seed", 1), 0) {
+        if ex.is_mcq() {
+            println!("{}  options={:?}  answer={}", ex.prompt, ex.options, ex.answer);
+        } else {
+            println!("{}  answer={}", ex.prompt, ex.answer);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let config = args.str("config", "tiny-s");
+    let dir = std::path::PathBuf::from("artifacts").join(&config);
+    let man = cloq::model::Manifest::load(&dir)?;
+    let c = &man.config;
+    println!(
+        "config {}: d_model={} layers={} heads={} d_ff={} vocab={} seq={} batch={} rank={} group={}",
+        c.name, c.d_model, c.n_layers, c.n_heads, c.d_ff, c.vocab, c.seq, c.batch, c.rank, c.group_size
+    );
+    for (name, e) in &man.entrypoints {
+        let in_elems: usize = e.inputs.iter().map(|s| s.numel()).sum();
+        let out_elems: usize = e.outputs.iter().map(|s| s.numel()).sum();
+        println!(
+            "  {name:16} {} inputs ({:>9} elems)  {} outputs ({:>9} elems)  [{}]",
+            e.inputs.len(),
+            in_elems,
+            e.outputs.len(),
+            out_elems,
+            e.file
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,181 @@
+//! The AOT artifact manifest: the binding contract between
+//! `python/compile/aot.py` (producer) and the Rust runtime (consumer).
+//!
+//! `artifacts/<config>/manifest.json` records, for every lowered entry
+//! point, the exact flat ordering of inputs and outputs (names, shapes,
+//! dtypes) plus the model configuration the graphs were specialized to.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::runtime::tensor::Dtype;
+use crate::util::json::{parse_file, Json};
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        let name = j.req_str("name")?.to_string();
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape in {name}")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(j.req_str("dtype")?)?;
+        Ok(TensorSpec { name, shape, dtype })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+impl EntrySpec {
+    pub fn input_index(&self, name: &str) -> Option<usize> {
+        self.inputs.iter().position(|s| s.name == name)
+    }
+}
+
+/// Mirror of `python/compile/model.py::Config`.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub rank: usize,
+    pub group_size: usize,
+}
+
+impl ModelConfig {
+    fn from_json(j: &Json) -> anyhow::Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: j.req_str("name")?.to_string(),
+            vocab: j.req_usize("vocab")?,
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            d_ff: j.req_usize("d_ff")?,
+            seq: j.req_usize("seq")?,
+            batch: j.req_usize("batch")?,
+            rank: j.req_usize("rank")?,
+            group_size: j.req_usize("group_size")?,
+        })
+    }
+
+    /// The six LoRA-targeted linear maps of block `l`:
+    /// (name, in_dim, out_dim) — mirrors `model.py::linear_specs`.
+    pub fn linear_specs(&self, l: usize) -> Vec<(String, usize, usize)> {
+        let d = self.d_model;
+        let f = self.d_ff;
+        vec![
+            (format!("l{l}.wq"), d, d),
+            (format!("l{l}.wk"), d, d),
+            (format!("l{l}.wv"), d, d),
+            (format!("l{l}.wo"), d, d),
+            (format!("l{l}.w_up"), d, f),
+            (format!("l{l}.w_down"), f, d),
+        ]
+    }
+
+    /// All quantizable linear layer names in canonical order.
+    pub fn all_linear_names(&self) -> Vec<String> {
+        (0..self.n_layers)
+            .flat_map(|l| self.linear_specs(l).into_iter().map(|(n, _, _)| n))
+            .collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: ModelConfig,
+    pub entrypoints: BTreeMap<String, EntrySpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = parse_file(&dir.join("manifest.json"))?;
+        let config = ModelConfig::from_json(j.req("config")?)?;
+        let mut entrypoints = BTreeMap::new();
+        let eps = j
+            .req("entrypoints")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("entrypoints not an object"))?;
+        for (name, ej) in eps {
+            let inputs = ej
+                .req_arr("inputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = ej
+                .req_arr("outputs")?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            entrypoints.insert(
+                name.clone(),
+                EntrySpec { file: ej.req_str("file")?.to_string(), inputs, outputs },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), config, entrypoints })
+    }
+
+    pub fn entry(&self, name: &str) -> anyhow::Result<&EntrySpec> {
+        self.entrypoints
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no entrypoint '{name}' in {}", self.dir.display()))
+    }
+
+    pub fn hlo_path(&self, entry: &str) -> anyhow::Result<PathBuf> {
+        Ok(self.dir.join(&self.entry(entry)?.file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_micro() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/micro");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn loads_micro_manifest_if_present() {
+        let Some(dir) = artifacts_micro() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.name, "micro");
+        assert!(m.entrypoints.contains_key("lora_step"));
+        let e = m.entry("eval_loss").unwrap();
+        // tokens + mask at the end of eval_loss inputs.
+        let last = &e.inputs[e.inputs.len() - 2];
+        assert_eq!(last.name, "tokens");
+        assert_eq!(last.dtype, Dtype::I32);
+        assert_eq!(last.shape, vec![m.config.batch, m.config.seq]);
+        assert_eq!(e.outputs.len(), 2);
+        // linear specs consistent with the config.
+        let names = m.config.all_linear_names();
+        assert_eq!(names.len(), 6 * m.config.n_layers);
+    }
+}

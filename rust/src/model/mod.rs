@@ -1,0 +1,9 @@
+//! Model state: the artifact manifest (spec contract with the AOT layer)
+//! and the parameter store (weights, adapters, optimizer state,
+//! checkpoints).
+
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{EntrySpec, Manifest, ModelConfig, TensorSpec};
+pub use params::{base_specs, init_base, lora_specs, quant_specs, zeros_for, ParamStore};

@@ -1,0 +1,265 @@
+//! Parameter store: named tensors, initialization, checkpoint I/O.
+//!
+//! Parameter *specs* (names, shapes, order) are always derived from the
+//! artifact manifest — never duplicated in Rust — so the store can't drift
+//! from what the lowered graphs expect.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::model::manifest::{Manifest, TensorSpec};
+use crate::runtime::tensor::{Dtype, Tensor, TensorData};
+use crate::util::prng::Rng;
+
+/// Ordered collection of named tensors.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    pub names: Vec<String>,
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        if !self.map.contains_key(name) {
+            self.names.push(name.to_string());
+        }
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.map
+            .get(name)
+            .unwrap_or_else(|| panic!("missing param '{name}'"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        self.map
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("missing param '{name}'"))
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Tensors in insertion order (= manifest order when built from specs).
+    pub fn in_order(&self) -> Vec<Tensor> {
+        self.names.iter().map(|n| self.map[n].clone()).collect()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.names.iter().map(|n| self.map[n].numel()).sum()
+    }
+
+    // ---- checkpoint I/O (simple length-prefixed binary format) ----
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"CLOQCKPT")?;
+        f.write_all(&(self.names.len() as u64).to_le_bytes())?;
+        for name in &self.names {
+            let t = &self.map[name];
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            let (dt, bytes): (u8, Vec<u8>) = match &t.data {
+                TensorData::F32(v) => (0, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+                TensorData::I32(v) => (1, v.iter().flat_map(|x| x.to_le_bytes()).collect()),
+            };
+            f.write_all(&[dt])?;
+            f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<ParamStore> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == b"CLOQCKPT", "bad checkpoint magic in {}", path.display());
+        let mut store = ParamStore::new();
+        let n = read_u64(&mut f)? as usize;
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            let mut name_bytes = vec![0u8; name_len];
+            f.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes)?;
+            let mut dt = [0u8; 1];
+            f.read_exact(&mut dt)?;
+            let rank = read_u32(&mut f)? as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(read_u64(&mut f)? as usize);
+            }
+            let numel: usize = shape.iter().product();
+            let t = match dt[0] {
+                0 => {
+                    let mut buf = vec![0u8; numel * 4];
+                    f.read_exact(&mut buf)?;
+                    let v = buf
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    Tensor::f32(shape, v)
+                }
+                1 => {
+                    let mut buf = vec![0u8; numel * 4];
+                    f.read_exact(&mut buf)?;
+                    let v = buf
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    Tensor::i32(shape, v)
+                }
+                other => anyhow::bail!("bad dtype tag {other}"),
+            };
+            store.insert(&name, t);
+        }
+        Ok(store)
+    }
+}
+
+fn read_u64(f: &mut impl Read) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+// ---- spec helpers derived from the manifest ----
+
+/// Base (pretrained / frozen) parameter specs: the `eval_loss` inputs that
+/// are neither LoRA factors nor the batch.
+pub fn base_specs(man: &Manifest) -> anyhow::Result<Vec<TensorSpec>> {
+    let e = man.entry("eval_loss")?;
+    Ok(e.inputs
+        .iter()
+        .filter(|s| {
+            !s.name.ends_with(".A")
+                && !s.name.ends_with(".B")
+                && s.name != "tokens"
+                && s.name != "mask"
+        })
+        .cloned()
+        .collect())
+}
+
+/// LoRA adapter specs (`*.A` / `*.B`), in manifest order.
+pub fn lora_specs(man: &Manifest) -> anyhow::Result<Vec<TensorSpec>> {
+    let e = man.entry("eval_loss")?;
+    Ok(e.inputs
+        .iter()
+        .filter(|s| s.name.ends_with(".A") || s.name.ends_with(".B"))
+        .cloned()
+        .collect())
+}
+
+/// Quantized-weight input specs of the qeval path (`*.codes/scales/zeros`).
+pub fn quant_specs(man: &Manifest) -> anyhow::Result<Vec<TensorSpec>> {
+    let e = man.entry("qeval_loss")?;
+    Ok(e.inputs
+        .iter()
+        .filter(|s| {
+            s.name.ends_with(".codes") || s.name.ends_with(".scales") || s.name.ends_with(".zeros")
+        })
+        .cloned()
+        .collect())
+}
+
+/// GPT-2-style random initialization of the base parameters.
+pub fn init_base(man: &Manifest, rng: &mut Rng) -> anyhow::Result<ParamStore> {
+    let mut store = ParamStore::new();
+    for spec in base_specs(man)? {
+        let t = if spec.name.ends_with("_g") {
+            Tensor::f32(spec.shape.clone(), vec![1.0; spec.numel()])
+        } else if spec.name.ends_with("_b") {
+            Tensor::zeros_f32(spec.shape.clone())
+        } else {
+            let std = 0.06;
+            let data: Vec<f32> = (0..spec.numel()).map(|_| rng.normal(0.0, std) as f32).collect();
+            Tensor::f32(spec.shape.clone(), data)
+        };
+        store.insert(&spec.name, t);
+    }
+    Ok(store)
+}
+
+/// Zero tensors matching `specs` (optimizer state, LoRA-B, masks…).
+pub fn zeros_for(specs: &[TensorSpec]) -> ParamStore {
+    let mut store = ParamStore::new();
+    for s in specs {
+        let t = match s.dtype {
+            Dtype::F32 => Tensor::zeros_f32(s.shape.clone()),
+            Dtype::I32 => Tensor::i32(s.shape.clone(), vec![0; s.numel()]),
+        };
+        store.insert(&s.name, t);
+    }
+    store
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_roundtrip_via_file() {
+        let mut s = ParamStore::new();
+        s.insert("w1", Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        s.insert("codes", Tensor::i32(vec![4], vec![1, 2, 3, 4]));
+        s.insert("scalar", Tensor::scalar_f32(7.5));
+        let dir = std::env::temp_dir().join(format!("cloq_test_{}", std::process::id()));
+        let path = dir.join("ckpt.bin");
+        s.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(loaded.names, s.names);
+        for n in &s.names {
+            assert_eq!(loaded.get(n), s.get(n), "param {n}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn insert_preserves_order_and_overwrites() {
+        let mut s = ParamStore::new();
+        s.insert("b", Tensor::scalar_f32(1.0));
+        s.insert("a", Tensor::scalar_f32(2.0));
+        s.insert("b", Tensor::scalar_f32(3.0));
+        assert_eq!(s.names, vec!["b", "a"]);
+        assert_eq!(s.get("b").scalar(), 3.0);
+        assert_eq!(s.numel(), 2);
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join(format!("cloq_test_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTACKPT").unwrap();
+        assert!(ParamStore::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

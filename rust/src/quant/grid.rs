@@ -1,0 +1,258 @@
+//! Asymmetric uniform integer (INT) quantizer with group-wise scaling —
+//! the quantization grid from the paper's §2 (Background).
+//!
+//! Orientation convention (used across the whole repo): a layer computes
+//! `Y = X · W` with `W ∈ ℝ^{m×n}` (`m` = input features = rows,
+//! `n` = output channels = cols). Quantization groups run along the *input*
+//! dimension: rows `[g·gs, (g+1)·gs)` of column `j` share one
+//! `(scale, zero)` pair — the paper's "group size 64" default. Per-channel
+//! quantization is `gs = m`.
+
+use crate::linalg::Matrix;
+
+/// Group-quantized weight tensor. `codes[i][j] ∈ {0, …, 2^bits − 1}`;
+/// the dequantized value is `(codes[i][j] − zeros[g][j]) · scales[g][j]`
+/// with `g = i / group_size`.
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub bits: u32,
+    pub group_size: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// m×n quantization codes (row-major, like `Matrix`).
+    pub codes: Vec<u8>,
+    /// num_groups×n scales.
+    pub scales: Matrix,
+    /// num_groups×n zero-points (stored as f64; integer-valued by
+    /// construction, kept float for the dequant formula).
+    pub zeros: Matrix,
+}
+
+impl QuantizedTensor {
+    pub fn num_groups(&self) -> usize {
+        self.scales.rows
+    }
+
+    #[inline]
+    pub fn group_of_row(&self, i: usize) -> usize {
+        i / self.group_size
+    }
+
+    /// Dequantize the full tensor.
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let g = self.group_of_row(i);
+            for j in 0..self.cols {
+                let c = self.codes[i * self.cols + j] as f64;
+                out.set(i, j, (c - self.zeros.at(g, j)) * self.scales.at(g, j));
+            }
+        }
+        out
+    }
+
+    /// Dequantize one row (hot in OPTQ's sequential loop).
+    pub fn dequantize_row(&self, i: usize) -> Vec<f64> {
+        let g = self.group_of_row(i);
+        (0..self.cols)
+            .map(|j| {
+                let c = self.codes[i * self.cols + j] as f64;
+                (c - self.zeros.at(g, j)) * self.scales.at(g, j)
+            })
+            .collect()
+    }
+
+    /// Storage cost in bits per weight (codes + per-group fp16 scale/zero
+    /// amortized), the number quoted in memory footprints.
+    pub fn bits_per_weight(&self) -> f64 {
+        self.bits as f64 + 2.0 * 16.0 / self.group_size as f64
+    }
+}
+
+/// Per-group quantization parameters for a row-block of a column.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupParams {
+    pub scale: f64,
+    pub zero: f64,
+}
+
+/// Compute asymmetric (min/max) quantization parameters for a value set —
+/// the paper's `δ = (max − min)/(2^b − 1)`, `z = −⌊min/δ⌉`.
+pub fn find_params(values: &[f64], bits: u32) -> GroupParams {
+    debug_assert!(!values.is_empty());
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for &v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    // Grid must contain 0 so that e.g. padding rows stay exact.
+    lo = lo.min(0.0);
+    hi = hi.max(0.0);
+    let levels = (1u32 << bits) - 1;
+    let mut scale = (hi - lo) / levels as f64;
+    if scale <= 0.0 || !scale.is_finite() {
+        scale = 1.0; // degenerate all-zero group
+    }
+    let zero = -(lo / scale).round();
+    GroupParams { scale, zero }
+}
+
+/// Quantize one value under `p`, returning (code, dequantized value).
+#[inline]
+pub fn quantize_value(v: f64, p: GroupParams, bits: u32) -> (u8, f64) {
+    let qmax = ((1u32 << bits) - 1) as f64;
+    let c = (v / p.scale + p.zero).round().clamp(0.0, qmax);
+    (c as u8, (c - p.zero) * p.scale)
+}
+
+/// Straight RTN group quantization of a full matrix (the data-free
+/// baseline; also the inner quantizer LoftQ alternates with).
+pub fn quantize_rtn(w: &Matrix, bits: u32, group_size: usize) -> QuantizedTensor {
+    let (m, n) = (w.rows, w.cols);
+    let gs = group_size.min(m).max(1);
+    let num_groups = m.div_ceil(gs);
+    let mut codes = vec![0u8; m * n];
+    let mut scales = Matrix::zeros(num_groups, n);
+    let mut zeros = Matrix::zeros(num_groups, n);
+    let mut col_buf = Vec::with_capacity(gs);
+    for j in 0..n {
+        for g in 0..num_groups {
+            let r0 = g * gs;
+            let r1 = ((g + 1) * gs).min(m);
+            col_buf.clear();
+            for i in r0..r1 {
+                col_buf.push(w.at(i, j));
+            }
+            let p = find_params(&col_buf, bits);
+            scales.set(g, j, p.scale);
+            zeros.set(g, j, p.zero);
+            for i in r0..r1 {
+                let (c, _) = quantize_value(w.at(i, j), p, bits);
+                codes[i * n + j] = c;
+            }
+        }
+    }
+    QuantizedTensor { bits, group_size: gs, rows: m, cols: n, codes, scales, zeros }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn params_cover_range() {
+        let p = find_params(&[-1.0, 0.0, 3.0], 2);
+        // 2-bit: 3 intervals over [-1, 3].
+        assert!((p.scale - 4.0 / 3.0).abs() < 1e-12);
+        let (c_lo, v_lo) = quantize_value(-1.0, p, 2);
+        let (c_hi, v_hi) = quantize_value(3.0, p, 2);
+        assert!(c_lo < c_hi);
+        assert!((v_lo - -1.0).abs() < p.scale / 2.0 + 1e-12);
+        assert!((v_hi - 3.0).abs() < p.scale / 2.0 + 1e-12);
+    }
+
+    #[test]
+    fn rtn_error_bounded_by_half_step() {
+        let mut rng = Rng::new(30);
+        let w = Matrix::randn(64, 16, 1.0, &mut rng);
+        for &bits in &[2u32, 3, 4, 8] {
+            let q = quantize_rtn(&w, bits, 16);
+            let deq = q.dequantize();
+            for i in 0..w.rows {
+                let g = q.group_of_row(i);
+                for j in 0..w.cols {
+                    let err = (w.at(i, j) - deq.at(i, j)).abs();
+                    // zero-point rounding costs up to one extra half step
+                    assert!(
+                        err <= q.scales.at(g, j) + 1e-9,
+                        "bits={bits} err={err} scale={}",
+                        q.scales.at(g, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn idempotent_on_grid_values() {
+        let mut rng = Rng::new(31);
+        let w = Matrix::randn(32, 8, 1.0, &mut rng);
+        let q1 = quantize_rtn(&w, 3, 8);
+        let d1 = q1.dequantize();
+        let q2 = quantize_rtn(&d1, 3, 8);
+        let d2 = q2.dequantize();
+        assert!(d1.max_diff(&d2) < 1e-9, "requantizing grid values must be exact");
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let mut rng = Rng::new(32);
+        let w = Matrix::randn(128, 8, 1.0, &mut rng);
+        let errs: Vec<f64> = [2u32, 3, 4, 8]
+            .iter()
+            .map(|&b| {
+                let deq = quantize_rtn(&w, b, 64).dequantize();
+                crate::linalg::norms::fro(&w.sub(&deq))
+            })
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2] && errs[2] > errs[3], "{errs:?}");
+    }
+
+    #[test]
+    fn smaller_groups_lower_error() {
+        let mut rng = Rng::new(33);
+        // Heavy-tailed weights make group granularity matter.
+        let w = Matrix::from_fn(256, 4, |_, _| {
+            let x = rng.gauss();
+            x * x * x
+        });
+        let e16 = crate::linalg::norms::fro(&w.sub(&quantize_rtn(&w, 2, 16).dequantize()));
+        let e256 = crate::linalg::norms::fro(&w.sub(&quantize_rtn(&w, 2, 256).dequantize()));
+        assert!(e16 < e256, "e16={e16} e256={e256}");
+    }
+
+    #[test]
+    fn group_independence() {
+        // Changing weights in one group must not affect codes in another.
+        let mut rng = Rng::new(34);
+        let w1 = Matrix::randn(32, 4, 1.0, &mut rng);
+        let mut w2 = w1.clone();
+        for j in 0..4 {
+            w2.set(0, j, 100.0); // perturb group 0 only
+        }
+        let q1 = quantize_rtn(&w1, 4, 8);
+        let q2 = quantize_rtn(&w2, 4, 8);
+        // Groups 1.. identical.
+        for i in 8..32 {
+            for j in 0..4 {
+                assert_eq!(q1.codes[i * 4 + j], q2.codes[i * 4 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn partial_last_group() {
+        let mut rng = Rng::new(35);
+        let w = Matrix::randn(10, 3, 1.0, &mut rng); // 10 rows, gs 4 → groups 4,4,2
+        let q = quantize_rtn(&w, 4, 4);
+        assert_eq!(q.num_groups(), 3);
+        let deq = q.dequantize();
+        assert!(crate::linalg::norms::fro(&w.sub(&deq)) < crate::linalg::norms::fro(&w));
+    }
+
+    #[test]
+    fn zero_matrix_is_exact() {
+        let w = Matrix::zeros(16, 4);
+        let q = quantize_rtn(&w, 2, 8);
+        assert!(q.dequantize().max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn bits_per_weight_accounting() {
+        let w = Matrix::zeros(128, 4);
+        let q = quantize_rtn(&w, 4, 64);
+        assert!((q.bits_per_weight() - 4.5).abs() < 1e-12);
+    }
+}

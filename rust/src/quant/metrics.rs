@@ -1,0 +1,48 @@
+//! Layer-error metrics: the calibrated objectives the paper optimizes and
+//! plots (problem (2)/(3) and Fig. 2).
+
+use crate::linalg::{matmul, Matrix};
+
+/// `‖X·E‖_F² = Tr(Eᵀ H E)` computed from the Gram matrix `H = XᵀX`
+/// without needing X itself (X has b·l rows; H is only m×m).
+pub fn calibrated_error2(h: &Matrix, e: &Matrix) -> f64 {
+    assert_eq!(h.rows, e.rows);
+    // Tr(Eᵀ H E) = Σ_j e_jᵀ H e_j = Σ_ij (H E)_ij · E_ij
+    let he = matmul(h, e);
+    he.data.iter().zip(&e.data).map(|(a, b)| a * b).sum()
+}
+
+/// Relative calibrated error of a quantization: ‖X(Q−W)‖_F / ‖X·W‖_F.
+pub fn relative_calibrated_error(h: &Matrix, w: &Matrix, q_deq: &Matrix) -> f64 {
+    let num = calibrated_error2(h, &q_deq.sub(w)).max(0.0).sqrt();
+    let den = calibrated_error2(h, w).max(1e-300).sqrt();
+    num / den
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norms::fro2;
+    use crate::linalg::syrk_t;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn matches_direct_computation() {
+        let mut rng = Rng::new(70);
+        let x = Matrix::randn(50, 12, 1.0, &mut rng);
+        let e = Matrix::randn(12, 7, 1.0, &mut rng);
+        let h = syrk_t(&x);
+        let direct = fro2(&matmul(&x, &e));
+        let via_h = calibrated_error2(&h, &e);
+        assert!((direct - via_h).abs() < 1e-8 * direct);
+    }
+
+    #[test]
+    fn zero_error_for_identical() {
+        let mut rng = Rng::new(71);
+        let x = Matrix::randn(30, 8, 1.0, &mut rng);
+        let w = Matrix::randn(8, 4, 1.0, &mut rng);
+        let h = syrk_t(&x);
+        assert!(relative_calibrated_error(&h, &w, &w) < 1e-12);
+    }
+}

@@ -1,0 +1,16 @@
+//! Quantization substrate: the INT grid (paper §2), RTN, NF-k (QLoRA's
+//! format), OPTQ/GPTQ calibrated PTQ (paper §3.1.1), MagR preprocessing,
+//! code bit-packing, and the calibrated error metrics.
+
+pub mod grid;
+pub mod magr;
+pub mod metrics;
+pub mod nf;
+pub mod optq;
+pub mod packing;
+
+pub use grid::{quantize_rtn, QuantizedTensor};
+pub use magr::{magr, MagrConfig};
+pub use metrics::{calibrated_error2, relative_calibrated_error};
+pub use nf::{quantize_nf, NfQuantized};
+pub use optq::{optq, OptqConfig};

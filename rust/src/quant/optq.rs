@@ -1,0 +1,251 @@
+//! OPTQ / GPTQ — calibrated post-training quantization
+//! (Frantar et al., 2022), the quantization step of CLoQ (paper §3.1.1).
+//!
+//! Solves `min_Q ‖X(Q − W)‖_F²` approximately by quantizing the weight
+//! matrix one *input dimension* (row of `W`, in our `Y = X·W` orientation)
+//! at a time, spreading each row's rounding error over the not-yet-quantized
+//! rows using the inverse Hessian `H⁻¹ = (XᵀX + λI)⁻¹`:
+//!
+//! ```text
+//!   U = chol(H⁻¹)ᵀ            (upper triangular, H⁻¹ = UᵀU)
+//!   for i = 0..m:
+//!       q_i   = quant(w_i)                    (group params refreshed at
+//!                                              group boundaries)
+//!       err   = (w_i − q_i) / U[i,i]
+//!       w_k  -= U[i,k] · err    for k > i
+//! ```
+//!
+//! This is exactly the GPTQ recursion, expressed without the lazy-batch
+//! blocking (layer sizes here are ≤ ~1k so the simple form is both clear
+//! and fast — see EXPERIMENTS.md §Perf for measurements).
+
+use super::grid::{find_params, quantize_value, GroupParams, QuantizedTensor};
+use crate::linalg::chol::{cholesky, inv_spd};
+use crate::linalg::Matrix;
+
+/// OPTQ configuration.
+#[derive(Clone, Debug)]
+pub struct OptqConfig {
+    pub bits: u32,
+    pub group_size: usize,
+    /// Diagonal damping as a fraction of mean(diag(H)) — the paper's
+    /// `λ = 0.01·Tr(H)/m`.
+    pub damp_percent: f64,
+    /// Process rows in descending diag(H) order (GPTQ's `act_order` /
+    /// "activation order" heuristic). Ablated in `bench_optq`.
+    pub act_order: bool,
+}
+
+impl Default for OptqConfig {
+    fn default() -> Self {
+        Self { bits: 4, group_size: 64, damp_percent: 0.01, act_order: false }
+    }
+}
+
+/// Quantize `w` (m×n) against Gram matrix `h` (m×m, *undamped*; we damp a
+/// copy internally). Returns the quantized tensor; `q.dequantize()` lies on
+/// the quantization grid.
+pub fn optq(w: &Matrix, h: &Matrix, cfg: &OptqConfig) -> QuantizedTensor {
+    let (m, n) = (w.rows, w.cols);
+    assert_eq!(h.rows, m);
+    assert_eq!(h.cols, m);
+    let gs = cfg.group_size.min(m).max(1);
+
+    // Row processing order (act_order: largest diag(H) first — quantize the
+    // most activation-salient inputs before error accumulates).
+    let mut order: Vec<usize> = (0..m).collect();
+    if cfg.act_order {
+        order.sort_by(|&a, &b| h.at(b, b).partial_cmp(&h.at(a, a)).unwrap());
+    }
+
+    // Permuted, damped Hessian.
+    let lambda = cfg.damp_percent * h.trace() / m as f64;
+    let mut hp = Matrix::from_fn(m, m, |i, j| h.at(order[i], order[j]));
+    hp.add_diag(lambda.max(1e-12));
+
+    // U = chol(H⁻¹)ᵀ with escalating damping if H is badly conditioned.
+    let mut extra = 0.0;
+    let u = loop {
+        let mut hd = hp.clone();
+        if extra > 0.0 {
+            hd.add_diag(extra);
+        }
+        match inv_spd(&hd).and_then(|hinv| cholesky(&hinv)) {
+            Ok(l) => break l.transpose(),
+            Err(_) => {
+                extra = if extra == 0.0 { lambda.max(1e-9) } else { extra * 10.0 };
+                assert!(extra.is_finite() && extra < 1e18, "optq: H damping diverged");
+            }
+        }
+    };
+
+    // Working copy of W in permuted row order.
+    let mut wp = Matrix::from_fn(m, n, |i, j| w.at(order[i], j));
+
+    // Group bookkeeping follows the *original* row index so the output
+    // layout matches `QuantizedTensor`'s group-per-consecutive-rows scheme.
+    // With act_order on, rows of one group may be visited out of order, so
+    // params are computed lazily per (group, col) from the current wp state
+    // the first time any row of the group is quantized.
+    let num_groups = m.div_ceil(gs);
+    let mut scales = Matrix::zeros(num_groups, n);
+    let mut zeros = Matrix::zeros(num_groups, n);
+    let mut group_ready = vec![false; num_groups];
+    let mut codes = vec![0u8; m * n];
+
+    // Map original row → permuted position (to gather group members).
+    let mut pos_of = vec![0usize; m];
+    for (p, &orig) in order.iter().enumerate() {
+        pos_of[orig] = p;
+    }
+
+    let mut err = vec![0.0f64; n];
+    for i in 0..m {
+        let orig_row = order[i];
+        let g = orig_row / gs;
+        if !group_ready[g] {
+            // Fit params from the current (error-compensated) values of all
+            // group members, read from wp at their permuted positions.
+            let r0 = g * gs;
+            let r1 = ((g + 1) * gs).min(m);
+            for j in 0..n {
+                let vals: Vec<f64> = (r0..r1).map(|orig| wp.at(pos_of[orig], j)).collect();
+                let p = find_params(&vals, cfg.bits);
+                scales.set(g, j, p.scale);
+                zeros.set(g, j, p.zero);
+            }
+            group_ready[g] = true;
+        }
+
+        let d = u.at(i, i);
+        for j in 0..n {
+            let p = GroupParams { scale: scales.at(g, j), zero: zeros.at(g, j) };
+            let wv = wp.at(i, j);
+            let (c, dq) = quantize_value(wv, p, cfg.bits);
+            codes[orig_row * n + j] = c;
+            err[j] = (wv - dq) / d;
+        }
+        // Spread the error over the remaining rows: w_k -= U[i,k] · err.
+        for k in i + 1..m {
+            let uik = u.at(i, k);
+            if uik == 0.0 {
+                continue;
+            }
+            let row = wp.row_mut(k);
+            for j in 0..n {
+                row[j] -= uik * err[j];
+            }
+        }
+    }
+
+    QuantizedTensor { bits: cfg.bits, group_size: gs, rows: m, cols: n, codes, scales, zeros }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::syrk_t;
+    use crate::quant::grid::quantize_rtn;
+    use crate::quant::metrics::calibrated_error2;
+    use crate::util::prng::Rng;
+
+    fn setup(m: usize, n: usize, samples: usize, seed: u64) -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        // Correlated activations (realistic: features share variance).
+        let base = Matrix::randn(samples, m, 1.0, &mut rng);
+        let mix = Matrix::randn(m, m, 0.3, &mut rng);
+        let x = crate::linalg::matmul(&base, &mix.add(&Matrix::eye(m)));
+        let w = Matrix::randn(m, n, 0.5, &mut rng);
+        let h = syrk_t(&x);
+        (x, w, h)
+    }
+
+    #[test]
+    fn output_on_grid() {
+        let (_, w, h) = setup(32, 16, 128, 50);
+        let cfg = OptqConfig { bits: 3, group_size: 16, ..Default::default() };
+        let q = optq(&w, &h, &cfg);
+        // Re-quantizing the dequantized output with the same params is exact.
+        let deq = q.dequantize();
+        for i in 0..w.rows {
+            let g = q.group_of_row(i);
+            for j in 0..w.cols {
+                let p = GroupParams { scale: q.scales.at(g, j), zero: q.zeros.at(g, j) };
+                let (_, v) = quantize_value(deq.at(i, j), p, 3);
+                assert!((v - deq.at(i, j)).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn beats_rtn_on_calibrated_error() {
+        for seed in [51u64, 52, 53] {
+            let (_, w, h) = setup(48, 24, 256, seed);
+            for &bits in &[2u32, 3, 4] {
+                let cfg = OptqConfig { bits, group_size: 16, ..Default::default() };
+                let q_optq = optq(&w, &h, &cfg);
+                let q_rtn = quantize_rtn(&w, bits, 16);
+                let e_optq = calibrated_error2(&h, &w.sub(&q_optq.dequantize()));
+                let e_rtn = calibrated_error2(&h, &w.sub(&q_rtn.dequantize()));
+                assert!(
+                    e_optq <= e_rtn * 1.001,
+                    "seed={seed} bits={bits}: optq {e_optq} vs rtn {e_rtn}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn higher_bits_monotone() {
+        let (_, w, h) = setup(32, 8, 128, 54);
+        let errs: Vec<f64> = [2u32, 3, 4]
+            .iter()
+            .map(|&bits| {
+                let cfg = OptqConfig { bits, group_size: 32, ..Default::default() };
+                let q = optq(&w, &h, &cfg);
+                calibrated_error2(&h, &w.sub(&q.dequantize()))
+            })
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn act_order_runs_and_is_competitive() {
+        let (_, w, h) = setup(40, 12, 160, 55);
+        let base = OptqConfig { bits: 2, group_size: 40, ..Default::default() };
+        let ao = OptqConfig { act_order: true, ..base.clone() };
+        let e_base = calibrated_error2(&h, &w.sub(&optq(&w, &h, &base).dequantize()));
+        let e_ao = calibrated_error2(&h, &w.sub(&optq(&w, &h, &ao).dequantize()));
+        // act_order usually helps at 2-bit per-channel; at minimum it must
+        // stay in the same ballpark (not a correctness property, a sanity
+        // band — 2× tolerance).
+        assert!(e_ao < e_base * 2.0, "e_ao={e_ao} e_base={e_base}");
+    }
+
+    #[test]
+    fn identity_hessian_reduces_to_rtn() {
+        // With H = I there is no cross-row information: OPTQ == RTN when the
+        // whole matrix is a single group and rows are processed in order.
+        let mut rng = Rng::new(56);
+        let w = Matrix::randn(24, 6, 1.0, &mut rng);
+        let h = Matrix::eye(24);
+        let cfg = OptqConfig { bits: 4, group_size: 24, damp_percent: 0.0, act_order: false };
+        let q = optq(&w, &h, &cfg);
+        let r = quantize_rtn(&w, 4, 24);
+        // Identical codes (error feedback is still applied but U is diagonal
+        // ⇒ off-diagonal terms vanish ⇒ no compensation happens).
+        assert_eq!(q.codes, r.codes);
+    }
+
+    #[test]
+    fn rank_deficient_hessian_handled() {
+        // Fewer samples than features: H singular; damping must rescue it.
+        let mut rng = Rng::new(57);
+        let x = Matrix::randn(8, 32, 1.0, &mut rng);
+        let w = Matrix::randn(32, 8, 1.0, &mut rng);
+        let h = syrk_t(&x);
+        let cfg = OptqConfig { bits: 4, group_size: 32, ..Default::default() };
+        let q = optq(&w, &h, &cfg);
+        assert!(q.dequantize().max_abs().is_finite());
+    }
+}

@@ -1,0 +1,76 @@
+//! Bit-packing of quantization codes for on-disk checkpoints and for the
+//! packed-weights artifact consumed by the serving path.
+//!
+//! Codes are `b`-bit unsigned integers packed little-endian into `u32`
+//! words (the layout the Pallas kernel's reference unpacker in
+//! `python/compile/kernels/ref.py` mirrors — cross-checked by the golden
+//! test `rust/tests/golden_quant.rs`).
+
+/// Pack `codes` (each < 2^bits) into u32 words, little-endian bit order.
+pub fn pack_codes(codes: &[u8], bits: u32) -> Vec<u32> {
+    assert!((1..=8).contains(&bits));
+    let per_word = 32 / bits as usize;
+    let mut out = Vec::with_capacity(codes.len().div_ceil(per_word));
+    for chunk in codes.chunks(per_word) {
+        let mut word = 0u32;
+        for (k, &c) in chunk.iter().enumerate() {
+            debug_assert!((c as u32) < (1 << bits), "code {c} out of range for {bits} bits");
+            word |= (c as u32) << (k as u32 * bits);
+        }
+        out.push(word);
+    }
+    out
+}
+
+/// Unpack `n` codes from packed u32 words.
+pub fn unpack_codes(packed: &[u32], bits: u32, n: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let per_word = 32 / bits as usize;
+    let mask = ((1u64 << bits) - 1) as u32;
+    let mut out = Vec::with_capacity(n);
+    'outer: for &word in packed {
+        for k in 0..per_word {
+            if out.len() == n {
+                break 'outer;
+            }
+            out.push(((word >> (k as u32 * bits)) & mask) as u8);
+        }
+    }
+    assert_eq!(out.len(), n, "packed buffer too short");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_all_bitwidths() {
+        let mut rng = Rng::new(80);
+        for bits in 1..=8u32 {
+            for &n in &[0usize, 1, 7, 31, 32, 33, 1000] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+                let packed = pack_codes(&codes, bits);
+                assert_eq!(unpack_codes(&packed, bits, n), codes, "bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn packing_is_compact() {
+        let codes = vec![1u8; 64];
+        assert_eq!(pack_codes(&codes, 2).len(), 4); // 16 per word
+        assert_eq!(pack_codes(&codes, 4).len(), 8); // 8 per word
+        assert_eq!(pack_codes(&codes, 3).len(), 7); // 10 per word → ceil(64/10)
+    }
+
+    #[test]
+    fn known_layout() {
+        // 4-bit codes [1,2,3] → word 0x321.
+        assert_eq!(pack_codes(&[1, 2, 3], 4), vec![0x321]);
+        // 2-bit codes [3,0,1,2] → 0b10_01_00_11 = 0x93.
+        assert_eq!(pack_codes(&[3, 0, 1, 2], 2), vec![0x93]);
+    }
+}

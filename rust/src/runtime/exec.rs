@@ -1,0 +1,103 @@
+//! PJRT execution: load HLO-text artifacts, compile once per entry point,
+//! and run them from the Rust hot path with typed host tensors.
+//!
+//! This is the only module that touches the `xla` crate. Pattern follows
+//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`, with
+//! `return_tuple=True` artifacts unwrapped via `to_tuple()`.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::model::manifest::{EntrySpec, Manifest};
+use crate::runtime::tensor::Tensor;
+
+/// A compiled entry point bound to its manifest spec.
+pub struct CompiledEntry {
+    pub spec: EntrySpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledEntry {
+    /// Execute with inputs in manifest order. Validates shapes/dtypes
+    /// against the spec before dispatch; returns outputs in manifest order.
+    pub fn run(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "entry expects {} inputs, got {}",
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            anyhow::ensure!(
+                t.shape == s.shape && t.dtype() == s.dtype,
+                "input '{}' expects {:?} {:?}, got {:?} {:?}",
+                s.name,
+                s.shape,
+                s.dtype,
+                t.shape,
+                t.dtype()
+            );
+            literals.push(t.to_literal()?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.spec.outputs.len(),
+            "entry returned {} outputs, manifest says {}",
+            parts.len(),
+            self.spec.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, s)| Tensor::from_literal(lit, &s.shape, s.dtype))
+            .collect()
+    }
+}
+
+/// The runtime: one PJRT CPU client + lazily compiled entry points for one
+/// artifact directory (one model config).
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, CompiledEntry>,
+}
+
+impl Runtime {
+    /// Load the manifest under `dir` and create the PJRT CPU client.
+    pub fn load(dir: &Path) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        crate::info!(
+            "runtime: PJRT platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            dir.display()
+        );
+        Ok(Runtime { manifest, client, cache: HashMap::new() })
+    }
+
+    /// Compile (or fetch cached) an entry point.
+    pub fn entry(&mut self, name: &str) -> anyhow::Result<&CompiledEntry> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.entry(name)?.clone();
+            let path = self.manifest.hlo_path(name)?;
+            let t = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            crate::debug!("compiled entry '{name}' in {:.2}s", t.elapsed().as_secs_f64());
+            self.cache.insert(name.to_string(), CompiledEntry { spec, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Convenience: compile-if-needed and run.
+    pub fn run(&mut self, name: &str, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.entry(name)?.run(inputs)
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: the AOT bridge. Loads `artifacts/<config>/*.hlo.txt`
+//! (produced once by `make artifacts`) and executes them from Rust —
+//! Python is never on the request path.
+
+pub mod exec;
+pub mod tensor;
+
+pub use exec::{CompiledEntry, Runtime};
+pub use tensor::{Dtype, Tensor, TensorData};

@@ -1,0 +1,165 @@
+//! Host-side tensor values marshalled to/from PJRT literals.
+
+use crate::linalg::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> anyhow::Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => anyhow::bail!("unknown dtype '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I32 => "i32",
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host tensor: shape + typed buffer (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self.data {
+            TensorData::F32(_) => Dtype::F32,
+            TensorData::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            _ => panic!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            _ => panic!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> f32 {
+        assert_eq!(self.numel(), 1, "scalar() on non-scalar tensor");
+        match &self.data {
+            TensorData::F32(v) => v[0],
+            TensorData::I32(v) => v[0] as f32,
+        }
+    }
+
+    /// Matrix (f64) view of a 2-D f32 tensor.
+    pub fn to_matrix(&self) -> Matrix {
+        assert_eq!(self.shape.len(), 2, "to_matrix needs rank-2, got {:?}", self.shape);
+        Matrix::from_f32(self.shape[0], self.shape[1], self.as_f32())
+    }
+
+    pub fn from_matrix(m: &Matrix) -> Tensor {
+        Tensor::f32(vec![m.rows, m.cols], m.to_f32())
+    }
+
+    /// Convert to a PJRT literal.
+    pub fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read a literal back into a host tensor with a known spec shape/dtype.
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: Dtype) -> anyhow::Result<Tensor> {
+        let t = match dtype {
+            Dtype::F32 => Tensor::f32(shape.to_vec(), lit.to_vec::<f32>()?),
+            Dtype::I32 => Tensor::i32(shape.to_vec(), lit.to_vec::<i32>()?),
+        };
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.dtype(), Dtype::F32);
+        let m = t.to_matrix();
+        assert_eq!(m.at(1, 2), 6.0);
+        let back = Tensor::from_matrix(&m);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalars() {
+        let t = Tensor::scalar_f32(3.5);
+        assert_eq!(t.shape, Vec::<usize>::new());
+        assert_eq!(t.scalar(), 3.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::f32(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("i32").unwrap(), Dtype::I32);
+        assert!(Dtype::parse("f64").is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! Tiny argument parser (the sandbox has no `clap`).
+//!
+//! Supports `command --flag value --switch positional` style. Each subcommand
+//! in `main.rs` declares the options it understands; unknown flags are
+//! reported with the available set.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Flags are `--name value`; switches are `--name`
+    /// followed by another flag or end-of-args.
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        out.flags.insert(name.to_string(), it.next().unwrap().clone());
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_str(&self, name: &str) -> Option<String> {
+        self.flags.get(name).cloned()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.flags
+            .get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(&s.split_whitespace().map(String::from).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse("table --id 3 --fast --out reports pos1");
+        assert_eq!(a.command, "table");
+        assert_eq!(a.usize("id", 0), 3);
+        assert!(a.has("fast"));
+        assert_eq!(a.str("out", "x"), "reports");
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.usize("steps", 100), 100);
+        assert_eq!(a.f64("lr", 1e-3), 1e-3);
+        assert!(!a.has("fast"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // A value starting with '-' but not '--' is still a value.
+        let a = parse("x --shift -5");
+        assert_eq!(a.f64("shift", 0.0), -5.0);
+    }
+
+    #[test]
+    fn no_command_all_flags() {
+        let a = parse("--alpha 1");
+        assert_eq!(a.command, "");
+        assert_eq!(a.usize("alpha", 0), 1);
+    }
+}

@@ -1,0 +1,9 @@
+//! Foundational substrates built in-repo (the offline sandbox vendors only
+//! the `xla` crate closure — see DESIGN.md §3 for the substitution table).
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prng;
+pub mod threadpool;
+pub mod timer;

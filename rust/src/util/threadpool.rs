@@ -1,0 +1,151 @@
+//! Scoped thread pool for layer-parallel jobs (no `rayon` offline).
+//!
+//! The coordinator quantizes / initializes transformer layers as independent
+//! jobs. This pool executes `FnOnce` jobs on N worker threads and joins them,
+//! propagating panics, collecting results in submission order, and reporting
+//! per-job status to an optional observer (used by the scheduler's progress
+//! display and the failure-injection tests).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Outcome of one job as seen by the scheduler.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobStatus {
+    Done,
+    Panicked(String),
+}
+
+/// Run `jobs` on up to `workers` threads; return results in submission order.
+///
+/// Panics in a job are caught and rethrown after all jobs finish, so one bad
+/// layer cannot wedge the pool (and tests can assert on partial completion
+/// via `run_collect_status`).
+pub fn run_parallel<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let (results, statuses) = run_collect_status(workers, jobs);
+    for (i, s) in statuses.iter().enumerate() {
+        if let JobStatus::Panicked(msg) = s {
+            panic!("job {i} panicked: {msg}");
+        }
+    }
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Like [`run_parallel`] but never panics: returns per-job `Option<T>` plus
+/// statuses. Used by the scheduler tests with injected failures.
+pub fn run_collect_status<T, F>(
+    workers: usize,
+    jobs: Vec<F>,
+) -> (Vec<Option<T>>, Vec<JobStatus>)
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let n = jobs.len();
+    let workers = workers.max(1).min(n.max(1));
+    // Work queue: (index, job).
+    let queue: Arc<Mutex<Vec<(usize, F)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, Result<T, String>)>();
+
+    let mut handles = Vec::new();
+    for _ in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let job = { queue.lock().unwrap().pop() };
+            match job {
+                None => break,
+                Some((idx, f)) => {
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f))
+                        .map_err(|e| panic_message(&e));
+                    // Receiver may be gone if the caller panicked; ignore.
+                    let _ = tx.send((idx, result));
+                }
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let mut statuses: Vec<JobStatus> = vec![JobStatus::Done; n];
+    for (idx, r) in rx {
+        match r {
+            Ok(v) => results[idx] = Some(v),
+            Err(msg) => statuses[idx] = JobStatus::Panicked(msg),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    (results, statuses)
+}
+
+fn panic_message(e: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_submission_order() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..32usize)
+            .map(|i| {
+                Box::new(move || {
+                    // Vary the work so completion order differs.
+                    std::thread::sleep(std::time::Duration::from_micros((32 - i) as u64 * 10));
+                    i * i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let out = run_parallel(4, jobs);
+        assert_eq!(out, (0..32).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let jobs: Vec<_> = (0..5).map(|i| move || i + 1).collect();
+        assert_eq!(run_parallel(1, jobs), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_jobs_ok() {
+        let jobs: Vec<fn() -> ()> = vec![];
+        let out = run_parallel(4, jobs);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panics_reported_but_others_complete() {
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..8usize)
+            .map(|i| {
+                Box::new(move || {
+                    if i == 3 {
+                        panic!("injected failure on {i}");
+                    }
+                    i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        let (results, statuses) = run_collect_status(3, jobs);
+        assert!(matches!(statuses[3], JobStatus::Panicked(_)));
+        for i in 0..8 {
+            if i != 3 {
+                assert_eq!(results[i], Some(i));
+                assert_eq!(statuses[i], JobStatus::Done);
+            }
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Wall-clock timing + peak-RSS tracking for Table 10 and the §Perf log.
+
+use std::time::Instant;
+
+/// Simple scoped timer.
+pub struct Timer {
+    start: Instant,
+    pub label: String,
+}
+
+impl Timer {
+    pub fn start(label: &str) -> Self {
+        Self { start: Instant::now(), label: label.to_string() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timeit<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Current process peak resident set size in MiB (Linux `/proc/self/status`,
+/// `VmHWM`). Returns 0.0 if unavailable — callers treat it as "unknown".
+pub fn peak_rss_mib() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+/// Current RSS in MiB (`VmRSS`).
+pub fn rss_mib() -> f64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0.0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: f64 = rest
+                .trim()
+                .trim_end_matches("kB")
+                .trim()
+                .parse()
+                .unwrap_or(0.0);
+            return kb / 1024.0;
+        }
+    }
+    0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_sleep() {
+        let t = Timer::start("x");
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(t.elapsed_ms() >= 18.0);
+    }
+
+    #[test]
+    fn timeit_returns_value() {
+        let (v, s) = timeit(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn rss_is_positive_on_linux() {
+        assert!(peak_rss_mib() > 0.0);
+        assert!(rss_mib() > 0.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have produced `artifacts/micro/`; when it
+//! hasn't, every test skips with a message (so `cargo test` stays green on
+//! a fresh clone, and the Makefile's `test` target, which builds artifacts
+//! first, gets the full signal).
+
+use std::path::PathBuf;
+
+use cloq::model::{base_specs, init_base, lora_specs, zeros_for};
+use cloq::runtime::{Runtime, Tensor};
+use cloq::util::prng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/micro");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/micro missing — run `make artifacts` first");
+        None
+    }
+}
+
+fn random_batch(rt: &Runtime, rng: &mut Rng) -> (Tensor, Tensor) {
+    let cfg = &rt.manifest.config;
+    let n = cfg.batch * cfg.seq;
+    let tokens: Vec<i32> = (0..n).map(|_| rng.range(4, cfg.vocab as i64 - 1) as i32).collect();
+    (
+        Tensor::i32(vec![cfg.batch, cfg.seq], tokens),
+        Tensor::f32(vec![cfg.batch, cfg.seq], vec![1.0; n]),
+    )
+}
+
+#[test]
+fn eval_loss_of_random_model_is_near_uniform() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let mut rng = Rng::new(1);
+    let base = init_base(&rt.manifest, &mut rng).unwrap();
+    let lspecs = lora_specs(&rt.manifest).unwrap();
+    let lora = zeros_for(&lspecs);
+    let (tokens, mask) = random_batch(&rt, &mut rng);
+
+    let mut inputs = base.in_order();
+    inputs.extend(lora.in_order());
+    inputs.push(tokens);
+    inputs.push(mask);
+    let out = rt.run("eval_loss", &inputs).unwrap();
+    let (loss_sum, count) = (out[0].scalar(), out[1].scalar());
+    let cfg = &rt.manifest.config;
+    assert_eq!(count as usize, cfg.batch * (cfg.seq - 1));
+    let ce = loss_sum / count;
+    let uniform = (cfg.vocab as f32).ln();
+    assert!((ce - uniform).abs() < 1.2, "ce={ce} uniform={uniform}");
+}
+
+#[test]
+fn pretrain_step_decreases_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let mut rng = Rng::new(2);
+    let base = init_base(&rt.manifest, &mut rng).unwrap();
+    let bspecs = base_specs(&rt.manifest).unwrap();
+    let nb = bspecs.len();
+
+    let mut params = base.in_order();
+    let mut m: Vec<Tensor> = params.iter().map(|t| Tensor::zeros_f32(t.shape.clone())).collect();
+    let mut v = m.clone();
+    let (tokens, mask) = random_batch(&rt, &mut rng);
+
+    let mut losses = Vec::new();
+    for step in 0..15 {
+        let mut inputs = params.clone();
+        inputs.extend(m.clone());
+        inputs.extend(v.clone());
+        inputs.push(tokens.clone());
+        inputs.push(mask.clone());
+        inputs.push(Tensor::scalar_f32(3e-3)); // lr
+        inputs.push(Tensor::scalar_f32(0.0)); // wd
+        inputs.push(Tensor::scalar_f32((step + 1) as f32)); // t
+        let out = rt.run("pretrain_step", &inputs).unwrap();
+        losses.push(out.last().unwrap().scalar());
+        params = out[..nb].to_vec();
+        m = out[nb..2 * nb].to_vec();
+        v = out[2 * nb..3 * nb].to_vec();
+    }
+    assert!(
+        losses.last().unwrap() + 0.3 < losses[0],
+        "pretraining failed to learn: {losses:?}"
+    );
+}
+
+#[test]
+fn lora_step_trains_adapters_only() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let mut rng = Rng::new(3);
+    let base = init_base(&rt.manifest, &mut rng).unwrap();
+    let lspecs = lora_specs(&rt.manifest).unwrap();
+    let nl = lspecs.len();
+    // Non-zero LoRA init so gradients flow through both factors.
+    let mut lora: Vec<Tensor> = lspecs
+        .iter()
+        .map(|s| {
+            let data: Vec<f32> = (0..s.numel()).map(|_| rng.normal(0.0, 0.03) as f32).collect();
+            Tensor::f32(s.shape.clone(), data)
+        })
+        .collect();
+    let mut m: Vec<Tensor> = lora.iter().map(|t| Tensor::zeros_f32(t.shape.clone())).collect();
+    let mut v = m.clone();
+    let (tokens, mask) = random_batch(&rt, &mut rng);
+    let base_inputs = base.in_order();
+
+    let mut losses = Vec::new();
+    for step in 0..15 {
+        let mut inputs = base_inputs.clone();
+        inputs.extend(lora.clone());
+        inputs.extend(m.clone());
+        inputs.extend(v.clone());
+        inputs.push(tokens.clone());
+        inputs.push(mask.clone());
+        inputs.push(Tensor::scalar_f32(5e-3));
+        inputs.push(Tensor::scalar_f32(0.0));
+        inputs.push(Tensor::scalar_f32((step + 1) as f32));
+        let out = rt.run("lora_step", &inputs).unwrap();
+        losses.push(out.last().unwrap().scalar());
+        lora = out[..nl].to_vec();
+        m = out[nl..2 * nl].to_vec();
+        v = out[2 * nl..3 * nl].to_vec();
+    }
+    assert!(
+        *losses.last().unwrap() < losses[0],
+        "LoRA fine-tuning failed to reduce loss: {losses:?}"
+    );
+}
+
+#[test]
+fn capture_grams_returns_psd_matrices() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let mut rng = Rng::new(4);
+    let base = init_base(&rt.manifest, &mut rng).unwrap();
+    let (tokens, mask) = random_batch(&rt, &mut rng);
+    let mut inputs = base.in_order();
+    inputs.push(tokens);
+    inputs.push(mask);
+    let out = rt.run("capture_grams", &inputs).unwrap();
+    let cfg = &rt.manifest.config;
+    assert_eq!(out.len(), 6 * cfg.n_layers + 1); // grams + logit checksum
+    assert!(out.last().unwrap().scalar().is_finite());
+    let grams = &out[..out.len() - 1];
+    for (t, spec) in grams.iter().zip(&rt.manifest.entry("capture_grams").unwrap().outputs) {
+        assert_eq!(t.shape, spec.shape);
+        let h = t.to_matrix();
+        // Symmetric + PSD-ish (eigenvalues ≥ -eps relative to top).
+        assert!(h.max_diff(&h.transpose()) < 1e-2 * h.max_abs().max(1.0));
+        let e = cloq::linalg::eig::sym_eig(&h);
+        assert!(e.values.iter().all(|&l| l > -1e-3 * e.values[0].abs().max(1.0)));
+    }
+}
+
+#[test]
+fn qeval_matches_dense_eval_on_grid_weights() {
+    // The serving-path contract: quantized (codes) path == dense path on
+    // dequantized values — the Rust mirror of the python test, through the
+    // REAL artifacts and the REAL Pallas-lowered kernel.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let mut rng = Rng::new(5);
+    let mut base = init_base(&rt.manifest, &mut rng).unwrap();
+    let cfg = rt.manifest.config.clone();
+
+    // Quantize every block linear at 4 bits; replace base with dequantized.
+    let mut quant_inputs: Vec<(String, Tensor)> = Vec::new();
+    for l in 0..cfg.n_layers {
+        for (name, _din, _dout) in cfg.linear_specs(l) {
+            let w = base.get(&name).to_matrix();
+            let q = cloq::quant::quantize_rtn(&w, 4, cfg.group_size);
+            let deq = q.dequantize();
+            base.insert(&name, Tensor::from_matrix(&deq));
+            let codes_i32: Vec<i32> = q.codes.iter().map(|&c| c as i32).collect();
+            quant_inputs
+                .push((format!("{name}.codes"), Tensor::i32(vec![q.rows, q.cols], codes_i32)));
+            quant_inputs.push((format!("{name}.scales"), Tensor::from_matrix(&q.scales)));
+            quant_inputs.push((format!("{name}.zeros"), Tensor::from_matrix(&q.zeros)));
+        }
+    }
+    let lspecs = lora_specs(&rt.manifest).unwrap();
+    let lora: Vec<Tensor> = lspecs
+        .iter()
+        .map(|s| {
+            let data: Vec<f32> = (0..s.numel()).map(|_| rng.normal(0.0, 0.05) as f32).collect();
+            Tensor::f32(s.shape.clone(), data)
+        })
+        .collect();
+    let (tokens, mask) = random_batch(&rt, &mut rng);
+
+    // Dense eval.
+    let mut inputs = base.in_order();
+    inputs.extend(lora.clone());
+    inputs.push(tokens.clone());
+    inputs.push(mask.clone());
+    let dense = rt.run("eval_loss", &inputs).unwrap();
+
+    // Quantized eval: follow the manifest input order exactly.
+    let qspec = rt.manifest.entry("qeval_loss").unwrap().clone();
+    let mut qinputs = Vec::new();
+    let mut lora_iter = lspecs.iter().zip(lora.iter());
+    for s in &qspec.inputs {
+        if s.name == "tokens" {
+            qinputs.push(tokens.clone());
+        } else if s.name == "mask" {
+            qinputs.push(mask.clone());
+        } else if s.name.ends_with(".A") || s.name.ends_with(".B") {
+            let (ls, lt) = lora_iter.next().unwrap();
+            assert_eq!(ls.name, s.name, "lora order mismatch");
+            qinputs.push(lt.clone());
+        } else if let Some((_, t)) = quant_inputs.iter().find(|(n, _)| n == &s.name) {
+            qinputs.push(t.clone());
+        } else {
+            qinputs.push(base.get(&s.name).clone());
+        }
+    }
+    let quant = rt.run("qeval_loss", &qinputs).unwrap();
+
+    assert_eq!(dense[1].scalar(), quant[1].scalar(), "counts differ");
+    let (a, b) = (dense[0].scalar(), quant[0].scalar());
+    assert!(
+        (a - b).abs() < 2e-2 * a.abs().max(1.0),
+        "dense {a} vs quantized {b}"
+    );
+}

@@ -1,0 +1,173 @@
+//! Seeded random-sweep property tests for the linear-algebra substrate
+//! (the offline stand-in for proptest — hundreds of randomized cases per
+//! invariant with the failing seed printed on assert).
+
+use cloq::linalg::chol::{cholesky, inv_spd};
+use cloq::linalg::eig::sym_eig;
+use cloq::linalg::norms::{fro, spectral};
+use cloq::linalg::qr::qr;
+use cloq::linalg::{best_rank_r, matmul, matmul_nt, matmul_tn, pinv, svd, syrk_t, Matrix};
+use cloq::util::prng::Rng;
+
+/// Sweep driver: runs `f(seed, rng)` for many seeds.
+fn sweep(cases: usize, f: impl Fn(u64, &mut Rng)) {
+    for seed in 0..cases as u64 {
+        let mut rng = Rng::new(0xBEEF ^ seed.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        f(seed, &mut rng);
+    }
+}
+
+fn rand_dims(rng: &mut Rng, lo: usize, hi: usize) -> (usize, usize) {
+    (
+        rng.range(lo as i64, hi as i64) as usize,
+        rng.range(lo as i64, hi as i64) as usize,
+    )
+}
+
+#[test]
+fn matmul_is_associative_and_distributive() {
+    sweep(60, |seed, rng| {
+        let (m, k) = rand_dims(rng, 1, 20);
+        let (n, p) = rand_dims(rng, 1, 20);
+        let a = Matrix::randn(m, k, 1.0, rng);
+        let b = Matrix::randn(k, n, 1.0, rng);
+        let c = Matrix::randn(n, p, 1.0, rng);
+        // (AB)C == A(BC)
+        let left = matmul(&matmul(&a, &b), &c);
+        let right = matmul(&a, &matmul(&b, &c));
+        assert!(left.max_diff(&right) < 1e-8 * (k * n) as f64, "assoc seed={seed}");
+        // A(B + B') == AB + AB'
+        let b2 = Matrix::randn(k, n, 1.0, rng);
+        let d1 = matmul(&a, &b.add(&b2));
+        let d2 = matmul(&a, &b).add(&matmul(&a, &b2));
+        assert!(d1.max_diff(&d2) < 1e-9 * k as f64, "distrib seed={seed}");
+    });
+}
+
+#[test]
+fn transpose_products_consistent() {
+    sweep(60, |seed, rng| {
+        let (m, k) = rand_dims(rng, 1, 24);
+        let n = rng.range(1, 24) as usize;
+        let a = Matrix::randn(k, m, 1.0, rng);
+        let b = Matrix::randn(k, n, 1.0, rng);
+        assert!(
+            matmul_tn(&a, &b).max_diff(&matmul(&a.transpose(), &b)) < 1e-9 * k as f64,
+            "tn seed={seed}"
+        );
+        let c = Matrix::randn(n, m, 1.0, rng);
+        let at = a.transpose(); // m? a is k×m; at is m×k... use fresh shapes
+        let _ = at;
+        let d = Matrix::randn(5, m, 1.0, rng);
+        assert!(
+            matmul_nt(&d, &c.transpose().transpose()).max_diff(&matmul(&d, &c.transpose()))
+                < 1e-9 * m as f64,
+            "nt seed={seed}"
+        );
+    });
+}
+
+#[test]
+fn svd_reconstructs_arbitrary_shapes() {
+    sweep(50, |seed, rng| {
+        let (m, n) = rand_dims(rng, 1, 28);
+        let a = Matrix::randn(m, n, rng.range_f64(0.1, 3.0), rng);
+        let d = svd(&a);
+        assert!(
+            a.max_diff(&d.reconstruct()) < 1e-7 * (m.max(n) as f64),
+            "recon seed={seed} ({m}x{n})"
+        );
+        // Spectral norm == top singular value.
+        let s = spectral(&a);
+        assert!((s - d.s[0]).abs() < 1e-5 * d.s[0].max(1e-12), "spec seed={seed}");
+        // Frobenius² == Σσ².
+        let f2 = fro(&a).powi(2);
+        let s2: f64 = d.s.iter().map(|x| x * x).sum();
+        assert!((f2 - s2).abs() < 1e-7 * f2.max(1e-12), "fro seed={seed}");
+    });
+}
+
+#[test]
+fn eckart_young_dominates_random_candidates() {
+    sweep(30, |seed, rng| {
+        let (m, n) = rand_dims(rng, 2, 16);
+        let a = Matrix::randn(m, n, 1.0, rng);
+        let r = rng.range(1, m.min(n) as i64) as usize;
+        let opt = best_rank_r(&a, r);
+        let e_opt = fro(&a.sub(&opt)).powi(2);
+        for _ in 0..10 {
+            let p = Matrix::randn(m, r, 1.0, rng);
+            let q = Matrix::randn(r, n, 1.0, rng);
+            let e = fro(&a.sub(&matmul(&p, &q))).powi(2);
+            assert!(e_opt <= e + 1e-9, "seed={seed} r={r}");
+        }
+    });
+}
+
+#[test]
+fn cholesky_solve_and_inverse_agree() {
+    sweep(40, |seed, rng| {
+        let n = rng.range(1, 24) as usize;
+        let x = Matrix::randn(n + 4, n, 1.0, rng);
+        let mut h = syrk_t(&x);
+        h.add_diag(0.05);
+        let l = cholesky(&h).unwrap();
+        assert!(h.max_diff(&matmul_nt(&l, &l)) < 1e-8 * h.max_abs(), "chol seed={seed}");
+        let inv = inv_spd(&h).unwrap();
+        assert!(
+            matmul(&h, &inv).max_diff(&Matrix::eye(n)) < 1e-6,
+            "inv seed={seed} n={n}"
+        );
+    });
+}
+
+#[test]
+fn sym_eig_invariants() {
+    sweep(40, |seed, rng| {
+        let n = rng.range(1, 24) as usize;
+        let samples = rng.range(1, 32) as usize; // sometimes rank-deficient
+        let x = Matrix::randn(samples, n, 1.0, rng);
+        let h = syrk_t(&x);
+        let e = sym_eig(&h);
+        // Orthonormal vectors, PSD values, trace preserved.
+        let vtv = matmul(&e.vectors.transpose(), &e.vectors);
+        assert!(vtv.max_diff(&Matrix::eye(n)) < 1e-7, "orth seed={seed}");
+        assert!(e.values.iter().all(|&l| l > -1e-7 * e.values[0].abs().max(1.0)), "psd seed={seed}");
+        let tr: f64 = e.values.iter().sum();
+        assert!((tr - h.trace()).abs() < 1e-6 * h.trace().abs().max(1.0), "trace seed={seed}");
+        // Rank bound: at most `samples` nonzero eigenvalues.
+        let nonzero = e.values.iter().filter(|&&l| l > 1e-8 * e.values[0].max(1.0)).count();
+        assert!(nonzero <= samples.min(n), "rank seed={seed}: {nonzero} > {samples}");
+    });
+}
+
+#[test]
+fn pinv_solves_least_squares() {
+    sweep(30, |seed, rng| {
+        let (mut m, mut n) = rand_dims(rng, 2, 16);
+        if m < n {
+            std::mem::swap(&mut m, &mut n);
+        }
+        let a = Matrix::randn(m, n, 1.0, rng);
+        let ap = pinv(&a, 1e-12);
+        // x = A⁺b minimizes ‖Ax − b‖: check the normal equations AᵀAx = Aᵀb.
+        let b = Matrix::randn(m, 1, 1.0, rng);
+        let x = matmul(&ap, &b);
+        let lhs = matmul(&syrk_t(&a), &x);
+        let rhs = matmul_tn(&a, &b);
+        assert!(lhs.max_diff(&rhs) < 1e-6 * (m as f64), "normaleq seed={seed}");
+    });
+}
+
+#[test]
+fn qr_orthonormality_random_sweep() {
+    sweep(40, |seed, rng| {
+        let n = rng.range(1, 20) as usize;
+        let m = n + rng.range(0, 12) as usize;
+        let a = Matrix::randn(m, n, 1.0, rng);
+        let d = qr(&a);
+        assert!(a.max_diff(&matmul(&d.q, &d.r)) < 1e-8, "qr recon seed={seed}");
+        let qtq = matmul(&d.q.transpose(), &d.q);
+        assert!(qtq.max_diff(&Matrix::eye(n)) < 1e-8, "qr orth seed={seed}");
+    });
+}

@@ -1,0 +1,140 @@
+//! Random-sweep property tests for the quantization substrate.
+
+use cloq::linalg::{syrk_t, Matrix};
+use cloq::quant::grid::{find_params, quantize_rtn, quantize_value};
+use cloq::quant::metrics::calibrated_error2;
+use cloq::quant::nf::{nf_levels, quantize_nf};
+use cloq::quant::optq::{optq, OptqConfig};
+use cloq::quant::packing::{pack_codes, unpack_codes};
+use cloq::util::prng::Rng;
+
+fn sweep(cases: usize, f: impl Fn(u64, &mut Rng)) {
+    for seed in 0..cases as u64 {
+        let mut rng = Rng::new(0xFACE ^ seed.wrapping_mul(0x2545_F491_4F6C_DD1D));
+        f(seed, &mut rng);
+    }
+}
+
+#[test]
+fn rtn_codes_in_range_and_error_bounded() {
+    sweep(60, |seed, rng| {
+        let m = rng.range(1, 64) as usize;
+        let n = rng.range(1, 12) as usize;
+        let gs = [4usize, 8, 16, 64][rng.below(4)];
+        let bits = [2u32, 3, 4, 8][rng.below(4)];
+        let scale = rng.range_f64(1e-3, 10.0);
+        let w = Matrix::randn(m, n, scale, rng);
+        let q = quantize_rtn(&w, bits, gs);
+        let qmax = (1u32 << bits) - 1;
+        assert!(q.codes.iter().all(|&c| (c as u32) <= qmax), "range seed={seed}");
+        let deq = q.dequantize();
+        for i in 0..m {
+            let g = q.group_of_row(i);
+            for j in 0..n {
+                assert!(
+                    (w.at(i, j) - deq.at(i, j)).abs() <= q.scales.at(g, j) + 1e-9,
+                    "halfstep seed={seed} bits={bits}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn rtn_scale_equivariance() {
+    // quantize(c·W) == c·quantize(W) for c > 0 (same codes).
+    sweep(40, |seed, rng| {
+        let w = Matrix::randn(24, 6, 1.0, rng);
+        let c = rng.range_f64(0.1, 8.0);
+        let q1 = quantize_rtn(&w, 3, 8);
+        let q2 = quantize_rtn(&w.scale(c), 3, 8);
+        assert_eq!(q1.codes, q2.codes, "codes seed={seed} c={c}");
+        assert!(
+            q1.dequantize().scale(c).max_diff(&q2.dequantize()) < 1e-9 * c,
+            "deq seed={seed}"
+        );
+    });
+}
+
+#[test]
+fn grid_contains_zero() {
+    // Zero must always be exactly representable (padding correctness).
+    sweep(40, |seed, rng| {
+        let vals: Vec<f64> = (0..16).map(|_| rng.normal(3.0, 1.0)).collect(); // all-positive-ish
+        for bits in [2u32, 4] {
+            let p = find_params(&vals, bits);
+            let (_, dq) = quantize_value(0.0, p, bits);
+            assert!(dq.abs() < 1e-12, "zero seed={seed} bits={bits} dq={dq}");
+        }
+    });
+}
+
+#[test]
+fn nf_levels_monotone_and_bounded() {
+    for bits in [2u32, 3, 4] {
+        let l = nf_levels(bits);
+        assert_eq!(l.len(), 1 << bits);
+        assert!(l.windows(2).all(|w| w[0] < w[1]));
+        assert!(l[0] == -1.0 && *l.last().unwrap() == 1.0);
+        assert!(l.contains(&0.0));
+    }
+}
+
+#[test]
+fn nf_error_bounded_by_max_gap() {
+    sweep(40, |seed, rng| {
+        let w = Matrix::randn(32, 4, rng.range_f64(0.01, 5.0), rng);
+        let bits = [2u32, 3, 4][rng.below(3)];
+        let q = quantize_nf(&w, bits, 16);
+        let levels = nf_levels(bits);
+        let max_gap = levels.windows(2).map(|p| p[1] - p[0]).fold(0.0f64, f64::max);
+        let deq = q.dequantize();
+        for i in 0..32 {
+            let b = i / 16;
+            for j in 0..4 {
+                let bound = 0.5 * max_gap * q.absmax.at(b, j) + 1e-9;
+                assert!(
+                    (w.at(i, j) - deq.at(i, j)).abs() <= bound,
+                    "seed={seed} bits={bits}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn optq_never_worse_than_rtn_on_calibration() {
+    sweep(15, |seed, rng| {
+        let m = rng.range(8, 40) as usize;
+        let n = rng.range(2, 12) as usize;
+        let samples = m * 4;
+        let base = Matrix::randn(samples, (m / 2).max(1), 1.0, rng);
+        let mix = Matrix::randn((m / 2).max(1), m, 1.0, rng);
+        let x = cloq::linalg::matmul(&base, &mix);
+        let w = Matrix::randn(m, n, 0.5, rng);
+        let h = syrk_t(&x);
+        let bits = [2u32, 3, 4][rng.below(3)];
+        let gs = m; // per-channel
+        let q = optq(&w, &h, &OptqConfig { bits, group_size: gs, ..Default::default() });
+        let e_optq = calibrated_error2(&h, &w.sub(&q.dequantize()));
+        let e_rtn = calibrated_error2(&h, &w.sub(&quantize_rtn(&w, bits, gs).dequantize()));
+        assert!(
+            e_optq <= e_rtn * 1.02 + 1e-9,
+            "seed={seed} bits={bits}: optq {e_optq} rtn {e_rtn}"
+        );
+    });
+}
+
+#[test]
+fn packing_roundtrip_random() {
+    sweep(60, |seed, rng| {
+        let bits = rng.range(1, 8) as u32;
+        let n = rng.range(0, 500) as usize;
+        let codes: Vec<u8> = (0..n).map(|_| rng.below(1usize << bits) as u8).collect();
+        let packed = pack_codes(&codes, bits);
+        assert_eq!(unpack_codes(&packed, bits, n), codes, "seed={seed} bits={bits} n={n}");
+        // Compactness: within one word of optimal.
+        let per_word = 32 / bits as usize;
+        assert!(packed.len() <= n / per_word + 1);
+    });
+}
