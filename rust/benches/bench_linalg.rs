@@ -4,16 +4,23 @@
 //! init-cost number in Table 10.
 //!
 //! Run: `cargo bench --bench bench_linalg` (offline: add `--offline`).
+//!
+//! The tiled-vs-naive section emits BENCH_linalg.json (EXPERIMENTS.md
+//! §Perf).
 
-use cloq::bench::{bench, section};
-use cloq::linalg::chol::{cholesky, inv_spd};
+use cloq::bench::{bench, section, write_bench_json};
+use cloq::linalg::chol::{chol_inv_upper, cholesky, inv_spd};
 use cloq::linalg::eig::sym_eig;
-use cloq::linalg::{matmul, svd, syrk_t, Matrix};
+use cloq::linalg::{
+    matmul, matmul_naive, matmul_nt_tiled, matmul_tiled, svd, syrk_t_tiled, syrk_t, Matrix,
+};
+use cloq::util::json::Json;
 use cloq::util::prng::Rng;
 
 fn main() {
     let mut rng = Rng::new(1);
     let t = 0.3;
+    let mut records = Vec::new();
 
     section("GEMM (square)");
     for n in [32usize, 64, 128, 256] {
@@ -30,6 +37,37 @@ fn main() {
         bench(&format!("syrk_t {s}x{f}"), t, || syrk_t(&x));
     }
 
+    section("tiled vs naive GEMM (square)");
+    for n in [64usize, 128, 256, 384] {
+        let a = Matrix::randn(n, n, 1.0, &mut rng);
+        let b = Matrix::randn(n, n, 1.0, &mut rng);
+        let r_naive = bench(&format!("matmul_naive {n}^3"), t, || matmul_naive(&a, &b));
+        let r_tiled = bench(&format!("matmul_tiled {n}^3"), t, || matmul_tiled(&a, &b));
+        println!("    -> tiled speedup {:.2}x", r_naive.min_s / r_tiled.min_s);
+        let mut rec = Json::from_pairs(vec![
+            ("kernel", Json::from("matmul")),
+            ("n", Json::from(n)),
+            ("naive", r_naive.to_json()),
+            ("tiled", r_tiled.to_json()),
+            ("speedup", Json::from(r_naive.min_s / r_tiled.min_s)),
+        ]);
+        // Transposed-B panel form at the same size.
+        let r_nt = bench(&format!("matmul_nt_tiled {n}^3"), t, || matmul_nt_tiled(&a, &b));
+        rec.set("nt_tiled", r_nt.to_json());
+        records.push(rec);
+    }
+
+    section("tiled vs plain SYRK (Gram accumulation, 512-wide layer)");
+    {
+        let x = Matrix::randn(2048, 512, 1.0, &mut rng);
+        let r_tiled = bench("syrk_t_tiled 2048x512", t, || syrk_t_tiled(&x));
+        records.push(Json::from_pairs(vec![
+            ("kernel", Json::from("syrk_t")),
+            ("shape", Json::Arr(vec![Json::from(2048usize), Json::from(512usize)])),
+            ("tiled", r_tiled.to_json()),
+        ]));
+    }
+
     section("Cholesky + SPD inverse (OPTQ inner)");
     for n in [64usize, 128, 256] {
         let x = Matrix::randn(n + 16, n, 1.0, &mut rng);
@@ -37,6 +75,21 @@ fn main() {
         h.add_diag(0.1);
         bench(&format!("cholesky {n}"), t, || cholesky(&h).unwrap());
         bench(&format!("inv_spd {n}"), t, || inv_spd(&h).unwrap());
+        // The seed OPTQ setup (inv_spd + re-factorize) vs the fused root.
+        let r_seed = bench(&format!("U via inv_spd+cholesky {n}"), t, || {
+            cholesky(&inv_spd(&h).unwrap()).unwrap().transpose()
+        });
+        let r_fast = bench(&format!("U via chol_inv_upper {n}"), t, || {
+            chol_inv_upper(&h).unwrap()
+        });
+        println!("    -> root speedup {:.2}x", r_seed.min_s / r_fast.min_s);
+        records.push(Json::from_pairs(vec![
+            ("kernel", Json::from("inv_hessian_root")),
+            ("n", Json::from(n)),
+            ("seed_route", r_seed.to_json()),
+            ("chol_inv_upper", r_fast.to_json()),
+            ("speedup", Json::from(r_seed.min_s / r_fast.min_s)),
+        ]));
     }
 
     section("Symmetric eig (CLoQ step 3)");
@@ -51,4 +104,12 @@ fn main() {
         let a = Matrix::randn(m, n, 1.0, &mut rng);
         bench(&format!("svd {m}x{n}"), t, || svd(&a));
     }
+
+    write_bench_json(
+        "linalg",
+        Json::from_pairs(vec![
+            ("bench", Json::from("linalg_tiled_kernels")),
+            ("records", Json::Arr(records)),
+        ]),
+    );
 }

@@ -1,12 +1,14 @@
 //! OPTQ / MagR / RTN / NF quantization benchmarks across layer sizes and
 //! bit-widths — the per-layer cost column behind Table 10, plus the
-//! act-order ablation called out in DESIGN.md.
+//! act-order ablation called out in DESIGN.md and the lazy-batch blocking
+//! comparison behind EXPERIMENTS.md §Perf (emitted as BENCH_optq.json).
 
-use cloq::bench::{bench, section};
+use cloq::bench::{bench, section, write_bench_json};
 use cloq::linalg::{matmul, syrk_t, Matrix};
 use cloq::quant::magr::{magr, MagrConfig};
-use cloq::quant::optq::{optq, OptqConfig};
+use cloq::quant::optq::{optq, optq_unblocked, OptqConfig};
 use cloq::quant::{quantize_nf, quantize_rtn};
+use cloq::util::json::Json;
 use cloq::util::prng::Rng;
 
 fn layer(m: usize, n: usize, rng: &mut Rng) -> (Matrix, Matrix) {
@@ -51,5 +53,56 @@ fn main() {
     for iters in [30usize, 150] {
         let cfg = MagrConfig { alpha_rel: 1e-3, iters };
         bench(&format!("magr 96x256 iters={iters}"), t, || magr(&w, &h, &cfg));
+    }
+
+    // ---- lazy-batch blocking: the acceptance benchmark -------------------
+    // 512×512: big enough that the trailing submatrix (2 MiB f64) falls out
+    // of L2, which is exactly the regime the blocked engine targets. The
+    // parity suite (tests/parity_blocked.rs) proves both paths produce
+    // identical quantized output, so this ratio is a pure-speed comparison.
+    section("lazy-batch blocking: blocked vs row-by-row, 512x512 2-bit g64");
+    let (m512, n512) = (512usize, 512usize);
+    let (w, h) = layer(m512, n512, &mut rng);
+    let base_cfg = OptqConfig { bits: 2, group_size: 64, ..Default::default() };
+    let r_ref = bench("optq unblocked 512x512 (seed path)", t, || {
+        optq_unblocked(&w, &h, &base_cfg)
+    });
+    let mut blocked_records = Vec::new();
+    let mut best_min = f64::INFINITY;
+    let mut best_bs = 0usize;
+    for bs in [16usize, 32, 64, 128] {
+        let cfg = OptqConfig { block_size: bs, ..base_cfg.clone() };
+        let r = bench(&format!("optq blocked bs={bs} 512x512"), t, || optq(&w, &h, &cfg));
+        if r.min_s < best_min {
+            best_min = r.min_s;
+            best_bs = bs;
+        }
+        let mut rec = r.to_json();
+        rec.set("block_size", Json::from(bs));
+        blocked_records.push(rec);
+    }
+    let speedup = r_ref.min_s / best_min;
+    println!("\nblocked speedup @512x512: {speedup:.2}x (best block_size={best_bs})");
+
+    let record = Json::from_pairs(vec![
+        ("bench", Json::from("optq_lazy_batch_blocking")),
+        ("shape", Json::Arr(vec![Json::from(m512), Json::from(n512)])),
+        ("bits", Json::from(2usize)),
+        ("group_size", Json::from(64usize)),
+        ("unblocked", r_ref.to_json()),
+        ("blocked", Json::Arr(blocked_records)),
+        ("best_block_size", Json::from(best_bs)),
+        ("speedup_min_over_min", Json::from(speedup)),
+        (
+            "parity",
+            Json::from("bit-exact vs unblocked — enforced by rust/tests/parity_blocked.rs"),
+        ),
+    ]);
+    write_bench_json("optq", record);
+    if speedup < 1.0 {
+        // Not a hard failure: timing noise on loaded machines must not turn
+        // a measurement into a flaky bench exit; correctness is enforced by
+        // tests/parity_blocked.rs.
+        eprintln!("WARNING: blocked OPTQ measured slower than reference ({speedup:.2}x)");
     }
 }

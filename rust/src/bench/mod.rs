@@ -8,6 +8,8 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
+
 #[derive(Clone, Debug)]
 pub struct BenchResult {
     pub name: String,
@@ -27,6 +29,27 @@ impl BenchResult {
             fmt_time(self.min_s),
             fmt_time(self.stddev_s),
         )
+    }
+
+    /// Structured record for the BENCH_*.json reports.
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::from(self.name.clone())),
+            ("iters", Json::from(self.iters)),
+            ("mean_s", Json::from(self.mean_s)),
+            ("min_s", Json::from(self.min_s)),
+            ("stddev_s", Json::from(self.stddev_s)),
+        ])
+    }
+}
+
+/// Write a BENCH_<id>.json record next to the working directory, so bench
+/// runs leave a machine-readable trail (EXPERIMENTS.md §Perf).
+pub fn write_bench_json(id: &str, record: Json) {
+    let path = std::path::PathBuf::from(format!("BENCH_{id}.json"));
+    match std::fs::write(&path, record.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }
 

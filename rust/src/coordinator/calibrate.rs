@@ -9,12 +9,58 @@ use std::collections::BTreeMap;
 
 use crate::data::batcher::LmStream;
 use crate::data::corpus::{corpus_text, Split};
-use crate::linalg::Matrix;
+use crate::linalg::{syrk_t, Matrix};
 use crate::model::ParamStore;
 use crate::runtime::Runtime;
 
 /// Per-layer Gram matrices keyed by linear name (`l0.wq`, `l1.w_down`, …).
 pub type GramSet = BTreeMap<String, Matrix>;
+
+/// Streaming accumulator for per-layer Gram matrices — the single place
+/// every calibration source funnels through, so the hot accumulation path
+/// is routed through the tiled SYRK/add kernels regardless of whether the
+/// grams arrive pre-reduced from the AOT graph ([`GramAccumulator::add_gram`])
+/// or as raw activation batches captured Rust-side
+/// ([`GramAccumulator::add_activations`]).
+#[derive(Default)]
+pub struct GramAccumulator {
+    grams: GramSet,
+}
+
+impl GramAccumulator {
+    pub fn new() -> GramAccumulator {
+        GramAccumulator { grams: GramSet::new() }
+    }
+
+    /// Fold in a pre-reduced Gram contribution `H_b` for `name` (by value:
+    /// the first contribution is moved in, not copied).
+    pub fn add_gram(&mut self, name: &str, h: Matrix) {
+        match self.grams.get_mut(name) {
+            Some(acc) => acc.add_assign(&h),
+            None => {
+                self.grams.insert(name.to_string(), h);
+            }
+        }
+    }
+
+    /// Fold in a raw activation batch `X_b` (samples×features) for `name`:
+    /// `H_name += X_bᵀX_b` through the (size-dispatched, tiled) `syrk_t`.
+    pub fn add_activations(&mut self, name: &str, x: &Matrix) {
+        self.add_gram(name, syrk_t(x));
+    }
+
+    pub fn len(&self) -> usize {
+        self.grams.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.grams.is_empty()
+    }
+
+    pub fn finish(self) -> GramSet {
+        self.grams
+    }
+}
 
 /// Run calibration with `n_samples` sequences.
 pub fn calibrate(
@@ -38,7 +84,7 @@ pub fn calibrate(
     let text = corpus_text(corpus_seed, Split::Calibration, bytes);
     let mut stream = LmStream::new(&text, cfg.batch, cfg.seq);
 
-    let mut grams: GramSet = BTreeMap::new();
+    let mut acc = GramAccumulator::new();
     let mut seen = 0usize;
     let base_inputs = base.in_order();
     while seen < n_samples {
@@ -54,21 +100,17 @@ pub fn calibrate(
             "calibration forward produced non-finite logits"
         );
         for (t, name) in out.iter().zip(&names) {
-            let h = t.to_matrix();
-            grams
-                .entry(name.clone())
-                .and_modify(|acc| acc.add_assign(&h))
-                .or_insert(h);
+            acc.add_gram(name, t.to_matrix());
         }
         seen += cfg.batch;
     }
     crate::info!(
         "calibrated {} layers with {} samples ({} batches)",
-        grams.len(),
+        acc.len(),
         seen,
         seen / cfg.batch
     );
-    Ok(grams)
+    Ok(acc.finish())
 }
 
 /// Persist / reload Gram sets (they are expensive to recompute across the
@@ -93,8 +135,32 @@ pub fn load_grams(path: &std::path::Path) -> anyhow::Result<GramSet> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::syrk_t;
     use crate::util::prng::Rng;
+
+    #[test]
+    fn accumulator_matches_one_shot_gram() {
+        // Streaming batches through the accumulator == one SYRK over the
+        // stacked activations (associativity of the sum of Gram terms).
+        let mut rng = Rng::new(21);
+        let batches: Vec<Matrix> = (0..5).map(|_| Matrix::randn(16, 12, 1.0, &mut rng)).collect();
+        let mut acc = GramAccumulator::new();
+        assert!(acc.is_empty());
+        let mut stacked = batches[0].clone();
+        acc.add_activations("l0.wq", &batches[0]);
+        for b in &batches[1..] {
+            acc.add_activations("l0.wq", b);
+            stacked = stacked.vstack(b);
+        }
+        // A second layer fed pre-reduced grams takes the other entry path.
+        let h1 = syrk_t(&batches[0]);
+        acc.add_gram("l0.wk", h1.clone());
+        acc.add_gram("l0.wk", h1.clone());
+        assert_eq!(acc.len(), 2);
+        let grams = acc.finish();
+        let expect = syrk_t(&stacked);
+        assert!(grams["l0.wq"].max_diff(&expect) < 1e-9 * expect.max_abs().max(1.0));
+        assert!(grams["l0.wk"].max_diff(&h1.scale(2.0)) < 1e-12);
+    }
 
     #[test]
     fn gram_save_load_roundtrip() {

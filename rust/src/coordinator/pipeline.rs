@@ -201,8 +201,9 @@ pub fn init_model(
         icfg.group_size = rt.manifest.config.group_size;
     }
     let grams_opt = spec.method.needs_calibration().then_some(grams);
+    let workers = crate::util::threadpool::default_workers();
     let (init, secs) =
-        timeit(|| quantize_init(&rt.manifest, base, grams_opt, &icfg, spec.seed, 2));
+        timeit(|| quantize_init(&rt.manifest, base, grams_opt, &icfg, spec.seed, workers));
     Ok((init?, secs))
 }
 

@@ -11,7 +11,7 @@ use crate::model::{base_specs, lora_specs, ParamStore};
 use crate::quant::quantize_rtn;
 use crate::runtime::Tensor;
 use crate::util::prng::Rng;
-use crate::util::threadpool::run_parallel;
+use crate::util::threadpool::{run_collect_status, JobStatus};
 
 use super::calibrate::GramSet;
 
@@ -31,7 +31,13 @@ pub struct ModelInit {
 /// Apply `method` at `bits` to every linear layer of `base`.
 ///
 /// `grams` must contain every linear's H when the method is calibrated;
-/// `workers` sizes the scheduler's thread pool.
+/// `workers` sizes the scheduler's thread pool. The result is
+/// WORKER-COUNT-INDEPENDENT: each layer job derives its own RNG stream from
+/// `(seed, layer index)` and results are reassembled in manifest order, so
+/// `workers ∈ {1, 2, 8, …}` produce byte-identical `ModelInit`s (locked
+/// down by `tests/prop_coordinator.rs`). A panicking layer job surfaces as
+/// an error naming the layer (via [`JobStatus::Panicked`]) after the pool
+/// has drained the remaining jobs — one bad layer cannot wedge the stage.
 pub fn quantize_init(
     man: &Manifest,
     base: &ParamStore,
@@ -62,13 +68,31 @@ pub fn quantize_init(
             let cfg = cfg.clone();
             let name = name.clone();
             move || {
+                // Deterministic per-layer stream: a pure function of
+                // (seed, layer index), never of scheduling order.
                 let mut rng = Rng::new(seed ^ ((i as u64 + 1) * 0x9E37_79B9));
                 let li = init_layer(&w, h.as_ref(), &cfg, &mut rng);
                 (name, li)
             }
         })
         .collect();
-    let results = run_parallel(workers, jobs);
+    let (results, statuses) = run_collect_status(workers, jobs);
+    let failed: Vec<String> = statuses
+        .iter()
+        .enumerate()
+        .filter_map(|(i, s)| match s {
+            JobStatus::Panicked(msg) => Some(format!("{} ({msg})", linear_names[i])),
+            JobStatus::Done => None,
+        })
+        .collect();
+    anyhow::ensure!(
+        failed.is_empty(),
+        "quantize_init: {}/{} layer jobs panicked (the pool completed the rest): {}",
+        failed.len(),
+        linear_names.len(),
+        failed.join("; ")
+    );
+    let results: Vec<(String, crate::lowrank::LayerInit)> = results.into_iter().flatten().collect();
 
     // Reassemble in manifest order.
     let mut base_q = ParamStore::new();

@@ -1,19 +1,117 @@
-//! Dense kernels: blocked GEMM, GEMV, SYRK.
+//! Dense kernels: blocked/tiled GEMM, GEMV, SYRK, and the OPTQ lazy-batch
+//! panel update.
 //!
 //! These are the L3 hot loops (OPTQ is O(m²n) per layer; CLoQ's R·ΔW is a
-//! full GEMM). The GEMM uses i-k-j loop order over a packed row-major layout
-//! so the inner loop is a contiguous fused multiply-add over the output row —
-//! the standard cache-friendly form for row-major storage — plus k-blocking
-//! to keep the B panel resident in L1/L2.
+//! full GEMM; calibration accumulates Gram matrices). Each product comes in
+//! two forms behind one public entry point:
+//!
+//! * a **small-size path** — the simple k-blocked loop, lowest overhead for
+//!   the ≤64³ shapes that dominate unit tests and tiny layers;
+//! * a **cache-tiled path** — i/k/j tiling sized so the active C tile and
+//!   B panel stay resident in L1/L2 while streaming the large operand,
+//!   which is what keeps 256–1024-wide layers from going memory-bound.
+//!
+//! The public `matmul` / `matmul_tn` / `matmul_nt` / `syrk_t` dispatch on
+//! problem size; `matmul_naive` is the textbook reference the property
+//! tests compare against.
+//!
+//! **Determinism contract** (load-bearing for the OPTQ parity suite and the
+//! cross-language golden tests): every kernel accumulates each output
+//! element in ascending-k order with one rounding per multiply-add, so the
+//! naive, small, and tiled paths produce BIT-IDENTICAL results — tiling
+//! changes traversal order, never the per-element floating-point op
+//! sequence.
 
 use super::matrix::Matrix;
 
-/// C = A · B.
+/// Flop count (m·k·n) above which the tiled paths take over. 64³ keeps the
+/// dispatch trivially cheap and below any shape where tiling matters.
+const TILE_THRESHOLD_FLOPS: usize = 1 << 18;
+
+/// i-tile: rows of C/A kept hot per pass.
+const MC: usize = 64;
+/// k-tile: depth of the B panel held in cache.
+const KC: usize = 256;
+/// j-tile: width of the C/B panel (KC×NC f64 panel ≈ 1 MiB, L2-sized).
+const NC: usize = 512;
+
+/// y += a·x over contiguous slices, 4-way unrolled. Each `y[j]` gets one
+/// rounding per call — the accumulation-order building block shared by all
+/// kernel variants.
+#[inline]
+pub(crate) fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    let n = x.len();
+    let n4 = n / 4 * 4;
+    let mut j = 0;
+    while j < n4 {
+        y[j] += a * x[j];
+        y[j + 1] += a * x[j + 1];
+        y[j + 2] += a * x[j + 2];
+        y[j + 3] += a * x[j + 3];
+        j += 4;
+    }
+    while j < n {
+        y[j] += a * x[j];
+        j += 1;
+    }
+}
+
+/// y -= a·x over contiguous slices (the subtractive twin, used by the OPTQ
+/// error spread).
+#[inline]
+pub(crate) fn axpy_sub(y: &mut [f64], a: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    let n = x.len();
+    let n4 = n / 4 * 4;
+    let mut j = 0;
+    while j < n4 {
+        y[j] -= a * x[j];
+        y[j + 1] -= a * x[j + 1];
+        y[j + 2] -= a * x[j + 2];
+        y[j + 3] -= a * x[j + 3];
+        j += 4;
+    }
+    while j < n {
+        y[j] -= a * x[j];
+        j += 1;
+    }
+}
+
+/// C = A · B (size-dispatched).
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul inner dim {} vs {}", a.cols, b.rows);
+    if a.rows * a.cols * b.cols <= TILE_THRESHOLD_FLOPS {
+        matmul_small(a, b)
+    } else {
+        matmul_tiled(a, b)
+    }
+}
+
+/// Textbook i-j-k GEMM — the reference implementation for property tests
+/// and the tiled-vs-naive benchmarks. Strided B access: slow on purpose.
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.rows, "matmul inner dim {} vs {}", a.cols, b.rows);
     let (m, k, n) = (a.rows, a.cols, b.cols);
     let mut c = Matrix::zeros(m, n);
-    // k-blocking: keep a KB×n slab of B hot.
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0;
+            for kk in 0..k {
+                s += a.data[i * k + kk] * b.data[kk * n + j];
+            }
+            c.data[i * n + j] = s;
+        }
+    }
+    c
+}
+
+/// Small-size GEMM: k-blocking only, i-k-j loop order over packed row-major
+/// storage so the inner loop is a contiguous fused multiply-add over the
+/// output row.
+fn matmul_small(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
     const KB: usize = 64;
     for kb in (0..k).step_by(KB) {
         let kend = (kb + KB).min(k);
@@ -25,20 +123,37 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
                 if aik == 0.0 {
                     continue;
                 }
-                let brow = &b.data[kk * n..(kk + 1) * n];
-                // Contiguous FMA over the output row; unrolled by 4 to help
-                // the scalar backend (1-core sandbox, no explicit SIMD).
-                let mut j = 0;
-                while j + 4 <= n {
-                    crow[j] += aik * brow[j];
-                    crow[j + 1] += aik * brow[j + 1];
-                    crow[j + 2] += aik * brow[j + 2];
-                    crow[j + 3] += aik * brow[j + 3];
-                    j += 4;
-                }
-                while j < n {
-                    crow[j] += aik * brow[j];
-                    j += 1;
+                axpy(crow, aik, &b.data[kk * n..(kk + 1) * n]);
+            }
+        }
+    }
+    c
+}
+
+/// Cache-tiled GEMM: j-tiles (NC) bound the active C/B panel width, k-tiles
+/// (KC) keep a B panel L2-resident, i-tiles (MC) keep the C tile hot while
+/// it accumulates. Per-element accumulation order is still ascending k, so
+/// the result is bit-identical to [`matmul_naive`].
+pub fn matmul_tiled(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul inner dim {} vs {}", a.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for jb in (0..n).step_by(NC) {
+        let jend = (jb + NC).min(n);
+        for kb in (0..k).step_by(KC) {
+            let kend = (kb + KC).min(k);
+            for ib in (0..m).step_by(MC) {
+                let iend = (ib + MC).min(m);
+                for i in ib..iend {
+                    let arow = &a.data[i * k..(i + 1) * k];
+                    let crow = &mut c.data[i * n + jb..i * n + jend];
+                    for kk in kb..kend {
+                        let aik = arow[kk];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        axpy(crow, aik, &b.data[kk * n + jb..kk * n + jend]);
+                    }
                 }
             }
         }
@@ -46,9 +161,17 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// C = Aᵀ · B without materializing Aᵀ.
+/// C = Aᵀ · B without materializing Aᵀ (size-dispatched).
 pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.rows, b.rows, "matmul_tn inner dim");
+    if a.rows * a.cols * b.cols <= TILE_THRESHOLD_FLOPS {
+        matmul_tn_small(a, b)
+    } else {
+        matmul_tn_tiled(a, b)
+    }
+}
+
+fn matmul_tn_small(a: &Matrix, b: &Matrix) -> Matrix {
     let (k, m, n) = (a.rows, a.cols, b.cols);
     let mut c = Matrix::zeros(m, n);
     for kk in 0..k {
@@ -59,34 +182,91 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
             if aik == 0.0 {
                 continue;
             }
-            let crow = &mut c.data[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
+            axpy(&mut c.data[i * n..(i + 1) * n], aik, brow);
+        }
+    }
+    c
+}
+
+/// Tiled Aᵀ·B: i-tiles keep an MC×n stripe of C hot across the full k
+/// sweep instead of re-streaming all of C once per k step.
+pub fn matmul_tn_tiled(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows, b.rows, "matmul_tn inner dim");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for ib in (0..m).step_by(MC) {
+        let iend = (ib + MC).min(m);
+        for kk in 0..k {
+            let arow = &a.data[kk * m..(kk + 1) * m];
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for i in ib..iend {
+                let aik = arow[i];
+                if aik == 0.0 {
+                    continue;
+                }
+                axpy(&mut c.data[i * n..(i + 1) * n], aik, brow);
             }
         }
     }
     c
 }
 
-/// C = A · Bᵀ without materializing Bᵀ (inner loops are two contiguous rows).
+/// C = A · Bᵀ without materializing Bᵀ (size-dispatched; inner loops are
+/// two contiguous rows).
 pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols, b.cols, "matmul_nt inner dim");
+    if a.rows * a.cols * b.rows <= TILE_THRESHOLD_FLOPS {
+        matmul_nt_small(a, b)
+    } else {
+        matmul_nt_tiled(a, b)
+    }
+}
+
+fn matmul_nt_small(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut c = Matrix::zeros(m, n);
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
         for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
-            c.data[i * n + j] = dot(arow, brow);
+            c.data[i * n + j] = dot(arow, &b.data[j * k..(j + 1) * k]);
+        }
+    }
+    c
+}
+
+/// Tiled A·Bᵀ: j-tiles sized so the active B row panel stays L2-resident
+/// while every A row streams past it once per tile.
+pub fn matmul_nt_tiled(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "matmul_nt inner dim");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    // B panel budget ≈ 256 KiB of f64.
+    let jt = (32_768 / k.max(1)).clamp(8, n.max(8));
+    for jb in (0..n).step_by(jt) {
+        let jend = (jb + jt).min(n);
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            for j in jb..jend {
+                c.data[i * n + j] = dot(arow, &b.data[j * k..(j + 1) * k]);
+            }
         }
     }
     c
 }
 
 /// Gram matrix H = Aᵀ · A (symmetric rank-k update; only computes the upper
-/// triangle then mirrors). This is the calibration hot path when activations
-/// are accumulated Rust-side.
+/// triangle then mirrors). This is the calibration hot path when
+/// activations are accumulated Rust-side (size-dispatched).
 pub fn syrk_t(a: &Matrix) -> Matrix {
+    let (k, n) = (a.rows, a.cols);
+    if n * n * k / 2 <= TILE_THRESHOLD_FLOPS {
+        syrk_t_small(a)
+    } else {
+        syrk_t_tiled(a)
+    }
+}
+
+fn syrk_t_small(a: &Matrix) -> Matrix {
     let (k, n) = (a.rows, a.cols);
     let mut h = Matrix::zeros(n, n);
     for kk in 0..k {
@@ -96,19 +276,72 @@ pub fn syrk_t(a: &Matrix) -> Matrix {
             if ri == 0.0 {
                 continue;
             }
-            let hrow = &mut h.data[i * n..(i + 1) * n];
-            for j in i..n {
-                hrow[j] += ri * row[j];
+            axpy(&mut h.data[i * n + i..(i + 1) * n], ri, &row[i..]);
+        }
+    }
+    mirror_upper(&mut h);
+    h
+}
+
+/// Tiled SYRK: i-tiles keep an MC-row stripe of H hot across the whole
+/// sample sweep — for 512-wide layers H is ~2 MiB and the untiled form
+/// re-streams all of it once per sample row.
+pub fn syrk_t_tiled(a: &Matrix) -> Matrix {
+    let (k, n) = (a.rows, a.cols);
+    let mut h = Matrix::zeros(n, n);
+    for ib in (0..n).step_by(MC) {
+        let iend = (ib + MC).min(n);
+        for kk in 0..k {
+            let row = &a.data[kk * n..(kk + 1) * n];
+            for i in ib..iend {
+                let ri = row[i];
+                if ri == 0.0 {
+                    continue;
+                }
+                axpy(&mut h.data[i * n + i..(i + 1) * n], ri, &row[i..]);
             }
         }
     }
-    // Mirror upper → lower.
+    mirror_upper(&mut h);
+    h
+}
+
+fn mirror_upper(h: &mut Matrix) {
+    let n = h.rows;
     for i in 0..n {
         for j in 0..i {
             h.data[i * n + j] = h.data[j * n + i];
         }
     }
-    h
+}
+
+/// OPTQ's lazy-batch deferred error spread as one panel product:
+///
+/// ```text
+///   c[k, :] -= Σ_{t=0..nt} a[t0+t, k] · b[t, :]     for k in row0..c.rows
+/// ```
+///
+/// i.e. `C_tail -= A_panelᵀ · B` where the panel is rows `t0..t0+nt` of `a`
+/// restricted to columns `row0..`. Each trailing row of `c` is touched
+/// ONCE per block instead of once per quantized row — the memory-traffic
+/// win behind blocked OPTQ. `t` runs in ascending order per element, so
+/// the result is bit-identical to applying the `nt` rank-1 updates
+/// row-by-row (the parity suite relies on this).
+pub fn sub_matmul_tn_tail(c: &mut Matrix, row0: usize, a: &Matrix, t0: usize, nt: usize, b: &Matrix) {
+    assert_eq!(a.cols, c.rows, "panel column space must index c's rows");
+    assert_eq!(b.cols, c.cols, "update width mismatch");
+    assert!(t0 + nt <= a.rows && nt <= b.rows, "panel rows out of range");
+    let n = c.cols;
+    for k in row0..c.rows {
+        let crow = &mut c.data[k * n..(k + 1) * n];
+        for t in 0..nt {
+            let utk = a.data[(t0 + t) * a.cols + k];
+            if utk == 0.0 {
+                continue;
+            }
+            axpy_sub(crow, utk, &b.data[t * n..(t + 1) * n]);
+        }
+    }
 }
 
 /// y = A · x.
@@ -163,20 +396,6 @@ mod tests {
     use super::*;
     use crate::util::prng::Rng;
 
-    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
-        let mut c = Matrix::zeros(a.rows, b.cols);
-        for i in 0..a.rows {
-            for j in 0..b.cols {
-                let mut s = 0.0;
-                for k in 0..a.cols {
-                    s += a.at(i, k) * b.at(k, j);
-                }
-                c.set(i, j, s);
-            }
-        }
-        c
-    }
-
     #[test]
     fn matmul_matches_naive() {
         let mut rng = Rng::new(3);
@@ -184,7 +403,21 @@ mod tests {
             let a = Matrix::randn(m, k, 1.0, &mut rng);
             let b = Matrix::randn(k, n, 1.0, &mut rng);
             let c = matmul(&a, &b);
-            assert!(c.max_diff(&naive_matmul(&a, &b)) < 1e-10);
+            assert!(c.max_diff(&matmul_naive(&a, &b)) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn tiled_paths_bit_identical_to_naive() {
+        // The determinism contract: tiling must not change per-element
+        // accumulation order. Shapes straddle every tile boundary.
+        let mut rng = Rng::new(13);
+        for &(m, k, n) in &[(63, 65, 64), (65, 257, 31), (64, 256, 512), (66, 258, 514), (2, 300, 5)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let naive = matmul_naive(&a, &b);
+            assert_eq!(matmul_tiled(&a, &b).data, naive.data, "{m}x{k}x{n}");
+            assert_eq!(matmul(&a, &b).data, naive.data, "{m}x{k}x{n} dispatch");
         }
     }
 
@@ -199,6 +432,17 @@ mod tests {
     }
 
     #[test]
+    fn transposed_tiled_variants_match_small() {
+        let mut rng = Rng::new(14);
+        // Big enough that the tiled code paths differ from the small ones.
+        let a = Matrix::randn(300, 70, 1.0, &mut rng);
+        let b = Matrix::randn(300, 90, 1.0, &mut rng);
+        assert_eq!(matmul_tn_tiled(&a, &b).data, matmul_tn_small(&a, &b).data);
+        let c = Matrix::randn(80, 70, 1.0, &mut rng);
+        assert_eq!(matmul_nt_tiled(&a, &c).data, matmul_nt_small(&a, &c).data);
+    }
+
+    #[test]
     fn syrk_is_gram() {
         let mut rng = Rng::new(5);
         let a = Matrix::randn(40, 16, 1.0, &mut rng);
@@ -206,6 +450,63 @@ mod tests {
         assert!(h.max_diff(&matmul(&a.transpose(), &a)) < 1e-9);
         // Symmetry.
         assert!(h.max_diff(&h.transpose()) < 1e-12);
+    }
+
+    #[test]
+    fn syrk_tiled_bit_identical() {
+        let mut rng = Rng::new(15);
+        for &(k, n) in &[(10, 65), (33, 130), (200, 96)] {
+            let a = Matrix::randn(k, n, 1.0, &mut rng);
+            assert_eq!(syrk_t_tiled(&a).data, syrk_t_small(&a).data, "{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn panel_update_matches_rank1_sequence() {
+        // sub_matmul_tn_tail == applying each rank-1 update row-by-row, to
+        // the bit (OPTQ's blocked/unblocked parity rests on this).
+        let mut rng = Rng::new(16);
+        let (m, n, t0, nt, row0) = (23, 9, 4, 6, 10);
+        let u = Matrix::randn(m, m, 1.0, &mut rng);
+        let errs = Matrix::randn(nt, n, 1.0, &mut rng);
+        let w0 = Matrix::randn(m, n, 1.0, &mut rng);
+
+        let mut seq = w0.clone();
+        for t in 0..nt {
+            for k in row0..m {
+                let utk = u.at(t0 + t, k);
+                if utk == 0.0 {
+                    continue;
+                }
+                // Same per-element op order: t ascending for each (k, j).
+                for j in 0..n {
+                    *seq.at_mut(k, j) -= utk * errs.at(t, j);
+                }
+            }
+        }
+
+        let mut got = w0.clone();
+        sub_matmul_tn_tail(&mut got, row0, &u, t0, nt, &errs);
+        assert_eq!(got.data, seq.data);
+        // Rows before row0 untouched.
+        for k in 0..row0 {
+            assert_eq!(got.row(k), w0.row(k));
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_ok() {
+        let a = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(5, 3);
+        assert_eq!(matmul(&a, &b).rows, 0);
+        let a = Matrix::zeros(4, 0);
+        let b = Matrix::zeros(0, 3);
+        let c = matmul(&a, &b);
+        assert_eq!((c.rows, c.cols), (4, 3));
+        assert!(c.max_abs() == 0.0);
+        assert_eq!(matmul_naive(&a, &b).data, c.data);
+        let e = Matrix::zeros(0, 4);
+        assert_eq!(syrk_t(&e).rows, 4);
     }
 
     #[test]

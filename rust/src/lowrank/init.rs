@@ -154,7 +154,7 @@ pub fn init_layer(w: &Matrix, h: Option<&Matrix>, cfg: &InitConfig, rng: &mut Rn
                     bits: cfg.bits,
                     group_size: cfg.group_size,
                     damp_percent: cfg.damp_percent,
-                    act_order: false,
+                    ..Default::default()
                 },
             );
             let (a, b) = std_lora(rng);
@@ -201,7 +201,7 @@ pub fn init_layer(w: &Matrix, h: Option<&Matrix>, cfg: &InitConfig, rng: &mut Rn
                     bits: cfg.bits,
                     group_size: cfg.group_size,
                     damp_percent: cfg.damp_percent,
-                    act_order: false,
+                    ..Default::default()
                 },
             );
             let q_deq = q.dequantize();

@@ -15,13 +15,41 @@
 //!       w_k  -= U[i,k] · err    for k > i
 //! ```
 //!
-//! This is exactly the GPTQ recursion, expressed without the lazy-batch
-//! blocking (layer sizes here are ≤ ~1k so the simple form is both clear
-//! and fast — see EXPERIMENTS.md §Perf for measurements).
+//! # The blocked (lazy-batch) engine
+//!
+//! The recursion above touches EVERY remaining row after quantizing each
+//! row — m passes over an ever-shrinking trailing submatrix, which goes
+//! memory-bound as soon as `W` falls out of L2 (512×512 f64 is already
+//! 2 MiB). [`optq`] therefore runs GPTQ's lazy-batch blocking: rows are
+//! quantized in blocks of [`OptqConfig::block_size`]; inside a block the
+//! error is spread immediately (the block is cache-hot), while the update
+//! to the rows *beyond* the block is accumulated in an error panel `E` and
+//! applied once per block as a single panel product
+//! `W_tail -= U_panelᵀ·E` ([`sub_matmul_tn_tail`]) — the trailing matrix is
+//! streamed once per block instead of once per row.
+//!
+//! **Parity contract:** the blocked engine is BIT-IDENTICAL to the
+//! row-by-row reference ([`optq_unblocked`], retained as the oracle), for
+//! every bit-width / group size / block size / act-order setting. Two
+//! properties make this exact rather than approximate:
+//!
+//! * the deferred panel product accumulates each trailing element's
+//!   updates in ascending row order — the same per-element floating-point
+//!   op sequence the reference applies one row at a time;
+//! * lazy group-parameter fits that need a trailing member's value replay
+//!   the block's pending updates for that member on a copy, in the same
+//!   order, before fitting (`fit_group_blocked`).
+//!
+//! `rust/tests/parity_blocked.rs` locks this down across bits ∈ {2,3,4},
+//! group sizes, non-divisible block edges and act-order; the speedup is
+//! measured by `cargo bench --bench bench_optq` (≥2× on a 512×512 layer —
+//! see EXPERIMENTS.md §Perf, which also covers the `chol_inv_upper` root
+//! that replaced the seed's `inv_spd`+`cholesky` setup in BOTH paths).
 
 use super::grid::{find_params, quantize_value, GroupParams, QuantizedTensor};
-use crate::linalg::chol::{cholesky, inv_spd};
-use crate::linalg::Matrix;
+use crate::linalg::blas::axpy_sub;
+use crate::linalg::chol::chol_inv_upper;
+use crate::linalg::{sub_matmul_tn_tail, Matrix};
 
 /// OPTQ configuration.
 #[derive(Clone, Debug)]
@@ -34,19 +62,35 @@ pub struct OptqConfig {
     /// Process rows in descending diag(H) order (GPTQ's `act_order` /
     /// "activation order" heuristic). Ablated in `bench_optq`.
     pub act_order: bool,
+    /// Lazy-batch block size: rows quantized per block before the
+    /// accumulated error panel is applied to the trailing rows as one
+    /// product. `<= 1` selects the row-by-row reference path.
+    pub block_size: usize,
 }
 
 impl Default for OptqConfig {
     fn default() -> Self {
-        Self { bits: 4, group_size: 64, damp_percent: 0.01, act_order: false }
+        Self { bits: 4, group_size: 64, damp_percent: 0.01, act_order: false, block_size: 32 }
     }
 }
 
-/// Quantize `w` (m×n) against Gram matrix `h` (m×m, *undamped*; we damp a
-/// copy internally). Returns the quantized tensor; `q.dequantize()` lies on
-/// the quantization grid.
-pub fn optq(w: &Matrix, h: &Matrix, cfg: &OptqConfig) -> QuantizedTensor {
-    let (m, n) = (w.rows, w.cols);
+/// Shared state of both engines after setup: the row permutation, the
+/// inverse-Hessian root, and the permuted working copy of `W`.
+struct Prep {
+    /// Permuted position → original row index.
+    order: Vec<usize>,
+    /// Original row index → permuted position.
+    pos_of: Vec<usize>,
+    /// Upper-triangular `U` with `H_p⁻¹ = UᵀU` (damped, permuted H).
+    u: Matrix,
+    /// Working copy of `W` in permuted row order.
+    wp: Matrix,
+    /// Effective group size (clamped to `[1, m]`).
+    gs: usize,
+}
+
+fn prepare(w: &Matrix, h: &Matrix, cfg: &OptqConfig) -> Prep {
+    let m = w.rows;
     assert_eq!(h.rows, m);
     assert_eq!(h.cols, m);
     let gs = cfg.group_size.min(m).max(1);
@@ -57,21 +101,26 @@ pub fn optq(w: &Matrix, h: &Matrix, cfg: &OptqConfig) -> QuantizedTensor {
     if cfg.act_order {
         order.sort_by(|&a, &b| h.at(b, b).partial_cmp(&h.at(a, a)).unwrap());
     }
+    let mut pos_of = vec![0usize; m];
+    for (p, &orig) in order.iter().enumerate() {
+        pos_of[orig] = p;
+    }
 
     // Permuted, damped Hessian.
     let lambda = cfg.damp_percent * h.trace() / m as f64;
     let mut hp = Matrix::from_fn(m, m, |i, j| h.at(order[i], order[j]));
     hp.add_diag(lambda.max(1e-12));
 
-    // U = chol(H⁻¹)ᵀ with escalating damping if H is badly conditioned.
+    // U with H⁻¹ = UᵀU via the flip-Cholesky route (no explicit inverse),
+    // with escalating damping if H is badly conditioned.
     let mut extra = 0.0;
     let u = loop {
         let mut hd = hp.clone();
         if extra > 0.0 {
             hd.add_diag(extra);
         }
-        match inv_spd(&hd).and_then(|hinv| cholesky(&hinv)) {
-            Ok(l) => break l.transpose(),
+        match chol_inv_upper(&hd) {
+            Ok(u) => break u,
             Err(_) => {
                 extra = if extra == 0.0 { lambda.max(1e-9) } else { extra * 10.0 };
                 assert!(extra.is_finite() && extra < 1e18, "optq: H damping diverged");
@@ -79,66 +128,194 @@ pub fn optq(w: &Matrix, h: &Matrix, cfg: &OptqConfig) -> QuantizedTensor {
         }
     };
 
-    // Working copy of W in permuted row order.
-    let mut wp = Matrix::from_fn(m, n, |i, j| w.at(order[i], j));
+    let wp = Matrix::from_fn(m, w.cols, |i, j| w.at(order[i], j));
+    Prep { order, pos_of, u, wp, gs }
+}
 
-    // Group bookkeeping follows the *original* row index so the output
-    // layout matches `QuantizedTensor`'s group-per-consecutive-rows scheme.
-    // With act_order on, rows of one group may be visited out of order, so
-    // params are computed lazily per (group, col) from the current wp state
-    // the first time any row of the group is quantized.
-    let num_groups = m.div_ceil(gs);
-    let mut scales = Matrix::zeros(num_groups, n);
-    let mut zeros = Matrix::zeros(num_groups, n);
-    let mut group_ready = vec![false; num_groups];
-    let mut codes = vec![0u8; m * n];
+/// Per-layer output bookkeeping shared by both engines. Group params follow
+/// the *original* row index so the output layout matches `QuantizedTensor`'s
+/// group-per-consecutive-rows scheme; with act_order on, rows of one group
+/// may be visited out of order, so params are computed lazily per group from
+/// the current error-compensated state the first time any member is visited.
+struct Out {
+    scales: Matrix,
+    zeros: Matrix,
+    group_ready: Vec<bool>,
+    codes: Vec<u8>,
+}
 
-    // Map original row → permuted position (to gather group members).
-    let mut pos_of = vec![0usize; m];
-    for (p, &orig) in order.iter().enumerate() {
-        pos_of[orig] = p;
+impl Out {
+    fn new(m: usize, n: usize, gs: usize) -> Out {
+        let num_groups = m.div_ceil(gs);
+        Out {
+            scales: Matrix::zeros(num_groups, n),
+            zeros: Matrix::zeros(num_groups, n),
+            group_ready: vec![false; num_groups],
+            codes: vec![0u8; m * n],
+        }
     }
+}
+
+/// Quantize `w` (m×n) against Gram matrix `h` (m×m, *undamped*; we damp a
+/// copy internally) with the blocked lazy-batch engine. Returns the
+/// quantized tensor; `q.dequantize()` lies on the quantization grid.
+/// Bit-identical to [`optq_unblocked`] (see the module docs).
+pub fn optq(w: &Matrix, h: &Matrix, cfg: &OptqConfig) -> QuantizedTensor {
+    if cfg.block_size <= 1 {
+        return optq_unblocked(w, h, cfg);
+    }
+    let (m, n) = (w.rows, w.cols);
+    let mut p = prepare(w, h, cfg);
+    let gs = p.gs;
+    let mut out = Out::new(m, n, gs);
+
+    let bs = cfg.block_size.min(m.max(1));
+    let mut errs = Matrix::zeros(bs, n);
+    let mut b0 = 0usize;
+    while b0 < m {
+        let b1 = (b0 + bs).min(m);
+        for i in b0..b1 {
+            let orig_row = p.order[i];
+            let g = orig_row / gs;
+            if !out.group_ready[g] {
+                fit_group_blocked(&p, &errs, &mut out, g, b0, b1, i, cfg.bits);
+            }
+            let d = p.u.at(i, i);
+            for j in 0..n {
+                let gp = GroupParams { scale: out.scales.at(g, j), zero: out.zeros.at(g, j) };
+                let wv = p.wp.at(i, j);
+                let (c, dq) = quantize_value(wv, gp, cfg.bits);
+                out.codes[orig_row * n + j] = c;
+                errs.set(i - b0, j, (wv - dq) / d);
+            }
+            // Spread the error over the rest of the block immediately (the
+            // block is cache-hot); rows beyond the block wait for the panel
+            // product below.
+            for k in i + 1..b1 {
+                let uik = p.u.at(i, k);
+                if uik == 0.0 {
+                    continue;
+                }
+                axpy_sub(p.wp.row_mut(k), uik, errs.row(i - b0));
+            }
+        }
+        // Deferred update: wp[b1.., :] -= U[b0..b1, b1..]ᵀ · E, one pass
+        // over the trailing rows per block.
+        sub_matmul_tn_tail(&mut p.wp, b1, &p.u, b0, b1 - b0, &errs);
+        b0 = b1;
+    }
+
+    QuantizedTensor {
+        bits: cfg.bits,
+        group_size: gs,
+        rows: m,
+        cols: n,
+        codes: out.codes,
+        scales: out.scales,
+        zeros: out.zeros,
+    }
+}
+
+/// Lazy group-parameter fit for the blocked engine. Members at permuted
+/// positions `>= b1` have not yet received this block's deferred updates,
+/// so replay the pending updates from rows `b0..i` on a copy of their
+/// value — in the same ascending order the reference path applied them —
+/// before fitting. Members inside the block (or in flushed blocks) are
+/// already exact.
+#[allow(clippy::too_many_arguments)]
+fn fit_group_blocked(
+    p: &Prep,
+    errs: &Matrix,
+    out: &mut Out,
+    g: usize,
+    b0: usize,
+    b1: usize,
+    i: usize,
+    bits: u32,
+) {
+    let m = p.wp.rows;
+    let n = p.wp.cols;
+    let r0 = g * p.gs;
+    let r1 = ((g + 1) * p.gs).min(m);
+    let mut vals = Vec::with_capacity(r1 - r0);
+    for j in 0..n {
+        vals.clear();
+        for orig in r0..r1 {
+            let pos = p.pos_of[orig];
+            let mut v = p.wp.at(pos, j);
+            if pos >= b1 {
+                for t in b0..i {
+                    let utp = p.u.at(t, pos);
+                    if utp != 0.0 {
+                        v -= utp * errs.at(t - b0, j);
+                    }
+                }
+            }
+            vals.push(v);
+        }
+        let gp = find_params(&vals, bits);
+        out.scales.set(g, j, gp.scale);
+        out.zeros.set(g, j, gp.zero);
+    }
+    out.group_ready[g] = true;
+}
+
+/// The row-by-row reference recursion (the seed's inner loop, retained
+/// verbatim as the parity oracle): after quantizing each row, its error is
+/// spread over ALL remaining rows immediately. O(m) passes over the
+/// trailing submatrix — use [`optq`] everywhere except as a comparison
+/// baseline.
+pub fn optq_unblocked(w: &Matrix, h: &Matrix, cfg: &OptqConfig) -> QuantizedTensor {
+    let (m, n) = (w.rows, w.cols);
+    let mut p = prepare(w, h, cfg);
+    let gs = p.gs;
+    let mut out = Out::new(m, n, gs);
 
     let mut err = vec![0.0f64; n];
     for i in 0..m {
-        let orig_row = order[i];
+        let orig_row = p.order[i];
         let g = orig_row / gs;
-        if !group_ready[g] {
+        if !out.group_ready[g] {
             // Fit params from the current (error-compensated) values of all
             // group members, read from wp at their permuted positions.
             let r0 = g * gs;
             let r1 = ((g + 1) * gs).min(m);
             for j in 0..n {
-                let vals: Vec<f64> = (r0..r1).map(|orig| wp.at(pos_of[orig], j)).collect();
-                let p = find_params(&vals, cfg.bits);
-                scales.set(g, j, p.scale);
-                zeros.set(g, j, p.zero);
+                let vals: Vec<f64> = (r0..r1).map(|orig| p.wp.at(p.pos_of[orig], j)).collect();
+                let gp = find_params(&vals, cfg.bits);
+                out.scales.set(g, j, gp.scale);
+                out.zeros.set(g, j, gp.zero);
             }
-            group_ready[g] = true;
+            out.group_ready[g] = true;
         }
 
-        let d = u.at(i, i);
+        let d = p.u.at(i, i);
         for j in 0..n {
-            let p = GroupParams { scale: scales.at(g, j), zero: zeros.at(g, j) };
-            let wv = wp.at(i, j);
-            let (c, dq) = quantize_value(wv, p, cfg.bits);
-            codes[orig_row * n + j] = c;
+            let gp = GroupParams { scale: out.scales.at(g, j), zero: out.zeros.at(g, j) };
+            let wv = p.wp.at(i, j);
+            let (c, dq) = quantize_value(wv, gp, cfg.bits);
+            out.codes[orig_row * n + j] = c;
             err[j] = (wv - dq) / d;
         }
         // Spread the error over the remaining rows: w_k -= U[i,k] · err.
         for k in i + 1..m {
-            let uik = u.at(i, k);
+            let uik = p.u.at(i, k);
             if uik == 0.0 {
                 continue;
             }
-            let row = wp.row_mut(k);
-            for j in 0..n {
-                row[j] -= uik * err[j];
-            }
+            axpy_sub(p.wp.row_mut(k), uik, &err);
         }
     }
 
-    QuantizedTensor { bits: cfg.bits, group_size: gs, rows: m, cols: n, codes, scales, zeros }
+    QuantizedTensor {
+        bits: cfg.bits,
+        group_size: gs,
+        rows: m,
+        cols: n,
+        codes: out.codes,
+        scales: out.scales,
+        zeros: out.zeros,
+    }
 }
 
 #[cfg(test)]
@@ -174,6 +351,21 @@ mod tests {
                 let (_, v) = quantize_value(deq.at(i, j), p, 3);
                 assert!((v - deq.at(i, j)).abs() < 1e-9);
             }
+        }
+    }
+
+    #[test]
+    fn blocked_equals_reference_smoke() {
+        // The full sweep lives in tests/parity_blocked.rs; this is the
+        // in-module smoke check.
+        let (_, w, h) = setup(37, 11, 120, 58);
+        for bs in [2usize, 8, 37, 100] {
+            let cfg = OptqConfig { bits: 3, group_size: 10, block_size: bs, ..Default::default() };
+            let a = optq(&w, &h, &cfg);
+            let b = optq_unblocked(&w, &h, &cfg);
+            assert_eq!(a.codes, b.codes, "bs={bs}");
+            assert_eq!(a.scales.data, b.scales.data, "bs={bs}");
+            assert_eq!(a.zeros.data, b.zeros.data, "bs={bs}");
         }
     }
 
@@ -229,7 +421,7 @@ mod tests {
         let mut rng = Rng::new(56);
         let w = Matrix::randn(24, 6, 1.0, &mut rng);
         let h = Matrix::eye(24);
-        let cfg = OptqConfig { bits: 4, group_size: 24, damp_percent: 0.0, act_order: false };
+        let cfg = OptqConfig { bits: 4, group_size: 24, damp_percent: 0.0, ..Default::default() };
         let q = optq(&w, &h, &cfg);
         let r = quantize_rtn(&w, 4, 24);
         // Identical codes (error feedback is still applied but U is diagonal

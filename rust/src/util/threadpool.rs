@@ -16,6 +16,12 @@ pub enum JobStatus {
     Panicked(String),
 }
 
+/// Default worker count for layer-parallel stages: the machine's available
+/// parallelism, 1 if it cannot be determined.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 /// Run `jobs` on up to `workers` threads; return results in submission order.
 ///
 /// Panics in a job are caught and rethrown after all jobs finish, so one bad
@@ -118,6 +124,11 @@ mod tests {
     fn single_worker_works() {
         let jobs: Vec<_> = (0..5).map(|i| move || i + 1).collect();
         assert_eq!(run_parallel(1, jobs), vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn default_workers_positive() {
+        assert!(default_workers() >= 1);
     }
 
     #[test]

@@ -2,9 +2,18 @@
 //! batcher token conservation, data determinism, report round-trips —
 //! the "routing/batching/state" property suite.
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use cloq::coordinator::calibrate::GramSet;
+use cloq::coordinator::quantize::{quantize_init, ModelInit};
 use cloq::data::batcher::{pad_rows, task_batch, task_batch_at, LmStream};
 use cloq::data::tokenizer::{decode, encode, BOS, EOS, PAD};
 use cloq::data::{commonsense170k, math10k, pretrain_mixture, Task, ARITH_TASKS, COMMONSENSE_TASKS};
+use cloq::linalg::{syrk_t, Matrix};
+use cloq::lowrank::{InitConfig, Method};
+use cloq::model::{EntrySpec, Manifest, ModelConfig, ParamStore, TensorSpec};
+use cloq::runtime::{Dtype, Tensor};
 use cloq::util::prng::Rng;
 use cloq::util::threadpool::{run_collect_status, JobStatus};
 
@@ -45,6 +54,147 @@ fn scheduler_completes_all_jobs_under_random_failures() {
             }
         }
     });
+}
+
+/// Build a fully in-memory model (manifest + base weights + grams) for the
+/// quantize+init stage — no AOT artifacts needed. The manifest only has to
+/// carry the `eval_loss` entry the spec helpers derive shapes from.
+fn synth_model(n_layers: usize, d_model: usize, d_ff: usize, rank: usize, seed: u64)
+    -> (Manifest, ParamStore, GramSet)
+{
+    let config = ModelConfig {
+        name: "synth".to_string(),
+        vocab: 64,
+        d_model,
+        n_layers,
+        n_heads: 2,
+        d_ff,
+        seq: 8,
+        batch: 2,
+        rank,
+        group_size: 16,
+    };
+    let mut inputs = Vec::new();
+    for l in 0..n_layers {
+        for (name, din, dout) in config.linear_specs(l) {
+            inputs.push(TensorSpec { name, shape: vec![din, dout], dtype: Dtype::F32 });
+        }
+    }
+    for l in 0..n_layers {
+        for (name, din, dout) in config.linear_specs(l) {
+            inputs.push(TensorSpec {
+                name: format!("{name}.A"),
+                shape: vec![din, rank],
+                dtype: Dtype::F32,
+            });
+            inputs.push(TensorSpec {
+                name: format!("{name}.B"),
+                shape: vec![dout, rank],
+                dtype: Dtype::F32,
+            });
+        }
+    }
+    inputs.push(TensorSpec { name: "tokens".to_string(), shape: vec![2, 8], dtype: Dtype::I32 });
+    inputs.push(TensorSpec { name: "mask".to_string(), shape: vec![2, 8], dtype: Dtype::F32 });
+    let entry = EntrySpec {
+        file: "eval_loss.hlo.txt".to_string(),
+        inputs,
+        outputs: vec![
+            TensorSpec { name: "loss_sum".to_string(), shape: vec![], dtype: Dtype::F32 },
+            TensorSpec { name: "count".to_string(), shape: vec![], dtype: Dtype::F32 },
+        ],
+    };
+    let mut entrypoints = BTreeMap::new();
+    entrypoints.insert("eval_loss".to_string(), entry);
+    let man = Manifest { dir: PathBuf::from("."), config, entrypoints };
+
+    let mut rng = Rng::new(seed);
+    let mut base = ParamStore::new();
+    let mut grams = GramSet::new();
+    for l in 0..n_layers {
+        for (name, din, dout) in man.config.linear_specs(l) {
+            base.insert(&name, Tensor::from_matrix(&Matrix::randn(din, dout, 0.3, &mut rng)));
+            let x = Matrix::randn(din * 2 + 8, din, 1.0, &mut rng);
+            grams.insert(name, syrk_t(&x));
+        }
+    }
+    (man, base, grams)
+}
+
+fn assert_stores_identical(a: &ParamStore, b: &ParamStore, what: &str) {
+    assert_eq!(a.names, b.names, "{what}: name order differs");
+    for n in &a.names {
+        assert_eq!(a.get(n), b.get(n), "{what}: tensor '{n}' differs");
+    }
+}
+
+fn init_bytes(init: &ModelInit) -> Vec<u8> {
+    // Serialize through the checkpoint writer so "byte-identical" is
+    // literal: same bytes on disk.
+    let dir = std::env::temp_dir().join(format!(
+        "cloq_det_{}_{}",
+        std::process::id(),
+        init.bits_per_weight.to_bits()
+    ));
+    let mut all = Vec::new();
+    for (tag, store) in [("b", &init.base_q), ("l", &init.lora), ("q", &init.quant)] {
+        let path = dir.join(format!("{tag}.ckpt"));
+        store.save(&path).unwrap();
+        all.extend(std::fs::read(&path).unwrap());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    all
+}
+
+#[test]
+fn quantize_init_identical_for_any_worker_count() {
+    // The tentpole's determinism contract: layer jobs run on the thread
+    // pool with per-layer RNG streams derived from (seed, layer index), so
+    // the assembled ModelInit must be byte-identical for workers ∈ {1,2,8}.
+    let (man, base, grams) = synth_model(2, 8, 12, 2, 77);
+    let mut cfg = InitConfig::new(Method::CLoQ, 3, 2);
+    cfg.group_size = 8;
+    let one = quantize_init(&man, &base, Some(&grams), &cfg, 123, 1).unwrap();
+    let one_bytes = init_bytes(&one);
+    for workers in [2usize, 8] {
+        let many = quantize_init(&man, &base, Some(&grams), &cfg, 123, workers).unwrap();
+        assert_stores_identical(&one.base_q, &many.base_q, &format!("base_q w={workers}"));
+        assert_stores_identical(&one.lora, &many.lora, &format!("lora w={workers}"));
+        assert_stores_identical(&one.quant, &many.quant, &format!("quant w={workers}"));
+        assert_eq!(
+            one.bits_per_weight.to_bits(),
+            many.bits_per_weight.to_bits(),
+            "bits_per_weight w={workers}"
+        );
+        assert_eq!(one_bytes, init_bytes(&many), "checkpoint bytes w={workers}");
+    }
+    // Also across methods that use the RNG for their init (std LoRA init
+    // draws A ~ N(0, 1/r) per layer).
+    let gcfg = InitConfig::new(Method::GptqLora, 3, 2);
+    let g1 = quantize_init(&man, &base, Some(&grams), &gcfg, 9, 1).unwrap();
+    let g8 = quantize_init(&man, &base, Some(&grams), &gcfg, 9, 8).unwrap();
+    assert_stores_identical(&g1.lora, &g8.lora, "gptq-lora adapters");
+}
+
+#[test]
+fn panicking_layer_surfaces_without_wedging_pool() {
+    // A layer whose Gram matrix is missing panics inside its job
+    // (init_layer's `expect`). The pool must drain the remaining jobs,
+    // report the failure as JobStatus::Panicked, and quantize_init must
+    // surface it as an error naming the layer — not a process abort, not a
+    // hang.
+    let (man, base, mut grams) = synth_model(2, 8, 12, 2, 78);
+    grams.remove("l1.wk").expect("synthetic gram set has l1.wk");
+    let cfg = InitConfig::new(Method::CLoQ, 3, 2);
+    let err = quantize_init(&man, &base, Some(&grams), &cfg, 9, 4).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("panicked"), "error should mention the panic: {msg}");
+    assert!(msg.contains("l1.wk"), "error should name the failing layer: {msg}");
+
+    // The pool is not wedged: the same stage succeeds immediately after
+    // with an intact gram set on the same process.
+    let (man2, base2, grams2) = synth_model(2, 8, 12, 2, 78);
+    assert!(quantize_init(&man2, &base2, Some(&grams2), &cfg, 9, 4).is_ok());
 }
 
 #[test]

@@ -2,11 +2,14 @@
 //! (the offline stand-in for proptest — hundreds of randomized cases per
 //! invariant with the failing seed printed on assert).
 
-use cloq::linalg::chol::{cholesky, inv_spd};
+use cloq::linalg::chol::{chol_inv_upper, cholesky, inv_spd};
 use cloq::linalg::eig::sym_eig;
 use cloq::linalg::norms::{fro, spectral};
 use cloq::linalg::qr::qr;
-use cloq::linalg::{best_rank_r, matmul, matmul_nt, matmul_tn, pinv, svd, syrk_t, Matrix};
+use cloq::linalg::{
+    best_rank_r, matmul, matmul_naive, matmul_nt, matmul_nt_tiled, matmul_tiled, matmul_tn,
+    matmul_tn_tiled, pinv, sub_matmul_tn_tail, svd, syrk_t, syrk_t_tiled, Matrix,
+};
 use cloq::util::prng::Rng;
 
 /// Sweep driver: runs `f(seed, rng)` for many seeds.
@@ -63,6 +66,128 @@ fn transpose_products_consistent() {
             matmul_nt(&d, &c.transpose().transpose()).max_diff(&matmul(&d, &c.transpose()))
                 < 1e-9 * m as f64,
             "nt seed={seed}"
+        );
+    });
+}
+
+#[test]
+fn tiled_matmul_agrees_with_naive_on_random_shapes() {
+    // Random rectangular shapes, including 0- and 1-sized dimensions (the
+    // degenerate cases the tile loops must step over cleanly).
+    sweep(60, |seed, rng| {
+        let m = rng.range(0, 40) as usize;
+        let k = rng.range(0, 40) as usize;
+        let n = rng.range(0, 40) as usize;
+        let a = Matrix::randn(m, k, 1.0, rng);
+        let b = Matrix::randn(k, n, 1.0, rng);
+        let naive = matmul_naive(&a, &b);
+        assert!(matmul_tiled(&a, &b).max_diff(&naive) < 1e-10, "tiled seed={seed} {m}x{k}x{n}");
+        assert!(matmul(&a, &b).max_diff(&naive) < 1e-10, "dispatch seed={seed} {m}x{k}x{n}");
+    });
+}
+
+#[test]
+fn tiled_matmul_agrees_on_tile_boundaries() {
+    // Deterministic shapes straddling every tile edge ±1 (MC=64, KC=256,
+    // NC=512 in blas.rs) plus 1-dim degenerates.
+    let mut rng = Rng::new(0x71_1E);
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 513, 1),
+        (63, 64, 65),
+        (64, 64, 64),
+        (65, 63, 64),
+        (63, 255, 513),
+        (64, 256, 512),
+        (65, 257, 511),
+        (128, 2, 512),
+        (2, 300, 2),
+    ];
+    for &(m, k, n) in shapes {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let naive = matmul_naive(&a, &b);
+        // The tiled kernels keep per-element ascending-k accumulation, so
+        // agreement is exact, not just within tolerance.
+        assert_eq!(matmul_tiled(&a, &b).data, naive.data, "tiled {m}x{k}x{n}");
+        assert_eq!(matmul(&a, &b).data, naive.data, "dispatch {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn tiled_transposed_variants_agree_with_references() {
+    sweep(30, |seed, rng| {
+        let k = rng.range(1, 80) as usize;
+        let m = rng.range(1, 80) as usize;
+        let n = rng.range(1, 50) as usize;
+        let a = Matrix::randn(k, m, 1.0, rng);
+        let b = Matrix::randn(k, n, 1.0, rng);
+        let tn_ref = matmul(&a.transpose(), &b);
+        assert!(matmul_tn_tiled(&a, &b).max_diff(&tn_ref) < 1e-9 * k as f64, "tn seed={seed}");
+        assert!(matmul_tn(&a, &b).max_diff(&tn_ref) < 1e-9 * k as f64, "tn dispatch seed={seed}");
+        let c = Matrix::randn(n, m, 1.0, rng);
+        let d = Matrix::randn(k, m, 1.0, rng);
+        let nt_ref = matmul(&d, &c.transpose());
+        assert!(matmul_nt_tiled(&d, &c).max_diff(&nt_ref) < 1e-9 * m as f64, "nt seed={seed}");
+        assert!(matmul_nt(&d, &c).max_diff(&nt_ref) < 1e-9 * m as f64, "nt dispatch seed={seed}");
+    });
+}
+
+#[test]
+fn tiled_syrk_agrees_with_gram() {
+    sweep(25, |seed, rng| {
+        let k = rng.range(1, 60) as usize;
+        let n = rng.range(1, 90) as usize;
+        let a = Matrix::randn(k, n, 1.0, rng);
+        let expect = matmul(&a.transpose(), &a);
+        assert!(syrk_t_tiled(&a).max_diff(&expect) < 1e-9 * k as f64, "tiled seed={seed}");
+        assert!(syrk_t(&a).max_diff(&expect) < 1e-9 * k as f64, "dispatch seed={seed}");
+    });
+}
+
+#[test]
+fn panel_update_equals_sequential_rank1() {
+    // The OPTQ lazy-batch kernel: C_tail -= A_panelᵀ·B must equal applying
+    // the rank-1 updates one row at a time — exactly (same FP op order).
+    sweep(30, |seed, rng| {
+        let m = rng.range(2, 40) as usize;
+        let n = rng.range(1, 12) as usize;
+        let t0 = rng.range(0, m as i64 - 1) as usize;
+        let nt = rng.range(1, (m - t0) as i64) as usize;
+        let row0 = rng.range(0, m as i64) as usize;
+        let u = Matrix::randn(m, m, 1.0, rng);
+        let errs = Matrix::randn(nt, n, 1.0, rng);
+        let w0 = Matrix::randn(m, n, 1.0, rng);
+
+        let mut seq = w0.clone();
+        for t in 0..nt {
+            for k in row0..m {
+                let utk = u.at(t0 + t, k);
+                for j in 0..n {
+                    *seq.at_mut(k, j) -= utk * errs.at(t, j);
+                }
+            }
+        }
+        let mut got = w0.clone();
+        sub_matmul_tn_tail(&mut got, row0, &u, t0, nt, &errs);
+        assert_eq!(got.data, seq.data, "seed={seed} m={m} t0={t0} nt={nt} row0={row0}");
+    });
+}
+
+#[test]
+fn chol_inv_upper_is_inverse_hessian_root() {
+    // The OPTQ setup kernel: UᵀU == H⁻¹ (against the explicit-inverse
+    // route) across random SPD matrices.
+    sweep(25, |seed, rng| {
+        let n = rng.range(1, 28) as usize;
+        let x = Matrix::randn(n + 6, n, 1.0, rng);
+        let mut h = syrk_t(&x);
+        h.add_diag(0.05);
+        let u = chol_inv_upper(&h).unwrap();
+        let seed_route = cholesky(&inv_spd(&h).unwrap()).unwrap().transpose();
+        assert!(
+            u.max_diff(&seed_route) < 1e-6 * u.max_abs().max(1.0),
+            "root seed={seed} n={n}"
         );
     });
 }

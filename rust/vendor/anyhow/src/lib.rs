@@ -1,0 +1,110 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The sandbox has no crates.io access, so this shim provides exactly the
+//! surface the workspace uses: [`Result`], [`Error`], and the `anyhow!` /
+//! `bail!` / `ensure!` macros. Like real anyhow, [`Error`] deliberately does
+//! NOT implement `std::error::Error` so the blanket `From<E: Error>` impl
+//! can coexist with the reflexive `From<Error>`.
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A string-backed error value. Context is baked into the message at
+/// construction (the shim has no cause chain; `{:#}` prints the same text
+/// as `{}`).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: std::fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any displayable value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: `{}`", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    fn io_fail() -> crate::Result<()> {
+        std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(())
+    }
+
+    fn ensured(x: i32) -> crate::Result<i32> {
+        crate::ensure!(x > 0, "x must be positive, got {x}");
+        if x > 100 {
+            crate::bail!("x too large: {}", x);
+        }
+        Ok(x)
+    }
+
+    #[test]
+    fn conversions_and_macros() {
+        assert!(io_fail().is_err());
+        assert_eq!(ensured(5).unwrap(), 5);
+        let e = ensured(-1).unwrap_err();
+        assert!(format!("{e}").contains("positive"));
+        assert!(format!("{e:#}").contains("positive"));
+        assert!(ensured(200).is_err());
+        let direct = crate::anyhow!("plain");
+        assert_eq!(format!("{direct:?}"), "plain");
+    }
+}

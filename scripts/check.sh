@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Repo gate: build + tests + clippy on the Rust workspace.
+#
+# Usage: scripts/check.sh [--bench]
+#   --bench  additionally run the perf benches that emit BENCH_*.json
+#            (bench_optq / bench_linalg; slow — not part of the default gate)
+#
+# The crates.io-free sandbox is the default environment: all dependencies
+# are vendored path crates, so everything below runs with --offline.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+CARGO_FLAGS=(--offline)
+
+echo "== cargo build --release =="
+cargo build --release "${CARGO_FLAGS[@]}"
+
+echo "== cargo test -q =="
+cargo test -q "${CARGO_FLAGS[@]}"
+
+# Clippy gate on the main crate (vendored shims excluded): deny warnings on
+# the modules this repo owns. Tolerated to be absent (minimal toolchains).
+if cargo clippy --version >/dev/null 2>&1; then
+    echo "== cargo clippy -p cloq (deny warnings) =="
+    cargo clippy -p cloq --all-targets "${CARGO_FLAGS[@]}" -- -D warnings
+else
+    echo "== clippy not installed; skipping lint gate =="
+fi
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== perf benches (BENCH_optq.json / BENCH_linalg.json) =="
+    cargo bench --bench bench_optq "${CARGO_FLAGS[@]}"
+    cargo bench --bench bench_linalg "${CARGO_FLAGS[@]}"
+fi
+
+echo "check.sh: all green"
