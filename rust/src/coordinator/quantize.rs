@@ -8,7 +8,7 @@
 use crate::lowrank::{init_layer, InitConfig, Method};
 use crate::model::manifest::Manifest;
 use crate::model::{base_specs, lora_specs, ParamStore};
-use crate::quant::quantize_rtn;
+use crate::quant::{quantize_rtn, QuantState};
 use crate::runtime::Tensor;
 use crate::util::prng::Rng;
 use crate::util::threadpool::{run_collect_status, JobStatus};
@@ -24,6 +24,23 @@ pub struct ModelInit {
     /// Per-layer packed quantization state for the qeval serving path
     /// (codes/scales/zeros tensors keyed by `<linear>.{codes,scales,zeros}`).
     pub quant: ParamStore,
+    /// Exact per-layer quantization state in manifest order, kept at full
+    /// f64 precision for the packed serving artifact (`serve::artifact`):
+    /// the serve kernel must agree with `base_q` bit-for-bit, which the f32
+    /// `quant` store (lowered for the qeval graph) cannot guarantee.
+    ///
+    /// LOSSY EXCEPTION: layers whose method keeps an fp base (LoRA16) are
+    /// re-gridded into an 8-bit INT container — the packed engine then
+    /// matches that container bit-exactly, NOT the fp weights (same policy
+    /// as the qeval fallback below). Callers that want a hard error for
+    /// fp-base methods instead should go through
+    /// `serve::PackedLayer::from_layer_init`, which rejects them by name.
+    ///
+    /// Memory note: this duplicates ~1 byte/weight of codes plus the f64
+    /// group params on top of the f32 stores — fine at current model
+    /// sizes; making it opt-in for serve-less sweep paths is a ROADMAP
+    /// open item.
+    pub exact: Vec<(String, QuantState)>,
     /// Mean bits/weight over quantized layers.
     pub bits_per_weight: f64,
 }
@@ -122,31 +139,48 @@ pub fn quantize_init(
         lora.insert(&spec.name, Tensor::from_matrix(m));
     }
 
-    // Packed state for the serving path: use the EXACT quantization state
+    // Packed state for the qeval serving graph: use the EXACT INT state
     // when the method produced one (OPTQ/LoftQ/CLoQ — the qeval path then
     // agrees with the dense path to fp tolerance); NF/fp bases fall back to
-    // an 8-bit re-grid (a value-faithful container, not the NF codebook).
-    // The qeval graph is lowered for group_size = mcfg.group_size, so exact
-    // states with a different group size are re-gridded too.
+    // an 8-bit re-grid (a value-faithful container, not the NF codebook,
+    // which the lowered INT-grid graph cannot index). The qeval graph is
+    // lowered for group_size = mcfg.group_size, so exact states with a
+    // different group size are re-gridded too.
+    //
+    // The `exact` vector is the parallel f64 trail for the Rust-side packed
+    // serving engine: the method's own state verbatim whenever one exists
+    // (any grid/codebook, any group size), and for fp bases (LoRA16) a
+    // LOSSY 8-bit RTN container — see the `ModelInit::exact` field docs.
     let mut quant = ParamStore::new();
+    let mut exact = Vec::with_capacity(linear_names.len());
     for name in &linear_names {
         let (_, li) = results.iter().find(|(n, _)| n == name).unwrap();
-        let q = match &li.quant {
-            Some(q) if q.group_size == mcfg.group_size => q.clone(),
-            _ => {
-                let bits = if cfg.method == Method::Lora16 { 8 } else { cfg.bits.max(4) };
-                quantize_rtn(&li.q_deq, bits, mcfg.group_size)
+        // (qeval container, exact serving state) from one pass over the
+        // layer: methods without a state (LoRA16 — the only `None`) share a
+        // single 8-bit RTN container between both trails, quantized once.
+        let (q, qs) = match &li.quant {
+            Some(QuantState::Int(qi)) if qi.group_size == mcfg.group_size => {
+                (qi.clone(), QuantState::Int(qi.clone()))
+            }
+            Some(qs) => {
+                (quantize_rtn(&li.q_deq, cfg.bits.max(4), mcfg.group_size), qs.clone())
+            }
+            None => {
+                debug_assert_eq!(cfg.method, Method::Lora16);
+                let q = quantize_rtn(&li.q_deq, 8, mcfg.group_size);
+                (q.clone(), QuantState::Int(q))
             }
         };
         let codes: Vec<i32> = q.codes.iter().map(|&c| c as i32).collect();
         quant.insert(&format!("{name}.codes"), Tensor::i32(vec![q.rows, q.cols], codes));
         quant.insert(&format!("{name}.scales"), Tensor::from_matrix(&q.scales));
         quant.insert(&format!("{name}.zeros"), Tensor::from_matrix(&q.zeros));
+        exact.push((name.clone(), qs));
     }
 
     let bpw = results.iter().map(|(_, li)| li.bits_per_weight).sum::<f64>()
         / results.len().max(1) as f64;
-    Ok(ModelInit { base_q, lora, quant, bits_per_weight: bpw })
+    Ok(ModelInit { base_q, lora, quant, exact, bits_per_weight: bpw })
 }
 
 #[cfg(test)]

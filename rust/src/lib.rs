@@ -8,7 +8,9 @@
 //! * **L3 (this crate)** — coordinator + full numerics: calibration,
 //!   MagR+OPTQ post-training quantization, the Theorem-3.1 closed-form LoRA
 //!   initialization, every baseline (RTN/NF4/QLoRA/GPTQ-LoRA/LoftQ), the
-//!   fine-tuning trainer, evaluation, and the table/figure bench harness.
+//!   fine-tuning trainer, evaluation, the table/figure bench harness, and
+//!   the packed-weight serving engine (`serve`: fused dequant×matmul
+//!   kernel, request batcher, versioned artifact).
 //! * **L2 (`python/compile/model.py`)** — the TinyGPT compute graphs,
 //!   AOT-lowered once to HLO text under `artifacts/`.
 //! * **L1 (`python/compile/kernels/`)** — Pallas fused dequant-matmul +
@@ -25,4 +27,5 @@ pub mod lowrank;
 pub mod model;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod util;

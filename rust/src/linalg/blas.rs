@@ -37,9 +37,11 @@ const NC: usize = 512;
 
 /// y += a·x over contiguous slices, 4-way unrolled. Each `y[j]` gets one
 /// rounding per call — the accumulation-order building block shared by all
-/// kernel variants.
+/// kernel variants (public because the serve fused kernel's batched path
+/// leans on the exact same per-element op sequence for its parity
+/// contract — see `serve::packed`).
 #[inline]
-pub(crate) fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
+pub fn axpy(y: &mut [f64], a: f64, x: &[f64]) {
     debug_assert_eq!(y.len(), x.len());
     let n = x.len();
     let n4 = n / 4 * 4;

@@ -15,7 +15,7 @@ pub mod rsvd;
 pub mod svd;
 
 pub use blas::{
-    dot, matmul, matmul_naive, matmul_nt, matmul_nt_tiled, matmul_tiled, matmul_tn,
+    axpy, dot, matmul, matmul_naive, matmul_nt, matmul_nt_tiled, matmul_tiled, matmul_tn,
     matmul_tn_tiled, matvec, matvec_t, sub_matmul_tn_tail, syrk_t, syrk_t_tiled,
 };
 pub use matrix::Matrix;

@@ -10,7 +10,7 @@ use crate::lowrank::cloq::{cloq_lowrank, damping_lambda, CloqConfig, FactorSplit
 use crate::lowrank::loftq::{loftq, LoftqConfig, LoftqQuantizer};
 use crate::quant::magr::{magr, MagrConfig};
 use crate::quant::optq::{optq, OptqConfig};
-use crate::quant::quantize_nf;
+use crate::quant::{quantize_nf, QuantState};
 use crate::util::prng::Rng;
 
 /// The fine-tuning initialization methods compared in the paper.
@@ -106,10 +106,12 @@ impl InitConfig {
 pub struct LayerInit {
     /// Dequantized frozen base Q (m×n). For `Lora16` this is W itself.
     pub q_deq: Matrix,
-    /// The exact INT quantization state (codes/scales/zeros) when the
-    /// method produces one — consumed verbatim by the packed serving path
-    /// so `qeval` agrees with the dense path bit-for-bit.
-    pub quant: Option<crate::quant::QuantizedTensor>,
+    /// The exact quantization state (INT grid codes/scales/zeros, or the NF
+    /// codebook + absmax for QLoRA) when the method produces one — consumed
+    /// verbatim by the packed serving path (`serve::packed`) so the fused
+    /// kernel agrees with `q_deq` bit-for-bit. `None` only for methods that
+    /// keep the fp base (LoRA16); the serve builder re-grids those.
+    pub quant: Option<QuantState>,
     /// m×r adapter.
     pub a: Matrix,
     /// n×r adapter.
@@ -142,7 +144,10 @@ pub fn init_layer(w: &Matrix, h: Option<&Matrix>, cfg: &InitConfig, rng: &mut Rn
                 a,
                 b,
                 bits_per_weight: cfg.bits as f64 + 16.0 / cfg.group_size as f64,
-                quant: None, // NF codebook ≠ INT grid; serving re-grids
+                // NF codebook ≠ INT grid, so serving carries the codebook
+                // itself: packed codes index the levels table (the artifact
+                // stores both), no lossy re-grid.
+                quant: Some(QuantState::Nf(q)),
             }
         }
         Method::GptqLora => {
@@ -163,7 +168,7 @@ pub fn init_layer(w: &Matrix, h: Option<&Matrix>, cfg: &InitConfig, rng: &mut Rn
                 a,
                 b,
                 bits_per_weight: q.bits_per_weight(),
-                quant: Some(q),
+                quant: Some(QuantState::Int(q)),
             }
         }
         Method::LoftQ => {
@@ -183,7 +188,7 @@ pub fn init_layer(w: &Matrix, h: Option<&Matrix>, cfg: &InitConfig, rng: &mut Rn
                 a: init.a,
                 b: init.b,
                 bits_per_weight: bpw,
-                quant: Some(init.q),
+                quant: Some(QuantState::Int(init.q)),
             }
         }
         Method::CLoQ | Method::CLoQNoMagR | Method::CLoQSqrtSplit | Method::CLoQAllInB => {
@@ -223,7 +228,7 @@ pub fn init_layer(w: &Matrix, h: Option<&Matrix>, cfg: &InitConfig, rng: &mut Rn
                 a: lr.a,
                 b: lr.b,
                 bits_per_weight: q.bits_per_weight(),
-                quant: Some(q),
+                quant: Some(QuantState::Int(q)),
             }
         }
     }
@@ -332,6 +337,30 @@ mod tests {
         let li2 = init_layer(&w, Some(&h), &InitConfig::new(Method::CLoQ, 2, 4), &mut rng);
         assert!(li2.bits_per_weight < li4.bits_per_weight);
         assert!(li2.bits_per_weight >= 2.0);
+    }
+
+    #[test]
+    fn exact_state_dequantizes_to_q_deq() {
+        // The serving contract: whenever a method hands over a quantization
+        // state, re-dequantizing that state reproduces `q_deq` bit-for-bit
+        // (the packed serve path consumes the state, the trainer consumes
+        // q_deq — they must be the same numbers).
+        let (w, h, mut rng) = setup(118);
+        for m in [
+            Method::QLora,
+            Method::GptqLora,
+            Method::LoftQ,
+            Method::CLoQ,
+            Method::CLoQNoMagR,
+            Method::CLoQSqrtSplit,
+            Method::CLoQAllInB,
+        ] {
+            let li = init_layer(&w, Some(&h), &InitConfig::new(m, 3, 4), &mut rng);
+            let qs = li.quant.as_ref().unwrap_or_else(|| panic!("{m:?} must produce state"));
+            assert_eq!(qs.dequantize().data, li.q_deq.data, "{m:?}");
+        }
+        let li = init_layer(&w, Some(&h), &InitConfig::new(Method::Lora16, 16, 4), &mut rng);
+        assert!(li.quant.is_none(), "LoRA16 keeps the fp base");
     }
 
     #[test]

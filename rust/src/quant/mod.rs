@@ -14,3 +14,55 @@ pub use magr::{magr, MagrConfig};
 pub use metrics::{calibrated_error2, relative_calibrated_error};
 pub use nf::{quantize_nf, NfQuantized};
 pub use optq::{optq, OptqConfig};
+
+use crate::linalg::Matrix;
+
+/// The exact quantization state an init method hands to the packed serving
+/// path: either the asymmetric INT grid (RTN / OPTQ) or the NF-k codebook
+/// (QLoRA). Both carry small-integer codes that bit-pack losslessly
+/// (`packing::pack_codes`); `dequantize` is the dense reference the fused
+/// serve kernel (`serve::packed`) is parity-tested against bit-for-bit.
+#[derive(Clone, Debug)]
+pub enum QuantState {
+    Int(QuantizedTensor),
+    Nf(NfQuantized),
+}
+
+impl QuantState {
+    pub fn rows(&self) -> usize {
+        match self {
+            QuantState::Int(q) => q.rows,
+            QuantState::Nf(q) => q.rows,
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            QuantState::Int(q) => q.cols,
+            QuantState::Nf(q) => q.cols,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match self {
+            QuantState::Int(q) => q.bits,
+            QuantState::Nf(q) => q.bits,
+        }
+    }
+
+    /// Rows sharing one (scale, zero) / absmax entry (NF calls it a block).
+    pub fn group_size(&self) -> usize {
+        match self {
+            QuantState::Int(q) => q.group_size,
+            QuantState::Nf(q) => q.block_size,
+        }
+    }
+
+    /// Dense dequantized values — the serve parity reference.
+    pub fn dequantize(&self) -> Matrix {
+        match self {
+            QuantState::Int(q) => q.dequantize(),
+            QuantState::Nf(q) => q.dequantize(),
+        }
+    }
+}

@@ -7,6 +7,10 @@
 //! test `rust/tests/golden_quant.rs`).
 
 /// Pack `codes` (each < 2^bits) into u32 words, little-endian bit order.
+///
+/// Panics (hard, in release too) on an out-of-range code: a code wider than
+/// `bits` would silently corrupt the neighboring lanes of its word, and the
+/// packed artifact is exactly the place such corruption must not reach.
 pub fn pack_codes(codes: &[u8], bits: u32) -> Vec<u32> {
     assert!((1..=8).contains(&bits));
     let per_word = 32 / bits as usize;
@@ -14,7 +18,7 @@ pub fn pack_codes(codes: &[u8], bits: u32) -> Vec<u32> {
     for chunk in codes.chunks(per_word) {
         let mut word = 0u32;
         for (k, &c) in chunk.iter().enumerate() {
-            debug_assert!((c as u32) < (1 << bits), "code {c} out of range for {bits} bits");
+            assert!((c as u32) < (1 << bits), "code {c} out of range for {bits} bits");
             word |= (c as u32) << (k as u32 * bits);
         }
         out.push(word);
@@ -22,10 +26,18 @@ pub fn pack_codes(codes: &[u8], bits: u32) -> Vec<u32> {
     out
 }
 
-/// Unpack `n` codes from packed u32 words.
-pub fn unpack_codes(packed: &[u32], bits: u32, n: usize) -> Vec<u8> {
-    assert!((1..=8).contains(&bits));
+/// Unpack `n` codes from packed u32 words, surfacing a short buffer as an
+/// error instead of a panic — the artifact loader turns this into a
+/// corruption diagnosis naming the offending layer.
+pub fn try_unpack_codes(packed: &[u32], bits: u32, n: usize) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!((1..=8).contains(&bits), "bit width {bits} outside 1..=8");
     let per_word = 32 / bits as usize;
+    anyhow::ensure!(
+        packed.len() * per_word >= n,
+        "packed buffer too short: {} words hold {} codes, need {n}",
+        packed.len(),
+        packed.len() * per_word,
+    );
     let mask = ((1u64 << bits) - 1) as u32;
     let mut out = Vec::with_capacity(n);
     'outer: for &word in packed {
@@ -36,8 +48,13 @@ pub fn unpack_codes(packed: &[u32], bits: u32, n: usize) -> Vec<u8> {
             out.push(((word >> (k as u32 * bits)) & mask) as u8);
         }
     }
-    assert_eq!(out.len(), n, "packed buffer too short");
-    out
+    Ok(out)
+}
+
+/// Unpack `n` codes from packed u32 words; panics on a short buffer (use
+/// [`try_unpack_codes`] where the buffer comes from untrusted bytes).
+pub fn unpack_codes(packed: &[u32], bits: u32, n: usize) -> Vec<u8> {
+    try_unpack_codes(packed, bits, n).expect("unpack_codes")
 }
 
 #[cfg(test)]
@@ -72,5 +89,22 @@ mod tests {
         assert_eq!(pack_codes(&[1, 2, 3], 4), vec![0x321]);
         // 2-bit codes [3,0,1,2] → 0b10_01_00_11 = 0x93.
         assert_eq!(pack_codes(&[3, 0, 1, 2], 2), vec![0x93]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_code_panics_in_release_too() {
+        pack_codes(&[4], 2);
+    }
+
+    #[test]
+    fn short_buffer_is_an_error_not_a_panic() {
+        let packed = pack_codes(&[1u8; 20], 3); // 2 words (10 codes/word)
+        let err = try_unpack_codes(&packed, 3, 21).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("too short"), "{msg}");
+        assert!(msg.contains("need 21"), "{msg}");
+        // Exactly-full buffers still work.
+        assert_eq!(try_unpack_codes(&packed, 3, 20).unwrap(), vec![1u8; 20]);
     }
 }

@@ -1,0 +1,447 @@
+//! The packed serving artifact: one versioned binary file holding every
+//! layer's packed codes, dequantization parameters and LoRA adapters.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//!   magic    "CLOQPKD1"                       8 bytes
+//!   version  u32                              currently 1
+//!   n_layers u32
+//!   repeat n_layers times:
+//!     payload_len u64
+//!     payload     payload_len bytes           (see encode_layer)
+//!     crc32       u32                         IEEE CRC-32 of payload
+//! ```
+//!
+//! Each layer payload carries its own name, shapes and parameter kind, so
+//! the loader can validate structurally and — the part that matters at
+//! 3 a.m. — every corruption error **names the offending layer**: a
+//! truncated file, a flipped bit (CRC mismatch), or an inconsistent shape
+//! all report `layer k ('name'): …` instead of a bare parse failure.
+//!
+//! Roundtrip contract (locked by `rust/tests/golden_serve.rs`): save →
+//! load reproduces every layer's quantization state **byte-identically**
+//! (codes, scales/zeros or levels/absmax, adapters — all f64, no precision
+//! laundering) and therefore a bit-identical packed forward.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::linalg::Matrix;
+use crate::serve::packed::{words_per_row, DequantParams, PackedLayer, PackedModel};
+
+pub const MAGIC: &[u8; 8] = b"CLOQPKD1";
+pub const VERSION: u32 = 1;
+
+const KIND_GRID: u8 = 0;
+const KIND_CODEBOOK: u8 = 1;
+
+// ---- CRC-32 (IEEE 802.3), table built at compile time ----
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC-32 over `bytes` (the checksum guarding each layer payload).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = (c >> 8) ^ CRC_TABLE[((c ^ b as u32) & 0xFF) as usize];
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---- encoding ----
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+    for v in vs {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn encode_layer(l: &PackedLayer) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_u32(&mut b, l.name.len() as u32);
+    b.extend_from_slice(l.name.as_bytes());
+    b.push(match &l.params {
+        DequantParams::Grid { .. } => KIND_GRID,
+        DequantParams::Codebook { .. } => KIND_CODEBOOK,
+    });
+    put_u32(&mut b, l.bits);
+    put_u64(&mut b, l.group_size as u64);
+    put_u64(&mut b, l.rows as u64);
+    put_u64(&mut b, l.cols as u64);
+    put_u64(&mut b, l.rank() as u64);
+    put_u64(&mut b, l.packed.len() as u64);
+    for w in &l.packed {
+        put_u32(&mut b, *w);
+    }
+    match &l.params {
+        DequantParams::Grid { scales, zeros } => {
+            put_u64(&mut b, scales.rows as u64);
+            put_f64s(&mut b, &scales.data);
+            put_f64s(&mut b, &zeros.data);
+        }
+        DequantParams::Codebook { levels, absmax } => {
+            put_u32(&mut b, levels.len() as u32);
+            put_f64s(&mut b, levels);
+            put_u64(&mut b, absmax.rows as u64);
+            put_f64s(&mut b, &absmax.data);
+        }
+    }
+    put_f64s(&mut b, &l.a.data);
+    put_f64s(&mut b, &l.b.data);
+    b
+}
+
+/// Save `model` as one packed artifact file.
+pub fn save_artifact(model: &PackedModel, path: &Path) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(model.layers.len() as u32).to_le_bytes())?;
+    for l in &model.layers {
+        let payload = encode_layer(l);
+        f.write_all(&(payload.len() as u64).to_le_bytes())?;
+        f.write_all(&payload)?;
+        f.write_all(&crc32(&payload).to_le_bytes())?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+// ---- decoding ----
+
+/// Bounds-checked byte reader; every read error carries the field name so
+/// the loader's layer-context wrapper produces actionable messages.
+struct Rd<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Rd<'a> {
+        Rd { buf, off: 0 }
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.buf.len() - self.off, // subtraction form: off ≤ len, no overflow
+            "truncated while reading {what} (need {n} bytes at offset {}, have {})",
+            self.off,
+            self.buf.len() - self.off,
+        );
+        let buf = self.buf; // copy the &'a reference so the slice outlives &mut self
+        let s = &buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self, what: &str) -> anyhow::Result<u32> {
+        let b = self.bytes(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self, what: &str) -> anyhow::Result<u64> {
+        let b = self.bytes(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn f64s(&mut self, n: usize, what: &str) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(
+            n <= (self.buf.len() - self.off) / 8,
+            "truncated while reading {what} (need {n} f64s, have {} bytes)",
+            self.buf.len() - self.off,
+        );
+        let b = self.bytes(n * 8, what)?;
+        Ok(b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.off
+    }
+}
+
+/// Best-effort layer name from a payload prefix, for CRC-mismatch errors
+/// where the payload itself is untrustworthy.
+fn peek_name(payload: &[u8]) -> String {
+    let mut rd = Rd::new(payload);
+    if let Ok(len) = rd.u32("name length") {
+        if let Ok(bytes) = rd.bytes(len as usize, "name") {
+            if let Ok(s) = std::str::from_utf8(bytes) {
+                return s.to_string();
+            }
+        }
+    }
+    "<unreadable>".to_string()
+}
+
+fn decode_layer(payload: &[u8]) -> anyhow::Result<PackedLayer> {
+    let mut rd = Rd::new(payload);
+    let name_len = rd.u32("name length")? as usize;
+    let name = String::from_utf8(rd.bytes(name_len, "name")?.to_vec())
+        .map_err(|e| anyhow::anyhow!("layer name is not UTF-8: {e}"))?;
+    let kind = rd.bytes(1, "param kind")?[0];
+    let bits = rd.u32("bits")?;
+    anyhow::ensure!((1..=8).contains(&bits), "'{name}': bit width {bits} outside 1..=8");
+    let group_size = rd.u64("group size")? as usize;
+    anyhow::ensure!(group_size >= 1, "'{name}': group size 0");
+    let rows = rd.u64("rows")? as usize;
+    let cols = rd.u64("cols")? as usize;
+    anyhow::ensure!(rows >= 1 && cols >= 1, "'{name}': degenerate shape {rows}x{cols}");
+    let rank = rd.u64("rank")? as usize;
+    let n_words = rd.u64("packed word count")? as usize;
+    // Checked arithmetic throughout: size fields come from untrusted bytes,
+    // and a wrapped multiplication must become a named error, not a panic.
+    let expect_words = rows
+        .checked_mul(words_per_row(cols, bits))
+        .ok_or_else(|| anyhow::anyhow!("'{name}': shape {rows}x{cols} overflows"))?;
+    anyhow::ensure!(
+        n_words == expect_words,
+        "'{name}': {n_words} packed words, but {rows}x{cols} at {bits} bits needs {expect_words}"
+    );
+    anyhow::ensure!(
+        n_words <= payload.len() / 4,
+        "'{name}': {n_words} packed words exceed the payload"
+    );
+    let wbytes = rd.bytes(n_words * 4, "packed words")?;
+    let packed: Vec<u32> =
+        wbytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+    let num_groups = rows.div_ceil(group_size);
+    let params = match kind {
+        KIND_GRID => {
+            let sg = rd.u64("scale group count")? as usize;
+            anyhow::ensure!(
+                sg == num_groups,
+                "'{name}': {sg} scale groups, but {rows} rows at group size {group_size} \
+                 needs {num_groups}"
+            );
+            let sn = sg
+                .checked_mul(cols)
+                .filter(|&v| v <= payload.len() / 8)
+                .ok_or_else(|| anyhow::anyhow!("'{name}': {sg}x{cols} scales exceed the payload"))?;
+            let scales = Matrix::from_vec(sg, cols, rd.f64s(sn, "scales")?);
+            let zeros = Matrix::from_vec(sg, cols, rd.f64s(sn, "zeros")?);
+            DequantParams::Grid { scales, zeros }
+        }
+        KIND_CODEBOOK => {
+            let nl = rd.u32("codebook size")? as usize;
+            anyhow::ensure!(
+                nl == 1usize << bits,
+                "'{name}': codebook of {nl} levels cannot index {bits}-bit codes"
+            );
+            let levels = rd.f64s(nl, "codebook levels")?;
+            let ag = rd.u64("absmax group count")? as usize;
+            anyhow::ensure!(
+                ag == num_groups,
+                "'{name}': {ag} absmax groups, but {rows} rows at block size {group_size} \
+                 needs {num_groups}"
+            );
+            let an = ag
+                .checked_mul(cols)
+                .filter(|&v| v <= payload.len() / 8)
+                .ok_or_else(|| anyhow::anyhow!("'{name}': {ag}x{cols} absmax exceed the payload"))?;
+            let absmax = Matrix::from_vec(ag, cols, rd.f64s(an, "absmax")?);
+            DequantParams::Codebook { levels, absmax }
+        }
+        other => anyhow::bail!("'{name}': unknown param kind {other}"),
+    };
+    let numel = |d: usize, what: &str| {
+        d.checked_mul(rank)
+            .filter(|&v| v <= payload.len() / 8)
+            .ok_or_else(|| anyhow::anyhow!("'{name}': {what} of {d}x{rank} exceeds the payload"))
+    };
+    let a = Matrix::from_vec(rows, rank, rd.f64s(numel(rows, "adapter A")?, "adapter A")?);
+    let b = Matrix::from_vec(cols, rank, rd.f64s(numel(cols, "adapter B")?, "adapter B")?);
+    anyhow::ensure!(
+        rd.remaining() == 0,
+        "'{name}': {} trailing bytes after adapter B",
+        rd.remaining()
+    );
+    Ok(PackedLayer { name, rows, cols, bits, group_size, packed, params, a, b })
+}
+
+/// Load a packed artifact, validating magic, version, per-layer checksums
+/// and structural consistency. Every failure names the offending layer.
+pub fn load_artifact(path: &Path) -> anyhow::Result<PackedModel> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("cannot read artifact {}: {e}", path.display()))?;
+    let ctx = |msg: String| anyhow::anyhow!("artifact {}: {msg}", path.display());
+    let mut rd = Rd::new(&bytes);
+    let magic = rd.bytes(8, "magic").map_err(|e| ctx(format!("{e}")))?;
+    if magic != MAGIC {
+        return Err(ctx(format!(
+            "bad magic {:02x?} (expected {:02x?} — not a packed serving artifact)",
+            magic, MAGIC
+        )));
+    }
+    let version = rd.u32("version").map_err(|e| ctx(format!("{e}")))?;
+    if version != VERSION {
+        return Err(ctx(format!("unsupported version {version} (this build reads {VERSION})")));
+    }
+    let n_layers = rd.u32("layer count").map_err(|e| ctx(format!("{e}")))? as usize;
+    // Untrusted count: cap the reservation by what the remaining bytes could
+    // possibly hold (≥ 12 bytes per record: length + checksum), so a corrupt
+    // header cannot trigger a huge allocation before validation runs.
+    let mut layers = Vec::with_capacity(n_layers.min(rd.remaining() / 12));
+    for idx in 0..n_layers {
+        let lctx = |msg: String| ctx(format!("layer {idx}/{n_layers}: {msg}"));
+        let len = rd
+            .u64("payload length")
+            .map_err(|e| lctx(format!("{e} — file truncated mid-header")))? as usize;
+        let payload = rd
+            .bytes(len, "payload")
+            .map_err(|e| lctx(format!("{e} — file truncated mid-layer")))?;
+        let stored_crc = rd
+            .u32("checksum")
+            .map_err(|e| lctx(format!("{e} — file truncated before checksum")))?;
+        let computed = crc32(payload);
+        if computed != stored_crc {
+            return Err(lctx(format!(
+                "('{}') checksum mismatch: stored {stored_crc:08x}, computed {computed:08x} — \
+                 layer bytes are corrupted",
+                peek_name(payload)
+            )));
+        }
+        let layer = decode_layer(payload).map_err(|e| lctx(format!("{e}")))?;
+        if let Some(prev) = layers.iter().position(|l: &PackedLayer| l.name == layer.name) {
+            return Err(lctx(format!(
+                "duplicate layer name '{}' (also layer {prev}) — name-addressed serving \
+                 would route requests ambiguously",
+                layer.name
+            )));
+        }
+        layers.push(layer);
+    }
+    anyhow::ensure!(
+        rd.remaining() == 0,
+        "artifact {}: {} trailing bytes after the last layer",
+        path.display(),
+        rd.remaining()
+    );
+    Ok(PackedModel { layers })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_nf, quantize_rtn, QuantState};
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // IEEE CRC-32 check values.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("cloq_serve_{tag}_{}", std::process::id()))
+    }
+
+    fn small_model(seed: u64) -> PackedModel {
+        let mut rng = Rng::new(seed);
+        let w1 = Matrix::randn(20, 9, 0.3, &mut rng);
+        let w2 = Matrix::randn(16, 5, 0.3, &mut rng);
+        let l1 = PackedLayer::from_state(
+            "blk0.wq",
+            &QuantState::Int(quantize_rtn(&w1, 3, 8)),
+            &Matrix::randn(20, 2, 0.1, &mut rng),
+            &Matrix::randn(9, 2, 0.1, &mut rng),
+        )
+        .unwrap();
+        let l2 = PackedLayer::from_state(
+            "blk0.wo",
+            &QuantState::Nf(quantize_nf(&w2, 4, 8)),
+            &Matrix::randn(16, 2, 0.1, &mut rng),
+            &Matrix::randn(5, 2, 0.1, &mut rng),
+        )
+        .unwrap();
+        PackedModel::new(vec![l1, l2])
+    }
+
+    #[test]
+    fn roundtrip_preserves_forward_bits() {
+        let dir = tmp("rt");
+        let model = small_model(300);
+        let path = dir.join("model.cloqpkd");
+        save_artifact(&model, &path).unwrap();
+        let loaded = load_artifact(&path).unwrap();
+        let mut rng = Rng::new(301);
+        for (a, b) in model.layers.iter().zip(&loaded.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.packed, b.packed);
+            let x = rng.gauss_vec(a.rows);
+            let (ya, yb) = (a.forward(&x), b.forward(&x));
+            for (u, v) in ya.iter().zip(&yb) {
+                assert_eq!(u.to_bits(), v.to_bits(), "layer {}", a.name);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_names_the_layer() {
+        let dir = tmp("bad");
+        let model = small_model(302);
+        let path = dir.join("model.cloqpkd");
+        save_artifact(&model, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one bit deep inside the SECOND layer's payload.
+        let n = bytes.len();
+        bytes[n - 40] ^= 0x10;
+        let bad = dir.join("flipped.cloqpkd");
+        std::fs::write(&bad, &bytes).unwrap();
+        let msg = format!("{}", load_artifact(&bad).unwrap_err());
+        assert!(msg.contains("layer 1/2"), "{msg}");
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+        assert!(msg.contains("blk0.wo"), "error should name the layer: {msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let dir = tmp("magic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("junk.bin");
+        std::fs::write(&p, b"NOTCLOQ!rest").unwrap();
+        let msg = format!("{}", load_artifact(&p).unwrap_err());
+        assert!(msg.contains("bad magic"), "{msg}");
+
+        let model = small_model(303);
+        let good = dir.join("good.cloqpkd");
+        save_artifact(&model, &good).unwrap();
+        let mut bytes = std::fs::read(&good).unwrap();
+        bytes[8] = 99; // version field
+        let vbad = dir.join("vbad.cloqpkd");
+        std::fs::write(&vbad, &bytes).unwrap();
+        let msg = format!("{}", load_artifact(&vbad).unwrap_err());
+        assert!(msg.contains("unsupported version 99"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,504 @@
+//! The serving front-end: admits concurrent forward requests, coalesces
+//! them into per-layer micro-batches, and executes the batches on a
+//! persistent [`WorkerPool`].
+//!
+//! Shape of the pipeline:
+//!
+//! ```text
+//!   submit() ──→ pending FIFO ──→ batcher thread ──→ WorkerPool job
+//!                 (Mutex+Condvar)  (drains ≤ max_batch   (forward_batch,
+//!                                   same-layer requests)  replies per req)
+//! ```
+//!
+//! The batcher scans the FIFO head's layer and pulls every queued request
+//! for that layer (up to `max_batch`), preserving the relative order of
+//! the rest — arrival order stays fair across layers while the kernel's
+//! row-reuse amortization (`PackedLayer::forward_batch`) is harvested
+//! whenever requests pile up. Because the batched kernel is bit-identical
+//! to serial calls (parity contract in `serve::packed`), coalescing is
+//! purely a throughput decision: **batch composition can never change a
+//! response's numbers**.
+//!
+//! Coalescing policy: no timers. The batcher dispatches immediately while
+//! kernel workers are free (latency-first under light load), but keeps at
+//! most `workers` micro-batches in flight — once the workers are all busy
+//! it stops draining, so a saturating stream of single `submit()` calls
+//! piles up in the FIFO and naturally coalesces into full batches
+//! (throughput-first under saturation), and the pool's job queue stays
+//! bounded by the worker count.
+//!
+//! Every [`Response`] reports its queue wait, its micro-batch's kernel
+//! time and the batch size; [`EngineStats`] aggregates them for the bench
+//! harness (`BENCH_serve.json`) and the demo.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use crate::linalg::Matrix;
+use crate::serve::packed::PackedModel;
+use crate::util::threadpool::WorkerPool;
+
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Kernel workers executing micro-batches.
+    pub workers: usize,
+    /// Coalescing cap: at most this many requests per micro-batch.
+    pub max_batch: usize,
+    /// Admission backpressure: requests arriving while this many are
+    /// already pending are rejected with an "overloaded" error instead of
+    /// growing the FIFO (and its buffered input vectors) without bound.
+    pub max_pending: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { workers: 2, max_batch: 16, max_pending: 4096 }
+    }
+}
+
+/// One served forward result plus its latency breakdown.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub y: Vec<f64>,
+    /// Admission → micro-batch formation.
+    pub queue_s: f64,
+    /// Kernel time of the micro-batch this request rode in.
+    pub compute_s: f64,
+    /// Size of that micro-batch.
+    pub batch_size: usize,
+}
+
+/// Aggregate engine counters (snapshot via [`ServeEngine::stats`]).
+/// Invariant: every submitted request ends up in exactly one of
+/// `requests` (served), `rejected` (invalid at admission), or `failed`
+/// (rider of a panicked batch), so `requests + rejected + failed` equals
+/// the number of submissions whose tickets have resolved.
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    /// Requests served successfully.
+    pub requests: usize,
+    pub batches: usize,
+    pub max_batch_seen: usize,
+    /// Requests refused at admission (unknown layer, wrong width).
+    pub rejected: usize,
+    /// Micro-batches whose kernel panicked (the workers survive).
+    pub batch_panics: usize,
+    /// Riders of panicked batches; each got an `Err` naming the layer.
+    pub failed: usize,
+    pub total_queue_s: f64,
+    pub total_compute_s: f64,
+}
+
+impl EngineStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+
+    pub fn mean_queue_s(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.total_queue_s / self.requests as f64
+        }
+    }
+}
+
+/// Handle to a submitted request; resolves to its [`Response`].
+pub struct Ticket {
+    rx: mpsc::Receiver<anyhow::Result<Response>>,
+}
+
+impl Ticket {
+    /// Block until the engine answers (or report that it shut down first).
+    pub fn wait(self) -> anyhow::Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("serve engine dropped before answering"))?
+    }
+}
+
+struct Pending {
+    layer: usize,
+    x: Vec<f64>,
+    tx: mpsc::Sender<anyhow::Result<Response>>,
+    t_in: Instant,
+}
+
+struct QueueState {
+    pending: VecDeque<Pending>,
+    open: bool,
+    /// Micro-batches dispatched but not yet finished — the batcher holds
+    /// back while this reaches the worker count (see the module docs'
+    /// coalescing policy).
+    in_flight: usize,
+}
+
+struct Shared {
+    model: Arc<PackedModel>,
+    /// Name → layer index, built once so admission is O(1) instead of a
+    /// per-request linear scan over layer names.
+    index: std::collections::HashMap<String, usize>,
+    max_batch: usize,
+    max_pending: usize,
+    workers: usize,
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    stats: Mutex<EngineStats>,
+}
+
+/// The serving engine: batching front-end over a [`PackedModel`].
+pub struct ServeEngine {
+    shared: Arc<Shared>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServeEngine {
+    pub fn new(model: PackedModel, cfg: EngineConfig) -> ServeEngine {
+        let mut index = std::collections::HashMap::with_capacity(model.layers.len());
+        for (i, l) in model.layers.iter().enumerate() {
+            // Unique names are a serving invariant (load_artifact enforces
+            // it on untrusted bytes; this guards hand-built models) — with
+            // duplicates, name-addressed requests would be ambiguous.
+            let prev = index.insert(l.name.clone(), i);
+            assert!(prev.is_none(), "ServeEngine: duplicate layer name '{}'", l.name);
+        }
+        let shared = Arc::new(Shared {
+            model: Arc::new(model),
+            index,
+            max_batch: cfg.max_batch.max(1),
+            max_pending: cfg.max_pending.max(1),
+            workers: cfg.workers.max(1),
+            state: Mutex::new(QueueState {
+                pending: VecDeque::new(),
+                open: true,
+                in_flight: 0,
+            }),
+            cv: Condvar::new(),
+            stats: Mutex::new(EngineStats::default()),
+        });
+        let pool = WorkerPool::new(cfg.workers);
+        let batcher = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || batcher_loop(shared, pool))
+        };
+        ServeEngine { shared, batcher: Some(batcher) }
+    }
+
+    /// Admit one forward request for layer `layer`. Invalid requests (no
+    /// such layer, wrong input length) resolve immediately with an error —
+    /// they never occupy queue space.
+    pub fn submit(&self, layer: &str, x: Vec<f64>) -> Ticket {
+        let (tx, rx) = mpsc::channel();
+        match self.admit(layer, x, &tx) {
+            Ok(p) => {
+                let accepted = {
+                    let mut st = self.shared.state.lock().unwrap();
+                    if st.pending.len() < self.shared.max_pending {
+                        st.pending.push_back(p);
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if accepted {
+                    self.shared.cv.notify_one();
+                } else {
+                    self.reject(&tx, self.overloaded());
+                }
+            }
+            Err(e) => self.reject(&tx, e),
+        }
+        Ticket { rx }
+    }
+
+    /// Admit a burst of requests under ONE queue lock: the batcher cannot
+    /// observe a partially-enqueued burst, so same-layer requests in the
+    /// burst are guaranteed to be coalescible (up to `max_batch`).
+    pub fn submit_all(&self, reqs: Vec<(String, Vec<f64>)>) -> Vec<Ticket> {
+        let mut tickets = Vec::with_capacity(reqs.len());
+        let mut admitted = Vec::with_capacity(reqs.len());
+        for (layer, x) in reqs {
+            let (tx, rx) = mpsc::channel();
+            match self.admit(&layer, x, &tx) {
+                Ok(p) => admitted.push(p),
+                Err(e) => self.reject(&tx, e),
+            }
+            tickets.push(Ticket { rx });
+        }
+        let overflow = {
+            let mut st = self.shared.state.lock().unwrap();
+            let room = self.shared.max_pending.saturating_sub(st.pending.len());
+            let overflow = if admitted.len() > room { admitted.split_off(room) } else { Vec::new() };
+            st.pending.extend(admitted);
+            overflow
+        };
+        for p in overflow {
+            let tx = p.tx.clone();
+            self.reject(&tx, self.overloaded());
+        }
+        self.shared.cv.notify_one();
+        tickets
+    }
+
+    fn overloaded(&self) -> anyhow::Error {
+        anyhow::anyhow!(
+            "engine overloaded: pending queue at max_pending={}; retry later",
+            self.shared.max_pending
+        )
+    }
+
+    fn reject(&self, tx: &mpsc::Sender<anyhow::Result<Response>>, e: anyhow::Error) {
+        self.shared.stats.lock().unwrap().rejected += 1;
+        let _ = tx.send(Err(e));
+    }
+
+    fn admit(
+        &self,
+        layer: &str,
+        x: Vec<f64>,
+        tx: &mpsc::Sender<anyhow::Result<Response>>,
+    ) -> anyhow::Result<Pending> {
+        let idx = *self
+            .shared
+            .index
+            .get(layer)
+            .ok_or_else(|| anyhow::anyhow!("no such layer '{layer}' in the served model"))?;
+        let rows = self.shared.model.layers[idx].rows;
+        anyhow::ensure!(
+            x.len() == rows,
+            "layer '{layer}': input length {} but the layer takes {rows} features",
+            x.len()
+        );
+        Ok(Pending { layer: idx, x, tx: tx.clone(), t_in: Instant::now() })
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Stop admitting, drain every queued request, join the batcher and the
+    /// kernel workers, and return the final counters.
+    pub fn shutdown(mut self) -> EngineStats {
+        self.shutdown_impl(); // Drop runs it again; it is idempotent
+        self.stats()
+    }
+
+    fn shutdown_impl(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.open = false;
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join(); // batcher drains the queue, then drops the pool (which drains its jobs)
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+fn batcher_loop(shared: Arc<Shared>, pool: WorkerPool) {
+    loop {
+        let batch = {
+            let mut st = shared.state.lock().unwrap();
+            // Hold back while every worker is busy: pending requests keep
+            // piling up and coalesce into fuller batches (module docs).
+            loop {
+                if !st.pending.is_empty() && st.in_flight < shared.workers {
+                    break;
+                }
+                if st.pending.is_empty() && !st.open {
+                    drop(st);
+                    pool.shutdown(); // drains in-flight kernel jobs first
+                    return;
+                }
+                st = shared.cv.wait(st).unwrap();
+            }
+            st.in_flight += 1;
+            take_batch(&mut st.pending, shared.max_batch)
+        };
+        let t_formed = Instant::now();
+        let shared2 = Arc::clone(&shared);
+        pool.submit(move || run_batch(&shared2, batch, t_formed));
+    }
+}
+
+/// Pull the FIFO head plus every same-layer request behind it (≤ cap),
+/// preserving the relative order of everything left behind. The scan is
+/// bounded: it stops at the cap OR after examining `8·cap` entries, so a
+/// deep multi-layer backlog (the saturation case the coalescing policy
+/// exists for) costs O(cap) under the queue mutex, never O(queue) —
+/// head-layer requests deeper than the scan window simply ride a later
+/// batch.
+fn take_batch(pending: &mut VecDeque<Pending>, cap: usize) -> Vec<Pending> {
+    let layer = pending.front().expect("caller checked non-empty").layer;
+    let scan_limit = cap.saturating_mul(8).max(1);
+    let mut taken = Vec::new();
+    let mut skipped = Vec::new(); // other-layer prefix entries, in order
+    let mut scanned = 0usize;
+    while let Some(p) = pending.pop_front() {
+        scanned += 1;
+        if p.layer == layer {
+            taken.push(p);
+            if taken.len() == cap {
+                break; // untouched tail stays in place
+            }
+        } else {
+            skipped.push(p);
+        }
+        if scanned == scan_limit {
+            break;
+        }
+    }
+    while let Some(p) = skipped.pop() {
+        pending.push_front(p);
+    }
+    taken
+}
+
+fn run_batch(shared: &Shared, batch: Vec<Pending>, t_formed: Instant) {
+    let layer = &shared.model.layers[batch[0].layer];
+    let bs = batch.len();
+    let mut xs = Matrix::zeros(bs, layer.rows);
+    for (k, p) in batch.iter().enumerate() {
+        xs.row_mut(k).copy_from_slice(&p.x);
+    }
+    // Contain a kernel panic to this batch: every rider gets an Err naming
+    // it (not a bogus "engine dropped"), the worker survives, and the
+    // in-flight slot is still released below.
+    let t_exec = Instant::now();
+    let kernel =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| layer.forward_batch(&xs)));
+    let compute_s = t_exec.elapsed().as_secs_f64();
+
+    let mut total_queue = 0.0;
+    match &kernel {
+        Ok(ys) => {
+            for (k, p) in batch.into_iter().enumerate() {
+                let queue_s = t_formed.saturating_duration_since(p.t_in).as_secs_f64();
+                total_queue += queue_s;
+                let resp =
+                    Response { y: ys.row(k).to_vec(), queue_s, compute_s, batch_size: bs };
+                let _ = p.tx.send(Ok(resp)); // requester may have given up; fine
+            }
+        }
+        Err(_) => {
+            for p in batch {
+                let _ = p.tx.send(Err(anyhow::anyhow!(
+                    "layer '{}': serving batch of {bs} panicked in the kernel",
+                    layer.name
+                )));
+            }
+        }
+    }
+    {
+        let mut stats = shared.stats.lock().unwrap();
+        match &kernel {
+            Ok(_) => {
+                stats.requests += bs;
+                stats.batches += 1;
+                stats.max_batch_seen = stats.max_batch_seen.max(bs);
+                stats.total_queue_s += total_queue;
+                stats.total_compute_s += compute_s;
+            }
+            Err(_) => {
+                stats.batch_panics += 1;
+                stats.failed += bs;
+            }
+        }
+    }
+    let mut st = shared.state.lock().unwrap();
+    st.in_flight -= 1;
+    drop(st);
+    shared.cv.notify_all(); // wake the batcher: a worker slot is free again
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_rtn, QuantState};
+    use crate::serve::packed::PackedLayer;
+    use crate::util::prng::Rng;
+
+    fn model(seed: u64) -> PackedModel {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        for (name, m, n) in [("wq", 24usize, 10usize), ("wo", 18, 7)] {
+            let w = Matrix::randn(m, n, 0.3, &mut rng);
+            let q = QuantState::Int(quantize_rtn(&w, 4, 8));
+            let a = Matrix::randn(m, 3, 0.1, &mut rng);
+            let b = Matrix::randn(n, 3, 0.1, &mut rng);
+            layers.push(PackedLayer::from_state(name, &q, &a, &b).unwrap());
+        }
+        PackedModel::new(layers)
+    }
+
+    #[test]
+    fn responses_match_direct_forward_bit_for_bit() {
+        let m = model(400);
+        let direct: Vec<Vec<f64>> = {
+            let mut rng = Rng::new(401);
+            (0..10)
+                .map(|i| {
+                    let l = &m.layers[i % 2];
+                    l.forward(&rng.gauss_vec(l.rows))
+                })
+                .collect()
+        };
+        let engine = ServeEngine::new(model(400), EngineConfig { workers: 2, max_batch: 4, ..EngineConfig::default() });
+        let mut rng = Rng::new(401); // same stream → same inputs
+        let reqs: Vec<(String, Vec<f64>)> = (0..10)
+            .map(|i| {
+                let l = &engine.shared.model.layers[i % 2];
+                (l.name.clone(), rng.gauss_vec(l.rows))
+            })
+            .collect();
+        let tickets = engine.submit_all(reqs);
+        for (k, t) in tickets.into_iter().enumerate() {
+            let r = t.wait().unwrap();
+            assert_eq!(r.y.len(), direct[k].len());
+            for (u, v) in r.y.iter().zip(&direct[k]) {
+                assert_eq!(u.to_bits(), v.to_bits(), "request {k}");
+            }
+            assert!(r.batch_size >= 1 && r.batch_size <= 4);
+        }
+        let stats = engine.shutdown();
+        assert_eq!(stats.requests, 10);
+        assert!(stats.batches < 10, "burst must coalesce: {stats:?}");
+        assert!(stats.max_batch_seen >= 2, "{stats:?}");
+    }
+
+    #[test]
+    fn invalid_requests_rejected_with_actionable_errors() {
+        let engine = ServeEngine::new(model(402), EngineConfig::default());
+        let msg = format!("{}", engine.submit("nope", vec![0.0; 4]).wait().unwrap_err());
+        assert!(msg.contains("no such layer 'nope'"), "{msg}");
+        let msg = format!("{}", engine.submit("wq", vec![0.0; 3]).wait().unwrap_err());
+        assert!(msg.contains("24 features"), "{msg}");
+        let stats = engine.shutdown();
+        assert_eq!(stats.rejected, 2);
+        assert_eq!(stats.requests, 0);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_requests() {
+        let engine = ServeEngine::new(model(403), EngineConfig { workers: 1, max_batch: 8, ..EngineConfig::default() });
+        let mut rng = Rng::new(404);
+        let tickets: Vec<Ticket> =
+            (0..32).map(|_| engine.submit("wq", rng.gauss_vec(24))).collect();
+        let stats = engine.shutdown(); // must answer everything first
+        assert_eq!(stats.requests, 32);
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! The packed-weight serving subsystem — the inference path CLoQ's
+//! quantize+init stage exists to feed.
+//!
+//! After `quantize_init` produces a frozen INT base plus calibrated LoRA
+//! adapters, serving must consume that state **as quantized**: the memory
+//! win (2–8 bits/weight instead of 64) evaporates if the server
+//! re-materializes dense weights per layer. This module provides the three
+//! pieces:
+//!
+//! * [`packed`] — [`PackedLayer`]/[`PackedModel`]: codes bit-packed into
+//!   u32 words plus a **fused unpack→dequant→dot forward kernel** with the
+//!   LoRA delta as two skinny products (`y = Q̂ᵀx + B(Aᵀx)`). The kernel is
+//!   bit-identical to the dense `q_deq` reference — the parity contract is
+//!   spelled out in the module docs and enforced by
+//!   `rust/tests/parity_serve.rs`.
+//! * [`artifact`] — one versioned binary checkpoint for the whole packed
+//!   model, with per-layer CRC-32 validation and corruption errors that
+//!   name the offending layer (`rust/tests/golden_serve.rs`).
+//! * [`engine`] — [`ServeEngine`]: a batching front-end on the persistent
+//!   `util::threadpool::WorkerPool` that coalesces concurrent requests
+//!   into per-layer micro-batches and reports per-request latency plus
+//!   aggregate throughput counters.
+//!
+//! Benchmarks: `cargo bench --bench bench_serve` writes `BENCH_serve.json`
+//! (fused vs dense forward, batched vs serial throughput) — see
+//! EXPERIMENTS.md §Serve.
+
+pub mod artifact;
+pub mod engine;
+pub mod packed;
+
+pub use artifact::{crc32, load_artifact, save_artifact};
+pub use engine::{EngineConfig, EngineStats, Response, ServeEngine, Ticket};
+pub use packed::{words_per_row, DequantParams, PackedLayer, PackedModel};

@@ -1,0 +1,450 @@
+//! Packed-weight layers and the fused unpack→dequant→dot forward kernel.
+//!
+//! A [`PackedLayer`] holds a linear layer the way the serving path stores
+//! it: `b`-bit codes packed little-endian into `u32` words (the
+//! `quant::packing` layout, row-aligned so row `i` starts at word
+//! `i·words_per_row`), the per-group dequantization parameters (INT grid
+//! scales/zeros, or the NF codebook levels + absmax), and the LoRA factors
+//! `A` (m×r) and `B` (n×r). The forward computes
+//!
+//! ```text
+//!   y = Q̂ᵀx + B·(Aᵀx)        (layer orientation Y = X·W, W ∈ ℝ^{m×n})
+//! ```
+//!
+//! unpacking and dequantizing **in-register** — the dense `q_deq` matrix is
+//! never materialized; the only per-layer scratch is one n-wide row buffer
+//! on the batched path.
+//!
+//! **Parity contract** (locked down by `rust/tests/parity_serve.rs`):
+//! every output element is accumulated in ascending input-row order with
+//! one rounding per multiply-add, `x[i] == 0` contributions skipped, and
+//! the dequantized value computed by the exact op sequence of
+//! `QuantState::dequantize` — so the fused forward is **bit-identical**
+//! (0 ULP) to the dense reference `matvec_t(q_deq, x)` plus the same
+//! factored LoRA product, for every bit width, group size and shape. The
+//! batched forward reuses each dequantized row across the micro-batch
+//! without changing any per-element op, so it is bit-identical to serial
+//! request-at-a-time calls. Against a fully *dense effective weight*
+//! (`q_deq + A·Bᵀ` materialized, different accumulation order) agreement
+//! is to floating-point tolerance only — that comparison is also in the
+//! parity suite, with the tolerance stated there.
+
+use crate::linalg::blas::{axpy, dot, matvec_t};
+use crate::linalg::{matmul, Matrix};
+use crate::lowrank::{LayerInit, Method};
+use crate::quant::packing::{pack_codes, try_unpack_codes};
+use crate::quant::{NfQuantized, QuantState, QuantizedTensor};
+
+/// Words per packed row: codes are row-aligned so each row of an m×n layer
+/// occupies `ceil(n / (32/bits))` little-endian u32 words.
+pub fn words_per_row(cols: usize, bits: u32) -> usize {
+    cols.div_ceil(32 / bits as usize)
+}
+
+/// How a packed layer turns codes into values.
+#[derive(Clone, Debug)]
+pub enum DequantParams {
+    /// Asymmetric INT grid: `v = (c − zeros[g][j]) · scales[g][j]`.
+    Grid { scales: Matrix, zeros: Matrix },
+    /// NF-k codebook: `v = levels[c] · absmax[g][j]`.
+    Codebook { levels: Vec<f64>, absmax: Matrix },
+}
+
+/// One packed linear layer: codes + dequant params + LoRA adapters.
+#[derive(Clone, Debug)]
+pub struct PackedLayer {
+    pub name: String,
+    /// Input features m (rows of W).
+    pub rows: usize,
+    /// Output features n (cols of W).
+    pub cols: usize,
+    pub bits: u32,
+    /// Input rows sharing one scale/zero (or absmax) entry.
+    pub group_size: usize,
+    /// Row-aligned packed codes: row `i` is words
+    /// `[i·words_per_row, (i+1)·words_per_row)`.
+    pub packed: Vec<u32>,
+    pub params: DequantParams,
+    /// m×r adapter (delta = A·Bᵀ).
+    pub a: Matrix,
+    /// n×r adapter.
+    pub b: Matrix,
+}
+
+impl PackedLayer {
+    /// Pack an exact quantization state plus adapters.
+    pub fn from_state(
+        name: &str,
+        qs: &QuantState,
+        a: &Matrix,
+        b: &Matrix,
+    ) -> anyhow::Result<PackedLayer> {
+        let (rows, cols) = (qs.rows(), qs.cols());
+        anyhow::ensure!(
+            a.rows == rows && b.rows == cols && a.cols == b.cols,
+            "layer '{name}': adapters {}x{} / {}x{} do not fit base {rows}x{cols}",
+            a.rows,
+            a.cols,
+            b.rows,
+            b.cols,
+        );
+        let (bits, group_size, codes, params) = match qs {
+            QuantState::Int(q) => (
+                q.bits,
+                q.group_size,
+                &q.codes,
+                DequantParams::Grid { scales: q.scales.clone(), zeros: q.zeros.clone() },
+            ),
+            QuantState::Nf(q) => (
+                q.bits,
+                q.block_size,
+                &q.codes,
+                DequantParams::Codebook { levels: q.levels.clone(), absmax: q.absmax.clone() },
+            ),
+        };
+        let wpr = words_per_row(cols, bits);
+        let mut packed = Vec::with_capacity(rows * wpr);
+        for i in 0..rows {
+            packed.extend_from_slice(&pack_codes(&codes[i * cols..(i + 1) * cols], bits));
+        }
+        debug_assert_eq!(packed.len(), rows * wpr);
+        Ok(PackedLayer {
+            name: name.to_string(),
+            rows,
+            cols,
+            bits,
+            group_size,
+            packed,
+            params,
+            a: a.clone(),
+            b: b.clone(),
+        })
+    }
+
+    /// Pack a [`LayerInit`]. Errors actionably when the method kept an fp
+    /// base and there is no quantization state to pack.
+    pub fn from_layer_init(name: &str, method: Method, li: &LayerInit) -> anyhow::Result<PackedLayer> {
+        let qs = li.quant.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "layer '{name}': method {} keeps the fp base and produced no packed \
+                 quantization state; re-grid it for serving (e.g. \
+                 QuantState::Int(quantize_rtn(&li.q_deq, 8, group_size))) or pick a \
+                 quantized method",
+                method.name()
+            )
+        })?;
+        Self::from_state(name, qs, &li.a, &li.b)
+    }
+
+    pub fn rank(&self) -> usize {
+        self.a.cols
+    }
+
+    /// Reconstruct the exact quantization state (the artifact roundtrip
+    /// tests assert this is byte-identical to what was packed).
+    pub fn to_state(&self) -> anyhow::Result<QuantState> {
+        let wpr = words_per_row(self.cols, self.bits);
+        let mut codes = Vec::with_capacity(self.rows * self.cols);
+        for i in 0..self.rows {
+            codes.extend(try_unpack_codes(
+                &self.packed[i * wpr..(i + 1) * wpr],
+                self.bits,
+                self.cols,
+            )?);
+        }
+        Ok(match &self.params {
+            DequantParams::Grid { scales, zeros } => QuantState::Int(QuantizedTensor {
+                bits: self.bits,
+                group_size: self.group_size,
+                rows: self.rows,
+                cols: self.cols,
+                codes,
+                scales: scales.clone(),
+                zeros: zeros.clone(),
+            }),
+            DequantParams::Codebook { levels, absmax } => QuantState::Nf(NfQuantized {
+                bits: self.bits,
+                block_size: self.group_size,
+                rows: self.rows,
+                cols: self.cols,
+                codes,
+                absmax: absmax.clone(),
+                levels: levels.clone(),
+            }),
+        })
+    }
+
+    /// Dense dequantized base (reference / debugging; the serving hot path
+    /// never calls this).
+    pub fn dequantize(&self) -> anyhow::Result<Matrix> {
+        Ok(self.to_state()?.dequantize())
+    }
+
+    /// Unpack + dequantize row `i`, feeding each `(j, value)` to `sink` in
+    /// ascending-j order with the exact op sequence of
+    /// `QuantState::dequantize`. The ONE implementation of the dequant
+    /// loops — `forward` folds values into `y` in-register, the batched
+    /// path writes them to its row scratch; a single body means the 0-ULP
+    /// parity contract cannot drift between the two.
+    #[inline]
+    fn for_each_dequant(&self, i: usize, mut sink: impl FnMut(usize, f64)) {
+        let wpr = words_per_row(self.cols, self.bits);
+        let per_word = 32 / self.bits as usize;
+        let mask = ((1u64 << self.bits) - 1) as u32;
+        let g = i / self.group_size;
+        let words = &self.packed[i * wpr..(i + 1) * wpr];
+        match &self.params {
+            DequantParams::Grid { scales, zeros } => {
+                let srow = scales.row(g);
+                let zrow = zeros.row(g);
+                let mut j = 0usize;
+                'row: for &word in words {
+                    for k in 0..per_word {
+                        if j == self.cols {
+                            break 'row;
+                        }
+                        let c = ((word >> (k as u32 * self.bits)) & mask) as f64;
+                        sink(j, (c - zrow[j]) * srow[j]);
+                        j += 1;
+                    }
+                }
+            }
+            DequantParams::Codebook { levels, absmax } => {
+                let arow = absmax.row(g);
+                let mut j = 0usize;
+                'row: for &word in words {
+                    for k in 0..per_word {
+                        if j == self.cols {
+                            break 'row;
+                        }
+                        let c = ((word >> (k as u32 * self.bits)) & mask) as usize;
+                        sink(j, levels[c] * arow[j]);
+                        j += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    /// `y += B·(Aᵀx)` — the two skinny products, shared verbatim by the
+    /// fused and dense reference paths so LoRA handling can never break
+    /// parity.
+    fn add_lora(&self, y: &mut [f64], x: &[f64]) {
+        if self.rank() == 0 {
+            return;
+        }
+        let t = matvec_t(&self.a, x);
+        for (j, yj) in y.iter_mut().enumerate() {
+            *yj += dot(&t, self.b.row(j));
+        }
+    }
+
+    /// Fused packed forward for one request: unpack → dequant → dot in one
+    /// pass over the packed words, never materializing the dense base.
+    /// Bit-identical to [`PackedLayer::dense_reference_forward`] on the
+    /// layer's own dequantized base (the parity contract in the module
+    /// docs).
+    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "layer '{}': input len vs rows", self.name);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi == 0.0 {
+                continue; // matvec_t's skip — keeps the op sequences identical
+            }
+            self.for_each_dequant(i, |j, v| y[j] += xi * v);
+        }
+        self.add_lora(&mut y, x);
+        y
+    }
+
+    /// Micro-batched forward: `Y[b] = forward(X[b])` with every packed row
+    /// unpacked + dequantized ONCE and reused across the whole batch — the
+    /// work amortization the engine's coalescer exists to harvest. The LoRA
+    /// t-product runs as one skinny GEMM (`X·A`), whose per-element
+    /// accumulation order equals the serial `matvec_t`. Bit-identical to
+    /// `xs.rows` serial [`PackedLayer::forward`] calls.
+    pub fn forward_batch(&self, xs: &Matrix) -> Matrix {
+        assert_eq!(xs.cols, self.rows, "layer '{}': batch cols vs rows", self.name);
+        let (batch, n) = (xs.rows, self.cols);
+        let mut ys = Matrix::zeros(batch, n);
+        let mut wrow = vec![0.0; n];
+        for i in 0..self.rows {
+            self.for_each_dequant(i, |j, v| wrow[j] = v);
+            for bi in 0..batch {
+                let xi = xs.at(bi, i);
+                if xi == 0.0 {
+                    continue;
+                }
+                axpy(ys.row_mut(bi), xi, &wrow);
+            }
+        }
+        if self.rank() > 0 {
+            let t = matmul(xs, &self.a); // batch×r, same per-element order as matvec_t
+            for bi in 0..batch {
+                let trow = t.row(bi);
+                let yrow = ys.row_mut(bi);
+                for (j, yj) in yrow.iter_mut().enumerate() {
+                    *yj += dot(trow, self.b.row(j));
+                }
+            }
+        }
+        ys
+    }
+
+    /// The dense reference the parity suite pins the fused kernel against:
+    /// a plain `matvec_t` over a pre-materialized `q_deq` plus the same
+    /// factored LoRA product.
+    pub fn dense_reference_forward(&self, q_deq: &Matrix, x: &[f64]) -> Vec<f64> {
+        assert_eq!(q_deq.rows, self.rows);
+        assert_eq!(q_deq.cols, self.cols);
+        let mut y = matvec_t(q_deq, x);
+        self.add_lora(&mut y, x);
+        y
+    }
+
+    /// Packed storage footprint in bytes (codes + params + adapters) —
+    /// reported by the engine and the bench harness.
+    pub fn packed_bytes(&self) -> usize {
+        let params = match &self.params {
+            DequantParams::Grid { scales, zeros } => (scales.data.len() + zeros.data.len()) * 8,
+            DequantParams::Codebook { levels, absmax } => (levels.len() + absmax.data.len()) * 8,
+        };
+        self.packed.len() * 4 + params + (self.a.data.len() + self.b.data.len()) * 8
+    }
+}
+
+/// A served model: packed layers addressable by name.
+#[derive(Clone, Debug, Default)]
+pub struct PackedModel {
+    pub layers: Vec<PackedLayer>,
+}
+
+impl PackedModel {
+    pub fn new(layers: Vec<PackedLayer>) -> PackedModel {
+        PackedModel { layers }
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.layers.iter().position(|l| l.name == name)
+    }
+
+    pub fn layer(&self, name: &str) -> Option<&PackedLayer> {
+        self.index_of(name).map(|i| &self.layers[i])
+    }
+
+    /// Total packed bytes across layers.
+    pub fn packed_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.packed_bytes()).sum()
+    }
+
+    /// Build the serving model straight from a `quantize_init` result: the
+    /// exact f64 quantization states plus the adapters from the f32 LoRA
+    /// store. The f32→f64 widening is lossless, but the adapter VALUES are
+    /// the f32-rounded ones the trainer itself consumes — served outputs
+    /// match the trainer's adapters exactly, and may differ in low-order
+    /// bits from the init-time f64 `LayerInit.a`/`b` (use
+    /// [`PackedLayer::from_layer_init`] to serve those). The 0-ULP parity
+    /// contract is per layer, against its own packed state and adapters,
+    /// and holds on either path.
+    pub fn from_model_init(init: &crate::coordinator::ModelInit) -> anyhow::Result<PackedModel> {
+        let mut layers = Vec::with_capacity(init.exact.len());
+        for (name, qs) in &init.exact {
+            let (ka, kb) = (format!("{name}.A"), format!("{name}.B"));
+            anyhow::ensure!(
+                init.lora.contains(&ka) && init.lora.contains(&kb),
+                "layer '{name}': adapters {ka}/{kb} missing from the init's LoRA store"
+            );
+            let a = init.lora.get(&ka).to_matrix();
+            let b = init.lora.get(&kb).to_matrix();
+            layers.push(PackedLayer::from_state(name, qs, &a, &b)?);
+        }
+        Ok(PackedModel { layers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::quantize_rtn;
+    use crate::util::prng::Rng;
+
+    fn mk_layer(m: usize, n: usize, bits: u32, gs: usize, r: usize, seed: u64) -> (PackedLayer, Matrix) {
+        let mut rng = Rng::new(seed);
+        let w = Matrix::randn(m, n, 0.3, &mut rng);
+        let q = quantize_rtn(&w, bits, gs);
+        let q_deq = q.dequantize();
+        let a = Matrix::randn(m, r, 0.1, &mut rng);
+        let b = Matrix::randn(n, r, 0.1, &mut rng);
+        let l = PackedLayer::from_state("t", &QuantState::Int(q), &a, &b).unwrap();
+        (l, q_deq)
+    }
+
+    #[test]
+    fn fused_forward_bit_exact_vs_dense_reference() {
+        let mut rng = Rng::new(200);
+        for &(m, n, bits, gs) in
+            &[(10usize, 3usize, 2u32, 4usize), (70, 37, 3, 32), (64, 64, 4, 64), (33, 10, 8, 7)]
+        {
+            let (l, q_deq) = mk_layer(m, n, bits, gs, 4, 201);
+            let x = rng.gauss_vec(m);
+            let fused = l.forward(&x);
+            let dense = l.dense_reference_forward(&q_deq, &x);
+            for (u, v) in fused.iter().zip(&dense) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{m}x{n} bits={bits} gs={gs}");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_bit_exact_vs_serial() {
+        let (l, _) = mk_layer(48, 19, 3, 16, 5, 202);
+        let mut rng = Rng::new(203);
+        let xs = Matrix::randn(6, 48, 1.0, &mut rng);
+        let ys = l.forward_batch(&xs);
+        for bi in 0..6 {
+            let y = l.forward(xs.row(bi));
+            for (u, v) in ys.row(bi).iter().zip(&y) {
+                assert_eq!(u.to_bits(), v.to_bits(), "row {bi}");
+            }
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_is_exact() {
+        let (l, q_deq) = mk_layer(30, 11, 2, 8, 3, 204);
+        let qs = l.to_state().unwrap();
+        assert_eq!(qs.dequantize().data, q_deq.data);
+        match qs {
+            QuantState::Int(q) => {
+                assert_eq!(q.rows, 30);
+                assert_eq!(q.cols, 11);
+            }
+            _ => panic!("grid state expected"),
+        }
+    }
+
+    #[test]
+    fn rank_zero_layer_serves_base_only() {
+        let (mut l, q_deq) = mk_layer(16, 8, 4, 8, 2, 205);
+        l.a = Matrix::zeros(16, 0);
+        l.b = Matrix::zeros(8, 0);
+        let x = Rng::new(206).gauss_vec(16);
+        let y = l.forward(&x);
+        let y_ref = crate::linalg::matvec_t(&q_deq, &x);
+        assert_eq!(y, y_ref);
+        let ys = l.forward_batch(&Matrix::from_vec(1, 16, x));
+        assert_eq!(ys.data, y_ref);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut rng = Rng::new(207);
+        let w = Matrix::randn(12, 6, 0.3, &mut rng);
+        let q = QuantState::Int(quantize_rtn(&w, 4, 8));
+        let a = Matrix::zeros(12, 2);
+        let bad_b = Matrix::zeros(5, 2); // cols must be 6
+        let err = PackedLayer::from_state("bad", &q, &a, &bad_b).unwrap_err();
+        assert!(format!("{err}").contains("bad"), "{err}");
+    }
+}

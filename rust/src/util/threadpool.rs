@@ -1,13 +1,20 @@
-//! Scoped thread pool for layer-parallel jobs (no `rayon` offline).
+//! Thread pools for parallel jobs (no `rayon` offline).
 //!
-//! The coordinator quantizes / initializes transformer layers as independent
-//! jobs. This pool executes `FnOnce` jobs on N worker threads and joins them,
-//! propagating panics, collecting results in submission order, and reporting
-//! per-job status to an optional observer (used by the scheduler's progress
-//! display and the failure-injection tests).
+//! Two shapes of parallelism live here:
+//!
+//! * [`run_parallel`] / [`run_collect_status`] — one-shot scoped batches.
+//!   The coordinator quantizes / initializes transformer layers as
+//!   independent jobs; results come back in submission order, panics are
+//!   caught and reported per job (used by the scheduler's progress display
+//!   and the failure-injection tests).
+//! * [`WorkerPool`] — a persistent pool with dynamically submitted jobs,
+//!   the execution substrate of the serving engine (`serve::engine`): the
+//!   batcher coalesces requests into micro-batches and submits each batch
+//!   as one job; workers outlive any individual request.
 
+use std::collections::VecDeque;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Outcome of one job as seen by the scheduler.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -91,6 +98,107 @@ where
     (results, statuses)
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    jobs: VecDeque<Job>,
+    open: bool,
+    panicked: usize,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+/// Persistent worker pool: jobs are submitted dynamically (unlike the
+/// one-shot [`run_parallel`]) and executed by long-lived workers in FIFO
+/// order. Shutdown (explicit or on drop) drains the queue before joining,
+/// so every submitted job runs. A panicking job is caught and counted —
+/// one bad request cannot take a worker down.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { jobs: VecDeque::new(), open: true, panicked: 0 }),
+            cv: Condvar::new(),
+        });
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let mut st = shared.state.lock().unwrap();
+                        loop {
+                            if let Some(j) = st.jobs.pop_front() {
+                                break Some(j);
+                            }
+                            if !st.open {
+                                break None;
+                            }
+                            st = shared.cv.wait(st).unwrap();
+                        }
+                    };
+                    match job {
+                        None => break,
+                        Some(j) => {
+                            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(j)).is_err() {
+                                shared.state.lock().unwrap().panicked += 1;
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Queue a job for execution. Panics if called after [`shutdown`].
+    ///
+    /// [`shutdown`]: WorkerPool::shutdown
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            assert!(st.open, "submit on a shut-down WorkerPool");
+            st.jobs.push_back(Box::new(job));
+        }
+        self.shared.cv.notify_one();
+    }
+
+    /// Number of jobs that panicked so far (each was caught; its worker
+    /// kept running).
+    pub fn panicked(&self) -> usize {
+        self.shared.state.lock().unwrap().panicked
+    }
+
+    /// Drain the queue and join the workers. Also runs on drop; calling it
+    /// explicitly just makes the join point visible in the caller.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.open = false;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
 fn panic_message(e: &Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = e.downcast_ref::<&str>() {
         s.to_string()
@@ -136,6 +244,40 @@ mod tests {
         let jobs: Vec<fn() -> ()> = vec![];
         let out = run_parallel(4, jobs);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn worker_pool_runs_all_jobs_across_shutdown() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let done = Arc::new(AtomicUsize::new(0));
+        let pool = WorkerPool::new(3);
+        for _ in 0..40 {
+            let done = Arc::clone(&done);
+            pool.submit(move || {
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown(); // must drain the queue, not abandon it
+        assert_eq!(done.load(Ordering::SeqCst), 40);
+    }
+
+    #[test]
+    fn worker_pool_survives_panicking_jobs() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let done = Arc::new(AtomicUsize::new(0));
+        let mut pool = WorkerPool::new(2);
+        for i in 0..10 {
+            let done = Arc::clone(&done);
+            pool.submit(move || {
+                if i % 3 == 0 {
+                    panic!("injected {i}");
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown_impl(); // join in place so accounting stays readable
+        assert_eq!(done.load(Ordering::SeqCst), 6);
+        assert_eq!(pool.panicked(), 4); // i ∈ {0,3,6,9}
     }
 
     #[test]

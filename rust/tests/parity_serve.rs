@@ -1,0 +1,298 @@
+//! Serve-path parity suite: the fused packed forward must agree with the
+//! dense `q_deq` reference **bit-for-bit** (0 ULP) for every init method
+//! that produces a quantization state, across bit widths {2,3,4,8}, group
+//! sizes (including non-divisors) and ragged shapes; the batched kernel
+//! must be bit-identical to serial calls; and the engine must return the
+//! same bits as calling the kernel directly.
+//!
+//! Contract recap (see `rust/src/serve/packed.rs` module docs): per output
+//! element the fused kernel accumulates contributions in ascending input-
+//! row order with one rounding per multiply-add and the exact dequant op
+//! sequence of `QuantState::dequantize`, so packed-vs-dense is exact
+//! equality, not a tolerance. Only the comparison against a fully *dense
+//! effective weight* (`q_deq + A·Bᵀ` materialized, different accumulation
+//! order) is tolerance-based: ≤ 1e-10 relative on these scales.
+
+use cloq::coordinator::quantize::quantize_init;
+use cloq::linalg::{matmul_nt, matvec_t, syrk_t, Matrix};
+use cloq::lowrank::{init_layer, InitConfig, Method};
+use cloq::quant::{quantize_nf, quantize_rtn, QuantState};
+use cloq::serve::{EngineConfig, PackedLayer, PackedModel, ServeEngine};
+use cloq::util::prng::Rng;
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (k, (u, v)) in a.iter().zip(b).enumerate() {
+        assert_eq!(u.to_bits(), v.to_bits(), "{what}: element {k}: {u} vs {v}");
+    }
+}
+
+#[test]
+fn fused_matches_dense_for_every_state_producing_method() {
+    // Ragged on purpose: 70 rows ∤ 32, 37 cols ∤ any per-word count.
+    let (m, n, r) = (70usize, 37usize, 6usize);
+    let mut rng = Rng::new(500);
+    let x_cal = Matrix::randn(2 * m, m, 1.0, &mut rng);
+    let h = syrk_t(&x_cal);
+    let w = Matrix::randn(m, n, 0.3, &mut rng);
+
+    for method in [Method::QLora, Method::GptqLora, Method::LoftQ, Method::CLoQ] {
+        for bits in [2u32, 3, 4] {
+            for gs in [32usize, 64] {
+                let mut cfg = InitConfig::new(method, bits, r);
+                cfg.group_size = gs;
+                let li = init_layer(&w, Some(&h), &cfg, &mut rng);
+                let layer = PackedLayer::from_layer_init("l", method, &li).unwrap();
+                let x = rng.gauss_vec(m);
+                let fused = layer.forward(&x);
+                let dense = layer.dense_reference_forward(&li.q_deq, &x);
+                assert_bits_eq(&fused, &dense, &format!("{method:?} bits={bits} gs={gs}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_matches_dense_at_8_bit_and_tiny_groups() {
+    // 8-bit INT grid (4 codes per word) plus group sizes 1 and a
+    // non-divisor 7 — the packed row/group indexing edge cases.
+    let mut rng = Rng::new(501);
+    for &(m, n) in &[(1usize, 1usize), (10, 3), (33, 10), (64, 64)] {
+        let w = Matrix::randn(m, n, 0.3, &mut rng);
+        for bits in [2u32, 3, 4, 8] {
+            for gs in [1usize, 7, 32] {
+                let q = quantize_rtn(&w, bits, gs);
+                let q_deq = q.dequantize();
+                let a = Matrix::randn(m, 3.min(m), 0.1, &mut rng);
+                let b = Matrix::randn(n, 3.min(m), 0.1, &mut rng);
+                let layer =
+                    PackedLayer::from_state("l", &QuantState::Int(q), &a, &b).unwrap();
+                let x = rng.gauss_vec(m);
+                assert_bits_eq(
+                    &layer.forward(&x),
+                    &layer.dense_reference_forward(&q_deq, &x),
+                    &format!("{m}x{n} bits={bits} gs={gs}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn nf_codebook_layers_are_bit_exact_too() {
+    // QLoRA's NF state rides the codebook path (levels table + absmax), not
+    // the INT grid — same exactness contract.
+    let mut rng = Rng::new(502);
+    let (m, n) = (50usize, 21usize);
+    let w = Matrix::randn(m, n, 0.3, &mut rng);
+    for bits in [2u32, 3, 4] {
+        let q = quantize_nf(&w, bits, 16);
+        let q_deq = q.dequantize();
+        let a = Matrix::randn(m, 4, 0.1, &mut rng);
+        let b = Matrix::randn(n, 4, 0.1, &mut rng);
+        let layer = PackedLayer::from_state("nf", &QuantState::Nf(q), &a, &b).unwrap();
+        let x = rng.gauss_vec(m);
+        assert_bits_eq(
+            &layer.forward(&x),
+            &layer.dense_reference_forward(&q_deq, &x),
+            &format!("nf bits={bits}"),
+        );
+    }
+}
+
+#[test]
+fn batched_forward_bit_identical_to_serial() {
+    let mut rng = Rng::new(503);
+    let (m, n) = (48usize, 19usize);
+    let w = Matrix::randn(m, n, 0.3, &mut rng);
+    for bits in [2u32, 3, 4, 8] {
+        let q = quantize_rtn(&w, bits, 16);
+        let a = Matrix::randn(m, 5, 0.1, &mut rng);
+        let b = Matrix::randn(n, 5, 0.1, &mut rng);
+        let layer = PackedLayer::from_state("l", &QuantState::Int(q), &a, &b).unwrap();
+        for batch in [1usize, 2, 7, 16] {
+            let xs = Matrix::randn(batch, m, 1.0, &mut rng);
+            let ys = layer.forward_batch(&xs);
+            for bi in 0..batch {
+                assert_bits_eq(
+                    ys.row(bi),
+                    &layer.forward(xs.row(bi)),
+                    &format!("bits={bits} batch={batch} row={bi}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_vs_materialized_effective_weight_within_tolerance() {
+    // Different accumulation order ⇒ fp tolerance, not bit equality:
+    // y_eff = (q_deq + A·Bᵀ)ᵀ x folds the LoRA delta into every madd.
+    let mut rng = Rng::new(504);
+    let (m, n) = (64usize, 40usize);
+    let x_cal = Matrix::randn(2 * m, m, 1.0, &mut rng);
+    let h = syrk_t(&x_cal);
+    let w = Matrix::randn(m, n, 0.3, &mut rng);
+    let mut cfg = InitConfig::new(Method::CLoQ, 3, 8);
+    cfg.group_size = 32;
+    let li = init_layer(&w, Some(&h), &cfg, &mut rng);
+    let layer = PackedLayer::from_layer_init("l", Method::CLoQ, &li).unwrap();
+    let w_eff = li.q_deq.add(&matmul_nt(&li.a, &li.b));
+    let x = rng.gauss_vec(m);
+    let fused = layer.forward(&x);
+    let dense_eff = matvec_t(&w_eff, &x);
+    let scale = dense_eff.iter().fold(1.0f64, |s, v| s.max(v.abs()));
+    for (k, (u, v)) in fused.iter().zip(&dense_eff).enumerate() {
+        assert!(
+            (u - v).abs() <= 1e-10 * scale,
+            "element {k}: {u} vs {v} (scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn engine_returns_the_same_bits_as_the_kernel() {
+    let mut rng = Rng::new(505);
+    let (m, n) = (32usize, 12usize);
+    let w = Matrix::randn(m, n, 0.3, &mut rng);
+    let q = QuantState::Int(quantize_rtn(&w, 4, 8));
+    let a = Matrix::randn(m, 2, 0.1, &mut rng);
+    let b = Matrix::randn(n, 2, 0.1, &mut rng);
+    let layer = PackedLayer::from_state("lin", &q, &a, &b).unwrap();
+    let xs: Vec<Vec<f64>> = (0..20).map(|_| rng.gauss_vec(m)).collect();
+    let direct: Vec<Vec<f64>> = xs.iter().map(|x| layer.forward(x)).collect();
+
+    let engine = ServeEngine::new(
+        PackedModel::new(vec![layer]),
+        EngineConfig { workers: 3, max_batch: 8, ..EngineConfig::default() },
+    );
+    let tickets =
+        engine.submit_all(xs.into_iter().map(|x| ("lin".to_string(), x)).collect());
+    for (k, t) in tickets.into_iter().enumerate() {
+        let resp = t.wait().unwrap();
+        assert_bits_eq(&resp.y, &direct[k], &format!("request {k}"));
+        assert!(resp.queue_s >= 0.0 && resp.compute_s >= 0.0);
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.requests, 20);
+    assert!(stats.batches <= 20);
+    assert!(stats.max_batch_seen >= 2, "burst of 20 must coalesce: {stats:?}");
+}
+
+#[test]
+fn lora16_layers_are_rejected_with_the_method_named() {
+    let mut rng = Rng::new(506);
+    let w = Matrix::randn(16, 8, 0.3, &mut rng);
+    let li = init_layer(&w, None, &InitConfig::new(Method::Lora16, 16, 2), &mut rng);
+    let err = PackedLayer::from_layer_init("fp", Method::Lora16, &li).unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("'fp'"), "{msg}");
+    assert!(msg.contains("LoRA"), "error must name the method: {msg}");
+    assert!(msg.contains("re-grid"), "error must say what to do: {msg}");
+}
+
+#[test]
+fn model_init_exact_state_serves_bit_identically_to_base_q() {
+    // End-to-end through the coordinator: quantize_init's `exact` states,
+    // packed via PackedModel::from_model_init, must serve the same numbers
+    // as the dense base the trainer sees (f32-rounded, since base_q is the
+    // lowered f32 store) — and bit-identical to the f64 q_deq path.
+    let (man, base, grams) = synth::model(2, 8, 12, 2, 507);
+    let mut cfg = InitConfig::new(Method::CLoQ, 3, 2);
+    cfg.group_size = 8;
+    let init = quantize_init(&man, &base, Some(&grams), &cfg, 99, 2).unwrap();
+    let packed = PackedModel::from_model_init(&init).unwrap();
+    assert_eq!(packed.layers.len(), init.exact.len());
+    let mut rng = Rng::new(508);
+    for (name, qs) in &init.exact {
+        let layer = packed.layer(name).unwrap();
+        let q_deq = qs.dequantize();
+        // Adapters in the store are f32; widening is exact, so the packed
+        // layer's forward equals the dense reference built from the same
+        // widened adapters.
+        let x = rng.gauss_vec(layer.rows);
+        let fused = layer.forward(&x);
+        let dense = layer.dense_reference_forward(&q_deq, &x);
+        for (u, v) in fused.iter().zip(&dense) {
+            assert_eq!(u.to_bits(), v.to_bits(), "layer {name}");
+        }
+    }
+}
+
+/// In-memory manifest/base/grams builder (mirrors prop_coordinator.rs).
+mod synth {
+    use std::collections::BTreeMap;
+    use std::path::PathBuf;
+
+    use cloq::coordinator::calibrate::GramSet;
+    use cloq::linalg::{syrk_t, Matrix};
+    use cloq::model::{EntrySpec, Manifest, ModelConfig, ParamStore, TensorSpec};
+    use cloq::runtime::{Dtype, Tensor};
+    use cloq::util::prng::Rng;
+
+    pub fn model(
+        n_layers: usize,
+        d_model: usize,
+        d_ff: usize,
+        rank: usize,
+        seed: u64,
+    ) -> (Manifest, ParamStore, GramSet) {
+        let config = ModelConfig {
+            name: "synth".to_string(),
+            vocab: 64,
+            d_model,
+            n_layers,
+            n_heads: 2,
+            d_ff,
+            seq: 8,
+            batch: 2,
+            rank,
+            group_size: 16,
+        };
+        let mut inputs = Vec::new();
+        for l in 0..n_layers {
+            for (name, din, dout) in config.linear_specs(l) {
+                inputs.push(TensorSpec { name, shape: vec![din, dout], dtype: Dtype::F32 });
+            }
+        }
+        for l in 0..n_layers {
+            for (name, din, dout) in config.linear_specs(l) {
+                inputs.push(TensorSpec {
+                    name: format!("{name}.A"),
+                    shape: vec![din, rank],
+                    dtype: Dtype::F32,
+                });
+                inputs.push(TensorSpec {
+                    name: format!("{name}.B"),
+                    shape: vec![dout, rank],
+                    dtype: Dtype::F32,
+                });
+            }
+        }
+        inputs.push(TensorSpec { name: "tokens".to_string(), shape: vec![2, 8], dtype: Dtype::I32 });
+        inputs.push(TensorSpec { name: "mask".to_string(), shape: vec![2, 8], dtype: Dtype::F32 });
+        let entry = EntrySpec {
+            file: "eval_loss.hlo.txt".to_string(),
+            inputs,
+            outputs: vec![
+                TensorSpec { name: "loss_sum".to_string(), shape: vec![], dtype: Dtype::F32 },
+                TensorSpec { name: "count".to_string(), shape: vec![], dtype: Dtype::F32 },
+            ],
+        };
+        let mut entrypoints = BTreeMap::new();
+        entrypoints.insert("eval_loss".to_string(), entry);
+        let man = Manifest { dir: PathBuf::from("."), config, entrypoints };
+
+        let mut rng = Rng::new(seed);
+        let mut base = ParamStore::new();
+        let mut grams = GramSet::new();
+        for l in 0..n_layers {
+            for (name, din, dout) in man.config.linear_specs(l) {
+                base.insert(&name, Tensor::from_matrix(&Matrix::randn(din, dout, 0.3, &mut rng)));
+                let x = Matrix::randn(din * 2 + 8, din, 1.0, &mut rng);
+                grams.insert(name, syrk_t(&x));
+            }
+        }
+        (man, base, grams)
+    }
+}

@@ -128,6 +128,37 @@ fn assert_stores_identical(a: &ParamStore, b: &ParamStore, what: &str) {
     }
 }
 
+/// Bit-compare the exact serving states (`ModelInit.exact`) — the packed
+/// serve path's source of truth must be worker-count-independent too.
+fn assert_exact_identical(
+    a: &[(String, cloq::quant::QuantState)],
+    b: &[(String, cloq::quant::QuantState)],
+    what: &str,
+) {
+    use cloq::quant::QuantState;
+    let bits = |m: &cloq::linalg::Matrix| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(a.len(), b.len(), "{what}: layer count");
+    for ((n1, q1), (n2, q2)) in a.iter().zip(b) {
+        assert_eq!(n1, n2, "{what}: layer order");
+        match (q1, q2) {
+            (QuantState::Int(x), QuantState::Int(y)) => {
+                assert_eq!((x.bits, x.group_size), (y.bits, y.group_size), "{what}: {n1}");
+                assert_eq!(x.codes, y.codes, "{what}: {n1} codes");
+                assert_eq!(bits(&x.scales), bits(&y.scales), "{what}: {n1} scales");
+                assert_eq!(bits(&x.zeros), bits(&y.zeros), "{what}: {n1} zeros");
+            }
+            (QuantState::Nf(x), QuantState::Nf(y)) => {
+                assert_eq!((x.bits, x.block_size), (y.bits, y.block_size), "{what}: {n1}");
+                assert_eq!(x.codes, y.codes, "{what}: {n1} codes");
+                assert_eq!(bits(&x.absmax), bits(&y.absmax), "{what}: {n1} absmax");
+                let lb = |l: &[f64]| l.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(lb(&x.levels), lb(&y.levels), "{what}: {n1} levels");
+            }
+            _ => panic!("{what}: {n1} state kind differs across worker counts"),
+        }
+    }
+}
+
 fn init_bytes(init: &ModelInit) -> Vec<u8> {
     // Serialize through the checkpoint writer so "byte-identical" is
     // literal: same bytes on disk.
@@ -161,6 +192,7 @@ fn quantize_init_identical_for_any_worker_count() {
         assert_stores_identical(&one.base_q, &many.base_q, &format!("base_q w={workers}"));
         assert_stores_identical(&one.lora, &many.lora, &format!("lora w={workers}"));
         assert_stores_identical(&one.quant, &many.quant, &format!("quant w={workers}"));
+        assert_exact_identical(&one.exact, &many.exact, &format!("exact w={workers}"));
         assert_eq!(
             one.bits_per_weight.to_bits(),
             many.bits_per_weight.to_bits(),

@@ -3,7 +3,8 @@
 #
 # Usage: scripts/check.sh [--bench]
 #   --bench  additionally run the perf benches that emit BENCH_*.json
-#            (bench_optq / bench_linalg; slow — not part of the default gate)
+#            (bench_optq / bench_linalg / bench_serve; slow — not part of
+#            the default gate)
 #
 # The crates.io-free sandbox is the default environment: all dependencies
 # are vendored path crates, so everything below runs with --offline.
@@ -28,10 +29,24 @@ else
     echo "== clippy not installed; skipping lint gate =="
 fi
 
+# rustfmt gate (tolerated-absent like clippy). Advisory for now: the
+# pre-gate tree was written before the formatter was wired in, so style
+# drift reports loudly but does not fail the gate — tightening to a hard
+# failure once the tree is formatted is tracked in ROADMAP.md Open items.
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "== cargo fmt --check (advisory) =="
+    if ! cargo fmt --check; then
+        echo "WARNING: rustfmt reports style drift (advisory — not failing the gate)"
+    fi
+else
+    echo "== rustfmt not installed; skipping format gate =="
+fi
+
 if [[ "${1:-}" == "--bench" ]]; then
-    echo "== perf benches (BENCH_optq.json / BENCH_linalg.json) =="
+    echo "== perf benches (BENCH_optq.json / BENCH_linalg.json / BENCH_serve.json) =="
     cargo bench --bench bench_optq "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_linalg "${CARGO_FLAGS[@]}"
+    cargo bench --bench bench_serve "${CARGO_FLAGS[@]}"
 fi
 
 echo "check.sh: all green"
