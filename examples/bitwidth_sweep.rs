@@ -38,7 +38,10 @@ fn main() {
         calibrated_error2(&h, &e)
     };
 
-    println!("calibrated error ||X(Q [+AB'] - W)||_F^2 by stage (layer {m}x{n}, group {gs}, rank {rank})\n");
+    println!(
+        "calibrated error ||X(Q [+AB'] - W)||_F^2 by stage (layer {m}x{n}, group {gs}, \
+         rank {rank})\n"
+    );
     println!(
         "{:>4} | {:>12} {:>12} {:>12} {:>14}",
         "bits", "RTN", "OPTQ", "MagR+OPTQ", "+CLoQ rank-8"

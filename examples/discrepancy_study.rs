@@ -12,7 +12,9 @@
 
 use cloq::linalg::norms::discrepancy_from_re;
 use cloq::linalg::{matmul, syrk_t, Matrix};
-use cloq::lowrank::{cloq_lowrank, damping_lambda, gram_root, loftq, CloqConfig, LoftqConfig, LoftqQuantizer};
+use cloq::lowrank::{
+    cloq_lowrank, damping_lambda, gram_root, loftq, CloqConfig, LoftqConfig, LoftqQuantizer,
+};
 use cloq::quant::magr::magr;
 use cloq::quant::optq::{optq, OptqConfig};
 use cloq::util::prng::Rng;
@@ -36,7 +38,8 @@ fn main() {
 
     // CLoQ base: MagR + OPTQ once; rank only changes the low-rank step.
     let w_magr = magr(&w, &hd, &Default::default());
-    let q_cloq = optq(&w_magr, &h, &OptqConfig { bits, group_size: gs, ..Default::default() }).dequantize();
+    let q_cloq =
+        optq(&w_magr, &h, &OptqConfig { bits, group_size: gs, ..Default::default() }).dequantize();
 
     println!("INT{bits} layer {m}x{n}; discrepancy ||X(Q + AB' - W)|| vs rank\n");
     println!(
@@ -51,7 +54,16 @@ fn main() {
         let e_cloq = q_cloq.add(&init.ab_t()).sub(&w);
         let d_cloq = discrepancy_from_re(&matmul(&root.r, &e_cloq));
 
-        let lq = loftq(&w, &LoftqConfig { bits, group_size: gs, rank: r.max(1), iters: 5, quantizer: LoftqQuantizer::Int });
+        let lq = loftq(
+            &w,
+            &LoftqConfig {
+                bits,
+                group_size: gs,
+                rank: r.max(1),
+                iters: 5,
+                quantizer: LoftqQuantizer::Int,
+            },
+        );
         let e_loftq = lq.q_deq.add(&lq.ab_t()).sub(&w);
         let d_loftq = discrepancy_from_re(&matmul(&root.r, &e_loftq));
 

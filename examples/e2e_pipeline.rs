@@ -101,7 +101,14 @@ fn main() -> anyhow::Result<()> {
         warmup_frac: 0.05,
         log_every: 0,
     };
-    let (lora, ft) = finetune_lora(&mut rt, &minit.base_q, zero_lora, DataSource::Tasks(&data), &ftcfg, spec.seed)?;
+    let (lora, ft) = finetune_lora(
+        &mut rt,
+        &minit.base_q,
+        zero_lora,
+        DataSource::Tasks(&data),
+        &ftcfg,
+        spec.seed,
+    )?;
     println!(
         "      train loss {:.3} -> {:.3}",
         ft.losses[0],
@@ -110,7 +117,8 @@ fn main() -> anyhow::Result<()> {
 
     // -- 6. evaluate -----------------------------------------------------
     println!("[6/6] evaluation");
-    let ppl = perplexity(&mut rt, &minit.base_q, &lora, opts.seed, Split::Valid, opts.eval_ppl_batches)?;
+    let ppl =
+        perplexity(&mut rt, &minit.base_q, &lora, opts.seed, Split::Valid, opts.eval_ppl_batches)?;
     println!("      corpus perplexity (INT2 base + CLoQ-finetuned LoRA): {ppl:.2}");
     let mut total = 0.0;
     for (name, set) in &test_sets {
@@ -153,9 +161,15 @@ fn main() -> anyhow::Result<()> {
         "      serving path (Pallas fused dequant kernel) loss {q:.4} vs dense {d:.4}  ({} ok)",
         if (d - q).abs() < 2e-2 * d.abs().max(1.0) { "agreement" } else { "MISMATCH" }
     );
-    anyhow::ensure!((d - q).abs() < 5e-2 * d.abs().max(1.0), "serving path disagrees with dense path");
+    anyhow::ensure!(
+        (d - q).abs() < 5e-2 * d.abs().max(1.0),
+        "serving path disagrees with dense path"
+    );
 
-    println!("\ne2e complete: all three layers composed (L3 rust loop -> L2 HLO graphs -> L1 Pallas kernels).");
+    println!(
+        "\ne2e complete: all three layers composed (L3 rust loop -> L2 HLO graphs -> L1 \
+         Pallas kernels)."
+    );
     let _ = PathBuf::new();
     Ok(())
 }

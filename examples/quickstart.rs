@@ -34,7 +34,9 @@ fn main() {
     let bits = 2;
     let rank = 8;
     let mut results = Vec::new();
-    for method in [Method::QLora, Method::GptqLora, Method::LoftQ, Method::CLoQNoMagR, Method::CLoQ] {
+    for method in
+        [Method::QLora, Method::GptqLora, Method::LoftQ, Method::CLoQNoMagR, Method::CLoQ]
+    {
         let mut cfg = InitConfig::new(method, bits, rank);
         cfg.group_size = 32;
         let li = init_layer(&w, Some(&h), &cfg, &mut rng);

@@ -1,24 +1,29 @@
-//! End-to-end serving demo: quantize + init a few layers, pack them, save
-//! the versioned artifact, reload it, and serve a burst of concurrent
-//! requests through the batching engine.
+//! End-to-end multi-tenant serving demo: quantize + init a few layers,
+//! pack the base ONCE, ship per-tenant adapter artifacts separately,
+//! reload everything, and serve a mixed-adapter burst through the
+//! batching engine — with a hot-swap and an unregister drain along the
+//! way. Also exercises the v1 → v2 artifact compatibility shim.
 //!
 //! ```sh
 //! cargo run --release --example serve_demo
 //! ```
 
 use cloq::linalg::{syrk_t, Matrix};
-use cloq::lowrank::{init_layer, InitConfig, Method};
+use cloq::lowrank::{init_layer, InitConfig, LoraPair, Method};
 use cloq::serve::{
-    load_artifact, save_artifact, EngineConfig, PackedLayer, PackedModel, ServeEngine,
+    load_adapter_artifact, load_artifact_compat, load_base_artifact, save_adapter_artifact,
+    save_artifact_v1, save_base_artifact, AdapterSet, EngineConfig, PackedLayer, PackedModel,
+    Request, ServeEngine,
 };
 use cloq::util::prng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(42);
 
-    // ---- 1. quantize + init three layers with different methods ----------
-    println!("== init: CLoQ / GPTQ-LoRA / QLoRA layers ==");
+    // ---- 1. quantize + init three layers; split base from adapters -------
+    println!("== init: CLoQ / GPTQ-LoRA / QLoRA layers, base/adapter split ==");
     let mut layers = Vec::new();
+    let mut init_pairs = Vec::new();
     let mut dense_refs = Vec::new();
     for (name, method, m, n) in [
         ("blk0.wq", Method::CLoQ, 96usize, 64usize),
@@ -31,52 +36,104 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = InitConfig::new(method, 3, 8);
         cfg.group_size = 32;
         let li = init_layer(&w, Some(&h), &cfg, &mut rng);
-        let layer = PackedLayer::from_layer_init(name, method, &li)?;
+        let (layer, pair) = PackedLayer::from_layer_init(name, method, &li)?;
         println!(
-            "  {name:<10} {m:>3}x{n:<3} {} → {:>6} packed bytes ({:.2} bits/weight)",
+            "  {name:<10} {m:>3}x{n:<3} {} → {:>6} base bytes + {:>5} adapter bytes \
+             ({:.2} bits/weight)",
             method.name(),
             layer.packed_bytes(),
+            pair.bytes(),
             li.bits_per_weight,
         );
         dense_refs.push((name.to_string(), li.q_deq.clone()));
+        init_pairs.push((name.to_string(), pair));
         layers.push(layer);
     }
     let model = PackedModel::new(layers);
+    let tenant_a = AdapterSet::from_pairs("tenant-a", init_pairs)?;
+    // Two more tenants over the SAME base (stand-ins for task-finetuned
+    // adapters): fresh pairs per layer.
+    let mk_tenant = |id: &str, rng: &mut Rng| -> anyhow::Result<AdapterSet> {
+        let mut set = AdapterSet::new(id);
+        for l in &model.layers {
+            let pair = LoraPair::new(
+                Matrix::randn(l.rows, 8, 0.05, rng),
+                Matrix::randn(l.cols, 8, 0.05, rng),
+            );
+            set.insert(&l.name, pair)?;
+        }
+        Ok(set)
+    };
+    let tenant_b = mk_tenant("tenant-b", &mut rng)?;
+    let tenant_c = mk_tenant("tenant-c", &mut rng)?;
 
-    // ---- 2. artifact roundtrip -------------------------------------------
+    // ---- 2. artifacts: base once, adapters separately ---------------------
     let dir = std::env::temp_dir().join(format!("cloq_serve_demo_{}", std::process::id()));
-    let path = dir.join("model.cloqpkd");
-    save_artifact(&model, &path)?;
-    let loaded = load_artifact(&path)?;
+    let base_path = dir.join("base.cloqpkd2");
+    save_base_artifact(&model, &base_path)?;
+    let mut adapter_paths = Vec::new();
+    for set in [&tenant_a, &tenant_b, &tenant_c] {
+        let p = dir.join(format!("{}.cloqadp", set.id()));
+        save_adapter_artifact(set, &p)?;
+        adapter_paths.push(p);
+    }
+    let base_bytes = std::fs::metadata(&base_path)?.len();
+    let adp_bytes: u64 = adapter_paths
+        .iter()
+        .map(|p| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0))
+        .sum();
     println!(
-        "\n== artifact == saved + reloaded {} layers ({} bytes) from {}",
-        loaded.layers.len(),
-        std::fs::metadata(&path)?.len(),
-        path.display()
+        "\n== artifacts == base shipped once: {base_bytes} bytes; \
+         3 tenant artifacts: {adp_bytes} bytes total"
+    );
+    let loaded = load_base_artifact(&base_path)?;
+
+    // v1 compatibility shim: a legacy single-tenant file still loads, as
+    // base + one adapter set.
+    let v1_path = dir.join("legacy.cloqpkd");
+    save_artifact_v1(&model, &tenant_a, &v1_path)?;
+    let (v1_model, v1_set) = load_artifact_compat(&v1_path)?;
+    let v1_set = v1_set.expect("v1 files embed adapters");
+    println!(
+        "   v1 shim: {} layers + adapter set '{}' from the legacy format",
+        v1_model.layers.len(),
+        v1_set.id()
     );
 
-    // Parity spot-check: packed fused forward vs the dense q_deq reference.
+    // Parity spot-check: packed fused forward vs the dense q_deq reference,
+    // through the artifact roundtrip AND the v1 shim.
     let mut max_ulp = 0u64;
     for (name, q_deq) in &dense_refs {
         let layer = loaded.layer(name).expect("layer survived the roundtrip");
+        let pair = tenant_a.get(name);
         let x = rng.gauss_vec(layer.rows);
-        let fused = layer.forward(&x);
-        let dense = layer.dense_reference_forward(q_deq, &x);
-        for (u, v) in fused.iter().zip(&dense) {
+        let fused = layer.forward(&x, pair);
+        let dense = layer.dense_reference_forward(q_deq, &x, pair);
+        let shim = v1_model.layer(name).unwrap().forward(&x, v1_set.get(name));
+        for ((u, v), s) in fused.iter().zip(&dense).zip(&shim) {
             max_ulp = max_ulp.max(u.to_bits().abs_diff(v.to_bits()));
+            max_ulp = max_ulp.max(u.to_bits().abs_diff(s.to_bits()));
         }
     }
-    println!("   fused-vs-dense max ULP distance across layers: {max_ulp} (contract: 0)");
+    println!("   fused vs dense vs v1-shim, max ULP distance: {max_ulp} (contract: 0)");
     anyhow::ensure!(max_ulp == 0, "parity contract violated");
 
-    // ---- 3. serve a concurrent burst -------------------------------------
-    let engine = ServeEngine::new(loaded, EngineConfig { workers: 2, max_batch: 16, ..EngineConfig::default() });
+    // ---- 3. serve a concurrent multi-tenant burst -------------------------
+    let engine = ServeEngine::new(
+        loaded,
+        EngineConfig { workers: 2, max_batch: 16, ..EngineConfig::default() },
+    );
+    for p in &adapter_paths {
+        engine.register_adapter(load_adapter_artifact(p)?)?;
+    }
+    println!("\n== engine == tenants registered: {:?}", engine.registry().ids());
     let names: Vec<String> = dense_refs.iter().map(|(n, _)| n.clone()).collect();
-    let reqs: Vec<(String, Vec<f64>)> = (0..48)
+    let tenants = ["tenant-a", "tenant-b", "tenant-c"];
+    let reqs: Vec<Request> = (0..48)
         .map(|i| {
             let name = &names[i % names.len()];
             let rows = engine_rows(&dense_refs, name);
-            (name.clone(), rng.gauss_vec(rows))
+            Request::with_adapter(name, tenants[i % tenants.len()], rng.gauss_vec(rows))
         })
         .collect();
     let tickets = engine.submit_all(reqs);
@@ -85,13 +142,25 @@ fn main() -> anyhow::Result<()> {
         let resp = t.wait()?;
         worst_latency = worst_latency.max(resp.queue_s + resp.compute_s);
     }
+
+    // Hot-swap tenant-b under load, then retire tenant-c with a drain.
+    engine.register_adapter(mk_tenant("tenant-b", &mut rng)?)?;
+    let x = rng.gauss_vec(engine_rows(&dense_refs, "blk0.wq"));
+    engine.submit("blk0.wq", Some("tenant-b"), x).wait()?;
+    engine.unregister_adapter("tenant-c")?;
+    println!(
+        "   hot-swapped tenant-b, drained + retired tenant-c → now {:?}",
+        engine.registry().ids()
+    );
+
     let stats = engine.shutdown();
     println!(
-        "\n== engine == {} requests in {} micro-batches (mean batch {:.1}, max {})",
+        "   {} requests in {} micro-batches (mean batch {:.1}, max {}, mixed {})",
         stats.requests,
         stats.batches,
         stats.mean_batch(),
-        stats.max_batch_seen
+        stats.max_batch_seen,
+        stats.mixed_batches
     );
     println!(
         "   mean queue wait {:.1} us, worst request latency {:.1} us",

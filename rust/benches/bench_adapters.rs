@@ -1,0 +1,227 @@
+//! Multi-adapter serving benchmarks — the numbers behind EXPERIMENTS.md
+//! §Adapters, emitted as BENCH_adapters.json:
+//!
+//! 1. **adapter-count sweep**: end-to-end engine throughput with requests
+//!    spread round-robin over 1 / 8 / 64 registered adapters on ONE packed
+//!    base. The base pass dominates, so throughput should degrade only
+//!    mildly as the tenant count grows — that near-flatness IS the
+//!    multi-tenant win (one base, many adapters), and this sweep is the
+//!    regression guard on it.
+//! 2. **mixed-adapter batch penalty**: kernel-level cost of a micro-batch
+//!    whose rows belong to k adapter groups vs an adapter-uniform batch of
+//!    the same size, plus the unsorted worst case (every row a new group)
+//!    that the engine's batch sorter exists to avoid.
+//! 3. **eviction churn**: registry register/evict throughput under a tight
+//!    byte budget, plus hot-swap (same-id re-register) rate.
+//!
+//! Under `CLOQ_BENCH_SMOKE=1` (the CI bench-smoke job) shapes and counts
+//! shrink and the record carries `"smoke": true` so `scripts/bench_diff.py`
+//! only compares like against like.
+//!
+//! Correctness is NOT measured here: mixed-batch bit-exactness is enforced
+//! by `rust/tests/parity_serve.rs`, lifecycle invariants by
+//! `rust/tests/lifecycle_adapters.rs`.
+
+use std::time::Instant;
+
+use cloq::bench::{bench, section, smoke, smoke_scaled, target_time, write_bench_json};
+use cloq::linalg::Matrix;
+use cloq::lowrank::LoraPair;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{
+    AdapterRegistry, AdapterSet, EngineConfig, PackedLayer, PackedModel, Request, ServeEngine,
+};
+use cloq::util::json::Json;
+use cloq::util::prng::Rng;
+
+fn mk_base(m: usize, n: usize, rng: &mut Rng) -> PackedModel {
+    let w = Matrix::randn(m, n, 0.3, rng);
+    let q = QuantState::Int(quantize_rtn(&w, 4, 64));
+    PackedModel::new(vec![PackedLayer::from_state("lin", &q).unwrap()])
+}
+
+fn mk_set(id: &str, m: usize, n: usize, r: usize, rng: &mut Rng) -> AdapterSet {
+    let pair = LoraPair::new(Matrix::randn(m, r, 0.1, rng), Matrix::randn(n, r, 0.1, rng));
+    AdapterSet::from_pairs(id, vec![("lin".to_string(), pair)]).unwrap()
+}
+
+fn main() {
+    let mut rng = Rng::new(21);
+    let t = target_time(0.3);
+    let (m, n) = (smoke_scaled(384, 96), smoke_scaled(384, 96));
+    let r = 8usize;
+
+    // ---- 1. adapter-count sweep ------------------------------------------
+    let n_req = smoke_scaled(512, 64);
+    section(&format!(
+        "engine throughput vs adapter count ({m}x{n}, rank {r}, {n_req} requests)"
+    ));
+    let adapter_counts: Vec<usize> = if smoke() { vec![1, 4, 8] } else { vec![1, 8, 64] };
+    let xs: Vec<Vec<f64>> = (0..n_req).map(|_| rng.gauss_vec(m)).collect();
+    let mut sweep_records = Vec::new();
+    let mut rps_1 = 0.0f64;
+    let mut rps_max_adapters = 0.0f64;
+    for &n_adapters in &adapter_counts {
+        let mut best = f64::INFINITY;
+        let mut best_stats = None;
+        for _ in 0..3 {
+            let engine = ServeEngine::new(
+                mk_base(m, n, &mut Rng::new(22)),
+                EngineConfig { workers: 2, max_batch: 16, ..EngineConfig::default() },
+            );
+            let mut arng = Rng::new(23);
+            for a in 0..n_adapters {
+                engine.register_adapter(mk_set(&format!("t{a}"), m, n, r, &mut arng)).unwrap();
+            }
+            let reqs: Vec<Request> = xs
+                .iter()
+                .enumerate()
+                .map(|(i, x)| {
+                    Request::with_adapter("lin", &format!("t{}", i % n_adapters), x.clone())
+                })
+                .collect();
+            let t0 = Instant::now();
+            let tickets = engine.submit_all(reqs);
+            for tk in tickets {
+                tk.wait().unwrap();
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = engine.shutdown();
+            if wall < best {
+                best = wall;
+                best_stats = Some(stats);
+            }
+        }
+        let stats = best_stats.unwrap();
+        let rps = n_req as f64 / best;
+        if n_adapters == 1 {
+            rps_1 = rps;
+        }
+        rps_max_adapters = rps; // last iteration = largest count
+        println!(
+            "adapters={n_adapters:<3} {n_req} reqs in {best:.4}s → {rps:.0} req/s \
+             (mean batch {:.1}, mixed batches {})",
+            stats.mean_batch(),
+            stats.mixed_batches
+        );
+        let mut rec = Json::obj();
+        rec.set("adapters", Json::from(n_adapters));
+        rec.set("requests", Json::from(n_req));
+        rec.set("best_wall_s", Json::from(best));
+        rec.set("requests_per_s", Json::from(rps));
+        rec.set("mean_batch", Json::from(stats.mean_batch()));
+        rec.set("mixed_batches", Json::from(stats.mixed_batches));
+        sweep_records.push(rec);
+    }
+    let multi_tenant_retention = rps_max_adapters / rps_1.max(1e-30);
+    println!(
+        "\nthroughput retained at {} adapters vs 1: {:.2}x",
+        adapter_counts.last().unwrap(),
+        multi_tenant_retention
+    );
+
+    // ---- 2. mixed-adapter batch penalty (kernel level) --------------------
+    section(&format!("mixed-adapter batch penalty ({m}x{n}, batch 32)"));
+    let base = mk_base(m, n, &mut Rng::new(24));
+    let layer = base.layer("lin").unwrap();
+    let pairs: Vec<LoraPair> = (0..8)
+        .map(|_| {
+            LoraPair::new(
+                Matrix::randn(m, r, 0.1, &mut rng),
+                Matrix::randn(n, r, 0.1, &mut rng),
+            )
+        })
+        .collect();
+    let batch = 32usize;
+    let xsb = Matrix::randn(batch, m, 1.0, &mut rng);
+    let uniform: Vec<Option<&LoraPair>> = vec![Some(&pairs[0]); batch];
+    // Sorted: 8 contiguous groups of 4 (what the engine's sorter produces).
+    let sorted8: Vec<Option<&LoraPair>> =
+        (0..batch).map(|i| Some(&pairs[i / (batch / 8)])).collect();
+    // Interleaved: every row a new group — the worst case sorting avoids.
+    let interleaved8: Vec<Option<&LoraPair>> = (0..batch).map(|i| Some(&pairs[i % 8])).collect();
+    let r_uniform = bench("uniform (1 group)", t, || layer.forward_batch_grouped(&xsb, &uniform));
+    let r_sorted =
+        bench("8 adapters, sorted (8 groups)", t, || layer.forward_batch_grouped(&xsb, &sorted8));
+    let r_interleaved = bench("8 adapters, interleaved (32 groups)", t, || {
+        layer.forward_batch_grouped(&xsb, &interleaved8)
+    });
+    let penalty_sorted = r_sorted.min_s / r_uniform.min_s;
+    let penalty_interleaved = r_interleaved.min_s / r_uniform.min_s;
+    println!(
+        "\nmixed-batch penalty: sorted {penalty_sorted:.2}x, \
+         interleaved {penalty_interleaved:.2}x (vs uniform)"
+    );
+    let mut mixed_json = Json::obj();
+    mixed_json.set("batch", Json::from(batch));
+    mixed_json.set("uniform", r_uniform.to_json());
+    mixed_json.set("sorted_8_groups", r_sorted.to_json());
+    mixed_json.set("interleaved_32_groups", r_interleaved.to_json());
+    mixed_json.set("penalty_sorted_vs_uniform", Json::from(penalty_sorted));
+    mixed_json.set("penalty_interleaved_vs_uniform", Json::from(penalty_interleaved));
+
+    // ---- 3. eviction churn + hot-swap rate --------------------------------
+    section("registry churn: LRU eviction under a 4-set budget, hot-swap rate");
+    let churn_n = smoke_scaled(64, 16);
+    let one_set_bytes = mk_set("probe", m, n, r, &mut Rng::new(25)).bytes();
+    let r_churn = bench(&format!("register {churn_n} sets, budget 4"), t, || {
+        let reg = AdapterRegistry::new(4 * one_set_bytes);
+        let mut crng = Rng::new(26);
+        for i in 0..churn_n {
+            reg.register(mk_set(&format!("c{i}"), m, n, r, &mut crng)).unwrap();
+        }
+        reg.stats().evictions
+    });
+    let reg = AdapterRegistry::new(4 * one_set_bytes);
+    let mut crng = Rng::new(26);
+    for i in 0..churn_n {
+        reg.register(mk_set(&format!("c{i}"), m, n, r, &mut crng)).unwrap();
+    }
+    let churn_evictions = reg.stats().evictions;
+    let registers_per_s = churn_n as f64 / r_churn.min_s;
+    let r_swap = bench(&format!("hot-swap same id x{churn_n}"), t, || {
+        let reg = AdapterRegistry::new(4 * one_set_bytes);
+        let mut srng = Rng::new(27);
+        for _ in 0..churn_n {
+            reg.register(mk_set("hot", m, n, r, &mut srng)).unwrap();
+        }
+    });
+    let swaps_per_s = churn_n as f64 / r_swap.min_s;
+    println!(
+        "\nchurn: {registers_per_s:.0} registers/s ({churn_evictions} evictions), \
+         {swaps_per_s:.0} hot-swaps/s"
+    );
+    let mut evict_json = Json::obj();
+    evict_json.set("budget_sets", Json::from(4usize));
+    evict_json.set("registers", Json::from(churn_n));
+    evict_json.set("evictions", Json::from(churn_evictions));
+    evict_json.set("registers_per_s", Json::from(registers_per_s));
+    evict_json.set("hot_swaps_per_s", Json::from(swaps_per_s));
+    evict_json.set("set_bytes", Json::from(one_set_bytes));
+
+    let record = Json::from_pairs(vec![
+        ("bench", Json::from("serve_adapters")),
+        ("smoke", Json::from(smoke())),
+        ("shape", Json::Arr(vec![Json::from(m), Json::from(n)])),
+        ("rank", Json::from(r)),
+        ("adapter_sweep", Json::Arr(sweep_records)),
+        ("multi_tenant_throughput_retention", Json::from(multi_tenant_retention)),
+        ("mixed_batch", mixed_json),
+        ("eviction", evict_json),
+        (
+            "parity",
+            Json::from(
+                "mixed-adapter batches bit-exact vs serial single-adapter forwards — \
+                 enforced by rust/tests/parity_serve.rs and lifecycle_adapters.rs",
+            ),
+        ),
+    ]);
+    write_bench_json("adapters", record);
+    if multi_tenant_retention < 0.5 {
+        eprintln!(
+            "WARNING: throughput at {} adapters fell to {multi_tenant_retention:.2}x of \
+             single-adapter (timing noise is possible; correctness is unaffected)",
+            adapter_counts.last().unwrap()
+        );
+    }
+}

@@ -4,7 +4,10 @@
 
 use cloq::bench::{bench, section};
 use cloq::linalg::{matmul, syrk_t, Matrix};
-use cloq::lowrank::{cloq_lowrank, damping_lambda, init_layer, CloqConfig, InitConfig, LoftqConfig, LoftqQuantizer, Method};
+use cloq::lowrank::{
+    cloq_lowrank, damping_lambda, init_layer, CloqConfig, InitConfig, LoftqConfig,
+    LoftqQuantizer, Method,
+};
 use cloq::lowrank::loftq;
 use cloq::util::prng::Rng;
 
@@ -19,7 +22,9 @@ fn main() {
         let x = matmul(&base, &mix);
         let w = Matrix::randn(m, n, 0.3, &mut rng);
         let h = syrk_t(&x);
-        for method in [Method::QLora, Method::GptqLora, Method::LoftQ, Method::CLoQNoMagR, Method::CLoQ] {
+        for method in
+            [Method::QLora, Method::GptqLora, Method::LoftQ, Method::CLoQNoMagR, Method::CLoQ]
+        {
             let mut cfg = InitConfig::new(method, 2, 16);
             cfg.group_size = 64;
             let mut r2 = Rng::new(9);
@@ -68,7 +73,13 @@ fn main() {
     {
         let w = Matrix::randn(96, 256, 0.3, &mut rng);
         for iters in [1usize, 5, 10] {
-            let cfg = LoftqConfig { bits: 2, group_size: 64, rank: 16, iters, quantizer: LoftqQuantizer::Int };
+            let cfg = LoftqConfig {
+                bits: 2,
+                group_size: 64,
+                rank: 16,
+                iters,
+                quantizer: LoftqQuantizer::Int,
+            };
             bench(&format!("loftq iters={iters}"), t, || loftq(&w, &cfg));
         }
     }

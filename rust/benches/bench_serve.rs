@@ -9,52 +9,66 @@
 //! 2. **batched vs serial throughput**: the kernel's row-reuse batch sweep
 //!    plus the end-to-end engine with coalescing on vs off.
 //!
+//! Under `CLOQ_BENCH_SMOKE=1` (the CI bench-smoke job) shapes and request
+//! counts shrink and the record carries `"smoke": true` so
+//! `scripts/bench_diff.py` only compares like against like.
+//!
 //! Correctness is NOT measured here — the fused/batched paths are
 //! bit-exact vs the dense reference by `rust/tests/parity_serve.rs`; this
 //! file is pure speed.
 
 use std::time::Instant;
 
-use cloq::bench::{bench, section, write_bench_json};
+use cloq::bench::{bench, section, smoke, smoke_scaled, target_time, write_bench_json};
 use cloq::linalg::Matrix;
+use cloq::lowrank::LoraPair;
 use cloq::quant::{quantize_rtn, QuantState};
-use cloq::serve::{EngineConfig, PackedLayer, PackedModel, ServeEngine};
+use cloq::serve::{AdapterSet, EngineConfig, PackedLayer, PackedModel, Request, ServeEngine};
 use cloq::util::json::Json;
 use cloq::util::prng::Rng;
 
-fn mk_layer(m: usize, n: usize, bits: u32, gs: usize, r: usize, rng: &mut Rng) -> (PackedLayer, Matrix) {
+fn mk_layer(
+    m: usize,
+    n: usize,
+    bits: u32,
+    gs: usize,
+    r: usize,
+    rng: &mut Rng,
+) -> (PackedLayer, LoraPair, Matrix) {
     let w = Matrix::randn(m, n, 0.3, rng);
     let q = quantize_rtn(&w, bits, gs);
     let q_deq = q.dequantize();
     let a = Matrix::randn(m, r, 0.1, rng);
     let b = Matrix::randn(n, r, 0.1, rng);
-    (PackedLayer::from_state("bench", &QuantState::Int(q), &a, &b).unwrap(), q_deq)
+    let layer = PackedLayer::from_state("bench", &QuantState::Int(q)).unwrap();
+    (layer, LoraPair::new(a, b), q_deq)
 }
 
 fn main() {
     let mut rng = Rng::new(11);
-    let t = 0.4;
-    let (m, n, r) = (512usize, 512usize, 16usize);
+    let t = target_time(0.4);
+    let (m, n) = (smoke_scaled(512, 96), smoke_scaled(512, 96));
+    let r = 16usize;
 
     // ---- fused vs dense, across bit widths --------------------------------
-    section("packed fused vs dense forward (512x512, rank 16, g64, batch 1)");
+    section(&format!("packed fused vs dense forward ({m}x{n}, rank {r}, g64, batch 1)"));
     let mut fused_records = Vec::new();
     let mut speedup_vs_remat_4bit = 0.0;
     let mut speedup_vs_cached_4bit = 0.0;
     for bits in [2u32, 4, 8] {
-        let (layer, q_deq) = mk_layer(m, n, bits, 64, r, &mut rng);
+        let (layer, pair, q_deq) = mk_layer(m, n, bits, 64, r, &mut rng);
         let x = rng.gauss_vec(m);
         // All three paths compute the SAME function (base + factored LoRA)
         // via dense_reference_forward, so the ratios isolate weight access:
         // fused reads packed words; cached reads a pre-materialized q_deq;
         // remat pays a full dequantize per request.
-        let r_fused = bench(&format!("fused {bits}-bit"), t, || layer.forward(&x));
+        let r_fused = bench(&format!("fused {bits}-bit"), t, || layer.forward(&x, Some(&pair)));
         let r_cached = bench(&format!("dense cached {bits}-bit"), t, || {
-            layer.dense_reference_forward(&q_deq, &x)
+            layer.dense_reference_forward(&q_deq, &x, Some(&pair))
         });
         let r_remat = bench(&format!("dense remat {bits}-bit"), t, || {
             let q_deq = layer.dequantize().unwrap();
-            layer.dense_reference_forward(&q_deq, &x)
+            layer.dense_reference_forward(&q_deq, &x, Some(&pair))
         });
         if bits == 4 {
             speedup_vs_remat_4bit = r_remat.min_s / r_fused.min_s;
@@ -70,18 +84,21 @@ fn main() {
         fused_records.push(rec);
     }
     println!(
-        "\nfused vs dense-remat @4-bit: {speedup_vs_remat_4bit:.2}x, vs dense-cached: {speedup_vs_cached_4bit:.2}x"
+        "\nfused vs dense-remat @4-bit: {speedup_vs_remat_4bit:.2}x, \
+         vs dense-cached: {speedup_vs_cached_4bit:.2}x"
     );
 
     // ---- kernel batch sweep ----------------------------------------------
-    section("kernel micro-batch sweep (512x512, 4-bit)");
-    let (layer, _) = mk_layer(m, n, 4, 64, r, &mut rng);
+    section(&format!("kernel micro-batch sweep ({m}x{n}, 4-bit)"));
+    let (layer, pair, _) = mk_layer(m, n, 4, 64, r, &mut rng);
     let mut batch_records = Vec::new();
     let mut serial_rps = 0.0;
     let mut best_batched_rps = 0.0;
     for batch in [1usize, 4, 16, 64] {
         let xs = Matrix::randn(batch, m, 1.0, &mut rng);
-        let rb = bench(&format!("forward_batch batch={batch}"), t, || layer.forward_batch(&xs));
+        let rb = bench(&format!("forward_batch batch={batch}"), t, || {
+            layer.forward_batch(&xs, Some(&pair))
+        });
         let rps = batch as f64 / rb.min_s;
         if batch == 1 {
             serial_rps = rps; // baseline only — never a candidate for "best batched",
@@ -97,8 +114,8 @@ fn main() {
     println!("\nkernel batched-vs-serial throughput: {kernel_batch_speedup:.2}x");
 
     // ---- end-to-end engine: coalescing on vs off --------------------------
-    section("engine throughput: coalescing on vs off (256 requests)");
-    let n_req = 256usize;
+    let n_req = smoke_scaled(256, 48);
+    section(&format!("engine throughput: coalescing on vs off ({n_req} requests)"));
     let xs: Vec<Vec<f64>> = (0..n_req).map(|_| rng.gauss_vec(m)).collect();
     let mut engine_json = Json::obj();
     let mut engine_rps = [0.0f64; 2];
@@ -111,10 +128,20 @@ fn main() {
         let mut best_stats = None;
         for _ in 0..3 {
             let model = PackedModel::new(vec![layer.clone()]);
-            let engine = ServeEngine::new(model, EngineConfig { workers: 2, max_batch, ..EngineConfig::default() });
+            let engine = ServeEngine::new(
+                model,
+                EngineConfig { workers: 2, max_batch, ..EngineConfig::default() },
+            );
+            let set = AdapterSet::from_pairs(
+                "tenant",
+                vec![("bench".to_string(), pair.clone())],
+            )
+            .unwrap();
+            engine.register_adapter(set).unwrap();
             let t0 = Instant::now();
-            let tickets = engine
-                .submit_all(xs.iter().map(|x| ("bench".to_string(), x.clone())).collect());
+            let tickets = engine.submit_all(
+                xs.iter().map(|x| Request::with_adapter("bench", "tenant", x.clone())).collect(),
+            );
             for tk in tickets {
                 tk.wait().unwrap();
             }
@@ -149,6 +176,7 @@ fn main() {
 
     let record = Json::from_pairs(vec![
         ("bench", Json::from("serve_packed_forward")),
+        ("smoke", Json::from(smoke())),
         ("shape", Json::Arr(vec![Json::from(m), Json::from(n)])),
         ("rank", Json::from(r)),
         ("group_size", Json::from(64usize)),
@@ -171,6 +199,8 @@ fn main() {
     if kernel_batch_speedup < 1.0 {
         // Timing noise must not turn a measurement into a flaky bench exit;
         // correctness is enforced by the parity suite.
-        eprintln!("WARNING: batched kernel measured slower than serial ({kernel_batch_speedup:.2}x)");
+        eprintln!(
+            "WARNING: batched kernel measured slower than serial ({kernel_batch_speedup:.2}x)"
+        );
     }
 }

@@ -43,6 +43,36 @@ impl BenchResult {
     }
 }
 
+/// True when `CLOQ_BENCH_SMOKE=1` — the CI bench-smoke mode: benches
+/// shrink shapes, request counts and per-measurement target times so the
+/// whole `scripts/check.sh --bench` pass finishes in seconds while still
+/// exercising every code path and emitting the same JSON schema. Records
+/// carry a `"smoke"` flag so `scripts/bench_diff.py` never compares smoke
+/// numbers against full-run baselines (or vice versa).
+pub fn smoke() -> bool {
+    std::env::var("CLOQ_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// `full` in a normal run, `small` under `CLOQ_BENCH_SMOKE=1`.
+pub fn smoke_scaled(full: usize, small: usize) -> usize {
+    if smoke() {
+        small
+    } else {
+        full
+    }
+}
+
+/// Per-measurement target time: `full` seconds normally, 20 ms in smoke
+/// mode (enough for the auto-scaler's minimum 3 iterations on every op
+/// benched here).
+pub fn target_time(full: f64) -> f64 {
+    if smoke() {
+        0.02
+    } else {
+        full
+    }
+}
+
 /// Write a BENCH_<id>.json record next to the working directory, so bench
 /// runs leave a machine-readable trail (EXPERIMENTS.md §Perf).
 pub fn write_bench_json(id: &str, record: Json) {

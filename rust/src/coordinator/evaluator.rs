@@ -174,7 +174,8 @@ pub fn accuracy_choice(
                 lp += ls[r.tokens[t] as usize];
                 count += 1;
             }
-            scores[r.example][r.option] = if count > 0 { lp / count as f64 } else { f64::NEG_INFINITY };
+            scores[r.example][r.option] =
+                if count > 0 { lp / count as f64 } else { f64::NEG_INFINITY };
         }
     }
 

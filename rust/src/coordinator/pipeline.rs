@@ -202,8 +202,12 @@ pub fn init_model(
     }
     let grams_opt = spec.method.needs_calibration().then_some(grams);
     let workers = crate::util::threadpool::default_workers();
+    // Sweep paths train + evaluate but never serve: skip the exact f64
+    // serving trail (~25% extra per-layer copy). Serving callers build
+    // their ModelInit with `quantize_init(.., keep_exact = true)` and go
+    // through `PackedModel::from_model_init`.
     let (init, secs) =
-        timeit(|| quantize_init(&rt.manifest, base, grams_opt, &icfg, spec.seed, workers));
+        timeit(|| quantize_init(&rt.manifest, base, grams_opt, &icfg, spec.seed, workers, false));
     Ok((init?, secs))
 }
 
@@ -264,18 +268,27 @@ pub fn run_one(
         }
         FinetuneTask::Gsm8k => {
             let test = Task::SGsm.dataset(opts.eval_examples, spec.seed, 1);
-            accuracies.push((Task::SGsm.name().to_string(), task_accuracy(rt, &init.base_q, &lora, &test)?));
+            accuracies.push((
+                Task::SGsm.name().to_string(),
+                task_accuracy(rt, &init.base_q, &lora, &test)?,
+            ));
         }
         FinetuneTask::Math10k | FinetuneTask::Mixed => {
             for t in ARITH_TASKS {
                 let test = t.dataset(opts.eval_examples, spec.seed, 1);
-                accuracies.push((t.name().to_string(), task_accuracy(rt, &init.base_q, &lora, &test)?));
+                accuracies.push((
+                    t.name().to_string(),
+                    task_accuracy(rt, &init.base_q, &lora, &test)?,
+                ));
             }
         }
         FinetuneTask::Commonsense => {
             for t in COMMONSENSE_TASKS {
                 let test = t.dataset(opts.eval_examples, spec.seed, 1);
-                accuracies.push((t.name().to_string(), task_accuracy(rt, &init.base_q, &lora, &test)?));
+                accuracies.push((
+                    t.name().to_string(),
+                    task_accuracy(rt, &init.base_q, &lora, &test)?,
+                ));
             }
         }
     }

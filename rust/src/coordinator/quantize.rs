@@ -29,18 +29,20 @@ pub struct ModelInit {
     /// the serve kernel must agree with `base_q` bit-for-bit, which the f32
     /// `quant` store (lowered for the qeval graph) cannot guarantee.
     ///
+    /// OPT-IN: `None` unless `quantize_init` is called with
+    /// `keep_exact = true`. The duplicate trail costs ~1 byte/weight of
+    /// codes plus the f64 group params on top of the f32 stores (~25%
+    /// extra per-layer copy), which pure train/eval sweeps that never
+    /// serve should not pay. `PackedModel::from_model_init` errors
+    /// actionably when the trail is absent.
+    ///
     /// LOSSY EXCEPTION: layers whose method keeps an fp base (LoRA16) are
     /// re-gridded into an 8-bit INT container — the packed engine then
     /// matches that container bit-exactly, NOT the fp weights (same policy
     /// as the qeval fallback below). Callers that want a hard error for
     /// fp-base methods instead should go through
     /// `serve::PackedLayer::from_layer_init`, which rejects them by name.
-    ///
-    /// Memory note: this duplicates ~1 byte/weight of codes plus the f64
-    /// group params on top of the f32 stores — fine at current model
-    /// sizes; making it opt-in for serve-less sweep paths is a ROADMAP
-    /// open item.
-    pub exact: Vec<(String, QuantState)>,
+    pub exact: Option<Vec<(String, QuantState)>>,
     /// Mean bits/weight over quantized layers.
     pub bits_per_weight: f64,
 }
@@ -48,7 +50,10 @@ pub struct ModelInit {
 /// Apply `method` at `bits` to every linear layer of `base`.
 ///
 /// `grams` must contain every linear's H when the method is calibrated;
-/// `workers` sizes the scheduler's thread pool. The result is
+/// `workers` sizes the scheduler's thread pool; `keep_exact` opts into the
+/// f64 serving trail (`ModelInit::exact`) that the packed serve path
+/// consumes — leave it `false` for train/eval sweeps that never serve and
+/// skip the extra per-layer copy. The result is
 /// WORKER-COUNT-INDEPENDENT: each layer job derives its own RNG stream from
 /// `(seed, layer index)` and results are reassembled in manifest order, so
 /// `workers ∈ {1, 2, 8, …}` produce byte-identical `ModelInit`s (locked
@@ -62,6 +67,7 @@ pub fn quantize_init(
     cfg: &InitConfig,
     seed: u64,
     workers: usize,
+    keep_exact: bool,
 ) -> anyhow::Result<ModelInit> {
     let mcfg = &man.config;
     anyhow::ensure!(
@@ -147,35 +153,38 @@ pub fn quantize_init(
     // lowered for group_size = mcfg.group_size, so exact states with a
     // different group size are re-gridded too.
     //
-    // The `exact` vector is the parallel f64 trail for the Rust-side packed
-    // serving engine: the method's own state verbatim whenever one exists
-    // (any grid/codebook, any group size), and for fp bases (LoRA16) a
-    // LOSSY 8-bit RTN container — see the `ModelInit::exact` field docs.
+    // The `exact` vector is the OPT-IN parallel f64 trail for the Rust-side
+    // packed serving engine: the method's own state verbatim whenever one
+    // exists (any grid/codebook, any group size), and for fp bases (LoRA16)
+    // a LOSSY 8-bit RTN container — see the `ModelInit::exact` field docs.
     let mut quant = ParamStore::new();
-    let mut exact = Vec::with_capacity(linear_names.len());
+    let mut exact = keep_exact.then(|| Vec::with_capacity(linear_names.len()));
     for name in &linear_names {
         let (_, li) = results.iter().find(|(n, _)| n == name).unwrap();
-        // (qeval container, exact serving state) from one pass over the
-        // layer: methods without a state (LoRA16 — the only `None`) share a
-        // single 8-bit RTN container between both trails, quantized once.
-        let (q, qs) = match &li.quant {
-            Some(QuantState::Int(qi)) if qi.group_size == mcfg.group_size => {
-                (qi.clone(), QuantState::Int(qi.clone()))
-            }
-            Some(qs) => {
-                (quantize_rtn(&li.q_deq, cfg.bits.max(4), mcfg.group_size), qs.clone())
-            }
+        // The qeval container: the method's own INT state when the group
+        // size matches the lowered graph, an RTN re-grid otherwise (the
+        // lowered INT-grid graph cannot index an NF codebook or a foreign
+        // group size). Methods without a state (LoRA16 — the only `None`)
+        // share a single 8-bit RTN container between both trails.
+        let q = match &li.quant {
+            Some(QuantState::Int(qi)) if qi.group_size == mcfg.group_size => qi.clone(),
+            Some(_) => quantize_rtn(&li.q_deq, cfg.bits.max(4), mcfg.group_size),
             None => {
                 debug_assert_eq!(cfg.method, Method::Lora16);
-                let q = quantize_rtn(&li.q_deq, 8, mcfg.group_size);
-                (q.clone(), QuantState::Int(q))
+                quantize_rtn(&li.q_deq, 8, mcfg.group_size)
             }
         };
+        if let Some(exact) = exact.as_mut() {
+            let qs = match &li.quant {
+                Some(qs) => qs.clone(),
+                None => QuantState::Int(q.clone()),
+            };
+            exact.push((name.clone(), qs));
+        }
         let codes: Vec<i32> = q.codes.iter().map(|&c| c as i32).collect();
         quant.insert(&format!("{name}.codes"), Tensor::i32(vec![q.rows, q.cols], codes));
         quant.insert(&format!("{name}.scales"), Tensor::from_matrix(&q.scales));
         quant.insert(&format!("{name}.zeros"), Tensor::from_matrix(&q.zeros));
-        exact.push((name.clone(), qs));
     }
 
     let bpw = results.iter().map(|(_, li)| li.bits_per_weight).sum::<f64>()

@@ -81,7 +81,13 @@ fn method_grid(full: bool) -> Vec<(Method, u32)> {
 // Table 1/2: WikiText ppl + GSM8K accuracy
 // ------------------------------------------------------------------
 
-fn wiki_gsm8k_table(configs: &[&str], id: &str, title: &str, grid: Vec<(Method, u32)>, t: &TableOpts) -> anyhow::Result<()> {
+fn wiki_gsm8k_table(
+    configs: &[&str],
+    id: &str,
+    title: &str,
+    grid: Vec<(Method, u32)>,
+    t: &TableOpts,
+) -> anyhow::Result<()> {
     let mut headers = vec!["Method".to_string(), "Bit".to_string()];
     for c in configs {
         headers.push(format!("{c} Wiki(ppl)"));
@@ -90,12 +96,15 @@ fn wiki_gsm8k_table(configs: &[&str], id: &str, title: &str, grid: Vec<(Method, 
     let mut table = Table::new(title, &headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
 
     // Gather per config to reuse runtime/base/grams.
-    let mut cells: Vec<Vec<String>> = grid.iter().map(|(m, b)| vec![m.name().to_string(), b.to_string()]).collect();
+    let mut cells: Vec<Vec<String>> =
+        grid.iter().map(|(m, b)| vec![m.name().to_string(), b.to_string()]).collect();
     for config in configs {
         let mut c = ctx(config, t)?;
         for (i, (method, bits)) in grid.iter().enumerate() {
-            let r_wiki = run_one(&mut c.rt, &c.base, &c.grams, &spec(*method, *bits, FinetuneTask::Wiki, t), &c.opts)?;
-            let r_gsm = run_one(&mut c.rt, &c.base, &c.grams, &spec(*method, *bits, FinetuneTask::Gsm8k, t), &c.opts)?;
+            let wspec = spec(*method, *bits, FinetuneTask::Wiki, t);
+            let r_wiki = run_one(&mut c.rt, &c.base, &c.grams, &wspec, &c.opts)?;
+            let gspec = spec(*method, *bits, FinetuneTask::Gsm8k, t);
+            let r_gsm = run_one(&mut c.rt, &c.base, &c.grams, &gspec, &c.opts)?;
             cells[i].push(fmt_f(r_wiki.ppl.unwrap_or(f64::NAN), 2));
             cells[i].push(fmt_pct(r_gsm.accuracies[0].1));
         }
@@ -174,7 +183,8 @@ pub fn table3(t: &TableOpts) -> anyhow::Result<()> {
     for config in &configs {
         let mut c = ctx(config, t)?;
         for (i, (method, bits)) in grid.iter().enumerate() {
-            let r = run_one(&mut c.rt, &c.base, &c.grams, &spec(*method, *bits, FinetuneTask::Math10k, t), &c.opts)?;
+            let mspec = spec(*method, *bits, FinetuneTask::Math10k, t);
+            let r = run_one(&mut c.rt, &c.base, &c.grams, &mspec, &c.opts)?;
             cells[i].extend(arith_cells(&r));
         }
     }
@@ -192,7 +202,8 @@ pub fn table4(t: &TableOpts) -> anyhow::Result<()> {
         &["Method", "Bit", "GSM8K", "SVAMP", "MAWPS", "AQuA", "Avg"],
     );
     for (method, bits) in [(Method::Lora16, 16u32), (Method::LoftQ, 2), (Method::GptqLora, 2)] {
-        let r = run_one(&mut c.rt, &c.base, &c.grams, &spec(method, bits, FinetuneTask::Math10k, t), &c.opts)?;
+        let mspec = spec(method, bits, FinetuneTask::Math10k, t);
+        let r = run_one(&mut c.rt, &c.base, &c.grams, &mspec, &c.opts)?;
         let mut row = vec![method.name().to_string(), bits.to_string()];
         row.extend(arith_cells(&r));
         table.row(row);
@@ -232,7 +243,10 @@ pub fn table5(t: &TableOpts) -> anyhow::Result<()> {
     let configs = if t.fast { vec!["tiny-s"] } else { vec!["tiny-s", "tiny-m"] };
     let mut table = Table::new(
         "Table 5: eight commonsense reasoning tasks (fine-tuned on s-CS170K)",
-        &["Model", "Method", "Bit", "Parity", "Compare", "Majority", "Succ", "Member", "Copy", "Reverse", "Bool", "Avg"],
+        &[
+            "Model", "Method", "Bit", "Parity", "Compare", "Majority", "Succ", "Member",
+            "Copy", "Reverse", "Bool", "Avg",
+        ],
     );
     let grid = if t.fast {
         vec![(Method::Lora16, 16), (Method::QLora, 4), (Method::LoftQ, 2), (Method::CLoQ, 2)]
@@ -242,7 +256,8 @@ pub fn table5(t: &TableOpts) -> anyhow::Result<()> {
     for config in &configs {
         let mut c = ctx(config, t)?;
         for (method, bits) in &grid {
-            let r = run_one(&mut c.rt, &c.base, &c.grams, &spec(*method, *bits, FinetuneTask::Commonsense, t), &c.opts)?;
+            let cspec = spec(*method, *bits, FinetuneTask::Commonsense, t);
+            let r = run_one(&mut c.rt, &c.base, &c.grams, &cspec, &c.opts)?;
             let mut row = vec![config.to_string(), method.name().to_string(), bits.to_string()];
             for (_, a) in &r.accuracies {
                 row.push(fmt_pct(*a));
@@ -266,8 +281,10 @@ pub fn table6(t: &TableOpts) -> anyhow::Result<()> {
     );
     for bits in [4u32, 2] {
         for method in [Method::LoftQ, Method::CLoQ] {
-            let r_mixed = run_one(&mut c.rt, &c.base, &c.grams, &spec(method, bits, FinetuneTask::Mixed, t), &c.opts)?;
-            let r_pure = run_one(&mut c.rt, &c.base, &c.grams, &spec(method, bits, FinetuneTask::Math10k, t), &c.opts)?;
+            let xspec = spec(method, bits, FinetuneTask::Mixed, t);
+            let r_mixed = run_one(&mut c.rt, &c.base, &c.grams, &xspec, &c.opts)?;
+            let pspec = spec(method, bits, FinetuneTask::Math10k, t);
+            let r_pure = run_one(&mut c.rt, &c.base, &c.grams, &pspec, &c.opts)?;
             let mut row = vec![method.name().to_string(), bits.to_string()];
             row.extend(arith_cells(&r_mixed));
             row.push(fmt_pct(r_pure.avg_accuracy()));
@@ -292,8 +309,10 @@ pub fn table7(t: &TableOpts) -> anyhow::Result<()> {
         (Method::CLoQSqrtSplit, FactorSplit::Sqrt.name()),
         (Method::CLoQ, FactorSplit::AllInA.name()),
     ] {
-        let r_wiki = run_one(&mut c.rt, &c.base, &c.grams, &spec(method, 2, FinetuneTask::Wiki, t), &c.opts)?;
-        let r_gsm = run_one(&mut c.rt, &c.base, &c.grams, &spec(method, 2, FinetuneTask::Gsm8k, t), &c.opts)?;
+        let wspec = spec(method, 2, FinetuneTask::Wiki, t);
+        let r_wiki = run_one(&mut c.rt, &c.base, &c.grams, &wspec, &c.opts)?;
+        let gspec = spec(method, 2, FinetuneTask::Gsm8k, t);
+        let r_gsm = run_one(&mut c.rt, &c.base, &c.grams, &gspec, &c.opts)?;
         table.row(vec![
             label.to_string(),
             "2".to_string(),
@@ -320,9 +339,12 @@ pub fn table8(t: &TableOpts) -> anyhow::Result<()> {
     for bits in [4u32, 2] {
         for &n in sizes {
             let grams = ensure_grams(&mut rt, &base, &opts, n)?;
-            let r_wiki = run_one(&mut rt, &base, &grams, &spec(Method::CLoQ, bits, FinetuneTask::Wiki, t), &opts)?;
-            let r_gsm = run_one(&mut rt, &base, &grams, &spec(Method::CLoQ, bits, FinetuneTask::Gsm8k, t), &opts)?;
-            let r_math = run_one(&mut rt, &base, &grams, &spec(Method::CLoQ, bits, FinetuneTask::Math10k, t), &opts)?;
+            let wspec = spec(Method::CLoQ, bits, FinetuneTask::Wiki, t);
+            let r_wiki = run_one(&mut rt, &base, &grams, &wspec, &opts)?;
+            let gspec = spec(Method::CLoQ, bits, FinetuneTask::Gsm8k, t);
+            let r_gsm = run_one(&mut rt, &base, &grams, &gspec, &opts)?;
+            let mspec = spec(Method::CLoQ, bits, FinetuneTask::Math10k, t);
+            let r_math = run_one(&mut rt, &base, &grams, &mspec, &opts)?;
             table.row(vec![
                 n.to_string(),
                 bits.to_string(),
@@ -351,7 +373,8 @@ pub fn table9(t: &TableOpts) -> anyhow::Result<()> {
     };
     for (config, seq) in configs {
         let mut c = ctx(config, t)?;
-        let r = run_one(&mut c.rt, &c.base, &c.grams, &spec(Method::CLoQ, 2, FinetuneTask::Math10k, t), &c.opts)?;
+        let mspec = spec(Method::CLoQ, 2, FinetuneTask::Math10k, t);
+        let r = run_one(&mut c.rt, &c.base, &c.grams, &mspec, &c.opts)?;
         let mut row = vec![seq.to_string()];
         row.extend(arith_cells(&r));
         table.row(row);
@@ -420,7 +443,9 @@ pub fn fig1(t: &TableOpts) -> anyhow::Result<()> {
 pub fn fig2(t: &TableOpts) -> anyhow::Result<()> {
     use crate::linalg::matmul;
     use crate::linalg::norms::{discrepancy_from_re};
-    use crate::lowrank::{cloq_lowrank, damping_lambda, gram_root, loftq, CloqConfig, LoftqConfig, LoftqQuantizer};
+    use crate::lowrank::{
+        cloq_lowrank, damping_lambda, gram_root, loftq, CloqConfig, LoftqConfig, LoftqQuantizer,
+    };
     use crate::quant::magr::magr;
     use crate::quant::optq::{optq, OptqConfig};
 
@@ -465,7 +490,9 @@ pub fn fig2(t: &TableOpts) -> anyhow::Result<()> {
         let d_cloq = discrepancy_from_re(&matmul(&root.r, &e_cloq));
 
         // LoftQ: data-free AltMin (INT quantizer, 5 iters).
-        let lq = loftq(&w, &LoftqConfig { bits, group_size: gs, rank: r, iters: 5, quantizer: LoftqQuantizer::Int });
+        let lcfg =
+            LoftqConfig { bits, group_size: gs, rank: r, iters: 5, quantizer: LoftqQuantizer::Int };
+        let lq = loftq(&w, &lcfg);
         let e_loftq = lq.q_deq.add(&lq.ab_t()).sub(&w);
         let d_loftq = discrepancy_from_re(&matmul(&root.r, &e_loftq));
 

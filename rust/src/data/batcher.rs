@@ -88,7 +88,12 @@ pub fn task_batch(examples: &[Example], batch: usize, seq: usize, rng: &mut Rng)
 
 /// Deterministic sequential batch over `examples[start..start+batch]`
 /// (wrapping), for evaluation. Returns the example indices used.
-pub fn task_batch_at(examples: &[Example], start: usize, batch: usize, seq: usize) -> (Batch, Vec<usize>) {
+pub fn task_batch_at(
+    examples: &[Example],
+    start: usize,
+    batch: usize,
+    seq: usize,
+) -> (Batch, Vec<usize>) {
     let mut rows = Vec::with_capacity(batch);
     let mut idxs = Vec::with_capacity(batch);
     for k in 0..batch {
@@ -173,7 +178,8 @@ mod tests {
             // The delimiter region is unmasked; the answer is masked.
             let first_masked = mrow.iter().position(|&m| m == 1.0).unwrap();
             assert!(mrow[..first_masked].iter().all(|&m| m == 0.0));
-            assert!(decode(&row[..first_masked]).ends_with(" A: "), "{:?}", decode(&row[..first_masked]));
+            let prompt = decode(&row[..first_masked]);
+            assert!(prompt.ends_with(" A: "), "{prompt:?}");
             // EOS masked, pads unmasked.
             let eos_pos = row.iter().position(|&t| t == EOS).unwrap();
             assert_eq!(mrow[eos_pos], 1.0);

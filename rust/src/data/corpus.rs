@@ -13,7 +13,8 @@ use crate::util::prng::{Rng, Zipf};
 
 /// Deterministic synthetic lexicon: CV-syllable words.
 fn make_words(n: usize, min_syl: usize, max_syl: usize, rng: &mut Rng) -> Vec<String> {
-    const C: &[&str] = &["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z", "th", "sh"];
+    const C: &[&str] =
+        &["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t", "v", "z", "th", "sh"];
     const V: &[&str] = &["a", "e", "i", "o", "u", "ai", "or"];
     let mut words = Vec::with_capacity(n);
     while words.len() < n {

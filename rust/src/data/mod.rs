@@ -8,7 +8,9 @@ pub mod tokenizer;
 
 pub use batcher::{task_batch, task_batch_at, Batch, LmStream};
 pub use corpus::{corpus_text, Split};
-pub use tasks::{commonsense170k, math10k, mixed_dataset, Example, Task, ARITH_TASKS, COMMONSENSE_TASKS};
+pub use tasks::{
+    commonsense170k, math10k, mixed_dataset, Example, Task, ARITH_TASKS, COMMONSENSE_TASKS,
+};
 
 /// Pretraining mixture: synth-wiki prose interleaved with task-formatted
 /// lines (arithmetic + commonsense QA). Mirrors how a real pretrained LLM
@@ -20,7 +22,8 @@ pub fn pretrain_mixture(seed: u64, bytes: usize) -> String {
     let mut rng = Rng::new(seed ^ 0x9E77_1234);
     let mut out = String::with_capacity(bytes + 256);
     let mut prose_iter = prose.split('\n');
-    let all_tasks: Vec<Task> = ARITH_TASKS.iter().chain(COMMONSENSE_TASKS.iter()).copied().collect();
+    let all_tasks: Vec<Task> =
+        ARITH_TASKS.iter().chain(COMMONSENSE_TASKS.iter()).copied().collect();
     while out.len() < bytes {
         // A paragraph of prose…
         if let Some(p) = prose_iter.next() {

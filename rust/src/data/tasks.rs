@@ -265,7 +265,8 @@ impl Task {
 
     /// A deterministic dataset of `n` examples for (task, seed, split).
     pub fn dataset(&self, n: usize, seed: u64, split: u64) -> Vec<Example> {
-        let mut rng = Rng::new(seed ^ split.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (*self as u64) << 32);
+        let mut rng =
+            Rng::new(seed ^ split.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (*self as u64) << 32);
         (0..n).map(|_| self.example(&mut rng)).collect()
     }
 }

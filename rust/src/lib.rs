@@ -9,8 +9,9 @@
 //!   MagR+OPTQ post-training quantization, the Theorem-3.1 closed-form LoRA
 //!   initialization, every baseline (RTN/NF4/QLoRA/GPTQ-LoRA/LoftQ), the
 //!   fine-tuning trainer, evaluation, the table/figure bench harness, and
-//!   the packed-weight serving engine (`serve`: fused dequant×matmul
-//!   kernel, request batcher, versioned artifact).
+//!   the multi-tenant packed-weight serving engine (`serve`: fused
+//!   dequant×matmul kernel, hot-swappable adapter registry, adapter-aware
+//!   request batcher, versioned base + adapter artifacts).
 //! * **L2 (`python/compile/model.py`)** — the TinyGPT compute graphs,
 //!   AOT-lowered once to HLO text under `artifacts/`.
 //! * **L1 (`python/compile/kernels/`)** — Pallas fused dequant-matmul +

@@ -329,7 +329,14 @@ fn mirror_upper(h: &mut Matrix) {
 /// win behind blocked OPTQ. `t` runs in ascending order per element, so
 /// the result is bit-identical to applying the `nt` rank-1 updates
 /// row-by-row (the parity suite relies on this).
-pub fn sub_matmul_tn_tail(c: &mut Matrix, row0: usize, a: &Matrix, t0: usize, nt: usize, b: &Matrix) {
+pub fn sub_matmul_tn_tail(
+    c: &mut Matrix,
+    row0: usize,
+    a: &Matrix,
+    t0: usize,
+    nt: usize,
+    b: &Matrix,
+) {
     assert_eq!(a.cols, c.rows, "panel column space must index c's rows");
     assert_eq!(b.cols, c.cols, "update width mismatch");
     assert!(t0 + nt <= a.rows && nt <= b.rows, "panel rows out of range");
@@ -414,7 +421,9 @@ mod tests {
         // The determinism contract: tiling must not change per-element
         // accumulation order. Shapes straddle every tile boundary.
         let mut rng = Rng::new(13);
-        for &(m, k, n) in &[(63, 65, 64), (65, 257, 31), (64, 256, 512), (66, 258, 514), (2, 300, 5)] {
+        for &(m, k, n) in
+            &[(63, 65, 64), (65, 257, 31), (64, 256, 512), (66, 258, 514), (2, 300, 5)]
+        {
             let a = Matrix::randn(m, k, 1.0, &mut rng);
             let b = Matrix::randn(k, n, 1.0, &mut rng);
             let naive = matmul_naive(&a, &b);

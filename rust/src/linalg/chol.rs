@@ -21,7 +21,9 @@ pub fn cholesky(a: &Matrix) -> anyhow::Result<Matrix> {
             }
             if i == j {
                 if s <= 0.0 {
-                    anyhow::bail!("cholesky: matrix not positive definite at pivot {i} (s={s:.3e})");
+                    anyhow::bail!(
+                        "cholesky: matrix not positive definite at pivot {i} (s={s:.3e})"
+                    );
                 }
                 l.data[i * n + i] = s.sqrt();
             } else {

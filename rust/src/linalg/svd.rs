@@ -181,9 +181,16 @@ mod tests {
         let utu = matmul(&d.u.transpose(), &d.u);
         for i in 0..k {
             for j in 0..k {
-                let expect = if i == j && d.s[i] > 1e-12 { 1.0 } else if i == j { utu.at(i, j) } else { 0.0 };
+                let expect = if i == j && d.s[i] > 1e-12 {
+                    1.0
+                } else if i == j {
+                    utu.at(i, j)
+                } else {
+                    0.0
+                };
                 if d.s[i] > 1e-12 && d.s[j] > 1e-12 {
-                    assert!((utu.at(i, j) - if i == j { 1.0 } else { 0.0 }).abs() < tol, "UᵀU[{i}][{j}]");
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((utu.at(i, j) - want).abs() < tol, "UᵀU[{i}][{j}]");
                 }
                 let _ = expect;
             }

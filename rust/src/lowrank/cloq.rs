@@ -300,7 +300,8 @@ mod tests {
     fn all_splits_same_product() {
         let (_, dw, h) = setup(10, 14, 60, 94);
         let mk = |split| {
-            cloq_lowrank(&h, &dw, &CloqConfig { rank: 5, split, rcond: 1e-12, randomized: false }).ab_t()
+            let cfg = CloqConfig { rank: 5, split, rcond: 1e-12, randomized: false };
+            cloq_lowrank(&h, &dw, &cfg).ab_t()
         };
         let a = mk(FactorSplit::AllInA);
         let b = mk(FactorSplit::Sqrt);
@@ -312,11 +313,15 @@ mod tests {
     #[test]
     fn split_energy_distribution() {
         let (_, dw, h) = setup(10, 14, 60, 95);
-        let all_a = cloq_lowrank(&h, &dw, &CloqConfig { rank: 5, split: FactorSplit::AllInA, rcond: 1e-12, randomized: false });
+        let cfg_a =
+            CloqConfig { rank: 5, split: FactorSplit::AllInA, rcond: 1e-12, randomized: false };
+        let all_a = cloq_lowrank(&h, &dw, &cfg_a);
         // With AllInA, B has orthonormal columns (BᵀB = I).
         let btb = matmul(&all_a.b.transpose(), &all_a.b);
         assert!(btb.max_diff(&Matrix::eye(5)) < 1e-8);
-        let all_b = cloq_lowrank(&h, &dw, &CloqConfig { rank: 5, split: FactorSplit::AllInB, rcond: 1e-12, randomized: false });
+        let cfg_b =
+            CloqConfig { rank: 5, split: FactorSplit::AllInB, rcond: 1e-12, randomized: false };
+        let all_b = cloq_lowrank(&h, &dw, &cfg_b);
         // With AllInB, ‖B‖ carries the spectrum: column norms = σ_i.
         let sq = svd(&matmul(&gram_root(&h, 1e-12).r, &dw));
         for i in 0..5 {
@@ -332,7 +337,8 @@ mod tests {
         let x = Matrix::randn(4, 16, 1.0, &mut rng);
         let h = syrk_t(&x); // deliberately NOT damped
         let dw = Matrix::randn(16, 8, 0.3, &mut rng);
-        let init = cloq_lowrank(&h, &dw, &CloqConfig { rank: 4, rcond: 1e-10, ..Default::default() });
+        let init =
+            cloq_lowrank(&h, &dw, &CloqConfig { rank: 4, rcond: 1e-10, ..Default::default() });
         assert!(init.a.max_abs().is_finite());
         // Calibrated objective still ≤ plain-SVD candidate's.
         let e_cloq = calibrated_error2(&h, &init.ab_t().sub(&dw));

@@ -102,6 +102,33 @@ impl InitConfig {
     }
 }
 
+/// One layer's LoRA factor pair `(A, B)` with `delta = A·Bᵀ` — the unit
+/// the serving path ships and hot-swaps independently of the frozen base
+/// (`serve::adapters::AdapterSet` is a named collection of these).
+#[derive(Clone, Debug)]
+pub struct LoraPair {
+    /// m×r factor.
+    pub a: Matrix,
+    /// n×r factor.
+    pub b: Matrix,
+}
+
+impl LoraPair {
+    pub fn new(a: Matrix, b: Matrix) -> LoraPair {
+        assert_eq!(a.cols, b.cols, "LoraPair: rank mismatch {} vs {}", a.cols, b.cols);
+        LoraPair { a, b }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.a.cols
+    }
+
+    /// Storage footprint in bytes (both factors, f64).
+    pub fn bytes(&self) -> usize {
+        (self.a.data.len() + self.b.data.len()) * 8
+    }
+}
+
 /// The initialized layer: frozen base + trainable adapters.
 pub struct LayerInit {
     /// Dequantized frozen base Q (m×n). For `Lora16` this is W itself.
@@ -118,6 +145,14 @@ pub struct LayerInit {
     pub b: Matrix,
     /// Nominal storage bits per base weight.
     pub bits_per_weight: f64,
+}
+
+impl LayerInit {
+    /// Extract the adapter as a standalone [`LoraPair`] — what the serving
+    /// path registers per tenant, decoupled from the frozen packed base.
+    pub fn lora_pair(&self) -> LoraPair {
+        LoraPair::new(self.a.clone(), self.b.clone())
+    }
 }
 
 /// Initialize one linear layer. `h` is the **undamped** Gram matrix; it is
@@ -222,7 +257,8 @@ pub fn init_layer(w: &Matrix, h: Option<&Matrix>, cfg: &InitConfig, rng: &mut Rn
             };
             // Randomized truncated SVD: exact-to-tolerance on these residual
             // spectra and ~2.2x faster (EXPERIMENTS.md §Perf).
-            let lr = cloq_lowrank(&hd, &delta_w, &CloqConfig { rank: r, split, rcond: 1e-12, randomized: true });
+            let ccfg = CloqConfig { rank: r, split, rcond: 1e-12, randomized: true };
+            let lr = cloq_lowrank(&hd, &delta_w, &ccfg);
             LayerInit {
                 q_deq,
                 a: lr.a,

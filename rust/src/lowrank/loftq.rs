@@ -105,7 +105,13 @@ mod tests {
         let mut rng = Rng::new(100);
         let w = Matrix::randn(48, 24, 0.5, &mut rng);
         for &bits in &[2u32, 4] {
-            let cfg = LoftqConfig { bits, group_size: 16, rank: 8, iters: 5, quantizer: LoftqQuantizer::Int };
+            let cfg = LoftqConfig {
+                bits,
+                group_size: 16,
+                rank: 8,
+                iters: 5,
+                quantizer: LoftqQuantizer::Int,
+            };
             let init = loftq(&w, &cfg);
             let e_loftq = fro2(&init.q_deq.add(&init.ab_t()).sub(&w));
             let e_quant = fro2(&quantize_rtn(&w, bits, 16).dequantize().sub(&w));
@@ -140,7 +146,13 @@ mod tests {
     fn nf_path_runs() {
         let mut rng = Rng::new(103);
         let w = Matrix::randn(32, 8, 0.1, &mut rng);
-        let cfg = LoftqConfig { bits: 4, group_size: 32, rank: 4, iters: 3, quantizer: LoftqQuantizer::Nf };
+        let cfg = LoftqConfig {
+            bits: 4,
+            group_size: 32,
+            rank: 4,
+            iters: 3,
+            quantizer: LoftqQuantizer::Nf,
+        };
         let init = loftq(&w, &cfg);
         let e = fro2(&init.q_deq.add(&init.ab_t()).sub(&w));
         assert!(e < fro2(&w), "reconstruction must beat zero model");

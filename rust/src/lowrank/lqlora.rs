@@ -106,8 +106,14 @@ mod tests {
                 cq_beats_lq += 1;
             }
         }
-        assert!(lq_beats_plain >= 6, "diag-H should usually beat plain SVD: {lq_beats_plain}/{n_seeds}");
-        assert!(cq_beats_lq >= 6, "full H should usually strictly beat diag-H: {cq_beats_lq}/{n_seeds}");
+        assert!(
+            lq_beats_plain >= 6,
+            "diag-H should usually beat plain SVD: {lq_beats_plain}/{n_seeds}"
+        );
+        assert!(
+            cq_beats_lq >= 6,
+            "full H should usually strictly beat diag-H: {cq_beats_lq}/{n_seeds}"
+        );
     }
 
     #[test]

@@ -8,6 +8,6 @@ pub mod loftq;
 pub mod lqlora;
 
 pub use cloq::{cloq_lowrank, damping_lambda, gram_root, CloqConfig, FactorSplit, LowRankInit};
-pub use init::{init_layer, InitConfig, LayerInit, Method};
+pub use init::{init_layer, InitConfig, LayerInit, LoraPair, Method};
 pub use loftq::{loftq, LoftqConfig, LoftqInit, LoftqQuantizer};
 pub use lqlora::lqlora_lowrank;

@@ -119,7 +119,11 @@ impl Tensor {
     }
 
     /// Read a literal back into a host tensor with a known spec shape/dtype.
-    pub fn from_literal(lit: &xla::Literal, shape: &[usize], dtype: Dtype) -> anyhow::Result<Tensor> {
+    pub fn from_literal(
+        lit: &xla::Literal,
+        shape: &[usize],
+        dtype: Dtype,
+    ) -> anyhow::Result<Tensor> {
         let t = match dtype {
             Dtype::F32 => Tensor::f32(shape.to_vec(), lit.to_vec::<f32>()?),
             Dtype::I32 => Tensor::i32(shape.to_vec(), lit.to_vec::<i32>()?),

@@ -1,0 +1,541 @@
+//! Multi-tenant adapter state: named LoRA adapter sets over one packed
+//! base, and the registry that hot-swaps them under load.
+//!
+//! CLoQ's output is exactly a frozen quantized base plus a per-task LoRA
+//! pair, so a production server loads the packed base ONCE and routes each
+//! request to one of many cheap adapters. The two types here are the
+//! tenant half of that split:
+//!
+//! * [`AdapterSet`] — one tenant's adapters: a named collection of
+//!   per-layer [`LoraPair`]s, validated against a [`PackedModel`]'s shapes
+//!   before serving.
+//! * [`AdapterRegistry`] — the live set of tenants: `register` /
+//!   `unregister` / hot-swap under load, LRU eviction under a byte budget,
+//!   and RAII [`AdapterHandle`] checkouts that pin an adapter while any
+//!   request references it.
+//!
+//! **Consistency contract** (locked down by
+//! `rust/tests/lifecycle_adapters.rs`): a request resolves its adapter to
+//! an [`AdapterHandle`] exactly once, at admission, and computes its whole
+//! response through that handle — so a hot-swap (re-`register` under the
+//! same id) can NEVER mix old and new weights inside one response; it only
+//! changes which version requests admitted *after* the swap see. Eviction
+//! and `unregister` respect pins across ALL versions of an id (a
+//! hot-swap's still-pinned predecessors stay tracked as superseded): an
+//! adapter with queued or in-flight requests is never evicted, and
+//! `unregister` blocks until the last handle on any of its versions drops
+//! (the per-adapter drain).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::lowrank::LoraPair;
+use crate::serve::packed::PackedModel;
+
+/// One tenant's adapters: per-layer LoRA pairs keyed by layer name.
+#[derive(Clone, Debug)]
+pub struct AdapterSet {
+    id: String,
+    layers: Vec<(String, LoraPair)>,
+    index: HashMap<String, usize>,
+}
+
+impl AdapterSet {
+    pub fn new(id: &str) -> AdapterSet {
+        AdapterSet { id: id.to_string(), layers: Vec::new(), index: HashMap::new() }
+    }
+
+    /// Build from `(layer name, pair)` entries; duplicate layer names are
+    /// rejected (requests address adapters by layer name).
+    pub fn from_pairs(id: &str, pairs: Vec<(String, LoraPair)>) -> anyhow::Result<AdapterSet> {
+        let mut set = AdapterSet::new(id);
+        for (layer, pair) in pairs {
+            set.insert(&layer, pair)?;
+        }
+        Ok(set)
+    }
+
+    pub fn insert(&mut self, layer: &str, pair: LoraPair) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.index.contains_key(layer),
+            "adapter '{}': duplicate entry for layer '{layer}'",
+            self.id
+        );
+        self.index.insert(layer.to_string(), self.layers.len());
+        self.layers.push((layer.to_string(), pair));
+        Ok(())
+    }
+
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    pub fn get(&self, layer: &str) -> Option<&LoraPair> {
+        self.index.get(layer).map(|&i| &self.layers[i].1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// `(layer name, pair)` entries in insertion order (the artifact writer
+    /// iterates this, so save → load → save is byte-stable).
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &LoraPair)> {
+        self.layers.iter().map(|(n, p)| (n.as_str(), p))
+    }
+
+    /// Adapter payload bytes (both factors of every pair, f64) — the unit
+    /// of the registry's eviction budget.
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(|(_, p)| p.bytes()).sum()
+    }
+
+    /// Validate every entry against `model`: the layer must exist and the
+    /// pair must fit its base shape. Run at registration so admission and
+    /// the kernel never see a misshapen adapter.
+    pub fn check_against(&self, model: &PackedModel) -> anyhow::Result<()> {
+        for (name, pair) in self.entries() {
+            let layer = model.layer(name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "adapter '{}': no layer '{name}' in the served model",
+                    self.id
+                )
+            })?;
+            layer.check_adapter(pair).map_err(|e| anyhow::anyhow!("adapter '{}': {e}", self.id))?;
+        }
+        Ok(())
+    }
+}
+
+/// A registered adapter version plus its live pin count. One `ActiveAdapter`
+/// per `register` call: hot-swapping an id creates a NEW `ActiveAdapter`,
+/// so pins on the old version keep the old weights alive and coherent.
+pub struct ActiveAdapter {
+    set: AdapterSet,
+    in_use: AtomicUsize,
+}
+
+impl ActiveAdapter {
+    pub fn set(&self) -> &AdapterSet {
+        &self.set
+    }
+
+    /// Live checkout count (queued + in-flight requests holding a handle).
+    pub fn pins(&self) -> usize {
+        self.in_use.load(Ordering::Acquire)
+    }
+}
+
+/// RAII pin on one adapter version. Held by a request from admission until
+/// its response is sent; while any handle exists the version cannot be
+/// evicted and `unregister` of its id blocks (the drain).
+pub struct AdapterHandle {
+    active: Arc<ActiveAdapter>,
+    shared: Arc<RegShared>,
+}
+
+impl AdapterHandle {
+    pub fn set(&self) -> &AdapterSet {
+        &self.active.set
+    }
+
+    /// Same underlying version? (Identity, not value, comparison — the
+    /// engine keys batch groups on this.)
+    pub fn same_version(&self, other: &AdapterHandle) -> bool {
+        Arc::ptr_eq(&self.active, &other.active)
+    }
+
+    /// Opaque version identity token (the engine's batch sorter uses it to
+    /// make same-version requests adjacent; two handles return the same
+    /// token iff [`AdapterHandle::same_version`] holds).
+    pub fn version_token(&self) -> usize {
+        Arc::as_ptr(&self.active) as usize
+    }
+}
+
+impl Clone for AdapterHandle {
+    fn clone(&self) -> AdapterHandle {
+        self.active.in_use.fetch_add(1, Ordering::AcqRel);
+        AdapterHandle { active: Arc::clone(&self.active), shared: Arc::clone(&self.shared) }
+    }
+}
+
+impl Drop for AdapterHandle {
+    fn drop(&mut self) {
+        if self.active.in_use.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // Last pin gone: take the registry lock before notifying so a
+            // drain waiter cannot check the count and then miss the wakeup.
+            let _guard = self.shared.state.lock().unwrap();
+            self.shared.drained.notify_all();
+        }
+    }
+}
+
+struct Entry {
+    active: Arc<ActiveAdapter>,
+    /// Superseded versions of this id still pinned by queued/in-flight
+    /// requests (hot-swap under load). Tracked so `unregister` drains the
+    /// OLD weights too, and eviction never drops a version some request
+    /// still holds. Pruned lazily on every hot-swap, checkout and stats
+    /// call, so drained old weights do not linger past the id's next
+    /// touch.
+    superseded: Vec<Arc<ActiveAdapter>>,
+    bytes: usize,
+    /// Registry clock at the last checkout/registration — the LRU key.
+    last_used: u64,
+}
+
+impl Entry {
+    fn any_pinned(&self) -> bool {
+        self.active.pins() > 0 || self.superseded.iter().any(|a| a.pins() > 0)
+    }
+}
+
+struct RegState {
+    entries: HashMap<String, Entry>,
+    clock: u64,
+    bytes_total: usize,
+    evictions: usize,
+}
+
+struct RegShared {
+    state: Mutex<RegState>,
+    drained: Condvar,
+}
+
+/// What `register` did besides inserting: whether it hot-swapped an
+/// existing id, and which adapters the byte budget pushed out.
+#[derive(Clone, Debug, Default)]
+pub struct RegisterOutcome {
+    pub replaced: bool,
+    pub evicted: Vec<String>,
+}
+
+/// Point-in-time registry counters.
+#[derive(Clone, Debug, Default)]
+pub struct RegistryStats {
+    pub adapters: usize,
+    pub bytes: usize,
+    pub evictions: usize,
+}
+
+/// The live adapter set: id → current version, LRU-evicted under
+/// `budget_bytes`. All operations are safe under concurrent serving load;
+/// see the module docs for the hot-swap and drain contracts.
+pub struct AdapterRegistry {
+    shared: Arc<RegShared>,
+    budget_bytes: usize,
+}
+
+impl AdapterRegistry {
+    /// `budget_bytes` caps the total adapter payload held (pinned adapters
+    /// are exempt from eviction, so a fully-pinned registry may transiently
+    /// exceed the budget — by design, since evicting an adapter with queued
+    /// requests would fail those requests for a cache policy's sake).
+    pub fn new(budget_bytes: usize) -> AdapterRegistry {
+        AdapterRegistry {
+            shared: Arc::new(RegShared {
+                state: Mutex::new(RegState {
+                    entries: HashMap::new(),
+                    clock: 0,
+                    bytes_total: 0,
+                    evictions: 0,
+                }),
+                drained: Condvar::new(),
+            }),
+            budget_bytes: budget_bytes.max(1),
+        }
+    }
+
+    /// Insert (or hot-swap) `set` under its id, then evict least-recently
+    /// used UNPINNED adapters until the byte budget holds. A set larger
+    /// than the whole budget is refused outright. Hot-swap does not wait
+    /// for the old version's pins: in-flight requests finish on the old
+    /// weights, new admissions see the new ones.
+    pub fn register(&self, set: AdapterSet) -> anyhow::Result<RegisterOutcome> {
+        let bytes = set.bytes();
+        anyhow::ensure!(
+            bytes <= self.budget_bytes,
+            "adapter '{}': {bytes} bytes exceed the whole registry budget of {} bytes",
+            set.id(),
+            self.budget_bytes
+        );
+        let id = set.id().to_string();
+        let mut st = self.shared.state.lock().unwrap();
+        let mut outcome = RegisterOutcome::default();
+        // Hot-swap: still-pinned predecessor versions move onto the new
+        // entry so unregister/eviction keep seeing their pins; fully
+        // drained ones drop here.
+        let mut superseded = Vec::new();
+        if let Some(old) = st.entries.remove(&id) {
+            st.bytes_total -= old.bytes;
+            outcome.replaced = true;
+            superseded.extend(old.superseded.into_iter().filter(|a| a.pins() > 0));
+            if old.active.pins() > 0 {
+                superseded.push(old.active);
+            }
+        }
+        st.clock += 1;
+        let stamp = st.clock;
+        st.bytes_total += bytes;
+        st.entries.insert(
+            id.clone(),
+            Entry {
+                active: Arc::new(ActiveAdapter { set, in_use: AtomicUsize::new(0) }),
+                superseded,
+                bytes,
+                last_used: stamp,
+            },
+        );
+        while st.bytes_total > self.budget_bytes {
+            // LRU among candidates with NO pinned version (current or
+            // superseded), never the id just registered.
+            let victim = st
+                .entries
+                .iter()
+                .filter(|(k, e)| **k != id && !e.any_pinned())
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            match victim {
+                Some(v) => {
+                    let e = st.entries.remove(&v).unwrap();
+                    st.bytes_total -= e.bytes;
+                    st.evictions += 1;
+                    outcome.evicted.push(v);
+                }
+                None => break, // everything else is pinned: tolerate over-budget
+            }
+        }
+        Ok(outcome)
+    }
+
+    /// Pin and return the current version of `id` (bumping its recency), or
+    /// `None` if it is not registered (never was, evicted, or unregistered).
+    pub fn checkout(&self, id: &str) -> Option<AdapterHandle> {
+        let mut st = self.shared.state.lock().unwrap();
+        st.clock += 1;
+        let stamp = st.clock;
+        let entry = st.entries.get_mut(id)?;
+        entry.superseded.retain(|a| a.pins() > 0); // free drained old weights
+        entry.last_used = stamp;
+        entry.active.in_use.fetch_add(1, Ordering::AcqRel);
+        Some(AdapterHandle { active: Arc::clone(&entry.active), shared: Arc::clone(&self.shared) })
+    }
+
+    /// Remove `id` and BLOCK until every outstanding handle on EVERY
+    /// version of it — the current one and any still-pinned hot-swap
+    /// predecessors — drops: the per-adapter drain. On return no request,
+    /// queued or in-flight, references any of the id's weights. New
+    /// checkouts of the id fail the moment this is called (the entry is
+    /// gone before the wait), so admission cannot re-pin a draining
+    /// adapter.
+    pub fn unregister(&self, id: &str) -> anyhow::Result<()> {
+        let mut st = self.shared.state.lock().unwrap();
+        let entry = st
+            .entries
+            .remove(id)
+            .ok_or_else(|| anyhow::anyhow!("no adapter '{id}' registered"))?;
+        st.bytes_total -= entry.bytes;
+        while entry.any_pinned() {
+            st = self.shared.drained.wait(st).unwrap();
+        }
+        Ok(())
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.shared.state.lock().unwrap().entries.contains_key(id)
+    }
+
+    /// Registered ids, alphabetical (diagnostics / demo output).
+    pub fn ids(&self) -> Vec<String> {
+        let st = self.shared.state.lock().unwrap();
+        let mut ids: Vec<String> = st.entries.keys().cloned().collect();
+        ids.sort();
+        ids
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        let mut st = self.shared.state.lock().unwrap();
+        for e in st.entries.values_mut() {
+            e.superseded.retain(|a| a.pins() > 0); // free drained old weights
+        }
+        RegistryStats {
+            adapters: st.entries.len(),
+            bytes: st.bytes_total,
+            evictions: st.evictions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::prng::Rng;
+
+    fn pair(m: usize, n: usize, r: usize, seed: u64) -> LoraPair {
+        let mut rng = Rng::new(seed);
+        LoraPair::new(Matrix::randn(m, r, 0.1, &mut rng), Matrix::randn(n, r, 0.1, &mut rng))
+    }
+
+    fn set(id: &str, seed: u64) -> AdapterSet {
+        AdapterSet::from_pairs(id, vec![("lin".to_string(), pair(8, 4, 2, seed))]).unwrap()
+    }
+
+    #[test]
+    fn set_lookup_and_bytes() {
+        let s = set("t0", 1);
+        assert_eq!(s.id(), "t0");
+        assert_eq!(s.len(), 1);
+        assert!(s.get("lin").is_some());
+        assert!(s.get("nope").is_none());
+        assert_eq!(s.bytes(), (8 * 2 + 4 * 2) * 8);
+    }
+
+    #[test]
+    fn duplicate_layer_rejected() {
+        let mut s = set("t0", 2);
+        let err = s.insert("lin", pair(8, 4, 2, 3)).unwrap_err();
+        assert!(format!("{err}").contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn register_checkout_unregister() {
+        let reg = AdapterRegistry::new(usize::MAX);
+        reg.register(set("a", 4)).unwrap();
+        assert!(reg.contains("a"));
+        {
+            let h = reg.checkout("a").unwrap();
+            assert_eq!(h.set().id(), "a");
+        }
+        reg.unregister("a").unwrap();
+        assert!(!reg.contains("a"));
+        assert!(reg.checkout("a").is_none());
+        let err = reg.unregister("a").unwrap_err();
+        assert!(format!("{err}").contains("no adapter 'a'"), "{err}");
+    }
+
+    #[test]
+    fn lru_eviction_respects_recency() {
+        let one = set("x", 5).bytes();
+        let reg = AdapterRegistry::new(2 * one);
+        reg.register(set("a", 5)).unwrap();
+        reg.register(set("b", 6)).unwrap();
+        drop(reg.checkout("a").unwrap()); // touch a: b is now LRU
+        let out = reg.register(set("c", 7)).unwrap();
+        assert_eq!(out.evicted, vec!["b".to_string()]);
+        assert!(reg.contains("a") && reg.contains("c"));
+        assert_eq!(reg.stats().evictions, 1);
+    }
+
+    #[test]
+    fn pinned_adapter_never_evicted() {
+        let one = set("x", 8).bytes();
+        let reg = AdapterRegistry::new(2 * one);
+        reg.register(set("a", 8)).unwrap();
+        let _pin = reg.checkout("a").unwrap();
+        reg.register(set("b", 9)).unwrap();
+        drop(reg.checkout("b").unwrap()); // a is LRU but pinned
+        let out = reg.register(set("c", 10)).unwrap();
+        assert_eq!(out.evicted, vec!["b".to_string()], "pinned 'a' must be skipped");
+        assert!(reg.contains("a"));
+        // With everything pinned, over-budget is tolerated rather than
+        // failing live requests.
+        let _pin_c = reg.checkout("c").unwrap();
+        let out = reg.register(set("d", 11)).unwrap();
+        assert!(out.evicted.is_empty());
+        assert!(reg.stats().bytes > 2 * one);
+    }
+
+    #[test]
+    fn oversized_set_refused() {
+        let reg = AdapterRegistry::new(8);
+        let err = reg.register(set("big", 12)).unwrap_err();
+        assert!(format!("{err}").contains("exceed the whole registry budget"), "{err}");
+    }
+
+    #[test]
+    fn hot_swap_is_versioned() {
+        let reg = AdapterRegistry::new(usize::MAX);
+        reg.register(set("a", 13)).unwrap();
+        let old = reg.checkout("a").unwrap();
+        let out = reg.register(set("a", 14)).unwrap();
+        assert!(out.replaced);
+        let new = reg.checkout("a").unwrap();
+        assert!(!old.same_version(&new), "swap must mint a new version");
+        // The old version's weights are still reachable through the pin.
+        let (oa, na) = (old.set().get("lin").unwrap(), new.set().get("lin").unwrap());
+        assert_ne!(oa.a.data, na.a.data, "distinct seeds ⇒ distinct weights");
+    }
+
+    #[test]
+    fn unregister_drains_superseded_versions_too() {
+        // A request pinned to the OLD version across a hot-swap must still
+        // block unregister: the drain contract covers every version of the
+        // id, not just the current one.
+        let reg = Arc::new(AdapterRegistry::new(usize::MAX));
+        reg.register(set("a", 20)).unwrap();
+        let old_pin = reg.checkout("a").unwrap();
+        reg.register(set("a", 21)).unwrap(); // hot-swap; old version still pinned
+        let done = Arc::new(AtomicUsize::new(0));
+        let waiter = {
+            let (reg, done) = (Arc::clone(&reg), Arc::clone(&done));
+            std::thread::spawn(move || {
+                reg.unregister("a").unwrap();
+                done.store(1, Ordering::SeqCst);
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(
+            done.load(Ordering::SeqCst),
+            0,
+            "drain must block on the superseded version's pin"
+        );
+        drop(old_pin);
+        waiter.join().unwrap();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn eviction_skips_entries_with_pinned_superseded_versions() {
+        let one = set("x", 22).bytes();
+        let reg = AdapterRegistry::new(2 * one);
+        reg.register(set("a", 22)).unwrap();
+        let old_pin = reg.checkout("a").unwrap();
+        reg.register(set("a", 23)).unwrap(); // swap: current unpinned, old pinned
+        reg.register(set("b", 24)).unwrap();
+        drop(reg.checkout("b").unwrap()); // a is LRU but its old version is pinned
+        let out = reg.register(set("c", 25)).unwrap();
+        assert_eq!(out.evicted, vec!["b".to_string()], "superseded pin must protect 'a'");
+        assert!(reg.contains("a"));
+        drop(old_pin);
+    }
+
+    #[test]
+    fn unregister_drains_outstanding_handles() {
+        let reg = Arc::new(AdapterRegistry::new(usize::MAX));
+        reg.register(set("a", 15)).unwrap();
+        let h = reg.checkout("a").unwrap();
+        let h2 = h.clone();
+        drop(h);
+        let done = Arc::new(AtomicUsize::new(0));
+        let waiter = {
+            let (reg, done) = (Arc::clone(&reg), Arc::clone(&done));
+            std::thread::spawn(move || {
+                reg.unregister("a").unwrap();
+                done.store(1, Ordering::SeqCst);
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(done.load(Ordering::SeqCst), 0, "drain must block while a handle lives");
+        assert!(reg.checkout("a").is_none(), "draining adapter must refuse new pins");
+        drop(h2);
+        waiter.join().unwrap();
+        assert_eq!(done.load(Ordering::SeqCst), 1);
+    }
+}

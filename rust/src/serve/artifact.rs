@@ -1,20 +1,33 @@
-//! The packed serving artifact: one versioned binary file holding every
-//! layer's packed codes, dequantization parameters and LoRA adapters.
+//! The packed serving artifacts: versioned binary checkpoints for the
+//! packed base and for individual adapter sets.
 //!
-//! Layout (all integers little-endian):
+//! Two current formats plus one legacy reader (all integers little-endian,
+//! every record CRC-framed):
 //!
 //! ```text
-//!   magic    "CLOQPKD1"                       8 bytes
-//!   version  u32                              currently 1
-//!   n_layers u32
-//!   repeat n_layers times:
-//!     payload_len u64
-//!     payload     payload_len bytes           (see encode_layer)
-//!     crc32       u32                         IEEE CRC-32 of payload
+//!   base artifact (v2)                adapter artifact
+//!   magic    "CLOQPKD2"   8 bytes     magic    "CLOQADP1"   8 bytes
+//!   version  u32 (= 2)                version  u32 (= 1)
+//!   n_layers u32                      id_len   u32
+//!   repeat n_layers times:            id       id_len bytes
+//!     payload_len u64                 n_layers u32
+//!     payload     (base layer)        repeat n_layers times:
+//!     crc32       u32                   payload_len u64
+//!                                       payload     (name, shape, A, B)
+//!                                       crc32       u32
 //! ```
 //!
+//! The v2 **base** artifact carries NO LoRA payloads: codes + dequant
+//! params only. Adapters ship separately in the small **adapter** artifact
+//! (`CLOQADP1`), so a new tenant deploys without re-shipping the packed
+//! base — the multi-tenant split `serve::adapters` serves from. The v1
+//! format (`CLOQPKD1`, PR 2's single-tenant layout with A/B embedded per
+//! layer) is still read by [`load_artifact_compat`], which converts it
+//! into base + one adapter set named [`V1_ADAPTER_ID`]; `save_artifact_v1`
+//! is kept so the compatibility path stays testable byte-for-byte.
+//!
 //! Each layer payload carries its own name, shapes and parameter kind, so
-//! the loader can validate structurally and — the part that matters at
+//! the loaders can validate structurally and — the part that matters at
 //! 3 a.m. — every corruption error **names the offending layer**: a
 //! truncated file, a flipped bit (CRC mismatch), or an inconsistent shape
 //! all report `layer k ('name'): …` instead of a bare parse failure.
@@ -22,16 +35,31 @@
 //! Roundtrip contract (locked by `rust/tests/golden_serve.rs`): save →
 //! load reproduces every layer's quantization state **byte-identically**
 //! (codes, scales/zeros or levels/absmax, adapters — all f64, no precision
-//! laundering) and therefore a bit-identical packed forward.
+//! laundering) and therefore a bit-identical packed forward; and loading a
+//! v1 file through the compat shim forwards bit-identically to the
+//! original embedded-adapter layers.
 
 use std::io::Write;
 use std::path::Path;
 
 use crate::linalg::Matrix;
+use crate::lowrank::LoraPair;
+use crate::serve::adapters::AdapterSet;
 use crate::serve::packed::{words_per_row, DequantParams, PackedLayer, PackedModel};
 
-pub const MAGIC: &[u8; 8] = b"CLOQPKD1";
-pub const VERSION: u32 = 1;
+/// Legacy single-tenant format (PR 2): adapters embedded per layer.
+pub const MAGIC_V1: &[u8; 8] = b"CLOQPKD1";
+pub const VERSION_V1: u32 = 1;
+/// Current base format: no LoRA payloads.
+pub const MAGIC_BASE: &[u8; 8] = b"CLOQPKD2";
+pub const VERSION_BASE: u32 = 2;
+/// Adapter artifact: one AdapterSet, shippable without the base.
+pub const MAGIC_ADAPTER: &[u8; 8] = b"CLOQADP1";
+pub const VERSION_ADAPTER: u32 = 1;
+
+/// Adapter-set id assigned when [`load_artifact_compat`] converts a v1
+/// artifact's embedded adapters.
+pub const V1_ADAPTER_ID: &str = "v1";
 
 const KIND_GRID: u8 = 0;
 const KIND_CODEBOOK: u8 = 1;
@@ -81,58 +109,135 @@ fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
     }
 }
 
-fn encode_layer(l: &PackedLayer) -> Vec<u8> {
-    let mut b = Vec::new();
-    put_u32(&mut b, l.name.len() as u32);
-    b.extend_from_slice(l.name.as_bytes());
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// The base-layer fields shared by the v1 and v2 payloads: identity,
+/// quantization geometry, packed words and dequant params. v1 additionally
+/// interleaves `rank` (after `cols`) and appends A/B — see `encode_layer_v1`.
+fn encode_base_fields(b: &mut Vec<u8>, l: &PackedLayer, rank_v1: Option<usize>) {
+    put_str(b, &l.name);
     b.push(match &l.params {
         DequantParams::Grid { .. } => KIND_GRID,
         DequantParams::Codebook { .. } => KIND_CODEBOOK,
     });
-    put_u32(&mut b, l.bits);
-    put_u64(&mut b, l.group_size as u64);
-    put_u64(&mut b, l.rows as u64);
-    put_u64(&mut b, l.cols as u64);
-    put_u64(&mut b, l.rank() as u64);
-    put_u64(&mut b, l.packed.len() as u64);
+    put_u32(b, l.bits);
+    put_u64(b, l.group_size as u64);
+    put_u64(b, l.rows as u64);
+    put_u64(b, l.cols as u64);
+    if let Some(r) = rank_v1 {
+        put_u64(b, r as u64);
+    }
+    put_u64(b, l.packed.len() as u64);
     for w in &l.packed {
-        put_u32(&mut b, *w);
+        put_u32(b, *w);
     }
     match &l.params {
         DequantParams::Grid { scales, zeros } => {
-            put_u64(&mut b, scales.rows as u64);
-            put_f64s(&mut b, &scales.data);
-            put_f64s(&mut b, &zeros.data);
+            put_u64(b, scales.rows as u64);
+            put_f64s(b, &scales.data);
+            put_f64s(b, &zeros.data);
         }
         DequantParams::Codebook { levels, absmax } => {
-            put_u32(&mut b, levels.len() as u32);
-            put_f64s(&mut b, levels);
-            put_u64(&mut b, absmax.rows as u64);
-            put_f64s(&mut b, &absmax.data);
+            put_u32(b, levels.len() as u32);
+            put_f64s(b, levels);
+            put_u64(b, absmax.rows as u64);
+            put_f64s(b, &absmax.data);
         }
     }
-    put_f64s(&mut b, &l.a.data);
-    put_f64s(&mut b, &l.b.data);
+}
+
+fn encode_layer_base(l: &PackedLayer) -> Vec<u8> {
+    let mut b = Vec::new();
+    encode_base_fields(&mut b, l, None);
     b
 }
 
-/// Save `model` as one packed artifact file.
-pub fn save_artifact(model: &PackedModel, path: &Path) -> anyhow::Result<()> {
+/// v1 layout (PR 2, byte-for-byte): base fields with `rank` after `cols`,
+/// then A and B row-major f64.
+fn encode_layer_v1(l: &PackedLayer, pair: &LoraPair) -> Vec<u8> {
+    let mut b = Vec::new();
+    encode_base_fields(&mut b, l, Some(pair.rank()));
+    put_f64s(&mut b, &pair.a.data);
+    put_f64s(&mut b, &pair.b.data);
+    b
+}
+
+fn encode_layer_adapter(name: &str, pair: &LoraPair) -> Vec<u8> {
+    let mut b = Vec::new();
+    put_str(&mut b, name);
+    put_u64(&mut b, pair.a.rows as u64);
+    put_u64(&mut b, pair.b.rows as u64);
+    put_u64(&mut b, pair.rank() as u64);
+    put_f64s(&mut b, &pair.a.data);
+    put_f64s(&mut b, &pair.b.data);
+    b
+}
+
+fn write_file(path: &Path, header: &[u8], payloads: Vec<Vec<u8>>) -> anyhow::Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&(model.layers.len() as u32).to_le_bytes())?;
-    for l in &model.layers {
-        let payload = encode_layer(l);
+    f.write_all(header)?;
+    for payload in payloads {
         f.write_all(&(payload.len() as u64).to_le_bytes())?;
         f.write_all(&payload)?;
         f.write_all(&crc32(&payload).to_le_bytes())?;
     }
     f.flush()?;
     Ok(())
+}
+
+/// Save the packed BASE (v2, `CLOQPKD2`): codes + dequant params, no LoRA.
+pub fn save_base_artifact(model: &PackedModel, path: &Path) -> anyhow::Result<()> {
+    let mut header = Vec::new();
+    header.extend_from_slice(MAGIC_BASE);
+    header.extend_from_slice(&VERSION_BASE.to_le_bytes());
+    header.extend_from_slice(&(model.layers.len() as u32).to_le_bytes());
+    write_file(path, &header, model.layers.iter().map(encode_layer_base).collect())
+}
+
+/// Save one adapter set (`CLOQADP1`) — the small per-tenant file that ships
+/// without re-shipping the packed base.
+pub fn save_adapter_artifact(set: &AdapterSet, path: &Path) -> anyhow::Result<()> {
+    let mut header = Vec::new();
+    header.extend_from_slice(MAGIC_ADAPTER);
+    header.extend_from_slice(&VERSION_ADAPTER.to_le_bytes());
+    put_str(&mut header, set.id());
+    header.extend_from_slice(&(set.len() as u32).to_le_bytes());
+    let payloads = set.entries().map(|(n, p)| encode_layer_adapter(n, p)).collect();
+    write_file(path, &header, payloads)
+}
+
+/// Save in the LEGACY v1 single-tenant layout (`CLOQPKD1`): every layer
+/// embeds its adapter from `set`, which must cover the whole model. Kept so
+/// the v1 → v2 compatibility path stays testable byte-for-byte; new code
+/// should write base + adapter artifacts instead.
+pub fn save_artifact_v1(
+    model: &PackedModel,
+    set: &AdapterSet,
+    path: &Path,
+) -> anyhow::Result<()> {
+    let mut payloads = Vec::with_capacity(model.layers.len());
+    for l in &model.layers {
+        let pair = set.get(&l.name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "v1 artifact embeds one adapter per layer, but set '{}' has none for '{}'",
+                set.id(),
+                l.name
+            )
+        })?;
+        l.check_adapter(pair)?;
+        payloads.push(encode_layer_v1(l, pair));
+    }
+    let mut header = Vec::new();
+    header.extend_from_slice(MAGIC_V1);
+    header.extend_from_slice(&VERSION_V1.to_le_bytes());
+    header.extend_from_slice(&(model.layers.len() as u32).to_le_bytes());
+    write_file(path, &header, payloads)
 }
 
 // ---- decoding ----
@@ -182,6 +287,12 @@ impl<'a> Rd<'a> {
         Ok(b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
+    fn str(&mut self, what: &str) -> anyhow::Result<String> {
+        let len = self.u32(&format!("{what} length"))? as usize;
+        String::from_utf8(self.bytes(len, what)?.to_vec())
+            .map_err(|e| anyhow::anyhow!("{what} is not UTF-8: {e}"))
+    }
+
     fn remaining(&self) -> usize {
         self.buf.len() - self.off
     }
@@ -191,21 +302,14 @@ impl<'a> Rd<'a> {
 /// where the payload itself is untrustworthy.
 fn peek_name(payload: &[u8]) -> String {
     let mut rd = Rd::new(payload);
-    if let Ok(len) = rd.u32("name length") {
-        if let Ok(bytes) = rd.bytes(len as usize, "name") {
-            if let Ok(s) = std::str::from_utf8(bytes) {
-                return s.to_string();
-            }
-        }
-    }
-    "<unreadable>".to_string()
+    rd.str("name").unwrap_or_else(|_| "<unreadable>".to_string())
 }
 
-fn decode_layer(payload: &[u8]) -> anyhow::Result<PackedLayer> {
-    let mut rd = Rd::new(payload);
-    let name_len = rd.u32("name length")? as usize;
-    let name = String::from_utf8(rd.bytes(name_len, "name")?.to_vec())
-        .map_err(|e| anyhow::anyhow!("layer name is not UTF-8: {e}"))?;
+/// Decode the base fields shared by v1 and v2 payloads. `v1` controls
+/// whether the legacy interleaved `rank` field is read (returned as 0 for
+/// v2). Leaves `rd` positioned after the dequant params.
+fn decode_base_fields(rd: &mut Rd, v1: bool) -> anyhow::Result<(PackedLayer, usize)> {
+    let name = rd.str("layer name")?;
     let kind = rd.bytes(1, "param kind")?[0];
     let bits = rd.u32("bits")?;
     anyhow::ensure!((1..=8).contains(&bits), "'{name}': bit width {bits} outside 1..=8");
@@ -214,7 +318,7 @@ fn decode_layer(payload: &[u8]) -> anyhow::Result<PackedLayer> {
     let rows = rd.u64("rows")? as usize;
     let cols = rd.u64("cols")? as usize;
     anyhow::ensure!(rows >= 1 && cols >= 1, "'{name}': degenerate shape {rows}x{cols}");
-    let rank = rd.u64("rank")? as usize;
+    let rank = if v1 { rd.u64("rank")? as usize } else { 0 };
     let n_words = rd.u64("packed word count")? as usize;
     // Checked arithmetic throughout: size fields come from untrusted bytes,
     // and a wrapped multiplication must become a named error, not a panic.
@@ -226,13 +330,14 @@ fn decode_layer(payload: &[u8]) -> anyhow::Result<PackedLayer> {
         "'{name}': {n_words} packed words, but {rows}x{cols} at {bits} bits needs {expect_words}"
     );
     anyhow::ensure!(
-        n_words <= payload.len() / 4,
+        n_words <= rd.remaining() / 4,
         "'{name}': {n_words} packed words exceed the payload"
     );
     let wbytes = rd.bytes(n_words * 4, "packed words")?;
     let packed: Vec<u32> =
         wbytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
     let num_groups = rows.div_ceil(group_size);
+    let cap = rd.remaining() / 8; // untrusted-count allocations bounded by the bytes present
     let params = match kind {
         KIND_GRID => {
             let sg = rd.u64("scale group count")? as usize;
@@ -243,7 +348,7 @@ fn decode_layer(payload: &[u8]) -> anyhow::Result<PackedLayer> {
             );
             let sn = sg
                 .checked_mul(cols)
-                .filter(|&v| v <= payload.len() / 8)
+                .filter(|&v| v <= cap)
                 .ok_or_else(|| anyhow::anyhow!("'{name}': {sg}x{cols} scales exceed the payload"))?;
             let scales = Matrix::from_vec(sg, cols, rd.f64s(sn, "scales")?);
             let zeros = Matrix::from_vec(sg, cols, rd.f64s(sn, "zeros")?);
@@ -264,16 +369,63 @@ fn decode_layer(payload: &[u8]) -> anyhow::Result<PackedLayer> {
             );
             let an = ag
                 .checked_mul(cols)
-                .filter(|&v| v <= payload.len() / 8)
+                .filter(|&v| v <= cap)
                 .ok_or_else(|| anyhow::anyhow!("'{name}': {ag}x{cols} absmax exceed the payload"))?;
             let absmax = Matrix::from_vec(ag, cols, rd.f64s(an, "absmax")?);
             DequantParams::Codebook { levels, absmax }
         }
         other => anyhow::bail!("'{name}': unknown param kind {other}"),
     };
+    Ok((PackedLayer { name, rows, cols, bits, group_size, packed, params }, rank))
+}
+
+fn decode_layer_base(payload: &[u8]) -> anyhow::Result<PackedLayer> {
+    let mut rd = Rd::new(payload);
+    let (layer, _) = decode_base_fields(&mut rd, false)?;
+    anyhow::ensure!(
+        rd.remaining() == 0,
+        "'{}': {} trailing bytes after dequant params",
+        layer.name,
+        rd.remaining()
+    );
+    Ok(layer)
+}
+
+fn decode_layer_v1(payload: &[u8]) -> anyhow::Result<(PackedLayer, LoraPair)> {
+    let mut rd = Rd::new(payload);
+    let (layer, rank) = decode_base_fields(&mut rd, true)?;
+    let name = layer.name.clone();
+    let cap = rd.remaining() / 8;
     let numel = |d: usize, what: &str| {
         d.checked_mul(rank)
-            .filter(|&v| v <= payload.len() / 8)
+            .filter(|&v| v <= cap)
+            .ok_or_else(|| anyhow::anyhow!("'{name}': {what} of {d}x{rank} exceeds the payload"))
+    };
+    let na = numel(layer.rows, "adapter A")?;
+    let a = Matrix::from_vec(layer.rows, rank, rd.f64s(na, "adapter A")?);
+    let nb = numel(layer.cols, "adapter B")?;
+    let b = Matrix::from_vec(layer.cols, rank, rd.f64s(nb, "adapter B")?);
+    anyhow::ensure!(
+        rd.remaining() == 0,
+        "'{name}': {} trailing bytes after adapter B",
+        rd.remaining()
+    );
+    Ok((layer, LoraPair::new(a, b)))
+}
+
+fn decode_layer_adapter(payload: &[u8]) -> anyhow::Result<(String, LoraPair)> {
+    let mut rd = Rd::new(payload);
+    let name = rd.str("layer name")?;
+    let rows = rd.u64("rows")? as usize;
+    let cols = rd.u64("cols")? as usize;
+    let rank = rd.u64("rank")? as usize;
+    anyhow::ensure!(rows >= 1 && cols >= 1, "'{name}': degenerate shape {rows}x{cols}");
+    // Bound untrusted counts by the bytes actually REMAINING (the header
+    // is already consumed), matching the sibling decoders.
+    let cap = rd.remaining() / 8;
+    let numel = |d: usize, what: &str| {
+        d.checked_mul(rank)
+            .filter(|&v| v <= cap)
             .ok_or_else(|| anyhow::anyhow!("'{name}': {what} of {d}x{rank} exceeds the payload"))
     };
     let a = Matrix::from_vec(rows, rank, rd.f64s(numel(rows, "adapter A")?, "adapter A")?);
@@ -283,68 +435,198 @@ fn decode_layer(payload: &[u8]) -> anyhow::Result<PackedLayer> {
         "'{name}': {} trailing bytes after adapter B",
         rd.remaining()
     );
-    Ok(PackedLayer { name, rows, cols, bits, group_size, packed, params, a, b })
+    Ok((name, LoraPair::new(a, b)))
 }
 
-/// Load a packed artifact, validating magic, version, per-layer checksums
-/// and structural consistency. Every failure names the offending layer.
-pub fn load_artifact(path: &Path) -> anyhow::Result<PackedModel> {
-    let bytes = std::fs::read(path)
-        .map_err(|e| anyhow::anyhow!("cannot read artifact {}: {e}", path.display()))?;
-    let ctx = |msg: String| anyhow::anyhow!("artifact {}: {msg}", path.display());
-    let mut rd = Rd::new(&bytes);
-    let magic = rd.bytes(8, "magic").map_err(|e| ctx(format!("{e}")))?;
-    if magic != MAGIC {
-        return Err(ctx(format!(
-            "bad magic {:02x?} (expected {:02x?} — not a packed serving artifact)",
-            magic, MAGIC
+/// Read one CRC-framed record: length, payload, checksum. Every failure is
+/// wrapped with `lctx` so it names the layer index (and, on a checksum
+/// mismatch, the best-effort layer name).
+fn read_record<'a>(
+    rd: &mut Rd<'a>,
+    lctx: &impl Fn(String) -> anyhow::Error,
+) -> anyhow::Result<&'a [u8]> {
+    let len = rd
+        .u64("payload length")
+        .map_err(|e| lctx(format!("{e} — file truncated mid-header")))? as usize;
+    let payload = rd
+        .bytes(len, "payload")
+        .map_err(|e| lctx(format!("{e} — file truncated mid-layer")))?;
+    let stored_crc = rd
+        .u32("checksum")
+        .map_err(|e| lctx(format!("{e} — file truncated before checksum")))?;
+    let computed = crc32(payload);
+    if computed != stored_crc {
+        return Err(lctx(format!(
+            "('{}') checksum mismatch: stored {stored_crc:08x}, computed {computed:08x} — \
+             layer bytes are corrupted",
+            peek_name(payload)
         )));
     }
-    let version = rd.u32("version").map_err(|e| ctx(format!("{e}")))?;
-    if version != VERSION {
-        return Err(ctx(format!("unsupported version {version} (this build reads {VERSION})")));
+    Ok(payload)
+}
+
+struct FileCtx {
+    path: String,
+}
+
+impl FileCtx {
+    fn new(path: &Path) -> FileCtx {
+        FileCtx { path: path.display().to_string() }
     }
-    let n_layers = rd.u32("layer count").map_err(|e| ctx(format!("{e}")))? as usize;
+
+    fn err(&self, msg: String) -> anyhow::Error {
+        anyhow::anyhow!("artifact {}: {msg}", self.path)
+    }
+}
+
+/// Read and validate magic + version; returns the parsed version's magic.
+fn read_header<'a>(
+    rd: &mut Rd<'a>,
+    ctx: &FileCtx,
+    accept: &[(&'static [u8; 8], u32)],
+) -> anyhow::Result<&'static [u8; 8]> {
+    let magic = rd.bytes(8, "magic").map_err(|e| ctx.err(format!("{e}")))?;
+    let found = accept.iter().find(|(m, _)| magic == &m[..]);
+    let &(m, want_version) = found.ok_or_else(|| {
+        ctx.err(format!(
+            "bad magic {:02x?} (expected one of {:?} — not a matching serving artifact)",
+            magic,
+            accept
+                .iter()
+                .map(|(m, _)| String::from_utf8_lossy(&m[..]).into_owned())
+                .collect::<Vec<_>>()
+        ))
+    })?;
+    let version = rd.u32("version").map_err(|e| ctx.err(format!("{e}")))?;
+    if version != want_version {
+        return Err(ctx.err(format!(
+            "unsupported version {version} (this build reads {want_version} for {})",
+            String::from_utf8_lossy(&m[..])
+        )));
+    }
+    Ok(m)
+}
+
+fn read_layer_records<'a>(
+    rd: &mut Rd<'a>,
+    ctx: &FileCtx,
+) -> anyhow::Result<Vec<(usize, usize, &'a [u8])>> {
+    let n_layers = rd.u32("layer count").map_err(|e| ctx.err(format!("{e}")))? as usize;
     // Untrusted count: cap the reservation by what the remaining bytes could
     // possibly hold (≥ 12 bytes per record: length + checksum), so a corrupt
     // header cannot trigger a huge allocation before validation runs.
-    let mut layers = Vec::with_capacity(n_layers.min(rd.remaining() / 12));
+    let mut records = Vec::with_capacity(n_layers.min(rd.remaining() / 12));
     for idx in 0..n_layers {
-        let lctx = |msg: String| ctx(format!("layer {idx}/{n_layers}: {msg}"));
-        let len = rd
-            .u64("payload length")
-            .map_err(|e| lctx(format!("{e} — file truncated mid-header")))? as usize;
-        let payload = rd
-            .bytes(len, "payload")
-            .map_err(|e| lctx(format!("{e} — file truncated mid-layer")))?;
-        let stored_crc = rd
-            .u32("checksum")
-            .map_err(|e| lctx(format!("{e} — file truncated before checksum")))?;
-        let computed = crc32(payload);
-        if computed != stored_crc {
-            return Err(lctx(format!(
-                "('{}') checksum mismatch: stored {stored_crc:08x}, computed {computed:08x} — \
-                 layer bytes are corrupted",
-                peek_name(payload)
-            )));
-        }
-        let layer = decode_layer(payload).map_err(|e| lctx(format!("{e}")))?;
-        if let Some(prev) = layers.iter().position(|l: &PackedLayer| l.name == layer.name) {
-            return Err(lctx(format!(
-                "duplicate layer name '{}' (also layer {prev}) — name-addressed serving \
-                 would route requests ambiguously",
-                layer.name
-            )));
-        }
-        layers.push(layer);
+        let lctx = |msg: String| ctx.err(format!("layer {idx}/{n_layers}: {msg}"));
+        records.push((idx, n_layers, read_record(rd, &lctx)?));
     }
     anyhow::ensure!(
         rd.remaining() == 0,
         "artifact {}: {} trailing bytes after the last layer",
-        path.display(),
+        ctx.path,
         rd.remaining()
     );
+    Ok(records)
+}
+
+fn ensure_unique(names: &[String], ctx: &FileCtx) -> anyhow::Result<()> {
+    for (i, n) in names.iter().enumerate() {
+        if let Some(prev) = names[..i].iter().position(|p| p == n) {
+            return Err(ctx.err(format!(
+                "layer {i}/{}: duplicate layer name '{n}' (also layer {prev}) — \
+                 name-addressed serving would route requests ambiguously",
+                names.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Load a v2 BASE artifact. v1 files are refused with a pointer to the
+/// compat loader (they carry adapters this function would silently drop).
+pub fn load_base_artifact(path: &Path) -> anyhow::Result<PackedModel> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("cannot read artifact {}: {e}", path.display()))?;
+    let ctx = FileCtx::new(path);
+    let mut rd = Rd::new(&bytes);
+    if bytes.len() >= 8 && &bytes[..8] == MAGIC_V1 {
+        return Err(ctx.err(
+            "this is a v1 (CLOQPKD1) single-tenant artifact with embedded adapters; \
+             load it with load_artifact_compat, which converts it to base + one \
+             adapter set"
+                .to_string(),
+        ));
+    }
+    let _ = read_header(&mut rd, &ctx, &[(MAGIC_BASE, VERSION_BASE)])?;
+    let mut layers = Vec::new();
+    for (idx, n_layers, payload) in read_layer_records(&mut rd, &ctx)? {
+        let layer = decode_layer_base(payload)
+            .map_err(|e| ctx.err(format!("layer {idx}/{n_layers}: {e}")))?;
+        layers.push(layer);
+    }
+    let names: Vec<String> = layers.iter().map(|l| l.name.clone()).collect();
+    ensure_unique(&names, &ctx)?;
     Ok(PackedModel { layers })
+}
+
+/// Load one adapter artifact (`CLOQADP1`).
+pub fn load_adapter_artifact(path: &Path) -> anyhow::Result<AdapterSet> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("cannot read artifact {}: {e}", path.display()))?;
+    let ctx = FileCtx::new(path);
+    let mut rd = Rd::new(&bytes);
+    let _ = read_header(&mut rd, &ctx, &[(MAGIC_ADAPTER, VERSION_ADAPTER)])?;
+    let id = rd.str("adapter id").map_err(|e| ctx.err(format!("{e}")))?;
+    let mut set = AdapterSet::new(&id);
+    for (idx, n_layers, payload) in read_layer_records(&mut rd, &ctx)? {
+        let (name, pair) = decode_layer_adapter(payload)
+            .map_err(|e| ctx.err(format!("layer {idx}/{n_layers}: {e}")))?;
+        set.insert(&name, pair)
+            .map_err(|e| ctx.err(format!("layer {idx}/{n_layers}: {e}")))?;
+    }
+    Ok(set)
+}
+
+/// Load EITHER format a served model can start from:
+///
+/// * a v2 base artifact → `(model, None)` — adapters arrive separately via
+///   [`load_adapter_artifact`];
+/// * a legacy v1 artifact → `(model, Some(set))` — the embedded per-layer
+///   adapters are split out into one [`AdapterSet`] named
+///   [`V1_ADAPTER_ID`], ready for `ServeEngine::register_adapter`. The
+///   conversion is value-exact (same f64 bits), so forwards through the
+///   converted pair are bit-identical to the v1 embedded layout.
+pub fn load_artifact_compat(path: &Path) -> anyhow::Result<(PackedModel, Option<AdapterSet>)> {
+    let bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("cannot read artifact {}: {e}", path.display()))?;
+    let ctx = FileCtx::new(path);
+    let mut rd = Rd::new(&bytes);
+    let magic =
+        read_header(&mut rd, &ctx, &[(MAGIC_BASE, VERSION_BASE), (MAGIC_V1, VERSION_V1)])?;
+    let v1 = magic == MAGIC_V1;
+    let mut layers = Vec::new();
+    let mut pairs = Vec::new();
+    for (idx, n_layers, payload) in read_layer_records(&mut rd, &ctx)? {
+        let lerr = |e: anyhow::Error| ctx.err(format!("layer {idx}/{n_layers}: {e}"));
+        if v1 {
+            let (layer, pair) = decode_layer_v1(payload).map_err(lerr)?;
+            pairs.push((layer.name.clone(), pair));
+            layers.push(layer);
+        } else {
+            layers.push(decode_layer_base(payload).map_err(lerr)?);
+        }
+    }
+    let names: Vec<String> = layers.iter().map(|l| l.name.clone()).collect();
+    ensure_unique(&names, &ctx)?;
+    let set = if v1 {
+        Some(
+            AdapterSet::from_pairs(V1_ADAPTER_ID, pairs)
+                .map_err(|e| ctx.err(format!("{e}")))?,
+        )
+    } else {
+        None
+    };
+    Ok((PackedModel { layers }, set))
 }
 
 #[cfg(test)]
@@ -364,40 +646,43 @@ mod tests {
         std::env::temp_dir().join(format!("cloq_serve_{tag}_{}", std::process::id()))
     }
 
-    fn small_model(seed: u64) -> PackedModel {
+    fn small_model(seed: u64) -> (PackedModel, AdapterSet) {
         let mut rng = Rng::new(seed);
         let w1 = Matrix::randn(20, 9, 0.3, &mut rng);
         let w2 = Matrix::randn(16, 5, 0.3, &mut rng);
-        let l1 = PackedLayer::from_state(
-            "blk0.wq",
-            &QuantState::Int(quantize_rtn(&w1, 3, 8)),
-            &Matrix::randn(20, 2, 0.1, &mut rng),
-            &Matrix::randn(9, 2, 0.1, &mut rng),
+        let l1 = PackedLayer::from_state("blk0.wq", &QuantState::Int(quantize_rtn(&w1, 3, 8)))
+            .unwrap();
+        let p1 = LoraPair::new(
+            Matrix::randn(20, 2, 0.1, &mut rng),
+            Matrix::randn(9, 2, 0.1, &mut rng),
+        );
+        let l2 = PackedLayer::from_state("blk0.wo", &QuantState::Nf(quantize_nf(&w2, 4, 8)))
+            .unwrap();
+        let p2 = LoraPair::new(
+            Matrix::randn(16, 2, 0.1, &mut rng),
+            Matrix::randn(5, 2, 0.1, &mut rng),
+        );
+        let set = AdapterSet::from_pairs(
+            "tenant",
+            vec![("blk0.wq".to_string(), p1), ("blk0.wo".to_string(), p2)],
         )
         .unwrap();
-        let l2 = PackedLayer::from_state(
-            "blk0.wo",
-            &QuantState::Nf(quantize_nf(&w2, 4, 8)),
-            &Matrix::randn(16, 2, 0.1, &mut rng),
-            &Matrix::randn(5, 2, 0.1, &mut rng),
-        )
-        .unwrap();
-        PackedModel::new(vec![l1, l2])
+        (PackedModel::new(vec![l1, l2]), set)
     }
 
     #[test]
-    fn roundtrip_preserves_forward_bits() {
+    fn base_roundtrip_preserves_forward_bits() {
         let dir = tmp("rt");
-        let model = small_model(300);
-        let path = dir.join("model.cloqpkd");
-        save_artifact(&model, &path).unwrap();
-        let loaded = load_artifact(&path).unwrap();
+        let (model, _) = small_model(300);
+        let path = dir.join("model.cloqpkd2");
+        save_base_artifact(&model, &path).unwrap();
+        let loaded = load_base_artifact(&path).unwrap();
         let mut rng = Rng::new(301);
         for (a, b) in model.layers.iter().zip(&loaded.layers) {
             assert_eq!(a.name, b.name);
             assert_eq!(a.packed, b.packed);
             let x = rng.gauss_vec(a.rows);
-            let (ya, yb) = (a.forward(&x), b.forward(&x));
+            let (ya, yb) = (a.forward(&x, None), b.forward(&x, None));
             for (u, v) in ya.iter().zip(&yb) {
                 assert_eq!(u.to_bits(), v.to_bits(), "layer {}", a.name);
             }
@@ -406,18 +691,41 @@ mod tests {
     }
 
     #[test]
+    fn adapter_roundtrip_is_exact() {
+        let dir = tmp("adp");
+        let (_, set) = small_model(305);
+        let path = dir.join("tenant.cloqadp");
+        save_adapter_artifact(&set, &path).unwrap();
+        let loaded = load_adapter_artifact(&path).unwrap();
+        assert_eq!(loaded.id(), "tenant");
+        assert_eq!(loaded.len(), set.len());
+        for (name, pair) in set.entries() {
+            let got = loaded.get(name).unwrap();
+            assert!(
+                pair.a.data.iter().map(|v| v.to_bits()).eq(got.a.data.iter().map(|v| v.to_bits())),
+                "{name}: A"
+            );
+            assert!(
+                pair.b.data.iter().map(|v| v.to_bits()).eq(got.b.data.iter().map(|v| v.to_bits())),
+                "{name}: B"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn corruption_names_the_layer() {
         let dir = tmp("bad");
-        let model = small_model(302);
-        let path = dir.join("model.cloqpkd");
-        save_artifact(&model, &path).unwrap();
+        let (model, _) = small_model(302);
+        let path = dir.join("model.cloqpkd2");
+        save_base_artifact(&model, &path).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         // Flip one bit deep inside the SECOND layer's payload.
         let n = bytes.len();
         bytes[n - 40] ^= 0x10;
-        let bad = dir.join("flipped.cloqpkd");
+        let bad = dir.join("flipped.cloqpkd2");
         std::fs::write(&bad, &bytes).unwrap();
-        let msg = format!("{}", load_artifact(&bad).unwrap_err());
+        let msg = format!("{}", load_base_artifact(&bad).unwrap_err());
         assert!(msg.contains("layer 1/2"), "{msg}");
         assert!(msg.contains("checksum mismatch"), "{msg}");
         assert!(msg.contains("blk0.wo"), "error should name the layer: {msg}");
@@ -430,18 +738,29 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("junk.bin");
         std::fs::write(&p, b"NOTCLOQ!rest").unwrap();
-        let msg = format!("{}", load_artifact(&p).unwrap_err());
+        let msg = format!("{}", load_base_artifact(&p).unwrap_err());
         assert!(msg.contains("bad magic"), "{msg}");
 
-        let model = small_model(303);
-        let good = dir.join("good.cloqpkd");
-        save_artifact(&model, &good).unwrap();
+        let (model, _) = small_model(303);
+        let good = dir.join("good.cloqpkd2");
+        save_base_artifact(&model, &good).unwrap();
         let mut bytes = std::fs::read(&good).unwrap();
         bytes[8] = 99; // version field
-        let vbad = dir.join("vbad.cloqpkd");
+        let vbad = dir.join("vbad.cloqpkd2");
         std::fs::write(&vbad, &bytes).unwrap();
-        let msg = format!("{}", load_artifact(&vbad).unwrap_err());
+        let msg = format!("{}", load_base_artifact(&vbad).unwrap_err());
         assert!(msg.contains("unsupported version 99"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v1_files_are_refused_by_the_base_loader_with_a_pointer() {
+        let dir = tmp("v1ptr");
+        let (model, set) = small_model(304);
+        let path = dir.join("legacy.cloqpkd");
+        save_artifact_v1(&model, &set, &path).unwrap();
+        let msg = format!("{}", load_base_artifact(&path).unwrap_err());
+        assert!(msg.contains("load_artifact_compat"), "{msg}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

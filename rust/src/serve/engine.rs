@@ -1,21 +1,28 @@
-//! The serving front-end: admits concurrent forward requests, coalesces
-//! them into per-layer micro-batches, and executes the batches on a
-//! persistent [`WorkerPool`].
+//! The serving front-end: admits concurrent forward requests (each naming
+//! a layer and, optionally, an adapter), coalesces them into per-layer
+//! micro-batches, and executes the batches on a persistent [`WorkerPool`].
 //!
 //! Shape of the pipeline:
 //!
 //! ```text
 //!   submit() ──→ pending FIFO ──→ batcher thread ──→ WorkerPool job
-//!                 (Mutex+Condvar)  (drains ≤ max_batch   (forward_batch,
-//!                                   same-layer requests)  replies per req)
+//!                 (Mutex+Condvar)  (drains ≤ max_batch   (grouped batch
+//!                                   same-layer requests)  kernel, replies
+//!                                                         per request)
 //! ```
 //!
 //! The batcher scans the FIFO head's layer and pulls every queued request
 //! for that layer (up to `max_batch`), preserving the relative order of
 //! the rest — arrival order stays fair across layers while the kernel's
-//! row-reuse amortization (`PackedLayer::forward_batch`) is harvested
-//! whenever requests pile up. Because the batched kernel is bit-identical
-//! to serial calls (parity contract in `serve::packed`), coalescing is
+//! row-reuse amortization (`PackedLayer::forward_batch_grouped`) is
+//! harvested whenever requests pile up. **Adapter multiplexing**: each
+//! request resolves its adapter to a pinned [`AdapterHandle`] at admission
+//! (one version for its whole lifetime — a hot-swap can never mix old and
+//! new weights in one response); the batch executor orders the micro-batch
+//! so same-version requests are adjacent and runs the shared base pass
+//! once, with one LoRA skinny product per adapter group. Because the
+//! grouped kernel is bit-identical to serial single-adapter calls (parity
+//! contract in `serve::packed`), coalescing — same-adapter or mixed — is
 //! purely a throughput decision: **batch composition can never change a
 //! response's numbers**.
 //!
@@ -28,14 +35,17 @@
 //! bounded by the worker count.
 //!
 //! Every [`Response`] reports its queue wait, its micro-batch's kernel
-//! time and the batch size; [`EngineStats`] aggregates them for the bench
-//! harness (`BENCH_serve.json`) and the demo.
+//! time, the batch size and the adapter group count; [`EngineStats`]
+//! aggregates them for the bench harness (`BENCH_serve.json` /
+//! `BENCH_adapters.json`) and the demo.
 
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::linalg::Matrix;
+use crate::lowrank::LoraPair;
+use crate::serve::adapters::{AdapterHandle, AdapterRegistry, AdapterSet, RegisterOutcome};
 use crate::serve::packed::PackedModel;
 use crate::util::threadpool::WorkerPool;
 
@@ -49,11 +59,35 @@ pub struct EngineConfig {
     /// already pending are rejected with an "overloaded" error instead of
     /// growing the FIFO (and its buffered input vectors) without bound.
     pub max_pending: usize,
+    /// Byte budget for the adapter registry's LRU cache (pinned adapters
+    /// are exempt — see `AdapterRegistry::new`).
+    pub adapter_budget_bytes: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { workers: 2, max_batch: 16, max_pending: 4096 }
+        Self { workers: 2, max_batch: 16, max_pending: 4096, adapter_budget_bytes: usize::MAX }
+    }
+}
+
+/// One forward request: which layer, which adapter (None = base only), and
+/// the input activation.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub layer: String,
+    pub adapter: Option<String>,
+    pub x: Vec<f64>,
+}
+
+impl Request {
+    /// Base-only request (no adapter delta).
+    pub fn base(layer: &str, x: Vec<f64>) -> Request {
+        Request { layer: layer.to_string(), adapter: None, x }
+    }
+
+    /// Request routed through the named adapter.
+    pub fn with_adapter(layer: &str, adapter: &str, x: Vec<f64>) -> Request {
+        Request { layer: layer.to_string(), adapter: Some(adapter.to_string()), x }
     }
 }
 
@@ -67,6 +101,9 @@ pub struct Response {
     pub compute_s: f64,
     /// Size of that micro-batch.
     pub batch_size: usize,
+    /// Distinct adapter groups (incl. the base-only group) in that batch —
+    /// 1 means the batch was adapter-uniform.
+    pub adapter_groups: usize,
 }
 
 /// Aggregate engine counters (snapshot via [`ServeEngine::stats`]).
@@ -80,7 +117,11 @@ pub struct EngineStats {
     pub requests: usize,
     pub batches: usize,
     pub max_batch_seen: usize,
-    /// Requests refused at admission (unknown layer, wrong width).
+    /// Micro-batches that mixed more than one adapter group (served via
+    /// the grouped kernel's per-adapter skinny products).
+    pub mixed_batches: usize,
+    /// Requests refused at admission (unknown layer, wrong width, unknown
+    /// adapter, adapter without the layer).
     pub rejected: usize,
     /// Micro-batches whose kernel panicked (the workers survive).
     pub batch_panics: usize,
@@ -124,6 +165,10 @@ impl Ticket {
 
 struct Pending {
     layer: usize,
+    /// Pinned at admission; the pin lives until the response is sent, so
+    /// eviction/unregister can never pull the weights out from under a
+    /// queued or in-flight request.
+    adapter: Option<AdapterHandle>,
     x: Vec<f64>,
     tx: mpsc::Sender<anyhow::Result<Response>>,
     t_in: Instant,
@@ -143,15 +188,18 @@ struct Shared {
     /// Name → layer index, built once so admission is O(1) instead of a
     /// per-request linear scan over layer names.
     index: std::collections::HashMap<String, usize>,
+    registry: Arc<AdapterRegistry>,
     max_batch: usize,
     max_pending: usize,
     workers: usize,
     state: Mutex<QueueState>,
     cv: Condvar,
     stats: Mutex<EngineStats>,
+    pool: Arc<WorkerPool>,
 }
 
-/// The serving engine: batching front-end over a [`PackedModel`].
+/// The serving engine: adapter-multiplexed batching front-end over ONE
+/// packed base [`PackedModel`] and many registered [`AdapterSet`]s.
 pub struct ServeEngine {
     shared: Arc<Shared>,
     batcher: Option<std::thread::JoinHandle<()>>,
@@ -161,15 +209,16 @@ impl ServeEngine {
     pub fn new(model: PackedModel, cfg: EngineConfig) -> ServeEngine {
         let mut index = std::collections::HashMap::with_capacity(model.layers.len());
         for (i, l) in model.layers.iter().enumerate() {
-            // Unique names are a serving invariant (load_artifact enforces
-            // it on untrusted bytes; this guards hand-built models) — with
-            // duplicates, name-addressed requests would be ambiguous.
+            // Unique names are a serving invariant (the artifact loaders
+            // enforce it on untrusted bytes; this guards hand-built models)
+            // — with duplicates, name-addressed requests would be ambiguous.
             let prev = index.insert(l.name.clone(), i);
             assert!(prev.is_none(), "ServeEngine: duplicate layer name '{}'", l.name);
         }
         let shared = Arc::new(Shared {
             model: Arc::new(model),
             index,
+            registry: Arc::new(AdapterRegistry::new(cfg.adapter_budget_bytes)),
             max_batch: cfg.max_batch.max(1),
             max_pending: cfg.max_pending.max(1),
             workers: cfg.workers.max(1),
@@ -180,21 +229,50 @@ impl ServeEngine {
             }),
             cv: Condvar::new(),
             stats: Mutex::new(EngineStats::default()),
+            pool: Arc::new(WorkerPool::new(cfg.workers)),
         });
-        let pool = WorkerPool::new(cfg.workers);
         let batcher = {
             let shared = Arc::clone(&shared);
-            std::thread::spawn(move || batcher_loop(shared, pool))
+            std::thread::spawn(move || batcher_loop(shared))
         };
         ServeEngine { shared, batcher: Some(batcher) }
     }
 
-    /// Admit one forward request for layer `layer`. Invalid requests (no
-    /// such layer, wrong input length) resolve immediately with an error —
+    /// Validate `set` against the served model's shapes and register it
+    /// (hot-swapping any same-id predecessor; see the registry docs).
+    pub fn register_adapter(&self, set: AdapterSet) -> anyhow::Result<RegisterOutcome> {
+        set.check_against(&self.shared.model)?;
+        self.shared.registry.register(set)
+    }
+
+    /// Remove the adapter and DRAIN it: blocks until every request pinned
+    /// to any version of it (queued or in-flight, including versions
+    /// superseded by hot-swaps) has been answered. The pin drain alone is
+    /// the full barrier: a kernel job's weight borrows are dropped BEFORE
+    /// its riders' pins are released (`run_batch` drops the slot table,
+    /// sends the responses, then drops the handles), so once the last pin
+    /// is gone no job can still be touching the weights — and unrelated
+    /// tenants' traffic never delays the retirement (a global pool
+    /// quiescence wait here would starve under sustained load). New
+    /// submissions naming the id are rejected from the moment this is
+    /// called.
+    pub fn unregister_adapter(&self, id: &str) -> anyhow::Result<()> {
+        self.shared.registry.unregister(id)
+    }
+
+    /// The adapter registry (checkout/stats access for diagnostics and
+    /// tests; registration should go through [`ServeEngine::register_adapter`]
+    /// so shapes are validated against the served model).
+    pub fn registry(&self) -> &AdapterRegistry {
+        &self.shared.registry
+    }
+
+    /// Admit one forward request. Invalid requests (no such layer, wrong
+    /// input length, unknown adapter) resolve immediately with an error —
     /// they never occupy queue space.
-    pub fn submit(&self, layer: &str, x: Vec<f64>) -> Ticket {
+    pub fn submit(&self, layer: &str, adapter: Option<&str>, x: Vec<f64>) -> Ticket {
         let (tx, rx) = mpsc::channel();
-        match self.admit(layer, x, &tx) {
+        match self.admit(layer, adapter, x, &tx) {
             Ok(p) => {
                 let accepted = {
                     let mut st = self.shared.state.lock().unwrap();
@@ -219,12 +297,12 @@ impl ServeEngine {
     /// Admit a burst of requests under ONE queue lock: the batcher cannot
     /// observe a partially-enqueued burst, so same-layer requests in the
     /// burst are guaranteed to be coalescible (up to `max_batch`).
-    pub fn submit_all(&self, reqs: Vec<(String, Vec<f64>)>) -> Vec<Ticket> {
+    pub fn submit_all(&self, reqs: Vec<Request>) -> Vec<Ticket> {
         let mut tickets = Vec::with_capacity(reqs.len());
         let mut admitted = Vec::with_capacity(reqs.len());
-        for (layer, x) in reqs {
+        for req in reqs {
             let (tx, rx) = mpsc::channel();
-            match self.admit(&layer, x, &tx) {
+            match self.admit(&req.layer, req.adapter.as_deref(), req.x, &tx) {
                 Ok(p) => admitted.push(p),
                 Err(e) => self.reject(&tx, e),
             }
@@ -233,7 +311,8 @@ impl ServeEngine {
         let overflow = {
             let mut st = self.shared.state.lock().unwrap();
             let room = self.shared.max_pending.saturating_sub(st.pending.len());
-            let overflow = if admitted.len() > room { admitted.split_off(room) } else { Vec::new() };
+            let overflow =
+                if admitted.len() > room { admitted.split_off(room) } else { Vec::new() };
             st.pending.extend(admitted);
             overflow
         };
@@ -260,6 +339,7 @@ impl ServeEngine {
     fn admit(
         &self,
         layer: &str,
+        adapter: Option<&str>,
         x: Vec<f64>,
         tx: &mpsc::Sender<anyhow::Result<Response>>,
     ) -> anyhow::Result<Pending> {
@@ -274,15 +354,31 @@ impl ServeEngine {
             "layer '{layer}': input length {} but the layer takes {rows} features",
             x.len()
         );
-        Ok(Pending { layer: idx, x, tx: tx.clone(), t_in: Instant::now() })
+        let handle = match adapter {
+            None => None,
+            Some(id) => {
+                let h = self.shared.registry.checkout(id).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "adapter '{id}' is not registered (never registered, evicted, \
+                         or unregistered)"
+                    )
+                })?;
+                anyhow::ensure!(
+                    h.set().get(layer).is_some(),
+                    "adapter '{id}' carries no delta for layer '{layer}'"
+                );
+                Some(h)
+            }
+        };
+        Ok(Pending { layer: idx, adapter: handle, x, tx: tx.clone(), t_in: Instant::now() })
     }
 
     pub fn stats(&self) -> EngineStats {
         self.shared.stats.lock().unwrap().clone()
     }
 
-    /// Stop admitting, drain every queued request, join the batcher and the
-    /// kernel workers, and return the final counters.
+    /// Stop admitting, drain every queued request, join the batcher and
+    /// quiesce the kernel workers, and return the final counters.
     pub fn shutdown(mut self) -> EngineStats {
         self.shutdown_impl(); // Drop runs it again; it is idempotent
         self.stats()
@@ -295,7 +391,10 @@ impl ServeEngine {
         }
         self.shared.cv.notify_all();
         if let Some(h) = self.batcher.take() {
-            let _ = h.join(); // batcher drains the queue, then drops the pool (which drains its jobs)
+            // The batcher drains the queue and waits for the pool to go
+            // idle, so every ticket has resolved when join returns; the
+            // workers themselves are joined when the last Shared drops.
+            let _ = h.join();
         }
     }
 }
@@ -306,7 +405,7 @@ impl Drop for ServeEngine {
     }
 }
 
-fn batcher_loop(shared: Arc<Shared>, pool: WorkerPool) {
+fn batcher_loop(shared: Arc<Shared>) {
     loop {
         let batch = {
             let mut st = shared.state.lock().unwrap();
@@ -318,7 +417,7 @@ fn batcher_loop(shared: Arc<Shared>, pool: WorkerPool) {
                 }
                 if st.pending.is_empty() && !st.open {
                     drop(st);
-                    pool.shutdown(); // drains in-flight kernel jobs first
+                    shared.pool.wait_idle(); // in-flight batches answer first
                     return;
                 }
                 st = shared.cv.wait(st).unwrap();
@@ -328,17 +427,20 @@ fn batcher_loop(shared: Arc<Shared>, pool: WorkerPool) {
         };
         let t_formed = Instant::now();
         let shared2 = Arc::clone(&shared);
-        pool.submit(move || run_batch(&shared2, batch, t_formed));
+        shared.pool.submit(move || run_batch(&shared2, batch, t_formed));
     }
 }
 
 /// Pull the FIFO head plus every same-layer request behind it (≤ cap),
-/// preserving the relative order of everything left behind. The scan is
-/// bounded: it stops at the cap OR after examining `8·cap` entries, so a
-/// deep multi-layer backlog (the saturation case the coalescing policy
-/// exists for) costs O(cap) under the queue mutex, never O(queue) —
-/// head-layer requests deeper than the scan window simply ride a later
-/// batch.
+/// whatever adapters they carry, preserving the relative order of
+/// everything left behind. Mixed-adapter batches are deliberate: the
+/// grouped kernel shares the expensive base pass across ALL riders and
+/// pays only per-group skinny products, so coalescing across adapters
+/// still wins (the penalty is measured in BENCH_adapters.json). The scan
+/// is bounded: it stops at the cap OR after examining `8·cap` entries, so
+/// a deep multi-layer backlog costs O(cap) under the queue mutex, never
+/// O(queue) — head-layer requests deeper than the scan window simply ride
+/// a later batch.
 fn take_batch(pending: &mut VecDeque<Pending>, cap: usize) -> Vec<Pending> {
     let layer = pending.front().expect("caller checked non-empty").layer;
     let scan_limit = cap.saturating_mul(8).max(1);
@@ -365,20 +467,48 @@ fn take_batch(pending: &mut VecDeque<Pending>, cap: usize) -> Vec<Pending> {
     taken
 }
 
-fn run_batch(shared: &Shared, batch: Vec<Pending>, t_formed: Instant) {
+/// Sort key making same-adapter-version requests adjacent: base-only
+/// first, then by adapter id, then by version token (two versions of one
+/// id — a hot-swap caught mid-queue — must NOT share a group).
+fn adapter_sort_key(p: &Pending) -> (u8, String, usize) {
+    match &p.adapter {
+        None => (0, String::new(), 0),
+        Some(h) => (1, h.set().id().to_string(), h.version_token()),
+    }
+}
+
+fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
     let layer = &shared.model.layers[batch[0].layer];
+    let layer_name = layer.name.as_str();
     let bs = batch.len();
+    // Same-version requests adjacent ⇒ fewest adapter groups. Stable, so
+    // arrival order survives within a group. Row placement cannot change
+    // any response's numbers (grouped-kernel parity contract).
+    batch.sort_by_cached_key(adapter_sort_key);
     let mut xs = Matrix::zeros(bs, layer.rows);
     for (k, p) in batch.iter().enumerate() {
         xs.row_mut(k).copy_from_slice(&p.x);
     }
+    // Per-row adapter slots for the grouped kernel. The pair lookups are
+    // infallible: admission checked the adapter carries this layer.
+    let slots: Vec<Option<&LoraPair>> = batch
+        .iter()
+        .map(|p| {
+            p.adapter
+                .as_ref()
+                .map(|h| h.set().get(layer_name).expect("validated at admission"))
+        })
+        .collect();
+    let groups = count_groups(&slots);
     // Contain a kernel panic to this batch: every rider gets an Err naming
     // it (not a bogus "engine dropped"), the worker survives, and the
     // in-flight slot is still released below.
     let t_exec = Instant::now();
-    let kernel =
-        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| layer.forward_batch(&xs)));
+    let kernel = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        layer.forward_batch_grouped(&xs, &slots)
+    }));
     let compute_s = t_exec.elapsed().as_secs_f64();
+    drop(slots);
 
     let mut total_queue = 0.0;
     match &kernel {
@@ -386,16 +516,20 @@ fn run_batch(shared: &Shared, batch: Vec<Pending>, t_formed: Instant) {
             for (k, p) in batch.into_iter().enumerate() {
                 let queue_s = t_formed.saturating_duration_since(p.t_in).as_secs_f64();
                 total_queue += queue_s;
-                let resp =
-                    Response { y: ys.row(k).to_vec(), queue_s, compute_s, batch_size: bs };
+                let resp = Response {
+                    y: ys.row(k).to_vec(),
+                    queue_s,
+                    compute_s,
+                    batch_size: bs,
+                    adapter_groups: groups,
+                };
                 let _ = p.tx.send(Ok(resp)); // requester may have given up; fine
             }
         }
         Err(_) => {
             for p in batch {
                 let _ = p.tx.send(Err(anyhow::anyhow!(
-                    "layer '{}': serving batch of {bs} panicked in the kernel",
-                    layer.name
+                    "layer '{layer_name}': serving batch of {bs} panicked in the kernel"
                 )));
             }
         }
@@ -407,6 +541,9 @@ fn run_batch(shared: &Shared, batch: Vec<Pending>, t_formed: Instant) {
                 stats.requests += bs;
                 stats.batches += 1;
                 stats.max_batch_seen = stats.max_batch_seen.max(bs);
+                if groups > 1 {
+                    stats.mixed_batches += 1;
+                }
                 stats.total_queue_s += total_queue;
                 stats.total_compute_s += compute_s;
             }
@@ -422,6 +559,20 @@ fn run_batch(shared: &Shared, batch: Vec<Pending>, t_formed: Instant) {
     shared.cv.notify_all(); // wake the batcher: a worker slot is free again
 }
 
+/// Number of consecutive same-adapter runs in the (sorted) slot list —
+/// the group count the kernel will execute. Uses the kernel's own
+/// identity test (`packed::same_adapter`), so this count cannot drift
+/// from the grouping `forward_batch_grouped` actually performs.
+fn count_groups(slots: &[Option<&LoraPair>]) -> usize {
+    let mut groups = 0usize;
+    for (i, &s) in slots.iter().enumerate() {
+        if i == 0 || !crate::serve::packed::same_adapter(slots[i - 1], s) {
+            groups += 1;
+        }
+    }
+    groups
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -435,31 +586,58 @@ mod tests {
         for (name, m, n) in [("wq", 24usize, 10usize), ("wo", 18, 7)] {
             let w = Matrix::randn(m, n, 0.3, &mut rng);
             let q = QuantState::Int(quantize_rtn(&w, 4, 8));
-            let a = Matrix::randn(m, 3, 0.1, &mut rng);
-            let b = Matrix::randn(n, 3, 0.1, &mut rng);
-            layers.push(PackedLayer::from_state(name, &q, &a, &b).unwrap());
+            layers.push(PackedLayer::from_state(name, &q).unwrap());
         }
         PackedModel::new(layers)
+    }
+
+    fn adapter(id: &str, model: &PackedModel, r: usize, seed: u64) -> AdapterSet {
+        let mut rng = Rng::new(seed);
+        let mut set = AdapterSet::new(id);
+        for l in &model.layers {
+            let pair = LoraPair::new(
+                Matrix::randn(l.rows, r, 0.1, &mut rng),
+                Matrix::randn(l.cols, r, 0.1, &mut rng),
+            );
+            set.insert(&l.name, pair).unwrap();
+        }
+        set
     }
 
     #[test]
     fn responses_match_direct_forward_bit_for_bit() {
         let m = model(400);
-        let direct: Vec<Vec<f64>> = {
-            let mut rng = Rng::new(401);
-            (0..10)
-                .map(|i| {
-                    let l = &m.layers[i % 2];
-                    l.forward(&rng.gauss_vec(l.rows))
-                })
-                .collect()
-        };
-        let engine = ServeEngine::new(model(400), EngineConfig { workers: 2, max_batch: 4, ..EngineConfig::default() });
+        let sets = [adapter("t0", &m, 3, 410), adapter("t1", &m, 5, 411)];
+        // Direct serial references: request i → layer i%2, adapter i%3
+        // (index 2 = base only).
+        let mut rng = Rng::new(401);
+        let direct: Vec<Vec<f64>> = (0..12)
+            .map(|i| {
+                let l = &m.layers[i % 2];
+                let x = rng.gauss_vec(l.rows);
+                let pair = match i % 3 {
+                    2 => None,
+                    k => Some(sets[k].get(&l.name).unwrap()),
+                };
+                l.forward(&x, pair)
+            })
+            .collect();
+        let engine = ServeEngine::new(
+            model(400),
+            EngineConfig { workers: 2, max_batch: 4, ..EngineConfig::default() },
+        );
+        for s in sets {
+            engine.register_adapter(s).unwrap();
+        }
         let mut rng = Rng::new(401); // same stream → same inputs
-        let reqs: Vec<(String, Vec<f64>)> = (0..10)
+        let reqs: Vec<Request> = (0..12)
             .map(|i| {
                 let l = &engine.shared.model.layers[i % 2];
-                (l.name.clone(), rng.gauss_vec(l.rows))
+                let x = rng.gauss_vec(l.rows);
+                match i % 3 {
+                    2 => Request::base(&l.name, x),
+                    k => Request::with_adapter(&l.name, &format!("t{k}"), x),
+                }
             })
             .collect();
         let tickets = engine.submit_all(reqs);
@@ -470,35 +648,102 @@ mod tests {
                 assert_eq!(u.to_bits(), v.to_bits(), "request {k}");
             }
             assert!(r.batch_size >= 1 && r.batch_size <= 4);
+            assert!(r.adapter_groups >= 1 && r.adapter_groups <= r.batch_size);
         }
         let stats = engine.shutdown();
-        assert_eq!(stats.requests, 10);
-        assert!(stats.batches < 10, "burst must coalesce: {stats:?}");
+        assert_eq!(stats.requests, 12);
+        assert!(stats.batches < 12, "burst must coalesce: {stats:?}");
         assert!(stats.max_batch_seen >= 2, "{stats:?}");
+        assert!(stats.mixed_batches >= 1, "3 tenants over 2 layers must mix: {stats:?}");
     }
 
     #[test]
     fn invalid_requests_rejected_with_actionable_errors() {
-        let engine = ServeEngine::new(model(402), EngineConfig::default());
-        let msg = format!("{}", engine.submit("nope", vec![0.0; 4]).wait().unwrap_err());
+        let m = model(402);
+        let wq_only = {
+            let mut rng = Rng::new(412);
+            let l = m.layer("wq").unwrap();
+            let mut s = AdapterSet::new("partial");
+            s.insert(
+                "wq",
+                LoraPair::new(
+                    Matrix::randn(l.rows, 2, 0.1, &mut rng),
+                    Matrix::randn(l.cols, 2, 0.1, &mut rng),
+                ),
+            )
+            .unwrap();
+            s
+        };
+        let engine = ServeEngine::new(m, EngineConfig::default());
+        engine.register_adapter(wq_only).unwrap();
+        let msg = format!("{}", engine.submit("nope", None, vec![0.0; 4]).wait().unwrap_err());
         assert!(msg.contains("no such layer 'nope'"), "{msg}");
-        let msg = format!("{}", engine.submit("wq", vec![0.0; 3]).wait().unwrap_err());
+        let msg = format!("{}", engine.submit("wq", None, vec![0.0; 3]).wait().unwrap_err());
         assert!(msg.contains("24 features"), "{msg}");
+        let msg = format!(
+            "{}",
+            engine.submit("wq", Some("ghost"), vec![0.0; 24]).wait().unwrap_err()
+        );
+        assert!(msg.contains("adapter 'ghost' is not registered"), "{msg}");
+        let msg = format!(
+            "{}",
+            engine.submit("wo", Some("partial"), vec![0.0; 18]).wait().unwrap_err()
+        );
+        assert!(msg.contains("no delta for layer 'wo'"), "{msg}");
         let stats = engine.shutdown();
-        assert_eq!(stats.rejected, 2);
+        assert_eq!(stats.rejected, 4);
         assert_eq!(stats.requests, 0);
     }
 
     #[test]
+    fn misshapen_adapter_rejected_at_registration() {
+        let m = model(403);
+        let mut bad = AdapterSet::new("bad");
+        bad.insert("wq", LoraPair::new(Matrix::zeros(24, 2), Matrix::zeros(9, 2))).unwrap();
+        let engine = ServeEngine::new(m, EngineConfig::default());
+        let msg = format!("{}", engine.register_adapter(bad).unwrap_err());
+        assert!(msg.contains("adapter 'bad'"), "{msg}");
+        assert!(msg.contains("does not fit base"), "{msg}");
+        engine.shutdown();
+    }
+
+    #[test]
     fn shutdown_drains_queued_requests() {
-        let engine = ServeEngine::new(model(403), EngineConfig { workers: 1, max_batch: 8, ..EngineConfig::default() });
-        let mut rng = Rng::new(404);
+        let engine = ServeEngine::new(
+            model(404),
+            EngineConfig { workers: 1, max_batch: 8, ..EngineConfig::default() },
+        );
+        let mut rng = Rng::new(405);
         let tickets: Vec<Ticket> =
-            (0..32).map(|_| engine.submit("wq", rng.gauss_vec(24))).collect();
+            (0..32).map(|_| engine.submit("wq", None, rng.gauss_vec(24))).collect();
         let stats = engine.shutdown(); // must answer everything first
         assert_eq!(stats.requests, 32);
         for t in tickets {
             assert!(t.wait().is_ok());
         }
+    }
+
+    #[test]
+    fn unregister_waits_for_queued_requests_then_rejects_new_ones() {
+        let m = model(406);
+        let set = adapter("ten", &m, 2, 413);
+        let engine = ServeEngine::new(
+            m,
+            EngineConfig { workers: 1, max_batch: 4, ..EngineConfig::default() },
+        );
+        engine.register_adapter(set).unwrap();
+        let mut rng = Rng::new(407);
+        let tickets: Vec<Ticket> =
+            (0..16).map(|_| engine.submit("wq", Some("ten"), rng.gauss_vec(24))).collect();
+        engine.unregister_adapter("ten").unwrap(); // blocks until all 16 answered
+        for t in tickets {
+            assert!(t.wait().is_ok(), "queued requests must be served, not dropped");
+        }
+        let msg = format!(
+            "{}",
+            engine.submit("wq", Some("ten"), rng.gauss_vec(24)).wait().unwrap_err()
+        );
+        assert!(msg.contains("not registered"), "{msg}");
+        engine.shutdown();
     }
 }

@@ -4,31 +4,53 @@
 //! After `quantize_init` produces a frozen INT base plus calibrated LoRA
 //! adapters, serving must consume that state **as quantized**: the memory
 //! win (2–8 bits/weight instead of 64) evaporates if the server
-//! re-materializes dense weights per layer. This module provides the three
-//! pieces:
+//! re-materializes dense weights per layer. And because CLoQ's output is
+//! exactly one frozen base plus a cheap per-task adapter pair, the server
+//! is **multi-tenant**: the packed base loads once, and every request
+//! routes to one of many hot-swappable adapters. This module provides the
+//! four pieces:
 //!
-//! * [`packed`] — [`PackedLayer`]/[`PackedModel`]: codes bit-packed into
-//!   u32 words plus a **fused unpack→dequant→dot forward kernel** with the
-//!   LoRA delta as two skinny products (`y = Q̂ᵀx + B(Aᵀx)`). The kernel is
-//!   bit-identical to the dense `q_deq` reference — the parity contract is
-//!   spelled out in the module docs and enforced by
-//!   `rust/tests/parity_serve.rs`.
-//! * [`artifact`] — one versioned binary checkpoint for the whole packed
-//!   model, with per-layer CRC-32 validation and corruption errors that
-//!   name the offending layer (`rust/tests/golden_serve.rs`).
+//! * [`packed`] — [`PackedLayer`]/[`PackedModel`]: the base half — codes
+//!   bit-packed into u32 words plus a **fused unpack→dequant→dot forward
+//!   kernel** that applies a caller-supplied `LoraPair` delta as two
+//!   skinny products (`y = Q̂ᵀx + B(Aᵀx)`), including a grouped batch
+//!   kernel for mixed-adapter micro-batches. Bit-identical to the dense
+//!   `q_deq` reference — the parity contract is spelled out in the module
+//!   docs and enforced by `rust/tests/parity_serve.rs`.
+//! * [`adapters`] — [`AdapterSet`]/[`AdapterRegistry`]: the tenant half —
+//!   named per-layer LoRA collections with register/unregister/hot-swap
+//!   under load, pin-counted checkouts, LRU eviction under a byte budget,
+//!   and a blocking per-adapter drain (`rust/tests/lifecycle_adapters.rs`).
+//! * [`artifact`] — versioned binary checkpoints with per-layer CRC-32
+//!   validation and corruption errors that name the offending layer
+//!   (`rust/tests/golden_serve.rs`): the v2 `CLOQPKD2` **base** artifact
+//!   (no LoRA payloads), the small `CLOQADP1` **adapter** artifact so new
+//!   tenants ship without re-shipping the base, and a v1 (`CLOQPKD1`)
+//!   compatibility reader that converts old single-tenant files into
+//!   base + one adapter set.
 //! * [`engine`] — [`ServeEngine`]: a batching front-end on the persistent
 //!   `util::threadpool::WorkerPool` that coalesces concurrent requests
-//!   into per-layer micro-batches and reports per-request latency plus
-//!   aggregate throughput counters.
+//!   into per-layer micro-batches (grouping same-adapter requests inside
+//!   each batch) and reports per-request latency plus aggregate
+//!   throughput counters.
 //!
 //! Benchmarks: `cargo bench --bench bench_serve` writes `BENCH_serve.json`
-//! (fused vs dense forward, batched vs serial throughput) — see
-//! EXPERIMENTS.md §Serve.
+//! (fused vs dense forward, batched vs serial throughput) and
+//! `cargo bench --bench bench_adapters` writes `BENCH_adapters.json`
+//! (adapter-count sweep, mixed-batch penalty, eviction churn) — see
+//! EXPERIMENTS.md §Serve and §Adapters.
 
+pub mod adapters;
 pub mod artifact;
 pub mod engine;
 pub mod packed;
 
-pub use artifact::{crc32, load_artifact, save_artifact};
-pub use engine::{EngineConfig, EngineStats, Response, ServeEngine, Ticket};
+pub use adapters::{
+    AdapterHandle, AdapterRegistry, AdapterSet, RegisterOutcome, RegistryStats,
+};
+pub use artifact::{
+    crc32, load_adapter_artifact, load_artifact_compat, load_base_artifact,
+    save_adapter_artifact, save_artifact_v1, save_base_artifact,
+};
+pub use engine::{EngineConfig, EngineStats, Request, Response, ServeEngine, Ticket};
 pub use packed::{words_per_row, DequantParams, PackedLayer, PackedModel};

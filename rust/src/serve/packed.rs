@@ -1,11 +1,15 @@
-//! Packed-weight layers and the fused unpack→dequant→dot forward kernel.
+//! Packed-weight base layers and the fused unpack→dequant→dot forward
+//! kernel.
 //!
-//! A [`PackedLayer`] holds a linear layer the way the serving path stores
-//! it: `b`-bit codes packed little-endian into `u32` words (the
+//! A [`PackedLayer`] holds the **base half** of a served linear layer:
+//! `b`-bit codes packed little-endian into `u32` words (the
 //! `quant::packing` layout, row-aligned so row `i` starts at word
-//! `i·words_per_row`), the per-group dequantization parameters (INT grid
-//! scales/zeros, or the NF codebook levels + absmax), and the LoRA factors
-//! `A` (m×r) and `B` (n×r). The forward computes
+//! `i·words_per_row`) plus the per-group dequantization parameters (INT
+//! grid scales/zeros, or the NF codebook levels + absmax). The LoRA delta
+//! is NOT stored here: it lives in a [`LoraPair`] (one per layer per
+//! tenant, collected into `serve::adapters::AdapterSet`s) and is passed
+//! into the forward calls, so one packed base serves many hot-swappable
+//! adapters. The forward computes
 //!
 //! ```text
 //!   y = Q̂ᵀx + B·(Aᵀx)        (layer orientation Y = X·W, W ∈ ℝ^{m×n})
@@ -24,14 +28,18 @@
 //! factored LoRA product, for every bit width, group size and shape. The
 //! batched forward reuses each dequantized row across the micro-batch
 //! without changing any per-element op, so it is bit-identical to serial
-//! request-at-a-time calls. Against a fully *dense effective weight*
-//! (`q_deq + A·Bᵀ` materialized, different accumulation order) agreement
-//! is to floating-point tolerance only — that comparison is also in the
-//! parity suite, with the tolerance stated there.
+//! request-at-a-time calls — and the **grouped** batched forward
+//! ([`PackedLayer::forward_batch_grouped`]) extends that to mixed-adapter
+//! micro-batches: the base pass is shared across the whole batch while the
+//! LoRA skinny products run per adapter group, so every row is still
+//! bit-identical to a serial single-adapter call. Against a fully *dense
+//! effective weight* (`q_deq + A·Bᵀ` materialized, different accumulation
+//! order) agreement is to floating-point tolerance only — that comparison
+//! is also in the parity suite, with the tolerance stated there.
 
 use crate::linalg::blas::{axpy, dot, matvec_t};
 use crate::linalg::{matmul, Matrix};
-use crate::lowrank::{LayerInit, Method};
+use crate::lowrank::{LayerInit, LoraPair, Method};
 use crate::quant::packing::{pack_codes, try_unpack_codes};
 use crate::quant::{NfQuantized, QuantState, QuantizedTensor};
 
@@ -50,7 +58,8 @@ pub enum DequantParams {
     Codebook { levels: Vec<f64>, absmax: Matrix },
 }
 
-/// One packed linear layer: codes + dequant params + LoRA adapters.
+/// One packed linear **base** layer: codes + dequant params. Adapter-free —
+/// the LoRA delta is a per-request [`LoraPair`] argument.
 #[derive(Clone, Debug)]
 pub struct PackedLayer {
     pub name: String,
@@ -65,28 +74,28 @@ pub struct PackedLayer {
     /// `[i·words_per_row, (i+1)·words_per_row)`.
     pub packed: Vec<u32>,
     pub params: DequantParams,
-    /// m×r adapter (delta = A·Bᵀ).
-    pub a: Matrix,
-    /// n×r adapter.
-    pub b: Matrix,
+}
+
+/// Are two optional adapter references the same adapter? (`None` = base
+/// only; `Some`s compare by address — the grouped kernel keys groups on
+/// identity, never on value equality.) Shared with the engine's group
+/// accounting (`serve::engine`) so the reported group count can never
+/// drift from the grouping the kernel actually executes.
+pub(crate) fn same_adapter(a: Option<&LoraPair>, b: Option<&LoraPair>) -> bool {
+    match (a, b) {
+        (None, None) => true,
+        (Some(x), Some(y)) => std::ptr::eq(x, y),
+        _ => false,
+    }
 }
 
 impl PackedLayer {
-    /// Pack an exact quantization state plus adapters.
-    pub fn from_state(
-        name: &str,
-        qs: &QuantState,
-        a: &Matrix,
-        b: &Matrix,
-    ) -> anyhow::Result<PackedLayer> {
+    /// Pack an exact quantization state.
+    pub fn from_state(name: &str, qs: &QuantState) -> anyhow::Result<PackedLayer> {
         let (rows, cols) = (qs.rows(), qs.cols());
         anyhow::ensure!(
-            a.rows == rows && b.rows == cols && a.cols == b.cols,
-            "layer '{name}': adapters {}x{} / {}x{} do not fit base {rows}x{cols}",
-            a.rows,
-            a.cols,
-            b.rows,
-            b.cols,
+            rows >= 1 && cols >= 1,
+            "layer '{name}': degenerate shape {rows}x{cols}"
         );
         let (bits, group_size, codes, params) = match qs {
             QuantState::Int(q) => (
@@ -116,14 +125,17 @@ impl PackedLayer {
             group_size,
             packed,
             params,
-            a: a.clone(),
-            b: b.clone(),
         })
     }
 
-    /// Pack a [`LayerInit`]. Errors actionably when the method kept an fp
-    /// base and there is no quantization state to pack.
-    pub fn from_layer_init(name: &str, method: Method, li: &LayerInit) -> anyhow::Result<PackedLayer> {
+    /// Pack a [`LayerInit`] into its two serving halves: the frozen base
+    /// and the extracted adapter. Errors actionably when the method kept an
+    /// fp base and there is no quantization state to pack.
+    pub fn from_layer_init(
+        name: &str,
+        method: Method,
+        li: &LayerInit,
+    ) -> anyhow::Result<(PackedLayer, LoraPair)> {
         let qs = li.quant.as_ref().ok_or_else(|| {
             anyhow::anyhow!(
                 "layer '{name}': method {} keeps the fp base and produced no packed \
@@ -133,11 +145,26 @@ impl PackedLayer {
                 method.name()
             )
         })?;
-        Self::from_state(name, qs, &li.a, &li.b)
+        let base = Self::from_state(name, qs)?;
+        let pair = li.lora_pair();
+        base.check_adapter(&pair)?;
+        Ok((base, pair))
     }
 
-    pub fn rank(&self) -> usize {
-        self.a.cols
+    /// Validate that `pair` fits this base layer (A: rows×r, B: cols×r).
+    pub fn check_adapter(&self, pair: &LoraPair) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            pair.a.rows == self.rows && pair.b.rows == self.cols && pair.a.cols == pair.b.cols,
+            "layer '{}': adapter {}x{} / {}x{} does not fit base {}x{}",
+            self.name,
+            pair.a.rows,
+            pair.a.cols,
+            pair.b.rows,
+            pair.b.cols,
+            self.rows,
+            self.cols,
+        );
+        Ok(())
     }
 
     /// Reconstruct the exact quantization state (the artifact roundtrip
@@ -228,23 +255,24 @@ impl PackedLayer {
 
     /// `y += B·(Aᵀx)` — the two skinny products, shared verbatim by the
     /// fused and dense reference paths so LoRA handling can never break
-    /// parity.
-    fn add_lora(&self, y: &mut [f64], x: &[f64]) {
-        if self.rank() == 0 {
+    /// parity. Rank-0 pairs are skipped entirely (adding 0.0 would still
+    /// flip a −0.0 base output).
+    fn add_lora(&self, y: &mut [f64], x: &[f64], pair: &LoraPair) {
+        if pair.rank() == 0 {
             return;
         }
-        let t = matvec_t(&self.a, x);
+        let t = matvec_t(&pair.a, x);
         for (j, yj) in y.iter_mut().enumerate() {
-            *yj += dot(&t, self.b.row(j));
+            *yj += dot(&t, pair.b.row(j));
         }
     }
 
     /// Fused packed forward for one request: unpack → dequant → dot in one
-    /// pass over the packed words, never materializing the dense base.
-    /// Bit-identical to [`PackedLayer::dense_reference_forward`] on the
-    /// layer's own dequantized base (the parity contract in the module
-    /// docs).
-    pub fn forward(&self, x: &[f64]) -> Vec<f64> {
+    /// pass over the packed words, never materializing the dense base, plus
+    /// the factored delta of `lora` when one is given. Bit-identical to
+    /// [`PackedLayer::dense_reference_forward`] on the layer's own
+    /// dequantized base (the parity contract in the module docs).
+    pub fn forward(&self, x: &[f64], lora: Option<&LoraPair>) -> Vec<f64> {
         assert_eq!(x.len(), self.rows, "layer '{}': input len vs rows", self.name);
         let mut y = vec![0.0; self.cols];
         for i in 0..self.rows {
@@ -254,18 +282,40 @@ impl PackedLayer {
             }
             self.for_each_dequant(i, |j, v| y[j] += xi * v);
         }
-        self.add_lora(&mut y, x);
+        if let Some(pair) = lora {
+            self.add_lora(&mut y, x, pair);
+        }
         y
     }
 
-    /// Micro-batched forward: `Y[b] = forward(X[b])` with every packed row
-    /// unpacked + dequantized ONCE and reused across the whole batch — the
-    /// work amortization the engine's coalescer exists to harvest. The LoRA
-    /// t-product runs as one skinny GEMM (`X·A`), whose per-element
-    /// accumulation order equals the serial `matvec_t`. Bit-identical to
-    /// `xs.rows` serial [`PackedLayer::forward`] calls.
-    pub fn forward_batch(&self, xs: &Matrix) -> Matrix {
+    /// Micro-batched forward with ONE adapter (or none) for every request:
+    /// `Y[b] = forward(X[b], lora)`. A thin wrapper over the grouped kernel
+    /// with a single group — one kernel body, so the uniform and the
+    /// mixed-adapter paths cannot drift apart.
+    pub fn forward_batch(&self, xs: &Matrix, lora: Option<&LoraPair>) -> Matrix {
+        self.forward_batch_grouped(xs, &vec![lora; xs.rows])
+    }
+
+    /// Micro-batched forward over a batch whose rows may belong to
+    /// DIFFERENT adapters: `adapters[b]` is request `b`'s pair (`None` =
+    /// base only). Every packed base row is unpacked + dequantized ONCE and
+    /// reused across the whole batch — the amortization the engine's
+    /// coalescer exists to harvest — while the LoRA t-product runs as one
+    /// skinny GEMM (`X_g·A`) per consecutive same-adapter group, whose
+    /// per-element accumulation order equals the serial `matvec_t` (blas
+    /// determinism contract). Bit-identical to `xs.rows` serial
+    /// [`PackedLayer::forward`] calls, whatever the adapter mix.
+    ///
+    /// Callers wanting the fewest groups should order the batch so
+    /// same-adapter requests are adjacent (the engine's batcher does).
+    pub fn forward_batch_grouped(&self, xs: &Matrix, adapters: &[Option<&LoraPair>]) -> Matrix {
         assert_eq!(xs.cols, self.rows, "layer '{}': batch cols vs rows", self.name);
+        assert_eq!(
+            adapters.len(),
+            xs.rows,
+            "layer '{}': one adapter slot per batch row",
+            self.name
+        );
         let (batch, n) = (xs.rows, self.cols);
         let mut ys = Matrix::zeros(batch, n);
         let mut wrow = vec![0.0; n];
@@ -279,15 +329,27 @@ impl PackedLayer {
                 axpy(ys.row_mut(bi), xi, &wrow);
             }
         }
-        if self.rank() > 0 {
-            let t = matmul(xs, &self.a); // batch×r, same per-element order as matvec_t
-            for bi in 0..batch {
-                let trow = t.row(bi);
-                let yrow = ys.row_mut(bi);
-                for (j, yj) in yrow.iter_mut().enumerate() {
-                    *yj += dot(trow, self.b.row(j));
+        let mut g0 = 0usize;
+        while g0 < batch {
+            let mut g1 = g0 + 1;
+            while g1 < batch && same_adapter(adapters[g0], adapters[g1]) {
+                g1 += 1;
+            }
+            if let Some(pair) = adapters[g0] {
+                if pair.rank() > 0 {
+                    let xg = xs.rows_range(g0, g1);
+                    // (g1-g0)×r, same per-element order as matvec_t.
+                    let t = matmul(&xg, &pair.a);
+                    for bi in g0..g1 {
+                        let trow = t.row(bi - g0);
+                        let yrow = ys.row_mut(bi);
+                        for (j, yj) in yrow.iter_mut().enumerate() {
+                            *yj += dot(trow, pair.b.row(j));
+                        }
+                    }
                 }
             }
+            g0 = g1;
         }
         ys
     }
@@ -295,26 +357,34 @@ impl PackedLayer {
     /// The dense reference the parity suite pins the fused kernel against:
     /// a plain `matvec_t` over a pre-materialized `q_deq` plus the same
     /// factored LoRA product.
-    pub fn dense_reference_forward(&self, q_deq: &Matrix, x: &[f64]) -> Vec<f64> {
+    pub fn dense_reference_forward(
+        &self,
+        q_deq: &Matrix,
+        x: &[f64],
+        lora: Option<&LoraPair>,
+    ) -> Vec<f64> {
         assert_eq!(q_deq.rows, self.rows);
         assert_eq!(q_deq.cols, self.cols);
         let mut y = matvec_t(q_deq, x);
-        self.add_lora(&mut y, x);
+        if let Some(pair) = lora {
+            self.add_lora(&mut y, x, pair);
+        }
         y
     }
 
-    /// Packed storage footprint in bytes (codes + params + adapters) —
-    /// reported by the engine and the bench harness.
+    /// Packed base storage footprint in bytes (codes + dequant params;
+    /// adapters are accounted separately by `AdapterSet::bytes`) — reported
+    /// by the engine and the bench harness.
     pub fn packed_bytes(&self) -> usize {
         let params = match &self.params {
             DequantParams::Grid { scales, zeros } => (scales.data.len() + zeros.data.len()) * 8,
             DequantParams::Codebook { levels, absmax } => (levels.len() + absmax.data.len()) * 8,
         };
-        self.packed.len() * 4 + params + (self.a.data.len() + self.b.data.len()) * 8
+        self.packed.len() * 4 + params
     }
 }
 
-/// A served model: packed layers addressable by name.
+/// A served model: packed base layers addressable by name.
 #[derive(Clone, Debug, Default)]
 pub struct PackedModel {
     pub layers: Vec<PackedLayer>,
@@ -333,23 +403,40 @@ impl PackedModel {
         self.index_of(name).map(|i| &self.layers[i])
     }
 
-    /// Total packed bytes across layers.
+    /// Total packed base bytes across layers.
     pub fn packed_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.packed_bytes()).sum()
     }
 
-    /// Build the serving model straight from a `quantize_init` result: the
-    /// exact f64 quantization states plus the adapters from the f32 LoRA
-    /// store. The f32→f64 widening is lossless, but the adapter VALUES are
-    /// the f32-rounded ones the trainer itself consumes — served outputs
-    /// match the trainer's adapters exactly, and may differ in low-order
-    /// bits from the init-time f64 `LayerInit.a`/`b` (use
+    /// Build the serving halves straight from a `quantize_init` result: the
+    /// packed base from the exact f64 quantization states, and one
+    /// [`AdapterSet`] (named `adapter_id`) holding the adapters from the
+    /// f32 LoRA store. The f32→f64 widening is lossless, but the adapter
+    /// VALUES are the f32-rounded ones the trainer itself consumes — served
+    /// outputs match the trainer's adapters exactly, and may differ in
+    /// low-order bits from the init-time f64 `LayerInit.a`/`b` (use
     /// [`PackedLayer::from_layer_init`] to serve those). The 0-ULP parity
     /// contract is per layer, against its own packed state and adapters,
     /// and holds on either path.
-    pub fn from_model_init(init: &crate::coordinator::ModelInit) -> anyhow::Result<PackedModel> {
-        let mut layers = Vec::with_capacity(init.exact.len());
-        for (name, qs) in &init.exact {
+    ///
+    /// Requires `quantize_init(.., keep_exact = true, ..)`; errors
+    /// actionably otherwise.
+    ///
+    /// [`AdapterSet`]: crate::serve::adapters::AdapterSet
+    pub fn from_model_init(
+        init: &crate::coordinator::ModelInit,
+        adapter_id: &str,
+    ) -> anyhow::Result<(PackedModel, crate::serve::adapters::AdapterSet)> {
+        let exact = init.exact.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "ModelInit carries no exact serving states: quantize_init was called with \
+                 keep_exact = false (the train/eval-sweep mode); re-run it with \
+                 keep_exact = true to build a packed serving model"
+            )
+        })?;
+        let mut layers = Vec::with_capacity(exact.len());
+        let mut pairs = Vec::with_capacity(exact.len());
+        for (name, qs) in exact {
             let (ka, kb) = (format!("{name}.A"), format!("{name}.B"));
             anyhow::ensure!(
                 init.lora.contains(&ka) && init.lora.contains(&kb),
@@ -357,9 +444,16 @@ impl PackedModel {
             );
             let a = init.lora.get(&ka).to_matrix();
             let b = init.lora.get(&kb).to_matrix();
-            layers.push(PackedLayer::from_state(name, qs, &a, &b)?);
+            let layer = PackedLayer::from_state(name, qs)?;
+            let pair = LoraPair::new(a, b);
+            layer.check_adapter(&pair)?;
+            layers.push(layer);
+            pairs.push((name.clone(), pair));
         }
-        Ok(PackedModel { layers })
+        let model = PackedModel { layers };
+        let set = crate::serve::adapters::AdapterSet::from_pairs(adapter_id, pairs)?;
+        set.check_against(&model)?;
+        Ok((model, set))
     }
 }
 
@@ -369,15 +463,22 @@ mod tests {
     use crate::quant::quantize_rtn;
     use crate::util::prng::Rng;
 
-    fn mk_layer(m: usize, n: usize, bits: u32, gs: usize, r: usize, seed: u64) -> (PackedLayer, Matrix) {
+    fn mk_layer(
+        m: usize,
+        n: usize,
+        bits: u32,
+        gs: usize,
+        r: usize,
+        seed: u64,
+    ) -> (PackedLayer, LoraPair, Matrix) {
         let mut rng = Rng::new(seed);
         let w = Matrix::randn(m, n, 0.3, &mut rng);
         let q = quantize_rtn(&w, bits, gs);
         let q_deq = q.dequantize();
         let a = Matrix::randn(m, r, 0.1, &mut rng);
         let b = Matrix::randn(n, r, 0.1, &mut rng);
-        let l = PackedLayer::from_state("t", &QuantState::Int(q), &a, &b).unwrap();
-        (l, q_deq)
+        let l = PackedLayer::from_state("t", &QuantState::Int(q)).unwrap();
+        (l, LoraPair::new(a, b), q_deq)
     }
 
     #[test]
@@ -386,10 +487,10 @@ mod tests {
         for &(m, n, bits, gs) in
             &[(10usize, 3usize, 2u32, 4usize), (70, 37, 3, 32), (64, 64, 4, 64), (33, 10, 8, 7)]
         {
-            let (l, q_deq) = mk_layer(m, n, bits, gs, 4, 201);
+            let (l, pair, q_deq) = mk_layer(m, n, bits, gs, 4, 201);
             let x = rng.gauss_vec(m);
-            let fused = l.forward(&x);
-            let dense = l.dense_reference_forward(&q_deq, &x);
+            let fused = l.forward(&x, Some(&pair));
+            let dense = l.dense_reference_forward(&q_deq, &x, Some(&pair));
             for (u, v) in fused.iter().zip(&dense) {
                 assert_eq!(u.to_bits(), v.to_bits(), "{m}x{n} bits={bits} gs={gs}");
             }
@@ -398,12 +499,34 @@ mod tests {
 
     #[test]
     fn batch_bit_exact_vs_serial() {
-        let (l, _) = mk_layer(48, 19, 3, 16, 5, 202);
+        let (l, pair, _) = mk_layer(48, 19, 3, 16, 5, 202);
         let mut rng = Rng::new(203);
         let xs = Matrix::randn(6, 48, 1.0, &mut rng);
-        let ys = l.forward_batch(&xs);
+        let ys = l.forward_batch(&xs, Some(&pair));
         for bi in 0..6 {
-            let y = l.forward(xs.row(bi));
+            let y = l.forward(xs.row(bi), Some(&pair));
+            for (u, v) in ys.row(bi).iter().zip(&y) {
+                assert_eq!(u.to_bits(), v.to_bits(), "row {bi}");
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_batch_bit_exact_vs_serial_per_adapter() {
+        // Three adapters interleaved in one batch: every row must carry its
+        // own adapter's delta, bit-identical to the serial call.
+        let (l, pair0, _) = mk_layer(40, 17, 4, 8, 3, 206);
+        let mut rng = Rng::new(207);
+        let pair1 = LoraPair::new(
+            Matrix::randn(40, 5, 0.2, &mut rng),
+            Matrix::randn(17, 5, 0.2, &mut rng),
+        );
+        let xs = Matrix::randn(7, 40, 1.0, &mut rng);
+        let slots: Vec<Option<&LoraPair>> =
+            vec![Some(&pair0), Some(&pair0), None, Some(&pair1), Some(&pair1), None, Some(&pair0)];
+        let ys = l.forward_batch_grouped(&xs, &slots);
+        for (bi, slot) in slots.iter().enumerate() {
+            let y = l.forward(xs.row(bi), *slot);
             for (u, v) in ys.row(bi).iter().zip(&y) {
                 assert_eq!(u.to_bits(), v.to_bits(), "row {bi}");
             }
@@ -412,7 +535,7 @@ mod tests {
 
     #[test]
     fn state_roundtrip_is_exact() {
-        let (l, q_deq) = mk_layer(30, 11, 2, 8, 3, 204);
+        let (l, _, q_deq) = mk_layer(30, 11, 2, 8, 3, 204);
         let qs = l.to_state().unwrap();
         assert_eq!(qs.dequantize().data, q_deq.data);
         match qs {
@@ -425,26 +548,24 @@ mod tests {
     }
 
     #[test]
-    fn rank_zero_layer_serves_base_only() {
-        let (mut l, q_deq) = mk_layer(16, 8, 4, 8, 2, 205);
-        l.a = Matrix::zeros(16, 0);
-        l.b = Matrix::zeros(8, 0);
+    fn no_adapter_serves_base_only() {
+        let (l, _, q_deq) = mk_layer(16, 8, 4, 8, 2, 205);
         let x = Rng::new(206).gauss_vec(16);
-        let y = l.forward(&x);
+        let y = l.forward(&x, None);
         let y_ref = crate::linalg::matvec_t(&q_deq, &x);
         assert_eq!(y, y_ref);
-        let ys = l.forward_batch(&Matrix::from_vec(1, 16, x));
+        let ys = l.forward_batch(&Matrix::from_vec(1, 16, x), None);
         assert_eq!(ys.data, y_ref);
     }
 
     #[test]
-    fn shape_mismatch_rejected() {
+    fn adapter_shape_mismatch_rejected() {
         let mut rng = Rng::new(207);
         let w = Matrix::randn(12, 6, 0.3, &mut rng);
         let q = QuantState::Int(quantize_rtn(&w, 4, 8));
-        let a = Matrix::zeros(12, 2);
-        let bad_b = Matrix::zeros(5, 2); // cols must be 6
-        let err = PackedLayer::from_state("bad", &q, &a, &bad_b).unwrap_err();
+        let l = PackedLayer::from_state("bad", &q).unwrap();
+        let pair = LoraPair::new(Matrix::zeros(12, 2), Matrix::zeros(5, 2)); // cols must be 6
+        let err = l.check_adapter(&pair).unwrap_err();
         assert!(format!("{err}").contains("bad"), "{err}");
     }
 }

@@ -273,7 +273,9 @@ impl<'a> Parser<'a> {
             Some(b'f') => self.literal("false", Json::Bool(false)),
             Some(b'n') => self.literal("null", Json::Null),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
-            other => anyhow::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+            other => {
+                anyhow::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos)
+            }
         }
     }
 

@@ -104,6 +104,9 @@ struct PoolState {
     jobs: VecDeque<Job>,
     open: bool,
     panicked: usize,
+    /// Jobs popped from the queue and currently executing — `wait_idle`
+    /// blocks until this is 0 AND the queue is empty.
+    active: usize,
 }
 
 struct PoolShared {
@@ -124,7 +127,12 @@ pub struct WorkerPool {
 impl WorkerPool {
     pub fn new(workers: usize) -> WorkerPool {
         let shared = Arc::new(PoolShared {
-            state: Mutex::new(PoolState { jobs: VecDeque::new(), open: true, panicked: 0 }),
+            state: Mutex::new(PoolState {
+                jobs: VecDeque::new(),
+                open: true,
+                panicked: 0,
+                active: 0,
+            }),
             cv: Condvar::new(),
         });
         let handles = (0..workers.max(1))
@@ -135,6 +143,7 @@ impl WorkerPool {
                         let mut st = shared.state.lock().unwrap();
                         loop {
                             if let Some(j) = st.jobs.pop_front() {
+                                st.active += 1; // claimed under the same lock as the pop
                                 break Some(j);
                             }
                             if !st.open {
@@ -146,8 +155,20 @@ impl WorkerPool {
                     match job {
                         None => break,
                         Some(j) => {
-                            if std::panic::catch_unwind(std::panic::AssertUnwindSafe(j)).is_err() {
-                                shared.state.lock().unwrap().panicked += 1;
+                            let panicked =
+                                std::panic::catch_unwind(std::panic::AssertUnwindSafe(j)).is_err();
+                            let idle = {
+                                let mut st = shared.state.lock().unwrap();
+                                if panicked {
+                                    st.panicked += 1;
+                                }
+                                st.active -= 1;
+                                st.jobs.is_empty() && st.active == 0
+                            };
+                            if idle {
+                                // Wake any wait_idle callers (workers woken
+                                // spuriously just re-check their queue).
+                                shared.cv.notify_all();
                             }
                         }
                     }
@@ -166,13 +187,31 @@ impl WorkerPool {
             assert!(st.open, "submit on a shut-down WorkerPool");
             st.jobs.push_back(Box::new(job));
         }
-        self.shared.cv.notify_one();
+        // notify_all, not notify_one: `wait_idle` waiters share this
+        // condvar, and a single wakeup could land on one of them (which
+        // just re-waits) while every worker stays parked — stranding the
+        // job. Waking everyone lets a worker claim it; idle waiters
+        // re-check and re-wait.
+        self.shared.cv.notify_all();
     }
 
     /// Number of jobs that panicked so far (each was caught; its worker
     /// kept running).
     pub fn panicked(&self) -> usize {
         self.shared.state.lock().unwrap().panicked
+    }
+
+    /// Block until every job submitted SO FAR has finished (queue empty and
+    /// no worker mid-job). The serving engine's batcher uses this on
+    /// shutdown so every dispatched micro-batch has answered its riders
+    /// before the batcher thread exits. Concurrent `submit` calls restart
+    /// the wait — this is a quiescence point, not a shutdown, so callers
+    /// must have stopped (or be prepared to outwait) new submissions.
+    pub fn wait_idle(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while !(st.jobs.is_empty() && st.active == 0) {
+            st = self.shared.cv.wait(st).unwrap();
+        }
     }
 
     /// Drain the queue and join the workers. Also runs on drop; calling it
@@ -259,6 +298,25 @@ mod tests {
         }
         pool.shutdown(); // must drain the queue, not abandon it
         assert_eq!(done.load(Ordering::SeqCst), 40);
+    }
+
+    #[test]
+    fn wait_idle_blocks_until_all_jobs_finish() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let done = Arc::new(AtomicUsize::new(0));
+        let pool = WorkerPool::new(2);
+        pool.wait_idle(); // empty pool is already idle
+        for _ in 0..16 {
+            let done = Arc::clone(&done);
+            pool.submit(move || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 16, "wait_idle returned with work pending");
+        pool.wait_idle(); // idempotent once idle
+        pool.shutdown();
     }
 
     #[test]

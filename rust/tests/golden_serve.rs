@@ -1,12 +1,19 @@
-//! Golden tests for the packed serving artifact: save → load must
+//! Golden tests for the packed serving artifacts: save → load must
 //! reproduce the exact quantization state **byte-identically** (codes,
-//! scales/zeros, codebook levels/absmax, adapters) and a **bit-identical**
-//! packed forward, across bits {2,3,4,8} × group sizes {32,64}; truncated
-//! and bit-flipped files must fail with errors naming the offending layer.
+//! scales/zeros, codebook levels/absmax) and adapter pairs exactly, and a
+//! **bit-identical** packed forward, across bits {2,3,4,8} × group sizes
+//! {32,64}; truncated and bit-flipped files must fail with errors naming
+//! the offending layer; and the v1 → v2 compatibility shim must convert
+//! legacy single-tenant files into base + one adapter set with
+//! bit-identical forward outputs.
 
 use cloq::linalg::Matrix;
+use cloq::lowrank::LoraPair;
 use cloq::quant::{quantize_nf, quantize_rtn, QuantState};
-use cloq::serve::{load_artifact, save_artifact, PackedLayer, PackedModel};
+use cloq::serve::{
+    load_adapter_artifact, load_artifact_compat, load_base_artifact, save_adapter_artifact,
+    save_artifact_v1, save_base_artifact, AdapterSet, PackedLayer, PackedModel,
+};
 use cloq::util::prng::Rng;
 
 fn tmp(tag: &str) -> std::path::PathBuf {
@@ -36,7 +43,11 @@ fn assert_state_bytes_identical(a: &QuantState, b: &QuantState, what: &str) {
                 "{what}: levels"
             );
             assert!(
-                x.absmax.data.iter().map(|v| v.to_bits()).eq(y.absmax.data.iter().map(|v| v.to_bits())),
+                x.absmax
+                    .data
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .eq(y.absmax.data.iter().map(|v| v.to_bits())),
                 "{what}: absmax"
             );
         }
@@ -44,11 +55,24 @@ fn assert_state_bytes_identical(a: &QuantState, b: &QuantState, what: &str) {
     }
 }
 
+fn assert_pair_exact(a: &LoraPair, b: &LoraPair, what: &str) {
+    assert!(
+        a.a.data.iter().map(|v| v.to_bits()).eq(b.a.data.iter().map(|v| v.to_bits())),
+        "{what}: adapter A"
+    );
+    assert!(
+        a.b.data.iter().map(|v| v.to_bits()).eq(b.b.data.iter().map(|v| v.to_bits())),
+        "{what}: adapter B"
+    );
+}
+
 /// One layer per (bits, group size) point, mixed grid/codebook, ragged
-/// shapes so the packed rows have slack bits.
-fn build_model(seed: u64) -> (PackedModel, Vec<QuantState>) {
+/// shapes so the packed rows have slack bits. Returns the base model, one
+/// adapter set covering it, and the original quantizer states.
+fn build_model(seed: u64) -> (PackedModel, AdapterSet, Vec<QuantState>) {
     let mut rng = Rng::new(seed);
     let mut layers = Vec::new();
+    let mut pairs = Vec::new();
     let mut states = Vec::new();
     for &bits in &[2u32, 3, 4, 8] {
         for &gs in &[32usize, 64] {
@@ -63,21 +87,28 @@ fn build_model(seed: u64) -> (PackedModel, Vec<QuantState>) {
             let a = Matrix::randn(m, r, 0.1, &mut rng);
             let b = Matrix::randn(n, r, 0.1, &mut rng);
             let name = format!("blk.b{bits}.g{gs}");
-            layers.push(PackedLayer::from_state(&name, &qs, &a, &b).unwrap());
+            layers.push(PackedLayer::from_state(&name, &qs).unwrap());
+            pairs.push((name, LoraPair::new(a, b)));
             states.push(qs);
         }
     }
-    (PackedModel::new(layers), states)
+    let set = AdapterSet::from_pairs("tenant", pairs).unwrap();
+    (PackedModel::new(layers), set, states)
 }
 
 #[test]
 fn roundtrip_byte_identical_states_and_bit_identical_forward() {
     let dir = tmp("roundtrip");
-    let (model, states) = build_model(600);
-    let path = dir.join("model.cloqpkd");
-    save_artifact(&model, &path).unwrap();
-    let loaded = load_artifact(&path).unwrap();
+    let (model, set, states) = build_model(600);
+    let bpath = dir.join("base.cloqpkd2");
+    let apath = dir.join("tenant.cloqadp");
+    save_base_artifact(&model, &bpath).unwrap();
+    save_adapter_artifact(&set, &apath).unwrap();
+    let loaded = load_base_artifact(&bpath).unwrap();
+    let lset = load_adapter_artifact(&apath).unwrap();
     assert_eq!(loaded.layers.len(), model.layers.len());
+    assert_eq!(lset.id(), set.id());
+    assert_eq!(lset.len(), set.len());
 
     let mut rng = Rng::new(601);
     for ((orig, got), state) in model.layers.iter().zip(&loaded.layers).zip(&states) {
@@ -87,51 +118,82 @@ fn roundtrip_byte_identical_states_and_bit_identical_forward() {
         // byte-for-byte — not just something that dequantizes closely.
         assert_state_bytes_identical(state, &got.to_state().unwrap(), &orig.name);
         // Adapters survive exactly too.
-        assert!(
-            orig.a.data.iter().map(|v| v.to_bits()).eq(got.a.data.iter().map(|v| v.to_bits())),
-            "{}: adapter A",
-            orig.name
-        );
-        assert!(
-            orig.b.data.iter().map(|v| v.to_bits()).eq(got.b.data.iter().map(|v| v.to_bits())),
-            "{}: adapter B",
-            orig.name
-        );
+        assert_pair_exact(set.get(&orig.name).unwrap(), lset.get(&orig.name).unwrap(), &orig.name);
         // And the serving numbers are the same bits.
         let x = rng.gauss_vec(orig.rows);
-        let (ya, yb) = (orig.forward(&x), got.forward(&x));
+        let ya = orig.forward(&x, set.get(&orig.name));
+        let yb = got.forward(&x, lset.get(&got.name));
         for (u, v) in ya.iter().zip(&yb) {
             assert_eq!(u.to_bits(), v.to_bits(), "{}: forward", orig.name);
         }
     }
 
-    // Save → load → save is byte-stable (no hidden nondeterminism).
-    let path2 = dir.join("model2.cloqpkd");
-    save_artifact(&loaded, &path2).unwrap();
-    assert_eq!(std::fs::read(&path).unwrap(), std::fs::read(&path2).unwrap());
+    // Save → load → save is byte-stable for both artifacts (no hidden
+    // nondeterminism).
+    let bpath2 = dir.join("base2.cloqpkd2");
+    save_base_artifact(&loaded, &bpath2).unwrap();
+    assert_eq!(std::fs::read(&bpath).unwrap(), std::fs::read(&bpath2).unwrap());
+    let apath2 = dir.join("tenant2.cloqadp");
+    save_adapter_artifact(&lset, &apath2).unwrap();
+    assert_eq!(std::fs::read(&apath).unwrap(), std::fs::read(&apath2).unwrap());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn v1_artifact_converts_to_base_plus_adapter_with_identical_bits() {
+    // The compatibility shim: a legacy CLOQPKD1 file (adapters embedded
+    // per layer) loads as base + one AdapterSet named "v1", and forwards
+    // through the converted halves are byte-for-byte what the embedded
+    // layout produced.
+    let dir = tmp("v1shim");
+    let (model, set, _) = build_model(610);
+    let path = dir.join("legacy.cloqpkd");
+    save_artifact_v1(&model, &set, &path).unwrap();
+    let (loaded, lset) = load_artifact_compat(&path).unwrap();
+    let lset = lset.expect("v1 files carry embedded adapters");
+    assert_eq!(lset.id(), "v1");
+    assert_eq!(loaded.layers.len(), model.layers.len());
+    assert_eq!(lset.len(), model.layers.len());
+    let mut rng = Rng::new(611);
+    for (orig, got) in model.layers.iter().zip(&loaded.layers) {
+        assert_eq!(orig.name, got.name);
+        assert_eq!(orig.packed, got.packed, "{}: packed words", orig.name);
+        assert_pair_exact(set.get(&orig.name).unwrap(), lset.get(&got.name).unwrap(), &orig.name);
+        let x = rng.gauss_vec(orig.rows);
+        let ya = orig.forward(&x, set.get(&orig.name));
+        let yb = got.forward(&x, lset.get(&got.name));
+        for (u, v) in ya.iter().zip(&yb) {
+            assert_eq!(u.to_bits(), v.to_bits(), "{}: forward through the shim", orig.name);
+        }
+    }
+    // A v2 base file through the same entry point reports no adapters.
+    let bpath = dir.join("base.cloqpkd2");
+    save_base_artifact(&model, &bpath).unwrap();
+    let (_, none) = load_artifact_compat(&bpath).unwrap();
+    assert!(none.is_none(), "v2 base artifacts carry no adapters");
     std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
 fn truncated_artifact_names_the_layer_it_died_in() {
     let dir = tmp("trunc");
-    let (model, _) = build_model(602);
-    let path = dir.join("model.cloqpkd");
-    save_artifact(&model, &path).unwrap();
+    let (model, _, _) = build_model(602);
+    let path = dir.join("base.cloqpkd2");
+    save_base_artifact(&model, &path).unwrap();
     let bytes = std::fs::read(&path).unwrap();
 
     // Cut in the middle of the file: some layers load, then a named error.
     let cut = bytes.len() / 2;
-    let tpath = dir.join("trunc.cloqpkd");
+    let tpath = dir.join("trunc.cloqpkd2");
     std::fs::write(&tpath, &bytes[..cut]).unwrap();
-    let msg = format!("{}", load_artifact(&tpath).unwrap_err());
+    let msg = format!("{}", load_base_artifact(&tpath).unwrap_err());
     assert!(msg.contains("layer "), "{msg}");
     assert!(msg.contains("truncated"), "{msg}");
 
     // Cut just before the final checksum: the LAST layer is named.
-    let tpath2 = dir.join("trunc2.cloqpkd");
+    let tpath2 = dir.join("trunc2.cloqpkd2");
     std::fs::write(&tpath2, &bytes[..bytes.len() - 2]).unwrap();
-    let msg2 = format!("{}", load_artifact(&tpath2).unwrap_err());
+    let msg2 = format!("{}", load_base_artifact(&tpath2).unwrap_err());
     let n = model.layers.len();
     assert!(
         msg2.contains(&format!("layer {}/{n}", n - 1)),
@@ -144,34 +206,44 @@ fn truncated_artifact_names_the_layer_it_died_in() {
 #[test]
 fn flipped_bit_is_caught_by_the_layer_checksum() {
     let dir = tmp("flip");
-    let (model, _) = build_model(603);
-    let path = dir.join("model.cloqpkd");
-    save_artifact(&model, &path).unwrap();
-    let orig = std::fs::read(&path).unwrap();
+    let (model, set, _) = build_model(603);
+    let bpath = dir.join("base.cloqpkd2");
+    save_base_artifact(&model, &bpath).unwrap();
+    let apath = dir.join("tenant.cloqadp");
+    save_adapter_artifact(&set, &apath).unwrap();
 
-    // Flip one bit at several depths; every load must fail with a
-    // checksum error that names a layer (never load garbage silently).
-    for &frac in &[0.3f64, 0.6, 0.9] {
-        let mut bytes = orig.clone();
-        let pos = 16 + ((bytes.len() - 20) as f64 * frac) as usize;
-        bytes[pos] ^= 0x01;
-        let bpath = dir.join(format!("flip_{pos}.cloqpkd"));
-        std::fs::write(&bpath, &bytes).unwrap();
-        match load_artifact(&bpath) {
-            Err(e) => {
-                let msg = format!("{e}");
-                assert!(msg.contains("layer "), "pos {pos}: {msg}");
-            }
-            Ok(loaded) => {
-                // The flip landed in a payload-length field in a way that
-                // still parsed? Not acceptable: CRC must have been checked.
-                // (Reaching here means the artifact was undamaged — only
-                // possible if we flipped padding, which this format has
-                // none of.)
-                panic!(
-                    "flipped byte at {pos} loaded silently ({} layers)",
-                    loaded.layers.len()
-                );
+    // Flip one bit at several depths in BOTH artifact kinds; every load
+    // must fail with a checksum error that names a layer (never load
+    // garbage silently). Offsets start past each header so the flip lands
+    // in the CRC-framed record region.
+    // Headers: base = magic(8)+version(4)+count(4);
+    // adapter = magic(8)+version(4)+id_len(4)+id+count(4).
+    let cases: [(&std::path::Path, usize, &str); 2] =
+        [(&bpath, 16, "base"), (&apath, 12 + 4 + set.id().len() + 4, "adapter")];
+    for (path, header, kind) in cases {
+        let orig = std::fs::read(path).unwrap();
+        for &frac in &[0.3f64, 0.6, 0.9] {
+            let mut bytes = orig.clone();
+            let span = bytes.len() - header - 4;
+            let pos = header + (span as f64 * frac) as usize;
+            bytes[pos] ^= 0x01;
+            let bad = dir.join(format!("flip_{kind}_{pos}"));
+            std::fs::write(&bad, &bytes).unwrap();
+            let result = if kind == "base" {
+                load_base_artifact(&bad).map(|_| ())
+            } else {
+                load_adapter_artifact(&bad).map(|_| ())
+            };
+            match result {
+                Err(e) => {
+                    let msg = format!("{e}");
+                    assert!(msg.contains("layer "), "{kind} pos {pos}: {msg}");
+                }
+                Ok(()) => {
+                    // This format has no padding: every byte is covered by
+                    // a length field, a checksum, or checksummed payload.
+                    panic!("{kind}: flipped byte at {pos} loaded silently");
+                }
             }
         }
     }
@@ -183,9 +255,9 @@ fn unpack_error_path_reaches_the_loader() {
     // A layer advertising more packed words than its payload carries is a
     // structural error naming the field, not a panic.
     let dir = tmp("struct");
-    let (model, _) = build_model(604);
-    let path = dir.join("model.cloqpkd");
-    save_artifact(&model, &path).unwrap();
+    let (model, _, _) = build_model(604);
+    let path = dir.join("base.cloqpkd2");
+    save_base_artifact(&model, &path).unwrap();
     let mut bytes = std::fs::read(&path).unwrap();
     // Header: magic(8) + version(4) + count(4). First layer record:
     // len(8) + payload. Payload: name_len(4) + name + kind(1) + bits(4) …
@@ -199,9 +271,9 @@ fn unpack_error_path_reaches_the_loader() {
     let len = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
     let crc = cloq::serve::crc32(&bytes[24..24 + len]);
     bytes[24 + len..24 + len + 4].copy_from_slice(&crc.to_le_bytes());
-    let bpath = dir.join("lied.cloqpkd");
+    let bpath = dir.join("lied.cloqpkd2");
     std::fs::write(&bpath, &bytes).unwrap();
-    let msg = format!("{}", load_artifact(&bpath).unwrap_err());
+    let msg = format!("{}", load_base_artifact(&bpath).unwrap_err());
     assert!(msg.contains("layer 0"), "{msg}");
     assert!(msg.contains("packed words") || msg.contains("needs"), "{msg}");
     std::fs::remove_dir_all(&dir).ok();

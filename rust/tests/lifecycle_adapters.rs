@@ -1,0 +1,186 @@
+//! Adapter lifecycle under load: hot-swap atomicity, pinned-LRU eviction,
+//! unregister drains, and the ship-an-adapter-without-the-base flow.
+//!
+//! The contracts under test (see `serve::adapters` module docs):
+//!
+//! * a response is computed entirely with the adapter VERSION resolved at
+//!   admission — a hot-swap never mixes old and new weights in one
+//!   response;
+//! * LRU eviction never evicts an adapter with queued (pinned) requests;
+//! * `unregister_adapter` blocks until every pinned request is answered
+//!   and rejects new submissions immediately;
+//! * a base artifact plus a separately-shipped adapter artifact serve
+//!   bit-identically to the in-memory halves.
+
+use cloq::linalg::Matrix;
+use cloq::lowrank::LoraPair;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{
+    load_adapter_artifact, load_base_artifact, save_adapter_artifact, save_base_artifact,
+    AdapterSet, EngineConfig, PackedLayer, PackedModel, Request, ServeEngine,
+};
+use cloq::util::prng::Rng;
+
+fn base_model(m: usize, n: usize, seed: u64) -> PackedModel {
+    let mut rng = Rng::new(seed);
+    let w = Matrix::randn(m, n, 0.3, &mut rng);
+    let q = QuantState::Int(quantize_rtn(&w, 4, 16));
+    PackedModel::new(vec![PackedLayer::from_state("lin", &q).unwrap()])
+}
+
+fn adapter(id: &str, m: usize, n: usize, r: usize, seed: u64) -> AdapterSet {
+    let mut rng = Rng::new(seed);
+    let pair =
+        LoraPair::new(Matrix::randn(m, r, 0.1, &mut rng), Matrix::randn(n, r, 0.1, &mut rng));
+    AdapterSet::from_pairs(id, vec![("lin".to_string(), pair)]).unwrap()
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (k, (u, v)) in a.iter().zip(b).enumerate() {
+        assert_eq!(u.to_bits(), v.to_bits(), "{what}: element {k}: {u} vs {v}");
+    }
+}
+
+#[test]
+fn hot_swap_never_mixes_versions_within_a_response() {
+    let (m, n) = (32usize, 12usize);
+    let model = base_model(m, n, 700);
+    let v1 = adapter("t", m, n, 3, 701);
+    let v2 = adapter("t", m, n, 3, 702);
+    let v1_pair = v1.get("lin").unwrap().clone();
+    let v2_pair = v2.get("lin").unwrap().clone();
+    let reference = base_model(m, n, 700); // same seed → same base bits
+
+    let engine = ServeEngine::new(
+        model,
+        EngineConfig { workers: 2, max_batch: 8, ..EngineConfig::default() },
+    );
+    engine.register_adapter(v1).unwrap();
+    let mut rng = Rng::new(703);
+    let xs1: Vec<Vec<f64>> = (0..16).map(|_| rng.gauss_vec(m)).collect();
+    let t1 = engine
+        .submit_all(xs1.iter().map(|x| Request::with_adapter("lin", "t", x.clone())).collect());
+    // Swap while the first burst is queued/in flight.
+    engine.register_adapter(v2).unwrap();
+    let xs2: Vec<Vec<f64>> = (0..16).map(|_| rng.gauss_vec(m)).collect();
+    let t2 = engine
+        .submit_all(xs2.iter().map(|x| Request::with_adapter("lin", "t", x.clone())).collect());
+
+    // Admission-time version pinning makes the split deterministic: every
+    // pre-swap request serves v1 bits, every post-swap request v2 bits —
+    // and in particular no response can blend the two.
+    let lin = reference.layer("lin").unwrap();
+    for (k, (t, x)) in t1.into_iter().zip(&xs1).enumerate() {
+        let y = t.wait().unwrap().y;
+        assert_bits_eq(&y, &lin.forward(x, Some(&v1_pair)), &format!("pre-swap {k}"));
+    }
+    for (k, (t, x)) in t2.into_iter().zip(&xs2).enumerate() {
+        let y = t.wait().unwrap().y;
+        assert_bits_eq(&y, &lin.forward(x, Some(&v2_pair)), &format!("post-swap {k}"));
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn eviction_never_evicts_an_adapter_with_queued_requests() {
+    // One slow worker and a deep queue of requests pinned to "hot"; the
+    // byte budget only fits two adapters, so registering three more MUST
+    // evict — but never "hot" while its requests are queued.
+    let (m, n) = (192usize, 192usize);
+    let model = base_model(m, n, 710);
+    let reference = base_model(m, n, 710);
+    let hot = adapter("hot", m, n, 4, 711);
+    let hot_pair = hot.get("lin").unwrap().clone();
+    let budget = 2 * hot.bytes();
+    let engine = ServeEngine::new(
+        model,
+        EngineConfig {
+            workers: 1,
+            max_batch: 2,
+            max_pending: 8192,
+            adapter_budget_bytes: budget,
+        },
+    );
+    engine.register_adapter(hot).unwrap();
+    let mut rng = Rng::new(712);
+    let xs: Vec<Vec<f64>> = (0..256).map(|_| rng.gauss_vec(m)).collect();
+    let tickets = engine
+        .submit_all(xs.iter().map(|x| Request::with_adapter("lin", "hot", x.clone())).collect());
+    // While the single worker grinds through 128 micro-batches, pile on
+    // cold adapters well past the budget.
+    for (id, seed) in [("b", 713u64), ("c", 714), ("d", 715)] {
+        engine.register_adapter(adapter(id, m, n, 4, seed)).unwrap();
+    }
+    assert!(
+        engine.registry().contains("hot"),
+        "pinned adapter evicted: {:?}",
+        engine.registry().ids()
+    );
+    assert!(engine.registry().stats().evictions >= 1, "budget of 2 never forced an eviction");
+    // Every queued request still serves the right weights.
+    let lin = reference.layer("lin").unwrap();
+    for (k, (t, x)) in tickets.into_iter().zip(&xs).enumerate() {
+        let y = t.wait().unwrap().y;
+        assert_bits_eq(&y, &lin.forward(x, Some(&hot_pair)), &format!("request {k}"));
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn unregister_is_a_full_drain_then_a_hard_barrier() {
+    let (m, n) = (64usize, 24usize);
+    let model = base_model(m, n, 720);
+    let reference = base_model(m, n, 720);
+    let set = adapter("ten", m, n, 3, 721);
+    let pair = set.get("lin").unwrap().clone();
+    let engine = ServeEngine::new(
+        model,
+        EngineConfig { workers: 2, max_batch: 4, ..EngineConfig::default() },
+    );
+    engine.register_adapter(set).unwrap();
+    let mut rng = Rng::new(722);
+    let xs: Vec<Vec<f64>> = (0..64).map(|_| rng.gauss_vec(m)).collect();
+    let tickets = engine
+        .submit_all(xs.iter().map(|x| Request::with_adapter("lin", "ten", x.clone())).collect());
+    engine.unregister_adapter("ten").unwrap();
+    // The drain returned ⇒ every ticket must already hold its response —
+    // resolve them without blocking semantics mattering, and check bits.
+    let lin = reference.layer("lin").unwrap();
+    for (k, (t, x)) in tickets.into_iter().zip(&xs).enumerate() {
+        let y = t.wait().unwrap().y;
+        assert_bits_eq(&y, &lin.forward(x, Some(&pair)), &format!("request {k}"));
+    }
+    // And the barrier holds: the id is gone for new work.
+    let err = engine.submit("lin", Some("ten"), rng.gauss_vec(m)).wait().unwrap_err();
+    assert!(format!("{err}").contains("not registered"), "{err}");
+    let stats = engine.shutdown();
+    assert_eq!(stats.requests, 64);
+    assert_eq!(stats.rejected, 1);
+}
+
+#[test]
+fn shipped_adapter_artifact_serves_bit_identically() {
+    // The multi-tenant deployment flow: the base ships once (v2 artifact),
+    // each tenant ships a small adapter artifact; loading both and serving
+    // matches the in-memory halves bit-for-bit.
+    let dir = std::env::temp_dir().join(format!("cloq_lifecycle_{}", std::process::id()));
+    let (m, n) = (40usize, 18usize);
+    let model = base_model(m, n, 730);
+    let set = adapter("tenant-7", m, n, 4, 731);
+    let pair = set.get("lin").unwrap().clone();
+    let bpath = dir.join("base.cloqpkd2");
+    let apath = dir.join("tenant7.cloqadp");
+    save_base_artifact(&model, &bpath).unwrap();
+    save_adapter_artifact(&set, &apath).unwrap();
+
+    let engine = ServeEngine::new(load_base_artifact(&bpath).unwrap(), EngineConfig::default());
+    engine.register_adapter(load_adapter_artifact(&apath).unwrap()).unwrap();
+    let mut rng = Rng::new(732);
+    let x = rng.gauss_vec(m);
+    let y = engine.submit("lin", Some("tenant-7"), x.clone()).wait().unwrap().y;
+    let direct = model.layer("lin").unwrap().forward(&x, Some(&pair));
+    assert_bits_eq(&y, &direct, "artifact-shipped adapter");
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,9 +1,11 @@
 //! Serve-path parity suite: the fused packed forward must agree with the
 //! dense `q_deq` reference **bit-for-bit** (0 ULP) for every init method
 //! that produces a quantization state, across bit widths {2,3,4,8}, group
-//! sizes (including non-divisors) and ragged shapes; the batched kernel
-//! must be bit-identical to serial calls; and the engine must return the
-//! same bits as calling the kernel directly.
+//! sizes (including non-divisors) and ragged shapes; the batched kernel —
+//! including MIXED-ADAPTER batches served through the grouped path — must
+//! be bit-identical to serial single-adapter calls; and the engine must
+//! return the same bits as calling the kernel directly, whatever mix of
+//! adapters a micro-batch carries.
 //!
 //! Contract recap (see `rust/src/serve/packed.rs` module docs): per output
 //! element the fused kernel accumulates contributions in ascending input-
@@ -15,9 +17,9 @@
 
 use cloq::coordinator::quantize::quantize_init;
 use cloq::linalg::{matmul_nt, matvec_t, syrk_t, Matrix};
-use cloq::lowrank::{init_layer, InitConfig, Method};
+use cloq::lowrank::{init_layer, InitConfig, LoraPair, Method};
 use cloq::quant::{quantize_nf, quantize_rtn, QuantState};
-use cloq::serve::{EngineConfig, PackedLayer, PackedModel, ServeEngine};
+use cloq::serve::{AdapterSet, EngineConfig, PackedLayer, PackedModel, Request, ServeEngine};
 use cloq::util::prng::Rng;
 
 fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
@@ -25,6 +27,10 @@ fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
     for (k, (u, v)) in a.iter().zip(b).enumerate() {
         assert_eq!(u.to_bits(), v.to_bits(), "{what}: element {k}: {u} vs {v}");
     }
+}
+
+fn rand_pair(m: usize, n: usize, r: usize, rng: &mut Rng) -> LoraPair {
+    LoraPair::new(Matrix::randn(m, r, 0.1, rng), Matrix::randn(n, r, 0.1, rng))
 }
 
 #[test]
@@ -42,10 +48,10 @@ fn fused_matches_dense_for_every_state_producing_method() {
                 let mut cfg = InitConfig::new(method, bits, r);
                 cfg.group_size = gs;
                 let li = init_layer(&w, Some(&h), &cfg, &mut rng);
-                let layer = PackedLayer::from_layer_init("l", method, &li).unwrap();
+                let (layer, pair) = PackedLayer::from_layer_init("l", method, &li).unwrap();
                 let x = rng.gauss_vec(m);
-                let fused = layer.forward(&x);
-                let dense = layer.dense_reference_forward(&li.q_deq, &x);
+                let fused = layer.forward(&x, Some(&pair));
+                let dense = layer.dense_reference_forward(&li.q_deq, &x, Some(&pair));
                 assert_bits_eq(&fused, &dense, &format!("{method:?} bits={bits} gs={gs}"));
             }
         }
@@ -63,14 +69,12 @@ fn fused_matches_dense_at_8_bit_and_tiny_groups() {
             for gs in [1usize, 7, 32] {
                 let q = quantize_rtn(&w, bits, gs);
                 let q_deq = q.dequantize();
-                let a = Matrix::randn(m, 3.min(m), 0.1, &mut rng);
-                let b = Matrix::randn(n, 3.min(m), 0.1, &mut rng);
-                let layer =
-                    PackedLayer::from_state("l", &QuantState::Int(q), &a, &b).unwrap();
+                let pair = rand_pair(m, n, 3.min(m), &mut rng);
+                let layer = PackedLayer::from_state("l", &QuantState::Int(q)).unwrap();
                 let x = rng.gauss_vec(m);
                 assert_bits_eq(
-                    &layer.forward(&x),
-                    &layer.dense_reference_forward(&q_deq, &x),
+                    &layer.forward(&x, Some(&pair)),
+                    &layer.dense_reference_forward(&q_deq, &x, Some(&pair)),
                     &format!("{m}x{n} bits={bits} gs={gs}"),
                 );
             }
@@ -88,13 +92,12 @@ fn nf_codebook_layers_are_bit_exact_too() {
     for bits in [2u32, 3, 4] {
         let q = quantize_nf(&w, bits, 16);
         let q_deq = q.dequantize();
-        let a = Matrix::randn(m, 4, 0.1, &mut rng);
-        let b = Matrix::randn(n, 4, 0.1, &mut rng);
-        let layer = PackedLayer::from_state("nf", &QuantState::Nf(q), &a, &b).unwrap();
+        let pair = rand_pair(m, n, 4, &mut rng);
+        let layer = PackedLayer::from_state("nf", &QuantState::Nf(q)).unwrap();
         let x = rng.gauss_vec(m);
         assert_bits_eq(
-            &layer.forward(&x),
-            &layer.dense_reference_forward(&q_deq, &x),
+            &layer.forward(&x, Some(&pair)),
+            &layer.dense_reference_forward(&q_deq, &x, Some(&pair)),
             &format!("nf bits={bits}"),
         );
     }
@@ -107,19 +110,49 @@ fn batched_forward_bit_identical_to_serial() {
     let w = Matrix::randn(m, n, 0.3, &mut rng);
     for bits in [2u32, 3, 4, 8] {
         let q = quantize_rtn(&w, bits, 16);
-        let a = Matrix::randn(m, 5, 0.1, &mut rng);
-        let b = Matrix::randn(n, 5, 0.1, &mut rng);
-        let layer = PackedLayer::from_state("l", &QuantState::Int(q), &a, &b).unwrap();
+        let pair = rand_pair(m, n, 5, &mut rng);
+        let layer = PackedLayer::from_state("l", &QuantState::Int(q)).unwrap();
         for batch in [1usize, 2, 7, 16] {
             let xs = Matrix::randn(batch, m, 1.0, &mut rng);
-            let ys = layer.forward_batch(&xs);
+            let ys = layer.forward_batch(&xs, Some(&pair));
             for bi in 0..batch {
                 assert_bits_eq(
                     ys.row(bi),
-                    &layer.forward(xs.row(bi)),
+                    &layer.forward(xs.row(bi), Some(&pair)),
                     &format!("bits={bits} batch={batch} row={bi}"),
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn mixed_adapter_batch_bit_identical_to_serial_per_adapter() {
+    // THE multi-tenant acceptance criterion: a batch mixing several
+    // adapters (and base-only rows) through the grouped kernel must give
+    // every row the same bits as a serial single-adapter forward — for
+    // every adapter in the mix, at every bit width, including interleaved
+    // (worst-case grouping) orders.
+    let mut rng = Rng::new(509);
+    let (m, n) = (44usize, 23usize);
+    let w = Matrix::randn(m, n, 0.3, &mut rng);
+    for bits in [2u32, 4, 8] {
+        let layer =
+            PackedLayer::from_state("l", &QuantState::Int(quantize_rtn(&w, bits, 16))).unwrap();
+        let pairs: Vec<LoraPair> =
+            (0..3).map(|k| rand_pair(m, n, 2 + k, &mut rng)).collect();
+        let batch = 11usize;
+        let xs = Matrix::randn(batch, m, 1.0, &mut rng);
+        // Interleaved: p0, p1, p2, none, p0, p1, ... — maximal group count.
+        let slots: Vec<Option<&LoraPair>> =
+            (0..batch).map(|bi| if bi % 4 == 3 { None } else { Some(&pairs[bi % 4]) }).collect();
+        let ys = layer.forward_batch_grouped(&xs, &slots);
+        for bi in 0..batch {
+            assert_bits_eq(
+                ys.row(bi),
+                &layer.forward(xs.row(bi), slots[bi]),
+                &format!("bits={bits} row={bi}"),
+            );
         }
     }
 }
@@ -136,10 +169,10 @@ fn fused_vs_materialized_effective_weight_within_tolerance() {
     let mut cfg = InitConfig::new(Method::CLoQ, 3, 8);
     cfg.group_size = 32;
     let li = init_layer(&w, Some(&h), &cfg, &mut rng);
-    let layer = PackedLayer::from_layer_init("l", Method::CLoQ, &li).unwrap();
+    let (layer, pair) = PackedLayer::from_layer_init("l", Method::CLoQ, &li).unwrap();
     let w_eff = li.q_deq.add(&matmul_nt(&li.a, &li.b));
     let x = rng.gauss_vec(m);
-    let fused = layer.forward(&x);
+    let fused = layer.forward(&x, Some(&pair));
     let dense_eff = matvec_t(&w_eff, &x);
     let scale = dense_eff.iter().fold(1.0f64, |s, v| s.max(v.abs()));
     for (k, (u, v)) in fused.iter().zip(&dense_eff).enumerate() {
@@ -151,32 +184,62 @@ fn fused_vs_materialized_effective_weight_within_tolerance() {
 }
 
 #[test]
-fn engine_returns_the_same_bits_as_the_kernel() {
+fn engine_returns_the_same_bits_as_the_kernel_across_adapters() {
+    // Requests spread over two registered tenants plus base-only, batched
+    // however the engine likes: every response must be bit-identical to a
+    // direct single-adapter kernel call.
     let mut rng = Rng::new(505);
     let (m, n) = (32usize, 12usize);
     let w = Matrix::randn(m, n, 0.3, &mut rng);
     let q = QuantState::Int(quantize_rtn(&w, 4, 8));
-    let a = Matrix::randn(m, 2, 0.1, &mut rng);
-    let b = Matrix::randn(n, 2, 0.1, &mut rng);
-    let layer = PackedLayer::from_state("lin", &q, &a, &b).unwrap();
-    let xs: Vec<Vec<f64>> = (0..20).map(|_| rng.gauss_vec(m)).collect();
-    let direct: Vec<Vec<f64>> = xs.iter().map(|x| layer.forward(x)).collect();
+    let layer = PackedLayer::from_state("lin", &q).unwrap();
+    let pairs = [rand_pair(m, n, 2, &mut rng), rand_pair(m, n, 3, &mut rng)];
+    let xs: Vec<Vec<f64>> = (0..24).map(|_| rng.gauss_vec(m)).collect();
+    let slot = |k: usize| match k % 3 {
+        2 => None,
+        t => Some(t),
+    };
+    let direct: Vec<Vec<f64>> = xs
+        .iter()
+        .enumerate()
+        .map(|(k, x)| layer.forward(x, slot(k).map(|t| &pairs[t])))
+        .collect();
 
     let engine = ServeEngine::new(
         PackedModel::new(vec![layer]),
         EngineConfig { workers: 3, max_batch: 8, ..EngineConfig::default() },
     );
-    let tickets =
-        engine.submit_all(xs.into_iter().map(|x| ("lin".to_string(), x)).collect());
+    for (t, pair) in pairs.iter().enumerate() {
+        let set = AdapterSet::from_pairs(
+            &format!("t{t}"),
+            vec![("lin".to_string(), pair.clone())],
+        )
+        .unwrap();
+        engine.register_adapter(set).unwrap();
+    }
+    let reqs: Vec<Request> = xs
+        .into_iter()
+        .enumerate()
+        .map(|(k, x)| match slot(k) {
+            None => Request::base("lin", x),
+            Some(t) => Request::with_adapter("lin", &format!("t{t}"), x),
+        })
+        .collect();
+    let tickets = engine.submit_all(reqs);
     for (k, t) in tickets.into_iter().enumerate() {
         let resp = t.wait().unwrap();
         assert_bits_eq(&resp.y, &direct[k], &format!("request {k}"));
         assert!(resp.queue_s >= 0.0 && resp.compute_s >= 0.0);
+        assert!(resp.adapter_groups >= 1);
     }
     let stats = engine.shutdown();
-    assert_eq!(stats.requests, 20);
-    assert!(stats.batches <= 20);
-    assert!(stats.max_batch_seen >= 2, "burst of 20 must coalesce: {stats:?}");
+    assert_eq!(stats.requests, 24);
+    assert!(stats.batches <= 24);
+    assert!(stats.max_batch_seen >= 2, "burst of 24 must coalesce: {stats:?}");
+    assert!(
+        stats.mixed_batches >= 1,
+        "a one-layer model with 3 tenants must form mixed batches: {stats:?}"
+    );
 }
 
 #[test]
@@ -193,26 +256,30 @@ fn lora16_layers_are_rejected_with_the_method_named() {
 
 #[test]
 fn model_init_exact_state_serves_bit_identically_to_base_q() {
-    // End-to-end through the coordinator: quantize_init's `exact` states,
-    // packed via PackedModel::from_model_init, must serve the same numbers
-    // as the dense base the trainer sees (f32-rounded, since base_q is the
-    // lowered f32 store) — and bit-identical to the f64 q_deq path.
+    // End-to-end through the coordinator: quantize_init's `exact` states
+    // (keep_exact = true), packed via PackedModel::from_model_init, must
+    // serve the same numbers as the dense base the trainer sees
+    // (f32-rounded, since base_q is the lowered f32 store) — and
+    // bit-identical to the f64 q_deq path.
     let (man, base, grams) = synth::model(2, 8, 12, 2, 507);
     let mut cfg = InitConfig::new(Method::CLoQ, 3, 2);
     cfg.group_size = 8;
-    let init = quantize_init(&man, &base, Some(&grams), &cfg, 99, 2).unwrap();
-    let packed = PackedModel::from_model_init(&init).unwrap();
-    assert_eq!(packed.layers.len(), init.exact.len());
+    let init = quantize_init(&man, &base, Some(&grams), &cfg, 99, 2, true).unwrap();
+    let (packed, set) = PackedModel::from_model_init(&init, "init").unwrap();
+    let exact = init.exact.as_ref().unwrap();
+    assert_eq!(packed.layers.len(), exact.len());
+    assert_eq!(set.len(), exact.len());
     let mut rng = Rng::new(508);
-    for (name, qs) in &init.exact {
+    for (name, qs) in exact {
         let layer = packed.layer(name).unwrap();
+        let pair = set.get(name).unwrap();
         let q_deq = qs.dequantize();
         // Adapters in the store are f32; widening is exact, so the packed
         // layer's forward equals the dense reference built from the same
         // widened adapters.
         let x = rng.gauss_vec(layer.rows);
-        let fused = layer.forward(&x);
-        let dense = layer.dense_reference_forward(&q_deq, &x);
+        let fused = layer.forward(&x, Some(pair));
+        let dense = layer.dense_reference_forward(&q_deq, &x, Some(pair));
         for (u, v) in fused.iter().zip(&dense) {
             assert_eq!(u.to_bits(), v.to_bits(), "layer {name}");
         }
@@ -269,7 +336,11 @@ mod synth {
                 });
             }
         }
-        inputs.push(TensorSpec { name: "tokens".to_string(), shape: vec![2, 8], dtype: Dtype::I32 });
+        inputs.push(TensorSpec {
+            name: "tokens".to_string(),
+            shape: vec![2, 8],
+            dtype: Dtype::I32,
+        });
         inputs.push(TensorSpec { name: "mask".to_string(), shape: vec![2, 8], dtype: Dtype::F32 });
         let entry = EntrySpec {
             file: "eval_loss.hlo.txt".to_string(),

@@ -185,14 +185,18 @@ fn quantize_init_identical_for_any_worker_count() {
     let (man, base, grams) = synth_model(2, 8, 12, 2, 77);
     let mut cfg = InitConfig::new(Method::CLoQ, 3, 2);
     cfg.group_size = 8;
-    let one = quantize_init(&man, &base, Some(&grams), &cfg, 123, 1).unwrap();
+    let one = quantize_init(&man, &base, Some(&grams), &cfg, 123, 1, true).unwrap();
     let one_bytes = init_bytes(&one);
     for workers in [2usize, 8] {
-        let many = quantize_init(&man, &base, Some(&grams), &cfg, 123, workers).unwrap();
+        let many = quantize_init(&man, &base, Some(&grams), &cfg, 123, workers, true).unwrap();
         assert_stores_identical(&one.base_q, &many.base_q, &format!("base_q w={workers}"));
         assert_stores_identical(&one.lora, &many.lora, &format!("lora w={workers}"));
         assert_stores_identical(&one.quant, &many.quant, &format!("quant w={workers}"));
-        assert_exact_identical(&one.exact, &many.exact, &format!("exact w={workers}"));
+        assert_exact_identical(
+            one.exact.as_ref().unwrap(),
+            many.exact.as_ref().unwrap(),
+            &format!("exact w={workers}"),
+        );
         assert_eq!(
             one.bits_per_weight.to_bits(),
             many.bits_per_weight.to_bits(),
@@ -203,9 +207,28 @@ fn quantize_init_identical_for_any_worker_count() {
     // Also across methods that use the RNG for their init (std LoRA init
     // draws A ~ N(0, 1/r) per layer).
     let gcfg = InitConfig::new(Method::GptqLora, 3, 2);
-    let g1 = quantize_init(&man, &base, Some(&grams), &gcfg, 9, 1).unwrap();
-    let g8 = quantize_init(&man, &base, Some(&grams), &gcfg, 9, 8).unwrap();
+    let g1 = quantize_init(&man, &base, Some(&grams), &gcfg, 9, 1, true).unwrap();
+    let g8 = quantize_init(&man, &base, Some(&grams), &gcfg, 9, 8, true).unwrap();
     assert_stores_identical(&g1.lora, &g8.lora, "gptq-lora adapters");
+}
+
+#[test]
+fn keep_exact_false_skips_the_serving_trail_but_changes_nothing_else() {
+    // The opt-out must be a pure memory win: every other store is
+    // byte-identical with and without the exact trail, the trail itself is
+    // absent, and the serve builder refuses actionably.
+    let (man, base, grams) = synth_model(2, 8, 12, 2, 79);
+    let mut cfg = InitConfig::new(Method::CLoQ, 3, 2);
+    cfg.group_size = 8;
+    let with = quantize_init(&man, &base, Some(&grams), &cfg, 123, 2, true).unwrap();
+    let without = quantize_init(&man, &base, Some(&grams), &cfg, 123, 2, false).unwrap();
+    assert!(with.exact.is_some() && without.exact.is_none());
+    assert_stores_identical(&with.base_q, &without.base_q, "base_q keep_exact");
+    assert_stores_identical(&with.lora, &without.lora, "lora keep_exact");
+    assert_stores_identical(&with.quant, &without.quant, "quant keep_exact");
+    let err = cloq::serve::PackedModel::from_model_init(&without, "t").unwrap_err();
+    let msg = format!("{err}");
+    assert!(msg.contains("keep_exact = true"), "must say how to fix it: {msg}");
 }
 
 #[test]
@@ -218,7 +241,7 @@ fn panicking_layer_surfaces_without_wedging_pool() {
     let (man, base, mut grams) = synth_model(2, 8, 12, 2, 78);
     grams.remove("l1.wk").expect("synthetic gram set has l1.wk");
     let cfg = InitConfig::new(Method::CLoQ, 3, 2);
-    let err = quantize_init(&man, &base, Some(&grams), &cfg, 9, 4).unwrap_err();
+    let err = quantize_init(&man, &base, Some(&grams), &cfg, 9, 4, true).unwrap_err();
     let msg = format!("{err}");
     assert!(msg.contains("panicked"), "error should mention the panic: {msg}");
     assert!(msg.contains("l1.wk"), "error should name the failing layer: {msg}");
@@ -226,7 +249,7 @@ fn panicking_layer_surfaces_without_wedging_pool() {
     // The pool is not wedged: the same stage succeeds immediately after
     // with an intact gram set on the same process.
     let (man2, base2, grams2) = synth_model(2, 8, 12, 2, 78);
-    assert!(quantize_init(&man2, &base2, Some(&grams2), &cfg, 9, 4).is_ok());
+    assert!(quantize_init(&man2, &base2, Some(&grams2), &cfg, 9, 4, true).is_ok());
 }
 
 #[test]

@@ -257,7 +257,8 @@ fn sym_eig_invariants() {
         // Orthonormal vectors, PSD values, trace preserved.
         let vtv = matmul(&e.vectors.transpose(), &e.vectors);
         assert!(vtv.max_diff(&Matrix::eye(n)) < 1e-7, "orth seed={seed}");
-        assert!(e.values.iter().all(|&l| l > -1e-7 * e.values[0].abs().max(1.0)), "psd seed={seed}");
+        let floor = -1e-7 * e.values[0].abs().max(1.0);
+        assert!(e.values.iter().all(|&l| l > floor), "psd seed={seed}");
         let tr: f64 = e.values.iter().sum();
         assert!((tr - h.trace()).abs() < 1e-6 * h.trace().abs().max(1.0), "trace seed={seed}");
         // Rank bound: at most `samples` nonzero eigenvalues.

@@ -85,7 +85,10 @@ fn factor_splits_agree_on_product() {
         let r = rng.range(1, dw.rows.min(dw.cols) as i64) as usize;
         let prods: Vec<Matrix> = [FactorSplit::AllInA, FactorSplit::Sqrt, FactorSplit::AllInB]
             .iter()
-            .map(|&split| cloq_lowrank(&h, &dw, &CloqConfig { rank: r, split, rcond: 1e-12, randomized: false }).ab_t())
+            .map(|&split| {
+                let cfg = CloqConfig { rank: r, split, rcond: 1e-12, randomized: false };
+                cloq_lowrank(&h, &dw, &cfg).ab_t()
+            })
             .collect();
         let scale = prods[0].max_abs().max(1e-9);
         assert!(prods[0].max_diff(&prods[1]) < 1e-6 * scale, "A-vs-sqrt seed={seed}");
@@ -111,7 +114,8 @@ fn loftq_objective_never_increases_with_best_iterate() {
         let w = Matrix::randn(m, n, 0.5, rng);
         let bits = [2u32, 4][rng.below(2)];
         let r = rng.range(1, m.min(n) as i64) as usize;
-        let cfg = LoftqConfig { bits, group_size: m, rank: r, iters: 6, quantizer: LoftqQuantizer::Int };
+        let cfg =
+            LoftqConfig { bits, group_size: m, rank: r, iters: 6, quantizer: LoftqQuantizer::Int };
         let init = loftq(&w, &cfg);
         // Returned objective == min over the trace.
         let returned = cloq::linalg::norms::fro2(&init.q_deq.add(&init.ab_t()).sub(&w));
@@ -171,7 +175,8 @@ fn rank_deficient_h_never_panics_and_stays_finite() {
         let h = syrk_t(&x); // NOT damped
         let dw = Matrix::randn(m, n, 0.3, rng);
         let r = rng.range(1, n as i64) as usize;
-        let init = cloq_lowrank(&h, &dw, &CloqConfig { rank: r, rcond: 1e-10, ..Default::default() });
+        let init =
+            cloq_lowrank(&h, &dw, &CloqConfig { rank: r, rcond: 1e-10, ..Default::default() });
         assert!(init.a.max_abs().is_finite(), "seed={seed}");
         assert!(init.b.max_abs().is_finite(), "seed={seed}");
     });

@@ -1,0 +1,168 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare freshly emitted BENCH_*.json against the
+committed baseline copies and fail on large throughput regressions.
+
+Stdlib-only by design (the CI runner and the offline sandbox have no pip).
+
+Usage:
+    scripts/bench_diff.py --baseline <dir> --fresh <dir> [--threshold 0.25]
+
+The CI bench-smoke job copies the committed BENCH_*.json (if any) into a
+baseline directory BEFORE running the benches (which overwrite the files
+in the working tree), then calls this script.
+
+Gated rows (a >threshold drop in any of them fails the job):
+  BENCH_serve.json
+    - fused_vs_dense[*].fused.min_s          (fused kernel, per bit width;
+                                              lower is better)
+    - kernel_batch_sweep[*].requests_per_s_min  (batched kernel throughput)
+    - engine.batched.requests_per_s          (the batcher row)
+    - engine.serial.requests_per_s
+  BENCH_adapters.json (reported, also gated)
+    - adapter_sweep[*].requests_per_s        (multi-tenant engine rows)
+    - mixed_batch.uniform.min_s / .sorted_8_groups.min_s
+
+Comparisons are skipped (with a note) when:
+  - the baseline file does not exist (nothing committed yet);
+  - the "smoke" flags of baseline and fresh records differ (full-run
+    numbers must never be judged against smoke-mode numbers);
+  - the recorded "shape"/"rank" identity keys differ (the bench was
+    re-sized). NOTE: per-row request counts are NOT identity keys — a PR
+    that changes a bench's request count should regenerate the committed
+    baseline in the same change.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+# (file, dotted path, kind) — kind "time" = lower is better,
+# "rate" = higher is better. A '*' path element iterates a list, pairing
+# baseline/fresh entries by index.
+GATED_ROWS = [
+    ("BENCH_serve.json", "fused_vs_dense.*.fused.min_s", "time"),
+    ("BENCH_serve.json", "kernel_batch_sweep.*.requests_per_s_min", "rate"),
+    ("BENCH_serve.json", "engine.batched.requests_per_s", "rate"),
+    ("BENCH_serve.json", "engine.serial.requests_per_s", "rate"),
+    ("BENCH_adapters.json", "adapter_sweep.*.requests_per_s", "rate"),
+    ("BENCH_adapters.json", "mixed_batch.uniform.min_s", "time"),
+    ("BENCH_adapters.json", "mixed_batch.sorted_8_groups.min_s", "time"),
+]
+
+# Records with differing values for any of these keys are not comparable.
+IDENTITY_KEYS = ["smoke", "shape", "rank"]
+
+
+def extract(record, path):
+    """Yield (pretty_path, value) for a dotted path; '*' fans out lists."""
+    parts = path.split(".")
+
+    def walk(node, i, crumbs):
+        if i == len(parts):
+            yield (".".join(crumbs), node)
+            return
+        part = parts[i]
+        if part == "*":
+            if not isinstance(node, list):
+                return
+            for k, item in enumerate(node):
+                yield from walk(item, i + 1, crumbs + [str(k)])
+        else:
+            if not isinstance(node, dict) or part not in node:
+                return
+            yield from walk(node[part], i + 1, crumbs + [part])
+
+    yield from walk(record, 0, [])
+
+
+def comparable(base, fresh, fname):
+    for key in IDENTITY_KEYS:
+        if base.get(key) != fresh.get(key):
+            print(
+                f"  SKIP {fname}: '{key}' differs "
+                f"(baseline {base.get(key)!r} vs fresh {fresh.get(key)!r}) — "
+                "not comparable"
+            )
+            return False
+    return True
+
+
+def compare_file(fname, base_dir, fresh_dir, threshold):
+    """Returns (regressions, compared) for one BENCH file."""
+    base_path = os.path.join(base_dir, fname)
+    fresh_path = os.path.join(fresh_dir, fname)
+    if not os.path.exists(base_path):
+        print(f"  SKIP {fname}: no committed baseline")
+        return [], 0
+    if not os.path.exists(fresh_path):
+        # The bench was supposed to emit this file: that IS a failure.
+        return [f"{fname}: fresh copy missing (bench did not emit it)"], 0
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    if not comparable(base, fresh, fname):
+        return [], 0
+
+    regressions = []
+    compared = 0
+    for file_pat, path, kind in GATED_ROWS:
+        if file_pat != fname:
+            continue
+        base_rows = dict(extract(base, path))
+        fresh_rows = dict(extract(fresh, path))
+        for crumb, bval in base_rows.items():
+            fval = fresh_rows.get(crumb)
+            if not isinstance(bval, (int, float)) or not isinstance(fval, (int, float)):
+                continue
+            if bval <= 0 or fval <= 0:
+                continue
+            compared += 1
+            if kind == "time":
+                ratio = fval / bval  # >1 = slower
+                worse = ratio > 1.0 + threshold
+                verdict = f"{ratio:.2f}x slower" if ratio > 1 else f"{1 / ratio:.2f}x faster"
+            else:
+                ratio = fval / bval  # <1 = slower
+                worse = ratio < 1.0 - threshold
+                verdict = f"{ratio:.2f}x of baseline"
+            marker = "REGRESSION" if worse else "ok"
+            print(f"  [{marker:>10}] {fname}:{crumb}  {bval:.6g} -> {fval:.6g}  ({verdict})")
+            if worse:
+                regressions.append(f"{fname}:{crumb} {verdict} (threshold {threshold:.0%})")
+    return regressions, compared
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", required=True, help="dir holding committed BENCH_*.json")
+    ap.add_argument("--fresh", required=True, help="dir holding freshly emitted BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="fractional regression that fails the gate (default 0.25 = 25%%)",
+    )
+    args = ap.parse_args(argv)
+
+    files = sorted({fname for fname, _, _ in GATED_ROWS})
+    all_regressions = []
+    total_compared = 0
+    print(f"bench_diff: baseline={args.baseline} fresh={args.fresh} threshold={args.threshold:.0%}")
+    for fname in files:
+        regs, compared = compare_file(fname, args.baseline, args.fresh, args.threshold)
+        all_regressions.extend(regs)
+        total_compared += compared
+
+    if all_regressions:
+        print(f"\nbench_diff: {len(all_regressions)} regression(s):")
+        for r in all_regressions:
+            print(f"  - {r}")
+        return 1
+    print(f"\nbench_diff: OK ({total_compared} rows compared, none past the threshold)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,23 @@
 #!/usr/bin/env bash
-# Repo gate: build + tests + clippy on the Rust workspace.
+# Repo gate: build + tests + clippy + rustfmt on the Rust workspace.
 #
 # Usage: scripts/check.sh [--bench]
 #   --bench  additionally run the perf benches that emit BENCH_*.json
-#            (bench_optq / bench_linalg / bench_serve; slow — not part of
-#            the default gate)
+#            (bench_optq / bench_linalg / bench_serve / bench_adapters;
+#            slow — not part of the default gate). Set CLOQ_BENCH_SMOKE=1
+#            for the small-size smoke mode the CI bench-smoke job uses
+#            (seconds instead of minutes; records carry "smoke": true so
+#            scripts/bench_diff.py never mixes smoke and full baselines).
+#
+# CI (.github/workflows/ci.yml) runs this twice:
+#   * job `check`       — scripts/check.sh            (the hard gate)
+#   * job `bench-smoke` — CLOQ_BENCH_SMOKE=1 scripts/check.sh --bench,
+#                         then scripts/bench_diff.py against the committed
+#                         BENCH_*.json baselines (>25% throughput
+#                         regression on the fused-kernel / batcher rows
+#                         fails the job), and uploads the fresh JSON as a
+#                         workflow artifact so the perf trajectory is
+#                         recorded per PR.
 #
 # The crates.io-free sandbox is the default environment: all dependencies
 # are vendored path crates, so everything below runs with --offline.
@@ -29,24 +42,22 @@ else
     echo "== clippy not installed; skipping lint gate =="
 fi
 
-# rustfmt gate (tolerated-absent like clippy). Advisory for now: the
-# pre-gate tree was written before the formatter was wired in, so style
-# drift reports loudly but does not fail the gate — tightening to a hard
-# failure once the tree is formatted is tracked in ROADMAP.md Open items.
+# rustfmt gate — HARD: style drift fails the run (the tree is formatted;
+# the advisory grace period is over). Tolerated-absent like clippy for
+# minimal toolchains; CI always installs the component.
 if cargo fmt --version >/dev/null 2>&1; then
-    echo "== cargo fmt --check (advisory) =="
-    if ! cargo fmt --check; then
-        echo "WARNING: rustfmt reports style drift (advisory — not failing the gate)"
-    fi
+    echo "== cargo fmt --check (hard gate) =="
+    cargo fmt --check
 else
     echo "== rustfmt not installed; skipping format gate =="
 fi
 
 if [[ "${1:-}" == "--bench" ]]; then
-    echo "== perf benches (BENCH_optq.json / BENCH_linalg.json / BENCH_serve.json) =="
+    echo "== perf benches (BENCH_{optq,linalg,serve,adapters}.json) =="
     cargo bench --bench bench_optq "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_linalg "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_serve "${CARGO_FLAGS[@]}"
+    cargo bench --bench bench_adapters "${CARGO_FLAGS[@]}"
 fi
 
 echo "check.sh: all green"
