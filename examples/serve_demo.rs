@@ -11,9 +11,9 @@
 use cloq::linalg::{syrk_t, Matrix};
 use cloq::lowrank::{init_layer, InitConfig, LoraPair, Method};
 use cloq::serve::{
-    load_adapter_artifact, load_artifact_compat, load_base_artifact, save_adapter_artifact,
-    save_artifact_v1, save_base_artifact, AdapterSet, EngineConfig, PackedLayer, PackedModel,
-    Request, ServeEngine,
+    forward_route_serial, load_adapter_artifact, load_artifact_compat, load_base_artifact,
+    save_adapter_artifact, save_artifact_v1, save_base_artifact, AdapterSet, EngineConfig,
+    ModelRequest, PackedLayer, PackedModel, Request, ServeEngine, SessionRequest, StepFn,
 };
 use cloq::util::prng::Rng;
 
@@ -119,6 +119,7 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(max_ulp == 0, "parity contract violated");
 
     // ---- 3. serve a concurrent multi-tenant burst -------------------------
+    let reference = loaded.clone(); // serial-reference copy for §4's parity check
     let engine = ServeEngine::new(
         loaded,
         EngineConfig { workers: 2, max_batch: 16, ..EngineConfig::default() },
@@ -153,10 +154,77 @@ fn main() -> anyhow::Result<()> {
         engine.registry().ids()
     );
 
+    // ---- 4. full-model pipelined forwards + a decode-style session --------
+    // One ModelRequest walks the whole 96→64→96→128 chain through the
+    // batcher: hops from concurrent requests at the same depth coalesce.
+    // The caller-driven serial reference must match bit-for-bit.
+    let route: Vec<String> = names.clone();
+    let x0s: Vec<Vec<f64>> = (0..8).map(|_| rng.gauss_vec(96)).collect();
+    let model_tickets: Vec<_> = x0s
+        .iter()
+        .map(|x| {
+            engine.submit_model(ModelRequest::with_adapter(route.clone(), "tenant-a", x.clone()))
+        })
+        .collect();
+    let mut fwd_ulp = 0u64;
+    let mut max_hop_batch = 0usize;
+    for (x, t) in x0s.iter().zip(model_tickets) {
+        let resp = t.wait()?;
+        let serial = forward_route_serial(&reference, &route, Some(&tenant_a), x)?;
+        for (u, v) in resp.y.iter().zip(&serial) {
+            fwd_ulp = fwd_ulp.max(u.to_bits().abs_diff(v.to_bits()));
+        }
+        max_hop_batch = max_hop_batch.max(resp.max_batch_seen);
+    }
+    println!(
+        "\n== pipelined forward == 8 model requests x {} hops, \
+         max ULP vs serial reference: {fwd_ulp} (contract: 0), \
+         largest coalesced hop batch: {max_hop_batch}",
+        route.len()
+    );
+    anyhow::ensure!(fwd_ulp == 0, "pipelined forward parity violated");
+    // A 3-step session (the autoregressive-decode shape): the step fn
+    // bridges the 128-wide chain output back to the 96-wide head.
+    let step_of = |y: &[f64]| -> Vec<f64> { y.iter().take(96).map(|v| v * 0.1).collect() };
+    let step: StepFn = Box::new(move |_, y| Some(step_of(y)));
+    let sess = engine
+        .submit_session(SessionRequest::with_adapter(
+            route.clone(),
+            "tenant-a",
+            x0s[0].clone(),
+            3,
+            step,
+        ))
+        .wait()?;
+    let mut x = x0s[0].clone();
+    let mut serial = Vec::new();
+    for _ in 0..3 {
+        serial = forward_route_serial(&reference, &route, Some(&tenant_a), &x)?;
+        x = serial.iter().take(96).map(|v| v * 0.1).collect();
+    }
+    let sess_ulp = sess
+        .y
+        .iter()
+        .zip(&serial)
+        .fold(0u64, |m, (u, v)| m.max(u.to_bits().abs_diff(v.to_bits())));
+    println!(
+        "   session: {} forwards, {} hops, {:.1} us queued / {:.1} us compute, \
+         max ULP vs stepped serial: {sess_ulp} (contract: 0)",
+        sess.forwards,
+        sess.hops,
+        sess.queue_s * 1e6,
+        sess.compute_s * 1e6
+    );
+    anyhow::ensure!(sess_ulp == 0, "session parity violated");
+
     let stats = engine.shutdown();
     println!(
-        "   {} requests in {} micro-batches (mean batch {:.1}, max {}, mixed {})",
+        "\n== totals == {} single requests + {} model/session requests \
+         ({} forwards, {} hops) in {} micro-batches (mean batch {:.1}, max {}, mixed {})",
         stats.requests,
+        stats.model_requests,
+        stats.session_forwards,
+        stats.hops,
         stats.batches,
         stats.mean_batch(),
         stats.max_batch_seen,

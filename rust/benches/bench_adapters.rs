@@ -204,6 +204,12 @@ fn main() {
         ("smoke", Json::from(smoke())),
         ("shape", Json::Arr(vec![Json::from(m), Json::from(n)])),
         ("rank", Json::from(r)),
+        // Identity key for bench_diff: sweep rows pair by index, so the
+        // gate must refuse comparison when the adapter counts change.
+        (
+            "adapter_counts",
+            Json::Arr(adapter_counts.iter().map(|&a| Json::from(a)).collect()),
+        ),
         ("adapter_sweep", Json::Arr(sweep_records)),
         ("multi_tenant_throughput_retention", Json::from(multi_tenant_retention)),
         ("mixed_batch", mixed_json),

@@ -1,0 +1,286 @@
+//! Full-model pipelined forward benchmarks — the numbers behind
+//! EXPERIMENTS.md §Forward, emitted as BENCH_forward.json:
+//!
+//! 1. **pipelined vs caller-driven serial**: S concurrent "sessions", each
+//!    K sequential full-model forwards over an L-layer chain.
+//!    *Pipelined* = one `submit_session` per session: every hop re-enters
+//!    the batcher, so hops from different sessions at the same depth
+//!    coalesce into shared grouped kernel calls. *Serial* = what a caller
+//!    without `submit_model` must do: drive the chain by hand with one
+//!    single-layer `submit().wait()` per hop (S caller threads, so the
+//!    engine still sees concurrent traffic — it just can't see past each
+//!    caller's next hop). The gap at S ≥ 8 is the continuous-batching win
+//!    this path exists for; at S = 1 the two are the same work and the
+//!    pipelined path only saves ticket round-trips.
+//! 2. **mixed-adapter sessions**: the same pipelined workload spread
+//!    round-robin over 4 tenants on one base — multi-tenant decode.
+//!
+//! Under `CLOQ_BENCH_SMOKE=1` (the CI bench-smoke job) shapes and counts
+//! shrink and the record carries `"smoke": true` so `scripts/bench_diff.py`
+//! only compares like against like.
+//!
+//! Correctness is NOT measured here: the pipelined traversal is bit-exact
+//! vs the serial reference by `rust/tests/parity_forward.rs`; this file is
+//! pure throughput.
+
+use std::time::Instant;
+
+use cloq::bench::{section, smoke, smoke_scaled, write_bench_json};
+use cloq::linalg::Matrix;
+use cloq::lowrank::LoraPair;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{
+    AdapterSet, EngineConfig, ModelRequest, PackedLayer, PackedModel, ServeEngine,
+    SessionRequest, StepFn,
+};
+use cloq::util::json::Json;
+use cloq::util::prng::Rng;
+
+fn mk_chain(layers: usize, width: usize, seed: u64) -> (PackedModel, Vec<String>) {
+    let mut rng = Rng::new(seed);
+    let mut packed = Vec::new();
+    let mut route = Vec::new();
+    for l in 0..layers {
+        let name = format!("l{l}");
+        let w = Matrix::randn(width, width, 0.3, &mut rng);
+        packed.push(
+            PackedLayer::from_state(&name, &QuantState::Int(quantize_rtn(&w, 4, 64))).unwrap(),
+        );
+        route.push(name);
+    }
+    (PackedModel::new(packed), route)
+}
+
+fn mk_set(id: &str, model: &PackedModel, r: usize, rng: &mut Rng) -> AdapterSet {
+    let mut set = AdapterSet::new(id);
+    for l in &model.layers {
+        let pair =
+            LoraPair::new(Matrix::randn(l.rows, r, 0.1, rng), Matrix::randn(l.cols, r, 0.1, rng));
+        set.insert(&l.name, pair).unwrap();
+    }
+    set
+}
+
+/// The inter-forward step both modes share: normalize to unit max-abs so
+/// K forwards cannot overflow whatever the chain's gain is.
+fn step_of(y: &[f64]) -> Vec<f64> {
+    let s = y.iter().fold(1e-30f64, |a, v| a.max(v.abs()));
+    y.iter().map(|v| v / s).collect()
+}
+
+fn engine_of(layers: usize, width: usize, seed: u64) -> (ServeEngine, Vec<String>) {
+    let (model, route) = mk_chain(layers, width, seed);
+    let engine = ServeEngine::new(
+        model,
+        EngineConfig { workers: 2, max_batch: 32, ..EngineConfig::default() },
+    );
+    (engine, route)
+}
+
+fn main() {
+    let n_layers = smoke_scaled(6, 4);
+    let width = smoke_scaled(256, 64);
+    let k_forwards = smoke_scaled(16, 4);
+    let runs = smoke_scaled(3, 2);
+    let session_counts: Vec<usize> = if smoke() { vec![1, 4, 8] } else { vec![1, 8, 64] };
+    let mut rng = Rng::new(31);
+
+    section(&format!(
+        "pipelined vs caller-driven serial ({n_layers} layers x {width} wide, \
+         {k_forwards} forwards/session)"
+    ));
+    let mut sweep_records = Vec::new();
+    let mut speedup_at_max = 0.0f64;
+    for &sessions in &session_counts {
+        let x0s: Vec<Vec<f64>> = (0..sessions).map(|_| rng.gauss_vec(width)).collect();
+        let total_forwards = sessions * k_forwards;
+
+        // --- pipelined: one SessionRequest per session --------------------
+        let mut best_pipe = f64::INFINITY;
+        let mut best_stats = None;
+        for _ in 0..runs {
+            let (engine, route) = engine_of(n_layers, width, 32);
+            let t0 = Instant::now();
+            let tickets: Vec<_> = x0s
+                .iter()
+                .map(|x0| {
+                    let step: StepFn = Box::new(|_, y| Some(step_of(y)));
+                    engine.submit_session(SessionRequest::new(
+                        route.clone(),
+                        x0.clone(),
+                        k_forwards,
+                        step,
+                    ))
+                })
+                .collect();
+            for t in tickets {
+                t.wait().unwrap();
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = engine.shutdown();
+            if wall < best_pipe {
+                best_pipe = wall;
+                best_stats = Some(stats);
+            }
+        }
+        let stats = best_stats.unwrap();
+
+        // --- serial: each caller thread drives its chain hop by hop -------
+        let mut best_serial = f64::INFINITY;
+        for _ in 0..runs {
+            let (engine, route) = engine_of(n_layers, width, 32);
+            let t0 = Instant::now();
+            std::thread::scope(|s| {
+                for x0 in &x0s {
+                    let engine = &engine;
+                    let route = &route;
+                    s.spawn(move || {
+                        let mut x = x0.clone();
+                        for _ in 0..k_forwards {
+                            for name in route {
+                                x = engine.submit(name, None, x).wait().unwrap().y;
+                            }
+                            x = step_of(&x);
+                        }
+                    });
+                }
+            });
+            let wall = t0.elapsed().as_secs_f64();
+            engine.shutdown();
+            best_serial = best_serial.min(wall);
+        }
+
+        let pipe_fps = total_forwards as f64 / best_pipe;
+        let serial_fps = total_forwards as f64 / best_serial;
+        let speedup = pipe_fps / serial_fps.max(1e-30);
+        speedup_at_max = speedup; // last iteration = largest session count
+        println!(
+            "sessions={sessions:<3} pipelined {pipe_fps:>8.0} fwd/s (mean batch {:.1})   \
+             serial {serial_fps:>8.0} fwd/s   speedup {speedup:.2}x",
+            stats.mean_batch(),
+        );
+        let mut pipe_rec = Json::obj();
+        pipe_rec.set("best_wall_s", Json::from(best_pipe));
+        pipe_rec.set("forwards_per_s", Json::from(pipe_fps));
+        pipe_rec.set("mean_batch", Json::from(stats.mean_batch()));
+        pipe_rec.set("max_batch_seen", Json::from(stats.max_batch_seen));
+        let mut serial_rec = Json::obj();
+        serial_rec.set("best_wall_s", Json::from(best_serial));
+        serial_rec.set("forwards_per_s", Json::from(serial_fps));
+        let mut rec = Json::obj();
+        rec.set("sessions", Json::from(sessions));
+        rec.set("forwards_each", Json::from(k_forwards));
+        rec.set("total_forwards", Json::from(total_forwards));
+        rec.set("pipelined", pipe_rec);
+        rec.set("serial", serial_rec);
+        rec.set("speedup_pipelined_vs_serial", Json::from(speedup));
+        sweep_records.push(rec);
+    }
+
+    // ---- mixed-adapter sessions: multi-tenant decode ----------------------
+    let tenants = 4usize;
+    let sessions = *session_counts.last().unwrap();
+    section(&format!("mixed-adapter pipelined sessions ({sessions} sessions, {tenants} tenants)"));
+    let x0s: Vec<Vec<f64>> = (0..sessions).map(|_| rng.gauss_vec(width)).collect();
+    let mut best_mixed = f64::INFINITY;
+    let mut mixed_hops = 0usize;
+    let mut total_hops = 0usize;
+    for _ in 0..runs {
+        let (model, route) = mk_chain(n_layers, width, 32);
+        let mut arng = Rng::new(33);
+        let sets: Vec<AdapterSet> =
+            (0..tenants).map(|a| mk_set(&format!("t{a}"), &model, 8, &mut arng)).collect();
+        let engine = ServeEngine::new(
+            model,
+            EngineConfig { workers: 2, max_batch: 32, ..EngineConfig::default() },
+        );
+        for set in sets {
+            engine.register_adapter(set).unwrap();
+        }
+        let t0 = Instant::now();
+        let tickets: Vec<_> = x0s
+            .iter()
+            .enumerate()
+            .map(|(i, x0)| {
+                let step: StepFn = Box::new(|_, y| Some(step_of(y)));
+                engine.submit_session(SessionRequest::with_adapter(
+                    route.clone(),
+                    &format!("t{}", i % tenants),
+                    x0.clone(),
+                    k_forwards,
+                    step,
+                ))
+            })
+            .collect();
+        let mut run_mixed = 0usize;
+        let mut run_hops = 0usize;
+        for t in tickets {
+            let r = t.wait().unwrap();
+            run_mixed += r.mixed_hops;
+            run_hops += r.hops;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        engine.shutdown();
+        if wall < best_mixed {
+            best_mixed = wall;
+            mixed_hops = run_mixed;
+            total_hops = run_hops;
+        }
+    }
+    let mixed_fps = (sessions * k_forwards) as f64 / best_mixed;
+    let mixed_share = mixed_hops as f64 / total_hops.max(1) as f64;
+    println!(
+        "mixed tenants: {mixed_fps:.0} fwd/s ({:.0}% of hops rode a mixed batch)",
+        mixed_share * 100.0
+    );
+    let mut mixed_json = Json::obj();
+    mixed_json.set("tenants", Json::from(tenants));
+    mixed_json.set("sessions", Json::from(sessions));
+    mixed_json.set("best_wall_s", Json::from(best_mixed));
+    mixed_json.set("forwards_per_s", Json::from(mixed_fps));
+    mixed_json.set("mixed_hop_share", Json::from(mixed_share));
+
+    // One smoke check worth failing loudly on even in a bench: a model
+    // request through the pipelined path must agree with the serial
+    // reference (the full contract lives in tests/parity_forward.rs).
+    {
+        let (model, route) = mk_chain(n_layers, width, 32);
+        let x = Rng::new(34).gauss_vec(width);
+        let serial = cloq::serve::forward_route_serial(&model, &route, None, &x).unwrap();
+        let engine = ServeEngine::new(model, EngineConfig::default());
+        let y = engine.submit_model(ModelRequest::new(route, x)).wait().unwrap().y;
+        engine.shutdown();
+        assert_eq!(y, serial, "pipelined forward drifted from the serial reference");
+    }
+
+    let record = Json::from_pairs(vec![
+        ("bench", Json::from("serve_forward_pipeline")),
+        ("smoke", Json::from(smoke())),
+        ("shape", Json::Arr(vec![Json::from(width), Json::from(width)])),
+        ("layers", Json::from(n_layers)),
+        ("rank", Json::from(8usize)),
+        ("forwards_per_session", Json::from(k_forwards)),
+        // Identity key for bench_diff: sweep rows pair by index, so the
+        // gate must refuse comparison when the session counts change.
+        ("sessions", Json::Arr(session_counts.iter().map(|&s| Json::from(s)).collect())),
+        ("session_sweep", Json::Arr(sweep_records)),
+        ("speedup_at_max_sessions", Json::from(speedup_at_max)),
+        ("mixed_adapter", mixed_json),
+        (
+            "parity",
+            Json::from(
+                "pipelined full-model forward bit-exact (0 ULP) vs the caller-driven \
+                 serial reference — enforced by rust/tests/parity_forward.rs",
+            ),
+        ),
+    ]);
+    write_bench_json("forward", record);
+    if speedup_at_max < 1.0 {
+        // Timing noise must not turn a measurement into a flaky bench exit;
+        // correctness is enforced by the parity suite.
+        eprintln!(
+            "WARNING: pipelined measured slower than caller-driven serial at \
+             {sessions} sessions ({speedup_at_max:.2}x)"
+        );
+    }
+}

@@ -7,8 +7,12 @@
 //!
 //! The tiled-vs-naive section emits BENCH_linalg.json (EXPERIMENTS.md
 //! §Perf).
+//!
+//! Under `CLOQ_BENCH_SMOKE=1` (the CI bench-smoke job) sizes and target
+//! times shrink and the record carries `"smoke": true` so
+//! `scripts/bench_diff.py` only compares like against like.
 
-use cloq::bench::{bench, section, write_bench_json};
+use cloq::bench::{bench, section, smoke, smoke_scaled, target_time, write_bench_json};
 use cloq::linalg::chol::{chol_inv_upper, cholesky, inv_spd};
 use cloq::linalg::eig::sym_eig;
 use cloq::linalg::{
@@ -19,11 +23,12 @@ use cloq::util::prng::Rng;
 
 fn main() {
     let mut rng = Rng::new(1);
-    let t = 0.3;
+    let t = target_time(0.3);
     let mut records = Vec::new();
 
     section("GEMM (square)");
-    for n in [32usize, 64, 128, 256] {
+    let gemm_ns: Vec<usize> = if smoke() { vec![32, 64] } else { vec![32, 64, 128, 256] };
+    for &n in &gemm_ns {
         let a = Matrix::randn(n, n, 1.0, &mut rng);
         let b = Matrix::randn(n, n, 1.0, &mut rng);
         let r = bench(&format!("matmul {n}x{n}x{n}"), t, || matmul(&a, &b));
@@ -32,13 +37,16 @@ fn main() {
     }
 
     section("SYRK (Gram accumulation, calibration shape)");
-    for (s, f) in [(512usize, 96usize), (512, 256), (2048, 96)] {
+    let syrk_shapes: Vec<(usize, usize)> =
+        if smoke() { vec![(256, 64)] } else { vec![(512, 96), (512, 256), (2048, 96)] };
+    for &(s, f) in &syrk_shapes {
         let x = Matrix::randn(s, f, 1.0, &mut rng);
         bench(&format!("syrk_t {s}x{f}"), t, || syrk_t(&x));
     }
 
     section("tiled vs naive GEMM (square)");
-    for n in [64usize, 128, 256, 384] {
+    let tiled_ns: Vec<usize> = if smoke() { vec![64, 128] } else { vec![64, 128, 256, 384] };
+    for &n in &tiled_ns {
         let a = Matrix::randn(n, n, 1.0, &mut rng);
         let b = Matrix::randn(n, n, 1.0, &mut rng);
         let r_naive = bench(&format!("matmul_naive {n}^3"), t, || matmul_naive(&a, &b));
@@ -57,19 +65,22 @@ fn main() {
         records.push(rec);
     }
 
-    section("tiled vs plain SYRK (Gram accumulation, 512-wide layer)");
+    section("tiled vs plain SYRK (Gram accumulation, wide layer)");
+    let (syrk_s, syrk_f) = (smoke_scaled(2048, 512), smoke_scaled(512, 128));
     {
-        let x = Matrix::randn(2048, 512, 1.0, &mut rng);
-        let r_tiled = bench("syrk_t_tiled 2048x512", t, || syrk_t_tiled(&x));
+        let x = Matrix::randn(syrk_s, syrk_f, 1.0, &mut rng);
+        let r_tiled =
+            bench(&format!("syrk_t_tiled {syrk_s}x{syrk_f}"), t, || syrk_t_tiled(&x));
         records.push(Json::from_pairs(vec![
             ("kernel", Json::from("syrk_t")),
-            ("shape", Json::Arr(vec![Json::from(2048usize), Json::from(512usize)])),
+            ("shape", Json::Arr(vec![Json::from(syrk_s), Json::from(syrk_f)])),
             ("tiled", r_tiled.to_json()),
         ]));
     }
 
     section("Cholesky + SPD inverse (OPTQ inner)");
-    for n in [64usize, 128, 256] {
+    let chol_ns: Vec<usize> = if smoke() { vec![64] } else { vec![64, 128, 256] };
+    for &n in &chol_ns {
         let x = Matrix::randn(n + 16, n, 1.0, &mut rng);
         let mut h = syrk_t(&x);
         h.add_diag(0.1);
@@ -93,14 +104,17 @@ fn main() {
     }
 
     section("Symmetric eig (CLoQ step 3)");
-    for n in [32usize, 64, 96, 128] {
+    let eig_ns: Vec<usize> = if smoke() { vec![32, 64] } else { vec![32, 64, 96, 128] };
+    for &n in &eig_ns {
         let x = Matrix::randn(n + 16, n, 1.0, &mut rng);
         let h = syrk_t(&x);
         bench(&format!("sym_eig {n}"), t, || sym_eig(&h));
     }
 
     section("SVD (CLoQ step 5)");
-    for (m, n) in [(64usize, 48usize), (96, 64), (128, 96), (96, 256)] {
+    let svd_shapes: Vec<(usize, usize)> =
+        if smoke() { vec![(64, 48)] } else { vec![(64, 48), (96, 64), (128, 96), (96, 256)] };
+    for &(m, n) in &svd_shapes {
         let a = Matrix::randn(m, n, 1.0, &mut rng);
         bench(&format!("svd {m}x{n}"), t, || svd(&a));
     }
@@ -109,6 +123,22 @@ fn main() {
         "linalg",
         Json::from_pairs(vec![
             ("bench", Json::from("linalg_tiled_kernels")),
+            ("smoke", Json::from(smoke())),
+            // Identity key for bench_diff: records pair by index, so the
+            // gate must refuse comparison when ANY sweep feeding the
+            // records array (tiled GEMM, syrk shape, Cholesky-root ns)
+            // is re-sized.
+            (
+                "sizes",
+                Json::Arr(
+                    tiled_ns
+                        .iter()
+                        .chain(&[syrk_s, syrk_f])
+                        .chain(&chol_ns)
+                        .map(|&n| Json::from(n))
+                        .collect(),
+                ),
+            ),
             ("records", Json::Arr(records)),
         ]),
     );

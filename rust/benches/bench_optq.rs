@@ -2,8 +2,12 @@
 //! bit-widths — the per-layer cost column behind Table 10, plus the
 //! act-order ablation called out in DESIGN.md and the lazy-batch blocking
 //! comparison behind EXPERIMENTS.md §Perf (emitted as BENCH_optq.json).
+//!
+//! Under `CLOQ_BENCH_SMOKE=1` (the CI bench-smoke job) shapes, block-size
+//! sweeps and target times shrink and the record carries `"smoke": true`
+//! so `scripts/bench_diff.py` only compares like against like.
 
-use cloq::bench::{bench, section, write_bench_json};
+use cloq::bench::{bench, section, smoke, smoke_scaled, target_time, write_bench_json};
 use cloq::linalg::{matmul, syrk_t, Matrix};
 use cloq::quant::magr::{magr, MagrConfig};
 use cloq::quant::optq::{optq, optq_unblocked, OptqConfig};
@@ -20,59 +24,71 @@ fn layer(m: usize, n: usize, rng: &mut Rng) -> (Matrix, Matrix) {
 
 fn main() {
     let mut rng = Rng::new(2);
-    let t = 0.4;
+    let t = target_time(0.4);
 
     section("data-free quantizers");
-    for (m, n) in [(96usize, 96usize), (96, 256), (256, 96)] {
+    let sizes: Vec<(usize, usize)> =
+        if smoke() { vec![(48, 48)] } else { vec![(96, 96), (96, 256), (256, 96)] };
+    for &(m, n) in &sizes {
         let (w, _) = layer(m, n, &mut rng);
         bench(&format!("rtn 2-bit {m}x{n} g64"), t, || quantize_rtn(&w, 2, 64));
         bench(&format!("nf4 {m}x{n} b64"), t, || quantize_nf(&w, 4, 64));
     }
 
     section("OPTQ across sizes (2-bit, group 64)");
-    for (m, n) in [(96usize, 96usize), (96, 256), (256, 96), (256, 256)] {
+    let sizes: Vec<(usize, usize)> = if smoke() {
+        vec![(48, 48), (48, 96)]
+    } else {
+        vec![(96, 96), (96, 256), (256, 96), (256, 256)]
+    };
+    for &(m, n) in &sizes {
         let (w, h) = layer(m, n, &mut rng);
         let cfg = OptqConfig { bits: 2, group_size: 64, ..Default::default() };
         bench(&format!("optq {m}x{n}"), t, || optq(&w, &h, &cfg));
     }
 
-    section("OPTQ across bit-widths (96x256)");
-    let (w, h) = layer(96, 256, &mut rng);
+    let (ma, na) = (smoke_scaled(96, 48), smoke_scaled(256, 96));
+    section(&format!("OPTQ across bit-widths ({ma}x{na})"));
+    let (w, h) = layer(ma, na, &mut rng);
     for bits in [2u32, 3, 4, 8] {
         let cfg = OptqConfig { bits, group_size: 64, ..Default::default() };
         bench(&format!("optq {bits}-bit"), t, || optq(&w, &h, &cfg));
     }
 
-    section("OPTQ act-order ablation (96x256, 2-bit)");
+    section(&format!("OPTQ act-order ablation ({ma}x{na}, 2-bit)"));
     for act_order in [false, true] {
         let cfg = OptqConfig { bits: 2, group_size: 64, act_order, ..Default::default() };
         bench(&format!("optq act_order={act_order}"), t, || optq(&w, &h, &cfg));
     }
 
     section("MagR preprocessing (FISTA)");
-    for iters in [30usize, 150] {
+    let iter_counts: Vec<usize> = if smoke() { vec![30] } else { vec![30, 150] };
+    for &iters in &iter_counts {
         let cfg = MagrConfig { alpha_rel: 1e-3, iters };
-        bench(&format!("magr 96x256 iters={iters}"), t, || magr(&w, &h, &cfg));
+        bench(&format!("magr {ma}x{na} iters={iters}"), t, || magr(&w, &h, &cfg));
     }
 
     // ---- lazy-batch blocking: the acceptance benchmark -------------------
     // 512×512: big enough that the trailing submatrix (2 MiB f64) falls out
-    // of L2, which is exactly the regime the blocked engine targets. The
-    // parity suite (tests/parity_blocked.rs) proves both paths produce
-    // identical quantized output, so this ratio is a pure-speed comparison.
-    section("lazy-batch blocking: blocked vs row-by-row, 512x512 2-bit g64");
-    let (m512, n512) = (512usize, 512usize);
+    // of L2, which is exactly the regime the blocked engine targets (the
+    // smoke-mode 128×128 just proves the path runs and stays comparable to
+    // its own smoke baseline). The parity suite (tests/parity_blocked.rs)
+    // proves both paths produce identical quantized output, so this ratio
+    // is a pure-speed comparison.
+    let (m512, n512) = (smoke_scaled(512, 128), smoke_scaled(512, 128));
+    section(&format!("lazy-batch blocking: blocked vs row-by-row, {m512}x{n512} 2-bit g64"));
     let (w, h) = layer(m512, n512, &mut rng);
     let base_cfg = OptqConfig { bits: 2, group_size: 64, ..Default::default() };
-    let r_ref = bench("optq unblocked 512x512 (seed path)", t, || {
+    let r_ref = bench(&format!("optq unblocked {m512}x{n512} (seed path)"), t, || {
         optq_unblocked(&w, &h, &base_cfg)
     });
     let mut blocked_records = Vec::new();
     let mut best_min = f64::INFINITY;
     let mut best_bs = 0usize;
-    for bs in [16usize, 32, 64, 128] {
+    let block_sizes: Vec<usize> = if smoke() { vec![16, 32] } else { vec![16, 32, 64, 128] };
+    for &bs in &block_sizes {
         let cfg = OptqConfig { block_size: bs, ..base_cfg.clone() };
-        let r = bench(&format!("optq blocked bs={bs} 512x512"), t, || optq(&w, &h, &cfg));
+        let r = bench(&format!("optq blocked bs={bs} {m512}x{n512}"), t, || optq(&w, &h, &cfg));
         if r.min_s < best_min {
             best_min = r.min_s;
             best_bs = bs;
@@ -82,14 +98,21 @@ fn main() {
         blocked_records.push(rec);
     }
     let speedup = r_ref.min_s / best_min;
-    println!("\nblocked speedup @512x512: {speedup:.2}x (best block_size={best_bs})");
+    println!("\nblocked speedup @{m512}x{n512}: {speedup:.2}x (best block_size={best_bs})");
 
     let record = Json::from_pairs(vec![
         ("bench", Json::from("optq_lazy_batch_blocking")),
+        ("smoke", Json::from(smoke())),
         ("shape", Json::Arr(vec![Json::from(m512), Json::from(n512)])),
         ("bits", Json::from(2usize)),
         ("group_size", Json::from(64usize)),
         ("unblocked", r_ref.to_json()),
+        // Identity key for bench_diff: blocked rows pair by index, so the
+        // gate must refuse comparison when the block-size sweep changes.
+        (
+            "block_sizes",
+            Json::Arr(block_sizes.iter().map(|&b| Json::from(b)).collect()),
+        ),
         ("blocked", Json::Arr(blocked_records)),
         ("best_block_size", Json::from(best_bs)),
         ("speedup_min_over_min", Json::from(speedup)),

@@ -100,6 +100,16 @@ impl ModelConfig {
             .flat_map(|l| self.linear_specs(l).into_iter().map(|(n, _, _)| n))
             .collect()
     }
+
+    /// The ordered layer route a full-model forward request traverses
+    /// (`serve::forward::ModelRequest`): every linear map in canonical
+    /// order. The chain is shape-consistent by construction — the d→d
+    /// attention maps, then the d→f up- and f→d down-projection, block
+    /// after block — which `PackedModel::route_indices` re-checks against
+    /// the packed shapes at admission (and the unit test below pins here).
+    pub fn forward_route(&self) -> Vec<String> {
+        self.all_linear_names()
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -156,6 +166,40 @@ mod tests {
     fn artifacts_micro() -> Option<PathBuf> {
         let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/micro");
         p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn forward_route_is_ordered_and_shape_chainable() {
+        let config = ModelConfig {
+            name: "t".to_string(),
+            vocab: 64,
+            d_model: 8,
+            n_layers: 3,
+            n_heads: 2,
+            d_ff: 20,
+            seq: 4,
+            batch: 1,
+            rank: 2,
+            group_size: 4,
+        };
+        let route = config.forward_route();
+        assert_eq!(route.len(), 6 * config.n_layers);
+        assert_eq!(route[0], "l0.wq");
+        assert_eq!(route[5], "l0.w_down");
+        assert_eq!(route[6], "l1.wq");
+        // Chainability: spec k's out_dim feeds spec k+1's in_dim — the
+        // invariant PackedModel::validate_route enforces at admission.
+        let specs: Vec<(String, usize, usize)> =
+            (0..config.n_layers).flat_map(|l| config.linear_specs(l)).collect();
+        assert_eq!(specs.len(), route.len());
+        for (k, w) in specs.windows(2).enumerate() {
+            assert_eq!(
+                w[0].2, w[1].1,
+                "route break between {} ({} out) and {} ({} in)",
+                w[0].0, w[0].2, w[1].0, w[1].1
+            );
+            assert_eq!(route[k], w[0].0);
+        }
     }
 
     #[test]

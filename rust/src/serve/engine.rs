@@ -5,10 +5,10 @@
 //! Shape of the pipeline:
 //!
 //! ```text
-//!   submit() ──→ pending FIFO ──→ batcher thread ──→ WorkerPool job
-//!                 (Mutex+Condvar)  (drains ≤ max_batch   (grouped batch
-//!                                   same-layer requests)  kernel, replies
-//!                                                         per request)
+//!   submit() ───────→ pending FIFO ──→ batcher thread ──→ WorkerPool job
+//!   submit_model() ↗   (Mutex+Condvar)  (drains ≤ max_batch  (grouped batch
+//!        ▲                               same-layer hops)     kernel)
+//!        └──────────── hop re-entry ←──────────────────────────┘
 //! ```
 //!
 //! The batcher scans the FIFO head's layer and pulls every queued request
@@ -26,6 +26,17 @@
 //! purely a throughput decision: **batch composition can never change a
 //! response's numbers**.
 //!
+//! **Full-model pipelining** (`serve::forward`): a [`ModelRequest`] /
+//! [`SessionRequest`] is decomposed into per-layer *hops*. A finished hop
+//! with route left does not reply — `run_batch` pushes it back into the
+//! pending FIFO at its next layer (the re-entry arrow above), so hops from
+//! many concurrent model requests at the same depth coalesce into one
+//! grouped kernel call, exactly like independent single-layer requests
+//! would. The adapter pin taken at admission rides along for the whole
+//! traversal. Re-entry happens on a kernel worker and only ever *pushes*
+//! to the FIFO and notifies — the batcher is never waited on from a
+//! worker, so hop re-entry cannot deadlock the dispatch loop.
+//!
 //! Coalescing policy: no timers. The batcher dispatches immediately while
 //! kernel workers are free (latency-first under light load), but keeps at
 //! most `workers` micro-batches in flight — once the workers are all busy
@@ -34,10 +45,20 @@
 //! (throughput-first under saturation), and the pool's job queue stays
 //! bounded by the worker count.
 //!
+//! **Backpressure counts hops, not FIFO entries**: every admitted request
+//! — single-layer or whole-model — holds exactly one *live hop slot* from
+//! admission until its reply, whether that hop is queued or riding a
+//! kernel. Admission rejects at `max_pending` live slots, so a flood of
+//! model requests cannot hide from the limit by being mid-kernel when the
+//! FIFO is sampled. **Shutdown drains by the same accounting**: the
+//! batcher exits only when admissions are closed *and* the last live slot
+//! is released, so every admitted traversal finishes every remaining hop
+//! (re-entering as needed) before the engine stops.
+//!
 //! Every [`Response`] reports its queue wait, its micro-batch's kernel
 //! time, the batch size and the adapter group count; [`EngineStats`]
 //! aggregates them for the bench harness (`BENCH_serve.json` /
-//! `BENCH_adapters.json`) and the demo.
+//! `BENCH_adapters.json` / `BENCH_forward.json`) and the demo.
 
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -46,6 +67,9 @@ use std::time::Instant;
 use crate::linalg::Matrix;
 use crate::lowrank::LoraPair;
 use crate::serve::adapters::{AdapterHandle, AdapterRegistry, AdapterSet, RegisterOutcome};
+use crate::serve::forward::{
+    HopOutcome, ModelRequest, ModelResponse, ModelTicket, SessionRequest, StepFn, Traversal,
+};
 use crate::serve::packed::PackedModel;
 use crate::util::threadpool::WorkerPool;
 
@@ -55,9 +79,12 @@ pub struct EngineConfig {
     pub workers: usize,
     /// Coalescing cap: at most this many requests per micro-batch.
     pub max_batch: usize,
-    /// Admission backpressure: requests arriving while this many are
-    /// already pending are rejected with an "overloaded" error instead of
-    /// growing the FIFO (and its buffered input vectors) without bound.
+    /// Admission backpressure: the cap on LIVE HOP SLOTS — requests
+    /// admitted but not yet answered, whether queued in the FIFO or
+    /// riding a kernel (a multi-hop model request holds one slot for its
+    /// whole traversal). Arrivals beyond it are rejected with an
+    /// "overloaded" error instead of growing the queue (and its buffered
+    /// activations) without bound.
     pub max_pending: usize,
     /// Byte budget for the adapter registry's LRU cache (pinned adapters
     /// are exempt — see `AdapterRegistry::new`).
@@ -107,44 +134,63 @@ pub struct Response {
 }
 
 /// Aggregate engine counters (snapshot via [`ServeEngine::stats`]).
-/// Invariant: every submitted request ends up in exactly one of
-/// `requests` (served), `rejected` (invalid at admission), or `failed`
-/// (rider of a panicked batch), so `requests + rejected + failed` equals
-/// the number of submissions whose tickets have resolved.
+/// Invariant: every submission resolves exactly once and lands in
+/// exactly one counter — single-layer requests in `requests` (served),
+/// `rejected`, or `failed` (single rider of a panicked batch);
+/// model/session requests in `model_requests`, `rejected`, or
+/// `failed_model_requests` — so the sum of those five counters
+/// (`rejected` is shared by both request kinds) equals the number of
+/// submissions whose tickets have resolved.
 #[derive(Clone, Debug, Default)]
 pub struct EngineStats {
-    /// Requests served successfully.
+    /// Single-layer requests served successfully.
     pub requests: usize,
+    /// Model/session requests answered successfully.
+    pub model_requests: usize,
+    /// Full-model forward passes completed by traversals (a session
+    /// contributes one per step it ran).
+    pub session_forwards: usize,
+    /// Riders served across all successful micro-batches — single-layer
+    /// requests AND traversal hops (`hops / batches` is the real batch
+    /// fullness under pipelining).
+    pub hops: usize,
     pub batches: usize,
     pub max_batch_seen: usize,
     /// Micro-batches that mixed more than one adapter group (served via
     /// the grouped kernel's per-adapter skinny products).
     pub mixed_batches: usize,
     /// Requests refused at admission (unknown layer, wrong width, unknown
-    /// adapter, adapter without the layer).
+    /// adapter, adapter without the layer, broken route, overload).
     pub rejected: usize,
     /// Micro-batches whose kernel panicked (the workers survive).
     pub batch_panics: usize,
-    /// Riders of panicked batches; each got an `Err` naming the layer.
+    /// SINGLE-LAYER riders of panicked batches; each resolved with an
+    /// `Err` naming the layer. Traversal riders of the same batch count
+    /// in `failed_model_requests` instead, keeping the counters disjoint.
     pub failed: usize,
+    /// Model/session requests answered with an error (kernel panic on one
+    /// of their hops, step-fn panic, or misshapen step output).
+    pub failed_model_requests: usize,
     pub total_queue_s: f64,
     pub total_compute_s: f64,
 }
 
 impl EngineStats {
+    /// Mean riders per successful micro-batch (hops include single-layer
+    /// requests, so this is unchanged for non-pipelined workloads).
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
             0.0
         } else {
-            self.requests as f64 / self.batches as f64
+            self.hops as f64 / self.batches as f64
         }
     }
 
     pub fn mean_queue_s(&self) -> f64 {
-        if self.requests == 0 {
+        if self.hops == 0 {
             0.0
         } else {
-            self.total_queue_s / self.requests as f64
+            self.total_queue_s / self.hops as f64
         }
     }
 }
@@ -163,15 +209,25 @@ impl Ticket {
     }
 }
 
+/// How a hop replies when its work is done.
+enum HopKind {
+    /// Single-layer request: reply with a [`Response`] after this hop.
+    Single { tx: mpsc::Sender<anyhow::Result<Response>> },
+    /// Model/session traversal: consult [`Traversal::absorb_hop`] — it
+    /// either re-enters the FIFO or replies with a [`ModelResponse`].
+    Traversal(Box<Traversal>),
+}
+
 struct Pending {
     layer: usize,
-    /// Pinned at admission; the pin lives until the response is sent, so
-    /// eviction/unregister can never pull the weights out from under a
-    /// queued or in-flight request.
+    /// Pinned at admission; the pin lives until the response is sent —
+    /// across EVERY hop of a traversal — so eviction/unregister can never
+    /// pull the weights out from under a queued or in-flight request, and
+    /// a hot-swap can never mix versions inside one traversal.
     adapter: Option<AdapterHandle>,
     x: Vec<f64>,
-    tx: mpsc::Sender<anyhow::Result<Response>>,
     t_in: Instant,
+    kind: HopKind,
 }
 
 struct QueueState {
@@ -181,6 +237,10 @@ struct QueueState {
     /// back while this reaches the worker count (see the module docs'
     /// coalescing policy).
     in_flight: usize,
+    /// Live hop slots: admitted requests (single or traversal) not yet
+    /// answered, queued OR riding a kernel. Backpressure rejects at
+    /// `max_pending` of these; shutdown drains until it reaches zero.
+    live: usize,
 }
 
 struct Shared {
@@ -199,7 +259,8 @@ struct Shared {
 }
 
 /// The serving engine: adapter-multiplexed batching front-end over ONE
-/// packed base [`PackedModel`] and many registered [`AdapterSet`]s.
+/// packed base [`PackedModel`] and many registered [`AdapterSet`]s, with
+/// single-layer, full-model, and session request shapes.
 pub struct ServeEngine {
     shared: Arc<Shared>,
     batcher: Option<std::thread::JoinHandle<()>>,
@@ -226,6 +287,7 @@ impl ServeEngine {
                 pending: VecDeque::new(),
                 open: true,
                 in_flight: 0,
+                live: 0,
             }),
             cv: Condvar::new(),
             stats: Mutex::new(EngineStats::default()),
@@ -253,7 +315,9 @@ impl ServeEngine {
     /// sends the responses, then drops the handles), so once the last pin
     /// is gone no job can still be touching the weights — and unrelated
     /// tenants' traffic never delays the retirement (a global pool
-    /// quiescence wait here would starve under sustained load). New
+    /// quiescence wait here would starve under sustained load). A
+    /// traversal's pin spans its whole route, so the drain also outwaits
+    /// every remaining hop of model requests on the adapter. New
     /// submissions naming the id are rejected from the moment this is
     /// called.
     pub fn unregister_adapter(&self, id: &str) -> anyhow::Result<()> {
@@ -274,24 +338,57 @@ impl ServeEngine {
         let (tx, rx) = mpsc::channel();
         match self.admit(layer, adapter, x, &tx) {
             Ok(p) => {
-                let accepted = {
-                    let mut st = self.shared.state.lock().unwrap();
-                    if st.pending.len() < self.shared.max_pending {
-                        st.pending.push_back(p);
-                        true
-                    } else {
-                        false
-                    }
-                };
-                if accepted {
-                    self.shared.cv.notify_one();
-                } else {
-                    self.reject(&tx, self.overloaded());
+                if let Err((p, e)) = self.try_enqueue(p) {
+                    self.reject_pending(p, e);
                 }
             }
             Err(e) => self.reject(&tx, e),
         }
         Ticket { rx }
+    }
+
+    /// Admit one full-model forward: the input flows through every layer
+    /// of `req.route` in order, each hop coalescing with whatever other
+    /// traffic is at that layer. Bit-identical to the caller-driven serial
+    /// reference ([`crate::serve::forward::forward_route_serial`]) — see
+    /// the parity contract in `serve::forward`.
+    pub fn submit_model(&self, req: ModelRequest) -> ModelTicket {
+        let (tx, rx) = mpsc::channel();
+        match self.admit_traversal(&req.route, req.adapter.as_deref(), req.x, 1, None, &tx) {
+            Ok(p) => {
+                if let Err((p, e)) = self.try_enqueue(p) {
+                    self.reject_pending(p, e);
+                }
+            }
+            Err(e) => self.reject_model(&tx, e),
+        }
+        ModelTicket::new(rx)
+    }
+
+    /// Admit a multi-step session: up to `req.steps` sequential full-model
+    /// forwards with `req.step` bridging each pair (the autoregressive-
+    /// decode shape), all inside the engine so consecutive steps keep
+    /// coalescing with concurrent traffic. The adapter is pinned once for
+    /// the whole session.
+    pub fn submit_session(&self, req: SessionRequest) -> ModelTicket {
+        let (tx, rx) = mpsc::channel();
+        let admitted = self.admit_traversal(
+            &req.route,
+            req.adapter.as_deref(),
+            req.x0,
+            req.steps,
+            Some(req.step),
+            &tx,
+        );
+        match admitted {
+            Ok(p) => {
+                if let Err((p, e)) = self.try_enqueue(p) {
+                    self.reject_pending(p, e);
+                }
+            }
+            Err(e) => self.reject_model(&tx, e),
+        }
+        ModelTicket::new(rx)
     }
 
     /// Admit a burst of requests under ONE queue lock: the batcher cannot
@@ -308,17 +405,26 @@ impl ServeEngine {
             }
             tickets.push(Ticket { rx });
         }
-        let overflow = {
+        let (overflow, closed) = {
             let mut st = self.shared.state.lock().unwrap();
-            let room = self.shared.max_pending.saturating_sub(st.pending.len());
+            let room = if st.open {
+                self.shared.max_pending.saturating_sub(st.live)
+            } else {
+                0
+            };
             let overflow =
                 if admitted.len() > room { admitted.split_off(room) } else { Vec::new() };
+            st.live += admitted.len();
             st.pending.extend(admitted);
-            overflow
+            (overflow, !st.open)
         };
         for p in overflow {
-            let tx = p.tx.clone();
-            self.reject(&tx, self.overloaded());
+            let e = if closed {
+                anyhow::anyhow!("engine is shutting down; request refused")
+            } else {
+                self.overloaded()
+            };
+            self.reject_pending(p, e);
         }
         self.shared.cv.notify_one();
         tickets
@@ -326,7 +432,7 @@ impl ServeEngine {
 
     fn overloaded(&self) -> anyhow::Error {
         anyhow::anyhow!(
-            "engine overloaded: pending queue at max_pending={}; retry later",
+            "engine overloaded: {} hops queued or in flight at max_pending; retry later",
             self.shared.max_pending
         )
     }
@@ -334,6 +440,45 @@ impl ServeEngine {
     fn reject(&self, tx: &mpsc::Sender<anyhow::Result<Response>>, e: anyhow::Error) {
         self.shared.stats.lock().unwrap().rejected += 1;
         let _ = tx.send(Err(e));
+    }
+
+    fn reject_model(&self, tx: &mpsc::Sender<anyhow::Result<ModelResponse>>, e: anyhow::Error) {
+        self.shared.stats.lock().unwrap().rejected += 1;
+        let _ = tx.send(Err(e));
+    }
+
+    /// Resolve an already-admitted hop with an admission-stage error (the
+    /// queue refused it), whatever its reply channel type.
+    fn reject_pending(&self, p: Pending, e: anyhow::Error) {
+        self.shared.stats.lock().unwrap().rejected += 1;
+        match p.kind {
+            HopKind::Single { tx } => {
+                let _ = tx.send(Err(e));
+            }
+            HopKind::Traversal(tr) => {
+                tr.fail(e);
+            }
+        }
+    }
+
+    /// Enqueue under the hop-aware backpressure limit. On refusal the hop
+    /// comes back so the caller can resolve its ticket with the error.
+    fn try_enqueue(&self, p: Pending) -> Result<(), (Pending, anyhow::Error)> {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if !st.open {
+                drop(st);
+                return Err((p, anyhow::anyhow!("engine is shutting down; request refused")));
+            }
+            if st.live >= self.shared.max_pending {
+                drop(st);
+                return Err((p, self.overloaded()));
+            }
+            st.live += 1;
+            st.pending.push_back(p);
+        }
+        self.shared.cv.notify_one();
+        Ok(())
     }
 
     fn admit(
@@ -357,12 +502,7 @@ impl ServeEngine {
         let handle = match adapter {
             None => None,
             Some(id) => {
-                let h = self.shared.registry.checkout(id).ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "adapter '{id}' is not registered (never registered, evicted, \
-                         or unregistered)"
-                    )
-                })?;
+                let h = self.checkout(id)?;
                 anyhow::ensure!(
                     h.set().get(layer).is_some(),
                     "adapter '{id}' carries no delta for layer '{layer}'"
@@ -370,15 +510,91 @@ impl ServeEngine {
                 Some(h)
             }
         };
-        Ok(Pending { layer: idx, adapter: handle, x, tx: tx.clone(), t_in: Instant::now() })
+        Ok(Pending {
+            layer: idx,
+            adapter: handle,
+            x,
+            t_in: Instant::now(),
+            kind: HopKind::Single { tx: tx.clone() },
+        })
+    }
+
+    /// Admission for model/session requests: resolve and shape-check the
+    /// whole route up front (chain validation in
+    /// `PackedModel::validate_route`), pin the adapter once, and require
+    /// it to matter somewhere on the route. Layers the adapter carries no
+    /// delta for run base-only — the LoRA-on-a-subset deployment shape.
+    fn admit_traversal(
+        &self,
+        route: &[String],
+        adapter: Option<&str>,
+        x: Vec<f64>,
+        steps: usize,
+        step: Option<StepFn>,
+        tx: &mpsc::Sender<anyhow::Result<ModelResponse>>,
+    ) -> anyhow::Result<Pending> {
+        anyhow::ensure!(steps >= 1, "session must run at least one forward pass");
+        anyhow::ensure!(!route.is_empty(), "model request with an empty layer route");
+        let mut idxs = Vec::with_capacity(route.len());
+        for name in route {
+            let idx = *self.shared.index.get(name).ok_or_else(|| {
+                anyhow::anyhow!("no such layer '{name}' in the served model")
+            })?;
+            idxs.push(idx);
+        }
+        self.shared.model.validate_route(&idxs)?;
+        let head_rows = self.shared.model.layers[idxs[0]].rows;
+        anyhow::ensure!(
+            x.len() == head_rows,
+            "route head '{}': input length {} but the layer takes {head_rows} features",
+            route[0],
+            x.len()
+        );
+        let handle = match adapter {
+            None => None,
+            Some(id) => {
+                let h = self.checkout(id)?;
+                anyhow::ensure!(
+                    idxs.iter()
+                        .any(|&i| h.set().get(&self.shared.model.layers[i].name).is_some()),
+                    "adapter '{id}' carries no delta for any layer on the route"
+                );
+                Some(h)
+            }
+        };
+        let t_in = Instant::now();
+        Ok(Pending {
+            layer: idxs[0],
+            adapter: handle,
+            x,
+            t_in,
+            kind: HopKind::Traversal(Box::new(Traversal::new(
+                Arc::new(idxs),
+                steps,
+                step,
+                tx.clone(),
+                t_in,
+            ))),
+        })
+    }
+
+    fn checkout(&self, id: &str) -> anyhow::Result<AdapterHandle> {
+        self.shared.registry.checkout(id).ok_or_else(|| {
+            anyhow::anyhow!(
+                "adapter '{id}' is not registered (never registered, evicted, \
+                 or unregistered)"
+            )
+        })
     }
 
     pub fn stats(&self) -> EngineStats {
         self.shared.stats.lock().unwrap().clone()
     }
 
-    /// Stop admitting, drain every queued request, join the batcher and
-    /// quiesce the kernel workers, and return the final counters.
+    /// Stop admitting, drain every admitted request — including every
+    /// remaining hop of in-flight model requests and sessions — join the
+    /// batcher and quiesce the kernel workers, and return the final
+    /// counters.
     pub fn shutdown(mut self) -> EngineStats {
         self.shutdown_impl(); // Drop runs it again; it is idempotent
         self.stats()
@@ -391,9 +607,11 @@ impl ServeEngine {
         }
         self.shared.cv.notify_all();
         if let Some(h) = self.batcher.take() {
-            // The batcher drains the queue and waits for the pool to go
-            // idle, so every ticket has resolved when join returns; the
-            // workers themselves are joined when the last Shared drops.
+            // The batcher drains until the last live hop slot is released
+            // (so traversals finish their whole route) and waits for the
+            // pool to go idle, so every ticket has resolved when join
+            // returns; the workers themselves are joined when the last
+            // Shared drops.
             let _ = h.join();
         }
     }
@@ -415,7 +633,11 @@ fn batcher_loop(shared: Arc<Shared>) {
                 if !st.pending.is_empty() && st.in_flight < shared.workers {
                     break;
                 }
-                if st.pending.is_empty() && !st.open {
+                // Exit only when nothing can re-enter: admissions closed
+                // AND the last live hop slot released (an in-flight batch
+                // may still push hops back into the FIFO, so an empty
+                // queue alone is not drained).
+                if !st.open && st.live == 0 {
                     drop(st);
                     shared.pool.wait_idle(); // in-flight batches answer first
                     return;
@@ -467,13 +689,20 @@ fn take_batch(pending: &mut VecDeque<Pending>, cap: usize) -> Vec<Pending> {
     taken
 }
 
-/// Sort key making same-adapter-version requests adjacent: base-only
-/// first, then by adapter id, then by version token (two versions of one
-/// id — a hot-swap caught mid-queue — must NOT share a group).
-fn adapter_sort_key(p: &Pending) -> (u8, String, usize) {
-    match &p.adapter {
-        None => (0, String::new(), 0),
-        Some(h) => (1, h.set().id().to_string(), h.version_token()),
+/// Sort key making same-EFFECTIVE-slot riders adjacent at this layer:
+/// rows the kernel will run base-only first (no adapter, or an adapter
+/// with no delta for this layer — partial-coverage traversal hops), then
+/// by the `LoraPair`'s address — exactly the identity `same_adapter`
+/// groups on, so the sort can never split an achievable group (and two
+/// versions of one id, a hot-swap caught mid-queue, can never share
+/// one). Allocation-free: this runs for every rider of every
+/// micro-batch, and group ORDER is irrelevant (row placement cannot
+/// change any response's numbers — the parity contract), only adjacency
+/// matters.
+fn adapter_sort_key(p: &Pending, layer_name: &str) -> (u8, usize) {
+    match p.adapter.as_ref().and_then(|h| h.set().get(layer_name)) {
+        None => (0, 0),
+        Some(pair) => (1, pair as *const LoraPair as usize),
     }
 }
 
@@ -481,23 +710,22 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
     let layer = &shared.model.layers[batch[0].layer];
     let layer_name = layer.name.as_str();
     let bs = batch.len();
-    // Same-version requests adjacent ⇒ fewest adapter groups. Stable, so
-    // arrival order survives within a group. Row placement cannot change
-    // any response's numbers (grouped-kernel parity contract).
-    batch.sort_by_cached_key(adapter_sort_key);
+    // Same-effective-slot requests adjacent ⇒ fewest adapter groups.
+    // Stable, so arrival order survives within a group. Row placement
+    // cannot change any response's numbers (grouped-kernel parity
+    // contract).
+    batch.sort_by_cached_key(|p| adapter_sort_key(p, layer_name));
     let mut xs = Matrix::zeros(bs, layer.rows);
     for (k, p) in batch.iter().enumerate() {
         xs.row_mut(k).copy_from_slice(&p.x);
     }
-    // Per-row adapter slots for the grouped kernel. The pair lookups are
-    // infallible: admission checked the adapter carries this layer.
+    // Per-row adapter slots for the grouped kernel. Single-layer riders
+    // always resolve (admission checked coverage); a traversal hop may
+    // land on a route layer its adapter carries no delta for — that row
+    // runs base-only, by design.
     let slots: Vec<Option<&LoraPair>> = batch
         .iter()
-        .map(|p| {
-            p.adapter
-                .as_ref()
-                .map(|h| h.set().get(layer_name).expect("validated at admission"))
-        })
+        .map(|p| p.adapter.as_ref().and_then(|h| h.set().get(layer_name)))
         .collect();
     let groups = count_groups(&slots);
     // Contain a kernel panic to this batch: every rider gets an Err naming
@@ -510,27 +738,85 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
     let compute_s = t_exec.elapsed().as_secs_f64();
     drop(slots);
 
+    let rows_of = |i: usize| shared.model.layers[i].rows;
+    let mut reentry: Vec<Pending> = Vec::new();
+    let mut finished = 0usize; // riders whose ticket resolved in this batch
     let mut total_queue = 0.0;
+    let mut singles_ok = 0usize;
+    let mut singles_failed = 0usize;
+    let mut models_ok = 0usize;
+    let mut models_failed = 0usize;
+    let mut forwards_done = 0usize;
     match &kernel {
         Ok(ys) => {
             for (k, p) in batch.into_iter().enumerate() {
                 let queue_s = t_formed.saturating_duration_since(p.t_in).as_secs_f64();
                 total_queue += queue_s;
-                let resp = Response {
-                    y: ys.row(k).to_vec(),
-                    queue_s,
-                    compute_s,
-                    batch_size: bs,
-                    adapter_groups: groups,
-                };
-                let _ = p.tx.send(Ok(resp)); // requester may have given up; fine
+                match p.kind {
+                    HopKind::Single { tx } => {
+                        finished += 1;
+                        singles_ok += 1;
+                        let resp = Response {
+                            y: ys.row(k).to_vec(),
+                            queue_s,
+                            compute_s,
+                            batch_size: bs,
+                            adapter_groups: groups,
+                        };
+                        let _ = tx.send(Ok(resp)); // requester may have given up; fine
+                    }
+                    HopKind::Traversal(tr) => {
+                        let outcome = tr.absorb_hop(
+                            ys.row(k).to_vec(),
+                            queue_s,
+                            compute_s,
+                            bs,
+                            groups,
+                            &rows_of,
+                        );
+                        match outcome {
+                            HopOutcome::Reenter { layer, x, traversal } => {
+                                reentry.push(Pending {
+                                    layer,
+                                    adapter: p.adapter,
+                                    x,
+                                    t_in: Instant::now(),
+                                    kind: HopKind::Traversal(traversal),
+                                });
+                            }
+                            HopOutcome::Replied { ok, forwards } => {
+                                finished += 1;
+                                forwards_done += forwards;
+                                if ok {
+                                    models_ok += 1;
+                                } else {
+                                    models_failed += 1;
+                                }
+                            }
+                        }
+                    }
+                }
             }
         }
         Err(_) => {
             for p in batch {
-                let _ = p.tx.send(Err(anyhow::anyhow!(
-                    "layer '{layer_name}': serving batch of {bs} panicked in the kernel"
-                )));
+                finished += 1;
+                match p.kind {
+                    HopKind::Single { tx } => {
+                        singles_failed += 1;
+                        let _ = tx.send(Err(anyhow::anyhow!(
+                            "layer '{layer_name}': serving batch of {bs} panicked in the kernel"
+                        )));
+                    }
+                    HopKind::Traversal(tr) => {
+                        models_failed += 1;
+                        let hop = tr.hops_done() + 1;
+                        forwards_done += tr.fail(anyhow::anyhow!(
+                            "model request failed at hop {hop}: layer '{layer_name}' \
+                             panicked serving a batch of {bs}"
+                        ));
+                    }
+                }
             }
         }
     }
@@ -538,7 +824,8 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
         let mut stats = shared.stats.lock().unwrap();
         match &kernel {
             Ok(_) => {
-                stats.requests += bs;
+                stats.requests += singles_ok;
+                stats.hops += bs;
                 stats.batches += 1;
                 stats.max_batch_seen = stats.max_batch_seen.max(bs);
                 if groups > 1 {
@@ -549,14 +836,24 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
             }
             Err(_) => {
                 stats.batch_panics += 1;
-                stats.failed += bs;
+                stats.failed += singles_failed;
             }
         }
+        stats.model_requests += models_ok;
+        stats.failed_model_requests += models_failed;
+        stats.session_forwards += forwards_done;
     }
-    let mut st = shared.state.lock().unwrap();
-    st.in_flight -= 1;
-    drop(st);
-    shared.cv.notify_all(); // wake the batcher: a worker slot is free again
+    {
+        // One lock: hand finished hops' slots back AND re-enter continuing
+        // traversals at their next layer. Re-entry bypasses the admission
+        // gate on purpose — these hops were admitted once and must finish
+        // even while the engine is draining (`open == false`).
+        let mut st = shared.state.lock().unwrap();
+        st.pending.extend(reentry);
+        st.in_flight -= 1;
+        st.live -= finished;
+    }
+    shared.cv.notify_all(); // wake the batcher: a worker slot / new hops
 }
 
 /// Number of consecutive same-adapter runs in the (sorted) slot list —
@@ -652,6 +949,7 @@ mod tests {
         }
         let stats = engine.shutdown();
         assert_eq!(stats.requests, 12);
+        assert_eq!(stats.hops, 12, "single-layer requests are one hop each");
         assert!(stats.batches < 12, "burst must coalesce: {stats:?}");
         assert!(stats.max_batch_seen >= 2, "{stats:?}");
         assert!(stats.mixed_batches >= 1, "3 tenants over 2 layers must mix: {stats:?}");
@@ -745,5 +1043,72 @@ mod tests {
         );
         assert!(msg.contains("not registered"), "{msg}");
         engine.shutdown();
+    }
+
+    #[test]
+    fn model_requests_rejected_with_actionable_errors() {
+        let engine = ServeEngine::new(model(420), EngineConfig::default());
+        let route = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        // wq outputs 10 wide; wo takes 18 — the chain is broken.
+        let msg = format!(
+            "{}",
+            engine
+                .submit_model(ModelRequest::new(route(&["wq", "wo"]), vec![0.0; 24]))
+                .wait()
+                .unwrap_err()
+        );
+        assert!(msg.contains("route break"), "{msg}");
+        let msg = format!(
+            "{}",
+            engine
+                .submit_model(ModelRequest::new(route(&["ghost"]), vec![0.0; 4]))
+                .wait()
+                .unwrap_err()
+        );
+        assert!(msg.contains("no such layer 'ghost'"), "{msg}");
+        let msg = format!(
+            "{}",
+            engine
+                .submit_model(ModelRequest::new(route(&["wq"]), vec![0.0; 3]))
+                .wait()
+                .unwrap_err()
+        );
+        assert!(msg.contains("takes 24 features"), "{msg}");
+        let msg = format!(
+            "{}",
+            engine.submit_model(ModelRequest::new(Vec::new(), vec![0.0; 4])).wait().unwrap_err()
+        );
+        assert!(msg.contains("empty layer route"), "{msg}");
+        let stats = engine.shutdown();
+        assert_eq!(stats.rejected, 4);
+        assert_eq!(stats.model_requests, 0);
+    }
+
+    #[test]
+    fn single_layer_model_request_matches_single_request() {
+        // A one-hop route through the pipelined path must return the same
+        // bits as the plain single-layer submit.
+        let m = model(421);
+        let engine = ServeEngine::new(
+            model(421),
+            EngineConfig { workers: 1, ..EngineConfig::default() },
+        );
+        let mut rng = Rng::new(422);
+        let x = rng.gauss_vec(24);
+        let direct = m.layers[0].forward(&x, None);
+        let resp = engine
+            .submit_model(ModelRequest::new(vec!["wq".to_string()], x))
+            .wait()
+            .unwrap();
+        for (u, v) in resp.y.iter().zip(&direct) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        assert_eq!(resp.forwards, 1);
+        assert_eq!(resp.hops, 1);
+        let stats = engine.shutdown();
+        assert_eq!(stats.model_requests, 1);
+        assert_eq!(stats.session_forwards, 1);
+        assert_eq!(stats.hops, 1);
+        assert_eq!(stats.requests, 0, "traversal hops are not single-layer requests");
     }
 }

@@ -1,0 +1,466 @@
+//! Full-model forward requests: the route/traversal layer on top of the
+//! per-layer batching engine.
+//!
+//! A [`ModelRequest`] names an ordered **route** of packed layers (from
+//! [`crate::model::ModelConfig::forward_route`] or hand-built) plus an
+//! optional adapter, and the engine decomposes it into per-layer **hops**:
+//! when a micro-batch finishes, riders with more route left re-enter the
+//! pending FIFO at their next layer instead of replying. Hops from many
+//! concurrent model requests at the same depth therefore coalesce into one
+//! grouped kernel call — the continuous-batching win — while each request
+//! still computes the exact serial composition
+//!
+//! ```text
+//!   y = f_{L-1}(… f_1(f_0(x)) …),   f_k = route[k]'s fused forward
+//! ```
+//!
+//! **Parity contract** (enforced by `rust/tests/parity_forward.rs`): the
+//! pipelined traversal is bit-identical — 0 ULP — to the caller-driven
+//! serial reference [`forward_route_serial`], whatever batches the hops
+//! ride in, because each hop is one row of a grouped batch kernel that is
+//! itself bit-identical to a serial [`PackedLayer::forward`] call (the
+//! contract in `serve::packed`). The adapter is resolved to ONE pinned
+//! version at admission and carried across every hop, so a hot-swap
+//! mid-traversal can never mix adapter versions inside one response —
+//! PR 3's consistency guarantee extends to whole-model requests.
+//!
+//! A [`SessionRequest`] is the autoregressive-decode shape: up to `steps`
+//! sequential full-model forwards with a caller-supplied step function
+//! between them (`y_k → x_{k+1}`, e.g. sample-and-embed), run entirely
+//! inside the engine so consecutive sessions keep coalescing with each
+//! other at every depth. Per-session stats (hops, forwards, queue/compute
+//! split, batch sizes seen) come back in the [`ModelResponse`].
+//!
+//! [`PackedLayer::forward`]: crate::serve::packed::PackedLayer::forward
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::serve::adapters::AdapterSet;
+use crate::serve::packed::PackedModel;
+
+/// One full-model forward request: the input activation, the ordered layer
+/// route it traverses, and the adapter applied wherever it carries a delta
+/// (route layers without one run base-only).
+pub struct ModelRequest {
+    pub route: Vec<String>,
+    pub adapter: Option<String>,
+    pub x: Vec<f64>,
+}
+
+impl ModelRequest {
+    /// Base-only full-model forward along `route`.
+    pub fn new(route: Vec<String>, x: Vec<f64>) -> ModelRequest {
+        ModelRequest { route, adapter: None, x }
+    }
+
+    /// Full-model forward routed through the named adapter.
+    pub fn with_adapter(route: Vec<String>, adapter: &str, x: Vec<f64>) -> ModelRequest {
+        ModelRequest { route, adapter: Some(adapter.to_string()), x }
+    }
+}
+
+/// The step function between a session's forwards: called with the number
+/// of completed forwards (1-based) and the final activation of the last
+/// one; returns the next forward's input, or `None` to end the session
+/// early. Runs on a kernel worker — panics are caught and fail only the
+/// owning session.
+pub type StepFn = Box<dyn FnMut(usize, &[f64]) -> Option<Vec<f64>> + Send + 'static>;
+
+/// A multi-step session: up to `steps` sequential full-model forwards with
+/// [`StepFn`] bridging each pair — the autoregressive-decode request shape.
+/// The adapter (like a [`ModelRequest`]'s) is pinned once at admission and
+/// held for the whole session.
+pub struct SessionRequest {
+    pub route: Vec<String>,
+    pub adapter: Option<String>,
+    pub x0: Vec<f64>,
+    pub steps: usize,
+    pub step: StepFn,
+}
+
+impl SessionRequest {
+    pub fn new(route: Vec<String>, x0: Vec<f64>, steps: usize, step: StepFn) -> SessionRequest {
+        SessionRequest { route, adapter: None, x0, steps, step }
+    }
+
+    pub fn with_adapter(
+        route: Vec<String>,
+        adapter: &str,
+        x0: Vec<f64>,
+        steps: usize,
+        step: StepFn,
+    ) -> SessionRequest {
+        SessionRequest { route, adapter: Some(adapter.to_string()), x0, steps, step }
+    }
+}
+
+/// A completed model request or session: the final activation plus the
+/// traversal's stats.
+#[derive(Clone, Debug)]
+pub struct ModelResponse {
+    /// Output of the last route layer of the last completed forward.
+    pub y: Vec<f64>,
+    /// Forward passes completed (1 for a plain [`ModelRequest`]; ≤ `steps`
+    /// for a session whose step function ended it early).
+    pub forwards: usize,
+    /// Layer hops executed (`forwards · route_len`).
+    pub hops: usize,
+    /// Summed FIFO wait across all hops.
+    pub queue_s: f64,
+    /// Summed kernel time of every micro-batch a hop rode in.
+    pub compute_s: f64,
+    /// Admission → reply.
+    pub wall_s: f64,
+    /// Largest micro-batch any hop rode in — >1 means the traversal
+    /// actually coalesced with other traffic.
+    pub max_batch_seen: usize,
+    /// Hops that rode a batch mixing more than one adapter group.
+    pub mixed_hops: usize,
+}
+
+/// Handle to a submitted [`ModelRequest`] / [`SessionRequest`]; resolves to
+/// its [`ModelResponse`].
+pub struct ModelTicket {
+    rx: mpsc::Receiver<anyhow::Result<ModelResponse>>,
+}
+
+impl ModelTicket {
+    pub(crate) fn new(rx: mpsc::Receiver<anyhow::Result<ModelResponse>>) -> ModelTicket {
+        ModelTicket { rx }
+    }
+
+    /// Block until the engine answers (or report that it shut down first).
+    pub fn wait(self) -> anyhow::Result<ModelResponse> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("serve engine dropped before answering"))?
+    }
+}
+
+/// The caller-driven serial reference the parity suite pins the pipelined
+/// traversal against: one [`PackedLayer::forward`] per route layer, the
+/// adapter's pair applied wherever it carries one. This is also exactly
+/// what a caller without `submit_model` has to do by hand — the throughput
+/// comparison in `benches/bench_forward.rs`.
+///
+/// [`PackedLayer::forward`]: crate::serve::packed::PackedLayer::forward
+pub fn forward_route_serial(
+    model: &PackedModel,
+    route: &[String],
+    adapter: Option<&AdapterSet>,
+    x: &[f64],
+) -> anyhow::Result<Vec<f64>> {
+    let idxs = model.route_indices(route)?;
+    let mut cur = x.to_vec();
+    for &i in &idxs {
+        let layer = &model.layers[i];
+        cur = layer.forward(&cur, adapter.and_then(|s| s.get(&layer.name)));
+    }
+    Ok(cur)
+}
+
+/// What a finished hop does next (returned by [`Traversal::absorb_hop`]).
+pub(crate) enum HopOutcome {
+    /// More route (or another forward) left: re-enter the FIFO at `layer`
+    /// with input `x`.
+    Reenter { layer: usize, x: Vec<f64>, traversal: Box<Traversal> },
+    /// The traversal replied (success or failure) and released its slot.
+    Replied { ok: bool, forwards: usize },
+}
+
+/// Engine-internal state of one in-flight model request / session: where
+/// it is on its route, how many forwards remain, and the stats accumulated
+/// so far. Owned by the rider's `Pending` hop; consumed on reply.
+pub(crate) struct Traversal {
+    route: Arc<Vec<usize>>,
+    /// Index into `route` of the hop just executed.
+    hop: usize,
+    forwards_done: usize,
+    steps: usize,
+    step: Option<StepFn>,
+    t_admit: Instant,
+    hops_done: usize,
+    queue_s: f64,
+    compute_s: f64,
+    max_batch_seen: usize,
+    mixed_hops: usize,
+    tx: mpsc::Sender<anyhow::Result<ModelResponse>>,
+}
+
+impl Traversal {
+    /// `steps == 1` may omit the step fn; multi-step sessions must carry
+    /// one (enforced by the public constructors, asserted here).
+    pub(crate) fn new(
+        route: Arc<Vec<usize>>,
+        steps: usize,
+        step: Option<StepFn>,
+        tx: mpsc::Sender<anyhow::Result<ModelResponse>>,
+        t_admit: Instant,
+    ) -> Traversal {
+        assert!(steps >= 1, "traversal with zero forwards");
+        assert!(!route.is_empty(), "traversal with an empty route");
+        assert!(steps == 1 || step.is_some(), "multi-step session without a step fn");
+        Traversal {
+            route,
+            hop: 0,
+            forwards_done: 0,
+            steps,
+            step,
+            t_admit,
+            hops_done: 0,
+            queue_s: 0.0,
+            compute_s: 0.0,
+            max_batch_seen: 0,
+            mixed_hops: 0,
+            tx,
+        }
+    }
+
+    /// Hops already executed (the engine names the failing hop in kernel
+    /// panic errors).
+    pub(crate) fn hops_done(&self) -> usize {
+        self.hops_done
+    }
+
+    /// Fold one executed hop's result into the traversal and decide what
+    /// happens next: re-enter at the next route layer, start the next
+    /// forward through the step fn, or reply. `rows_of` maps a layer index
+    /// to its input width (validates step-fn outputs before they re-enter).
+    /// Step-fn panics are caught here and fail only this traversal.
+    pub(crate) fn absorb_hop(
+        mut self: Box<Self>,
+        y: Vec<f64>,
+        queue_s: f64,
+        compute_s: f64,
+        batch: usize,
+        groups: usize,
+        rows_of: &dyn Fn(usize) -> usize,
+    ) -> HopOutcome {
+        self.hops_done += 1;
+        self.queue_s += queue_s;
+        self.compute_s += compute_s;
+        self.max_batch_seen = self.max_batch_seen.max(batch);
+        if groups > 1 {
+            self.mixed_hops += 1;
+        }
+        self.hop += 1;
+        if self.hop < self.route.len() {
+            let layer = self.route[self.hop];
+            return HopOutcome::Reenter { layer, x: y, traversal: self };
+        }
+        // Route exhausted: one full forward pass is done.
+        self.forwards_done += 1;
+        if self.forwards_done == self.steps {
+            return self.reply_ok(y);
+        }
+        let k = self.forwards_done;
+        let step = self.step.as_mut().expect("checked at construction");
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| step(k, &y))) {
+            Err(_) => self.reply_err(anyhow::anyhow!(
+                "session step function panicked after forward {k}"
+            )),
+            Ok(None) => self.reply_ok(y), // caller-requested early stop
+            Ok(Some(next_x)) => {
+                let head = self.route[0];
+                let need = rows_of(head);
+                if next_x.len() != need {
+                    return self.reply_err(anyhow::anyhow!(
+                        "session step after forward {k} returned {} values but the route \
+                         head takes {need} features",
+                        next_x.len()
+                    ));
+                }
+                self.hop = 0;
+                HopOutcome::Reenter { layer: head, x: next_x, traversal: self }
+            }
+        }
+    }
+
+    /// Fail the traversal (kernel panic on one of its hops); returns the
+    /// forwards it had completed, for the engine's counters.
+    pub(crate) fn fail(self: Box<Self>, e: anyhow::Error) -> usize {
+        let forwards = self.forwards_done;
+        let _ = self.tx.send(Err(e));
+        forwards
+    }
+
+    fn reply_ok(self: Box<Self>, y: Vec<f64>) -> HopOutcome {
+        let forwards = self.forwards_done;
+        let resp = ModelResponse {
+            y,
+            forwards,
+            hops: self.hops_done,
+            queue_s: self.queue_s,
+            compute_s: self.compute_s,
+            wall_s: self.t_admit.elapsed().as_secs_f64(),
+            max_batch_seen: self.max_batch_seen,
+            mixed_hops: self.mixed_hops,
+        };
+        let _ = self.tx.send(Ok(resp)); // requester may have given up; fine
+        HopOutcome::Replied { ok: true, forwards }
+    }
+
+    fn reply_err(self: Box<Self>, e: anyhow::Error) -> HopOutcome {
+        let forwards = self.forwards_done;
+        let _ = self.tx.send(Err(e));
+        HopOutcome::Replied { ok: false, forwards }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::quant::{quantize_rtn, QuantState};
+    use crate::serve::packed::PackedLayer;
+    use crate::util::prng::Rng;
+
+    fn chain_model(seed: u64) -> PackedModel {
+        // 12 → 8 → 20 → 12: chainable, and the tail matches the head so a
+        // session can loop with an identity-shaped step.
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        for (name, m, n) in [("a", 12usize, 8usize), ("b", 8, 20), ("c", 20, 12)] {
+            let w = Matrix::randn(m, n, 0.3, &mut rng);
+            let q = QuantState::Int(quantize_rtn(&w, 4, 8));
+            layers.push(PackedLayer::from_state(name, &q).unwrap());
+        }
+        PackedModel::new(layers)
+    }
+
+    fn names(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn serial_reference_composes_layer_forwards() {
+        let m = chain_model(900);
+        let x = Rng::new(901).gauss_vec(12);
+        let y = forward_route_serial(&m, &names(&["a", "b", "c"]), None, &x).unwrap();
+        let mut expect = x.clone();
+        for name in ["a", "b", "c"] {
+            expect = m.layer(name).unwrap().forward(&expect, None);
+        }
+        assert_eq!(y, expect);
+        assert_eq!(y.len(), 12);
+    }
+
+    #[test]
+    fn serial_reference_rejects_broken_routes() {
+        let m = chain_model(902);
+        let x = vec![0.0; 12];
+        let err = forward_route_serial(&m, &names(&["a", "c"]), None, &x).unwrap_err();
+        assert!(format!("{err}").contains("route break"), "{err}");
+        let err = forward_route_serial(&m, &names(&["a", "nope"]), None, &x).unwrap_err();
+        assert!(format!("{err}").contains("'nope'"), "{err}");
+    }
+
+    #[test]
+    fn traversal_walks_route_then_replies() {
+        let (tx, rx) = mpsc::channel();
+        let route = Arc::new(vec![0usize, 1, 2]);
+        let t0 = Instant::now();
+        let mut tr = Box::new(Traversal::new(route, 1, None, tx, t0));
+        let rows_of = |_: usize| 4usize;
+        for expect_layer in [1usize, 2] {
+            match tr.absorb_hop(vec![0.0; 4], 1e-6, 2e-6, 3, 1, &rows_of) {
+                HopOutcome::Reenter { layer, traversal, .. } => {
+                    assert_eq!(layer, expect_layer);
+                    tr = traversal;
+                }
+                HopOutcome::Replied { .. } => panic!("route not exhausted yet"),
+            }
+        }
+        match tr.absorb_hop(vec![7.0; 4], 1e-6, 2e-6, 5, 2, &rows_of) {
+            HopOutcome::Replied { ok, forwards } => {
+                assert!(ok);
+                assert_eq!(forwards, 1);
+            }
+            HopOutcome::Reenter { .. } => panic!("route exhausted"),
+        }
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.y, vec![7.0; 4]);
+        assert_eq!(resp.hops, 3);
+        assert_eq!(resp.forwards, 1);
+        assert_eq!(resp.max_batch_seen, 5);
+        assert_eq!(resp.mixed_hops, 1);
+        assert!((resp.queue_s - 3e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn session_step_bridges_forwards_and_can_stop_early() {
+        let (tx, rx) = mpsc::channel();
+        let route = Arc::new(vec![0usize]);
+        let step: StepFn =
+            Box::new(|k, y| if k < 2 { Some(y.iter().map(|v| v + 1.0).collect()) } else { None });
+        let mut tr =
+            Box::new(Traversal::new(route, 10, Some(step), tx, Instant::now()));
+        let rows_of = |_: usize| 2usize;
+        // Forward 1 done → step runs → re-enter at the route head.
+        tr = match tr.absorb_hop(vec![1.0, 1.0], 0.0, 0.0, 1, 1, &rows_of) {
+            HopOutcome::Reenter { layer, x, traversal } => {
+                assert_eq!(layer, 0);
+                assert_eq!(x, vec![2.0, 2.0]);
+                traversal
+            }
+            _ => panic!("step must continue the session"),
+        };
+        // Forward 2 done → step returns None → early stop at forwards=2.
+        match tr.absorb_hop(vec![5.0, 5.0], 0.0, 0.0, 1, 1, &rows_of) {
+            HopOutcome::Replied { ok, forwards } => {
+                assert!(ok);
+                assert_eq!(forwards, 2);
+            }
+            _ => panic!("step returned None: session must end"),
+        }
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.forwards, 2);
+        assert_eq!(resp.hops, 2);
+        assert_eq!(resp.y, vec![5.0, 5.0]);
+    }
+
+    #[test]
+    fn misshapen_step_output_fails_the_session_actionably() {
+        let (tx, rx) = mpsc::channel();
+        let step: StepFn = Box::new(|_, _| Some(vec![0.0; 99]));
+        let tr = Box::new(Traversal::new(
+            Arc::new(vec![0usize]),
+            3,
+            Some(step),
+            tx,
+            Instant::now(),
+        ));
+        match tr.absorb_hop(vec![0.0; 2], 0.0, 0.0, 1, 1, &|_| 2usize) {
+            HopOutcome::Replied { ok, forwards } => {
+                assert!(!ok);
+                assert_eq!(forwards, 1);
+            }
+            _ => panic!("bad step output must fail the session"),
+        }
+        let err = rx.recv().unwrap().unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("99 values"), "{msg}");
+        assert!(msg.contains("takes 2 features"), "{msg}");
+    }
+
+    #[test]
+    fn panicking_step_fails_only_its_session() {
+        let (tx, rx) = mpsc::channel();
+        let step: StepFn = Box::new(|_, _| panic!("injected step panic"));
+        let tr = Box::new(Traversal::new(
+            Arc::new(vec![0usize]),
+            2,
+            Some(step),
+            tx,
+            Instant::now(),
+        ));
+        match tr.absorb_hop(vec![0.0; 2], 0.0, 0.0, 1, 1, &|_| 2usize) {
+            HopOutcome::Replied { ok, .. } => assert!(!ok),
+            _ => panic!("step panic must fail the session"),
+        }
+        let err = rx.recv().unwrap().unwrap_err();
+        assert!(format!("{err}").contains("step function panicked"), "{err}");
+    }
+}

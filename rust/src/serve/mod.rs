@@ -8,15 +8,16 @@
 //! exactly one frozen base plus a cheap per-task adapter pair, the server
 //! is **multi-tenant**: the packed base loads once, and every request
 //! routes to one of many hot-swappable adapters. This module provides the
-//! four pieces:
+//! five pieces:
 //!
 //! * [`packed`] — [`PackedLayer`]/[`PackedModel`]: the base half — codes
 //!   bit-packed into u32 words plus a **fused unpack→dequant→dot forward
 //!   kernel** that applies a caller-supplied `LoraPair` delta as two
 //!   skinny products (`y = Q̂ᵀx + B(Aᵀx)`), including a grouped batch
-//!   kernel for mixed-adapter micro-batches. Bit-identical to the dense
-//!   `q_deq` reference — the parity contract is spelled out in the module
-//!   docs and enforced by `rust/tests/parity_serve.rs`.
+//!   kernel for mixed-adapter micro-batches, and forward-route validation
+//!   (name resolution + output/input width chaining). Bit-identical to
+//!   the dense `q_deq` reference — the parity contract is spelled out in
+//!   the module docs and enforced by `rust/tests/parity_serve.rs`.
 //! * [`adapters`] — [`AdapterSet`]/[`AdapterRegistry`]: the tenant half —
 //!   named per-layer LoRA collections with register/unregister/hot-swap
 //!   under load, pin-counted checkouts, LRU eviction under a byte budget,
@@ -31,18 +32,35 @@
 //! * [`engine`] — [`ServeEngine`]: a batching front-end on the persistent
 //!   `util::threadpool::WorkerPool` that coalesces concurrent requests
 //!   into per-layer micro-batches (grouping same-adapter requests inside
-//!   each batch) and reports per-request latency plus aggregate
-//!   throughput counters.
+//!   each batch), with hop-aware backpressure and a drain-aware shutdown,
+//!   and reports per-request latency plus aggregate throughput counters.
+//! * [`forward`] — [`ModelRequest`]/[`SessionRequest`]: **full-model
+//!   pipelined forwards**. A request names an ordered layer route (from
+//!   `model::ModelConfig::forward_route` or hand-built); the engine
+//!   decomposes it into per-layer hops that re-enter the batcher's FIFO
+//!   after each micro-batch, so concurrent model requests at the same
+//!   depth coalesce into shared grouped kernel calls — continuous
+//!   batching for the layer chain. Sessions run N sequential forwards
+//!   with a caller step function between them (the autoregressive-decode
+//!   shape), entirely inside the engine, with per-session stats in the
+//!   [`ModelResponse`]. Bit-identical (0 ULP) to the caller-driven serial
+//!   reference [`forward_route_serial`] — enforced by
+//!   `rust/tests/parity_forward.rs`, with shutdown/overload/panic
+//!   semantics in `rust/tests/lifecycle_forward.rs`.
 //!
 //! Benchmarks: `cargo bench --bench bench_serve` writes `BENCH_serve.json`
-//! (fused vs dense forward, batched vs serial throughput) and
+//! (fused vs dense forward, batched vs serial throughput),
 //! `cargo bench --bench bench_adapters` writes `BENCH_adapters.json`
-//! (adapter-count sweep, mixed-batch penalty, eviction churn) — see
-//! EXPERIMENTS.md §Serve and §Adapters.
+//! (adapter-count sweep, mixed-batch penalty, eviction churn), and
+//! `cargo bench --bench bench_forward` writes `BENCH_forward.json`
+//! (pipelined vs caller-driven-serial full-model throughput across
+//! concurrent session counts, mixed-adapter sweep) — see EXPERIMENTS.md
+//! §Serve, §Adapters and §Forward.
 
 pub mod adapters;
 pub mod artifact;
 pub mod engine;
+pub mod forward;
 pub mod packed;
 
 pub use adapters::{
@@ -53,4 +71,7 @@ pub use artifact::{
     save_adapter_artifact, save_artifact_v1, save_base_artifact,
 };
 pub use engine::{EngineConfig, EngineStats, Request, Response, ServeEngine, Ticket};
+pub use forward::{
+    forward_route_serial, ModelRequest, ModelResponse, ModelTicket, SessionRequest, StepFn,
+};
 pub use packed::{words_per_row, DequantParams, PackedLayer, PackedModel};

@@ -408,6 +408,52 @@ impl PackedModel {
         self.layers.iter().map(|l| l.packed_bytes()).sum()
     }
 
+    /// Resolve an ordered forward route of layer names into indices,
+    /// validating it with [`PackedModel::validate_route`]. Layers may
+    /// repeat (a square layer applied twice is a legal route).
+    pub fn route_indices(&self, route: &[String]) -> anyhow::Result<Vec<usize>> {
+        anyhow::ensure!(!route.is_empty(), "forward route is empty");
+        let mut idxs = Vec::with_capacity(route.len());
+        for name in route {
+            // Same wording as the engine's O(1) admission path
+            // (`ServeEngine::admit_traversal`), so the two route
+            // resolvers cannot drift apart in what callers see.
+            idxs.push(self.index_of(name).ok_or_else(|| {
+                anyhow::anyhow!("no such layer '{name}' in the served model")
+            })?);
+        }
+        self.validate_route(&idxs)?;
+        Ok(idxs)
+    }
+
+    /// Validate a forward route against the packed shapes: non-empty,
+    /// in-range, and CHAINABLE — each layer's output width (`cols`) must
+    /// equal the next layer's input width (`rows`), because hop `k+1`
+    /// consumes hop `k`'s activation verbatim. Errors name both ends of
+    /// the first break.
+    pub fn validate_route(&self, idxs: &[usize]) -> anyhow::Result<()> {
+        anyhow::ensure!(!idxs.is_empty(), "forward route is empty");
+        for &i in idxs {
+            anyhow::ensure!(
+                i < self.layers.len(),
+                "route layer index {i} out of range ({} layers)",
+                self.layers.len()
+            );
+        }
+        for w in idxs.windows(2) {
+            let (a, b) = (&self.layers[w[0]], &self.layers[w[1]]);
+            anyhow::ensure!(
+                a.cols == b.rows,
+                "route break between '{}' ({} features out) and '{}' (takes {} features in)",
+                a.name,
+                a.cols,
+                b.name,
+                b.rows
+            );
+        }
+        Ok(())
+    }
+
     /// Build the serving halves straight from a `quantize_init` result: the
     /// packed base from the exact f64 quantization states, and one
     /// [`AdapterSet`] (named `adapter_id`) holding the adapters from the
@@ -556,6 +602,37 @@ mod tests {
         assert_eq!(y, y_ref);
         let ys = l.forward_batch(&Matrix::from_vec(1, 16, x), None);
         assert_eq!(ys.data, y_ref);
+    }
+
+    #[test]
+    fn route_validation_checks_chainability() {
+        let mut rng = Rng::new(208);
+        let mut layers = Vec::new();
+        for (name, m, n) in [("a", 12usize, 8usize), ("b", 8, 12), ("c", 5, 5)] {
+            let w = Matrix::randn(m, n, 0.3, &mut rng);
+            layers.push(
+                PackedLayer::from_state(name, &QuantState::Int(quantize_rtn(&w, 4, 4))).unwrap(),
+            );
+        }
+        let model = PackedModel::new(layers);
+        let names = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
+        // Chainable, including a repeated layer (a→b is 12→8→12, so a can
+        // run again) — and a single-layer route is trivially valid.
+        assert_eq!(model.route_indices(&names(&["a", "b", "a", "b"])).unwrap(), [0, 1, 0, 1]);
+        assert_eq!(model.route_indices(&names(&["c"])).unwrap(), [2]);
+        // Breaks name both ends with their widths.
+        let err = model.route_indices(&names(&["a", "c"])).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("route break"), "{msg}");
+        assert!(msg.contains("'a' (8 features out)"), "{msg}");
+        assert!(msg.contains("'c' (takes 5 features in)"), "{msg}");
+        // Unknown names and empty routes are admission errors too.
+        let err = model.route_indices(&names(&["ghost"])).unwrap_err();
+        assert!(format!("{err}").contains("no such layer 'ghost'"), "{err}");
+        let err = model.route_indices(&[]).unwrap_err();
+        assert!(format!("{err}").contains("route is empty"), "{err}");
+        let err = model.validate_route(&[0, 99]).unwrap_err();
+        assert!(format!("{err}").contains("out of range"), "{err}");
     }
 
     #[test]

@@ -111,7 +111,13 @@ struct PoolState {
 
 struct PoolShared {
     state: Mutex<PoolState>,
+    /// Workers park here waiting for jobs (or shutdown).
     cv: Condvar,
+    /// `wait_idle` callers park here; run-to-idle transitions notify it.
+    /// A separate condvar so `submit` can wake exactly one worker without
+    /// broadcasting to every thread on the dispatch hot path (and without
+    /// the stranded-job hazard a shared condvar + notify_one would have).
+    idle_cv: Condvar,
 }
 
 /// Persistent worker pool: jobs are submitted dynamically (unlike the
@@ -119,6 +125,16 @@ struct PoolShared {
 /// order. Shutdown (explicit or on drop) drains the queue before joining,
 /// so every submitted job runs. A panicking job is caught and counted —
 /// one bad request cannot take a worker down.
+///
+/// **Re-entrancy**: `submit` may be called from INSIDE a running job (the
+/// serving engine's hop re-entry shape: a finished micro-batch enqueues
+/// follow-up work from a worker thread). The pool lock is only held for
+/// the queue push — job bodies run lock-free — so a worker enqueuing more
+/// work can never deadlock the pool or the thread that dispatches into
+/// it. `wait_idle` stays correct across re-entrant submits: the submitting
+/// job is still counted `active` while it pushes, so the pool is never
+/// observed "idle" between a job finishing its work and publishing its
+/// follow-ups.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
     handles: Vec<std::thread::JoinHandle<()>>,
@@ -134,6 +150,7 @@ impl WorkerPool {
                 active: 0,
             }),
             cv: Condvar::new(),
+            idle_cv: Condvar::new(),
         });
         let handles = (0..workers.max(1))
             .map(|_| {
@@ -166,9 +183,7 @@ impl WorkerPool {
                                 st.jobs.is_empty() && st.active == 0
                             };
                             if idle {
-                                // Wake any wait_idle callers (workers woken
-                                // spuriously just re-check their queue).
-                                shared.cv.notify_all();
+                                shared.idle_cv.notify_all(); // wake wait_idle callers
                             }
                         }
                     }
@@ -187,12 +202,10 @@ impl WorkerPool {
             assert!(st.open, "submit on a shut-down WorkerPool");
             st.jobs.push_back(Box::new(job));
         }
-        // notify_all, not notify_one: `wait_idle` waiters share this
-        // condvar, and a single wakeup could land on one of them (which
-        // just re-waits) while every worker stays parked — stranding the
-        // job. Waking everyone lets a worker claim it; idle waiters
-        // re-check and re-wait.
-        self.shared.cv.notify_all();
+        // Only workers wait on `cv` (`wait_idle` parks on `idle_cv`), so a
+        // single wakeup always lands on a thread that can claim the job —
+        // no broadcast needed on the dispatch hot path.
+        self.shared.cv.notify_one();
     }
 
     /// Number of jobs that panicked so far (each was caught; its worker
@@ -210,7 +223,7 @@ impl WorkerPool {
     pub fn wait_idle(&self) {
         let mut st = self.shared.state.lock().unwrap();
         while !(st.jobs.is_empty() && st.active == 0) {
-            st = self.shared.cv.wait(st).unwrap();
+            st = self.shared.idle_cv.wait(st).unwrap();
         }
     }
 
@@ -317,6 +330,31 @@ mod tests {
         assert_eq!(done.load(Ordering::SeqCst), 16, "wait_idle returned with work pending");
         pool.wait_idle(); // idempotent once idle
         pool.shutdown();
+    }
+
+    #[test]
+    fn jobs_can_submit_follow_up_jobs_without_deadlock() {
+        // The serving engine's hop re-entry shape: each finished job
+        // enqueues the next from inside a worker. wait_idle must observe
+        // the whole chain (the submitting job is still `active` while it
+        // pushes its follow-up, so there is no idle window mid-chain).
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        fn chain(pool: Arc<WorkerPool>, done: Arc<AtomicUsize>, depth: usize) {
+            let p2 = Arc::clone(&pool);
+            pool.submit(move || {
+                if depth > 1 {
+                    chain(Arc::clone(&p2), Arc::clone(&done), depth - 1);
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        let pool = Arc::new(WorkerPool::new(2));
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..4 {
+            chain(Arc::clone(&pool), Arc::clone(&done), 8);
+        }
+        pool.wait_idle();
+        assert_eq!(done.load(Ordering::SeqCst), 32, "every re-entrant hop must run");
     }
 
     #[test]

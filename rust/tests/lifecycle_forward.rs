@@ -1,0 +1,214 @@
+//! Lifecycle tests for the full-model pipelined path: drain-aware
+//! shutdown (every admitted traversal finishes every remaining hop),
+//! hop-aware backpressure (in-kernel hops count toward the admission
+//! limit, not just FIFO entries), and failure isolation (a panicking
+//! layer kernel or session step function fails only its own request, with
+//! the layer named).
+
+use std::sync::mpsc;
+
+use cloq::linalg::Matrix;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{
+    DequantParams, EngineConfig, ModelRequest, PackedLayer, PackedModel, ServeEngine,
+    SessionRequest, StepFn,
+};
+use cloq::util::prng::Rng;
+
+fn square_layer(name: &str, n: usize, seed: u64) -> PackedLayer {
+    let mut rng = Rng::new(seed);
+    let w = Matrix::randn(n, n, 0.3, &mut rng);
+    PackedLayer::from_state(name, &QuantState::Int(quantize_rtn(&w, 4, 8))).unwrap()
+}
+
+fn names(v: &[&str]) -> Vec<String> {
+    v.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn shutdown_drains_every_hop_of_admitted_traversals() {
+    // 24 three-hop model requests and 4 three-step sessions admitted,
+    // then an immediate shutdown: the drain must complete every remaining
+    // hop (traversals re-enter the FIFO from workers while the engine is
+    // closing), so every ticket resolves Ok.
+    let model = PackedModel::new(vec![
+        square_layer("a", 16, 700),
+        square_layer("b", 16, 701),
+        square_layer("c", 16, 702),
+    ]);
+    let engine = ServeEngine::new(
+        model,
+        EngineConfig { workers: 1, max_batch: 8, ..EngineConfig::default() },
+    );
+    let route = names(&["a", "b", "c"]);
+    let mut rng = Rng::new(703);
+    let models: Vec<_> = (0..24)
+        .map(|_| engine.submit_model(ModelRequest::new(route.clone(), rng.gauss_vec(16))))
+        .collect();
+    let sessions: Vec<_> = (0..4)
+        .map(|_| {
+            let step: StepFn = Box::new(|_, y| Some(y.to_vec()));
+            engine.submit_session(SessionRequest::new(route.clone(), rng.gauss_vec(16), 3, step))
+        })
+        .collect();
+    let stats = engine.shutdown(); // must answer all 28 traversals first
+    assert_eq!(stats.model_requests, 28);
+    assert_eq!(stats.session_forwards, 24 + 4 * 3);
+    assert_eq!(stats.hops, (24 + 4 * 3) * 3);
+    assert_eq!(stats.failed_model_requests, 0);
+    for t in models {
+        assert_eq!(t.wait().unwrap().forwards, 1);
+    }
+    for t in sessions {
+        assert_eq!(t.wait().unwrap().forwards, 3);
+    }
+}
+
+#[test]
+fn backpressure_counts_in_kernel_hops_not_just_the_fifo() {
+    // max_pending = 2, one worker. A session parks INSIDE the kernel
+    // worker (its step fn blocks on a gate), so the FIFO is empty while
+    // one live hop slot is held. One more admission fits; the next must
+    // be rejected as overloaded even though the queue holds just one
+    // entry — the in-flight hop counts.
+    let model = PackedModel::new(vec![square_layer("sq", 12, 710)]);
+    let engine = ServeEngine::new(
+        model,
+        EngineConfig { workers: 1, max_batch: 4, max_pending: 2, ..EngineConfig::default() },
+    );
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let step: StepFn = Box::new(move |_, y| {
+        entered_tx.send(()).unwrap();
+        gate_rx.recv().unwrap();
+        Some(y.to_vec())
+    });
+    let mut rng = Rng::new(711);
+    let session = engine.submit_session(SessionRequest::new(
+        names(&["sq"]),
+        rng.gauss_vec(12),
+        2,
+        step,
+    ));
+    entered_rx.recv().unwrap(); // the session's hop is now mid-kernel
+    let second = engine.submit("sq", None, rng.gauss_vec(12)); // live = 2, queued
+    let third = engine.submit("sq", None, rng.gauss_vec(12)); // live limit hit
+    let msg = format!("{}", third.wait().unwrap_err());
+    assert!(msg.contains("overloaded"), "{msg}");
+    assert!(msg.contains("hops"), "hop-aware limit must say so: {msg}");
+    gate_tx.send(()).unwrap(); // release the parked session
+    assert_eq!(session.wait().unwrap().forwards, 2);
+    assert!(second.wait().is_ok(), "the admitted request must still be served");
+    let stats = engine.shutdown();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.model_requests, 1);
+    assert_eq!(stats.requests, 1);
+}
+
+/// A layer whose kernel panics on ANY request: hand-built codebook state
+/// whose packed codes index past the levels table (the kind of corruption
+/// the artifact CRC normally catches — here it stands in for "this layer's
+/// kernel is broken").
+fn boom_layer(n: usize) -> PackedLayer {
+    let wpr = cloq::serve::words_per_row(n, 2);
+    PackedLayer {
+        name: "boom".to_string(),
+        rows: n,
+        cols: n,
+        bits: 2,
+        group_size: n,
+        packed: vec![u32::MAX; n * wpr], // every 2-bit code = 3
+        params: DequantParams::Codebook {
+            levels: vec![0.0, 1.0], // code 3 is out of range → panic
+            absmax: Matrix::zeros(1, n),
+        },
+    }
+}
+
+#[test]
+fn panicking_layer_fails_only_its_own_traversal_with_the_layer_named() {
+    let model = PackedModel::new(vec![
+        square_layer("ok1", 10, 720),
+        boom_layer(10),
+        square_layer("ok2", 10, 721),
+    ]);
+    let engine = ServeEngine::new(
+        model,
+        EngineConfig { workers: 1, max_batch: 8, ..EngineConfig::default() },
+    );
+    let mut rng = Rng::new(722);
+    // Both traversals start at ok1 (they may share that micro-batch);
+    // only the one routed through boom may fail.
+    let doomed = engine.submit_model(ModelRequest::new(
+        names(&["ok1", "boom", "ok2"]),
+        rng.gauss_vec(10),
+    ));
+    let healthy =
+        engine.submit_model(ModelRequest::new(names(&["ok1", "ok2"]), rng.gauss_vec(10)));
+    let msg = format!("{}", doomed.wait().unwrap_err());
+    assert!(msg.contains("'boom'"), "error must name the layer: {msg}");
+    assert!(msg.contains("hop 2"), "error must name the failing hop: {msg}");
+    assert!(healthy.wait().is_ok(), "an unrelated traversal must be unaffected");
+    // The worker survived the panic: the engine keeps serving.
+    assert!(engine
+        .submit_model(ModelRequest::new(names(&["ok1", "ok2"]), rng.gauss_vec(10)))
+        .wait()
+        .is_ok());
+    let stats = engine.shutdown();
+    assert_eq!(stats.failed_model_requests, 1);
+    assert_eq!(stats.model_requests, 2);
+    assert!(stats.batch_panics >= 1);
+    assert_eq!(stats.failed, 0, "no single-layer rider was in the panicked batch");
+}
+
+#[test]
+fn step_failures_fail_only_their_session() {
+    let model = PackedModel::new(vec![square_layer("sq", 8, 730)]);
+    let engine = ServeEngine::new(model, EngineConfig::default());
+    let mut rng = Rng::new(731);
+    let panicking: StepFn = Box::new(|_, _| panic!("injected step panic"));
+    let bad_shape: StepFn = Box::new(|_, _| Some(vec![0.0; 3]));
+    let s1 = engine.submit_session(SessionRequest::new(
+        names(&["sq"]),
+        rng.gauss_vec(8),
+        2,
+        panicking,
+    ));
+    let s2 = engine.submit_session(SessionRequest::new(
+        names(&["sq"]),
+        rng.gauss_vec(8),
+        2,
+        bad_shape,
+    ));
+    let ok = engine.submit_model(ModelRequest::new(names(&["sq"]), rng.gauss_vec(8)));
+    let msg = format!("{}", s1.wait().unwrap_err());
+    assert!(msg.contains("step function panicked"), "{msg}");
+    let msg = format!("{}", s2.wait().unwrap_err());
+    assert!(msg.contains("3 values"), "{msg}");
+    assert!(msg.contains("takes 8 features"), "{msg}");
+    assert!(ok.wait().is_ok(), "unrelated traffic must be unaffected");
+    let stats = engine.shutdown();
+    assert_eq!(stats.failed_model_requests, 2);
+    assert_eq!(stats.model_requests, 1);
+    assert_eq!(stats.batch_panics, 0, "step failures are not kernel panics");
+}
+
+#[test]
+fn sessions_stop_early_when_the_step_says_so() {
+    let model = PackedModel::new(vec![square_layer("sq", 8, 740)]);
+    let engine = ServeEngine::new(model, EngineConfig::default());
+    let step: StepFn = Box::new(|k, y| if k < 2 { Some(y.to_vec()) } else { None });
+    let r = engine
+        .submit_session(SessionRequest::new(
+            names(&["sq"]),
+            Rng::new(741).gauss_vec(8),
+            100,
+            step,
+        ))
+        .wait()
+        .unwrap();
+    assert_eq!(r.forwards, 2, "step returned None after forward 2");
+    assert_eq!(r.hops, 2);
+    let stats = engine.shutdown();
+    assert_eq!(stats.session_forwards, 2);
+}

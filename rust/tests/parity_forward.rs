@@ -1,0 +1,383 @@
+//! Full-model forward parity suite: the PIPELINED traversal
+//! (`ServeEngine::submit_model` / `submit_session`, hops re-entering the
+//! batcher's FIFO between layers) must be **bit-identical — 0 ULP — to the
+//! caller-driven serial reference** (`serve::forward_route_serial`: one
+//! fused `PackedLayer::forward` per route layer), across quantization
+//! methods (CLoQ / GPTQ-LoRA / LoftQ / QLoRA-NF), bit widths {2,3,4,8},
+//! mixed-adapter traffic, multi-step sessions, and adapter hot-swaps that
+//! land mid-flight.
+//!
+//! Why this must hold (the contract chain): every hop is one row of a
+//! grouped batch kernel that is itself bit-identical to a serial
+//! single-adapter `forward` call (`parity_serve.rs`), and a traversal
+//! feeds hop k's output verbatim into hop k+1 — so whatever micro-batches
+//! the engine forms, the composition is the exact serial composition.
+//! Batch composition, concurrency, and hot-swap timing can never change a
+//! model response's numbers.
+
+use cloq::linalg::{syrk_t, Matrix};
+use cloq::lowrank::{init_layer, InitConfig, LoraPair, Method};
+use cloq::quant::{quantize_nf, quantize_rtn, QuantState};
+use cloq::serve::{
+    forward_route_serial, AdapterSet, EngineConfig, ModelRequest, PackedLayer, PackedModel,
+    ServeEngine, SessionRequest, StepFn,
+};
+use cloq::util::prng::Rng;
+
+fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (k, (u, v)) in a.iter().zip(b).enumerate() {
+        assert_eq!(u.to_bits(), v.to_bits(), "{what}: element {k}: {u} vs {v}");
+    }
+}
+
+fn names(v: &[&str]) -> Vec<String> {
+    v.iter().map(|s| s.to_string()).collect()
+}
+
+/// A chainable 4-layer model mixing INT-grid and NF-codebook states at
+/// bits {2,3,4,8}: 32 → 20 → 28 → 32 → 32 (tail matches head, so sessions
+/// can loop with a same-length step).
+fn mixed_bits_model(seed: u64) -> PackedModel {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    for (name, m, n, bits, nf) in [
+        ("q2", 32usize, 20usize, 2u32, false),
+        ("nf3", 20, 28, 3, true),
+        ("q4", 28, 32, 4, false),
+        ("q8", 32, 32, 8, false),
+    ] {
+        let w = Matrix::randn(m, n, 0.3, &mut rng);
+        let qs = if nf {
+            QuantState::Nf(quantize_nf(&w, bits, 16))
+        } else {
+            QuantState::Int(quantize_rtn(&w, bits, 8))
+        };
+        layers.push(PackedLayer::from_state(name, &qs).unwrap());
+    }
+    PackedModel::new(layers)
+}
+
+fn rand_set(id: &str, model: &PackedModel, r: usize, seed: u64) -> AdapterSet {
+    let mut rng = Rng::new(seed);
+    let mut set = AdapterSet::new(id);
+    for l in &model.layers {
+        let pair = LoraPair::new(
+            Matrix::randn(l.rows, r, 0.1, &mut rng),
+            Matrix::randn(l.cols, r, 0.1, &mut rng),
+        );
+        set.insert(&l.name, pair).unwrap();
+    }
+    set
+}
+
+#[test]
+fn pipelined_forward_bit_identical_to_serial_across_init_methods() {
+    // Layers initialized by four different methods, chained 24→16→24→12;
+    // the tenant's adapters are the ones each init actually produced
+    // (PackedLayer::from_layer_init), so this is the end-to-end CLoQ
+    // serving shape.
+    let mut rng = Rng::new(600);
+    let mut layers = Vec::new();
+    let mut pairs = Vec::new();
+    for (name, method, m, n) in [
+        ("wq", Method::CLoQ, 24usize, 16usize),
+        ("wo", Method::GptqLora, 16, 24),
+        ("up", Method::QLora, 24, 12),
+        ("dn", Method::LoftQ, 12, 24),
+    ] {
+        let w = Matrix::randn(m, n, 0.3, &mut rng);
+        let x_cal = Matrix::randn(2 * m, m, 1.0, &mut rng);
+        let h = syrk_t(&x_cal);
+        let mut cfg = InitConfig::new(method, 3, 4);
+        cfg.group_size = 8;
+        let li = init_layer(&w, Some(&h), &cfg, &mut rng);
+        let (layer, pair) = PackedLayer::from_layer_init(name, method, &li).unwrap();
+        pairs.push((name.to_string(), pair));
+        layers.push(layer);
+    }
+    let model = PackedModel::new(layers);
+    let set = AdapterSet::from_pairs("init", pairs).unwrap();
+    let route = names(&["wq", "wo", "up", "dn"]);
+
+    let mut xrng = Rng::new(601);
+    let xs: Vec<Vec<f64>> = (0..10).map(|_| xrng.gauss_vec(24)).collect();
+    let serial: Vec<Vec<f64>> = xs
+        .iter()
+        .map(|x| forward_route_serial(&model, &route, Some(&set), x).unwrap())
+        .collect();
+    let serial_base: Vec<Vec<f64>> =
+        xs.iter().map(|x| forward_route_serial(&model, &route, None, x).unwrap()).collect();
+
+    let engine = ServeEngine::new(
+        model,
+        EngineConfig { workers: 2, max_batch: 4, ..EngineConfig::default() },
+    );
+    engine.register_adapter(set).unwrap();
+    let tickets: Vec<_> = xs
+        .iter()
+        .map(|x| engine.submit_model(ModelRequest::with_adapter(route.clone(), "init", x.clone())))
+        .collect();
+    let base_tickets: Vec<_> = xs
+        .iter()
+        .map(|x| engine.submit_model(ModelRequest::new(route.clone(), x.clone())))
+        .collect();
+    for (k, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().unwrap();
+        assert_bits_eq(&r.y, &serial[k], &format!("adapter request {k}"));
+        assert_eq!(r.forwards, 1);
+        assert_eq!(r.hops, 4);
+        assert!(r.queue_s >= 0.0 && r.compute_s >= 0.0 && r.wall_s >= 0.0);
+    }
+    for (k, t) in base_tickets.into_iter().enumerate() {
+        let r = t.wait().unwrap();
+        assert_bits_eq(&r.y, &serial_base[k], &format!("base request {k}"));
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.model_requests, 20);
+    assert_eq!(stats.session_forwards, 20);
+    assert_eq!(stats.hops, 80, "20 requests x 4 hops");
+    assert!(stats.max_batch_seen >= 2, "concurrent traversals must coalesce: {stats:?}");
+}
+
+#[test]
+fn concurrent_mixed_adapter_traversals_each_match_their_own_serial() {
+    // Three tenants plus base-only over one mixed-bits base, all in
+    // flight at once: every response must match ITS adapter's serial
+    // composition, whatever batches the hops coalesced into.
+    let model = mixed_bits_model(610);
+    let sets: Vec<AdapterSet> =
+        (0..3).map(|k| rand_set(&format!("t{k}"), &model, 2 + k, 611 + k as u64)).collect();
+    let route = names(&["q2", "nf3", "q4", "q8"]);
+    let mut xrng = Rng::new(615);
+    let xs: Vec<Vec<f64>> = (0..24).map(|_| xrng.gauss_vec(32)).collect();
+    let serial: Vec<Vec<f64>> = xs
+        .iter()
+        .enumerate()
+        .map(|(i, x)| {
+            let set = if i % 4 == 3 { None } else { Some(&sets[i % 4]) };
+            forward_route_serial(&model, &route, set, x).unwrap()
+        })
+        .collect();
+
+    let engine = ServeEngine::new(
+        mixed_bits_model(610),
+        EngineConfig { workers: 2, max_batch: 8, ..EngineConfig::default() },
+    );
+    for s in sets {
+        engine.register_adapter(s).unwrap();
+    }
+    let tickets: Vec<_> = xs
+        .iter()
+        .enumerate()
+        .map(|(i, x)| {
+            let req = if i % 4 == 3 {
+                ModelRequest::new(route.clone(), x.clone())
+            } else {
+                ModelRequest::with_adapter(route.clone(), &format!("t{}", i % 4), x.clone())
+            };
+            engine.submit_model(req)
+        })
+        .collect();
+    let mut max_batch = 0usize;
+    let mut mixed = 0usize;
+    for (k, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().unwrap();
+        assert_bits_eq(&r.y, &serial[k], &format!("request {k}"));
+        max_batch = max_batch.max(r.max_batch_seen);
+        mixed += r.mixed_hops;
+    }
+    assert!(max_batch >= 2, "24 concurrent 4-hop traversals must coalesce somewhere");
+    assert!(mixed >= 1, "4 tenant groups over one route must mix in some batch");
+    let stats = engine.shutdown();
+    assert_eq!(stats.model_requests, 24);
+    assert_eq!(stats.hops, 96);
+    assert_eq!(stats.failed_model_requests, 0);
+}
+
+#[test]
+fn sessions_bit_identical_to_serial_stepped_reference() {
+    // Multi-step sessions (the autoregressive-decode shape): N forwards
+    // with a deterministic step between them must equal the hand-stepped
+    // serial composition bit-for-bit, per session, with 8 sessions in
+    // flight at once.
+    let model = mixed_bits_model(620);
+    let set = rand_set("gen", &model, 3, 621);
+    let route = names(&["q2", "nf3", "q4", "q8"]);
+    let steps = 4usize;
+    let step_of = |y: &[f64]| -> Vec<f64> { y.iter().map(|v| v * 0.5).collect() };
+
+    let mut xrng = Rng::new(622);
+    let x0s: Vec<Vec<f64>> = (0..8).map(|_| xrng.gauss_vec(32)).collect();
+    let serial: Vec<Vec<f64>> = x0s
+        .iter()
+        .map(|x0| {
+            let mut x = x0.clone();
+            let mut y = Vec::new();
+            for _ in 0..steps {
+                y = forward_route_serial(&model, &route, Some(&set), &x).unwrap();
+                x = step_of(&y);
+            }
+            y
+        })
+        .collect();
+
+    let engine = ServeEngine::new(
+        mixed_bits_model(620),
+        EngineConfig { workers: 2, max_batch: 8, ..EngineConfig::default() },
+    );
+    engine.register_adapter(set).unwrap();
+    let tickets: Vec<_> = x0s
+        .iter()
+        .map(|x0| {
+            let step: StepFn = Box::new(move |_, y| Some(y.iter().map(|v| v * 0.5).collect()));
+            engine.submit_session(SessionRequest::with_adapter(
+                route.clone(),
+                "gen",
+                x0.clone(),
+                steps,
+                step,
+            ))
+        })
+        .collect();
+    for (k, t) in tickets.into_iter().enumerate() {
+        let r = t.wait().unwrap();
+        assert_bits_eq(&r.y, &serial[k], &format!("session {k}"));
+        assert_eq!(r.forwards, steps);
+        assert_eq!(r.hops, steps * 4);
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.model_requests, 8);
+    assert_eq!(stats.session_forwards, 8 * steps);
+    assert_eq!(stats.hops, 8 * steps * 4);
+}
+
+#[test]
+fn mid_flight_hot_swap_never_mixes_adapter_versions() {
+    // Requests admitted BEFORE a hot-swap must compute every hop on the
+    // old version (their pin spans the whole traversal), requests after
+    // it on the new one — regardless of when the swap lands relative to
+    // the hops. One worker keeps plenty of traversal hops in flight
+    // across the swap.
+    let model = mixed_bits_model(630);
+    let v1 = rand_set("ten", &model, 3, 631);
+    let v2 = rand_set("ten", &model, 5, 632);
+    let route = names(&["q2", "nf3", "q4", "q8"]);
+    let mut xrng = Rng::new(633);
+    let xs: Vec<Vec<f64>> = (0..12).map(|_| xrng.gauss_vec(32)).collect();
+    let serial_v1: Vec<Vec<f64>> = xs
+        .iter()
+        .map(|x| forward_route_serial(&model, &route, Some(&v1), x).unwrap())
+        .collect();
+    let serial_v2: Vec<Vec<f64>> = xs
+        .iter()
+        .map(|x| forward_route_serial(&model, &route, Some(&v2), x).unwrap())
+        .collect();
+
+    let engine = ServeEngine::new(
+        mixed_bits_model(630),
+        EngineConfig { workers: 1, max_batch: 4, ..EngineConfig::default() },
+    );
+    engine.register_adapter(v1).unwrap();
+    // A session admitted pre-swap: all 3 of its forwards must use v1.
+    let step: StepFn = Box::new(move |_, y| Some(y.iter().map(|v| v * 0.25).collect()));
+    let session = engine.submit_session(SessionRequest::with_adapter(
+        route.clone(),
+        "ten",
+        xs[0].clone(),
+        3,
+        step,
+    ));
+    let pre: Vec<_> = xs
+        .iter()
+        .take(6)
+        .map(|x| engine.submit_model(ModelRequest::with_adapter(route.clone(), "ten", x.clone())))
+        .collect();
+    // Hot-swap while the session and the pre-batch are queued/in flight.
+    engine.register_adapter(v2).unwrap();
+    let post: Vec<_> = xs
+        .iter()
+        .skip(6)
+        .map(|x| engine.submit_model(ModelRequest::with_adapter(route.clone(), "ten", x.clone())))
+        .collect();
+    for (k, t) in pre.into_iter().enumerate() {
+        assert_bits_eq(&t.wait().unwrap().y, &serial_v1[k], &format!("pre-swap {k}"));
+    }
+    for (k, t) in post.into_iter().enumerate() {
+        assert_bits_eq(&t.wait().unwrap().y, &serial_v2[k + 6], &format!("post-swap {k}"));
+    }
+    let sr = session.wait().unwrap();
+    let mut x = xs[0].clone();
+    let mut y = Vec::new();
+    for _ in 0..3 {
+        y = forward_route_serial(&model, &route, Some(&v1), &x).unwrap();
+        x = y.iter().map(|v| v * 0.25).collect();
+    }
+    assert_bits_eq(&sr.y, &y, "session crossing a hot-swap stays on its admitted version");
+    engine.shutdown();
+}
+
+#[test]
+fn partial_adapters_run_base_only_on_uncovered_route_layers() {
+    // An adapter covering only part of the route: covered hops apply its
+    // delta, uncovered hops are base-only — matching the serial reference
+    // built from the same partial set.
+    let model = mixed_bits_model(640);
+    let mut partial = AdapterSet::new("part");
+    {
+        let mut rng = Rng::new(641);
+        for name in ["nf3", "q8"] {
+            let l = model.layer(name).unwrap();
+            partial
+                .insert(
+                    name,
+                    LoraPair::new(
+                        Matrix::randn(l.rows, 3, 0.1, &mut rng),
+                        Matrix::randn(l.cols, 3, 0.1, &mut rng),
+                    ),
+                )
+                .unwrap();
+        }
+    }
+    let route = names(&["q2", "nf3", "q4", "q8"]);
+    let x = Rng::new(642).gauss_vec(32);
+    let serial = forward_route_serial(&model, &route, Some(&partial), &x).unwrap();
+
+    let engine = ServeEngine::new(mixed_bits_model(640), EngineConfig::default());
+    engine.register_adapter(partial).unwrap();
+    let r = engine
+        .submit_model(ModelRequest::with_adapter(route.clone(), "part", x))
+        .wait()
+        .unwrap();
+    assert_bits_eq(&r.y, &serial, "partial-coverage traversal");
+    // An adapter with NO route overlap is an admission error, not a
+    // silent base-only run.
+    let mut elsewhere = AdapterSet::new("off-route");
+    {
+        let mut rng = Rng::new(643);
+        let l = model.layer("nf3").unwrap();
+        elsewhere
+            .insert(
+                "nf3",
+                LoraPair::new(
+                    Matrix::randn(l.rows, 2, 0.1, &mut rng),
+                    Matrix::randn(l.cols, 2, 0.1, &mut rng),
+                ),
+            )
+            .unwrap();
+    }
+    engine.register_adapter(elsewhere).unwrap();
+    let msg = format!(
+        "{}",
+        engine
+            .submit_model(ModelRequest::with_adapter(
+                names(&["q8"]),
+                "off-route",
+                vec![0.0; 32]
+            ))
+            .wait()
+            .unwrap_err()
+    );
+    assert!(msg.contains("no delta for any layer on the route"), "{msg}");
+    engine.shutdown();
+}

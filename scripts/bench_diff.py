@@ -5,11 +5,16 @@ committed baseline copies and fail on large throughput regressions.
 Stdlib-only by design (the CI runner and the offline sandbox have no pip).
 
 Usage:
-    scripts/bench_diff.py --baseline <dir> --fresh <dir> [--threshold 0.25]
+    scripts/bench_diff.py --baseline <dir> --fresh <dir>
+                          [--threshold 0.25] [--require-baseline]
 
 The CI bench-smoke job copies the committed BENCH_*.json (if any) into a
 baseline directory BEFORE running the benches (which overwrite the files
-in the working tree), then calls this script.
+in the working tree), then calls this script with --require-baseline so a
+silently-missing or non-comparable baseline fails loudly instead of
+skipping. The committed baselines are SMOKE-MODE records ("smoke": true)
+blessed on a CI-class runner via the `bless-baselines` workflow_dispatch
+job (.github/workflows/ci.yml).
 
 Gated rows (a >threshold drop in any of them fails the job):
   BENCH_serve.json
@@ -18,18 +23,29 @@ Gated rows (a >threshold drop in any of them fails the job):
     - kernel_batch_sweep[*].requests_per_s_min  (batched kernel throughput)
     - engine.batched.requests_per_s          (the batcher row)
     - engine.serial.requests_per_s
-  BENCH_adapters.json (reported, also gated)
+  BENCH_adapters.json
     - adapter_sweep[*].requests_per_s        (multi-tenant engine rows)
+    - multi_tenant_throughput_retention      (the multi-tenant headline)
     - mixed_batch.uniform.min_s / .sorted_8_groups.min_s
+    - eviction.registers_per_s               (registry churn headline)
+  BENCH_forward.json
+    - session_sweep[*].pipelined.forwards_per_s  (the pipelined headline)
+    - session_sweep[*].serial.forwards_per_s
+    - mixed_adapter.forwards_per_s
+  BENCH_optq.json
+    - unblocked.min_s / blocked[*].min_s     (lazy-batch blocking rows)
+  BENCH_linalg.json
+    - records[*].speedup                     (tiled-vs-naive / root ratios)
 
-Comparisons are skipped (with a note) when:
+Comparisons are skipped (with a note; a FAILURE under --require-baseline)
+when:
   - the baseline file does not exist (nothing committed yet);
   - the "smoke" flags of baseline and fresh records differ (full-run
     numbers must never be judged against smoke-mode numbers);
-  - the recorded "shape"/"rank" identity keys differ (the bench was
-    re-sized). NOTE: per-row request counts are NOT identity keys — a PR
-    that changes a bench's request count should regenerate the committed
-    baseline in the same change.
+  - the recorded "shape"/"rank"/"layers" identity keys differ (the bench
+    was re-sized). NOTE: per-row request counts are NOT identity keys — a
+    PR that changes a bench's request count should regenerate the
+    committed baseline in the same change.
 """
 
 import argparse
@@ -46,12 +62,32 @@ GATED_ROWS = [
     ("BENCH_serve.json", "engine.batched.requests_per_s", "rate"),
     ("BENCH_serve.json", "engine.serial.requests_per_s", "rate"),
     ("BENCH_adapters.json", "adapter_sweep.*.requests_per_s", "rate"),
+    ("BENCH_adapters.json", "multi_tenant_throughput_retention", "rate"),
     ("BENCH_adapters.json", "mixed_batch.uniform.min_s", "time"),
     ("BENCH_adapters.json", "mixed_batch.sorted_8_groups.min_s", "time"),
+    ("BENCH_adapters.json", "eviction.registers_per_s", "rate"),
+    ("BENCH_forward.json", "session_sweep.*.pipelined.forwards_per_s", "rate"),
+    ("BENCH_forward.json", "session_sweep.*.serial.forwards_per_s", "rate"),
+    ("BENCH_forward.json", "mixed_adapter.forwards_per_s", "rate"),
+    ("BENCH_optq.json", "unblocked.min_s", "time"),
+    ("BENCH_optq.json", "blocked.*.min_s", "time"),
+    ("BENCH_linalg.json", "records.*.speedup", "rate"),
 ]
 
 # Records with differing values for any of these keys are not comparable.
-IDENTITY_KEYS = ["smoke", "shape", "rank"]
+# The sweep-size keys (sizes/sessions/adapter_counts/block_sizes) exist
+# because '*' rows pair by INDEX: comparing a re-sized sweep positionally
+# would silently judge different configurations against each other.
+IDENTITY_KEYS = [
+    "smoke",
+    "shape",
+    "rank",
+    "layers",
+    "sizes",
+    "sessions",
+    "adapter_counts",
+    "block_sizes",
+]
 
 
 def extract(record, path):
@@ -88,11 +124,13 @@ def comparable(base, fresh, fname):
     return True
 
 
-def compare_file(fname, base_dir, fresh_dir, threshold):
+def compare_file(fname, base_dir, fresh_dir, threshold, require_baseline):
     """Returns (regressions, compared) for one BENCH file."""
     base_path = os.path.join(base_dir, fname)
     fresh_path = os.path.join(fresh_dir, fname)
     if not os.path.exists(base_path):
+        if require_baseline:
+            return [f"{fname}: baseline missing (commit a blessed smoke baseline)"], 0
         print(f"  SKIP {fname}: no committed baseline")
         return [], 0
     if not os.path.exists(fresh_path):
@@ -103,6 +141,8 @@ def compare_file(fname, base_dir, fresh_dir, threshold):
     with open(fresh_path) as f:
         fresh = json.load(f)
     if not comparable(base, fresh, fname):
+        if require_baseline:
+            return [f"{fname}: baseline not comparable (identity keys differ)"], 0
         return [], 0
 
     regressions = []
@@ -113,10 +153,20 @@ def compare_file(fname, base_dir, fresh_dir, threshold):
         base_rows = dict(extract(base, path))
         fresh_rows = dict(extract(fresh, path))
         for crumb, bval in base_rows.items():
-            fval = fresh_rows.get(crumb)
-            if not isinstance(bval, (int, float)) or not isinstance(fval, (int, float)):
+            if not isinstance(bval, (int, float)) or bval <= 0:
                 continue
-            if bval <= 0 or fval <= 0:
+            fval = fresh_rows.get(crumb)
+            if not isinstance(fval, (int, float)) or fval <= 0:
+                # A gated row the baseline has but the fresh output lost
+                # (sweep shrank, field renamed): silent skips here are the
+                # exact failure mode --require-baseline exists to prevent.
+                if require_baseline:
+                    regressions.append(
+                        f"{fname}:{crumb} missing or non-positive in fresh output "
+                        "(sweep/schema drift? regenerate the baseline)"
+                    )
+                else:
+                    print(f"  SKIP {fname}:{crumb}: no matching fresh row")
                 continue
             compared += 1
             if kind == "time":
@@ -131,6 +181,12 @@ def compare_file(fname, base_dir, fresh_dir, threshold):
             print(f"  [{marker:>10}] {fname}:{crumb}  {bval:.6g} -> {fval:.6g}  ({verdict})")
             if worse:
                 regressions.append(f"{fname}:{crumb} {verdict} (threshold {threshold:.0%})")
+    if compared == 0 and require_baseline and not regressions:
+        # Both files exist and are comparable, yet no gated row paired up:
+        # the schema drifted without regenerating the baseline.
+        regressions.append(
+            f"{fname}: no gated rows compared (schema drift? regenerate the baseline)"
+        )
     return regressions, compared
 
 
@@ -144,6 +200,12 @@ def main(argv=None):
         default=0.25,
         help="fractional regression that fails the gate (default 0.25 = 25%%)",
     )
+    ap.add_argument(
+        "--require-baseline",
+        action="store_true",
+        help="fail (instead of skipping) when a gated file has no committed or "
+        "comparable baseline — the CI bench-smoke mode once baselines exist",
+    )
     args = ap.parse_args(argv)
 
     files = sorted({fname for fname, _, _ in GATED_ROWS})
@@ -151,7 +213,9 @@ def main(argv=None):
     total_compared = 0
     print(f"bench_diff: baseline={args.baseline} fresh={args.fresh} threshold={args.threshold:.0%}")
     for fname in files:
-        regs, compared = compare_file(fname, args.baseline, args.fresh, args.threshold)
+        regs, compared = compare_file(
+            fname, args.baseline, args.fresh, args.threshold, args.require_baseline
+        )
         all_regressions.extend(regs)
         total_compared += compared
 

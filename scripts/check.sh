@@ -3,21 +3,25 @@
 #
 # Usage: scripts/check.sh [--bench]
 #   --bench  additionally run the perf benches that emit BENCH_*.json
-#            (bench_optq / bench_linalg / bench_serve / bench_adapters;
-#            slow — not part of the default gate). Set CLOQ_BENCH_SMOKE=1
-#            for the small-size smoke mode the CI bench-smoke job uses
-#            (seconds instead of minutes; records carry "smoke": true so
-#            scripts/bench_diff.py never mixes smoke and full baselines).
+#            (bench_optq / bench_linalg / bench_serve / bench_adapters /
+#            bench_forward; slow — not part of the default gate). Set
+#            CLOQ_BENCH_SMOKE=1 for the small-size smoke mode the CI
+#            bench-smoke job uses (seconds instead of minutes; records
+#            carry "smoke": true so scripts/bench_diff.py never mixes
+#            smoke and full baselines).
 #
 # CI (.github/workflows/ci.yml) runs this twice:
 #   * job `check`       — scripts/check.sh            (the hard gate)
 #   * job `bench-smoke` — CLOQ_BENCH_SMOKE=1 scripts/check.sh --bench,
-#                         then scripts/bench_diff.py against the committed
-#                         BENCH_*.json baselines (>25% throughput
-#                         regression on the fused-kernel / batcher rows
-#                         fails the job), and uploads the fresh JSON as a
-#                         workflow artifact so the perf trajectory is
-#                         recorded per PR.
+#                         then scripts/bench_diff.py --require-baseline
+#                         against the committed smoke-mode BENCH_*.json
+#                         baselines (>25% throughput regression on the
+#                         gated rows fails the job; so does a silently
+#                         missing baseline), and uploads the fresh JSON
+#                         as a workflow artifact so the perf trajectory
+#                         is recorded per PR. The `bless-baselines`
+#                         workflow_dispatch job regenerates the committed
+#                         baselines on a CI-class runner.
 #
 # The crates.io-free sandbox is the default environment: all dependencies
 # are vendored path crates, so everything below runs with --offline.
@@ -52,12 +56,22 @@ else
     echo "== rustfmt not installed; skipping format gate =="
 fi
 
+# bench_diff gate self-test (stdlib-only python; tolerated-absent for
+# toolchain-only sandboxes, CI runners always have python3).
+if command -v python3 >/dev/null 2>&1; then
+    echo "== scripts/test_bench_diff.py =="
+    python3 scripts/test_bench_diff.py
+else
+    echo "== python3 not installed; skipping bench_diff self-test =="
+fi
+
 if [[ "${1:-}" == "--bench" ]]; then
-    echo "== perf benches (BENCH_{optq,linalg,serve,adapters}.json) =="
+    echo "== perf benches (BENCH_{optq,linalg,serve,adapters,forward}.json) =="
     cargo bench --bench bench_optq "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_linalg "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_serve "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_adapters "${CARGO_FLAGS[@]}"
+    cargo bench --bench bench_forward "${CARGO_FLAGS[@]}"
 fi
 
 echo "check.sh: all green"

@@ -1,0 +1,240 @@
+#!/usr/bin/env python3
+"""Self-test for scripts/bench_diff.py (stdlib-only, run by check.sh and
+the CI `check` job): synthesizes baseline/fresh BENCH_*.json pairs for
+every gated suite and asserts the gate's verdicts — pass on parity and
+improvements, fail on regressions past the threshold, skip vs fail
+semantics for missing/non-comparable baselines with and without
+--require-baseline, and schema-drift detection.
+"""
+
+import copy
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_diff  # noqa: E402
+
+
+def synthetic_records():
+    """Minimal but schema-faithful records for all five gated suites."""
+    br = {"iters": 10, "mean_s": 1.1e-4, "min_s": 1e-4, "stddev_s": 1e-6}
+    return {
+        "BENCH_serve.json": {
+            "bench": "serve_packed_forward",
+            "smoke": True,
+            "shape": [96, 96],
+            "rank": 16,
+            "fused_vs_dense": [
+                {"bits": b, "fused": dict(br), "dense_cached": dict(br)} for b in (2, 4, 8)
+            ],
+            "kernel_batch_sweep": [
+                {"batch": b, "requests_per_s_min": 10000.0 * b} for b in (1, 4, 16, 64)
+            ],
+            "engine": {
+                "serial": {"requests_per_s": 5000.0},
+                "batched": {"requests_per_s": 9000.0},
+            },
+        },
+        "BENCH_adapters.json": {
+            "bench": "serve_adapters",
+            "smoke": True,
+            "shape": [96, 96],
+            "rank": 8,
+            "adapter_sweep": [
+                {"adapters": a, "requests_per_s": 4000.0} for a in (1, 4, 8)
+            ],
+            "multi_tenant_throughput_retention": 0.9,
+            "mixed_batch": {
+                "uniform": dict(br),
+                "sorted_8_groups": dict(br, min_s=1.2e-4),
+            },
+            "eviction": {"registers_per_s": 20000.0},
+        },
+        "BENCH_forward.json": {
+            "bench": "serve_forward_pipeline",
+            "smoke": True,
+            "shape": [64, 64],
+            "layers": 4,
+            "rank": 8,
+            "sessions": [1, 4, 8],
+            "session_sweep": [
+                {
+                    "sessions": s,
+                    "pipelined": {"forwards_per_s": 2000.0 * s},
+                    "serial": {"forwards_per_s": 1500.0 * s},
+                }
+                for s in (1, 4, 8)
+            ],
+            "mixed_adapter": {"forwards_per_s": 9000.0},
+        },
+        "BENCH_optq.json": {
+            "bench": "optq_lazy_batch_blocking",
+            "smoke": True,
+            "shape": [128, 128],
+            "unblocked": dict(br, min_s=2e-2),
+            "blocked": [dict(br, min_s=1.4e-2, block_size=bs) for bs in (16, 32)],
+        },
+        "BENCH_linalg.json": {
+            "bench": "linalg_tiled_kernels",
+            "smoke": True,
+            "sizes": [64, 128, 512, 128, 64],
+            "records": [
+                {"kernel": "matmul", "n": 64, "speedup": 1.1},
+                {"kernel": "matmul", "n": 128, "speedup": 1.4},
+                {"kernel": "syrk_t", "shape": [512, 128]},  # no speedup row
+                {"kernel": "inv_hessian_root", "n": 64, "speedup": 2.0},
+            ],
+        },
+    }
+
+
+def write_dir(d, records):
+    os.makedirs(d, exist_ok=True)
+    for fname, rec in records.items():
+        with open(os.path.join(d, fname), "w") as f:
+            json.dump(rec, f)
+
+
+def run(base, fresh, *extra):
+    return bench_diff.main(["--baseline", base, "--fresh", fresh, *extra])
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="bench_diff_selftest_")
+    failures = []
+
+    def check(name, got, want):
+        marker = "ok" if got == want else "FAIL"
+        print(f"[{marker}] {name}: exit {got} (want {want})")
+        if got != want:
+            failures.append(name)
+
+    try:
+        base = os.path.join(tmp, "base")
+        fresh = os.path.join(tmp, "fresh")
+        write_dir(base, synthetic_records())
+
+        # 1. Identical numbers pass, with and without --require-baseline.
+        write_dir(fresh, synthetic_records())
+        check("identical", run(base, fresh), 0)
+        check("identical --require-baseline", run(base, fresh, "--require-baseline"), 0)
+
+        # 2. Improvements pass (rates up, times down).
+        recs = synthetic_records()
+        recs["BENCH_forward.json"]["session_sweep"][2]["pipelined"]["forwards_per_s"] *= 3.0
+        recs["BENCH_serve.json"]["fused_vs_dense"][1]["fused"]["min_s"] /= 3.0
+        write_dir(fresh, recs)
+        check("improvement", run(base, fresh), 0)
+
+        # 3. A >25% rate drop in the new forward headline fails.
+        recs = synthetic_records()
+        recs["BENCH_forward.json"]["session_sweep"][2]["pipelined"]["forwards_per_s"] *= 0.5
+        write_dir(fresh, recs)
+        check("forward rate regression", run(base, fresh), 1)
+
+        # 4. A >25% slowdown in a gated time row fails (adapters headline).
+        recs = synthetic_records()
+        recs["BENCH_adapters.json"]["mixed_batch"]["uniform"]["min_s"] *= 1.5
+        write_dir(fresh, recs)
+        check("adapters time regression", run(base, fresh), 1)
+
+        # 5. The retention headline is gated too.
+        recs = synthetic_records()
+        recs["BENCH_adapters.json"]["multi_tenant_throughput_retention"] = 0.5
+        write_dir(fresh, recs)
+        check("retention regression", run(base, fresh), 1)
+
+        # 6. Within-threshold drift passes.
+        recs = synthetic_records()
+        recs["BENCH_optq.json"]["unblocked"]["min_s"] *= 1.2
+        recs["BENCH_linalg.json"]["records"][0]["speedup"] *= 0.85
+        write_dir(fresh, recs)
+        check("within threshold", run(base, fresh), 0)
+
+        # 7. Missing baseline: skip by default, fail under --require-baseline.
+        partial = os.path.join(tmp, "partial_base")
+        recs = synthetic_records()
+        del recs["BENCH_forward.json"]
+        write_dir(partial, recs)
+        write_dir(fresh, synthetic_records())
+        check("missing baseline skips", run(partial, fresh), 0)
+        check(
+            "missing baseline fails loudly",
+            run(partial, fresh, "--require-baseline"),
+            1,
+        )
+
+        # 8. Smoke-flag mismatch: skip by default, fail under the flag.
+        full_base = os.path.join(tmp, "full_base")
+        recs = copy.deepcopy(synthetic_records())
+        for rec in recs.values():
+            rec["smoke"] = False
+        write_dir(full_base, recs)
+        write_dir(fresh, synthetic_records())
+        check("smoke mismatch skips", run(full_base, fresh), 0)
+        check("smoke mismatch fails loudly", run(full_base, fresh, "--require-baseline"), 1)
+
+        # 9. A fresh file the bench failed to emit is always a failure.
+        write_dir(fresh, synthetic_records())
+        os.remove(os.path.join(fresh, "BENCH_serve.json"))
+        check("fresh missing", run(base, fresh), 1)
+
+        # 9a. A RE-SIZED sweep is not comparable, even when row counts
+        # still line up positionally: the sweep-size identity key differs
+        # — skip by default, fail under --require-baseline.
+        recs = synthetic_records()
+        recs["BENCH_linalg.json"]["sizes"] = [96, 192]
+        write_dir(fresh, recs)
+        check("re-sized sweep skips", run(base, fresh), 0)
+        check(
+            "re-sized sweep fails under --require-baseline",
+            run(base, fresh, "--require-baseline"),
+            1,
+        )
+
+        # 9b. PARTIAL sweep drift: the baseline's 8-session headline row
+        # vanishes from the fresh output while earlier rows still pair up
+        # — skip by default, fail under --require-baseline.
+        recs = synthetic_records()
+        recs["BENCH_forward.json"]["session_sweep"] = recs["BENCH_forward.json"][
+            "session_sweep"
+        ][:2]
+        write_dir(fresh, recs)
+        check("partial sweep drift skips", run(base, fresh), 0)
+        check(
+            "partial sweep drift fails under --require-baseline",
+            run(base, fresh, "--require-baseline"),
+            1,
+        )
+
+        # 10. Schema drift (gated paths vanish) is caught under the flag.
+        recs = synthetic_records()
+        recs["BENCH_forward.json"]["session_sweep"] = []
+        del recs["BENCH_forward.json"]["mixed_adapter"]
+        drift_base = os.path.join(tmp, "drift_base")
+        drift = synthetic_records()
+        drift["BENCH_forward.json"]["session_sweep"] = []
+        del drift["BENCH_forward.json"]["mixed_adapter"]
+        write_dir(drift_base, drift)
+        write_dir(fresh, recs)
+        check("schema drift skips by default", run(drift_base, fresh), 0)
+        check(
+            "schema drift fails under --require-baseline",
+            run(drift_base, fresh, "--require-baseline"),
+            1,
+        )
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+    if failures:
+        print(f"\ntest_bench_diff: {len(failures)} failure(s): {failures}")
+        return 1
+    print("\ntest_bench_diff: all cases passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
