@@ -11,6 +11,11 @@
 //! method it compares against (QLoRA / GPTQ-LoRA / LoftQ / CLoQ).
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! The next step after initialization is serving the frozen base + cheap
+//! adapters: `examples/serve_demo.rs` walks the typed serving façade
+//! (`ServeEngine::builder`, interned `LayerId`/`AdapterId`/`Route`
+//! handles, the unified `ArtifactStore`, typed `ServeError` handling).
 
 use cloq::linalg::{matmul, matmul_nt, syrk_t, Matrix};
 use cloq::lowrank::{init_layer, InitConfig, Method};
@@ -55,5 +60,9 @@ fn main() {
          the paper's Fig. 2 effect, in one function call.",
         results[2].1 / cloq_obj,
         results[1].1 / cloq_obj
+    );
+    println!(
+        "\nNext: serve the frozen base + adapters — \
+         `cargo run --release --example serve_demo` (the typed serving façade)."
     );
 }

@@ -1,8 +1,11 @@
-//! End-to-end multi-tenant serving demo: quantize + init a few layers,
-//! pack the base ONCE, ship per-tenant adapter artifacts separately,
-//! reload everything, and serve a mixed-adapter burst through the
-//! batching engine — with a hot-swap and an unregister drain along the
-//! way. Also exercises the v1 → v2 artifact compatibility shim.
+//! End-to-end multi-tenant serving demo on the TYPED serving façade:
+//! quantize + init a few layers, pack the base ONCE, ship per-tenant
+//! adapter artifacts separately through the unified [`ArtifactStore`],
+//! reload everything by magic-autodetecting `open`, intern the layer /
+//! adapter / route handles once, and serve a mixed-adapter burst through
+//! the batching engine — with a hot-swap, an unregister drain, and typed
+//! error handling along the way. Also exercises the legacy v1 artifact
+//! path (`Artifact::LegacyV1`).
 //!
 //! ```sh
 //! cargo run --release --example serve_demo
@@ -11,9 +14,8 @@
 use cloq::linalg::{syrk_t, Matrix};
 use cloq::lowrank::{init_layer, InitConfig, LoraPair, Method};
 use cloq::serve::{
-    forward_route_serial, load_adapter_artifact, load_artifact_compat, load_base_artifact,
-    save_adapter_artifact, save_artifact_v1, save_base_artifact, AdapterSet, EngineConfig,
-    ModelRequest, PackedLayer, PackedModel, Request, ServeEngine, SessionRequest, StepFn,
+    forward_route_serial, AdapterSet, Artifact, ArtifactStore, ModelRequest, PackedLayer,
+    PackedModel, Request, ServeEngine, ServeError, SessionRequest, StepFn,
 };
 use cloq::util::prng::Rng;
 
@@ -67,41 +69,43 @@ fn main() -> anyhow::Result<()> {
     let tenant_b = mk_tenant("tenant-b", &mut rng)?;
     let tenant_c = mk_tenant("tenant-c", &mut rng)?;
 
-    // ---- 2. artifacts: base once, adapters separately ---------------------
-    let dir = std::env::temp_dir().join(format!("cloq_serve_demo_{}", std::process::id()));
-    let base_path = dir.join("base.cloqpkd2");
-    save_base_artifact(&model, &base_path)?;
-    let mut adapter_paths = Vec::new();
+    // ---- 2. artifacts: one store, base once, adapters separately ----------
+    let store = ArtifactStore::at(
+        std::env::temp_dir().join(format!("cloq_serve_demo_{}", std::process::id())),
+    );
+    let base_path = store.save_base(&model, "base.cloqpkd2")?;
+    let mut adapter_names = Vec::new();
     for set in [&tenant_a, &tenant_b, &tenant_c] {
-        let p = dir.join(format!("{}.cloqadp", set.id()));
-        save_adapter_artifact(set, &p)?;
-        adapter_paths.push(p);
+        let name = format!("{}.cloqadp", set.id());
+        store.save_adapter(set, &name)?;
+        adapter_names.push(name);
     }
     let base_bytes = std::fs::metadata(&base_path)?.len();
-    let adp_bytes: u64 = adapter_paths
+    let adp_bytes: u64 = adapter_names
         .iter()
-        .map(|p| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0))
+        .map(|n| std::fs::metadata(store.path(n)).map(|m| m.len()).unwrap_or(0))
         .sum();
     println!(
         "\n== artifacts == base shipped once: {base_bytes} bytes; \
          3 tenant artifacts: {adp_bytes} bytes total"
     );
-    let loaded = load_base_artifact(&base_path)?;
+    let loaded = store.load_base("base.cloqpkd2")?;
 
-    // v1 compatibility shim: a legacy single-tenant file still loads, as
-    // base + one adapter set.
-    let v1_path = dir.join("legacy.cloqpkd");
-    save_artifact_v1(&model, &tenant_a, &v1_path)?;
-    let (v1_model, v1_set) = load_artifact_compat(&v1_path)?;
-    let v1_set = v1_set.expect("v1 files embed adapters");
+    // Legacy v1 files still open through the SAME entry point: the magic
+    // bytes decide, and the embedded adapters come back as a set.
+    store.save_legacy_v1(&model, &tenant_a, "legacy.cloqpkd")?;
+    let (v1_model, v1_set) = match store.open("legacy.cloqpkd")? {
+        Artifact::LegacyV1 { model, adapters } => (model, adapters),
+        other => anyhow::bail!("expected a legacy artifact, found {}", other.kind_name()),
+    };
     println!(
-        "   v1 shim: {} layers + adapter set '{}' from the legacy format",
+        "   v1 legacy open: {} layers + adapter set '{}' from the old format",
         v1_model.layers.len(),
         v1_set.id()
     );
 
     // Parity spot-check: packed fused forward vs the dense q_deq reference,
-    // through the artifact roundtrip AND the v1 shim.
+    // through the artifact roundtrip AND the legacy path.
     let mut max_ulp = 0u64;
     for (name, q_deq) in &dense_refs {
         let layer = loaded.layer(name).expect("layer survived the roundtrip");
@@ -115,26 +119,28 @@ fn main() -> anyhow::Result<()> {
             max_ulp = max_ulp.max(u.to_bits().abs_diff(s.to_bits()));
         }
     }
-    println!("   fused vs dense vs v1-shim, max ULP distance: {max_ulp} (contract: 0)");
+    println!("   fused vs dense vs v1-legacy, max ULP distance: {max_ulp} (contract: 0)");
     anyhow::ensure!(max_ulp == 0, "parity contract violated");
 
     // ---- 3. serve a concurrent multi-tenant burst -------------------------
     let reference = loaded.clone(); // serial-reference copy for §4's parity check
-    let engine = ServeEngine::new(
-        loaded,
-        EngineConfig { workers: 2, max_batch: 16, ..EngineConfig::default() },
-    );
-    for p in &adapter_paths {
-        engine.register_adapter(load_adapter_artifact(p)?)?;
+    let engine = ServeEngine::builder(loaded).workers(2).max_batch(16).build()?;
+    // Intern once: every name becomes a Copy handle; the submission loop
+    // below never hashes or clones a string.
+    let mut tenant_ids = Vec::new();
+    for name in &adapter_names {
+        let set = store.open(name)?.into_adapter()?;
+        tenant_ids.push(engine.register_adapter(set)?.id);
     }
     println!("\n== engine == tenants registered: {:?}", engine.registry().ids());
     let names: Vec<String> = dense_refs.iter().map(|(n, _)| n.clone()).collect();
-    let tenants = ["tenant-a", "tenant-b", "tenant-c"];
+    let layer_ids: Vec<_> =
+        names.iter().map(|n| engine.layer(n)).collect::<Result<_, _>>()?;
     let reqs: Vec<Request> = (0..48)
         .map(|i| {
-            let name = &names[i % names.len()];
-            let rows = engine_rows(&dense_refs, name);
-            Request::with_adapter(name, tenants[i % tenants.len()], rng.gauss_vec(rows))
+            let lid = layer_ids[i % layer_ids.len()];
+            let rows = engine.model().get(lid).unwrap().rows;
+            Request::with_adapter(lid, tenant_ids[i % tenant_ids.len()], rng.gauss_vec(rows))
         })
         .collect();
     let tickets = engine.submit_all(reqs);
@@ -144,33 +150,45 @@ fn main() -> anyhow::Result<()> {
         worst_latency = worst_latency.max(resp.queue_s + resp.compute_s);
     }
 
-    // Hot-swap tenant-b under load, then retire tenant-c with a drain.
+    // Hot-swap tenant-b under load (the interned id survives the swap),
+    // then retire tenant-c with a drain — and show the TYPED rejection a
+    // stale tenant gets afterwards.
     engine.register_adapter(mk_tenant("tenant-b", &mut rng)?)?;
-    let x = rng.gauss_vec(engine_rows(&dense_refs, "blk0.wq"));
-    engine.submit("blk0.wq", Some("tenant-b"), x).wait()?;
+    let x = rng.gauss_vec(engine.model().get(layer_ids[0]).unwrap().rows);
+    engine.submit(layer_ids[0], Some(tenant_ids[1]), x).wait()?;
     engine.unregister_adapter("tenant-c")?;
-    println!(
-        "   hot-swapped tenant-b, drained + retired tenant-c → now {:?}",
-        engine.registry().ids()
-    );
+    let stale = rng.gauss_vec(engine.model().get(layer_ids[0]).unwrap().rows);
+    match engine.submit(layer_ids[0], Some(tenant_ids[2]), stale).wait() {
+        Err(ServeError::UnknownAdapter { adapter }) => {
+            println!(
+                "   hot-swapped tenant-b, drained + retired tenant-c → now {:?} \
+                 (stale submit rejected as UnknownAdapter('{adapter}'))",
+                engine.registry().ids()
+            );
+        }
+        other => anyhow::bail!("expected UnknownAdapter for the retired tenant, got {other:?}"),
+    }
 
     // ---- 4. full-model pipelined forwards + a decode-style session --------
     // One ModelRequest walks the whole 96→64→96→128 chain through the
     // batcher: hops from concurrent requests at the same depth coalesce.
-    // The caller-driven serial reference must match bit-for-bit.
-    let route: Vec<String> = names.clone();
+    // The route is resolved + chain-validated ONCE; per-request submission
+    // clones an Arc, not a Vec<String>. The caller-driven serial reference
+    // must match bit-for-bit.
+    let route = engine.route(&names)?;
+    let serial_route = reference.route(&names)?;
     let x0s: Vec<Vec<f64>> = (0..8).map(|_| rng.gauss_vec(96)).collect();
     let model_tickets: Vec<_> = x0s
         .iter()
         .map(|x| {
-            engine.submit_model(ModelRequest::with_adapter(route.clone(), "tenant-a", x.clone()))
+            engine.submit_model(ModelRequest::with_adapter(route.clone(), tenant_ids[0], x.clone()))
         })
         .collect();
     let mut fwd_ulp = 0u64;
     let mut max_hop_batch = 0usize;
     for (x, t) in x0s.iter().zip(model_tickets) {
         let resp = t.wait()?;
-        let serial = forward_route_serial(&reference, &route, Some(&tenant_a), x)?;
+        let serial = forward_route_serial(&reference, &serial_route, Some(&tenant_a), x);
         for (u, v) in resp.y.iter().zip(&serial) {
             fwd_ulp = fwd_ulp.max(u.to_bits().abs_diff(v.to_bits()));
         }
@@ -190,7 +208,7 @@ fn main() -> anyhow::Result<()> {
     let sess = engine
         .submit_session(SessionRequest::with_adapter(
             route.clone(),
-            "tenant-a",
+            tenant_ids[0],
             x0s[0].clone(),
             3,
             step,
@@ -199,7 +217,7 @@ fn main() -> anyhow::Result<()> {
     let mut x = x0s[0].clone();
     let mut serial = Vec::new();
     for _ in 0..3 {
-        serial = forward_route_serial(&reference, &route, Some(&tenant_a), &x)?;
+        serial = forward_route_serial(&reference, &serial_route, Some(&tenant_a), &x);
         x = serial.iter().take(96).map(|v| v * 0.1).collect();
     }
     let sess_ulp = sess
@@ -236,11 +254,7 @@ fn main() -> anyhow::Result<()> {
         worst_latency * 1e6
     );
 
-    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(store.dir()).ok();
     println!("\nserve_demo: OK");
     Ok(())
-}
-
-fn engine_rows(refs: &[(String, Matrix)], name: &str) -> usize {
-    refs.iter().find(|(n, _)| n == name).map(|(_, q)| q.rows).unwrap()
 }

@@ -22,6 +22,7 @@
 //! by `rust/tests/parity_serve.rs`, lifecycle invariants by
 //! `rust/tests/lifecycle_adapters.rs`.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use cloq::bench::{bench, section, smoke, smoke_scaled, target_time, write_bench_json};
@@ -29,7 +30,7 @@ use cloq::linalg::Matrix;
 use cloq::lowrank::LoraPair;
 use cloq::quant::{quantize_rtn, QuantState};
 use cloq::serve::{
-    AdapterRegistry, AdapterSet, EngineConfig, PackedLayer, PackedModel, Request, ServeEngine,
+    AdapterRegistry, AdapterSet, PackedLayer, PackedModel, Request, ServeEngine,
 };
 use cloq::util::json::Json;
 use cloq::util::prng::Rng;
@@ -65,20 +66,24 @@ fn main() {
         let mut best = f64::INFINITY;
         let mut best_stats = None;
         for _ in 0..3 {
-            let engine = ServeEngine::new(
-                mk_base(m, n, &mut Rng::new(22)),
-                EngineConfig { workers: 2, max_batch: 16, ..EngineConfig::default() },
-            );
+            let engine = ServeEngine::builder(mk_base(m, n, &mut Rng::new(22)))
+                .workers(2)
+                .max_batch(16)
+                .build()
+                .unwrap();
+            let lid = engine.layer("lin").unwrap();
             let mut arng = Rng::new(23);
-            for a in 0..n_adapters {
-                engine.register_adapter(mk_set(&format!("t{a}"), m, n, r, &mut arng)).unwrap();
-            }
+            // Intern once per tenant; the request loop is handle-only.
+            let tids: Vec<_> = (0..n_adapters)
+                .map(|a| {
+                    let set = mk_set(&format!("t{a}"), m, n, r, &mut arng);
+                    engine.register_adapter(set).unwrap().id
+                })
+                .collect();
             let reqs: Vec<Request> = xs
                 .iter()
                 .enumerate()
-                .map(|(i, x)| {
-                    Request::with_adapter("lin", &format!("t{}", i % n_adapters), x.clone())
-                })
+                .map(|(i, x)| Request::with_adapter(lid, tids[i % n_adapters], x.clone()))
                 .collect();
             let t0 = Instant::now();
             let tickets = engine.submit_all(reqs);
@@ -164,15 +169,19 @@ fn main() {
     section("registry churn: LRU eviction under a 4-set budget, hot-swap rate");
     let churn_n = smoke_scaled(64, 16);
     let one_set_bytes = mk_set("probe", m, n, r, &mut Rng::new(25)).bytes();
+    // The registry is model-bound now: registration shape-checks and
+    // resolves each set against this base, so the churn number includes
+    // the real production registration cost.
+    let reg_model = Arc::new(mk_base(m, n, &mut Rng::new(28)));
     let r_churn = bench(&format!("register {churn_n} sets, budget 4"), t, || {
-        let reg = AdapterRegistry::new(4 * one_set_bytes);
+        let reg = AdapterRegistry::new(Arc::clone(&reg_model), 4 * one_set_bytes);
         let mut crng = Rng::new(26);
         for i in 0..churn_n {
             reg.register(mk_set(&format!("c{i}"), m, n, r, &mut crng)).unwrap();
         }
         reg.stats().evictions
     });
-    let reg = AdapterRegistry::new(4 * one_set_bytes);
+    let reg = AdapterRegistry::new(Arc::clone(&reg_model), 4 * one_set_bytes);
     let mut crng = Rng::new(26);
     for i in 0..churn_n {
         reg.register(mk_set(&format!("c{i}"), m, n, r, &mut crng)).unwrap();
@@ -180,7 +189,7 @@ fn main() {
     let churn_evictions = reg.stats().evictions;
     let registers_per_s = churn_n as f64 / r_churn.min_s;
     let r_swap = bench(&format!("hot-swap same id x{churn_n}"), t, || {
-        let reg = AdapterRegistry::new(4 * one_set_bytes);
+        let reg = AdapterRegistry::new(Arc::clone(&reg_model), 4 * one_set_bytes);
         let mut srng = Rng::new(27);
         for _ in 0..churn_n {
             reg.register(mk_set("hot", m, n, r, &mut srng)).unwrap();

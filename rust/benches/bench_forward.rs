@@ -30,8 +30,8 @@ use cloq::linalg::Matrix;
 use cloq::lowrank::LoraPair;
 use cloq::quant::{quantize_rtn, QuantState};
 use cloq::serve::{
-    AdapterSet, EngineConfig, ModelRequest, PackedLayer, PackedModel, ServeEngine,
-    SessionRequest, StepFn,
+    AdapterSet, ModelRequest, PackedLayer, PackedModel, Route, ServeEngine, SessionRequest,
+    StepFn,
 };
 use cloq::util::json::Json;
 use cloq::util::prng::Rng;
@@ -68,12 +68,12 @@ fn step_of(y: &[f64]) -> Vec<f64> {
     y.iter().map(|v| v / s).collect()
 }
 
-fn engine_of(layers: usize, width: usize, seed: u64) -> (ServeEngine, Vec<String>) {
-    let (model, route) = mk_chain(layers, width, seed);
-    let engine = ServeEngine::new(
-        model,
-        EngineConfig { workers: 2, max_batch: 32, ..EngineConfig::default() },
-    );
+/// Engine plus the route interned against it ONCE — submissions below
+/// clone an Arc, never a Vec<String>.
+fn engine_of(layers: usize, width: usize, seed: u64) -> (ServeEngine, Route) {
+    let (model, names) = mk_chain(layers, width, seed);
+    let engine = ServeEngine::builder(model).workers(2).max_batch(32).build().unwrap();
+    let route = engine.route(&names).unwrap();
     (engine, route)
 }
 
@@ -137,8 +137,8 @@ fn main() {
                     s.spawn(move || {
                         let mut x = x0.clone();
                         for _ in 0..k_forwards {
-                            for name in route {
-                                x = engine.submit(name, None, x).wait().unwrap().y;
+                            for &lid in route.as_ids() {
+                                x = engine.submit(lid, None, x).wait().unwrap().y;
                             }
                             x = step_of(&x);
                         }
@@ -186,17 +186,14 @@ fn main() {
     let mut mixed_hops = 0usize;
     let mut total_hops = 0usize;
     for _ in 0..runs {
-        let (model, route) = mk_chain(n_layers, width, 32);
+        let (model, names) = mk_chain(n_layers, width, 32);
         let mut arng = Rng::new(33);
         let sets: Vec<AdapterSet> =
             (0..tenants).map(|a| mk_set(&format!("t{a}"), &model, 8, &mut arng)).collect();
-        let engine = ServeEngine::new(
-            model,
-            EngineConfig { workers: 2, max_batch: 32, ..EngineConfig::default() },
-        );
-        for set in sets {
-            engine.register_adapter(set).unwrap();
-        }
+        let engine = ServeEngine::builder(model).workers(2).max_batch(32).build().unwrap();
+        let route = engine.route(&names).unwrap();
+        let tids: Vec<_> =
+            sets.into_iter().map(|set| engine.register_adapter(set).unwrap().id).collect();
         let t0 = Instant::now();
         let tickets: Vec<_> = x0s
             .iter()
@@ -205,7 +202,7 @@ fn main() {
                 let step: StepFn = Box::new(|_, y| Some(step_of(y)));
                 engine.submit_session(SessionRequest::with_adapter(
                     route.clone(),
-                    &format!("t{}", i % tenants),
+                    tids[i % tenants],
                     x0.clone(),
                     k_forwards,
                     step,
@@ -244,10 +241,12 @@ fn main() {
     // request through the pipelined path must agree with the serial
     // reference (the full contract lives in tests/parity_forward.rs).
     {
-        let (model, route) = mk_chain(n_layers, width, 32);
+        let (model, names) = mk_chain(n_layers, width, 32);
+        let serial_route = model.route(&names).unwrap();
         let x = Rng::new(34).gauss_vec(width);
-        let serial = cloq::serve::forward_route_serial(&model, &route, None, &x).unwrap();
-        let engine = ServeEngine::new(model, EngineConfig::default());
+        let serial = cloq::serve::forward_route_serial(&model, &serial_route, None, &x);
+        let engine = ServeEngine::builder(model).build().unwrap();
+        let route = engine.route(&names).unwrap();
         let y = engine.submit_model(ModelRequest::new(route, x)).wait().unwrap().y;
         engine.shutdown();
         assert_eq!(y, serial, "pipelined forward drifted from the serial reference");

@@ -8,6 +8,12 @@
 //!    without a packed path would do).
 //! 2. **batched vs serial throughput**: the kernel's row-reuse batch sweep
 //!    plus the end-to-end engine with coalescing on vs off.
+//! 3. **submission overhead, interned vs named**: the same burst admitted
+//!    through the typed façade (`submit(LayerId, Some(AdapterId), x)` —
+//!    handles resolved once up front) vs the legacy stringly path
+//!    (`submit_named("lin", Some("tenant"), x)` — a name hash plus an
+//!    adapter-id hash per call). A small layer keeps kernel time from
+//!    drowning the admission cost being measured.
 //!
 //! Under `CLOQ_BENCH_SMOKE=1` (the CI bench-smoke job) shapes and request
 //! counts shrink and the record carries `"smoke": true` so
@@ -23,7 +29,7 @@ use cloq::bench::{bench, section, smoke, smoke_scaled, target_time, write_bench_
 use cloq::linalg::Matrix;
 use cloq::lowrank::LoraPair;
 use cloq::quant::{quantize_rtn, QuantState};
-use cloq::serve::{AdapterSet, EngineConfig, PackedLayer, PackedModel, Request, ServeEngine};
+use cloq::serve::{AdapterSet, PackedLayer, PackedModel, Request, ServeEngine};
 use cloq::util::json::Json;
 use cloq::util::prng::Rng;
 
@@ -128,19 +134,18 @@ fn main() {
         let mut best_stats = None;
         for _ in 0..3 {
             let model = PackedModel::new(vec![layer.clone()]);
-            let engine = ServeEngine::new(
-                model,
-                EngineConfig { workers: 2, max_batch, ..EngineConfig::default() },
-            );
+            let engine =
+                ServeEngine::builder(model).workers(2).max_batch(max_batch).build().unwrap();
             let set = AdapterSet::from_pairs(
                 "tenant",
                 vec![("bench".to_string(), pair.clone())],
             )
             .unwrap();
-            engine.register_adapter(set).unwrap();
+            let tenant = engine.register_adapter(set).unwrap().id;
+            let lid = engine.layer("bench").unwrap();
             let t0 = Instant::now();
             let tickets = engine.submit_all(
-                xs.iter().map(|x| Request::with_adapter("bench", "tenant", x.clone())).collect(),
+                xs.iter().map(|x| Request::with_adapter(lid, tenant, x.clone())).collect(),
             );
             for tk in tickets {
                 tk.wait().unwrap();
@@ -174,6 +179,61 @@ fn main() {
     let engine_speedup = engine_rps[1] / engine_rps[0].max(1e-30);
     println!("\nengine batched-vs-serial: {engine_speedup:.2}x");
 
+    // ---- submission overhead: interned handles vs stringly names ----------
+    // A SMALL layer so per-request admission work (resolution, cloning,
+    // checkout) is a visible fraction of the round trip; both paths run
+    // the identical burst and the identical kernel work.
+    let n_sub = smoke_scaled(2048, 256);
+    section(&format!("submission overhead: interned vs named admission ({n_sub} requests)"));
+    let (small_layer, small_pair, _) = mk_layer(48, 16, 4, 16, 4, &mut rng);
+    let sub_xs: Vec<Vec<f64>> = (0..n_sub).map(|_| rng.gauss_vec(48)).collect();
+    let mut sub_rps = [0.0f64; 2]; // [interned, named]
+    for (k, mode) in ["interned", "named"].into_iter().enumerate() {
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let model = PackedModel::new(vec![small_layer.clone()]);
+            let engine =
+                ServeEngine::builder(model).workers(2).max_batch(32).build().unwrap();
+            let set = AdapterSet::from_pairs(
+                "tenant",
+                vec![("bench".to_string(), small_pair.clone())],
+            )
+            .unwrap();
+            let tenant = engine.register_adapter(set).unwrap().id;
+            let lid = engine.layer("bench").unwrap();
+            let t0 = Instant::now();
+            let tickets: Vec<_> = sub_xs
+                .iter()
+                .map(|x| {
+                    if mode == "interned" {
+                        engine.submit(lid, Some(tenant), x.clone())
+                    } else {
+                        engine.submit_named("bench", Some("tenant"), x.clone())
+                    }
+                })
+                .collect();
+            for tk in tickets {
+                tk.wait().unwrap();
+            }
+            best = best.min(t0.elapsed().as_secs_f64());
+            engine.shutdown();
+        }
+        sub_rps[k] = n_sub as f64 / best;
+        println!("submission {mode:<9} {n_sub} reqs → {:>9.0} req/s", sub_rps[k]);
+    }
+    let submission_speedup = sub_rps[0] / sub_rps[1].max(1e-30);
+    println!("\ninterned-vs-named admission: {submission_speedup:.2}x");
+    let mut submission_json = Json::obj();
+    submission_json.set("requests", Json::from(n_sub));
+    submission_json.set("layer_shape", Json::Arr(vec![Json::from(48usize), Json::from(16usize)]));
+    let mut interned = Json::obj();
+    interned.set("requests_per_s", Json::from(sub_rps[0]));
+    let mut named = Json::obj();
+    named.set("requests_per_s", Json::from(sub_rps[1]));
+    submission_json.set("interned", interned);
+    submission_json.set("named", named);
+    submission_json.set("speedup_interned_vs_named", Json::from(submission_speedup));
+
     let record = Json::from_pairs(vec![
         ("bench", Json::from("serve_packed_forward")),
         ("smoke", Json::from(smoke())),
@@ -187,6 +247,7 @@ fn main() {
         ("kernel_batched_vs_serial_speedup", Json::from(kernel_batch_speedup)),
         ("engine", engine_json),
         ("engine_batched_vs_serial_speedup", Json::from(engine_speedup)),
+        ("submission", submission_json),
         (
             "parity",
             Json::from(

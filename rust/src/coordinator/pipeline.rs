@@ -33,6 +33,14 @@ pub struct PipelineOpts {
     pub eval_ppl_batches: usize,
 }
 
+impl Default for PipelineOpts {
+    /// The `tiny-s` defaults under the conventional `artifacts/` /
+    /// `runs/` roots — [`PipelineOpts::new`] with the default config name.
+    fn default() -> Self {
+        PipelineOpts::new("tiny-s")
+    }
+}
+
 impl PipelineOpts {
     pub fn new(config: &str) -> PipelineOpts {
         PipelineOpts {
@@ -54,6 +62,53 @@ impl PipelineOpts {
         self.train_examples = 128;
         self.eval_examples = 24;
         self.eval_ppl_batches = 4;
+        self
+    }
+
+    // Builder-style setters, symmetric with the serving engine's
+    // `ServeEngine::builder(..).workers(n).build()` shape — offline and
+    // online configuration read the same way. Fields stay public for
+    // in-place tweaks, but chained construction is the primary surface.
+
+    /// RNG seed shared by pretraining, calibration and fine-tuning.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Pretraining steps for the cached base model.
+    pub fn pretrain_steps(mut self, steps: usize) -> Self {
+        self.pretrain_steps = steps;
+        self
+    }
+
+    /// Pretraining learning rate.
+    pub fn pretrain_lr(mut self, lr: f64) -> Self {
+        self.pretrain_lr = lr;
+        self
+    }
+
+    /// Calibration samples feeding the Gram set.
+    pub fn calib_samples(mut self, n: usize) -> Self {
+        self.calib_samples = n;
+        self
+    }
+
+    /// Examples per fine-tuning dataset.
+    pub fn train_examples(mut self, n: usize) -> Self {
+        self.train_examples = n;
+        self
+    }
+
+    /// Examples per evaluation set.
+    pub fn eval_examples(mut self, n: usize) -> Self {
+        self.eval_examples = n;
+        self
+    }
+
+    /// Batches used by the perplexity evaluator.
+    pub fn eval_ppl_batches(mut self, n: usize) -> Self {
+        self.eval_ppl_batches = n;
         self
     }
 }
@@ -313,6 +368,23 @@ mod tests {
         assert_eq!(FinetuneTask::parse("wiki"), Some(FinetuneTask::Wiki));
         assert_eq!(FinetuneTask::parse("GSM8K"), Some(FinetuneTask::Gsm8k));
         assert_eq!(FinetuneTask::parse("nope"), None);
+    }
+
+    #[test]
+    fn pipeline_opts_builder_setters_chain() {
+        let o = PipelineOpts::new("cfg").seed(7).pretrain_steps(10).calib_samples(4);
+        assert_eq!(o.seed, 7);
+        assert_eq!(o.pretrain_steps, 10);
+        assert_eq!(o.calib_samples, 4);
+        assert!(o.artifacts.ends_with("cfg"));
+        // Default = the tiny-s config's defaults.
+        let d = PipelineOpts::default();
+        assert_eq!(d.seed, 42);
+        assert!(d.artifacts.ends_with("tiny-s"));
+        // fast() composes with the setters.
+        let f = PipelineOpts::default().fast().eval_examples(3);
+        assert_eq!(f.pretrain_steps, 1200);
+        assert_eq!(f.eval_examples, 3);
     }
 
     #[test]

@@ -72,9 +72,10 @@ fn table_opts(args: &Args) -> TableOpts {
 
 fn cmd_pretrain(args: &Args) -> anyhow::Result<()> {
     let config = args.str("config", "tiny-s");
-    let mut opts = PipelineOpts::new(&config);
-    opts.pretrain_steps = args.usize("steps", opts.pretrain_steps);
-    opts.seed = args.u64("seed", opts.seed);
+    let opts = PipelineOpts::new(&config);
+    let steps = args.usize("steps", opts.pretrain_steps);
+    let seed = args.u64("seed", opts.seed);
+    let opts = opts.pretrain_steps(steps).seed(seed);
     let mut rt = Runtime::load(&opts.artifacts)?;
     let (_base, outcome) = ensure_pretrained(&mut rt, &opts)?;
     if let Some(o) = outcome {
@@ -97,7 +98,8 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
     if args.has("fast") {
         opts = opts.fast();
     }
-    opts.seed = args.u64("seed", opts.seed);
+    let seed = args.u64("seed", opts.seed);
+    let opts = opts.seed(seed);
     let mut rt = Runtime::load(&opts.artifacts)?;
     let (base, _) = ensure_pretrained(&mut rt, &opts)?;
     let grams = ensure_grams(&mut rt, &base, &opts, opts.calib_samples)?;

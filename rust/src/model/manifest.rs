@@ -105,8 +105,9 @@ impl ModelConfig {
     /// (`serve::forward::ModelRequest`): every linear map in canonical
     /// order. The chain is shape-consistent by construction — the d→d
     /// attention maps, then the d→f up- and f→d down-projection, block
-    /// after block — which `PackedModel::route_indices` re-checks against
-    /// the packed shapes at admission (and the unit test below pins here).
+    /// after block — which `PackedModel::route` re-checks against the
+    /// packed shapes when the `Route` is built (and the unit test below
+    /// pins here).
     pub fn forward_route(&self) -> Vec<String> {
         self.all_linear_names()
     }

@@ -1,18 +1,29 @@
 //! Multi-tenant adapter state: named LoRA adapter sets over one packed
-//! base, and the registry that hot-swaps them under load.
+//! base, and the interned, model-aware registry that hot-swaps them under
+//! load.
 //!
 //! CLoQ's output is exactly a frozen quantized base plus a per-task LoRA
 //! pair, so a production server loads the packed base ONCE and routes each
-//! request to one of many cheap adapters. The two types here are the
-//! tenant half of that split:
+//! request to one of many cheap adapters. The types here are the tenant
+//! half of that split:
 //!
 //! * [`AdapterSet`] — one tenant's adapters: a named collection of
 //!   per-layer [`LoraPair`]s, validated against a [`PackedModel`]'s shapes
-//!   before serving.
-//! * [`AdapterRegistry`] — the live set of tenants: `register` /
-//!   `unregister` / hot-swap under load, LRU eviction under a byte budget,
-//!   and RAII [`AdapterHandle`] checkouts that pin an adapter while any
-//!   request references it.
+//!   at registration.
+//! * [`AdapterId`] — an interned tenant handle: registering a set interns
+//!   its string id into a stable slot; requests submit by `AdapterId`
+//!   (`Copy`, one integer) so the admission hot path neither hashes nor
+//!   clones id strings. A slot survives hot-swaps AND unregister/
+//!   re-register of the same id, so resolved ids never dangle — checkout
+//!   of a currently-unregistered slot just returns `None`.
+//! * [`AdapterRegistry`] — the live tenant set, bound to the served
+//!   [`PackedModel`]: `register` / `unregister` / hot-swap under load, LRU
+//!   eviction under a byte budget, and RAII [`AdapterHandle`] checkouts
+//!   that pin an adapter while any request references it. Because the
+//!   registry knows its model, registration always shape-checks and also
+//!   resolves each set into a per-model-layer slot table — the kernel's
+//!   per-rider adapter lookup ([`AdapterHandle::pair`]) is one array
+//!   index, not a per-hop string hash.
 //!
 //! **Consistency contract** (locked down by
 //! `rust/tests/lifecycle_adapters.rs`): a request resolves its adapter to
@@ -31,7 +42,23 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::lowrank::LoraPair;
-use crate::serve::packed::PackedModel;
+use crate::serve::error::ServeError;
+use crate::serve::packed::{LayerId, PackedModel};
+
+/// An interned adapter handle: the stable slot index its string id was
+/// assigned at first registration. `Copy`, hash-free to compare, and
+/// stable across hot-swaps and unregister/re-register of the same id —
+/// resolve once ([`AdapterRegistry::resolve`] / `ServeEngine::adapter`),
+/// then submit by id.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct AdapterId(u32);
+
+impl AdapterId {
+    /// The id's slot index in its registry.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
 
 /// One tenant's adapters: per-layer LoRA pairs keyed by layer name.
 #[derive(Clone, Debug)]
@@ -48,7 +75,7 @@ impl AdapterSet {
 
     /// Build from `(layer name, pair)` entries; duplicate layer names are
     /// rejected (requests address adapters by layer name).
-    pub fn from_pairs(id: &str, pairs: Vec<(String, LoraPair)>) -> anyhow::Result<AdapterSet> {
+    pub fn from_pairs(id: &str, pairs: Vec<(String, LoraPair)>) -> Result<AdapterSet, ServeError> {
         let mut set = AdapterSet::new(id);
         for (layer, pair) in pairs {
             set.insert(&layer, pair)?;
@@ -56,12 +83,12 @@ impl AdapterSet {
         Ok(set)
     }
 
-    pub fn insert(&mut self, layer: &str, pair: LoraPair) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            !self.index.contains_key(layer),
-            "adapter '{}': duplicate entry for layer '{layer}'",
-            self.id
-        );
+    pub fn insert(&mut self, layer: &str, pair: LoraPair) -> Result<(), ServeError> {
+        if self.index.contains_key(layer) {
+            return Err(ServeError::InvalidConfig {
+                detail: format!("adapter '{}': duplicate entry for layer '{layer}'", self.id),
+            });
+        }
         self.index.insert(layer.to_string(), self.layers.len());
         self.layers.push((layer.to_string(), pair));
         Ok(())
@@ -98,17 +125,33 @@ impl AdapterSet {
     /// Validate every entry against `model`: the layer must exist and the
     /// pair must fit its base shape. Run at registration so admission and
     /// the kernel never see a misshapen adapter.
-    pub fn check_against(&self, model: &PackedModel) -> anyhow::Result<()> {
+    pub fn check_against(&self, model: &PackedModel) -> Result<(), ServeError> {
         for (name, pair) in self.entries() {
-            let layer = model.layer(name).ok_or_else(|| {
-                anyhow::anyhow!(
-                    "adapter '{}': no layer '{name}' in the served model",
-                    self.id
-                )
+            let layer = model
+                .layer(name)
+                .ok_or_else(|| ServeError::UnknownLayer { layer: name.to_string() })?;
+            layer.check_adapter(pair).map_err(|e| match e {
+                ServeError::ShapeMismatch { layer, detail } => ServeError::ShapeMismatch {
+                    layer,
+                    detail: format!("adapter '{}': {detail}", self.id),
+                },
+                other => other,
             })?;
-            layer.check_adapter(pair).map_err(|e| anyhow::anyhow!("adapter '{}': {e}", self.id))?;
         }
         Ok(())
+    }
+
+    /// Per-model-layer slot table: position `i` holds the index of this
+    /// set's pair for model layer `i` (`None` = no delta there). Resolved
+    /// once at registration; [`AdapterHandle::pair`] then serves the
+    /// kernel's per-rider lookup as one array index — no string hashing on
+    /// the hot path.
+    fn resolve_against(&self, model: &PackedModel) -> Box<[Option<u32>]> {
+        model
+            .layers
+            .iter()
+            .map(|l| self.index.get(&l.name).map(|&i| i as u32))
+            .collect()
     }
 }
 
@@ -117,6 +160,9 @@ impl AdapterSet {
 /// so pins on the old version keep the old weights alive and coherent.
 pub struct ActiveAdapter {
     set: AdapterSet,
+    /// Model layer index → pair index in `set` (see
+    /// [`AdapterSet::resolve_against`]).
+    by_layer: Box<[Option<u32>]>,
     in_use: AtomicUsize,
 }
 
@@ -128,6 +174,13 @@ impl ActiveAdapter {
     /// Live checkout count (queued + in-flight requests holding a handle).
     pub fn pins(&self) -> usize {
         self.in_use.load(Ordering::Acquire)
+    }
+
+    fn pair_at(&self, layer: LayerId) -> Option<&LoraPair> {
+        match self.by_layer.get(layer.index()) {
+            Some(&Some(i)) => Some(&self.set.layers[i as usize].1),
+            _ => None,
+        }
     }
 }
 
@@ -144,15 +197,21 @@ impl AdapterHandle {
         &self.active.set
     }
 
+    /// This version's pair for the given model layer (`None` = the set
+    /// carries no delta there). O(1) slot-table lookup — the kernel calls
+    /// this once per rider per hop.
+    pub fn pair(&self, layer: LayerId) -> Option<&LoraPair> {
+        self.active.pair_at(layer)
+    }
+
     /// Same underlying version? (Identity, not value, comparison — the
     /// engine keys batch groups on this.)
     pub fn same_version(&self, other: &AdapterHandle) -> bool {
         Arc::ptr_eq(&self.active, &other.active)
     }
 
-    /// Opaque version identity token (the engine's batch sorter uses it to
-    /// make same-version requests adjacent; two handles return the same
-    /// token iff [`AdapterHandle::same_version`] holds).
+    /// Opaque version identity token (two handles return the same token
+    /// iff [`AdapterHandle::same_version`] holds).
     pub fn version_token(&self) -> usize {
         Arc::as_ptr(&self.active) as usize
     }
@@ -196,8 +255,24 @@ impl Entry {
     }
 }
 
+/// One interned id: the name is permanent (ids stay resolvable), the entry
+/// comes and goes with register/evict/unregister.
+struct Slot {
+    name: String,
+    entry: Option<Entry>,
+}
+
 struct RegState {
-    entries: HashMap<String, Entry>,
+    /// id string → slot index; grows monotonically (interning). A slot is
+    /// never recycled for a DIFFERENT id — that is what makes a stale
+    /// [`AdapterId`] fail checkout instead of silently addressing another
+    /// tenant — so memory here is bounded by the number of DISTINCT ids
+    /// ever registered, not the number currently live. Workloads that
+    /// register unbounded unique ids (one per ephemeral job) accrete dead
+    /// slots; recycling safely needs a generation counter in `AdapterId`
+    /// (noted in ROADMAP.md).
+    intern: HashMap<String, u32>,
+    slots: Vec<Slot>,
     clock: u64,
     bytes_total: usize,
     evictions: usize,
@@ -208,10 +283,13 @@ struct RegShared {
     drained: Condvar,
 }
 
-/// What `register` did besides inserting: whether it hot-swapped an
-/// existing id, and which adapters the byte budget pushed out.
-#[derive(Clone, Debug, Default)]
+/// What `register` did: the interned id to submit by, whether it
+/// hot-swapped an existing id, and which adapters the byte budget pushed
+/// out.
+#[derive(Clone, Debug)]
 pub struct RegisterOutcome {
+    /// The interned id for the registered set — stable across hot-swaps.
+    pub id: AdapterId,
     pub replaced: bool,
     pub evicted: Vec<String>,
 }
@@ -224,10 +302,14 @@ pub struct RegistryStats {
     pub evictions: usize,
 }
 
-/// The live adapter set: id → current version, LRU-evicted under
-/// `budget_bytes`. All operations are safe under concurrent serving load;
-/// see the module docs for the hot-swap and drain contracts.
+/// The live adapter set over ONE served model: id → current version,
+/// LRU-evicted under `budget_bytes`. All operations are safe under
+/// concurrent serving load; see the module docs for the hot-swap and drain
+/// contracts. Binding the registry to its [`PackedModel`] means
+/// registration always validates shapes — there is no unchecked side door
+/// for a misshapen adapter to reach the kernel.
 pub struct AdapterRegistry {
+    model: Arc<PackedModel>,
     shared: Arc<RegShared>,
     budget_bytes: usize,
 }
@@ -237,11 +319,13 @@ impl AdapterRegistry {
     /// are exempt from eviction, so a fully-pinned registry may transiently
     /// exceed the budget — by design, since evicting an adapter with queued
     /// requests would fail those requests for a cache policy's sake).
-    pub fn new(budget_bytes: usize) -> AdapterRegistry {
+    pub fn new(model: Arc<PackedModel>, budget_bytes: usize) -> AdapterRegistry {
         AdapterRegistry {
+            model,
             shared: Arc::new(RegShared {
                 state: Mutex::new(RegState {
-                    entries: HashMap::new(),
+                    intern: HashMap::new(),
+                    slots: Vec::new(),
                     clock: 0,
                     bytes_total: 0,
                     evictions: 0,
@@ -252,29 +336,50 @@ impl AdapterRegistry {
         }
     }
 
-    /// Insert (or hot-swap) `set` under its id, then evict least-recently
-    /// used UNPINNED adapters until the byte budget holds. A set larger
-    /// than the whole budget is refused outright. Hot-swap does not wait
-    /// for the old version's pins: in-flight requests finish on the old
-    /// weights, new admissions see the new ones.
-    pub fn register(&self, set: AdapterSet) -> anyhow::Result<RegisterOutcome> {
+    /// The model this registry validates and resolves adapters against.
+    pub fn model(&self) -> &PackedModel {
+        &self.model
+    }
+
+    /// Validate `set` against the served model, insert (or hot-swap) it
+    /// under its id, then evict least-recently-used UNPINNED adapters until
+    /// the byte budget holds. A set larger than the whole budget is refused
+    /// outright. Hot-swap does not wait for the old version's pins:
+    /// in-flight requests finish on the old weights, new admissions see the
+    /// new ones. The returned outcome carries the interned [`AdapterId`].
+    pub fn register(&self, set: AdapterSet) -> Result<RegisterOutcome, ServeError> {
+        set.check_against(&self.model)?;
         let bytes = set.bytes();
-        anyhow::ensure!(
-            bytes <= self.budget_bytes,
-            "adapter '{}': {bytes} bytes exceed the whole registry budget of {} bytes",
-            set.id(),
-            self.budget_bytes
-        );
-        let id = set.id().to_string();
+        if bytes > self.budget_bytes {
+            return Err(ServeError::InvalidConfig {
+                detail: format!(
+                    "adapter '{}': {bytes} bytes exceed the whole registry budget of {} \
+                     bytes",
+                    set.id(),
+                    self.budget_bytes
+                ),
+            });
+        }
+        let by_layer = set.resolve_against(&self.model);
+        let name = set.id().to_string();
         let mut st = self.shared.state.lock().unwrap();
-        let mut outcome = RegisterOutcome::default();
+        let slot_idx = match st.intern.get(&name).copied() {
+            Some(i) => i as usize,
+            None => {
+                let i = st.slots.len();
+                st.intern.insert(name.clone(), i as u32);
+                st.slots.push(Slot { name: name.clone(), entry: None });
+                i
+            }
+        };
         // Hot-swap: still-pinned predecessor versions move onto the new
         // entry so unregister/eviction keep seeing their pins; fully
         // drained ones drop here.
+        let mut replaced = false;
         let mut superseded = Vec::new();
-        if let Some(old) = st.entries.remove(&id) {
+        if let Some(old) = st.slots[slot_idx].entry.take() {
             st.bytes_total -= old.bytes;
-            outcome.replaced = true;
+            replaced = true;
             superseded.extend(old.superseded.into_iter().filter(|a| a.pins() > 0));
             if old.active.pins() > 0 {
                 superseded.push(old.active);
@@ -283,63 +388,93 @@ impl AdapterRegistry {
         st.clock += 1;
         let stamp = st.clock;
         st.bytes_total += bytes;
-        st.entries.insert(
-            id.clone(),
-            Entry {
-                active: Arc::new(ActiveAdapter { set, in_use: AtomicUsize::new(0) }),
-                superseded,
-                bytes,
-                last_used: stamp,
-            },
-        );
+        st.slots[slot_idx].entry = Some(Entry {
+            active: Arc::new(ActiveAdapter { set, by_layer, in_use: AtomicUsize::new(0) }),
+            superseded,
+            bytes,
+            last_used: stamp,
+        });
+        let mut evicted = Vec::new();
         while st.bytes_total > self.budget_bytes {
-            // LRU among candidates with NO pinned version (current or
+            // LRU among slots with NO pinned version (current or
             // superseded), never the id just registered.
             let victim = st
-                .entries
+                .slots
                 .iter()
-                .filter(|(k, e)| **k != id && !e.any_pinned())
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone());
+                .enumerate()
+                .filter(|&(i, _)| i != slot_idx)
+                .filter_map(|(i, s)| s.entry.as_ref().map(|e| (i, e)))
+                .filter(|(_, e)| !e.any_pinned())
+                .min_by_key(|&(_, e)| e.last_used)
+                .map(|(i, _)| i);
             match victim {
                 Some(v) => {
-                    let e = st.entries.remove(&v).unwrap();
+                    let e = st.slots[v].entry.take().expect("victim had an entry");
                     st.bytes_total -= e.bytes;
                     st.evictions += 1;
-                    outcome.evicted.push(v);
+                    evicted.push(st.slots[v].name.clone());
                 }
                 None => break, // everything else is pinned: tolerate over-budget
             }
         }
-        Ok(outcome)
+        Ok(RegisterOutcome { id: AdapterId(slot_idx as u32), replaced, evicted })
+    }
+
+    /// Intern lookup: the [`AdapterId`] for a CURRENTLY REGISTERED id
+    /// string (`None` when it never registered, was evicted, or was
+    /// unregistered). The returned id stays stable across hot-swaps and
+    /// even across unregister/re-register of the same string.
+    pub fn resolve(&self, name: &str) -> Option<AdapterId> {
+        let st = self.shared.state.lock().unwrap();
+        let i = st.intern.get(name).copied()?;
+        st.slots[i as usize].entry.as_ref()?;
+        Some(AdapterId(i))
+    }
+
+    /// The id string behind an interned handle (for error messages and
+    /// diagnostics; works even while the slot is unregistered).
+    pub fn name_of(&self, id: AdapterId) -> Option<String> {
+        let st = self.shared.state.lock().unwrap();
+        st.slots.get(id.index()).map(|s| s.name.clone())
     }
 
     /// Pin and return the current version of `id` (bumping its recency), or
-    /// `None` if it is not registered (never was, evicted, or unregistered).
-    pub fn checkout(&self, id: &str) -> Option<AdapterHandle> {
+    /// `None` if its slot is not currently registered. O(1): one vector
+    /// index under the lock, no hashing.
+    pub fn checkout(&self, id: AdapterId) -> Option<AdapterHandle> {
         let mut st = self.shared.state.lock().unwrap();
         st.clock += 1;
         let stamp = st.clock;
-        let entry = st.entries.get_mut(id)?;
+        let entry = st.slots.get_mut(id.index())?.entry.as_mut()?;
         entry.superseded.retain(|a| a.pins() > 0); // free drained old weights
         entry.last_used = stamp;
         entry.active.in_use.fetch_add(1, Ordering::AcqRel);
         Some(AdapterHandle { active: Arc::clone(&entry.active), shared: Arc::clone(&self.shared) })
     }
 
-    /// Remove `id` and BLOCK until every outstanding handle on EVERY
+    /// Name-resolving convenience checkout (admin paths and tests; the
+    /// serving hot path resolves once and uses [`AdapterRegistry::checkout`]).
+    pub fn checkout_named(&self, name: &str) -> Option<AdapterHandle> {
+        self.checkout(self.resolve(name)?)
+    }
+
+    /// Remove `name` and BLOCK until every outstanding handle on EVERY
     /// version of it — the current one and any still-pinned hot-swap
     /// predecessors — drops: the per-adapter drain. On return no request,
     /// queued or in-flight, references any of the id's weights. New
     /// checkouts of the id fail the moment this is called (the entry is
     /// gone before the wait), so admission cannot re-pin a draining
-    /// adapter.
-    pub fn unregister(&self, id: &str) -> anyhow::Result<()> {
+    /// adapter. The interned slot itself survives: held [`AdapterId`]s
+    /// simply stop resolving until the id registers again.
+    pub fn unregister(&self, name: &str) -> Result<(), ServeError> {
         let mut st = self.shared.state.lock().unwrap();
-        let entry = st
-            .entries
-            .remove(id)
-            .ok_or_else(|| anyhow::anyhow!("no adapter '{id}' registered"))?;
+        let slot = st.intern.get(name).copied();
+        let entry = match slot {
+            Some(i) => st.slots[i as usize].entry.take(),
+            None => None,
+        };
+        let entry =
+            entry.ok_or_else(|| ServeError::UnknownAdapter { adapter: name.to_string() })?;
         st.bytes_total -= entry.bytes;
         while entry.any_pinned() {
             st = self.shared.drained.wait(st).unwrap();
@@ -347,28 +482,36 @@ impl AdapterRegistry {
         Ok(())
     }
 
-    pub fn contains(&self, id: &str) -> bool {
-        self.shared.state.lock().unwrap().entries.contains_key(id)
+    pub fn contains(&self, name: &str) -> bool {
+        let st = self.shared.state.lock().unwrap();
+        st.intern
+            .get(name)
+            .is_some_and(|&i| st.slots[i as usize].entry.is_some())
     }
 
     /// Registered ids, alphabetical (diagnostics / demo output).
     pub fn ids(&self) -> Vec<String> {
         let st = self.shared.state.lock().unwrap();
-        let mut ids: Vec<String> = st.entries.keys().cloned().collect();
+        let mut ids: Vec<String> = st
+            .slots
+            .iter()
+            .filter(|s| s.entry.is_some())
+            .map(|s| s.name.clone())
+            .collect();
         ids.sort();
         ids
     }
 
     pub fn stats(&self) -> RegistryStats {
         let mut st = self.shared.state.lock().unwrap();
-        for e in st.entries.values_mut() {
-            e.superseded.retain(|a| a.pins() > 0); // free drained old weights
+        let mut adapters = 0usize;
+        for s in st.slots.iter_mut() {
+            if let Some(e) = s.entry.as_mut() {
+                e.superseded.retain(|a| a.pins() > 0); // free drained old weights
+                adapters += 1;
+            }
         }
-        RegistryStats {
-            adapters: st.entries.len(),
-            bytes: st.bytes_total,
-            evictions: st.evictions,
-        }
+        RegistryStats { adapters, bytes: st.bytes_total, evictions: st.evictions }
     }
 }
 
@@ -376,7 +519,17 @@ impl AdapterRegistry {
 mod tests {
     use super::*;
     use crate::linalg::Matrix;
+    use crate::quant::{quantize_rtn, QuantState};
+    use crate::serve::packed::PackedLayer;
     use crate::util::prng::Rng;
+
+    /// One-layer model ("lin", 8→4) every test set fits.
+    fn model() -> Arc<PackedModel> {
+        let mut rng = Rng::new(900);
+        let w = Matrix::randn(8, 4, 0.3, &mut rng);
+        let q = QuantState::Int(quantize_rtn(&w, 4, 4));
+        Arc::new(PackedModel::new(vec![PackedLayer::from_state("lin", &q).unwrap()]))
+    }
 
     fn pair(m: usize, n: usize, r: usize, seed: u64) -> LoraPair {
         let mut rng = Rng::new(seed);
@@ -401,32 +554,56 @@ mod tests {
     fn duplicate_layer_rejected() {
         let mut s = set("t0", 2);
         let err = s.insert("lin", pair(8, 4, 2, 3)).unwrap_err();
+        assert!(matches!(err, ServeError::InvalidConfig { .. }), "{err:?}");
         assert!(format!("{err}").contains("duplicate"), "{err}");
     }
 
     #[test]
     fn register_checkout_unregister() {
-        let reg = AdapterRegistry::new(usize::MAX);
-        reg.register(set("a", 4)).unwrap();
+        let reg = AdapterRegistry::new(model(), usize::MAX);
+        let out = reg.register(set("a", 4)).unwrap();
         assert!(reg.contains("a"));
+        assert_eq!(reg.resolve("a"), Some(out.id));
+        assert_eq!(reg.name_of(out.id).as_deref(), Some("a"));
         {
-            let h = reg.checkout("a").unwrap();
+            let h = reg.checkout(out.id).unwrap();
             assert_eq!(h.set().id(), "a");
+            let lin = reg.model().resolve("lin").unwrap();
+            assert!(h.pair(lin).is_some(), "resolved slot table must find the pair");
         }
         reg.unregister("a").unwrap();
         assert!(!reg.contains("a"));
-        assert!(reg.checkout("a").is_none());
+        assert!(reg.resolve("a").is_none(), "unregistered ids stop resolving");
+        assert!(reg.checkout(out.id).is_none(), "stale AdapterIds checkout to None");
         let err = reg.unregister("a").unwrap_err();
-        assert!(format!("{err}").contains("no adapter 'a'"), "{err}");
+        assert!(matches!(&err, ServeError::UnknownAdapter { adapter } if adapter == "a"), "{err}");
+        // Re-registering the same name revives the SAME interned slot.
+        let out2 = reg.register(set("a", 5)).unwrap();
+        assert_eq!(out2.id, out.id, "intern slots are stable across unregister");
+        assert!(reg.checkout(out.id).is_some());
+    }
+
+    #[test]
+    fn misshapen_and_misnamed_sets_rejected_at_registration() {
+        let reg = AdapterRegistry::new(model(), usize::MAX);
+        let bad = AdapterSet::from_pairs("bad", vec![("lin".to_string(), pair(8, 9, 2, 6))])
+            .unwrap();
+        let err = reg.register(bad).unwrap_err();
+        assert!(matches!(err, ServeError::ShapeMismatch { .. }), "{err:?}");
+        assert!(format!("{err}").contains("does not fit base"), "{err}");
+        let ghost =
+            AdapterSet::from_pairs("g", vec![("ghost".to_string(), pair(8, 4, 2, 7))]).unwrap();
+        let err = reg.register(ghost).unwrap_err();
+        assert!(matches!(err, ServeError::UnknownLayer { .. }), "{err:?}");
     }
 
     #[test]
     fn lru_eviction_respects_recency() {
         let one = set("x", 5).bytes();
-        let reg = AdapterRegistry::new(2 * one);
+        let reg = AdapterRegistry::new(model(), 2 * one);
         reg.register(set("a", 5)).unwrap();
         reg.register(set("b", 6)).unwrap();
-        drop(reg.checkout("a").unwrap()); // touch a: b is now LRU
+        drop(reg.checkout_named("a").unwrap()); // touch a: b is now LRU
         let out = reg.register(set("c", 7)).unwrap();
         assert_eq!(out.evicted, vec!["b".to_string()]);
         assert!(reg.contains("a") && reg.contains("c"));
@@ -436,17 +613,17 @@ mod tests {
     #[test]
     fn pinned_adapter_never_evicted() {
         let one = set("x", 8).bytes();
-        let reg = AdapterRegistry::new(2 * one);
+        let reg = AdapterRegistry::new(model(), 2 * one);
         reg.register(set("a", 8)).unwrap();
-        let _pin = reg.checkout("a").unwrap();
+        let _pin = reg.checkout_named("a").unwrap();
         reg.register(set("b", 9)).unwrap();
-        drop(reg.checkout("b").unwrap()); // a is LRU but pinned
+        drop(reg.checkout_named("b").unwrap()); // a is LRU but pinned
         let out = reg.register(set("c", 10)).unwrap();
         assert_eq!(out.evicted, vec!["b".to_string()], "pinned 'a' must be skipped");
         assert!(reg.contains("a"));
         // With everything pinned, over-budget is tolerated rather than
         // failing live requests.
-        let _pin_c = reg.checkout("c").unwrap();
+        let _pin_c = reg.checkout_named("c").unwrap();
         let out = reg.register(set("d", 11)).unwrap();
         assert!(out.evicted.is_empty());
         assert!(reg.stats().bytes > 2 * one);
@@ -454,20 +631,23 @@ mod tests {
 
     #[test]
     fn oversized_set_refused() {
-        let reg = AdapterRegistry::new(8);
+        let reg = AdapterRegistry::new(model(), 8);
         let err = reg.register(set("big", 12)).unwrap_err();
+        assert!(matches!(err, ServeError::InvalidConfig { .. }), "{err:?}");
         assert!(format!("{err}").contains("exceed the whole registry budget"), "{err}");
     }
 
     #[test]
-    fn hot_swap_is_versioned() {
-        let reg = AdapterRegistry::new(usize::MAX);
-        reg.register(set("a", 13)).unwrap();
-        let old = reg.checkout("a").unwrap();
+    fn hot_swap_is_versioned_and_keeps_the_id() {
+        let reg = AdapterRegistry::new(model(), usize::MAX);
+        let first = reg.register(set("a", 13)).unwrap();
+        let old = reg.checkout(first.id).unwrap();
         let out = reg.register(set("a", 14)).unwrap();
         assert!(out.replaced);
-        let new = reg.checkout("a").unwrap();
+        assert_eq!(out.id, first.id, "hot-swap keeps the interned id");
+        let new = reg.checkout(first.id).unwrap();
         assert!(!old.same_version(&new), "swap must mint a new version");
+        assert_ne!(old.version_token(), new.version_token());
         // The old version's weights are still reachable through the pin.
         let (oa, na) = (old.set().get("lin").unwrap(), new.set().get("lin").unwrap());
         assert_ne!(oa.a.data, na.a.data, "distinct seeds ⇒ distinct weights");
@@ -478,9 +658,9 @@ mod tests {
         // A request pinned to the OLD version across a hot-swap must still
         // block unregister: the drain contract covers every version of the
         // id, not just the current one.
-        let reg = Arc::new(AdapterRegistry::new(usize::MAX));
+        let reg = Arc::new(AdapterRegistry::new(model(), usize::MAX));
         reg.register(set("a", 20)).unwrap();
-        let old_pin = reg.checkout("a").unwrap();
+        let old_pin = reg.checkout_named("a").unwrap();
         reg.register(set("a", 21)).unwrap(); // hot-swap; old version still pinned
         let done = Arc::new(AtomicUsize::new(0));
         let waiter = {
@@ -504,12 +684,12 @@ mod tests {
     #[test]
     fn eviction_skips_entries_with_pinned_superseded_versions() {
         let one = set("x", 22).bytes();
-        let reg = AdapterRegistry::new(2 * one);
+        let reg = AdapterRegistry::new(model(), 2 * one);
         reg.register(set("a", 22)).unwrap();
-        let old_pin = reg.checkout("a").unwrap();
+        let old_pin = reg.checkout_named("a").unwrap();
         reg.register(set("a", 23)).unwrap(); // swap: current unpinned, old pinned
         reg.register(set("b", 24)).unwrap();
-        drop(reg.checkout("b").unwrap()); // a is LRU but its old version is pinned
+        drop(reg.checkout_named("b").unwrap()); // a is LRU but its old version is pinned
         let out = reg.register(set("c", 25)).unwrap();
         assert_eq!(out.evicted, vec!["b".to_string()], "superseded pin must protect 'a'");
         assert!(reg.contains("a"));
@@ -518,9 +698,9 @@ mod tests {
 
     #[test]
     fn unregister_drains_outstanding_handles() {
-        let reg = Arc::new(AdapterRegistry::new(usize::MAX));
+        let reg = Arc::new(AdapterRegistry::new(model(), usize::MAX));
         reg.register(set("a", 15)).unwrap();
-        let h = reg.checkout("a").unwrap();
+        let h = reg.checkout_named("a").unwrap();
         let h2 = h.clone();
         drop(h);
         let done = Arc::new(AtomicUsize::new(0));
@@ -533,7 +713,7 @@ mod tests {
         };
         std::thread::sleep(std::time::Duration::from_millis(30));
         assert_eq!(done.load(Ordering::SeqCst), 0, "drain must block while a handle lives");
-        assert!(reg.checkout("a").is_none(), "draining adapter must refuse new pins");
+        assert!(reg.checkout_named("a").is_none(), "draining adapter must refuse new pins");
         drop(h2);
         waiter.join().unwrap();
         assert_eq!(done.load(Ordering::SeqCst), 1);

@@ -1,5 +1,6 @@
 //! The packed serving artifacts: versioned binary checkpoints for the
-//! packed base and for individual adapter sets.
+//! packed base and for individual adapter sets, unified behind
+//! [`ArtifactStore`].
 //!
 //! Two current formats plus one legacy reader (all integers little-endian,
 //! every record CRC-framed):
@@ -21,33 +22,44 @@
 //! params only. Adapters ship separately in the small **adapter** artifact
 //! (`CLOQADP1`), so a new tenant deploys without re-shipping the packed
 //! base — the multi-tenant split `serve::adapters` serves from. The v1
-//! format (`CLOQPKD1`, PR 2's single-tenant layout with A/B embedded per
-//! layer) is still read by [`load_artifact_compat`], which converts it
-//! into base + one adapter set named [`V1_ADAPTER_ID`]; `save_artifact_v1`
-//! is kept so the compatibility path stays testable byte-for-byte.
+//! format (`CLOQPKD1`, the original single-tenant layout with A/B embedded
+//! per layer) is still readable: [`ArtifactStore::open`] autodetects it
+//! and returns [`Artifact::LegacyV1`] with the embedded adapters split
+//! into one set named [`V1_ADAPTER_ID`].
+//!
+//! **The store** is the one entry point: [`ArtifactStore::save_base`] /
+//! [`ArtifactStore::save_adapter`] write the two current formats, and
+//! [`ArtifactStore::open`] reads ANY of the three — the magic bytes, not
+//! the file name, decide what comes back, so a deployment script can
+//! point the server at a directory of mixed artifacts and match on
+//! [`Artifact`]. The six former free functions remain as thin
+//! `#[deprecated]` shims over the same internals.
 //!
 //! Each layer payload carries its own name, shapes and parameter kind, so
 //! the loaders can validate structurally and — the part that matters at
-//! 3 a.m. — every corruption error **names the offending layer**: a
-//! truncated file, a flipped bit (CRC mismatch), or an inconsistent shape
-//! all report `layer k ('name'): …` instead of a bare parse failure.
+//! 3 a.m. — every corruption error is a typed
+//! [`ServeError::Artifact`] whose `kind` classifies the failure
+//! ([`ArtifactErrorKind`]: truncation vs checksum vs structure) and whose
+//! `layer` **names the offending layer** whenever the bytes still reveal
+//! it, instead of a bare parse failure.
 //!
 //! Roundtrip contract (locked by `rust/tests/golden_serve.rs`): save →
 //! load reproduces every layer's quantization state **byte-identically**
 //! (codes, scales/zeros or levels/absmax, adapters — all f64, no precision
 //! laundering) and therefore a bit-identical packed forward; and loading a
-//! v1 file through the compat shim forwards bit-identically to the
+//! v1 file through the legacy path forwards bit-identically to the
 //! original embedded-adapter layers.
 
 use std::io::Write;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::linalg::Matrix;
 use crate::lowrank::LoraPair;
 use crate::serve::adapters::AdapterSet;
+use crate::serve::error::{ArtifactErrorKind, ServeError};
 use crate::serve::packed::{words_per_row, DequantParams, PackedLayer, PackedModel};
 
-/// Legacy single-tenant format (PR 2): adapters embedded per layer.
+/// Legacy single-tenant format: adapters embedded per layer.
 pub const MAGIC_V1: &[u8; 8] = b"CLOQPKD1";
 pub const VERSION_V1: u32 = 1;
 /// Current base format: no LoRA payloads.
@@ -57,8 +69,8 @@ pub const VERSION_BASE: u32 = 2;
 pub const MAGIC_ADAPTER: &[u8; 8] = b"CLOQADP1";
 pub const VERSION_ADAPTER: u32 = 1;
 
-/// Adapter-set id assigned when [`load_artifact_compat`] converts a v1
-/// artifact's embedded adapters.
+/// Adapter-set id assigned when a legacy v1 artifact's embedded adapters
+/// are split out ([`Artifact::LegacyV1`]).
 pub const V1_ADAPTER_ID: &str = "v1";
 
 const KIND_GRID: u8 = 0;
@@ -91,6 +103,145 @@ pub fn crc32(bytes: &[u8]) -> u32 {
         c = (c >> 8) ^ CRC_TABLE[((c ^ b as u32) & 0xFF) as usize];
     }
     c ^ 0xFFFF_FFFF
+}
+
+// ---- the unified store ----
+
+/// What [`ArtifactStore::open`] found, decided by the file's magic bytes.
+pub enum Artifact {
+    /// A v2 base artifact: the packed model, no adapters.
+    Base(PackedModel),
+    /// An adapter artifact: one tenant's set, shipped without the base.
+    Adapter(AdapterSet),
+    /// A legacy v1 single-tenant file: the base plus its embedded
+    /// adapters, split into one set named [`V1_ADAPTER_ID`]. The
+    /// conversion is value-exact (same f64 bits), so forwards through the
+    /// converted pair are bit-identical to the embedded layout.
+    LegacyV1 { model: PackedModel, adapters: AdapterSet },
+}
+
+impl Artifact {
+    /// Short slug for logs and error messages.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Artifact::Base(_) => "base",
+            Artifact::Adapter(_) => "adapter",
+            Artifact::LegacyV1 { .. } => "legacy-v1",
+        }
+    }
+
+    /// The packed model, refusing non-base artifacts. A legacy file is
+    /// refused too — its embedded adapters must not be dropped silently;
+    /// match [`Artifact::LegacyV1`] to keep them.
+    pub fn into_base(self) -> Result<PackedModel, ServeError> {
+        match self {
+            Artifact::Base(m) => Ok(m),
+            other => Err(ServeError::Unsupported {
+                detail: format!(
+                    "expected a base artifact, found a {} artifact; open() and match \
+                     the Artifact variant instead",
+                    other.kind_name()
+                ),
+            }),
+        }
+    }
+
+    /// The adapter set, refusing non-adapter artifacts.
+    pub fn into_adapter(self) -> Result<AdapterSet, ServeError> {
+        match self {
+            Artifact::Adapter(s) => Ok(s),
+            other => Err(ServeError::Unsupported {
+                detail: format!(
+                    "expected an adapter artifact, found a {} artifact; open() and \
+                     match the Artifact variant instead",
+                    other.kind_name()
+                ),
+            }),
+        }
+    }
+}
+
+/// The unified serving-artifact store: one directory, three formats, one
+/// read entry point. Writers pick the format
+/// ([`ArtifactStore::save_base`] / [`ArtifactStore::save_adapter`]);
+/// [`ArtifactStore::open`] autodetects what a file is from its magic
+/// bytes and returns the matching [`Artifact`]. All failures are typed
+/// [`ServeError::Artifact`] values carrying the path, the failure
+/// [`ArtifactErrorKind`], and the offending layer's name when known.
+pub struct ArtifactStore {
+    dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// A store rooted at `dir` (created lazily on the first save).
+    pub fn at(dir: impl Into<PathBuf>) -> ArtifactStore {
+        ArtifactStore { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The on-disk path a name maps to (`dir/name` — names may carry
+    /// their own extension convention, e.g. `base.cloqpkd2`).
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Write the packed BASE (v2, `CLOQPKD2`): codes + dequant params, no
+    /// LoRA. Returns the written path.
+    pub fn save_base(&self, model: &PackedModel, name: &str) -> Result<PathBuf, ServeError> {
+        let path = self.path(name);
+        save_base_at(model, &path)?;
+        Ok(path)
+    }
+
+    /// Write one adapter set (`CLOQADP1`) — the small per-tenant file that
+    /// ships without re-shipping the packed base. Returns the written path.
+    pub fn save_adapter(&self, set: &AdapterSet, name: &str) -> Result<PathBuf, ServeError> {
+        let path = self.path(name);
+        save_adapter_at(set, &path)?;
+        Ok(path)
+    }
+
+    /// Write the LEGACY v1 single-tenant layout (`CLOQPKD1`): every layer
+    /// embeds its adapter from `set`, which must cover the whole model.
+    /// Kept so the v1 compatibility path stays testable byte-for-byte; new
+    /// deployments write base + adapter artifacts instead.
+    pub fn save_legacy_v1(
+        &self,
+        model: &PackedModel,
+        set: &AdapterSet,
+        name: &str,
+    ) -> Result<PathBuf, ServeError> {
+        let path = self.path(name);
+        save_v1_at(model, set, &path)?;
+        Ok(path)
+    }
+
+    /// Read `name`, autodetecting which of the three formats it holds from
+    /// the magic bytes.
+    pub fn open(&self, name: &str) -> Result<Artifact, ServeError> {
+        open_at(&self.path(name))
+    }
+
+    /// Read a base artifact, refusing adapter and legacy files with a
+    /// pointer to [`ArtifactStore::open`] (a legacy file's embedded
+    /// adapters must not be dropped silently).
+    pub fn load_base(&self, name: &str) -> Result<PackedModel, ServeError> {
+        load_base_at(&self.path(name))
+    }
+
+    /// Read an adapter artifact, refusing the other formats (one source
+    /// of truth: [`Artifact::into_adapter`], with the path prepended).
+    pub fn load_adapter(&self, name: &str) -> Result<AdapterSet, ServeError> {
+        self.open(name)?.into_adapter().map_err(|e| match e {
+            ServeError::Unsupported { detail } => ServeError::Unsupported {
+                detail: format!("artifact {}: {detail}", self.path(name).display()),
+            },
+            other => other,
+        })
+    }
 }
 
 // ---- encoding ----
@@ -155,8 +306,8 @@ fn encode_layer_base(l: &PackedLayer) -> Vec<u8> {
     b
 }
 
-/// v1 layout (PR 2, byte-for-byte): base fields with `rank` after `cols`,
-/// then A and B row-major f64.
+/// v1 layout (byte-for-byte): base fields with `rank` after `cols`, then A
+/// and B row-major f64.
 fn encode_layer_v1(l: &PackedLayer, pair: &LoraPair) -> Vec<u8> {
     let mut b = Vec::new();
     encode_base_fields(&mut b, l, Some(pair.rank()));
@@ -176,23 +327,33 @@ fn encode_layer_adapter(name: &str, pair: &LoraPair) -> Vec<u8> {
     b
 }
 
-fn write_file(path: &Path, header: &[u8], payloads: Vec<Vec<u8>>) -> anyhow::Result<()> {
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
+fn io_err(path: &Path, what: &str, e: std::io::Error) -> ServeError {
+    ServeError::Artifact {
+        path: path.display().to_string(),
+        layer: None,
+        kind: ArtifactErrorKind::Io,
+        detail: format!("{what}: {e}"),
     }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(header)?;
-    for payload in payloads {
-        f.write_all(&(payload.len() as u64).to_le_bytes())?;
-        f.write_all(&payload)?;
-        f.write_all(&crc32(&payload).to_le_bytes())?;
-    }
-    f.flush()?;
-    Ok(())
 }
 
-/// Save the packed BASE (v2, `CLOQPKD2`): codes + dequant params, no LoRA.
-pub fn save_base_artifact(model: &PackedModel, path: &Path) -> anyhow::Result<()> {
+fn write_file(path: &Path, header: &[u8], payloads: Vec<Vec<u8>>) -> Result<(), ServeError> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).map_err(|e| io_err(path, "cannot create dir", e))?;
+    }
+    let inner = || -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(header)?;
+        for payload in &payloads {
+            f.write_all(&(payload.len() as u64).to_le_bytes())?;
+            f.write_all(payload)?;
+            f.write_all(&crc32(payload).to_le_bytes())?;
+        }
+        f.flush()
+    };
+    inner().map_err(|e| io_err(path, "cannot write", e))
+}
+
+fn save_base_at(model: &PackedModel, path: &Path) -> Result<(), ServeError> {
     let mut header = Vec::new();
     header.extend_from_slice(MAGIC_BASE);
     header.extend_from_slice(&VERSION_BASE.to_le_bytes());
@@ -200,9 +361,7 @@ pub fn save_base_artifact(model: &PackedModel, path: &Path) -> anyhow::Result<()
     write_file(path, &header, model.layers.iter().map(encode_layer_base).collect())
 }
 
-/// Save one adapter set (`CLOQADP1`) — the small per-tenant file that ships
-/// without re-shipping the packed base.
-pub fn save_adapter_artifact(set: &AdapterSet, path: &Path) -> anyhow::Result<()> {
+fn save_adapter_at(set: &AdapterSet, path: &Path) -> Result<(), ServeError> {
     let mut header = Vec::new();
     header.extend_from_slice(MAGIC_ADAPTER);
     header.extend_from_slice(&VERSION_ADAPTER.to_le_bytes());
@@ -212,26 +371,21 @@ pub fn save_adapter_artifact(set: &AdapterSet, path: &Path) -> anyhow::Result<()
     write_file(path, &header, payloads)
 }
 
-/// Save in the LEGACY v1 single-tenant layout (`CLOQPKD1`): every layer
-/// embeds its adapter from `set`, which must cover the whole model. Kept so
-/// the v1 → v2 compatibility path stays testable byte-for-byte; new code
-/// should write base + adapter artifacts instead.
-pub fn save_artifact_v1(
-    model: &PackedModel,
-    set: &AdapterSet,
-    path: &Path,
-) -> anyhow::Result<()> {
+/// v1 embeds one adapter per layer: fetch and shape-check the layer's pair
+/// from `set`, as a typed error when it is absent.
+fn v1_pair<'a>(l: &PackedLayer, set: &'a AdapterSet) -> Result<&'a LoraPair, ServeError> {
+    let pair = set.get(&l.name).ok_or_else(|| ServeError::AdapterMismatch {
+        adapter: set.id().to_string(),
+        layer: Some(l.name.clone()),
+    })?;
+    l.check_adapter(pair)?;
+    Ok(pair)
+}
+
+fn save_v1_at(model: &PackedModel, set: &AdapterSet, path: &Path) -> Result<(), ServeError> {
     let mut payloads = Vec::with_capacity(model.layers.len());
     for l in &model.layers {
-        let pair = set.get(&l.name).ok_or_else(|| {
-            anyhow::anyhow!(
-                "v1 artifact embeds one adapter per layer, but set '{}' has none for '{}'",
-                set.id(),
-                l.name
-            )
-        })?;
-        l.check_adapter(pair)?;
-        payloads.push(encode_layer_v1(l, pair));
+        payloads.push(encode_layer_v1(l, v1_pair(l, set)?));
     }
     let mut header = Vec::new();
     header.extend_from_slice(MAGIC_V1);
@@ -298,11 +452,10 @@ impl<'a> Rd<'a> {
     }
 }
 
-/// Best-effort layer name from a payload prefix, for CRC-mismatch errors
-/// where the payload itself is untrustworthy.
-fn peek_name(payload: &[u8]) -> String {
-    let mut rd = Rd::new(payload);
-    rd.str("name").unwrap_or_else(|_| "<unreadable>".to_string())
+/// Best-effort layer name from a payload prefix, for errors where the
+/// payload itself is suspect or partially decoded.
+fn peek_name(payload: &[u8]) -> Option<String> {
+    Rd::new(payload).str("name").ok()
 }
 
 /// Decode the base fields shared by v1 and v2 payloads. `v1` controls
@@ -438,33 +591,9 @@ fn decode_layer_adapter(payload: &[u8]) -> anyhow::Result<(String, LoraPair)> {
     Ok((name, LoraPair::new(a, b)))
 }
 
-/// Read one CRC-framed record: length, payload, checksum. Every failure is
-/// wrapped with `lctx` so it names the layer index (and, on a checksum
-/// mismatch, the best-effort layer name).
-fn read_record<'a>(
-    rd: &mut Rd<'a>,
-    lctx: &impl Fn(String) -> anyhow::Error,
-) -> anyhow::Result<&'a [u8]> {
-    let len = rd
-        .u64("payload length")
-        .map_err(|e| lctx(format!("{e} — file truncated mid-header")))? as usize;
-    let payload = rd
-        .bytes(len, "payload")
-        .map_err(|e| lctx(format!("{e} — file truncated mid-layer")))?;
-    let stored_crc = rd
-        .u32("checksum")
-        .map_err(|e| lctx(format!("{e} — file truncated before checksum")))?;
-    let computed = crc32(payload);
-    if computed != stored_crc {
-        return Err(lctx(format!(
-            "('{}') checksum mismatch: stored {stored_crc:08x}, computed {computed:08x} — \
-             layer bytes are corrupted",
-            peek_name(payload)
-        )));
-    }
-    Ok(payload)
-}
-
+/// Per-file error context: builds the typed [`ServeError::Artifact`]
+/// values so every failure carries the path, a classified kind, and the
+/// offending layer when known.
 struct FileCtx {
     path: String,
 }
@@ -474,9 +603,53 @@ impl FileCtx {
         FileCtx { path: path.display().to_string() }
     }
 
-    fn err(&self, msg: String) -> anyhow::Error {
-        anyhow::anyhow!("artifact {}: {msg}", self.path)
+    fn err(&self, kind: ArtifactErrorKind, layer: Option<String>, detail: String) -> ServeError {
+        ServeError::Artifact { path: self.path.clone(), layer, kind, detail }
     }
+
+    /// Wrap a structural decode failure with the layer index/name context.
+    fn malformed(&self, idx: usize, n: usize, payload: &[u8], e: anyhow::Error) -> ServeError {
+        self.err(
+            ArtifactErrorKind::Malformed,
+            peek_name(payload),
+            format!("layer {idx}/{n}: {e}"),
+        )
+    }
+}
+
+/// Read one CRC-framed record: length, payload, checksum. Every failure
+/// names the layer index (and, on a checksum mismatch, the best-effort
+/// layer name) with a classified kind.
+fn read_record<'a>(
+    rd: &mut Rd<'a>,
+    ctx: &FileCtx,
+    idx: usize,
+    n_layers: usize,
+) -> Result<&'a [u8], ServeError> {
+    let trunc = |e: anyhow::Error, stage: &str| {
+        ctx.err(
+            ArtifactErrorKind::Truncated,
+            None,
+            format!("layer {idx}/{n_layers}: {e} — file truncated {stage}"),
+        )
+    };
+    let len = rd.u64("payload length").map_err(|e| trunc(e, "mid-header"))? as usize;
+    let payload = rd.bytes(len, "payload").map_err(|e| trunc(e, "mid-layer"))?;
+    let stored_crc = rd.u32("checksum").map_err(|e| trunc(e, "before checksum"))?;
+    let computed = crc32(payload);
+    if computed != stored_crc {
+        let name = peek_name(payload);
+        return Err(ctx.err(
+            ArtifactErrorKind::ChecksumMismatch,
+            name.clone(),
+            format!(
+                "layer {idx}/{n_layers} ('{}') checksum mismatch: stored {stored_crc:08x}, \
+                 computed {computed:08x} — layer bytes are corrupted",
+                name.as_deref().unwrap_or("<unreadable>")
+            ),
+        ));
+    }
+    Ok(payload)
 }
 
 /// Read and validate magic + version; returns the parsed version's magic.
@@ -484,25 +657,37 @@ fn read_header<'a>(
     rd: &mut Rd<'a>,
     ctx: &FileCtx,
     accept: &[(&'static [u8; 8], u32)],
-) -> anyhow::Result<&'static [u8; 8]> {
-    let magic = rd.bytes(8, "magic").map_err(|e| ctx.err(format!("{e}")))?;
+) -> Result<&'static [u8; 8], ServeError> {
+    let magic = rd
+        .bytes(8, "magic")
+        .map_err(|e| ctx.err(ArtifactErrorKind::Truncated, None, format!("{e}")))?;
     let found = accept.iter().find(|(m, _)| magic == &m[..]);
     let &(m, want_version) = found.ok_or_else(|| {
-        ctx.err(format!(
-            "bad magic {:02x?} (expected one of {:?} — not a matching serving artifact)",
-            magic,
-            accept
-                .iter()
-                .map(|(m, _)| String::from_utf8_lossy(&m[..]).into_owned())
-                .collect::<Vec<_>>()
-        ))
+        ctx.err(
+            ArtifactErrorKind::BadMagic,
+            None,
+            format!(
+                "bad magic {:02x?} (expected one of {:?} — not a matching serving artifact)",
+                magic,
+                accept
+                    .iter()
+                    .map(|(m, _)| String::from_utf8_lossy(&m[..]).into_owned())
+                    .collect::<Vec<_>>()
+            ),
+        )
     })?;
-    let version = rd.u32("version").map_err(|e| ctx.err(format!("{e}")))?;
+    let version = rd
+        .u32("version")
+        .map_err(|e| ctx.err(ArtifactErrorKind::Truncated, None, format!("{e}")))?;
     if version != want_version {
-        return Err(ctx.err(format!(
-            "unsupported version {version} (this build reads {want_version} for {})",
-            String::from_utf8_lossy(&m[..])
-        )));
+        return Err(ctx.err(
+            ArtifactErrorKind::BadVersion,
+            None,
+            format!(
+                "unsupported version {version} (this build reads {want_version} for {})",
+                String::from_utf8_lossy(&m[..])
+            ),
+        ));
     }
     Ok(m)
 }
@@ -510,123 +695,185 @@ fn read_header<'a>(
 fn read_layer_records<'a>(
     rd: &mut Rd<'a>,
     ctx: &FileCtx,
-) -> anyhow::Result<Vec<(usize, usize, &'a [u8])>> {
-    let n_layers = rd.u32("layer count").map_err(|e| ctx.err(format!("{e}")))? as usize;
+) -> Result<Vec<(usize, usize, &'a [u8])>, ServeError> {
+    let n_layers = rd
+        .u32("layer count")
+        .map_err(|e| ctx.err(ArtifactErrorKind::Truncated, None, format!("{e}")))?;
+    let n_layers = n_layers as usize;
     // Untrusted count: cap the reservation by what the remaining bytes could
     // possibly hold (≥ 12 bytes per record: length + checksum), so a corrupt
     // header cannot trigger a huge allocation before validation runs.
     let mut records = Vec::with_capacity(n_layers.min(rd.remaining() / 12));
     for idx in 0..n_layers {
-        let lctx = |msg: String| ctx.err(format!("layer {idx}/{n_layers}: {msg}"));
-        records.push((idx, n_layers, read_record(rd, &lctx)?));
+        records.push((idx, n_layers, read_record(rd, ctx, idx, n_layers)?));
     }
-    anyhow::ensure!(
-        rd.remaining() == 0,
-        "artifact {}: {} trailing bytes after the last layer",
-        ctx.path,
-        rd.remaining()
-    );
+    if rd.remaining() != 0 {
+        return Err(ctx.err(
+            ArtifactErrorKind::Malformed,
+            None,
+            format!("{} trailing bytes after the last layer", rd.remaining()),
+        ));
+    }
     Ok(records)
 }
 
-fn ensure_unique(names: &[String], ctx: &FileCtx) -> anyhow::Result<()> {
+fn ensure_unique(names: &[String], ctx: &FileCtx) -> Result<(), ServeError> {
     for (i, n) in names.iter().enumerate() {
         if let Some(prev) = names[..i].iter().position(|p| p == n) {
-            return Err(ctx.err(format!(
-                "layer {i}/{}: duplicate layer name '{n}' (also layer {prev}) — \
-                 name-addressed serving would route requests ambiguously",
-                names.len()
-            )));
+            return Err(ctx.err(
+                ArtifactErrorKind::Malformed,
+                Some(n.clone()),
+                format!(
+                    "layer {i}/{}: duplicate layer name '{n}' (also layer {prev}) — \
+                     name-addressed serving would route requests ambiguously",
+                    names.len()
+                ),
+            ));
         }
     }
     Ok(())
 }
 
-/// Load a v2 BASE artifact. v1 files are refused with a pointer to the
-/// compat loader (they carry adapters this function would silently drop).
-pub fn load_base_artifact(path: &Path) -> anyhow::Result<PackedModel> {
-    let bytes = std::fs::read(path)
-        .map_err(|e| anyhow::anyhow!("cannot read artifact {}: {e}", path.display()))?;
-    let ctx = FileCtx::new(path);
-    let mut rd = Rd::new(&bytes);
-    if bytes.len() >= 8 && &bytes[..8] == MAGIC_V1 {
-        return Err(ctx.err(
-            "this is a v1 (CLOQPKD1) single-tenant artifact with embedded adapters; \
-             load it with load_artifact_compat, which converts it to base + one \
-             adapter set"
-                .to_string(),
-        ));
-    }
-    let _ = read_header(&mut rd, &ctx, &[(MAGIC_BASE, VERSION_BASE)])?;
-    let mut layers = Vec::new();
-    for (idx, n_layers, payload) in read_layer_records(&mut rd, &ctx)? {
-        let layer = decode_layer_base(payload)
-            .map_err(|e| ctx.err(format!("layer {idx}/{n_layers}: {e}")))?;
-        layers.push(layer);
-    }
-    let names: Vec<String> = layers.iter().map(|l| l.name.clone()).collect();
-    ensure_unique(&names, &ctx)?;
-    Ok(PackedModel { layers })
+fn read_file(path: &Path) -> Result<Vec<u8>, ServeError> {
+    std::fs::read(path).map_err(|e| io_err(path, "cannot read", e))
 }
 
-/// Load one adapter artifact (`CLOQADP1`).
-pub fn load_adapter_artifact(path: &Path) -> anyhow::Result<AdapterSet> {
-    let bytes = std::fs::read(path)
-        .map_err(|e| anyhow::anyhow!("cannot read artifact {}: {e}", path.display()))?;
+/// Autodetecting open: the magic bytes decide which decoder runs.
+fn open_at(path: &Path) -> Result<Artifact, ServeError> {
+    let bytes = read_file(path)?;
     let ctx = FileCtx::new(path);
     let mut rd = Rd::new(&bytes);
-    let _ = read_header(&mut rd, &ctx, &[(MAGIC_ADAPTER, VERSION_ADAPTER)])?;
-    let id = rd.str("adapter id").map_err(|e| ctx.err(format!("{e}")))?;
-    let mut set = AdapterSet::new(&id);
-    for (idx, n_layers, payload) in read_layer_records(&mut rd, &ctx)? {
-        let (name, pair) = decode_layer_adapter(payload)
-            .map_err(|e| ctx.err(format!("layer {idx}/{n_layers}: {e}")))?;
-        set.insert(&name, pair)
-            .map_err(|e| ctx.err(format!("layer {idx}/{n_layers}: {e}")))?;
+    let magic = read_header(
+        &mut rd,
+        &ctx,
+        &[
+            (MAGIC_BASE, VERSION_BASE),
+            (MAGIC_ADAPTER, VERSION_ADAPTER),
+            (MAGIC_V1, VERSION_V1),
+        ],
+    )?;
+    if magic == MAGIC_ADAPTER {
+        let id = rd
+            .str("adapter id")
+            .map_err(|e| ctx.err(ArtifactErrorKind::Truncated, None, format!("{e}")))?;
+        let mut set = AdapterSet::new(&id);
+        for (idx, n_layers, payload) in read_layer_records(&mut rd, &ctx)? {
+            let (name, pair) = decode_layer_adapter(payload)
+                .map_err(|e| ctx.malformed(idx, n_layers, payload, e))?;
+            set.insert(&name, pair).map_err(|e| {
+                ctx.err(
+                    ArtifactErrorKind::Malformed,
+                    Some(name.clone()),
+                    format!("layer {idx}/{n_layers}: {e}"),
+                )
+            })?;
+        }
+        return Ok(Artifact::Adapter(set));
     }
-    Ok(set)
-}
-
-/// Load EITHER format a served model can start from:
-///
-/// * a v2 base artifact → `(model, None)` — adapters arrive separately via
-///   [`load_adapter_artifact`];
-/// * a legacy v1 artifact → `(model, Some(set))` — the embedded per-layer
-///   adapters are split out into one [`AdapterSet`] named
-///   [`V1_ADAPTER_ID`], ready for `ServeEngine::register_adapter`. The
-///   conversion is value-exact (same f64 bits), so forwards through the
-///   converted pair are bit-identical to the v1 embedded layout.
-pub fn load_artifact_compat(path: &Path) -> anyhow::Result<(PackedModel, Option<AdapterSet>)> {
-    let bytes = std::fs::read(path)
-        .map_err(|e| anyhow::anyhow!("cannot read artifact {}: {e}", path.display()))?;
-    let ctx = FileCtx::new(path);
-    let mut rd = Rd::new(&bytes);
-    let magic =
-        read_header(&mut rd, &ctx, &[(MAGIC_BASE, VERSION_BASE), (MAGIC_V1, VERSION_V1)])?;
     let v1 = magic == MAGIC_V1;
     let mut layers = Vec::new();
     let mut pairs = Vec::new();
     for (idx, n_layers, payload) in read_layer_records(&mut rd, &ctx)? {
-        let lerr = |e: anyhow::Error| ctx.err(format!("layer {idx}/{n_layers}: {e}"));
         if v1 {
-            let (layer, pair) = decode_layer_v1(payload).map_err(lerr)?;
+            let (layer, pair) = decode_layer_v1(payload)
+                .map_err(|e| ctx.malformed(idx, n_layers, payload, e))?;
             pairs.push((layer.name.clone(), pair));
             layers.push(layer);
         } else {
-            layers.push(decode_layer_base(payload).map_err(lerr)?);
+            let layer = decode_layer_base(payload)
+                .map_err(|e| ctx.malformed(idx, n_layers, payload, e))?;
+            layers.push(layer);
         }
     }
     let names: Vec<String> = layers.iter().map(|l| l.name.clone()).collect();
     ensure_unique(&names, &ctx)?;
-    let set = if v1 {
-        Some(
-            AdapterSet::from_pairs(V1_ADAPTER_ID, pairs)
-                .map_err(|e| ctx.err(format!("{e}")))?,
-        )
+    let model = PackedModel { layers };
+    if v1 {
+        let adapters = AdapterSet::from_pairs(V1_ADAPTER_ID, pairs)
+            .map_err(|e| ctx.err(ArtifactErrorKind::Malformed, None, format!("{e}")))?;
+        Ok(Artifact::LegacyV1 { model, adapters })
     } else {
-        None
-    };
-    Ok((PackedModel { layers }, set))
+        Ok(Artifact::Base(model))
+    }
+}
+
+fn load_base_at(path: &Path) -> Result<PackedModel, ServeError> {
+    match open_at(path)? {
+        Artifact::Base(model) => Ok(model),
+        Artifact::LegacyV1 { .. } => Err(ServeError::Unsupported {
+            detail: format!(
+                "artifact {}: this is a legacy v1 (CLOQPKD1) single-tenant artifact with \
+                 embedded adapters; open() it and match Artifact::LegacyV1 so the \
+                 adapters are not dropped",
+                path.display()
+            ),
+        }),
+        Artifact::Adapter(_) => Err(ServeError::Unsupported {
+            detail: format!(
+                "artifact {}: this is an adapter artifact, not a packed base",
+                path.display()
+            ),
+        }),
+    }
+}
+
+// ---- deprecated free-function shims over the store internals ----
+
+/// Deprecated free-function shim; see [`ArtifactStore::save_base`].
+#[deprecated(note = "use ArtifactStore::save_base (the unified artifact store)")]
+pub fn save_base_artifact(model: &PackedModel, path: &Path) -> anyhow::Result<()> {
+    Ok(save_base_at(model, path)?)
+}
+
+/// Deprecated free-function shim; see [`ArtifactStore::save_adapter`].
+#[deprecated(note = "use ArtifactStore::save_adapter (the unified artifact store)")]
+pub fn save_adapter_artifact(set: &AdapterSet, path: &Path) -> anyhow::Result<()> {
+    Ok(save_adapter_at(set, path)?)
+}
+
+/// Deprecated free-function shim; see [`ArtifactStore::save_legacy_v1`].
+#[deprecated(note = "use ArtifactStore::save_legacy_v1 (the unified artifact store)")]
+pub fn save_artifact_v1(
+    model: &PackedModel,
+    set: &AdapterSet,
+    path: &Path,
+) -> anyhow::Result<()> {
+    Ok(save_v1_at(model, set, path)?)
+}
+
+/// Deprecated free-function shim; see [`ArtifactStore::load_base`] /
+/// [`ArtifactStore::open`].
+#[deprecated(note = "use ArtifactStore::load_base or ArtifactStore::open")]
+pub fn load_base_artifact(path: &Path) -> anyhow::Result<PackedModel> {
+    Ok(load_base_at(path)?)
+}
+
+/// Deprecated free-function shim; see [`ArtifactStore::load_adapter`] /
+/// [`ArtifactStore::open`].
+#[deprecated(note = "use ArtifactStore::load_adapter or ArtifactStore::open")]
+pub fn load_adapter_artifact(path: &Path) -> anyhow::Result<AdapterSet> {
+    match open_at(path)? {
+        Artifact::Adapter(set) => Ok(set),
+        other => Err(anyhow::anyhow!(
+            "artifact {}: expected an adapter artifact, found a {} artifact",
+            path.display(),
+            other.kind_name()
+        )),
+    }
+}
+
+/// Deprecated free-function shim; [`ArtifactStore::open`] replaces the
+/// compat entry point (match [`Artifact::LegacyV1`] for v1 files).
+#[deprecated(note = "use ArtifactStore::open and match the Artifact variant")]
+pub fn load_artifact_compat(path: &Path) -> anyhow::Result<(PackedModel, Option<AdapterSet>)> {
+    match open_at(path)? {
+        Artifact::Base(model) => Ok((model, None)),
+        Artifact::LegacyV1 { model, adapters } => Ok((model, Some(adapters))),
+        Artifact::Adapter(_) => Err(anyhow::anyhow!(
+            "artifact {}: this is an adapter artifact, not a packed model",
+            path.display()
+        )),
+    }
 }
 
 #[cfg(test)]
@@ -642,8 +889,10 @@ mod tests {
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
     }
 
-    fn tmp(tag: &str) -> std::path::PathBuf {
-        std::env::temp_dir().join(format!("cloq_serve_{tag}_{}", std::process::id()))
+    fn store(tag: &str) -> ArtifactStore {
+        ArtifactStore::at(
+            std::env::temp_dir().join(format!("cloq_serve_{tag}_{}", std::process::id())),
+        )
     }
 
     fn small_model(seed: u64) -> (PackedModel, AdapterSet) {
@@ -672,11 +921,10 @@ mod tests {
 
     #[test]
     fn base_roundtrip_preserves_forward_bits() {
-        let dir = tmp("rt");
+        let st = store("rt");
         let (model, _) = small_model(300);
-        let path = dir.join("model.cloqpkd2");
-        save_base_artifact(&model, &path).unwrap();
-        let loaded = load_base_artifact(&path).unwrap();
+        st.save_base(&model, "model.cloqpkd2").unwrap();
+        let loaded = st.load_base("model.cloqpkd2").unwrap();
         let mut rng = Rng::new(301);
         for (a, b) in model.layers.iter().zip(&loaded.layers) {
             assert_eq!(a.name, b.name);
@@ -687,80 +935,121 @@ mod tests {
                 assert_eq!(u.to_bits(), v.to_bits(), "layer {}", a.name);
             }
         }
-        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(st.dir()).ok();
     }
 
     #[test]
-    fn adapter_roundtrip_is_exact() {
-        let dir = tmp("adp");
-        let (_, set) = small_model(305);
-        let path = dir.join("tenant.cloqadp");
-        save_adapter_artifact(&set, &path).unwrap();
-        let loaded = load_adapter_artifact(&path).unwrap();
-        assert_eq!(loaded.id(), "tenant");
-        assert_eq!(loaded.len(), set.len());
-        for (name, pair) in set.entries() {
-            let got = loaded.get(name).unwrap();
-            assert!(
-                pair.a.data.iter().map(|v| v.to_bits()).eq(got.a.data.iter().map(|v| v.to_bits())),
-                "{name}: A"
-            );
-            assert!(
-                pair.b.data.iter().map(|v| v.to_bits()).eq(got.b.data.iter().map(|v| v.to_bits())),
-                "{name}: B"
-            );
+    fn open_autodetects_all_three_formats() {
+        let st = store("auto");
+        let (model, set) = small_model(305);
+        st.save_base(&model, "base.bin").unwrap();
+        st.save_adapter(&set, "adp.bin").unwrap();
+        st.save_legacy_v1(&model, &set, "legacy.bin").unwrap();
+        assert!(matches!(st.open("base.bin").unwrap(), Artifact::Base(_)));
+        match st.open("adp.bin").unwrap() {
+            Artifact::Adapter(s) => assert_eq!(s.id(), "tenant"),
+            other => panic!("expected an adapter artifact, got {}", other.kind_name()),
         }
-        std::fs::remove_dir_all(&dir).ok();
+        match st.open("legacy.bin").unwrap() {
+            Artifact::LegacyV1 { model: m, adapters } => {
+                assert_eq!(m.layers.len(), model.layers.len());
+                assert_eq!(adapters.id(), V1_ADAPTER_ID);
+            }
+            other => panic!("expected a legacy artifact, got {}", other.kind_name()),
+        }
+        // The typed accessors refuse cross-format reads with a pointer.
+        let err = st.load_base("legacy.bin").unwrap_err();
+        assert!(matches!(err, ServeError::Unsupported { .. }), "{err:?}");
+        assert!(format!("{err}").contains("LegacyV1"), "{err}");
+        let err = st.load_adapter("base.bin").unwrap_err();
+        assert!(format!("{err}").contains("found a base artifact"), "{err}");
+        std::fs::remove_dir_all(st.dir()).ok();
     }
 
     #[test]
-    fn corruption_names_the_layer() {
-        let dir = tmp("bad");
+    fn corruption_names_the_layer_with_a_typed_kind() {
+        let st = store("bad");
         let (model, _) = small_model(302);
-        let path = dir.join("model.cloqpkd2");
-        save_base_artifact(&model, &path).unwrap();
+        let path = st.save_base(&model, "model.cloqpkd2").unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         // Flip one bit deep inside the SECOND layer's payload.
         let n = bytes.len();
         bytes[n - 40] ^= 0x10;
-        let bad = dir.join("flipped.cloqpkd2");
-        std::fs::write(&bad, &bytes).unwrap();
-        let msg = format!("{}", load_base_artifact(&bad).unwrap_err());
+        std::fs::write(st.path("flipped.cloqpkd2"), &bytes).unwrap();
+        let err = st.open("flipped.cloqpkd2").unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                ServeError::Artifact {
+                    kind: ArtifactErrorKind::ChecksumMismatch,
+                    layer: Some(l),
+                    ..
+                } if l == "blk0.wo"
+            ),
+            "{err:?}"
+        );
+        let msg = format!("{err}");
         assert!(msg.contains("layer 1/2"), "{msg}");
         assert!(msg.contains("checksum mismatch"), "{msg}");
-        assert!(msg.contains("blk0.wo"), "error should name the layer: {msg}");
-        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(st.dir()).ok();
     }
 
     #[test]
-    fn bad_magic_and_version_rejected() {
-        let dir = tmp("magic");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("junk.bin");
-        std::fs::write(&p, b"NOTCLOQ!rest").unwrap();
-        let msg = format!("{}", load_base_artifact(&p).unwrap_err());
-        assert!(msg.contains("bad magic"), "{msg}");
+    fn bad_magic_and_version_rejected_with_typed_kinds() {
+        let st = store("magic");
+        std::fs::create_dir_all(st.dir()).unwrap();
+        std::fs::write(st.path("junk.bin"), b"NOTCLOQ!rest").unwrap();
+        let err = st.open("junk.bin").unwrap_err();
+        assert!(
+            matches!(&err, ServeError::Artifact { kind: ArtifactErrorKind::BadMagic, .. }),
+            "{err:?}"
+        );
 
         let (model, _) = small_model(303);
-        let good = dir.join("good.cloqpkd2");
-        save_base_artifact(&model, &good).unwrap();
+        let good = st.save_base(&model, "good.cloqpkd2").unwrap();
         let mut bytes = std::fs::read(&good).unwrap();
         bytes[8] = 99; // version field
-        let vbad = dir.join("vbad.cloqpkd2");
-        std::fs::write(&vbad, &bytes).unwrap();
-        let msg = format!("{}", load_base_artifact(&vbad).unwrap_err());
-        assert!(msg.contains("unsupported version 99"), "{msg}");
-        std::fs::remove_dir_all(&dir).ok();
+        std::fs::write(st.path("vbad.cloqpkd2"), &bytes).unwrap();
+        let err = st.open("vbad.cloqpkd2").unwrap_err();
+        assert!(
+            matches!(&err, ServeError::Artifact { kind: ArtifactErrorKind::BadVersion, .. }),
+            "{err:?}"
+        );
+        assert!(format!("{err}").contains("unsupported version 99"), "{err}");
+        std::fs::remove_dir_all(st.dir()).ok();
     }
 
     #[test]
-    fn v1_files_are_refused_by_the_base_loader_with_a_pointer() {
-        let dir = tmp("v1ptr");
+    fn missing_file_is_an_io_kind() {
+        let st = store("io");
+        let err = st.open("never-written.bin").unwrap_err();
+        assert!(
+            matches!(&err, ServeError::Artifact { kind: ArtifactErrorKind::Io, .. }),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_roundtrip() {
+        // The free functions stay as working shims for one deprecation
+        // cycle; they share the store's internals byte-for-byte.
+        let dir = std::env::temp_dir().join(format!("cloq_serve_shim_{}", std::process::id()));
         let (model, set) = small_model(304);
-        let path = dir.join("legacy.cloqpkd");
-        save_artifact_v1(&model, &set, &path).unwrap();
-        let msg = format!("{}", load_base_artifact(&path).unwrap_err());
-        assert!(msg.contains("load_artifact_compat"), "{msg}");
+        let bpath = dir.join("base.cloqpkd2");
+        let vpath = dir.join("legacy.cloqpkd");
+        save_base_artifact(&model, &bpath).unwrap();
+        save_adapter_artifact(&set, &dir.join("a.cloqadp")).unwrap();
+        save_artifact_v1(&model, &set, &vpath).unwrap();
+        let loaded = load_base_artifact(&bpath).unwrap();
+        assert_eq!(loaded.layers.len(), model.layers.len());
+        let aset = load_adapter_artifact(&dir.join("a.cloqadp")).unwrap();
+        assert_eq!(aset.id(), "tenant");
+        let (v1m, v1s) = load_artifact_compat(&vpath).unwrap();
+        assert_eq!(v1m.layers.len(), model.layers.len());
+        assert_eq!(v1s.unwrap().id(), V1_ADAPTER_ID);
+        let msg = format!("{}", load_base_artifact(&vpath).unwrap_err());
+        assert!(msg.contains("LegacyV1"), "{msg}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,6 +1,7 @@
 //! The serving front-end: admits concurrent forward requests (each naming
-//! a layer and, optionally, an adapter), coalesces them into per-layer
-//! micro-batches, and executes the batches on a persistent [`WorkerPool`].
+//! an interned layer and, optionally, an interned adapter), coalesces them
+//! into per-layer micro-batches, and executes the batches on a persistent
+//! [`WorkerPool`].
 //!
 //! Shape of the pipeline:
 //!
@@ -10,6 +11,19 @@
 //!        ▲                               same-layer hops)     kernel)
 //!        └──────────── hop re-entry ←──────────────────────────┘
 //! ```
+//!
+//! **The typed façade**: callers resolve names ONCE — `engine.layer("wq")`
+//! → [`LayerId`], `engine.adapter("tenant-a")` → [`AdapterId`],
+//! `engine.route(&[...])` → [`Route`] — and submit by handle. Admission
+//! therefore does no string hashing and no string cloning; a hop carries
+//! one `u32` layer index and one pinned adapter handle whose per-layer
+//! lookup is an array index (resolved at registration,
+//! `serve::adapters`). The name-resolving convenience path
+//! ([`ServeEngine::submit_named`]) still exists for one-off calls and is
+//! the "legacy stringly admission" baseline `benches/bench_serve.rs`
+//! measures the typed path against. Every failure is a typed
+//! [`ServeError`]; [`Ticket::wait`] returns `Result<Response, ServeError>`
+//! so callers dispatch with `matches!`, not string search.
 //!
 //! The batcher scans the FIFO head's layer and pulls every queued request
 //! for that layer (up to `max_batch`), preserving the relative order of
@@ -48,12 +62,14 @@
 //! **Backpressure counts hops, not FIFO entries**: every admitted request
 //! — single-layer or whole-model — holds exactly one *live hop slot* from
 //! admission until its reply, whether that hop is queued or riding a
-//! kernel. Admission rejects at `max_pending` live slots, so a flood of
-//! model requests cannot hide from the limit by being mid-kernel when the
-//! FIFO is sampled. **Shutdown drains by the same accounting**: the
-//! batcher exits only when admissions are closed *and* the last live slot
-//! is released, so every admitted traversal finishes every remaining hop
-//! (re-entering as needed) before the engine stops.
+//! kernel. Admission rejects at `max_pending` live slots
+//! ([`ServeError::Overloaded`]), so a flood of model requests cannot hide
+//! from the limit by being mid-kernel when the FIFO is sampled.
+//! **Shutdown drains by the same accounting**: [`ServeEngine::close`]
+//! stops admissions (subsequent submits fail with
+//! [`ServeError::ShuttingDown`]) while the batcher keeps draining;
+//! [`ServeEngine::shutdown`] closes, then joins once the last live slot is
+//! released, so every admitted traversal finishes every remaining hop.
 //!
 //! Every [`Response`] reports its queue wait, its micro-batch's kernel
 //! time, the batch size and the adapter group count; [`EngineStats`]
@@ -66,55 +82,150 @@ use std::time::Instant;
 
 use crate::linalg::Matrix;
 use crate::lowrank::LoraPair;
-use crate::serve::adapters::{AdapterHandle, AdapterRegistry, AdapterSet, RegisterOutcome};
+use crate::serve::adapters::{
+    AdapterHandle, AdapterId, AdapterRegistry, AdapterSet, RegisterOutcome,
+};
+use crate::serve::error::ServeError;
 use crate::serve::forward::{
     HopOutcome, ModelRequest, ModelResponse, ModelTicket, SessionRequest, StepFn, Traversal,
 };
-use crate::serve::packed::PackedModel;
+use crate::serve::packed::{LayerId, PackedModel, Route};
 use crate::util::threadpool::WorkerPool;
 
-#[derive(Clone, Copy, Debug)]
-pub struct EngineConfig {
-    /// Kernel workers executing micro-batches.
-    pub workers: usize,
-    /// Coalescing cap: at most this many requests per micro-batch.
-    pub max_batch: usize,
-    /// Admission backpressure: the cap on LIVE HOP SLOTS — requests
-    /// admitted but not yet answered, whether queued in the FIFO or
-    /// riding a kernel (a multi-hop model request holds one slot for its
-    /// whole traversal). Arrivals beyond it are rejected with an
-    /// "overloaded" error instead of growing the queue (and its buffered
-    /// activations) without bound.
-    pub max_pending: usize,
-    /// Byte budget for the adapter registry's LRU cache (pinned adapters
-    /// are exempt — see `AdapterRegistry::new`).
-    pub adapter_budget_bytes: usize,
+/// Staged configuration for a [`ServeEngine`], validated at
+/// [`ServeEngineBuilder::build`]. Obtain one from
+/// [`ServeEngine::builder`]; every knob has a production-sane default.
+///
+/// ```ignore
+/// let engine = ServeEngine::builder(model)
+///     .workers(4)
+///     .max_batch(32)
+///     .max_pending(8192)
+///     .adapter_budget(512 << 20)
+///     .build()?;
+/// ```
+#[derive(Debug)]
+pub struct ServeEngineBuilder {
+    model: PackedModel,
+    workers: usize,
+    max_batch: usize,
+    max_pending: usize,
+    adapter_budget_bytes: usize,
 }
 
-impl Default for EngineConfig {
-    fn default() -> Self {
-        Self { workers: 2, max_batch: 16, max_pending: 4096, adapter_budget_bytes: usize::MAX }
+impl ServeEngineBuilder {
+    /// Kernel workers executing micro-batches (default 2).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
+
+    /// Coalescing cap: at most this many requests per micro-batch
+    /// (default 16).
+    pub fn max_batch(mut self, n: usize) -> Self {
+        self.max_batch = n;
+        self
+    }
+
+    /// Admission backpressure (default 4096): the cap on LIVE HOP SLOTS —
+    /// requests admitted but not yet answered, whether queued in the FIFO
+    /// or riding a kernel (a multi-hop model request holds one slot for
+    /// its whole traversal). Arrivals beyond it are rejected with
+    /// [`ServeError::Overloaded`] instead of growing the queue (and its
+    /// buffered activations) without bound.
+    pub fn max_pending(mut self, n: usize) -> Self {
+        self.max_pending = n;
+        self
+    }
+
+    /// Byte budget for the adapter registry's LRU cache (default
+    /// unbounded; pinned adapters are exempt — see
+    /// [`AdapterRegistry::new`]).
+    pub fn adapter_budget(mut self, bytes: usize) -> Self {
+        self.adapter_budget_bytes = bytes;
+        self
+    }
+
+    /// Validate the configuration and start the engine (batcher thread +
+    /// worker pool). Zero-valued knobs and duplicate layer names are
+    /// [`ServeError::InvalidConfig`] — reported here, once, instead of
+    /// panicking mid-request.
+    pub fn build(self) -> Result<ServeEngine, ServeError> {
+        fn at_least_one(what: &str, v: usize) -> Result<(), ServeError> {
+            if v == 0 {
+                return Err(ServeError::InvalidConfig {
+                    detail: format!("engine config: {what} must be at least 1 (got 0)"),
+                });
+            }
+            Ok(())
+        }
+        at_least_one("workers", self.workers)?;
+        at_least_one("max_batch", self.max_batch)?;
+        at_least_one("max_pending", self.max_pending)?;
+        at_least_one("adapter_budget", self.adapter_budget_bytes)?;
+        if self.model.layers.is_empty() {
+            return Err(ServeError::InvalidConfig {
+                detail: "engine config: the served model has no layers".to_string(),
+            });
+        }
+        let mut index = std::collections::HashMap::with_capacity(self.model.layers.len());
+        for (i, l) in self.model.layers.iter().enumerate() {
+            // Unique names are a serving invariant (the artifact loaders
+            // enforce it on untrusted bytes; this guards hand-built
+            // models) — with duplicates, name-addressed resolution would
+            // be ambiguous.
+            if index.insert(l.name.clone(), i).is_some() {
+                return Err(ServeError::InvalidConfig {
+                    detail: format!("engine config: duplicate layer name '{}'", l.name),
+                });
+            }
+        }
+        let model = Arc::new(self.model);
+        let shared = Arc::new(Shared {
+            model: Arc::clone(&model),
+            index,
+            registry: Arc::new(AdapterRegistry::new(model, self.adapter_budget_bytes)),
+            max_batch: self.max_batch,
+            max_pending: self.max_pending,
+            workers: self.workers,
+            state: Mutex::new(QueueState {
+                pending: VecDeque::new(),
+                open: true,
+                in_flight: 0,
+                live: 0,
+            }),
+            cv: Condvar::new(),
+            stats: Mutex::new(EngineStats::default()),
+            pool: Arc::new(WorkerPool::new(self.workers)),
+        });
+        let batcher = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || batcher_loop(shared))
+        };
+        Ok(ServeEngine { shared, batcher: Some(batcher) })
     }
 }
 
-/// One forward request: which layer, which adapter (None = base only), and
-/// the input activation.
+/// One forward request for [`ServeEngine::submit_all`]: which layer, which
+/// adapter (`None` = base only), and the input activation. Layer and
+/// adapter are interned handles — building a `Request` allocates nothing
+/// beyond its activation.
 #[derive(Clone, Debug)]
 pub struct Request {
-    pub layer: String,
-    pub adapter: Option<String>,
+    pub layer: LayerId,
+    pub adapter: Option<AdapterId>,
     pub x: Vec<f64>,
 }
 
 impl Request {
     /// Base-only request (no adapter delta).
-    pub fn base(layer: &str, x: Vec<f64>) -> Request {
-        Request { layer: layer.to_string(), adapter: None, x }
+    pub fn base(layer: LayerId, x: Vec<f64>) -> Request {
+        Request { layer, adapter: None, x }
     }
 
-    /// Request routed through the named adapter.
-    pub fn with_adapter(layer: &str, adapter: &str, x: Vec<f64>) -> Request {
-        Request { layer: layer.to_string(), adapter: Some(adapter.to_string()), x }
+    /// Request routed through the interned adapter.
+    pub fn with_adapter(layer: LayerId, adapter: AdapterId, x: Vec<f64>) -> Request {
+        Request { layer, adapter: Some(adapter), x }
     }
 }
 
@@ -164,9 +275,10 @@ pub struct EngineStats {
     pub rejected: usize,
     /// Micro-batches whose kernel panicked (the workers survive).
     pub batch_panics: usize,
-    /// SINGLE-LAYER riders of panicked batches; each resolved with an
-    /// `Err` naming the layer. Traversal riders of the same batch count
-    /// in `failed_model_requests` instead, keeping the counters disjoint.
+    /// SINGLE-LAYER riders of panicked batches; each resolved with a
+    /// [`ServeError::WorkerPanic`] naming the layer. Traversal riders of
+    /// the same batch count in `failed_model_requests` instead, keeping
+    /// the counters disjoint.
     pub failed: usize,
     /// Model/session requests answered with an error (kernel panic on one
     /// of their hops, step-fn panic, or misshapen step output).
@@ -195,31 +307,31 @@ impl EngineStats {
     }
 }
 
-/// Handle to a submitted request; resolves to its [`Response`].
+/// Handle to a submitted request; resolves to its [`Response`] or a typed
+/// [`ServeError`].
 pub struct Ticket {
-    rx: mpsc::Receiver<anyhow::Result<Response>>,
+    rx: mpsc::Receiver<Result<Response, ServeError>>,
 }
 
 impl Ticket {
-    /// Block until the engine answers (or report that it shut down first).
-    pub fn wait(self) -> anyhow::Result<Response> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("serve engine dropped before answering"))?
+    /// Block until the engine answers. An engine that dropped before
+    /// answering reports [`ServeError::ShuttingDown`].
+    pub fn wait(self) -> Result<Response, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
     }
 }
 
 /// How a hop replies when its work is done.
 enum HopKind {
     /// Single-layer request: reply with a [`Response`] after this hop.
-    Single { tx: mpsc::Sender<anyhow::Result<Response>> },
+    Single { tx: mpsc::Sender<Result<Response, ServeError>> },
     /// Model/session traversal: consult [`Traversal::absorb_hop`] — it
     /// either re-enters the FIFO or replies with a [`ModelResponse`].
     Traversal(Box<Traversal>),
 }
 
 struct Pending {
-    layer: usize,
+    layer: LayerId,
     /// Pinned at admission; the pin lives until the response is sent —
     /// across EVERY hop of a traversal — so eviction/unregister can never
     /// pull the weights out from under a queued or in-flight request, and
@@ -245,8 +357,9 @@ struct QueueState {
 
 struct Shared {
     model: Arc<PackedModel>,
-    /// Name → layer index, built once so admission is O(1) instead of a
-    /// per-request linear scan over layer names.
+    /// Name → layer index, built once so `ServeEngine::layer` /
+    /// `submit_named` resolve in O(1); the typed submit path never touches
+    /// it.
     index: std::collections::HashMap<String, usize>,
     registry: Arc<AdapterRegistry>,
     max_batch: usize,
@@ -260,50 +373,66 @@ struct Shared {
 
 /// The serving engine: adapter-multiplexed batching front-end over ONE
 /// packed base [`PackedModel`] and many registered [`AdapterSet`]s, with
-/// single-layer, full-model, and session request shapes.
+/// single-layer, full-model, and session request shapes. Construct via
+/// [`ServeEngine::builder`].
 pub struct ServeEngine {
     shared: Arc<Shared>,
     batcher: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServeEngine {
-    pub fn new(model: PackedModel, cfg: EngineConfig) -> ServeEngine {
-        let mut index = std::collections::HashMap::with_capacity(model.layers.len());
-        for (i, l) in model.layers.iter().enumerate() {
-            // Unique names are a serving invariant (the artifact loaders
-            // enforce it on untrusted bytes; this guards hand-built models)
-            // — with duplicates, name-addressed requests would be ambiguous.
-            let prev = index.insert(l.name.clone(), i);
-            assert!(prev.is_none(), "ServeEngine: duplicate layer name '{}'", l.name);
+    /// Stage a new engine over `model` with default knobs; see
+    /// [`ServeEngineBuilder`] for the dials and their validation.
+    pub fn builder(model: PackedModel) -> ServeEngineBuilder {
+        ServeEngineBuilder {
+            model,
+            workers: 2,
+            max_batch: 16,
+            max_pending: 4096,
+            adapter_budget_bytes: usize::MAX,
         }
-        let shared = Arc::new(Shared {
-            model: Arc::new(model),
-            index,
-            registry: Arc::new(AdapterRegistry::new(cfg.adapter_budget_bytes)),
-            max_batch: cfg.max_batch.max(1),
-            max_pending: cfg.max_pending.max(1),
-            workers: cfg.workers.max(1),
-            state: Mutex::new(QueueState {
-                pending: VecDeque::new(),
-                open: true,
-                in_flight: 0,
-                live: 0,
-            }),
-            cv: Condvar::new(),
-            stats: Mutex::new(EngineStats::default()),
-            pool: Arc::new(WorkerPool::new(cfg.workers)),
-        });
-        let batcher = {
-            let shared = Arc::clone(&shared);
-            std::thread::spawn(move || batcher_loop(shared))
-        };
-        ServeEngine { shared, batcher: Some(batcher) }
+    }
+
+    /// The served model (shapes, names, layer order).
+    pub fn model(&self) -> &PackedModel {
+        &self.shared.model
+    }
+
+    /// Intern a layer name: resolve once, submit by [`LayerId`] forever.
+    pub fn layer(&self, name: &str) -> Result<LayerId, ServeError> {
+        self.shared
+            .index
+            .get(name)
+            .map(|&i| LayerId::new(i))
+            .ok_or_else(|| ServeError::UnknownLayer { layer: name.to_string() })
+    }
+
+    /// Resolve and validate an ordered forward route of layer names into a
+    /// reusable [`Route`] (chainability checked here, once — see
+    /// [`PackedModel::validate_route`]).
+    pub fn route<S: AsRef<str>>(&self, names: &[S]) -> Result<Route, ServeError> {
+        let mut ids = Vec::with_capacity(names.len());
+        for name in names {
+            ids.push(self.layer(name.as_ref())?);
+        }
+        self.shared.model.validate_route(&ids)?;
+        Ok(Route::from_validated(ids))
+    }
+
+    /// Intern a registered adapter's id: resolve once, submit by
+    /// [`AdapterId`] forever. The handle stays stable across hot-swaps
+    /// (and even unregister/re-register of the same id).
+    pub fn adapter(&self, id: &str) -> Result<AdapterId, ServeError> {
+        self.shared
+            .registry
+            .resolve(id)
+            .ok_or_else(|| ServeError::UnknownAdapter { adapter: id.to_string() })
     }
 
     /// Validate `set` against the served model's shapes and register it
-    /// (hot-swapping any same-id predecessor; see the registry docs).
-    pub fn register_adapter(&self, set: AdapterSet) -> anyhow::Result<RegisterOutcome> {
-        set.check_against(&self.shared.model)?;
+    /// (hot-swapping any same-id predecessor; see the registry docs). The
+    /// outcome carries the interned [`AdapterId`] for typed submission.
+    pub fn register_adapter(&self, set: AdapterSet) -> Result<RegisterOutcome, ServeError> {
         self.shared.registry.register(set)
     }
 
@@ -320,21 +449,22 @@ impl ServeEngine {
     /// every remaining hop of model requests on the adapter. New
     /// submissions naming the id are rejected from the moment this is
     /// called.
-    pub fn unregister_adapter(&self, id: &str) -> anyhow::Result<()> {
+    pub fn unregister_adapter(&self, id: &str) -> Result<(), ServeError> {
         self.shared.registry.unregister(id)
     }
 
     /// The adapter registry (checkout/stats access for diagnostics and
-    /// tests; registration should go through [`ServeEngine::register_adapter`]
-    /// so shapes are validated against the served model).
+    /// tests). The registry is bound to the served model, so even direct
+    /// registrations through this accessor are shape-validated.
     pub fn registry(&self) -> &AdapterRegistry {
         &self.shared.registry
     }
 
-    /// Admit one forward request. Invalid requests (no such layer, wrong
-    /// input length, unknown adapter) resolve immediately with an error —
-    /// they never occupy queue space.
-    pub fn submit(&self, layer: &str, adapter: Option<&str>, x: Vec<f64>) -> Ticket {
+    /// Admit one forward request by interned handles — the hot path: no
+    /// hashing, no string clones. Invalid requests (foreign layer id,
+    /// wrong input length, unknown adapter) resolve immediately with a
+    /// typed error — they never occupy queue space.
+    pub fn submit(&self, layer: LayerId, adapter: Option<AdapterId>, x: Vec<f64>) -> Ticket {
         let (tx, rx) = mpsc::channel();
         match self.admit(layer, adapter, x, &tx) {
             Ok(p) => {
@@ -347,6 +477,29 @@ impl ServeEngine {
         Ticket { rx }
     }
 
+    /// Name-resolving convenience submit: looks the layer and adapter up
+    /// per call (one hash each), then runs the typed path. Use
+    /// [`ServeEngine::layer`] / [`ServeEngine::adapter`] +
+    /// [`ServeEngine::submit`] on hot paths — `bench_serve`'s
+    /// submission-overhead row measures the difference.
+    pub fn submit_named(&self, layer: &str, adapter: Option<&str>, x: Vec<f64>) -> Ticket {
+        let resolved = self.layer(layer).and_then(|lid| {
+            let aid = match adapter {
+                None => None,
+                Some(name) => Some(self.adapter(name)?),
+            };
+            Ok((lid, aid))
+        });
+        match resolved {
+            Ok((lid, aid)) => self.submit(lid, aid, x),
+            Err(e) => {
+                let (tx, rx) = mpsc::channel();
+                self.reject(&tx, e);
+                Ticket { rx }
+            }
+        }
+    }
+
     /// Admit one full-model forward: the input flows through every layer
     /// of `req.route` in order, each hop coalescing with whatever other
     /// traffic is at that layer. Bit-identical to the caller-driven serial
@@ -354,7 +507,7 @@ impl ServeEngine {
     /// the parity contract in `serve::forward`.
     pub fn submit_model(&self, req: ModelRequest) -> ModelTicket {
         let (tx, rx) = mpsc::channel();
-        match self.admit_traversal(&req.route, req.adapter.as_deref(), req.x, 1, None, &tx) {
+        match self.admit_traversal(&req.route, req.adapter, req.x, 1, None, &tx) {
             Ok(p) => {
                 if let Err((p, e)) = self.try_enqueue(p) {
                     self.reject_pending(p, e);
@@ -372,14 +525,8 @@ impl ServeEngine {
     /// the whole session.
     pub fn submit_session(&self, req: SessionRequest) -> ModelTicket {
         let (tx, rx) = mpsc::channel();
-        let admitted = self.admit_traversal(
-            &req.route,
-            req.adapter.as_deref(),
-            req.x0,
-            req.steps,
-            Some(req.step),
-            &tx,
-        );
+        let admitted =
+            self.admit_traversal(&req.route, req.adapter, req.x0, req.steps, Some(req.step), &tx);
         match admitted {
             Ok(p) => {
                 if let Err((p, e)) = self.try_enqueue(p) {
@@ -399,7 +546,7 @@ impl ServeEngine {
         let mut admitted = Vec::with_capacity(reqs.len());
         for req in reqs {
             let (tx, rx) = mpsc::channel();
-            match self.admit(&req.layer, req.adapter.as_deref(), req.x, &tx) {
+            match self.admit(req.layer, req.adapter, req.x, &tx) {
                 Ok(p) => admitted.push(p),
                 Err(e) => self.reject(&tx, e),
             }
@@ -420,9 +567,9 @@ impl ServeEngine {
         };
         for p in overflow {
             let e = if closed {
-                anyhow::anyhow!("engine is shutting down; request refused")
+                ServeError::ShuttingDown
             } else {
-                self.overloaded()
+                ServeError::Overloaded { max_pending: self.shared.max_pending }
             };
             self.reject_pending(p, e);
         }
@@ -430,26 +577,19 @@ impl ServeEngine {
         tickets
     }
 
-    fn overloaded(&self) -> anyhow::Error {
-        anyhow::anyhow!(
-            "engine overloaded: {} hops queued or in flight at max_pending; retry later",
-            self.shared.max_pending
-        )
-    }
-
-    fn reject(&self, tx: &mpsc::Sender<anyhow::Result<Response>>, e: anyhow::Error) {
+    fn reject(&self, tx: &mpsc::Sender<Result<Response, ServeError>>, e: ServeError) {
         self.shared.stats.lock().unwrap().rejected += 1;
         let _ = tx.send(Err(e));
     }
 
-    fn reject_model(&self, tx: &mpsc::Sender<anyhow::Result<ModelResponse>>, e: anyhow::Error) {
+    fn reject_model(&self, tx: &mpsc::Sender<Result<ModelResponse, ServeError>>, e: ServeError) {
         self.shared.stats.lock().unwrap().rejected += 1;
         let _ = tx.send(Err(e));
     }
 
     /// Resolve an already-admitted hop with an admission-stage error (the
     /// queue refused it), whatever its reply channel type.
-    fn reject_pending(&self, p: Pending, e: anyhow::Error) {
+    fn reject_pending(&self, p: Pending, e: ServeError) {
         self.shared.stats.lock().unwrap().rejected += 1;
         match p.kind {
             HopKind::Single { tx } => {
@@ -463,16 +603,16 @@ impl ServeEngine {
 
     /// Enqueue under the hop-aware backpressure limit. On refusal the hop
     /// comes back so the caller can resolve its ticket with the error.
-    fn try_enqueue(&self, p: Pending) -> Result<(), (Pending, anyhow::Error)> {
+    fn try_enqueue(&self, p: Pending) -> Result<(), (Pending, ServeError)> {
         {
             let mut st = self.shared.state.lock().unwrap();
             if !st.open {
                 drop(st);
-                return Err((p, anyhow::anyhow!("engine is shutting down; request refused")));
+                return Err((p, ServeError::ShuttingDown));
             }
             if st.live >= self.shared.max_pending {
                 drop(st);
-                return Err((p, self.overloaded()));
+                return Err((p, ServeError::Overloaded { max_pending: self.shared.max_pending }));
             }
             st.live += 1;
             st.pending.push_back(p);
@@ -481,37 +621,52 @@ impl ServeEngine {
         Ok(())
     }
 
+    /// The id string behind an adapter handle, for error naming (falls
+    /// back to the slot index for ids from a foreign registry).
+    fn adapter_name(&self, id: AdapterId) -> String {
+        self.shared
+            .registry
+            .name_of(id)
+            .unwrap_or_else(|| format!("#{}", id.index()))
+    }
+
     fn admit(
         &self,
-        layer: &str,
-        adapter: Option<&str>,
+        layer: LayerId,
+        adapter: Option<AdapterId>,
         x: Vec<f64>,
-        tx: &mpsc::Sender<anyhow::Result<Response>>,
-    ) -> anyhow::Result<Pending> {
-        let idx = *self
+        tx: &mpsc::Sender<Result<Response, ServeError>>,
+    ) -> Result<Pending, ServeError> {
+        let l = self
             .shared
-            .index
+            .model
             .get(layer)
-            .ok_or_else(|| anyhow::anyhow!("no such layer '{layer}' in the served model"))?;
-        let rows = self.shared.model.layers[idx].rows;
-        anyhow::ensure!(
-            x.len() == rows,
-            "layer '{layer}': input length {} but the layer takes {rows} features",
-            x.len()
-        );
+            .ok_or_else(|| ServeError::UnknownLayer { layer: format!("#{}", layer.index()) })?;
+        if x.len() != l.rows {
+            return Err(ServeError::ShapeMismatch {
+                layer: l.name.clone(),
+                detail: format!(
+                    "input length {} but the layer takes {} features",
+                    x.len(),
+                    l.rows
+                ),
+            });
+        }
         let handle = match adapter {
             None => None,
             Some(id) => {
                 let h = self.checkout(id)?;
-                anyhow::ensure!(
-                    h.set().get(layer).is_some(),
-                    "adapter '{id}' carries no delta for layer '{layer}'"
-                );
+                if h.pair(layer).is_none() {
+                    return Err(ServeError::AdapterMismatch {
+                        adapter: self.adapter_name(id),
+                        layer: Some(l.name.clone()),
+                    });
+                }
                 Some(h)
             }
         };
         Ok(Pending {
-            layer: idx,
+            layer,
             adapter: handle,
             x,
             t_in: Instant::now(),
@@ -519,57 +674,64 @@ impl ServeEngine {
         })
     }
 
-    /// Admission for model/session requests: resolve and shape-check the
-    /// whole route up front (chain validation in
-    /// `PackedModel::validate_route`), pin the adapter once, and require
-    /// it to matter somewhere on the route. Layers the adapter carries no
-    /// delta for run base-only — the LoRA-on-a-subset deployment shape.
+    /// Admission for model/session requests: the route arrives
+    /// pre-validated (built by [`ServeEngine::route`] /
+    /// [`PackedModel::route`]) and is re-checked against THIS model in
+    /// O(route) integer compares, so a route from a smaller or
+    /// unchainable foreign model is a typed [`ServeError::BadRoute`]
+    /// (an in-range, chainable route from a different model addresses by
+    /// index, like any handle — see the [`LayerId`] docs). The adapter is
+    /// pinned once and must matter somewhere on the route; layers it
+    /// carries no delta for run base-only — the LoRA-on-a-subset
+    /// deployment shape.
     fn admit_traversal(
         &self,
-        route: &[String],
-        adapter: Option<&str>,
+        route: &Route,
+        adapter: Option<AdapterId>,
         x: Vec<f64>,
         steps: usize,
         step: Option<StepFn>,
-        tx: &mpsc::Sender<anyhow::Result<ModelResponse>>,
-    ) -> anyhow::Result<Pending> {
-        anyhow::ensure!(steps >= 1, "session must run at least one forward pass");
-        anyhow::ensure!(!route.is_empty(), "model request with an empty layer route");
-        let mut idxs = Vec::with_capacity(route.len());
-        for name in route {
-            let idx = *self.shared.index.get(name).ok_or_else(|| {
-                anyhow::anyhow!("no such layer '{name}' in the served model")
-            })?;
-            idxs.push(idx);
+        tx: &mpsc::Sender<Result<ModelResponse, ServeError>>,
+    ) -> Result<Pending, ServeError> {
+        if steps < 1 {
+            return Err(ServeError::InvalidConfig {
+                detail: "session must run at least one forward pass".to_string(),
+            });
         }
-        self.shared.model.validate_route(&idxs)?;
-        let head_rows = self.shared.model.layers[idxs[0]].rows;
-        anyhow::ensure!(
-            x.len() == head_rows,
-            "route head '{}': input length {} but the layer takes {head_rows} features",
-            route[0],
-            x.len()
-        );
+        self.shared.model.validate_route(route.as_ids())?;
+        let head = route.as_ids()[0];
+        let head_layer = &self.shared.model.layers[head.index()];
+        if x.len() != head_layer.rows {
+            return Err(ServeError::ShapeMismatch {
+                layer: head_layer.name.clone(),
+                detail: format!(
+                    "route head input length {} but the layer takes {} features",
+                    x.len(),
+                    head_layer.rows
+                ),
+            });
+        }
         let handle = match adapter {
             None => None,
             Some(id) => {
                 let h = self.checkout(id)?;
-                anyhow::ensure!(
-                    idxs.iter()
-                        .any(|&i| h.set().get(&self.shared.model.layers[i].name).is_some()),
-                    "adapter '{id}' carries no delta for any layer on the route"
-                );
+                if !route.as_ids().iter().any(|&lid| h.pair(lid).is_some()) {
+                    return Err(ServeError::AdapterMismatch {
+                        adapter: self.adapter_name(id),
+                        layer: None,
+                    });
+                }
                 Some(h)
             }
         };
         let t_in = Instant::now();
         Ok(Pending {
-            layer: idxs[0],
+            layer: head,
             adapter: handle,
             x,
             t_in,
             kind: HopKind::Traversal(Box::new(Traversal::new(
-                Arc::new(idxs),
+                route.clone(),
                 steps,
                 step,
                 tx.clone(),
@@ -578,17 +740,28 @@ impl ServeEngine {
         })
     }
 
-    fn checkout(&self, id: &str) -> anyhow::Result<AdapterHandle> {
-        self.shared.registry.checkout(id).ok_or_else(|| {
-            anyhow::anyhow!(
-                "adapter '{id}' is not registered (never registered, evicted, \
-                 or unregistered)"
-            )
-        })
+    fn checkout(&self, id: AdapterId) -> Result<AdapterHandle, ServeError> {
+        self.shared
+            .registry
+            .checkout(id)
+            .ok_or_else(|| ServeError::UnknownAdapter { adapter: self.adapter_name(id) })
     }
 
     pub fn stats(&self) -> EngineStats {
         self.shared.stats.lock().unwrap().clone()
+    }
+
+    /// Stop admitting WITHOUT waiting: subsequent submits fail with
+    /// [`ServeError::ShuttingDown`] while the batcher keeps draining every
+    /// already-admitted request in the background. Call
+    /// [`ServeEngine::shutdown`] (or drop the engine) to block until the
+    /// drain completes.
+    pub fn close(&self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.open = false;
+        }
+        self.shared.cv.notify_all();
     }
 
     /// Stop admitting, drain every admitted request — including every
@@ -601,11 +774,7 @@ impl ServeEngine {
     }
 
     fn shutdown_impl(&mut self) {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.open = false;
-        }
-        self.shared.cv.notify_all();
+        self.close();
         if let Some(h) = self.batcher.take() {
             // The batcher drains until the last live hop slot is released
             // (so traversals finish their whole route) and waits for the
@@ -695,26 +864,28 @@ fn take_batch(pending: &mut VecDeque<Pending>, cap: usize) -> Vec<Pending> {
 /// by the `LoraPair`'s address — exactly the identity `same_adapter`
 /// groups on, so the sort can never split an achievable group (and two
 /// versions of one id, a hot-swap caught mid-queue, can never share
-/// one). Allocation-free: this runs for every rider of every
-/// micro-batch, and group ORDER is irrelevant (row placement cannot
-/// change any response's numbers — the parity contract), only adjacency
-/// matters.
-fn adapter_sort_key(p: &Pending, layer_name: &str) -> (u8, usize) {
-    match p.adapter.as_ref().and_then(|h| h.set().get(layer_name)) {
+/// one). Allocation- and hash-free: the per-layer adapter lookup is the
+/// handle's O(1) slot table ([`AdapterHandle::pair`]), and this runs for
+/// every rider of every micro-batch. Group ORDER is irrelevant (row
+/// placement cannot change any response's numbers — the parity
+/// contract), only adjacency matters.
+fn adapter_sort_key(p: &Pending, layer: LayerId) -> (u8, usize) {
+    match p.adapter.as_ref().and_then(|h| h.pair(layer)) {
         None => (0, 0),
         Some(pair) => (1, pair as *const LoraPair as usize),
     }
 }
 
 fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
-    let layer = &shared.model.layers[batch[0].layer];
+    let layer_id = batch[0].layer;
+    let layer = &shared.model.layers[layer_id.index()];
     let layer_name = layer.name.as_str();
     let bs = batch.len();
     // Same-effective-slot requests adjacent ⇒ fewest adapter groups.
     // Stable, so arrival order survives within a group. Row placement
     // cannot change any response's numbers (grouped-kernel parity
     // contract).
-    batch.sort_by_cached_key(|p| adapter_sort_key(p, layer_name));
+    batch.sort_by_cached_key(|p| adapter_sort_key(p, layer_id));
     let mut xs = Matrix::zeros(bs, layer.rows);
     for (k, p) in batch.iter().enumerate() {
         xs.row_mut(k).copy_from_slice(&p.x);
@@ -723,14 +894,12 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
     // always resolve (admission checked coverage); a traversal hop may
     // land on a route layer its adapter carries no delta for — that row
     // runs base-only, by design.
-    let slots: Vec<Option<&LoraPair>> = batch
-        .iter()
-        .map(|p| p.adapter.as_ref().and_then(|h| h.set().get(layer_name)))
-        .collect();
+    let slots: Vec<Option<&LoraPair>> =
+        batch.iter().map(|p| p.adapter.as_ref().and_then(|h| h.pair(layer_id))).collect();
     let groups = count_groups(&slots);
-    // Contain a kernel panic to this batch: every rider gets an Err naming
-    // it (not a bogus "engine dropped"), the worker survives, and the
-    // in-flight slot is still released below.
+    // Contain a kernel panic to this batch: every rider gets a typed
+    // WorkerPanic naming the layer (not a bogus ShuttingDown), the worker
+    // survives, and the in-flight slot is still released below.
     let t_exec = Instant::now();
     let kernel = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
         layer.forward_batch_grouped(&xs, &slots)
@@ -738,7 +907,7 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
     let compute_s = t_exec.elapsed().as_secs_f64();
     drop(slots);
 
-    let rows_of = |i: usize| shared.model.layers[i].rows;
+    let rows_of = |id: LayerId| shared.model.layers[id.index()].rows;
     let mut reentry: Vec<Pending> = Vec::new();
     let mut finished = 0usize; // riders whose ticket resolved in this batch
     let mut total_queue = 0.0;
@@ -804,17 +973,20 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
                 match p.kind {
                     HopKind::Single { tx } => {
                         singles_failed += 1;
-                        let _ = tx.send(Err(anyhow::anyhow!(
-                            "layer '{layer_name}': serving batch of {bs} panicked in the kernel"
-                        )));
+                        let _ = tx.send(Err(ServeError::WorkerPanic {
+                            layer: layer_name.to_string(),
+                            batch: bs,
+                            hop: None,
+                        }));
                     }
                     HopKind::Traversal(tr) => {
                         models_failed += 1;
                         let hop = tr.hops_done() + 1;
-                        forwards_done += tr.fail(anyhow::anyhow!(
-                            "model request failed at hop {hop}: layer '{layer_name}' \
-                             panicked serving a batch of {bs}"
-                        ));
+                        forwards_done += tr.fail(ServeError::WorkerPanic {
+                            layer: layer_name.to_string(),
+                            batch: bs,
+                            hop: Some(hop),
+                        });
                     }
                 }
             }
@@ -902,6 +1074,22 @@ mod tests {
     }
 
     #[test]
+    fn builder_validates_and_rejects_bad_knobs() {
+        let err = ServeEngine::builder(model(399)).workers(0).build().unwrap_err();
+        assert!(matches!(err, ServeError::InvalidConfig { .. }), "{err:?}");
+        assert!(format!("{err}").contains("workers"), "{err}");
+        let err = ServeEngine::builder(model(399)).max_batch(0).build().unwrap_err();
+        assert!(format!("{err}").contains("max_batch"), "{err}");
+        let err = ServeEngine::builder(PackedModel::default()).build().unwrap_err();
+        assert!(format!("{err}").contains("no layers"), "{err}");
+        // Duplicate layer names are a build-time InvalidConfig, not a panic.
+        let m = model(398);
+        let dup = PackedModel::new(vec![m.layers[0].clone(), m.layers[0].clone()]);
+        let err = ServeEngine::builder(dup).build().unwrap_err();
+        assert!(format!("{err}").contains("duplicate layer name 'wq'"), "{err}");
+    }
+
+    #[test]
     fn responses_match_direct_forward_bit_for_bit() {
         let m = model(400);
         let sets = [adapter("t0", &m, 3, 410), adapter("t1", &m, 5, 411)];
@@ -919,21 +1107,21 @@ mod tests {
                 l.forward(&x, pair)
             })
             .collect();
-        let engine = ServeEngine::new(
-            model(400),
-            EngineConfig { workers: 2, max_batch: 4, ..EngineConfig::default() },
-        );
+        let engine = ServeEngine::builder(model(400)).workers(2).max_batch(4).build().unwrap();
+        let mut tenant_ids = Vec::new();
         for s in sets {
-            engine.register_adapter(s).unwrap();
+            tenant_ids.push(engine.register_adapter(s).unwrap().id);
         }
+        let layer_ids =
+            [engine.layer("wq").unwrap(), engine.layer("wo").unwrap()];
         let mut rng = Rng::new(401); // same stream → same inputs
         let reqs: Vec<Request> = (0..12)
             .map(|i| {
-                let l = &engine.shared.model.layers[i % 2];
-                let x = rng.gauss_vec(l.rows);
+                let lid = layer_ids[i % 2];
+                let x = rng.gauss_vec(engine.model().get(lid).unwrap().rows);
                 match i % 3 {
-                    2 => Request::base(&l.name, x),
-                    k => Request::with_adapter(&l.name, &format!("t{k}"), x),
+                    2 => Request::base(lid, x),
+                    k => Request::with_adapter(lid, tenant_ids[k], x),
                 }
             })
             .collect();
@@ -956,7 +1144,7 @@ mod tests {
     }
 
     #[test]
-    fn invalid_requests_rejected_with_actionable_errors() {
+    fn invalid_requests_rejected_with_typed_errors() {
         let m = model(402);
         let wq_only = {
             let mut rng = Rng::new(412);
@@ -972,24 +1160,37 @@ mod tests {
             .unwrap();
             s
         };
-        let engine = ServeEngine::new(m, EngineConfig::default());
-        engine.register_adapter(wq_only).unwrap();
-        let msg = format!("{}", engine.submit("nope", None, vec![0.0; 4]).wait().unwrap_err());
-        assert!(msg.contains("no such layer 'nope'"), "{msg}");
-        let msg = format!("{}", engine.submit("wq", None, vec![0.0; 3]).wait().unwrap_err());
-        assert!(msg.contains("24 features"), "{msg}");
-        let msg = format!(
-            "{}",
-            engine.submit("wq", Some("ghost"), vec![0.0; 24]).wait().unwrap_err()
+        let engine = ServeEngine::builder(m).build().unwrap();
+        let partial = engine.register_adapter(wq_only).unwrap().id;
+        let (wq, wo) = (engine.layer("wq").unwrap(), engine.layer("wo").unwrap());
+        // Unknown names fail at RESOLUTION, with the name echoed back.
+        let err = engine.layer("nope").unwrap_err();
+        assert!(matches!(&err, ServeError::UnknownLayer { layer } if layer == "nope"), "{err}");
+        let err = engine.adapter("ghost").unwrap_err();
+        assert!(
+            matches!(&err, ServeError::UnknownAdapter { adapter } if adapter == "ghost"),
+            "{err}"
         );
-        assert!(msg.contains("adapter 'ghost' is not registered"), "{msg}");
-        let msg = format!(
-            "{}",
-            engine.submit("wo", Some("partial"), vec![0.0; 18]).wait().unwrap_err()
+        // The name-resolving submit path reports the same typed errors.
+        let err = engine.submit_named("nope", None, vec![0.0; 4]).wait().unwrap_err();
+        assert!(matches!(err, ServeError::UnknownLayer { .. }), "{err:?}");
+        let err = engine.submit(wq, None, vec![0.0; 3]).wait().unwrap_err();
+        assert!(
+            matches!(&err, ServeError::ShapeMismatch { layer, .. } if layer == "wq"),
+            "{err:?}"
         );
-        assert!(msg.contains("no delta for layer 'wo'"), "{msg}");
+        assert!(format!("{err}").contains("24 features"), "{err}");
+        let err = engine.submit(wo, Some(partial), vec![0.0; 18]).wait().unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                ServeError::AdapterMismatch { adapter, layer: Some(l) }
+                    if adapter == "partial" && l == "wo"
+            ),
+            "{err:?}"
+        );
         let stats = engine.shutdown();
-        assert_eq!(stats.rejected, 4);
+        assert_eq!(stats.rejected, 3, "resolution failures never reach the queue");
         assert_eq!(stats.requests, 0);
     }
 
@@ -998,8 +1199,10 @@ mod tests {
         let m = model(403);
         let mut bad = AdapterSet::new("bad");
         bad.insert("wq", LoraPair::new(Matrix::zeros(24, 2), Matrix::zeros(9, 2))).unwrap();
-        let engine = ServeEngine::new(m, EngineConfig::default());
-        let msg = format!("{}", engine.register_adapter(bad).unwrap_err());
+        let engine = ServeEngine::builder(m).build().unwrap();
+        let err = engine.register_adapter(bad).unwrap_err();
+        assert!(matches!(err, ServeError::ShapeMismatch { .. }), "{err:?}");
+        let msg = format!("{err}");
         assert!(msg.contains("adapter 'bad'"), "{msg}");
         assert!(msg.contains("does not fit base"), "{msg}");
         engine.shutdown();
@@ -1007,13 +1210,12 @@ mod tests {
 
     #[test]
     fn shutdown_drains_queued_requests() {
-        let engine = ServeEngine::new(
-            model(404),
-            EngineConfig { workers: 1, max_batch: 8, ..EngineConfig::default() },
-        );
+        let engine =
+            ServeEngine::builder(model(404)).workers(1).max_batch(8).build().unwrap();
+        let wq = engine.layer("wq").unwrap();
         let mut rng = Rng::new(405);
         let tickets: Vec<Ticket> =
-            (0..32).map(|_| engine.submit("wq", None, rng.gauss_vec(24))).collect();
+            (0..32).map(|_| engine.submit(wq, None, rng.gauss_vec(24))).collect();
         let stats = engine.shutdown(); // must answer everything first
         assert_eq!(stats.requests, 32);
         for t in tickets {
@@ -1022,65 +1224,68 @@ mod tests {
     }
 
     #[test]
+    fn close_rejects_new_submits_while_draining_admitted_ones() {
+        let engine =
+            ServeEngine::builder(model(408)).workers(1).max_batch(8).build().unwrap();
+        let wq = engine.layer("wq").unwrap();
+        let mut rng = Rng::new(409);
+        let tickets: Vec<Ticket> =
+            (0..16).map(|_| engine.submit(wq, None, rng.gauss_vec(24))).collect();
+        engine.close();
+        let err = engine.submit(wq, None, rng.gauss_vec(24)).wait().unwrap_err();
+        assert!(matches!(err, ServeError::ShuttingDown), "{err:?}");
+        // Already-admitted requests still complete.
+        for t in tickets {
+            assert!(t.wait().is_ok(), "admitted requests must survive close()");
+        }
+        let stats = engine.shutdown();
+        assert_eq!(stats.requests, 16);
+        assert_eq!(stats.rejected, 1);
+    }
+
+    #[test]
     fn unregister_waits_for_queued_requests_then_rejects_new_ones() {
         let m = model(406);
         let set = adapter("ten", &m, 2, 413);
-        let engine = ServeEngine::new(
-            m,
-            EngineConfig { workers: 1, max_batch: 4, ..EngineConfig::default() },
-        );
-        engine.register_adapter(set).unwrap();
+        let engine = ServeEngine::builder(m).workers(1).max_batch(4).build().unwrap();
+        let ten = engine.register_adapter(set).unwrap().id;
+        let wq = engine.layer("wq").unwrap();
         let mut rng = Rng::new(407);
         let tickets: Vec<Ticket> =
-            (0..16).map(|_| engine.submit("wq", Some("ten"), rng.gauss_vec(24))).collect();
+            (0..16).map(|_| engine.submit(wq, Some(ten), rng.gauss_vec(24))).collect();
         engine.unregister_adapter("ten").unwrap(); // blocks until all 16 answered
         for t in tickets {
             assert!(t.wait().is_ok(), "queued requests must be served, not dropped");
         }
-        let msg = format!(
-            "{}",
-            engine.submit("wq", Some("ten"), rng.gauss_vec(24)).wait().unwrap_err()
+        // The stale AdapterId now resolves to UnknownAdapter — by NAME.
+        let err = engine.submit(wq, Some(ten), rng.gauss_vec(24)).wait().unwrap_err();
+        assert!(
+            matches!(&err, ServeError::UnknownAdapter { adapter } if adapter == "ten"),
+            "{err:?}"
         );
-        assert!(msg.contains("not registered"), "{msg}");
         engine.shutdown();
     }
 
     #[test]
-    fn model_requests_rejected_with_actionable_errors() {
-        let engine = ServeEngine::new(model(420), EngineConfig::default());
-        let route = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
-        // wq outputs 10 wide; wo takes 18 — the chain is broken.
-        let msg = format!(
-            "{}",
-            engine
-                .submit_model(ModelRequest::new(route(&["wq", "wo"]), vec![0.0; 24]))
-                .wait()
-                .unwrap_err()
-        );
-        assert!(msg.contains("route break"), "{msg}");
-        let msg = format!(
-            "{}",
-            engine
-                .submit_model(ModelRequest::new(route(&["ghost"]), vec![0.0; 4]))
-                .wait()
-                .unwrap_err()
-        );
-        assert!(msg.contains("no such layer 'ghost'"), "{msg}");
-        let msg = format!(
-            "{}",
-            engine
-                .submit_model(ModelRequest::new(route(&["wq"]), vec![0.0; 3]))
-                .wait()
-                .unwrap_err()
-        );
-        assert!(msg.contains("takes 24 features"), "{msg}");
-        let msg = format!(
-            "{}",
-            engine.submit_model(ModelRequest::new(Vec::new(), vec![0.0; 4])).wait().unwrap_err()
-        );
-        assert!(msg.contains("empty layer route"), "{msg}");
+    fn model_requests_rejected_with_typed_errors() {
+        let engine = ServeEngine::builder(model(420)).build().unwrap();
+        // wq outputs 10 wide; wo takes 18 — the chain is broken, and the
+        // Route itself refuses to exist.
+        let err = engine.route(&["wq", "wo"]).unwrap_err();
+        assert!(matches!(err, ServeError::BadRoute { .. }), "{err:?}");
+        assert!(format!("{err}").contains("route break"), "{err}");
+        let err = engine.route(&["ghost"]).unwrap_err();
+        assert!(matches!(&err, ServeError::UnknownLayer { layer } if layer == "ghost"), "{err}");
+        let err = engine.route::<&str>(&[]).unwrap_err();
+        assert!(format!("{err}").contains("route is empty"), "{err}");
+        // A valid route with a misshapen input fails at submission.
+        let route = engine.route(&["wq"]).unwrap();
+        let err =
+            engine.submit_model(ModelRequest::new(route, vec![0.0; 3])).wait().unwrap_err();
+        assert!(matches!(err, ServeError::ShapeMismatch { .. }), "{err:?}");
+        assert!(format!("{err}").contains("takes 24 features"), "{err}");
         let stats = engine.shutdown();
-        assert_eq!(stats.rejected, 4);
+        assert_eq!(stats.rejected, 1, "route-construction failures never submit");
         assert_eq!(stats.model_requests, 0);
     }
 
@@ -1089,17 +1294,12 @@ mod tests {
         // A one-hop route through the pipelined path must return the same
         // bits as the plain single-layer submit.
         let m = model(421);
-        let engine = ServeEngine::new(
-            model(421),
-            EngineConfig { workers: 1, ..EngineConfig::default() },
-        );
+        let engine = ServeEngine::builder(model(421)).workers(1).build().unwrap();
         let mut rng = Rng::new(422);
         let x = rng.gauss_vec(24);
         let direct = m.layers[0].forward(&x, None);
-        let resp = engine
-            .submit_model(ModelRequest::new(vec!["wq".to_string()], x))
-            .wait()
-            .unwrap();
+        let route = engine.route(&["wq"]).unwrap();
+        let resp = engine.submit_model(ModelRequest::new(route, x)).wait().unwrap();
         for (u, v) in resp.y.iter().zip(&direct) {
             assert_eq!(u.to_bits(), v.to_bits());
         }

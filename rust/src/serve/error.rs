@@ -1,0 +1,204 @@
+//! The serving subsystem's structured error type.
+//!
+//! Every public failure path in `serve/` — admission refusals, queue
+//! backpressure, kernel panics, artifact corruption — resolves to one
+//! [`ServeError`] variant, so callers branch with `matches!` instead of
+//! string-searching `anyhow` messages (how do you tell "overloaded, retry
+//! with backoff" from "unknown adapter, fail the tenant" from "the engine
+//! is draining, re-route" when all three are opaque strings?). The
+//! taxonomy is locked down by `rust/tests/errors_serve.rs`.
+//!
+//! `ServeError` implements [`std::error::Error`], so it flows into
+//! `anyhow::Result` contexts with `?` unchanged — the coordinator and
+//! other offline callers keep compiling while serving callers get typed
+//! matching.
+//!
+//! Field conventions: `layer` / `adapter` fields carry the NAME the
+//! request used (errors must be actionable at 3 a.m.); free-text context
+//! that doesn't affect dispatch lives in `detail` strings.
+
+use std::fmt;
+
+/// What went wrong with a serving artifact file — the `kind` field of
+/// [`ServeError::Artifact`]. Classified where the failure is detected, so
+/// a caller can distinguish "the disk is corrupt" (re-fetch the file) from
+/// "the format is foreign" (wrong path or wrong build).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactErrorKind {
+    /// The file could not be read or written at all.
+    Io,
+    /// The leading magic bytes match no known serving-artifact format.
+    BadMagic,
+    /// Known format, unsupported version number.
+    BadVersion,
+    /// The byte stream ended mid-record (header, payload, or checksum).
+    Truncated,
+    /// A layer payload's CRC-32 does not match its stored checksum.
+    ChecksumMismatch,
+    /// Structurally invalid content after the checksum passed: shape lies,
+    /// impossible counts, trailing bytes, duplicate layer names.
+    Malformed,
+}
+
+impl fmt::Display for ArtifactErrorKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            ArtifactErrorKind::Io => "io",
+            ArtifactErrorKind::BadMagic => "bad-magic",
+            ArtifactErrorKind::BadVersion => "bad-version",
+            ArtifactErrorKind::Truncated => "truncated",
+            ArtifactErrorKind::ChecksumMismatch => "checksum-mismatch",
+            ArtifactErrorKind::Malformed => "malformed",
+        })
+    }
+}
+
+/// Structured error for every public failure path of the serving façade.
+///
+/// Variants are the dispatch surface; their `String` fields name the
+/// entity the caller asked about. Match on variants:
+///
+/// ```ignore
+/// match ticket.wait() {
+///     Err(ServeError::Overloaded { .. }) => retry_with_backoff(),
+///     Err(ServeError::UnknownAdapter { adapter }) => evict_tenant(&adapter),
+///     Err(ServeError::ShuttingDown) => reroute_to_peer(),
+///     other => other?,
+/// }
+/// ```
+#[derive(Clone, Debug)]
+pub enum ServeError {
+    /// The request named a layer the served model does not have (or a
+    /// `LayerId` resolved against a different model).
+    UnknownLayer { layer: String },
+    /// The named adapter is not currently registered: never registered,
+    /// evicted by the byte budget, or unregistered.
+    UnknownAdapter { adapter: String },
+    /// The adapter is registered but carries no delta for the request:
+    /// `layer: Some(_)` — a single-layer request at that layer;
+    /// `layer: None` — a model request whose route it covers nowhere.
+    AdapterMismatch { adapter: String, layer: Option<String> },
+    /// An activation or adapter does not fit the named layer's shape.
+    ShapeMismatch { layer: String, detail: String },
+    /// A layer route that cannot be traversed: empty, out of range, or a
+    /// chain break (one hop's output width != the next hop's input width).
+    BadRoute { detail: String },
+    /// Admission refused at `max_pending` live hop slots (queued or
+    /// mid-kernel). Transient — retry later.
+    Overloaded { max_pending: usize },
+    /// Admissions are closed ([`close`]/[`shutdown`] was called), or the
+    /// engine dropped before answering.
+    ///
+    /// [`close`]: crate::serve::ServeEngine::close
+    /// [`shutdown`]: crate::serve::ServeEngine::shutdown
+    ShuttingDown,
+    /// The kernel panicked serving the micro-batch this request rode in
+    /// (`hop: Some(_)` names the failing hop of a model request). The
+    /// worker survives; only the batch's riders fail.
+    WorkerPanic { layer: String, batch: usize, hop: Option<usize> },
+    /// A session's caller-supplied step function panicked or returned a
+    /// misshapen next input, after `forward` completed passes.
+    StepFailed { forward: usize, detail: String },
+    /// A serving artifact could not be read or written. `layer` is the
+    /// offending layer's name when the payload still reveals it.
+    Artifact { path: String, layer: Option<String>, kind: ArtifactErrorKind, detail: String },
+    /// Invalid configuration or construction input (builder validation,
+    /// duplicate names, zero-step sessions, over-budget adapter sets).
+    InvalidConfig { detail: String },
+    /// The operation is not supported for this input (e.g. packing an
+    /// fp-base method, or reading a legacy artifact through a base-only
+    /// accessor).
+    Unsupported { detail: String },
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::UnknownLayer { layer } => {
+                write!(f, "no such layer '{layer}' in the served model")
+            }
+            ServeError::UnknownAdapter { adapter } => write!(
+                f,
+                "adapter '{adapter}' is not registered (never registered, evicted, \
+                 or unregistered)"
+            ),
+            ServeError::AdapterMismatch { adapter, layer: Some(layer) } => {
+                write!(f, "adapter '{adapter}' carries no delta for layer '{layer}'")
+            }
+            ServeError::AdapterMismatch { adapter, layer: None } => {
+                write!(f, "adapter '{adapter}' carries no delta for any layer on the route")
+            }
+            ServeError::ShapeMismatch { layer, detail } => write!(f, "layer '{layer}': {detail}"),
+            ServeError::BadRoute { detail } => f.write_str(detail),
+            ServeError::Overloaded { max_pending } => write!(
+                f,
+                "engine overloaded: {max_pending} hops queued or in flight at max_pending; \
+                 retry later"
+            ),
+            ServeError::ShuttingDown => f.write_str("engine is shutting down; request refused"),
+            ServeError::WorkerPanic { layer, batch, hop: None } => {
+                write!(f, "layer '{layer}': serving batch of {batch} panicked in the kernel")
+            }
+            ServeError::WorkerPanic { layer, batch, hop: Some(hop) } => write!(
+                f,
+                "model request failed at hop {hop}: layer '{layer}' panicked serving a \
+                 batch of {batch}"
+            ),
+            ServeError::StepFailed { forward, detail } => {
+                write!(f, "session step after forward {forward}: {detail}")
+            }
+            ServeError::Artifact { path, kind, detail, .. } => {
+                write!(f, "artifact {path} [{kind}]: {detail}")
+            }
+            ServeError::InvalidConfig { detail } => f.write_str(detail),
+            ServeError::Unsupported { detail } => f.write_str(detail),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_entities() {
+        let e = ServeError::UnknownLayer { layer: "wq".to_string() };
+        assert!(format!("{e}").contains("no such layer 'wq'"), "{e}");
+        let e = ServeError::AdapterMismatch { adapter: "t".to_string(), layer: None };
+        assert!(format!("{e}").contains("any layer on the route"), "{e}");
+        let e = ServeError::WorkerPanic { layer: "l".to_string(), batch: 4, hop: Some(2) };
+        let msg = format!("{e}");
+        assert!(msg.contains("hop 2") && msg.contains("'l'") && msg.contains("4"), "{msg}");
+    }
+
+    #[test]
+    fn converts_into_anyhow_with_question_mark() {
+        fn typed(fail: bool) -> Result<usize, ServeError> {
+            if fail {
+                return Err(ServeError::ShuttingDown);
+            }
+            Ok(7)
+        }
+        fn inner(fail: bool) -> anyhow::Result<usize> {
+            Ok(typed(fail)?)
+        }
+        assert_eq!(inner(false).unwrap(), 7);
+        let msg = format!("{}", inner(true).unwrap_err());
+        assert!(msg.contains("shutting down"), "{msg}");
+    }
+
+    #[test]
+    fn artifact_kind_displays_as_a_slug() {
+        assert_eq!(format!("{}", ArtifactErrorKind::ChecksumMismatch), "checksum-mismatch");
+        let e = ServeError::Artifact {
+            path: "/tmp/x".to_string(),
+            layer: Some("blk0.wo".to_string()),
+            kind: ArtifactErrorKind::Truncated,
+            detail: "layer 1/2: file ended".to_string(),
+        };
+        let msg = format!("{e}");
+        assert!(msg.contains("/tmp/x") && msg.contains("[truncated]"), "{msg}");
+    }
+}

@@ -1,18 +1,23 @@
 //! Full-model forward requests: the route/traversal layer on top of the
 //! per-layer batching engine.
 //!
-//! A [`ModelRequest`] names an ordered **route** of packed layers (from
-//! [`crate::model::ModelConfig::forward_route`] or hand-built) plus an
-//! optional adapter, and the engine decomposes it into per-layer **hops**:
-//! when a micro-batch finishes, riders with more route left re-enter the
-//! pending FIFO at their next layer instead of replying. Hops from many
-//! concurrent model requests at the same depth therefore coalesce into one
-//! grouped kernel call — the continuous-batching win — while each request
-//! still computes the exact serial composition
+//! A [`ModelRequest`] names a pre-validated [`Route`] of packed layers
+//! (from `ServeEngine::route` / [`PackedModel::route`]) plus an optional
+//! interned [`AdapterId`], and the engine decomposes it into per-layer
+//! **hops**: when a micro-batch finishes, riders with more route left
+//! re-enter the pending FIFO at their next layer instead of replying. Hops
+//! from many concurrent model requests at the same depth therefore
+//! coalesce into one grouped kernel call — the continuous-batching win —
+//! while each request still computes the exact serial composition
 //!
 //! ```text
 //!   y = f_{L-1}(… f_1(f_0(x)) …),   f_k = route[k]'s fused forward
 //! ```
+//!
+//! Because a `Route` is resolved and chain-validated ONCE at construction
+//! and cloning it is an `Arc` bump, submitting the same route for
+//! thousands of requests costs no name resolution, no string clones, and
+//! no per-request chain walk beyond integer compares.
 //!
 //! **Parity contract** (enforced by `rust/tests/parity_forward.rs`): the
 //! pipelined traversal is bit-identical — 0 ULP — to the caller-driven
@@ -21,8 +26,7 @@
 //! itself bit-identical to a serial [`PackedLayer::forward`] call (the
 //! contract in `serve::packed`). The adapter is resolved to ONE pinned
 //! version at admission and carried across every hop, so a hot-swap
-//! mid-traversal can never mix adapter versions inside one response —
-//! PR 3's consistency guarantee extends to whole-model requests.
+//! mid-traversal can never mix adapter versions inside one response.
 //!
 //! A [`SessionRequest`] is the autoregressive-decode shape: up to `steps`
 //! sequential full-model forwards with a caller-supplied step function
@@ -31,33 +35,38 @@
 //! other at every depth. Per-session stats (hops, forwards, queue/compute
 //! split, batch sizes seen) come back in the [`ModelResponse`].
 //!
+//! Failures are typed ([`ServeError`]): a kernel panic on one hop fails
+//! only the owning traversal with `WorkerPanic { hop: Some(_) }`, and a
+//! misbehaving step function fails only its session with `StepFailed`.
+//!
 //! [`PackedLayer::forward`]: crate::serve::packed::PackedLayer::forward
+//! [`PackedModel::route`]: crate::serve::packed::PackedModel::route
 
 use std::sync::mpsc;
-use std::sync::Arc;
 use std::time::Instant;
 
-use crate::serve::adapters::AdapterSet;
-use crate::serve::packed::PackedModel;
+use crate::serve::adapters::{AdapterId, AdapterSet};
+use crate::serve::error::ServeError;
+use crate::serve::packed::{LayerId, PackedModel, Route};
 
-/// One full-model forward request: the input activation, the ordered layer
+/// One full-model forward request: the input activation, the validated
 /// route it traverses, and the adapter applied wherever it carries a delta
 /// (route layers without one run base-only).
 pub struct ModelRequest {
-    pub route: Vec<String>,
-    pub adapter: Option<String>,
+    pub route: Route,
+    pub adapter: Option<AdapterId>,
     pub x: Vec<f64>,
 }
 
 impl ModelRequest {
     /// Base-only full-model forward along `route`.
-    pub fn new(route: Vec<String>, x: Vec<f64>) -> ModelRequest {
+    pub fn new(route: Route, x: Vec<f64>) -> ModelRequest {
         ModelRequest { route, adapter: None, x }
     }
 
-    /// Full-model forward routed through the named adapter.
-    pub fn with_adapter(route: Vec<String>, adapter: &str, x: Vec<f64>) -> ModelRequest {
-        ModelRequest { route, adapter: Some(adapter.to_string()), x }
+    /// Full-model forward routed through the interned adapter.
+    pub fn with_adapter(route: Route, adapter: AdapterId, x: Vec<f64>) -> ModelRequest {
+        ModelRequest { route, adapter: Some(adapter), x }
     }
 }
 
@@ -73,26 +82,26 @@ pub type StepFn = Box<dyn FnMut(usize, &[f64]) -> Option<Vec<f64>> + Send + 'sta
 /// The adapter (like a [`ModelRequest`]'s) is pinned once at admission and
 /// held for the whole session.
 pub struct SessionRequest {
-    pub route: Vec<String>,
-    pub adapter: Option<String>,
+    pub route: Route,
+    pub adapter: Option<AdapterId>,
     pub x0: Vec<f64>,
     pub steps: usize,
     pub step: StepFn,
 }
 
 impl SessionRequest {
-    pub fn new(route: Vec<String>, x0: Vec<f64>, steps: usize, step: StepFn) -> SessionRequest {
+    pub fn new(route: Route, x0: Vec<f64>, steps: usize, step: StepFn) -> SessionRequest {
         SessionRequest { route, adapter: None, x0, steps, step }
     }
 
     pub fn with_adapter(
-        route: Vec<String>,
-        adapter: &str,
+        route: Route,
+        adapter: AdapterId,
         x0: Vec<f64>,
         steps: usize,
         step: StepFn,
     ) -> SessionRequest {
-        SessionRequest { route, adapter: Some(adapter.to_string()), x0, steps, step }
+        SessionRequest { route, adapter: Some(adapter), x0, steps, step }
     }
 }
 
@@ -121,21 +130,20 @@ pub struct ModelResponse {
 }
 
 /// Handle to a submitted [`ModelRequest`] / [`SessionRequest`]; resolves to
-/// its [`ModelResponse`].
+/// its [`ModelResponse`] or a typed [`ServeError`].
 pub struct ModelTicket {
-    rx: mpsc::Receiver<anyhow::Result<ModelResponse>>,
+    rx: mpsc::Receiver<Result<ModelResponse, ServeError>>,
 }
 
 impl ModelTicket {
-    pub(crate) fn new(rx: mpsc::Receiver<anyhow::Result<ModelResponse>>) -> ModelTicket {
+    pub(crate) fn new(rx: mpsc::Receiver<Result<ModelResponse, ServeError>>) -> ModelTicket {
         ModelTicket { rx }
     }
 
-    /// Block until the engine answers (or report that it shut down first).
-    pub fn wait(self) -> anyhow::Result<ModelResponse> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("serve engine dropped before answering"))?
+    /// Block until the engine answers. An engine that dropped before
+    /// answering reports [`ServeError::ShuttingDown`].
+    pub fn wait(self) -> Result<ModelResponse, ServeError> {
+        self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
     }
 }
 
@@ -145,27 +153,32 @@ impl ModelTicket {
 /// what a caller without `submit_model` has to do by hand — the throughput
 /// comparison in `benches/bench_forward.rs`.
 ///
+/// `route` must have been built against `model` and `x` must match the
+/// head layer's input width (the kernel asserts it, like any direct
+/// [`PackedLayer::forward`] call).
+///
 /// [`PackedLayer::forward`]: crate::serve::packed::PackedLayer::forward
 pub fn forward_route_serial(
     model: &PackedModel,
-    route: &[String],
+    route: &Route,
     adapter: Option<&AdapterSet>,
     x: &[f64],
-) -> anyhow::Result<Vec<f64>> {
-    let idxs = model.route_indices(route)?;
+) -> Vec<f64> {
     let mut cur = x.to_vec();
-    for &i in &idxs {
-        let layer = &model.layers[i];
+    for &id in route.as_ids() {
+        let layer = model
+            .get(id)
+            .expect("forward_route_serial: route was built against a different (larger) model");
         cur = layer.forward(&cur, adapter.and_then(|s| s.get(&layer.name)));
     }
-    Ok(cur)
+    cur
 }
 
 /// What a finished hop does next (returned by [`Traversal::absorb_hop`]).
 pub(crate) enum HopOutcome {
     /// More route (or another forward) left: re-enter the FIFO at `layer`
     /// with input `x`.
-    Reenter { layer: usize, x: Vec<f64>, traversal: Box<Traversal> },
+    Reenter { layer: LayerId, x: Vec<f64>, traversal: Box<Traversal> },
     /// The traversal replied (success or failure) and released its slot.
     Replied { ok: bool, forwards: usize },
 }
@@ -174,7 +187,7 @@ pub(crate) enum HopOutcome {
 /// it is on its route, how many forwards remain, and the stats accumulated
 /// so far. Owned by the rider's `Pending` hop; consumed on reply.
 pub(crate) struct Traversal {
-    route: Arc<Vec<usize>>,
+    route: Route,
     /// Index into `route` of the hop just executed.
     hop: usize,
     forwards_done: usize,
@@ -186,17 +199,17 @@ pub(crate) struct Traversal {
     compute_s: f64,
     max_batch_seen: usize,
     mixed_hops: usize,
-    tx: mpsc::Sender<anyhow::Result<ModelResponse>>,
+    tx: mpsc::Sender<Result<ModelResponse, ServeError>>,
 }
 
 impl Traversal {
     /// `steps == 1` may omit the step fn; multi-step sessions must carry
     /// one (enforced by the public constructors, asserted here).
     pub(crate) fn new(
-        route: Arc<Vec<usize>>,
+        route: Route,
         steps: usize,
         step: Option<StepFn>,
-        tx: mpsc::Sender<anyhow::Result<ModelResponse>>,
+        tx: mpsc::Sender<Result<ModelResponse, ServeError>>,
         t_admit: Instant,
     ) -> Traversal {
         assert!(steps >= 1, "traversal with zero forwards");
@@ -226,7 +239,7 @@ impl Traversal {
 
     /// Fold one executed hop's result into the traversal and decide what
     /// happens next: re-enter at the next route layer, start the next
-    /// forward through the step fn, or reply. `rows_of` maps a layer index
+    /// forward through the step fn, or reply. `rows_of` maps a layer id
     /// to its input width (validates step-fn outputs before they re-enter).
     /// Step-fn panics are caught here and fail only this traversal.
     pub(crate) fn absorb_hop(
@@ -236,7 +249,7 @@ impl Traversal {
         compute_s: f64,
         batch: usize,
         groups: usize,
-        rows_of: &dyn Fn(usize) -> usize,
+        rows_of: &dyn Fn(LayerId) -> usize,
     ) -> HopOutcome {
         self.hops_done += 1;
         self.queue_s += queue_s;
@@ -247,7 +260,7 @@ impl Traversal {
         }
         self.hop += 1;
         if self.hop < self.route.len() {
-            let layer = self.route[self.hop];
+            let layer = self.route.as_ids()[self.hop];
             return HopOutcome::Reenter { layer, x: y, traversal: self };
         }
         // Route exhausted: one full forward pass is done.
@@ -258,19 +271,22 @@ impl Traversal {
         let k = self.forwards_done;
         let step = self.step.as_mut().expect("checked at construction");
         match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| step(k, &y))) {
-            Err(_) => self.reply_err(anyhow::anyhow!(
-                "session step function panicked after forward {k}"
-            )),
+            Err(_) => self.reply_err(ServeError::StepFailed {
+                forward: k,
+                detail: "the step function panicked".to_string(),
+            }),
             Ok(None) => self.reply_ok(y), // caller-requested early stop
             Ok(Some(next_x)) => {
-                let head = self.route[0];
+                let head = self.route.as_ids()[0];
                 let need = rows_of(head);
                 if next_x.len() != need {
-                    return self.reply_err(anyhow::anyhow!(
-                        "session step after forward {k} returned {} values but the route \
-                         head takes {need} features",
-                        next_x.len()
-                    ));
+                    return self.reply_err(ServeError::StepFailed {
+                        forward: k,
+                        detail: format!(
+                            "returned {} values but the route head takes {need} features",
+                            next_x.len()
+                        ),
+                    });
                 }
                 self.hop = 0;
                 HopOutcome::Reenter { layer: head, x: next_x, traversal: self }
@@ -280,7 +296,7 @@ impl Traversal {
 
     /// Fail the traversal (kernel panic on one of its hops); returns the
     /// forwards it had completed, for the engine's counters.
-    pub(crate) fn fail(self: Box<Self>, e: anyhow::Error) -> usize {
+    pub(crate) fn fail(self: Box<Self>, e: ServeError) -> usize {
         let forwards = self.forwards_done;
         let _ = self.tx.send(Err(e));
         forwards
@@ -302,7 +318,7 @@ impl Traversal {
         HopOutcome::Replied { ok: true, forwards }
     }
 
-    fn reply_err(self: Box<Self>, e: anyhow::Error) -> HopOutcome {
+    fn reply_err(self: Box<Self>, e: ServeError) -> HopOutcome {
         let forwards = self.forwards_done;
         let _ = self.tx.send(Err(e));
         HopOutcome::Replied { ok: false, forwards }
@@ -330,15 +346,12 @@ mod tests {
         PackedModel::new(layers)
     }
 
-    fn names(v: &[&str]) -> Vec<String> {
-        v.iter().map(|s| s.to_string()).collect()
-    }
-
     #[test]
     fn serial_reference_composes_layer_forwards() {
         let m = chain_model(900);
+        let route = m.route(&["a", "b", "c"]).unwrap();
         let x = Rng::new(901).gauss_vec(12);
-        let y = forward_route_serial(&m, &names(&["a", "b", "c"]), None, &x).unwrap();
+        let y = forward_route_serial(&m, &route, None, &x);
         let mut expect = x.clone();
         for name in ["a", "b", "c"] {
             expect = m.layer(name).unwrap().forward(&expect, None);
@@ -348,26 +361,31 @@ mod tests {
     }
 
     #[test]
-    fn serial_reference_rejects_broken_routes() {
+    fn broken_routes_fail_at_construction() {
+        // Route validation happens ONCE, when the Route is built — the
+        // serial reference and the engine then consume only valid routes.
         let m = chain_model(902);
-        let x = vec![0.0; 12];
-        let err = forward_route_serial(&m, &names(&["a", "c"]), None, &x).unwrap_err();
+        let err = m.route(&["a", "c"]).unwrap_err();
+        assert!(matches!(err, ServeError::BadRoute { .. }), "{err:?}");
         assert!(format!("{err}").contains("route break"), "{err}");
-        let err = forward_route_serial(&m, &names(&["a", "nope"]), None, &x).unwrap_err();
-        assert!(format!("{err}").contains("'nope'"), "{err}");
+        let err = m.route(&["a", "nope"]).unwrap_err();
+        assert!(matches!(&err, ServeError::UnknownLayer { layer } if layer == "nope"), "{err}");
+    }
+
+    fn test_route(ids: &[usize]) -> Route {
+        Route::from_validated(ids.iter().map(|&i| LayerId::new(i)).collect())
     }
 
     #[test]
     fn traversal_walks_route_then_replies() {
         let (tx, rx) = mpsc::channel();
-        let route = Arc::new(vec![0usize, 1, 2]);
         let t0 = Instant::now();
-        let mut tr = Box::new(Traversal::new(route, 1, None, tx, t0));
-        let rows_of = |_: usize| 4usize;
+        let mut tr = Box::new(Traversal::new(test_route(&[0, 1, 2]), 1, None, tx, t0));
+        let rows_of = |_: LayerId| 4usize;
         for expect_layer in [1usize, 2] {
             match tr.absorb_hop(vec![0.0; 4], 1e-6, 2e-6, 3, 1, &rows_of) {
                 HopOutcome::Reenter { layer, traversal, .. } => {
-                    assert_eq!(layer, expect_layer);
+                    assert_eq!(layer.index(), expect_layer);
                     tr = traversal;
                 }
                 HopOutcome::Replied { .. } => panic!("route not exhausted yet"),
@@ -392,16 +410,15 @@ mod tests {
     #[test]
     fn session_step_bridges_forwards_and_can_stop_early() {
         let (tx, rx) = mpsc::channel();
-        let route = Arc::new(vec![0usize]);
         let step: StepFn =
             Box::new(|k, y| if k < 2 { Some(y.iter().map(|v| v + 1.0).collect()) } else { None });
         let mut tr =
-            Box::new(Traversal::new(route, 10, Some(step), tx, Instant::now()));
-        let rows_of = |_: usize| 2usize;
+            Box::new(Traversal::new(test_route(&[0]), 10, Some(step), tx, Instant::now()));
+        let rows_of = |_: LayerId| 2usize;
         // Forward 1 done → step runs → re-enter at the route head.
         tr = match tr.absorb_hop(vec![1.0, 1.0], 0.0, 0.0, 1, 1, &rows_of) {
             HopOutcome::Reenter { layer, x, traversal } => {
-                assert_eq!(layer, 0);
+                assert_eq!(layer.index(), 0);
                 assert_eq!(x, vec![2.0, 2.0]);
                 traversal
             }
@@ -425,13 +442,7 @@ mod tests {
     fn misshapen_step_output_fails_the_session_actionably() {
         let (tx, rx) = mpsc::channel();
         let step: StepFn = Box::new(|_, _| Some(vec![0.0; 99]));
-        let tr = Box::new(Traversal::new(
-            Arc::new(vec![0usize]),
-            3,
-            Some(step),
-            tx,
-            Instant::now(),
-        ));
+        let tr = Box::new(Traversal::new(test_route(&[0]), 3, Some(step), tx, Instant::now()));
         match tr.absorb_hop(vec![0.0; 2], 0.0, 0.0, 1, 1, &|_| 2usize) {
             HopOutcome::Replied { ok, forwards } => {
                 assert!(!ok);
@@ -440,6 +451,7 @@ mod tests {
             _ => panic!("bad step output must fail the session"),
         }
         let err = rx.recv().unwrap().unwrap_err();
+        assert!(matches!(&err, ServeError::StepFailed { forward: 1, .. }), "{err:?}");
         let msg = format!("{err}");
         assert!(msg.contains("99 values"), "{msg}");
         assert!(msg.contains("takes 2 features"), "{msg}");
@@ -449,18 +461,13 @@ mod tests {
     fn panicking_step_fails_only_its_session() {
         let (tx, rx) = mpsc::channel();
         let step: StepFn = Box::new(|_, _| panic!("injected step panic"));
-        let tr = Box::new(Traversal::new(
-            Arc::new(vec![0usize]),
-            2,
-            Some(step),
-            tx,
-            Instant::now(),
-        ));
+        let tr = Box::new(Traversal::new(test_route(&[0]), 2, Some(step), tx, Instant::now()));
         match tr.absorb_hop(vec![0.0; 2], 0.0, 0.0, 1, 1, &|_| 2usize) {
             HopOutcome::Replied { ok, .. } => assert!(!ok),
             _ => panic!("step panic must fail the session"),
         }
         let err = rx.recv().unwrap().unwrap_err();
+        assert!(matches!(err, ServeError::StepFailed { .. }), "{err:?}");
         assert!(format!("{err}").contains("step function panicked"), "{err}");
     }
 }

@@ -1,5 +1,5 @@
 //! The packed-weight serving subsystem — the inference path CLoQ's
-//! quantize+init stage exists to feed.
+//! quantize+init stage exists to feed, behind one **typed façade**.
 //!
 //! After `quantize_init` produces a frozen INT base plus calibrated LoRA
 //! adapters, serving must consume that state **as quantized**: the memory
@@ -7,71 +7,120 @@
 //! re-materializes dense weights per layer. And because CLoQ's output is
 //! exactly one frozen base plus a cheap per-task adapter pair, the server
 //! is **multi-tenant**: the packed base loads once, and every request
-//! routes to one of many hot-swappable adapters. This module provides the
-//! five pieces:
+//! routes to one of many hot-swappable adapters.
 //!
+//! # The façade, in one sitting
+//!
+//! ```ignore
+//! // Build: validated knobs, no bare config structs.
+//! let engine = ServeEngine::builder(model)
+//!     .workers(4).max_batch(32).max_pending(8192)
+//!     .adapter_budget(512 << 20)
+//!     .build()?;
+//!
+//! // Intern once: names become Copy handles; the hot path never hashes
+//! // or clones a string again.
+//! let wq = engine.layer("blk0.wq")?;                 // LayerId
+//! let tenant = engine.register_adapter(set)?.id;     // AdapterId
+//! let route = engine.route(&model_cfg.forward_route())?; // Route (chain-checked)
+//!
+//! // Submit by handle; failures are typed, not stringly.
+//! match engine.submit(wq, Some(tenant), x).wait() {
+//!     Ok(resp) => consume(resp.y),
+//!     Err(ServeError::Overloaded { .. }) => retry_later(),
+//!     Err(ServeError::ShuttingDown) => reroute(),
+//!     Err(e) => fail_tenant(e),
+//! }
+//!
+//! // Artifacts: one store, three formats, autodetected on open.
+//! let store = ArtifactStore::at("/srv/cloq");
+//! store.save_base(&model, "base.cloqpkd2")?;
+//! store.save_adapter(&set, "tenant-a.cloqadp")?;
+//! match store.open("anything.bin")? {
+//!     Artifact::Base(m) => serve(m),
+//!     Artifact::Adapter(s) => register(s),
+//!     Artifact::LegacyV1 { model, adapters } => migrate(model, adapters),
+//! }
+//! ```
+//!
+//! # The pieces
+//!
+//! * [`error`] — [`ServeError`] / [`ArtifactErrorKind`]: the structured
+//!   error taxonomy every public failure path resolves to (admission
+//!   refusals, overload, shutdown, kernel panics, artifact corruption),
+//!   matched with `matches!` instead of string search and convertible
+//!   into `anyhow` for offline callers (`rust/tests/errors_serve.rs`).
 //! * [`packed`] — [`PackedLayer`]/[`PackedModel`]: the base half — codes
 //!   bit-packed into u32 words plus a **fused unpack→dequant→dot forward
 //!   kernel** that applies a caller-supplied `LoraPair` delta as two
 //!   skinny products (`y = Q̂ᵀx + B(Aᵀx)`), including a grouped batch
-//!   kernel for mixed-adapter micro-batches, and forward-route validation
-//!   (name resolution + output/input width chaining). Bit-identical to
-//!   the dense `q_deq` reference — the parity contract is spelled out in
-//!   the module docs and enforced by `rust/tests/parity_serve.rs`.
-//! * [`adapters`] — [`AdapterSet`]/[`AdapterRegistry`]: the tenant half —
-//!   named per-layer LoRA collections with register/unregister/hot-swap
-//!   under load, pin-counted checkouts, LRU eviction under a byte budget,
-//!   and a blocking per-adapter drain (`rust/tests/lifecycle_adapters.rs`).
-//! * [`artifact`] — versioned binary checkpoints with per-layer CRC-32
-//!   validation and corruption errors that name the offending layer
+//!   kernel for mixed-adapter micro-batches. [`LayerId`] interns layer
+//!   names; [`Route`] is a pre-validated, cheaply-cloneable forward route.
+//!   Bit-identical to the dense `q_deq` reference — the parity contract is
+//!   spelled out in the module docs and enforced by
+//!   `rust/tests/parity_serve.rs`.
+//! * [`adapters`] — [`AdapterSet`]/[`AdapterId`]/[`AdapterRegistry`]: the
+//!   tenant half — named per-layer LoRA collections registered into a
+//!   model-bound registry that interns ids into stable slots,
+//!   shape-checks at registration, resolves each set into a per-layer
+//!   table (per-hop adapter lookup = one array index), pin-counts
+//!   checkouts, LRU-evicts under a byte budget, and drains on unregister
+//!   (`rust/tests/lifecycle_adapters.rs`).
+//! * [`artifact`] — [`ArtifactStore`]/[`Artifact`]: versioned binary
+//!   checkpoints with per-layer CRC-32 validation and typed corruption
+//!   errors that name the offending layer and classify the failure
 //!   (`rust/tests/golden_serve.rs`): the v2 `CLOQPKD2` **base** artifact
 //!   (no LoRA payloads), the small `CLOQADP1` **adapter** artifact so new
-//!   tenants ship without re-shipping the base, and a v1 (`CLOQPKD1`)
-//!   compatibility reader that converts old single-tenant files into
-//!   base + one adapter set.
+//!   tenants ship without re-shipping the base, and the legacy `CLOQPKD1`
+//!   reader — all behind one magic-autodetecting `open`. The old free
+//!   functions remain as `#[deprecated]` shims.
 //! * [`engine`] — [`ServeEngine`]: a batching front-end on the persistent
 //!   `util::threadpool::WorkerPool` that coalesces concurrent requests
 //!   into per-layer micro-batches (grouping same-adapter requests inside
-//!   each batch), with hop-aware backpressure and a drain-aware shutdown,
-//!   and reports per-request latency plus aggregate throughput counters.
+//!   each batch), with hop-aware backpressure, a non-blocking
+//!   [`ServeEngine::close`] and a drain-aware [`ServeEngine::shutdown`],
+//!   configured through [`ServeEngine::builder`].
 //! * [`forward`] — [`ModelRequest`]/[`SessionRequest`]: **full-model
-//!   pipelined forwards**. A request names an ordered layer route (from
-//!   `model::ModelConfig::forward_route` or hand-built); the engine
+//!   pipelined forwards**. A request carries a [`Route`]; the engine
 //!   decomposes it into per-layer hops that re-enter the batcher's FIFO
 //!   after each micro-batch, so concurrent model requests at the same
 //!   depth coalesce into shared grouped kernel calls — continuous
 //!   batching for the layer chain. Sessions run N sequential forwards
 //!   with a caller step function between them (the autoregressive-decode
-//!   shape), entirely inside the engine, with per-session stats in the
-//!   [`ModelResponse`]. Bit-identical (0 ULP) to the caller-driven serial
-//!   reference [`forward_route_serial`] — enforced by
-//!   `rust/tests/parity_forward.rs`, with shutdown/overload/panic
-//!   semantics in `rust/tests/lifecycle_forward.rs`.
+//!   shape). Bit-identical (0 ULP) to the caller-driven serial reference
+//!   [`forward_route_serial`] — enforced by `rust/tests/parity_forward.rs`,
+//!   with shutdown/overload/panic semantics in
+//!   `rust/tests/lifecycle_forward.rs`.
 //!
 //! Benchmarks: `cargo bench --bench bench_serve` writes `BENCH_serve.json`
-//! (fused vs dense forward, batched vs serial throughput),
+//! (fused vs dense forward, batched vs serial throughput, and the
+//! interned-vs-named submission-overhead row),
 //! `cargo bench --bench bench_adapters` writes `BENCH_adapters.json`
 //! (adapter-count sweep, mixed-batch penalty, eviction churn), and
 //! `cargo bench --bench bench_forward` writes `BENCH_forward.json`
 //! (pipelined vs caller-driven-serial full-model throughput across
 //! concurrent session counts, mixed-adapter sweep) — see EXPERIMENTS.md
-//! §Serve, §Adapters and §Forward.
+//! §Serve, §Adapters, §Forward and §API.
 
 pub mod adapters;
 pub mod artifact;
 pub mod engine;
+pub mod error;
 pub mod forward;
 pub mod packed;
 
 pub use adapters::{
-    AdapterHandle, AdapterRegistry, AdapterSet, RegisterOutcome, RegistryStats,
+    AdapterHandle, AdapterId, AdapterRegistry, AdapterSet, RegisterOutcome, RegistryStats,
 };
+pub use artifact::{crc32, Artifact, ArtifactStore, V1_ADAPTER_ID};
+#[allow(deprecated)]
 pub use artifact::{
-    crc32, load_adapter_artifact, load_artifact_compat, load_base_artifact,
-    save_adapter_artifact, save_artifact_v1, save_base_artifact,
+    load_adapter_artifact, load_artifact_compat, load_base_artifact, save_adapter_artifact,
+    save_artifact_v1, save_base_artifact,
 };
-pub use engine::{EngineConfig, EngineStats, Request, Response, ServeEngine, Ticket};
+pub use engine::{EngineStats, Request, Response, ServeEngine, ServeEngineBuilder, Ticket};
+pub use error::{ArtifactErrorKind, ServeError};
 pub use forward::{
     forward_route_serial, ModelRequest, ModelResponse, ModelTicket, SessionRequest, StepFn,
 };
-pub use packed::{words_per_row, DequantParams, PackedLayer, PackedModel};
+pub use packed::{words_per_row, DequantParams, LayerId, PackedLayer, PackedModel, Route};

@@ -37,16 +37,81 @@
 //! order) agreement is to floating-point tolerance only — that comparison
 //! is also in the parity suite, with the tolerance stated there.
 
+use std::sync::Arc;
+
 use crate::linalg::blas::{axpy, dot, matvec_t};
 use crate::linalg::{matmul, Matrix};
 use crate::lowrank::{LayerInit, LoraPair, Method};
 use crate::quant::packing::{pack_codes, try_unpack_codes};
 use crate::quant::{NfQuantized, QuantState, QuantizedTensor};
+use crate::serve::error::ServeError;
 
 /// Words per packed row: codes are row-aligned so each row of an m×n layer
 /// occupies `ceil(n / (32/bits))` little-endian u32 words.
 pub fn words_per_row(cols: usize, bits: u32) -> usize {
     cols.div_ceil(32 / bits as usize)
+}
+
+/// An interned layer handle: the index of a layer inside the
+/// [`PackedModel`] it was resolved against ([`PackedModel::resolve`] /
+/// `ServeEngine::layer`). Resolving once and submitting by id keeps the
+/// per-request hot path free of string hashing and cloning — a `LayerId`
+/// is `Copy` and compares as one integer.
+///
+/// Like any index handle, an id is only meaningful for the model it was
+/// resolved against. The engine bounds-checks at admission (and
+/// re-checks a route's chainability), so an id from a SMALLER or
+/// incompatible model fails with a typed error — but an in-range id from
+/// a different model of compatible shape addresses whatever layer sits
+/// at that index, exactly as a raw index would. Don't mix handles across
+/// engines.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LayerId(u32);
+
+impl LayerId {
+    pub(crate) fn new(index: usize) -> LayerId {
+        LayerId(index as u32)
+    }
+
+    /// The layer's position in its model's `layers` vector.
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// A validated forward route: the ordered [`LayerId`]s a model request
+/// traverses. Built by [`PackedModel::route`] (or `ServeEngine::route`),
+/// which resolves every name once and checks chainability up front —
+/// cloning a `Route` is one `Arc` bump, so submitting the same route for
+/// thousands of requests never re-resolves or re-clones layer names.
+#[derive(Clone, Debug)]
+pub struct Route {
+    hops: Arc<[LayerId]>,
+}
+
+impl Route {
+    /// Construction is crate-private: a `Route` in caller hands has always
+    /// been validated against a model (non-empty, in range, chainable).
+    pub(crate) fn from_validated(ids: Vec<LayerId>) -> Route {
+        debug_assert!(!ids.is_empty());
+        Route { hops: ids.into() }
+    }
+
+    /// The route's layer ids, in traversal order.
+    pub fn as_ids(&self) -> &[LayerId] {
+        &self.hops
+    }
+
+    /// Hops per full forward pass.
+    pub fn len(&self) -> usize {
+        self.hops.len()
+    }
+
+    /// Always false — validated routes are non-empty (provided so callers
+    /// and clippy get the conventional pair).
+    pub fn is_empty(&self) -> bool {
+        self.hops.is_empty()
+    }
 }
 
 /// How a packed layer turns codes into values.
@@ -91,12 +156,14 @@ pub(crate) fn same_adapter(a: Option<&LoraPair>, b: Option<&LoraPair>) -> bool {
 
 impl PackedLayer {
     /// Pack an exact quantization state.
-    pub fn from_state(name: &str, qs: &QuantState) -> anyhow::Result<PackedLayer> {
+    pub fn from_state(name: &str, qs: &QuantState) -> Result<PackedLayer, ServeError> {
         let (rows, cols) = (qs.rows(), qs.cols());
-        anyhow::ensure!(
-            rows >= 1 && cols >= 1,
-            "layer '{name}': degenerate shape {rows}x{cols}"
-        );
+        if rows < 1 || cols < 1 {
+            return Err(ServeError::ShapeMismatch {
+                layer: name.to_string(),
+                detail: format!("degenerate shape {rows}x{cols}"),
+            });
+        }
         let (bits, group_size, codes, params) = match qs {
             QuantState::Int(q) => (
                 q.bits,
@@ -135,15 +202,15 @@ impl PackedLayer {
         name: &str,
         method: Method,
         li: &LayerInit,
-    ) -> anyhow::Result<(PackedLayer, LoraPair)> {
-        let qs = li.quant.as_ref().ok_or_else(|| {
-            anyhow::anyhow!(
+    ) -> Result<(PackedLayer, LoraPair), ServeError> {
+        let qs = li.quant.as_ref().ok_or_else(|| ServeError::Unsupported {
+            detail: format!(
                 "layer '{name}': method {} keeps the fp base and produced no packed \
                  quantization state; re-grid it for serving (e.g. \
                  QuantState::Int(quantize_rtn(&li.q_deq, 8, group_size))) or pick a \
                  quantized method",
                 method.name()
-            )
+            ),
         })?;
         let base = Self::from_state(name, qs)?;
         let pair = li.lora_pair();
@@ -152,19 +219,17 @@ impl PackedLayer {
     }
 
     /// Validate that `pair` fits this base layer (A: rows×r, B: cols×r).
-    pub fn check_adapter(&self, pair: &LoraPair) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            pair.a.rows == self.rows && pair.b.rows == self.cols && pair.a.cols == pair.b.cols,
-            "layer '{}': adapter {}x{} / {}x{} does not fit base {}x{}",
-            self.name,
-            pair.a.rows,
-            pair.a.cols,
-            pair.b.rows,
-            pair.b.cols,
-            self.rows,
-            self.cols,
-        );
-        Ok(())
+    pub fn check_adapter(&self, pair: &LoraPair) -> Result<(), ServeError> {
+        if pair.a.rows == self.rows && pair.b.rows == self.cols && pair.a.cols == pair.b.cols {
+            return Ok(());
+        }
+        Err(ServeError::ShapeMismatch {
+            layer: self.name.clone(),
+            detail: format!(
+                "adapter {}x{} / {}x{} does not fit base {}x{}",
+                pair.a.rows, pair.a.cols, pair.b.rows, pair.b.cols, self.rows, self.cols,
+            ),
+        })
     }
 
     /// Reconstruct the exact quantization state (the artifact roundtrip
@@ -403,27 +468,37 @@ impl PackedModel {
         self.index_of(name).map(|i| &self.layers[i])
     }
 
+    /// Intern a layer name into its [`LayerId`] handle. Resolve once, then
+    /// submit/route by id — the typed façade's hot path never hashes or
+    /// clones names. (This scan is linear; `ServeEngine::layer` resolves
+    /// through its O(1) index.)
+    pub fn resolve(&self, name: &str) -> Result<LayerId, ServeError> {
+        self.index_of(name)
+            .map(LayerId::new)
+            .ok_or_else(|| ServeError::UnknownLayer { layer: name.to_string() })
+    }
+
+    /// The layer behind an interned id (`None` when the id was resolved
+    /// against a different, larger model).
+    pub fn get(&self, id: LayerId) -> Option<&PackedLayer> {
+        self.layers.get(id.index())
+    }
+
     /// Total packed base bytes across layers.
     pub fn packed_bytes(&self) -> usize {
         self.layers.iter().map(|l| l.packed_bytes()).sum()
     }
 
-    /// Resolve an ordered forward route of layer names into indices,
-    /// validating it with [`PackedModel::validate_route`]. Layers may
-    /// repeat (a square layer applied twice is a legal route).
-    pub fn route_indices(&self, route: &[String]) -> anyhow::Result<Vec<usize>> {
-        anyhow::ensure!(!route.is_empty(), "forward route is empty");
-        let mut idxs = Vec::with_capacity(route.len());
-        for name in route {
-            // Same wording as the engine's O(1) admission path
-            // (`ServeEngine::admit_traversal`), so the two route
-            // resolvers cannot drift apart in what callers see.
-            idxs.push(self.index_of(name).ok_or_else(|| {
-                anyhow::anyhow!("no such layer '{name}' in the served model")
-            })?);
+    /// Resolve an ordered forward route of layer names into a validated
+    /// [`Route`] (see [`PackedModel::validate_route`]). Layers may repeat
+    /// (a square layer applied twice is a legal route).
+    pub fn route<S: AsRef<str>>(&self, names: &[S]) -> Result<Route, ServeError> {
+        let mut ids = Vec::with_capacity(names.len());
+        for name in names {
+            ids.push(self.resolve(name.as_ref())?);
         }
-        self.validate_route(&idxs)?;
-        Ok(idxs)
+        self.validate_route(&ids)?;
+        Ok(Route::from_validated(ids))
     }
 
     /// Validate a forward route against the packed shapes: non-empty,
@@ -431,25 +506,33 @@ impl PackedModel {
     /// equal the next layer's input width (`rows`), because hop `k+1`
     /// consumes hop `k`'s activation verbatim. Errors name both ends of
     /// the first break.
-    pub fn validate_route(&self, idxs: &[usize]) -> anyhow::Result<()> {
-        anyhow::ensure!(!idxs.is_empty(), "forward route is empty");
-        for &i in idxs {
-            anyhow::ensure!(
-                i < self.layers.len(),
-                "route layer index {i} out of range ({} layers)",
-                self.layers.len()
-            );
+    pub fn validate_route(&self, ids: &[LayerId]) -> Result<(), ServeError> {
+        if ids.is_empty() {
+            return Err(ServeError::BadRoute { detail: "forward route is empty".to_string() });
         }
-        for w in idxs.windows(2) {
-            let (a, b) = (&self.layers[w[0]], &self.layers[w[1]]);
-            anyhow::ensure!(
-                a.cols == b.rows,
-                "route break between '{}' ({} features out) and '{}' (takes {} features in)",
-                a.name,
-                a.cols,
-                b.name,
-                b.rows
-            );
+        for &id in ids {
+            if id.index() >= self.layers.len() {
+                return Err(ServeError::BadRoute {
+                    detail: format!(
+                        "route layer index {} out of range ({} layers) — id resolved \
+                         against a different model?",
+                        id.index(),
+                        self.layers.len()
+                    ),
+                });
+            }
+        }
+        for w in ids.windows(2) {
+            let (a, b) = (&self.layers[w[0].index()], &self.layers[w[1].index()]);
+            if a.cols != b.rows {
+                return Err(ServeError::BadRoute {
+                    detail: format!(
+                        "route break between '{}' ({} features out) and '{}' (takes {} \
+                         features in)",
+                        a.name, a.cols, b.name, b.rows
+                    ),
+                });
+            }
         }
         Ok(())
     }
@@ -472,22 +555,25 @@ impl PackedModel {
     pub fn from_model_init(
         init: &crate::coordinator::ModelInit,
         adapter_id: &str,
-    ) -> anyhow::Result<(PackedModel, crate::serve::adapters::AdapterSet)> {
-        let exact = init.exact.as_ref().ok_or_else(|| {
-            anyhow::anyhow!(
-                "ModelInit carries no exact serving states: quantize_init was called with \
-                 keep_exact = false (the train/eval-sweep mode); re-run it with \
-                 keep_exact = true to build a packed serving model"
-            )
+    ) -> Result<(PackedModel, crate::serve::adapters::AdapterSet), ServeError> {
+        let exact = init.exact.as_ref().ok_or_else(|| ServeError::Unsupported {
+            detail: "ModelInit carries no exact serving states: quantize_init was called \
+                     with keep_exact = false (the train/eval-sweep mode); re-run it with \
+                     keep_exact = true to build a packed serving model"
+                .to_string(),
         })?;
         let mut layers = Vec::with_capacity(exact.len());
         let mut pairs = Vec::with_capacity(exact.len());
         for (name, qs) in exact {
             let (ka, kb) = (format!("{name}.A"), format!("{name}.B"));
-            anyhow::ensure!(
-                init.lora.contains(&ka) && init.lora.contains(&kb),
-                "layer '{name}': adapters {ka}/{kb} missing from the init's LoRA store"
-            );
+            if !init.lora.contains(&ka) || !init.lora.contains(&kb) {
+                return Err(ServeError::InvalidConfig {
+                    detail: format!(
+                        "layer '{name}': adapters {ka}/{kb} missing from the init's LoRA \
+                         store"
+                    ),
+                });
+            }
             let a = init.lora.get(&ka).to_matrix();
             let b = init.lora.get(&kb).to_matrix();
             let layer = PackedLayer::from_state(name, qs)?;
@@ -615,23 +701,27 @@ mod tests {
             );
         }
         let model = PackedModel::new(layers);
-        let names = |v: &[&str]| v.iter().map(|s| s.to_string()).collect::<Vec<_>>();
         // Chainable, including a repeated layer (a→b is 12→8→12, so a can
         // run again) — and a single-layer route is trivially valid.
-        assert_eq!(model.route_indices(&names(&["a", "b", "a", "b"])).unwrap(), [0, 1, 0, 1]);
-        assert_eq!(model.route_indices(&names(&["c"])).unwrap(), [2]);
-        // Breaks name both ends with their widths.
-        let err = model.route_indices(&names(&["a", "c"])).unwrap_err();
+        let r = model.route(&["a", "b", "a", "b"]).unwrap();
+        let idxs: Vec<usize> = r.as_ids().iter().map(|id| id.index()).collect();
+        assert_eq!(idxs, [0, 1, 0, 1]);
+        assert_eq!(r.len(), 4);
+        assert!(!r.is_empty());
+        assert_eq!(model.route(&["c"]).unwrap().as_ids(), [model.resolve("c").unwrap()]);
+        // Breaks name both ends with their widths, as a typed BadRoute.
+        let err = model.route(&["a", "c"]).unwrap_err();
+        assert!(matches!(err, ServeError::BadRoute { .. }), "{err:?}");
         let msg = format!("{err}");
         assert!(msg.contains("route break"), "{msg}");
         assert!(msg.contains("'a' (8 features out)"), "{msg}");
         assert!(msg.contains("'c' (takes 5 features in)"), "{msg}");
         // Unknown names and empty routes are admission errors too.
-        let err = model.route_indices(&names(&["ghost"])).unwrap_err();
-        assert!(format!("{err}").contains("no such layer 'ghost'"), "{err}");
-        let err = model.route_indices(&[]).unwrap_err();
+        let err = model.route(&["ghost"]).unwrap_err();
+        assert!(matches!(&err, ServeError::UnknownLayer { layer } if layer == "ghost"), "{err}");
+        let err = model.route::<&str>(&[]).unwrap_err();
         assert!(format!("{err}").contains("route is empty"), "{err}");
-        let err = model.validate_route(&[0, 99]).unwrap_err();
+        let err = model.validate_route(&[LayerId::new(0), LayerId::new(99)]).unwrap_err();
         assert!(format!("{err}").contains("out of range"), "{err}");
     }
 

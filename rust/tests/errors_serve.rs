@@ -1,0 +1,345 @@
+//! The error-taxonomy suite: every public failure path of the serving
+//! façade must resolve to its matching [`ServeError`] variant, asserted
+//! with `matches!` — never by string search. This is the contract that
+//! lets callers branch on failures (retry on `Overloaded`, re-route on
+//! `ShuttingDown`, fail the tenant on `UnknownAdapter`) without parsing
+//! messages.
+//!
+//! Paths covered: unknown layer / unknown adapter (resolution AND
+//! submission), adapter-coverage mismatches, shape mismatches, bad route
+//! chains, overload rejection with in-kernel hops counted, post-close
+//! submission, kernel panics (single-layer and mid-traversal), step-fn
+//! failures, artifact corruption naming the layer with a classified
+//! kind, builder/config validation, and the `anyhow` interop offline
+//! callers rely on.
+
+use std::sync::mpsc;
+
+use cloq::linalg::Matrix;
+use cloq::lowrank::LoraPair;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{
+    AdapterSet, ArtifactErrorKind, ArtifactStore, DequantParams, ModelRequest, PackedLayer,
+    PackedModel, ServeEngine, ServeError, SessionRequest, StepFn,
+};
+use cloq::util::prng::Rng;
+
+fn model(seed: u64) -> PackedModel {
+    // wq: 24→10, wo: 18→7 — deliberately NOT chainable.
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    for (name, m, n) in [("wq", 24usize, 10usize), ("wo", 18, 7)] {
+        let w = Matrix::randn(m, n, 0.3, &mut rng);
+        layers.push(
+            PackedLayer::from_state(name, &QuantState::Int(quantize_rtn(&w, 4, 8))).unwrap(),
+        );
+    }
+    PackedModel::new(layers)
+}
+
+fn adapter(id: &str, model: &PackedModel, seed: u64) -> AdapterSet {
+    let mut rng = Rng::new(seed);
+    let mut set = AdapterSet::new(id);
+    for l in &model.layers {
+        set.insert(
+            &l.name,
+            LoraPair::new(
+                Matrix::randn(l.rows, 2, 0.1, &mut rng),
+                Matrix::randn(l.cols, 2, 0.1, &mut rng),
+            ),
+        )
+        .unwrap();
+    }
+    set
+}
+
+#[test]
+fn unknown_layer_and_adapter_are_typed_at_resolution_and_submission() {
+    let engine = ServeEngine::builder(model(800)).build().unwrap();
+    assert!(matches!(
+        engine.layer("ghost").unwrap_err(),
+        ServeError::UnknownLayer { layer } if layer == "ghost"
+    ));
+    assert!(matches!(
+        engine.adapter("nobody").unwrap_err(),
+        ServeError::UnknownAdapter { adapter } if adapter == "nobody"
+    ));
+    // The name-resolving submission path reports the same variants.
+    assert!(matches!(
+        engine.submit_named("ghost", None, vec![0.0; 4]).wait().unwrap_err(),
+        ServeError::UnknownLayer { .. }
+    ));
+    assert!(matches!(
+        engine.submit_named("wq", Some("nobody"), vec![0.0; 24]).wait().unwrap_err(),
+        ServeError::UnknownAdapter { .. }
+    ));
+    engine.shutdown();
+}
+
+#[test]
+fn coverage_and_shape_mismatches_are_typed() {
+    let m = model(801);
+    let engine = ServeEngine::builder(model(801)).build().unwrap();
+    // An adapter covering ONLY wq.
+    let mut partial = AdapterSet::new("partial");
+    {
+        let l = m.layer("wq").unwrap();
+        let mut rng = Rng::new(802);
+        partial
+            .insert(
+                "wq",
+                LoraPair::new(
+                    Matrix::randn(l.rows, 2, 0.1, &mut rng),
+                    Matrix::randn(l.cols, 2, 0.1, &mut rng),
+                ),
+            )
+            .unwrap();
+    }
+    let pid = engine.register_adapter(partial).unwrap().id;
+    let (wq, wo) = (engine.layer("wq").unwrap(), engine.layer("wo").unwrap());
+    // Single-layer coverage miss names the layer.
+    assert!(matches!(
+        engine.submit(wo, Some(pid), vec![0.0; 18]).wait().unwrap_err(),
+        ServeError::AdapterMismatch { adapter, layer: Some(l) }
+            if adapter == "partial" && l == "wo"
+    ));
+    // Route-level coverage miss has layer: None.
+    let wo_route = engine.route(&["wo"]).unwrap();
+    assert!(matches!(
+        engine
+            .submit_model(ModelRequest::with_adapter(wo_route, pid, vec![0.0; 18]))
+            .wait()
+            .unwrap_err(),
+        ServeError::AdapterMismatch { adapter, layer: None } if adapter == "partial"
+    ));
+    // Wrong input width names the layer it missed.
+    assert!(matches!(
+        engine.submit(wq, None, vec![0.0; 3]).wait().unwrap_err(),
+        ServeError::ShapeMismatch { layer, .. } if layer == "wq"
+    ));
+    // A misshapen adapter set is refused at registration.
+    let mut bad = AdapterSet::new("bad");
+    bad.insert("wq", LoraPair::new(Matrix::zeros(24, 2), Matrix::zeros(9, 2))).unwrap();
+    assert!(matches!(
+        engine.register_adapter(bad).unwrap_err(),
+        ServeError::ShapeMismatch { layer, .. } if layer == "wq"
+    ));
+    engine.shutdown();
+}
+
+#[test]
+fn broken_route_chains_are_bad_route() {
+    let engine = ServeEngine::builder(model(803)).build().unwrap();
+    // wq outputs 10 features; wo takes 18 — the chain is broken.
+    assert!(matches!(
+        engine.route(&["wq", "wo"]).unwrap_err(),
+        ServeError::BadRoute { .. }
+    ));
+    assert!(matches!(engine.route::<&str>(&[]).unwrap_err(), ServeError::BadRoute { .. }));
+    // The model-side constructor agrees (same taxonomy offline).
+    let m = model(803);
+    assert!(matches!(m.route(&["wq", "wo"]).unwrap_err(), ServeError::BadRoute { .. }));
+    engine.shutdown();
+}
+
+#[test]
+fn overload_rejection_is_typed_and_counts_in_kernel_hops() {
+    // One worker, max_pending = 1. A session PARKS inside the kernel (its
+    // step fn blocks on a gate), so the engine's only live hop slot is
+    // held by work that is invisible to the FIFO — the next submit must
+    // still be Overloaded.
+    let mut rng = Rng::new(804);
+    let w = Matrix::randn(8, 8, 0.3, &mut rng);
+    let sq = PackedLayer::from_state("sq", &QuantState::Int(quantize_rtn(&w, 4, 8))).unwrap();
+    let engine = ServeEngine::builder(PackedModel::new(vec![sq]))
+        .workers(1)
+        .max_pending(1)
+        .build()
+        .unwrap();
+    let lid = engine.layer("sq").unwrap();
+    let route = engine.route(&["sq"]).unwrap();
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let step: StepFn = Box::new(move |_, y| {
+        entered_tx.send(()).unwrap();
+        gate_rx.recv().unwrap();
+        Some(y.to_vec())
+    });
+    let session = engine.submit_session(SessionRequest::new(route, rng.gauss_vec(8), 2, step));
+    entered_rx.recv().unwrap(); // the hop is mid-kernel; the FIFO is empty
+    let err = engine.submit(lid, None, rng.gauss_vec(8)).wait().unwrap_err();
+    assert!(matches!(err, ServeError::Overloaded { max_pending: 1 }), "{err:?}");
+    gate_tx.send(()).unwrap();
+    assert!(session.wait().is_ok());
+    let stats = engine.shutdown();
+    assert_eq!(stats.rejected, 1);
+}
+
+#[test]
+fn post_close_submission_is_shutting_down() {
+    let engine = ServeEngine::builder(model(805)).build().unwrap();
+    let wq = engine.layer("wq").unwrap();
+    let route = engine.route(&["wq"]).unwrap();
+    let admitted = engine.submit(wq, None, vec![0.5; 24]);
+    engine.close();
+    assert!(matches!(
+        engine.submit(wq, None, vec![0.5; 24]).wait().unwrap_err(),
+        ServeError::ShuttingDown
+    ));
+    assert!(matches!(
+        engine.submit_model(ModelRequest::new(route.clone(), vec![0.5; 24])).wait().unwrap_err(),
+        ServeError::ShuttingDown
+    ));
+    let step: StepFn = Box::new(|_, y| Some(y.to_vec()));
+    assert!(matches!(
+        engine
+            .submit_session(SessionRequest::new(route, vec![0.5; 24], 2, step))
+            .wait()
+            .unwrap_err(),
+        ServeError::ShuttingDown
+    ));
+    assert!(admitted.wait().is_ok(), "pre-close admissions drain normally");
+    let stats = engine.shutdown();
+    assert_eq!(stats.rejected, 3);
+}
+
+/// A layer whose kernel panics on any request (codes index past the
+/// codebook).
+fn boom_layer(n: usize) -> PackedLayer {
+    let wpr = cloq::serve::words_per_row(n, 2);
+    PackedLayer {
+        name: "boom".to_string(),
+        rows: n,
+        cols: n,
+        bits: 2,
+        group_size: n,
+        packed: vec![u32::MAX; n * wpr],
+        params: DequantParams::Codebook {
+            levels: vec![0.0, 1.0],
+            absmax: Matrix::zeros(1, n),
+        },
+    }
+}
+
+#[test]
+fn kernel_and_step_failures_are_typed() {
+    let mut rng = Rng::new(806);
+    let w = Matrix::randn(8, 8, 0.3, &mut rng);
+    let ok = PackedLayer::from_state("ok", &QuantState::Int(quantize_rtn(&w, 4, 8))).unwrap();
+    let engine =
+        ServeEngine::builder(PackedModel::new(vec![ok, boom_layer(8)])).workers(1).build().unwrap();
+    let boom = engine.layer("boom").unwrap();
+    // Single-layer rider: WorkerPanic with hop: None.
+    assert!(matches!(
+        engine.submit(boom, None, vec![1.0; 8]).wait().unwrap_err(),
+        ServeError::WorkerPanic { layer, hop: None, .. } if layer == "boom"
+    ));
+    // Traversal rider: WorkerPanic names the failing hop.
+    let doomed = engine.route(&["ok", "boom"]).unwrap();
+    assert!(matches!(
+        engine
+            .submit_model(ModelRequest::new(doomed, rng.gauss_vec(8)))
+            .wait()
+            .unwrap_err(),
+        ServeError::WorkerPanic { layer, hop: Some(2), .. } if layer == "boom"
+    ));
+    // Step-fn failures are StepFailed, not WorkerPanic.
+    let ok_route = engine.route(&["ok"]).unwrap();
+    let panicking: StepFn = Box::new(|_, _| panic!("boom step"));
+    assert!(matches!(
+        engine
+            .submit_session(SessionRequest::new(ok_route, rng.gauss_vec(8), 2, panicking))
+            .wait()
+            .unwrap_err(),
+        ServeError::StepFailed { forward: 1, .. }
+    ));
+    engine.shutdown();
+}
+
+#[test]
+fn corrupt_artifacts_are_typed_with_kind_and_layer() {
+    let store = ArtifactStore::at(
+        std::env::temp_dir().join(format!("cloq_errors_{}", std::process::id())),
+    );
+    let m = model(807);
+    let path = store.save_base(&m, "base.cloqpkd2").unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // Flip a bit deep in the LAST layer's payload: checksum catches it
+    // and the typed error carries both the classified kind and the
+    // offending layer's NAME.
+    let n = bytes.len();
+    bytes[n - 30] ^= 0x40;
+    std::fs::write(store.path("bad.cloqpkd2"), &bytes).unwrap();
+    assert!(matches!(
+        store.open("bad.cloqpkd2").unwrap_err(),
+        ServeError::Artifact {
+            kind: ArtifactErrorKind::ChecksumMismatch,
+            layer: Some(l),
+            ..
+        } if l == "wo"
+    ));
+    // Truncation and magic/version damage classify differently.
+    std::fs::write(store.path("cut.cloqpkd2"), &bytes[..n / 2]).unwrap();
+    assert!(matches!(
+        store.open("cut.cloqpkd2").unwrap_err(),
+        ServeError::Artifact { kind: ArtifactErrorKind::Truncated, .. }
+    ));
+    std::fs::write(store.path("junk.bin"), b"NOTCLOQ!whatever").unwrap();
+    assert!(matches!(
+        store.open("junk.bin").unwrap_err(),
+        ServeError::Artifact { kind: ArtifactErrorKind::BadMagic, .. }
+    ));
+    assert!(matches!(
+        store.open("missing.bin").unwrap_err(),
+        ServeError::Artifact { kind: ArtifactErrorKind::Io, .. }
+    ));
+    std::fs::remove_dir_all(store.dir()).ok();
+}
+
+#[test]
+fn config_validation_is_typed() {
+    assert!(matches!(
+        ServeEngine::builder(model(808)).workers(0).build().unwrap_err(),
+        ServeError::InvalidConfig { .. }
+    ));
+    assert!(matches!(
+        ServeEngine::builder(model(808)).max_pending(0).build().unwrap_err(),
+        ServeError::InvalidConfig { .. }
+    ));
+    // An adapter set larger than the whole registry budget is config-bad.
+    let m = model(809);
+    let engine = ServeEngine::builder(model(809)).adapter_budget(8).build().unwrap();
+    assert!(matches!(
+        engine.register_adapter(adapter("huge", &m, 810)).unwrap_err(),
+        ServeError::InvalidConfig { .. }
+    ));
+    // Duplicate layers inside one adapter set are config-bad too.
+    let mut dup = AdapterSet::new("dup");
+    dup.insert("wq", LoraPair::new(Matrix::zeros(24, 1), Matrix::zeros(10, 1))).unwrap();
+    assert!(matches!(
+        dup.insert("wq", LoraPair::new(Matrix::zeros(24, 1), Matrix::zeros(10, 1)))
+            .unwrap_err(),
+        ServeError::InvalidConfig { .. }
+    ));
+    engine.shutdown();
+}
+
+#[test]
+fn serve_errors_flow_into_anyhow_for_offline_callers() {
+    // The coordinator-style pattern: typed serve results consumed in an
+    // anyhow context with plain `?`.
+    fn offline(engine: &ServeEngine) -> anyhow::Result<usize> {
+        let wq = engine.layer("wq")?;
+        let y = engine.submit(wq, None, vec![0.25; 24]).wait()?;
+        Ok(y.y.len())
+    }
+    let engine = ServeEngine::builder(model(811)).build().unwrap();
+    assert_eq!(offline(&engine).unwrap(), 10);
+    fn offline_bad(engine: &ServeEngine) -> anyhow::Result<()> {
+        engine.layer("ghost")?;
+        Ok(())
+    }
+    let msg = format!("{}", offline_bad(&engine).unwrap_err());
+    assert!(msg.contains("no such layer 'ghost'"), "{msg}");
+    engine.shutdown();
+}

@@ -1,23 +1,26 @@
-//! Golden tests for the packed serving artifacts: save → load must
-//! reproduce the exact quantization state **byte-identically** (codes,
-//! scales/zeros, codebook levels/absmax) and adapter pairs exactly, and a
-//! **bit-identical** packed forward, across bits {2,3,4,8} × group sizes
-//! {32,64}; truncated and bit-flipped files must fail with errors naming
-//! the offending layer; and the v1 → v2 compatibility shim must convert
-//! legacy single-tenant files into base + one adapter set with
-//! bit-identical forward outputs.
+//! Golden tests for the packed serving artifacts through the unified
+//! [`ArtifactStore`]: save → open must reproduce the exact quantization
+//! state **byte-identically** (codes, scales/zeros, codebook
+//! levels/absmax) and adapter pairs exactly, and a **bit-identical**
+//! packed forward, across bits {2,3,4,8} × group sizes {32,64}; truncated
+//! and bit-flipped files must fail with typed `ServeError::Artifact`
+//! errors whose `kind` classifies the corruption and whose message names
+//! the offending layer; and a legacy v1 file must open as
+//! `Artifact::LegacyV1` with bit-identical forward outputs.
 
 use cloq::linalg::Matrix;
 use cloq::lowrank::LoraPair;
 use cloq::quant::{quantize_nf, quantize_rtn, QuantState};
 use cloq::serve::{
-    load_adapter_artifact, load_artifact_compat, load_base_artifact, save_adapter_artifact,
-    save_artifact_v1, save_base_artifact, AdapterSet, PackedLayer, PackedModel,
+    AdapterSet, Artifact, ArtifactErrorKind, ArtifactStore, PackedLayer, PackedModel,
+    ServeError, V1_ADAPTER_ID,
 };
 use cloq::util::prng::Rng;
 
-fn tmp(tag: &str) -> std::path::PathBuf {
-    std::env::temp_dir().join(format!("cloq_golden_{tag}_{}", std::process::id()))
+fn store(tag: &str) -> ArtifactStore {
+    ArtifactStore::at(
+        std::env::temp_dir().join(format!("cloq_golden_{tag}_{}", std::process::id())),
+    )
 }
 
 fn assert_state_bytes_identical(a: &QuantState, b: &QuantState, what: &str) {
@@ -98,14 +101,12 @@ fn build_model(seed: u64) -> (PackedModel, AdapterSet, Vec<QuantState>) {
 
 #[test]
 fn roundtrip_byte_identical_states_and_bit_identical_forward() {
-    let dir = tmp("roundtrip");
+    let st = store("roundtrip");
     let (model, set, states) = build_model(600);
-    let bpath = dir.join("base.cloqpkd2");
-    let apath = dir.join("tenant.cloqadp");
-    save_base_artifact(&model, &bpath).unwrap();
-    save_adapter_artifact(&set, &apath).unwrap();
-    let loaded = load_base_artifact(&bpath).unwrap();
-    let lset = load_adapter_artifact(&apath).unwrap();
+    let bpath = st.save_base(&model, "base.cloqpkd2").unwrap();
+    let apath = st.save_adapter(&set, "tenant.cloqadp").unwrap();
+    let loaded = st.load_base("base.cloqpkd2").unwrap();
+    let lset = st.load_adapter("tenant.cloqadp").unwrap();
     assert_eq!(loaded.layers.len(), model.layers.len());
     assert_eq!(lset.id(), set.id());
     assert_eq!(lset.len(), set.len());
@@ -130,28 +131,27 @@ fn roundtrip_byte_identical_states_and_bit_identical_forward() {
 
     // Save → load → save is byte-stable for both artifacts (no hidden
     // nondeterminism).
-    let bpath2 = dir.join("base2.cloqpkd2");
-    save_base_artifact(&loaded, &bpath2).unwrap();
+    let bpath2 = st.save_base(&loaded, "base2.cloqpkd2").unwrap();
     assert_eq!(std::fs::read(&bpath).unwrap(), std::fs::read(&bpath2).unwrap());
-    let apath2 = dir.join("tenant2.cloqadp");
-    save_adapter_artifact(&lset, &apath2).unwrap();
+    let apath2 = st.save_adapter(&lset, "tenant2.cloqadp").unwrap();
     assert_eq!(std::fs::read(&apath).unwrap(), std::fs::read(&apath2).unwrap());
-    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(st.dir()).ok();
 }
 
 #[test]
-fn v1_artifact_converts_to_base_plus_adapter_with_identical_bits() {
-    // The compatibility shim: a legacy CLOQPKD1 file (adapters embedded
-    // per layer) loads as base + one AdapterSet named "v1", and forwards
-    // through the converted halves are byte-for-byte what the embedded
-    // layout produced.
-    let dir = tmp("v1shim");
+fn v1_artifact_opens_as_legacy_with_identical_bits() {
+    // The legacy path: a CLOQPKD1 file (adapters embedded per layer)
+    // opens as Artifact::LegacyV1 — base + one AdapterSet named "v1" —
+    // and forwards through the converted halves are byte-for-byte what
+    // the embedded layout produced.
+    let st = store("v1shim");
     let (model, set, _) = build_model(610);
-    let path = dir.join("legacy.cloqpkd");
-    save_artifact_v1(&model, &set, &path).unwrap();
-    let (loaded, lset) = load_artifact_compat(&path).unwrap();
-    let lset = lset.expect("v1 files carry embedded adapters");
-    assert_eq!(lset.id(), "v1");
+    st.save_legacy_v1(&model, &set, "legacy.cloqpkd").unwrap();
+    let (loaded, lset) = match st.open("legacy.cloqpkd").unwrap() {
+        Artifact::LegacyV1 { model, adapters } => (model, adapters),
+        other => panic!("expected LegacyV1, got {}", other.kind_name()),
+    };
+    assert_eq!(lset.id(), V1_ADAPTER_ID);
     assert_eq!(loaded.layers.len(), model.layers.len());
     assert_eq!(lset.len(), model.layers.len());
     let mut rng = Rng::new(611);
@@ -163,59 +163,70 @@ fn v1_artifact_converts_to_base_plus_adapter_with_identical_bits() {
         let ya = orig.forward(&x, set.get(&orig.name));
         let yb = got.forward(&x, lset.get(&got.name));
         for (u, v) in ya.iter().zip(&yb) {
-            assert_eq!(u.to_bits(), v.to_bits(), "{}: forward through the shim", orig.name);
+            assert_eq!(u.to_bits(), v.to_bits(), "{}: forward through the legacy path", orig.name);
         }
     }
-    // A v2 base file through the same entry point reports no adapters.
-    let bpath = dir.join("base.cloqpkd2");
-    save_base_artifact(&model, &bpath).unwrap();
-    let (_, none) = load_artifact_compat(&bpath).unwrap();
-    assert!(none.is_none(), "v2 base artifacts carry no adapters");
-    std::fs::remove_dir_all(&dir).ok();
+    // A v2 base file through the same entry point is a plain Base, and
+    // the typed base accessor refuses the legacy file with a pointer.
+    st.save_base(&model, "base.cloqpkd2").unwrap();
+    assert!(matches!(st.open("base.cloqpkd2").unwrap(), Artifact::Base(_)));
+    let err = st.load_base("legacy.cloqpkd").unwrap_err();
+    assert!(matches!(err, ServeError::Unsupported { .. }), "{err:?}");
+    assert!(format!("{err}").contains("LegacyV1"), "{err}");
+    std::fs::remove_dir_all(st.dir()).ok();
 }
 
 #[test]
 fn truncated_artifact_names_the_layer_it_died_in() {
-    let dir = tmp("trunc");
+    let st = store("trunc");
     let (model, _, _) = build_model(602);
-    let path = dir.join("base.cloqpkd2");
-    save_base_artifact(&model, &path).unwrap();
+    let path = st.save_base(&model, "base.cloqpkd2").unwrap();
     let bytes = std::fs::read(&path).unwrap();
 
-    // Cut in the middle of the file: some layers load, then a named error.
+    // Cut in the middle of the file: some layers load, then a typed
+    // Truncated error naming the layer index.
     let cut = bytes.len() / 2;
-    let tpath = dir.join("trunc.cloqpkd2");
-    std::fs::write(&tpath, &bytes[..cut]).unwrap();
-    let msg = format!("{}", load_base_artifact(&tpath).unwrap_err());
-    assert!(msg.contains("layer "), "{msg}");
-    assert!(msg.contains("truncated"), "{msg}");
+    std::fs::write(st.path("trunc.cloqpkd2"), &bytes[..cut]).unwrap();
+    let err = st.open("trunc.cloqpkd2").unwrap_err();
+    assert!(
+        matches!(
+            &err,
+            ServeError::Artifact { kind: ArtifactErrorKind::Truncated, .. }
+        ),
+        "{err:?}"
+    );
+    assert!(format!("{err}").contains("layer "), "{err}");
 
     // Cut just before the final checksum: the LAST layer is named.
-    let tpath2 = dir.join("trunc2.cloqpkd2");
-    std::fs::write(&tpath2, &bytes[..bytes.len() - 2]).unwrap();
-    let msg2 = format!("{}", load_base_artifact(&tpath2).unwrap_err());
+    std::fs::write(st.path("trunc2.cloqpkd2"), &bytes[..bytes.len() - 2]).unwrap();
+    let err = st.open("trunc2.cloqpkd2").unwrap_err();
+    assert!(
+        matches!(
+            &err,
+            ServeError::Artifact { kind: ArtifactErrorKind::Truncated, .. }
+        ),
+        "{err:?}"
+    );
+    let msg = format!("{err}");
     let n = model.layers.len();
     assert!(
-        msg2.contains(&format!("layer {}/{n}", n - 1)),
-        "expected the last layer named: {msg2}"
+        msg.contains(&format!("layer {}/{n}", n - 1)),
+        "expected the last layer named: {msg}"
     );
-    assert!(msg2.contains("checksum") || msg2.contains("truncated"), "{msg2}");
-    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(st.dir()).ok();
 }
 
 #[test]
 fn flipped_bit_is_caught_by_the_layer_checksum() {
-    let dir = tmp("flip");
+    let st = store("flip");
     let (model, set, _) = build_model(603);
-    let bpath = dir.join("base.cloqpkd2");
-    save_base_artifact(&model, &bpath).unwrap();
-    let apath = dir.join("tenant.cloqadp");
-    save_adapter_artifact(&set, &apath).unwrap();
+    let bpath = st.save_base(&model, "base.cloqpkd2").unwrap();
+    let apath = st.save_adapter(&set, "tenant.cloqadp").unwrap();
 
-    // Flip one bit at several depths in BOTH artifact kinds; every load
-    // must fail with a checksum error that names a layer (never load
-    // garbage silently). Offsets start past each header so the flip lands
-    // in the CRC-framed record region.
+    // Flip one bit at several depths in BOTH artifact kinds; every open
+    // must fail with a typed Artifact error that names a layer (never
+    // load garbage silently). Offsets start past each header so the flip
+    // lands in the CRC-framed record region.
     // Headers: base = magic(8)+version(4)+count(4);
     // adapter = magic(8)+version(4)+id_len(4)+id+count(4).
     let cases: [(&std::path::Path, usize, &str); 2] =
@@ -227,19 +238,18 @@ fn flipped_bit_is_caught_by_the_layer_checksum() {
             let span = bytes.len() - header - 4;
             let pos = header + (span as f64 * frac) as usize;
             bytes[pos] ^= 0x01;
-            let bad = dir.join(format!("flip_{kind}_{pos}"));
-            std::fs::write(&bad, &bytes).unwrap();
-            let result = if kind == "base" {
-                load_base_artifact(&bad).map(|_| ())
-            } else {
-                load_adapter_artifact(&bad).map(|_| ())
-            };
-            match result {
+            let name = format!("flip_{kind}_{pos}");
+            std::fs::write(st.path(&name), &bytes).unwrap();
+            match st.open(&name) {
                 Err(e) => {
+                    assert!(
+                        matches!(e, ServeError::Artifact { .. }),
+                        "{kind} pos {pos}: {e:?}"
+                    );
                     let msg = format!("{e}");
                     assert!(msg.contains("layer "), "{kind} pos {pos}: {msg}");
                 }
-                Ok(()) => {
+                Ok(_) => {
                     // This format has no padding: every byte is covered by
                     // a length field, a checksum, or checksummed payload.
                     panic!("{kind}: flipped byte at {pos} loaded silently");
@@ -247,17 +257,16 @@ fn flipped_bit_is_caught_by_the_layer_checksum() {
             }
         }
     }
-    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(st.dir()).ok();
 }
 
 #[test]
-fn unpack_error_path_reaches_the_loader() {
+fn unpack_error_path_reaches_the_loader_as_malformed() {
     // A layer advertising more packed words than its payload carries is a
-    // structural error naming the field, not a panic.
-    let dir = tmp("struct");
+    // structural (Malformed) error naming the field, not a panic.
+    let st = store("struct");
     let (model, _, _) = build_model(604);
-    let path = dir.join("base.cloqpkd2");
-    save_base_artifact(&model, &path).unwrap();
+    let path = st.save_base(&model, "base.cloqpkd2").unwrap();
     let mut bytes = std::fs::read(&path).unwrap();
     // Header: magic(8) + version(4) + count(4). First layer record:
     // len(8) + payload. Payload: name_len(4) + name + kind(1) + bits(4) …
@@ -271,10 +280,17 @@ fn unpack_error_path_reaches_the_loader() {
     let len = u64::from_le_bytes(bytes[16..24].try_into().unwrap()) as usize;
     let crc = cloq::serve::crc32(&bytes[24..24 + len]);
     bytes[24 + len..24 + len + 4].copy_from_slice(&crc.to_le_bytes());
-    let bpath = dir.join("lied.cloqpkd2");
-    std::fs::write(&bpath, &bytes).unwrap();
-    let msg = format!("{}", load_base_artifact(&bpath).unwrap_err());
+    std::fs::write(st.path("lied.cloqpkd2"), &bytes).unwrap();
+    let err = st.open("lied.cloqpkd2").unwrap_err();
+    assert!(
+        matches!(
+            &err,
+            ServeError::Artifact { kind: ArtifactErrorKind::Malformed, layer: Some(_), .. }
+        ),
+        "{err:?}"
+    );
+    let msg = format!("{err}");
     assert!(msg.contains("layer 0"), "{msg}");
     assert!(msg.contains("packed words") || msg.contains("needs"), "{msg}");
-    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(st.dir()).ok();
 }

@@ -1,14 +1,17 @@
 //! Adapter lifecycle under load: hot-swap atomicity, pinned-LRU eviction,
-//! unregister drains, and the ship-an-adapter-without-the-base flow.
+//! unregister drains, and the ship-an-adapter-without-the-base flow — all
+//! through the typed façade (interned `AdapterId`s, builder config, the
+//! unified `ArtifactStore`).
 //!
 //! The contracts under test (see `serve::adapters` module docs):
 //!
 //! * a response is computed entirely with the adapter VERSION resolved at
 //!   admission — a hot-swap never mixes old and new weights in one
-//!   response;
+//!   response (and never invalidates the interned id);
 //! * LRU eviction never evicts an adapter with queued (pinned) requests;
 //! * `unregister_adapter` blocks until every pinned request is answered
-//!   and rejects new submissions immediately;
+//!   and rejects new submissions immediately, as a typed
+//!   `ServeError::UnknownAdapter`;
 //! * a base artifact plus a separately-shipped adapter artifact serve
 //!   bit-identically to the in-memory halves.
 
@@ -16,8 +19,7 @@ use cloq::linalg::Matrix;
 use cloq::lowrank::LoraPair;
 use cloq::quant::{quantize_rtn, QuantState};
 use cloq::serve::{
-    load_adapter_artifact, load_base_artifact, save_adapter_artifact, save_base_artifact,
-    AdapterSet, EngineConfig, PackedLayer, PackedModel, Request, ServeEngine,
+    AdapterSet, ArtifactStore, PackedLayer, PackedModel, Request, ServeEngine, ServeError,
 };
 use cloq::util::prng::Rng;
 
@@ -52,32 +54,33 @@ fn hot_swap_never_mixes_versions_within_a_response() {
     let v2_pair = v2.get("lin").unwrap().clone();
     let reference = base_model(m, n, 700); // same seed → same base bits
 
-    let engine = ServeEngine::new(
-        model,
-        EngineConfig { workers: 2, max_batch: 8, ..EngineConfig::default() },
-    );
-    engine.register_adapter(v1).unwrap();
+    let engine = ServeEngine::builder(model).workers(2).max_batch(8).build().unwrap();
+    let lin = engine.layer("lin").unwrap();
+    let t_id = engine.register_adapter(v1).unwrap().id;
     let mut rng = Rng::new(703);
     let xs1: Vec<Vec<f64>> = (0..16).map(|_| rng.gauss_vec(m)).collect();
     let t1 = engine
-        .submit_all(xs1.iter().map(|x| Request::with_adapter("lin", "t", x.clone())).collect());
-    // Swap while the first burst is queued/in flight.
-    engine.register_adapter(v2).unwrap();
+        .submit_all(xs1.iter().map(|x| Request::with_adapter(lin, t_id, x.clone())).collect());
+    // Swap while the first burst is queued/in flight — the interned id
+    // survives (slots are stable), only the version behind it changes.
+    let swap = engine.register_adapter(v2).unwrap();
+    assert!(swap.replaced);
+    assert_eq!(swap.id, t_id);
     let xs2: Vec<Vec<f64>> = (0..16).map(|_| rng.gauss_vec(m)).collect();
     let t2 = engine
-        .submit_all(xs2.iter().map(|x| Request::with_adapter("lin", "t", x.clone())).collect());
+        .submit_all(xs2.iter().map(|x| Request::with_adapter(lin, t_id, x.clone())).collect());
 
     // Admission-time version pinning makes the split deterministic: every
     // pre-swap request serves v1 bits, every post-swap request v2 bits —
     // and in particular no response can blend the two.
-    let lin = reference.layer("lin").unwrap();
+    let lin_ref = reference.layer("lin").unwrap();
     for (k, (t, x)) in t1.into_iter().zip(&xs1).enumerate() {
         let y = t.wait().unwrap().y;
-        assert_bits_eq(&y, &lin.forward(x, Some(&v1_pair)), &format!("pre-swap {k}"));
+        assert_bits_eq(&y, &lin_ref.forward(x, Some(&v1_pair)), &format!("pre-swap {k}"));
     }
     for (k, (t, x)) in t2.into_iter().zip(&xs2).enumerate() {
         let y = t.wait().unwrap().y;
-        assert_bits_eq(&y, &lin.forward(x, Some(&v2_pair)), &format!("post-swap {k}"));
+        assert_bits_eq(&y, &lin_ref.forward(x, Some(&v2_pair)), &format!("post-swap {k}"));
     }
     engine.shutdown();
 }
@@ -93,20 +96,19 @@ fn eviction_never_evicts_an_adapter_with_queued_requests() {
     let hot = adapter("hot", m, n, 4, 711);
     let hot_pair = hot.get("lin").unwrap().clone();
     let budget = 2 * hot.bytes();
-    let engine = ServeEngine::new(
-        model,
-        EngineConfig {
-            workers: 1,
-            max_batch: 2,
-            max_pending: 8192,
-            adapter_budget_bytes: budget,
-        },
-    );
-    engine.register_adapter(hot).unwrap();
+    let engine = ServeEngine::builder(model)
+        .workers(1)
+        .max_batch(2)
+        .max_pending(8192)
+        .adapter_budget(budget)
+        .build()
+        .unwrap();
+    let lin = engine.layer("lin").unwrap();
+    let hot_id = engine.register_adapter(hot).unwrap().id;
     let mut rng = Rng::new(712);
     let xs: Vec<Vec<f64>> = (0..256).map(|_| rng.gauss_vec(m)).collect();
     let tickets = engine
-        .submit_all(xs.iter().map(|x| Request::with_adapter("lin", "hot", x.clone())).collect());
+        .submit_all(xs.iter().map(|x| Request::with_adapter(lin, hot_id, x.clone())).collect());
     // While the single worker grinds through 128 micro-batches, pile on
     // cold adapters well past the budget.
     for (id, seed) in [("b", 713u64), ("c", 714), ("d", 715)] {
@@ -119,10 +121,10 @@ fn eviction_never_evicts_an_adapter_with_queued_requests() {
     );
     assert!(engine.registry().stats().evictions >= 1, "budget of 2 never forced an eviction");
     // Every queued request still serves the right weights.
-    let lin = reference.layer("lin").unwrap();
+    let lin_ref = reference.layer("lin").unwrap();
     for (k, (t, x)) in tickets.into_iter().zip(&xs).enumerate() {
         let y = t.wait().unwrap().y;
-        assert_bits_eq(&y, &lin.forward(x, Some(&hot_pair)), &format!("request {k}"));
+        assert_bits_eq(&y, &lin_ref.forward(x, Some(&hot_pair)), &format!("request {k}"));
     }
     engine.shutdown();
 }
@@ -134,26 +136,28 @@ fn unregister_is_a_full_drain_then_a_hard_barrier() {
     let reference = base_model(m, n, 720);
     let set = adapter("ten", m, n, 3, 721);
     let pair = set.get("lin").unwrap().clone();
-    let engine = ServeEngine::new(
-        model,
-        EngineConfig { workers: 2, max_batch: 4, ..EngineConfig::default() },
-    );
-    engine.register_adapter(set).unwrap();
+    let engine = ServeEngine::builder(model).workers(2).max_batch(4).build().unwrap();
+    let lin = engine.layer("lin").unwrap();
+    let ten = engine.register_adapter(set).unwrap().id;
     let mut rng = Rng::new(722);
     let xs: Vec<Vec<f64>> = (0..64).map(|_| rng.gauss_vec(m)).collect();
     let tickets = engine
-        .submit_all(xs.iter().map(|x| Request::with_adapter("lin", "ten", x.clone())).collect());
+        .submit_all(xs.iter().map(|x| Request::with_adapter(lin, ten, x.clone())).collect());
     engine.unregister_adapter("ten").unwrap();
     // The drain returned ⇒ every ticket must already hold its response —
     // resolve them without blocking semantics mattering, and check bits.
-    let lin = reference.layer("lin").unwrap();
+    let lin_ref = reference.layer("lin").unwrap();
     for (k, (t, x)) in tickets.into_iter().zip(&xs).enumerate() {
         let y = t.wait().unwrap().y;
-        assert_bits_eq(&y, &lin.forward(x, Some(&pair)), &format!("request {k}"));
+        assert_bits_eq(&y, &lin_ref.forward(x, Some(&pair)), &format!("request {k}"));
     }
-    // And the barrier holds: the id is gone for new work.
-    let err = engine.submit("lin", Some("ten"), rng.gauss_vec(m)).wait().unwrap_err();
-    assert!(format!("{err}").contains("not registered"), "{err}");
+    // And the barrier holds: the id is gone for new work, as a TYPED
+    // error naming the tenant.
+    let err = engine.submit(lin, Some(ten), rng.gauss_vec(m)).wait().unwrap_err();
+    assert!(
+        matches!(&err, ServeError::UnknownAdapter { adapter } if adapter == "ten"),
+        "{err:?}"
+    );
     let stats = engine.shutdown();
     assert_eq!(stats.requests, 64);
     assert_eq!(stats.rejected, 1);
@@ -162,25 +166,29 @@ fn unregister_is_a_full_drain_then_a_hard_barrier() {
 #[test]
 fn shipped_adapter_artifact_serves_bit_identically() {
     // The multi-tenant deployment flow: the base ships once (v2 artifact),
-    // each tenant ships a small adapter artifact; loading both and serving
-    // matches the in-memory halves bit-for-bit.
-    let dir = std::env::temp_dir().join(format!("cloq_lifecycle_{}", std::process::id()));
+    // each tenant ships a small adapter artifact; loading both through the
+    // unified store and serving matches the in-memory halves bit-for-bit.
+    let store = ArtifactStore::at(
+        std::env::temp_dir().join(format!("cloq_lifecycle_{}", std::process::id())),
+    );
     let (m, n) = (40usize, 18usize);
     let model = base_model(m, n, 730);
     let set = adapter("tenant-7", m, n, 4, 731);
     let pair = set.get("lin").unwrap().clone();
-    let bpath = dir.join("base.cloqpkd2");
-    let apath = dir.join("tenant7.cloqadp");
-    save_base_artifact(&model, &bpath).unwrap();
-    save_adapter_artifact(&set, &apath).unwrap();
+    store.save_base(&model, "base.cloqpkd2").unwrap();
+    store.save_adapter(&set, "tenant7.cloqadp").unwrap();
 
-    let engine = ServeEngine::new(load_base_artifact(&bpath).unwrap(), EngineConfig::default());
-    engine.register_adapter(load_adapter_artifact(&apath).unwrap()).unwrap();
+    let engine = ServeEngine::builder(store.load_base("base.cloqpkd2").unwrap())
+        .build()
+        .unwrap();
+    let shipped = store.load_adapter("tenant7.cloqadp").unwrap();
+    let tenant = engine.register_adapter(shipped).unwrap().id;
+    let lin = engine.layer("lin").unwrap();
     let mut rng = Rng::new(732);
     let x = rng.gauss_vec(m);
-    let y = engine.submit("lin", Some("tenant-7"), x.clone()).wait().unwrap().y;
+    let y = engine.submit(lin, Some(tenant), x.clone()).wait().unwrap().y;
     let direct = model.layer("lin").unwrap().forward(&x, Some(&pair));
     assert_bits_eq(&y, &direct, "artifact-shipped adapter");
     engine.shutdown();
-    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(store.dir()).ok();
 }

@@ -2,15 +2,16 @@
 //! shutdown (every admitted traversal finishes every remaining hop),
 //! hop-aware backpressure (in-kernel hops count toward the admission
 //! limit, not just FIFO entries), and failure isolation (a panicking
-//! layer kernel or session step function fails only its own request, with
-//! the layer named).
+//! layer kernel or session step function fails only its own request) —
+//! with every failure asserted as its typed `ServeError` variant, not a
+//! string search.
 
 use std::sync::mpsc;
 
 use cloq::linalg::Matrix;
 use cloq::quant::{quantize_rtn, QuantState};
 use cloq::serve::{
-    DequantParams, EngineConfig, ModelRequest, PackedLayer, PackedModel, ServeEngine,
+    DequantParams, ModelRequest, PackedLayer, PackedModel, ServeEngine, ServeError,
     SessionRequest, StepFn,
 };
 use cloq::util::prng::Rng;
@@ -19,10 +20,6 @@ fn square_layer(name: &str, n: usize, seed: u64) -> PackedLayer {
     let mut rng = Rng::new(seed);
     let w = Matrix::randn(n, n, 0.3, &mut rng);
     PackedLayer::from_state(name, &QuantState::Int(quantize_rtn(&w, 4, 8))).unwrap()
-}
-
-fn names(v: &[&str]) -> Vec<String> {
-    v.iter().map(|s| s.to_string()).collect()
 }
 
 #[test]
@@ -36,11 +33,8 @@ fn shutdown_drains_every_hop_of_admitted_traversals() {
         square_layer("b", 16, 701),
         square_layer("c", 16, 702),
     ]);
-    let engine = ServeEngine::new(
-        model,
-        EngineConfig { workers: 1, max_batch: 8, ..EngineConfig::default() },
-    );
-    let route = names(&["a", "b", "c"]);
+    let engine = ServeEngine::builder(model).workers(1).max_batch(8).build().unwrap();
+    let route = engine.route(&["a", "b", "c"]).unwrap();
     let mut rng = Rng::new(703);
     let models: Vec<_> = (0..24)
         .map(|_| engine.submit_model(ModelRequest::new(route.clone(), rng.gauss_vec(16))))
@@ -69,13 +63,17 @@ fn backpressure_counts_in_kernel_hops_not_just_the_fifo() {
     // max_pending = 2, one worker. A session parks INSIDE the kernel
     // worker (its step fn blocks on a gate), so the FIFO is empty while
     // one live hop slot is held. One more admission fits; the next must
-    // be rejected as overloaded even though the queue holds just one
+    // be rejected as Overloaded even though the queue holds just one
     // entry — the in-flight hop counts.
     let model = PackedModel::new(vec![square_layer("sq", 12, 710)]);
-    let engine = ServeEngine::new(
-        model,
-        EngineConfig { workers: 1, max_batch: 4, max_pending: 2, ..EngineConfig::default() },
-    );
+    let engine = ServeEngine::builder(model)
+        .workers(1)
+        .max_batch(4)
+        .max_pending(2)
+        .build()
+        .unwrap();
+    let sq = engine.layer("sq").unwrap();
+    let route = engine.route(&["sq"]).unwrap();
     let (entered_tx, entered_rx) = mpsc::channel::<()>();
     let (gate_tx, gate_rx) = mpsc::channel::<()>();
     let step: StepFn = Box::new(move |_, y| {
@@ -84,18 +82,15 @@ fn backpressure_counts_in_kernel_hops_not_just_the_fifo() {
         Some(y.to_vec())
     });
     let mut rng = Rng::new(711);
-    let session = engine.submit_session(SessionRequest::new(
-        names(&["sq"]),
-        rng.gauss_vec(12),
-        2,
-        step,
-    ));
+    let session = engine.submit_session(SessionRequest::new(route, rng.gauss_vec(12), 2, step));
     entered_rx.recv().unwrap(); // the session's hop is now mid-kernel
-    let second = engine.submit("sq", None, rng.gauss_vec(12)); // live = 2, queued
-    let third = engine.submit("sq", None, rng.gauss_vec(12)); // live limit hit
-    let msg = format!("{}", third.wait().unwrap_err());
-    assert!(msg.contains("overloaded"), "{msg}");
-    assert!(msg.contains("hops"), "hop-aware limit must say so: {msg}");
+    let second = engine.submit(sq, None, rng.gauss_vec(12)); // live = 2, queued
+    let third = engine.submit(sq, None, rng.gauss_vec(12)); // live limit hit
+    let err = third.wait().unwrap_err();
+    assert!(
+        matches!(err, ServeError::Overloaded { max_pending: 2 }),
+        "hop-aware limit must reject as Overloaded: {err:?}"
+    );
     gate_tx.send(()).unwrap(); // release the parked session
     assert_eq!(session.wait().unwrap().forwards, 2);
     assert!(second.wait().is_ok(), "the admitted request must still be served");
@@ -132,26 +127,27 @@ fn panicking_layer_fails_only_its_own_traversal_with_the_layer_named() {
         boom_layer(10),
         square_layer("ok2", 10, 721),
     ]);
-    let engine = ServeEngine::new(
-        model,
-        EngineConfig { workers: 1, max_batch: 8, ..EngineConfig::default() },
-    );
+    let engine = ServeEngine::builder(model).workers(1).max_batch(8).build().unwrap();
+    let doomed_route = engine.route(&["ok1", "boom", "ok2"]).unwrap();
+    let healthy_route = engine.route(&["ok1", "ok2"]).unwrap();
     let mut rng = Rng::new(722);
     // Both traversals start at ok1 (they may share that micro-batch);
     // only the one routed through boom may fail.
-    let doomed = engine.submit_model(ModelRequest::new(
-        names(&["ok1", "boom", "ok2"]),
-        rng.gauss_vec(10),
-    ));
+    let doomed = engine.submit_model(ModelRequest::new(doomed_route, rng.gauss_vec(10)));
     let healthy =
-        engine.submit_model(ModelRequest::new(names(&["ok1", "ok2"]), rng.gauss_vec(10)));
-    let msg = format!("{}", doomed.wait().unwrap_err());
-    assert!(msg.contains("'boom'"), "error must name the layer: {msg}");
-    assert!(msg.contains("hop 2"), "error must name the failing hop: {msg}");
+        engine.submit_model(ModelRequest::new(healthy_route.clone(), rng.gauss_vec(10)));
+    let err = doomed.wait().unwrap_err();
+    assert!(
+        matches!(
+            &err,
+            ServeError::WorkerPanic { layer, hop: Some(2), .. } if layer == "boom"
+        ),
+        "typed WorkerPanic naming layer and hop expected: {err:?}"
+    );
     assert!(healthy.wait().is_ok(), "an unrelated traversal must be unaffected");
     // The worker survived the panic: the engine keeps serving.
     assert!(engine
-        .submit_model(ModelRequest::new(names(&["ok1", "ok2"]), rng.gauss_vec(10)))
+        .submit_model(ModelRequest::new(healthy_route, rng.gauss_vec(10)))
         .wait()
         .is_ok());
     let stats = engine.shutdown();
@@ -162,28 +158,39 @@ fn panicking_layer_fails_only_its_own_traversal_with_the_layer_named() {
 }
 
 #[test]
+fn single_layer_riders_of_a_panicked_batch_get_a_typed_worker_panic() {
+    let model = PackedModel::new(vec![boom_layer(8)]);
+    let engine = ServeEngine::builder(model).workers(1).build().unwrap();
+    let boom = engine.layer("boom").unwrap();
+    let err = engine.submit(boom, None, vec![1.0; 8]).wait().unwrap_err();
+    assert!(
+        matches!(&err, ServeError::WorkerPanic { layer, hop: None, .. } if layer == "boom"),
+        "{err:?}"
+    );
+    let stats = engine.shutdown();
+    assert_eq!(stats.failed, 1);
+    assert!(stats.batch_panics >= 1);
+}
+
+#[test]
 fn step_failures_fail_only_their_session() {
     let model = PackedModel::new(vec![square_layer("sq", 8, 730)]);
-    let engine = ServeEngine::new(model, EngineConfig::default());
+    let engine = ServeEngine::builder(model).build().unwrap();
+    let route = engine.route(&["sq"]).unwrap();
     let mut rng = Rng::new(731);
     let panicking: StepFn = Box::new(|_, _| panic!("injected step panic"));
     let bad_shape: StepFn = Box::new(|_, _| Some(vec![0.0; 3]));
-    let s1 = engine.submit_session(SessionRequest::new(
-        names(&["sq"]),
-        rng.gauss_vec(8),
-        2,
-        panicking,
-    ));
-    let s2 = engine.submit_session(SessionRequest::new(
-        names(&["sq"]),
-        rng.gauss_vec(8),
-        2,
-        bad_shape,
-    ));
-    let ok = engine.submit_model(ModelRequest::new(names(&["sq"]), rng.gauss_vec(8)));
-    let msg = format!("{}", s1.wait().unwrap_err());
-    assert!(msg.contains("step function panicked"), "{msg}");
-    let msg = format!("{}", s2.wait().unwrap_err());
+    let s1 =
+        engine.submit_session(SessionRequest::new(route.clone(), rng.gauss_vec(8), 2, panicking));
+    let s2 =
+        engine.submit_session(SessionRequest::new(route.clone(), rng.gauss_vec(8), 2, bad_shape));
+    let ok = engine.submit_model(ModelRequest::new(route, rng.gauss_vec(8)));
+    let err = s1.wait().unwrap_err();
+    assert!(matches!(&err, ServeError::StepFailed { forward: 1, .. }), "{err:?}");
+    assert!(format!("{err}").contains("step function panicked"), "{err}");
+    let err = s2.wait().unwrap_err();
+    assert!(matches!(&err, ServeError::StepFailed { forward: 1, .. }), "{err:?}");
+    let msg = format!("{err}");
     assert!(msg.contains("3 values"), "{msg}");
     assert!(msg.contains("takes 8 features"), "{msg}");
     assert!(ok.wait().is_ok(), "unrelated traffic must be unaffected");
@@ -196,15 +203,11 @@ fn step_failures_fail_only_their_session() {
 #[test]
 fn sessions_stop_early_when_the_step_says_so() {
     let model = PackedModel::new(vec![square_layer("sq", 8, 740)]);
-    let engine = ServeEngine::new(model, EngineConfig::default());
+    let engine = ServeEngine::builder(model).build().unwrap();
+    let route = engine.route(&["sq"]).unwrap();
     let step: StepFn = Box::new(|k, y| if k < 2 { Some(y.to_vec()) } else { None });
     let r = engine
-        .submit_session(SessionRequest::new(
-            names(&["sq"]),
-            Rng::new(741).gauss_vec(8),
-            100,
-            step,
-        ))
+        .submit_session(SessionRequest::new(route, Rng::new(741).gauss_vec(8), 100, step))
         .wait()
         .unwrap();
     assert_eq!(r.forwards, 2, "step returned None after forward 2");

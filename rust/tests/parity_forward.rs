@@ -5,7 +5,8 @@
 //! fused `PackedLayer::forward` per route layer), across quantization
 //! methods (CLoQ / GPTQ-LoRA / LoftQ / QLoRA-NF), bit widths {2,3,4,8},
 //! mixed-adapter traffic, multi-step sessions, and adapter hot-swaps that
-//! land mid-flight.
+//! land mid-flight — all through the typed façade (`Route` handles,
+//! interned `AdapterId`s).
 //!
 //! Why this must hold (the contract chain): every hop is one row of a
 //! grouped batch kernel that is itself bit-identical to a serial
@@ -19,8 +20,8 @@ use cloq::linalg::{syrk_t, Matrix};
 use cloq::lowrank::{init_layer, InitConfig, LoraPair, Method};
 use cloq::quant::{quantize_nf, quantize_rtn, QuantState};
 use cloq::serve::{
-    forward_route_serial, AdapterSet, EngineConfig, ModelRequest, PackedLayer, PackedModel,
-    ServeEngine, SessionRequest, StepFn,
+    forward_route_serial, AdapterSet, ModelRequest, PackedLayer, PackedModel, ServeEngine,
+    ServeError, SessionRequest, StepFn,
 };
 use cloq::util::prng::Rng;
 
@@ -98,25 +99,24 @@ fn pipelined_forward_bit_identical_to_serial_across_init_methods() {
     }
     let model = PackedModel::new(layers);
     let set = AdapterSet::from_pairs("init", pairs).unwrap();
-    let route = names(&["wq", "wo", "up", "dn"]);
+    let route_names = names(&["wq", "wo", "up", "dn"]);
+    let serial_route = model.route(&route_names).unwrap();
 
     let mut xrng = Rng::new(601);
     let xs: Vec<Vec<f64>> = (0..10).map(|_| xrng.gauss_vec(24)).collect();
     let serial: Vec<Vec<f64>> = xs
         .iter()
-        .map(|x| forward_route_serial(&model, &route, Some(&set), x).unwrap())
+        .map(|x| forward_route_serial(&model, &serial_route, Some(&set), x))
         .collect();
     let serial_base: Vec<Vec<f64>> =
-        xs.iter().map(|x| forward_route_serial(&model, &route, None, x).unwrap()).collect();
+        xs.iter().map(|x| forward_route_serial(&model, &serial_route, None, x)).collect();
 
-    let engine = ServeEngine::new(
-        model,
-        EngineConfig { workers: 2, max_batch: 4, ..EngineConfig::default() },
-    );
-    engine.register_adapter(set).unwrap();
+    let engine = ServeEngine::builder(model).workers(2).max_batch(4).build().unwrap();
+    let tenant = engine.register_adapter(set).unwrap().id;
+    let route = engine.route(&route_names).unwrap();
     let tickets: Vec<_> = xs
         .iter()
-        .map(|x| engine.submit_model(ModelRequest::with_adapter(route.clone(), "init", x.clone())))
+        .map(|x| engine.submit_model(ModelRequest::with_adapter(route.clone(), tenant, x.clone())))
         .collect();
     let base_tickets: Vec<_> = xs
         .iter()
@@ -148,7 +148,8 @@ fn concurrent_mixed_adapter_traversals_each_match_their_own_serial() {
     let model = mixed_bits_model(610);
     let sets: Vec<AdapterSet> =
         (0..3).map(|k| rand_set(&format!("t{k}"), &model, 2 + k, 611 + k as u64)).collect();
-    let route = names(&["q2", "nf3", "q4", "q8"]);
+    let route_names = names(&["q2", "nf3", "q4", "q8"]);
+    let serial_route = model.route(&route_names).unwrap();
     let mut xrng = Rng::new(615);
     let xs: Vec<Vec<f64>> = (0..24).map(|_| xrng.gauss_vec(32)).collect();
     let serial: Vec<Vec<f64>> = xs
@@ -156,17 +157,15 @@ fn concurrent_mixed_adapter_traversals_each_match_their_own_serial() {
         .enumerate()
         .map(|(i, x)| {
             let set = if i % 4 == 3 { None } else { Some(&sets[i % 4]) };
-            forward_route_serial(&model, &route, set, x).unwrap()
+            forward_route_serial(&model, &serial_route, set, x)
         })
         .collect();
 
-    let engine = ServeEngine::new(
-        mixed_bits_model(610),
-        EngineConfig { workers: 2, max_batch: 8, ..EngineConfig::default() },
-    );
-    for s in sets {
-        engine.register_adapter(s).unwrap();
-    }
+    let engine =
+        ServeEngine::builder(mixed_bits_model(610)).workers(2).max_batch(8).build().unwrap();
+    let tids: Vec<_> =
+        sets.into_iter().map(|s| engine.register_adapter(s).unwrap().id).collect();
+    let route = engine.route(&route_names).unwrap();
     let tickets: Vec<_> = xs
         .iter()
         .enumerate()
@@ -174,7 +173,7 @@ fn concurrent_mixed_adapter_traversals_each_match_their_own_serial() {
             let req = if i % 4 == 3 {
                 ModelRequest::new(route.clone(), x.clone())
             } else {
-                ModelRequest::with_adapter(route.clone(), &format!("t{}", i % 4), x.clone())
+                ModelRequest::with_adapter(route.clone(), tids[i % 4], x.clone())
             };
             engine.submit_model(req)
         })
@@ -203,7 +202,8 @@ fn sessions_bit_identical_to_serial_stepped_reference() {
     // flight at once.
     let model = mixed_bits_model(620);
     let set = rand_set("gen", &model, 3, 621);
-    let route = names(&["q2", "nf3", "q4", "q8"]);
+    let route_names = names(&["q2", "nf3", "q4", "q8"]);
+    let serial_route = model.route(&route_names).unwrap();
     let steps = 4usize;
     let step_of = |y: &[f64]| -> Vec<f64> { y.iter().map(|v| v * 0.5).collect() };
 
@@ -215,25 +215,24 @@ fn sessions_bit_identical_to_serial_stepped_reference() {
             let mut x = x0.clone();
             let mut y = Vec::new();
             for _ in 0..steps {
-                y = forward_route_serial(&model, &route, Some(&set), &x).unwrap();
+                y = forward_route_serial(&model, &serial_route, Some(&set), &x);
                 x = step_of(&y);
             }
             y
         })
         .collect();
 
-    let engine = ServeEngine::new(
-        mixed_bits_model(620),
-        EngineConfig { workers: 2, max_batch: 8, ..EngineConfig::default() },
-    );
-    engine.register_adapter(set).unwrap();
+    let engine =
+        ServeEngine::builder(mixed_bits_model(620)).workers(2).max_batch(8).build().unwrap();
+    let tenant = engine.register_adapter(set).unwrap().id;
+    let route = engine.route(&route_names).unwrap();
     let tickets: Vec<_> = x0s
         .iter()
         .map(|x0| {
             let step: StepFn = Box::new(move |_, y| Some(y.iter().map(|v| v * 0.5).collect()));
             engine.submit_session(SessionRequest::with_adapter(
                 route.clone(),
-                "gen",
+                tenant,
                 x0.clone(),
                 steps,
                 step,
@@ -257,33 +256,31 @@ fn mid_flight_hot_swap_never_mixes_adapter_versions() {
     // Requests admitted BEFORE a hot-swap must compute every hop on the
     // old version (their pin spans the whole traversal), requests after
     // it on the new one — regardless of when the swap lands relative to
-    // the hops. One worker keeps plenty of traversal hops in flight
-    // across the swap.
+    // the hops. The interned AdapterId survives the swap (slots are
+    // stable), so the SAME handle is used throughout. One worker keeps
+    // plenty of traversal hops in flight across the swap.
     let model = mixed_bits_model(630);
     let v1 = rand_set("ten", &model, 3, 631);
+    let v1_ref = v1.clone(); // serial reference after v1 moves into the registry
     let v2 = rand_set("ten", &model, 5, 632);
-    let route = names(&["q2", "nf3", "q4", "q8"]);
+    let route_names = names(&["q2", "nf3", "q4", "q8"]);
+    let serial_route = model.route(&route_names).unwrap();
     let mut xrng = Rng::new(633);
     let xs: Vec<Vec<f64>> = (0..12).map(|_| xrng.gauss_vec(32)).collect();
-    let serial_v1: Vec<Vec<f64>> = xs
-        .iter()
-        .map(|x| forward_route_serial(&model, &route, Some(&v1), x).unwrap())
-        .collect();
-    let serial_v2: Vec<Vec<f64>> = xs
-        .iter()
-        .map(|x| forward_route_serial(&model, &route, Some(&v2), x).unwrap())
-        .collect();
+    let serial_v1: Vec<Vec<f64>> =
+        xs.iter().map(|x| forward_route_serial(&model, &serial_route, Some(&v1), x)).collect();
+    let serial_v2: Vec<Vec<f64>> =
+        xs.iter().map(|x| forward_route_serial(&model, &serial_route, Some(&v2), x)).collect();
 
-    let engine = ServeEngine::new(
-        mixed_bits_model(630),
-        EngineConfig { workers: 1, max_batch: 4, ..EngineConfig::default() },
-    );
-    engine.register_adapter(v1).unwrap();
+    let engine =
+        ServeEngine::builder(mixed_bits_model(630)).workers(1).max_batch(4).build().unwrap();
+    let ten = engine.register_adapter(v1).unwrap().id;
+    let route = engine.route(&route_names).unwrap();
     // A session admitted pre-swap: all 3 of its forwards must use v1.
     let step: StepFn = Box::new(move |_, y| Some(y.iter().map(|v| v * 0.25).collect()));
     let session = engine.submit_session(SessionRequest::with_adapter(
         route.clone(),
-        "ten",
+        ten,
         xs[0].clone(),
         3,
         step,
@@ -291,14 +288,17 @@ fn mid_flight_hot_swap_never_mixes_adapter_versions() {
     let pre: Vec<_> = xs
         .iter()
         .take(6)
-        .map(|x| engine.submit_model(ModelRequest::with_adapter(route.clone(), "ten", x.clone())))
+        .map(|x| engine.submit_model(ModelRequest::with_adapter(route.clone(), ten, x.clone())))
         .collect();
-    // Hot-swap while the session and the pre-batch are queued/in flight.
-    engine.register_adapter(v2).unwrap();
+    // Hot-swap while the session and the pre-batch are queued/in flight;
+    // the interned id is unchanged.
+    let swap = engine.register_adapter(v2).unwrap();
+    assert!(swap.replaced);
+    assert_eq!(swap.id, ten, "hot-swap keeps the interned AdapterId");
     let post: Vec<_> = xs
         .iter()
         .skip(6)
-        .map(|x| engine.submit_model(ModelRequest::with_adapter(route.clone(), "ten", x.clone())))
+        .map(|x| engine.submit_model(ModelRequest::with_adapter(route.clone(), ten, x.clone())))
         .collect();
     for (k, t) in pre.into_iter().enumerate() {
         assert_bits_eq(&t.wait().unwrap().y, &serial_v1[k], &format!("pre-swap {k}"));
@@ -310,7 +310,7 @@ fn mid_flight_hot_swap_never_mixes_adapter_versions() {
     let mut x = xs[0].clone();
     let mut y = Vec::new();
     for _ in 0..3 {
-        y = forward_route_serial(&model, &route, Some(&v1), &x).unwrap();
+        y = forward_route_serial(&model, &serial_route, Some(&v1_ref), &x);
         x = y.iter().map(|v| v * 0.25).collect();
     }
     assert_bits_eq(&sr.y, &y, "session crossing a hot-swap stays on its admitted version");
@@ -339,23 +339,22 @@ fn partial_adapters_run_base_only_on_uncovered_route_layers() {
                 .unwrap();
         }
     }
-    let route = names(&["q2", "nf3", "q4", "q8"]);
+    let route_names = names(&["q2", "nf3", "q4", "q8"]);
+    let serial_route = model.route(&route_names).unwrap();
     let x = Rng::new(642).gauss_vec(32);
-    let serial = forward_route_serial(&model, &route, Some(&partial), &x).unwrap();
+    let serial = forward_route_serial(&model, &serial_route, Some(&partial), &x);
 
-    let engine = ServeEngine::new(mixed_bits_model(640), EngineConfig::default());
-    engine.register_adapter(partial).unwrap();
-    let r = engine
-        .submit_model(ModelRequest::with_adapter(route.clone(), "part", x))
-        .wait()
-        .unwrap();
+    let engine = ServeEngine::builder(mixed_bits_model(640)).build().unwrap();
+    let part = engine.register_adapter(partial).unwrap().id;
+    let route = engine.route(&route_names).unwrap();
+    let r = engine.submit_model(ModelRequest::with_adapter(route, part, x)).wait().unwrap();
     assert_bits_eq(&r.y, &serial, "partial-coverage traversal");
-    // An adapter with NO route overlap is an admission error, not a
+    // An adapter with NO route overlap is a typed admission error, not a
     // silent base-only run.
     let mut elsewhere = AdapterSet::new("off-route");
     {
         let mut rng = Rng::new(643);
-        let l = model.layer("nf3").unwrap();
+        let l = engine.model().layer("nf3").unwrap();
         elsewhere
             .insert(
                 "nf3",
@@ -366,18 +365,19 @@ fn partial_adapters_run_base_only_on_uncovered_route_layers() {
             )
             .unwrap();
     }
-    engine.register_adapter(elsewhere).unwrap();
-    let msg = format!(
-        "{}",
-        engine
-            .submit_model(ModelRequest::with_adapter(
-                names(&["q8"]),
-                "off-route",
-                vec![0.0; 32]
-            ))
-            .wait()
-            .unwrap_err()
+    let off = engine.register_adapter(elsewhere).unwrap().id;
+    let q8_route = engine.route(&names(&["q8"])).unwrap();
+    let err = engine
+        .submit_model(ModelRequest::with_adapter(q8_route, off, vec![0.0; 32]))
+        .wait()
+        .unwrap_err();
+    assert!(
+        matches!(
+            &err,
+            ServeError::AdapterMismatch { adapter, layer: None } if adapter == "off-route"
+        ),
+        "{err:?}"
     );
-    assert!(msg.contains("no delta for any layer on the route"), "{msg}");
+    assert!(format!("{err}").contains("no delta for any layer on the route"), "{err}");
     engine.shutdown();
 }

@@ -19,7 +19,7 @@ use cloq::coordinator::quantize::quantize_init;
 use cloq::linalg::{matmul_nt, matvec_t, syrk_t, Matrix};
 use cloq::lowrank::{init_layer, InitConfig, LoraPair, Method};
 use cloq::quant::{quantize_nf, quantize_rtn, QuantState};
-use cloq::serve::{AdapterSet, EngineConfig, PackedLayer, PackedModel, Request, ServeEngine};
+use cloq::serve::{AdapterSet, PackedLayer, PackedModel, Request, ServeEngine};
 use cloq::util::prng::Rng;
 
 fn assert_bits_eq(a: &[f64], b: &[f64], what: &str) {
@@ -205,24 +205,27 @@ fn engine_returns_the_same_bits_as_the_kernel_across_adapters() {
         .map(|(k, x)| layer.forward(x, slot(k).map(|t| &pairs[t])))
         .collect();
 
-    let engine = ServeEngine::new(
-        PackedModel::new(vec![layer]),
-        EngineConfig { workers: 3, max_batch: 8, ..EngineConfig::default() },
-    );
+    let engine = ServeEngine::builder(PackedModel::new(vec![layer]))
+        .workers(3)
+        .max_batch(8)
+        .build()
+        .unwrap();
+    let lin = engine.layer("lin").unwrap();
+    let mut tids = Vec::new();
     for (t, pair) in pairs.iter().enumerate() {
         let set = AdapterSet::from_pairs(
             &format!("t{t}"),
             vec![("lin".to_string(), pair.clone())],
         )
         .unwrap();
-        engine.register_adapter(set).unwrap();
+        tids.push(engine.register_adapter(set).unwrap().id);
     }
     let reqs: Vec<Request> = xs
         .into_iter()
         .enumerate()
         .map(|(k, x)| match slot(k) {
-            None => Request::base("lin", x),
-            Some(t) => Request::with_adapter("lin", &format!("t{t}"), x),
+            None => Request::base(lin, x),
+            Some(t) => Request::with_adapter(lin, tids[t], x),
         })
         .collect();
     let tickets = engine.submit_all(reqs);

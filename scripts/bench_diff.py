@@ -23,6 +23,9 @@ Gated rows (a >threshold drop in any of them fails the job):
     - kernel_batch_sweep[*].requests_per_s_min  (batched kernel throughput)
     - engine.batched.requests_per_s          (the batcher row)
     - engine.serial.requests_per_s
+    - submission.interned.requests_per_s     (typed-handle admission — the
+                                              interned-id façade row)
+    - submission.named.requests_per_s        (legacy stringly admission)
   BENCH_adapters.json
     - adapter_sweep[*].requests_per_s        (multi-tenant engine rows)
     - multi_tenant_throughput_retention      (the multi-tenant headline)
@@ -61,6 +64,8 @@ GATED_ROWS = [
     ("BENCH_serve.json", "kernel_batch_sweep.*.requests_per_s_min", "rate"),
     ("BENCH_serve.json", "engine.batched.requests_per_s", "rate"),
     ("BENCH_serve.json", "engine.serial.requests_per_s", "rate"),
+    ("BENCH_serve.json", "submission.interned.requests_per_s", "rate"),
+    ("BENCH_serve.json", "submission.named.requests_per_s", "rate"),
     ("BENCH_adapters.json", "adapter_sweep.*.requests_per_s", "rate"),
     ("BENCH_adapters.json", "multi_tenant_throughput_retention", "rate"),
     ("BENCH_adapters.json", "mixed_batch.uniform.min_s", "time"),

@@ -37,11 +37,13 @@ cargo build --release "${CARGO_FLAGS[@]}"
 echo "== cargo test -q =="
 cargo test -q "${CARGO_FLAGS[@]}"
 
-# Clippy gate on the main crate (vendored shims excluded): deny warnings on
-# the modules this repo owns. Tolerated to be absent (minimal toolchains).
+# Clippy gate — HARD and WORKSPACE-WIDE: deny warnings on every target of
+# every member crate (lib, bins, examples, benches, tests, and the
+# vendored shims — the whole tree is lint-clean). Tolerated to be absent
+# (minimal toolchains); CI always installs the component.
 if cargo clippy --version >/dev/null 2>&1; then
-    echo "== cargo clippy -p cloq (deny warnings) =="
-    cargo clippy -p cloq --all-targets "${CARGO_FLAGS[@]}" -- -D warnings
+    echo "== cargo clippy --workspace --all-targets (deny warnings) =="
+    cargo clippy --workspace --all-targets "${CARGO_FLAGS[@]}" -- -D warnings
 else
     echo "== clippy not installed; skipping lint gate =="
 fi

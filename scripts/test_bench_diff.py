@@ -37,6 +37,10 @@ def synthetic_records():
                 "serial": {"requests_per_s": 5000.0},
                 "batched": {"requests_per_s": 9000.0},
             },
+            "submission": {
+                "interned": {"requests_per_s": 40000.0},
+                "named": {"requests_per_s": 33000.0},
+            },
         },
         "BENCH_adapters.json": {
             "bench": "serve_adapters",
@@ -134,6 +138,12 @@ def main():
         recs["BENCH_forward.json"]["session_sweep"][2]["pipelined"]["forwards_per_s"] *= 0.5
         write_dir(fresh, recs)
         check("forward rate regression", run(base, fresh), 1)
+
+        # 3a. The interned-admission headline is gated: a >25% drop fails.
+        recs = synthetic_records()
+        recs["BENCH_serve.json"]["submission"]["interned"]["requests_per_s"] *= 0.6
+        write_dir(fresh, recs)
+        check("submission-overhead regression", run(base, fresh), 1)
 
         # 4. A >25% slowdown in a gated time row fails (adapters headline).
         recs = synthetic_records()
