@@ -50,13 +50,26 @@ use crate::serve::packed::{LayerId, PackedModel};
 /// stable across hot-swaps and unregister/re-register of the same id —
 /// resolve once ([`AdapterRegistry::resolve`] / `ServeEngine::adapter`),
 /// then submit by id.
+///
+/// Ids carry their minting registry's **identity token**: checkout (and
+/// engine admission) compares it first, so an id from a DIFFERENT
+/// registry fails typed instead of silently addressing whichever tenant
+/// sits in that slot of this one.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-pub struct AdapterId(u32);
+pub struct AdapterId {
+    slot: u32,
+    token: u64,
+}
 
 impl AdapterId {
     /// The id's slot index in its registry.
     pub fn index(self) -> usize {
-        self.0 as usize
+        self.slot as usize
+    }
+
+    /// The minting registry's identity token.
+    pub(crate) fn token(self) -> u64 {
+        self.token
     }
 }
 
@@ -312,6 +325,9 @@ pub struct AdapterRegistry {
     model: Arc<PackedModel>,
     shared: Arc<RegShared>,
     budget_bytes: usize,
+    /// Identity token stamped into every [`AdapterId`] this registry mints;
+    /// checkout refuses ids carrying a different registry's token.
+    token: u64,
 }
 
 impl AdapterRegistry {
@@ -322,6 +338,7 @@ impl AdapterRegistry {
     pub fn new(model: Arc<PackedModel>, budget_bytes: usize) -> AdapterRegistry {
         AdapterRegistry {
             model,
+            token: crate::serve::packed::next_identity_token(),
             shared: Arc::new(RegShared {
                 state: Mutex::new(RegState {
                     intern: HashMap::new(),
@@ -339,6 +356,11 @@ impl AdapterRegistry {
     /// The model this registry validates and resolves adapters against.
     pub fn model(&self) -> &PackedModel {
         &self.model
+    }
+
+    /// This registry's identity token (every id it mints carries it).
+    pub(crate) fn token(&self) -> u64 {
+        self.token
     }
 
     /// Validate `set` against the served model, insert (or hot-swap) it
@@ -417,7 +439,11 @@ impl AdapterRegistry {
                 None => break, // everything else is pinned: tolerate over-budget
             }
         }
-        Ok(RegisterOutcome { id: AdapterId(slot_idx as u32), replaced, evicted })
+        Ok(RegisterOutcome {
+            id: AdapterId { slot: slot_idx as u32, token: self.token },
+            replaced,
+            evicted,
+        })
     }
 
     /// Intern lookup: the [`AdapterId`] for a CURRENTLY REGISTERED id
@@ -428,12 +454,16 @@ impl AdapterRegistry {
         let st = self.shared.state.lock().unwrap();
         let i = st.intern.get(name).copied()?;
         st.slots[i as usize].entry.as_ref()?;
-        Some(AdapterId(i))
+        Some(AdapterId { slot: i, token: self.token })
     }
 
     /// The id string behind an interned handle (for error messages and
-    /// diagnostics; works even while the slot is unregistered).
+    /// diagnostics; works even while the slot is unregistered). `None` for
+    /// another registry's ids — their slot would name the wrong tenant here.
     pub fn name_of(&self, id: AdapterId) -> Option<String> {
+        if id.token() != self.token {
+            return None;
+        }
         let st = self.shared.state.lock().unwrap();
         st.slots.get(id.index()).map(|s| s.name.clone())
     }
@@ -442,6 +472,9 @@ impl AdapterRegistry {
     /// `None` if its slot is not currently registered. O(1): one vector
     /// index under the lock, no hashing.
     pub fn checkout(&self, id: AdapterId) -> Option<AdapterHandle> {
+        if id.token() != self.token {
+            return None; // another registry's handle: slot index means nothing here
+        }
         let mut st = self.shared.state.lock().unwrap();
         st.clock += 1;
         let stamp = st.clock;

@@ -2,8 +2,8 @@
 //! packed base and for individual adapter sets, unified behind
 //! [`ArtifactStore`].
 //!
-//! Two current formats plus one legacy reader (all integers little-endian,
-//! every record CRC-framed):
+//! Three current formats plus one legacy reader (all integers
+//! little-endian, every payload CRC-guarded):
 //!
 //! ```text
 //!   base artifact (v2)                adapter artifact
@@ -16,10 +16,25 @@
 //!     crc32       u32                   payload_len u64
 //!                                       payload     (name, shape, A, B)
 //!                                       crc32       u32
+//!
+//!   base artifact (v3, zero-copy)
+//!   magic    "CLOQPKD3"   8 bytes
+//!   version  u32 (= 3)
+//!   n_layers u32
+//!   repeat n_layers times (the directory):
+//!     name_len u32 · name · kind u8 · bits u32
+//!     group_size u64 · rows u64 · cols u64
+//!     codes_off u64 · codes_len u64 · codes_crc u32
+//!     params_off u64 · params_len u64 · params_crc u32
+//!   dir_crc  u32  (crc32 of everything from version to here)
+//!   ...zero padding to the next 4096 boundary...
+//!   per layer, each section starting at a 4096 multiple:
+//!     codes  section (raw LE u32 words, row-aligned)
+//!     params section (same byte encoding as the v2 params tail)
 //! ```
 //!
-//! The v2 **base** artifact carries NO LoRA payloads: codes + dequant
-//! params only. Adapters ship separately in the small **adapter** artifact
+//! The **base** artifacts carry NO LoRA payloads: codes + dequant params
+//! only. Adapters ship separately in the small **adapter** artifact
 //! (`CLOQADP1`), so a new tenant deploys without re-shipping the packed
 //! base — the multi-tenant split `serve::adapters` serves from. The v1
 //! format (`CLOQPKD1`, the original single-tenant layout with A/B embedded
@@ -27,13 +42,28 @@
 //! and returns [`Artifact::LegacyV1`] with the embedded adapters split
 //! into one set named [`V1_ADAPTER_ID`].
 //!
+//! **v3 is the zero-copy layout.** Its code sections are page-aligned so
+//! [`ArtifactStore::open_mapped`] can `mmap` the file and serve the
+//! packed words **in place** (`PackedSource::Mapped`): cold start reads
+//! the directory, eagerly decodes + CRC-checks the small params
+//! sections, and defers each code section's CRC to its first kernel
+//! touch (`PackedLayer::verify`) — no copy, no up-front hash of the big
+//! sections, and at most one resident copy of the base shared by every
+//! process that maps it. [`ArtifactStore::open`] also reads v3, eagerly
+//! and fully checked, for callers that want copy semantics. Every header
+//! byte is guarded: the magic by the magic check, everything from the
+//! version to the end of the directory by `dir_crc`, each section by its
+//! directory CRC — only the zero padding between sections is outside any
+//! checksum (locked by the exhaustive single-bit corruption sweep in
+//! `rust/tests/golden_serve.rs`).
+//!
 //! **The store** is the one entry point: [`ArtifactStore::save_base`] /
-//! [`ArtifactStore::save_adapter`] write the two current formats, and
-//! [`ArtifactStore::open`] reads ANY of the three — the magic bytes, not
-//! the file name, decide what comes back, so a deployment script can
-//! point the server at a directory of mixed artifacts and match on
-//! [`Artifact`]. The six former free functions remain as thin
-//! `#[deprecated]` shims over the same internals.
+//! [`ArtifactStore::save_base_v3`] / [`ArtifactStore::save_adapter`]
+//! write the current formats, and [`ArtifactStore::open`] /
+//! [`ArtifactStore::open_mapped`] read ANY of the four — the magic
+//! bytes, not the file name, decide what comes back, so a deployment
+//! script can point the server at a directory of mixed artifacts and
+//! match on [`Artifact`].
 //!
 //! Each layer payload carries its own name, shapes and parameter kind, so
 //! the loaders can validate structurally and — the part that matters at
@@ -52,19 +82,27 @@
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::linalg::Matrix;
 use crate::lowrank::LoraPair;
 use crate::serve::adapters::AdapterSet;
 use crate::serve::error::{ArtifactErrorKind, ServeError};
-use crate::serve::packed::{words_per_row, DequantParams, PackedLayer, PackedModel};
+use crate::serve::mmap::MappedFile;
+use crate::serve::packed::{words_per_row, DequantParams, PackedLayer, PackedModel, PackedSource};
 
 /// Legacy single-tenant format: adapters embedded per layer.
 pub const MAGIC_V1: &[u8; 8] = b"CLOQPKD1";
 pub const VERSION_V1: u32 = 1;
-/// Current base format: no LoRA payloads.
+/// Record-framed base format: no LoRA payloads.
 pub const MAGIC_BASE: &[u8; 8] = b"CLOQPKD2";
 pub const VERSION_BASE: u32 = 2;
+/// Zero-copy base format: directory + page-aligned mmap-able sections.
+pub const MAGIC_V3: &[u8; 8] = b"CLOQPKD3";
+pub const VERSION_V3: u32 = 3;
+/// Section alignment of the v3 layout: one x86-64/aarch64 base page, so a
+/// mapped code section is both page- and word-aligned in memory.
+pub const V3_ALIGN: usize = 4096;
 /// Adapter artifact: one AdapterSet, shippable without the base.
 pub const MAGIC_ADAPTER: &[u8; 8] = b"CLOQADP1";
 pub const VERSION_ADAPTER: u32 = 1;
@@ -161,6 +199,14 @@ impl Artifact {
     }
 }
 
+/// Kind slug only — the payloads (whole packed models) are far too large
+/// to dump, and tests only need `Result<Artifact, _>::unwrap_err`.
+impl std::fmt::Debug for Artifact {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_tuple("Artifact").field(&self.kind_name()).finish()
+    }
+}
+
 /// The unified serving-artifact store: one directory, three formats, one
 /// read entry point. Writers pick the format
 /// ([`ArtifactStore::save_base`] / [`ArtifactStore::save_adapter`]);
@@ -189,10 +235,22 @@ impl ArtifactStore {
     }
 
     /// Write the packed BASE (v2, `CLOQPKD2`): codes + dequant params, no
-    /// LoRA. Returns the written path.
+    /// LoRA. Returns the written path. (v2 stays the default writer so
+    /// committed golden bytes stay stable; [`ArtifactStore::save_base_v3`]
+    /// writes the zero-copy layout.)
     pub fn save_base(&self, model: &PackedModel, name: &str) -> Result<PathBuf, ServeError> {
         let path = self.path(name);
         save_base_at(model, &path)?;
+        Ok(path)
+    }
+
+    /// Write the packed BASE in the ZERO-COPY layout (v3, `CLOQPKD3`):
+    /// directory up front, every code/params section page-aligned so
+    /// [`ArtifactStore::open_mapped`] can serve the codes straight from
+    /// mapped pages. Returns the written path.
+    pub fn save_base_v3(&self, model: &PackedModel, name: &str) -> Result<PathBuf, ServeError> {
+        let path = self.path(name);
+        save_base_v3_at(model, &path)?;
         Ok(path)
     }
 
@@ -219,10 +277,27 @@ impl ArtifactStore {
         Ok(path)
     }
 
-    /// Read `name`, autodetecting which of the three formats it holds from
-    /// the magic bytes.
+    /// Read `name`, autodetecting which of the four formats it holds from
+    /// the magic bytes. Always EAGER and fully checked — every section
+    /// CRC is verified before this returns, and the result owns its
+    /// buffers (a v3 file is copied, not mapped; use
+    /// [`ArtifactStore::open_mapped`] for zero-copy).
     pub fn open(&self, name: &str) -> Result<Artifact, ServeError> {
         open_at(&self.path(name))
+    }
+
+    /// Zero-copy open: `mmap` the file and, when it is a v3 base
+    /// artifact, serve the packed code sections IN PLACE — the directory
+    /// and the small params sections are checked eagerly, each code
+    /// section's CRC is deferred to its first kernel touch
+    /// (`PackedLayer::verify`, surfacing as a typed `ChecksumMismatch`
+    /// naming the layer). Non-v3 files fall back to [`ArtifactStore::open`]
+    /// byte-identically, so callers can point this at any artifact. The
+    /// codes also fall back to owned copies (with eager CRCs) when the
+    /// platform cannot honor the in-place cast — big-endian hosts, or an
+    /// mmap-less filesystem.
+    pub fn open_mapped(&self, name: &str) -> Result<Artifact, ServeError> {
+        open_mapped_at(&self.path(name))
     }
 
     /// Read a base artifact, refusing adapter and legacy files with a
@@ -246,23 +321,41 @@ impl ArtifactStore {
 
 // ---- encoding ----
 
-fn put_u32(out: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
+pub(crate) fn put_f64s(out: &mut Vec<u8>, vs: &[f64]) {
     for v in vs {
         out.extend_from_slice(&v.to_le_bytes());
     }
 }
 
-fn put_str(out: &mut Vec<u8>, s: &str) {
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
     put_u32(out, s.len() as u32);
     out.extend_from_slice(s.as_bytes());
+}
+
+/// The dequant-params tail shared byte-for-byte by the v1/v2 payloads and
+/// the v3 params SECTION (one encoder, so v2→v3 conversion cannot drift).
+fn encode_params(b: &mut Vec<u8>, params: &DequantParams) {
+    match params {
+        DequantParams::Grid { scales, zeros } => {
+            put_u64(b, scales.rows as u64);
+            put_f64s(b, &scales.data);
+            put_f64s(b, &zeros.data);
+        }
+        DequantParams::Codebook { levels, absmax } => {
+            put_u32(b, levels.len() as u32);
+            put_f64s(b, levels);
+            put_u64(b, absmax.rows as u64);
+            put_f64s(b, &absmax.data);
+        }
+    }
 }
 
 /// The base-layer fields shared by the v1 and v2 payloads: identity,
@@ -282,22 +375,10 @@ fn encode_base_fields(b: &mut Vec<u8>, l: &PackedLayer, rank_v1: Option<usize>) 
         put_u64(b, r as u64);
     }
     put_u64(b, l.packed.len() as u64);
-    for w in &l.packed {
+    for w in l.packed.words() {
         put_u32(b, *w);
     }
-    match &l.params {
-        DequantParams::Grid { scales, zeros } => {
-            put_u64(b, scales.rows as u64);
-            put_f64s(b, &scales.data);
-            put_f64s(b, &zeros.data);
-        }
-        DequantParams::Codebook { levels, absmax } => {
-            put_u32(b, levels.len() as u32);
-            put_f64s(b, levels);
-            put_u64(b, absmax.rows as u64);
-            put_f64s(b, &absmax.data);
-        }
-    }
+    encode_params(b, &l.params);
 }
 
 fn encode_layer_base(l: &PackedLayer) -> Vec<u8> {
@@ -316,7 +397,7 @@ fn encode_layer_v1(l: &PackedLayer, pair: &LoraPair) -> Vec<u8> {
     b
 }
 
-fn encode_layer_adapter(name: &str, pair: &LoraPair) -> Vec<u8> {
+pub(crate) fn encode_layer_adapter(name: &str, pair: &LoraPair) -> Vec<u8> {
     let mut b = Vec::new();
     put_str(&mut b, name);
     put_u64(&mut b, pair.a.rows as u64);
@@ -361,6 +442,99 @@ fn save_base_at(model: &PackedModel, path: &Path) -> Result<(), ServeError> {
     write_file(path, &header, model.layers.iter().map(encode_layer_base).collect())
 }
 
+/// Round `off` up to the next [`V3_ALIGN`] boundary.
+fn v3_align_up(off: usize) -> usize {
+    off.div_ceil(V3_ALIGN) * V3_ALIGN
+}
+
+/// Byte length of one v3 directory entry (see the module-docs diagram).
+fn v3_entry_len(name: &str) -> usize {
+    // name(4+len) + kind(1) + bits(4) + group_size/rows/cols(24)
+    // + codes off/len/crc(20) + params off/len/crc(20)
+    4 + name.len() + 1 + 4 + 24 + 20 + 20
+}
+
+fn save_base_v3_at(model: &PackedModel, path: &Path) -> Result<(), ServeError> {
+    // Pass 1: encode the params sections and lay out the section offsets.
+    // The directory's size depends only on the layer names, so the header
+    // length — and with it the first aligned section offset — is known
+    // before any offsets are written.
+    let params_blobs: Vec<Vec<u8>> = model
+        .layers
+        .iter()
+        .map(|l| {
+            let mut b = Vec::new();
+            encode_params(&mut b, &l.params);
+            b
+        })
+        .collect();
+    let header_len = 8
+        + 4
+        + 4
+        + model.layers.iter().map(|l| v3_entry_len(&l.name)).sum::<usize>()
+        + 4; // dir_crc
+    let mut off = header_len;
+    let mut sections = Vec::with_capacity(model.layers.len()); // (codes_off, params_off)
+    for (l, blob) in model.layers.iter().zip(&params_blobs) {
+        off = v3_align_up(off);
+        let codes_off = off;
+        off += l.packed.len() * 4;
+        off = v3_align_up(off);
+        let params_off = off;
+        off += blob.len();
+        sections.push((codes_off, params_off));
+    }
+
+    // Pass 2: fill the file image — sections first, then the directory
+    // (whose CRC fields hash the section bytes just written), then
+    // dir_crc over everything from the version to the end of the
+    // directory. The gaps stay zero and are the ONLY unchecksummed bytes.
+    let mut buf = vec![0u8; off];
+    for ((l, blob), &(codes_off, params_off)) in
+        model.layers.iter().zip(&params_blobs).zip(&sections)
+    {
+        let mut w = codes_off;
+        for word in l.packed.words() {
+            buf[w..w + 4].copy_from_slice(&word.to_le_bytes());
+            w += 4;
+        }
+        buf[params_off..params_off + blob.len()].copy_from_slice(blob);
+    }
+    let mut header = Vec::with_capacity(header_len);
+    header.extend_from_slice(MAGIC_V3);
+    put_u32(&mut header, VERSION_V3);
+    put_u32(&mut header, model.layers.len() as u32);
+    for ((l, blob), &(codes_off, params_off)) in
+        model.layers.iter().zip(&params_blobs).zip(&sections)
+    {
+        let codes_len = l.packed.len() * 4;
+        put_str(&mut header, &l.name);
+        header.push(match &l.params {
+            DequantParams::Grid { .. } => KIND_GRID,
+            DequantParams::Codebook { .. } => KIND_CODEBOOK,
+        });
+        put_u32(&mut header, l.bits);
+        put_u64(&mut header, l.group_size as u64);
+        put_u64(&mut header, l.rows as u64);
+        put_u64(&mut header, l.cols as u64);
+        put_u64(&mut header, codes_off as u64);
+        put_u64(&mut header, codes_len as u64);
+        put_u32(&mut header, crc32(&buf[codes_off..codes_off + codes_len]));
+        put_u64(&mut header, params_off as u64);
+        put_u64(&mut header, blob.len() as u64);
+        put_u32(&mut header, crc32(blob));
+    }
+    let dir_crc = crc32(&header[8..]);
+    put_u32(&mut header, dir_crc);
+    debug_assert_eq!(header.len(), header_len);
+    buf[..header_len].copy_from_slice(&header);
+
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).map_err(|e| io_err(path, "cannot create dir", e))?;
+    }
+    std::fs::write(path, &buf).map_err(|e| io_err(path, "cannot write", e))
+}
+
 fn save_adapter_at(set: &AdapterSet, path: &Path) -> Result<(), ServeError> {
     let mut header = Vec::new();
     header.extend_from_slice(MAGIC_ADAPTER);
@@ -398,17 +572,19 @@ fn save_v1_at(model: &PackedModel, set: &AdapterSet, path: &Path) -> Result<(), 
 
 /// Bounds-checked byte reader; every read error carries the field name so
 /// the loader's layer-context wrapper produces actionable messages.
-struct Rd<'a> {
+/// Crate-visible: the adapter WAL (`serve::wal`) frames its record
+/// payloads with the same primitives.
+pub(crate) struct Rd<'a> {
     buf: &'a [u8],
     off: usize,
 }
 
 impl<'a> Rd<'a> {
-    fn new(buf: &'a [u8]) -> Rd<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Rd<'a> {
         Rd { buf, off: 0 }
     }
 
-    fn bytes(&mut self, n: usize, what: &str) -> anyhow::Result<&'a [u8]> {
+    pub(crate) fn bytes(&mut self, n: usize, what: &str) -> anyhow::Result<&'a [u8]> {
         anyhow::ensure!(
             n <= self.buf.len() - self.off, // subtraction form: off ≤ len, no overflow
             "truncated while reading {what} (need {n} bytes at offset {}, have {})",
@@ -421,17 +597,17 @@ impl<'a> Rd<'a> {
         Ok(s)
     }
 
-    fn u32(&mut self, what: &str) -> anyhow::Result<u32> {
+    pub(crate) fn u32(&mut self, what: &str) -> anyhow::Result<u32> {
         let b = self.bytes(4, what)?;
         Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn u64(&mut self, what: &str) -> anyhow::Result<u64> {
+    pub(crate) fn u64(&mut self, what: &str) -> anyhow::Result<u64> {
         let b = self.bytes(8, what)?;
         Ok(u64::from_le_bytes(b.try_into().unwrap()))
     }
 
-    fn f64s(&mut self, n: usize, what: &str) -> anyhow::Result<Vec<f64>> {
+    pub(crate) fn f64s(&mut self, n: usize, what: &str) -> anyhow::Result<Vec<f64>> {
         anyhow::ensure!(
             n <= (self.buf.len() - self.off) / 8,
             "truncated while reading {what} (need {n} f64s, have {} bytes)",
@@ -441,13 +617,13 @@ impl<'a> Rd<'a> {
         Ok(b.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
     }
 
-    fn str(&mut self, what: &str) -> anyhow::Result<String> {
+    pub(crate) fn str(&mut self, what: &str) -> anyhow::Result<String> {
         let len = self.u32(&format!("{what} length"))? as usize;
         String::from_utf8(self.bytes(len, what)?.to_vec())
             .map_err(|e| anyhow::anyhow!("{what} is not UTF-8: {e}"))
     }
 
-    fn remaining(&self) -> usize {
+    pub(crate) fn remaining(&self) -> usize {
         self.buf.len() - self.off
     }
 }
@@ -489,9 +665,26 @@ fn decode_base_fields(rd: &mut Rd, v1: bool) -> anyhow::Result<(PackedLayer, usi
     let wbytes = rd.bytes(n_words * 4, "packed words")?;
     let packed: Vec<u32> =
         wbytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect();
+    let params = decode_params(rd, &name, kind, bits, rows, cols, group_size)?;
+    Ok((PackedLayer { name, rows, cols, bits, group_size, packed: packed.into(), params }, rank))
+}
+
+/// Decode the dequant-params tail — shared by the v1/v2 payload decoders
+/// and the v3 params-section reader (one decoder, mirroring
+/// `encode_params`). Validates group counts against the layer geometry
+/// and bounds every untrusted count by the bytes present.
+fn decode_params(
+    rd: &mut Rd,
+    name: &str,
+    kind: u8,
+    bits: u32,
+    rows: usize,
+    cols: usize,
+    group_size: usize,
+) -> anyhow::Result<DequantParams> {
     let num_groups = rows.div_ceil(group_size);
     let cap = rd.remaining() / 8; // untrusted-count allocations bounded by the bytes present
-    let params = match kind {
+    Ok(match kind {
         KIND_GRID => {
             let sg = rd.u64("scale group count")? as usize;
             anyhow::ensure!(
@@ -528,8 +721,7 @@ fn decode_base_fields(rd: &mut Rd, v1: bool) -> anyhow::Result<(PackedLayer, usi
             DequantParams::Codebook { levels, absmax }
         }
         other => anyhow::bail!("'{name}': unknown param kind {other}"),
-    };
-    Ok((PackedLayer { name, rows, cols, bits, group_size, packed, params }, rank))
+    })
 }
 
 fn decode_layer_base(payload: &[u8]) -> anyhow::Result<PackedLayer> {
@@ -566,7 +758,7 @@ fn decode_layer_v1(payload: &[u8]) -> anyhow::Result<(PackedLayer, LoraPair)> {
     Ok((layer, LoraPair::new(a, b)))
 }
 
-fn decode_layer_adapter(payload: &[u8]) -> anyhow::Result<(String, LoraPair)> {
+pub(crate) fn decode_layer_adapter(payload: &[u8]) -> anyhow::Result<(String, LoraPair)> {
     let mut rd = Rd::new(payload);
     let name = rd.str("layer name")?;
     let rows = rd.u64("rows")? as usize;
@@ -738,6 +930,240 @@ fn read_file(path: &Path) -> Result<Vec<u8>, ServeError> {
     std::fs::read(path).map_err(|e| io_err(path, "cannot read", e))
 }
 
+/// One parsed v3 directory entry (offsets/lengths still untrusted until
+/// the bounds pass in `read_v3`).
+struct V3Entry {
+    name: String,
+    kind: u8,
+    bits: u32,
+    group_size: usize,
+    rows: usize,
+    cols: usize,
+    codes_off: usize,
+    codes_len: usize,
+    codes_crc: u32,
+    params_off: usize,
+    params_len: usize,
+    params_crc: u32,
+}
+
+/// The v3 reader, shared by the eager copy path (`mapped = None`: every
+/// section CRC checked now, codes owned) and the zero-copy path
+/// (`mapped = Some`: codes served from the mapped pages with their CRC
+/// deferred to first touch — unless the platform can't honor the
+/// in-place cast, in which case that section silently falls back to an
+/// eagerly-checked owned copy). `bytes` is the WHOLE file.
+fn read_v3(
+    bytes: &[u8],
+    ctx: &FileCtx,
+    mapped: Option<(&Arc<MappedFile>, &Arc<str>)>,
+) -> Result<PackedModel, ServeError> {
+    let mut rd = Rd::new(bytes);
+    read_header(&mut rd, ctx, &[(MAGIC_V3, VERSION_V3)])?;
+    let trunc = |e: anyhow::Error| ctx.err(ArtifactErrorKind::Truncated, None, format!("{e}"));
+    let n_layers = rd.u32("layer count").map_err(trunc)? as usize;
+    // ≥ 73 bytes per directory entry: cap the untrusted reservation.
+    let mut entries: Vec<V3Entry> = Vec::with_capacity(n_layers.min(rd.remaining() / 73));
+    for idx in 0..n_layers {
+        let mut parse = || -> anyhow::Result<V3Entry> {
+            Ok(V3Entry {
+                name: rd.str("layer name")?,
+                kind: rd.bytes(1, "param kind")?[0],
+                bits: rd.u32("bits")?,
+                group_size: rd.u64("group size")? as usize,
+                rows: rd.u64("rows")? as usize,
+                cols: rd.u64("cols")? as usize,
+                codes_off: rd.u64("codes offset")? as usize,
+                codes_len: rd.u64("codes length")? as usize,
+                codes_crc: rd.u32("codes checksum")?,
+                params_off: rd.u64("params offset")? as usize,
+                params_len: rd.u64("params length")? as usize,
+                params_crc: rd.u32("params checksum")?,
+            })
+        };
+        let entry = parse().map_err(|e| {
+            ctx.err(
+                ArtifactErrorKind::Truncated,
+                None,
+                format!("directory entry {idx}/{n_layers}: {e}"),
+            )
+        })?;
+        entries.push(entry);
+    }
+    // The directory CRC covers EVERYTHING from the version to here, so a
+    // flipped bit anywhere in the header (bar the magic, which has its
+    // own check) is caught before any entry field is trusted further.
+    let dir_end = bytes.len() - rd.remaining();
+    let stored_dir_crc = rd.u32("directory checksum").map_err(trunc)?;
+    let computed = crc32(&bytes[8..dir_end]);
+    if computed != stored_dir_crc {
+        return Err(ctx.err(
+            ArtifactErrorKind::ChecksumMismatch,
+            None,
+            format!(
+                "directory checksum mismatch: stored {stored_dir_crc:08x}, computed \
+                 {computed:08x} — header bytes are corrupted"
+            ),
+        ));
+    }
+
+    // Structural validation: geometry sane, sections in bounds, file ends
+    // exactly where the last section does (v2-parity trailing-byte check).
+    let header_len = dir_end + 4;
+    let mut expected_end = header_len;
+    for (idx, e) in entries.iter().enumerate() {
+        let malformed = |detail: String| {
+            ctx.err(
+                ArtifactErrorKind::Malformed,
+                Some(e.name.clone()),
+                format!("directory entry {idx}/{n_layers}: {detail}"),
+            )
+        };
+        if !(1..=8).contains(&e.bits) {
+            return Err(malformed(format!("'{}': bit width {} outside 1..=8", e.name, e.bits)));
+        }
+        if e.group_size < 1 {
+            return Err(malformed(format!("'{}': group size 0", e.name)));
+        }
+        if e.rows < 1 || e.cols < 1 {
+            return Err(malformed(format!(
+                "'{}': degenerate shape {}x{}",
+                e.name, e.rows, e.cols
+            )));
+        }
+        let expect_words = e
+            .rows
+            .checked_mul(words_per_row(e.cols, e.bits))
+            .ok_or_else(|| {
+                malformed(format!("'{}': shape {}x{} overflows", e.name, e.rows, e.cols))
+            })?;
+        if e.codes_len != expect_words * 4 {
+            return Err(malformed(format!(
+                "'{}': {} code bytes, but {}x{} at {} bits needs {}",
+                e.name,
+                e.codes_len,
+                e.rows,
+                e.cols,
+                e.bits,
+                expect_words * 4
+            )));
+        }
+        for (what, off, len) in
+            [("codes", e.codes_off, e.codes_len), ("params", e.params_off, e.params_len)]
+        {
+            let end = off
+                .checked_add(len)
+                .filter(|&end| off >= header_len && end <= bytes.len())
+                .ok_or_else(|| {
+                    malformed(format!(
+                        "'{}': {what} section [{off}, +{len}) outside the file ({} bytes)",
+                        e.name,
+                        bytes.len()
+                    ))
+                })?;
+            expected_end = expected_end.max(end);
+        }
+    }
+    if bytes.len() != expected_end {
+        return Err(ctx.err(
+            ArtifactErrorKind::Malformed,
+            None,
+            format!("{} trailing bytes after the last section", bytes.len() - expected_end),
+        ));
+    }
+    let names: Vec<String> = entries.iter().map(|e| e.name.clone()).collect();
+    ensure_unique(&names, ctx)?;
+
+    let mut layers = Vec::with_capacity(entries.len());
+    for (idx, e) in entries.iter().enumerate() {
+        // Params sections are small (per-group scalars): always decoded —
+        // and therefore CRC-checked — eagerly, on both paths.
+        let pbytes = &bytes[e.params_off..e.params_off + e.params_len];
+        let pcrc = crc32(pbytes);
+        if pcrc != e.params_crc {
+            return Err(ctx.err(
+                ArtifactErrorKind::ChecksumMismatch,
+                Some(e.name.clone()),
+                format!(
+                    "layer {idx}/{n_layers} ('{}') params checksum mismatch: stored {:08x}, \
+                     computed {pcrc:08x} — params bytes are corrupted",
+                    e.name, e.params_crc
+                ),
+            ));
+        }
+        let mut prd = Rd::new(pbytes);
+        let params =
+            decode_params(&mut prd, &e.name, e.kind, e.bits, e.rows, e.cols, e.group_size)
+                .and_then(|p| {
+                    anyhow::ensure!(
+                        prd.remaining() == 0,
+                        "'{}': {} trailing bytes after dequant params",
+                        e.name,
+                        prd.remaining()
+                    );
+                    Ok(p)
+                })
+                .map_err(|err| ctx.malformed(idx, n_layers, pbytes, err))?;
+        let words = e.codes_len / 4;
+        let zero_copy_ok = mapped.is_some_and(|(file, _)| {
+            file.is_zero_copy()
+                && cfg!(target_endian = "little")
+                && (file.bytes().as_ptr() as usize + e.codes_off) % 4 == 0
+        });
+        let packed = if zero_copy_ok {
+            let (file, arc_path) = mapped.unwrap();
+            PackedSource::mapped(file.clone(), e.codes_off, words, e.codes_crc, arc_path.clone())
+        } else {
+            let cbytes = &bytes[e.codes_off..e.codes_off + e.codes_len];
+            let ccrc = crc32(cbytes);
+            if ccrc != e.codes_crc {
+                return Err(ctx.err(
+                    ArtifactErrorKind::ChecksumMismatch,
+                    Some(e.name.clone()),
+                    format!(
+                        "layer {idx}/{n_layers} ('{}') codes checksum mismatch: stored {:08x}, \
+                         computed {ccrc:08x} — code bytes are corrupted",
+                        e.name, e.codes_crc
+                    ),
+                ));
+            }
+            let owned: Vec<u32> = cbytes
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            owned.into()
+        };
+        layers.push(PackedLayer {
+            name: e.name.clone(),
+            rows: e.rows,
+            cols: e.cols,
+            bits: e.bits,
+            group_size: e.group_size,
+            packed,
+            params,
+        });
+    }
+    Ok(PackedModel { layers })
+}
+
+/// Zero-copy open: mmap + in-place v3 codes; non-v3 magics fall back to
+/// the eager copy path byte-identically.
+fn open_mapped_at(path: &Path) -> Result<Artifact, ServeError> {
+    let file = MappedFile::open(path).map_err(|e| io_err(path, "cannot map", e))?;
+    if file.len() < 8 || file.bytes()[..8] != MAGIC_V3[..] {
+        // Not a v3 base (or too short to tell): the copy path handles the
+        // other three formats — and junk files — with the same typed
+        // errors open() produces.
+        drop(file);
+        return open_at(path);
+    }
+    let ctx = FileCtx::new(path);
+    let arc_path: Arc<str> = ctx.path.as_str().into();
+    let file = Arc::new(file);
+    let model = read_v3(file.bytes(), &ctx, Some((&file, &arc_path)))?;
+    Ok(Artifact::Base(model))
+}
+
 /// Autodetecting open: the magic bytes decide which decoder runs.
 fn open_at(path: &Path) -> Result<Artifact, ServeError> {
     let bytes = read_file(path)?;
@@ -748,10 +1174,16 @@ fn open_at(path: &Path) -> Result<Artifact, ServeError> {
         &ctx,
         &[
             (MAGIC_BASE, VERSION_BASE),
+            (MAGIC_V3, VERSION_V3),
             (MAGIC_ADAPTER, VERSION_ADAPTER),
             (MAGIC_V1, VERSION_V1),
         ],
     )?;
+    if magic == MAGIC_V3 {
+        // Eager v3: re-read from the top (read_v3 owns the whole parse),
+        // every CRC checked before returning, codes copied out.
+        return Ok(Artifact::Base(read_v3(&bytes, &ctx, None)?));
+    }
     if magic == MAGIC_ADAPTER {
         let id = rd
             .str("adapter id")
@@ -814,65 +1246,6 @@ fn load_base_at(path: &Path) -> Result<PackedModel, ServeError> {
                 path.display()
             ),
         }),
-    }
-}
-
-// ---- deprecated free-function shims over the store internals ----
-
-/// Deprecated free-function shim; see [`ArtifactStore::save_base`].
-#[deprecated(note = "use ArtifactStore::save_base (the unified artifact store)")]
-pub fn save_base_artifact(model: &PackedModel, path: &Path) -> anyhow::Result<()> {
-    Ok(save_base_at(model, path)?)
-}
-
-/// Deprecated free-function shim; see [`ArtifactStore::save_adapter`].
-#[deprecated(note = "use ArtifactStore::save_adapter (the unified artifact store)")]
-pub fn save_adapter_artifact(set: &AdapterSet, path: &Path) -> anyhow::Result<()> {
-    Ok(save_adapter_at(set, path)?)
-}
-
-/// Deprecated free-function shim; see [`ArtifactStore::save_legacy_v1`].
-#[deprecated(note = "use ArtifactStore::save_legacy_v1 (the unified artifact store)")]
-pub fn save_artifact_v1(
-    model: &PackedModel,
-    set: &AdapterSet,
-    path: &Path,
-) -> anyhow::Result<()> {
-    Ok(save_v1_at(model, set, path)?)
-}
-
-/// Deprecated free-function shim; see [`ArtifactStore::load_base`] /
-/// [`ArtifactStore::open`].
-#[deprecated(note = "use ArtifactStore::load_base or ArtifactStore::open")]
-pub fn load_base_artifact(path: &Path) -> anyhow::Result<PackedModel> {
-    Ok(load_base_at(path)?)
-}
-
-/// Deprecated free-function shim; see [`ArtifactStore::load_adapter`] /
-/// [`ArtifactStore::open`].
-#[deprecated(note = "use ArtifactStore::load_adapter or ArtifactStore::open")]
-pub fn load_adapter_artifact(path: &Path) -> anyhow::Result<AdapterSet> {
-    match open_at(path)? {
-        Artifact::Adapter(set) => Ok(set),
-        other => Err(anyhow::anyhow!(
-            "artifact {}: expected an adapter artifact, found a {} artifact",
-            path.display(),
-            other.kind_name()
-        )),
-    }
-}
-
-/// Deprecated free-function shim; [`ArtifactStore::open`] replaces the
-/// compat entry point (match [`Artifact::LegacyV1`] for v1 files).
-#[deprecated(note = "use ArtifactStore::open and match the Artifact variant")]
-pub fn load_artifact_compat(path: &Path) -> anyhow::Result<(PackedModel, Option<AdapterSet>)> {
-    match open_at(path)? {
-        Artifact::Base(model) => Ok((model, None)),
-        Artifact::LegacyV1 { model, adapters } => Ok((model, Some(adapters))),
-        Artifact::Adapter(_) => Err(anyhow::anyhow!(
-            "artifact {}: this is an adapter artifact, not a packed model",
-            path.display()
-        )),
     }
 }
 
@@ -1030,26 +1403,142 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_roundtrip() {
-        // The free functions stay as working shims for one deprecation
-        // cycle; they share the store's internals byte-for-byte.
-        let dir = std::env::temp_dir().join(format!("cloq_serve_shim_{}", std::process::id()));
+    fn store_roundtrips_every_format_and_refuses_cross_format_reads() {
+        // Successor of the deleted deprecated-shim test: the store is the
+        // one entry point for all four formats, and the typed accessors
+        // keep refusing cross-format reads actionably.
+        let st = store("allfmt");
         let (model, set) = small_model(304);
-        let bpath = dir.join("base.cloqpkd2");
-        let vpath = dir.join("legacy.cloqpkd");
-        save_base_artifact(&model, &bpath).unwrap();
-        save_adapter_artifact(&set, &dir.join("a.cloqadp")).unwrap();
-        save_artifact_v1(&model, &set, &vpath).unwrap();
-        let loaded = load_base_artifact(&bpath).unwrap();
+        st.save_base(&model, "base.cloqpkd2").unwrap();
+        st.save_adapter(&set, "a.cloqadp").unwrap();
+        st.save_legacy_v1(&model, &set, "legacy.cloqpkd").unwrap();
+        let loaded = st.load_base("base.cloqpkd2").unwrap();
         assert_eq!(loaded.layers.len(), model.layers.len());
-        let aset = load_adapter_artifact(&dir.join("a.cloqadp")).unwrap();
+        let aset = st.load_adapter("a.cloqadp").unwrap();
         assert_eq!(aset.id(), "tenant");
-        let (v1m, v1s) = load_artifact_compat(&vpath).unwrap();
-        assert_eq!(v1m.layers.len(), model.layers.len());
-        assert_eq!(v1s.unwrap().id(), V1_ADAPTER_ID);
-        let msg = format!("{}", load_base_artifact(&vpath).unwrap_err());
+        match st.open("legacy.cloqpkd").unwrap() {
+            Artifact::LegacyV1 { model: v1m, adapters } => {
+                assert_eq!(v1m.layers.len(), model.layers.len());
+                assert_eq!(adapters.id(), V1_ADAPTER_ID);
+            }
+            other => panic!("expected a legacy artifact, got {}", other.kind_name()),
+        }
+        let msg = format!("{}", st.load_base("legacy.cloqpkd").unwrap_err());
         assert!(msg.contains("LegacyV1"), "{msg}");
-        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(st.dir()).ok();
+    }
+
+    #[test]
+    fn v3_roundtrip_both_paths_and_zero_copy_maps() {
+        let st = store("v3");
+        let (model, _) = small_model(306);
+        st.save_base_v3(&model, "base.cloqpkd3").unwrap();
+        // Eager copy path: fully checked, codes owned.
+        let eager = st.open("base.cloqpkd3").unwrap().into_base().unwrap();
+        // Zero-copy path: codes come straight from the mapped pages.
+        let mapped = st.open_mapped("base.cloqpkd3").unwrap().into_base().unwrap();
+        let mut rng = Rng::new(307);
+        for ((a, b), c) in model.layers.iter().zip(&eager.layers).zip(&mapped.layers) {
+            assert!(!b.packed.is_mapped());
+            if cfg!(all(unix, target_endian = "little")) {
+                assert!(c.packed.is_mapped(), "unix open_mapped must map v3 codes");
+            }
+            c.verify().unwrap();
+            assert_eq!(a.packed, b.packed);
+            assert_eq!(a.packed, c.packed);
+            let x = rng.gauss_vec(a.rows);
+            let (ya, yb, yc) = (a.forward(&x, None), b.forward(&x, None), c.forward(&x, None));
+            for ((u, v), w) in ya.iter().zip(&yb).zip(&yc) {
+                assert_eq!(u.to_bits(), v.to_bits(), "layer {}", a.name);
+                assert_eq!(u.to_bits(), w.to_bits(), "layer {}", a.name);
+            }
+        }
+        std::fs::remove_dir_all(st.dir()).ok();
+    }
+
+    #[test]
+    fn v3_sections_are_page_aligned() {
+        let st = store("v3align");
+        let (model, _) = small_model(308);
+        let path = st.save_base_v3(&model, "base.cloqpkd3").unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], MAGIC_V3);
+        // Walk the directory and check every section offset is a 4096
+        // multiple (the property open_mapped's in-place cast rides on).
+        let mut rd = Rd::new(&bytes[12..]);
+        let n = rd.u32("n").unwrap() as usize;
+        assert_eq!(n, 2);
+        for _ in 0..n {
+            rd.str("name").unwrap();
+            rd.bytes(1, "kind").unwrap();
+            rd.u32("bits").unwrap();
+            rd.u64("gs").unwrap();
+            rd.u64("rows").unwrap();
+            rd.u64("cols").unwrap();
+            let codes_off = rd.u64("codes off").unwrap();
+            rd.u64("codes len").unwrap();
+            rd.u32("codes crc").unwrap();
+            let params_off = rd.u64("params off").unwrap();
+            rd.u64("params len").unwrap();
+            rd.u32("params crc").unwrap();
+            assert_eq!(codes_off % V3_ALIGN as u64, 0);
+            assert_eq!(params_off % V3_ALIGN as u64, 0);
+        }
+        std::fs::remove_dir_all(st.dir()).ok();
+    }
+
+    #[test]
+    fn v3_lazy_checksum_names_the_layer_on_first_touch() {
+        let st = store("v3lazy");
+        let (model, _) = small_model(309);
+        let path = st.save_base_v3(&model, "base.cloqpkd3").unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Corrupt one byte in the FIRST code section (first 4096-aligned
+        // offset past the header).
+        let n = bytes.len();
+        let first_section = (0..n).step_by(V3_ALIGN).find(|&o| o > 12).unwrap();
+        bytes[first_section + 5] ^= 0x40;
+        std::fs::write(st.path("bad.cloqpkd3"), &bytes).unwrap();
+        // Eager open detects it immediately...
+        let err = st.open("bad.cloqpkd3").unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                ServeError::Artifact {
+                    kind: ArtifactErrorKind::ChecksumMismatch,
+                    layer: Some(l),
+                    ..
+                } if l == "blk0.wq"
+            ),
+            "{err:?}"
+        );
+        // ...while the mapped open succeeds and defers to first touch.
+        // (On platforms without real mmap the codes fall back to an
+        // eagerly-checked owned copy, so open_mapped fails up front —
+        // also a detection, just an earlier one.)
+        if !cfg!(all(unix, target_endian = "little")) {
+            assert!(st.open_mapped("bad.cloqpkd3").is_err());
+            std::fs::remove_dir_all(st.dir()).ok();
+            return;
+        }
+        let mapped = st.open_mapped("bad.cloqpkd3").unwrap().into_base().unwrap();
+        let bad = &mapped.layers[0];
+        let err = bad.verify().unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                ServeError::Artifact {
+                    kind: ArtifactErrorKind::ChecksumMismatch,
+                    layer: Some(l),
+                    ..
+                } if l == "blk0.wq"
+            ),
+            "{err:?}"
+        );
+        // The verdict is cached: the second touch fails identically.
+        assert!(bad.verify().is_err());
+        // The OTHER layer's section is intact and verifies clean.
+        mapped.layers[1].verify().unwrap();
+        std::fs::remove_dir_all(st.dir()).ok();
     }
 }

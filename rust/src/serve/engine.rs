@@ -71,6 +71,30 @@
 //! [`ServeEngine::shutdown`] closes, then joins once the last live slot is
 //! released, so every admitted traversal finishes every remaining hop.
 //!
+//! **Durability** (`serve::wal`): an engine built with
+//! [`ServeEngineBuilder::durable`] logs every adapter register / hot-swap
+//! / unregister to a crash-safe write-ahead log BEFORE applying it, and
+//! replays the log through the normal registry path at [`build`] — a
+//! restarted engine serves every tenant that was acknowledged before the
+//! crash (bit-identical weights; `rust/tests/crash_wal.rs`). Evictions
+//! are NOT logged: replay re-runs the registers in log order under the
+//! same byte budget, so the recovered live set is a deterministic
+//! function of the log (it may differ from the pre-crash set only in
+//! which over-budget tenants were evicted, since checkout recency dies
+//! with the process).
+//!
+//! **Handle identity**: every engine mints a process-unique token at
+//! [`build`]; the [`LayerId`]s, [`Route`]s and [`AdapterId`]s it (and its
+//! registry) hand out are stamped with it. Admission compares tokens
+//! first — a handle minted by THIS engine is trusted by construction
+//! (one integer compare instead of the O(hops) route re-walk), a token-0
+//! legacy handle takes the full validation path, and a foreign engine's
+//! handle is a typed [`ServeError::BadRoute`] /
+//! [`ServeError::AdapterMismatch`] instead of silently addressing
+//! whatever sits at that index here (`rust/tests/errors_serve.rs`).
+//!
+//! [`build`]: ServeEngineBuilder::build
+//!
 //! Every [`Response`] reports its queue wait, its micro-batch's kernel
 //! time, the batch size and the adapter group count; [`EngineStats`]
 //! aggregates them for the bench harness (`BENCH_serve.json` /
@@ -90,6 +114,7 @@ use crate::serve::forward::{
     HopOutcome, ModelRequest, ModelResponse, ModelTicket, SessionRequest, StepFn, Traversal,
 };
 use crate::serve::packed::{LayerId, PackedModel, Route};
+use crate::serve::wal::{FsWalFile, Wal, WalEvent, WalFile, WalOptions};
 use crate::util::threadpool::WorkerPool;
 
 /// Staged configuration for a [`ServeEngine`], validated at
@@ -104,13 +129,28 @@ use crate::util::threadpool::WorkerPool;
 ///     .adapter_budget(512 << 20)
 ///     .build()?;
 /// ```
-#[derive(Debug)]
 pub struct ServeEngineBuilder {
     model: PackedModel,
     workers: usize,
     max_batch: usize,
     max_pending: usize,
     adapter_budget_bytes: usize,
+    /// Adapter WAL backing + its label for error messages (None = the
+    /// registry is in-memory only).
+    wal: Option<(Box<dyn WalFile>, String)>,
+    wal_opts: WalOptions,
+}
+
+impl std::fmt::Debug for ServeEngineBuilder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServeEngineBuilder")
+            .field("workers", &self.workers)
+            .field("max_batch", &self.max_batch)
+            .field("max_pending", &self.max_pending)
+            .field("adapter_budget_bytes", &self.adapter_budget_bytes)
+            .field("durable", &self.wal.as_ref().map(|(_, label)| label.clone()))
+            .finish_non_exhaustive()
+    }
 }
 
 impl ServeEngineBuilder {
@@ -143,6 +183,35 @@ impl ServeEngineBuilder {
     /// [`AdapterRegistry::new`]).
     pub fn adapter_budget(mut self, bytes: usize) -> Self {
         self.adapter_budget_bytes = bytes;
+        self
+    }
+
+    /// Make the adapter registry crash-safe: every register / hot-swap /
+    /// unregister is logged to `dir/adapters.wal` BEFORE it is applied,
+    /// and [`ServeEngineBuilder::build`] replays the log so a restarted
+    /// engine serves every tenant acknowledged before the crash. See the
+    /// module docs' durability section and `serve::wal` for the format
+    /// and recovery contract.
+    pub fn durable(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        let path = dir.into().join("adapters.wal");
+        let label = path.display().to_string();
+        self.wal = Some((Box::new(FsWalFile::at(path)), label));
+        self
+    }
+
+    /// Durability over an injected [`WalFile`] — the fault-injection
+    /// seam: `rust/tests/crash_wal.rs` passes files that truncate, tear,
+    /// or duplicate at arbitrary byte offsets. `label` names the log in
+    /// typed errors.
+    pub fn durable_wal(mut self, file: Box<dyn WalFile>, label: &str) -> Self {
+        self.wal = Some((file, label.to_string()));
+        self
+    }
+
+    /// Tune WAL fsync batching and compaction (no effect without
+    /// [`ServeEngineBuilder::durable`] / `durable_wal`).
+    pub fn wal_options(mut self, opts: WalOptions) -> Self {
+        self.wal_opts = opts;
         self
     }
 
@@ -181,10 +250,41 @@ impl ServeEngineBuilder {
             }
         }
         let model = Arc::new(self.model);
+        let registry =
+            Arc::new(AdapterRegistry::new(Arc::clone(&model), self.adapter_budget_bytes));
+        // Durable mode: replay the log through the normal registry path
+        // BEFORE the batcher starts, so the first admitted request already
+        // sees every recovered tenant. Replay failures are typed build
+        // errors (a log from a different model's engine is a shape
+        // mismatch, not a panic mid-request).
+        let wal = match self.wal {
+            None => None,
+            Some((file, label)) => {
+                let (wal, events) = Wal::open(file, &label, self.wal_opts)?;
+                for ev in events {
+                    match ev {
+                        WalEvent::Register(set) => {
+                            registry.register(set)?;
+                        }
+                        WalEvent::Unregister(id) => match registry.unregister(&id) {
+                            // The budget may have evicted the id earlier in
+                            // THIS replay; the unregister is then already
+                            // honored.
+                            Ok(()) | Err(ServeError::UnknownAdapter { .. }) => {}
+                            Err(e) => return Err(e),
+                        },
+                    }
+                }
+                Some(Mutex::new(wal))
+            }
+        };
         let shared = Arc::new(Shared {
             model: Arc::clone(&model),
             index,
-            registry: Arc::new(AdapterRegistry::new(model, self.adapter_budget_bytes)),
+            registry,
+            wal,
+            token: crate::serve::packed::next_identity_token(),
+            adapter_budget: self.adapter_budget_bytes,
             max_batch: self.max_batch,
             max_pending: self.max_pending,
             workers: self.workers,
@@ -362,6 +462,16 @@ struct Shared {
     /// it.
     index: std::collections::HashMap<String, usize>,
     registry: Arc<AdapterRegistry>,
+    /// Adapter write-ahead log (durable mode only). Locked across
+    /// log-then-apply so the log's op order IS the order the registry
+    /// observed — replay reconstructs exactly the live state.
+    wal: Option<Mutex<Wal>>,
+    /// This engine's identity token: stamped into every [`LayerId`] /
+    /// [`Route`] it mints, compared first at admission (module docs).
+    token: u64,
+    /// The registry's byte budget, kept for pre-log validation in durable
+    /// mode (nothing unreplayable may reach the log).
+    adapter_budget: usize,
     max_batch: usize,
     max_pending: usize,
     workers: usize,
@@ -390,6 +500,8 @@ impl ServeEngine {
             max_batch: 16,
             max_pending: 4096,
             adapter_budget_bytes: usize::MAX,
+            wal: None,
+            wal_opts: WalOptions::default(),
         }
     }
 
@@ -399,11 +511,13 @@ impl ServeEngine {
     }
 
     /// Intern a layer name: resolve once, submit by [`LayerId`] forever.
+    /// The id is stamped with this engine's identity token, so admission
+    /// trusts it with one integer compare (module docs).
     pub fn layer(&self, name: &str) -> Result<LayerId, ServeError> {
         self.shared
             .index
             .get(name)
-            .map(|&i| LayerId::new(i))
+            .map(|&i| LayerId::bound(i, self.shared.token))
             .ok_or_else(|| ServeError::UnknownLayer { layer: name.to_string() })
     }
 
@@ -416,7 +530,7 @@ impl ServeEngine {
             ids.push(self.layer(name.as_ref())?);
         }
         self.shared.model.validate_route(&ids)?;
-        Ok(Route::from_validated(ids))
+        Ok(Route::from_validated_bound(ids, self.shared.token))
     }
 
     /// Intern a registered adapter's id: resolve once, submit by
@@ -432,7 +546,33 @@ impl ServeEngine {
     /// Validate `set` against the served model's shapes and register it
     /// (hot-swapping any same-id predecessor; see the registry docs). The
     /// outcome carries the interned [`AdapterId`] for typed submission.
+    /// In durable mode the operation is WAL-logged before it is applied:
+    /// once this returns `Ok`, a crash-and-restart still serves the set.
     pub fn register_adapter(&self, set: AdapterSet) -> Result<RegisterOutcome, ServeError> {
+        let Some(w) = &self.shared.wal else {
+            return self.shared.registry.register(set);
+        };
+        // Pre-validate everything `register` could refuse, so nothing
+        // unreplayable ever reaches the log (a logged-but-refused op
+        // would fail the NEXT boot's replay).
+        set.check_against(self.shared.registry.model())?;
+        let bytes = set.bytes();
+        if bytes > self.shared.adapter_budget {
+            return Err(ServeError::InvalidConfig {
+                detail: format!(
+                    "adapter '{}': {bytes} bytes exceed the whole registry budget of {} \
+                     bytes",
+                    set.id(),
+                    self.shared.adapter_budget
+                ),
+            });
+        }
+        // Log-then-apply under ONE wal lock: log order == apply order, so
+        // replay reconstructs exactly the state the registry held. A crash
+        // between the two replays the op — durability errs toward
+        // remembering an acknowledged register, never forgetting one.
+        let mut wal = w.lock().unwrap();
+        wal.log_register(&set)?;
         self.shared.registry.register(set)
     }
 
@@ -450,6 +590,19 @@ impl ServeEngine {
     /// submissions naming the id are rejected from the moment this is
     /// called.
     pub fn unregister_adapter(&self, id: &str) -> Result<(), ServeError> {
+        let Some(w) = &self.shared.wal else {
+            return self.shared.registry.unregister(id);
+        };
+        let mut wal = w.lock().unwrap();
+        // Only live ids reach the log (replay drops unknown-id
+        // unregisters defensively, but a clean writer never emits one).
+        if !self.shared.registry.contains(id) {
+            return Err(ServeError::UnknownAdapter { adapter: id.to_string() });
+        }
+        wal.log_unregister(id)?;
+        // Holding the wal lock through the drain keeps log order == apply
+        // order; the drain only waits on request pins, which never touch
+        // the WAL, so this cannot deadlock.
         self.shared.registry.unregister(id)
     }
 
@@ -637,11 +790,28 @@ impl ServeEngine {
         x: Vec<f64>,
         tx: &mpsc::Sender<Result<Response, ServeError>>,
     ) -> Result<Pending, ServeError> {
-        let l = self
-            .shared
-            .model
-            .get(layer)
-            .ok_or_else(|| ServeError::UnknownLayer { layer: format!("#{}", layer.index()) })?;
+        let l = if layer.token() == self.shared.token {
+            // Minted by THIS engine: in range by construction — the token
+            // compare replaces the bounds check.
+            &self.shared.model.layers[layer.index()]
+        } else if layer.token() == 0 {
+            // Legacy unbound handle: full validation.
+            self.shared
+                .model
+                .get(layer)
+                .ok_or_else(|| ServeError::UnknownLayer { layer: format!("#{}", layer.index()) })?
+        } else {
+            // Another engine's handle: its index names some OTHER model's
+            // layer — refuse typed instead of serving whatever sits at
+            // that index here.
+            return Err(ServeError::BadRoute {
+                detail: format!(
+                    "layer handle #{} was minted by a different engine (identity token \
+                     mismatch)",
+                    layer.index()
+                ),
+            });
+        };
         if x.len() != l.rows {
             return Err(ServeError::ShapeMismatch {
                 layer: l.name.clone(),
@@ -698,7 +868,18 @@ impl ServeEngine {
                 detail: "session must run at least one forward pass".to_string(),
             });
         }
-        self.shared.model.validate_route(route.as_ids())?;
+        if route.token() == self.shared.token {
+            // Built by `ServeEngine::route`: validated against THIS model
+            // at construction — one integer compare replaces the O(hops)
+            // re-walk on every submission.
+        } else if route.token() == 0 {
+            self.shared.model.validate_route(route.as_ids())?;
+        } else {
+            return Err(ServeError::BadRoute {
+                detail: "route was built by a different engine (identity token mismatch)"
+                    .to_string(),
+            });
+        }
         let head = route.as_ids()[0];
         let head_layer = &self.shared.model.layers[head.index()];
         if x.len() != head_layer.rows {
@@ -741,6 +922,14 @@ impl ServeEngine {
     }
 
     fn checkout(&self, id: AdapterId) -> Result<AdapterHandle, ServeError> {
+        if id.token() != self.shared.registry.token() {
+            // A foreign registry's handle: its slot number would name
+            // another tenant here, so refuse typed rather than guess.
+            return Err(ServeError::AdapterMismatch {
+                adapter: format!("#{}", id.index()),
+                layer: None,
+            });
+        }
         self.shared
             .registry
             .checkout(id)
@@ -881,6 +1070,44 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
     let layer = &shared.model.layers[layer_id.index()];
     let layer_name = layer.name.as_str();
     let bs = batch.len();
+    // Lazy artifact verification: a zero-copy (mmap-v3) code section
+    // checks its CRC on FIRST TOUCH, which is here — the moment a kernel
+    // is about to read the words. A corrupt section fails this batch's
+    // riders with the typed Artifact error naming the layer, instead of
+    // serving garbage bits; the result is cached, so the layer pays one
+    // CRC pass ever (clean or corrupt). Eagerly-loaded layers verified at
+    // open time return Ok without rescanning.
+    if let Err(e) = layer.verify() {
+        let finished = batch.len();
+        let mut singles_failed = 0usize;
+        let mut models_failed = 0usize;
+        let mut forwards_done = 0usize;
+        for p in batch {
+            match p.kind {
+                HopKind::Single { tx } => {
+                    singles_failed += 1;
+                    let _ = tx.send(Err(e.clone()));
+                }
+                HopKind::Traversal(tr) => {
+                    models_failed += 1;
+                    forwards_done += tr.fail(e.clone());
+                }
+            }
+        }
+        {
+            let mut stats = shared.stats.lock().unwrap();
+            stats.failed += singles_failed;
+            stats.failed_model_requests += models_failed;
+            stats.session_forwards += forwards_done;
+        }
+        {
+            let mut st = shared.state.lock().unwrap();
+            st.in_flight -= 1;
+            st.live -= finished;
+        }
+        shared.cv.notify_all();
+        return;
+    }
     // Same-effective-slot requests adjacent ⇒ fewest adapter groups.
     // Stable, so arrival order survives within a group. Row placement
     // cannot change any response's numbers (grouped-kernel parity

@@ -1,0 +1,182 @@
+//! Read-only memory-mapped files for the zero-copy v3 artifact path.
+//!
+//! [`MappedFile`] maps a whole file `PROT_READ`/`MAP_PRIVATE` through a
+//! raw `mmap(2)` declaration (the sandbox vendors no `libc` crate), and
+//! falls back to an ordinary owned read on platforms without the call.
+//! The artifact reader decides per section whether the mapping is usable
+//! in place ([`MappedFile::is_zero_copy`] plus alignment/endianness
+//! checks in `serve::artifact`); a fallback-read `MappedFile` still
+//! serves the same bytes, just without the zero-copy property.
+//!
+//! Safety model: the mapping is private and read-only, and the pages
+//! live exactly as long as the `MappedFile` (the packed layers hold it
+//! in an `Arc`, so a served model can never outlive its pages). A file
+//! truncated by another process AFTER mapping could still fault a load —
+//! the standard mmap caveat — which is why serving artifacts are written
+//! once and never rewritten in place (`ArtifactStore` writers create
+//! fresh files).
+
+use std::io;
+use std::path::Path;
+
+#[cfg(all(unix, any(target_os = "linux", target_os = "macos")))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 1;
+    pub const MAP_PRIVATE: c_int = 2;
+
+    pub fn map_failed() -> *mut c_void {
+        usize::MAX as *mut c_void
+    }
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+}
+
+enum Backing {
+    /// Live `mmap` pages (page-aligned base, unmapped on drop).
+    #[cfg(all(unix, any(target_os = "linux", target_os = "macos")))]
+    Mapped { ptr: *const u8, len: usize },
+    /// Plain owned read — platforms without the syscall, or empty files
+    /// (a zero-length `mmap` is `EINVAL`).
+    Owned(Vec<u8>),
+}
+
+/// A whole file's bytes, memory-mapped when the platform allows it.
+pub struct MappedFile {
+    backing: Backing,
+}
+
+// The mapping is immutable (PROT_READ, MAP_PRIVATE) for its whole
+// lifetime, so sharing the pages across threads is sound.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+impl MappedFile {
+    /// Map `path` read-only; falls back to reading the file into an owned
+    /// buffer when mapping is unavailable (non-unix, or an empty file).
+    pub fn open(path: &Path) -> io::Result<MappedFile> {
+        #[cfg(all(unix, any(target_os = "linux", target_os = "macos")))]
+        {
+            use std::os::unix::io::AsRawFd;
+            let file = std::fs::File::open(path)?;
+            let len = file.metadata()?.len() as usize;
+            if len > 0 {
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_PRIVATE,
+                        file.as_raw_fd(),
+                        0,
+                    )
+                };
+                if ptr != sys::map_failed() {
+                    return Ok(MappedFile {
+                        backing: Backing::Mapped { ptr: ptr as *const u8, len },
+                    });
+                }
+                // mmap refused (exotic fs, resource limits): fall through
+                // to the owned read — correctness over zero-copy.
+            }
+        }
+        Ok(MappedFile { backing: Backing::Owned(std::fs::read(path)?) })
+    }
+
+    /// The file's bytes (mapped pages or the owned fallback buffer).
+    pub fn bytes(&self) -> &[u8] {
+        match &self.backing {
+            #[cfg(all(unix, any(target_os = "linux", target_os = "macos")))]
+            Backing::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Backing::Owned(v) => v,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True when the bytes are live `mmap` pages (page-aligned base, no
+    /// copy was made). False on the owned-read fallback.
+    pub fn is_zero_copy(&self) -> bool {
+        match &self.backing {
+            #[cfg(all(unix, any(target_os = "linux", target_os = "macos")))]
+            Backing::Mapped { .. } => true,
+            Backing::Owned(_) => false,
+        }
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        #[cfg(all(unix, any(target_os = "linux", target_os = "macos")))]
+        if let Backing::Mapped { ptr, len } = self.backing {
+            // Failure here is unrecoverable and harmless (address space
+            // leak at worst); nothing sensible to do with the status.
+            unsafe { sys::munmap(ptr as *mut std::os::raw::c_void, len) };
+        }
+    }
+}
+
+impl std::fmt::Debug for MappedFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedFile")
+            .field("len", &self.len())
+            .field("zero_copy", &self.is_zero_copy())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_and_reads_back_exact_bytes() {
+        let path = std::env::temp_dir().join(format!("cloq_mmap_{}", std::process::id()));
+        let payload: Vec<u8> = (0..9000u32).map(|i| (i % 251) as u8).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let map = MappedFile::open(&path).unwrap();
+        assert_eq!(map.len(), payload.len());
+        assert_eq!(map.bytes(), &payload[..]);
+        if cfg!(all(unix, any(target_os = "linux", target_os = "macos"))) {
+            assert!(map.is_zero_copy(), "unix must take the mmap path");
+            // The kernel hands back page-aligned mappings: the property
+            // the v3 page-aligned section layout relies on.
+            assert_eq!(map.bytes().as_ptr() as usize % 4096, 0);
+        }
+        drop(map);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_uses_the_owned_fallback() {
+        let path = std::env::temp_dir().join(format!("cloq_mmap_empty_{}", std::process::id()));
+        std::fs::write(&path, b"").unwrap();
+        let map = MappedFile::open(&path).unwrap();
+        assert!(map.is_empty());
+        assert!(!map.is_zero_copy(), "zero-length maps are EINVAL; must fall back");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_an_io_error() {
+        let path = std::env::temp_dir().join("cloq_mmap_never_written");
+        assert!(MappedFile::open(&path).is_err());
+    }
+}

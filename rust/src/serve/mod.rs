@@ -32,15 +32,19 @@
 //!     Err(e) => fail_tenant(e),
 //! }
 //!
-//! // Artifacts: one store, three formats, autodetected on open.
+//! // Artifacts: one store, four formats, autodetected on open.
 //! let store = ArtifactStore::at("/srv/cloq");
-//! store.save_base(&model, "base.cloqpkd2")?;
+//! store.save_base_v3(&model, "base.cloqpkd3")?;   // page-aligned, mmap-able
 //! store.save_adapter(&set, "tenant-a.cloqadp")?;
+//! let m = store.open_mapped("base.cloqpkd3")?;    // zero-copy cold start
 //! match store.open("anything.bin")? {
 //!     Artifact::Base(m) => serve(m),
 //!     Artifact::Adapter(s) => register(s),
 //!     Artifact::LegacyV1 { model, adapters } => migrate(model, adapters),
 //! }
+//!
+//! // Durability: a crash-safe engine replays its adapter WAL on boot.
+//! let engine = ServeEngine::builder(model).durable("/srv/cloq/state").build()?;
 //! ```
 //!
 //! # The pieces
@@ -72,8 +76,18 @@
 //!   (`rust/tests/golden_serve.rs`): the v2 `CLOQPKD2` **base** artifact
 //!   (no LoRA payloads), the small `CLOQADP1` **adapter** artifact so new
 //!   tenants ship without re-shipping the base, and the legacy `CLOQPKD1`
-//!   reader — all behind one magic-autodetecting `open`. The old free
-//!   functions remain as `#[deprecated]` shims.
+//!   reader — all behind one magic-autodetecting `open`. The
+//!   **zero-copy v3** `CLOQPKD3` base artifact page-aligns its packed
+//!   code sections so `ArtifactStore::open_mapped` serves them straight
+//!   out of `mmap`ed pages ([`mmap`]/[`MappedFile`]) — no copy, no
+//!   up-front CRC pass; each mapped section verifies lazily on first
+//!   touch with a typed [`ServeError::Artifact`] naming the layer.
+//! * [`wal`] — [`Wal`]/[`WalFile`]: the **crash-safe adapter WAL**.
+//!   Durable engines ([`ServeEngineBuilder::durable`]) log every adapter
+//!   register / hot-swap / unregister before applying it and replay the
+//!   log on boot; whatever prefix of the log survives a crash, recovery
+//!   yields exactly a prefix of the committed operations and bit-identical
+//!   weights for every surviving tenant (`rust/tests/crash_wal.rs`).
 //! * [`engine`] — [`ServeEngine`]: a batching front-end on the persistent
 //!   `util::threadpool::WorkerPool` that coalesces concurrent requests
 //!   into per-layer micro-batches (grouping same-adapter requests inside
@@ -107,20 +121,21 @@ pub mod artifact;
 pub mod engine;
 pub mod error;
 pub mod forward;
+pub mod mmap;
 pub mod packed;
+pub mod wal;
 
 pub use adapters::{
     AdapterHandle, AdapterId, AdapterRegistry, AdapterSet, RegisterOutcome, RegistryStats,
 };
 pub use artifact::{crc32, Artifact, ArtifactStore, V1_ADAPTER_ID};
-#[allow(deprecated)]
-pub use artifact::{
-    load_adapter_artifact, load_artifact_compat, load_base_artifact, save_adapter_artifact,
-    save_artifact_v1, save_base_artifact,
-};
 pub use engine::{EngineStats, Request, Response, ServeEngine, ServeEngineBuilder, Ticket};
 pub use error::{ArtifactErrorKind, ServeError};
 pub use forward::{
     forward_route_serial, ModelRequest, ModelResponse, ModelTicket, SessionRequest, StepFn,
 };
-pub use packed::{words_per_row, DequantParams, LayerId, PackedLayer, PackedModel, Route};
+pub use mmap::MappedFile;
+pub use packed::{
+    words_per_row, DequantParams, LayerId, PackedLayer, PackedModel, PackedSource, Route,
+};
+pub use wal::{FsWalFile, Wal, WalEvent, WalFile, WalOptions};

@@ -37,6 +37,7 @@
 //! order) agreement is to floating-point tolerance only — that comparison
 //! is also in the parity suite, with the tolerance stated there.
 
+use std::sync::atomic::{AtomicU8, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::linalg::blas::{axpy, dot, matvec_t};
@@ -44,7 +45,21 @@ use crate::linalg::{matmul, Matrix};
 use crate::lowrank::{LayerInit, LoraPair, Method};
 use crate::quant::packing::{pack_codes, try_unpack_codes};
 use crate::quant::{NfQuantized, QuantState, QuantizedTensor};
-use crate::serve::error::ServeError;
+use crate::serve::error::{ArtifactErrorKind, ServeError};
+use crate::serve::mmap::MappedFile;
+
+/// Mint a fresh process-unique identity token. Engines and registries
+/// stamp the handles they hand out ([`LayerId`], [`Route`],
+/// `AdapterId`) with their own token so admission can tell "this handle
+/// is MINE" with one integer compare — and reject foreign handles with a
+/// typed error instead of silently addressing whatever sits at that
+/// index. Token 0 is reserved for unbound handles (built directly
+/// against a bare [`PackedModel`], which has no owning engine); those
+/// take the legacy full-validation path at admission.
+pub(crate) fn next_identity_token() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Words per packed row: codes are row-aligned so each row of an m×n layer
 /// occupies `ceil(n / (32/bits))` little-endian u32 words.
@@ -58,24 +73,38 @@ pub fn words_per_row(cols: usize, bits: u32) -> usize {
 /// per-request hot path free of string hashing and cloning — a `LayerId`
 /// is `Copy` and compares as one integer.
 ///
-/// Like any index handle, an id is only meaningful for the model it was
-/// resolved against. The engine bounds-checks at admission (and
-/// re-checks a route's chainability), so an id from a SMALLER or
-/// incompatible model fails with a typed error — but an in-range id from
-/// a different model of compatible shape addresses whatever layer sits
-/// at that index, exactly as a raw index would. Don't mix handles across
-/// engines.
+/// An id is only meaningful for the model it was resolved against, and
+/// ids minted by a `ServeEngine` carry the engine's **identity token**:
+/// admission compares the token first, so a handle from the owning
+/// engine is admitted on one integer compare (index already validated at
+/// resolve time), while a handle minted by a DIFFERENT engine fails with
+/// a typed `BadRoute` even when its index happens to be in range.
+/// Token-0 ids (resolved against a bare [`PackedModel`], which has no
+/// owning engine) take the legacy full bounds check at admission.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct LayerId(u32);
+pub struct LayerId {
+    index: u32,
+    token: u64,
+}
 
 impl LayerId {
     pub(crate) fn new(index: usize) -> LayerId {
-        LayerId(index as u32)
+        LayerId { index: index as u32, token: 0 }
+    }
+
+    /// An id stamped with its owning engine's identity token.
+    pub(crate) fn bound(index: usize, token: u64) -> LayerId {
+        LayerId { index: index as u32, token }
     }
 
     /// The layer's position in its model's `layers` vector.
     pub fn index(self) -> usize {
-        self.0 as usize
+        self.index as usize
+    }
+
+    /// The owning engine's identity token (0 = unbound).
+    pub(crate) fn token(self) -> u64 {
+        self.token
     }
 }
 
@@ -87,6 +116,11 @@ impl LayerId {
 #[derive(Clone, Debug)]
 pub struct Route {
     hops: Arc<[LayerId]>,
+    /// The minting engine's identity token (0 = built against a bare
+    /// model). A token-bound route is admitted on ONE integer compare —
+    /// the per-submission O(hops) re-validation only runs for unbound
+    /// routes.
+    token: u64,
 }
 
 impl Route {
@@ -94,7 +128,18 @@ impl Route {
     /// been validated against a model (non-empty, in range, chainable).
     pub(crate) fn from_validated(ids: Vec<LayerId>) -> Route {
         debug_assert!(!ids.is_empty());
-        Route { hops: ids.into() }
+        Route { hops: ids.into(), token: 0 }
+    }
+
+    /// A validated route stamped with its owning engine's identity token.
+    pub(crate) fn from_validated_bound(ids: Vec<LayerId>, token: u64) -> Route {
+        debug_assert!(!ids.is_empty());
+        Route { hops: ids.into(), token }
+    }
+
+    /// The owning engine's identity token (0 = unbound).
+    pub(crate) fn token(&self) -> u64 {
+        self.token
     }
 
     /// The route's layer ids, in traversal order.
@@ -123,6 +168,149 @@ pub enum DequantParams {
     Codebook { levels: Vec<f64>, absmax: Matrix },
 }
 
+/// Lazy-CRC verification states for a mapped code section.
+const CRC_UNVERIFIED: u8 = 0;
+const CRC_OK: u8 = 1;
+const CRC_BAD: u8 = 2;
+
+/// A code section borrowed straight from a [`MappedFile`]'s pages: the
+/// v3 zero-copy path. The section's CRC is recorded at open time but only
+/// *checked* on first touch ([`PackedSource::verify`]) — cold starts pay
+/// for the header, not for hashing gigabytes of codes.
+#[derive(Clone, Debug)]
+pub struct MappedCodes {
+    /// Keeps the pages alive as long as any layer borrows them.
+    file: Arc<MappedFile>,
+    /// Byte offset of the section inside the file (4096-aligned by the
+    /// v3 writer; the reader additionally requires the resulting pointer
+    /// to be 4-aligned before constructing a `MappedCodes`).
+    byte_off: usize,
+    /// Section length in u32 words.
+    words: usize,
+    /// Expected CRC-32 of the section bytes (from the v3 directory).
+    crc: u32,
+    /// Artifact path, for the typed error.
+    path: Arc<str>,
+    /// Lazy verification state, shared across clones: CRC_UNVERIFIED /
+    /// CRC_OK / CRC_BAD.
+    state: Arc<AtomicU8>,
+}
+
+/// Where a [`PackedLayer`]'s code words live: an owned buffer (the
+/// v1/v2 copy path and everything built in process — byte-identical
+/// forwards to before this type existed) or mapped pages (the v3
+/// zero-copy path, CRC-checked lazily on first touch).
+#[derive(Clone, Debug)]
+pub enum PackedSource {
+    Owned(Vec<u32>),
+    Mapped(MappedCodes),
+}
+
+impl PackedSource {
+    /// The v3 zero-copy constructor. Caller contract (enforced by the
+    /// artifact reader): the platform is little-endian, `byte_off` is
+    /// 4-aligned within the mapping, and `[byte_off, byte_off+words*4)`
+    /// is in bounds — so `words()` can reinterpret the bytes in place.
+    pub(crate) fn mapped(
+        file: Arc<MappedFile>,
+        byte_off: usize,
+        words: usize,
+        crc: u32,
+        path: Arc<str>,
+    ) -> PackedSource {
+        debug_assert!(byte_off + words * 4 <= file.len());
+        debug_assert_eq!((file.bytes().as_ptr() as usize + byte_off) % 4, 0);
+        PackedSource::Mapped(MappedCodes {
+            file,
+            byte_off,
+            words,
+            crc,
+            path,
+            state: Arc::new(AtomicU8::new(CRC_UNVERIFIED)),
+        })
+    }
+
+    /// The code words, wherever they live. For a mapped source this
+    /// reinterprets the page bytes in place (alignment + endianness
+    /// guaranteed at construction) — no copy, no verification; call
+    /// [`PackedSource::verify`] before trusting the values.
+    pub fn words(&self) -> &[u32] {
+        match self {
+            PackedSource::Owned(v) => v,
+            PackedSource::Mapped(m) => {
+                let bytes = &m.file.bytes()[m.byte_off..m.byte_off + m.words * 4];
+                // SAFETY: construction guaranteed 4-alignment, in-bounds
+                // length, and a little-endian host; the mapping is
+                // immutable (PROT_READ) and outlives `self` via the Arc.
+                unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const u32, m.words) }
+            }
+        }
+    }
+
+    /// Section length in u32 words.
+    pub fn len(&self) -> usize {
+        match self {
+            PackedSource::Owned(v) => v.len(),
+            PackedSource::Mapped(m) => m.words,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// True on the zero-copy path (codes served straight from mapped
+    /// pages).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, PackedSource::Mapped(_))
+    }
+
+    /// Check the section's integrity. Owned buffers were fully verified
+    /// when decoded, so this is free; mapped sections hash their bytes on
+    /// the FIRST call and cache the verdict (shared across clones) — a
+    /// corrupt section fails every subsequent call with the same typed
+    /// `ChecksumMismatch` naming `layer`.
+    pub fn verify(&self, layer: &str) -> Result<(), ServeError> {
+        let m = match self {
+            PackedSource::Owned(_) => return Ok(()),
+            PackedSource::Mapped(m) => m,
+        };
+        let state = match m.state.load(Ordering::Acquire) {
+            CRC_UNVERIFIED => {
+                let bytes = &m.file.bytes()[m.byte_off..m.byte_off + m.words * 4];
+                let ok = crate::serve::artifact::crc32(bytes) == m.crc;
+                let verdict = if ok { CRC_OK } else { CRC_BAD };
+                // Racing first-touches compute the same verdict; last
+                // store wins harmlessly.
+                m.state.store(verdict, Ordering::Release);
+                verdict
+            }
+            s => s,
+        };
+        if state == CRC_OK {
+            return Ok(());
+        }
+        Err(ServeError::Artifact {
+            path: m.path.to_string(),
+            layer: Some(layer.to_string()),
+            kind: ArtifactErrorKind::ChecksumMismatch,
+            detail: "mapped code section failed its CRC on first touch".to_string(),
+        })
+    }
+}
+
+impl From<Vec<u32>> for PackedSource {
+    fn from(words: Vec<u32>) -> PackedSource {
+        PackedSource::Owned(words)
+    }
+}
+
+impl PartialEq for PackedSource {
+    fn eq(&self, other: &PackedSource) -> bool {
+        self.words() == other.words()
+    }
+}
+
 /// One packed linear **base** layer: codes + dequant params. Adapter-free —
 /// the LoRA delta is a per-request [`LoraPair`] argument.
 #[derive(Clone, Debug)]
@@ -136,8 +324,10 @@ pub struct PackedLayer {
     /// Input rows sharing one scale/zero (or absmax) entry.
     pub group_size: usize,
     /// Row-aligned packed codes: row `i` is words
-    /// `[i·words_per_row, (i+1)·words_per_row)`.
-    pub packed: Vec<u32>,
+    /// `[i·words_per_row, (i+1)·words_per_row)`. Owned for everything
+    /// built in process or loaded through the copy path; mapped pages
+    /// for v3 zero-copy artifacts (see [`PackedSource`]).
+    pub packed: PackedSource,
     pub params: DequantParams,
 }
 
@@ -190,9 +380,18 @@ impl PackedLayer {
             cols,
             bits,
             group_size,
-            packed,
+            packed: packed.into(),
             params,
         })
+    }
+
+    /// Check this layer's code section integrity — free for owned codes,
+    /// a one-time lazy CRC for mapped v3 sections (see
+    /// [`PackedSource::verify`]). The engine calls this before the first
+    /// kernel touch of a batch so a corrupt mapped artifact surfaces as a
+    /// typed `ChecksumMismatch` naming the layer, never as garbage math.
+    pub fn verify(&self) -> Result<(), ServeError> {
+        self.packed.verify(&self.name)
     }
 
     /// Pack a [`LayerInit`] into its two serving halves: the frozen base
@@ -239,7 +438,7 @@ impl PackedLayer {
         let mut codes = Vec::with_capacity(self.rows * self.cols);
         for i in 0..self.rows {
             codes.extend(try_unpack_codes(
-                &self.packed[i * wpr..(i + 1) * wpr],
+                &self.packed.words()[i * wpr..(i + 1) * wpr],
                 self.bits,
                 self.cols,
             )?);
@@ -284,7 +483,7 @@ impl PackedLayer {
         let per_word = 32 / self.bits as usize;
         let mask = ((1u64 << self.bits) - 1) as u32;
         let g = i / self.group_size;
-        let words = &self.packed[i * wpr..(i + 1) * wpr];
+        let words = &self.packed.words()[i * wpr..(i + 1) * wpr];
         match &self.params {
             DequantParams::Grid { scales, zeros } => {
                 let srow = scales.row(g);

@@ -1,0 +1,554 @@
+//! Crash-safe adapter-registry write-ahead log.
+//!
+//! The engine's [`AdapterRegistry`](crate::serve::adapters::AdapterRegistry)
+//! is in-memory state: without a log, every tenant's adapters die with
+//! the process. [`Wal`] makes registration durable with the classic
+//! log-structured recipe: an append-only file of register / hot-swap /
+//! unregister events, fsync-batched, replayed on boot, and compacted
+//! down to the live set once the log dwarfs it.
+//!
+//! ```text
+//!   header   magic "CLOQWAL1" (8) · version u32 (= 1)
+//!   records  len u32 · payload · crc32(payload) u32
+//!   payload  op u8 (1 = register/hot-swap, 2 = unregister) · body
+//!     register body    id str · n_layers u32 · per layer:
+//!                      blob_len u32 · adapter blob (the CLOQADP1 layer
+//!                      payload encoding: name, shapes, rank, A, B)
+//!     unregister body  id str
+//! ```
+//!
+//! **Recovery contract** (locked by `rust/tests/crash_wal.rs`): however
+//! many bytes of the log survive a crash, [`Wal::open`] recovers exactly
+//! a PREFIX of the committed operations — the record framing (length up
+//! front, CRC behind) makes every torn or half-written tail detectable,
+//! and parsing stops at the first incomplete or checksum-failing record.
+//! A torn tail is then REPAIRED by compacting the recovered state back
+//! to disk, so the next append never lands after garbage. A record whose
+//! CRC passes but whose payload does not decode is NOT a torn write —
+//! it's corruption or a format bug — and fails loudly with a typed
+//! `Malformed` error instead of silently truncating history.
+//!
+//! All I/O goes through the [`WalFile`] trait so the fault-injection
+//! suite can kill the "process" at any byte; [`FsWalFile`] is the real
+//! filesystem implementation (`O_APPEND` writes, `fdatasync` batching,
+//! write-temp-then-rename compaction).
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::PathBuf;
+
+use crate::serve::adapters::AdapterSet;
+use crate::serve::artifact::{
+    crc32, decode_layer_adapter, encode_layer_adapter, put_str, put_u32, Rd,
+};
+use crate::serve::error::{ArtifactErrorKind, ServeError};
+
+/// WAL file magic + version.
+pub const MAGIC_WAL: &[u8; 8] = b"CLOQWAL1";
+pub const VERSION_WAL: u32 = 1;
+
+/// The complete 12-byte header a healthy WAL starts with.
+fn wal_header() -> [u8; 12] {
+    let mut h = [0u8; 12];
+    h[..8].copy_from_slice(MAGIC_WAL);
+    h[8..].copy_from_slice(&VERSION_WAL.to_le_bytes());
+    h
+}
+
+const OP_REGISTER: u8 = 1;
+const OP_UNREGISTER: u8 = 2;
+
+/// Framed record overhead: length prefix (u32) + trailing CRC (u32).
+const FRAME_BYTES: usize = 8;
+
+/// The WAL's I/O surface. Production uses [`FsWalFile`]; the crash suite
+/// injects implementations that truncate, tear, or duplicate at
+/// arbitrary byte offsets — everything [`Wal`] does to disk goes through
+/// these four calls, so a test can kill the "process" at any byte.
+pub trait WalFile: Send {
+    /// The file's current bytes (empty when it does not exist yet).
+    fn read_all(&mut self) -> io::Result<Vec<u8>>;
+    /// Append bytes at the end.
+    fn append(&mut self, bytes: &[u8]) -> io::Result<()>;
+    /// Make appended bytes durable (fsync).
+    fn sync(&mut self) -> io::Result<()>;
+    /// Atomically replace the whole file (compaction / torn-tail repair).
+    /// Must be durable on return.
+    fn replace(&mut self, bytes: &[u8]) -> io::Result<()>;
+}
+
+/// Filesystem-backed [`WalFile`]: append-mode writes, `fdatasync` on
+/// [`WalFile::sync`], and write-temp + fsync + rename on
+/// [`WalFile::replace`] so a crash mid-compaction leaves either the old
+/// or the new log, never a mix.
+pub struct FsWalFile {
+    path: PathBuf,
+    file: Option<std::fs::File>,
+}
+
+impl FsWalFile {
+    pub fn at(path: impl Into<PathBuf>) -> FsWalFile {
+        FsWalFile { path: path.into(), file: None }
+    }
+
+    fn handle(&mut self) -> io::Result<&mut std::fs::File> {
+        if self.file.is_none() {
+            if let Some(parent) = self.path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            self.file =
+                Some(std::fs::OpenOptions::new().create(true).append(true).open(&self.path)?);
+        }
+        Ok(self.file.as_mut().unwrap())
+    }
+}
+
+impl WalFile for FsWalFile {
+    fn read_all(&mut self) -> io::Result<Vec<u8>> {
+        match std::fs::read(&self.path) {
+            Ok(bytes) => Ok(bytes),
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(Vec::new()),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn append(&mut self, bytes: &[u8]) -> io::Result<()> {
+        use std::io::Write;
+        self.handle()?.write_all(bytes)
+    }
+
+    fn sync(&mut self) -> io::Result<()> {
+        self.handle()?.sync_data()
+    }
+
+    fn replace(&mut self, bytes: &[u8]) -> io::Result<()> {
+        use std::io::Write;
+        // Drop the append handle first: after the rename it would point
+        // at the unlinked old inode.
+        self.file = None;
+        if let Some(parent) = self.path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let tmp = self.path.with_extension("wal.tmp");
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp, &self.path)
+    }
+}
+
+/// One replayed operation, in committed order. Registers carry the full
+/// decoded set (hot-swaps replay as a second register of the same id);
+/// the engine applies them through the normal registry path on boot.
+pub enum WalEvent {
+    Register(AdapterSet),
+    Unregister(String),
+}
+
+/// Tuning knobs for fsync batching and compaction.
+#[derive(Clone, Copy, Debug)]
+pub struct WalOptions {
+    /// fsync after every N logged operations (1 = every op durable before
+    /// the in-memory state changes — the default; raise it to trade the
+    /// tail of a crash for throughput).
+    pub sync_every: usize,
+    /// Never compact below this log size (compaction rewrites the whole
+    /// live state; pointless for tiny logs).
+    pub compact_min_bytes: usize,
+    /// Compact when the log exceeds `ratio ×` the live state's size.
+    pub compact_ratio: usize,
+}
+
+impl Default for WalOptions {
+    fn default() -> WalOptions {
+        WalOptions { sync_every: 1, compact_min_bytes: 64 * 1024, compact_ratio: 4 }
+    }
+}
+
+/// The adapter write-ahead log: replay on open, append-per-operation,
+/// compaction once live state ≪ log size. See the module docs for the
+/// format and the recovery contract.
+pub struct Wal {
+    file: Box<dyn WalFile>,
+    /// Human-readable log identity for typed errors (a path, usually).
+    label: String,
+    opts: WalOptions,
+    /// Live state: adapter-set id → its latest register record PAYLOAD
+    /// (compaction re-frames these; deterministic BTreeMap order).
+    live: BTreeMap<String, Vec<u8>>,
+    /// Current log size in bytes (header + every framed record).
+    log_bytes: usize,
+    /// Operations appended since the last fsync.
+    unsynced: usize,
+}
+
+impl Wal {
+    /// Open (or create) a log and replay it. Returns the WAL plus the
+    /// recovered events in committed order — exactly a prefix of the
+    /// operations ever logged, per the recovery contract. A torn tail is
+    /// repaired (compacted) before this returns, so subsequent appends
+    /// land after valid bytes.
+    pub fn open(
+        mut file: Box<dyn WalFile>,
+        label: &str,
+        opts: WalOptions,
+    ) -> Result<(Wal, Vec<WalEvent>), ServeError> {
+        let err = |kind: ArtifactErrorKind, detail: String| ServeError::Artifact {
+            path: label.to_string(),
+            layer: None,
+            kind,
+            detail,
+        };
+        let io_err = |what: &str, e: io::Error| {
+            err(ArtifactErrorKind::Io, format!("{what}: {e}"))
+        };
+        let bytes = file.read_all().map_err(|e| io_err("cannot read", e))?;
+        let header = wal_header();
+        if bytes.len() < header.len() {
+            // Fresh log, or a crash tore the header write itself: both
+            // recover to the empty state. Anything that is NOT a prefix
+            // of the correct header is some other file — refuse it
+            // rather than overwrite it.
+            if !header.starts_with(&bytes) {
+                return Err(if bytes.len() >= 8 && bytes[..8] == MAGIC_WAL[..] {
+                    err(
+                        ArtifactErrorKind::BadVersion,
+                        "unsupported WAL version bytes (torn from a different build?)"
+                            .to_string(),
+                    )
+                } else {
+                    err(
+                        ArtifactErrorKind::BadMagic,
+                        format!("not a CLOQWAL1 write-ahead log ({} bytes)", bytes.len()),
+                    )
+                });
+            }
+            let mut wal =
+                Wal { file, label: label.to_string(), opts, live: BTreeMap::new(), log_bytes: 0, unsynced: 0 };
+            wal.compact().map_err(|e| io_err("cannot initialize", e))?;
+            return Ok((wal, Vec::new()));
+        }
+        if bytes[..8] != MAGIC_WAL[..] {
+            return Err(err(
+                ArtifactErrorKind::BadMagic,
+                format!("bad magic {:02x?} (expected {MAGIC_WAL:02x?})", &bytes[..8]),
+            ));
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != VERSION_WAL {
+            return Err(err(
+                ArtifactErrorKind::BadVersion,
+                format!("unsupported WAL version {version} (this build reads {VERSION_WAL})"),
+            ));
+        }
+
+        // Record loop: stop at the FIRST incomplete or CRC-failing
+        // record — everything before it is the recovered prefix,
+        // everything from it on is a torn tail to discard.
+        let mut events = Vec::new();
+        let mut live: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+        let mut off = header.len();
+        let mut torn = false;
+        while off < bytes.len() {
+            let rest = &bytes[off..];
+            if rest.len() < 4 {
+                torn = true;
+                break;
+            }
+            let len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+            if rest.len() < 4 + len + 4 {
+                torn = true;
+                break;
+            }
+            let payload = &rest[4..4 + len];
+            let stored = u32::from_le_bytes(rest[4 + len..4 + len + 4].try_into().unwrap());
+            if crc32(payload) != stored {
+                torn = true;
+                break;
+            }
+            // The CRC passed: an undecodable payload is corruption with
+            // a valid checksum (or a writer bug) — typed failure, not
+            // silent truncation.
+            let idx = events.len();
+            match decode_record(payload).map_err(|e| {
+                err(ArtifactErrorKind::Malformed, format!("record {idx}: {e}"))
+            })? {
+                WalEvent::Register(set) => {
+                    live.insert(set.id().to_string(), payload.to_vec());
+                    events.push(WalEvent::Register(set));
+                }
+                WalEvent::Unregister(id) => {
+                    // An unregister whose id never registered cannot
+                    // arise from this writer; dropped defensively so
+                    // replay stays idempotent.
+                    if live.remove(&id).is_some() {
+                        events.push(WalEvent::Unregister(id));
+                    }
+                }
+            }
+            off += 4 + len + 4;
+        }
+        let mut wal = Wal {
+            file,
+            label: label.to_string(),
+            opts,
+            live,
+            log_bytes: off,
+            unsynced: 0,
+        };
+        if torn {
+            // Repair: rewrite header + live records so the next append
+            // never lands after garbage. The recovered events are
+            // untouched — repair changes bytes on disk, not history.
+            wal.compact().map_err(|e| io_err("cannot repair torn tail", e))?;
+        }
+        Ok((wal, events))
+    }
+
+    /// Log a register (or hot-swap — same op, the id decides). Append →
+    /// fsync batch → update live state; callers apply the operation to
+    /// the in-memory registry only AFTER this returns, so the log is
+    /// always ahead of the state it protects.
+    pub fn log_register(&mut self, set: &AdapterSet) -> Result<(), ServeError> {
+        let payload = encode_register(set);
+        self.log(payload, |live, p| {
+            live.insert(set.id().to_string(), p);
+        })
+    }
+
+    /// Log an unregister. The id must be live (the engine checks before
+    /// logging).
+    pub fn log_unregister(&mut self, id: &str) -> Result<(), ServeError> {
+        let mut payload = vec![OP_UNREGISTER];
+        put_str(&mut payload, id);
+        let id = id.to_string();
+        self.log(payload, move |live, _| {
+            live.remove(&id);
+        })
+    }
+
+    /// Current log size in bytes (diagnostics + the bench harness).
+    pub fn log_bytes(&self) -> usize {
+        self.log_bytes
+    }
+
+    /// Number of live adapter sets in the log's state.
+    pub fn live_len(&self) -> usize {
+        self.live.len()
+    }
+
+    fn io_err(&self, what: &str, e: io::Error) -> ServeError {
+        ServeError::Artifact {
+            path: self.label.clone(),
+            layer: None,
+            kind: ArtifactErrorKind::Io,
+            detail: format!("{what}: {e}"),
+        }
+    }
+
+    fn log(
+        &mut self,
+        payload: Vec<u8>,
+        apply: impl FnOnce(&mut BTreeMap<String, Vec<u8>>, Vec<u8>),
+    ) -> Result<(), ServeError> {
+        let framed = frame(&payload);
+        self.file.append(&framed).map_err(|e| self.io_err("cannot append", e))?;
+        self.unsynced += 1;
+        if self.unsynced >= self.opts.sync_every {
+            self.file.sync().map_err(|e| self.io_err("cannot sync", e))?;
+            self.unsynced = 0;
+        }
+        self.log_bytes += framed.len();
+        apply(&mut self.live, payload);
+        self.maybe_compact()
+    }
+
+    /// Bytes of a compacted log holding the current live state.
+    fn live_bytes(&self) -> usize {
+        wal_header().len()
+            + self.live.values().map(|p| p.len() + FRAME_BYTES).sum::<usize>()
+    }
+
+    fn maybe_compact(&mut self) -> Result<(), ServeError> {
+        if self.log_bytes >= self.opts.compact_min_bytes
+            && self.log_bytes > self.opts.compact_ratio * self.live_bytes()
+        {
+            self.compact().map_err(|e| self.io_err("cannot compact", e))?;
+        }
+        Ok(())
+    }
+
+    /// Rewrite the log as header + one register record per live set
+    /// (deterministic id order). Used for routine compaction AND
+    /// torn-tail repair; `WalFile::replace` guarantees old-or-new, never
+    /// a mix.
+    fn compact(&mut self) -> io::Result<()> {
+        let mut buf = wal_header().to_vec();
+        for payload in self.live.values() {
+            buf.extend_from_slice(&frame(payload));
+        }
+        self.file.replace(&buf)?;
+        self.log_bytes = buf.len();
+        self.unsynced = 0;
+        Ok(())
+    }
+}
+
+/// Frame a payload: `len u32 · payload · crc32 u32`.
+fn frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(payload.len() + FRAME_BYTES);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(payload);
+    put_u32(&mut out, crc32(payload));
+    out
+}
+
+fn encode_register(set: &AdapterSet) -> Vec<u8> {
+    let mut b = vec![OP_REGISTER];
+    put_str(&mut b, set.id());
+    put_u32(&mut b, set.len() as u32);
+    for (name, pair) in set.entries() {
+        let blob = encode_layer_adapter(name, pair);
+        put_u32(&mut b, blob.len() as u32);
+        b.extend_from_slice(&blob);
+    }
+    b
+}
+
+fn decode_record(payload: &[u8]) -> anyhow::Result<WalEvent> {
+    let mut rd = Rd::new(payload);
+    let op = rd.bytes(1, "op byte")?[0];
+    match op {
+        OP_REGISTER => {
+            let id = rd.str("adapter-set id")?;
+            let n = rd.u32("layer count")? as usize;
+            let mut set = AdapterSet::new(&id);
+            for i in 0..n {
+                let blob_len = rd.u32(&format!("layer {i} blob length"))? as usize;
+                let blob = rd.bytes(blob_len, &format!("layer {i} blob"))?;
+                let (name, pair) = decode_layer_adapter(blob)?;
+                set.insert(&name, pair)?;
+            }
+            anyhow::ensure!(
+                rd.remaining() == 0,
+                "{} trailing bytes after register body",
+                rd.remaining()
+            );
+            Ok(WalEvent::Register(set))
+        }
+        OP_UNREGISTER => {
+            let id = rd.str("adapter-set id")?;
+            anyhow::ensure!(
+                rd.remaining() == 0,
+                "{} trailing bytes after unregister body",
+                rd.remaining()
+            );
+            Ok(WalEvent::Unregister(id))
+        }
+        other => anyhow::bail!("unknown op byte {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::lowrank::LoraPair;
+    use crate::util::prng::Rng;
+
+    /// In-memory WalFile for unit tests (the crash suite injects its own
+    /// failing variants through the same trait).
+    struct MemWalFile {
+        bytes: Vec<u8>,
+    }
+
+    impl WalFile for MemWalFile {
+        fn read_all(&mut self) -> io::Result<Vec<u8>> {
+            Ok(self.bytes.clone())
+        }
+        fn append(&mut self, bytes: &[u8]) -> io::Result<()> {
+            self.bytes.extend_from_slice(bytes);
+            Ok(())
+        }
+        fn sync(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+        fn replace(&mut self, bytes: &[u8]) -> io::Result<()> {
+            self.bytes = bytes.to_vec();
+            Ok(())
+        }
+    }
+
+    fn mk_set(id: &str, seed: u64) -> AdapterSet {
+        let mut rng = Rng::new(seed);
+        AdapterSet::from_pairs(
+            id,
+            vec![(
+                "l0".to_string(),
+                LoraPair::new(Matrix::randn(6, 2, 0.1, &mut rng), Matrix::randn(4, 2, 0.1, &mut rng)),
+            )],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fresh_log_roundtrips_register_and_unregister() {
+        let dir = std::env::temp_dir().join(format!("cloq_wal_{}", std::process::id()));
+        let path = dir.join("adapters.wal");
+        {
+            let (mut wal, events) =
+                Wal::open(Box::new(FsWalFile::at(&path)), "t", WalOptions::default()).unwrap();
+            assert!(events.is_empty());
+            wal.log_register(&mk_set("a", 1)).unwrap();
+            wal.log_register(&mk_set("b", 2)).unwrap();
+            wal.log_unregister("a").unwrap();
+        }
+        let (wal, events) =
+            Wal::open(Box::new(FsWalFile::at(&path)), "t", WalOptions::default()).unwrap();
+        assert_eq!(wal.live_len(), 1);
+        let kinds: Vec<String> = events
+            .iter()
+            .map(|e| match e {
+                WalEvent::Register(s) => format!("+{}", s.id()),
+                WalEvent::Unregister(id) => format!("-{id}"),
+            })
+            .collect();
+        assert_eq!(kinds, ["+a", "+b", "-a"]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn compaction_shrinks_a_churned_log_and_preserves_state() {
+        let file = MemWalFile { bytes: Vec::new() };
+        let opts = WalOptions { sync_every: 1, compact_min_bytes: 1024, compact_ratio: 2 };
+        let (mut wal, _) = Wal::open(Box::new(file), "mem", opts).unwrap();
+        for round in 0..50u64 {
+            wal.log_register(&mk_set("hot", round)).unwrap(); // 49 hot-swaps
+        }
+        // Compaction kicked in: the log holds ~one live record, not 50.
+        assert_eq!(wal.live_len(), 1);
+        assert!(
+            wal.log_bytes() < 3 * wal.live_bytes(),
+            "log {} vs live {}",
+            wal.log_bytes(),
+            wal.live_bytes()
+        );
+    }
+
+    #[test]
+    fn non_wal_file_is_refused_not_overwritten() {
+        let file = MemWalFile { bytes: b"CLOQPKD2junkjunkjunk".to_vec() };
+        let err = Wal::open(Box::new(file), "mem", WalOptions::default()).unwrap_err();
+        assert!(
+            matches!(&err, ServeError::Artifact { kind: ArtifactErrorKind::BadMagic, .. }),
+            "{err:?}"
+        );
+        let file = MemWalFile { bytes: b"CLOQWAL1\x09\x00\x00\x00".to_vec() };
+        let err = Wal::open(Box::new(file), "mem", WalOptions::default()).unwrap_err();
+        assert!(
+            matches!(&err, ServeError::Artifact { kind: ArtifactErrorKind::BadVersion, .. }),
+            "{err:?}"
+        );
+    }
+}

@@ -1,0 +1,475 @@
+//! Deterministic fault-injection suite for the adapter WAL
+//! (`serve::wal`) and the durable engine path built on it.
+//!
+//! The recovery contract under test: **whatever prefix of the log's
+//! bytes survives a crash, replay yields exactly a prefix of the
+//! committed operations** — never a reordering, never a half-applied op,
+//! never bytes misread as an op — and an engine rebuilt from the
+//! survivors serves bit-identical (0 ULP) forwards for every adapter in
+//! the recovered state.
+//!
+//! Fault model, driven through the injectable [`WalFile`] trait:
+//! * **Truncation at EVERY byte offset** of a scripted
+//!   register → hot-swap → unregister history (the power cut). The suite
+//!   walks all ~2k cuts, not a sample.
+//! * **Torn appends**: a register that dies mid-record (the `write(2)`
+//!   that never finished) must fail typed at the caller AND recover to
+//!   the pre-append state on reboot.
+//! * **Duplicated tails**: the record-or-piece-of-record the page cache
+//!   replayed twice — full duplicates must be state-idempotent, partial
+//!   ones must be discarded as a torn tail.
+//! * **Repair-then-append**: after recovering from any cut, the log must
+//!   accept new operations and replay THOSE too (torn-tail repair
+//!   compacts, so the check is state equivalence, not byte equality).
+
+use std::sync::{Arc, Mutex};
+
+use cloq::linalg::Matrix;
+use cloq::lowrank::LoraPair;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{
+    AdapterSet, ArtifactErrorKind, PackedLayer, PackedModel, ServeEngine, ServeError, Wal,
+    WalEvent, WalFile, WalOptions,
+};
+use cloq::util::prng::Rng;
+
+// ---------------------------------------------------------------------------
+// Injectable WAL files over one shared byte buffer
+// ---------------------------------------------------------------------------
+
+type SharedBytes = Arc<Mutex<Vec<u8>>>;
+
+/// In-memory [`WalFile`] over a shareable buffer: the "disk" survives the
+/// `Wal` (the "process"), so tests crash one and boot another on the same
+/// bytes.
+struct MemFile {
+    bytes: SharedBytes,
+}
+
+impl MemFile {
+    fn over(bytes: &SharedBytes) -> Box<MemFile> {
+        Box::new(MemFile { bytes: Arc::clone(bytes) })
+    }
+}
+
+impl WalFile for MemFile {
+    fn read_all(&mut self) -> std::io::Result<Vec<u8>> {
+        Ok(self.bytes.lock().unwrap().clone())
+    }
+    fn append(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.bytes.lock().unwrap().extend_from_slice(bytes);
+        Ok(())
+    }
+    fn sync(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+    fn replace(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        *self.bytes.lock().unwrap() = bytes.to_vec();
+        Ok(())
+    }
+}
+
+/// A [`WalFile`] whose Nth append dies after writing only `keep` bytes —
+/// the torn `write(2)`. Everything else behaves like [`MemFile`].
+struct TearingFile {
+    bytes: SharedBytes,
+    appends_before_tear: usize,
+    keep: usize,
+    appends_seen: usize,
+}
+
+impl WalFile for TearingFile {
+    fn read_all(&mut self) -> std::io::Result<Vec<u8>> {
+        Ok(self.bytes.lock().unwrap().clone())
+    }
+    fn append(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.appends_seen += 1;
+        if self.appends_seen > self.appends_before_tear {
+            let keep = self.keep.min(bytes.len());
+            self.bytes.lock().unwrap().extend_from_slice(&bytes[..keep]);
+            return Err(std::io::Error::other("injected: append torn mid-record"));
+        }
+        self.bytes.lock().unwrap().extend_from_slice(bytes);
+        Ok(())
+    }
+    fn sync(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+    fn replace(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        *self.bytes.lock().unwrap() = bytes.to_vec();
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The scripted history
+// ---------------------------------------------------------------------------
+
+/// Two tiny chained layers: l0 6→4, l1 4→3 (rank-2 adapters ≈ 350 bytes
+/// per register record — the whole history is ~2 KB, so walking every
+/// byte cut stays fast).
+fn model() -> PackedModel {
+    let mut rng = Rng::new(2600);
+    let mut layers = Vec::new();
+    for (name, m, n) in [("l0", 6usize, 4usize), ("l1", 4, 3)] {
+        let w = Matrix::randn(m, n, 0.3, &mut rng);
+        layers.push(
+            PackedLayer::from_state(name, &QuantState::Int(quantize_rtn(&w, 4, 4))).unwrap(),
+        );
+    }
+    PackedModel::new(layers)
+}
+
+/// The adapter-set VERSION registered as (id, seed) — rebuilt from the
+/// seed wherever a test needs the expected weights.
+fn mk_set(id: &str, seed: u64) -> AdapterSet {
+    let mut rng = Rng::new(seed);
+    let m = model();
+    let mut set = AdapterSet::new(id);
+    for l in &m.layers {
+        set.insert(
+            &l.name,
+            LoraPair::new(
+                Matrix::randn(l.rows, 2, 0.1, &mut rng),
+                Matrix::randn(l.cols, 2, 0.1, &mut rng),
+            ),
+        )
+        .unwrap();
+    }
+    set
+}
+
+/// One scripted operation: `("+", id, seed)` register, `("-", id, 0)`
+/// unregister.
+type Op = (&'static str, &'static str, u64);
+
+/// register a → register b → hot-swap a → unregister b → register c:
+/// covers first-registration, multi-tenant, version replacement, removal,
+/// and registration-after-removal in five records.
+const HISTORY: [Op; 5] =
+    [("+", "a", 1), ("+", "b", 2), ("+", "a", 3), ("-", "b", 0), ("+", "c", 4)];
+
+/// Expected live state — (id, seed of the live version) — after the first
+/// `k` ops of [`HISTORY`].
+fn expected_live(k: usize) -> Vec<(&'static str, u64)> {
+    let mut live: Vec<(&'static str, u64)> = Vec::new();
+    for &(kind, id, seed) in &HISTORY[..k] {
+        live.retain(|&(i, _)| i != id);
+        if kind == "+" {
+            live.push((id, seed));
+        }
+    }
+    live.sort();
+    live
+}
+
+/// No-compaction options so the scripted log keeps all five records on
+/// disk — the cut sweep needs the full byte sequence.
+fn no_compact() -> WalOptions {
+    WalOptions { sync_every: 1, compact_min_bytes: usize::MAX, compact_ratio: usize::MAX }
+}
+
+/// Write the scripted history through a real `Wal`, returning the full
+/// log bytes and the byte offset at which each op's record ends (the
+/// commit points). `ends[0] = 12` is the bare header.
+fn scripted_log() -> (Vec<u8>, Vec<usize>) {
+    let bytes: SharedBytes = Arc::new(Mutex::new(Vec::new()));
+    let (mut wal, events) = Wal::open(MemFile::over(&bytes), "scripted", no_compact()).unwrap();
+    assert!(events.is_empty());
+    let mut ends = vec![bytes.lock().unwrap().len()];
+    for &(kind, id, seed) in &HISTORY {
+        match kind {
+            "+" => wal.log_register(&mk_set(id, seed)).unwrap(),
+            _ => wal.log_unregister(id).unwrap(),
+        }
+        ends.push(bytes.lock().unwrap().len());
+    }
+    assert_eq!(ends[0], 12, "header is magic + version");
+    let log = bytes.lock().unwrap().clone();
+    assert_eq!(*ends.last().unwrap(), log.len());
+    (log, ends)
+}
+
+/// Number of whole committed ops inside the first `cut` bytes.
+fn ops_within(ends: &[usize], cut: usize) -> usize {
+    HISTORY.len() - ends[1..].iter().filter(|&&e| e > cut).count()
+}
+
+/// Fold replayed events into the live (id, set) state, sorted by id —
+/// the invariant the sequence-agnostic checks compare on (compaction
+/// reorders records into id order, so post-repair logs can only be
+/// compared by state, never by raw op sequence).
+fn state_of(events: Vec<WalEvent>) -> Vec<(String, AdapterSet)> {
+    let mut live: Vec<(String, AdapterSet)> = Vec::new();
+    for ev in events {
+        match ev {
+            WalEvent::Register(set) => {
+                live.retain(|(id, _)| *id != set.id());
+                live.push((set.id().to_string(), set));
+            }
+            WalEvent::Unregister(id) => live.retain(|(i, _)| *i != id),
+        }
+    }
+    live.sort_by(|x, y| x.0.cmp(&y.0));
+    live
+}
+
+/// Assert a recovered live state matches `expected_live(k)` with
+/// bit-identical adapter weights (every version rebuilt from its seed).
+fn assert_state(live: &[(String, AdapterSet)], k: usize, ctx: &str) {
+    let want = expected_live(k);
+    let got: Vec<&str> = live.iter().map(|(id, _)| id.as_str()).collect();
+    let want_ids: Vec<&str> = want.iter().map(|&(id, _)| id).collect();
+    assert_eq!(got, want_ids, "{ctx}: live ids after {k} ops");
+    for ((_, set), &(id, seed)) in live.iter().zip(&want) {
+        let expect = mk_set(id, seed);
+        for (name, pair) in expect.entries() {
+            let got_pair = set.get(name).unwrap_or_else(|| panic!("{ctx}: {id} lost {name}"));
+            assert_bits(&got_pair.a, &pair.a, &format!("{ctx}: {id}.{name}.a"));
+            assert_bits(&got_pair.b, &pair.b, &format!("{ctx}: {id}.{name}.b"));
+        }
+    }
+}
+
+fn assert_bits(got: &Matrix, want: &Matrix, ctx: &str) {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{ctx}: shape");
+    for (u, v) in got.data.iter().zip(&want.data) {
+        assert_eq!(u.to_bits(), v.to_bits(), "{ctx}: weight bits");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The exhaustive cut sweep
+// ---------------------------------------------------------------------------
+
+/// THE property: for EVERY byte cut of the scripted log, replay recovers
+/// exactly the ops whose records fit inside the cut — in order, with
+/// bit-identical weights — and the repaired log accepts and replays a
+/// subsequent append.
+#[test]
+fn every_byte_cut_recovers_exactly_a_committed_prefix() {
+    let (log, ends) = scripted_log();
+    let names: Vec<String> = HISTORY.iter().map(|&(k, id, _)| format!("{k}{id}")).collect();
+    for cut in 0..=log.len() {
+        let k = ops_within(&ends, cut);
+        let bytes: SharedBytes = Arc::new(Mutex::new(log[..cut].to_vec()));
+        let (mut wal, events) = Wal::open(MemFile::over(&bytes), "cut", no_compact())
+            .unwrap_or_else(|e| panic!("cut {cut}: open must recover, got {e}"));
+        // The recovered events are EXACTLY the committed prefix, in order.
+        let got: Vec<String> = events
+            .iter()
+            .map(|ev| match ev {
+                WalEvent::Register(s) => format!("+{}", s.id()),
+                WalEvent::Unregister(id) => format!("-{id}"),
+            })
+            .collect();
+        assert_eq!(got, names[..k], "cut {cut}: recovered op sequence");
+        assert_state(&state_of(events), k, &format!("cut {cut}"));
+        // Repair-then-append: the repaired log takes a NEW op, and a
+        // second boot replays recovered-state + new op. Repair compacts
+        // (id order), so this is a state check, not a byte check.
+        wal.log_register(&mk_set("d", 5)).unwrap();
+        drop(wal);
+        let (_, events2) = Wal::open(MemFile::over(&bytes), "cut2", no_compact()).unwrap();
+        let live2 = state_of(events2);
+        let mut want: Vec<(&str, u64)> = expected_live(k);
+        want.push(("d", 5));
+        want.sort();
+        let got2: Vec<&str> = live2.iter().map(|(id, _)| id.as_str()).collect();
+        let want_ids: Vec<&str> = want.iter().map(|&(id, _)| id).collect();
+        assert_eq!(got2, want_ids, "cut {cut}: live ids after repair + append");
+        for ((_, set), &(id, seed)) in live2.iter().zip(&want) {
+            let expect = mk_set(id, seed);
+            for (name, pair) in expect.entries() {
+                let got_pair = set.get(name).unwrap();
+                assert_bits(&got_pair.a, &pair.a, &format!("cut {cut}: {id}.{name}.a"));
+            }
+        }
+    }
+}
+
+/// Duplicated tails (a replayed page-cache write): a FULL duplicate of
+/// the last committed record is state-idempotent — a register re-applies
+/// the same bytes, an unregister of a gone id is dropped — and any
+/// PARTIAL duplicate is a torn tail, discarded by the prefix rule.
+#[test]
+fn duplicated_tail_records_are_idempotent_and_partials_are_torn() {
+    let (log, ends) = scripted_log();
+    for k in 1..=HISTORY.len() {
+        let record = &log[ends[k - 1]..ends[k]];
+        // Full duplicate.
+        let mut bytes = log[..ends[k]].to_vec();
+        bytes.extend_from_slice(record);
+        let shared: SharedBytes = Arc::new(Mutex::new(bytes));
+        let (_, events) = Wal::open(MemFile::over(&shared), "dup", no_compact()).unwrap();
+        assert_state(&state_of(events), k, &format!("full dup of op {k}"));
+        // Every partial duplicate length (1..record) is a torn tail.
+        for keep in [1, record.len() / 2, record.len() - 1] {
+            let mut bytes = log[..ends[k]].to_vec();
+            bytes.extend_from_slice(&record[..keep]);
+            let shared: SharedBytes = Arc::new(Mutex::new(bytes));
+            let (_, events) =
+                Wal::open(MemFile::over(&shared), "partdup", no_compact()).unwrap();
+            assert_state(&state_of(events), k, &format!("partial dup ({keep}B) of op {k}"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine-level recovery: replay through the real registry, 0-ULP forwards
+// ---------------------------------------------------------------------------
+
+/// Build a durable engine over the given log bytes and assert it serves
+/// exactly `expected_live(k)`: every surviving adapter answers requests
+/// bit-identical to a direct forward with the seed-rebuilt weights, and
+/// every other id is typed-unknown.
+fn assert_engine_recovers(bytes: &SharedBytes, k: usize, ctx: &str) {
+    let engine = ServeEngine::builder(model())
+        .workers(1)
+        .durable_wal(MemFile::over(bytes), "crash")
+        .build()
+        .unwrap_or_else(|e| panic!("{ctx}: durable build must recover, got {e}"));
+    let m = model();
+    let live = expected_live(k);
+    let mut rng = Rng::new(9000 + k as u64);
+    for &(id, seed) in &live {
+        let aid = engine.adapter(id).unwrap_or_else(|e| panic!("{ctx}: lost '{id}': {e}"));
+        let expect = mk_set(id, seed);
+        for l in &m.layers {
+            let x = rng.gauss_vec(l.rows);
+            let want = l.forward(&x, expect.get(&l.name));
+            let lid = engine.layer(&l.name).unwrap();
+            let got = engine.submit(lid, Some(aid), x).wait().unwrap().y;
+            assert_eq!(got.len(), want.len(), "{ctx}: '{id}' on {}", l.name);
+            for (u, v) in got.iter().zip(&want) {
+                assert_eq!(u.to_bits(), v.to_bits(), "{ctx}: '{id}' on {} bits", l.name);
+            }
+        }
+    }
+    for id in ["a", "b", "c"] {
+        if !live.iter().any(|&(i, _)| i == id) {
+            assert!(
+                matches!(engine.adapter(id), Err(ServeError::UnknownAdapter { .. })),
+                "{ctx}: '{id}' must NOT survive"
+            );
+        }
+    }
+    engine.shutdown();
+}
+
+/// A durable engine booted from every commit point serves bit-identical
+/// forwards for exactly the committed tenants.
+#[test]
+fn durable_engine_serves_bit_identical_forwards_from_every_commit_point() {
+    let (log, ends) = scripted_log();
+    for (k, &end) in ends.iter().enumerate() {
+        let bytes: SharedBytes = Arc::new(Mutex::new(log[..end].to_vec()));
+        assert_engine_recovers(&bytes, k, &format!("commit point {k}"));
+    }
+    // And from a mid-record crash: one byte short of the last commit is
+    // the previous state.
+    let bytes: SharedBytes = Arc::new(Mutex::new(log[..log.len() - 1].to_vec()));
+    assert_engine_recovers(&bytes, HISTORY.len() - 1, "one byte short of final commit");
+}
+
+/// A register whose WAL append tears mid-record fails TYPED at the
+/// caller, leaves the live engine consistent (the op was not applied),
+/// and a reboot from the torn bytes recovers the pre-append state.
+#[test]
+fn torn_append_fails_typed_and_reboots_to_the_previous_state() {
+    let bytes: SharedBytes = Arc::new(Mutex::new(Vec::new()));
+    let engine = ServeEngine::builder(model())
+        .workers(1)
+        .durable_wal(MemFile::over(&bytes), "pre")
+        .build()
+        .unwrap();
+    engine.register_adapter(mk_set("a", 1)).unwrap();
+    engine.register_adapter(mk_set("b", 2)).unwrap();
+    engine.shutdown();
+    let committed = bytes.lock().unwrap().len();
+
+    // Reboot on a file whose NEXT append dies 7 bytes in (mid-frame).
+    let tearing = Box::new(TearingFile {
+        bytes: Arc::clone(&bytes),
+        appends_before_tear: 0,
+        keep: 7,
+        appends_seen: 0,
+    });
+    let engine = ServeEngine::builder(model())
+        .workers(1)
+        .durable_wal(tearing, "tear")
+        .build()
+        .unwrap();
+    assert!(engine.adapter("a").is_ok() && engine.adapter("b").is_ok());
+    let err = engine.register_adapter(mk_set("c", 4)).unwrap_err();
+    assert!(
+        matches!(&err, ServeError::Artifact { kind: ArtifactErrorKind::Io, .. }),
+        "torn append must surface as a typed Io artifact error, got {err:?}"
+    );
+    // The failed register was never applied: the engine does not serve
+    // 'c', and the survivors still answer.
+    assert!(matches!(engine.adapter("c"), Err(ServeError::UnknownAdapter { .. })));
+    let lid = engine.layer("l0").unwrap();
+    let aid = engine.adapter("a").unwrap();
+    let mut rng = Rng::new(9100);
+    let x = rng.gauss_vec(6);
+    let want = model().layers[0].forward(&x, mk_set("a", 1).get("l0"));
+    let got = engine.submit(lid, Some(aid), x).wait().unwrap().y;
+    for (u, v) in got.iter().zip(&want) {
+        assert_eq!(u.to_bits(), v.to_bits());
+    }
+    engine.shutdown();
+    assert_eq!(
+        bytes.lock().unwrap().len(),
+        committed + 7,
+        "the torn bytes are on disk, after the committed prefix"
+    );
+
+    // Reboot #2 on the torn bytes: strict prefix — a and b, no c — and
+    // the repair leaves an appendable log.
+    let engine = ServeEngine::builder(model())
+        .workers(1)
+        .durable_wal(MemFile::over(&bytes), "reboot")
+        .build()
+        .unwrap();
+    assert!(engine.adapter("a").is_ok() && engine.adapter("b").is_ok());
+    assert!(matches!(engine.adapter("c"), Err(ServeError::UnknownAdapter { .. })));
+    engine.register_adapter(mk_set("c", 4)).unwrap();
+    engine.shutdown();
+    let engine = ServeEngine::builder(model())
+        .workers(1)
+        .durable_wal(MemFile::over(&bytes), "reboot2")
+        .build()
+        .unwrap();
+    assert!(engine.adapter("c").is_ok(), "post-repair appends must replay");
+    engine.shutdown();
+}
+
+/// Full filesystem round-trip: a durable engine restarted from its on-disk
+/// WAL serves the hot-swapped version, not the original.
+#[test]
+fn fs_backed_engine_restores_hot_swapped_tenants_across_restart() {
+    let dir = std::env::temp_dir().join(format!("cloq_crash_wal_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    {
+        let engine = ServeEngine::builder(model()).workers(1).durable(&dir).build().unwrap();
+        engine.register_adapter(mk_set("t", 10)).unwrap();
+        engine.register_adapter(mk_set("t", 11)).unwrap(); // hot-swap
+        engine.register_adapter(mk_set("gone", 12)).unwrap();
+        engine.unregister_adapter("gone").unwrap();
+        engine.shutdown();
+    }
+    let engine = ServeEngine::builder(model()).workers(1).durable(&dir).build().unwrap();
+    assert!(matches!(engine.adapter("gone"), Err(ServeError::UnknownAdapter { .. })));
+    let aid = engine.adapter("t").unwrap();
+    let lid = engine.layer("l1").unwrap();
+    let mut rng = Rng::new(9200);
+    let x = rng.gauss_vec(4);
+    let want = model().layers[1].forward(&x, mk_set("t", 11).get("l1"));
+    let got = engine.submit(lid, Some(aid), x).wait().unwrap().y;
+    for (u, v) in got.iter().zip(&want) {
+        assert_eq!(u.to_bits(), v.to_bits(), "restart must serve the SWAPPED version");
+    }
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -10,8 +10,9 @@
 //! chains, overload rejection with in-kernel hops counted, post-close
 //! submission, kernel panics (single-layer and mid-traversal), step-fn
 //! failures, artifact corruption naming the layer with a classified
-//! kind, builder/config validation, and the `anyhow` interop offline
-//! callers rely on.
+//! kind, builder/config validation, foreign engine handles (identity
+//! tokens — and the O(1) fast path they buy), and the `anyhow` interop
+//! offline callers rely on.
 
 use std::sync::mpsc;
 
@@ -213,7 +214,7 @@ fn boom_layer(n: usize) -> PackedLayer {
         cols: n,
         bits: 2,
         group_size: n,
-        packed: vec![u32::MAX; n * wpr],
+        packed: vec![u32::MAX; n * wpr].into(),
         params: DequantParams::Codebook {
             levels: vec![0.0, 1.0],
             absmax: Matrix::zeros(1, n),
@@ -322,6 +323,58 @@ fn config_validation_is_typed() {
         ServeError::InvalidConfig { .. }
     ));
     engine.shutdown();
+}
+
+#[test]
+fn foreign_engine_handles_are_refused_typed() {
+    // Two engines over IDENTICAL models: without identity tokens, a
+    // handle minted by one would silently address whatever sits at that
+    // index in the other. Tokens make that a typed refusal — and buy the
+    // fast path: a handle carrying THIS engine's token is trusted with
+    // one integer compare instead of the O(hops) route re-walk.
+    let m = model(820);
+    let a = ServeEngine::builder(model(820)).build().unwrap();
+    let b = ServeEngine::builder(model(820)).build().unwrap();
+    let wq_b = b.layer("wq").unwrap();
+    let route_b = b.route(&["wq"]).unwrap();
+    let aid_b = b.register_adapter(adapter("tenant", &m, 821)).unwrap().id;
+    // The fast path: a's own bound handles admit and return the same
+    // bits as the direct forward (the token compare replaced the
+    // bounds/route re-validation, not the math).
+    let wq_a = a.layer("wq").unwrap();
+    let route_a = a.route(&["wq"]).unwrap();
+    let mut rng = Rng::new(823);
+    let x = rng.gauss_vec(24);
+    let direct = m.layers[0].forward(&x, None);
+    let y = a.submit(wq_a, None, x.clone()).wait().unwrap().y;
+    for (u, v) in y.iter().zip(&direct) {
+        assert_eq!(u.to_bits(), v.to_bits());
+    }
+    let y = a.submit_model(ModelRequest::new(route_a, x)).wait().unwrap().y;
+    for (u, v) in y.iter().zip(&direct) {
+        assert_eq!(u.to_bits(), v.to_bits());
+    }
+    // b's layer handle → BadRoute naming the token mismatch.
+    let err = a.submit(wq_b, None, vec![0.0; 24]).wait().unwrap_err();
+    assert!(matches!(err, ServeError::BadRoute { .. }), "{err:?}");
+    assert!(format!("{err}").contains("different engine"), "{err}");
+    // b's route → BadRoute, even though every index is in range here.
+    let err = a.submit_model(ModelRequest::new(route_b, vec![0.0; 24])).wait().unwrap_err();
+    assert!(matches!(err, ServeError::BadRoute { .. }), "{err:?}");
+    // b's adapter id → AdapterMismatch carrying the SLOT, not a name:
+    // a's registry has a different tenant at that slot, and naming it
+    // would point the operator at the wrong tenant.
+    let a_same_slot = a.register_adapter(adapter("other", &m, 822)).unwrap().id;
+    assert_eq!(a_same_slot.index(), aid_b.index(), "same slot in both registries");
+    let err = a.submit(wq_a, Some(aid_b), vec![0.0; 24]).wait().unwrap_err();
+    assert!(
+        matches!(&err, ServeError::AdapterMismatch { adapter, layer: None } if adapter == "#0"),
+        "{err:?}"
+    );
+    // a's registry still resolves its own tenant by its own id.
+    assert!(a.submit(wq_a, Some(a_same_slot), vec![0.0; 24]).wait().is_ok());
+    a.shutdown();
+    b.shutdown();
 }
 
 #[test]

@@ -112,7 +112,7 @@ fn boom_layer(n: usize) -> PackedLayer {
         cols: n,
         bits: 2,
         group_size: n,
-        packed: vec![u32::MAX; n * wpr], // every 2-bit code = 3
+        packed: vec![u32::MAX; n * wpr].into(), // every 2-bit code = 3
         params: DequantParams::Codebook {
             levels: vec![0.0, 1.0], // code 3 is out of range → panic
             absmax: Matrix::zeros(1, n),

@@ -35,6 +35,11 @@ Gated rows (a >threshold drop in any of them fails the job):
     - session_sweep[*].pipelined.forwards_per_s  (the pipelined headline)
     - session_sweep[*].serial.forwards_per_s
     - mixed_adapter.forwards_per_s
+  BENCH_artifact.json
+    - cold_start[*].speedup_v3_vs_v2         (zero-copy headline: mmap v3
+                                              vs eager-copy v2 cold start)
+    - cold_start[*].v3_open_s                (absolute mapped-open time)
+    - replay[*].events_per_s                 (WAL boot-replay rate)
   BENCH_optq.json
     - unblocked.min_s / blocked[*].min_s     (lazy-batch blocking rows)
   BENCH_linalg.json
@@ -74,6 +79,9 @@ GATED_ROWS = [
     ("BENCH_forward.json", "session_sweep.*.pipelined.forwards_per_s", "rate"),
     ("BENCH_forward.json", "session_sweep.*.serial.forwards_per_s", "rate"),
     ("BENCH_forward.json", "mixed_adapter.forwards_per_s", "rate"),
+    ("BENCH_artifact.json", "cold_start.*.speedup_v3_vs_v2", "rate"),
+    ("BENCH_artifact.json", "cold_start.*.v3_open_s", "time"),
+    ("BENCH_artifact.json", "replay.*.events_per_s", "rate"),
     ("BENCH_optq.json", "unblocked.min_s", "time"),
     ("BENCH_optq.json", "blocked.*.min_s", "time"),
     ("BENCH_linalg.json", "records.*.speedup", "rate"),
@@ -92,6 +100,7 @@ IDENTITY_KEYS = [
     "sessions",
     "adapter_counts",
     "block_sizes",
+    "event_counts",
 ]
 
 

@@ -4,7 +4,8 @@
 # Usage: scripts/check.sh [--bench]
 #   --bench  additionally run the perf benches that emit BENCH_*.json
 #            (bench_optq / bench_linalg / bench_serve / bench_adapters /
-#            bench_forward; slow — not part of the default gate). Set
+#            bench_forward / bench_artifact; slow — not part of the
+#            default gate). Set
 #            CLOQ_BENCH_SMOKE=1 for the small-size smoke mode the CI
 #            bench-smoke job uses (seconds instead of minutes; records
 #            carry "smoke": true so scripts/bench_diff.py never mixes
@@ -37,6 +38,13 @@ cargo build --release "${CARGO_FLAGS[@]}"
 echo "== cargo test -q =="
 cargo test -q "${CARGO_FLAGS[@]}"
 
+# Durability gate — explicit so a filtered or partial test run can never
+# silently drop it: the deterministic fault-injection recovery suite
+# (truncation at every byte offset + bit-identical post-recovery forwards)
+# must pass in the default gate, not just under --bench.
+echo "== cargo test -q --test crash_wal (fault-injection recovery suite) =="
+cargo test -q --test crash_wal "${CARGO_FLAGS[@]}"
+
 # Clippy gate — HARD and WORKSPACE-WIDE: deny warnings on every target of
 # every member crate (lib, bins, examples, benches, tests, and the
 # vendored shims — the whole tree is lint-clean). Tolerated to be absent
@@ -68,12 +76,13 @@ else
 fi
 
 if [[ "${1:-}" == "--bench" ]]; then
-    echo "== perf benches (BENCH_{optq,linalg,serve,adapters,forward}.json) =="
+    echo "== perf benches (BENCH_{optq,linalg,serve,adapters,forward,artifact}.json) =="
     cargo bench --bench bench_optq "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_linalg "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_serve "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_adapters "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_forward "${CARGO_FLAGS[@]}"
+    cargo bench --bench bench_artifact "${CARGO_FLAGS[@]}"
 fi
 
 echo "check.sh: all green"

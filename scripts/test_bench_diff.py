@@ -19,7 +19,7 @@ import bench_diff  # noqa: E402
 
 
 def synthetic_records():
-    """Minimal but schema-faithful records for all five gated suites."""
+    """Minimal but schema-faithful records for all six gated suites."""
     br = {"iters": 10, "mean_s": 1.1e-4, "min_s": 1e-4, "stddev_s": 1e-6}
     return {
         "BENCH_serve.json": {
@@ -73,6 +73,24 @@ def synthetic_records():
                 for s in (1, 4, 8)
             ],
             "mixed_adapter": {"forwards_per_s": 9000.0},
+        },
+        "BENCH_artifact.json": {
+            "bench": "artifact",
+            "smoke": True,
+            "sizes": [[2, 128], [4, 192]],
+            "event_counts": [64],
+            "cold_start": [
+                {
+                    "layers": l,
+                    "n": n,
+                    "bytes": l * n * n // 2,
+                    "v2_open_s": 4e-3 * l,
+                    "v3_open_s": 1e-3,
+                    "speedup_v3_vs_v2": 4.0 * l,
+                }
+                for l, n in ((2, 128), (4, 192))
+            ],
+            "replay": [{"events": 64, "events_per_s": 30000.0}],
         },
         "BENCH_optq.json": {
             "bench": "optq_lazy_batch_blocking",
@@ -156,6 +174,38 @@ def main():
         recs["BENCH_adapters.json"]["multi_tenant_throughput_retention"] = 0.5
         write_dir(fresh, recs)
         check("retention regression", run(base, fresh), 1)
+
+        # 5a. The zero-copy cold-start headline is gated: a >25% drop in
+        # the v3-vs-v2 speedup fails, as does a slower absolute mapped open.
+        recs = synthetic_records()
+        recs["BENCH_artifact.json"]["cold_start"][1]["speedup_v3_vs_v2"] *= 0.5
+        write_dir(fresh, recs)
+        check("cold-start speedup regression", run(base, fresh), 1)
+        recs = synthetic_records()
+        recs["BENCH_artifact.json"]["cold_start"][0]["v3_open_s"] *= 2.0
+        write_dir(fresh, recs)
+        check("mapped-open time regression", run(base, fresh), 1)
+
+        # 5b. The WAL replay rate is gated too.
+        recs = synthetic_records()
+        recs["BENCH_artifact.json"]["replay"][0]["events_per_s"] *= 0.5
+        write_dir(fresh, recs)
+        check("wal replay regression", run(base, fresh), 1)
+
+        # 5c. A re-sized replay sweep ('event_counts' identity key) is not
+        # comparable: skip by default, fail under --require-baseline.
+        recs = synthetic_records()
+        recs["BENCH_artifact.json"]["event_counts"] = [64, 256]
+        recs["BENCH_artifact.json"]["replay"].append(
+            {"events": 256, "events_per_s": 28000.0}
+        )
+        write_dir(fresh, recs)
+        check("re-sized event_counts skips", run(base, fresh), 0)
+        check(
+            "re-sized event_counts fails under --require-baseline",
+            run(base, fresh, "--require-baseline"),
+            1,
+        )
 
         # 6. Within-threshold drift passes.
         recs = synthetic_records()
