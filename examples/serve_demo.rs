@@ -5,7 +5,9 @@
 //! adapter / route handles once, and serve a mixed-adapter burst through
 //! the batching engine — with a hot-swap, an unregister drain, and typed
 //! error handling along the way. Also exercises the legacy v1 artifact
-//! path (`Artifact::LegacyV1`).
+//! path (`Artifact::LegacyV1`), and closes with the engine's telemetry
+//! snapshot: latency percentiles, per-adapter attribution, one captured
+//! request-span timeline, and a Prometheus exposition excerpt.
 //!
 //! ```sh
 //! cargo run --release --example serve_demo
@@ -15,7 +17,8 @@ use cloq::linalg::{syrk_t, Matrix};
 use cloq::lowrank::{init_layer, InitConfig, LoraPair, Method};
 use cloq::serve::{
     forward_route_serial, AdapterSet, Artifact, ArtifactStore, ModelRequest, PackedLayer,
-    PackedModel, Request, ServeEngine, ServeError, SessionRequest, StepFn,
+    Metric, PackedModel, Request, ServeEngine, ServeError, SessionRequest, StepFn,
+    TelemetryOptions,
 };
 use cloq::util::prng::Rng;
 
@@ -124,7 +127,16 @@ fn main() -> anyhow::Result<()> {
 
     // ---- 3. serve a concurrent multi-tenant burst -------------------------
     let reference = loaded.clone(); // serial-reference copy for §4's parity check
-    let engine = ServeEngine::builder(loaded).workers(2).max_batch(16).build()?;
+    // A zero slow-threshold captures EVERY request's span timeline into
+    // the slow ring so §5 has a trace to show; the logger is muted to
+    // Error because each "slow" capture would otherwise warn — dozens of
+    // lines a real deployment only sees for genuinely slow requests.
+    cloq::util::logging::set_level(cloq::util::logging::Level::Error);
+    let engine = ServeEngine::builder(loaded)
+        .workers(2)
+        .max_batch(16)
+        .telemetry(TelemetryOptions::default().slow_threshold_s(0.0).slow_traces(4))
+        .build()?;
     // Intern once: every name becomes a Copy handle; the submission loop
     // below never hashes or clones a string.
     let mut tenant_ids = Vec::new();
@@ -234,6 +246,43 @@ fn main() -> anyhow::Result<()> {
         sess.compute_s * 1e6
     );
     anyhow::ensure!(sess_ulp == 0, "session parity violated");
+
+    // ---- 5. telemetry: percentiles, attribution, a trace, Prometheus ----
+    // Snapshot before shutdown: `telemetry()` borrows the live engine.
+    let snap = engine.telemetry();
+    println!(
+        "\n== telemetry == hop latency p50/p95 {:.1}/{:.1} us, \
+         request wall p50/p95 {:.1}/{:.1} us, batch compute p95 {:.1} us \
+         (log-linear buckets, <=25% resolution)",
+        snap.hist(Metric::HopLatency).quantile(0.5) * 1e6,
+        snap.hist(Metric::HopLatency).quantile(0.95) * 1e6,
+        snap.hist(Metric::RequestWall).quantile(0.5) * 1e6,
+        snap.hist(Metric::RequestWall).quantile(0.95) * 1e6,
+        snap.hist(Metric::BatchCompute).quantile(0.95) * 1e6,
+    );
+    for a in snap.per_adapter.iter().filter(|a| a.hops > 0) {
+        println!(
+            "   adapter {:<10} {:>4} hops  {:>8.1} us queued  {:>8.1} us compute",
+            a.name,
+            a.hops,
+            a.queue_s * 1e6,
+            a.compute_s * 1e6
+        );
+    }
+    if let Some(trace) = snap.slow_traces.last() {
+        println!("   captured span timeline (newest slow-ring entry):");
+        for line in trace.render().lines() {
+            println!("      {line}");
+        }
+    }
+    let prom = snap.render_prometheus();
+    println!(
+        "   Prometheus exposition: {} bytes; first sample lines:",
+        prom.len()
+    );
+    for line in prom.lines().filter(|l| !l.starts_with('#')).take(6) {
+        println!("      {line}");
+    }
 
     let stats = engine.shutdown();
     println!(

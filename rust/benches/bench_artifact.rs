@@ -12,6 +12,12 @@
 //!    register/hot-swap/unregister history from a CLOQWAL1 log and apply
 //!    it to a fresh registry, in events/s vs history length. This is the
 //!    exact work a durable engine does in `build()` before serving.
+//! 3. **WAL group commit**: durable register throughput, one thread vs
+//!    many. Registration appends under the WAL lock but fsyncs OUTSIDE
+//!    it (`Wal::commit_through`), so concurrent registers that appended
+//!    while an fsync was in flight ride that fsync instead of issuing
+//!    their own — visible as `fsyncs_per_op` dropping below 1 (counted by
+//!    engine telemetry, `Counter::WalFsyncs`) while registers/s rises.
 //!
 //! Under `CLOQ_BENCH_SMOKE=1` (the CI bench-smoke job) shapes and counts
 //! shrink and the record carries `"smoke": true` so `scripts/bench_diff.py`
@@ -22,14 +28,15 @@
 //! crash-recovery semantics in `rust/tests/crash_wal.rs`.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use cloq::bench::{bench, section, smoke, smoke_scaled, target_time, write_bench_json};
 use cloq::linalg::Matrix;
 use cloq::lowrank::LoraPair;
 use cloq::quant::{quantize_rtn, QuantState};
 use cloq::serve::{
-    AdapterRegistry, AdapterSet, Artifact, ArtifactStore, FsWalFile, PackedLayer, PackedModel,
-    Wal, WalEvent, WalOptions,
+    AdapterRegistry, AdapterSet, Artifact, ArtifactStore, Counter, FsWalFile, PackedLayer,
+    PackedModel, ServeEngine, Wal, WalEvent, WalOptions,
 };
 use cloq::util::json::Json;
 use cloq::util::prng::Rng;
@@ -164,6 +171,78 @@ fn main() {
         replay_rows.push(row);
     }
 
+    // ---- 3. WAL group commit: serial vs concurrent durable registers ------
+    section("WAL group commit: durable register throughput, 1 thread vs 8");
+    let n_regs = smoke_scaled(128, 32);
+    let gc_threads = 8usize;
+    // Sets are pre-built and cloned into the timed region so both modes
+    // time register_adapter (append + fsync policy + registry apply) and
+    // nothing else. Compaction is off: a mid-run log rewrite would hand
+    // one mode a free durability point.
+    let gc_opts =
+        WalOptions { sync_every: 1, compact_min_bytes: usize::MAX, compact_ratio: usize::MAX };
+    let mut gc_rng = Rng::new(79);
+    let gc_sets: Vec<AdapterSet> =
+        (0..n_regs).map(|i| mk_set(&format!("gc{i}"), wn, &mut gc_rng)).collect();
+    let mut gc_json = Json::obj();
+    let mut gc_rps = [0.0f64; 2]; // [serial, concurrent]
+    for (k, mode) in ["serial", "concurrent"].into_iter().enumerate() {
+        let mut best = f64::INFINITY;
+        let mut best_fsyncs = 0u64;
+        for round in 0..3 {
+            let wdir = dir.join(format!("gc_{mode}_{round}"));
+            std::fs::create_dir_all(&wdir).unwrap();
+            let engine = ServeEngine::builder(mk_model(1, wn, 77))
+                .workers(1)
+                .durable(&wdir)
+                .wal_options(gc_opts)
+                .build()
+                .unwrap();
+            let t0 = Instant::now();
+            if mode == "serial" {
+                for set in &gc_sets {
+                    engine.register_adapter(set.clone()).unwrap();
+                }
+            } else {
+                std::thread::scope(|s| {
+                    for chunk in gc_sets.chunks(n_regs.div_ceil(gc_threads)) {
+                        let engine = &engine;
+                        s.spawn(move || {
+                            for set in chunk {
+                                engine.register_adapter(set.clone()).unwrap();
+                            }
+                        });
+                    }
+                });
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let fsyncs = engine.telemetry().counter(Counter::WalFsyncs);
+            engine.shutdown();
+            if wall < best {
+                best = wall;
+                best_fsyncs = fsyncs;
+            }
+        }
+        gc_rps[k] = n_regs as f64 / best.max(1e-12);
+        let fsyncs_per_op = best_fsyncs as f64 / n_regs as f64;
+        println!(
+            "group commit {mode:<10} {n_regs} registers in {best:.4}s → {:.0} reg/s, \
+             {fsyncs_per_op:.2} fsyncs/op",
+            gc_rps[k]
+        );
+        let mut row = Json::obj();
+        row.set("registers", Json::from(n_regs));
+        row.set("threads", Json::from(if mode == "serial" { 1 } else { gc_threads }));
+        row.set("best_wall_s", Json::from(best));
+        row.set("registers_per_s", Json::from(gc_rps[k]));
+        row.set("fsyncs", Json::from(best_fsyncs as usize));
+        row.set("fsyncs_per_op", Json::from(fsyncs_per_op));
+        gc_json.set(mode, row);
+    }
+    let gc_speedup = gc_rps[1] / gc_rps[0].max(1e-30);
+    println!("\ngroup-commit concurrent-vs-serial: {gc_speedup:.2}x");
+    gc_json.set("speedup_concurrent_vs_serial", Json::from(gc_speedup));
+
     let record = Json::from_pairs(vec![
         ("bench", Json::from("artifact")),
         ("smoke", Json::from(smoke())),
@@ -184,6 +263,7 @@ fn main() {
         ),
         ("cold_start", Json::Arr(cold_rows)),
         ("replay", Json::Arr(replay_rows)),
+        ("group_commit", gc_json),
         (
             "parity",
             Json::from(

@@ -522,6 +522,16 @@ impl AdapterRegistry {
             .is_some_and(|&i| st.slots[i as usize].entry.is_some())
     }
 
+    /// Every interned slot's id string, in slot order — index `i` names
+    /// slot `i`, whether or not it is currently registered. Telemetry
+    /// labels its per-adapter attribution rows with this (attribution is
+    /// indexed by slot, and a slot keeps its stats across
+    /// unregister/re-register of the same id).
+    pub fn slot_names(&self) -> Vec<String> {
+        let st = self.shared.state.lock().unwrap();
+        st.slots.iter().map(|s| s.name.clone()).collect()
+    }
+
     /// Registered ids, alphabetical (diagnostics / demo output).
     pub fn ids(&self) -> Vec<String> {
         let st = self.shared.state.lock().unwrap();

@@ -216,12 +216,34 @@ impl std::fmt::Debug for Artifact {
 /// [`ArtifactErrorKind`], and the offending layer's name when known.
 pub struct ArtifactStore {
     dir: PathBuf,
+    /// Optional engine telemetry: open counts (by mode) and open-duration
+    /// histogram. None = uninstrumented, zero overhead.
+    telemetry: Option<Arc<crate::serve::telemetry::Telemetry>>,
 }
 
 impl ArtifactStore {
     /// A store rooted at `dir` (created lazily on the first save).
     pub fn at(dir: impl Into<PathBuf>) -> ArtifactStore {
-        ArtifactStore { dir: dir.into() }
+        ArtifactStore { dir: dir.into(), telemetry: None }
+    }
+
+    /// Instrument this store: reads record `ArtifactOpensEager` /
+    /// `ArtifactOpensMapped` counters and the `ArtifactOpen` duration
+    /// histogram into `telemetry` (wire an engine's core in via
+    /// `ServeEngine::telemetry_handle`).
+    pub fn with_telemetry(
+        mut self,
+        telemetry: Arc<crate::serve::telemetry::Telemetry>,
+    ) -> ArtifactStore {
+        self.telemetry = Some(telemetry);
+        self
+    }
+
+    fn observe_open(&self, mode: crate::serve::telemetry::Counter, t0: std::time::Instant) {
+        if let Some(t) = &self.telemetry {
+            t.incr(mode);
+            t.observe(crate::serve::telemetry::Metric::ArtifactOpen, t0.elapsed().as_secs_f64());
+        }
     }
 
     pub fn dir(&self) -> &Path {
@@ -283,7 +305,10 @@ impl ArtifactStore {
     /// buffers (a v3 file is copied, not mapped; use
     /// [`ArtifactStore::open_mapped`] for zero-copy).
     pub fn open(&self, name: &str) -> Result<Artifact, ServeError> {
-        open_at(&self.path(name))
+        let t0 = std::time::Instant::now();
+        let art = open_at(&self.path(name))?;
+        self.observe_open(crate::serve::telemetry::Counter::ArtifactOpensEager, t0);
+        Ok(art)
     }
 
     /// Zero-copy open: `mmap` the file and, when it is a v3 base
@@ -297,14 +322,20 @@ impl ArtifactStore {
     /// platform cannot honor the in-place cast — big-endian hosts, or an
     /// mmap-less filesystem.
     pub fn open_mapped(&self, name: &str) -> Result<Artifact, ServeError> {
-        open_mapped_at(&self.path(name))
+        let t0 = std::time::Instant::now();
+        let art = open_mapped_at(&self.path(name))?;
+        self.observe_open(crate::serve::telemetry::Counter::ArtifactOpensMapped, t0);
+        Ok(art)
     }
 
     /// Read a base artifact, refusing adapter and legacy files with a
     /// pointer to [`ArtifactStore::open`] (a legacy file's embedded
     /// adapters must not be dropped silently).
     pub fn load_base(&self, name: &str) -> Result<PackedModel, ServeError> {
-        load_base_at(&self.path(name))
+        let t0 = std::time::Instant::now();
+        let model = load_base_at(&self.path(name))?;
+        self.observe_open(crate::serve::telemetry::Counter::ArtifactOpensEager, t0);
+        Ok(model)
     }
 
     /// Read an adapter artifact, refusing the other formats (one source

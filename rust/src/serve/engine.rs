@@ -99,6 +99,17 @@
 //! time, the batch size and the adapter group count; [`EngineStats`]
 //! aggregates them for the bench harness (`BENCH_serve.json` /
 //! `BENCH_adapters.json` / `BENCH_forward.json`) and the demo.
+//!
+//! **Telemetry** (`serve::telemetry`): every admission, micro-batch, and
+//! durability event records into a sharded lock-free metrics core —
+//! counters, log-scale latency histograms, per-layer / per-adapter
+//! attribution, and per-request span traces with automatic slow-request
+//! capture. [`ServeEngine::telemetry`] returns the merged
+//! [`TelemetrySnapshot`] (quantiles + `render_prometheus()`);
+//! [`ServeEngine::stats`] remains the back-compat [`EngineStats`] view,
+//! now *derived* from that snapshot — the per-batch stats mutex is gone
+//! from the hot path entirely, and `benches/bench_telemetry.rs` gates
+//! the full instrumentation overhead below 5% in CI.
 
 use std::collections::VecDeque;
 use std::sync::{mpsc, Arc, Condvar, Mutex};
@@ -114,6 +125,10 @@ use crate::serve::forward::{
     HopOutcome, ModelRequest, ModelResponse, ModelTicket, SessionRequest, StepFn, Traversal,
 };
 use crate::serve::packed::{LayerId, PackedModel, Route};
+use crate::serve::telemetry::{
+    Counter, Metric, Telemetry, TelemetryOptions, TelemetrySnapshot, TraceBuf, TraceKind,
+    TraceStage,
+};
 use crate::serve::wal::{FsWalFile, Wal, WalEvent, WalFile, WalOptions};
 use crate::util::threadpool::WorkerPool;
 
@@ -139,6 +154,7 @@ pub struct ServeEngineBuilder {
     /// registry is in-memory only).
     wal: Option<(Box<dyn WalFile>, String)>,
     wal_opts: WalOptions,
+    telemetry: TelemetryOptions,
 }
 
 impl std::fmt::Debug for ServeEngineBuilder {
@@ -215,6 +231,18 @@ impl ServeEngineBuilder {
         self
     }
 
+    /// Tune (or disable) the telemetry subsystem: sharded counters and
+    /// latency histograms, per-layer/per-adapter attribution, and
+    /// request tracing with slow-request capture. Enabled by default
+    /// with production-sane knobs; [`TelemetryOptions::disabled`] turns
+    /// every instrument into a no-op (the overhead baseline
+    /// `benches/bench_telemetry.rs` measures against). See
+    /// `serve::telemetry`.
+    pub fn telemetry(mut self, opts: TelemetryOptions) -> Self {
+        self.telemetry = opts;
+        self
+    }
+
     /// Validate the configuration and start the engine (batcher thread +
     /// worker pool). Zero-valued knobs and duplicate layer names are
     /// [`ServeError::InvalidConfig`] — reported here, once, instead of
@@ -252,6 +280,15 @@ impl ServeEngineBuilder {
         let model = Arc::new(self.model);
         let registry =
             Arc::new(AdapterRegistry::new(Arc::clone(&model), self.adapter_budget_bytes));
+        // One telemetry core per engine, shared by every admission path,
+        // kernel worker, and the WAL. Shard count scales with the worker
+        // count so concurrent batch completions don't contend on one
+        // cache line (see `serve::telemetry`).
+        let telemetry = Arc::new(Telemetry::new(
+            model.layers.iter().map(|l| l.name.clone()).collect(),
+            self.workers,
+            self.telemetry,
+        ));
         // Durable mode: replay the log through the normal registry path
         // BEFORE the batcher starts, so the first admitted request already
         // sees every recovered tenant. Replay failures are typed build
@@ -260,7 +297,9 @@ impl ServeEngineBuilder {
         let wal = match self.wal {
             None => None,
             Some((file, label)) => {
-                let (wal, events) = Wal::open(file, &label, self.wal_opts)?;
+                let (mut wal, events) = Wal::open(file, &label, self.wal_opts)?;
+                wal.attach_telemetry(Arc::clone(&telemetry));
+                telemetry.add(Counter::WalReplayEvents, events.len() as u64);
                 for ev in events {
                     match ev {
                         WalEvent::Register(set) => {
@@ -295,7 +334,7 @@ impl ServeEngineBuilder {
                 live: 0,
             }),
             cv: Condvar::new(),
-            stats: Mutex::new(EngineStats::default()),
+            telemetry,
             pool: Arc::new(WorkerPool::new(self.workers)),
         });
         let batcher = {
@@ -342,6 +381,9 @@ pub struct Response {
     /// Distinct adapter groups (incl. the base-only group) in that batch —
     /// 1 means the batch was adapter-uniform.
     pub adapter_groups: usize,
+    /// This request's telemetry trace id (0 when tracing is disabled);
+    /// look the span timeline up in `TelemetrySnapshot::recent_traces`.
+    pub trace_id: u64,
 }
 
 /// Aggregate engine counters (snapshot via [`ServeEngine::stats`]).
@@ -437,8 +479,16 @@ struct Pending {
     /// pull the weights out from under a queued or in-flight request, and
     /// a hot-swap can never mix versions inside one traversal.
     adapter: Option<AdapterHandle>,
+    /// The adapter's interned slot index, copied at admission for
+    /// per-adapter telemetry attribution (the pinned handle does not
+    /// expose its slot).
+    adapter_slot: Option<u32>,
     x: Vec<f64>,
     t_in: Instant,
+    /// In-flight span trace riding this hop (None when tracing is
+    /// disabled). Travels with the request across every hop of a
+    /// traversal; finished when the ticket resolves.
+    trace: Option<Box<TraceBuf>>,
     kind: HopKind,
 }
 
@@ -477,7 +527,9 @@ struct Shared {
     workers: usize,
     state: Mutex<QueueState>,
     cv: Condvar,
-    stats: Mutex<EngineStats>,
+    /// Sharded metrics + tracing core. NEVER behind the state mutex: the
+    /// hot path records through relaxed atomics only (`serve::telemetry`).
+    telemetry: Arc<Telemetry>,
     pool: Arc<WorkerPool>,
 }
 
@@ -502,6 +554,7 @@ impl ServeEngine {
             adapter_budget_bytes: usize::MAX,
             wal: None,
             wal_opts: WalOptions::default(),
+            telemetry: TelemetryOptions::default(),
         }
     }
 
@@ -571,9 +624,24 @@ impl ServeEngine {
         // replay reconstructs exactly the state the registry held. A crash
         // between the two replays the op — durability errs toward
         // remembering an acknowledged register, never forgetting one.
+        //
+        // GROUP COMMIT: the fsync is NOT issued under the append lock.
+        // Append + apply, release the lock, then re-acquire it to commit
+        // through this op's sequence number. While one thread fsyncs,
+        // others append behind it and queue on the lock; the first of
+        // them to run `commit_through` advances the durable watermark
+        // past EVERY appended op, and the rest return without touching
+        // the disk — N concurrent registers cost one fsync, not N. The
+        // ack still happens after the commit, so acknowledged ⇒ durable
+        // holds (`rust/tests/crash_wal.rs`).
+        let (seq, applied) = {
+            let mut wal = w.lock().unwrap();
+            let seq = wal.append_register(&set)?;
+            (seq, self.shared.registry.register(set))
+        };
         let mut wal = w.lock().unwrap();
-        wal.log_register(&set)?;
-        self.shared.registry.register(set)
+        wal.commit_through(seq)?;
+        applied
     }
 
     /// Remove the adapter and DRAIN it: blocks until every request pinned
@@ -593,17 +661,25 @@ impl ServeEngine {
         let Some(w) = &self.shared.wal else {
             return self.shared.registry.unregister(id);
         };
+        let (seq, applied) = {
+            let mut wal = w.lock().unwrap();
+            // Only live ids reach the log (replay drops unknown-id
+            // unregisters defensively, but a clean writer never emits one).
+            if !self.shared.registry.contains(id) {
+                return Err(ServeError::UnknownAdapter { adapter: id.to_string() });
+            }
+            let seq = wal.append_unregister(id)?;
+            // Holding the wal lock through the drain keeps log order ==
+            // apply order; the drain only waits on request pins, which
+            // never touch the WAL, so this cannot deadlock.
+            (seq, self.shared.registry.unregister(id))
+        };
+        // Group-committed like registers (see `register_adapter`): the
+        // caller is only acked durable after `commit_through`, which
+        // piggybacks on any fsync a concurrent op already issued.
         let mut wal = w.lock().unwrap();
-        // Only live ids reach the log (replay drops unknown-id
-        // unregisters defensively, but a clean writer never emits one).
-        if !self.shared.registry.contains(id) {
-            return Err(ServeError::UnknownAdapter { adapter: id.to_string() });
-        }
-        wal.log_unregister(id)?;
-        // Holding the wal lock through the drain keeps log order == apply
-        // order; the drain only waits on request pins, which never touch
-        // the WAL, so this cannot deadlock.
-        self.shared.registry.unregister(id)
+        wal.commit_through(seq)?;
+        applied
     }
 
     /// The adapter registry (checkout/stats access for diagnostics and
@@ -700,7 +776,12 @@ impl ServeEngine {
         for req in reqs {
             let (tx, rx) = mpsc::channel();
             match self.admit(req.layer, req.adapter, req.x, &tx) {
-                Ok(p) => admitted.push(p),
+                Ok(mut p) => {
+                    if let Some(t) = p.trace.as_deref_mut() {
+                        t.event(TraceStage::Enqueued { layer: p.layer.index() as u32 });
+                    }
+                    admitted.push(p);
+                }
                 Err(e) => self.reject(&tx, e),
             }
             tickets.push(Ticket { rx });
@@ -731,19 +812,22 @@ impl ServeEngine {
     }
 
     fn reject(&self, tx: &mpsc::Sender<Result<Response, ServeError>>, e: ServeError) {
-        self.shared.stats.lock().unwrap().rejected += 1;
+        self.shared.telemetry.incr(Counter::Rejected);
         let _ = tx.send(Err(e));
     }
 
     fn reject_model(&self, tx: &mpsc::Sender<Result<ModelResponse, ServeError>>, e: ServeError) {
-        self.shared.stats.lock().unwrap().rejected += 1;
+        self.shared.telemetry.incr(Counter::Rejected);
         let _ = tx.send(Err(e));
     }
 
     /// Resolve an already-admitted hop with an admission-stage error (the
-    /// queue refused it), whatever its reply channel type.
+    /// queue refused it), whatever its reply channel type. The trace is
+    /// DROPPED unfinished: a rejected request never ran, so it must not
+    /// observe a request-wall latency or occupy a ring slot — rejections
+    /// are visible only through the `Rejected` counter.
     fn reject_pending(&self, p: Pending, e: ServeError) {
-        self.shared.stats.lock().unwrap().rejected += 1;
+        self.shared.telemetry.incr(Counter::Rejected);
         match p.kind {
             HopKind::Single { tx } => {
                 let _ = tx.send(Err(e));
@@ -756,7 +840,10 @@ impl ServeEngine {
 
     /// Enqueue under the hop-aware backpressure limit. On refusal the hop
     /// comes back so the caller can resolve its ticket with the error.
-    fn try_enqueue(&self, p: Pending) -> Result<(), (Pending, ServeError)> {
+    fn try_enqueue(&self, mut p: Pending) -> Result<(), (Pending, ServeError)> {
+        if let Some(t) = p.trace.as_deref_mut() {
+            t.event(TraceStage::Enqueued { layer: p.layer.index() as u32 });
+        }
         {
             let mut st = self.shared.state.lock().unwrap();
             if !st.open {
@@ -835,11 +922,18 @@ impl ServeEngine {
                 Some(h)
             }
         };
+        let adapter_slot = adapter.map(|id| id.index() as u32);
+        let mut trace = self.shared.telemetry.begin_trace(TraceKind::Single, adapter_slot);
+        if let Some(t) = trace.as_deref_mut() {
+            t.event(TraceStage::Admitted { layer: layer.index() as u32 });
+        }
         Ok(Pending {
             layer,
             adapter: handle,
+            adapter_slot,
             x,
             t_in: Instant::now(),
+            trace,
             kind: HopKind::Single { tx: tx.clone() },
         })
     }
@@ -906,17 +1000,27 @@ impl ServeEngine {
             }
         };
         let t_in = Instant::now();
+        let adapter_slot = adapter.map(|id| id.index() as u32);
+        let trace_kind = if steps > 1 { TraceKind::Session } else { TraceKind::Model };
+        let mut trace = self.shared.telemetry.begin_trace(trace_kind, adapter_slot);
+        if let Some(t) = trace.as_deref_mut() {
+            t.event(TraceStage::Admitted { layer: head.index() as u32 });
+        }
+        let trace_id = trace.as_ref().map_or(0, |t| t.id());
         Ok(Pending {
             layer: head,
             adapter: handle,
+            adapter_slot,
             x,
             t_in,
+            trace,
             kind: HopKind::Traversal(Box::new(Traversal::new(
                 route.clone(),
                 steps,
                 step,
                 tx.clone(),
                 t_in,
+                trace_id,
             ))),
         })
     }
@@ -936,8 +1040,30 @@ impl ServeEngine {
             .ok_or_else(|| ServeError::UnknownAdapter { adapter: self.adapter_name(id) })
     }
 
+    /// Back-compat counter view, derived from the telemetry snapshot:
+    /// the counts are exact (they were relaxed atomic increments), and
+    /// the two time totals come from the hop-queue / batch-compute
+    /// histogram nanosecond sums. An engine built with
+    /// [`TelemetryOptions::disabled`] reads all-zero here.
     pub fn stats(&self) -> EngineStats {
-        self.shared.stats.lock().unwrap().clone()
+        self.shared.telemetry.snapshot(&[]).engine_stats()
+    }
+
+    /// Merged telemetry snapshot: counters, latency histograms (with
+    /// quantile estimates), per-layer and per-adapter attribution
+    /// (labeled with the registry's live adapter names), and the
+    /// recent/slow trace rings. Render with
+    /// [`TelemetrySnapshot::render_prometheus`].
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        self.shared.telemetry.snapshot(&self.shared.registry.slot_names())
+    }
+
+    /// The engine's shared telemetry core — wire it into an
+    /// [`crate::serve::artifact::ArtifactStore`] with
+    /// `with_telemetry`, or scrape it from a metrics thread without
+    /// holding the engine.
+    pub fn telemetry_handle(&self) -> Arc<Telemetry> {
+        Arc::clone(&self.shared.telemetry)
     }
 
     /// Stop admitting WITHOUT waiting: subsequent submits fail with
@@ -1066,6 +1192,7 @@ fn adapter_sort_key(p: &Pending, layer: LayerId) -> (u8, usize) {
 }
 
 fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
+    let tel = &shared.telemetry;
     let layer_id = batch[0].layer;
     let layer = &shared.model.layers[layer_id.index()];
     let layer_name = layer.name.as_str();
@@ -1076,29 +1203,32 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
     // riders with the typed Artifact error naming the layer, instead of
     // serving garbage bits; the result is cached, so the layer pays one
     // CRC pass ever (clean or corrupt). Eagerly-loaded layers verified at
-    // open time return Ok without rescanning.
+    // open time return Ok without rescanning. The pre-probe makes the
+    // first-touch pass countable (two racing batches may both observe
+    // "pending" and double-count — a diagnostic counter, not an
+    // invariant, so the race is acceptable).
+    let crc_was_pending = layer.crc_pending();
     if let Err(e) = layer.verify() {
+        if crc_was_pending {
+            tel.incr(Counter::CrcLazyVerifications);
+            tel.incr(Counter::CrcFailures);
+        }
         let finished = batch.len();
-        let mut singles_failed = 0usize;
-        let mut models_failed = 0usize;
-        let mut forwards_done = 0usize;
         for p in batch {
-            match p.kind {
+            let Pending { trace, kind, .. } = p;
+            match kind {
                 HopKind::Single { tx } => {
-                    singles_failed += 1;
+                    tel.incr(Counter::SinglesFailed);
                     let _ = tx.send(Err(e.clone()));
                 }
                 HopKind::Traversal(tr) => {
-                    models_failed += 1;
-                    forwards_done += tr.fail(e.clone());
+                    tel.incr(Counter::ModelsFailed);
+                    tel.add(Counter::SessionForwards, tr.fail(e.clone()) as u64);
                 }
             }
-        }
-        {
-            let mut stats = shared.stats.lock().unwrap();
-            stats.failed += singles_failed;
-            stats.failed_model_requests += models_failed;
-            stats.session_forwards += forwards_done;
+            if let Some(t) = trace {
+                tel.finish_trace(t, false);
+            }
         }
         {
             let mut st = shared.state.lock().unwrap();
@@ -1107,6 +1237,9 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
         }
         shared.cv.notify_all();
         return;
+    }
+    if crc_was_pending {
+        tel.incr(Counter::CrcLazyVerifications);
     }
     // Same-effective-slot requests adjacent ⇒ fewest adapter groups.
     // Stable, so arrival order survives within a group. Row placement
@@ -1137,29 +1270,50 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
     let rows_of = |id: LayerId| shared.model.layers[id.index()].rows;
     let mut reentry: Vec<Pending> = Vec::new();
     let mut finished = 0usize; // riders whose ticket resolved in this batch
-    let mut total_queue = 0.0;
-    let mut singles_ok = 0usize;
-    let mut singles_failed = 0usize;
-    let mut models_ok = 0usize;
-    let mut models_failed = 0usize;
-    let mut forwards_done = 0usize;
     match &kernel {
         Ok(ys) => {
+            // Batch-level telemetry: relaxed adds on this worker's shard —
+            // the stats mutex the old EngineStats took per batch is gone.
+            tel.add(Counter::Hops, bs as u64);
+            tel.incr(Counter::Batches);
+            tel.record_batch_max(bs);
+            if groups > 1 {
+                tel.incr(Counter::MixedBatches);
+            }
+            tel.observe(Metric::BatchCompute, compute_s);
+            let compute_ns = (compute_s * 1e9) as u64;
+            // The kernel ran once for all riders; a rider's fair share of
+            // it is 1/bs — what the per-adapter compute attribution sums.
+            let share_ns = compute_ns / bs as u64;
+            let mut total_queue = 0.0;
             for (k, p) in batch.into_iter().enumerate() {
-                let queue_s = t_formed.saturating_duration_since(p.t_in).as_secs_f64();
+                let Pending { adapter, adapter_slot, t_in, mut trace, kind, .. } = p;
+                let queue_s = t_formed.saturating_duration_since(t_in).as_secs_f64();
                 total_queue += queue_s;
-                match p.kind {
+                tel.observe(Metric::HopQueue, queue_s);
+                tel.observe(Metric::HopLatency, queue_s + compute_s);
+                if let Some(slot) = adapter_slot {
+                    tel.adapter_hop(slot, (queue_s * 1e9) as u64, share_ns);
+                }
+                if let Some(t) = trace.as_deref_mut() {
+                    t.hop(layer_id.index() as u32, bs as u32, groups as u32, queue_s, compute_s);
+                }
+                match kind {
                     HopKind::Single { tx } => {
                         finished += 1;
-                        singles_ok += 1;
+                        tel.incr(Counter::SinglesOk);
                         let resp = Response {
                             y: ys.row(k).to_vec(),
                             queue_s,
                             compute_s,
                             batch_size: bs,
                             adapter_groups: groups,
+                            trace_id: trace.as_ref().map_or(0, |t| t.id()),
                         };
                         let _ = tx.send(Ok(resp)); // requester may have given up; fine
+                        if let Some(t) = trace {
+                            tel.finish_trace(t, true);
+                        }
                     }
                     HopKind::Traversal(tr) => {
                         let outcome = tr.absorb_hop(
@@ -1172,34 +1326,47 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
                         );
                         match outcome {
                             HopOutcome::Reenter { layer, x, traversal } => {
+                                if let Some(t) = trace.as_deref_mut() {
+                                    t.event(TraceStage::Enqueued {
+                                        layer: layer.index() as u32,
+                                    });
+                                }
                                 reentry.push(Pending {
                                     layer,
-                                    adapter: p.adapter,
+                                    adapter,
+                                    adapter_slot,
                                     x,
                                     t_in: Instant::now(),
+                                    trace,
                                     kind: HopKind::Traversal(traversal),
                                 });
                             }
                             HopOutcome::Replied { ok, forwards } => {
                                 finished += 1;
-                                forwards_done += forwards;
-                                if ok {
-                                    models_ok += 1;
+                                tel.add(Counter::SessionForwards, forwards as u64);
+                                tel.incr(if ok {
+                                    Counter::ModelsOk
                                 } else {
-                                    models_failed += 1;
+                                    Counter::ModelsFailed
+                                });
+                                if let Some(t) = trace {
+                                    tel.finish_trace(t, ok);
                                 }
                             }
                         }
                     }
                 }
             }
+            tel.layer_batch(layer_id.index(), bs, (total_queue * 1e9) as u64, compute_ns);
         }
         Err(_) => {
+            tel.incr(Counter::BatchPanics);
             for p in batch {
                 finished += 1;
-                match p.kind {
+                let Pending { trace, kind, .. } = p;
+                match kind {
                     HopKind::Single { tx } => {
-                        singles_failed += 1;
+                        tel.incr(Counter::SinglesFailed);
                         let _ = tx.send(Err(ServeError::WorkerPanic {
                             layer: layer_name.to_string(),
                             batch: bs,
@@ -1207,40 +1374,23 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
                         }));
                     }
                     HopKind::Traversal(tr) => {
-                        models_failed += 1;
+                        tel.incr(Counter::ModelsFailed);
                         let hop = tr.hops_done() + 1;
-                        forwards_done += tr.fail(ServeError::WorkerPanic {
-                            layer: layer_name.to_string(),
-                            batch: bs,
-                            hop: Some(hop),
-                        });
+                        tel.add(
+                            Counter::SessionForwards,
+                            tr.fail(ServeError::WorkerPanic {
+                                layer: layer_name.to_string(),
+                                batch: bs,
+                                hop: Some(hop),
+                            }) as u64,
+                        );
                     }
                 }
-            }
-        }
-    }
-    {
-        let mut stats = shared.stats.lock().unwrap();
-        match &kernel {
-            Ok(_) => {
-                stats.requests += singles_ok;
-                stats.hops += bs;
-                stats.batches += 1;
-                stats.max_batch_seen = stats.max_batch_seen.max(bs);
-                if groups > 1 {
-                    stats.mixed_batches += 1;
+                if let Some(t) = trace {
+                    tel.finish_trace(t, false);
                 }
-                stats.total_queue_s += total_queue;
-                stats.total_compute_s += compute_s;
-            }
-            Err(_) => {
-                stats.batch_panics += 1;
-                stats.failed += singles_failed;
             }
         }
-        stats.model_requests += models_ok;
-        stats.failed_model_requests += models_failed;
-        stats.session_forwards += forwards_done;
     }
     {
         // One lock: hand finished hops' slots back AND re-enter continuing

@@ -127,6 +127,9 @@ pub struct ModelResponse {
     pub max_batch_seen: usize,
     /// Hops that rode a batch mixing more than one adapter group.
     pub mixed_hops: usize,
+    /// This request's telemetry trace id (0 when tracing is disabled);
+    /// look the span timeline up in `TelemetrySnapshot::recent_traces`.
+    pub trace_id: u64,
 }
 
 /// Handle to a submitted [`ModelRequest`] / [`SessionRequest`]; resolves to
@@ -199,6 +202,9 @@ pub(crate) struct Traversal {
     compute_s: f64,
     max_batch_seen: usize,
     mixed_hops: usize,
+    /// Telemetry trace id stamped into the reply (0 = tracing disabled;
+    /// the trace buffer itself rides the owning `Pending` hop).
+    trace_id: u64,
     tx: mpsc::Sender<Result<ModelResponse, ServeError>>,
 }
 
@@ -211,6 +217,7 @@ impl Traversal {
         step: Option<StepFn>,
         tx: mpsc::Sender<Result<ModelResponse, ServeError>>,
         t_admit: Instant,
+        trace_id: u64,
     ) -> Traversal {
         assert!(steps >= 1, "traversal with zero forwards");
         assert!(!route.is_empty(), "traversal with an empty route");
@@ -227,6 +234,7 @@ impl Traversal {
             compute_s: 0.0,
             max_batch_seen: 0,
             mixed_hops: 0,
+            trace_id,
             tx,
         }
     }
@@ -313,6 +321,7 @@ impl Traversal {
             wall_s: self.t_admit.elapsed().as_secs_f64(),
             max_batch_seen: self.max_batch_seen,
             mixed_hops: self.mixed_hops,
+            trace_id: self.trace_id,
         };
         let _ = self.tx.send(Ok(resp)); // requester may have given up; fine
         HopOutcome::Replied { ok: true, forwards }
@@ -380,7 +389,7 @@ mod tests {
     fn traversal_walks_route_then_replies() {
         let (tx, rx) = mpsc::channel();
         let t0 = Instant::now();
-        let mut tr = Box::new(Traversal::new(test_route(&[0, 1, 2]), 1, None, tx, t0));
+        let mut tr = Box::new(Traversal::new(test_route(&[0, 1, 2]), 1, None, tx, t0, 0));
         let rows_of = |_: LayerId| 4usize;
         for expect_layer in [1usize, 2] {
             match tr.absorb_hop(vec![0.0; 4], 1e-6, 2e-6, 3, 1, &rows_of) {
@@ -413,7 +422,7 @@ mod tests {
         let step: StepFn =
             Box::new(|k, y| if k < 2 { Some(y.iter().map(|v| v + 1.0).collect()) } else { None });
         let mut tr =
-            Box::new(Traversal::new(test_route(&[0]), 10, Some(step), tx, Instant::now()));
+            Box::new(Traversal::new(test_route(&[0]), 10, Some(step), tx, Instant::now(), 0));
         let rows_of = |_: LayerId| 2usize;
         // Forward 1 done → step runs → re-enter at the route head.
         tr = match tr.absorb_hop(vec![1.0, 1.0], 0.0, 0.0, 1, 1, &rows_of) {
@@ -442,7 +451,8 @@ mod tests {
     fn misshapen_step_output_fails_the_session_actionably() {
         let (tx, rx) = mpsc::channel();
         let step: StepFn = Box::new(|_, _| Some(vec![0.0; 99]));
-        let tr = Box::new(Traversal::new(test_route(&[0]), 3, Some(step), tx, Instant::now()));
+        let tr =
+            Box::new(Traversal::new(test_route(&[0]), 3, Some(step), tx, Instant::now(), 0));
         match tr.absorb_hop(vec![0.0; 2], 0.0, 0.0, 1, 1, &|_| 2usize) {
             HopOutcome::Replied { ok, forwards } => {
                 assert!(!ok);
@@ -461,7 +471,8 @@ mod tests {
     fn panicking_step_fails_only_its_session() {
         let (tx, rx) = mpsc::channel();
         let step: StepFn = Box::new(|_, _| panic!("injected step panic"));
-        let tr = Box::new(Traversal::new(test_route(&[0]), 2, Some(step), tx, Instant::now()));
+        let tr =
+            Box::new(Traversal::new(test_route(&[0]), 2, Some(step), tx, Instant::now(), 0));
         match tr.absorb_hop(vec![0.0; 2], 0.0, 0.0, 1, 1, &|_| 2usize) {
             HopOutcome::Replied { ok, .. } => assert!(!ok),
             _ => panic!("step panic must fail the session"),

@@ -105,6 +105,20 @@
 //!   [`forward_route_serial`] — enforced by `rust/tests/parity_forward.rs`,
 //!   with shutdown/overload/panic semantics in
 //!   `rust/tests/lifecycle_forward.rs`.
+//! * [`telemetry`] — [`Telemetry`]/[`TelemetrySnapshot`]: the engine's
+//!   **observability core**. Per-worker sharded atomic counters and
+//!   log-scale latency histograms (queue wait, kernel compute, per-hop,
+//!   end-to-end wall, WAL fsync, artifact open) that the hot path updates
+//!   with relaxed atomics — no mutex, no allocation — merged only when a
+//!   snapshot is taken. Per-layer and per-adapter breakdowns are indexed
+//!   by the interned [`LayerId`]/[`AdapterId`] slots (no hashing).
+//!   Request **lifecycle tracing** records timestamped span events
+//!   (admitted → queued → hop N → replied) into bounded recent/slow
+//!   rings, with automatic capture + `warn!` logging of requests over the
+//!   slow threshold. [`TelemetrySnapshot::render_prometheus`] exposes
+//!   everything in Prometheus text format; [`ServeEngine::stats`] stays
+//!   as the back-compat view derived from the same snapshot
+//!   (`rust/tests/telemetry_serve.rs`).
 //!
 //! Benchmarks: `cargo bench --bench bench_serve` writes `BENCH_serve.json`
 //! (fused vs dense forward, batched vs serial throughput, and the
@@ -113,8 +127,11 @@
 //! (adapter-count sweep, mixed-batch penalty, eviction churn), and
 //! `cargo bench --bench bench_forward` writes `BENCH_forward.json`
 //! (pipelined vs caller-driven-serial full-model throughput across
-//! concurrent session counts, mixed-adapter sweep) — see EXPERIMENTS.md
-//! §Serve, §Adapters, §Forward and §API.
+//! concurrent session counts, mixed-adapter sweep), and
+//! `cargo bench --bench bench_telemetry` writes `BENCH_telemetry.json`
+//! (instrumented vs telemetry-disabled coalescing throughput — the <5%
+//! overhead gate — plus snapshot/render and trace-capture costs) — see
+//! EXPERIMENTS.md §Serve, §Adapters, §Forward, §API and §Observability.
 
 pub mod adapters;
 pub mod artifact;
@@ -123,6 +140,7 @@ pub mod error;
 pub mod forward;
 pub mod mmap;
 pub mod packed;
+pub mod telemetry;
 pub mod wal;
 
 pub use adapters::{
@@ -137,5 +155,9 @@ pub use forward::{
 pub use mmap::MappedFile;
 pub use packed::{
     words_per_row, DequantParams, LayerId, PackedLayer, PackedModel, PackedSource, Route,
+};
+pub use telemetry::{
+    Counter, HistSnapshot, Metric, SlotSnapshot, Telemetry, TelemetryOptions, TelemetrySnapshot,
+    Trace, TraceBuf, TraceEvent, TraceKind, TraceStage,
 };
 pub use wal::{FsWalFile, Wal, WalEvent, WalFile, WalOptions};

@@ -297,6 +297,19 @@ impl PackedSource {
             detail: "mapped code section failed its CRC on first touch".to_string(),
         })
     }
+
+    /// True iff the next [`PackedSource::verify`] call will actually hash
+    /// bytes (a mapped section whose lazy CRC has not run yet). Owned
+    /// buffers and already-verified sections return false. Telemetry
+    /// probes this to count first-touch verifications; two racing batches
+    /// may both see true (and both count) — acceptable for a diagnostic
+    /// counter.
+    pub fn crc_pending(&self) -> bool {
+        matches!(
+            self,
+            PackedSource::Mapped(m) if m.state.load(Ordering::Relaxed) == CRC_UNVERIFIED
+        )
+    }
 }
 
 impl From<Vec<u32>> for PackedSource {
@@ -392,6 +405,12 @@ impl PackedLayer {
     /// typed `ChecksumMismatch` naming the layer, never as garbage math.
     pub fn verify(&self) -> Result<(), ServeError> {
         self.packed.verify(&self.name)
+    }
+
+    /// Whether the next [`PackedLayer::verify`] will run the one-time
+    /// lazy CRC pass (see [`PackedSource::crc_pending`]).
+    pub fn crc_pending(&self) -> bool {
+        self.packed.crc_pending()
     }
 
     /// Pack a [`LayerInit`] into its two serving halves: the frozen base

@@ -1,0 +1,1312 @@
+//! Engine telemetry: sharded counters, log-scale latency histograms,
+//! per-layer / per-adapter attribution, request tracing, and Prometheus
+//! text exposition.
+//!
+//! # Design: shard on write, merge on read
+//!
+//! The engine's hot path (admission → micro-batch → reply) must never
+//! take a stats mutex: a single `Mutex<EngineStats>` serializes every
+//! batch completion of every worker behind one cache line. Instead a
+//! [`Telemetry`] handle owns a small power-of-two array of **shards**,
+//! each a cache-line-aligned block of relaxed atomic counters plus one
+//! fixed-bucket histogram per [`Metric`]. Every thread picks a shard
+//! once (round-robin at first use, stored in a thread-local) and then
+//! only ever touches its own shard's atomics — workers on different
+//! shards never contend, and nothing on the hot path allocates, hashes,
+//! or locks. [`Telemetry::snapshot`] merges the shards into one
+//! [`TelemetrySnapshot`]; the merge cost is paid by the scraper, not the
+//! request.
+//!
+//! # Histograms: log-linear buckets, bounded error
+//!
+//! Latencies are recorded in nanoseconds into a fixed log-linear layout:
+//! 4 sub-buckets per power-of-two octave (2 mantissa bits) from 256 ns
+//! to ~68.7 s, plus an underflow and an overflow bucket —
+//! [`HIST_BUCKETS`] buckets total, so a histogram is one flat array of
+//! atomics and `observe` is two adds (bucket + nanosecond sum). The
+//! bucket holding a value is never more than 1/4 octave wide, so any
+//! quantile estimate ([`HistSnapshot::quantile`]) is within 25% of the
+//! true value — tight enough for p50/p95/p99 dashboards at zero
+//! allocation.
+//!
+//! # Attribution without hashing
+//!
+//! Per-layer and per-adapter breakdowns are plain arrays of atomic
+//! slots indexed by the interned [`LayerId`](crate::serve::packed::LayerId)
+//! index / [`AdapterId`](crate::serve::adapters::AdapterId) slot — the
+//! same integers admission already holds, consistent with the typed
+//! façade's no-hashing contract. Adapter slots beyond
+//! [`TelemetryOptions::max_tracked_adapters`] aggregate into one
+//! overflow slot instead of growing.
+//!
+//! # Tracing
+//!
+//! When enabled, every admitted request gets a process-unique trace id
+//! and a [`TraceBuf`] that rides its `Pending` hop through the engine,
+//! collecting timestamped span events (admitted → enqueued → hop N with
+//! batch/queue/kernel detail → replied). Finished traces land in a
+//! bounded ring; requests slower than
+//! [`TelemetryOptions::slow_threshold_s`] are *also* kept in a separate
+//! slow ring and logged at `Warn` through `util::logging`, so one slow
+//! request leaves an inspectable span timeline behind without any
+//! sampling infrastructure.
+//!
+//! The per-request cost of all of this is bounded by the
+//! `bench_telemetry` gate: instrumented coalescing throughput must stay
+//! within 5% of a telemetry-disabled engine
+//! ([`TelemetryOptions::disabled`]), enforced against
+//! `BENCH_telemetry.json` by `scripts/bench_diff.py`.
+//!
+//! `EngineStats` remains the back-compat counter view — it is now
+//! *derived* from a snapshot ([`TelemetrySnapshot::engine_stats`]), not
+//! tracked separately.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::serve::engine::EngineStats;
+
+// ---- counters ----
+
+/// Monotonic event counters, one per observable engine/durability event.
+/// Indexed contiguously so a shard stores them as one flat atomic array;
+/// [`Counter::ALL`] drives the snapshot merge and the Prometheus render.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// Single-layer requests served successfully.
+    SinglesOk,
+    /// Model/session requests answered successfully.
+    ModelsOk,
+    /// Full-model forward passes completed by traversals.
+    SessionForwards,
+    /// Riders served across all successful micro-batches.
+    Hops,
+    /// Successful micro-batches executed.
+    Batches,
+    /// Micro-batches that mixed more than one adapter group.
+    MixedBatches,
+    /// Requests refused at admission.
+    Rejected,
+    /// Micro-batches whose kernel panicked.
+    BatchPanics,
+    /// Single-layer riders resolved with an error.
+    SinglesFailed,
+    /// Model/session requests resolved with an error.
+    ModelsFailed,
+    /// Adapter-WAL records appended.
+    WalAppends,
+    /// Adapter-WAL fsync batches issued.
+    WalFsyncs,
+    /// Adapter-WAL compactions (including torn-tail repairs).
+    WalCompactions,
+    /// Adapter-WAL events replayed at boot.
+    WalReplayEvents,
+    /// Mapped code sections CRC-verified on first kernel touch.
+    CrcLazyVerifications,
+    /// Code sections whose lazy CRC verification failed.
+    CrcFailures,
+    /// Artifact opens through the eager (fully-copied) path.
+    ArtifactOpensEager,
+    /// Artifact opens through the zero-copy mmap path.
+    ArtifactOpensMapped,
+    /// Requests whose wall time exceeded the slow-trace threshold.
+    SlowRequests,
+    /// Finished traces evicted from the bounded recent ring.
+    TracesDropped,
+}
+
+pub const N_COUNTERS: usize = 20;
+
+impl Counter {
+    pub const ALL: [Counter; N_COUNTERS] = [
+        Counter::SinglesOk,
+        Counter::ModelsOk,
+        Counter::SessionForwards,
+        Counter::Hops,
+        Counter::Batches,
+        Counter::MixedBatches,
+        Counter::Rejected,
+        Counter::BatchPanics,
+        Counter::SinglesFailed,
+        Counter::ModelsFailed,
+        Counter::WalAppends,
+        Counter::WalFsyncs,
+        Counter::WalCompactions,
+        Counter::WalReplayEvents,
+        Counter::CrcLazyVerifications,
+        Counter::CrcFailures,
+        Counter::ArtifactOpensEager,
+        Counter::ArtifactOpensMapped,
+        Counter::SlowRequests,
+        Counter::TracesDropped,
+    ];
+
+    /// Prometheus metric name (the `cloq_` prefix is added at render).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::SinglesOk => "requests_total",
+            Counter::ModelsOk => "model_requests_total",
+            Counter::SessionForwards => "session_forwards_total",
+            Counter::Hops => "hops_total",
+            Counter::Batches => "batches_total",
+            Counter::MixedBatches => "mixed_batches_total",
+            Counter::Rejected => "rejected_total",
+            Counter::BatchPanics => "batch_panics_total",
+            Counter::SinglesFailed => "failed_requests_total",
+            Counter::ModelsFailed => "failed_model_requests_total",
+            Counter::WalAppends => "wal_appends_total",
+            Counter::WalFsyncs => "wal_fsyncs_total",
+            Counter::WalCompactions => "wal_compactions_total",
+            Counter::WalReplayEvents => "wal_replay_events_total",
+            Counter::CrcLazyVerifications => "crc_lazy_verifications_total",
+            Counter::CrcFailures => "crc_failures_total",
+            Counter::ArtifactOpensEager => "artifact_opens_eager_total",
+            Counter::ArtifactOpensMapped => "artifact_opens_mapped_total",
+            Counter::SlowRequests => "slow_requests_total",
+            Counter::TracesDropped => "traces_dropped_total",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Counter::SinglesOk => "Single-layer requests served successfully.",
+            Counter::ModelsOk => "Model/session requests answered successfully.",
+            Counter::SessionForwards => "Full-model forward passes completed by traversals.",
+            Counter::Hops => {
+                "Riders served across all successful micro-batches (single-layer requests and \
+                 traversal hops)."
+            }
+            Counter::Batches => "Successful micro-batches executed.",
+            Counter::MixedBatches => "Micro-batches that mixed more than one adapter group.",
+            Counter::Rejected => "Requests refused at admission.",
+            Counter::BatchPanics => "Micro-batches whose kernel panicked.",
+            Counter::SinglesFailed => "Single-layer riders resolved with an error.",
+            Counter::ModelsFailed => "Model/session requests resolved with an error.",
+            Counter::WalAppends => "Adapter-WAL records appended.",
+            Counter::WalFsyncs => "Adapter-WAL fsync batches issued.",
+            Counter::WalCompactions => {
+                "Adapter-WAL compactions (including torn-tail repairs)."
+            }
+            Counter::WalReplayEvents => "Adapter-WAL events replayed at boot.",
+            Counter::CrcLazyVerifications => {
+                "Mapped code sections CRC-verified on first kernel touch."
+            }
+            Counter::CrcFailures => "Code sections whose lazy CRC verification failed.",
+            Counter::ArtifactOpensEager => {
+                "Artifact opens through the eager (fully-copied, fully-checked) path."
+            }
+            Counter::ArtifactOpensMapped => {
+                "Artifact opens through the zero-copy mmap path."
+            }
+            Counter::SlowRequests => {
+                "Requests whose wall time exceeded the slow-trace threshold."
+            }
+            Counter::TracesDropped => {
+                "Finished traces evicted from the bounded recent ring."
+            }
+        }
+    }
+}
+
+// ---- histogram metrics ----
+
+/// The latency distributions the engine records, one fixed-bucket
+/// histogram per variant per shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Metric {
+    /// Per-hop wait from admission or re-entry to micro-batch formation.
+    HopQueue,
+    /// Grouped-kernel time per micro-batch.
+    BatchCompute,
+    /// Per-hop queue wait plus the kernel time of the batch it rode.
+    HopLatency,
+    /// End-to-end request latency, admission to reply.
+    RequestWall,
+    /// Adapter-WAL fsync duration.
+    WalFsync,
+    /// Artifact store open duration (eager and mapped).
+    ArtifactOpen,
+}
+
+pub const N_METRICS: usize = 6;
+
+impl Metric {
+    pub const ALL: [Metric; N_METRICS] = [
+        Metric::HopQueue,
+        Metric::BatchCompute,
+        Metric::HopLatency,
+        Metric::RequestWall,
+        Metric::WalFsync,
+        Metric::ArtifactOpen,
+    ];
+
+    /// Prometheus metric name (the `cloq_` prefix is added at render).
+    pub fn name(self) -> &'static str {
+        match self {
+            Metric::HopQueue => "hop_queue_seconds",
+            Metric::BatchCompute => "batch_compute_seconds",
+            Metric::HopLatency => "hop_latency_seconds",
+            Metric::RequestWall => "request_wall_seconds",
+            Metric::WalFsync => "wal_fsync_seconds",
+            Metric::ArtifactOpen => "artifact_open_seconds",
+        }
+    }
+
+    pub fn help(self) -> &'static str {
+        match self {
+            Metric::HopQueue => {
+                "Per-hop wait from admission or re-entry to micro-batch formation."
+            }
+            Metric::BatchCompute => "Grouped-kernel time per micro-batch.",
+            Metric::HopLatency => {
+                "Per-hop queue wait plus the kernel time of the batch it rode."
+            }
+            Metric::RequestWall => "End-to-end request latency, admission to reply.",
+            Metric::WalFsync => "Adapter-WAL fsync duration.",
+            Metric::ArtifactOpen => "Artifact store open duration (eager and mapped).",
+        }
+    }
+}
+
+// ---- histogram bucket layout ----
+
+/// Mantissa bits per octave: 2 → 4 sub-buckets per power of two.
+const HIST_SUB_BITS: u32 = 2;
+const HIST_SUB: usize = 1 << HIST_SUB_BITS;
+/// Values below 2^8 ns (256 ns) share the underflow bucket.
+const HIST_MIN_EXP: u32 = 8;
+/// Values at or above 2^36 ns (~68.7 s) share the overflow bucket.
+const HIST_MAX_EXP: u32 = 36;
+/// Underflow + 4 sub-buckets × 28 octaves + overflow.
+pub const HIST_BUCKETS: usize =
+    ((HIST_MAX_EXP - HIST_MIN_EXP) as usize) * HIST_SUB + 2;
+
+/// The bucket a nanosecond value lands in.
+fn bucket_of(ns: u64) -> usize {
+    if ns < (1u64 << HIST_MIN_EXP) {
+        return 0;
+    }
+    if ns >= (1u64 << HIST_MAX_EXP) {
+        return HIST_BUCKETS - 1;
+    }
+    let exp = 63 - ns.leading_zeros();
+    let sub = ((ns >> (exp - HIST_SUB_BITS)) & (HIST_SUB as u64 - 1)) as usize;
+    1 + (exp - HIST_MIN_EXP) as usize * HIST_SUB + sub
+}
+
+/// Exclusive upper bound of bucket `i` in nanoseconds (`u64::MAX`
+/// sentinel for the overflow bucket).
+fn bucket_upper_ns(i: usize) -> u64 {
+    if i == 0 {
+        return 1u64 << HIST_MIN_EXP;
+    }
+    if i >= HIST_BUCKETS - 1 {
+        return u64::MAX;
+    }
+    let exp = HIST_MIN_EXP + ((i - 1) / HIST_SUB) as u32;
+    let sub = ((i - 1) % HIST_SUB) as u64;
+    (1u64 << exp) + ((sub + 1) << (exp - HIST_SUB_BITS))
+}
+
+/// One shard-local histogram: bucket counts plus a nanosecond sum (the
+/// sum makes `_sum`/means exact even though buckets are approximate).
+struct Hist {
+    buckets: Vec<AtomicU64>,
+    sum_ns: AtomicU64,
+}
+
+impl Hist {
+    fn new() -> Hist {
+        Hist {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    fn observe_ns(&self, ns: u64) {
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+}
+
+// ---- shards ----
+
+/// One thread-affine block of atomics. Cache-line aligned so two shards
+/// never false-share; a thread writes only its own shard (round-robin
+/// assignment at first use), so the hot path is contention-free with
+/// enough shards.
+#[repr(align(64))]
+struct Shard {
+    counters: [AtomicU64; N_COUNTERS],
+    hists: [Hist; N_METRICS],
+    max_batch: AtomicU64,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            hists: std::array::from_fn(|_| Hist::new()),
+            max_batch: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Process-wide round-robin source for thread → shard assignment.
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// This thread's shard pick (usize::MAX = unassigned). Shared across
+    /// all Telemetry instances — the pick is masked per-instance.
+    static MY_SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+// ---- per-layer / per-adapter attribution ----
+
+/// One attribution slot (a layer, or an adapter). Unsharded: updated
+/// once per batch (layers) or once per rider (adapters) with plain
+/// relaxed adds — a handful of atomics per batch, far off the critical
+/// contention path.
+struct SlotStat {
+    hops: AtomicU64,
+    batches: AtomicU64,
+    queue_ns: AtomicU64,
+    compute_ns: AtomicU64,
+}
+
+impl SlotStat {
+    fn new() -> SlotStat {
+        SlotStat {
+            hops: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            queue_ns: AtomicU64::new(0),
+            compute_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+// ---- tracing ----
+
+/// What kind of request a trace follows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    Single,
+    Model,
+    Session,
+}
+
+impl TraceKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::Single => "single",
+            TraceKind::Model => "model",
+            TraceKind::Session => "session",
+        }
+    }
+}
+
+/// One span event inside a trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceStage {
+    /// Passed admission (layer = first hop's layer index).
+    Admitted { layer: u32 },
+    /// Entered the pending FIFO (once per hop, including re-entries).
+    Enqueued { layer: u32 },
+    /// One hop executed: the micro-batch it rode, its queue wait, and
+    /// the batch's kernel time (kernel start = event time − compute_s).
+    Hop { hop: u32, layer: u32, batch: u32, groups: u32, queue_s: f64, compute_s: f64 },
+    /// The ticket resolved.
+    Replied { ok: bool },
+}
+
+/// A span event plus its offset from admission.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub t_s: f64,
+    pub stage: TraceStage,
+}
+
+/// Hard cap on events per trace: a long session records its first
+/// `MAX_TRACE_EVENTS` spans and sets `truncated` instead of growing
+/// without bound.
+pub const MAX_TRACE_EVENTS: usize = 256;
+
+/// The in-flight trace buffer riding a request's `Pending` hop. Created
+/// by [`Telemetry::begin_trace`] (None when telemetry is disabled — the
+/// hot path then pays one branch, no allocation), finished by
+/// [`Telemetry::finish_trace`].
+pub struct TraceBuf {
+    id: u64,
+    kind: TraceKind,
+    t0: Instant,
+    adapter_slot: Option<u32>,
+    hops: u32,
+    truncated: bool,
+    events: Vec<TraceEvent>,
+}
+
+impl TraceBuf {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Record a span event at now − admission.
+    pub fn event(&mut self, stage: TraceStage) {
+        if self.events.len() >= MAX_TRACE_EVENTS {
+            self.truncated = true;
+            return;
+        }
+        self.events.push(TraceEvent { t_s: self.t0.elapsed().as_secs_f64(), stage });
+    }
+
+    /// Record one executed hop (numbers them 1-based internally).
+    pub fn hop(&mut self, layer: u32, batch: u32, groups: u32, queue_s: f64, compute_s: f64) {
+        self.hops += 1;
+        let hop = self.hops;
+        self.event(TraceStage::Hop { hop, layer, batch, groups, queue_s, compute_s });
+    }
+}
+
+/// A finished request trace, as kept in the snapshot rings.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub id: u64,
+    pub kind: TraceKind,
+    pub ok: bool,
+    pub wall_s: f64,
+    pub adapter_slot: Option<u32>,
+    pub truncated: bool,
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Multi-line human rendering of the span timeline (the slow-request
+    /// log and the demo print this).
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let verdict = if self.ok { "ok" } else { "failed" };
+        let _ = write!(
+            out,
+            "trace #{} {} {} wall={:.3}ms",
+            self.id,
+            self.kind.name(),
+            verdict,
+            self.wall_s * 1e3
+        );
+        if let Some(slot) = self.adapter_slot {
+            let _ = write!(out, " adapter_slot={slot}");
+        }
+        for ev in &self.events {
+            let _ = write!(out, "\n  +{:.3}ms ", ev.t_s * 1e3);
+            match ev.stage {
+                TraceStage::Admitted { layer } => {
+                    let _ = write!(out, "admitted layer={layer}");
+                }
+                TraceStage::Enqueued { layer } => {
+                    let _ = write!(out, "enqueued layer={layer}");
+                }
+                TraceStage::Hop { hop, layer, batch, groups, queue_s, compute_s } => {
+                    let _ = write!(
+                        out,
+                        "hop {hop} layer={layer} batch={batch} groups={groups} \
+                         queue={:.3}ms kernel={:.3}ms",
+                        queue_s * 1e3,
+                        compute_s * 1e3
+                    );
+                }
+                TraceStage::Replied { ok } => {
+                    let _ = write!(out, "replied {}", if ok { "ok" } else { "err" });
+                }
+            }
+        }
+        if self.truncated {
+            out.push_str("\n  … trace truncated");
+        }
+        out
+    }
+}
+
+struct TraceRings {
+    recent: VecDeque<Trace>,
+    slow: VecDeque<Trace>,
+}
+
+// ---- options ----
+
+/// Telemetry configuration (see `ServeEngineBuilder::telemetry`).
+/// Chainable setters mirror the builder idiom used across the crate.
+#[derive(Clone, Copy, Debug)]
+pub struct TelemetryOptions {
+    /// Master switch. Disabled = every telemetry call is one predictable
+    /// branch and `begin_trace` returns None (no per-request allocation)
+    /// — the baseline `bench_telemetry` measures overhead against.
+    pub enabled: bool,
+    /// Requests slower than this are captured in the slow ring and
+    /// logged at Warn (default 250 ms).
+    pub slow_threshold_s: f64,
+    /// Capacity of the recent-traces ring (default 64).
+    pub recent_traces: usize,
+    /// Capacity of the slow-traces ring (default 32).
+    pub slow_traces: usize,
+    /// Adapter slots tracked individually; higher slots share one
+    /// overflow row (default 64).
+    pub max_tracked_adapters: usize,
+}
+
+impl Default for TelemetryOptions {
+    fn default() -> TelemetryOptions {
+        TelemetryOptions {
+            enabled: true,
+            slow_threshold_s: 0.25,
+            recent_traces: 64,
+            slow_traces: 32,
+            max_tracked_adapters: 64,
+        }
+    }
+}
+
+impl TelemetryOptions {
+    /// Everything off: counters, histograms, and traces all become
+    /// no-ops. `EngineStats` derived from such an engine reads zero.
+    pub fn disabled() -> TelemetryOptions {
+        TelemetryOptions { enabled: false, ..TelemetryOptions::default() }
+    }
+
+    pub fn slow_threshold_s(mut self, s: f64) -> TelemetryOptions {
+        self.slow_threshold_s = s;
+        self
+    }
+
+    pub fn recent_traces(mut self, n: usize) -> TelemetryOptions {
+        self.recent_traces = n;
+        self
+    }
+
+    pub fn slow_traces(mut self, n: usize) -> TelemetryOptions {
+        self.slow_traces = n;
+        self
+    }
+
+    pub fn max_tracked_adapters(mut self, n: usize) -> TelemetryOptions {
+        self.max_tracked_adapters = n;
+        self
+    }
+}
+
+// ---- the handle ----
+
+/// The telemetry core. One per engine (`ServeEngine::telemetry_handle`),
+/// shared by reference with the WAL and (optionally) an
+/// `ArtifactStore`. All write paths are lock-free; only trace-ring
+/// pushes and snapshots take the ring mutex.
+pub struct Telemetry {
+    enabled: bool,
+    opts: TelemetryOptions,
+    start: Instant,
+    shard_mask: usize,
+    shards: Vec<Shard>,
+    layer_names: Vec<String>,
+    per_layer: Vec<SlotStat>,
+    /// `max_tracked_adapters` individual slots + one overflow slot.
+    per_adapter: Vec<SlotStat>,
+    next_trace_id: AtomicU64,
+    rings: Mutex<TraceRings>,
+}
+
+impl Telemetry {
+    /// Build a core sized for `shard_hint` concurrent writer threads
+    /// (the engine passes its worker count) over the named layers.
+    pub fn new(layer_names: Vec<String>, shard_hint: usize, opts: TelemetryOptions) -> Telemetry {
+        let shards = (shard_hint.max(1) + 1).next_power_of_two().min(16);
+        let n_layers = layer_names.len();
+        Telemetry {
+            enabled: opts.enabled,
+            opts,
+            start: Instant::now(),
+            shard_mask: shards - 1,
+            shards: (0..shards).map(|_| Shard::new()).collect(),
+            layer_names,
+            per_layer: (0..n_layers).map(|_| SlotStat::new()).collect(),
+            per_adapter: (0..opts.max_tracked_adapters + 1).map(|_| SlotStat::new()).collect(),
+            next_trace_id: AtomicU64::new(0),
+            rings: Mutex::new(TraceRings { recent: VecDeque::new(), slow: VecDeque::new() }),
+        }
+    }
+
+    /// A core with no layer table — for instrumenting an
+    /// [`ArtifactStore`](crate::serve::artifact::ArtifactStore) or a WAL
+    /// outside an engine.
+    pub fn standalone() -> Telemetry {
+        Telemetry::new(Vec::new(), 1, TelemetryOptions::default())
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn options(&self) -> &TelemetryOptions {
+        &self.opts
+    }
+
+    /// This thread's shard: assigned round-robin at first use, then a
+    /// thread-local read + mask. No hashing, no locking.
+    fn shard(&self) -> &Shard {
+        let pick = MY_SHARD.with(|c| {
+            let v = c.get();
+            if v != usize::MAX {
+                v
+            } else {
+                let v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed);
+                c.set(v);
+                v
+            }
+        });
+        &self.shards[pick & self.shard_mask]
+    }
+
+    pub fn incr(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    pub fn add(&self, c: Counter, n: u64) {
+        if !self.enabled || n == 0 {
+            return;
+        }
+        self.shard().counters[c as usize].fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn observe(&self, m: Metric, seconds: f64) {
+        self.observe_ns(m, (seconds.max(0.0) * 1e9) as u64);
+    }
+
+    pub fn observe_ns(&self, m: Metric, ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.shard().hists[m as usize].observe_ns(ns);
+    }
+
+    /// Fold one micro-batch size into the sharded running max.
+    pub fn record_batch_max(&self, bs: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.shard().max_batch.fetch_max(bs as u64, Ordering::Relaxed);
+    }
+
+    /// Attribute one executed micro-batch to its layer.
+    pub fn layer_batch(&self, layer_idx: usize, bs: usize, queue_ns: u64, compute_ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        if let Some(s) = self.per_layer.get(layer_idx) {
+            s.hops.fetch_add(bs as u64, Ordering::Relaxed);
+            s.batches.fetch_add(1, Ordering::Relaxed);
+            s.queue_ns.fetch_add(queue_ns, Ordering::Relaxed);
+            s.compute_ns.fetch_add(compute_ns, Ordering::Relaxed);
+        }
+    }
+
+    /// Attribute one hop to its adapter slot (`compute_ns` should be the
+    /// rider's fair share of the batch kernel, `batch kernel / batch
+    /// size` — the kernel ran once for all riders).
+    pub fn adapter_hop(&self, slot: u32, queue_ns: u64, compute_ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        let i = (slot as usize).min(self.per_adapter.len() - 1);
+        let s = &self.per_adapter[i];
+        s.hops.fetch_add(1, Ordering::Relaxed);
+        s.queue_ns.fetch_add(queue_ns, Ordering::Relaxed);
+        s.compute_ns.fetch_add(compute_ns, Ordering::Relaxed);
+    }
+
+    /// Start a trace (None when disabled — callers thread the Option
+    /// through without branching on `enabled` themselves).
+    pub fn begin_trace(&self, kind: TraceKind, adapter_slot: Option<u32>) -> Option<Box<TraceBuf>> {
+        if !self.enabled {
+            return None;
+        }
+        let id = self.next_trace_id.fetch_add(1, Ordering::Relaxed) + 1;
+        Some(Box::new(TraceBuf {
+            id,
+            kind,
+            t0: Instant::now(),
+            adapter_slot,
+            hops: 0,
+            truncated: false,
+            events: Vec::with_capacity(8),
+        }))
+    }
+
+    /// Finish a trace: record the end-to-end wall histogram, push the
+    /// trace into the recent ring (evicting the oldest), and — when the
+    /// wall time crossed the slow threshold — keep it in the slow ring
+    /// too and log it at Warn through `util::logging`.
+    pub fn finish_trace(&self, mut t: Box<TraceBuf>, ok: bool) {
+        let wall_s = t.t0.elapsed().as_secs_f64();
+        t.event(TraceStage::Replied { ok });
+        self.observe(Metric::RequestWall, wall_s);
+        let trace = Trace {
+            id: t.id,
+            kind: t.kind,
+            ok,
+            wall_s,
+            adapter_slot: t.adapter_slot,
+            truncated: t.truncated,
+            events: t.events,
+        };
+        let slow = wall_s >= self.opts.slow_threshold_s;
+        if slow {
+            self.incr(Counter::SlowRequests);
+            crate::warn!(
+                "telemetry: slow request (wall {:.3}ms ≥ threshold {:.3}ms)\n{}",
+                wall_s * 1e3,
+                self.opts.slow_threshold_s * 1e3,
+                trace.render()
+            );
+        }
+        let mut dropped = false;
+        {
+            let mut rings = self.rings.lock().unwrap();
+            if slow && self.opts.slow_traces > 0 {
+                if rings.slow.len() >= self.opts.slow_traces {
+                    rings.slow.pop_front();
+                }
+                rings.slow.push_back(trace.clone());
+            }
+            if self.opts.recent_traces > 0 {
+                if rings.recent.len() >= self.opts.recent_traces {
+                    rings.recent.pop_front();
+                    dropped = true;
+                }
+                rings.recent.push_back(trace);
+            } else {
+                dropped = true;
+            }
+        }
+        if dropped {
+            self.incr(Counter::TracesDropped);
+        }
+    }
+
+    /// Merge every shard (plus the attribution tables and trace rings)
+    /// into one consistent-enough view. `adapter_names[slot]` decorates
+    /// the per-adapter rows; pass `&[]` to label rows by slot index.
+    pub fn snapshot(&self, adapter_names: &[String]) -> TelemetrySnapshot {
+        let mut counters = [0u64; N_COUNTERS];
+        let mut max_batch = 0u64;
+        let mut hists: Vec<HistSnapshot> = (0..N_METRICS)
+            .map(|_| HistSnapshot { buckets: vec![0; HIST_BUCKETS], count: 0, sum_s: 0.0 })
+            .collect();
+        let mut sums_ns = [0u64; N_METRICS];
+        for shard in &self.shards {
+            for (i, c) in shard.counters.iter().enumerate() {
+                counters[i] += c.load(Ordering::Relaxed);
+            }
+            max_batch = max_batch.max(shard.max_batch.load(Ordering::Relaxed));
+            for (m, h) in shard.hists.iter().enumerate() {
+                for (b, cnt) in h.buckets.iter().enumerate() {
+                    hists[m].buckets[b] += cnt.load(Ordering::Relaxed);
+                }
+                sums_ns[m] += h.sum_ns.load(Ordering::Relaxed);
+            }
+        }
+        for (m, h) in hists.iter_mut().enumerate() {
+            h.count = h.buckets.iter().sum();
+            h.sum_s = sums_ns[m] as f64 * 1e-9;
+        }
+        let per_layer = self
+            .per_layer
+            .iter()
+            .enumerate()
+            .map(|(i, s)| SlotSnapshot {
+                name: self.layer_names.get(i).cloned().unwrap_or_else(|| format!("layer{i}")),
+                index: i,
+                hops: s.hops.load(Ordering::Relaxed),
+                batches: s.batches.load(Ordering::Relaxed),
+                queue_s: s.queue_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                compute_s: s.compute_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            })
+            .collect();
+        let overflow = self.per_adapter.len() - 1;
+        let per_adapter = self
+            .per_adapter
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.hops.load(Ordering::Relaxed) > 0)
+            .map(|(i, s)| SlotSnapshot {
+                name: if i == overflow {
+                    "(overflow)".to_string()
+                } else {
+                    adapter_names.get(i).cloned().unwrap_or_else(|| format!("slot{i}"))
+                },
+                index: i,
+                hops: s.hops.load(Ordering::Relaxed),
+                batches: s.batches.load(Ordering::Relaxed),
+                queue_s: s.queue_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+                compute_s: s.compute_ns.load(Ordering::Relaxed) as f64 * 1e-9,
+            })
+            .collect();
+        let (recent_traces, slow_traces) = {
+            let rings = self.rings.lock().unwrap();
+            (rings.recent.iter().cloned().collect(), rings.slow.iter().cloned().collect())
+        };
+        TelemetrySnapshot {
+            uptime_s: self.start.elapsed().as_secs_f64(),
+            enabled: self.enabled,
+            max_batch_seen: max_batch as usize,
+            counters,
+            hists,
+            per_layer,
+            per_adapter,
+            recent_traces,
+            slow_traces,
+        }
+    }
+}
+
+// ---- snapshot ----
+
+/// A merged histogram: per-bucket counts (non-cumulative), total count,
+/// and the exact observed sum in seconds.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_s: f64,
+}
+
+impl HistSnapshot {
+    /// Quantile estimate in seconds (`q` in [0, 1]): the upper bound of
+    /// the bucket holding the q-th observation — within one log-linear
+    /// bucket (at most 25% above the true value, the width of one
+    /// sub-bucket relative to an octave's floor). 0.0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                let upper = if i == HIST_BUCKETS - 1 {
+                    1u64 << HIST_MAX_EXP
+                } else {
+                    bucket_upper_ns(i)
+                };
+                return upper as f64 * 1e-9;
+            }
+        }
+        (1u64 << HIST_MAX_EXP) as f64 * 1e-9
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    /// Cumulative `(upper_bound_s, count ≤ bound)` pairs for every
+    /// nonempty bucket, ending with the +Inf bucket — the Prometheus
+    /// exposition rows, also usable directly by an HTTP layer.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if c > 0 && i < HIST_BUCKETS - 1 {
+                out.push((bucket_upper_ns(i) as f64 * 1e-9, cum));
+            }
+        }
+        out.push((f64::INFINITY, cum));
+        out
+    }
+}
+
+/// Per-layer / per-adapter attribution row.
+#[derive(Clone, Debug)]
+pub struct SlotSnapshot {
+    pub name: String,
+    pub index: usize,
+    pub hops: u64,
+    /// Micro-batches executed at this layer (0 for adapter rows — the
+    /// batch belongs to the layer; adapters count hops).
+    pub batches: u64,
+    pub queue_s: f64,
+    pub compute_s: f64,
+}
+
+/// A point-in-time merged view of everything the engine's telemetry
+/// tracks. Cheap to hold; render with
+/// [`TelemetrySnapshot::render_prometheus`] or collapse to the
+/// back-compat [`EngineStats`] with [`TelemetrySnapshot::engine_stats`].
+#[derive(Clone, Debug)]
+pub struct TelemetrySnapshot {
+    pub uptime_s: f64,
+    pub enabled: bool,
+    pub max_batch_seen: usize,
+    counters: [u64; N_COUNTERS],
+    hists: Vec<HistSnapshot>,
+    pub per_layer: Vec<SlotSnapshot>,
+    pub per_adapter: Vec<SlotSnapshot>,
+    /// Most recent finished traces, oldest first.
+    pub recent_traces: Vec<Trace>,
+    /// Captured slow traces, oldest first.
+    pub slow_traces: Vec<Trace>,
+}
+
+impl TelemetrySnapshot {
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters[c as usize]
+    }
+
+    pub fn hist(&self, m: Metric) -> &HistSnapshot {
+        &self.hists[m as usize]
+    }
+
+    /// The back-compat counter view `ServeEngine::stats` returns: every
+    /// field of the old mutex-guarded struct, derived. Counts are exact
+    /// (they were atomic increments); the two time totals come from the
+    /// histogram nanosecond sums.
+    pub fn engine_stats(&self) -> EngineStats {
+        EngineStats {
+            requests: self.counter(Counter::SinglesOk) as usize,
+            model_requests: self.counter(Counter::ModelsOk) as usize,
+            session_forwards: self.counter(Counter::SessionForwards) as usize,
+            hops: self.counter(Counter::Hops) as usize,
+            batches: self.counter(Counter::Batches) as usize,
+            max_batch_seen: self.max_batch_seen,
+            mixed_batches: self.counter(Counter::MixedBatches) as usize,
+            rejected: self.counter(Counter::Rejected) as usize,
+            batch_panics: self.counter(Counter::BatchPanics) as usize,
+            failed: self.counter(Counter::SinglesFailed) as usize,
+            failed_model_requests: self.counter(Counter::ModelsFailed) as usize,
+            total_queue_s: self.hist(Metric::HopQueue).sum_s,
+            total_compute_s: self.hist(Metric::BatchCompute).sum_s,
+        }
+    }
+
+    /// Prometheus text exposition (v0.0.4): every counter, every
+    /// histogram (nonempty buckets as cumulative `_bucket{le=...}` rows
+    /// plus `_sum`/`_count`), the per-layer and per-adapter attribution
+    /// as labeled counters, and engine gauges. The future HTTP
+    /// `/metrics` endpoint is a one-liner over this.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(out, "# HELP cloq_uptime_seconds Engine uptime.");
+        let _ = writeln!(out, "# TYPE cloq_uptime_seconds gauge");
+        let _ = writeln!(out, "cloq_uptime_seconds {}", self.uptime_s);
+        let _ = writeln!(out, "# HELP cloq_max_batch_seen Largest micro-batch executed.");
+        let _ = writeln!(out, "# TYPE cloq_max_batch_seen gauge");
+        let _ = writeln!(out, "cloq_max_batch_seen {}", self.max_batch_seen);
+        for c in Counter::ALL {
+            let _ = writeln!(out, "# HELP cloq_{} {}", c.name(), c.help());
+            let _ = writeln!(out, "# TYPE cloq_{} counter", c.name());
+            let _ = writeln!(out, "cloq_{} {}", c.name(), self.counter(c));
+        }
+        for m in Metric::ALL {
+            let h = self.hist(m);
+            let _ = writeln!(out, "# HELP cloq_{} {}", m.name(), m.help());
+            let _ = writeln!(out, "# TYPE cloq_{} histogram", m.name());
+            for (le, cum) in h.cumulative() {
+                if le.is_infinite() {
+                    let _ = writeln!(out, "cloq_{}_bucket{{le=\"+Inf\"}} {cum}", m.name());
+                } else {
+                    let _ = writeln!(out, "cloq_{}_bucket{{le=\"{le}\"}} {cum}", m.name());
+                }
+            }
+            let _ = writeln!(out, "cloq_{}_sum {}", m.name(), h.sum_s);
+            let _ = writeln!(out, "cloq_{}_count {}", m.name(), h.count);
+        }
+        let layer_rows: [(&str, &str, fn(&SlotSnapshot) -> String); 4] = [
+            ("cloq_layer_hops_total", "Riders served at this layer.", |s| s.hops.to_string()),
+            (
+                "cloq_layer_batches_total",
+                "Micro-batches executed at this layer.",
+                |s| s.batches.to_string(),
+            ),
+            (
+                "cloq_layer_queue_seconds_total",
+                "Summed rider queue wait at this layer.",
+                |s| s.queue_s.to_string(),
+            ),
+            (
+                "cloq_layer_compute_seconds_total",
+                "Summed kernel time at this layer.",
+                |s| s.compute_s.to_string(),
+            ),
+        ];
+        for (name, help, value) in layer_rows {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for s in &self.per_layer {
+                let _ =
+                    writeln!(out, "{name}{{layer=\"{}\"}} {}", escape_label(&s.name), value(s));
+            }
+        }
+        let adapter_rows: [(&str, &str, fn(&SlotSnapshot) -> String); 3] = [
+            ("cloq_adapter_hops_total", "Hops attributed to this adapter.", |s| {
+                s.hops.to_string()
+            }),
+            (
+                "cloq_adapter_queue_seconds_total",
+                "Summed hop queue wait attributed to this adapter.",
+                |s| s.queue_s.to_string(),
+            ),
+            (
+                "cloq_adapter_compute_seconds_total",
+                "Fair-share kernel time attributed to this adapter.",
+                |s| s.compute_s.to_string(),
+            ),
+        ];
+        for (name, help, value) in adapter_rows {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            for s in &self.per_adapter {
+                let _ = writeln!(
+                    out,
+                    "{name}{{adapter=\"{}\"}} {}",
+                    escape_label(&s.name),
+                    value(s)
+                );
+            }
+        }
+        out
+    }
+}
+
+/// Prometheus label-value escaping: backslash, double quote, newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for ch in v.chars() {
+        match ch {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_layout_is_monotonic_and_contains_values() {
+        // Every bucket's upper bound strictly grows, and bucket_of is
+        // consistent with the bounds: value < upper(bucket) and, for
+        // non-underflow buckets, value >= upper(bucket - 1).
+        let mut prev = 0u64;
+        for i in 0..HIST_BUCKETS - 1 {
+            let up = bucket_upper_ns(i);
+            assert!(up > prev, "bucket {i}: {up} <= {prev}");
+            prev = up;
+        }
+        for ns in [0u64, 1, 255, 256, 257, 1_000, 1_500, 123_456, 10u64.pow(9), u64::MAX] {
+            let b = bucket_of(ns);
+            assert!(ns < bucket_upper_ns(b) || b == HIST_BUCKETS - 1, "ns={ns} b={b}");
+            if b > 0 {
+                assert!(ns >= bucket_upper_ns(b - 1), "ns={ns} b={b}");
+            }
+        }
+        // Relative error bound: the bucket width is ≤ 1/4 of its lower
+        // bound for all mid-range buckets.
+        for ns in [300u64, 1_000, 50_000, 3_000_000] {
+            let b = bucket_of(ns);
+            let up = bucket_upper_ns(b);
+            let lo = bucket_upper_ns(b - 1);
+            assert!(up - lo <= lo / 4 + 1, "bucket at {ns}: [{lo}, {up})");
+        }
+    }
+
+    #[test]
+    fn histogram_merges_across_threads_and_estimates_quantiles() {
+        let tel = std::sync::Arc::new(Telemetry::new(vec![], 8, TelemetryOptions::default()));
+        // 90 × 1ms + 10 × 100ms, observed from 4 threads so several
+        // shards fill; the merged view must see all 100.
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let tel = std::sync::Arc::clone(&tel);
+                std::thread::spawn(move || {
+                    for i in 0..25 {
+                        let ms = if (t * 25 + i) % 10 == 0 { 100.0 } else { 1.0 };
+                        tel.observe(Metric::HopQueue, ms * 1e-3);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = tel.snapshot(&[]);
+        let h = snap.hist(Metric::HopQueue);
+        assert_eq!(h.count, 100);
+        let expect_sum = 90.0 * 1e-3 + 10.0 * 100e-3;
+        assert!((h.sum_s - expect_sum).abs() < 1e-6, "{}", h.sum_s);
+        // p50 ≈ 1ms, p99 ≈ 100ms, both within one log-linear bucket.
+        let p50 = h.quantile(0.5);
+        assert!(p50 >= 1e-3 && p50 <= 1.25e-3, "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 >= 100e-3 && p99 <= 125e-3, "p99={p99}");
+        // The cumulative rows end at +Inf with the full count.
+        let cum = h.cumulative();
+        assert_eq!(cum.last().unwrap().1, 100);
+    }
+
+    #[test]
+    fn counters_shard_and_merge() {
+        let tel = std::sync::Arc::new(Telemetry::new(vec![], 4, TelemetryOptions::default()));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let tel = std::sync::Arc::clone(&tel);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        tel.incr(Counter::Hops);
+                    }
+                    tel.record_batch_max(7);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = tel.snapshot(&[]);
+        assert_eq!(snap.counter(Counter::Hops), 8000);
+        assert_eq!(snap.max_batch_seen, 7);
+        assert_eq!(snap.counter(Counter::Batches), 0);
+    }
+
+    #[test]
+    fn disabled_telemetry_is_inert() {
+        let tel = Telemetry::new(vec!["l0".into()], 2, TelemetryOptions::disabled());
+        tel.incr(Counter::Hops);
+        tel.observe(Metric::HopQueue, 1.0);
+        tel.layer_batch(0, 4, 100, 100);
+        tel.adapter_hop(0, 100, 100);
+        tel.record_batch_max(9);
+        assert!(tel.begin_trace(TraceKind::Single, None).is_none());
+        let snap = tel.snapshot(&[]);
+        assert!(!snap.enabled);
+        assert_eq!(snap.counter(Counter::Hops), 0);
+        assert_eq!(snap.hist(Metric::HopQueue).count, 0);
+        assert_eq!(snap.max_batch_seen, 0);
+        assert!(snap.per_layer.iter().all(|s| s.hops == 0));
+        assert!(snap.per_adapter.is_empty());
+        let stats = snap.engine_stats();
+        assert_eq!(stats.hops, 0);
+    }
+
+    #[test]
+    fn trace_rings_evict_and_capture_slow() {
+        // Threshold 0 ⇒ every request is "slow"; recent ring of 4 must
+        // evict, slow ring of 2 must keep only the newest 2.
+        crate::util::logging::set_level(crate::util::logging::Level::Error);
+        let opts = TelemetryOptions::default()
+            .slow_threshold_s(0.0)
+            .recent_traces(4)
+            .slow_traces(2);
+        let tel = Telemetry::new(vec![], 1, opts);
+        for k in 0..10u32 {
+            let mut t = tel.begin_trace(TraceKind::Single, Some(k)).unwrap();
+            t.event(TraceStage::Admitted { layer: 0 });
+            t.hop(0, 3, 1, 1e-6, 2e-6);
+            tel.finish_trace(t, true);
+        }
+        let snap = tel.snapshot(&[]);
+        assert_eq!(snap.recent_traces.len(), 4);
+        assert_eq!(snap.slow_traces.len(), 2);
+        assert_eq!(snap.counter(Counter::SlowRequests), 10);
+        assert_eq!(snap.counter(Counter::TracesDropped), 6);
+        // Newest-last ordering; ids are process-unique and increasing.
+        let ids: Vec<u64> = snap.recent_traces.iter().map(|t| t.id).collect();
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "{ids:?}");
+        // The span timeline survived: admitted → hop → replied.
+        let tr = snap.recent_traces.last().unwrap();
+        assert!(tr.ok);
+        assert!(matches!(tr.events[0].stage, TraceStage::Admitted { .. }));
+        assert!(
+            matches!(tr.events[1].stage, TraceStage::Hop { hop: 1, batch: 3, .. }),
+            "{:?}",
+            tr.events[1]
+        );
+        assert!(matches!(tr.events.last().unwrap().stage, TraceStage::Replied { ok: true }));
+        assert!(tr.render().contains("hop 1"), "{}", tr.render());
+    }
+
+    #[test]
+    fn trace_buf_truncates_instead_of_growing() {
+        crate::util::logging::set_level(crate::util::logging::Level::Error);
+        let tel = Telemetry::new(vec![], 1, TelemetryOptions::default());
+        let mut t = tel.begin_trace(TraceKind::Session, None).unwrap();
+        for _ in 0..(2 * MAX_TRACE_EVENTS) {
+            t.hop(0, 1, 1, 0.0, 0.0);
+        }
+        tel.finish_trace(t, true);
+        let snap = tel.snapshot(&[]);
+        let tr = snap.recent_traces.last().unwrap();
+        assert!(tr.truncated);
+        assert_eq!(tr.events.len(), MAX_TRACE_EVENTS);
+        assert!(tr.render().contains("truncated"));
+    }
+
+    #[test]
+    fn attribution_tables_index_by_slot_with_overflow() {
+        let opts = TelemetryOptions::default().max_tracked_adapters(2);
+        let tel = Telemetry::new(vec!["wq".into(), "wo".into()], 1, opts);
+        tel.layer_batch(0, 4, 1_000, 2_000);
+        tel.layer_batch(1, 2, 500, 700);
+        tel.layer_batch(9, 1, 1, 1); // out of range: ignored, no panic
+        tel.adapter_hop(0, 100, 10);
+        tel.adapter_hop(1, 200, 20);
+        tel.adapter_hop(7, 400, 40); // beyond cap → overflow slot
+        let snap = tel.snapshot(&["tenant-a".into()]);
+        assert_eq!(snap.per_layer.len(), 2);
+        assert_eq!(snap.per_layer[0].name, "wq");
+        assert_eq!(snap.per_layer[0].hops, 4);
+        assert_eq!(snap.per_layer[0].batches, 1);
+        assert!((snap.per_layer[1].queue_s - 500e-9).abs() < 1e-15);
+        assert_eq!(snap.per_adapter.len(), 3);
+        assert_eq!(snap.per_adapter[0].name, "tenant-a");
+        assert_eq!(snap.per_adapter[1].name, "slot1", "unnamed slots fall back to index");
+        assert_eq!(snap.per_adapter[2].name, "(overflow)");
+        assert_eq!(snap.per_adapter[2].hops, 1);
+    }
+
+    #[test]
+    fn engine_stats_view_maps_counters_and_sums() {
+        let tel = Telemetry::new(vec![], 1, TelemetryOptions::default());
+        tel.add(Counter::SinglesOk, 5);
+        tel.add(Counter::Hops, 8);
+        tel.add(Counter::Batches, 2);
+        tel.incr(Counter::Rejected);
+        tel.record_batch_max(6);
+        tel.observe(Metric::HopQueue, 0.5);
+        tel.observe(Metric::BatchCompute, 0.25);
+        let stats = tel.snapshot(&[]).engine_stats();
+        assert_eq!(stats.requests, 5);
+        assert_eq!(stats.hops, 8);
+        assert_eq!(stats.batches, 2);
+        assert_eq!(stats.rejected, 1);
+        assert_eq!(stats.max_batch_seen, 6);
+        assert!((stats.total_queue_s - 0.5).abs() < 1e-6, "{}", stats.total_queue_s);
+        assert!((stats.total_compute_s - 0.25).abs() < 1e-6);
+        assert!((stats.mean_batch() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prometheus_labels_escape() {
+        assert_eq!(escape_label("plain"), "plain");
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

@@ -1,8 +1,9 @@
 //! Leveled stderr logger (no `log`/`tracing` crates offline).
 //!
 //! Level is controlled by the `CLOQ_LOG` env var (`error|warn|info|debug`),
-//! default `info`. Messages carry a monotonic timestamp since process start
-//! so pipeline stage costs are visible in plain runs.
+//! default `info`; an unrecognized value warns once and falls back to the
+//! default. Messages carry a monotonic timestamp since process start so
+//! pipeline stage costs are visible in plain runs.
 
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
@@ -24,13 +25,27 @@ fn level() -> u8 {
     if v != u8::MAX {
         return v;
     }
-    let parsed = match std::env::var("CLOQ_LOG").as_deref() {
+    let var = std::env::var("CLOQ_LOG");
+    let parsed = match var.as_deref() {
         Ok("error") => Level::Error,
         Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
         Ok("debug") => Level::Debug,
         _ => Level::Info,
     } as u8;
+    // Store BEFORE warning about an unknown value: the warning itself goes
+    // through `log()` → `level()`, and an unset level would recurse.
     LEVEL.store(parsed, Ordering::Relaxed);
+    if let Ok(other) = var.as_deref() {
+        if !matches!(other, "error" | "warn" | "info" | "debug") {
+            static WARNED: std::sync::Once = std::sync::Once::new();
+            WARNED.call_once(|| {
+                crate::warn!(
+                    "CLOQ_LOG={other:?} is not one of error|warn|info|debug; defaulting to info"
+                );
+            });
+        }
+    }
     parsed
 }
 

@@ -1,0 +1,498 @@
+//! Telemetry integration suite: the counter-identity invariant under
+//! mixed threaded load (successes, kernel panics, overload rejections,
+//! multi-hop sessions), the Prometheus exposition round-trip (every
+//! counter and histogram in the text output parses back to its snapshot
+//! value), engine-level trace rings with slow capture, the durability
+//! counters (WAL appends/fsyncs/replay, artifact open modes), and the
+//! back-compat `EngineStats` view being exactly the snapshot collapsed.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use cloq::linalg::Matrix;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{
+    AdapterSet, ArtifactStore, Counter, DequantParams, Metric, ModelRequest, PackedLayer,
+    PackedModel, Request, ServeEngine, ServeError, SessionRequest, StepFn, TelemetryOptions,
+    TraceStage,
+};
+use cloq::util::logging::{set_level, Level};
+use cloq::util::prng::Rng;
+
+fn square_layer(name: &str, n: usize, seed: u64) -> PackedLayer {
+    let mut rng = Rng::new(seed);
+    let w = Matrix::randn(n, n, 0.3, &mut rng);
+    PackedLayer::from_state(name, &QuantState::Int(quantize_rtn(&w, 4, 8))).unwrap()
+}
+
+/// A layer whose kernel panics on ANY request (the lifecycle suite's
+/// out-of-range codebook idiom).
+fn boom_layer(n: usize) -> PackedLayer {
+    let wpr = cloq::serve::words_per_row(n, 2);
+    PackedLayer {
+        name: "boom".to_string(),
+        rows: n,
+        cols: n,
+        bits: 2,
+        group_size: n,
+        packed: vec![u32::MAX; n * wpr].into(),
+        params: DequantParams::Codebook {
+            levels: vec![0.0, 1.0],
+            absmax: Matrix::zeros(1, n),
+        },
+    }
+}
+
+fn mk_set(id: &str, layer: &str, n: usize, seed: u64) -> AdapterSet {
+    let mut rng = Rng::new(seed);
+    let pair = cloq::lowrank::LoraPair::new(
+        Matrix::randn(n, 2, 0.1, &mut rng),
+        Matrix::randn(n, 2, 0.1, &mut rng),
+    );
+    AdapterSet::from_pairs(id, vec![(layer.to_string(), pair)]).unwrap()
+}
+
+#[derive(Default)]
+struct Tally {
+    singles_ok: u64,
+    singles_failed: u64,
+    models_ok: u64,
+    models_failed: u64,
+    rejected: u64,
+}
+
+/// The invariant the module docs promise: every resolved submission is
+/// counted in exactly one of the five outcome counters —
+/// `requests + model_requests + rejected + failed + failed_model_requests`
+/// equals the number of submissions whose tickets resolved. Exercised
+/// from 4 threads mixing healthy singles, panicking singles, healthy and
+/// doomed model routes, multi-step sessions, and a failing step — and
+/// asserted not just as a sum but counter-by-counter against the
+/// client-side tally of what each ticket actually returned.
+#[test]
+fn counter_identity_holds_under_mixed_threaded_load() {
+    set_level(Level::Error); // panic batches log; keep the test run quiet
+    let n = 12;
+    let model = PackedModel::new(vec![
+        square_layer("ok1", n, 900),
+        boom_layer(n),
+        square_layer("ok2", n, 901),
+    ]);
+    let engine = Arc::new(
+        ServeEngine::builder(model).workers(2).max_batch(4).max_pending(256).build().unwrap(),
+    );
+    let ok1 = engine.layer("ok1").unwrap();
+    let boom = engine.layer("boom").unwrap();
+
+    let mut total_submitted = 0u64;
+    let mut tally = Tally::default();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let engine = Arc::clone(&engine);
+            handles.push(s.spawn(move || {
+                let mut rng = Rng::new(910 + t);
+                let mut tally = Tally::default();
+                let mut submitted = 0u64;
+                let healthy_route = engine.route(&["ok1", "ok2"]).unwrap();
+                let doomed_route = engine.route(&["ok1", "boom"]).unwrap();
+                let mut singles = Vec::new();
+                let mut models = Vec::new();
+                for i in 0..8 {
+                    singles.push(engine.submit(ok1, None, rng.gauss_vec(n)));
+                    if i % 4 == 0 {
+                        singles.push(engine.submit(boom, None, rng.gauss_vec(n)));
+                    }
+                    submitted += 1 + u64::from(i % 4 == 0);
+                }
+                for i in 0..4 {
+                    let route =
+                        if i % 2 == 0 { healthy_route.clone() } else { doomed_route.clone() };
+                    models.push(engine.submit_model(ModelRequest::new(route, rng.gauss_vec(n))));
+                    submitted += 1;
+                }
+                let step: StepFn = Box::new(|_, y| Some(y.to_vec()));
+                models.push(engine.submit_session(SessionRequest::new(
+                    engine.route(&["ok2"]).unwrap(),
+                    rng.gauss_vec(n),
+                    3,
+                    step,
+                )));
+                let failing: StepFn = Box::new(|_, _| Some(vec![0.0; 3]));
+                models.push(engine.submit_session(SessionRequest::new(
+                    engine.route(&["ok2"]).unwrap(),
+                    rng.gauss_vec(n),
+                    2,
+                    failing,
+                )));
+                submitted += 2;
+                for tk in singles {
+                    match tk.wait() {
+                        Ok(_) => tally.singles_ok += 1,
+                        Err(ServeError::Overloaded { .. }) => tally.rejected += 1,
+                        Err(_) => tally.singles_failed += 1,
+                    }
+                }
+                for tk in models {
+                    match tk.wait() {
+                        Ok(_) => tally.models_ok += 1,
+                        Err(ServeError::Overloaded { .. }) => tally.rejected += 1,
+                        Err(_) => tally.models_failed += 1,
+                    }
+                }
+                (submitted, tally)
+            }));
+        }
+        for h in handles {
+            let (submitted, t) = h.join().unwrap();
+            total_submitted += submitted;
+            tally.singles_ok += t.singles_ok;
+            tally.singles_failed += t.singles_failed;
+            tally.models_ok += t.models_ok;
+            tally.models_failed += t.models_failed;
+            tally.rejected += t.rejected;
+        }
+    });
+
+    // Snapshot AFTER shutdown (workers joined → every counter settled),
+    // through the handle that outlives the engine.
+    let tel = engine.telemetry_handle();
+    let engine = Arc::into_inner(engine).unwrap();
+    let stats = engine.shutdown();
+    let snap = tel.snapshot(&[]);
+
+    // Counter-by-counter against what the tickets actually returned.
+    assert_eq!(snap.counter(Counter::SinglesOk), tally.singles_ok);
+    assert_eq!(snap.counter(Counter::SinglesFailed), tally.singles_failed);
+    assert_eq!(snap.counter(Counter::ModelsOk), tally.models_ok);
+    assert_eq!(snap.counter(Counter::ModelsFailed), tally.models_failed);
+    assert_eq!(snap.counter(Counter::Rejected), tally.rejected);
+    // The identity: five outcome counters partition the submissions.
+    let resolved = snap.counter(Counter::SinglesOk)
+        + snap.counter(Counter::ModelsOk)
+        + snap.counter(Counter::Rejected)
+        + snap.counter(Counter::SinglesFailed)
+        + snap.counter(Counter::ModelsFailed);
+    assert_eq!(resolved, total_submitted);
+    // The load was built to exercise every outcome except overload
+    // (which this uncontended config should not hit).
+    assert_eq!(tally.singles_ok, 4 * 8);
+    assert_eq!(tally.singles_failed, 4 * 2, "boom singles");
+    assert_eq!(tally.models_ok, 4 * 3, "2 healthy models + 1 good session per thread");
+    assert_eq!(tally.models_failed, 4 * 3, "2 doomed models + 1 failing session per thread");
+    assert!(snap.counter(Counter::BatchPanics) >= 1);
+
+    // Histogram counts line up with the counters: every rider of a
+    // successful batch observed a hop, every batch observed a kernel
+    // time, and every ADMITTED request (all of them here — no admission
+    // rejects) observed an end-to-end wall time via its trace.
+    assert_eq!(snap.hist(Metric::HopQueue).count, snap.counter(Counter::Hops));
+    assert_eq!(snap.hist(Metric::HopLatency).count, snap.counter(Counter::Hops));
+    assert_eq!(snap.hist(Metric::BatchCompute).count, snap.counter(Counter::Batches));
+    assert_eq!(
+        snap.hist(Metric::RequestWall).count,
+        total_submitted - snap.counter(Counter::Rejected)
+    );
+
+    // The back-compat view is exactly the snapshot collapsed; the engine
+    // returned the same struct from shutdown().
+    let via_snapshot = snap.engine_stats();
+    assert_eq!(stats.requests, via_snapshot.requests);
+    assert_eq!(stats.model_requests, via_snapshot.model_requests);
+    assert_eq!(stats.session_forwards, via_snapshot.session_forwards);
+    assert_eq!(stats.hops, via_snapshot.hops);
+    assert_eq!(stats.batches, via_snapshot.batches);
+    assert_eq!(stats.rejected, via_snapshot.rejected);
+    assert_eq!(stats.failed, via_snapshot.failed);
+    assert_eq!(stats.failed_model_requests, via_snapshot.failed_model_requests);
+    assert_eq!(stats.batch_panics, via_snapshot.batch_panics);
+    assert_eq!(stats.max_batch_seen, via_snapshot.max_batch_seen);
+    assert!(via_snapshot.total_queue_s >= 0.0);
+    assert!(via_snapshot.total_compute_s > 0.0, "kernels ran; compute time must be recorded");
+
+    // Per-layer attribution: rows carry the model's layer names and the
+    // per-layer hop counts sum to the global hop counter.
+    assert_eq!(snap.per_layer.len(), 3);
+    assert_eq!(snap.per_layer[0].name, "ok1");
+    assert_eq!(snap.per_layer[1].name, "boom");
+    assert_eq!(snap.per_layer[2].name, "ok2");
+    let layer_hops: u64 = snap.per_layer.iter().map(|l| l.hops).sum();
+    assert_eq!(layer_hops, snap.counter(Counter::Hops));
+    assert_eq!(snap.per_layer[1].hops, 0, "boom never completed a batch");
+}
+
+/// Deterministic overload: a session parked inside its step function
+/// pins a live hop slot, so with `max_pending = 2` the third and fourth
+/// arrivals are refused — and land in `Rejected`, not in the failure
+/// counters, with no end-to-end wall observation (they never got a
+/// trace).
+#[test]
+fn overload_rejections_count_as_rejected_not_failed() {
+    let model = PackedModel::new(vec![square_layer("sq", 12, 920)]);
+    let engine = ServeEngine::builder(model)
+        .workers(1)
+        .max_batch(4)
+        .max_pending(2)
+        .build()
+        .unwrap();
+    let sq = engine.layer("sq").unwrap();
+    let route = engine.route(&["sq"]).unwrap();
+    let (entered_tx, entered_rx) = mpsc::channel::<()>();
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let step: StepFn = Box::new(move |_, y| {
+        entered_tx.send(()).unwrap();
+        gate_rx.recv().unwrap();
+        Some(y.to_vec())
+    });
+    let mut rng = Rng::new(921);
+    let session = engine.submit_session(SessionRequest::new(route, rng.gauss_vec(12), 2, step));
+    entered_rx.recv().unwrap();
+    let second = engine.submit(sq, None, rng.gauss_vec(12));
+    let third = engine.submit(sq, None, rng.gauss_vec(12));
+    let fourth = engine.submit(sq, None, rng.gauss_vec(12));
+    assert!(matches!(third.wait().unwrap_err(), ServeError::Overloaded { .. }));
+    assert!(matches!(fourth.wait().unwrap_err(), ServeError::Overloaded { .. }));
+    gate_tx.send(()).unwrap();
+    assert_eq!(session.wait().unwrap().forwards, 2);
+    second.wait().unwrap();
+    let tel = engine.telemetry_handle();
+    engine.shutdown();
+    let snap = tel.snapshot(&[]);
+    assert_eq!(snap.counter(Counter::Rejected), 2);
+    assert_eq!(snap.counter(Counter::SinglesFailed), 0);
+    assert_eq!(snap.counter(Counter::ModelsFailed), 0);
+    assert_eq!(snap.counter(Counter::SinglesOk), 1);
+    assert_eq!(snap.counter(Counter::ModelsOk), 1);
+    assert_eq!(snap.hist(Metric::RequestWall).count, 2, "rejects never start a trace");
+}
+
+fn prom_line_value(text: &str, key: &str) -> f64 {
+    let mut found = None;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix(key) {
+            if let Some(v) = rest.strip_prefix(' ') {
+                assert!(found.is_none(), "duplicate exposition row for {key}");
+                found = Some(v.parse::<f64>().unwrap_or_else(|_| {
+                    panic!("unparseable value {v:?} for {key}")
+                }));
+            }
+        }
+    }
+    found.unwrap_or_else(|| panic!("missing exposition row {key}"))
+}
+
+/// The acceptance round-trip: every counter and every histogram in the
+/// snapshot appears in `render_prometheus()` and parses back to exactly
+/// the snapshot's value — names, HELP/TYPE preambles, cumulative
+/// buckets, `_sum`/`_count`, labeled per-layer and per-adapter rows,
+/// and the gauges.
+#[test]
+fn prometheus_exposition_round_trips_every_counter_and_histogram() {
+    let n = 16;
+    let model = PackedModel::new(vec![square_layer("lin", n, 930)]);
+    let engine = ServeEngine::builder(model).workers(2).max_batch(8).build().unwrap();
+    let tenant = engine.register_adapter(mk_set("tenant", "lin", n, 931)).unwrap().id;
+    let lin = engine.layer("lin").unwrap();
+    let mut rng = Rng::new(932);
+    let reqs: Vec<Request> =
+        (0..24).map(|_| Request::with_adapter(lin, tenant, rng.gauss_vec(n))).collect();
+    for tk in engine.submit_all(reqs) {
+        tk.wait().unwrap();
+    }
+    for tk in (0..4).map(|_| {
+        engine.submit_model(ModelRequest::new(engine.route(&["lin"]).unwrap(), rng.gauss_vec(n)))
+    }) {
+        tk.wait().unwrap();
+    }
+    let tel = engine.telemetry_handle();
+    engine.shutdown();
+    let snap = tel.snapshot(&["tenant".to_string()]);
+    let text = snap.render_prometheus();
+
+    // Gauges.
+    assert!(prom_line_value(&text, "cloq_uptime_seconds") > 0.0);
+    assert_eq!(
+        prom_line_value(&text, "cloq_max_batch_seen") as usize,
+        snap.max_batch_seen
+    );
+
+    // Every counter: HELP + TYPE + an exact value row.
+    for c in Counter::ALL {
+        assert!(
+            text.contains(&format!("# HELP cloq_{} ", c.name())),
+            "missing HELP for {}",
+            c.name()
+        );
+        assert!(
+            text.contains(&format!("# TYPE cloq_{} counter", c.name())),
+            "missing TYPE for {}",
+            c.name()
+        );
+        let rendered = prom_line_value(&text, &format!("cloq_{}", c.name()));
+        assert_eq!(rendered as u64, snap.counter(c), "counter {} drifted", c.name());
+    }
+
+    // Every histogram: TYPE histogram, cumulative buckets ending at
+    // +Inf == _count, and _sum/_count parsing back exactly.
+    for m in Metric::ALL {
+        let h = snap.hist(m);
+        assert!(
+            text.contains(&format!("# TYPE cloq_{} histogram", m.name())),
+            "missing TYPE for {}",
+            m.name()
+        );
+        let count = prom_line_value(&text, &format!("cloq_{}_count", m.name()));
+        assert_eq!(count as u64, h.count, "histogram {} count drifted", m.name());
+        let sum = prom_line_value(&text, &format!("cloq_{}_sum", m.name()));
+        assert_eq!(sum, h.sum_s, "histogram {} sum drifted", m.name());
+        let inf =
+            prom_line_value(&text, &format!("cloq_{}_bucket{{le=\"+Inf\"}}", m.name()));
+        assert_eq!(inf as u64, h.count, "+Inf bucket must equal the total count");
+        // Cumulative rows are nondecreasing and each parses back.
+        let mut prev = 0u64;
+        for (le, cum) in h.cumulative() {
+            let key = if le.is_infinite() {
+                format!("cloq_{}_bucket{{le=\"+Inf\"}}", m.name())
+            } else {
+                format!("cloq_{}_bucket{{le=\"{le}\"}}", m.name())
+            };
+            assert_eq!(prom_line_value(&text, &key) as u64, cum);
+            assert!(cum >= prev);
+            prev = cum;
+        }
+    }
+
+    // Labeled attribution rows: the layer and the named adapter.
+    assert_eq!(
+        prom_line_value(&text, "cloq_layer_hops_total{layer=\"lin\"}") as u64,
+        snap.counter(Counter::Hops)
+    );
+    let adapter_hops = prom_line_value(&text, "cloq_adapter_hops_total{adapter=\"tenant\"}");
+    assert_eq!(adapter_hops as u64, 24, "the 24 adapter singles attribute to the tenant");
+
+    // Sanity on the workload itself.
+    assert_eq!(snap.counter(Counter::SinglesOk), 24);
+    assert_eq!(snap.counter(Counter::ModelsOk), 4);
+    assert!(snap.hist(Metric::RequestWall).quantile(0.5) > 0.0);
+}
+
+/// Engine-level tracing: responses carry the trace id, the recent ring
+/// is bounded (evictions counted), a zero slow-threshold captures every
+/// request into the slow ring (also bounded), and each trace's timeline
+/// runs admitted → enqueued → hop → replied.
+#[test]
+fn trace_rings_bound_capture_and_order_events() {
+    set_level(Level::Error); // every request logs as slow; keep quiet
+    let n = 10;
+    let model = PackedModel::new(vec![square_layer("sq", n, 940)]);
+    let engine = ServeEngine::builder(model)
+        .workers(1)
+        .telemetry(
+            TelemetryOptions::default().slow_threshold_s(0.0).recent_traces(4).slow_traces(2),
+        )
+        .build()
+        .unwrap();
+    let sq = engine.layer("sq").unwrap();
+    let mut rng = Rng::new(941);
+    let mut ids = Vec::new();
+    for _ in 0..10 {
+        let resp = engine.submit(sq, None, rng.gauss_vec(n)).wait().unwrap();
+        assert_ne!(resp.trace_id, 0, "tracing on → every response names its trace");
+        ids.push(resp.trace_id);
+    }
+    let tel = engine.telemetry_handle();
+    engine.shutdown();
+    let snap = tel.snapshot(&[]);
+    assert_eq!(snap.recent_traces.len(), 4, "recent ring capped");
+    assert_eq!(snap.slow_traces.len(), 2, "slow ring capped");
+    assert_eq!(snap.counter(Counter::SlowRequests), 10, "0-threshold → all slow");
+    assert_eq!(snap.counter(Counter::TracesDropped), 6, "10 finished − 4 kept");
+    // The rings hold the most recent finishes, oldest first.
+    let kept: Vec<u64> = snap.recent_traces.iter().map(|t| t.id).collect();
+    assert_eq!(kept, ids[6..].to_vec());
+    for trace in snap.recent_traces.iter().chain(&snap.slow_traces) {
+        assert!(trace.ok);
+        assert!(matches!(trace.events.first().unwrap().stage, TraceStage::Admitted { .. }));
+        assert!(matches!(trace.events.last().unwrap().stage, TraceStage::Replied { ok: true }));
+        assert!(
+            trace.events.iter().any(|e| matches!(e.stage, TraceStage::Hop { hop: 1, .. })),
+            "single-layer trace must record its one hop"
+        );
+        let rendered = trace.render();
+        assert!(rendered.contains("hop 1"), "{rendered}");
+        assert!(rendered.contains("replied ok"), "{rendered}");
+    }
+}
+
+/// Disabled telemetry: no traces, zero-valued snapshot, and the
+/// engine still serves and reports back-compat stats correctly.
+#[test]
+fn disabled_telemetry_serves_with_zeroed_instruments() {
+    let n = 10;
+    let model = PackedModel::new(vec![square_layer("sq", n, 950)]);
+    let engine = ServeEngine::builder(model)
+        .telemetry(TelemetryOptions::disabled())
+        .build()
+        .unwrap();
+    let sq = engine.layer("sq").unwrap();
+    let mut rng = Rng::new(951);
+    let resp = engine.submit(sq, None, rng.gauss_vec(n)).wait().unwrap();
+    assert_eq!(resp.trace_id, 0, "tracing off → no trace id");
+    let snap = engine.telemetry();
+    assert!(!snap.enabled);
+    assert_eq!(snap.counter(Counter::SinglesOk), 0);
+    assert_eq!(snap.hist(Metric::RequestWall).count, 0);
+    assert!(snap.recent_traces.is_empty());
+    let stats = engine.shutdown();
+    assert_eq!(stats.requests, 0, "the compat view reflects the disabled instruments");
+}
+
+/// Durability instrumentation: registers/unregisters count WAL appends
+/// and fsyncs, boot replay surfaces the recovered event count, and the
+/// artifact store attributes opens to the eager vs mapped paths with
+/// durations in the open histogram.
+#[test]
+fn durability_counters_track_wal_and_artifact_activity() {
+    let n = 16;
+    let dir = std::env::temp_dir().join(format!("cloq_tel_wal_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let build = || {
+        ServeEngine::builder(PackedModel::new(vec![square_layer("lin", n, 960)]))
+            .durable(&dir)
+            .build()
+            .unwrap()
+    };
+    let engine = build();
+    for i in 0..3 {
+        engine.register_adapter(mk_set(&format!("t{i}"), "lin", n, 961 + i as u64)).unwrap();
+    }
+    engine.unregister_adapter("t1").unwrap();
+    let snap = engine.telemetry();
+    assert_eq!(snap.counter(Counter::WalAppends), 4, "3 registers + 1 unregister");
+    let fsyncs = snap.counter(Counter::WalFsyncs);
+    assert!(fsyncs >= 1 && fsyncs <= 4, "sync_every=1 commits each op: {fsyncs}");
+    assert_eq!(snap.hist(Metric::WalFsync).count, fsyncs, "every fsync timed");
+    assert_eq!(snap.counter(Counter::WalReplayEvents), 0, "fresh log, nothing replayed");
+    engine.shutdown();
+
+    // Reboot on the surviving log: the replay counter reports the
+    // recovered history (3 registers + 1 unregister decoded).
+    let engine = build();
+    let snap = engine.telemetry();
+    assert_eq!(snap.counter(Counter::WalReplayEvents), 4);
+
+    // Artifact opens, attributed by mode, through the engine's core.
+    let store = ArtifactStore::at(&dir).with_telemetry(engine.telemetry_handle());
+    let model = PackedModel::new(vec![square_layer("lin", n, 962)]);
+    store.save_base_v3(&model, "base.cloqpkd3").unwrap();
+    store.open("base.cloqpkd3").unwrap();
+    store.open_mapped("base.cloqpkd3").unwrap();
+    store.load_base("base.cloqpkd3").unwrap();
+    let snap = engine.telemetry();
+    assert_eq!(snap.counter(Counter::ArtifactOpensEager), 2, "open + load_base");
+    assert_eq!(snap.counter(Counter::ArtifactOpensMapped), 1);
+    assert_eq!(snap.hist(Metric::ArtifactOpen).count, 3, "every open timed");
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

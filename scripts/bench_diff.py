@@ -40,10 +40,26 @@ Gated rows (a >threshold drop in any of them fails the job):
                                               vs eager-copy v2 cold start)
     - cold_start[*].v3_open_s                (absolute mapped-open time)
     - replay[*].events_per_s                 (WAL boot-replay rate)
+    - group_commit.serial.registers_per_s    (durable register throughput,
+                                              1 thread)
+    - group_commit.concurrent.registers_per_s  (8 threads sharing fsyncs)
+  BENCH_telemetry.json
+    - engine.instrumented.requests_per_s     (coalescing burst with full
+                                              telemetry)
+    - engine.disabled.requests_per_s         (same burst, instruments off)
   BENCH_optq.json
     - unblocked.min_s / blocked[*].min_s     (lazy-batch blocking rows)
   BENCH_linalg.json
     - records[*].speedup                     (tiled-vs-naive / root ratios)
+
+Absolute gates (checked on the FRESH record alone, no baseline involved):
+  BENCH_telemetry.json
+    - overhead_pct < 5                       (telemetry's design budget:
+                                              instruments may not cost the
+                                              coalescing hot path 5% of
+                                              throughput, ever — not
+                                              merely "no worse than last
+                                              time")
 
 Comparisons are skipped (with a note; a FAILURE under --require-baseline)
 when:
@@ -82,9 +98,21 @@ GATED_ROWS = [
     ("BENCH_artifact.json", "cold_start.*.speedup_v3_vs_v2", "rate"),
     ("BENCH_artifact.json", "cold_start.*.v3_open_s", "time"),
     ("BENCH_artifact.json", "replay.*.events_per_s", "rate"),
+    ("BENCH_artifact.json", "group_commit.serial.registers_per_s", "rate"),
+    ("BENCH_artifact.json", "group_commit.concurrent.registers_per_s", "rate"),
+    ("BENCH_telemetry.json", "engine.instrumented.requests_per_s", "rate"),
+    ("BENCH_telemetry.json", "engine.disabled.requests_per_s", "rate"),
     ("BENCH_optq.json", "unblocked.min_s", "time"),
     ("BENCH_optq.json", "blocked.*.min_s", "time"),
     ("BENCH_linalg.json", "records.*.speedup", "rate"),
+]
+
+# (file, dotted path, max value) — ABSOLUTE ceilings judged on the fresh
+# record alone. Unlike GATED_ROWS these are design budgets, not
+# regression checks: a baseline that itself violated the budget must not
+# grandfather the violation in.
+ABS_GATES = [
+    ("BENCH_telemetry.json", "overhead_pct", 5.0),
 ]
 
 # Records with differing values for any of these keys are not comparable.
@@ -204,6 +232,40 @@ def compare_file(fname, base_dir, fresh_dir, threshold, require_baseline):
     return regressions, compared
 
 
+def check_abs_gates(fresh_dir, require_baseline):
+    """Absolute ceilings on the fresh records; no baseline involved."""
+    failures = []
+    checked = 0
+    for fname, path, max_val in ABS_GATES:
+        fresh_path = os.path.join(fresh_dir, fname)
+        if not os.path.exists(fresh_path):
+            # compare_file already flags a missing fresh file when a
+            # baseline exists; only flag here when it would otherwise slip
+            # through (no committed baseline yet).
+            if require_baseline:
+                failures.append(f"{fname}: fresh copy missing (abs gate {path} unchecked)")
+            else:
+                print(f"  SKIP abs {fname}:{path}: no fresh file")
+            continue
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        rows = dict(extract(fresh, path))
+        if not rows:
+            failures.append(f"{fname}:{path} missing from fresh output (abs gate unchecked)")
+            continue
+        for crumb, val in rows.items():
+            if not isinstance(val, (int, float)):
+                failures.append(f"{fname}:{crumb} non-numeric (abs gate unchecked)")
+                continue
+            checked += 1
+            worse = val >= max_val
+            marker = "ABS-FAIL" if worse else "ok"
+            print(f"  [{marker:>10}] {fname}:{crumb}  {val:.6g}  (budget < {max_val:g})")
+            if worse:
+                failures.append(f"{fname}:{crumb} = {val:.6g} exceeds the absolute budget {max_val:g}")
+    return failures, checked
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", required=True, help="dir holding committed BENCH_*.json")
@@ -232,6 +294,10 @@ def main(argv=None):
         )
         all_regressions.extend(regs)
         total_compared += compared
+
+    abs_failures, abs_checked = check_abs_gates(args.fresh, args.require_baseline)
+    all_regressions.extend(abs_failures)
+    total_compared += abs_checked
 
     if all_regressions:
         print(f"\nbench_diff: {len(all_regressions)} regression(s):")

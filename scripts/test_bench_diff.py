@@ -4,7 +4,9 @@ the CI `check` job): synthesizes baseline/fresh BENCH_*.json pairs for
 every gated suite and asserts the gate's verdicts — pass on parity and
 improvements, fail on regressions past the threshold, skip vs fail
 semantics for missing/non-comparable baselines with and without
---require-baseline, and schema-drift detection.
+--require-baseline, schema-drift detection, and the ABSOLUTE telemetry
+overhead budget (which must fail on the fresh record alone, baseline or
+no baseline).
 """
 
 import copy
@@ -19,7 +21,7 @@ import bench_diff  # noqa: E402
 
 
 def synthetic_records():
-    """Minimal but schema-faithful records for all six gated suites."""
+    """Minimal but schema-faithful records for all seven gated suites."""
     br = {"iters": 10, "mean_s": 1.1e-4, "min_s": 1e-4, "stddev_s": 1e-6}
     return {
         "BENCH_serve.json": {
@@ -91,6 +93,22 @@ def synthetic_records():
                 for l, n in ((2, 128), (4, 192))
             ],
             "replay": [{"events": 64, "events_per_s": 30000.0}],
+            "group_commit": {
+                "serial": {"registers": 32, "threads": 1, "registers_per_s": 3000.0},
+                "concurrent": {"registers": 32, "threads": 8, "registers_per_s": 8000.0},
+                "speedup_concurrent_vs_serial": 2.7,
+            },
+        },
+        "BENCH_telemetry.json": {
+            "bench": "telemetry",
+            "smoke": True,
+            "shape": [96, 96],
+            "rank": 16,
+            "engine": {
+                "instrumented": {"requests": 48, "requests_per_s": 8800.0},
+                "disabled": {"requests": 48, "requests_per_s": 9000.0},
+            },
+            "overhead_pct": 2.2,
         },
         "BENCH_optq.json": {
             "bench": "optq_lazy_batch_blocking",
@@ -191,6 +209,44 @@ def main():
         recs["BENCH_artifact.json"]["replay"][0]["events_per_s"] *= 0.5
         write_dir(fresh, recs)
         check("wal replay regression", run(base, fresh), 1)
+
+        # 5b'. So is the group-commit register throughput (both modes).
+        recs = synthetic_records()
+        recs["BENCH_artifact.json"]["group_commit"]["concurrent"]["registers_per_s"] *= 0.5
+        write_dir(fresh, recs)
+        check("group-commit rate regression", run(base, fresh), 1)
+
+        # 5d. The telemetry throughput rows are relative-gated like any
+        # other rate...
+        recs = synthetic_records()
+        recs["BENCH_telemetry.json"]["engine"]["instrumented"]["requests_per_s"] *= 0.5
+        write_dir(fresh, recs)
+        check("telemetry throughput regression", run(base, fresh), 1)
+
+        # 5e. ...but overhead_pct is an ABSOLUTE budget: >= 5 fails even
+        # when the baseline carries the identical (bad) number — no
+        # grandfathering a violation in.
+        recs = synthetic_records()
+        recs["BENCH_telemetry.json"]["overhead_pct"] = 6.0
+        bad_base = os.path.join(tmp, "bad_overhead_base")
+        write_dir(bad_base, copy.deepcopy(recs))
+        write_dir(fresh, recs)
+        check("telemetry overhead over budget", run(bad_base, fresh), 1)
+
+        # 5f. A negative overhead (noise favored the instrumented run) is
+        # within budget.
+        recs = synthetic_records()
+        recs["BENCH_telemetry.json"]["overhead_pct"] = -1.3
+        write_dir(fresh, recs)
+        check("telemetry negative overhead passes", run(base, fresh), 0)
+
+        # 5g. Losing the overhead_pct row entirely fails — an unchecked
+        # absolute gate is a failure, not a skip, even without
+        # --require-baseline.
+        recs = synthetic_records()
+        del recs["BENCH_telemetry.json"]["overhead_pct"]
+        write_dir(fresh, recs)
+        check("telemetry overhead row missing", run(base, fresh), 1)
 
         # 5c. A re-sized replay sweep ('event_counts' identity key) is not
         # comparable: skip by default, fail under --require-baseline.
