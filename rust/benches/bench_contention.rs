@@ -1,0 +1,183 @@
+//! Admission-contention benchmarks — the numbers behind EXPERIMENTS.md
+//! §Scale, emitted as BENCH_contention.json:
+//!
+//! **requests/s vs concurrent submitters (1 → 64), sharded vs global
+//! dispatch**, on two workloads:
+//!
+//! 1. **single_layer**: every request is a one-hop forward through the
+//!    same layer. All traffic maps to ONE shard, so this is the worst
+//!    case for sharding (the steal path carries half the work) and the
+//!    best case for the global batcher's coalescing — if sharded wins
+//!    here it wins everywhere.
+//! 2. **pipelined**: four-hop model traversals through a 4-layer route.
+//!    Hops spread across all shards and every hop re-enters a shard
+//!    push-only, so this measures the dispatch path the sharded core was
+//!    built for: admission and re-entry never touching a global lock.
+//!
+//! Submitters run CLOSED-LOOP (submit → wait → submit), so `submitters`
+//! is the concurrency level of the ADMISSION path — exactly where the
+//! global batcher's single mutex flatlines as submitters grow. Modes are
+//! interleaved round-robin (best-of-rounds per mode) so machine drift
+//! lands on both sides of the gated speedup evenly.
+//!
+//! `scripts/bench_diff.py` gates the 64-submitter requests/s rows against
+//! the committed baseline and FLOORS `speedup_sharded_vs_global` at 1.0
+//! on both workloads: sharded dispatch must never lose to the reference
+//! core it replaced.
+//!
+//! Under `CLOQ_BENCH_SMOKE=1` shapes and request counts shrink and the
+//! record carries `"smoke": true` so bench_diff only compares like
+//! against like. Correctness is NOT measured here — bit-parity between
+//! the two cores and the steal path is enforced by
+//! `rust/tests/lifecycle_shards.rs` and the parity suites.
+
+use std::time::Instant;
+
+use cloq::bench::{section, smoke, smoke_scaled, write_bench_json};
+use cloq::linalg::Matrix;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{Dispatch, ModelRequest, PackedLayer, PackedModel, ServeEngine};
+use cloq::util::json::Json;
+use cloq::util::prng::Rng;
+
+const WORKERS: usize = 4;
+const SUBMITTERS: [usize; 4] = [1, 4, 16, 64];
+
+fn mk_layer(name: &str, n: usize, rng: &mut Rng) -> PackedLayer {
+    let w = Matrix::randn(n, n, 0.3, rng);
+    PackedLayer::from_state(name, &QuantState::Int(quantize_rtn(&w, 4, 64))).unwrap()
+}
+
+fn build(layers: &[PackedLayer], dispatch: Dispatch) -> ServeEngine {
+    ServeEngine::builder(PackedModel::new(layers.to_vec()))
+        .dispatch(dispatch)
+        .workers(WORKERS)
+        .max_batch(32)
+        .max_pending(8192)
+        .build()
+        .unwrap()
+}
+
+/// One closed-loop round: `subs` submitter threads, each driving `per`
+/// requests with exactly one in flight at a time. Fresh engine per round
+/// so worker spawn and shard setup are inside the measurement honestly.
+fn round_wall(
+    layers: &[PackedLayer],
+    dispatch: Dispatch,
+    subs: usize,
+    per: usize,
+    n: usize,
+    pipelined: bool,
+) -> f64 {
+    let engine = build(layers, dispatch);
+    let names: Vec<&str> = layers.iter().map(|l| l.name.as_str()).collect();
+    let route = engine.route(&names).unwrap();
+    let lid = engine.layer(names[0]).unwrap();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for sid in 0..subs {
+            let engine = &engine;
+            let route = route.clone();
+            s.spawn(move || {
+                let mut rng = Rng::new(0x5eed + sid as u64);
+                for _ in 0..per {
+                    if pipelined {
+                        let req = ModelRequest::new(route.clone(), rng.gauss_vec(n));
+                        engine.submit_model(req).wait().unwrap();
+                    } else {
+                        engine.submit(lid, None, rng.gauss_vec(n)).wait().unwrap();
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    engine.shutdown();
+    wall
+}
+
+fn main() {
+    let mut rng = Rng::new(31);
+    let n = smoke_scaled(128, 48);
+    let per = smoke_scaled(64, 6);
+    let rounds = 3;
+    let layers: Vec<PackedLayer> =
+        (0..4).map(|i| mk_layer(&format!("l{i}"), n, &mut rng)).collect();
+
+    let mut workloads: Vec<(&str, Json)> = Vec::new();
+    for pipelined in [false, true] {
+        let wname = if pipelined { "pipelined" } else { "single_layer" };
+        let active: &[PackedLayer] = if pipelined { &layers } else { &layers[..1] };
+        section(&format!(
+            "{wname}: requests/s vs submitters, sharded vs global ({WORKERS} workers, \
+             {per} reqs/submitter, {n}x{n})"
+        ));
+        let mut sweep = Vec::new();
+        let mut at64: Option<(f64, f64, f64)> = None;
+        for &subs in &SUBMITTERS {
+            let total = subs * per;
+            // Interleave the two cores round-robin so machine drift lands
+            // on both sides of the floored speedup evenly.
+            let mut wall = [f64::INFINITY; 2]; // [sharded, global]
+            for _ in 0..rounds {
+                for (k, d) in [Dispatch::Sharded, Dispatch::Global].into_iter().enumerate() {
+                    wall[k] = wall[k].min(round_wall(active, d, subs, per, n, pipelined));
+                }
+            }
+            let rps = [total as f64 / wall[0], total as f64 / wall[1]];
+            let speedup = rps[0] / rps[1].max(1e-30);
+            println!(
+                "  {subs:>2} submitters: sharded {:>9.0} req/s, global {:>9.0} req/s \
+                 → {speedup:.2}x",
+                rps[0], rps[1]
+            );
+            let mut point = Json::obj();
+            point.set("submitters", Json::from(subs));
+            point.set("requests", Json::from(total));
+            for (k, mode) in ["sharded", "global"].into_iter().enumerate() {
+                let mut rec = Json::obj();
+                rec.set("best_wall_s", Json::from(wall[k]));
+                rec.set("requests_per_s", Json::from(rps[k]));
+                point.set(mode, rec);
+            }
+            point.set("speedup_sharded_vs_global", Json::from(speedup));
+            sweep.push(point);
+            if subs == 64 {
+                at64 = Some((rps[0], rps[1], speedup));
+            }
+        }
+        let (s_rps, g_rps, speedup) = at64.expect("the sweep always includes 64 submitters");
+        // The 64-submitter point again under a stable dotted path — the
+        // scaling headline bench_diff gates without '*' index pairing.
+        let mut headline = Json::obj();
+        for (mode, rps) in [("sharded", s_rps), ("global", g_rps)] {
+            let mut rec = Json::obj();
+            rec.set("requests_per_s", Json::from(rps));
+            headline.set(mode, rec);
+        }
+        headline.set("speedup_sharded_vs_global", Json::from(speedup));
+        let mut wjson = Json::obj();
+        wjson.set("sweep", Json::Arr(sweep));
+        wjson.set("submitters_64", headline);
+        workloads.push((wname, wjson));
+    }
+
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("bench", Json::from("contention")),
+        ("smoke", Json::from(smoke())),
+        ("shape", Json::Arr(vec![Json::from(n), Json::from(n)])),
+        ("layers", Json::from(4usize)),
+        ("workers", Json::from(WORKERS)),
+        ("submitters", Json::Arr(SUBMITTERS.iter().map(|&s| Json::from(s)).collect())),
+        ("per_submitter_requests", Json::from(per)),
+    ];
+    pairs.extend(workloads);
+    pairs.push((
+        "parity",
+        Json::from(
+            "sharded-vs-global and steal-path bit-parity are enforced by \
+             rust/tests/lifecycle_shards.rs; this bench only measures contention",
+        ),
+    ));
+    write_bench_json("contention", Json::from_pairs(pairs));
+}

@@ -46,18 +46,27 @@ use crate::serve::error::ServeError;
 use crate::serve::packed::{LayerId, PackedModel};
 
 /// An interned adapter handle: the stable slot index its string id was
-/// assigned at first registration. `Copy`, hash-free to compare, and
-/// stable across hot-swaps and unregister/re-register of the same id —
-/// resolve once ([`AdapterRegistry::resolve`] / `ServeEngine::adapter`),
-/// then submit by id.
+/// assigned at first registration, plus the slot's **generation** at
+/// minting time. `Copy`, hash-free to compare, and stable across
+/// hot-swaps — resolve once ([`AdapterRegistry::resolve`] /
+/// `ServeEngine::adapter`), then submit by id.
 ///
 /// Ids carry their minting registry's **identity token**: checkout (and
 /// engine admission) compares it first, so an id from a DIFFERENT
 /// registry fails typed instead of silently addressing whichever tenant
 /// sits in that slot of this one.
+///
+/// The **generation word** scopes the id to one registration incarnation:
+/// unregistering (or evicting) an id and registering the same string
+/// again bumps the slot's generation, so a handle minted before the
+/// removal fails checkout typed ([`ServeError::UnknownAdapter`] at the
+/// engine) instead of silently addressing the new tenant's weights.
+/// Hot-swaps do NOT bump the generation — a swap is a new version of the
+/// SAME incarnation, and held ids keep resolving to it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct AdapterId {
     slot: u32,
+    gen: u32,
     token: u64,
 }
 
@@ -65,6 +74,12 @@ impl AdapterId {
     /// The id's slot index in its registry.
     pub fn index(self) -> usize {
         self.slot as usize
+    }
+
+    /// The slot generation this id was minted under (diagnostics; two ids
+    /// for one string differing here span an unregister/re-register).
+    pub fn generation(self) -> u32 {
+        self.gen
     }
 
     /// The minting registry's identity token.
@@ -269,21 +284,27 @@ impl Entry {
 }
 
 /// One interned id: the name is permanent (ids stay resolvable), the entry
-/// comes and goes with register/evict/unregister.
+/// comes and goes with register/evict/unregister, and the generation
+/// counts removals — ids minted under an older generation fail checkout.
 struct Slot {
     name: String,
+    /// Bumped every time the entry is REMOVED (unregister or eviction),
+    /// never on hot-swap: the next register starts a new incarnation and
+    /// ids from the dead one stop resolving ([`AdapterId`] docs).
+    gen: u32,
     entry: Option<Entry>,
 }
 
 struct RegState {
     /// id string → slot index; grows monotonically (interning). A slot is
-    /// never recycled for a DIFFERENT id — that is what makes a stale
-    /// [`AdapterId`] fail checkout instead of silently addressing another
-    /// tenant — so memory here is bounded by the number of DISTINCT ids
-    /// ever registered, not the number currently live. Workloads that
-    /// register unbounded unique ids (one per ephemeral job) accrete dead
-    /// slots; recycling safely needs a generation counter in `AdapterId`
-    /// (noted in ROADMAP.md).
+    /// never recycled for a DIFFERENT id — so memory here is bounded by
+    /// the number of DISTINCT ids ever registered, not the number
+    /// currently live — and the per-slot generation word scopes every
+    /// minted [`AdapterId`] to one registration incarnation, so a stale
+    /// handle can address neither another tenant NOR a later incarnation
+    /// of its own id. Workloads that register unbounded unique ids (one
+    /// per ephemeral job) still accrete dead slots; recycling slots for
+    /// different ids remains future work.
     intern: HashMap<String, u32>,
     slots: Vec<Slot>,
     clock: u64,
@@ -390,7 +411,7 @@ impl AdapterRegistry {
             None => {
                 let i = st.slots.len();
                 st.intern.insert(name.clone(), i as u32);
-                st.slots.push(Slot { name: name.clone(), entry: None });
+                st.slots.push(Slot { name: name.clone(), gen: 0, entry: None });
                 i
             }
         };
@@ -432,6 +453,9 @@ impl AdapterRegistry {
             match victim {
                 Some(v) => {
                     let e = st.slots[v].entry.take().expect("victim had an entry");
+                    // The incarnation died: ids minted under it must not
+                    // resolve to whatever registers in the slot next.
+                    st.slots[v].gen = st.slots[v].gen.wrapping_add(1);
                     st.bytes_total -= e.bytes;
                     st.evictions += 1;
                     evicted.push(st.slots[v].name.clone());
@@ -440,7 +464,7 @@ impl AdapterRegistry {
             }
         }
         Ok(RegisterOutcome {
-            id: AdapterId { slot: slot_idx as u32, token: self.token },
+            id: AdapterId { slot: slot_idx as u32, gen: st.slots[slot_idx].gen, token: self.token },
             replaced,
             evicted,
         })
@@ -448,18 +472,22 @@ impl AdapterRegistry {
 
     /// Intern lookup: the [`AdapterId`] for a CURRENTLY REGISTERED id
     /// string (`None` when it never registered, was evicted, or was
-    /// unregistered). The returned id stays stable across hot-swaps and
-    /// even across unregister/re-register of the same string.
+    /// unregistered). The returned id stays stable across hot-swaps; an
+    /// unregister/re-register of the same string mints a NEW generation,
+    /// so re-resolve after re-registering ([`AdapterId`] docs).
     pub fn resolve(&self, name: &str) -> Option<AdapterId> {
         let st = self.shared.state.lock().unwrap();
         let i = st.intern.get(name).copied()?;
-        st.slots[i as usize].entry.as_ref()?;
-        Some(AdapterId { slot: i, token: self.token })
+        let slot = &st.slots[i as usize];
+        slot.entry.as_ref()?;
+        Some(AdapterId { slot: i, gen: slot.gen, token: self.token })
     }
 
     /// The id string behind an interned handle (for error messages and
-    /// diagnostics; works even while the slot is unregistered). `None` for
-    /// another registry's ids — their slot would name the wrong tenant here.
+    /// diagnostics; works even while the slot is unregistered, and for
+    /// ids from a DEAD generation — error naming must survive the very
+    /// staleness that makes checkout refuse). `None` only for another
+    /// registry's ids — their slot would name the wrong tenant here.
     pub fn name_of(&self, id: AdapterId) -> Option<String> {
         if id.token() != self.token {
             return None;
@@ -469,8 +497,10 @@ impl AdapterRegistry {
     }
 
     /// Pin and return the current version of `id` (bumping its recency), or
-    /// `None` if its slot is not currently registered. O(1): one vector
-    /// index under the lock, no hashing.
+    /// `None` if its slot is not currently registered OR the id was minted
+    /// under a dead generation (the slot was unregistered/evicted and
+    /// re-registered since — the tenant the id named is gone). O(1): one
+    /// vector index plus one integer compare under the lock, no hashing.
     pub fn checkout(&self, id: AdapterId) -> Option<AdapterHandle> {
         if id.token() != self.token {
             return None; // another registry's handle: slot index means nothing here
@@ -478,7 +508,11 @@ impl AdapterRegistry {
         let mut st = self.shared.state.lock().unwrap();
         st.clock += 1;
         let stamp = st.clock;
-        let entry = st.slots.get_mut(id.index())?.entry.as_mut()?;
+        let slot = st.slots.get_mut(id.index())?;
+        if slot.gen != id.gen {
+            return None; // a dead incarnation's handle must not reach the new tenant
+        }
+        let entry = slot.entry.as_mut()?;
         entry.superseded.retain(|a| a.pins() > 0); // free drained old weights
         entry.last_used = stamp;
         entry.active.in_use.fetch_add(1, Ordering::AcqRel);
@@ -497,13 +531,24 @@ impl AdapterRegistry {
     /// queued or in-flight, references any of the id's weights. New
     /// checkouts of the id fail the moment this is called (the entry is
     /// gone before the wait), so admission cannot re-pin a draining
-    /// adapter. The interned slot itself survives: held [`AdapterId`]s
-    /// simply stop resolving until the id registers again.
+    /// adapter. The interned slot itself survives, but its GENERATION is
+    /// bumped: held [`AdapterId`]s stop resolving permanently — a later
+    /// register of the same string starts a new incarnation that mints
+    /// fresh ids, and the dead incarnation's handles fail checkout typed
+    /// instead of silently addressing it ([`AdapterId`] docs).
     pub fn unregister(&self, name: &str) -> Result<(), ServeError> {
         let mut st = self.shared.state.lock().unwrap();
         let slot = st.intern.get(name).copied();
         let entry = match slot {
-            Some(i) => st.slots[i as usize].entry.take(),
+            Some(i) => {
+                let taken = st.slots[i as usize].entry.take();
+                if taken.is_some() {
+                    // The incarnation is dead the moment the entry leaves;
+                    // ids minted under it must never resolve again.
+                    st.slots[i as usize].gen = st.slots[i as usize].gen.wrapping_add(1);
+                }
+                taken
+            }
             None => None,
         };
         let entry =
@@ -620,10 +665,47 @@ mod tests {
         assert!(reg.checkout(out.id).is_none(), "stale AdapterIds checkout to None");
         let err = reg.unregister("a").unwrap_err();
         assert!(matches!(&err, ServeError::UnknownAdapter { adapter } if adapter == "a"), "{err}");
-        // Re-registering the same name revives the SAME interned slot.
+        // Re-registering the same name revives the SAME interned slot but
+        // under a NEW generation: the dead incarnation's id keeps failing
+        // checkout instead of silently addressing the new tenant.
         let out2 = reg.register(set("a", 5)).unwrap();
-        assert_eq!(out2.id, out.id, "intern slots are stable across unregister");
-        assert!(reg.checkout(out.id).is_some());
+        assert_eq!(out2.id.index(), out.id.index(), "intern slots are stable across unregister");
+        assert_ne!(out2.id, out.id, "re-register mints a new generation");
+        assert_eq!(out2.id.generation(), out.id.generation() + 1);
+        assert!(reg.checkout(out.id).is_none(), "dead-generation ids stay dead");
+        assert!(reg.checkout(out2.id).is_some(), "the new incarnation's id works");
+        assert_eq!(reg.resolve("a"), Some(out2.id), "resolve returns the live generation");
+        assert_eq!(
+            reg.name_of(out.id).as_deref(),
+            Some("a"),
+            "error naming survives generation death"
+        );
+    }
+
+    #[test]
+    fn hot_swap_does_not_bump_the_generation() {
+        let reg = AdapterRegistry::new(model(), usize::MAX);
+        let first = reg.register(set("a", 30)).unwrap();
+        let swapped = reg.register(set("a", 31)).unwrap();
+        assert!(swapped.replaced);
+        assert_eq!(swapped.id, first.id, "a swap is the SAME incarnation");
+        assert!(reg.checkout(first.id).is_some(), "pre-swap ids keep resolving");
+    }
+
+    #[test]
+    fn eviction_kills_the_generation() {
+        let one = set("x", 32).bytes();
+        let reg = AdapterRegistry::new(model(), 2 * one);
+        let a = reg.register(set("a", 32)).unwrap();
+        reg.register(set("b", 33)).unwrap();
+        drop(reg.checkout_named("b").unwrap()); // a is now LRU
+        let out = reg.register(set("c", 34)).unwrap();
+        assert_eq!(out.evicted, vec!["a".to_string()]);
+        assert!(reg.checkout(a.id).is_none(), "evicted ids stop resolving");
+        let revived = reg.register(set("a", 35)).unwrap();
+        assert_ne!(revived.id, a.id, "revival after eviction is a new incarnation");
+        assert!(reg.checkout(a.id).is_none(), "the pre-eviction id stays dead");
+        assert!(reg.checkout(revived.id).is_some());
     }
 
     #[test]

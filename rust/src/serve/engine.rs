@@ -1,9 +1,39 @@
 //! The serving front-end: admits concurrent forward requests (each naming
 //! an interned layer and, optionally, an interned adapter), coalesces them
-//! into per-layer micro-batches, and executes the batches on a persistent
-//! [`WorkerPool`].
+//! into per-layer micro-batches, and executes the batches on worker
+//! threads. Two dispatch cores implement that contract — a builder knob,
+//! [`Dispatch`]:
 //!
-//! Shape of the pipeline:
+//! **[`Dispatch::Sharded`]** (default) — per-layer sharded queues with
+//! work-stealing workers; no dedicated batcher thread, no global queue
+//! lock:
+//!
+//! ```text
+//!   submit() ────────→ shard[layer % N] ──→ worker i (owns shard i):
+//!   submit_model() ↗    (N× Mutex+Condvar     drain own shard, else steal
+//!        ▲               + atomic depth)      oldest batchable group
+//!        └── hop re-entry: push next hop's shard ←──┘  (push-only)
+//! ```
+//!
+//! Every layer maps to exactly ONE shard (`layer.index() % workers`), so
+//! all queued traffic for a layer is adjacent in one deque and same-layer
+//! micro-batches coalesce exactly as they did in the single FIFO — batch
+//! formation is the same head-layer scan (`take_batch`), run on the
+//! shard's deque. Worker `i` drains its own shard first; when the shard is
+//! empty it STEALS the oldest batchable group from the most-loaded other
+//! shard, picked by lock-free atomic depth mirrors so victim selection
+//! touches no locks (each steal counts in `dispatch_steals_total`). An
+//! idle worker parks on its own shard's condvar with a short timeout: the
+//! timeout is the steal-liveness backstop — a parked worker is only ever
+//! notified by pushes to its OWN shard, so the periodic wake is what lets
+//! it notice another shard's backlog (e.g. a single-hot-layer workload
+//! where every request hashes to shard 0). Workers execute the batch
+//! INLINE — dispatch and kernel execution are the same thread, so at most
+//! `workers` micro-batches are in flight and a saturating stream piles up
+//! in the shards and coalesces, same as the global design's holdback.
+//!
+//! **[`Dispatch::Global`]** — the reference single-FIFO design, retained
+//! as the parity baseline and the `bench_contention` comparison row:
 //!
 //! ```text
 //!   submit() ───────→ pending FIFO ──→ batcher thread ──→ WorkerPool job
@@ -11,6 +41,13 @@
 //!        ▲                               same-layer hops)     kernel)
 //!        └──────────── hop re-entry ←──────────────────────────┘
 //! ```
+//!
+//! Both cores preserve every serving contract: responses are bit-identical
+//! to serial execution (batch composition — coalesced, stolen, or mixed —
+//! can never change a response's numbers), the adapter pin taken at
+//! admission rides the whole traversal, every failure is the same typed
+//! [`ServeError`], and `RequestWall.count == requests − rejected` holds in
+//! telemetry.
 //!
 //! **The typed façade**: callers resolve names ONCE — `engine.layer("wq")`
 //! → [`LayerId`], `engine.adapter("tenant-a")` → [`AdapterId`],
@@ -25,11 +62,11 @@
 //! [`ServeError`]; [`Ticket::wait`] returns `Result<Response, ServeError>`
 //! so callers dispatch with `matches!`, not string search.
 //!
-//! The batcher scans the FIFO head's layer and pulls every queued request
-//! for that layer (up to `max_batch`), preserving the relative order of
-//! the rest — arrival order stays fair across layers while the kernel's
-//! row-reuse amortization (`PackedLayer::forward_batch_grouped`) is
-//! harvested whenever requests pile up. **Adapter multiplexing**: each
+//! Batch formation scans its queue head's layer and pulls every queued
+//! request for that layer (up to `max_batch`), preserving the relative
+//! order of the rest — arrival order stays fair across layers while the
+//! kernel's row-reuse amortization (`PackedLayer::forward_batch_grouped`)
+//! is harvested whenever requests pile up. **Adapter multiplexing**: each
 //! request resolves its adapter to a pinned [`AdapterHandle`] at admission
 //! (one version for its whole lifetime — a hot-swap can never mix old and
 //! new weights in one response); the batch executor orders the micro-batch
@@ -43,33 +80,45 @@
 //! **Full-model pipelining** (`serve::forward`): a [`ModelRequest`] /
 //! [`SessionRequest`] is decomposed into per-layer *hops*. A finished hop
 //! with route left does not reply — `run_batch` pushes it back into the
-//! pending FIFO at its next layer (the re-entry arrow above), so hops from
-//! many concurrent model requests at the same depth coalesce into one
-//! grouped kernel call, exactly like independent single-layer requests
-//! would. The adapter pin taken at admission rides along for the whole
-//! traversal. Re-entry happens on a kernel worker and only ever *pushes*
-//! to the FIFO and notifies — the batcher is never waited on from a
-//! worker, so hop re-entry cannot deadlock the dispatch loop.
+//! queue at its next layer (the re-entry arrow above; under sharded
+//! dispatch, directly into the next layer's shard), so hops from many
+//! concurrent model requests at the same depth coalesce into one grouped
+//! kernel call, exactly like independent single-layer requests would. The
+//! adapter pin taken at admission rides along for the whole traversal.
+//! Re-entry only ever *pushes* and notifies — no dispatch thread is ever
+//! waited on from inside a batch, so hop re-entry cannot deadlock either
+//! dispatch core.
 //!
-//! Coalescing policy: no timers. The batcher dispatches immediately while
-//! kernel workers are free (latency-first under light load), but keeps at
-//! most `workers` micro-batches in flight — once the workers are all busy
-//! it stops draining, so a saturating stream of single `submit()` calls
-//! piles up in the FIFO and naturally coalesces into full batches
-//! (throughput-first under saturation), and the pool's job queue stays
-//! bounded by the worker count.
+//! Coalescing policy: no timers. Both cores dispatch immediately while
+//! workers are free (latency-first under light load) and keep at most
+//! `workers` micro-batches in flight — the global batcher by an explicit
+//! `in_flight` holdback, the sharded core because each worker runs its
+//! batch inline — so a saturating stream of single `submit()` calls piles
+//! up queued and naturally coalesces into full batches (throughput-first
+//! under saturation).
 //!
-//! **Backpressure counts hops, not FIFO entries**: every admitted request
+//! **Backpressure counts hops, not queue entries**: every admitted request
 //! — single-layer or whole-model — holds exactly one *live hop slot* from
 //! admission until its reply, whether that hop is queued or riding a
 //! kernel. Admission rejects at `max_pending` live slots
 //! ([`ServeError::Overloaded`]), so a flood of model requests cannot hide
-//! from the limit by being mid-kernel when the FIFO is sampled.
-//! **Shutdown drains by the same accounting**: [`ServeEngine::close`]
-//! stops admissions (subsequent submits fail with
-//! [`ServeError::ShuttingDown`]) while the batcher keeps draining;
+//! from the limit by being mid-kernel when the queue is sampled. Under
+//! `Global` the count lives inside the queue mutex; under `Sharded` it is
+//! a lock-free atomic counter with increment-then-check admission (the
+//! slot is reserved FIRST, then the closed/overload checks run, undoing
+//! the reservation on refusal — sequentially-consistent ordering makes a
+//! stranded admission impossible; concurrent admitters can transiently
+//! overshoot the reservation count by their own number, bounding, not
+//! breaking, the limit). **Shutdown drains by the same accounting**:
+//! [`ServeEngine::close`] stops admissions (subsequent submits fail with
+//! [`ServeError::ShuttingDown`]) while dispatch keeps draining;
 //! [`ServeEngine::shutdown`] closes, then joins once the last live slot is
-//! released, so every admitted traversal finishes every remaining hop.
+//! released, so every admitted traversal finishes every remaining hop. The
+//! sharded drain barrier is per-shard closed+empty: each worker exits only
+//! when admissions are closed AND the last live slot is gone (an empty
+//! shard alone is not drained — an in-flight batch may still re-enter
+//! hops), and the thread that releases the last slot after close wakes
+//! every parked worker through the shards' lost-wakeup-proof broadcast.
 //!
 //! **Durability** (`serve::wal`): an engine built with
 //! [`ServeEngineBuilder::durable`] logs every adapter register / hot-swap
@@ -112,6 +161,7 @@
 //! the full instrumentation overhead below 5% in CI.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Instant;
 
@@ -130,7 +180,28 @@ use crate::serve::telemetry::{
     TraceStage,
 };
 use crate::serve::wal::{FsWalFile, Wal, WalEvent, WalFile, WalOptions};
-use crate::util::threadpool::WorkerPool;
+use crate::util::threadpool::{ShardedQueues, WorkerPool};
+
+/// Which dispatch core moves admitted requests to kernel execution — a
+/// [`ServeEngineBuilder::dispatch`] knob. Both cores honor every serving
+/// contract (bit-parity vs serial, adapter pinning, typed errors, the
+/// telemetry identities); the choice is purely about contention behavior.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Per-layer sharded queues with work-stealing workers (the default):
+    /// admission pushes straight into `shard[layer % workers]`, each
+    /// worker drains its own shard and steals the oldest batchable group
+    /// from the most-loaded other shard when idle. No global queue lock —
+    /// admission throughput scales with submitters (`bench_contention`).
+    #[default]
+    Sharded,
+    /// The reference single-FIFO design: one mutex-guarded queue, a
+    /// dedicated batcher thread, and a [`WorkerPool`]. Retained as the
+    /// parity baseline and the `bench_contention` comparison row; pick it
+    /// when strict global arrival-order batch formation matters more than
+    /// admission scaling.
+    Global,
+}
 
 /// Staged configuration for a [`ServeEngine`], validated at
 /// [`ServeEngineBuilder::build`]. Obtain one from
@@ -155,6 +226,7 @@ pub struct ServeEngineBuilder {
     wal: Option<(Box<dyn WalFile>, String)>,
     wal_opts: WalOptions,
     telemetry: TelemetryOptions,
+    dispatch: Dispatch,
 }
 
 impl std::fmt::Debug for ServeEngineBuilder {
@@ -165,14 +237,25 @@ impl std::fmt::Debug for ServeEngineBuilder {
             .field("max_pending", &self.max_pending)
             .field("adapter_budget_bytes", &self.adapter_budget_bytes)
             .field("durable", &self.wal.as_ref().map(|(_, label)| label.clone()))
+            .field("dispatch", &self.dispatch)
             .finish_non_exhaustive()
     }
 }
 
 impl ServeEngineBuilder {
-    /// Kernel workers executing micro-batches (default 2).
+    /// Kernel workers executing micro-batches (default 2). Under
+    /// [`Dispatch::Sharded`] this is also the shard count — each worker
+    /// owns one queue shard.
     pub fn workers(mut self, n: usize) -> Self {
         self.workers = n;
+        self
+    }
+
+    /// Select the dispatch core (default [`Dispatch::Sharded`]); see the
+    /// module docs for the two pipelines. Validated with the rest of the
+    /// configuration at [`ServeEngineBuilder::build`].
+    pub fn dispatch(mut self, d: Dispatch) -> Self {
+        self.dispatch = d;
         self
     }
 
@@ -243,10 +326,11 @@ impl ServeEngineBuilder {
         self
     }
 
-    /// Validate the configuration and start the engine (batcher thread +
-    /// worker pool). Zero-valued knobs and duplicate layer names are
-    /// [`ServeError::InvalidConfig`] — reported here, once, instead of
-    /// panicking mid-request.
+    /// Validate the configuration and start the engine's dispatch core —
+    /// shard-owning workers under [`Dispatch::Sharded`], the batcher
+    /// thread + worker pool under [`Dispatch::Global`]. Zero-valued knobs
+    /// and duplicate layer names are [`ServeError::InvalidConfig`] —
+    /// reported here, once, instead of panicking mid-request.
     pub fn build(self) -> Result<ServeEngine, ServeError> {
         fn at_least_one(what: &str, v: usize) -> Result<(), ServeError> {
             if v == 0 {
@@ -317,6 +401,22 @@ impl ServeEngineBuilder {
                 Some(Mutex::new(wal))
             }
         };
+        let dispatcher = match self.dispatch {
+            Dispatch::Global => Dispatcher::Global {
+                state: Mutex::new(QueueState {
+                    pending: VecDeque::new(),
+                    open: true,
+                    in_flight: 0,
+                    live: 0,
+                }),
+                cv: Condvar::new(),
+                pool: Arc::new(WorkerPool::new(self.workers)),
+            },
+            Dispatch::Sharded => Dispatcher::Sharded {
+                shards: ShardedQueues::new(self.workers),
+                live: AtomicUsize::new(0),
+            },
+        };
         let shared = Arc::new(Shared {
             model: Arc::clone(&model),
             index,
@@ -327,21 +427,22 @@ impl ServeEngineBuilder {
             max_batch: self.max_batch,
             max_pending: self.max_pending,
             workers: self.workers,
-            state: Mutex::new(QueueState {
-                pending: VecDeque::new(),
-                open: true,
-                in_flight: 0,
-                live: 0,
-            }),
-            cv: Condvar::new(),
+            dispatcher,
             telemetry,
-            pool: Arc::new(WorkerPool::new(self.workers)),
         });
-        let batcher = {
-            let shared = Arc::clone(&shared);
-            std::thread::spawn(move || batcher_loop(shared))
+        let threads = match self.dispatch {
+            Dispatch::Global => {
+                let shared = Arc::clone(&shared);
+                vec![std::thread::spawn(move || batcher_loop(shared))]
+            }
+            Dispatch::Sharded => (0..self.workers)
+                .map(|me| {
+                    let shared = Arc::clone(&shared);
+                    std::thread::spawn(move || shard_worker_loop(shared, me))
+                })
+                .collect(),
         };
-        Ok(ServeEngine { shared, batcher: Some(batcher) })
+        Ok(ServeEngine { shared, threads })
     }
 }
 
@@ -461,6 +562,26 @@ impl Ticket {
     pub fn wait(self) -> Result<Response, ServeError> {
         self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
     }
+
+    /// [`wait`](Ticket::wait) with a deadline: [`ServeError::Timeout`]
+    /// once `timeout` elapses with no reply.
+    ///
+    /// The deadline is a CALLER-side contract only — the request is not
+    /// cancelled. It still holds its live backpressure slot, still rides
+    /// its micro-batch, and still counts in `requests` / telemetry when
+    /// it completes; its reply is dropped because this ticket (the only
+    /// receiver) is consumed. Use it to bound caller latency, not engine
+    /// load.
+    pub fn wait_timeout(self, timeout: std::time::Duration) -> Result<Response, ServeError> {
+        let t0 = Instant::now();
+        match self.rx.recv_timeout(timeout) {
+            Ok(reply) => reply,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(ServeError::Timeout { elapsed: t0.elapsed() })
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::ShuttingDown),
+        }
+    }
 }
 
 /// How a hop replies when its work is done.
@@ -505,6 +626,22 @@ struct QueueState {
     live: usize,
 }
 
+/// Runtime state of the chosen dispatch core ([`Dispatch`], fixed at
+/// build). Every queue-touching operation (`try_enqueue`, `submit_all`,
+/// `complete_batch`, `close`) branches on this once; the batch execution
+/// path (`run_batch`) is shared by both arms.
+enum Dispatcher {
+    /// Single FIFO + batcher thread + [`WorkerPool`] — the reference
+    /// implementation. `state.live`/`state.open` under the mutex are the
+    /// backpressure and drain accounting.
+    Global { state: Mutex<QueueState>, cv: Condvar, pool: Arc<WorkerPool> },
+    /// Work-stealing shard-per-worker dispatch. Admission state is
+    /// lock-free: `shards.is_closed()` is the open/closed flag, `live` the
+    /// hop-slot counter (both sequentially consistent — the drain proof in
+    /// the module docs depends on the total order).
+    Sharded { shards: ShardedQueues<Pending>, live: AtomicUsize },
+}
+
 struct Shared {
     model: Arc<PackedModel>,
     /// Name → layer index, built once so `ServeEngine::layer` /
@@ -525,12 +662,32 @@ struct Shared {
     max_batch: usize,
     max_pending: usize,
     workers: usize,
-    state: Mutex<QueueState>,
-    cv: Condvar,
-    /// Sharded metrics + tracing core. NEVER behind the state mutex: the
+    dispatcher: Dispatcher,
+    /// Sharded metrics + tracing core. NEVER behind a queue mutex: the
     /// hot path records through relaxed atomics only (`serve::telemetry`).
     telemetry: Arc<Telemetry>,
-    pool: Arc<WorkerPool>,
+}
+
+impl Shared {
+    /// Layer → owning shard. Total and static, so every hop of a layer —
+    /// fresh admission or traversal re-entry — lands in the same deque
+    /// and stays coalescible.
+    fn shard_of(&self, layer: LayerId) -> usize {
+        layer.index() % self.workers
+    }
+
+    /// Sharded-dispatch push: route to the layer's shard, record the
+    /// resulting depth, and nudge a neighboring worker when the backlog
+    /// outgrows one batch (an unlocked hint — the park timeout is the
+    /// guarantee, this just shortens the idle window).
+    fn push_sharded(&self, shards: &ShardedQueues<Pending>, p: Pending) {
+        let shard = self.shard_of(p.layer);
+        let depth = shards.push(shard, p);
+        self.telemetry.record_shard_depth(depth);
+        if depth > self.max_batch && self.workers > 1 {
+            shards.assist((shard + 1) % self.workers);
+        }
+    }
 }
 
 /// The serving engine: adapter-multiplexed batching front-end over ONE
@@ -539,7 +696,10 @@ struct Shared {
 /// [`ServeEngine::builder`].
 pub struct ServeEngine {
     shared: Arc<Shared>,
-    batcher: Option<std::thread::JoinHandle<()>>,
+    /// The dispatch core's threads: the single batcher under
+    /// [`Dispatch::Global`], the shard-owning workers under
+    /// [`Dispatch::Sharded`]. Joined (after `close`) by shutdown/drop.
+    threads: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl ServeEngine {
@@ -555,6 +715,7 @@ impl ServeEngine {
             wal: None,
             wal_opts: WalOptions::default(),
             telemetry: TelemetryOptions::default(),
+            dispatch: Dispatch::default(),
         }
     }
 
@@ -767,9 +928,10 @@ impl ServeEngine {
         ModelTicket::new(rx)
     }
 
-    /// Admit a burst of requests under ONE queue lock: the batcher cannot
-    /// observe a partially-enqueued burst, so same-layer requests in the
-    /// burst are guaranteed to be coalescible (up to `max_batch`).
+    /// Admit a burst of requests atomically per queue: dispatch cannot
+    /// observe a partially-enqueued burst (one lock hold for the global
+    /// FIFO; one per shard under sharded dispatch), so same-layer requests
+    /// in the burst are guaranteed to be coalescible (up to `max_batch`).
     pub fn submit_all(&self, reqs: Vec<Request>) -> Vec<Ticket> {
         let mut tickets = Vec::with_capacity(reqs.len());
         let mut admitted = Vec::with_capacity(reqs.len());
@@ -786,28 +948,67 @@ impl ServeEngine {
             }
             tickets.push(Ticket { rx });
         }
-        let (overflow, closed) = {
-            let mut st = self.shared.state.lock().unwrap();
-            let room = if st.open {
-                self.shared.max_pending.saturating_sub(st.live)
-            } else {
-                0
-            };
-            let overflow =
-                if admitted.len() > room { admitted.split_off(room) } else { Vec::new() };
-            st.live += admitted.len();
-            st.pending.extend(admitted);
-            (overflow, !st.open)
-        };
-        for p in overflow {
-            let e = if closed {
-                ServeError::ShuttingDown
-            } else {
-                ServeError::Overloaded { max_pending: self.shared.max_pending }
-            };
-            self.reject_pending(p, e);
+        match &self.shared.dispatcher {
+            Dispatcher::Global { state, cv, .. } => {
+                let (overflow, closed) = {
+                    let mut st = state.lock().unwrap();
+                    let room = if st.open {
+                        self.shared.max_pending.saturating_sub(st.live)
+                    } else {
+                        0
+                    };
+                    let overflow =
+                        if admitted.len() > room { admitted.split_off(room) } else { Vec::new() };
+                    st.live += admitted.len();
+                    st.pending.extend(admitted);
+                    (overflow, !st.open)
+                };
+                for p in overflow {
+                    let e = if closed {
+                        ServeError::ShuttingDown
+                    } else {
+                        ServeError::Overloaded { max_pending: self.shared.max_pending }
+                    };
+                    self.reject_pending(p, e);
+                }
+                cv.notify_one();
+            }
+            Dispatcher::Sharded { shards, live } => {
+                // Per-request slot reservation in burst order (same
+                // increment-then-check protocol as `try_enqueue`), but ONE
+                // push per shard: each shard's share of the burst lands
+                // under a single lock hold, so same-layer requests in the
+                // burst stay adjacent and coalescible, matching the global
+                // path's one-lock guarantee.
+                let mut per_shard: Vec<Vec<Pending>> =
+                    (0..shards.shards()).map(|_| Vec::new()).collect();
+                for p in admitted {
+                    let prev = live.fetch_add(1, Ordering::SeqCst);
+                    if shards.is_closed() {
+                        live.fetch_sub(1, Ordering::SeqCst);
+                        self.reject_pending(p, ServeError::ShuttingDown);
+                    } else if prev >= self.shared.max_pending {
+                        live.fetch_sub(1, Ordering::SeqCst);
+                        self.reject_pending(
+                            p,
+                            ServeError::Overloaded { max_pending: self.shared.max_pending },
+                        );
+                    } else {
+                        per_shard[self.shared.shard_of(p.layer)].push(p);
+                    }
+                }
+                for (i, group) in per_shard.into_iter().enumerate() {
+                    if group.is_empty() {
+                        continue;
+                    }
+                    let depth = shards.push_all(i, group);
+                    self.shared.telemetry.record_shard_depth(depth);
+                    if depth > self.shared.max_batch && self.shared.workers > 1 {
+                        shards.assist((i + 1) % self.shared.workers);
+                    }
+                }
+            }
         }
-        self.shared.cv.notify_one();
         tickets
     }
 
@@ -844,20 +1045,48 @@ impl ServeEngine {
         if let Some(t) = p.trace.as_deref_mut() {
             t.event(TraceStage::Enqueued { layer: p.layer.index() as u32 });
         }
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            if !st.open {
-                drop(st);
-                return Err((p, ServeError::ShuttingDown));
+        match &self.shared.dispatcher {
+            Dispatcher::Global { state, cv, .. } => {
+                {
+                    let mut st = state.lock().unwrap();
+                    if !st.open {
+                        drop(st);
+                        return Err((p, ServeError::ShuttingDown));
+                    }
+                    if st.live >= self.shared.max_pending {
+                        drop(st);
+                        return Err((
+                            p,
+                            ServeError::Overloaded { max_pending: self.shared.max_pending },
+                        ));
+                    }
+                    st.live += 1;
+                    st.pending.push_back(p);
+                }
+                cv.notify_one();
             }
-            if st.live >= self.shared.max_pending {
-                drop(st);
-                return Err((p, ServeError::Overloaded { max_pending: self.shared.max_pending }));
+            Dispatcher::Sharded { shards, live } => {
+                // Reserve the live slot FIRST, then check closed/overload,
+                // undoing on refusal. With SeqCst on both sides either a
+                // draining worker sees live > 0 and keeps running, or this
+                // thread sees the close and rejects — an admitted request
+                // can never be stranded behind an exited worker (module
+                // docs, backpressure section).
+                let prev = live.fetch_add(1, Ordering::SeqCst);
+                if shards.is_closed() {
+                    live.fetch_sub(1, Ordering::SeqCst);
+                    return Err((p, ServeError::ShuttingDown));
+                }
+                if prev >= self.shared.max_pending {
+                    live.fetch_sub(1, Ordering::SeqCst);
+                    return Err((
+                        p,
+                        ServeError::Overloaded { max_pending: self.shared.max_pending },
+                    ));
+                }
+                self.shared.push_sharded(shards, p);
             }
-            st.live += 1;
-            st.pending.push_back(p);
         }
-        self.shared.cv.notify_one();
         Ok(())
     }
 
@@ -1067,22 +1296,31 @@ impl ServeEngine {
     }
 
     /// Stop admitting WITHOUT waiting: subsequent submits fail with
-    /// [`ServeError::ShuttingDown`] while the batcher keeps draining every
+    /// [`ServeError::ShuttingDown`] while dispatch keeps draining every
     /// already-admitted request in the background. Call
     /// [`ServeEngine::shutdown`] (or drop the engine) to block until the
     /// drain completes.
     pub fn close(&self) {
-        {
-            let mut st = self.shared.state.lock().unwrap();
-            st.open = false;
+        match &self.shared.dispatcher {
+            Dispatcher::Global { state, cv, .. } => {
+                {
+                    let mut st = state.lock().unwrap();
+                    st.open = false;
+                }
+                cv.notify_all();
+            }
+            Dispatcher::Sharded { shards, .. } => {
+                // Sets the closed flag and broadcasts lock-then-notify to
+                // every shard, so each parked worker re-evaluates its
+                // closed+drained exit predicate.
+                shards.close();
+            }
         }
-        self.shared.cv.notify_all();
     }
 
     /// Stop admitting, drain every admitted request — including every
     /// remaining hop of in-flight model requests and sessions — join the
-    /// batcher and quiesce the kernel workers, and return the final
-    /// counters.
+    /// dispatch threads, and return the final counters.
     pub fn shutdown(mut self) -> EngineStats {
         self.shutdown_impl(); // Drop runs it again; it is idempotent
         self.stats()
@@ -1090,12 +1328,14 @@ impl ServeEngine {
 
     fn shutdown_impl(&mut self) {
         self.close();
-        if let Some(h) = self.batcher.take() {
-            // The batcher drains until the last live hop slot is released
-            // (so traversals finish their whole route) and waits for the
-            // pool to go idle, so every ticket has resolved when join
-            // returns; the workers themselves are joined when the last
-            // Shared drops.
+        // Both cores drain until the last live hop slot is released (so
+        // traversals finish their whole route) before their threads exit:
+        // the global batcher additionally waits for its pool to go idle;
+        // a shard worker's exit predicate (closed AND live == 0) already
+        // implies every ticket has resolved, because batches run inline
+        // and re-entries are queued before slots are released. So joining
+        // here IS the full drain barrier.
+        for h in self.threads.drain(..) {
             let _ = h.join();
         }
     }
@@ -1107,10 +1347,15 @@ impl Drop for ServeEngine {
     }
 }
 
+/// The [`Dispatch::Global`] dispatch thread: one FIFO, one holdback
+/// counter, batches executed on the [`WorkerPool`].
 fn batcher_loop(shared: Arc<Shared>) {
+    let Dispatcher::Global { state, cv, pool } = &shared.dispatcher else {
+        unreachable!("batcher_loop is spawned only under Dispatch::Global");
+    };
     loop {
         let batch = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = state.lock().unwrap();
             // Hold back while every worker is busy: pending requests keep
             // piling up and coalesce into fuller batches (module docs).
             loop {
@@ -1123,17 +1368,72 @@ fn batcher_loop(shared: Arc<Shared>) {
                 // queue alone is not drained).
                 if !st.open && st.live == 0 {
                     drop(st);
-                    shared.pool.wait_idle(); // in-flight batches answer first
+                    pool.wait_idle(); // in-flight batches answer first
                     return;
                 }
-                st = shared.cv.wait(st).unwrap();
+                st = cv.wait(st).unwrap();
             }
             st.in_flight += 1;
             take_batch(&mut st.pending, shared.max_batch)
         };
         let t_formed = Instant::now();
         let shared2 = Arc::clone(&shared);
-        shared.pool.submit(move || run_batch(&shared2, batch, t_formed));
+        pool.submit(move || run_batch(&shared2, batch, t_formed));
+    }
+}
+
+/// One [`Dispatch::Sharded`] worker: owner of shard `me`. Drains its own
+/// shard first (same head-layer batch formation as the global FIFO), then
+/// steals the OLDEST batchable group from the most-loaded other shard,
+/// then parks with a short timeout — the timeout is what lets a worker
+/// whose own shard is quiet notice other shards' backlogs (module docs,
+/// steal-liveness). Batches execute INLINE on this thread; that is the
+/// sharded core's holdback: at most `workers` batches can be in flight,
+/// so under saturation the shards pile up and coalesce.
+fn shard_worker_loop(shared: Arc<Shared>, me: usize) {
+    let Dispatcher::Sharded { shards, live } = &shared.dispatcher else {
+        unreachable!("shard_worker_loop is spawned only under Dispatch::Sharded");
+    };
+    // ~0.5 ms: long enough to cost nothing measurable when idle, short
+    // enough that a steal opportunity is never stale by more than a
+    // kernel-call timescale.
+    const PARK: std::time::Duration = std::time::Duration::from_micros(500);
+    loop {
+        // (1) Own shard: the layer-affine fast path.
+        let own = shards.pop_group(me, |q| {
+            if q.is_empty() {
+                Vec::new()
+            } else {
+                take_batch(q, shared.max_batch)
+            }
+        });
+        if !own.is_empty() {
+            run_batch(&shared, own, Instant::now());
+            continue;
+        }
+        // (2) Steal: oldest batchable group from the deepest other shard.
+        // The depth mirror may be stale, so an empty grab just falls
+        // through to the park.
+        if let Some(victim) = shards.most_loaded_other(me) {
+            let stolen = shards.pop_group(victim, |q| {
+                if q.is_empty() {
+                    Vec::new()
+                } else {
+                    take_batch(q, shared.max_batch)
+                }
+            });
+            if !stolen.is_empty() {
+                shared.telemetry.incr(Counter::Steals);
+                run_batch(&shared, stolen, Instant::now());
+                continue;
+            }
+        }
+        // (3) Park, or exit once closed AND fully drained. The predicate
+        // order (closed first, then live) pairs with admission's
+        // increment-then-check to rule out stranded requests.
+        if !shards.park(me, PARK, || shards.is_closed() && live.load(Ordering::SeqCst) == 0) {
+            return;
+        }
     }
 }
 
@@ -1230,12 +1530,7 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
                 tel.finish_trace(t, false);
             }
         }
-        {
-            let mut st = shared.state.lock().unwrap();
-            st.in_flight -= 1;
-            st.live -= finished;
-        }
-        shared.cv.notify_all();
+        complete_batch(shared, Vec::new(), finished);
         return;
     }
     if crc_was_pending {
@@ -1392,17 +1687,47 @@ fn run_batch(shared: &Shared, mut batch: Vec<Pending>, t_formed: Instant) {
             }
         }
     }
-    {
-        // One lock: hand finished hops' slots back AND re-enter continuing
-        // traversals at their next layer. Re-entry bypasses the admission
-        // gate on purpose — these hops were admitted once and must finish
-        // even while the engine is draining (`open == false`).
-        let mut st = shared.state.lock().unwrap();
-        st.pending.extend(reentry);
-        st.in_flight -= 1;
-        st.live -= finished;
+    complete_batch(shared, reentry, finished);
+}
+
+/// Finish one micro-batch against the dispatch core: re-enter continuing
+/// traversals at their next layer and hand the finished riders' live
+/// slots back. Re-entry bypasses the admission gate on purpose — these
+/// hops were admitted once and must finish even while the engine is
+/// draining (admissions closed).
+fn complete_batch(shared: &Shared, reentry: Vec<Pending>, finished: usize) {
+    match &shared.dispatcher {
+        Dispatcher::Global { state, cv, .. } => {
+            {
+                // One lock: the re-entries and both counters move together.
+                let mut st = state.lock().unwrap();
+                st.pending.extend(reentry);
+                st.in_flight -= 1;
+                st.live -= finished;
+            }
+            cv.notify_all(); // wake the batcher: a worker slot / new hops
+        }
+        Dispatcher::Sharded { shards, live } => {
+            // Re-entries are pushed BEFORE the finished slots are
+            // released: `live` counts whole traversals, so live == 0 must
+            // imply no Pending exists in any shard — that implication is
+            // what makes the workers' closed+drained exit (and shutdown's
+            // join-only barrier) correct.
+            for p in reentry {
+                shared.telemetry.incr(Counter::ShardReentries);
+                shared.push_sharded(shards, p);
+            }
+            if finished > 0 {
+                let prev = live.fetch_sub(finished, Ordering::SeqCst);
+                if prev == finished && shards.is_closed() {
+                    // Last slot released after close: wake every parked
+                    // worker through the lost-wakeup-proof broadcast so
+                    // the drain barrier completes promptly.
+                    shards.wake_all();
+                }
+            }
+        }
     }
-    shared.cv.notify_all(); // wake the batcher: a worker slot / new hops
 }
 
 /// Number of consecutive same-adapter runs in the (sorted) slot list —
@@ -1464,6 +1789,18 @@ mod tests {
         let dup = PackedModel::new(vec![m.layers[0].clone(), m.layers[0].clone()]);
         let err = ServeEngine::builder(dup).build().unwrap_err();
         assert!(format!("{err}").contains("duplicate layer name 'wq'"), "{err}");
+        // The dispatch knob flows through the same validation: a bad knob
+        // is refused identically under either core, and both cores build.
+        let err = ServeEngine::builder(model(399))
+            .dispatch(Dispatch::Global)
+            .workers(0)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err}").contains("workers"), "{err}");
+        assert_eq!(Dispatch::default(), Dispatch::Sharded);
+        for d in [Dispatch::Sharded, Dispatch::Global] {
+            ServeEngine::builder(model(399)).dispatch(d).build().unwrap().shutdown();
+        }
     }
 
     #[test]
@@ -1598,6 +1935,33 @@ mod tests {
         for t in tickets {
             assert!(t.wait().is_ok());
         }
+    }
+
+    #[test]
+    fn global_dispatch_still_serves_and_drains() {
+        // The reference core stays fully functional behind the knob: it
+        // is the parity baseline sharded dispatch is judged against.
+        let engine = ServeEngine::builder(model(404))
+            .dispatch(Dispatch::Global)
+            .workers(2)
+            .max_batch(8)
+            .build()
+            .unwrap();
+        let wq = engine.layer("wq").unwrap();
+        let mut rng = Rng::new(415);
+        let tickets: Vec<Ticket> =
+            (0..32).map(|_| engine.submit(wq, None, rng.gauss_vec(24))).collect();
+        for t in tickets {
+            assert!(t.wait().is_ok());
+        }
+        // Steal/re-entry counters are sharded-dispatch instruments; the
+        // global core must never tick them.
+        let snap = engine.telemetry();
+        assert_eq!(snap.counter(Counter::Steals), 0);
+        assert_eq!(snap.max_shard_depth_seen, 0);
+        let stats = engine.shutdown();
+        assert_eq!(stats.requests, 32);
+        assert_eq!(stats.rejected, 0);
     }
 
     #[test]

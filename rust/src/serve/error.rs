@@ -92,6 +92,12 @@ pub enum ServeError {
     /// [`close`]: crate::serve::ServeEngine::close
     /// [`shutdown`]: crate::serve::ServeEngine::shutdown
     ShuttingDown,
+    /// A `wait_timeout` deadline elapsed before the engine replied.
+    /// `elapsed` is the wall time actually waited. The request itself is
+    /// NOT cancelled: it still holds its live slot, still executes, and
+    /// its reply is dropped when it arrives (the waiter is gone) — see
+    /// [`Ticket::wait_timeout`](crate::serve::Ticket::wait_timeout).
+    Timeout { elapsed: std::time::Duration },
     /// The kernel panicked serving the micro-batch this request rode in
     /// (`hop: Some(_)` names the failing hop of a model request). The
     /// worker survives; only the batch's riders fail.
@@ -136,6 +142,12 @@ impl fmt::Display for ServeError {
                  retry later"
             ),
             ServeError::ShuttingDown => f.write_str("engine is shutting down; request refused"),
+            ServeError::Timeout { elapsed } => write!(
+                f,
+                "no reply within {:.3}s; the request still completes in the engine and its \
+                 reply is dropped",
+                elapsed.as_secs_f64()
+            ),
             ServeError::WorkerPanic { layer, batch, hop: None } => {
                 write!(f, "layer '{layer}': serving batch of {batch} panicked in the kernel")
             }
@@ -171,6 +183,9 @@ mod tests {
         let e = ServeError::WorkerPanic { layer: "l".to_string(), batch: 4, hop: Some(2) };
         let msg = format!("{e}");
         assert!(msg.contains("hop 2") && msg.contains("'l'") && msg.contains("4"), "{msg}");
+        let e = ServeError::Timeout { elapsed: std::time::Duration::from_millis(1500) };
+        let msg = format!("{e}");
+        assert!(msg.contains("1.500s") && msg.contains("reply is dropped"), "{msg}");
     }
 
     #[test]

@@ -148,6 +148,26 @@ impl ModelTicket {
     pub fn wait(self) -> Result<ModelResponse, ServeError> {
         self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
     }
+
+    /// [`wait`](ModelTicket::wait) with a deadline:
+    /// [`ServeError::Timeout`] once `timeout` elapses with no reply.
+    ///
+    /// The deadline is a CALLER-side contract only — the traversal is not
+    /// cancelled. It still holds its live backpressure slot, still
+    /// executes every remaining hop (and session step), and still counts
+    /// in `model_requests` / telemetry when it completes; its reply is
+    /// dropped because this ticket (the only receiver) is consumed. Use
+    /// it to bound caller latency, not engine load.
+    pub fn wait_timeout(self, timeout: std::time::Duration) -> Result<ModelResponse, ServeError> {
+        let t0 = Instant::now();
+        match self.rx.recv_timeout(timeout) {
+            Ok(reply) => reply,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                Err(ServeError::Timeout { elapsed: t0.elapsed() })
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::ShuttingDown),
+        }
+    }
 }
 
 /// The caller-driven serial reference the parity suite pins the pipelined

@@ -88,12 +88,20 @@
 //!   log on boot; whatever prefix of the log survives a crash, recovery
 //!   yields exactly a prefix of the committed operations and bit-identical
 //!   weights for every surviving tenant (`rust/tests/crash_wal.rs`).
-//! * [`engine`] — [`ServeEngine`]: a batching front-end on the persistent
-//!   `util::threadpool::WorkerPool` that coalesces concurrent requests
-//!   into per-layer micro-batches (grouping same-adapter requests inside
-//!   each batch), with hop-aware backpressure, a non-blocking
-//!   [`ServeEngine::close`] and a drain-aware [`ServeEngine::shutdown`],
-//!   configured through [`ServeEngine::builder`].
+//! * [`engine`] — [`ServeEngine`]: a batching front-end that coalesces
+//!   concurrent requests into per-layer micro-batches (grouping
+//!   same-adapter requests inside each batch), with hop-aware
+//!   backpressure, a non-blocking [`ServeEngine::close`] and a drain-aware
+//!   [`ServeEngine::shutdown`], configured through
+//!   [`ServeEngine::builder`]. Two dispatch cores behind one knob
+//!   ([`Dispatch`]): the default **sharded work-stealing** core — per-layer
+//!   queue shards owned by the workers themselves, lock-free admission
+//!   accounting, idle workers stealing the oldest batchable group — and
+//!   the single-FIFO **global batcher** reference core (on the persistent
+//!   `util::threadpool::WorkerPool`), kept as the parity baseline and
+//!   `bench_contention` comparison row. Batch composition never changes
+//!   response bits in either core, so the choice is purely contention
+//!   behavior.
 //! * [`forward`] — [`ModelRequest`]/[`SessionRequest`]: **full-model
 //!   pipelined forwards**. A request carries a [`Route`]; the engine
 //!   decomposes it into per-layer hops that re-enter the batcher's FIFO
@@ -130,8 +138,12 @@
 //! concurrent session counts, mixed-adapter sweep), and
 //! `cargo bench --bench bench_telemetry` writes `BENCH_telemetry.json`
 //! (instrumented vs telemetry-disabled coalescing throughput — the <5%
-//! overhead gate — plus snapshot/render and trace-capture costs) — see
-//! EXPERIMENTS.md §Serve, §Adapters, §Forward, §API and §Observability.
+//! overhead gate — plus snapshot/render and trace-capture costs), and
+//! `cargo bench --bench bench_contention` writes `BENCH_contention.json`
+//! (requests/s vs 1→64 concurrent submitters, sharded vs global dispatch,
+//! single-layer and pipelined workloads — the admission-scaling gate) —
+//! see EXPERIMENTS.md §Serve, §Adapters, §Forward, §API, §Observability
+//! and §Scale.
 
 pub mod adapters;
 pub mod artifact;
@@ -147,7 +159,9 @@ pub use adapters::{
     AdapterHandle, AdapterId, AdapterRegistry, AdapterSet, RegisterOutcome, RegistryStats,
 };
 pub use artifact::{crc32, Artifact, ArtifactStore, V1_ADAPTER_ID};
-pub use engine::{EngineStats, Request, Response, ServeEngine, ServeEngineBuilder, Ticket};
+pub use engine::{
+    Dispatch, EngineStats, Request, Response, ServeEngine, ServeEngineBuilder, Ticket,
+};
 pub use error::{ArtifactErrorKind, ServeError};
 pub use forward::{
     forward_route_serial, ModelRequest, ModelResponse, ModelTicket, SessionRequest, StepFn,

@@ -116,9 +116,15 @@ pub enum Counter {
     SlowRequests,
     /// Finished traces evicted from the bounded recent ring.
     TracesDropped,
+    /// Micro-batch groups an idle worker took from another worker's shard
+    /// (sharded dispatch only).
+    Steals,
+    /// Traversal hops pushed directly into their next layer's shard by a
+    /// finishing batch (sharded dispatch only).
+    ShardReentries,
 }
 
-pub const N_COUNTERS: usize = 20;
+pub const N_COUNTERS: usize = 22;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -142,6 +148,8 @@ impl Counter {
         Counter::ArtifactOpensMapped,
         Counter::SlowRequests,
         Counter::TracesDropped,
+        Counter::Steals,
+        Counter::ShardReentries,
     ];
 
     /// Prometheus metric name (the `cloq_` prefix is added at render).
@@ -167,6 +175,8 @@ impl Counter {
             Counter::ArtifactOpensMapped => "artifact_opens_mapped_total",
             Counter::SlowRequests => "slow_requests_total",
             Counter::TracesDropped => "traces_dropped_total",
+            Counter::Steals => "dispatch_steals_total",
+            Counter::ShardReentries => "shard_reentries_total",
         }
     }
 
@@ -206,6 +216,14 @@ impl Counter {
             }
             Counter::TracesDropped => {
                 "Finished traces evicted from the bounded recent ring."
+            }
+            Counter::Steals => {
+                "Micro-batch groups an idle worker took from another worker's shard \
+                 (sharded dispatch)."
+            }
+            Counter::ShardReentries => {
+                "Traversal hops pushed directly into their next layer's shard by a \
+                 finishing batch (sharded dispatch)."
             }
         }
     }
@@ -343,6 +361,9 @@ struct Shard {
     counters: [AtomicU64; N_COUNTERS],
     hists: [Hist; N_METRICS],
     max_batch: AtomicU64,
+    /// High-water mark of any dispatch-shard queue depth observed at push
+    /// time (sharded dispatch; 0 under the global batcher).
+    max_shard_depth: AtomicU64,
 }
 
 impl Shard {
@@ -351,6 +372,7 @@ impl Shard {
             counters: std::array::from_fn(|_| AtomicU64::new(0)),
             hists: std::array::from_fn(|_| Hist::new()),
             max_batch: AtomicU64::new(0),
+            max_shard_depth: AtomicU64::new(0),
         }
     }
 }
@@ -698,6 +720,16 @@ impl Telemetry {
         self.shard().max_batch.fetch_max(bs as u64, Ordering::Relaxed);
     }
 
+    /// Fold one dispatch-shard queue depth (observed at push time) into
+    /// the sharded running max — the backlog high-water mark of the
+    /// sharded dispatcher.
+    pub fn record_shard_depth(&self, depth: usize) {
+        if !self.enabled {
+            return;
+        }
+        self.shard().max_shard_depth.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
     /// Attribute one executed micro-batch to its layer.
     pub fn layer_batch(&self, layer_idx: usize, bs: usize, queue_ns: u64, compute_ns: u64) {
         if !self.enabled {
@@ -800,6 +832,7 @@ impl Telemetry {
     pub fn snapshot(&self, adapter_names: &[String]) -> TelemetrySnapshot {
         let mut counters = [0u64; N_COUNTERS];
         let mut max_batch = 0u64;
+        let mut max_shard_depth = 0u64;
         let mut hists: Vec<HistSnapshot> = (0..N_METRICS)
             .map(|_| HistSnapshot { buckets: vec![0; HIST_BUCKETS], count: 0, sum_s: 0.0 })
             .collect();
@@ -809,6 +842,8 @@ impl Telemetry {
                 counters[i] += c.load(Ordering::Relaxed);
             }
             max_batch = max_batch.max(shard.max_batch.load(Ordering::Relaxed));
+            max_shard_depth =
+                max_shard_depth.max(shard.max_shard_depth.load(Ordering::Relaxed));
             for (m, h) in shard.hists.iter().enumerate() {
                 for (b, cnt) in h.buckets.iter().enumerate() {
                     hists[m].buckets[b] += cnt.load(Ordering::Relaxed);
@@ -860,6 +895,7 @@ impl Telemetry {
             uptime_s: self.start.elapsed().as_secs_f64(),
             enabled: self.enabled,
             max_batch_seen: max_batch as usize,
+            max_shard_depth_seen: max_shard_depth as usize,
             counters,
             hists,
             per_layer,
@@ -953,6 +989,9 @@ pub struct TelemetrySnapshot {
     pub uptime_s: f64,
     pub enabled: bool,
     pub max_batch_seen: usize,
+    /// Deepest dispatch-shard backlog observed at push time (sharded
+    /// dispatch; 0 under the global batcher).
+    pub max_shard_depth_seen: usize,
     counters: [u64; N_COUNTERS],
     hists: Vec<HistSnapshot>,
     pub per_layer: Vec<SlotSnapshot>,
@@ -1008,6 +1047,12 @@ impl TelemetrySnapshot {
         let _ = writeln!(out, "# HELP cloq_max_batch_seen Largest micro-batch executed.");
         let _ = writeln!(out, "# TYPE cloq_max_batch_seen gauge");
         let _ = writeln!(out, "cloq_max_batch_seen {}", self.max_batch_seen);
+        let _ = writeln!(
+            out,
+            "# HELP cloq_max_shard_depth_seen Deepest dispatch-shard backlog observed."
+        );
+        let _ = writeln!(out, "# TYPE cloq_max_shard_depth_seen gauge");
+        let _ = writeln!(out, "cloq_max_shard_depth_seen {}", self.max_shard_depth_seen);
         for c in Counter::ALL {
             let _ = writeln!(out, "# HELP cloq_{} {}", c.name(), c.help());
             let _ = writeln!(out, "# TYPE cloq_{} counter", c.name());

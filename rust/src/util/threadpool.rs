@@ -8,11 +8,19 @@
 //!   caught and reported per job (used by the scheduler's progress display
 //!   and the failure-injection tests).
 //! * [`WorkerPool`] — a persistent pool with dynamically submitted jobs,
-//!   the execution substrate of the serving engine (`serve::engine`): the
-//!   batcher coalesces requests into micro-batches and submits each batch
-//!   as one job; workers outlive any individual request.
+//!   the execution substrate of the serving engine's `Dispatch::Global`
+//!   reference path: the batcher coalesces requests into micro-batches and
+//!   submits each batch as one job; workers outlive any individual request.
+//! * [`ShardedQueues`] — the queueing substrate of the engine's sharded
+//!   work-stealing dispatch (`Dispatch::Sharded`): N independent
+//!   mutex+condvar deques with lock-free atomic depth mirrors, so an idle
+//!   worker can pick a steal victim without touching any other shard's
+//!   lock. The policy (layer affinity, batch formation, steal order) stays
+//!   in `serve::engine`; this type only owns the shards' memory and the
+//!   park/wake protocol.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -251,6 +259,168 @@ impl Drop for WorkerPool {
     }
 }
 
+/// One shard of a [`ShardedQueues`]: a mutex-guarded deque, the condvar
+/// its owning worker parks on, and an atomic mirror of the deque's length
+/// so stealers can rank victims without taking the lock.
+struct QueueShard<T> {
+    q: Mutex<VecDeque<T>>,
+    cv: Condvar,
+    depth: AtomicUsize,
+}
+
+/// N independent work queues with a park/steal protocol — the substrate of
+/// the serving engine's sharded dispatch. Each worker OWNS one shard: it
+/// pushes and pops under that shard's lock only, so disjoint shards never
+/// contend. Cross-shard visibility goes through the atomic `depth` mirrors
+/// (which may lag the locked deque by one push or pop — fine for victim
+/// ranking, never used for correctness).
+///
+/// Wakeup discipline: `push`/`push_all` notify the target shard's condvar
+/// after releasing its lock. `wake_all` (used when the close-and-drained
+/// exit condition becomes true) locks each shard and then broadcasts,
+/// which closes the lost-wakeup window against a parker that checked the
+/// exit predicate just before waiting. `park` additionally bounds every
+/// wait with a caller-supplied timeout, so an unlocked [`assist`] nudge —
+/// or a missed race — costs at most one timeout, never a hang.
+///
+/// [`assist`]: ShardedQueues::assist
+pub struct ShardedQueues<T> {
+    shards: Vec<QueueShard<T>>,
+    closed: AtomicBool,
+}
+
+impl<T> ShardedQueues<T> {
+    pub fn new(n: usize) -> ShardedQueues<T> {
+        let shards = (0..n.max(1))
+            .map(|_| QueueShard {
+                q: Mutex::new(VecDeque::new()),
+                cv: Condvar::new(),
+                depth: AtomicUsize::new(0),
+            })
+            .collect();
+        ShardedQueues { shards, closed: AtomicBool::new(false) }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Lock-free depth of shard `i` (may lag the locked deque briefly).
+    pub fn depth(&self, i: usize) -> usize {
+        self.shards[i].depth.load(Ordering::Acquire)
+    }
+
+    /// Append one item to shard `i`, wake its owner, return the new depth.
+    pub fn push(&self, i: usize, item: T) -> usize {
+        let s = &self.shards[i];
+        let depth = {
+            let mut q = s.q.lock().unwrap();
+            q.push_back(item);
+            let d = q.len();
+            s.depth.store(d, Ordering::Release);
+            d
+        };
+        s.cv.notify_one();
+        depth
+    }
+
+    /// Append a run of items to shard `i` under ONE lock hold (a burst
+    /// stays adjacent, hence coalescible), wake its owner, return depth.
+    pub fn push_all(&self, i: usize, items: impl IntoIterator<Item = T>) -> usize {
+        let s = &self.shards[i];
+        let depth = {
+            let mut q = s.q.lock().unwrap();
+            q.extend(items);
+            let d = q.len();
+            s.depth.store(d, Ordering::Release);
+            d
+        };
+        s.cv.notify_one();
+        depth
+    }
+
+    /// Run `f` against shard `i`'s locked deque (batch formation: the
+    /// caller may remove any items it likes), then refresh the depth
+    /// mirror from what remains.
+    pub fn pop_group<R>(&self, i: usize, f: impl FnOnce(&mut VecDeque<T>) -> R) -> R {
+        let s = &self.shards[i];
+        let mut q = s.q.lock().unwrap();
+        let out = f(&mut q);
+        s.depth.store(q.len(), Ordering::Release);
+        out
+    }
+
+    /// Steal-victim ranking: the index of the deepest non-empty shard
+    /// other than `me`, by the atomic mirrors alone (no locks taken).
+    pub fn most_loaded_other(&self, me: usize) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        let mut best_depth = 0usize;
+        for (i, s) in self.shards.iter().enumerate() {
+            if i == me {
+                continue;
+            }
+            let d = s.depth.load(Ordering::Acquire);
+            if d > best_depth {
+                best = Some(i);
+                best_depth = d;
+            }
+        }
+        best
+    }
+
+    /// UNLOCKED nudge of shard `i`'s parker — a backlog hint ("my shard is
+    /// deep, come steal"). A lost wakeup here is tolerated by design: the
+    /// parker's timeout re-scans for steals anyway.
+    pub fn assist(&self, i: usize) {
+        self.shards[i].cv.notify_one();
+    }
+
+    /// Mark the queues closed and broadcast to every parker. Closing does
+    /// NOT drop queued items — owners keep draining until their exit
+    /// predicate (closed AND nothing left anywhere) holds.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        self.wake_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::SeqCst)
+    }
+
+    /// Park the owner of shard `i` until its queue is non-empty, `timeout`
+    /// elapses, or `exit()` holds. Returns `false` iff the caller should
+    /// stop (exit observed with an empty own queue); `true` means "scan
+    /// for work again" — the own queue has items, or the timed/notified
+    /// wake says it is time to re-check steals.
+    ///
+    /// `exit` is evaluated under shard `i`'s lock, which pairs with
+    /// [`wake_all`](ShardedQueues::wake_all)'s lock-then-broadcast to
+    /// close the classic check-then-wait lost-wakeup race.
+    pub fn park(&self, i: usize, timeout: std::time::Duration, exit: impl Fn() -> bool) -> bool {
+        let s = &self.shards[i];
+        let q = s.q.lock().unwrap();
+        if !q.is_empty() {
+            return true;
+        }
+        if exit() {
+            return false;
+        }
+        let (q, _timed_out) = s.cv.wait_timeout(q, timeout).unwrap();
+        !(q.is_empty() && exit())
+    }
+
+    /// Lock each shard in turn (immediately dropping the guard) and then
+    /// broadcast its condvar. The lock acquisition serializes against any
+    /// parker between its predicate check and its wait, so the broadcast
+    /// cannot be lost — this is the drain-completion wake path.
+    pub fn wake_all(&self) {
+        for s in &self.shards {
+            drop(s.q.lock().unwrap());
+            s.cv.notify_all();
+        }
+    }
+}
+
 fn panic_message(e: &Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = e.downcast_ref::<&str>() {
         s.to_string()
@@ -374,6 +544,115 @@ mod tests {
         pool.shutdown_impl(); // join in place so accounting stays readable
         assert_eq!(done.load(Ordering::SeqCst), 6);
         assert_eq!(pool.panicked(), 4); // i ∈ {0,3,6,9}
+    }
+
+    #[test]
+    fn sharded_queues_track_depth_through_push_and_pop_group() {
+        let q: ShardedQueues<u32> = ShardedQueues::new(3);
+        assert_eq!(q.shards(), 3);
+        assert_eq!(q.push(1, 10), 1);
+        assert_eq!(q.push(1, 11), 2);
+        assert_eq!(q.push_all(2, [20, 21, 22]), 3);
+        assert_eq!((q.depth(0), q.depth(1), q.depth(2)), (0, 2, 3));
+        let got = q.pop_group(1, |d| d.drain(..).collect::<Vec<_>>());
+        assert_eq!(got, vec![10, 11], "FIFO within a shard");
+        assert_eq!(q.depth(1), 0, "depth mirror refreshed after pop_group");
+    }
+
+    #[test]
+    fn most_loaded_other_ranks_victims_and_skips_self() {
+        let q: ShardedQueues<u32> = ShardedQueues::new(3);
+        assert_eq!(q.most_loaded_other(0), None, "all empty: nothing to steal");
+        q.push(0, 1);
+        q.push_all(2, [2, 3]);
+        assert_eq!(q.most_loaded_other(0), Some(2), "deepest other shard wins");
+        assert_eq!(q.most_loaded_other(2), Some(0), "own shard never a victim");
+        q.pop_group(2, |d| d.clear());
+        assert_eq!(q.most_loaded_other(0), None, "empty shards are not victims");
+    }
+
+    #[test]
+    fn park_wakes_on_push_and_exits_when_told() {
+        use std::sync::atomic::AtomicBool;
+        let q: Arc<ShardedQueues<u32>> = Arc::new(ShardedQueues::new(2));
+        let stop = Arc::new(AtomicBool::new(false));
+        let long = std::time::Duration::from_secs(30);
+        // Non-empty own queue: park returns true without waiting.
+        q.push(0, 1);
+        assert!(q.park(0, long, || false));
+        q.pop_group(0, |d| d.clear());
+        // A push from another thread wakes the parker well before timeout.
+        let (q2, t0) = (Arc::clone(&q), std::time::Instant::now());
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            q2.push(0, 7);
+        });
+        assert!(q.park(0, long, || false), "push must wake the parked owner");
+        assert!(t0.elapsed() < long, "woke by notify, not timeout");
+        h.join().unwrap();
+        // Exit observed with an empty queue: park says stop.
+        q.pop_group(0, |d| d.clear());
+        stop.store(true, Ordering::SeqCst);
+        let stop2 = Arc::clone(&stop);
+        assert!(!q.park(0, long, move || stop2.load(Ordering::SeqCst)));
+    }
+
+    #[test]
+    fn wake_all_releases_parkers_for_the_exit_check() {
+        let q: Arc<ShardedQueues<u32>> = Arc::new(ShardedQueues::new(2));
+        let q2 = Arc::clone(&q);
+        let parker = std::thread::spawn(move || {
+            // Loops like a dispatch worker: park until closed-and-empty.
+            while q2.park(1, std::time::Duration::from_secs(30), || q2.is_closed()) {}
+        });
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        q.close(); // close() broadcasts via wake_all
+        parker.join().unwrap(); // would hang ~30s if the wake were lost
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn sharded_workers_drain_everything_with_steals() {
+        use std::sync::atomic::AtomicUsize;
+        // All work lands in shard 0; two workers (owners of shard 0 and 1)
+        // must still drain all of it — worker 1 only ever steals.
+        let q: Arc<ShardedQueues<u32>> = Arc::new(ShardedQueues::new(2));
+        let done = Arc::new(AtomicUsize::new(0));
+        let total = 200usize;
+        let workers: Vec<_> = (0..2usize)
+            .map(|me| {
+                let q = Arc::clone(&q);
+                let done = Arc::clone(&done);
+                std::thread::spawn(move || loop {
+                    let own = q.pop_group(me, |d| d.pop_front());
+                    if let Some(_v) = own {
+                        done.fetch_add(1, Ordering::SeqCst);
+                        continue;
+                    }
+                    if let Some(victim) = q.most_loaded_other(me) {
+                        if q.pop_group(victim, |d| d.pop_front()).is_some() {
+                            done.fetch_add(1, Ordering::SeqCst);
+                            continue;
+                        }
+                    }
+                    let exit = {
+                        let (q, done) = (Arc::clone(&q), Arc::clone(&done));
+                        move || q.is_closed() && done.load(Ordering::SeqCst) == total
+                    };
+                    if !q.park(me, std::time::Duration::from_millis(1), exit) {
+                        break;
+                    }
+                })
+            })
+            .collect();
+        for v in 0..total as u32 {
+            q.push(0, v);
+        }
+        q.close();
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(done.load(Ordering::SeqCst), total, "close() must not drop queued work");
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //! submission, kernel panics (single-layer and mid-traversal), step-fn
 //! failures, artifact corruption naming the layer with a classified
 //! kind, builder/config validation, foreign engine handles (identity
-//! tokens — and the O(1) fast path they buy), and the `anyhow` interop
-//! offline callers rely on.
+//! tokens — and the O(1) fast path they buy), stale-generation adapter
+//! handles after slot recycling, caller-side `wait_timeout` deadlines,
+//! and the `anyhow` interop offline callers rely on.
 
 use std::sync::mpsc;
 
@@ -375,6 +376,77 @@ fn foreign_engine_handles_are_refused_typed() {
     assert!(a.submit(wq_a, Some(a_same_slot), vec![0.0; 24]).wait().is_ok());
     a.shutdown();
     b.shutdown();
+}
+
+#[test]
+fn stale_generation_handles_fail_typed_after_slot_recycling() {
+    // Unregister + re-register recycles the intern SLOT; the generation
+    // word in the handle keeps a dead incarnation's AdapterId from
+    // silently addressing the new tenant occupying that slot.
+    let m = model(830);
+    let engine = ServeEngine::builder(model(830)).build().unwrap();
+    let stale = engine.register_adapter(adapter("ten", &m, 831)).unwrap().id;
+    engine.unregister_adapter("ten").unwrap();
+    let fresh = engine.register_adapter(adapter("ten", &m, 832)).unwrap().id;
+    assert_eq!(stale.index(), fresh.index(), "the slot is recycled");
+    assert_ne!(stale, fresh, "the generation is not");
+    assert_eq!(fresh.generation(), stale.generation() + 1);
+    let wq = engine.layer("wq").unwrap();
+    // The dead handle fails typed — and BY NAME: `name_of` works across
+    // generations, so the 3 a.m. error still says which tenant.
+    let err = engine.submit(wq, Some(stale), vec![0.0; 24]).wait().unwrap_err();
+    assert!(
+        matches!(&err, ServeError::UnknownAdapter { adapter } if adapter == "ten"),
+        "{err:?}"
+    );
+    // The traversal path refuses identically.
+    let route = engine.route(&["wq"]).unwrap();
+    let err = engine
+        .submit_model(ModelRequest::with_adapter(route, stale, vec![0.0; 24]))
+        .wait()
+        .unwrap_err();
+    assert!(
+        matches!(&err, ServeError::UnknownAdapter { adapter } if adapter == "ten"),
+        "{err:?}"
+    );
+    // The live incarnation serves, and name resolution yields ITS id.
+    assert!(engine.submit(wq, Some(fresh), vec![0.0; 24]).wait().is_ok());
+    assert_eq!(engine.adapter("ten").unwrap(), fresh);
+    let stats = engine.shutdown();
+    assert_eq!(stats.rejected, 2);
+}
+
+#[test]
+fn wait_timeout_is_typed_and_does_not_cancel_the_request() {
+    // A session parks mid-kernel on a gate; the caller's deadline fires
+    // first. The deadline is caller-side only: releasing the gate lets
+    // the request complete in the engine (it still counts in
+    // model_requests) with its reply dropped on the floor.
+    let mut rng = Rng::new(840);
+    let w = Matrix::randn(8, 8, 0.3, &mut rng);
+    let sq = PackedLayer::from_state("sq", &QuantState::Int(quantize_rtn(&w, 4, 8))).unwrap();
+    let engine = ServeEngine::builder(PackedModel::new(vec![sq])).workers(1).build().unwrap();
+    let route = engine.route(&["sq"]).unwrap();
+    let lid = engine.layer("sq").unwrap();
+    let (gate_tx, gate_rx) = mpsc::channel::<()>();
+    let step: StepFn = Box::new(move |_, y| {
+        gate_rx.recv().unwrap();
+        Some(y.to_vec())
+    });
+    let session = engine.submit_session(SessionRequest::new(route, rng.gauss_vec(8), 2, step));
+    let deadline = std::time::Duration::from_millis(30);
+    let err = session.wait_timeout(deadline).unwrap_err();
+    assert!(matches!(err, ServeError::Timeout { elapsed } if elapsed >= deadline), "{err:?}");
+    gate_tx.send(()).unwrap(); // the request still completes in the engine
+    // A reply inside the deadline comes through the same API unchanged.
+    let ok = engine
+        .submit(lid, None, rng.gauss_vec(8))
+        .wait_timeout(std::time::Duration::from_secs(30));
+    assert!(ok.is_ok(), "{ok:?}");
+    let stats = engine.shutdown();
+    assert_eq!(stats.model_requests, 1, "the timed-out session still completed");
+    assert_eq!(stats.requests, 1);
+    assert_eq!(stats.rejected, 0, "a caller-side timeout is not a rejection");
 }
 
 #[test]

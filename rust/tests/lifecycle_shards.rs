@@ -1,0 +1,230 @@
+//! Lifecycle tests for the sharded work-stealing dispatch core: the
+//! per-shard closed+empty drain barrier finishes every admitted traversal
+//! (and answers bit-identically to the global reference core), a kernel
+//! panic on one shard's batch fails only the riders of that batch, and a
+//! CONSTRUCTED steal — two gated sessions pinning both workers of a
+//! single-shard workload — both registers in `dispatch_steals_total` and
+//! returns bit-identical responses (batch composition, stolen or not,
+//! can never change a response's numbers).
+
+use std::sync::mpsc;
+
+use cloq::linalg::Matrix;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{
+    Counter, DequantParams, Dispatch, ModelRequest, PackedLayer, PackedModel, ServeEngine,
+    ServeError, SessionRequest, StepFn,
+};
+use cloq::util::prng::Rng;
+
+fn square_layer(name: &str, n: usize, seed: u64) -> PackedLayer {
+    let mut rng = Rng::new(seed);
+    let w = Matrix::randn(n, n, 0.3, &mut rng);
+    PackedLayer::from_state(name, &QuantState::Int(quantize_rtn(&w, 4, 8))).unwrap()
+}
+
+/// A layer whose kernel panics on ANY request (packed codes index past
+/// the codebook) — the per-shard failure-isolation probe.
+fn boom_layer(n: usize) -> PackedLayer {
+    let wpr = cloq::serve::words_per_row(n, 2);
+    PackedLayer {
+        name: "boom".to_string(),
+        rows: n,
+        cols: n,
+        bits: 2,
+        group_size: n,
+        packed: vec![u32::MAX; n * wpr].into(),
+        params: DequantParams::Codebook {
+            levels: vec![0.0, 1.0],
+            absmax: Matrix::zeros(1, n),
+        },
+    }
+}
+
+#[test]
+fn shutdown_drains_across_shards_and_matches_global_bit_for_bit() {
+    // Identical workload under both dispatch cores: 24 three-hop model
+    // requests + 4 three-step sessions over a 3-layer route that spans
+    // both shards of a 2-worker engine (layers 0,2 → shard 0; layer 1 →
+    // shard 1), then an immediate shutdown. The sharded drain must finish
+    // every remaining hop — traversals re-enter ANOTHER layer's shard
+    // from inside a worker while the engine is closing — and the answers
+    // must match the global reference core bit-for-bit.
+    let mut answers: Vec<Vec<Vec<f64>>> = Vec::new();
+    for dispatch in [Dispatch::Sharded, Dispatch::Global] {
+        let model = PackedModel::new(vec![
+            square_layer("a", 16, 700),
+            square_layer("b", 16, 701),
+            square_layer("c", 16, 702),
+        ]);
+        let engine = ServeEngine::builder(model)
+            .dispatch(dispatch)
+            .workers(2)
+            .max_batch(8)
+            .build()
+            .unwrap();
+        let route = engine.route(&["a", "b", "c"]).unwrap();
+        let mut rng = Rng::new(703); // same stream in both modes
+        let models: Vec<_> = (0..24)
+            .map(|_| engine.submit_model(ModelRequest::new(route.clone(), rng.gauss_vec(16))))
+            .collect();
+        let sessions: Vec<_> = (0..4)
+            .map(|_| {
+                let step: StepFn = Box::new(|_, y| Some(y.to_vec()));
+                engine
+                    .submit_session(SessionRequest::new(route.clone(), rng.gauss_vec(16), 3, step))
+            })
+            .collect();
+        let tel = engine.telemetry_handle();
+        let stats = engine.shutdown(); // must answer all 28 traversals first
+        assert_eq!(stats.model_requests, 28, "{dispatch:?}");
+        assert_eq!(stats.session_forwards, 24 + 4 * 3, "{dispatch:?}");
+        assert_eq!(stats.hops, (24 + 4 * 3) * 3, "{dispatch:?}");
+        assert_eq!(stats.failed_model_requests, 0, "{dispatch:?}");
+        let reentries = tel.snapshot(&[]).counter(Counter::ShardReentries);
+        match dispatch {
+            // Every hop after a traversal's first is a cross-shard push
+            // from inside a worker: 24·2 model re-entries + 4·8 session
+            // re-entries.
+            Dispatch::Sharded => assert_eq!(reentries, 24 * 2 + 4 * 8),
+            Dispatch::Global => assert_eq!(reentries, 0, "a global-core-only run must not tick"),
+        }
+        let mut ys = Vec::new();
+        for t in models {
+            let r = t.wait().unwrap();
+            assert_eq!(r.forwards, 1);
+            ys.push(r.y);
+        }
+        for t in sessions {
+            let r = t.wait().unwrap();
+            assert_eq!(r.forwards, 3);
+            ys.push(r.y);
+        }
+        answers.push(ys);
+    }
+    for (k, (s, g)) in answers[0].iter().zip(&answers[1]).enumerate() {
+        assert_eq!(s.len(), g.len());
+        for (u, v) in s.iter().zip(g) {
+            assert_eq!(u.to_bits(), v.to_bits(), "traversal {k}: sharded diverged from global");
+        }
+    }
+}
+
+#[test]
+fn panicking_shard_fails_only_its_own_traversal_in_both_modes() {
+    // The boom layer owns shard 1 of 2 (layer index 1); healthy layers
+    // own shard 0. Whichever worker executes the boom batch — its owner
+    // or a stealer — the panic is contained to that batch's riders and
+    // the worker survives to keep draining both shards.
+    for dispatch in [Dispatch::Sharded, Dispatch::Global] {
+        let model = PackedModel::new(vec![
+            square_layer("ok1", 10, 720),
+            boom_layer(10),
+            square_layer("ok2", 10, 721),
+        ]);
+        let engine = ServeEngine::builder(model)
+            .dispatch(dispatch)
+            .workers(2)
+            .max_batch(8)
+            .build()
+            .unwrap();
+        let doomed_route = engine.route(&["ok1", "boom", "ok2"]).unwrap();
+        let healthy_route = engine.route(&["ok1", "ok2"]).unwrap();
+        let mut rng = Rng::new(722);
+        let doomed = engine.submit_model(ModelRequest::new(doomed_route, rng.gauss_vec(10)));
+        let healthy =
+            engine.submit_model(ModelRequest::new(healthy_route.clone(), rng.gauss_vec(10)));
+        let err = doomed.wait().unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                ServeError::WorkerPanic { layer, hop: Some(2), .. } if layer == "boom"
+            ),
+            "{dispatch:?}: typed WorkerPanic naming layer and hop expected: {err:?}"
+        );
+        assert!(healthy.wait().is_ok(), "{dispatch:?}: unrelated traversal must be unaffected");
+        // The worker survived: both shards keep serving afterwards.
+        assert!(engine
+            .submit_model(ModelRequest::new(healthy_route, rng.gauss_vec(10)))
+            .wait()
+            .is_ok());
+        let stats = engine.shutdown();
+        assert_eq!(stats.failed_model_requests, 1, "{dispatch:?}");
+        // `model_requests` counts completions: the doomed traversal is
+        // in `failed_model_requests` instead.
+        assert_eq!(stats.model_requests, 2, "{dispatch:?}");
+        assert!(stats.batch_panics >= 1, "{dispatch:?}");
+        assert_eq!(stats.failed, 0, "{dispatch:?}: no single-layer rider rode that batch");
+    }
+}
+
+#[test]
+fn constructed_steal_registers_and_is_bit_identical_to_direct_forward() {
+    // Single-layer model: EVERY request maps to shard 0 of 2, so worker 1
+    // only ever gets work by stealing. Two sessions whose step functions
+    // park mid-kernel pin both workers: the sessions were necessarily
+    // taken by DIFFERENT workers (each blocks its taker), and only
+    // worker 0 owns shard 0 — so at least one acquisition crossed shards.
+    // That makes `Steals >= 1` deterministic, not scheduling luck.
+    let n = 12;
+    let model = PackedModel::new(vec![square_layer("sq", n, 750)]);
+    let reference = square_layer("sq", n, 750); // same seed, same weights
+    let engine = ServeEngine::builder(model).workers(2).max_batch(4).build().unwrap();
+    let route = engine.route(&["sq"]).unwrap();
+    let sq = engine.layer("sq").unwrap();
+    let mut rng = Rng::new(751);
+    let mut gated = Vec::new();
+    let mut gates = Vec::new();
+    let mut inputs = Vec::new();
+    for _ in 0..2 {
+        let (entered_tx, entered_rx) = mpsc::channel::<()>();
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let step: StepFn = Box::new(move |_, y| {
+            entered_tx.send(()).unwrap();
+            gate_rx.recv().unwrap();
+            Some(y.to_vec())
+        });
+        let x = rng.gauss_vec(n);
+        inputs.push(x.clone());
+        let t = engine.submit_session(SessionRequest::new(route.clone(), x, 2, step));
+        entered_rx.recv().unwrap(); // this session is now mid-step on SOME worker
+        gated.push(t);
+        gates.push(gate_tx);
+    }
+    // Flood plain requests while both workers are pinned: they pile up in
+    // shard 0 and are drained by both workers (more steals) once the
+    // gates open.
+    let flood: Vec<(Vec<f64>, _)> = (0..32)
+        .map(|_| {
+            let x = rng.gauss_vec(n);
+            (x.clone(), engine.submit(sq, None, x))
+        })
+        .collect();
+    for g in gates {
+        g.send(()).unwrap();
+    }
+    for (i, t) in gated.into_iter().enumerate() {
+        let r = t.wait().unwrap();
+        assert_eq!(r.forwards, 2);
+        // Two identity-stepped forwards == the layer applied twice.
+        let direct = reference.forward(&reference.forward(&inputs[i], None), None);
+        for (u, v) in r.y.iter().zip(&direct) {
+            assert_eq!(u.to_bits(), v.to_bits(), "gated session {i} diverged");
+        }
+    }
+    for (x, t) in flood {
+        let direct = reference.forward(&x, None);
+        let r = t.wait().unwrap();
+        for (u, v) in r.y.iter().zip(&direct) {
+            assert_eq!(u.to_bits(), v.to_bits(), "steal-path response must be bit-identical");
+        }
+    }
+    let tel = engine.telemetry();
+    assert!(tel.counter(Counter::Steals) >= 1, "constructed steal did not register");
+    assert!(tel.max_shard_depth_seen >= 1, "pushes must record shard depth");
+    let stats = engine.shutdown();
+    assert_eq!(stats.requests, 32);
+    assert_eq!(stats.model_requests, 2);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.failed_model_requests, 0);
+}

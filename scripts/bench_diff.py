@@ -47,6 +47,15 @@ Gated rows (a >threshold drop in any of them fails the job):
     - engine.instrumented.requests_per_s     (coalescing burst with full
                                               telemetry)
     - engine.disabled.requests_per_s         (same burst, instruments off)
+  BENCH_contention.json
+    - single_layer.sweep[*].sharded.requests_per_s   (admission scaling,
+                                              1→64 closed-loop submitters)
+    - single_layer.sweep[*].global.requests_per_s    (the reference core)
+    - single_layer.submitters_64.sharded.requests_per_s  (the scaling
+                                              headline, stable path)
+    - pipelined.sweep[*].sharded.requests_per_s
+    - pipelined.sweep[*].global.requests_per_s
+    - pipelined.submitters_64.sharded.requests_per_s
   BENCH_optq.json
     - unblocked.min_s / blocked[*].min_s     (lazy-batch blocking rows)
   BENCH_linalg.json
@@ -60,6 +69,16 @@ Absolute gates (checked on the FRESH record alone, no baseline involved):
                                               throughput, ever — not
                                               merely "no worse than last
                                               time")
+
+Absolute floors (fresh record alone, minimum instead of maximum):
+  BENCH_contention.json
+    - single_layer.submitters_64.speedup_sharded_vs_global >= 1.0
+    - pipelined.submitters_64.speedup_sharded_vs_global >= 1.0
+                                             (sharded dispatch must never
+                                              lose to the global batcher
+                                              reference core it replaced,
+                                              even on the single-shard
+                                              worst-case workload)
 
 Comparisons are skipped (with a note; a FAILURE under --require-baseline)
 when:
@@ -102,6 +121,12 @@ GATED_ROWS = [
     ("BENCH_artifact.json", "group_commit.concurrent.registers_per_s", "rate"),
     ("BENCH_telemetry.json", "engine.instrumented.requests_per_s", "rate"),
     ("BENCH_telemetry.json", "engine.disabled.requests_per_s", "rate"),
+    ("BENCH_contention.json", "single_layer.sweep.*.sharded.requests_per_s", "rate"),
+    ("BENCH_contention.json", "single_layer.sweep.*.global.requests_per_s", "rate"),
+    ("BENCH_contention.json", "single_layer.submitters_64.sharded.requests_per_s", "rate"),
+    ("BENCH_contention.json", "pipelined.sweep.*.sharded.requests_per_s", "rate"),
+    ("BENCH_contention.json", "pipelined.sweep.*.global.requests_per_s", "rate"),
+    ("BENCH_contention.json", "pipelined.submitters_64.sharded.requests_per_s", "rate"),
     ("BENCH_optq.json", "unblocked.min_s", "time"),
     ("BENCH_optq.json", "blocked.*.min_s", "time"),
     ("BENCH_linalg.json", "records.*.speedup", "rate"),
@@ -113,6 +138,15 @@ GATED_ROWS = [
 # grandfather the violation in.
 ABS_GATES = [
     ("BENCH_telemetry.json", "overhead_pct", 5.0),
+]
+
+# (file, dotted path, min value) — ABSOLUTE floors judged on the fresh
+# record alone, the mirror image of ABS_GATES: the value must stay AT OR
+# ABOVE the floor. Used for headline speedups that are design guarantees
+# rather than regression baselines.
+ABS_FLOORS = [
+    ("BENCH_contention.json", "single_layer.submitters_64.speedup_sharded_vs_global", 1.0),
+    ("BENCH_contention.json", "pipelined.submitters_64.speedup_sharded_vs_global", 1.0),
 ]
 
 # Records with differing values for any of these keys are not comparable.
@@ -129,6 +163,8 @@ IDENTITY_KEYS = [
     "adapter_counts",
     "block_sizes",
     "event_counts",
+    "submitters",
+    "workers",
 ]
 
 
@@ -233,10 +269,14 @@ def compare_file(fname, base_dir, fresh_dir, threshold, require_baseline):
 
 
 def check_abs_gates(fresh_dir, require_baseline):
-    """Absolute ceilings on the fresh records; no baseline involved."""
+    """Absolute ceilings AND floors on the fresh records; no baseline
+    involved. ABS_GATES rows fail at-or-above their budget, ABS_FLOORS
+    rows fail strictly below theirs."""
     failures = []
     checked = 0
-    for fname, path, max_val in ABS_GATES:
+    gates = [(f, p, v, "ceiling") for f, p, v in ABS_GATES]
+    gates += [(f, p, v, "floor") for f, p, v in ABS_FLOORS]
+    for fname, path, bound, kind in gates:
         fresh_path = os.path.join(fresh_dir, fname)
         if not os.path.exists(fresh_path):
             # compare_file already flags a missing fresh file when a
@@ -258,11 +298,18 @@ def check_abs_gates(fresh_dir, require_baseline):
                 failures.append(f"{fname}:{crumb} non-numeric (abs gate unchecked)")
                 continue
             checked += 1
-            worse = val >= max_val
+            if kind == "ceiling":
+                worse = val >= bound
+                budget = f"budget < {bound:g}"
+                verdict = f"exceeds the absolute budget {bound:g}"
+            else:
+                worse = val < bound
+                budget = f"floor >= {bound:g}"
+                verdict = f"falls below the absolute floor {bound:g}"
             marker = "ABS-FAIL" if worse else "ok"
-            print(f"  [{marker:>10}] {fname}:{crumb}  {val:.6g}  (budget < {max_val:g})")
+            print(f"  [{marker:>10}] {fname}:{crumb}  {val:.6g}  ({budget})")
             if worse:
-                failures.append(f"{fname}:{crumb} = {val:.6g} exceeds the absolute budget {max_val:g}")
+                failures.append(f"{fname}:{crumb} = {val:.6g} {verdict}")
     return failures, checked
 
 

@@ -4,8 +4,8 @@
 # Usage: scripts/check.sh [--bench]
 #   --bench  additionally run the perf benches that emit BENCH_*.json
 #            (bench_optq / bench_linalg / bench_serve / bench_adapters /
-#            bench_forward / bench_artifact / bench_telemetry; slow — not
-#            part of the default gate). Set
+#            bench_forward / bench_artifact / bench_telemetry /
+#            bench_contention; slow — not part of the default gate). Set
 #            CLOQ_BENCH_SMOKE=1 for the small-size smoke mode the CI
 #            bench-smoke job uses (seconds instead of minutes; records
 #            carry "smoke": true so scripts/bench_diff.py never mixes
@@ -76,7 +76,7 @@ else
 fi
 
 if [[ "${1:-}" == "--bench" ]]; then
-    echo "== perf benches (BENCH_{optq,linalg,serve,adapters,forward,artifact,telemetry}.json) =="
+    echo "== perf benches (BENCH_{optq,linalg,serve,adapters,forward,artifact,telemetry,contention}.json) =="
     cargo bench --bench bench_optq "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_linalg "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_serve "${CARGO_FLAGS[@]}"
@@ -84,6 +84,7 @@ if [[ "${1:-}" == "--bench" ]]; then
     cargo bench --bench bench_forward "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_artifact "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_telemetry "${CARGO_FLAGS[@]}"
+    cargo bench --bench bench_contention "${CARGO_FLAGS[@]}"
 fi
 
 echo "check.sh: all green"

@@ -4,9 +4,9 @@ the CI `check` job): synthesizes baseline/fresh BENCH_*.json pairs for
 every gated suite and asserts the gate's verdicts — pass on parity and
 improvements, fail on regressions past the threshold, skip vs fail
 semantics for missing/non-comparable baselines with and without
---require-baseline, schema-drift detection, and the ABSOLUTE telemetry
-overhead budget (which must fail on the fresh record alone, baseline or
-no baseline).
+--require-baseline, schema-drift detection, the ABSOLUTE telemetry
+overhead budget, and the ABSOLUTE contention speedup floor (both of
+which must fail on the fresh record alone, baseline or no baseline).
 """
 
 import copy
@@ -21,7 +21,7 @@ import bench_diff  # noqa: E402
 
 
 def synthetic_records():
-    """Minimal but schema-faithful records for all seven gated suites."""
+    """Minimal but schema-faithful records for all eight gated suites."""
     br = {"iters": 10, "mean_s": 1.1e-4, "min_s": 1e-4, "stddev_s": 1e-6}
     return {
         "BENCH_serve.json": {
@@ -109,6 +109,46 @@ def synthetic_records():
                 "disabled": {"requests": 48, "requests_per_s": 9000.0},
             },
             "overhead_pct": 2.2,
+        },
+        "BENCH_contention.json": {
+            "bench": "contention",
+            "smoke": True,
+            "shape": [48, 48],
+            "layers": 4,
+            "workers": 4,
+            "submitters": [1, 4, 16, 64],
+            "single_layer": {
+                "sweep": [
+                    {
+                        "submitters": s,
+                        "sharded": {"requests_per_s": 3000.0 + 100.0 * s},
+                        "global": {"requests_per_s": 3000.0},
+                        "speedup_sharded_vs_global": (3000.0 + 100.0 * s) / 3000.0,
+                    }
+                    for s in (1, 4, 16, 64)
+                ],
+                "submitters_64": {
+                    "sharded": {"requests_per_s": 9400.0},
+                    "global": {"requests_per_s": 3000.0},
+                    "speedup_sharded_vs_global": 9400.0 / 3000.0,
+                },
+            },
+            "pipelined": {
+                "sweep": [
+                    {
+                        "submitters": s,
+                        "sharded": {"requests_per_s": 1000.0 + 50.0 * s},
+                        "global": {"requests_per_s": 1000.0},
+                        "speedup_sharded_vs_global": (1000.0 + 50.0 * s) / 1000.0,
+                    }
+                    for s in (1, 4, 16, 64)
+                ],
+                "submitters_64": {
+                    "sharded": {"requests_per_s": 4200.0},
+                    "global": {"requests_per_s": 1000.0},
+                    "speedup_sharded_vs_global": 4.2,
+                },
+            },
         },
         "BENCH_optq.json": {
             "bench": "optq_lazy_batch_blocking",
@@ -247,6 +287,54 @@ def main():
         del recs["BENCH_telemetry.json"]["overhead_pct"]
         write_dir(fresh, recs)
         check("telemetry overhead row missing", run(base, fresh), 1)
+
+        # 5h. The contention scaling rows are relative-gated: a >25% drop
+        # in the 64-submitter sharded headline fails, as does one inside
+        # the sweep.
+        recs = synthetic_records()
+        recs["BENCH_contention.json"]["single_layer"]["submitters_64"]["sharded"][
+            "requests_per_s"
+        ] *= 0.5
+        write_dir(fresh, recs)
+        check("contention headline regression", run(base, fresh), 1)
+        recs = synthetic_records()
+        recs["BENCH_contention.json"]["pipelined"]["sweep"][1]["global"][
+            "requests_per_s"
+        ] *= 0.5
+        write_dir(fresh, recs)
+        check("contention sweep regression", run(base, fresh), 1)
+
+        # 5i. The sharded-vs-global speedup is an ABSOLUTE floor: < 1.0 at
+        # 64 submitters fails even when the baseline carries the identical
+        # (bad) number — the sharded core must never lose to the global
+        # reference core, no grandfathering.
+        recs = synthetic_records()
+        recs["BENCH_contention.json"]["pipelined"]["submitters_64"][
+            "speedup_sharded_vs_global"
+        ] = 0.93
+        bad_base = os.path.join(tmp, "bad_speedup_base")
+        write_dir(bad_base, copy.deepcopy(recs))
+        write_dir(fresh, recs)
+        check("contention speedup under floor", run(bad_base, fresh), 1)
+
+        # 5j. Exactly 1.0 sits ON the floor and passes (ties are allowed;
+        # only losing to the reference core fails).
+        recs = synthetic_records()
+        for w in ("single_layer", "pipelined"):
+            recs["BENCH_contention.json"][w]["submitters_64"][
+                "speedup_sharded_vs_global"
+            ] = 1.0
+        write_dir(fresh, recs)
+        check("contention speedup on the floor passes", run(base, fresh), 0)
+
+        # 5k. Losing a floored row entirely fails — an unchecked absolute
+        # floor is a failure, not a skip, even without --require-baseline.
+        recs = synthetic_records()
+        del recs["BENCH_contention.json"]["single_layer"]["submitters_64"][
+            "speedup_sharded_vs_global"
+        ]
+        write_dir(fresh, recs)
+        check("contention speedup row missing", run(base, fresh), 1)
 
         # 5c. A re-sized replay sweep ('event_counts' identity key) is not
         # comparable: skip by default, fail under --require-baseline.
