@@ -1,0 +1,207 @@
+//! The HTTP front-end, end to end over a real loopback socket: boot a
+//! quantized chain behind [`HttpServer`], then drive every endpoint with
+//! a raw `std::net::TcpStream` client (no HTTP library on either side) —
+//! tenant auth, a quota rejection, single-layer submits, a pipelined
+//! burst on one keep-alive connection, the adapter lifecycle
+//! (PUT register → POST hot-swap → DELETE unregister), a multi-step
+//! session, `/v1/stats`, and a `/metrics` Prometheus scrape.
+//!
+//! ```sh
+//! cargo run --release --example serve_http
+//! ```
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use cloq::linalg::Matrix;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{HttpServer, PackedLayer, PackedModel, ServeEngine};
+use cloq::util::prng::Rng;
+
+const TOKEN: &str = "tok-acme";
+
+/// Minimal raw-socket HTTP/1.1 client: write request bytes, frame
+/// responses by `Content-Length`. This is the whole client a non-Rust
+/// consumer needs.
+struct Client {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> anyhow::Result<Client> {
+        Ok(Client { stream: TcpStream::connect(addr)?, buf: Vec::new() })
+    }
+
+    fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        token: Option<&str>,
+        body: &str,
+    ) -> anyhow::Result<(u16, String)> {
+        let mut head = format!("{method} {path} HTTP/1.1\r\n");
+        if let Some(t) = token {
+            head.push_str(&format!("Authorization: Bearer {t}\r\n"));
+        }
+        head.push_str(&format!("Content-Length: {}\r\n\r\n", body.len()));
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body.as_bytes())?;
+        self.recv()
+    }
+
+    fn recv(&mut self) -> anyhow::Result<(u16, String)> {
+        let mut tmp = [0u8; 4096];
+        loop {
+            if let Some(pos) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                let head = String::from_utf8(self.buf[..pos].to_vec())?;
+                let status: u16 = head.split(' ').nth(1).unwrap_or("0").parse()?;
+                let cl = head
+                    .lines()
+                    .find_map(|l| {
+                        let (k, v) = l.split_once(':')?;
+                        k.eq_ignore_ascii_case("content-length")
+                            .then(|| v.trim().parse::<usize>().ok())?
+                    })
+                    .unwrap_or(0);
+                let start = pos + 4;
+                while self.buf.len() < start + cl {
+                    let n = self.stream.read(&mut tmp)?;
+                    anyhow::ensure!(n > 0, "server closed mid-body");
+                    self.buf.extend_from_slice(&tmp[..n]);
+                }
+                let body = String::from_utf8(self.buf[start..start + cl].to_vec())?;
+                self.buf.drain(..start + cl);
+                return Ok((status, body));
+            }
+            let n = self.stream.read(&mut tmp)?;
+            anyhow::ensure!(n > 0, "server closed before a response");
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+}
+
+fn nums(xs: &[f64]) -> String {
+    xs.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",")
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(42);
+
+    // ---- 1. a quantized 12→8→20→12 chain behind the HTTP front-end -------
+    let mut layers = Vec::new();
+    for (name, m, n) in [("a", 12usize, 8usize), ("b", 8, 20), ("c", 20, 12)] {
+        let w = Matrix::randn(m, n, 0.3, &mut rng);
+        let q = QuantState::Int(quantize_rtn(&w, 4, 8));
+        layers.push(PackedLayer::from_state(name, &q)?);
+    }
+    let engine = Arc::new(
+        ServeEngine::builder(PackedModel::new(layers)).workers(2).max_batch(8).build()?,
+    );
+    let server = HttpServer::builder(Arc::clone(&engine))
+        .tenant("acme", TOKEN, 8) // 8 in-flight inference requests
+        .tenant("metered", "tok-metered", 0) // 0 → every inference call is 429
+        .build()?;
+    let addr = server.addr();
+    println!("== serve_http == listening on {addr} (loopback, OS-assigned port)");
+
+    // ---- 2. auth + quota: rejected before the engine ever sees them -------
+    let mut c = Client::connect(addr)?;
+    let (status, body) = c.request("GET", "/v1/stats", None, "")?;
+    println!("   no token        → {status} {body}");
+    anyhow::ensure!(status == 401);
+    let x12 = rng.gauss_vec(12);
+    let submit = format!("{{\"layer\":\"a\",\"x\":[{}]}}", nums(&x12));
+    let (status, body) = c.request("POST", "/v1/submit", Some("tok-metered"), &submit)?;
+    println!("   quota 0 tenant  → {status} {body}");
+    anyhow::ensure!(status == 429);
+
+    // ---- 3. single-layer submit + a pipelined burst on ONE connection -----
+    let (status, body) = c.request("POST", "/v1/submit", Some(TOKEN), &submit)?;
+    anyhow::ensure!(status == 200, "submit failed: {body}");
+    println!("   submit a        → {status} {} response bytes", body.len());
+    // Four requests written back-to-back before reading a single response:
+    // all four are in the engine concurrently; the rail answers in order.
+    let mut burst = Vec::new();
+    for _ in 0..4 {
+        let x = rng.gauss_vec(12);
+        let b = format!("{{\"layer\":\"a\",\"x\":[{}]}}", nums(&x));
+        burst.extend_from_slice(
+            format!(
+                "POST /v1/submit HTTP/1.1\r\nAuthorization: Bearer {TOKEN}\r\n\
+                 Content-Length: {}\r\n\r\n{b}",
+                b.len()
+            )
+            .as_bytes(),
+        );
+    }
+    c.stream.write_all(&burst)?;
+    for k in 0..4 {
+        let (status, _) = c.recv()?;
+        anyhow::ensure!(status == 200, "pipelined response {k}");
+    }
+    println!("   pipelined burst → 4 requests, one write, 4 ordered 200s");
+
+    // ---- 4. adapter lifecycle over the wire -------------------------------
+    let (rank, rows, cols) = (2usize, 12usize, 8usize);
+    let mk_body = |scale: f64| {
+        let a: Vec<f64> = (0..rows * rank).map(|i| scale * (0.01 * i as f64 - 0.1)).collect();
+        let b: Vec<f64> = (0..cols * rank).map(|i| scale * (0.02 - 0.009 * i as f64)).collect();
+        format!(
+            "{{\"layers\":[{{\"layer\":\"a\",\"rank\":{rank},\"a\":[{}],\"b\":[{}]}}]}}",
+            nums(&a),
+            nums(&b)
+        )
+    };
+    let (status, body) = c.request("PUT", "/v1/adapters/t1", Some(TOKEN), &mk_body(1.0))?;
+    println!("   PUT adapter     → {status} {body}");
+    anyhow::ensure!(status == 200);
+    let with_adapter = format!("{{\"layer\":\"a\",\"adapter\":\"t1\",\"x\":[{}]}}", nums(&x12));
+    let (status, _) = c.request("POST", "/v1/submit", Some(TOKEN), &with_adapter)?;
+    anyhow::ensure!(status == 200);
+    let (status, body) = c.request("POST", "/v1/adapters/t1", Some(TOKEN), &mk_body(-0.5))?;
+    println!("   hot-swap        → {status} {body}");
+    anyhow::ensure!(status == 200);
+    let (status, body) = c.request("DELETE", "/v1/adapters/t1", Some(TOKEN), "")?;
+    println!("   DELETE adapter  → {status} {body}");
+    anyhow::ensure!(status == 200);
+    let (status, body) = c.request("POST", "/v1/submit", Some(TOKEN), &with_adapter)?;
+    println!("   stale adapter   → {status} {body} (typed, over the wire)");
+    anyhow::ensure!(status == 404);
+
+    // ---- 5. a 3-step session on the loopable chain ------------------------
+    let session = format!(
+        "{{\"route\":[\"a\",\"b\",\"c\"],\"x\":[{}],\"steps\":3}}",
+        nums(&x12)
+    );
+    let (status, body) = c.request("POST", "/v1/session", Some(TOKEN), &session)?;
+    anyhow::ensure!(status == 200, "session failed: {body}");
+    println!("   3-step session  → {status} {} response bytes", body.len());
+
+    // ---- 6. observability: /v1/stats (tenant) + /metrics (scraper) --------
+    let (status, body) = c.request("GET", "/v1/stats", Some(TOKEN), "")?;
+    anyhow::ensure!(status == 200);
+    println!("   /v1/stats       → {body}");
+    let (status, prom) = c.request("GET", "/metrics", None, "")?;
+    anyhow::ensure!(status == 200);
+    let shown: Vec<&str> =
+        prom.lines().filter(|l| l.starts_with("cloq_http_")).take(6).collect();
+    println!("   /metrics        → {} bytes; http counters:", prom.len());
+    for line in &shown {
+        println!("      {line}");
+    }
+
+    server.shutdown();
+    drop(c);
+    let stats = match Arc::try_unwrap(engine) {
+        Ok(e) => e.shutdown(),
+        Err(_) => anyhow::bail!("server kept an engine handle after shutdown"),
+    };
+    println!(
+        "\n== totals == {} singles + {} model/session requests in {} micro-batches",
+        stats.requests, stats.model_requests, stats.batches
+    );
+    println!("\nserve_http: OK");
+    Ok(())
+}

@@ -1,0 +1,237 @@
+//! HTTP front-end benchmarks — the numbers behind EXPERIMENTS.md §HTTP,
+//! emitted as BENCH_http.json:
+//!
+//! 1. **requests/s vs keep-alive connections**: closed-loop clients on
+//!    1 / 16 / 64 keep-alive loopback connections, each firing sequential
+//!    `POST /v1/submit` calls. This measures the whole wire path — parse,
+//!    auth, lazy JSON scan, engine round trip, completion-callback
+//!    serialization, rail write — under increasing connection-level
+//!    concurrency.
+//! 2. **wire overhead vs direct submit**: the SAME request burst through
+//!    the in-process typed façade (`submit_all` + wait) and through 16
+//!    HTTP connections. The headline `wire_overhead_us` is what one
+//!    request pays for leaving the process.
+//! 3. **`/metrics` scrape latency**: a full Prometheus scrape round trip
+//!    on a keep-alive connection — the cost a metrics poller imposes.
+//!
+//! Under `CLOQ_BENCH_SMOKE=1` shapes and request counts shrink and the
+//! record carries `"smoke": true` so `scripts/bench_diff.py` only
+//! compares like against like. Endpoint correctness is NOT measured
+//! here — that lives in `rust/tests/http_serve.rs`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Instant;
+
+use cloq::bench::{bench, section, smoke, smoke_scaled, target_time, write_bench_json};
+use cloq::linalg::Matrix;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{HttpServer, PackedLayer, PackedModel, Request, ServeEngine};
+use cloq::util::json::Json;
+use cloq::util::prng::Rng;
+
+const TOKEN: &str = "tok-bench";
+
+/// Minimal blocking client: send raw bytes, frame responses by
+/// Content-Length. Allocation-light on purpose — the bench should time
+/// the server, not the harness.
+struct Client {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_nodelay(true).unwrap();
+        Client { stream, buf: Vec::new() }
+    }
+
+    fn roundtrip(&mut self, request: &[u8]) -> u16 {
+        self.stream.write_all(request).unwrap();
+        let mut tmp = [0u8; 8192];
+        loop {
+            if let Some(pos) = self.buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                let head = std::str::from_utf8(&self.buf[..pos]).unwrap();
+                let status: u16 = head.split(' ').nth(1).unwrap().parse().unwrap();
+                let cl = head
+                    .lines()
+                    .find_map(|l| {
+                        let (k, v) = l.split_once(':')?;
+                        k.eq_ignore_ascii_case("content-length")
+                            .then(|| v.trim().parse::<usize>().unwrap())
+                    })
+                    .unwrap_or(0);
+                let total = pos + 4 + cl;
+                while self.buf.len() < total {
+                    let n = self.stream.read(&mut tmp).unwrap();
+                    assert!(n > 0, "server closed mid-response");
+                    self.buf.extend_from_slice(&tmp[..n]);
+                }
+                self.buf.drain(..total);
+                return status;
+            }
+            let n = self.stream.read(&mut tmp).unwrap();
+            assert!(n > 0, "server closed before a response");
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+}
+
+fn submit_request(x: &[f64]) -> Vec<u8> {
+    let xs = x.iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(",");
+    let body = format!("{{\"layer\":\"bench\",\"x\":[{xs}]}}");
+    format!(
+        "POST /v1/submit HTTP/1.1\r\nAuthorization: Bearer {TOKEN}\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Closed-loop burst: `conns` keep-alive connections, each firing its
+/// share of `total` sequential requests. Returns wall seconds.
+fn http_burst(addr: SocketAddr, request: &[u8], conns: usize, total: usize) -> f64 {
+    let per = total / conns;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..conns)
+        .map(|_| {
+            let request = request.to_vec();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr);
+                for _ in 0..per {
+                    assert_eq!(c.roundtrip(&request), 200);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let mut rng = Rng::new(29);
+    let t = target_time(0.3);
+    let (m, n) = (smoke_scaled(128, 32), smoke_scaled(128, 32));
+    let w = Matrix::randn(m, n, 0.3, &mut rng);
+    let layer = PackedLayer::from_state("bench", &QuantState::Int(quantize_rtn(&w, 4, 32)))
+        .unwrap();
+    let engine = Arc::new(
+        ServeEngine::builder(PackedModel::new(vec![layer]))
+            .workers(2)
+            .max_batch(32)
+            .build()
+            .unwrap(),
+    );
+    let server = HttpServer::builder(Arc::clone(&engine))
+        .max_connections(128)
+        .tenant("bench", TOKEN, 256)
+        .build()
+        .unwrap();
+    let addr = server.addr();
+    let x = rng.gauss_vec(m);
+    let request = submit_request(&x);
+
+    // ---- 1. requests/s vs keep-alive connections --------------------------
+    let connection_counts = [1usize, 16, 64];
+    let total = smoke_scaled(2048, 192);
+    let rounds = smoke_scaled(3, 2);
+    section(&format!(
+        "http throughput: {total} POST /v1/submit ({m}x{n}) over 1/16/64 keep-alive connections"
+    ));
+    let mut sweep = Vec::new();
+    for &conns in &connection_counts {
+        let mut best = f64::INFINITY;
+        for _ in 0..rounds {
+            best = best.min(http_burst(addr, &request, conns, total));
+        }
+        let served = (total / conns) * conns; // integer split, exact count
+        let rps = served as f64 / best;
+        println!("  {conns:>3} connections: {rps:>9.0} req/s (best of {rounds})");
+        sweep.push(Json::from_pairs(vec![
+            ("connections", Json::from(conns)),
+            ("requests", Json::from(served)),
+            ("best_wall_s", Json::from(best)),
+            ("requests_per_s", Json::from(rps)),
+        ]));
+    }
+
+    // ---- 2. wire overhead vs the in-process façade ------------------------
+    section("wire overhead: 16 http connections vs direct submit_all");
+    let lid = engine.layer("bench").unwrap();
+    let mut direct_wall = f64::INFINITY;
+    for _ in 0..rounds {
+        let reqs: Vec<Request> = (0..total).map(|_| Request::base(lid, x.clone())).collect();
+        let t0 = Instant::now();
+        for tk in engine.submit_all(reqs) {
+            tk.wait().unwrap();
+        }
+        direct_wall = direct_wall.min(t0.elapsed().as_secs_f64());
+    }
+    let mut http_wall = f64::INFINITY;
+    for _ in 0..rounds {
+        http_wall = http_wall.min(http_burst(addr, &request, 16, total));
+    }
+    let served = (total / 16) * 16;
+    let direct_rps = total as f64 / direct_wall;
+    let http_rps = served as f64 / http_wall;
+    let wire_overhead_us = (http_wall / served as f64 - direct_wall / total as f64) * 1e6;
+    println!(
+        "  direct {direct_rps:>9.0} req/s, http {http_rps:>9.0} req/s → \
+         wire overhead {wire_overhead_us:.1} µs/request"
+    );
+    let overhead_json = Json::from_pairs(vec![
+        (
+            "direct",
+            Json::from_pairs(vec![
+                ("requests", Json::from(total)),
+                ("best_wall_s", Json::from(direct_wall)),
+                ("requests_per_s", Json::from(direct_rps)),
+            ]),
+        ),
+        (
+            "http",
+            Json::from_pairs(vec![
+                ("requests", Json::from(served)),
+                ("best_wall_s", Json::from(http_wall)),
+                ("requests_per_s", Json::from(http_rps)),
+            ]),
+        ),
+        ("wire_overhead_us", Json::from(wire_overhead_us)),
+    ]);
+
+    // ---- 3. /metrics scrape latency ---------------------------------------
+    section("scrape: GET /metrics round trip on one keep-alive connection");
+    let scrape = b"GET /metrics HTTP/1.1\r\n\r\n";
+    let mut c = Client::connect(addr);
+    let r_scrape = bench("GET /metrics", t, || c.roundtrip(scrape));
+    println!("  scrape {:.1} µs round trip", r_scrape.min_s * 1e6);
+    let scrape_json = r_scrape.to_json();
+
+    server.shutdown();
+    drop(c);
+
+    let record = Json::from_pairs(vec![
+        ("bench", Json::from("http")),
+        ("smoke", Json::from(smoke())),
+        ("shape", Json::Arr(vec![Json::from(m), Json::from(n)])),
+        (
+            "connection_counts",
+            Json::Arr(connection_counts.iter().map(|&c| Json::from(c)).collect()),
+        ),
+        ("connections", Json::from_pairs(vec![("sweep", Json::Arr(sweep))])),
+        ("overhead", overhead_json),
+        ("scrape", scrape_json),
+        (
+            "parity",
+            Json::from(
+                "0-ULP wire parity vs the in-process façade, the rejection taxonomy, and \
+                 byte-split robustness are enforced by rust/tests/http_serve.rs",
+            ),
+        ),
+    ]);
+    write_bench_json("http", record);
+}

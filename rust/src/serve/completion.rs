@@ -1,0 +1,347 @@
+//! Non-blocking request completion: the one-shot cell behind every ticket.
+//!
+//! The engine used to resolve tickets over `std::sync::mpsc` channels,
+//! which offer exactly one consumption mode: park the calling thread in
+//! `recv()`. That shape is fine for a benchmark loop and fatal for a
+//! serving front-end — an HTTP connection with 64 pipelined requests in
+//! flight would need 64 parked threads just to notice completions. This
+//! module replaces the channel with a purpose-built one-shot
+//! [`CompletionCell`]: a `Mutex`-guarded slot plus `Condvar` that supports
+//! all three consumption modes from one primitive:
+//!
+//! * **blocking** — [`CompletionHandle::wait`] / `wait_timeout` park on the
+//!   condvar exactly like `recv()` did (the engine's original contract,
+//!   preserved bit-for-bit including the dropped-engine →
+//!   [`ServeError::ShuttingDown`] mapping);
+//! * **polling** — [`CompletionHandle::try_take`] returns `None` until the
+//!   result lands, then yields it exactly once;
+//! * **callback** — [`CompletionHandle::on_complete`] installs a
+//!   `FnOnce(Result<T, ServeError>)` that the COMPLETING thread runs the
+//!   moment it delivers (inline if the result already landed). This is the
+//!   HTTP layer's mode: one thread per connection, any number of in-flight
+//!   requests, zero parked waiters.
+//!
+//! The public face is the [`Completion`] trait, implemented by both
+//! `Ticket` and `ModelTicket`, so generic callers (the HTTP handlers, load
+//! generators, tests) drive either ticket shape through one interface.
+//!
+//! Delivery semantics, chosen to match the old channel exactly:
+//!
+//! * first delivery wins; later sends are dropped (the engine never
+//!   double-sends, but a late reply after a `wait_timeout` abandon must be
+//!   a no-op, as it was when the receiver was dropped);
+//! * dropping the LAST sender with nothing delivered delivers
+//!   `Err(ServeError::ShuttingDown)` — the mpsc "disconnected" contract —
+//!   so an engine that drops a `Pending` on the floor during shutdown
+//!   still resolves every outstanding ticket;
+//! * callbacks run on whichever thread completes the cell (an engine
+//!   worker, or the caller itself when installed after delivery), NEVER
+//!   under the cell's lock — a callback is free to take other locks, issue
+//!   new submits, or write to a socket.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::serve::error::ServeError;
+
+/// Boxed completion callback: runs exactly once with the request's result.
+pub type CompleteFn<T> = Box<dyn FnOnce(Result<T, ServeError>) + Send + 'static>;
+
+/// What the cell's slot currently holds.
+enum Slot<T> {
+    /// No result yet, no callback installed.
+    Empty,
+    /// Result delivered, not yet consumed.
+    Value(Result<T, ServeError>),
+    /// Caller installed a callback before the result arrived; the
+    /// completing thread takes it and runs it outside the lock.
+    Callback(CompleteFn<T>),
+    /// Result consumed (taken by `try_take`/`wait` or fed to a callback).
+    Taken,
+}
+
+struct State<T> {
+    slot: Slot<T>,
+    /// Live [`CompletionSender`] clones. When this reaches zero with the
+    /// slot still undelivered, the drop path delivers `ShuttingDown`.
+    senders: usize,
+}
+
+/// The shared one-shot cell. Senders and the handle each hold an `Arc`.
+struct CompletionCell<T> {
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+impl<T> CompletionCell<T> {
+    /// Deliver `value` (first delivery wins). Returns whether the value
+    /// was accepted; a pre-delivered or consumed cell drops it. Runs any
+    /// installed callback outside the lock.
+    fn deliver(&self, value: Result<T, ServeError>) -> bool {
+        let callback = {
+            let mut st = self.state.lock().unwrap();
+            match std::mem::replace(&mut st.slot, Slot::Taken) {
+                Slot::Empty => {
+                    st.slot = Slot::Value(value);
+                    self.cv.notify_all();
+                    return true;
+                }
+                Slot::Callback(f) => f, // slot stays Taken
+                prev @ (Slot::Value(_) | Slot::Taken) => {
+                    st.slot = prev; // late/duplicate delivery: drop `value`
+                    return false;
+                }
+            }
+        };
+        callback(value);
+        true
+    }
+}
+
+/// Producer side of a completion cell. Clonable (a traversal's reply path
+/// moves between queues); the LAST clone to drop without delivering
+/// resolves the cell with [`ServeError::ShuttingDown`].
+pub(crate) struct CompletionSender<T> {
+    cell: Arc<CompletionCell<T>>,
+}
+
+impl<T> CompletionSender<T> {
+    /// Deliver the result. Returns `false` when the cell was already
+    /// resolved (late reply after an abandoned `wait_timeout`; dropped on
+    /// the floor, exactly like a send to a dropped mpsc receiver).
+    pub fn send(&self, value: Result<T, ServeError>) -> bool {
+        self.cell.deliver(value)
+    }
+}
+
+impl<T> Clone for CompletionSender<T> {
+    fn clone(&self) -> CompletionSender<T> {
+        self.cell.state.lock().unwrap().senders += 1;
+        CompletionSender { cell: Arc::clone(&self.cell) }
+    }
+}
+
+impl<T> Drop for CompletionSender<T> {
+    fn drop(&mut self) {
+        let last = {
+            let mut st = self.cell.state.lock().unwrap();
+            st.senders -= 1;
+            st.senders == 0 && matches!(st.slot, Slot::Empty | Slot::Callback(_))
+        };
+        if last {
+            // All senders gone, nothing delivered: the engine dropped this
+            // request (shutdown drain). Resolve the waiter.
+            self.cell.deliver(Err(ServeError::ShuttingDown));
+        }
+    }
+}
+
+/// Consumer side of a completion cell; embedded in `Ticket` /
+/// `ModelTicket`. One result, consumed exactly once through whichever of
+/// the three modes the caller picks.
+pub(crate) struct CompletionHandle<T> {
+    cell: Arc<CompletionCell<T>>,
+}
+
+impl<T> CompletionHandle<T> {
+    /// Non-blocking poll: the result if it has landed, else `None`.
+    /// Yields the result at most once.
+    pub fn try_take(&mut self) -> Option<Result<T, ServeError>> {
+        let mut st = self.cell.state.lock().unwrap();
+        match std::mem::replace(&mut st.slot, Slot::Taken) {
+            Slot::Value(v) => Some(v),
+            other => {
+                st.slot = other;
+                None
+            }
+        }
+    }
+
+    /// Install `f` to run with the result. If the result already landed,
+    /// `f` runs inline on this thread before the call returns; otherwise
+    /// the completing engine thread runs it at delivery.
+    pub fn on_complete(self, f: CompleteFn<T>) {
+        let value = {
+            let mut st = self.cell.state.lock().unwrap();
+            match std::mem::replace(&mut st.slot, Slot::Taken) {
+                Slot::Value(v) => v,
+                Slot::Empty => {
+                    st.slot = Slot::Callback(f);
+                    return;
+                }
+                Slot::Callback(_) => unreachable!("on_complete installed twice"),
+                Slot::Taken => unreachable!("on_complete after the result was consumed"),
+            }
+        };
+        f(value);
+    }
+
+    /// Park until the result lands. A cell whose senders all dropped
+    /// resolves as `Err(ShuttingDown)` (delivered by the drop path), so
+    /// this can never deadlock against a dying engine.
+    pub fn wait(mut self) -> Result<T, ServeError> {
+        let mut st = self.cell.state.lock().unwrap();
+        loop {
+            if let Slot::Value(_) = st.slot {
+                drop(st);
+                return self.try_take().expect("slot checked Value under the lock");
+            }
+            st = self.cell.cv.wait(st).unwrap();
+        }
+    }
+
+    /// [`wait`](CompletionHandle::wait) with a deadline:
+    /// [`ServeError::Timeout`] once `timeout` elapses with no result.
+    pub fn wait_timeout(mut self, timeout: Duration) -> Result<T, ServeError> {
+        let t0 = Instant::now();
+        let mut st = self.cell.state.lock().unwrap();
+        loop {
+            if let Slot::Value(_) = st.slot {
+                drop(st);
+                return self.try_take().expect("slot checked Value under the lock");
+            }
+            let left = match timeout.checked_sub(t0.elapsed()) {
+                Some(left) => left,
+                None => return Err(ServeError::Timeout { elapsed: t0.elapsed() }),
+            };
+            let (guard, res) = self.cell.cv.wait_timeout(st, left).unwrap();
+            st = guard;
+            if res.timed_out() && !matches!(st.slot, Slot::Value(_)) {
+                return Err(ServeError::Timeout { elapsed: t0.elapsed() });
+            }
+        }
+    }
+}
+
+/// Create a linked sender/handle pair over a fresh cell.
+pub(crate) fn channel<T>() -> (CompletionSender<T>, CompletionHandle<T>) {
+    let cell = Arc::new(CompletionCell {
+        state: Mutex::new(State { slot: Slot::Empty, senders: 1 }),
+        cv: Condvar::new(),
+    });
+    (CompletionSender { cell: Arc::clone(&cell) }, CompletionHandle { cell })
+}
+
+/// The unified ticket interface: every submitted request — single-layer
+/// `Ticket` or model/session `ModelTicket` — resolves through one of three
+/// consumption modes. Generic callers (the HTTP front-end's dispatch path,
+/// load generators) take `impl Completion<Output = _>` and never care
+/// which ticket shape they hold.
+///
+/// `wait` and `wait_timeout` are the pre-existing blocking API, now
+/// trivial wrappers over the shared cell; `try_wait` and `on_complete`
+/// are the non-blocking additions.
+pub trait Completion: Send {
+    type Output: Send + 'static;
+
+    /// Non-blocking poll: `Some(result)` once resolved (at most once).
+    fn try_wait(&mut self) -> Option<Result<Self::Output, ServeError>>;
+
+    /// Consume the ticket, installing a callback the completing thread
+    /// runs with the result (inline if already resolved). The callback
+    /// runs outside all engine locks.
+    fn on_complete(self, f: CompleteFn<Self::Output>);
+
+    /// Block until the engine answers. An engine that dropped before
+    /// answering reports [`ServeError::ShuttingDown`].
+    fn wait(self) -> Result<Self::Output, ServeError>;
+
+    /// [`wait`](Completion::wait) with a deadline: [`ServeError::Timeout`]
+    /// once `timeout` elapses with no reply. The deadline is a CALLER-side
+    /// contract only — the request is not cancelled; it still holds its
+    /// live backpressure slot and its late reply is dropped.
+    fn wait_timeout(self, timeout: Duration) -> Result<Self::Output, ServeError>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+
+    #[test]
+    fn try_take_polls_then_yields_once() {
+        let (tx, mut rx) = channel::<u32>();
+        assert!(rx.try_take().is_none());
+        assert!(tx.send(Ok(7)));
+        assert_eq!(rx.try_take().unwrap().unwrap(), 7);
+        assert!(rx.try_take().is_none(), "a result is consumed exactly once");
+    }
+
+    #[test]
+    fn wait_blocks_until_cross_thread_delivery() {
+        let (tx, rx) = channel::<u32>();
+        let t = thread::spawn(move || rx.wait());
+        thread::sleep(Duration::from_millis(10));
+        assert!(tx.send(Ok(42)));
+        assert_eq!(t.join().unwrap().unwrap(), 42);
+    }
+
+    #[test]
+    fn dropping_last_sender_resolves_shutting_down() {
+        let (tx, rx) = channel::<u32>();
+        let tx2 = tx.clone();
+        drop(tx);
+        let t = thread::spawn(move || rx.wait());
+        thread::sleep(Duration::from_millis(5));
+        drop(tx2); // LAST sender: delivers ShuttingDown
+        assert!(matches!(t.join().unwrap(), Err(ServeError::ShuttingDown)));
+    }
+
+    #[test]
+    fn wait_timeout_times_out_then_late_send_is_dropped() {
+        let (tx, rx) = channel::<u32>();
+        let err = rx.wait_timeout(Duration::from_millis(5)).unwrap_err();
+        assert!(matches!(err, ServeError::Timeout { .. }), "{err:?}");
+        assert!(!tx.send(Ok(1)), "late reply after an abandoned wait is dropped");
+    }
+
+    #[test]
+    fn callback_installed_before_delivery_runs_on_completing_thread() {
+        let (tx, rx) = channel::<u32>();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        rx.on_complete(Box::new(move |r| {
+            assert_eq!(r.unwrap(), 9);
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(hits.load(Ordering::SeqCst), 0, "not yet delivered");
+        let t = thread::spawn(move || tx.send(Ok(9)));
+        assert!(t.join().unwrap());
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn callback_installed_after_delivery_runs_inline() {
+        let (tx, rx) = channel::<u32>();
+        assert!(tx.send(Err(ServeError::ShuttingDown)));
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        rx.on_complete(Box::new(move |r| {
+            assert!(matches!(r, Err(ServeError::ShuttingDown)));
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        assert_eq!(hits.load(Ordering::SeqCst), 1, "ran inline before on_complete returned");
+    }
+
+    #[test]
+    fn sender_drop_fires_installed_callback() {
+        let (tx, rx) = channel::<u32>();
+        let hits = Arc::new(AtomicUsize::new(0));
+        let h = Arc::clone(&hits);
+        rx.on_complete(Box::new(move |r| {
+            assert!(matches!(r, Err(ServeError::ShuttingDown)));
+            h.fetch_add(1, Ordering::SeqCst);
+        }));
+        drop(tx);
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn first_delivery_wins() {
+        let (tx, rx) = channel::<u32>();
+        assert!(tx.send(Ok(1)));
+        assert!(!tx.send(Ok(2)));
+        assert_eq!(rx.wait().unwrap(), 1);
+    }
+}

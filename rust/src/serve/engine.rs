@@ -162,7 +162,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use crate::linalg::Matrix;
@@ -170,6 +170,7 @@ use crate::lowrank::LoraPair;
 use crate::serve::adapters::{
     AdapterHandle, AdapterId, AdapterRegistry, AdapterSet, RegisterOutcome,
 };
+use crate::serve::completion::{self, CompleteFn, Completion, CompletionHandle, CompletionSender};
 use crate::serve::error::ServeError;
 use crate::serve::forward::{
     HopOutcome, ModelRequest, ModelResponse, ModelTicket, SessionRequest, StepFn, Traversal,
@@ -551,16 +552,18 @@ impl EngineStats {
 }
 
 /// Handle to a submitted request; resolves to its [`Response`] or a typed
-/// [`ServeError`].
+/// [`ServeError`]. Implements [`Completion`] — poll with
+/// [`try_wait`](Completion::try_wait) or attach a callback with
+/// [`on_complete`](Completion::on_complete) instead of parking a thread.
 pub struct Ticket {
-    rx: mpsc::Receiver<Result<Response, ServeError>>,
+    cell: CompletionHandle<Response>,
 }
 
 impl Ticket {
     /// Block until the engine answers. An engine that dropped before
     /// answering reports [`ServeError::ShuttingDown`].
     pub fn wait(self) -> Result<Response, ServeError> {
-        self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
+        self.cell.wait()
     }
 
     /// [`wait`](Ticket::wait) with a deadline: [`ServeError::Timeout`]
@@ -573,21 +576,34 @@ impl Ticket {
     /// receiver) is consumed. Use it to bound caller latency, not engine
     /// load.
     pub fn wait_timeout(self, timeout: std::time::Duration) -> Result<Response, ServeError> {
-        let t0 = Instant::now();
-        match self.rx.recv_timeout(timeout) {
-            Ok(reply) => reply,
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                Err(ServeError::Timeout { elapsed: t0.elapsed() })
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::ShuttingDown),
-        }
+        self.cell.wait_timeout(timeout)
+    }
+}
+
+impl Completion for Ticket {
+    type Output = Response;
+
+    fn try_wait(&mut self) -> Option<Result<Response, ServeError>> {
+        self.cell.try_take()
+    }
+
+    fn on_complete(self, f: CompleteFn<Response>) {
+        self.cell.on_complete(f);
+    }
+
+    fn wait(self) -> Result<Response, ServeError> {
+        Ticket::wait(self)
+    }
+
+    fn wait_timeout(self, timeout: std::time::Duration) -> Result<Response, ServeError> {
+        Ticket::wait_timeout(self, timeout)
     }
 }
 
 /// How a hop replies when its work is done.
 enum HopKind {
     /// Single-layer request: reply with a [`Response`] after this hop.
-    Single { tx: mpsc::Sender<Result<Response, ServeError>> },
+    Single { tx: CompletionSender<Response> },
     /// Model/session traversal: consult [`Traversal::absorb_hop`] — it
     /// either re-enters the FIFO or replies with a [`ModelResponse`].
     Traversal(Box<Traversal>),
@@ -855,7 +871,7 @@ impl ServeEngine {
     /// wrong input length, unknown adapter) resolve immediately with a
     /// typed error — they never occupy queue space.
     pub fn submit(&self, layer: LayerId, adapter: Option<AdapterId>, x: Vec<f64>) -> Ticket {
-        let (tx, rx) = mpsc::channel();
+        let (tx, cell) = completion::channel();
         match self.admit(layer, adapter, x, &tx) {
             Ok(p) => {
                 if let Err((p, e)) = self.try_enqueue(p) {
@@ -864,7 +880,7 @@ impl ServeEngine {
             }
             Err(e) => self.reject(&tx, e),
         }
-        Ticket { rx }
+        Ticket { cell }
     }
 
     /// Name-resolving convenience submit: looks the layer and adapter up
@@ -883,9 +899,9 @@ impl ServeEngine {
         match resolved {
             Ok((lid, aid)) => self.submit(lid, aid, x),
             Err(e) => {
-                let (tx, rx) = mpsc::channel();
+                let (tx, cell) = completion::channel();
                 self.reject(&tx, e);
-                Ticket { rx }
+                Ticket { cell }
             }
         }
     }
@@ -896,7 +912,7 @@ impl ServeEngine {
     /// reference ([`crate::serve::forward::forward_route_serial`]) — see
     /// the parity contract in `serve::forward`.
     pub fn submit_model(&self, req: ModelRequest) -> ModelTicket {
-        let (tx, rx) = mpsc::channel();
+        let (tx, cell) = completion::channel();
         match self.admit_traversal(&req.route, req.adapter, req.x, 1, None, &tx) {
             Ok(p) => {
                 if let Err((p, e)) = self.try_enqueue(p) {
@@ -905,7 +921,7 @@ impl ServeEngine {
             }
             Err(e) => self.reject_model(&tx, e),
         }
-        ModelTicket::new(rx)
+        ModelTicket::new(cell)
     }
 
     /// Admit a multi-step session: up to `req.steps` sequential full-model
@@ -914,7 +930,7 @@ impl ServeEngine {
     /// coalescing with concurrent traffic. The adapter is pinned once for
     /// the whole session.
     pub fn submit_session(&self, req: SessionRequest) -> ModelTicket {
-        let (tx, rx) = mpsc::channel();
+        let (tx, cell) = completion::channel();
         let admitted =
             self.admit_traversal(&req.route, req.adapter, req.x0, req.steps, Some(req.step), &tx);
         match admitted {
@@ -925,7 +941,7 @@ impl ServeEngine {
             }
             Err(e) => self.reject_model(&tx, e),
         }
-        ModelTicket::new(rx)
+        ModelTicket::new(cell)
     }
 
     /// Admit a burst of requests atomically per queue: dispatch cannot
@@ -936,7 +952,7 @@ impl ServeEngine {
         let mut tickets = Vec::with_capacity(reqs.len());
         let mut admitted = Vec::with_capacity(reqs.len());
         for req in reqs {
-            let (tx, rx) = mpsc::channel();
+            let (tx, cell) = completion::channel();
             match self.admit(req.layer, req.adapter, req.x, &tx) {
                 Ok(mut p) => {
                     if let Some(t) = p.trace.as_deref_mut() {
@@ -946,7 +962,7 @@ impl ServeEngine {
                 }
                 Err(e) => self.reject(&tx, e),
             }
-            tickets.push(Ticket { rx });
+            tickets.push(Ticket { cell });
         }
         match &self.shared.dispatcher {
             Dispatcher::Global { state, cv, .. } => {
@@ -1012,12 +1028,12 @@ impl ServeEngine {
         tickets
     }
 
-    fn reject(&self, tx: &mpsc::Sender<Result<Response, ServeError>>, e: ServeError) {
+    fn reject(&self, tx: &CompletionSender<Response>, e: ServeError) {
         self.shared.telemetry.incr(Counter::Rejected);
         let _ = tx.send(Err(e));
     }
 
-    fn reject_model(&self, tx: &mpsc::Sender<Result<ModelResponse, ServeError>>, e: ServeError) {
+    fn reject_model(&self, tx: &CompletionSender<ModelResponse>, e: ServeError) {
         self.shared.telemetry.incr(Counter::Rejected);
         let _ = tx.send(Err(e));
     }
@@ -1104,7 +1120,7 @@ impl ServeEngine {
         layer: LayerId,
         adapter: Option<AdapterId>,
         x: Vec<f64>,
-        tx: &mpsc::Sender<Result<Response, ServeError>>,
+        tx: &CompletionSender<Response>,
     ) -> Result<Pending, ServeError> {
         let l = if layer.token() == self.shared.token {
             // Minted by THIS engine: in range by construction — the token
@@ -1184,7 +1200,7 @@ impl ServeEngine {
         x: Vec<f64>,
         steps: usize,
         step: Option<StepFn>,
-        tx: &mpsc::Sender<Result<ModelResponse, ServeError>>,
+        tx: &CompletionSender<ModelResponse>,
     ) -> Result<Pending, ServeError> {
         if steps < 1 {
             return Err(ServeError::InvalidConfig {

@@ -117,6 +117,57 @@ pub enum ServeError {
     Unsupported { detail: String },
 }
 
+impl ServeError {
+    /// Stable machine-readable error code — the `code` field of every
+    /// JSON error body the HTTP front-end emits. Part of the wire
+    /// contract: codes never change meaning and never get reused. The
+    /// match is exhaustive ON PURPOSE (no `_` arm): adding a variant
+    /// without assigning its wire code is a compile error, not a silent
+    /// `"internal"` fallback.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::UnknownLayer { .. } => "unknown-layer",
+            ServeError::UnknownAdapter { .. } => "unknown-adapter",
+            ServeError::AdapterMismatch { .. } => "adapter-mismatch",
+            ServeError::ShapeMismatch { .. } => "shape-mismatch",
+            ServeError::BadRoute { .. } => "bad-route",
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::ShuttingDown => "shutting-down",
+            ServeError::Timeout { .. } => "timeout",
+            ServeError::WorkerPanic { .. } => "worker-panic",
+            ServeError::StepFailed { .. } => "step-failed",
+            ServeError::Artifact { .. } => "artifact",
+            ServeError::InvalidConfig { .. } => "invalid-config",
+            ServeError::Unsupported { .. } => "unsupported",
+        }
+    }
+
+    /// The HTTP status this error maps to on the wire (the other half of
+    /// the contract [`code`](ServeError::code) anchors). Taxonomy: the
+    /// caller named something that does not exist → 404; the request
+    /// itself is malformed or impossible → 400; transient pressure the
+    /// caller should back off from → 429; the engine is going away → 503;
+    /// a caller-side deadline elapsed → 504 (the gateway-timeout shape:
+    /// the work continues, the reply is gone); the engine broke → 500.
+    /// Exhaustive like `code()` — a new variant must pick its status.
+    pub fn http_status(&self) -> u16 {
+        match self {
+            ServeError::UnknownLayer { .. } | ServeError::UnknownAdapter { .. } => 404,
+            ServeError::AdapterMismatch { .. }
+            | ServeError::ShapeMismatch { .. }
+            | ServeError::BadRoute { .. }
+            | ServeError::InvalidConfig { .. }
+            | ServeError::Unsupported { .. } => 400,
+            ServeError::Overloaded { .. } => 429,
+            ServeError::ShuttingDown => 503,
+            ServeError::Timeout { .. } => 504,
+            ServeError::WorkerPanic { .. }
+            | ServeError::StepFailed { .. }
+            | ServeError::Artifact { .. } => 500,
+        }
+    }
+}
+
 impl fmt::Display for ServeError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -202,6 +253,72 @@ mod tests {
         assert_eq!(inner(false).unwrap(), 7);
         let msg = format!("{}", inner(true).unwrap_err());
         assert!(msg.contains("shutting down"), "{msg}");
+    }
+
+    /// One instance of every variant — keep in sync with the enum (the
+    /// exhaustive matches in `code`/`http_status` make forgetting one
+    /// there impossible; this list keeps the TESTS honest too).
+    fn all_variants() -> Vec<ServeError> {
+        vec![
+            ServeError::UnknownLayer { layer: "l".into() },
+            ServeError::UnknownAdapter { adapter: "a".into() },
+            ServeError::AdapterMismatch { adapter: "a".into(), layer: None },
+            ServeError::ShapeMismatch { layer: "l".into(), detail: "d".into() },
+            ServeError::BadRoute { detail: "d".into() },
+            ServeError::Overloaded { max_pending: 8 },
+            ServeError::ShuttingDown,
+            ServeError::Timeout { elapsed: std::time::Duration::from_millis(1) },
+            ServeError::WorkerPanic { layer: "l".into(), batch: 1, hop: None },
+            ServeError::StepFailed { forward: 1, detail: "d".into() },
+            ServeError::Artifact {
+                path: "/p".into(),
+                layer: None,
+                kind: ArtifactErrorKind::Io,
+                detail: "d".into(),
+            },
+            ServeError::InvalidConfig { detail: "d".into() },
+            ServeError::Unsupported { detail: "d".into() },
+        ]
+    }
+
+    #[test]
+    fn every_variant_has_a_distinct_stable_code() {
+        let codes: Vec<&'static str> = all_variants().iter().map(|e| e.code()).collect();
+        let mut dedup = codes.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), codes.len(), "codes must be unique: {codes:?}");
+        for code in codes {
+            assert!(
+                code.chars().all(|c| c.is_ascii_lowercase() || c == '-'),
+                "codes are lowercase-kebab slugs: {code}"
+            );
+        }
+    }
+
+    #[test]
+    fn http_status_mapping_is_the_locked_wire_contract() {
+        let expect: &[(&str, u16)] = &[
+            ("unknown-layer", 404),
+            ("unknown-adapter", 404),
+            ("adapter-mismatch", 400),
+            ("shape-mismatch", 400),
+            ("bad-route", 400),
+            ("overloaded", 429),
+            ("shutting-down", 503),
+            ("timeout", 504),
+            ("worker-panic", 500),
+            ("step-failed", 500),
+            ("artifact", 500),
+            ("invalid-config", 400),
+            ("unsupported", 400),
+        ];
+        let variants = all_variants();
+        assert_eq!(variants.len(), expect.len());
+        for (e, &(code, status)) in variants.iter().zip(expect) {
+            assert_eq!(e.code(), code, "{e:?}");
+            assert_eq!(e.http_status(), status, "{e:?}");
+        }
     }
 
     #[test]

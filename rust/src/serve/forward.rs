@@ -42,10 +42,10 @@
 //! [`PackedLayer::forward`]: crate::serve::packed::PackedLayer::forward
 //! [`PackedModel::route`]: crate::serve::packed::PackedModel::route
 
-use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::serve::adapters::{AdapterId, AdapterSet};
+use crate::serve::completion::{CompleteFn, Completion, CompletionHandle, CompletionSender};
 use crate::serve::error::ServeError;
 use crate::serve::packed::{LayerId, PackedModel, Route};
 
@@ -133,20 +133,23 @@ pub struct ModelResponse {
 }
 
 /// Handle to a submitted [`ModelRequest`] / [`SessionRequest`]; resolves to
-/// its [`ModelResponse`] or a typed [`ServeError`].
+/// its [`ModelResponse`] or a typed [`ServeError`]. Implements
+/// [`Completion`] — poll with [`try_wait`](Completion::try_wait) or attach
+/// a callback with [`on_complete`](Completion::on_complete) instead of
+/// parking a thread.
 pub struct ModelTicket {
-    rx: mpsc::Receiver<Result<ModelResponse, ServeError>>,
+    cell: CompletionHandle<ModelResponse>,
 }
 
 impl ModelTicket {
-    pub(crate) fn new(rx: mpsc::Receiver<Result<ModelResponse, ServeError>>) -> ModelTicket {
-        ModelTicket { rx }
+    pub(crate) fn new(cell: CompletionHandle<ModelResponse>) -> ModelTicket {
+        ModelTicket { cell }
     }
 
     /// Block until the engine answers. An engine that dropped before
     /// answering reports [`ServeError::ShuttingDown`].
     pub fn wait(self) -> Result<ModelResponse, ServeError> {
-        self.rx.recv().unwrap_or(Err(ServeError::ShuttingDown))
+        self.cell.wait()
     }
 
     /// [`wait`](ModelTicket::wait) with a deadline:
@@ -159,14 +162,27 @@ impl ModelTicket {
     /// dropped because this ticket (the only receiver) is consumed. Use
     /// it to bound caller latency, not engine load.
     pub fn wait_timeout(self, timeout: std::time::Duration) -> Result<ModelResponse, ServeError> {
-        let t0 = Instant::now();
-        match self.rx.recv_timeout(timeout) {
-            Ok(reply) => reply,
-            Err(mpsc::RecvTimeoutError::Timeout) => {
-                Err(ServeError::Timeout { elapsed: t0.elapsed() })
-            }
-            Err(mpsc::RecvTimeoutError::Disconnected) => Err(ServeError::ShuttingDown),
-        }
+        self.cell.wait_timeout(timeout)
+    }
+}
+
+impl Completion for ModelTicket {
+    type Output = ModelResponse;
+
+    fn try_wait(&mut self) -> Option<Result<ModelResponse, ServeError>> {
+        self.cell.try_take()
+    }
+
+    fn on_complete(self, f: CompleteFn<ModelResponse>) {
+        self.cell.on_complete(f);
+    }
+
+    fn wait(self) -> Result<ModelResponse, ServeError> {
+        ModelTicket::wait(self)
+    }
+
+    fn wait_timeout(self, timeout: std::time::Duration) -> Result<ModelResponse, ServeError> {
+        ModelTicket::wait_timeout(self, timeout)
     }
 }
 
@@ -225,7 +241,7 @@ pub(crate) struct Traversal {
     /// Telemetry trace id stamped into the reply (0 = tracing disabled;
     /// the trace buffer itself rides the owning `Pending` hop).
     trace_id: u64,
-    tx: mpsc::Sender<Result<ModelResponse, ServeError>>,
+    tx: CompletionSender<ModelResponse>,
 }
 
 impl Traversal {
@@ -235,7 +251,7 @@ impl Traversal {
         route: Route,
         steps: usize,
         step: Option<StepFn>,
-        tx: mpsc::Sender<Result<ModelResponse, ServeError>>,
+        tx: CompletionSender<ModelResponse>,
         t_admit: Instant,
         trace_id: u64,
     ) -> Traversal {
@@ -357,6 +373,7 @@ impl Traversal {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::completion;
     use crate::linalg::Matrix;
     use crate::quant::{quantize_rtn, QuantState};
     use crate::serve::packed::PackedLayer;
@@ -407,7 +424,7 @@ mod tests {
 
     #[test]
     fn traversal_walks_route_then_replies() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = completion::channel();
         let t0 = Instant::now();
         let mut tr = Box::new(Traversal::new(test_route(&[0, 1, 2]), 1, None, tx, t0, 0));
         let rows_of = |_: LayerId| 4usize;
@@ -427,7 +444,7 @@ mod tests {
             }
             HopOutcome::Reenter { .. } => panic!("route exhausted"),
         }
-        let resp = rx.recv().unwrap().unwrap();
+        let resp = rx.wait().unwrap();
         assert_eq!(resp.y, vec![7.0; 4]);
         assert_eq!(resp.hops, 3);
         assert_eq!(resp.forwards, 1);
@@ -438,7 +455,7 @@ mod tests {
 
     #[test]
     fn session_step_bridges_forwards_and_can_stop_early() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = completion::channel();
         let step: StepFn =
             Box::new(|k, y| if k < 2 { Some(y.iter().map(|v| v + 1.0).collect()) } else { None });
         let mut tr =
@@ -461,7 +478,7 @@ mod tests {
             }
             _ => panic!("step returned None: session must end"),
         }
-        let resp = rx.recv().unwrap().unwrap();
+        let resp = rx.wait().unwrap();
         assert_eq!(resp.forwards, 2);
         assert_eq!(resp.hops, 2);
         assert_eq!(resp.y, vec![5.0, 5.0]);
@@ -469,7 +486,7 @@ mod tests {
 
     #[test]
     fn misshapen_step_output_fails_the_session_actionably() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = completion::channel();
         let step: StepFn = Box::new(|_, _| Some(vec![0.0; 99]));
         let tr =
             Box::new(Traversal::new(test_route(&[0]), 3, Some(step), tx, Instant::now(), 0));
@@ -480,7 +497,7 @@ mod tests {
             }
             _ => panic!("bad step output must fail the session"),
         }
-        let err = rx.recv().unwrap().unwrap_err();
+        let err = rx.wait().unwrap_err();
         assert!(matches!(&err, ServeError::StepFailed { forward: 1, .. }), "{err:?}");
         let msg = format!("{err}");
         assert!(msg.contains("99 values"), "{msg}");
@@ -489,7 +506,7 @@ mod tests {
 
     #[test]
     fn panicking_step_fails_only_its_session() {
-        let (tx, rx) = mpsc::channel();
+        let (tx, rx) = completion::channel();
         let step: StepFn = Box::new(|_, _| panic!("injected step panic"));
         let tr =
             Box::new(Traversal::new(test_route(&[0]), 2, Some(step), tx, Instant::now(), 0));
@@ -497,7 +514,7 @@ mod tests {
             HopOutcome::Replied { ok, .. } => assert!(!ok),
             _ => panic!("step panic must fail the session"),
         }
-        let err = rx.recv().unwrap().unwrap_err();
+        let err = rx.wait().unwrap_err();
         assert!(matches!(err, ServeError::StepFailed { .. }), "{err:?}");
         assert!(format!("{err}").contains("step function panicked"), "{err}");
     }

@@ -1,0 +1,135 @@
+//! Tenant authentication and per-tenant in-flight quotas.
+//!
+//! Every `/v1/*` endpoint requires a per-tenant bearer token
+//! (`Authorization: Bearer <token>`), configured at server build time
+//! ([`HttpServerBuilder::tenant`]). Each tenant carries an **in-flight
+//! quota**: the number of inference requests it may have unresolved in
+//! the engine at once. The quota is charged BEFORE engine admission and
+//! released when the request's completion callback fires — so a tenant
+//! that floods the server gets typed `429 quota-exceeded` responses
+//! without its traffic ever touching the engine's shared admission path,
+//! and without disturbing other tenants' share of `max_pending`.
+//!
+//! Admin calls (adapter lifecycle, stats) authenticate but do not charge
+//! the quota: they are synchronous, cheap, and must keep working for a
+//! tenant that has saturated its inference quota (how else would it
+//! unregister the adapter that's flooding?).
+//!
+//! `GET /metrics` is deliberately UNAUTHENTICATED — it is the scrape
+//! endpoint for infrastructure Prometheus, carries no tenant data beyond
+//! aggregate counters, and scrapers don't hold tenant tokens. Bind the
+//! listener accordingly.
+//!
+//! [`HttpServerBuilder::tenant`]: super::HttpServerBuilder::tenant
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// One configured tenant: its bearer token and in-flight quota.
+pub(crate) struct Tenant {
+    pub name: String,
+    token: String,
+    quota: usize,
+    in_flight: AtomicUsize,
+}
+
+impl Tenant {
+    /// Charge one in-flight slot; `None` when the tenant is at quota.
+    /// The returned guard releases the slot on drop (the completion
+    /// callback holds it until the engine answers).
+    pub fn try_acquire(self: &Arc<Tenant>) -> Option<QuotaGuard> {
+        let prev = self.in_flight.fetch_add(1, Ordering::SeqCst);
+        if prev >= self.quota {
+            self.in_flight.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        Some(QuotaGuard { tenant: Arc::clone(self) })
+    }
+
+    #[cfg(test)]
+    fn in_flight(&self) -> usize {
+        self.in_flight.load(Ordering::SeqCst)
+    }
+}
+
+/// An acquired in-flight slot; releases on drop.
+pub(crate) struct QuotaGuard {
+    tenant: Arc<Tenant>,
+}
+
+impl Drop for QuotaGuard {
+    fn drop(&mut self) {
+        self.tenant.in_flight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The immutable tenant table, built once by the server builder.
+pub(crate) struct TenantTable {
+    tenants: Vec<Arc<Tenant>>,
+}
+
+impl TenantTable {
+    pub fn new(entries: Vec<(String, String, usize)>) -> TenantTable {
+        let tenants = entries
+            .into_iter()
+            .map(|(name, token, quota)| {
+                Arc::new(Tenant { name, token, quota, in_flight: AtomicUsize::new(0) })
+            })
+            .collect();
+        TenantTable { tenants }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Resolve a bearer token to its tenant. Linear scan: tenant counts
+    /// are small (tens), and the scan compares full tokens — no prefix
+    /// shortcuts.
+    pub fn authenticate(&self, bearer: Option<&str>) -> Option<Arc<Tenant>> {
+        let token = bearer?;
+        self.tenants.iter().find(|t| t.token == token).cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> TenantTable {
+        TenantTable::new(vec![
+            ("alice".into(), "tok-alice".into(), 2),
+            ("bob".into(), "tok-bob".into(), 0),
+        ])
+    }
+
+    #[test]
+    fn tokens_resolve_to_their_tenant() {
+        let t = table();
+        assert_eq!(t.authenticate(Some("tok-alice")).unwrap().name, "alice");
+        assert!(t.authenticate(Some("tok-eve")).is_none());
+        assert!(t.authenticate(None).is_none());
+    }
+
+    #[test]
+    fn quota_charges_and_releases() {
+        let t = table();
+        let alice = t.authenticate(Some("tok-alice")).unwrap();
+        let g1 = alice.try_acquire().unwrap();
+        let g2 = alice.try_acquire().unwrap();
+        assert!(alice.try_acquire().is_none(), "at quota");
+        drop(g1);
+        let g3 = alice.try_acquire().expect("released slot is reusable");
+        drop(g2);
+        drop(g3);
+        assert_eq!(alice.in_flight(), 0);
+    }
+
+    #[test]
+    fn zero_quota_rejects_everything() {
+        let t = table();
+        let bob = t.authenticate(Some("tok-bob")).unwrap();
+        assert!(bob.try_acquire().is_none());
+        assert_eq!(bob.in_flight(), 0, "failed acquire leaves no residue");
+    }
+}

@@ -1,0 +1,475 @@
+//! Endpoint handlers: the mapping from parsed wire requests onto the
+//! typed façade.
+//!
+//! Every handler invocation produces EXACTLY ONE response for its request
+//! sequence number — either synchronously (admin endpoints, validation
+//! failures) or from the engine's completion callback (inference
+//! endpoints) — pushed into the connection's [`Rail`]. Inference
+//! dispatch is non-blocking end to end: the handler returns the moment
+//! the engine admits the request, and the engine worker that completes
+//! it serializes the response. The tenant's quota slot travels inside
+//! the completion callback, so it is released exactly when the engine
+//! answers, never earlier.
+//!
+//! Request decode strategy (two tiers, on purpose):
+//! * inference bodies (`/v1/submit`, `/v1/forward`, `/v1/session`) go
+//!   through the lazy [`scan`] pass — no JSON tree is ever built on the
+//!   hot path;
+//! * the adapter-registration body (rare, nested, two matrices per
+//!   layer) uses the full [`crate::util::json`] parser.
+
+use std::sync::Arc;
+
+use crate::linalg::Matrix;
+use crate::lowrank::LoraPair;
+use crate::serve::adapters::AdapterSet;
+use crate::serve::completion::Completion;
+use crate::serve::engine::Response;
+use crate::serve::error::ServeError;
+use crate::serve::forward::{ModelRequest, ModelResponse, SessionRequest, StepFn};
+use crate::serve::http::auth::QuotaGuard;
+use crate::serve::http::{error_body, error_response, respond, respond_raw, scan, wire};
+use crate::serve::http::{Rail, ServerShared};
+use crate::serve::packed::Route;
+use crate::serve::telemetry::Counter;
+use crate::util::json::{self, Json};
+
+/// Route and dispatch one request; guarantees exactly one `rail.push`
+/// for `seq` (sync or via completion callback).
+pub(crate) fn handle(shared: &Arc<ServerShared>, req: wire::Request, rail: &Arc<Rail>, seq: u64) {
+    let keep = req.keep_alive;
+    let bytes = match route(shared, &req, rail, seq) {
+        Routed::Deferred => return, // a completion callback owns the push
+        Routed::Now(bytes) => bytes,
+        Routed::Engine(e) => error_response(&shared.telemetry, &e, keep),
+    };
+    rail.push(seq, bytes);
+}
+
+/// What routing produced: an immediate response, a typed engine error
+/// (mapped by the caller), or a deferred completion-callback response.
+enum Routed {
+    Now(Vec<u8>),
+    Engine(ServeError),
+    Deferred,
+}
+
+impl From<ServeError> for Routed {
+    fn from(e: ServeError) -> Routed {
+        Routed::Engine(e)
+    }
+}
+
+fn route(shared: &Arc<ServerShared>, req: &wire::Request, rail: &Arc<Rail>, seq: u64) -> Routed {
+    let tel = &shared.telemetry;
+    let keep = req.keep_alive;
+    let path = req.target.split('?').next().unwrap_or("");
+
+    // /metrics is the unauthenticated Prometheus scrape endpoint (see
+    // the auth module docs for why).
+    if path == "/metrics" {
+        if req.method != "GET" {
+            return method_not_allowed(shared, keep);
+        }
+        let text = shared.engine.telemetry().render_prometheus();
+        let bytes = text.as_bytes();
+        return Routed::Now(respond_raw(tel, 200, "text/plain; version=0.0.4", bytes, keep));
+    }
+
+    // Everything under /v1/ requires a tenant bearer token.
+    let tenant = match shared.tenants.authenticate(req.bearer.as_deref()) {
+        Some(t) => t,
+        None => {
+            tel.incr(Counter::HttpAuthRejects);
+            let body = error_body("unauthorized", "missing or unknown bearer token");
+            return Routed::Now(respond(tel, 401, &body, keep));
+        }
+    };
+
+    match (req.method.as_str(), path) {
+        ("GET", "/v1/stats") => Routed::Now(stats_response(shared, keep)),
+        ("POST", "/v1/submit") => {
+            let guard = match tenant.try_acquire() {
+                Some(g) => g,
+                None => return quota_exceeded(shared, keep),
+            };
+            submit(shared, req, rail, seq, guard)
+        }
+        ("POST", "/v1/forward") => {
+            let guard = match tenant.try_acquire() {
+                Some(g) => g,
+                None => return quota_exceeded(shared, keep),
+            };
+            forward(shared, req, rail, seq, guard, false)
+        }
+        ("POST", "/v1/session") => {
+            let guard = match tenant.try_acquire() {
+                Some(g) => g,
+                None => return quota_exceeded(shared, keep),
+            };
+            forward(shared, req, rail, seq, guard, true)
+        }
+        (method, p) if p.starts_with("/v1/adapters/") => {
+            let id = &p["/v1/adapters/".len()..];
+            if id.is_empty() || id.contains('/') {
+                let body = error_body("no-such-endpoint", "adapter id missing in path");
+                return Routed::Now(respond(tel, 404, &body, keep));
+            }
+            match method {
+                "PUT" => adapter_register(shared, req, id, keep, false),
+                "POST" => adapter_register(shared, req, id, keep, true),
+                "DELETE" => match shared.engine.unregister_adapter(id) {
+                    Ok(()) => Routed::Now(respond(
+                        tel,
+                        200,
+                        &Json::from_pairs(vec![("unregistered", Json::from(id))]),
+                        keep,
+                    )),
+                    Err(e) => Routed::Engine(e),
+                },
+                _ => method_not_allowed(shared, keep),
+            }
+        }
+        (_, "/v1/submit" | "/v1/forward" | "/v1/session" | "/v1/stats") => {
+            method_not_allowed(shared, keep)
+        }
+        _ => {
+            let body = error_body("no-such-endpoint", &format!("no endpoint at {path}"));
+            Routed::Now(respond(tel, 404, &body, keep))
+        }
+    }
+}
+
+fn method_not_allowed(shared: &ServerShared, keep: bool) -> Routed {
+    let body = error_body("method-not-allowed", "method not allowed for this endpoint");
+    Routed::Now(respond(&shared.telemetry, 405, &body, keep))
+}
+
+fn quota_exceeded(shared: &ServerShared, keep: bool) -> Routed {
+    shared.telemetry.incr(Counter::HttpQuotaRejects);
+    let body = error_body(
+        "quota-exceeded",
+        "tenant in-flight quota exhausted; wait for outstanding requests",
+    );
+    Routed::Now(respond(&shared.telemetry, 429, &body, keep))
+}
+
+fn bad_body(shared: &ServerShared, e: &scan::ScanError, keep: bool) -> Routed {
+    let body = error_body("bad-json", &e.to_string());
+    Routed::Now(respond(&shared.telemetry, 400, &body, keep))
+}
+
+fn missing_field(shared: &ServerShared, field: &str, keep: bool) -> Routed {
+    let body = error_body("missing-field", &format!("'{field}' is required"));
+    Routed::Now(respond(&shared.telemetry, 400, &body, keep))
+}
+
+/// POST /v1/submit — single-layer inference via the lazy scanner.
+fn submit(
+    shared: &Arc<ServerShared>,
+    req: &wire::Request,
+    rail: &Arc<Rail>,
+    seq: u64,
+    guard: QuotaGuard,
+) -> Routed {
+    let keep = req.keep_alive;
+    let body = &req.body;
+    let layer = match scan::str_field(body, "layer") {
+        Err(e) => return bad_body(shared, &e, keep),
+        Ok(None) => return missing_field(shared, "layer", keep),
+        Ok(Some(name)) => name,
+    };
+    let x = match scan::f64_array_field(body, "x") {
+        Err(e) => return bad_body(shared, &e, keep),
+        Ok(None) => return missing_field(shared, "x", keep),
+        Ok(Some(x)) => x,
+    };
+    let adapter = match scan::str_field(body, "adapter") {
+        Err(e) => return bad_body(shared, &e, keep),
+        Ok(name) => name,
+    };
+    let lid = match shared.engine.layer(&layer) {
+        Ok(lid) => lid,
+        Err(e) => return e.into(),
+    };
+    let aid = match adapter {
+        None => None,
+        Some(name) => match shared.engine.adapter(&name) {
+            Ok(aid) => Some(aid),
+            Err(e) => return e.into(),
+        },
+    };
+    let ticket = shared.engine.submit(lid, aid, x);
+    defer(shared, rail, seq, keep, guard, ticket, submit_response_json);
+    Routed::Deferred
+}
+
+/// POST /v1/forward and /v1/session — full-model inference. A session is
+/// a forward with `steps > 1` bridged by the built-in identity step
+/// (`y_k` becomes `x_{k+1}` verbatim), which requires a loopable route:
+/// the tail layer's output width must equal the head layer's input
+/// width.
+fn forward(
+    shared: &Arc<ServerShared>,
+    req: &wire::Request,
+    rail: &Arc<Rail>,
+    seq: u64,
+    guard: QuotaGuard,
+    session: bool,
+) -> Routed {
+    let keep = req.keep_alive;
+    let body = &req.body;
+    let names = match scan::str_array_field(body, "route") {
+        Err(e) => return bad_body(shared, &e, keep),
+        Ok(None) => return missing_field(shared, "route", keep),
+        Ok(Some(names)) => names,
+    };
+    let x = match scan::f64_array_field(body, "x") {
+        Err(e) => return bad_body(shared, &e, keep),
+        Ok(None) => return missing_field(shared, "x", keep),
+        Ok(Some(x)) => x,
+    };
+    let adapter = match scan::str_field(body, "adapter") {
+        Err(e) => return bad_body(shared, &e, keep),
+        Ok(name) => name,
+    };
+    let steps = if session {
+        match scan::u64_field(body, "steps") {
+            Err(e) => return bad_body(shared, &e, keep),
+            Ok(None) => return missing_field(shared, "steps", keep),
+            Ok(Some(s)) => s as usize,
+        }
+    } else {
+        1
+    };
+    let route = match shared.engine.route(&names) {
+        Ok(r) => r,
+        Err(e) => return e.into(),
+    };
+    let aid = match adapter {
+        None => None,
+        Some(name) => match shared.engine.adapter(&name) {
+            Ok(aid) => Some(aid),
+            Err(e) => return e.into(),
+        },
+    };
+    if steps > 1 {
+        if let Err(e) = check_loopable(shared, &route) {
+            return e.into();
+        }
+    }
+    let ticket = if session {
+        let step: StepFn = Box::new(|_, y| Some(y.to_vec()));
+        let sreq = match aid {
+            Some(aid) => SessionRequest::with_adapter(route, aid, x, steps, step),
+            None => SessionRequest::new(route, x, steps, step),
+        };
+        shared.engine.submit_session(sreq)
+    } else {
+        let mreq = match aid {
+            Some(aid) => ModelRequest::with_adapter(route, aid, x),
+            None => ModelRequest::new(route, x),
+        };
+        shared.engine.submit_model(mreq)
+    };
+    defer(shared, rail, seq, keep, guard, ticket, forward_response_json);
+    Routed::Deferred
+}
+
+/// A multi-step HTTP session reuses each forward's output as the next
+/// input verbatim, so the route must chain tail→head.
+fn check_loopable(shared: &ServerShared, route: &Route) -> Result<(), ServeError> {
+    let ids = route.as_ids();
+    let model = shared.engine.model();
+    let head = model.get(ids[0]).expect("route validated against this engine");
+    let tail = model.get(*ids.last().expect("routes are non-empty")).expect("validated");
+    if tail.cols != head.rows {
+        return Err(ServeError::InvalidConfig {
+            detail: format!(
+                "multi-step session needs a loopable route: tail '{}' emits {} values but \
+                 head '{}' takes {}",
+                tail.name, tail.cols, head.name, head.rows
+            ),
+        });
+    }
+    Ok(())
+}
+
+/// Attach the completion callback that serializes the engine's reply
+/// into the rail slot. The quota guard rides inside the callback: it
+/// drops — releasing the tenant's in-flight slot — exactly when the
+/// engine resolves the request.
+fn defer<C>(
+    shared: &Arc<ServerShared>,
+    rail: &Arc<Rail>,
+    seq: u64,
+    keep: bool,
+    guard: QuotaGuard,
+    ticket: C,
+    to_json: fn(&C::Output) -> Json,
+) where
+    C: Completion,
+{
+    let tel = Arc::clone(&shared.telemetry);
+    let rail = Arc::clone(rail);
+    ticket.on_complete(Box::new(move |result| {
+        let _release_at_completion = guard;
+        let bytes = match result {
+            Ok(resp) => respond(&tel, 200, &to_json(&resp), keep),
+            Err(e) => error_response(&tel, &e, keep),
+        };
+        rail.push(seq, bytes);
+    }));
+}
+
+fn arr_f64(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&v| Json::from(v)).collect())
+}
+
+fn submit_response_json(resp: &Response) -> Json {
+    Json::from_pairs(vec![
+        ("y", arr_f64(&resp.y)),
+        ("queue_s", Json::from(resp.queue_s)),
+        ("compute_s", Json::from(resp.compute_s)),
+        ("batch_size", Json::from(resp.batch_size)),
+        ("adapter_groups", Json::from(resp.adapter_groups)),
+        ("trace_id", Json::from(resp.trace_id as f64)),
+    ])
+}
+
+fn forward_response_json(resp: &ModelResponse) -> Json {
+    Json::from_pairs(vec![
+        ("y", arr_f64(&resp.y)),
+        ("forwards", Json::from(resp.forwards)),
+        ("hops", Json::from(resp.hops)),
+        ("queue_s", Json::from(resp.queue_s)),
+        ("compute_s", Json::from(resp.compute_s)),
+        ("wall_s", Json::from(resp.wall_s)),
+        ("max_batch_seen", Json::from(resp.max_batch_seen)),
+        ("mixed_hops", Json::from(resp.mixed_hops)),
+        ("trace_id", Json::from(resp.trace_id as f64)),
+    ])
+}
+
+fn stats_response(shared: &ServerShared, keep: bool) -> Vec<u8> {
+    let s = shared.engine.stats();
+    let body = Json::from_pairs(vec![
+        ("requests", Json::from(s.requests)),
+        ("model_requests", Json::from(s.model_requests)),
+        ("session_forwards", Json::from(s.session_forwards)),
+        ("hops", Json::from(s.hops)),
+        ("batches", Json::from(s.batches)),
+        ("max_batch_seen", Json::from(s.max_batch_seen)),
+        ("mixed_batches", Json::from(s.mixed_batches)),
+        ("rejected", Json::from(s.rejected)),
+        ("batch_panics", Json::from(s.batch_panics)),
+        ("failed", Json::from(s.failed)),
+        ("failed_model_requests", Json::from(s.failed_model_requests)),
+        ("mean_batch", Json::from(s.mean_batch())),
+        ("total_queue_s", Json::from(s.total_queue_s)),
+        ("total_compute_s", Json::from(s.total_compute_s)),
+    ]);
+    respond(&shared.telemetry, 200, &body, keep)
+}
+
+/// PUT (register; 409 if present) / POST (hot-swap; 404 if absent)
+/// `/v1/adapters/{id}`. Body:
+/// `{"layers": [{"layer": "...", "rank": r, "a": [m*r], "b": [n*r]}]}`
+/// with `a`/`b` flattened row-major against the named layer's m×n shape.
+fn adapter_register(
+    shared: &Arc<ServerShared>,
+    req: &wire::Request,
+    id: &str,
+    keep: bool,
+    hot_swap: bool,
+) -> Routed {
+    let tel = &shared.telemetry;
+    let exists = shared.engine.registry().contains(id);
+    if hot_swap && !exists {
+        return Routed::Engine(ServeError::UnknownAdapter { adapter: id.to_string() });
+    }
+    if !hot_swap && exists {
+        let body = error_body(
+            "already-registered",
+            &format!("adapter '{id}' exists; POST to hot-swap it"),
+        );
+        return Routed::Now(respond(tel, 409, &body, keep));
+    }
+    let set = match parse_adapter_set(shared, id, &req.body) {
+        Ok(set) => set,
+        Err(r) => return r,
+    };
+    match shared.engine.register_adapter(set) {
+        Ok(outcome) => {
+            let evicted =
+                Json::Arr(outcome.evicted.iter().map(|n| Json::from(n.as_str())).collect());
+            let body = Json::from_pairs(vec![
+                ("adapter", Json::from(id)),
+                ("replaced", Json::from(outcome.replaced)),
+                ("evicted", evicted),
+            ]);
+            Routed::Now(respond(tel, 200, &body, keep))
+        }
+        Err(e) => Routed::Engine(e),
+    }
+}
+
+fn parse_adapter_set(
+    shared: &Arc<ServerShared>,
+    id: &str,
+    body: &[u8],
+) -> Result<AdapterSet, Routed> {
+    let bad = |msg: &str| -> Routed {
+        let body = error_body("bad-json", msg);
+        Routed::Now(respond(&shared.telemetry, 400, &body, true))
+    };
+    let text = std::str::from_utf8(body).map_err(|_| bad("body is not UTF-8"))?;
+    let tree = json::parse(text).map_err(|e| bad(&format!("malformed JSON: {e}")))?;
+    let layers = tree
+        .get("layers")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| bad("'layers' must be an array of per-layer factor objects"))?;
+    let mut set = AdapterSet::new(id);
+    for entry in layers {
+        let name = entry
+            .get("layer")
+            .and_then(Json::as_str)
+            .ok_or_else(|| bad("each layer entry needs a 'layer' name"))?;
+        let rank = entry
+            .get("rank")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| bad("each layer entry needs an integer 'rank'"))?;
+        let a = f64s(entry.get("a")).ok_or_else(|| bad("'a' must be an array of numbers"))?;
+        let b = f64s(entry.get("b")).ok_or_else(|| bad("'b' must be an array of numbers"))?;
+        let pl = shared
+            .engine
+            .model()
+            .layer(name)
+            .ok_or_else(|| Routed::Engine(ServeError::UnknownLayer { layer: name.to_string() }))?;
+        if rank == 0 || a.len() != pl.rows * rank || b.len() != pl.cols * rank {
+            return Err(Routed::Engine(ServeError::ShapeMismatch {
+                layer: name.to_string(),
+                detail: format!(
+                    "adapter factors must be a[{}x{rank}], b[{}x{rank}] flattened; got a[{}], \
+                     b[{}]",
+                    pl.rows,
+                    pl.cols,
+                    a.len(),
+                    b.len()
+                ),
+            }));
+        }
+        let pair = LoraPair::new(
+            Matrix::from_vec(pl.rows, rank, a),
+            Matrix::from_vec(pl.cols, rank, b),
+        );
+        if let Err(e) = set.insert(name, pair) {
+            return Err(Routed::Engine(e));
+        }
+    }
+    Ok(set)
+}
+
+fn f64s(v: Option<&Json>) -> Option<Vec<f64>> {
+    v?.as_arr()?.iter().map(Json::as_f64).collect()
+}

@@ -1,0 +1,394 @@
+//! The HTTP serving front-end: the typed façade on the wire.
+//!
+//! A dependency-free HTTP/1.1 server over `std::net` (the workspace is
+//! offline; vendored shims only) that exposes a [`ServeEngine`] to
+//! processes that can't link it:
+//!
+//! | Endpoint                    | Maps onto                          |
+//! |-----------------------------|------------------------------------|
+//! | `POST /v1/submit`           | [`ServeEngine::submit`]            |
+//! | `POST /v1/forward`          | [`ServeEngine::submit_model`]      |
+//! | `POST /v1/session`          | [`ServeEngine::submit_session`]    |
+//! | `PUT /v1/adapters/{id}`     | [`ServeEngine::register_adapter`]  |
+//! | `POST /v1/adapters/{id}`    | register (hot-swap; must exist)    |
+//! | `DELETE /v1/adapters/{id}`  | [`ServeEngine::unregister_adapter`]|
+//! | `GET /v1/stats`             | [`ServeEngine::stats`]             |
+//! | `GET /metrics`              | [`TelemetrySnapshot::render_prometheus`] |
+//!
+//! # Architecture
+//!
+//! One **accept thread** on a bounded connection pool: past
+//! `max_connections`, new connections are shed with an immediate 503 —
+//! never queued into an invisible backlog. One **thread per connection**
+//! (NOT per request): the connection loop feeds raw socket bytes into the
+//! incremental [`wire::RequestParser`], dispatches every complete request
+//! it finds, and writes responses strictly in request order through a
+//! per-connection [`Rail`]. Inference requests dispatch through the
+//! non-blocking [`Completion::on_complete`] callback — the engine worker
+//! that finishes a request serializes its response into the rail slot —
+//! so N pipelined requests on one connection are all in flight in the
+//! engine simultaneously with zero parked waiter threads.
+//!
+//! Authentication, quotas, the `{code, message}` error contract, and the
+//! lazy hot-path JSON decode are documented in [`auth`], [`wire`], and
+//! [`scan`]; endpoint semantics in [`handlers`].
+//!
+//! [`Completion::on_complete`]: crate::serve::completion::Completion::on_complete
+//! [`ServeEngine::submit`]: crate::serve::ServeEngine::submit
+//! [`ServeEngine::submit_model`]: crate::serve::ServeEngine::submit_model
+//! [`ServeEngine::submit_session`]: crate::serve::ServeEngine::submit_session
+//! [`ServeEngine::register_adapter`]: crate::serve::ServeEngine::register_adapter
+//! [`ServeEngine::unregister_adapter`]: crate::serve::ServeEngine::unregister_adapter
+//! [`ServeEngine::stats`]: crate::serve::ServeEngine::stats
+//! [`TelemetrySnapshot::render_prometheus`]: crate::serve::TelemetrySnapshot::render_prometheus
+
+pub mod auth;
+pub mod handlers;
+pub mod scan;
+pub mod wire;
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::serve::engine::ServeEngine;
+use crate::serve::error::ServeError;
+use crate::serve::telemetry::{Counter, Telemetry};
+use crate::util::json::Json;
+
+use auth::TenantTable;
+
+/// How long a connection thread blocks in one read before re-checking the
+/// shutdown flag — the bound on shutdown latency per connection.
+const READ_POLL: Duration = Duration::from_millis(25);
+
+/// Server-wide state shared by the accept loop and every connection.
+pub(crate) struct ServerShared {
+    pub engine: Arc<ServeEngine>,
+    pub tenants: TenantTable,
+    pub telemetry: Arc<Telemetry>,
+    pub max_body: usize,
+    shutdown: AtomicBool,
+}
+
+/// Per-connection ordered response rail. Handlers (or their completion
+/// callbacks, running on engine workers) push each response under its
+/// request sequence number; the connection thread pops them strictly in
+/// order, so pipelined responses can never interleave or reorder on the
+/// wire regardless of engine completion order.
+pub(crate) struct Rail {
+    slots: Mutex<BTreeMap<u64, Vec<u8>>>,
+    cv: Condvar,
+}
+
+impl Rail {
+    fn new() -> Rail {
+        Rail { slots: Mutex::new(BTreeMap::new()), cv: Condvar::new() }
+    }
+
+    /// Deliver the response for request `seq` (any thread).
+    pub fn push(&self, seq: u64, bytes: Vec<u8>) {
+        self.slots.lock().unwrap().insert(seq, bytes);
+        self.cv.notify_all();
+    }
+
+    /// Block until the response for `seq` is available, then take it.
+    fn take(&self, seq: u64) -> Vec<u8> {
+        let mut slots = self.slots.lock().unwrap();
+        loop {
+            if let Some(bytes) = slots.remove(&seq) {
+                return bytes;
+            }
+            slots = self.cv.wait(slots).unwrap();
+        }
+    }
+}
+
+/// Builder for [`HttpServer`] — bind address, connection/body caps, and
+/// the tenant table.
+pub struct HttpServerBuilder {
+    engine: Arc<ServeEngine>,
+    addr: String,
+    max_connections: usize,
+    max_body: usize,
+    tenants: Vec<(String, String, usize)>,
+}
+
+impl HttpServerBuilder {
+    /// Listen address (default `127.0.0.1:0` — an OS-assigned loopback
+    /// port; read it back with [`HttpServer::addr`]).
+    pub fn bind(mut self, addr: &str) -> Self {
+        self.addr = addr.to_string();
+        self
+    }
+
+    /// Connection-pool bound: connections past this many are shed with an
+    /// immediate 503 instead of queueing (default 64).
+    pub fn max_connections(mut self, n: usize) -> Self {
+        self.max_connections = n;
+        self
+    }
+
+    /// Request-body byte cap; larger declared bodies are refused with 413
+    /// before they are buffered (default 8 MiB).
+    pub fn max_body(mut self, bytes: usize) -> Self {
+        self.max_body = bytes;
+        self
+    }
+
+    /// Register a tenant: its bearer `token` authenticates `/v1/*` calls,
+    /// and `quota` bounds its concurrently in-flight inference requests
+    /// (exceeded → 429 before engine admission).
+    pub fn tenant(mut self, name: &str, token: &str, quota: usize) -> Self {
+        self.tenants.push((name.to_string(), token.to_string(), quota));
+        self
+    }
+
+    /// Bind the listener and start the accept loop.
+    pub fn build(self) -> Result<HttpServer, ServeError> {
+        if self.max_connections == 0 {
+            return Err(ServeError::InvalidConfig {
+                detail: "http server needs max_connections >= 1".to_string(),
+            });
+        }
+        if self.tenants.is_empty() {
+            return Err(ServeError::InvalidConfig {
+                detail: "http server needs at least one tenant (builder.tenant(name, token, \
+                         quota)); an unauthenticated engine on a socket is not a configuration, \
+                         it's an incident"
+                    .to_string(),
+            });
+        }
+        let listener = TcpListener::bind(&self.addr).map_err(|e| ServeError::InvalidConfig {
+            detail: format!("http server could not bind {}: {e}", self.addr),
+        })?;
+        let addr = listener.local_addr().map_err(|e| ServeError::InvalidConfig {
+            detail: format!("http server local_addr failed: {e}"),
+        })?;
+        let telemetry = self.engine.telemetry_handle();
+        let shared = Arc::new(ServerShared {
+            engine: self.engine,
+            tenants: TenantTable::new(self.tenants),
+            telemetry,
+            max_body: self.max_body,
+            shutdown: AtomicBool::new(false),
+        });
+        let conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let conns = Arc::clone(&conns);
+            let max_connections = self.max_connections;
+            thread::Builder::new()
+                .name("http-accept".to_string())
+                .spawn(move || accept_loop(listener, shared, conns, max_connections))
+                .expect("spawn http accept thread")
+        };
+        Ok(HttpServer { shared, addr, accept: Some(accept), conns })
+    }
+}
+
+/// The running HTTP front-end. Owns its accept loop and connection
+/// threads; [`shutdown`](HttpServer::shutdown) stops them. The engine is
+/// shared (`Arc`), not owned — closing the server does not drain the
+/// engine.
+pub struct HttpServer {
+    shared: Arc<ServerShared>,
+    addr: SocketAddr,
+    accept: Option<thread::JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+}
+
+impl HttpServer {
+    /// Start building a server over `engine`.
+    pub fn builder(engine: Arc<ServeEngine>) -> HttpServerBuilder {
+        HttpServerBuilder {
+            engine,
+            addr: "127.0.0.1:0".to_string(),
+            max_connections: 64,
+            max_body: 8 << 20,
+            tenants: Vec::new(),
+        }
+    }
+
+    /// The bound listen address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, close every connection (in-flight responses get
+    /// ~[`READ_POLL`] to flush), and join all server threads.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // The accept loop blocks in accept(); poke it awake.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> = self.conns.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<ServerShared>,
+    conns: Arc<Mutex<Vec<thread::JoinHandle<()>>>>,
+    max_connections: usize,
+) {
+    let active = Arc::new(AtomicUsize::new(0));
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let stream = match stream {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        shared.telemetry.incr(Counter::HttpConnections);
+        let prev = active.fetch_add(1, Ordering::SeqCst);
+        if prev >= max_connections {
+            active.fetch_sub(1, Ordering::SeqCst);
+            // Shed at the pool bound: an explicit, immediate 503 beats an
+            // invisible accept-queue stall.
+            shed_connection(&shared, stream);
+            continue;
+        }
+        let handle = {
+            let shared = Arc::clone(&shared);
+            let active = Arc::clone(&active);
+            thread::Builder::new()
+                .name("http-conn".to_string())
+                .spawn(move || {
+                    connection_loop(shared, stream);
+                    active.fetch_sub(1, Ordering::SeqCst);
+                })
+                .expect("spawn http connection thread")
+        };
+        let mut guard = conns.lock().unwrap();
+        guard.retain(|h| !h.is_finished()); // reap exited connections
+        guard.push(handle);
+    }
+}
+
+fn shed_connection(shared: &ServerShared, mut stream: TcpStream) {
+    let body = error_body("overloaded", "connection pool is full; retry");
+    let bytes = respond(&shared.telemetry, 503, &body, false);
+    let _ = stream.write_all(&bytes);
+}
+
+fn connection_loop(shared: Arc<ServerShared>, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let _ = stream.set_nodelay(true);
+    let rail = Arc::new(Rail::new());
+    let mut parser = wire::RequestParser::new(shared.max_body);
+    let mut seq: u64 = 0; // next request sequence to assign
+    let mut written: u64 = 0; // next response sequence to write
+    let mut close_after: Option<u64> = None; // last seq before close
+    let mut readbuf = [0u8; 16 * 1024];
+    loop {
+        // Dispatch every complete request already buffered. All of them
+        // enter the engine before we block on the first response — that
+        // is the pipelining win.
+        while close_after.is_none() {
+            match parser.next() {
+                Ok(Some(req)) => {
+                    if !req.keep_alive {
+                        close_after = Some(seq);
+                    }
+                    handlers::handle(&shared, req, &rail, seq);
+                    seq += 1;
+                }
+                Ok(None) => break,
+                Err(we) => {
+                    // Protocol error: the byte stream has no trustworthy
+                    // resync point. Answer and close.
+                    let body = error_body(we.code(), &we.to_string());
+                    rail.push(seq, respond(&shared.telemetry, we.status(), &body, false));
+                    close_after = Some(seq);
+                    seq += 1;
+                }
+            }
+        }
+        // Flush responses strictly in order; completion callbacks fill
+        // the rail from engine worker threads.
+        while written < seq {
+            let bytes = rail.take(written);
+            if stream.write_all(&bytes).is_err() {
+                return;
+            }
+            written += 1;
+        }
+        if let Some(last) = close_after {
+            if written > last {
+                return;
+            }
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match stream.read(&mut readbuf) {
+            Ok(0) => return, // peer closed
+            Ok(n) => parser.feed(&readbuf[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // read-poll tick: re-check shutdown
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+/// Build the `{code, message}` JSON error body — the wire error contract.
+pub(crate) fn error_body(code: &str, message: &str) -> Json {
+    Json::from_pairs(vec![("code", Json::from(code)), ("message", Json::from(message))])
+}
+
+/// Map a typed engine error onto the wire: status from
+/// [`ServeError::http_status`], body `{code, message}` from
+/// [`ServeError::code`] / `Display`.
+pub(crate) fn error_response(tel: &Telemetry, e: &ServeError, keep_alive: bool) -> Vec<u8> {
+    respond(tel, e.http_status(), &error_body(e.code(), &e.to_string()), keep_alive)
+}
+
+/// Serialize a JSON response and tick the per-status-class counters.
+pub(crate) fn respond(tel: &Telemetry, status: u16, body: &Json, keep_alive: bool) -> Vec<u8> {
+    respond_raw(tel, status, "application/json", body.to_string_compact().as_bytes(), keep_alive)
+}
+
+/// Serialize a response with an explicit content type (the `/metrics`
+/// text path) and tick the per-status-class counters.
+pub(crate) fn respond_raw(
+    tel: &Telemetry,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> Vec<u8> {
+    match status / 100 {
+        2 => tel.incr(Counter::HttpOk),
+        4 => tel.incr(Counter::HttpClientErrors),
+        5 => tel.incr(Counter::HttpServerErrors),
+        _ => {}
+    }
+    wire::write_response(status, content_type, body, keep_alive)
+}

@@ -1,0 +1,404 @@
+//! Lazy scan-for-path JSON field extraction — the hot-path decoder.
+//!
+//! The inference endpoints all take one small, flat shape:
+//! `{"layer": "...", "adapter": "...", "x": [f64...]}` (and the
+//! route/steps variants). Building a full `util::json::Json` tree for
+//! that — a `BTreeMap`, a boxed node per array element, every number
+//! round-tripped through an enum — costs far more than the extraction
+//! needs. This scanner instead makes ONE forward pass per field: walk the
+//! top-level object's keys, skip values that don't match (string skip,
+//! number skip, bracket-depth skip for nested values — no tree, no
+//! allocation), and parse only the matching value into its typed form
+//! (the "lazy scanning: scan bytes → find path → extract" idea recorded
+//! in ROADMAP's mik-sdk note).
+//!
+//! Admin bodies (adapter registration, with nested per-layer objects and
+//! two matrices each) stay on the full `util::json` parser — they are
+//! rare, structurally deep, and not worth a hand-rolled path.
+//!
+//! Strictness: the scanner validates everything it TOUCHES (the key
+//! syntax, the matched value, the object's comma structure) and
+//! bracket-skips what it doesn't. A body this front-end accepts is valid
+//! enough that the same extraction from a tree parse would agree;
+//! `rust/tests/http_serve.rs` cross-checks exactly that.
+
+use std::fmt;
+
+/// A malformed body, as far as the scanner walked it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ScanError {
+    /// The body is not a JSON object at the top level.
+    NotAnObject,
+    /// Structural JSON error at byte `at`.
+    Malformed { at: usize, what: &'static str },
+    /// The matched field exists but has the wrong type.
+    WrongType { key: &'static str, want: &'static str },
+}
+
+impl fmt::Display for ScanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ScanError::NotAnObject => f.write_str("body must be a JSON object"),
+            ScanError::Malformed { at, what } => {
+                write!(f, "malformed JSON at byte {at}: {what}")
+            }
+            ScanError::WrongType { key, want } => {
+                write!(f, "field '{key}' must be {want}")
+            }
+        }
+    }
+}
+
+/// One scan pass over `body` for top-level key `key`: `Ok(None)` when the
+/// key is absent, the raw value slice + offset when found.
+fn find_value<'a>(body: &'a [u8], key: &str) -> Result<Option<(&'a [u8], usize)>, ScanError> {
+    let mut s = Cursor { b: body, i: 0 };
+    s.skip_ws();
+    if s.peek() != Some(b'{') {
+        return Err(ScanError::NotAnObject);
+    }
+    s.i += 1;
+    s.skip_ws();
+    if s.peek() == Some(b'}') {
+        return Ok(None);
+    }
+    loop {
+        s.skip_ws();
+        let k = s.parse_string_raw()?;
+        s.skip_ws();
+        s.expect(b':')?;
+        s.skip_ws();
+        let start = s.i;
+        if key_matches(k, key) {
+            s.skip_value()?;
+            return Ok(Some((&body[start..s.i], start)));
+        }
+        s.skip_value()?;
+        s.skip_ws();
+        match s.peek() {
+            Some(b',') => s.i += 1,
+            Some(b'}') => return Ok(None),
+            _ => return Err(s.malformed("expected ',' or '}' after a value")),
+        }
+    }
+}
+
+/// Key comparison on the RAW (still-escaped) key bytes. Endpoint keys are
+/// plain ASCII identifiers, so an escaped spelling of one (`"l..."`)
+/// simply doesn't match — same outcome as an unknown key.
+fn key_matches(raw: &[u8], key: &str) -> bool {
+    raw == key.as_bytes()
+}
+
+/// Extract an optional string field (`Ok(None)` when absent or `null`).
+pub fn str_field(body: &[u8], key: &'static str) -> Result<Option<String>, ScanError> {
+    let (v, at) = match find_value(body, key)? {
+        None => return Ok(None),
+        Some(v) => v,
+    };
+    if v == b"null" {
+        return Ok(None);
+    }
+    let mut s = Cursor { b: v, i: 0 };
+    if s.peek() != Some(b'"') {
+        return Err(ScanError::WrongType { key, want: "a string" });
+    }
+    let out = s.parse_string()?;
+    debug_assert!(at < body.len());
+    Ok(Some(out))
+}
+
+/// Extract a required array-of-numbers field.
+pub fn f64_array_field(body: &[u8], key: &'static str) -> Result<Option<Vec<f64>>, ScanError> {
+    let v = match find_value(body, key)? {
+        None => return Ok(None),
+        Some((v, _)) => v,
+    };
+    let mut s = Cursor { b: v, i: 0 };
+    if s.peek() != Some(b'[') {
+        return Err(ScanError::WrongType { key, want: "an array of numbers" });
+    }
+    s.i += 1;
+    let mut out = Vec::new();
+    s.skip_ws();
+    if s.peek() == Some(b']') {
+        return Ok(Some(out));
+    }
+    loop {
+        s.skip_ws();
+        out.push(
+            s.parse_number()
+                .map_err(|_| ScanError::WrongType { key, want: "an array of numbers" })?,
+        );
+        s.skip_ws();
+        match s.peek() {
+            Some(b',') => s.i += 1,
+            Some(b']') => return Ok(Some(out)),
+            _ => return Err(s.malformed("expected ',' or ']' in array")),
+        }
+    }
+}
+
+/// Extract an array-of-strings field (route names).
+pub fn str_array_field(body: &[u8], key: &'static str) -> Result<Option<Vec<String>>, ScanError> {
+    let v = match find_value(body, key)? {
+        None => return Ok(None),
+        Some((v, _)) => v,
+    };
+    let mut s = Cursor { b: v, i: 0 };
+    if s.peek() != Some(b'[') {
+        return Err(ScanError::WrongType { key, want: "an array of strings" });
+    }
+    s.i += 1;
+    let mut out = Vec::new();
+    s.skip_ws();
+    if s.peek() == Some(b']') {
+        return Ok(Some(out));
+    }
+    loop {
+        s.skip_ws();
+        if s.peek() != Some(b'"') {
+            return Err(ScanError::WrongType { key, want: "an array of strings" });
+        }
+        out.push(s.parse_string()?);
+        s.skip_ws();
+        match s.peek() {
+            Some(b',') => s.i += 1,
+            Some(b']') => return Ok(Some(out)),
+            _ => return Err(s.malformed("expected ',' or ']' in array")),
+        }
+    }
+}
+
+/// Extract a non-negative integer field.
+pub fn u64_field(body: &[u8], key: &'static str) -> Result<Option<u64>, ScanError> {
+    let v = match find_value(body, key)? {
+        None => return Ok(None),
+        Some((v, _)) => v,
+    };
+    let text = std::str::from_utf8(v)
+        .map_err(|_| ScanError::WrongType { key, want: "a non-negative integer" })?;
+    text.trim()
+        .parse::<u64>()
+        .map(Some)
+        .map_err(|_| ScanError::WrongType { key, want: "a non-negative integer" })
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn malformed(&self, what: &'static str) -> ScanError {
+        ScanError::Malformed { at: self.i, what }
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), ScanError> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.malformed("unexpected byte"))
+        }
+    }
+
+    /// Consume a string literal, returning its raw (still-escaped)
+    /// contents — enough to match keys without allocating.
+    fn parse_string_raw(&mut self) -> Result<&'a [u8], ScanError> {
+        self.expect(b'"').map_err(|_| self.malformed("expected a string key"))?;
+        let start = self.i;
+        loop {
+            match self.peek() {
+                None => return Err(self.malformed("unterminated string")),
+                Some(b'"') => {
+                    let raw = &self.b[start..self.i];
+                    self.i += 1;
+                    return Ok(raw);
+                }
+                Some(b'\\') => {
+                    self.i += 2; // skip the escape pair (\" included)
+                }
+                Some(_) => self.i += 1,
+            }
+        }
+    }
+
+    /// Consume a string literal and unescape it.
+    fn parse_string(&mut self) -> Result<String, ScanError> {
+        let at = self.i;
+        let raw = self.parse_string_raw()?;
+        let mut out = String::with_capacity(raw.len());
+        let mut it = raw.iter().copied();
+        while let Some(b) = it.next() {
+            if b != b'\\' {
+                out.push(b as char);
+                continue;
+            }
+            match it.next() {
+                Some(b'"') => out.push('"'),
+                Some(b'\\') => out.push('\\'),
+                Some(b'/') => out.push('/'),
+                Some(b'n') => out.push('\n'),
+                Some(b't') => out.push('\t'),
+                Some(b'r') => out.push('\r'),
+                Some(b'u') => {
+                    let hex: String = (0..4).filter_map(|_| it.next()).map(|c| c as char).collect();
+                    let cp = u32::from_str_radix(&hex, 16)
+                        .map_err(|_| ScanError::Malformed { at, what: "bad \\u escape" })?;
+                    out.push(
+                        char::from_u32(cp)
+                            .ok_or(ScanError::Malformed { at, what: "bad \\u escape" })?,
+                    );
+                }
+                _ => return Err(ScanError::Malformed { at, what: "bad escape" }),
+            }
+        }
+        Ok(out)
+    }
+
+    fn parse_number(&mut self) -> Result<f64, ScanError> {
+        let start = self.i;
+        while matches!(
+            self.peek(),
+            Some(b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9')
+        ) {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(self.malformed("expected a number"));
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|t| t.parse::<f64>().ok())
+            .filter(|v| v.is_finite())
+            .ok_or(ScanError::Malformed { at: start, what: "invalid number" })
+    }
+
+    /// Skip one JSON value of any type without materializing it —
+    /// bracket-depth counting for containers, literal consumption for
+    /// scalars.
+    fn skip_value(&mut self) -> Result<(), ScanError> {
+        match self.peek() {
+            Some(b'"') => {
+                self.parse_string_raw()?;
+                Ok(())
+            }
+            Some(b'{' | b'[') => {
+                let mut depth = 0usize;
+                loop {
+                    match self.peek() {
+                        None => return Err(self.malformed("unterminated container")),
+                        Some(b'"') => {
+                            self.parse_string_raw()?;
+                        }
+                        Some(b'{' | b'[') => {
+                            depth += 1;
+                            self.i += 1;
+                        }
+                        Some(b'}' | b']') => {
+                            depth -= 1;
+                            self.i += 1;
+                            if depth == 0 {
+                                return Ok(());
+                            }
+                        }
+                        Some(_) => self.i += 1,
+                    }
+                }
+            }
+            Some(b't') => self.consume_literal(b"true"),
+            Some(b'f') => self.consume_literal(b"false"),
+            Some(b'n') => self.consume_literal(b"null"),
+            Some(_) => self.parse_number().map(|_| ()),
+            None => Err(self.malformed("expected a value")),
+        }
+    }
+
+    fn consume_literal(&mut self, lit: &[u8]) -> Result<(), ScanError> {
+        if self.b[self.i..].starts_with(lit) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(self.malformed("bad literal"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BODY: &[u8] =
+        br#"{"layer": "blk0.wq", "adapter": null, "x": [1.5, -2.0, 3e-1], "steps": 4}"#;
+
+    #[test]
+    fn extracts_each_field_in_one_pass() {
+        assert_eq!(str_field(BODY, "layer").unwrap().unwrap(), "blk0.wq");
+        assert_eq!(str_field(BODY, "adapter").unwrap(), None, "null reads as absent");
+        assert_eq!(f64_array_field(BODY, "x").unwrap().unwrap(), vec![1.5, -2.0, 0.3]);
+        assert_eq!(u64_field(BODY, "steps").unwrap(), Some(4));
+        assert_eq!(str_field(BODY, "missing").unwrap(), None);
+    }
+
+    #[test]
+    fn skips_unmatched_values_without_parsing_them() {
+        // The scanner must hop over nested containers and strings with
+        // escaped quotes to reach a later key.
+        let body = br#"{"noise": {"deep": [1, {"k": "\" } ]"}]}, "x": [7]}"#;
+        assert_eq!(f64_array_field(body, "x").unwrap().unwrap(), vec![7.0]);
+    }
+
+    #[test]
+    fn route_arrays_and_escapes() {
+        let body = br#"{"route": ["a", "b\nc"], "x": []}"#;
+        let names = str_array_field(body, "route").unwrap().unwrap();
+        assert_eq!(names, vec!["a".to_string(), "b\nc".to_string()]);
+        assert_eq!(f64_array_field(body, "x").unwrap().unwrap(), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn malformed_bodies_are_typed_errors() {
+        assert_eq!(str_field(b"[1,2]", "k").unwrap_err(), ScanError::NotAnObject);
+        assert!(matches!(
+            str_field(br#"{"k" 1}"#, "k").unwrap_err(),
+            ScanError::Malformed { .. }
+        ));
+        assert!(matches!(
+            f64_array_field(br#"{"x": "nope"}"#, "x").unwrap_err(),
+            ScanError::WrongType { key: "x", .. }
+        ));
+        assert!(matches!(
+            f64_array_field(br#"{"x": [1, "two"]}"#, "x").unwrap_err(),
+            ScanError::WrongType { .. }
+        ));
+        assert!(matches!(
+            str_field(br#"{"k": "unterminated"#, "k").unwrap_err(),
+            ScanError::Malformed { .. }
+        ));
+        // Non-finite numeric spellings are rejected, not smuggled in.
+        assert!(f64_array_field(br#"{"x": [1e999]}"#, "x").is_err());
+    }
+
+    #[test]
+    fn agrees_with_the_tree_parser_on_accepted_bodies() {
+        let tree = crate::util::json::parse(std::str::from_utf8(BODY).unwrap()).unwrap();
+        let x_tree: Vec<f64> =
+            tree.get("x").unwrap().as_arr().unwrap().iter().map(|v| v.as_f64().unwrap()).collect();
+        assert_eq!(f64_array_field(BODY, "x").unwrap().unwrap(), x_tree);
+        assert_eq!(
+            str_field(BODY, "layer").unwrap().unwrap(),
+            tree.get("layer").unwrap().as_str().unwrap()
+        );
+    }
+}

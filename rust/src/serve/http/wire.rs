@@ -1,0 +1,436 @@
+//! The HTTP/1.1 wire layer: an incremental request parser and the
+//! response writer — `std::net` only, no dependencies (the workspace is
+//! offline by design).
+//!
+//! The parser is a push-style state accumulator: [`RequestParser::feed`]
+//! appends whatever bytes the socket produced — a byte, a torn header, six
+//! pipelined requests — and [`RequestParser::next`] yields complete
+//! requests one at a time, returning `Ok(None)` whenever the buffer holds
+//! only a partial request. The result is byte-boundary independence: any
+//! split of the same byte stream parses to the same request sequence
+//! (`rust/tests/http_serve.rs` proves it by feeding canned requests split
+//! at EVERY boundary).
+//!
+//! Scope, on purpose: `Content-Length` bodies only (`Transfer-Encoding`
+//! is refused with 501 — the engine's request shapes are all
+//! known-length), HTTP/1.0 and 1.1, keep-alive + pipelining, and hard
+//! limits on request-line length, header count, header bytes, and body
+//! size so a malicious peer cannot balloon the connection buffer.
+//!
+//! Only the headers the front-end consumes are retained (`Content-Length`,
+//! `Connection`, `Authorization`); everything else is validated for shape
+//! and dropped — the parser allocates per REQUEST, not per header.
+
+use std::fmt;
+
+/// Hard cap on the request line (`METHOD SP target SP version`).
+pub const MAX_REQUEST_LINE: usize = 2048;
+/// Hard cap on the number of header lines.
+pub const MAX_HEADERS: usize = 64;
+/// Hard cap on the total header-section bytes (request line included).
+pub const MAX_HEAD_BYTES: usize = 8192;
+
+/// A protocol-level parse failure. Fatal for its connection: after a
+/// malformed request the byte stream has no trustworthy resynchronization
+/// point, so the front-end writes the mapped error response and closes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The request line is not `METHOD SP target SP HTTP/1.x`.
+    BadRequestLine,
+    /// The version is neither `HTTP/1.0` nor `HTTP/1.1`.
+    BadVersion,
+    /// A header line has no colon, an empty name, or whitespace in the
+    /// name.
+    BadHeader,
+    /// More than [`MAX_HEADERS`] header lines.
+    TooManyHeaders,
+    /// The header section exceeds [`MAX_HEAD_BYTES`] (or the request line
+    /// exceeds [`MAX_REQUEST_LINE`]) before terminating.
+    HeadersTooLarge,
+    /// `Content-Length` is not a plain decimal, or conflicting duplicates.
+    BadContentLength,
+    /// The declared body exceeds the server's body cap.
+    BodyTooLarge { limit: usize },
+    /// `Transfer-Encoding` (chunked etc.) is not supported.
+    UnsupportedEncoding,
+}
+
+impl WireError {
+    /// HTTP status for the mapped error response.
+    pub fn status(&self) -> u16 {
+        match self {
+            WireError::BadRequestLine
+            | WireError::BadHeader
+            | WireError::BadContentLength => 400,
+            WireError::BadVersion => 505,
+            WireError::TooManyHeaders | WireError::HeadersTooLarge => 431,
+            WireError::BodyTooLarge { .. } => 413,
+            WireError::UnsupportedEncoding => 501,
+        }
+    }
+
+    /// Stable machine-readable code for the JSON error body (the parser's
+    /// side of the wire contract `ServeError::code` anchors).
+    pub fn code(&self) -> &'static str {
+        match self {
+            WireError::BadRequestLine => "bad-request-line",
+            WireError::BadVersion => "bad-version",
+            WireError::BadHeader => "bad-header",
+            WireError::TooManyHeaders => "too-many-headers",
+            WireError::HeadersTooLarge => "headers-too-large",
+            WireError::BadContentLength => "bad-content-length",
+            WireError::BodyTooLarge { .. } => "body-too-large",
+            WireError::UnsupportedEncoding => "unsupported-encoding",
+        }
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::BadRequestLine => f.write_str("malformed request line"),
+            WireError::BadVersion => f.write_str("only HTTP/1.0 and HTTP/1.1 are supported"),
+            WireError::BadHeader => f.write_str("malformed header line"),
+            WireError::TooManyHeaders => {
+                write!(f, "more than {MAX_HEADERS} header lines")
+            }
+            WireError::HeadersTooLarge => {
+                write!(f, "header section exceeds {MAX_HEAD_BYTES} bytes")
+            }
+            WireError::BadContentLength => f.write_str("invalid Content-Length"),
+            WireError::BodyTooLarge { limit } => {
+                write!(f, "request body exceeds the {limit}-byte limit")
+            }
+            WireError::UnsupportedEncoding => {
+                f.write_str("Transfer-Encoding is not supported; send a Content-Length body")
+            }
+        }
+    }
+}
+
+/// One parsed request: the routing fields plus the raw body. Headers the
+/// front-end does not consume are validated and dropped.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// The request target as sent (path; query strings are not used by
+    /// any endpoint and are kept verbatim in the path string).
+    pub target: String,
+    /// Whether the connection stays open after this exchange (HTTP/1.1
+    /// default, overridable by `Connection:`; HTTP/1.0 defaults closed).
+    pub keep_alive: bool,
+    /// The `Bearer` token from `Authorization`, if one was sent.
+    pub bearer: Option<String>,
+    pub body: Vec<u8>,
+}
+
+/// Incremental HTTP/1.1 request parser — see the module docs for the
+/// feed/next contract and limits.
+pub struct RequestParser {
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (drained lazily to keep feed() cheap).
+    pos: usize,
+    max_body: usize,
+}
+
+impl RequestParser {
+    pub fn new(max_body: usize) -> RequestParser {
+        RequestParser { buf: Vec::new(), pos: 0, max_body }
+    }
+
+    /// Append bytes read from the socket.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Unconsumed bytes currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Yield the next complete request, `Ok(None)` if the buffer holds
+    /// only a partial one (feed more and retry), or the protocol error
+    /// that makes this connection unrecoverable.
+    pub fn next(&mut self) -> Result<Option<Request>, WireError> {
+        let avail = &self.buf[self.pos..];
+        // Skip blank lines between pipelined requests (robustness: some
+        // clients terminate each request with an extra CRLF).
+        let lead = avail.iter().take_while(|&&b| b == b'\r' || b == b'\n').count();
+        let avail = &avail[lead..];
+        if avail.is_empty() {
+            self.pos += lead;
+            return Ok(None);
+        }
+        let head_end = match find_head_end(avail) {
+            Some(n) => n,
+            None => {
+                if avail.len() > MAX_HEAD_BYTES {
+                    return Err(WireError::HeadersTooLarge);
+                }
+                return Ok(None);
+            }
+        };
+        if head_end > MAX_HEAD_BYTES {
+            return Err(WireError::HeadersTooLarge);
+        }
+        let head = &avail[..head_end];
+        let parsed = parse_head(head)?;
+        if parsed.content_length > self.max_body {
+            return Err(WireError::BodyTooLarge { limit: self.max_body });
+        }
+        let body_start = head_end + 4; // past CRLFCRLF
+        let total = body_start + parsed.content_length;
+        if avail.len() < total {
+            return Ok(None); // body still arriving
+        }
+        let body = avail[body_start..total].to_vec();
+        self.pos += lead + total;
+        // Compact once the consumed prefix dominates, so a long-lived
+        // keep-alive connection cannot grow the buffer without bound.
+        if self.pos > 16 * 1024 || self.pos == self.buf.len() {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        Ok(Some(Request {
+            method: parsed.method,
+            target: parsed.target,
+            keep_alive: parsed.keep_alive,
+            bearer: parsed.bearer,
+            body,
+        }))
+    }
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if present.
+fn find_head_end(b: &[u8]) -> Option<usize> {
+    b.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+struct Head {
+    method: String,
+    target: String,
+    keep_alive: bool,
+    bearer: Option<String>,
+    content_length: usize,
+}
+
+fn parse_head(head: &[u8]) -> Result<Head, WireError> {
+    let mut lines = head.split(|&b| b == b'\n').map(|l| l.strip_suffix(b"\r").unwrap_or(l));
+    let request_line = lines.next().ok_or(WireError::BadRequestLine)?;
+    if request_line.len() > MAX_REQUEST_LINE {
+        return Err(WireError::HeadersTooLarge);
+    }
+    let line = std::str::from_utf8(request_line).map_err(|_| WireError::BadRequestLine)?;
+    let mut parts = line.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => return Err(WireError::BadRequestLine),
+    };
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(WireError::BadRequestLine);
+    }
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        _ => return Err(WireError::BadVersion),
+    };
+
+    let mut keep_alive = http11; // 1.1 defaults open, 1.0 defaults closed
+    let mut bearer = None;
+    let mut content_length: Option<usize> = None;
+    let mut n_headers = 0usize;
+    for raw in lines {
+        if raw.is_empty() {
+            continue; // the terminator's empty line
+        }
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            return Err(WireError::TooManyHeaders);
+        }
+        let colon = raw.iter().position(|&b| b == b':').ok_or(WireError::BadHeader)?;
+        let (name, value) = raw.split_at(colon);
+        if name.is_empty() || name.iter().any(|b| b.is_ascii_whitespace()) {
+            return Err(WireError::BadHeader);
+        }
+        let name = std::str::from_utf8(name).map_err(|_| WireError::BadHeader)?;
+        let value = std::str::from_utf8(&value[1..]).map_err(|_| WireError::BadHeader)?.trim();
+        if name.eq_ignore_ascii_case("content-length") {
+            if value.is_empty() || !value.bytes().all(|b| b.is_ascii_digit()) {
+                return Err(WireError::BadContentLength);
+            }
+            let n: usize = value.parse().map_err(|_| WireError::BadContentLength)?;
+            match content_length {
+                Some(prev) if prev != n => return Err(WireError::BadContentLength),
+                _ => content_length = Some(n),
+            }
+        } else if name.eq_ignore_ascii_case("transfer-encoding") {
+            return Err(WireError::UnsupportedEncoding);
+        } else if name.eq_ignore_ascii_case("connection") {
+            if value.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case("keep-alive") {
+                keep_alive = true;
+            }
+        } else if name.eq_ignore_ascii_case("authorization") {
+            if let Some(tok) = value.strip_prefix("Bearer ") {
+                bearer = Some(tok.trim().to_string());
+            }
+        }
+    }
+    Ok(Head {
+        method: method.to_string(),
+        target: target.to_string(),
+        keep_alive,
+        bearer,
+        content_length: content_length.unwrap_or(0),
+    })
+}
+
+/// Canonical reason phrase for every status the front-end emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// Serialize one response: status line, `Content-Length`, `Content-Type`,
+/// `Connection`, body.
+pub fn write_response(
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> Vec<u8> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        conn
+    );
+    let mut out = Vec::with_capacity(head.len() + body.len());
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_one(raw: &[u8]) -> Result<Option<Request>, WireError> {
+        let mut p = RequestParser::new(1 << 20);
+        p.feed(raw);
+        p.next()
+    }
+
+    #[test]
+    fn parses_a_plain_request_with_body() {
+        let raw = b"POST /v1/submit HTTP/1.1\r\nAuthorization: Bearer tok-1\r\n\
+                    Content-Length: 4\r\n\r\nabcd";
+        let req = parse_one(raw).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.target, "/v1/submit");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(req.bearer.as_deref(), Some("tok-1"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn torn_input_resumes_wherever_the_split_fell() {
+        let raw: &[u8] = b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n";
+        for cut in 0..=raw.len() {
+            let mut p = RequestParser::new(1024);
+            p.feed(&raw[..cut]);
+            let first = p.next().unwrap();
+            if cut < raw.len() {
+                assert!(first.is_none(), "cut={cut}: incomplete must yield None");
+            }
+            p.feed(&raw[cut..]);
+            let req = p.next().unwrap().expect("complete after the rest arrives");
+            assert_eq!(req.method, "GET");
+            assert_eq!(req.target, "/metrics");
+            assert!(req.body.is_empty());
+        }
+    }
+
+    #[test]
+    fn pipelined_requests_come_out_in_order() {
+        let mut p = RequestParser::new(1024);
+        p.feed(b"POST /a HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi");
+        p.feed(b"GET /b HTTP/1.1\r\nConnection: close\r\n\r\n");
+        let a = p.next().unwrap().unwrap();
+        assert_eq!((a.target.as_str(), a.body.as_slice()), ("/a", &b"hi"[..]));
+        let b = p.next().unwrap().unwrap();
+        assert_eq!(b.target, "/b");
+        assert!(!b.keep_alive);
+        assert!(p.next().unwrap().is_none());
+    }
+
+    #[test]
+    fn protocol_errors_are_typed() {
+        assert_eq!(parse_one(b"NOT A REQUEST\r\n\r\n").unwrap_err(), WireError::BadRequestLine);
+        assert_eq!(parse_one(b"GET / HTTP/2.0\r\n\r\n").unwrap_err(), WireError::BadVersion);
+        assert_eq!(
+            parse_one(b"GET / HTTP/1.1\r\nbad line\r\n\r\n").unwrap_err(),
+            WireError::BadHeader
+        );
+        assert_eq!(
+            parse_one(b"GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n").unwrap_err(),
+            WireError::BadContentLength
+        );
+        assert_eq!(
+            parse_one(b"GET / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").unwrap_err(),
+            WireError::UnsupportedEncoding
+        );
+    }
+
+    #[test]
+    fn oversized_bodies_are_refused_before_they_arrive() {
+        let mut p = RequestParser::new(8);
+        p.feed(b"POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\n");
+        // Refused from the declared length alone — no need to buffer 9 bytes.
+        assert_eq!(p.next().unwrap_err(), WireError::BodyTooLarge { limit: 8 });
+    }
+
+    #[test]
+    fn header_limits_hold() {
+        let mut giant = b"GET / HTTP/1.1\r\n".to_vec();
+        for i in 0..(MAX_HEADERS + 1) {
+            giant.extend_from_slice(format!("X-H{i}: v\r\n").as_bytes());
+        }
+        giant.extend_from_slice(b"\r\n");
+        assert_eq!(parse_one(&giant).unwrap_err(), WireError::TooManyHeaders);
+
+        let mut p = RequestParser::new(1024);
+        p.feed(&vec![b'A'; MAX_HEAD_BYTES + 8]);
+        assert_eq!(p.next().unwrap_err(), WireError::HeadersTooLarge);
+    }
+
+    #[test]
+    fn http10_defaults_to_close() {
+        let req = parse_one(b"GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!req.keep_alive);
+        let req = parse_one(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(req.keep_alive);
+    }
+}

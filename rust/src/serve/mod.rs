@@ -127,6 +127,27 @@
 //!   everything in Prometheus text format; [`ServeEngine::stats`] stays
 //!   as the back-compat view derived from the same snapshot
 //!   (`rust/tests/telemetry_serve.rs`).
+//! * [`completion`] — the [`Completion`] trait: the unified non-blocking
+//!   ticket interface. Every submit returns a handle ([`Ticket`] /
+//!   [`ModelTicket`]) backed by a one-shot completion cell with three
+//!   consumption modes — blocking `wait`/`wait_timeout` (the original
+//!   contract, unchanged), polling `try_wait`, and callback
+//!   `on_complete` (the completing engine thread runs it; no parked
+//!   waiter). The HTTP front-end rides the callback mode: one thread per
+//!   connection, any number of in-flight requests.
+//! * [`http`] — [`HttpServer`]: the **wire front-end**. A dependency-free
+//!   HTTP/1.1 server over `std::net` (the workspace is offline by
+//!   design) that maps REST endpoints onto this façade: `POST
+//!   /v1/submit` / `/v1/forward` / `/v1/session` for inference, `PUT` /
+//!   `POST` / `DELETE /v1/adapters/{id}` for the tenant adapter
+//!   lifecycle (register / hot-swap / draining unregister), `GET
+//!   /v1/stats`, and `GET /metrics` straight from
+//!   [`TelemetrySnapshot::render_prometheus`]. Per-tenant bearer tokens
+//!   carry in-flight quotas enforced BEFORE engine admission; every
+//!   error crosses the wire as `{code, message}` with the stable
+//!   [`ServeError::code`] / [`ServeError::http_status`] mapping; the
+//!   hot-path JSON decode is a lazy scan-for-path pass, not a tree parse
+//!   (`rust/tests/http_serve.rs`).
 //!
 //! Benchmarks: `cargo bench --bench bench_serve` writes `BENCH_serve.json`
 //! (fused vs dense forward, batched vs serial throughput, and the
@@ -141,15 +162,19 @@
 //! overhead gate — plus snapshot/render and trace-capture costs), and
 //! `cargo bench --bench bench_contention` writes `BENCH_contention.json`
 //! (requests/s vs 1→64 concurrent submitters, sharded vs global dispatch,
-//! single-layer and pipelined workloads — the admission-scaling gate) —
-//! see EXPERIMENTS.md §Serve, §Adapters, §Forward, §API, §Observability
-//! and §Scale.
+//! single-layer and pipelined workloads — the admission-scaling gate),
+//! and `cargo bench --bench bench_http` writes `BENCH_http.json`
+//! (requests/s vs keep-alive connection counts, wire overhead vs direct
+//! in-process submit, `/metrics` scrape latency) — see EXPERIMENTS.md
+//! §Serve, §Adapters, §Forward, §API, §Observability, §Scale and §HTTP.
 
 pub mod adapters;
 pub mod artifact;
+pub mod completion;
 pub mod engine;
 pub mod error;
 pub mod forward;
+pub mod http;
 pub mod mmap;
 pub mod packed;
 pub mod telemetry;
@@ -159,6 +184,7 @@ pub use adapters::{
     AdapterHandle, AdapterId, AdapterRegistry, AdapterSet, RegisterOutcome, RegistryStats,
 };
 pub use artifact::{crc32, Artifact, ArtifactStore, V1_ADAPTER_ID};
+pub use completion::Completion;
 pub use engine::{
     Dispatch, EngineStats, Request, Response, ServeEngine, ServeEngineBuilder, Ticket,
 };
@@ -166,6 +192,7 @@ pub use error::{ArtifactErrorKind, ServeError};
 pub use forward::{
     forward_route_serial, ModelRequest, ModelResponse, ModelTicket, SessionRequest, StepFn,
 };
+pub use http::{HttpServer, HttpServerBuilder};
 pub use mmap::MappedFile;
 pub use packed::{
     words_per_row, DequantParams, LayerId, PackedLayer, PackedModel, PackedSource, Route,

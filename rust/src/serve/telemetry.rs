@@ -122,9 +122,23 @@ pub enum Counter {
     /// Traversal hops pushed directly into their next layer's shard by a
     /// finishing batch (sharded dispatch only).
     ShardReentries,
+    /// TCP connections accepted by the HTTP front-end (including ones
+    /// shed with a 503 at the connection cap).
+    HttpConnections,
+    /// HTTP responses with a 2xx status.
+    HttpOk,
+    /// HTTP responses with a 4xx status (including auth/quota rejects).
+    HttpClientErrors,
+    /// HTTP responses with a 5xx status.
+    HttpServerErrors,
+    /// Requests refused with 401 (missing or unknown bearer token).
+    HttpAuthRejects,
+    /// Requests refused with 429 by a tenant's in-flight quota, BEFORE
+    /// engine admission (engine-side `Overloaded` counts in `Rejected`).
+    HttpQuotaRejects,
 }
 
-pub const N_COUNTERS: usize = 22;
+pub const N_COUNTERS: usize = 28;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -150,6 +164,12 @@ impl Counter {
         Counter::TracesDropped,
         Counter::Steals,
         Counter::ShardReentries,
+        Counter::HttpConnections,
+        Counter::HttpOk,
+        Counter::HttpClientErrors,
+        Counter::HttpServerErrors,
+        Counter::HttpAuthRejects,
+        Counter::HttpQuotaRejects,
     ];
 
     /// Prometheus metric name (the `cloq_` prefix is added at render).
@@ -177,6 +197,12 @@ impl Counter {
             Counter::TracesDropped => "traces_dropped_total",
             Counter::Steals => "dispatch_steals_total",
             Counter::ShardReentries => "shard_reentries_total",
+            Counter::HttpConnections => "http_connections_total",
+            Counter::HttpOk => "http_requests_2xx_total",
+            Counter::HttpClientErrors => "http_requests_4xx_total",
+            Counter::HttpServerErrors => "http_requests_5xx_total",
+            Counter::HttpAuthRejects => "http_auth_rejects_total",
+            Counter::HttpQuotaRejects => "http_quota_rejects_total",
         }
     }
 
@@ -224,6 +250,22 @@ impl Counter {
             Counter::ShardReentries => {
                 "Traversal hops pushed directly into their next layer's shard by a \
                  finishing batch (sharded dispatch)."
+            }
+            Counter::HttpConnections => {
+                "TCP connections accepted by the HTTP front-end (including ones shed \
+                 with a 503 at the connection cap)."
+            }
+            Counter::HttpOk => "HTTP responses with a 2xx status.",
+            Counter::HttpClientErrors => {
+                "HTTP responses with a 4xx status (including auth/quota rejects)."
+            }
+            Counter::HttpServerErrors => "HTTP responses with a 5xx status.",
+            Counter::HttpAuthRejects => {
+                "HTTP requests refused with 401 (missing or unknown bearer token)."
+            }
+            Counter::HttpQuotaRejects => {
+                "HTTP requests refused with 429 by a tenant's in-flight quota before \
+                 engine admission."
             }
         }
     }

@@ -47,6 +47,12 @@ Gated rows (a >threshold drop in any of them fails the job):
     - engine.instrumented.requests_per_s     (coalescing burst with full
                                               telemetry)
     - engine.disabled.requests_per_s         (same burst, instruments off)
+  BENCH_http.json
+    - connections.sweep[*].requests_per_s    (wire throughput per
+                                              keep-alive connection count)
+    - overhead.http.requests_per_s           (16-connection wire path)
+    - overhead.direct.requests_per_s         (the in-process reference)
+    - scrape.min_s                           (/metrics round-trip latency)
   BENCH_contention.json
     - single_layer.sweep[*].sharded.requests_per_s   (admission scaling,
                                               1→64 closed-loop submitters)
@@ -121,6 +127,10 @@ GATED_ROWS = [
     ("BENCH_artifact.json", "group_commit.concurrent.registers_per_s", "rate"),
     ("BENCH_telemetry.json", "engine.instrumented.requests_per_s", "rate"),
     ("BENCH_telemetry.json", "engine.disabled.requests_per_s", "rate"),
+    ("BENCH_http.json", "connections.sweep.*.requests_per_s", "rate"),
+    ("BENCH_http.json", "overhead.http.requests_per_s", "rate"),
+    ("BENCH_http.json", "overhead.direct.requests_per_s", "rate"),
+    ("BENCH_http.json", "scrape.min_s", "time"),
     ("BENCH_contention.json", "single_layer.sweep.*.sharded.requests_per_s", "rate"),
     ("BENCH_contention.json", "single_layer.sweep.*.global.requests_per_s", "rate"),
     ("BENCH_contention.json", "single_layer.submitters_64.sharded.requests_per_s", "rate"),
@@ -165,6 +175,7 @@ IDENTITY_KEYS = [
     "event_counts",
     "submitters",
     "workers",
+    "connection_counts",
 ]
 
 

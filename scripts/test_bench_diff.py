@@ -21,7 +21,7 @@ import bench_diff  # noqa: E402
 
 
 def synthetic_records():
-    """Minimal but schema-faithful records for all eight gated suites."""
+    """Minimal but schema-faithful records for all nine gated suites."""
     br = {"iters": 10, "mean_s": 1.1e-4, "min_s": 1e-4, "stddev_s": 1e-6}
     return {
         "BENCH_serve.json": {
@@ -109,6 +109,28 @@ def synthetic_records():
                 "disabled": {"requests": 48, "requests_per_s": 9000.0},
             },
             "overhead_pct": 2.2,
+        },
+        "BENCH_http.json": {
+            "bench": "http",
+            "smoke": True,
+            "shape": [32, 32],
+            "connection_counts": [1, 16, 64],
+            "connections": {
+                "sweep": [
+                    {
+                        "connections": c,
+                        "requests": 192,
+                        "requests_per_s": 2000.0 + 100.0 * c,
+                    }
+                    for c in (1, 16, 64)
+                ]
+            },
+            "overhead": {
+                "direct": {"requests": 192, "requests_per_s": 15000.0},
+                "http": {"requests": 192, "requests_per_s": 6000.0},
+                "wire_overhead_us": 100.0,
+            },
+            "scrape": dict(br, min_s=3e-4),
         },
         "BENCH_contention.json": {
             "bench": "contention",
@@ -287,6 +309,37 @@ def main():
         del recs["BENCH_telemetry.json"]["overhead_pct"]
         write_dir(fresh, recs)
         check("telemetry overhead row missing", run(base, fresh), 1)
+
+        # 5l. The HTTP wire rows are gated: a >25% drop in a per-connection
+        # throughput row or in the 16-connection overhead row fails, as
+        # does a slower /metrics scrape.
+        recs = synthetic_records()
+        recs["BENCH_http.json"]["connections"]["sweep"][2]["requests_per_s"] *= 0.5
+        write_dir(fresh, recs)
+        check("http connection-sweep regression", run(base, fresh), 1)
+        recs = synthetic_records()
+        recs["BENCH_http.json"]["overhead"]["http"]["requests_per_s"] *= 0.6
+        write_dir(fresh, recs)
+        check("http wire-overhead regression", run(base, fresh), 1)
+        recs = synthetic_records()
+        recs["BENCH_http.json"]["scrape"]["min_s"] *= 2.0
+        write_dir(fresh, recs)
+        check("http scrape latency regression", run(base, fresh), 1)
+
+        # 5m. A re-sized connection sweep ('connection_counts' identity
+        # key) is not comparable: skip by default, fail under the flag.
+        recs = synthetic_records()
+        recs["BENCH_http.json"]["connection_counts"] = [1, 8]
+        recs["BENCH_http.json"]["connections"]["sweep"] = recs["BENCH_http.json"][
+            "connections"
+        ]["sweep"][:2]
+        write_dir(fresh, recs)
+        check("re-sized connection_counts skips", run(base, fresh), 0)
+        check(
+            "re-sized connection_counts fails under --require-baseline",
+            run(base, fresh, "--require-baseline"),
+            1,
+        )
 
         # 5h. The contention scaling rows are relative-gated: a >25% drop
         # in the 64-submitter sharded headline fails, as does one inside
