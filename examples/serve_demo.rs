@@ -5,9 +5,12 @@
 //! adapter / route handles once, and serve a mixed-adapter burst through
 //! the batching engine — with a hot-swap, an unregister drain, and typed
 //! error handling along the way. Also exercises the legacy v1 artifact
-//! path (`Artifact::LegacyV1`), and closes with the engine's telemetry
-//! snapshot: latency percentiles, per-adapter attribution, one captured
-//! request-span timeline, and a Prometheus exposition excerpt.
+//! path (`Artifact::LegacyV1`), runs a token-level generation (prefill +
+//! greedy decode through the same batcher, streamed token by token and
+//! checked bit-for-bit against `generate_serial`), and closes with the
+//! engine's telemetry snapshot: latency percentiles, per-adapter
+//! attribution, one captured request-span timeline, and a Prometheus
+//! exposition excerpt.
 //!
 //! ```sh
 //! cargo run --release --example serve_demo
@@ -16,9 +19,9 @@
 use cloq::linalg::{syrk_t, Matrix};
 use cloq::lowrank::{init_layer, InitConfig, LoraPair, Method};
 use cloq::serve::{
-    forward_route_serial, AdapterSet, Artifact, ArtifactStore, ModelRequest, PackedLayer,
-    Metric, PackedModel, Request, ServeEngine, ServeError, SessionRequest, StepFn,
-    TelemetryOptions,
+    forward_route_serial, generate_serial, AdapterSet, Artifact, ArtifactStore, GenEvent,
+    GenParams, GenRequest, Metric, ModelRequest, PackedLayer, PackedModel, Request, ServeEngine,
+    ServeError, SessionRequest, StepFn, TelemetryOptions,
 };
 use cloq::util::prng::Rng;
 
@@ -246,6 +249,46 @@ fn main() -> anyhow::Result<()> {
         sess.compute_s * 1e6
     );
     anyhow::ensure!(sess_ulp == 0, "session parity violated");
+
+    // ---- 4b. token-level generation (autoregressive decode) ---------------
+    // generate() owns the whole loop the session above delegated to a step
+    // fn: tokenize the prompt, prefill, then per token logits → greedy
+    // sample → append → re-enter the batcher. Tokens stream out as they
+    // decode; the caller-driven `generate_serial` reference must produce
+    // the same token ids and bit-identical final logits.
+    let prompt = "Q: what does CLoQ serve?";
+    let gparams = GenParams::greedy(12);
+    let ticket = engine.generate(GenRequest::with_adapter(
+        route.clone(),
+        tenant_ids[0],
+        prompt,
+        gparams.clone(),
+    ));
+    let mut pieces = String::new();
+    let gen = loop {
+        match ticket.next_token().wait()? {
+            GenEvent::Token { piece, .. } => pieces.push_str(&piece),
+            GenEvent::Done(r) => break r,
+        }
+    };
+    let gen_serial = generate_serial(&reference, &serial_route, Some(&tenant_a), prompt, &gparams);
+    let gen_ulp = gen
+        .y
+        .iter()
+        .zip(&gen_serial.y)
+        .fold(0u64, |m, (u, v)| m.max(u.to_bits().abs_diff(v.to_bits())));
+    anyhow::ensure!(gen.tokens == gen_serial.tokens, "decode chose different tokens");
+    anyhow::ensure!(pieces == gen.text, "streamed pieces must concatenate to the text");
+    println!(
+        "   generate: {} prompt + {} decoded tokens → {:?} ({}), ttft {:.1} us, \
+         max ULP vs serial decode: {gen_ulp} (contract: 0)",
+        gen.prompt_tokens,
+        gen.tokens.len(),
+        gen.text,
+        gen.finish.as_str(),
+        gen.ttft_s * 1e6
+    );
+    anyhow::ensure!(gen_ulp == 0, "decode parity violated");
 
     // ---- 5. telemetry: percentiles, attribution, a trace, Prometheus ----
     // Snapshot before shutdown: `telemetry()` borrows the live engine.

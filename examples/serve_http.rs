@@ -4,7 +4,9 @@
 //! tenant auth, a quota rejection, single-layer submits, a pipelined
 //! burst on one keep-alive connection, the adapter lifecycle
 //! (PUT register → POST hot-swap → DELETE unregister), a multi-step
-//! session, `/v1/stats`, and a `/metrics` Prometheus scrape.
+//! session, a token-level generation (one JSON body, then the same
+//! request streamed as chunked transfer-encoding, one NDJSON token
+//! event per chunk), `/v1/stats`, and a `/metrics` Prometheus scrape.
 //!
 //! ```sh
 //! cargo run --release --example serve_http
@@ -78,6 +80,52 @@ impl Client {
             let n = self.stream.read(&mut tmp)?;
             anyhow::ensure!(n > 0, "server closed before a response");
             self.buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    /// Read until `pat` appears; return everything through it.
+    fn read_until(&mut self, pat: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let mut tmp = [0u8; 4096];
+        loop {
+            if let Some(pos) = self.buf.windows(pat.len()).position(|w| w == pat) {
+                let end = pos + pat.len();
+                let out = self.buf[..end].to_vec();
+                self.buf.drain(..end);
+                return Ok(out);
+            }
+            let n = self.stream.read(&mut tmp)?;
+            anyhow::ensure!(n > 0, "server closed mid-stream");
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    /// Frame a chunked transfer-encoding response: hex size line, payload,
+    /// CRLF, repeated until the zero-length terminator. The connection
+    /// stays usable afterwards — chunked framing is self-delimiting.
+    fn recv_chunked(&mut self) -> anyhow::Result<(u16, Vec<String>)> {
+        let head = String::from_utf8(self.read_until(b"\r\n\r\n")?)?;
+        let status: u16 = head.split(' ').nth(1).unwrap_or("0").parse()?;
+        anyhow::ensure!(
+            head.to_ascii_lowercase().contains("transfer-encoding: chunked"),
+            "expected a chunked response, got: {head}"
+        );
+        let mut tmp = [0u8; 4096];
+        let mut chunks = Vec::new();
+        loop {
+            let line = self.read_until(b"\r\n")?;
+            let hex = std::str::from_utf8(&line[..line.len() - 2])?;
+            let len = usize::from_str_radix(hex, 16)?;
+            while self.buf.len() < len + 2 {
+                let n = self.stream.read(&mut tmp)?;
+                anyhow::ensure!(n > 0, "server closed mid-chunk");
+                self.buf.extend_from_slice(&tmp[..n]);
+            }
+            let payload = self.buf[..len].to_vec();
+            self.buf.drain(..len + 2);
+            if len == 0 {
+                return Ok((status, chunks));
+            }
+            chunks.push(String::from_utf8(payload)?);
         }
     }
 }
@@ -178,6 +226,38 @@ fn main() -> anyhow::Result<()> {
     let (status, body) = c.request("POST", "/v1/session", Some(TOKEN), &session)?;
     anyhow::ensure!(status == 200, "session failed: {body}");
     println!("   3-step session  → {status} {} response bytes", body.len());
+
+    // ---- 5b. token-level generation: one JSON body, then a chunked stream -
+    let gen = "{\"route\":[\"a\",\"b\",\"c\"],\"prompt\":\"Q: 2+2?\",\"max_tokens\":6}";
+    let (status, body) = c.request("POST", "/v1/generate", Some(TOKEN), gen)?;
+    anyhow::ensure!(status == 200, "generate failed: {body}");
+    println!(
+        "   generate        → {status} {} bytes (text, token ids, finish reason, ttft)",
+        body.len()
+    );
+    // The same request with "stream": true answers with chunked
+    // transfer-encoding: every chunk is one NDJSON line — a token event
+    // as it decodes, then the full response record flagged "done".
+    let gen_stream =
+        "{\"route\":[\"a\",\"b\",\"c\"],\"prompt\":\"Q: 2+2?\",\"max_tokens\":6,\"stream\":true}";
+    c.stream.write_all(
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nAuthorization: Bearer {TOKEN}\r\n\
+             Content-Length: {}\r\n\r\n{gen_stream}",
+            gen_stream.len()
+        )
+        .as_bytes(),
+    )?;
+    let (status, chunks) = c.recv_chunked()?;
+    anyhow::ensure!(status == 200);
+    anyhow::ensure!(
+        chunks.last().is_some_and(|l| l.contains("\"done\":true")),
+        "the final chunk must be the done record"
+    );
+    println!(
+        "   generate stream → {status} chunked: {} token events + 1 done record",
+        chunks.len() - 1
+    );
 
     // ---- 6. observability: /v1/stats (tenant) + /metrics (scraper) --------
     let (status, body) = c.request("GET", "/v1/stats", Some(TOKEN), "")?;

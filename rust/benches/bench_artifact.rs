@@ -162,12 +162,74 @@ fn main() {
             log_bytes as f64 / 1024.0,
             r.min_s * 1e3
         );
+        // Same history through a snapshotted WAL with compaction ON: boot
+        // reads the CLOQSNP1 live state plus the tail since the last
+        // compaction instead of decoding the whole history.
+        let spath = dir.join(format!("replay_{count}_snap.cloqwal"));
+        let snpath = dir.join(format!("replay_{count}.cloqsnp"));
+        let snap_opts =
+            WalOptions { sync_every: 1024, compact_min_bytes: 4096, compact_ratio: 2 };
+        {
+            let (mut wal, _) = Wal::open_snapshotted(
+                Box::new(FsWalFile::at(&spath)),
+                Box::new(FsWalFile::at(&snpath)),
+                "bench",
+                snap_opts,
+            )
+            .unwrap();
+            let mut rng = Rng::new(78);
+            let distinct = (count / 2).max(1);
+            for i in 0..count {
+                if i % 16 == 15 {
+                    wal.log_unregister(&format!("t{}", (i - 1) % distinct)).unwrap();
+                } else {
+                    wal.log_register(&mk_set(&format!("t{}", i % distinct), wn, &mut rng))
+                        .unwrap();
+                }
+            }
+        }
+        let mut snap_events = 0usize;
+        let r_snap = bench(&format!("replay {count} ops from snapshot"), t, || {
+            let (_wal, events) = Wal::open_snapshotted(
+                Box::new(FsWalFile::at(&spath)),
+                Box::new(FsWalFile::at(&snpath)),
+                "bench",
+                snap_opts,
+            )
+            .unwrap();
+            let reg = AdapterRegistry::new(Arc::clone(&reg_model), usize::MAX);
+            let mut applied = 0usize;
+            for ev in events {
+                match ev {
+                    WalEvent::Register(set) => {
+                        reg.register(set).unwrap();
+                    }
+                    WalEvent::Unregister(id) => {
+                        let _ = reg.unregister(&id);
+                    }
+                }
+                applied += 1;
+            }
+            snap_events = applied;
+            applied
+        });
+        let snap_speedup = r.min_s / r_snap.min_s.max(1e-12);
+        println!(
+            "replay {count} ops from snapshot: {} replay events, {:.2}ms → {snap_speedup:.1}x \
+             vs full-history replay",
+            snap_events,
+            r_snap.min_s * 1e3
+        );
         let mut row = Json::obj();
         row.set("events", Json::from(count));
         row.set("log_bytes", Json::from(log_bytes));
         row.set("replay_s", Json::from(r.min_s));
         row.set("events_per_s", Json::from(events_per_s));
+        row.set("snapshot_replay_s", Json::from(r_snap.min_s));
+        row.set("snapshot_replay_events", Json::from(snap_events));
+        row.set("snapshot_speedup", Json::from(snap_speedup));
         row.set("detail", r.to_json());
+        row.set("snapshot_detail", r_snap.to_json());
         replay_rows.push(row);
     }
 

@@ -1,0 +1,218 @@
+//! Token-level generation benchmarks — the numbers behind EXPERIMENTS.md
+//! §Generate, emitted as BENCH_generate.json:
+//!
+//! 1. **serial decode baseline**: `generate_serial` over the same session
+//!    plans, no queues, no concurrency — the per-token cost floor a
+//!    single caller pays.
+//! 2. **engine decode under Poisson load**: sessions admitted with
+//!    exponential inter-arrival times and heavy-tailed (Zipf) prompt and
+//!    output lengths — the open-loop arrival shape real serving sees.
+//!    One consumer thread per session drains the token stream recording
+//!    per-token timestamps; the record carries TTFT (admission → first
+//!    token) and ITL (token → next token) p50/p95/p99 plus aggregate
+//!    decoded tokens/s.
+//!
+//! Under `CLOQ_BENCH_SMOKE=1` (the CI bench-smoke job) session counts and
+//! output lengths shrink and the record carries `"smoke": true` so
+//! `scripts/bench_diff.py` only compares like against like. The committed
+//! smoke baseline is deliberately conservative (generous latencies, low
+//! throughput floors): latency percentiles under open-loop load are far
+//! noisier than closed-loop min-time rows, and the gate must catch
+//! collapses, not jitter.
+//!
+//! Correctness is NOT measured here — pipelined decode is bit-exact vs
+//! `generate_serial` by `rust/tests/parity_generate.rs`; this file is
+//! pure speed.
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use cloq::bench::{section, smoke, smoke_scaled, write_bench_json};
+use cloq::linalg::Matrix;
+use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::{
+    generate_serial, GenEvent, GenParams, GenRequest, PackedLayer, PackedModel, ServeEngine,
+};
+use cloq::util::json::Json;
+use cloq::util::prng::{Rng, Zipf};
+
+/// Loopable 32 → 24 → 28 → 32 chain; the 32-wide tail is the decode
+/// vocabulary (specials + the first 28 byte ids).
+fn chain_model(seed: u64) -> PackedModel {
+    let mut rng = Rng::new(seed);
+    let mut layers = Vec::new();
+    for (name, m, n) in [("a", 32usize, 24usize), ("b", 24, 28), ("c", 28, 32)] {
+        let w = Matrix::randn(m, n, 0.3, &mut rng);
+        let q = QuantState::Int(quantize_rtn(&w, 4, 8));
+        layers.push(PackedLayer::from_state(name, &q).unwrap());
+    }
+    PackedModel::new(layers)
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[(((sorted.len() - 1) as f64) * q).round() as usize]
+}
+
+fn main() {
+    let workers = 4usize;
+    let sessions = smoke_scaled(48, 8);
+    let mean_gap_s = 0.002; // Poisson arrivals: mean inter-arrival time
+
+    // Heavy-tailed session plans (deterministic): Zipf-ranked prompt and
+    // output lengths — most sessions short, a few long, like real decode
+    // traffic.
+    let mut rng = Rng::new(17);
+    let prompt_zipf = Zipf::new(24, 1.1);
+    let tokens_zipf = Zipf::new(smoke_scaled(96, 24), 1.05);
+    let plans: Vec<(String, usize)> = (0..sessions)
+        .map(|i| {
+            let plen = 4 + 3 * prompt_zipf.sample(&mut rng);
+            let prompt: String =
+                (0..plen).map(|k| char::from(b'a' + ((i + k) % 26) as u8)).collect();
+            let max_tokens = 4 + tokens_zipf.sample(&mut rng);
+            (prompt, max_tokens)
+        })
+        .collect();
+    let route_names: Vec<String> = ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
+
+    // ---- serial decode baseline ------------------------------------------
+    section(&format!("serial decode baseline ({sessions} sessions, generate_serial)"));
+    let model = chain_model(18);
+    let serial_route = model.route(&route_names).unwrap();
+    let t0 = Instant::now();
+    let mut serial_tokens = 0usize;
+    for (prompt, max_tokens) in &plans {
+        let r =
+            generate_serial(&model, &serial_route, None, prompt, &GenParams::greedy(*max_tokens));
+        serial_tokens += r.tokens.len();
+    }
+    let serial_wall = t0.elapsed().as_secs_f64();
+    let serial_tps = serial_tokens as f64 / serial_wall.max(1e-12);
+    println!(
+        "serial   {serial_tokens} tokens in {serial_wall:.4}s → {serial_tps:.0} tokens/s"
+    );
+
+    // ---- engine decode under Poisson open-loop load ----------------------
+    section(&format!(
+        "engine decode under Poisson load ({sessions} sessions, {workers} workers, \
+         mean gap {:.1}ms)",
+        mean_gap_s * 1e3
+    ));
+    let engine =
+        ServeEngine::builder(chain_model(18)).workers(workers).max_batch(8).build().unwrap();
+    let route = engine.route(&route_names).unwrap();
+    let mut arrival_rng = Rng::new(19);
+    let t_start = Instant::now();
+    let mut handles = Vec::new();
+    for (prompt, max_tokens) in &plans {
+        // Exponential inter-arrival gap — an open-loop Poisson process,
+        // so queueing shows up in TTFT instead of being absorbed by
+        // closed-loop backpressure.
+        let gap = -mean_gap_s * (1.0 - arrival_rng.f64()).ln();
+        thread::sleep(Duration::from_secs_f64(gap));
+        let t_admit = Instant::now();
+        let ticket =
+            engine.generate(GenRequest::new(route.clone(), prompt, GenParams::greedy(*max_tokens)));
+        handles.push(thread::spawn(move || {
+            let mut prev = t_admit;
+            let mut ttft = 0.0f64;
+            let mut itl = Vec::new();
+            let mut tokens = 0usize;
+            loop {
+                match ticket.next_token().wait().unwrap() {
+                    GenEvent::Token { .. } => {
+                        let now = Instant::now();
+                        if tokens == 0 {
+                            ttft = (now - t_admit).as_secs_f64();
+                        } else {
+                            itl.push((now - prev).as_secs_f64());
+                        }
+                        prev = now;
+                        tokens += 1;
+                    }
+                    GenEvent::Done(_) => break,
+                }
+            }
+            (ttft, itl, tokens)
+        }));
+    }
+    let mut ttfts = Vec::new();
+    let mut itls = Vec::new();
+    let mut load_tokens = 0usize;
+    for h in handles {
+        let (ttft, itl, tokens) = h.join().unwrap();
+        ttfts.push(ttft);
+        itls.extend(itl);
+        load_tokens += tokens;
+    }
+    let load_wall = t_start.elapsed().as_secs_f64();
+    let load_tps = load_tokens as f64 / load_wall.max(1e-12);
+    let stats = engine.shutdown();
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    itls.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (ttft_p50, ttft_p95, ttft_p99) =
+        (percentile(&ttfts, 0.50), percentile(&ttfts, 0.95), percentile(&ttfts, 0.99));
+    let (itl_p50, itl_p95, itl_p99) =
+        (percentile(&itls, 0.50), percentile(&itls, 0.95), percentile(&itls, 0.99));
+    println!(
+        "load     {load_tokens} tokens in {load_wall:.4}s → {load_tps:.0} tokens/s \
+         (mean batch {:.1})",
+        stats.mean_batch()
+    );
+    println!(
+        "TTFT     p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms",
+        ttft_p50 * 1e3,
+        ttft_p95 * 1e3,
+        ttft_p99 * 1e3
+    );
+    println!(
+        "ITL      p50 {:.2}ms  p95 {:.2}ms  p99 {:.2}ms  ({} gaps)",
+        itl_p50 * 1e3,
+        itl_p95 * 1e3,
+        itl_p99 * 1e3,
+        itls.len()
+    );
+
+    let mut arrivals = Json::obj();
+    arrivals.set("process", Json::from("poisson"));
+    arrivals.set("mean_interarrival_s", Json::from(mean_gap_s));
+    let mut serial = Json::obj();
+    serial.set("tokens", Json::from(serial_tokens));
+    serial.set("wall_s", Json::from(serial_wall));
+    serial.set("tokens_per_s", Json::from(serial_tps));
+    let mut load = Json::obj();
+    load.set("total_tokens", Json::from(load_tokens));
+    load.set("wall_s", Json::from(load_wall));
+    load.set("tokens_per_s", Json::from(load_tps));
+    load.set("ttft_p50_s", Json::from(ttft_p50));
+    load.set("ttft_p95_s", Json::from(ttft_p95));
+    load.set("ttft_p99_s", Json::from(ttft_p99));
+    load.set("itl_p50_s", Json::from(itl_p50));
+    load.set("itl_p95_s", Json::from(itl_p95));
+    load.set("itl_p99_s", Json::from(itl_p99));
+    load.set("itl_gaps", Json::from(itls.len()));
+    load.set("mean_batch", Json::from(stats.mean_batch()));
+
+    let record = Json::from_pairs(vec![
+        ("bench", Json::from("generate")),
+        ("smoke", Json::from(smoke())),
+        ("layers", Json::from(3usize)),
+        ("workers", Json::from(workers)),
+        ("sessions", Json::from(sessions)),
+        ("arrivals", arrivals),
+        ("serial", serial),
+        ("load", load),
+        (
+            "parity",
+            Json::from(
+                "pipelined decode == generate_serial bit-exact — \
+                 enforced by rust/tests/parity_generate.rs",
+            ),
+        ),
+    ]);
+    write_bench_json("generate", record);
+}

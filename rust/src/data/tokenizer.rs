@@ -23,6 +23,17 @@ pub fn decode(tokens: &[i32]) -> String {
     String::from_utf8_lossy(&bytes).into_owned()
 }
 
+/// Decode a single token to its text piece: one byte's UTF-8-lossy text
+/// for ids in the byte range, the empty string for specials and
+/// out-of-range ids. The serving decode loop streams pieces token by
+/// token with this (`serve::generate`). Because decoding is per BYTE, a
+/// token inside a multi-byte UTF-8 character renders as U+FFFD here — the
+/// final response text is decoded from the full byte sequence instead and
+/// is therefore identical to `decode` over the generation's token ids.
+pub fn decode_token(token: i32) -> String {
+    decode(&[token])
+}
+
 /// Textual answer delimiter. Examples are encoded as
 /// `[BOS] prompt " A: " answer [EOS]` — the SAME surface format the
 /// pretraining mixture uses for its task lines, so fine-tuning only has to

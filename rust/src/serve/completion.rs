@@ -21,9 +21,12 @@
 //!   HTTP layer's mode: one thread per connection, any number of in-flight
 //!   requests, zero parked waiters.
 //!
-//! The public face is the [`Completion`] trait, implemented by both
-//! `Ticket` and `ModelTicket`, so generic callers (the HTTP handlers, load
-//! generators, tests) drive either ticket shape through one interface.
+//! The public face is the [`Completion`] trait, implemented by `Ticket`,
+//! `ModelTicket`, and `serve::generate`'s `GenTicket`/`TokenTicket` (the
+//! per-token streaming pair — one cell per token event, so the HTTP layer
+//! flushes chunks from completion callbacks without parking), so generic
+//! callers (the HTTP handlers, load generators, tests) drive every ticket
+//! shape through one interface.
 //!
 //! Delivery semantics, chosen to match the old channel exactly:
 //!

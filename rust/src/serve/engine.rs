@@ -222,9 +222,10 @@ pub struct ServeEngineBuilder {
     max_batch: usize,
     max_pending: usize,
     adapter_budget_bytes: usize,
-    /// Adapter WAL backing + its label for error messages (None = the
-    /// registry is in-memory only).
-    wal: Option<(Box<dyn WalFile>, String)>,
+    /// Adapter WAL backing, optional compaction-snapshot backing, and
+    /// the label for error messages (None = the registry is in-memory
+    /// only).
+    wal: Option<(Box<dyn WalFile>, Option<Box<dyn WalFile>>, String)>,
     wal_opts: WalOptions,
     telemetry: TelemetryOptions,
     dispatch: Dispatch,
@@ -237,7 +238,7 @@ impl std::fmt::Debug for ServeEngineBuilder {
             .field("max_batch", &self.max_batch)
             .field("max_pending", &self.max_pending)
             .field("adapter_budget_bytes", &self.adapter_budget_bytes)
-            .field("durable", &self.wal.as_ref().map(|(_, label)| label.clone()))
+            .field("durable", &self.wal.as_ref().map(|(_, _, label)| label.clone()))
             .field("dispatch", &self.dispatch)
             .finish_non_exhaustive()
     }
@@ -289,22 +290,40 @@ impl ServeEngineBuilder {
     /// Make the adapter registry crash-safe: every register / hot-swap /
     /// unregister is logged to `dir/adapters.wal` BEFORE it is applied,
     /// and [`ServeEngineBuilder::build`] replays the log so a restarted
-    /// engine serves every tenant acknowledged before the crash. See the
-    /// module docs' durability section and `serve::wal` for the format
-    /// and recovery contract.
+    /// engine serves every tenant acknowledged before the crash.
+    /// Compaction writes the live state into `dir/adapters.snp` and
+    /// truncates the log, so boot replay stays O(live + tail) however
+    /// much the registry churns. See the module docs' durability section
+    /// and `serve::wal` for the format and recovery contract.
     pub fn durable(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
-        let path = dir.into().join("adapters.wal");
+        let dir = dir.into();
+        let path = dir.join("adapters.wal");
+        let snap = dir.join("adapters.snp");
         let label = path.display().to_string();
-        self.wal = Some((Box::new(FsWalFile::at(path)), label));
+        self.wal =
+            Some((Box::new(FsWalFile::at(path)), Some(Box::new(FsWalFile::at(snap))), label));
         self
     }
 
     /// Durability over an injected [`WalFile`] — the fault-injection
     /// seam: `rust/tests/crash_wal.rs` passes files that truncate, tear,
     /// or duplicate at arbitrary byte offsets. `label` names the log in
-    /// typed errors.
+    /// typed errors. No compaction snapshot: compaction rewrites the log
+    /// in place, exactly the behavior the crash suite pins down.
     pub fn durable_wal(mut self, file: Box<dyn WalFile>, label: &str) -> Self {
-        self.wal = Some((file, label.to_string()));
+        self.wal = Some((file, None, label.to_string()));
+        self
+    }
+
+    /// [`ServeEngineBuilder::durable_wal`] plus an injected compaction
+    /// snapshot file — the fault-injection seam for the snapshot path.
+    pub fn durable_wal_snapshotted(
+        mut self,
+        file: Box<dyn WalFile>,
+        snap: Box<dyn WalFile>,
+        label: &str,
+    ) -> Self {
+        self.wal = Some((file, Some(snap), label.to_string()));
         self
     }
 
@@ -381,8 +400,11 @@ impl ServeEngineBuilder {
         // mismatch, not a panic mid-request).
         let wal = match self.wal {
             None => None,
-            Some((file, label)) => {
-                let (mut wal, events) = Wal::open(file, &label, self.wal_opts)?;
+            Some((file, snap, label)) => {
+                let (mut wal, events) = match snap {
+                    Some(snap) => Wal::open_snapshotted(file, snap, &label, self.wal_opts)?,
+                    None => Wal::open(file, &label, self.wal_opts)?,
+                };
                 wal.attach_telemetry(Arc::clone(&telemetry));
                 telemetry.add(Counter::WalReplayEvents, events.len() as u64);
                 for ev in events {
@@ -942,6 +964,23 @@ impl ServeEngine {
             Err(e) => self.reject_model(&tx, e),
         }
         ModelTicket::new(cell)
+    }
+
+    /// Start a token-level generation: tokenize `req.prompt`, prefill the
+    /// session state, and drive an autoregressive decode loop through the
+    /// batcher — sampling, stop conditions, and per-token streaming per
+    /// [`crate::serve::generate`]'s module docs. Returns immediately; the
+    /// [`GenTicket`] is a non-blocking [`crate::serve::Completion`] both
+    /// per token ([`GenTicket::next_token`]) and for the final
+    /// [`crate::serve::generate::GenResponse`].
+    ///
+    /// [`GenTicket`]: crate::serve::generate::GenTicket
+    /// [`GenTicket::next_token`]: crate::serve::generate::GenTicket::next_token
+    pub fn generate(
+        &self,
+        req: crate::serve::generate::GenRequest,
+    ) -> crate::serve::generate::GenTicket {
+        crate::serve::generate::start(self, req)
     }
 
     /// Admit a burst of requests atomically per queue: dispatch cannot

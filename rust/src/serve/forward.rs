@@ -34,6 +34,13 @@
 //! inside the engine so consecutive sessions keep coalescing with each
 //! other at every depth. Per-session stats (hops, forwards, queue/compute
 //! split, batch sizes seen) come back in the [`ModelResponse`].
+//! `serve::generate` builds token-level decode on exactly this seam: its
+//! step function IS tokenize→sample→re-embed, with per-token streaming,
+//! stop conditions, and mid-session cancellation layered on top — reach
+//! for [`ServeEngine::generate`] when the session's steps are tokens
+//! rather than raw activations.
+//!
+//! [`ServeEngine::generate`]: crate::serve::engine::ServeEngine::generate
 //!
 //! Failures are typed ([`ServeError`]): a kernel panic on one hop fails
 //! only the owning traversal with `WorkerPanic { hop: Some(_) }`, and a

@@ -1,0 +1,879 @@
+//! Token-level generation: autoregressive decode as a first-class serving
+//! workload on top of the pipelined batcher.
+//!
+//! This is the workload CLoQ's quantize+init stage exists to serve: the
+//! paper evaluates its calibrated LoRA initialization by *decoding*
+//! (language generation, arithmetic reasoning), and serving stacks are
+//! judged on time-to-first-token (TTFT) and inter-token latency (ITL)
+//! under continuous batching — not per-layer matvec throughput. Before
+//! this module the engine only exposed raw forwards and caller-`StepFn`
+//! sessions; generation is now a typed request:
+//!
+//! ```ignore
+//! let route = engine.route(&["blk0", "blk1", "lm_head"])?;
+//! let ticket = engine.generate(GenRequest::new(
+//!     route, "Q: 17+25=?", GenParams::greedy(32).stop("\n")));
+//!
+//! // Per-token, non-blocking: each call is a Completion over GenEvent.
+//! loop {
+//!     match ticket.next_token().wait()? {
+//!         GenEvent::Token { piece, .. } => print!("{piece}"),
+//!         GenEvent::Done(resp) => { println!(" [{}]", resp.finish.as_str()); break }
+//!     }
+//! }
+//! ```
+//!
+//! # How a generation rides the batcher
+//!
+//! [`start`] tokenizes the prompt with the byte-level seed tokenizer
+//! (`[BOS] + data::tokenizer::encode`), folds every prompt token into the
+//! session's [`SessionState`] (**prefill** — pure CPU, no model calls),
+//! and submits ONE engine session ([`SessionRequest`]) whose `StepFn` is
+//! the decode loop: after each full-model forward the step samples a
+//! token from the logits, streams it to the caller, folds it into the
+//! state, and returns the next input — or `None` on a stop condition
+//! (EOS, `max_tokens`, stop-string, cancellation). Every forward re-enters
+//! the hop machinery, so CONCURRENT generation sessions coalesce into
+//! shared grouped-kernel micro-batches at every layer, token by token —
+//! continuous batching at token granularity, for free, because the decode
+//! loop lives inside the engine rather than round-tripping per token.
+//!
+//! The logits vector is the final route layer's output, so the effective
+//! vocabulary is that layer's `cols`; sampled ids outside the byte
+//! tokenizer's range decode to the empty string (the EOS id `2` still
+//! terminates when the head is wide enough to emit it).
+//!
+//! # Determinism and the parity contract
+//!
+//! Greedy decode through the continuous batcher is **bit-identical (0 ULP
+//! per step)** to the caller-driven serial reference [`generate_serial`]:
+//! both paths share [`GenCore`] (one code path for sample → stop-check →
+//! absorb), the default state's recurrence is exact f64 arithmetic
+//! ([`state`]), and each hop's kernel is bit-identical to a serial
+//! [`PackedLayer::forward`] whatever batch it rides in (the contract in
+//! `serve::packed`). So identical prompts yield identical token
+//! sequences, texts, and final logits bits — across adapters, hot-swaps,
+//! and any number of concurrent sessions (`rust/tests/parity_generate.rs`).
+//! Seeded sampling is reproducible the same way: the RNG stream is
+//! per-session ([`Sampler`]), so batching interleave cannot perturb it.
+//!
+//! # Observability
+//!
+//! Admission bumps `gen_sessions_total`; every sampled token bumps
+//! `gen_tokens_total`; the first sample observes `gen_ttft_seconds` and
+//! each subsequent one `gen_itl_seconds` — all in the engine's sharded
+//! telemetry with Prometheus rows, benched end-to-end (Poisson arrivals,
+//! heavy-tailed lengths) by `benches/bench_generate.rs`.
+//!
+//! [`PackedLayer::forward`]: crate::serve::packed::PackedLayer::forward
+
+pub mod sampler;
+pub mod state;
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::data::tokenizer;
+use crate::serve::adapters::{AdapterId, AdapterSet};
+use crate::serve::completion::{self, CompleteFn, Completion, CompletionHandle};
+use crate::serve::engine::ServeEngine;
+use crate::serve::error::ServeError;
+use crate::serve::forward::{forward_route_serial, SessionRequest, StepFn};
+use crate::serve::packed::{PackedModel, Route};
+use crate::serve::telemetry::{Counter, Metric};
+
+pub use sampler::{argmax, Sampler, Sampling};
+pub use state::{hash_embed, HashEmbedState, SessionState, EMBED_DECAY};
+
+/// Why a generation ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// The sampler emitted the tokenizer's EOS id.
+    Eos,
+    /// `max_tokens` tokens were sampled.
+    MaxTokens,
+    /// A stop-string appeared in the generated text (the final text is
+    /// truncated at the match; already-streamed pieces are not recalled).
+    Stop,
+    /// [`GenTicket::cancel`] (or a dropped HTTP client) ended the session
+    /// at the next token boundary.
+    Cancelled,
+}
+
+impl FinishReason {
+    /// Stable wire string (the `finish` field of `/v1/generate` replies).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::MaxTokens => "max-tokens",
+            FinishReason::Stop => "stop",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// The sampling/stopping knobs of one generation, separate from the
+/// routing so the serial parity reference can share them verbatim.
+#[derive(Clone, Debug)]
+pub struct GenParams {
+    /// Hard cap on sampled tokens (0 = prefill only: one forward, no
+    /// tokens, `finish = MaxTokens`).
+    pub max_tokens: usize,
+    pub sampling: Sampling,
+    /// Seed of the session's private RNG stream (ignored by greedy).
+    pub seed: u64,
+    /// Stop-strings matched against the accumulated generated text.
+    pub stop: Vec<String>,
+}
+
+impl GenParams {
+    /// Greedy decode up to `max_tokens` — the deterministic default.
+    pub fn greedy(max_tokens: usize) -> GenParams {
+        GenParams { max_tokens, sampling: Sampling::Greedy, seed: 0, stop: Vec::new() }
+    }
+
+    pub fn sampling(mut self, sampling: Sampling) -> GenParams {
+        self.sampling = sampling;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> GenParams {
+        self.seed = seed;
+        self
+    }
+
+    /// Add a stop-string (matching ends the session; may span tokens).
+    pub fn stop(mut self, s: &str) -> GenParams {
+        self.stop.push(s.to_string());
+        self
+    }
+}
+
+/// One generation request: where to decode ([`Route`] + optional adapter),
+/// what to decode from (the prompt), and how ([`GenParams`], optionally a
+/// custom [`SessionState`]).
+pub struct GenRequest {
+    pub route: Route,
+    pub adapter: Option<AdapterId>,
+    pub prompt: String,
+    pub params: GenParams,
+    /// Custom per-session state; `None` uses the default
+    /// [`HashEmbedState`] sized to the route head. A custom state must
+    /// produce activations of the head's input width.
+    pub state: Option<Box<dyn SessionState>>,
+}
+
+impl GenRequest {
+    /// Base-weights generation along `route`.
+    pub fn new(route: Route, prompt: &str, params: GenParams) -> GenRequest {
+        GenRequest { route, adapter: None, prompt: prompt.to_string(), params, state: None }
+    }
+
+    /// Generation routed through the interned adapter (pinned to one
+    /// version at admission, like every engine session).
+    pub fn with_adapter(
+        route: Route,
+        adapter: AdapterId,
+        prompt: &str,
+        params: GenParams,
+    ) -> GenRequest {
+        GenRequest {
+            route,
+            adapter: Some(adapter),
+            prompt: prompt.to_string(),
+            params,
+            state: None,
+        }
+    }
+
+    /// Replace the default session state.
+    pub fn state(mut self, state: Box<dyn SessionState>) -> GenRequest {
+        self.state = Some(state);
+        self
+    }
+}
+
+/// One event on a generation's token stream.
+#[derive(Clone, Debug)]
+pub enum GenEvent {
+    /// The `index`-th sampled token (0-based) and its decoded text piece
+    /// (empty for ids outside the byte range — specials, oversized vocab).
+    Token { index: usize, token: i32, piece: String },
+    /// The session ended; repeated for every subsequent `next_token`.
+    Done(GenResponse),
+}
+
+/// A finished generation: the decoded text, the raw token ids, why it
+/// stopped, latency observations, and the underlying traversal's stats.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    /// Generated text (stop-string match truncated away; prompt excluded).
+    pub text: String,
+    /// Sampled token ids, in order (stop/EOS token included).
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// Prompt tokens absorbed during prefill (`[BOS]` included).
+    pub prompt_tokens: usize,
+    /// Logits of the LAST forward — the 0-ULP parity anchor against
+    /// [`generate_serial`].
+    pub y: Vec<f64>,
+    /// Admission → first sampled token (0.0 when no token was sampled).
+    pub ttft_s: f64,
+    /// Full-model forwards executed (prefill included).
+    pub forwards: usize,
+    /// Layer hops executed (`forwards · route_len`).
+    pub hops: usize,
+    pub queue_s: f64,
+    pub compute_s: f64,
+    pub wall_s: f64,
+    /// Largest micro-batch any hop rode in — >1 means this generation
+    /// actually coalesced with concurrent traffic.
+    pub max_batch_seen: usize,
+    pub mixed_hops: usize,
+    pub trace_id: u64,
+}
+
+/// The shared decode core: sample → stop-check → absorb, ONE code path
+/// used verbatim by both the engine's in-batcher step function and the
+/// serial reference — which is what makes the 0-ULP parity contract a
+/// property of the kernels alone rather than of two hand-kept loops.
+struct GenCore {
+    state: Box<dyn SessionState>,
+    sampler: Sampler,
+    max_tokens: usize,
+    stop: Vec<String>,
+    tokens: Vec<i32>,
+    /// Raw generated BYTES (specials contribute none). Text is decoded
+    /// from here at the end, so multi-byte UTF-8 characters assembled
+    /// across tokens come out intact — matching `tokenizer::decode` over
+    /// the token ids exactly.
+    bytes: Vec<u8>,
+    /// Byte offset of the earliest stop-string match (final text truncates
+    /// here).
+    stop_at: Option<usize>,
+    finish: Option<FinishReason>,
+}
+
+impl GenCore {
+    fn new(state: Box<dyn SessionState>, params: &GenParams) -> GenCore {
+        GenCore {
+            state,
+            sampler: Sampler::new(params.sampling.clone(), params.seed),
+            max_tokens: params.max_tokens,
+            stop: params.stop.clone(),
+            tokens: Vec::new(),
+            bytes: Vec::new(),
+            stop_at: None,
+            finish: None,
+        }
+    }
+
+    /// Absorb the whole prompt (no model calls) and return the prefill
+    /// forward's input.
+    fn prefill(&mut self, prompt: &[i32]) -> Vec<f64> {
+        for &t in prompt {
+            self.state.absorb(t);
+        }
+        self.state.x()
+    }
+
+    /// One decode step on the latest forward's logits: the sampled token,
+    /// its text piece, and the next forward's input (`None` ends the
+    /// session — `finish` is set). Stop conditions are checked in priority
+    /// order EOS > stop-string > max-tokens.
+    fn step(&mut self, logits: &[f64]) -> (i32, String, Option<Vec<f64>>) {
+        let tok = self.sampler.sample(logits) as i32;
+        self.tokens.push(tok);
+        let piece = tokenizer::decode_token(tok);
+        if tok >= tokenizer::BYTE_OFFSET && tok < tokenizer::VOCAB as i32 {
+            self.bytes.push((tok - tokenizer::BYTE_OFFSET) as u8);
+        }
+        if tok == tokenizer::EOS {
+            self.finish = Some(FinishReason::Eos);
+            return (tok, piece, None);
+        }
+        if let Some(at) = self.stop_match() {
+            self.stop_at = Some(at);
+            self.finish = Some(FinishReason::Stop);
+            return (tok, piece, None);
+        }
+        if self.tokens.len() >= self.max_tokens {
+            self.finish = Some(FinishReason::MaxTokens);
+            return (tok, piece, None);
+        }
+        self.state.absorb(tok);
+        (tok, piece, Some(self.state.x()))
+    }
+
+    /// Earliest stop-string match in the generated bytes (a match can span
+    /// token boundaries — the accumulated output is checked, not the
+    /// latest piece).
+    fn stop_match(&self) -> Option<usize> {
+        self.stop
+            .iter()
+            .filter(|s| !s.is_empty())
+            .filter_map(|s| {
+                let pat = s.as_bytes();
+                self.bytes.windows(pat.len()).position(|w| w == pat)
+            })
+            .min()
+    }
+
+    /// The generated text with any stop-string match truncated away.
+    fn final_text(&self) -> String {
+        let end = self.stop_at.unwrap_or(self.bytes.len());
+        String::from_utf8_lossy(&self.bytes[..end]).into_owned()
+    }
+}
+
+/// In-flight mutable state shared between the engine-side step function
+/// and the completion finalizer (only one of them runs at a time — hops
+/// are sequential and the finalizer fires after the last one).
+struct Flight {
+    core: GenCore,
+    ttft_s: f64,
+    t_last: Option<Instant>,
+}
+
+/// The ordered token-event stream between the decode loop (producer) and
+/// any number of [`TokenTicket`]s (consumers). Events buffer until asked
+/// for; the terminal event (`Done` or a typed error) replays to every
+/// subsequent ticket.
+struct TokenStream {
+    inner: Mutex<StreamInner>,
+}
+
+struct StreamInner {
+    queue: VecDeque<GenEvent>,
+    waiters: VecDeque<completion::CompletionSender<GenEvent>>,
+    done: Option<Result<GenEvent, ServeError>>,
+}
+
+impl TokenStream {
+    fn new() -> TokenStream {
+        TokenStream {
+            inner: Mutex::new(StreamInner {
+                queue: VecDeque::new(),
+                waiters: VecDeque::new(),
+                done: None,
+            }),
+        }
+    }
+
+    /// Producer side: append one token event (delivered to the oldest
+    /// waiting ticket, else buffered). Sends happen OUTSIDE the lock —
+    /// a delivery may run an `on_complete` callback inline, and that
+    /// callback may immediately ask for the next token.
+    fn push(&self, ev: GenEvent) {
+        let waiter = {
+            let mut g = self.inner.lock().unwrap();
+            match g.waiters.pop_front() {
+                Some(tx) => Some(tx),
+                None => {
+                    g.queue.push_back(ev.clone());
+                    None
+                }
+            }
+        };
+        if let Some(tx) = waiter {
+            let _ = tx.send(Ok(ev));
+        }
+    }
+
+    /// Producer side: set the terminal event and wake every waiter.
+    fn finish(&self, terminal: Result<GenEvent, ServeError>) {
+        let waiters: Vec<_> = {
+            let mut g = self.inner.lock().unwrap();
+            g.done = Some(terminal.clone());
+            g.waiters.drain(..).collect()
+        };
+        for tx in waiters {
+            let _ = tx.send(terminal.clone());
+        }
+    }
+
+    /// Consumer side: a completion cell for the next event — a buffered
+    /// token, the (replayed) terminal, or a wait slot.
+    fn next(&self) -> CompletionHandle<GenEvent> {
+        let (tx, rx) = completion::channel();
+        let ready = {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(ev) = g.queue.pop_front() {
+                Some(Ok(ev))
+            } else if let Some(d) = g.done.clone() {
+                Some(d)
+            } else {
+                g.waiters.push_back(tx);
+                return rx;
+            }
+        };
+        let _ = tx.send(ready.expect("checked above"));
+        rx
+    }
+}
+
+/// Handle to ONE upcoming token event — the per-token [`Completion`] of a
+/// generation. Resolves to [`GenEvent::Token`] as the decode loop samples,
+/// to [`GenEvent::Done`] once the session ends (repeatedly, for every
+/// later ticket), or to the session's typed [`ServeError`].
+pub struct TokenTicket {
+    cell: CompletionHandle<GenEvent>,
+}
+
+impl TokenTicket {
+    pub fn wait(self) -> Result<GenEvent, ServeError> {
+        self.cell.wait()
+    }
+
+    pub fn wait_timeout(self, timeout: std::time::Duration) -> Result<GenEvent, ServeError> {
+        self.cell.wait_timeout(timeout)
+    }
+}
+
+impl Completion for TokenTicket {
+    type Output = GenEvent;
+
+    fn try_wait(&mut self) -> Option<Result<GenEvent, ServeError>> {
+        self.cell.try_take()
+    }
+
+    fn on_complete(self, f: CompleteFn<GenEvent>) {
+        self.cell.on_complete(f);
+    }
+
+    fn wait(self) -> Result<GenEvent, ServeError> {
+        TokenTicket::wait(self)
+    }
+
+    fn wait_timeout(self, timeout: std::time::Duration) -> Result<GenEvent, ServeError> {
+        TokenTicket::wait_timeout(self, timeout)
+    }
+}
+
+/// Handle to one in-flight generation. Consume it two ways, freely mixed:
+/// per token via [`next_token`](GenTicket::next_token) (each a
+/// non-blocking [`Completion`] over [`GenEvent`]), or whole via this
+/// ticket's own [`Completion`] impl, which resolves to the final
+/// [`GenResponse`] exactly like a [`ModelTicket`] — so the HTTP deferral
+/// path works unchanged for non-streaming replies.
+///
+/// [`ModelTicket`]: crate::serve::forward::ModelTicket
+pub struct GenTicket {
+    stream: Arc<TokenStream>,
+    done: CompletionHandle<GenResponse>,
+    cancel: Arc<AtomicBool>,
+}
+
+impl GenTicket {
+    /// A completion cell for the next token event. Tickets taken after the
+    /// session ends resolve immediately with the replayed terminal event.
+    pub fn next_token(&self) -> TokenTicket {
+        TokenTicket { cell: self.stream.next() }
+    }
+
+    /// Ask the decode loop to stop at the next token boundary (the session
+    /// then completes normally with [`FinishReason::Cancelled`]). The
+    /// already-admitted forward still runs — cancellation is cooperative,
+    /// like every engine drain path.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Release);
+    }
+
+    pub fn wait(self) -> Result<GenResponse, ServeError> {
+        self.done.wait()
+    }
+
+    pub fn wait_timeout(self, timeout: std::time::Duration) -> Result<GenResponse, ServeError> {
+        self.done.wait_timeout(timeout)
+    }
+}
+
+impl Completion for GenTicket {
+    type Output = GenResponse;
+
+    fn try_wait(&mut self) -> Option<Result<GenResponse, ServeError>> {
+        self.done.try_take()
+    }
+
+    fn on_complete(self, f: CompleteFn<GenResponse>) {
+        self.done.on_complete(f);
+    }
+
+    fn wait(self) -> Result<GenResponse, ServeError> {
+        GenTicket::wait(self)
+    }
+
+    fn wait_timeout(self, timeout: std::time::Duration) -> Result<GenResponse, ServeError> {
+        GenTicket::wait_timeout(self, timeout)
+    }
+}
+
+/// The prompt's token ids as the decode loop absorbs them: `[BOS]` + the
+/// byte-level encoding (shared by both decode paths and the HTTP layer's
+/// accounting).
+pub fn prompt_tokens(prompt: &str) -> Vec<i32> {
+    let mut toks = vec![tokenizer::BOS];
+    toks.extend(tokenizer::encode(prompt));
+    toks
+}
+
+/// Start one generation session on `engine` (the free-function form of
+/// [`ServeEngine::generate`]): tokenize, prefill, submit the decode loop,
+/// and hand back the [`GenTicket`] immediately. Admission failures
+/// (unknown adapter, overload, shutdown, foreign route) resolve the
+/// ticket with the usual typed errors.
+pub fn start(engine: &ServeEngine, req: GenRequest) -> GenTicket {
+    let t0 = Instant::now();
+    let (done_tx, done_rx) = completion::channel();
+    let stream = Arc::new(TokenStream::new());
+    let cancel = Arc::new(AtomicBool::new(false));
+    let ticket =
+        GenTicket { stream: Arc::clone(&stream), done: done_rx, cancel: Arc::clone(&cancel) };
+
+    // Resolve the head width for the default state. A route that was not
+    // built against this engine's model fails typed here (and would be
+    // refused at admission regardless).
+    let ids = req.route.as_ids();
+    let head_rows = match ids.first().and_then(|&id| engine.model().get(id)) {
+        Some(l) => l.rows,
+        None => {
+            let e = ServeError::BadRoute {
+                detail: "generate: route is empty or was not built against this engine's model"
+                    .to_string(),
+            };
+            stream.finish(Err(e.clone()));
+            let _ = done_tx.send(Err(e));
+            return ticket;
+        }
+    };
+
+    let prompt = prompt_tokens(&req.prompt);
+    let n_prompt = prompt.len();
+    let state = req.state.unwrap_or_else(|| Box::new(HashEmbedState::new(head_rows)));
+    let mut core = GenCore::new(state, &req.params);
+    let x0 = core.prefill(&prompt);
+    if x0.len() != head_rows {
+        let e = ServeError::StepFailed {
+            forward: 0,
+            detail: format!(
+                "session state produced {} values but the route head takes {head_rows} features",
+                x0.len()
+            ),
+        };
+        stream.finish(Err(e.clone()));
+        let _ = done_tx.send(Err(e));
+        return ticket;
+    }
+
+    let tel = engine.telemetry_handle();
+    tel.incr(Counter::GenSessions);
+
+    let flight = Arc::new(Mutex::new(Flight { core, ttft_s: 0.0, t_last: None }));
+
+    // The decode loop, run inside the engine after every full forward:
+    // sample from the logits, stream the token, fold it into the state,
+    // and re-enter — or end the session at a stop condition.
+    let step_flight = Arc::clone(&flight);
+    let step_stream = Arc::clone(&stream);
+    let step_cancel = Arc::clone(&cancel);
+    let step_tel = Arc::clone(&tel);
+    let step: StepFn = Box::new(move |_k, y| {
+        let (event, next) = {
+            let mut g = step_flight.lock().unwrap();
+            if step_cancel.load(Ordering::Acquire) {
+                g.core.finish = Some(FinishReason::Cancelled);
+                return None;
+            }
+            let now = Instant::now();
+            let (token, piece, next) = g.core.step(y);
+            let index = g.core.tokens.len() - 1;
+            if index == 0 {
+                g.ttft_s = now.duration_since(t0).as_secs_f64();
+                step_tel.observe(Metric::GenTtft, g.ttft_s);
+            } else if let Some(prev) = g.t_last {
+                step_tel.observe(Metric::GenItl, now.duration_since(prev).as_secs_f64());
+            }
+            g.t_last = Some(now);
+            step_tel.incr(Counter::GenTokens);
+            (GenEvent::Token { index, token, piece }, next)
+        };
+        // Deliver outside the flight lock: a waiting consumer's callback
+        // runs inline on this worker.
+        step_stream.push(event);
+        next
+    });
+
+    // steps = max_tokens + 1: the prefill forward produces the logits the
+    // first token is sampled from, and the step fn ends the session before
+    // a (max_tokens + 1)-th forward can start. max_tokens == 0 runs the
+    // prefill forward alone and replies without sampling.
+    let steps = req.params.max_tokens + 1;
+    let session = match req.adapter {
+        Some(a) => SessionRequest::with_adapter(req.route, a, x0, steps, step),
+        None => SessionRequest::new(req.route, x0, steps, step),
+    };
+    let model_ticket = engine.submit_session(session);
+
+    // Finalizer: fold the traversal's outcome and the decode state into
+    // the GenResponse, close the token stream, resolve the done cell.
+    let fin_stream = stream;
+    model_ticket.on_complete(Box::new(move |r| match r {
+        Ok(mr) => {
+            let resp = {
+                let mut g = flight.lock().unwrap();
+                let finish = g.core.finish.take().unwrap_or(FinishReason::MaxTokens);
+                GenResponse {
+                    text: g.core.final_text(),
+                    tokens: g.core.tokens.clone(),
+                    finish,
+                    prompt_tokens: n_prompt,
+                    y: mr.y,
+                    ttft_s: g.ttft_s,
+                    forwards: mr.forwards,
+                    hops: mr.hops,
+                    queue_s: mr.queue_s,
+                    compute_s: mr.compute_s,
+                    wall_s: mr.wall_s,
+                    max_batch_seen: mr.max_batch_seen,
+                    mixed_hops: mr.mixed_hops,
+                    trace_id: mr.trace_id,
+                }
+            };
+            fin_stream.finish(Ok(GenEvent::Done(resp.clone())));
+            let _ = done_tx.send(Ok(resp));
+        }
+        Err(e) => {
+            fin_stream.finish(Err(e.clone()));
+            let _ = done_tx.send(Err(e));
+        }
+    }));
+
+    ticket
+}
+
+/// The caller-driven serial decode the parity suite pins [`start`]
+/// against: same tokenization, same [`GenCore`], same default state —
+/// but every forward is a direct [`forward_route_serial`] call on the
+/// caller's thread. Greedy decode through the batcher must match this
+/// reference at 0 ULP (`rust/tests/parity_generate.rs`); it is also the
+/// no-engine baseline `benches/bench_generate.rs` compares against.
+pub fn generate_serial(
+    model: &PackedModel,
+    route: &Route,
+    adapter: Option<&AdapterSet>,
+    prompt: &str,
+    params: &GenParams,
+) -> GenResponse {
+    let t0 = Instant::now();
+    let head = model
+        .get(route.as_ids()[0])
+        .expect("generate_serial: route was built against a different model");
+    let toks = prompt_tokens(prompt);
+    let n_prompt = toks.len();
+    let mut core = GenCore::new(Box::new(HashEmbedState::new(head.rows)), params);
+    let x0 = core.prefill(&toks);
+
+    let steps = params.max_tokens + 1;
+    let mut ttft_s = 0.0;
+    let mut y = forward_route_serial(model, route, adapter, &x0);
+    let mut forwards = 1usize;
+    while forwards < steps {
+        let t_tok = Instant::now();
+        let (_tok, _piece, next) = core.step(&y);
+        if core.tokens.len() == 1 {
+            ttft_s = t_tok.duration_since(t0).as_secs_f64();
+        }
+        match next {
+            None => break,
+            Some(x) => {
+                y = forward_route_serial(model, route, adapter, &x);
+                forwards += 1;
+            }
+        }
+    }
+
+    let finish = core.finish.take().unwrap_or(FinishReason::MaxTokens);
+    let hops = forwards * route.len();
+    GenResponse {
+        text: core.final_text(),
+        tokens: core.tokens.clone(),
+        finish,
+        prompt_tokens: n_prompt,
+        y,
+        ttft_s,
+        forwards,
+        hops,
+        queue_s: 0.0,
+        compute_s: 0.0,
+        wall_s: t0.elapsed().as_secs_f64(),
+        max_batch_seen: 1,
+        mixed_hops: 0,
+        trace_id: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::quant::{quantize_rtn, QuantState};
+    use crate::serve::packed::PackedLayer;
+    use crate::util::prng::Rng;
+
+    fn tiny_model(seed: u64) -> PackedModel {
+        let mut rng = Rng::new(seed);
+        let mut layers = Vec::new();
+        for (name, m, n) in [("emb", 10usize, 6usize), ("head", 6, 12)] {
+            let w = Matrix::randn(m, n, 0.4, &mut rng);
+            let q = QuantState::Int(quantize_rtn(&w, 4, 8));
+            layers.push(PackedLayer::from_state(name, &q).unwrap());
+        }
+        PackedModel::new(layers)
+    }
+
+    fn core_with(params: GenParams) -> GenCore {
+        GenCore::new(Box::new(HashEmbedState::new(4)), &params)
+    }
+
+    /// Logits whose argmax is `tok` over a width-`n` head.
+    fn peaked(n: usize, tok: usize) -> Vec<f64> {
+        let mut l = vec![0.0; n];
+        l[tok] = 5.0;
+        l
+    }
+
+    #[test]
+    fn core_stops_on_eos_stop_string_and_max_tokens() {
+        // EOS: id 2 peaks → finish Eos, empty piece, no absorb.
+        let mut c = core_with(GenParams::greedy(10));
+        let (tok, piece, next) = c.step(&peaked(12, 2));
+        assert_eq!((tok, piece.as_str()), (2, ""));
+        assert!(next.is_none());
+        assert_eq!(c.finish, Some(FinishReason::Eos));
+
+        // Stop-string spanning two tokens: "h" then "i" with stop "hi".
+        let mut c = core_with(GenParams::greedy(10).stop("hi"));
+        let (_, _, next) = c.step(&peaked(260, b'h' as usize + 4));
+        assert!(next.is_some(), "no match yet");
+        let (_, _, next) = c.step(&peaked(260, b'i' as usize + 4));
+        assert!(next.is_none(), "\"hi\" completed the stop-string");
+        assert_eq!(c.finish, Some(FinishReason::Stop));
+        assert_eq!(c.final_text(), "", "match truncated away");
+        assert_eq!(c.tokens.len(), 2);
+
+        // Max-tokens: cap 2 ends at the second sample.
+        let mut c = core_with(GenParams::greedy(2));
+        assert!(c.step(&peaked(260, 70)).2.is_some());
+        assert!(c.step(&peaked(260, 71)).2.is_none());
+        assert_eq!(c.finish, Some(FinishReason::MaxTokens));
+        assert_eq!(c.final_text(), "BC", "ids 70/71 are bytes 'B'/'C'");
+    }
+
+    #[test]
+    fn stop_string_truncates_mid_text() {
+        let mut c = core_with(GenParams::greedy(10).stop("b"));
+        for byte in [b'a', b'b'] {
+            c.step(&peaked(260, byte as usize + 4));
+        }
+        assert_eq!(c.finish, Some(FinishReason::Stop));
+        assert_eq!(c.final_text(), "a");
+        assert_eq!(c.bytes, b"ab", "raw bytes keep the match for the stream");
+    }
+
+    #[test]
+    fn serial_reference_decodes_deterministically() {
+        let m = tiny_model(50);
+        let route = m.route(&["emb", "head"]).unwrap();
+        let p = GenParams::greedy(5);
+        let a = generate_serial(&m, &route, None, "2+2=?", &p);
+        let b = generate_serial(&m, &route, None, "2+2=?", &p);
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.text, b.text);
+        assert_eq!(a.y, b.y, "bit-identical final logits");
+        assert_eq!(a.finish, FinishReason::MaxTokens);
+        assert_eq!(a.tokens.len(), 5);
+        assert_eq!(a.forwards, 5, "stop at max_tokens skips the extra forward");
+        assert_eq!(a.hops, 10);
+        assert_eq!(a.prompt_tokens, 1 + "2+2=?".len());
+        let c = generate_serial(&m, &route, None, "3+3=?", &p);
+        assert_ne!(a.tokens, c.tokens, "different prompts should decode differently");
+    }
+
+    #[test]
+    fn serial_max_tokens_zero_is_prefill_only() {
+        let m = tiny_model(51);
+        let route = m.route(&["emb", "head"]).unwrap();
+        let r = generate_serial(&m, &route, None, "x", &GenParams::greedy(0));
+        assert!(r.tokens.is_empty());
+        assert_eq!(r.text, "");
+        assert_eq!(r.forwards, 1, "the prefill forward still runs");
+        assert_eq!(r.finish, FinishReason::MaxTokens);
+        assert_eq!(r.y.len(), 12);
+    }
+
+    #[test]
+    fn token_stream_orders_buffers_and_replays_the_terminal() {
+        let s = TokenStream::new();
+        s.push(GenEvent::Token { index: 0, token: 70, piece: "B".into() });
+        s.push(GenEvent::Token { index: 1, token: 71, piece: "C".into() });
+        // Buffered events come out in order.
+        match s.next().wait().unwrap() {
+            GenEvent::Token { index, .. } => assert_eq!(index, 0),
+            other => panic!("expected token, got {other:?}"),
+        }
+        match s.next().wait().unwrap() {
+            GenEvent::Token { index, .. } => assert_eq!(index, 1),
+            other => panic!("buffered token expected, got {other:?}"),
+        }
+        // A waiter parked while the queue is empty is woken by push.
+        let mut parked = s.next();
+        assert!(parked.try_take().is_none(), "nothing buffered: the ticket must park");
+        s.push(GenEvent::Token { index: 2, token: 72, piece: "D".into() });
+        match parked.wait().unwrap() {
+            GenEvent::Token { index, .. } => assert_eq!(index, 2),
+            other => panic!("push must wake the parked waiter, got {other:?}"),
+        }
+        let resp = GenResponse {
+            text: "BC".into(),
+            tokens: vec![70, 71],
+            finish: FinishReason::MaxTokens,
+            prompt_tokens: 1,
+            y: vec![],
+            ttft_s: 0.0,
+            forwards: 2,
+            hops: 2,
+            queue_s: 0.0,
+            compute_s: 0.0,
+            wall_s: 0.0,
+            max_batch_seen: 1,
+            mixed_hops: 0,
+            trace_id: 0,
+        };
+        s.finish(Ok(GenEvent::Done(resp)));
+        for _ in 0..3 {
+            match s.next().wait().unwrap() {
+                GenEvent::Done(r) => assert_eq!(r.text, "BC"),
+                other => panic!("terminal must replay, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn token_stream_wakes_parked_waiters_on_error() {
+        let s = Arc::new(TokenStream::new());
+        let w1 = s.next();
+        let w2 = s.next();
+        s.finish(Err(ServeError::ShuttingDown));
+        assert!(matches!(w1.wait(), Err(ServeError::ShuttingDown)));
+        assert!(matches!(w2.wait(), Err(ServeError::ShuttingDown)));
+    }
+
+    #[test]
+    fn prompt_tokens_lead_with_bos() {
+        let toks = prompt_tokens("hi");
+        assert_eq!(toks, vec![tokenizer::BOS, b'h' as i32 + 4, b'i' as i32 + 4]);
+        assert_eq!(prompt_tokens(""), vec![tokenizer::BOS]);
+    }
+}

@@ -1,0 +1,165 @@
+//! Deterministic token sampling over a logits vector.
+//!
+//! Three policies behind one [`Sampler`]:
+//!
+//! * [`Sampling::Greedy`] — argmax, ties broken toward the LOWEST index.
+//!   Consumes no randomness, so greedy decode is a pure function of the
+//!   logits — the anchor of the 0-ULP parity contract in
+//!   `rust/tests/parity_generate.rs`.
+//! * [`Sampling::Temperature`] — softmax at temperature `t`, one draw from
+//!   the session's seeded RNG stream.
+//! * [`Sampling::TopK`] — the distribution truncated to the `k` largest
+//!   logits (ties toward lower indices), renormalized at temperature `t`.
+//!
+//! Every non-greedy sample consumes EXACTLY one `f64` from the session's
+//! own [`Rng`] stream — never from a shared or thread-local source — so a
+//! fixed `(seed, logits sequence)` reproduces the same tokens no matter
+//! how the batcher interleaves concurrent sessions.
+
+use crate::util::prng::Rng;
+
+/// The sampling policy for one generation session.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Sampling {
+    /// Argmax (lowest index wins ties). Deterministic; ignores the seed.
+    Greedy,
+    /// Softmax at temperature `t` (`t <= 0` degenerates to greedy).
+    Temperature { t: f64 },
+    /// Top-`k` truncation, then softmax at temperature `t` over the
+    /// survivors (`k == 0` or `k >=` vocab means no truncation; `t <= 0`
+    /// degenerates to greedy).
+    TopK { k: usize, t: f64 },
+}
+
+/// Argmax with the lowest index winning ties (and NaN logits never
+/// winning), so the result is well-defined for any input.
+pub fn argmax(logits: &[f64]) -> usize {
+    assert!(!logits.is_empty(), "argmax over empty logits");
+    let mut best = 0usize;
+    for (i, &l) in logits.iter().enumerate().skip(1) {
+        if l > logits[best] || logits[best].is_nan() {
+            best = i;
+        }
+    }
+    best
+}
+
+/// A per-session sampler: the policy plus the session's private RNG
+/// stream. One instance per generation session; the engine never shares
+/// it across sessions (module docs — that is what makes seeded sampling
+/// reproducible under concurrency).
+pub struct Sampler {
+    sampling: Sampling,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(sampling: Sampling, seed: u64) -> Sampler {
+        Sampler { sampling, rng: Rng::new(seed) }
+    }
+
+    /// Draw the next token id from `logits` (one id in `0..logits.len()`).
+    pub fn sample(&mut self, logits: &[f64]) -> usize {
+        match self.sampling {
+            Sampling::Greedy => argmax(logits),
+            Sampling::Temperature { t } => {
+                if t <= 0.0 {
+                    return argmax(logits);
+                }
+                let all: Vec<usize> = (0..logits.len()).collect();
+                self.draw(logits, &all, t)
+            }
+            Sampling::TopK { k, t } => {
+                if t <= 0.0 {
+                    return argmax(logits);
+                }
+                if k == 0 || k >= logits.len() {
+                    let all: Vec<usize> = (0..logits.len()).collect();
+                    return self.draw(logits, &all, t);
+                }
+                // Largest k logits; ties toward lower indices (sort is by
+                // descending logit with ascending index as tie-break, so
+                // the cut is deterministic).
+                let mut idx: Vec<usize> = (0..logits.len()).collect();
+                idx.sort_by(|&a, &b| {
+                    logits[b]
+                        .partial_cmp(&logits[a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+                idx.truncate(k);
+                idx.sort_unstable(); // stable cumulative-walk order
+                self.draw(logits, &idx, t)
+            }
+        }
+    }
+
+    /// One softmax draw over `cand` at temperature `t`, consuming exactly
+    /// one `f64` from the session stream. Max-subtraction keeps every
+    /// weight in `(0, 1]`, so the total is finite and at least 1.
+    fn draw(&mut self, logits: &[f64], cand: &[usize], t: f64) -> usize {
+        let m = cand.iter().map(|&i| logits[i]).fold(f64::NEG_INFINITY, f64::max);
+        let weights: Vec<f64> = cand.iter().map(|&i| ((logits[i] - m) / t).exp()).collect();
+        let total: f64 = weights.iter().sum();
+        let r = self.rng.f64() * total;
+        let mut acc = 0.0;
+        for (w, &i) in weights.iter().zip(cand) {
+            acc += w;
+            if r < acc {
+                return i;
+            }
+        }
+        *cand.last().expect("sample over empty candidate set")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_is_argmax_with_low_index_ties() {
+        let mut s = Sampler::new(Sampling::Greedy, 7);
+        assert_eq!(s.sample(&[0.1, 3.0, -1.0, 3.0]), 1, "first max wins the tie");
+        assert_eq!(s.sample(&[5.0]), 0);
+        assert_eq!(argmax(&[f64::NAN, 1.0, 2.0]), 2, "NaN never wins");
+    }
+
+    #[test]
+    fn seeded_streams_reproduce_and_differ() {
+        let logits = vec![0.0, 1.0, 2.0, 1.5, -3.0];
+        let draw_n = |seed: u64| -> Vec<usize> {
+            let mut s = Sampler::new(Sampling::Temperature { t: 1.0 }, seed);
+            (0..32).map(|_| s.sample(&logits)).collect()
+        };
+        assert_eq!(draw_n(11), draw_n(11), "same seed, same token stream");
+        assert_ne!(draw_n(11), draw_n(12), "different seeds must diverge");
+    }
+
+    #[test]
+    fn top_k_only_emits_the_k_best() {
+        let logits = vec![0.0, 9.0, 1.0, 8.0, 2.0];
+        let mut s = Sampler::new(Sampling::TopK { k: 2, t: 1.0 }, 3);
+        for _ in 0..64 {
+            let tok = s.sample(&logits);
+            assert!(tok == 1 || tok == 3, "top-2 of these logits is {{1, 3}}, got {tok}");
+        }
+    }
+
+    #[test]
+    fn degenerate_knobs_fall_back_to_greedy() {
+        let logits = vec![0.5, 2.0, 1.0];
+        let mut s = Sampler::new(Sampling::Temperature { t: 0.0 }, 1);
+        assert_eq!(s.sample(&logits), 1);
+        let mut s = Sampler::new(Sampling::TopK { k: 0, t: -1.0 }, 1);
+        assert_eq!(s.sample(&logits), 1);
+    }
+
+    #[test]
+    fn low_temperature_concentrates_on_the_mode() {
+        let logits = vec![0.0, 4.0, 0.5];
+        let mut s = Sampler::new(Sampling::Temperature { t: 0.05 }, 99);
+        let hits = (0..64).filter(|_| s.sample(&logits) == 1).count();
+        assert!(hits >= 60, "t=0.05 should almost always pick the mode, got {hits}/64");
+    }
+}

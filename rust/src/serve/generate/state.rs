@@ -1,0 +1,136 @@
+//! Per-session decode state behind the [`SessionState`] trait.
+//!
+//! Autoregressive decode needs SOMETHING that turns the token history into
+//! the next forward's input activation. For a transformer that something
+//! is an embedding lookup plus a per-layer KV cache; for this engine —
+//! whose packed layers are stateless matvec chains — it is any
+//! deterministic fold over the absorbed tokens. The trait keeps the decode
+//! loop agnostic: [`GenCore`](super::GenCore) absorbs prompt and sampled
+//! tokens through it and reads back the next input, so a real KV-cache
+//! state can slot in later without touching the loop, the batcher, or the
+//! parity contract (ROADMAP follow-up).
+//!
+//! The default [`HashEmbedState`] is a decayed hash-embedding recurrence:
+//!
+//! ```text
+//!   h ← h·DECAY + embed(token),   embed(token)[i] ∈ [-1, 1) pseudo-random
+//! ```
+//!
+//! `embed` is a pure function of `(token, i)` (a [`SplitMix64`] stream
+//! keyed by the token id), so the state — and therefore every logits
+//! vector a generation produces — is bit-determined by the token history
+//! alone. That is the property the 0-ULP parity contract rides on: the
+//! engine path and the serial reference absorb identical histories through
+//! identical f64 arithmetic.
+
+use crate::util::prng::SplitMix64;
+
+/// Per-session decode state: folds absorbed tokens into the next forward's
+/// input activation. Implementations must be deterministic — `x()` after a
+/// given absorb history must be bit-identical across runs, because the
+/// greedy-parity contract compares engine and serial paths at 0 ULP.
+pub trait SessionState: Send + 'static {
+    /// Fold one token (prompt or freshly sampled) into the state.
+    fn absorb(&mut self, token: i32);
+    /// The next forward's input activation (width = route head's `rows`).
+    fn x(&self) -> Vec<f64>;
+}
+
+/// Decay applied to the running state per absorbed token (exactly
+/// representable in binary, so the recurrence is reproducible arithmetic,
+/// not an approximation).
+pub const EMBED_DECAY: f64 = 0.5;
+
+/// Salt mixed into the per-token embedding stream so token id 0 does not
+/// collapse onto the all-zeros SplitMix64 seed.
+const EMBED_SALT: u64 = 0x9e37_79b9_7f4a_7c15;
+
+/// The pseudo-embedding of one token: `dim` values in `[-1, 1)`, a pure
+/// deterministic function of `(token, index)`.
+pub fn hash_embed(token: i32, dim: usize) -> Vec<f64> {
+    let key = (token as u32 as u64).wrapping_mul(0x2545_f491_4f6c_dd1d) ^ EMBED_SALT;
+    let mut sm = SplitMix64::new(key);
+    (0..dim)
+        .map(|_| {
+            // Top 53 bits → an exact dyadic rational in [0, 1), then an
+            // affine map to [-1, 1). Every step is exact f64 arithmetic.
+            let u = sm.next_u64() >> 11;
+            u as f64 * (2.0 / 9_007_199_254_740_992.0) - 1.0
+        })
+        .collect()
+}
+
+/// The default [`SessionState`]: a fixed-width decayed hash-embedding
+/// recurrence (module docs). Cheap (O(dim) per token, no model access),
+/// deterministic, and sensitive to the whole token history — enough to
+/// exercise the decode loop, the batcher, and the parity suite without a
+/// trained embedding table.
+pub struct HashEmbedState {
+    h: Vec<f64>,
+}
+
+impl HashEmbedState {
+    /// Fresh state producing activations of width `dim` (the route head's
+    /// input width).
+    pub fn new(dim: usize) -> HashEmbedState {
+        HashEmbedState { h: vec![0.0; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.h.len()
+    }
+}
+
+impl SessionState for HashEmbedState {
+    fn absorb(&mut self, token: i32) {
+        let e = hash_embed(token, self.h.len());
+        for (hi, ei) in self.h.iter_mut().zip(e) {
+            *hi = *hi * EMBED_DECAY + ei;
+        }
+    }
+
+    fn x(&self) -> Vec<f64> {
+        self.h.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embed_is_deterministic_and_bounded() {
+        let a = hash_embed(42, 16);
+        let b = hash_embed(42, 16);
+        assert_eq!(a, b, "pure function of (token, index)");
+        assert!(a.iter().all(|v| (-1.0..1.0).contains(v)), "{a:?}");
+        let c = hash_embed(43, 16);
+        assert_ne!(a, c, "distinct tokens must embed differently");
+    }
+
+    #[test]
+    fn state_is_a_function_of_the_token_history() {
+        let mut s1 = HashEmbedState::new(8);
+        let mut s2 = HashEmbedState::new(8);
+        for t in [1, 70, 71, 2] {
+            s1.absorb(t);
+            s2.absorb(t);
+        }
+        assert_eq!(s1.x(), s2.x(), "same history, bit-identical state");
+        s2.absorb(9);
+        assert_ne!(s1.x(), s2.x());
+        assert_eq!(s1.dim(), 8);
+        assert_eq!(s1.x().len(), 8);
+    }
+
+    #[test]
+    fn order_matters() {
+        let mut ab = HashEmbedState::new(6);
+        ab.absorb(10);
+        ab.absorb(20);
+        let mut ba = HashEmbedState::new(6);
+        ba.absorb(20);
+        ba.absorb(10);
+        assert_ne!(ab.x(), ba.x(), "the decay makes the fold order-sensitive");
+    }
+}

@@ -27,9 +27,10 @@ use crate::serve::completion::Completion;
 use crate::serve::engine::Response;
 use crate::serve::error::ServeError;
 use crate::serve::forward::{ModelRequest, ModelResponse, SessionRequest, StepFn};
+use crate::serve::generate::{GenEvent, GenParams, GenRequest, GenResponse, GenTicket, Sampling};
 use crate::serve::http::auth::QuotaGuard;
 use crate::serve::http::{error_body, error_response, respond, respond_raw, scan, wire};
-use crate::serve::http::{Rail, ServerShared};
+use crate::serve::http::{ChunkStream, Rail, ServerShared};
 use crate::serve::packed::Route;
 use crate::serve::telemetry::Counter;
 use crate::util::json::{self, Json};
@@ -109,6 +110,13 @@ fn route(shared: &Arc<ServerShared>, req: &wire::Request, rail: &Arc<Rail>, seq:
             };
             forward(shared, req, rail, seq, guard, true)
         }
+        ("POST", "/v1/generate") => {
+            let guard = match tenant.try_acquire() {
+                Some(g) => g,
+                None => return quota_exceeded(shared, keep),
+            };
+            generate(shared, req, rail, seq, guard)
+        }
         (method, p) if p.starts_with("/v1/adapters/") => {
             let id = &p["/v1/adapters/".len()..];
             if id.is_empty() || id.contains('/') {
@@ -130,7 +138,7 @@ fn route(shared: &Arc<ServerShared>, req: &wire::Request, rail: &Arc<Rail>, seq:
                 _ => method_not_allowed(shared, keep),
             }
         }
-        (_, "/v1/submit" | "/v1/forward" | "/v1/session" | "/v1/stats") => {
+        (_, "/v1/submit" | "/v1/forward" | "/v1/session" | "/v1/generate" | "/v1/stats") => {
             method_not_allowed(shared, keep)
         }
         _ => {
@@ -274,6 +282,230 @@ fn forward(
     };
     defer(shared, rail, seq, keep, guard, ticket, forward_response_json);
     Routed::Deferred
+}
+
+/// POST /v1/generate — token-level autoregressive decode. Body:
+/// `{"route": [...], "prompt": "...", "max_tokens": n}` plus optional
+/// `adapter`, `sampling` (`"greedy"` | `"temperature"` | `"top_k"`),
+/// `temperature`, `top_k`, `seed`, `stop` (array of strings), and
+/// `stream` (bool, default false).
+///
+/// Non-streaming replies ride the ordinary [`defer`] path: one JSON
+/// object when the session finishes. With `"stream": true` the reply is
+/// `Transfer-Encoding: chunked`, one NDJSON event per chunk — token
+/// events as they are sampled, then a final `{"done": true, ...}`
+/// summary — and an early client disconnect cancels the session at the
+/// next token boundary via the stream's client-gone hook.
+///
+/// Uses the full JSON parser, not the lazy [`scan`] pass: generate
+/// bodies are small (a prompt and knobs, no activation vectors), and the
+/// per-request cost is dwarfed by the decode loop it starts.
+///
+/// Unlike `/v1/session`, the route does NOT need to be loopable: the
+/// decode loop re-enters the model through the hash-embedding state
+/// (head-width by construction), not by feeding the tail's output back
+/// verbatim.
+fn generate(
+    shared: &Arc<ServerShared>,
+    req: &wire::Request,
+    rail: &Arc<Rail>,
+    seq: u64,
+    guard: QuotaGuard,
+) -> Routed {
+    let keep = req.keep_alive;
+    let bad = |msg: &str| -> Routed {
+        let body = error_body("bad-json", msg);
+        Routed::Now(respond(&shared.telemetry, 400, &body, keep))
+    };
+    let text = match std::str::from_utf8(&req.body) {
+        Ok(t) => t,
+        Err(_) => return bad("body is not UTF-8"),
+    };
+    let tree = match json::parse(text) {
+        Ok(t) => t,
+        Err(e) => return bad(&format!("malformed JSON: {e}")),
+    };
+    let names = match tree.get("route").and_then(Json::as_arr) {
+        None => return missing_field(shared, "route", keep),
+        Some(arr) => {
+            let mut names = Vec::with_capacity(arr.len());
+            for v in arr {
+                match v.as_str() {
+                    Some(s) => names.push(s.to_string()),
+                    None => return bad("'route' must be an array of layer names"),
+                }
+            }
+            names
+        }
+    };
+    let prompt = match tree.get("prompt").and_then(Json::as_str) {
+        Some(p) => p.to_string(),
+        None => return missing_field(shared, "prompt", keep),
+    };
+    // An explicit cap is required: an unbounded decode loop is a cost
+    // decision the client must make, not a server default.
+    let max_tokens = match tree.get("max_tokens").and_then(Json::as_usize) {
+        Some(n) => n,
+        None => return missing_field(shared, "max_tokens", keep),
+    };
+    let sampling = match tree.get("sampling").map(Json::as_str) {
+        None | Some(Some("greedy")) => Sampling::Greedy,
+        Some(Some("temperature")) => Sampling::Temperature {
+            t: tree.get("temperature").and_then(Json::as_f64).unwrap_or(1.0),
+        },
+        Some(Some("top_k")) => {
+            let k = match tree.get("top_k").and_then(Json::as_usize) {
+                Some(k) => k,
+                None => return missing_field(shared, "top_k", keep),
+            };
+            Sampling::TopK { k, t: tree.get("temperature").and_then(Json::as_f64).unwrap_or(1.0) }
+        }
+        Some(_) => return bad("'sampling' must be \"greedy\", \"temperature\", or \"top_k\""),
+    };
+    let seed = tree.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let mut params = GenParams::greedy(max_tokens).sampling(sampling).seed(seed);
+    if let Some(stops) = tree.get("stop") {
+        let arr = match stops.as_arr() {
+            Some(a) => a,
+            None => return bad("'stop' must be an array of strings"),
+        };
+        for s in arr {
+            match s.as_str() {
+                Some(s) => params = params.stop(s),
+                None => return bad("'stop' must be an array of strings"),
+            }
+        }
+    }
+    let stream_mode = tree.get("stream").and_then(Json::as_bool).unwrap_or(false);
+    // Resolve route and adapter BEFORE any response byte: every
+    // validation failure must answer as a typed JSON error, and once a
+    // chunked 200 head is on the wire the status is spent.
+    let route = match shared.engine.route(&names) {
+        Ok(r) => r,
+        Err(e) => return e.into(),
+    };
+    let aid = match tree.get("adapter").and_then(Json::as_str) {
+        None => None,
+        Some(name) => match shared.engine.adapter(name) {
+            Ok(aid) => Some(aid),
+            Err(e) => return e.into(),
+        },
+    };
+    let greq = match aid {
+        Some(aid) => GenRequest::with_adapter(route, aid, &prompt, params),
+        None => GenRequest::new(route, &prompt, params),
+    };
+    if !stream_mode {
+        let ticket = shared.engine.generate(greq);
+        defer(shared, rail, seq, keep, guard, ticket, generate_response_json);
+        return Routed::Deferred;
+    }
+    let mut ticket = shared.engine.generate(greq);
+    // Admission failures resolve inline, before any token; answer them
+    // as plain typed errors rather than a 200 stream that opens with an
+    // error event. (An inline Ok — the whole session already finished —
+    // is fine: its events are buffered in the token stream.)
+    if let Some(Err(e)) = ticket.try_wait() {
+        return Routed::Engine(e);
+    }
+    let ticket = Arc::new(ticket);
+    let hook = {
+        let t = Arc::clone(&ticket);
+        Box::new(move || t.cancel()) as Box<dyn FnOnce() + Send>
+    };
+    let out = ChunkStream::new(hook);
+    out.push(wire::write_chunked_head(200, "application/x-ndjson", keep));
+    rail.push_stream(seq, Arc::clone(&out));
+    // Streaming bypasses respond_raw, so tick the status class here: the
+    // 200 is committed the moment the head enters the stream.
+    shared.telemetry.incr(Counter::HttpOk);
+    pump_stream(ticket, out, guard);
+    Routed::Deferred
+}
+
+/// Relay token events from a generation into the connection's chunk
+/// stream, one NDJSON line per chunk. Runs on whichever thread resolves
+/// each token ticket — engine workers, after the first hop — and parks
+/// nothing between tokens: draining buffered events with `try_wait`,
+/// then installing the next event's completion callback, which re-enters
+/// the pump.
+fn pump_stream(ticket: Arc<GenTicket>, out: Arc<ChunkStream>, guard: QuotaGuard) {
+    let mut next = ticket.next_token();
+    loop {
+        match next.try_wait() {
+            Some(ev) => {
+                if emit_gen_event(&out, ev) {
+                    drop(guard); // terminal: release the tenant slot
+                    return;
+                }
+                next = ticket.next_token();
+            }
+            None => break,
+        }
+    }
+    let t = Arc::clone(&ticket);
+    next.on_complete(Box::new(move |ev| {
+        if emit_gen_event(&out, ev) {
+            drop(guard);
+            return;
+        }
+        pump_stream(t, out, guard);
+    }));
+}
+
+/// Frame one generation event as an NDJSON chunk. Returns true when the
+/// event was terminal: the chunked-body terminator has been written and
+/// the stream closed.
+fn emit_gen_event(out: &ChunkStream, ev: Result<GenEvent, ServeError>) -> bool {
+    let (line, terminal) = match ev {
+        Ok(GenEvent::Token { index, token, piece }) => (
+            Json::from_pairs(vec![
+                ("index", Json::from(index)),
+                ("token", Json::from(token as i64)),
+                ("piece", Json::from(piece.as_str())),
+            ]),
+            false,
+        ),
+        Ok(GenEvent::Done(resp)) => {
+            let mut done = generate_response_json(&resp);
+            done.set("done", Json::from(true));
+            (done, true)
+        }
+        Err(e) => {
+            let mut body = error_body(e.code(), &e.to_string());
+            body.set("error", Json::from(true));
+            (body, true)
+        }
+    };
+    let mut data = line.to_string_compact().into_bytes();
+    data.push(b'\n');
+    out.push(wire::write_chunk(&data));
+    if terminal {
+        out.push(wire::write_last_chunk());
+        out.close();
+    }
+    terminal
+}
+
+/// The generation summary on the wire. Deliberately omits the final
+/// logits vector (`GenResponse::y`): it is the in-process 0-ULP parity
+/// anchor, not client-facing data, and can be as wide as the vocabulary.
+fn generate_response_json(resp: &GenResponse) -> Json {
+    Json::from_pairs(vec![
+        ("text", Json::from(resp.text.as_str())),
+        ("tokens", Json::Arr(resp.tokens.iter().map(|&t| Json::from(t as i64)).collect())),
+        ("finish", Json::from(resp.finish.as_str())),
+        ("prompt_tokens", Json::from(resp.prompt_tokens)),
+        ("ttft_s", Json::from(resp.ttft_s)),
+        ("forwards", Json::from(resp.forwards)),
+        ("hops", Json::from(resp.hops)),
+        ("queue_s", Json::from(resp.queue_s)),
+        ("compute_s", Json::from(resp.compute_s)),
+        ("wall_s", Json::from(resp.wall_s)),
+        ("max_batch_seen", Json::from(resp.max_batch_seen)),
+        ("mixed_hops", Json::from(resp.mixed_hops)),
+        ("trace_id", Json::from(resp.trace_id as f64)),
+    ])
 }
 
 /// A multi-step HTTP session reuses each forward's output as the next

@@ -9,6 +9,7 @@
 //! | `POST /v1/submit`           | [`ServeEngine::submit`]            |
 //! | `POST /v1/forward`          | [`ServeEngine::submit_model`]      |
 //! | `POST /v1/session`          | [`ServeEngine::submit_session`]    |
+//! | `POST /v1/generate`         | [`ServeEngine::generate`]          |
 //! | `PUT /v1/adapters/{id}`     | [`ServeEngine::register_adapter`]  |
 //! | `POST /v1/adapters/{id}`    | register (hot-swap; must exist)    |
 //! | `DELETE /v1/adapters/{id}`  | [`ServeEngine::unregister_adapter`]|
@@ -29,6 +30,15 @@
 //! so N pipelined requests on one connection are all in flight in the
 //! engine simultaneously with zero parked waiter threads.
 //!
+//! `/v1/generate` with `"stream": true` is the one response that is not a
+//! single buffer: its rail slot holds a [`ChunkStream`] that engine
+//! workers fill with pre-framed `Transfer-Encoding: chunked` bytes, one
+//! NDJSON token event per chunk. The connection thread drains it in
+//! sequence order — pipelined responses behind a stream still cannot
+//! reorder — and a socket write failure mid-stream fires the stream's
+//! cancel hook, ending the generation session at the next token boundary
+//! instead of decoding for a vanished client.
+//!
 //! Authentication, quotas, the `{code, message}` error contract, and the
 //! lazy hot-path JSON decode are documented in [`auth`], [`wire`], and
 //! [`scan`]; endpoint semantics in [`handlers`].
@@ -37,6 +47,7 @@
 //! [`ServeEngine::submit`]: crate::serve::ServeEngine::submit
 //! [`ServeEngine::submit_model`]: crate::serve::ServeEngine::submit_model
 //! [`ServeEngine::submit_session`]: crate::serve::ServeEngine::submit_session
+//! [`ServeEngine::generate`]: crate::serve::ServeEngine::generate
 //! [`ServeEngine::register_adapter`]: crate::serve::ServeEngine::register_adapter
 //! [`ServeEngine::unregister_adapter`]: crate::serve::ServeEngine::unregister_adapter
 //! [`ServeEngine::stats`]: crate::serve::ServeEngine::stats
@@ -75,13 +86,20 @@ pub(crate) struct ServerShared {
     shutdown: AtomicBool,
 }
 
+/// One rail slot: either a complete, already-serialized response, or an
+/// incrementally produced chunked stream (`/v1/generate` streaming).
+pub(crate) enum RailSlot {
+    Full(Vec<u8>),
+    Stream(Arc<ChunkStream>),
+}
+
 /// Per-connection ordered response rail. Handlers (or their completion
 /// callbacks, running on engine workers) push each response under its
 /// request sequence number; the connection thread pops them strictly in
 /// order, so pipelined responses can never interleave or reorder on the
 /// wire regardless of engine completion order.
 pub(crate) struct Rail {
-    slots: Mutex<BTreeMap<u64, Vec<u8>>>,
+    slots: Mutex<BTreeMap<u64, RailSlot>>,
     cv: Condvar,
 }
 
@@ -92,18 +110,120 @@ impl Rail {
 
     /// Deliver the response for request `seq` (any thread).
     pub fn push(&self, seq: u64, bytes: Vec<u8>) {
-        self.slots.lock().unwrap().insert(seq, bytes);
+        self.slots.lock().unwrap().insert(seq, RailSlot::Full(bytes));
+        self.cv.notify_all();
+    }
+
+    /// Deliver request `seq`'s response as a chunked stream. The producer
+    /// keeps pushing into `stream` after this call; the connection thread
+    /// relays each chunk as it lands.
+    pub fn push_stream(&self, seq: u64, stream: Arc<ChunkStream>) {
+        self.slots.lock().unwrap().insert(seq, RailSlot::Stream(stream));
         self.cv.notify_all();
     }
 
     /// Block until the response for `seq` is available, then take it.
-    fn take(&self, seq: u64) -> Vec<u8> {
+    fn take(&self, seq: u64) -> RailSlot {
         let mut slots = self.slots.lock().unwrap();
         loop {
-            if let Some(bytes) = slots.remove(&seq) {
-                return bytes;
+            if let Some(slot) = slots.remove(&seq) {
+                return slot;
             }
             slots = self.cv.wait(slots).unwrap();
+        }
+    }
+}
+
+/// An incrementally produced response body. The generate pump (running on
+/// engine worker threads, one hop per token) pushes pre-framed bytes —
+/// chunked head, token-event chunks, terminator — and the connection
+/// thread drains them onto the socket in arrival order.
+///
+/// The `on_client_gone` hook is the cancellation edge: if the socket dies
+/// mid-stream (or the server shuts down), the connection thread fires it
+/// exactly once. The `/v1/generate` handler wires it to
+/// [`GenTicket::cancel`], so an early client disconnect stops the decode
+/// loop at the next token boundary instead of generating into the void.
+///
+/// [`GenTicket::cancel`]: crate::serve::generate::GenTicket::cancel
+pub(crate) struct ChunkStream {
+    state: Mutex<ChunkState>,
+    cv: Condvar,
+}
+
+struct ChunkState {
+    ready: std::collections::VecDeque<Vec<u8>>,
+    closed: bool,
+    on_client_gone: Option<Box<dyn FnOnce() + Send>>,
+}
+
+/// What the connection thread found when it asked a stream for bytes.
+pub(crate) enum StreamStep {
+    /// Pre-framed bytes to relay onto the socket.
+    Bytes(Vec<u8>),
+    /// Nothing yet and the producer is still live — poll tick elapsed.
+    Pending,
+    /// Producer closed the stream and every chunk has been drained.
+    Finished,
+}
+
+impl ChunkStream {
+    pub fn new(on_client_gone: Box<dyn FnOnce() + Send>) -> Arc<ChunkStream> {
+        Arc::new(ChunkStream {
+            state: Mutex::new(ChunkState {
+                ready: std::collections::VecDeque::new(),
+                closed: false,
+                on_client_gone: Some(on_client_gone),
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Producer side: append pre-framed bytes. No-op once closed.
+    pub fn push(&self, bytes: Vec<u8>) {
+        if bytes.is_empty() {
+            return;
+        }
+        let mut g = self.state.lock().unwrap();
+        if g.closed {
+            return;
+        }
+        g.ready.push_back(bytes);
+        self.cv.notify_all();
+    }
+
+    /// Producer side: no more bytes will follow. Drops the cancel hook —
+    /// a finished session has nothing left to cancel.
+    pub fn close(&self) {
+        let mut g = self.state.lock().unwrap();
+        g.closed = true;
+        g.on_client_gone = None;
+        self.cv.notify_all();
+    }
+
+    /// Connection thread: next bytes, waiting up to `poll` — the bound on
+    /// how long a streaming response delays a shutdown check.
+    fn next_step(&self, poll: Duration) -> StreamStep {
+        let mut g = self.state.lock().unwrap();
+        if let Some(b) = g.ready.pop_front() {
+            return StreamStep::Bytes(b);
+        }
+        if g.closed {
+            return StreamStep::Finished;
+        }
+        let (mut g, _timeout) = self.cv.wait_timeout(g, poll).unwrap();
+        if let Some(b) = g.ready.pop_front() {
+            return StreamStep::Bytes(b);
+        }
+        if g.closed { StreamStep::Finished } else { StreamStep::Pending }
+    }
+
+    /// Connection thread: the peer is unreachable; fire the cancel hook
+    /// (at most once) so the producer stops decoding.
+    fn client_gone(&self) {
+        let hook = self.state.lock().unwrap().on_client_gone.take();
+        if let Some(hook) = hook {
+            hook();
         }
     }
 }
@@ -330,9 +450,32 @@ fn connection_loop(shared: Arc<ServerShared>, mut stream: TcpStream) {
         // Flush responses strictly in order; completion callbacks fill
         // the rail from engine worker threads.
         while written < seq {
-            let bytes = rail.take(written);
-            if stream.write_all(&bytes).is_err() {
-                return;
+            match rail.take(written) {
+                RailSlot::Full(bytes) => {
+                    if stream.write_all(&bytes).is_err() {
+                        return;
+                    }
+                }
+                RailSlot::Stream(chunks) => loop {
+                    match chunks.next_step(READ_POLL) {
+                        StreamStep::Bytes(b) => {
+                            if stream.write_all(&b).is_err() {
+                                // Peer vanished mid-stream: cancel the
+                                // generation instead of decoding into
+                                // a dead socket.
+                                chunks.client_gone();
+                                return;
+                            }
+                        }
+                        StreamStep::Finished => break,
+                        StreamStep::Pending => {
+                            if shared.shutdown.load(Ordering::SeqCst) {
+                                chunks.client_gone();
+                                return;
+                            }
+                        }
+                    }
+                },
             }
             written += 1;
         }

@@ -331,6 +331,47 @@ pub fn write_response(
     out
 }
 
+/// Head of a `Transfer-Encoding: chunked` response — the streaming reply
+/// framing (`/v1/generate` with `"stream": true`). The body follows as
+/// [`write_chunk`] frames terminated by [`write_last_chunk`]; keep-alive
+/// survives a chunked response because the zero-length chunk marks the
+/// end-of-body boundary the `Content-Length` header normally provides.
+///
+/// NOTE the asymmetry with the parser: chunked *requests* stay refused
+/// ([`WireError::UnsupportedEncoding`]) — every request body the engine
+/// accepts is known-length — only responses stream.
+pub fn write_chunked_head(status: u16, content_type: &str, keep_alive: bool) -> Vec<u8> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        conn
+    )
+    .into_bytes()
+}
+
+/// One chunk frame: `{len:x}\r\n` + data + `\r\n`. Empty data returns no
+/// bytes — a zero-length chunk is the TERMINATOR ([`write_last_chunk`]),
+/// so emitting one mid-stream would truncate the response.
+pub fn write_chunk(data: &[u8]) -> Vec<u8> {
+    if data.is_empty() {
+        return Vec::new();
+    }
+    let head = format!("{:x}\r\n", data.len());
+    let mut out = Vec::with_capacity(head.len() + data.len() + 2);
+    out.extend_from_slice(head.as_bytes());
+    out.extend_from_slice(data);
+    out.extend_from_slice(b"\r\n");
+    out
+}
+
+/// The chunked-body terminator: the zero-length chunk (no trailers).
+pub fn write_last_chunk() -> Vec<u8> {
+    b"0\r\n\r\n".to_vec()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -422,6 +463,24 @@ mod tests {
         let mut p = RequestParser::new(1024);
         p.feed(&vec![b'A'; MAX_HEAD_BYTES + 8]);
         assert_eq!(p.next().unwrap_err(), WireError::HeadersTooLarge);
+    }
+
+    #[test]
+    fn chunked_framing_is_exact() {
+        let head = write_chunked_head(200, "application/x-ndjson", true);
+        let head = std::str::from_utf8(&head).unwrap();
+        assert!(head.starts_with("HTTP/1.1 200 OK\r\n"), "{head}");
+        assert!(head.contains("Transfer-Encoding: chunked\r\n"), "{head}");
+        assert!(head.contains("Connection: keep-alive\r\n"), "{head}");
+        assert!(!head.contains("Content-Length"), "chunked and Content-Length are exclusive");
+        assert!(head.ends_with("\r\n\r\n"));
+
+        assert_eq!(write_chunk(b"hello"), b"5\r\nhello\r\n");
+        // Sizes are HEX per RFC 9112.
+        let big = vec![b'x'; 26];
+        assert_eq!(&write_chunk(&big)[..4], b"1a\r\n");
+        assert_eq!(write_chunk(b""), b"", "empty data must not emit a terminator");
+        assert_eq!(write_last_chunk(), b"0\r\n\r\n");
     }
 
     #[test]

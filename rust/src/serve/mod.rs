@@ -113,6 +113,21 @@
 //!   [`forward_route_serial`] — enforced by `rust/tests/parity_forward.rs`,
 //!   with shutdown/overload/panic semantics in
 //!   `rust/tests/lifecycle_forward.rs`.
+//! * [`generate`] — [`GenRequest`]/[`GenTicket`]: **token-level
+//!   generation**, the autoregressive-decode workload the engine exists
+//!   for. [`ServeEngine::generate`] tokenizes a prompt with the byte-level
+//!   seed tokenizer, runs prefill, and drives a per-token decode loop
+//!   (logits → [`Sampler`] → absorb → re-enter) INSIDE the hop machinery,
+//!   so concurrent generations continuously batch at token granularity.
+//!   Deterministic sampling (greedy / temperature / top-k on a seeded
+//!   per-session RNG stream), typed stop conditions (EOS / max-tokens /
+//!   stop-string / cancel), and per-session state behind the
+//!   [`SessionState`] trait (a real KV cache can slot in later). The
+//!   ticket is a [`Completion`] twice over: per token via
+//!   [`GenTicket::next_token`] and whole-response via the ticket itself.
+//!   Greedy decode through the batcher is bit-identical (0 ULP) to the
+//!   serial reference [`generate_serial`] — across adapters, hot-swaps,
+//!   and concurrent sessions (`rust/tests/parity_generate.rs`).
 //! * [`telemetry`] — [`Telemetry`]/[`TelemetrySnapshot`]: the engine's
 //!   **observability core**. Per-worker sharded atomic counters and
 //!   log-scale latency histograms (queue wait, kernel compute, per-hop,
@@ -138,8 +153,12 @@
 //! * [`http`] — [`HttpServer`]: the **wire front-end**. A dependency-free
 //!   HTTP/1.1 server over `std::net` (the workspace is offline by
 //!   design) that maps REST endpoints onto this façade: `POST
-//!   /v1/submit` / `/v1/forward` / `/v1/session` for inference, `PUT` /
-//!   `POST` / `DELETE /v1/adapters/{id}` for the tenant adapter
+//!   /v1/submit` / `/v1/forward` / `/v1/session` for inference, `POST
+//!   /v1/generate` for token-level generation (non-streaming JSON by
+//!   default; `"stream": true` switches the reply to chunked
+//!   transfer-encoding with one NDJSON token event per chunk, and a
+//!   client disconnect cancels the session at the next token boundary),
+//!   `PUT` / `POST` / `DELETE /v1/adapters/{id}` for the tenant adapter
 //!   lifecycle (register / hot-swap / draining unregister), `GET
 //!   /v1/stats`, and `GET /metrics` straight from
 //!   [`TelemetrySnapshot::render_prometheus`]. Per-tenant bearer tokens
@@ -165,8 +184,12 @@
 //! single-layer and pipelined workloads — the admission-scaling gate),
 //! and `cargo bench --bench bench_http` writes `BENCH_http.json`
 //! (requests/s vs keep-alive connection counts, wire overhead vs direct
-//! in-process submit, `/metrics` scrape latency) — see EXPERIMENTS.md
-//! §Serve, §Adapters, §Forward, §API, §Observability, §Scale and §HTTP.
+//! in-process submit, `/metrics` scrape latency), and
+//! `cargo bench --bench bench_generate` writes `BENCH_generate.json`
+//! (p50/p95/p99 TTFT and inter-token latency under Poisson arrivals with
+//! heavy-tailed prompt/output lengths, plus aggregate tokens/s and the
+//! serial-decode baseline) — see EXPERIMENTS.md §Serve, §Adapters,
+//! §Forward, §API, §Observability, §Scale, §HTTP and §Generate.
 
 pub mod adapters;
 pub mod artifact;
@@ -174,6 +197,7 @@ pub mod completion;
 pub mod engine;
 pub mod error;
 pub mod forward;
+pub mod generate;
 pub mod http;
 pub mod mmap;
 pub mod packed;
@@ -191,6 +215,10 @@ pub use engine::{
 pub use error::{ArtifactErrorKind, ServeError};
 pub use forward::{
     forward_route_serial, ModelRequest, ModelResponse, ModelTicket, SessionRequest, StepFn,
+};
+pub use generate::{
+    generate_serial, FinishReason, GenEvent, GenParams, GenRequest, GenResponse, GenTicket,
+    HashEmbedState, Sampler, Sampling, SessionState, TokenTicket,
 };
 pub use http::{HttpServer, HttpServerBuilder};
 pub use mmap::MappedFile;

@@ -136,9 +136,15 @@ pub enum Counter {
     /// Requests refused with 429 by a tenant's in-flight quota, BEFORE
     /// engine admission (engine-side `Overloaded` counts in `Rejected`).
     HttpQuotaRejects,
+    /// Generation sessions admitted (`ServeEngine::generate`).
+    GenSessions,
+    /// Tokens sampled by generation decode loops.
+    GenTokens,
+    /// Adapter-WAL compaction snapshots written (`CLOQSNP1`).
+    WalSnapshots,
 }
 
-pub const N_COUNTERS: usize = 28;
+pub const N_COUNTERS: usize = 31;
 
 impl Counter {
     pub const ALL: [Counter; N_COUNTERS] = [
@@ -170,6 +176,9 @@ impl Counter {
         Counter::HttpServerErrors,
         Counter::HttpAuthRejects,
         Counter::HttpQuotaRejects,
+        Counter::GenSessions,
+        Counter::GenTokens,
+        Counter::WalSnapshots,
     ];
 
     /// Prometheus metric name (the `cloq_` prefix is added at render).
@@ -203,6 +212,9 @@ impl Counter {
             Counter::HttpServerErrors => "http_requests_5xx_total",
             Counter::HttpAuthRejects => "http_auth_rejects_total",
             Counter::HttpQuotaRejects => "http_quota_rejects_total",
+            Counter::GenSessions => "gen_sessions_total",
+            Counter::GenTokens => "gen_tokens_total",
+            Counter::WalSnapshots => "wal_snapshots_total",
         }
     }
 
@@ -267,6 +279,9 @@ impl Counter {
                 "HTTP requests refused with 429 by a tenant's in-flight quota before \
                  engine admission."
             }
+            Counter::GenSessions => "Generation sessions admitted.",
+            Counter::GenTokens => "Tokens sampled by generation decode loops.",
+            Counter::WalSnapshots => "Adapter-WAL compaction snapshots written.",
         }
     }
 }
@@ -289,9 +304,13 @@ pub enum Metric {
     WalFsync,
     /// Artifact store open duration (eager and mapped).
     ArtifactOpen,
+    /// Generation time-to-first-token: admission to the first sample.
+    GenTtft,
+    /// Generation inter-token latency between consecutive samples.
+    GenItl,
 }
 
-pub const N_METRICS: usize = 6;
+pub const N_METRICS: usize = 8;
 
 impl Metric {
     pub const ALL: [Metric; N_METRICS] = [
@@ -301,6 +320,8 @@ impl Metric {
         Metric::RequestWall,
         Metric::WalFsync,
         Metric::ArtifactOpen,
+        Metric::GenTtft,
+        Metric::GenItl,
     ];
 
     /// Prometheus metric name (the `cloq_` prefix is added at render).
@@ -312,6 +333,8 @@ impl Metric {
             Metric::RequestWall => "request_wall_seconds",
             Metric::WalFsync => "wal_fsync_seconds",
             Metric::ArtifactOpen => "artifact_open_seconds",
+            Metric::GenTtft => "gen_ttft_seconds",
+            Metric::GenItl => "gen_itl_seconds",
         }
     }
 
@@ -327,6 +350,10 @@ impl Metric {
             Metric::RequestWall => "End-to-end request latency, admission to reply.",
             Metric::WalFsync => "Adapter-WAL fsync duration.",
             Metric::ArtifactOpen => "Artifact store open duration (eager and mapped).",
+            Metric::GenTtft => {
+                "Generation time-to-first-token (admission to the first sample)."
+            }
+            Metric::GenItl => "Generation inter-token latency between consecutive samples.",
         }
     }
 }

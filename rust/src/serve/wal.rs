@@ -37,6 +37,20 @@
 //! acknowledged ⇒ durable still holds. [`Wal::log_register`] /
 //! [`Wal::log_unregister`] fuse the two for serial callers.
 //!
+//! **Compaction snapshots** ([`Wal::open_snapshotted`]): with a snapshot
+//! file attached, compaction no longer rewrites history into the log —
+//! it writes the live state into a checksummed `CLOQSNP1` snapshot
+//! (same record framing, register payloads only) and truncates the log
+//! to its header. Boot then loads the snapshot and replays only the
+//! records appended SINCE it, so recovery is O(live + tail), not
+//! O(history). The write order is the crash-safety argument: snapshot
+//! first (atomic replace), log truncation second. A crash between the
+//! two leaves the new snapshot plus the full old log, and replaying
+//! both — snapshot registers, then the log's history — converges to the
+//! same live state, because register replay is a hot-swap and
+//! unregister replay is idempotent. Each snapshot write ticks the
+//! `WalSnapshots` counter.
+//!
 //! All I/O goes through the [`WalFile`] trait so the fault-injection
 //! suite can kill the "process" at any byte; [`FsWalFile`] is the real
 //! filesystem implementation (`O_APPEND` writes, `fdatasync` batching,
@@ -59,11 +73,23 @@ use crate::serve::telemetry::{Counter, Metric, Telemetry};
 pub const MAGIC_WAL: &[u8; 8] = b"CLOQWAL1";
 pub const VERSION_WAL: u32 = 1;
 
+/// Compaction-snapshot file magic + version.
+pub const MAGIC_SNAP: &[u8; 8] = b"CLOQSNP1";
+pub const VERSION_SNAP: u32 = 1;
+
 /// The complete 12-byte header a healthy WAL starts with.
 fn wal_header() -> [u8; 12] {
     let mut h = [0u8; 12];
     h[..8].copy_from_slice(MAGIC_WAL);
     h[8..].copy_from_slice(&VERSION_WAL.to_le_bytes());
+    h
+}
+
+/// The 12-byte header a snapshot file starts with.
+fn snap_header() -> [u8; 12] {
+    let mut h = [0u8; 12];
+    h[..8].copy_from_slice(MAGIC_SNAP);
+    h[8..].copy_from_slice(&VERSION_SNAP.to_le_bytes());
     h
 }
 
@@ -183,6 +209,10 @@ impl Default for WalOptions {
 /// format and the recovery contract.
 pub struct Wal {
     file: Box<dyn WalFile>,
+    /// Compaction-snapshot backing, when attached
+    /// ([`Wal::open_snapshotted`]): compaction writes live state here
+    /// and truncates the log instead of rewriting history into it.
+    snap: Option<Box<dyn WalFile>>,
     /// Human-readable log identity for typed errors (a path, usually).
     label: String,
     opts: WalOptions,
@@ -211,7 +241,31 @@ impl Wal {
     /// repaired (compacted) before this returns, so subsequent appends
     /// land after valid bytes.
     pub fn open(
+        file: Box<dyn WalFile>,
+        label: &str,
+        opts: WalOptions,
+    ) -> Result<(Wal, Vec<WalEvent>), ServeError> {
+        Self::open_inner(file, None, label, opts)
+    }
+
+    /// [`Wal::open`] with a compaction-snapshot file attached: the
+    /// snapshot's live state replays first (as register events, in id
+    /// order), then the log's records on top of it. Compaction from now
+    /// on writes the snapshot and truncates the log, so boot replay
+    /// stays O(live + tail) however much the registry churns. See the
+    /// module docs for the crash-ordering argument.
+    pub fn open_snapshotted(
+        file: Box<dyn WalFile>,
+        snap: Box<dyn WalFile>,
+        label: &str,
+        opts: WalOptions,
+    ) -> Result<(Wal, Vec<WalEvent>), ServeError> {
+        Self::open_inner(file, Some(snap), label, opts)
+    }
+
+    fn open_inner(
         mut file: Box<dyn WalFile>,
+        mut snap: Option<Box<dyn WalFile>>,
         label: &str,
         opts: WalOptions,
     ) -> Result<(Wal, Vec<WalEvent>), ServeError> {
@@ -223,6 +277,12 @@ impl Wal {
         };
         let io_err = |what: &str, e: io::Error| {
             err(ArtifactErrorKind::Io, format!("{what}: {e}"))
+        };
+        // The snapshot replays FIRST: it is the state every surviving log
+        // record was appended against.
+        let (seed_live, seed_events) = match &mut snap {
+            Some(s) => read_snapshot(s.as_mut(), label)?,
+            None => (BTreeMap::new(), Vec::new()),
         };
         let bytes = file.read_all().map_err(|e| io_err("cannot read", e))?;
         let header = wal_header();
@@ -247,9 +307,10 @@ impl Wal {
             }
             let mut wal = Wal {
                 file,
+                snap,
                 label: label.to_string(),
                 opts,
-                live: BTreeMap::new(),
+                live: seed_live,
                 log_bytes: 0,
                 unsynced: 0,
                 ops_appended: 0,
@@ -257,7 +318,7 @@ impl Wal {
                 telemetry: None,
             };
             wal.compact().map_err(|e| io_err("cannot initialize", e))?;
-            return Ok((wal, Vec::new()));
+            return Ok((wal, seed_events));
         }
         if bytes[..8] != MAGIC_WAL[..] {
             return Err(err(
@@ -276,8 +337,8 @@ impl Wal {
         // Record loop: stop at the FIRST incomplete or CRC-failing
         // record — everything before it is the recovered prefix,
         // everything from it on is a torn tail to discard.
-        let mut events = Vec::new();
-        let mut live: BTreeMap<String, Vec<u8>> = BTreeMap::new();
+        let mut events = seed_events;
+        let mut live: BTreeMap<String, Vec<u8>> = seed_live;
         let mut off = header.len();
         let mut torn = false;
         while off < bytes.len() {
@@ -321,6 +382,7 @@ impl Wal {
         }
         let mut wal = Wal {
             file,
+            snap,
             label: label.to_string(),
             opts,
             live,
@@ -472,26 +534,129 @@ impl Wal {
         Ok(())
     }
 
-    /// Rewrite the log as header + one register record per live set
-    /// (deterministic id order). Used for routine compaction AND
-    /// torn-tail repair; `WalFile::replace` guarantees old-or-new, never
-    /// a mix.
+    /// Compact the log down to the live state. Without a snapshot file:
+    /// rewrite the log as header + one register record per live set
+    /// (deterministic id order). With one: write the live set into the
+    /// snapshot (same framing, `CLOQSNP1` header) and truncate the log
+    /// to its header — snapshot FIRST, so a crash between the two
+    /// replaces leaves new-snapshot + old-full-log, which replays to the
+    /// same state. Used for routine compaction AND torn-tail repair;
+    /// `WalFile::replace` guarantees old-or-new, never a mix.
     fn compact(&mut self) -> io::Result<()> {
-        let mut buf = wal_header().to_vec();
-        for payload in self.live.values() {
-            buf.extend_from_slice(&frame(payload));
-        }
+        let buf = match &mut self.snap {
+            Some(snap) => {
+                let mut sbuf = snap_header().to_vec();
+                for payload in self.live.values() {
+                    sbuf.extend_from_slice(&frame(payload));
+                }
+                snap.replace(&sbuf)?;
+                if let Some(t) = &self.telemetry {
+                    t.incr(Counter::WalSnapshots);
+                }
+                wal_header().to_vec()
+            }
+            None => {
+                let mut buf = wal_header().to_vec();
+                for payload in self.live.values() {
+                    buf.extend_from_slice(&frame(payload));
+                }
+                buf
+            }
+        };
         self.file.replace(&buf)?;
         self.log_bytes = buf.len();
         self.unsynced = 0;
         // `replace` is durable on return: every appended op is now
-        // either in the new log's live state or superseded by it.
+        // either in the snapshot/new log's live state or superseded by it.
         self.ops_durable = self.ops_appended;
         if let Some(t) = &self.telemetry {
             t.incr(Counter::WalCompactions);
         }
         Ok(())
     }
+}
+
+/// Load a compaction snapshot: live payloads keyed by id plus the
+/// register events to replay (id order — the order the payloads sit in
+/// the file). Unlike the log, a snapshot is written in ONE atomic
+/// replace, so a half-record or CRC failure cannot be a torn tail — it
+/// is corruption, and fails loudly instead of being truncated away.
+fn read_snapshot(
+    snap: &mut dyn WalFile,
+    label: &str,
+) -> Result<(BTreeMap<String, Vec<u8>>, Vec<WalEvent>), ServeError> {
+    let err = |kind: ArtifactErrorKind, detail: String| ServeError::Artifact {
+        path: format!("{label} (snapshot)"),
+        layer: None,
+        kind,
+        detail,
+    };
+    let bytes = snap
+        .read_all()
+        .map_err(|e| err(ArtifactErrorKind::Io, format!("cannot read: {e}")))?;
+    let header = snap_header();
+    if bytes.is_empty() {
+        // No snapshot yet: every compaction so far ran without one.
+        return Ok((BTreeMap::new(), Vec::new()));
+    }
+    if bytes.len() < header.len() || bytes[..8] != MAGIC_SNAP[..] {
+        return Err(err(
+            ArtifactErrorKind::BadMagic,
+            format!("not a CLOQSNP1 compaction snapshot ({} bytes)", bytes.len()),
+        ));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION_SNAP {
+        return Err(err(
+            ArtifactErrorKind::BadVersion,
+            format!("unsupported snapshot version {version} (this build reads {VERSION_SNAP})"),
+        ));
+    }
+    let mut live = BTreeMap::new();
+    let mut events = Vec::new();
+    let mut off = header.len();
+    while off < bytes.len() {
+        let rest = &bytes[off..];
+        if rest.len() < 4 {
+            return Err(err(
+                ArtifactErrorKind::Malformed,
+                "truncated record length in an atomically-written snapshot".to_string(),
+            ));
+        }
+        let len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+        if rest.len() < 4 + len + 4 {
+            return Err(err(
+                ArtifactErrorKind::Malformed,
+                format!("record at byte {off} overruns the snapshot"),
+            ));
+        }
+        let payload = &rest[4..4 + len];
+        let stored = u32::from_le_bytes(rest[4 + len..4 + len + 4].try_into().unwrap());
+        if crc32(payload) != stored {
+            return Err(err(
+                ArtifactErrorKind::Malformed,
+                format!("checksum mismatch at byte {off}"),
+            ));
+        }
+        let idx = events.len();
+        match decode_record(payload)
+            .map_err(|e| err(ArtifactErrorKind::Malformed, format!("record {idx}: {e}")))?
+        {
+            WalEvent::Register(set) => {
+                live.insert(set.id().to_string(), payload.to_vec());
+                events.push(WalEvent::Register(set));
+            }
+            WalEvent::Unregister(id) => {
+                return Err(err(
+                    ArtifactErrorKind::Malformed,
+                    format!("snapshot holds an unregister record for '{id}'; snapshots are \
+                             live state only"),
+                ));
+            }
+        }
+        off += 4 + len + 4;
+    }
+    Ok((live, events))
 }
 
 /// Frame a payload: `len u32 · payload · crc32 u32`.
@@ -585,7 +750,10 @@ mod tests {
             id,
             vec![(
                 "l0".to_string(),
-                LoraPair::new(Matrix::randn(6, 2, 0.1, &mut rng), Matrix::randn(4, 2, 0.1, &mut rng)),
+                LoraPair::new(
+                    Matrix::randn(6, 2, 0.1, &mut rng),
+                    Matrix::randn(4, 2, 0.1, &mut rng),
+                ),
             )],
         )
         .unwrap()
@@ -632,6 +800,195 @@ mod tests {
             "log {} vs live {}",
             wal.log_bytes(),
             wal.live_bytes()
+        );
+    }
+
+    /// Clonable storage so one test can reopen the same "disk" bytes —
+    /// the snapshot suite's stand-in for a restart.
+    #[derive(Clone)]
+    struct SharedMemFile {
+        bytes: Arc<std::sync::Mutex<Vec<u8>>>,
+    }
+
+    impl SharedMemFile {
+        fn new() -> SharedMemFile {
+            SharedMemFile { bytes: Arc::new(std::sync::Mutex::new(Vec::new())) }
+        }
+        fn raw(&self) -> Vec<u8> {
+            self.bytes.lock().unwrap().clone()
+        }
+    }
+
+    impl WalFile for SharedMemFile {
+        fn read_all(&mut self) -> io::Result<Vec<u8>> {
+            Ok(self.raw())
+        }
+        fn append(&mut self, bytes: &[u8]) -> io::Result<()> {
+            self.bytes.lock().unwrap().extend_from_slice(bytes);
+            Ok(())
+        }
+        fn sync(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+        fn replace(&mut self, bytes: &[u8]) -> io::Result<()> {
+            *self.bytes.lock().unwrap() = bytes.to_vec();
+            Ok(())
+        }
+    }
+
+    /// SharedMemFile whose `replace` can be made to fail on demand — the
+    /// "process dies between the snapshot write and the log truncation"
+    /// injection point.
+    #[derive(Clone)]
+    struct FailSwitchFile {
+        inner: SharedMemFile,
+        fail_replace: Arc<std::sync::atomic::AtomicBool>,
+    }
+
+    impl FailSwitchFile {
+        fn new() -> FailSwitchFile {
+            FailSwitchFile {
+                inner: SharedMemFile::new(),
+                fail_replace: Arc::new(std::sync::atomic::AtomicBool::new(false)),
+            }
+        }
+    }
+
+    impl WalFile for FailSwitchFile {
+        fn read_all(&mut self) -> io::Result<Vec<u8>> {
+            self.inner.read_all()
+        }
+        fn append(&mut self, bytes: &[u8]) -> io::Result<()> {
+            self.inner.append(bytes)
+        }
+        fn sync(&mut self) -> io::Result<()> {
+            self.inner.sync()
+        }
+        fn replace(&mut self, bytes: &[u8]) -> io::Result<()> {
+            if self.fail_replace.load(std::sync::atomic::Ordering::SeqCst) {
+                return Err(io::Error::other("injected crash before log truncation"));
+            }
+            self.inner.replace(bytes)
+        }
+    }
+
+    fn open_snap(
+        log: &SharedMemFile,
+        snap: &SharedMemFile,
+        opts: WalOptions,
+    ) -> (Wal, Vec<WalEvent>) {
+        Wal::open_snapshotted(Box::new(log.clone()), Box::new(snap.clone()), "mem", opts)
+            .unwrap()
+    }
+
+    #[test]
+    fn snapshot_compaction_keeps_boot_replay_o_live() {
+        let log = SharedMemFile::new();
+        let snap = SharedMemFile::new();
+        let opts = WalOptions { sync_every: 1, compact_min_bytes: 256, compact_ratio: 2 };
+        {
+            let (mut wal, events) = open_snap(&log, &snap, opts);
+            assert!(events.is_empty());
+            wal.log_register(&mk_set("a", 1)).unwrap();
+            for round in 0..50u64 {
+                wal.log_register(&mk_set("hot", round)).unwrap();
+            }
+            wal.log_unregister("a").unwrap();
+            assert_eq!(wal.live_len(), 1);
+        }
+        assert!(snap.raw().len() > 12, "compaction never wrote a snapshot");
+        // Restart: the 51-op history replays as snapshot live-state plus
+        // the short tail since the last compaction, not op by op.
+        let (wal, events) = open_snap(&log, &snap, opts);
+        assert_eq!(wal.live_len(), 1);
+        assert!(events.len() < 20, "O(history) replay: {} events for 1 live set", events.len());
+        assert!(
+            log.raw().len() < snap.raw().len(),
+            "log ({} bytes) should be a tail, snapshot ({} bytes) the state",
+            log.raw().len(),
+            snap.raw().len()
+        );
+    }
+
+    #[test]
+    fn crash_between_snapshot_write_and_log_truncation_converges() {
+        let log = FailSwitchFile::new();
+        let snap = SharedMemFile::new();
+        let opts = WalOptions { sync_every: 1, compact_min_bytes: 256, compact_ratio: 1 };
+        let (mut wal, _) = Wal::open_snapshotted(
+            Box::new(log.clone()),
+            Box::new(snap.clone()),
+            "mem",
+            opts,
+        )
+        .unwrap();
+        wal.log_register(&mk_set("a", 1)).unwrap();
+        wal.log_register(&mk_set("b", 2)).unwrap();
+        // From here on the log's `replace` dies, so the next compaction
+        // writes the snapshot and then "crashes" before truncating.
+        log.fail_replace.store(true, std::sync::atomic::Ordering::SeqCst);
+        let mut crashed = false;
+        for round in 0..200u64 {
+            if wal.log_register(&mk_set("hot", round)).is_err() {
+                crashed = true;
+                break;
+            }
+        }
+        assert!(crashed, "compaction never triggered under churn");
+        let expected = wal.live.clone();
+        drop(wal);
+        log.fail_replace.store(false, std::sync::atomic::Ordering::SeqCst);
+        // Disk state: NEW snapshot + FULL old log. Replaying both must
+        // converge to the pre-crash live state (registers hot-swap,
+        // unregisters are idempotent).
+        assert!(snap.raw().len() > 12, "snapshot must be durable before the crash point");
+        let recovered = Wal::open_snapshotted(
+            Box::new(log.clone()),
+            Box::new(snap.clone()),
+            "mem",
+            opts,
+        )
+        .unwrap()
+        .0;
+        assert_eq!(recovered.live, expected, "snapshot+old-log replay diverged");
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_refused_loudly() {
+        // Wrong magic: some other file is sitting at the snapshot path.
+        let snap = SharedMemFile::new();
+        *snap.bytes.lock().unwrap() = b"CLOQWAL1\x01\x00\x00\x00".to_vec();
+        let err = Wal::open_snapshotted(
+            Box::new(SharedMemFile::new()),
+            Box::new(snap),
+            "mem",
+            WalOptions::default(),
+        )
+        .unwrap_err();
+        assert!(
+            matches!(&err, ServeError::Artifact { kind: ArtifactErrorKind::BadMagic, .. }),
+            "{err:?}"
+        );
+        // Bit-flip under a valid header: snapshots are written atomically,
+        // so a checksum failure is corruption — typed Malformed, never a
+        // silent torn-tail truncation.
+        let log = SharedMemFile::new();
+        let snap = SharedMemFile::new();
+        let opts = WalOptions { sync_every: 1, compact_min_bytes: 256, compact_ratio: 2 };
+        {
+            let (mut wal, _) = open_snap(&log, &snap, opts);
+            for round in 0..50u64 {
+                wal.log_register(&mk_set("hot", round)).unwrap();
+            }
+        }
+        assert!(snap.raw().len() > 20);
+        snap.bytes.lock().unwrap()[16] ^= 0xff;
+        let err =
+            Wal::open_snapshotted(Box::new(log.clone()), Box::new(snap.clone()), "mem", opts)
+                .unwrap_err();
+        assert!(
+            matches!(&err, ServeError::Artifact { kind: ArtifactErrorKind::Malformed, .. }),
+            "{err:?}"
         );
     }
 

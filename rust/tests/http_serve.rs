@@ -17,7 +17,11 @@
 //!   byte position parses and serves identically;
 //! * pipelined requests answer strictly in request order;
 //! * every malformed input maps to its documented `{code, status}` pair —
-//!   protocol errors from the parser, typed engine errors from the façade.
+//!   protocol errors from the parser, typed engine errors from the façade;
+//! * `/v1/generate` streaming: chunk framing is exact, token events match
+//!   the in-process API byte for byte, an early client disconnect cancels
+//!   the session, and a seeded mutation fuzz over the push-parser never
+//!   panics and never leaves the typed rejection table.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -27,8 +31,10 @@ use std::time::Duration;
 use cloq::linalg::Matrix;
 use cloq::lowrank::LoraPair;
 use cloq::quant::{quantize_rtn, QuantState};
+use cloq::serve::http::wire;
 use cloq::serve::{
-    HttpServer, ModelRequest, PackedLayer, PackedModel, ServeEngine, SessionRequest,
+    GenParams, GenRequest, HttpServer, ModelRequest, PackedLayer, PackedModel, ServeEngine,
+    SessionRequest,
 };
 use cloq::util::json::{self, Json};
 use cloq::util::prng::Rng;
@@ -37,10 +43,16 @@ const TOKEN: &str = "tok-alice";
 
 /// The loopable 12→8→20→12 chain: the tail's output width equals the
 /// head's input width, so multi-step sessions can feed y back as x.
+/// Layer "d" (12→2) hangs off the chain for the generate tests: a route
+/// ending in it has a 2-wide vocabulary, so greedy decode can only ever
+/// sample PAD or BOS — never EOS — and deterministically runs to
+/// `max_tokens`, which makes cancellation observable.
 fn chain_model(seed: u64) -> PackedModel {
     let mut rng = Rng::new(seed);
     let mut layers = Vec::new();
-    for (name, m, n) in [("a", 12usize, 8usize), ("b", 8, 20), ("c", 20, 12)] {
+    for (name, m, n) in
+        [("a", 12usize, 8usize), ("b", 8, 20), ("c", 20, 12), ("d", 12, 2)]
+    {
         let w = Matrix::randn(m, n, 0.3, &mut rng);
         let q = QuantState::Int(quantize_rtn(&w, 4, 8));
         layers.push(PackedLayer::from_state(name, &q).unwrap());
@@ -82,6 +94,61 @@ impl Client {
         self.send(&build_request(method, path, tok, body));
         let (status, text) = self.recv();
         (status, json::parse(&text).unwrap())
+    }
+
+    /// Read until `pat` appears; drain and return everything up to and
+    /// including it.
+    fn take_until(&mut self, pat: &[u8]) -> Vec<u8> {
+        let mut tmp = [0u8; 4096];
+        loop {
+            if let Some(pos) = self.buf.windows(pat.len()).position(|w| w == pat) {
+                let end = pos + pat.len();
+                let out = self.buf[..end].to_vec();
+                self.buf.drain(..end);
+                return out;
+            }
+            let n = self.stream.read(&mut tmp).unwrap();
+            assert!(n > 0, "server closed mid-stream");
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+
+    /// Read exactly `n` bytes.
+    fn take_exact(&mut self, n: usize) -> Vec<u8> {
+        let mut tmp = [0u8; 4096];
+        while self.buf.len() < n {
+            let k = self.stream.read(&mut tmp).unwrap();
+            assert!(k > 0, "server closed mid-chunk");
+            self.buf.extend_from_slice(&tmp[..k]);
+        }
+        let out = self.buf[..n].to_vec();
+        self.buf.drain(..n);
+        out
+    }
+
+    /// Read one chunked-transfer response off the connection, asserting
+    /// the framing byte for byte: a head that declares chunked encoding
+    /// (and no Content-Length), hex-length chunk frames each terminated
+    /// by CRLF, and the zero-length terminator chunk. Returns the status
+    /// and the decoded chunk payloads in arrival order.
+    fn recv_chunked(&mut self) -> (u16, Vec<Vec<u8>>) {
+        let head = String::from_utf8(self.take_until(b"\r\n\r\n")).unwrap();
+        let status: u16 = head.split(' ').nth(1).unwrap().parse().unwrap();
+        let lower = head.to_ascii_lowercase();
+        assert!(lower.contains("transfer-encoding: chunked"), "{head}");
+        assert!(!lower.contains("content-length"), "chunked must not declare a length: {head}");
+        let mut chunks = Vec::new();
+        loop {
+            let line = self.take_until(b"\r\n");
+            let hex = std::str::from_utf8(&line[..line.len() - 2]).unwrap();
+            let len = usize::from_str_radix(hex, 16).unwrap_or_else(|_| panic!("size {hex:?}"));
+            let payload = self.take_exact(len + 2);
+            assert_eq!(&payload[len..], b"\r\n", "chunk payload must end in CRLF");
+            if len == 0 {
+                return (status, chunks);
+            }
+            chunks.push(payload[..len].to_vec());
+        }
     }
 
     /// Read exactly one response off the connection.
@@ -476,4 +543,278 @@ fn stats_and_metrics_expose_the_served_traffic() {
     let route = engine.route(&["a", "b", "c"]).unwrap();
     let direct = engine.submit_model(ModelRequest::new(route, vec![0.0; 12])).wait().unwrap();
     assert_eq!(direct.y.len(), 12);
+}
+
+#[test]
+fn generate_endpoint_matches_the_in_process_api_and_rejects_typed() {
+    let (engine, server, _reference) = boot();
+    let addr = server.addr();
+
+    // The in-process reference run. Decode is deterministic — a separate
+    // session with the same prompt and params must produce the same
+    // tokens and text no matter how the batcher interleaves it.
+    let route = engine.route(&["a", "b", "c"]).unwrap();
+    let want =
+        engine.generate(GenRequest::new(route, "Q: 2+2?", GenParams::greedy(5))).wait().unwrap();
+
+    let body = "{\"route\":[\"a\",\"b\",\"c\"],\"prompt\":\"Q: 2+2?\",\"max_tokens\":5}";
+    let (status, resp) = call(addr, "POST", "/v1/generate", Some(TOKEN), body);
+    assert_eq!(status, 200, "{resp:?}");
+    assert_eq!(resp.get("text").unwrap().as_str().unwrap(), want.text);
+    let got: Vec<i32> = resp
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i32)
+        .collect();
+    assert_eq!(got, want.tokens);
+    assert_eq!(resp.get("finish").unwrap().as_str().unwrap(), want.finish.as_str());
+    assert_eq!(resp.get("prompt_tokens").unwrap().as_usize().unwrap(), want.prompt_tokens);
+    assert_eq!(resp.get("forwards").unwrap().as_usize().unwrap(), want.forwards);
+
+    // Typed rejections ride the same {code, status} taxonomy as every
+    // other endpoint — including streamed requests, whose route errors
+    // resolve before any response byte is committed.
+    let (status, resp) =
+        call(addr, "POST", "/v1/generate", Some(TOKEN), "{\"route\":[\"a\"],\"prompt\":\"q\"}");
+    assert_eq!((status, code_of(&resp)), (400, "missing-field"));
+    let (status, resp) = call(
+        addr,
+        "POST",
+        "/v1/generate",
+        Some(TOKEN),
+        "{\"route\":[\"zz\"],\"prompt\":\"q\",\"max_tokens\":3,\"stream\":true}",
+    );
+    assert_eq!((status, code_of(&resp)), (404, "unknown-layer"));
+    let (status, resp) = call(
+        addr,
+        "POST",
+        "/v1/generate",
+        Some("tok-bob"),
+        "{\"route\":[\"a\",\"b\",\"c\"],\"prompt\":\"q\",\"max_tokens\":3}",
+    );
+    assert_eq!((status, code_of(&resp)), (429, "quota-exceeded"));
+
+    // The runs above landed in the generation telemetry.
+    let (status, text) = raw_call(addr, b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n");
+    assert_eq!(status, 200);
+    for needle in
+        ["cloq_gen_sessions_total", "cloq_gen_tokens_total", "cloq_gen_ttft_seconds_count"]
+    {
+        assert!(text.contains(needle), "missing {needle:?} in /metrics:\n{text}");
+    }
+
+    server.shutdown();
+}
+
+#[test]
+fn generate_streams_chunked_and_matches_the_in_process_api() {
+    let (engine, server, _reference) = boot();
+    let addr = server.addr();
+
+    let route = engine.route(&["a", "b", "c"]).unwrap();
+    let want =
+        engine.generate(GenRequest::new(route, "Q: stream?", GenParams::greedy(6))).wait().unwrap();
+
+    let body =
+        "{\"route\":[\"a\",\"b\",\"c\"],\"prompt\":\"Q: stream?\",\"max_tokens\":6,\"stream\":true}";
+    let mut c = Client::connect(addr);
+    c.send(&build_request("POST", "/v1/generate", Some(TOKEN), body));
+    let (status, chunks) = c.recv_chunked();
+    assert_eq!(status, 200);
+    assert!(chunks.len() >= 2, "at least one token event plus the done summary");
+
+    // Every chunk is exactly one NDJSON line: token events in emission
+    // order, then the done summary as the final chunk.
+    let mut tokens: Vec<i32> = Vec::new();
+    let mut text = String::new();
+    let mut done: Option<Json> = None;
+    for (k, chunk) in chunks.iter().enumerate() {
+        assert_eq!(chunk.last(), Some(&b'\n'), "chunk {k} is not a line");
+        let ev = json::parse(std::str::from_utf8(chunk).unwrap()).unwrap();
+        if ev.get("done").and_then(Json::as_bool) == Some(true) {
+            assert_eq!(k, chunks.len() - 1, "done must be the final chunk");
+            done = Some(ev);
+        } else {
+            assert!(done.is_none(), "token event after done");
+            assert_eq!(ev.get("index").unwrap().as_usize().unwrap(), tokens.len());
+            tokens.push(ev.get("token").unwrap().as_f64().unwrap() as i32);
+            text.push_str(ev.get("piece").unwrap().as_str().unwrap());
+        }
+    }
+    let done = done.expect("stream never emitted the done summary");
+
+    // Byte-exact parity with the in-process API: the streamed pieces
+    // concatenate to the final text, and both match the reference run.
+    assert_eq!(tokens, want.tokens);
+    assert_eq!(text, want.text, "concatenated pieces != final text");
+    assert_eq!(done.get("text").unwrap().as_str().unwrap(), want.text);
+    assert_eq!(done.get("finish").unwrap().as_str().unwrap(), want.finish.as_str());
+    assert_eq!(done.get("prompt_tokens").unwrap().as_usize().unwrap(), want.prompt_tokens);
+
+    server.shutdown();
+}
+
+#[test]
+fn early_client_disconnect_cancels_the_generation_session() {
+    let (engine, server, _reference) = boot();
+    let addr = server.addr();
+
+    // A route ending in the 2-wide tail "d": greedy can only ever sample
+    // PAD or BOS — never EOS, never a stop string — so an uncancelled
+    // run would do exactly max_tokens+1 session forwards. Anything far
+    // below that proves the disconnect propagated into a cancel.
+    const MAX: usize = 10_000;
+    let body = format!(
+        "{{\"route\":[\"a\",\"b\",\"c\",\"d\"],\"prompt\":\"go\",\"max_tokens\":{MAX},\"stream\":true}}"
+    );
+    let mut c = Client::connect(addr);
+    c.send(&build_request("POST", "/v1/generate", Some(TOKEN), &body));
+
+    // Read the head and the first frame, then vanish mid-stream.
+    let _ = c.take_until(b"\r\n\r\n");
+    let _ = c.take_until(b"\n");
+    drop(c);
+
+    // The writer hits the dead socket, fires the cancel hook, and the
+    // session resolves. Poll until forwards quiesce (300ms stable).
+    let deadline = std::time::Instant::now() + Duration::from_secs(60);
+    let mut last = engine.stats().session_forwards;
+    let mut stable = 0;
+    while stable < 6 {
+        assert!(std::time::Instant::now() < deadline, "generation never quiesced");
+        std::thread::sleep(Duration::from_millis(50));
+        let now = engine.stats().session_forwards;
+        if now == last {
+            stable += 1;
+        } else {
+            stable = 0;
+            last = now;
+        }
+    }
+    assert!(last >= 1, "the session never ran a forward");
+    assert!(
+        last < MAX / 2,
+        "disconnect did not cancel the session: {last} forwards of {}",
+        MAX + 1
+    );
+
+    server.shutdown();
+}
+
+/// Satellite: seeded mutation fuzzer for the HTTP push-parser. Valid
+/// requests are mutated — truncated, duplicated, bit-flipped, spliced,
+/// stuffed with random bytes — and fed to a fresh `RequestParser` in
+/// random fragment sizes. The parser must never panic, and every
+/// rejection must land in the typed `{code, status}` table the wire
+/// module documents. Deterministic: seeded PRNG, no time, no I/O.
+#[test]
+fn push_parser_fuzzer_never_panics_and_rejections_stay_typed() {
+    const CASES: usize = 10_000;
+    const TABLE: &[(&str, u16)] = &[
+        ("bad-request-line", 400),
+        ("bad-version", 505),
+        ("bad-header", 400),
+        ("too-many-headers", 431),
+        ("headers-too-large", 431),
+        ("bad-content-length", 400),
+        ("body-too-large", 413),
+        ("unsupported-encoding", 501),
+    ];
+    let corpus: Vec<Vec<u8>> = vec![
+        build_request("POST", "/v1/submit", Some(TOKEN), "{\"layer\":\"a\",\"x\":[1,2]}"),
+        build_request("GET", "/v1/stats", Some(TOKEN), ""),
+        build_request(
+            "POST",
+            "/v1/generate",
+            Some(TOKEN),
+            "{\"route\":[\"a\"],\"prompt\":\"q\",\"max_tokens\":2,\"stream\":true}",
+        ),
+        build_request("PUT", "/v1/adapters/t1", Some(TOKEN), "{\"layers\":[]}"),
+        build_request("DELETE", "/v1/adapters/t1", None, ""),
+        b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n".to_vec(),
+        {
+            // A pipelined pair: mutations can straddle the boundary.
+            let mut two = build_request("GET", "/v1/stats", Some(TOKEN), "");
+            two.extend_from_slice(&build_request("POST", "/v1/submit", Some(TOKEN), "{}"));
+            two
+        },
+    ];
+
+    let mut r = Rng::new(0xf0_22);
+    for case in 0..CASES {
+        let mut bytes = r.choose(&corpus).clone();
+        for _ in 0..1 + r.below(3) {
+            match r.below(5) {
+                0 => {
+                    // Truncate.
+                    if !bytes.is_empty() {
+                        bytes.truncate(r.below(bytes.len()));
+                    }
+                }
+                1 => {
+                    // Duplicate a slice at a random position.
+                    if !bytes.is_empty() {
+                        let s = r.below(bytes.len());
+                        let e = s + r.below(bytes.len() - s + 1);
+                        let slice = bytes[s..e].to_vec();
+                        let at = r.below(bytes.len() + 1);
+                        bytes.splice(at..at, slice);
+                    }
+                }
+                2 => {
+                    // Flip one bit.
+                    if !bytes.is_empty() {
+                        let i = r.below(bytes.len());
+                        bytes[i] ^= 1u8 << r.below(8);
+                    }
+                }
+                3 => {
+                    // Splice: our head, another request's tail.
+                    let other = r.choose(&corpus).clone();
+                    let cut_a = r.below(bytes.len() + 1);
+                    let cut_b = r.below(other.len() + 1);
+                    bytes.truncate(cut_a);
+                    bytes.extend_from_slice(&other[cut_b..]);
+                }
+                _ => {
+                    // Insert 1–8 random bytes.
+                    let at = r.below(bytes.len() + 1);
+                    let extra: Vec<u8> =
+                        (0..1 + r.below(8)).map(|_| r.below(256) as u8).collect();
+                    bytes.splice(at..at, extra);
+                }
+            }
+        }
+
+        // Feed in random fragment sizes and pump to a verdict. A parse
+        // error poisons the connection, so feeding stops there — exactly
+        // what the serving loop does.
+        let mut p = wire::RequestParser::new(4096);
+        let mut pos = 0;
+        let verdict = 'feed: loop {
+            if pos >= bytes.len() {
+                break None; // incomplete input: the parser just wants more
+            }
+            let step = (1 + r.below(97)).min(bytes.len() - pos);
+            p.feed(&bytes[pos..pos + step]);
+            pos += step;
+            loop {
+                match p.next() {
+                    Ok(Some(_)) => continue, // a full request; keep pumping
+                    Ok(None) => break,
+                    Err(e) => break 'feed Some(e),
+                }
+            }
+        };
+        if let Some(e) = verdict {
+            let pair = (e.code(), e.status());
+            assert!(
+                TABLE.contains(&pair),
+                "case {case}: rejection {pair:?} is outside the typed table\ninput: {bytes:?}"
+            );
+        }
+    }
 }

@@ -1,0 +1,105 @@
+//! Property tests for the byte-level tokenizer (`data::tokenizer`) — the
+//! seam every generation request now crosses twice (prompt in, pieces
+//! out). Seeded, deterministic, and exhaustive where the domain is small
+//! enough to enumerate (single tokens: all of them).
+
+use cloq::data::tokenizer::{
+    decode, decode_token, encode, encode_example, ANSWER_DELIM, BOS, BYTE_OFFSET, EOS, PAD, SEP,
+    VOCAB,
+};
+use cloq::util::prng::Rng;
+
+/// How many random cases each property runs (the suite stays < 1s).
+const CASES: usize = 2_000;
+
+/// Random valid UTF-8 string mixing ASCII, multi-byte chars, and
+/// whitespace; length 0..=40 chars.
+fn rand_text(r: &mut Rng) -> String {
+    let alphabet: Vec<char> = "abcXYZ019 +=?\n\té漢🎲µ∑".chars().collect();
+    let len = r.below(41);
+    (0..len).map(|_| *r.choose(&alphabet)).collect()
+}
+
+#[test]
+fn encode_decode_roundtrips_any_utf8_text() {
+    let mut r = Rng::new(0x70c0);
+    for _ in 0..CASES {
+        let s = rand_text(&mut r);
+        let toks = encode(&s);
+        // Byte-level: one token per byte, all inside the byte range.
+        assert_eq!(toks.len(), s.len());
+        assert!(toks.iter().all(|&t| (BYTE_OFFSET..VOCAB as i32).contains(&t)), "{s:?}");
+        assert_eq!(decode(&toks), s, "roundtrip failed for {s:?}");
+    }
+}
+
+#[test]
+fn decode_drops_specials_and_out_of_range_ids_only() {
+    let mut r = Rng::new(42);
+    for _ in 0..CASES {
+        let s = rand_text(&mut r);
+        let clean = encode(&s);
+        // Splice specials and out-of-range ids at random positions: the
+        // decoded text must be unchanged — they carry no bytes.
+        let mut noisy = Vec::with_capacity(clean.len() * 2);
+        for &t in &clean {
+            if r.chance(0.3) {
+                noisy.push(*r.choose(&[PAD, BOS, EOS, SEP, VOCAB as i32, -1, 1_000]));
+            }
+            noisy.push(t);
+        }
+        assert_eq!(decode(&noisy), s, "specials must decode to nothing in {s:?}");
+    }
+}
+
+#[test]
+fn single_token_decode_is_consistent_with_full_decode() {
+    // Small domain: check EVERY id a generation could ever emit, plus
+    // out-of-range strays.
+    for t in -2..(VOCAB as i32 + 2) {
+        assert_eq!(decode_token(t), decode(&[t]), "id {t}");
+    }
+    // Specials and strays are empty pieces; ASCII bytes are themselves.
+    assert_eq!(decode_token(EOS), "");
+    assert_eq!(decode_token(VOCAB as i32), "");
+    assert_eq!(decode_token('A' as i32 + BYTE_OFFSET), "A");
+    // A byte inside a multi-byte character is lossy on its own, but the
+    // byte-sequence decode of the full pair recovers the character —
+    // the invariant the streaming piece contract documents.
+    let toks = encode("é");
+    assert_eq!(toks.len(), 2);
+    assert_eq!(decode_token(toks[0]), "\u{FFFD}");
+    assert_eq!(decode(&toks), "é");
+}
+
+#[test]
+fn empty_text_is_empty_everywhere() {
+    assert_eq!(encode(""), Vec::<i32>::new());
+    assert_eq!(decode(&[]), "");
+    let (toks, astart) = encode_example("", "");
+    // Even an empty example keeps the BOS/delimiter/EOS scaffold.
+    assert_eq!(toks.len(), 2 + ANSWER_DELIM.len());
+    assert_eq!(astart, 1 + ANSWER_DELIM.len());
+}
+
+#[test]
+fn encode_example_boundary_invariants_hold_for_random_pairs() {
+    let mut r = Rng::new(7);
+    for _ in 0..CASES {
+        let prompt = rand_text(&mut r);
+        let answer = rand_text(&mut r);
+        let (toks, astart) = encode_example(&prompt, &answer);
+        assert_eq!(toks[0], BOS);
+        assert_eq!(*toks.last().unwrap(), EOS);
+        // answer_start points at the first answer token: everything
+        // before it is prompt + delimiter, everything after (minus the
+        // EOS) is exactly the answer.
+        assert!(astart >= 1 && astart < toks.len(), "astart {astart} of {}", toks.len());
+        assert_eq!(decode(&toks[..astart]), format!("{prompt}{ANSWER_DELIM}"));
+        assert_eq!(decode(&toks[astart..toks.len() - 1]), answer);
+        // Total length is fully determined by the byte lengths.
+        assert_eq!(toks.len(), 2 + prompt.len() + ANSWER_DELIM.len() + answer.len());
+        // No specials leak out of the scaffold positions.
+        assert!(toks[1..toks.len() - 1].iter().all(|&t| t >= BYTE_OFFSET));
+    }
+}

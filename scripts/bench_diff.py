@@ -66,6 +66,14 @@ Gated rows (a >threshold drop in any of them fails the job):
     - unblocked.min_s / blocked[*].min_s     (lazy-batch blocking rows)
   BENCH_linalg.json
     - records[*].speedup                     (tiled-vs-naive / root ratios)
+  BENCH_generate.json
+    - serial.tokens_per_s                    (serial decode cost floor)
+    - load.tokens_per_s                      (decoded tokens/s under
+                                              Poisson open-loop load)
+    - load.ttft_p50_s / .ttft_p95_s / .ttft_p99_s  (admission → first
+                                              token latency percentiles)
+    - load.itl_p50_s / .itl_p95_s / .itl_p99_s     (inter-token latency
+                                              percentiles)
 
 Absolute gates (checked on the FRESH record alone, no baseline involved):
   BENCH_telemetry.json
@@ -140,6 +148,14 @@ GATED_ROWS = [
     ("BENCH_optq.json", "unblocked.min_s", "time"),
     ("BENCH_optq.json", "blocked.*.min_s", "time"),
     ("BENCH_linalg.json", "records.*.speedup", "rate"),
+    ("BENCH_generate.json", "serial.tokens_per_s", "rate"),
+    ("BENCH_generate.json", "load.tokens_per_s", "rate"),
+    ("BENCH_generate.json", "load.ttft_p50_s", "time"),
+    ("BENCH_generate.json", "load.ttft_p95_s", "time"),
+    ("BENCH_generate.json", "load.ttft_p99_s", "time"),
+    ("BENCH_generate.json", "load.itl_p50_s", "time"),
+    ("BENCH_generate.json", "load.itl_p95_s", "time"),
+    ("BENCH_generate.json", "load.itl_p99_s", "time"),
 ]
 
 # (file, dotted path, max value) — ABSOLUTE ceilings judged on the fresh

@@ -5,8 +5,8 @@
 #   --bench  additionally run the perf benches that emit BENCH_*.json
 #            (bench_optq / bench_linalg / bench_serve / bench_adapters /
 #            bench_forward / bench_artifact / bench_telemetry /
-#            bench_contention / bench_http; slow — not part of the
-#            default gate). Set
+#            bench_contention / bench_http / bench_generate; slow — not
+#            part of the default gate). Set
 #            CLOQ_BENCH_SMOKE=1 for the small-size smoke mode the CI
 #            bench-smoke job uses (seconds instead of minutes; records
 #            carry "smoke": true so scripts/bench_diff.py never mixes
@@ -48,10 +48,18 @@ cargo test -q --test crash_wal "${CARGO_FLAGS[@]}"
 
 # Wire-contract gate — explicit for the same reason: the HTTP loopback
 # suite (0-ULP wire parity, the {code, status} error contract, the
-# auth/quota taxonomy, torn-input robustness) is the only thing standing
-# between the typed façade and every non-Rust consumer.
+# auth/quota taxonomy, torn-input robustness, chunked streaming, and the
+# push-parser mutation fuzz) is the only thing standing between the typed
+# façade and every non-Rust consumer.
 echo "== cargo test -q --test http_serve (HTTP wire-contract suite) =="
 cargo test -q --test http_serve "${CARGO_FLAGS[@]}"
+
+# Decode-parity gate — explicit for the same reason: token-level
+# generation through the pipelined batcher must stay bit-identical (0 ULP)
+# to the serial reference across methods, bit widths, adapters, hot-swaps,
+# and concurrent sessions, with seeded sampling exactly reproducible.
+echo "== cargo test -q --test parity_generate (token-level decode parity suite) =="
+cargo test -q --test parity_generate "${CARGO_FLAGS[@]}"
 
 # Clippy gate — HARD and WORKSPACE-WIDE: deny warnings on every target of
 # every member crate (lib, bins, examples, benches, tests, and the
@@ -84,7 +92,7 @@ else
 fi
 
 if [[ "${1:-}" == "--bench" ]]; then
-    echo "== perf benches (BENCH_{optq,linalg,serve,adapters,forward,artifact,telemetry,contention,http}.json) =="
+    echo "== perf benches (BENCH_{optq,linalg,serve,adapters,forward,artifact,telemetry,contention,http,generate}.json) =="
     cargo bench --bench bench_optq "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_linalg "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_serve "${CARGO_FLAGS[@]}"
@@ -94,6 +102,7 @@ if [[ "${1:-}" == "--bench" ]]; then
     cargo bench --bench bench_telemetry "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_contention "${CARGO_FLAGS[@]}"
     cargo bench --bench bench_http "${CARGO_FLAGS[@]}"
+    cargo bench --bench bench_generate "${CARGO_FLAGS[@]}"
 fi
 
 echo "check.sh: all green"

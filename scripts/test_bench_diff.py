@@ -21,7 +21,7 @@ import bench_diff  # noqa: E402
 
 
 def synthetic_records():
-    """Minimal but schema-faithful records for all nine gated suites."""
+    """Minimal but schema-faithful records for all ten gated suites."""
     br = {"iters": 10, "mean_s": 1.1e-4, "min_s": 1e-4, "stddev_s": 1e-6}
     return {
         "BENCH_serve.json": {
@@ -190,6 +190,28 @@ def synthetic_records():
                 {"kernel": "inv_hessian_root", "n": 64, "speedup": 2.0},
             ],
         },
+        "BENCH_generate.json": {
+            "bench": "generate",
+            "smoke": True,
+            "layers": 3,
+            "workers": 4,
+            "sessions": 8,
+            "arrivals": {"process": "poisson", "mean_interarrival_s": 0.002},
+            "serial": {"tokens": 150, "wall_s": 0.5, "tokens_per_s": 300.0},
+            "load": {
+                "total_tokens": 150,
+                "wall_s": 0.75,
+                "tokens_per_s": 200.0,
+                "ttft_p50_s": 0.01,
+                "ttft_p95_s": 0.05,
+                "ttft_p99_s": 0.1,
+                "itl_p50_s": 0.005,
+                "itl_p95_s": 0.02,
+                "itl_p99_s": 0.05,
+                "itl_gaps": 142,
+                "mean_batch": 2.5,
+            },
+        },
     }
 
 
@@ -337,6 +359,49 @@ def main():
         check("re-sized connection_counts skips", run(base, fresh), 0)
         check(
             "re-sized connection_counts fails under --require-baseline",
+            run(base, fresh, "--require-baseline"),
+            1,
+        )
+
+        # 5n. The generation latency percentiles are gated time rows: a
+        # >25% TTFT or ITL blow-up fails.
+        recs = synthetic_records()
+        recs["BENCH_generate.json"]["load"]["ttft_p99_s"] *= 2.0
+        write_dir(fresh, recs)
+        check("generate ttft regression", run(base, fresh), 1)
+        recs = synthetic_records()
+        recs["BENCH_generate.json"]["load"]["itl_p95_s"] *= 1.5
+        write_dir(fresh, recs)
+        check("generate itl regression", run(base, fresh), 1)
+
+        # 5o. The decoded-tokens/s rows are gated rates: a >25% drop in
+        # either the serial floor or the under-load aggregate fails.
+        recs = synthetic_records()
+        recs["BENCH_generate.json"]["load"]["tokens_per_s"] *= 0.5
+        write_dir(fresh, recs)
+        check("generate load throughput regression", run(base, fresh), 1)
+        recs = synthetic_records()
+        recs["BENCH_generate.json"]["serial"]["tokens_per_s"] *= 0.6
+        write_dir(fresh, recs)
+        check("generate serial throughput regression", run(base, fresh), 1)
+
+        # 5p. Latency jitter inside the threshold passes — open-loop
+        # percentiles are noisy by construction and the gate must only
+        # catch collapses.
+        recs = synthetic_records()
+        recs["BENCH_generate.json"]["load"]["ttft_p95_s"] *= 1.2
+        recs["BENCH_generate.json"]["load"]["itl_p99_s"] *= 0.8
+        write_dir(fresh, recs)
+        check("generate jitter within threshold", run(base, fresh), 0)
+
+        # 5q. A re-sized session count ('sessions' identity key) is not
+        # comparable: skip by default, fail under --require-baseline.
+        recs = synthetic_records()
+        recs["BENCH_generate.json"]["sessions"] = 16
+        write_dir(fresh, recs)
+        check("re-sized generate sessions skips", run(base, fresh), 0)
+        check(
+            "re-sized generate sessions fails under --require-baseline",
             run(base, fresh, "--require-baseline"),
             1,
         )
